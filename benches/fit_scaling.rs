@@ -1,0 +1,52 @@
+//! Experiment F1 — distributed fit scalability: estimator fitting uses
+//! mergeable tree aggregation, so fit time should drop near-linearly
+//! with worker threads until memory bandwidth saturates (the Spark-side
+//! promise of the paper's "applied (or fitted) to the data in a
+//! distributed manner").
+
+use kamae::engine::Dataset;
+use kamae::estimators::{StandardScaleEstimator, StringIndexEstimator};
+use kamae::pipeline::Estimator;
+use kamae::synth;
+use kamae::util::bench::Table;
+
+fn main() {
+    let rows = 400_000;
+    println!("F1: estimator fit scaling over worker threads ({rows} rows)\n");
+    let df = synth::gen_ltr(&synth::LtrConfig { rows, ..Default::default() });
+    let max_threads = kamae::util::pool::default_threads();
+
+    let mut table = Table::new(&["threads", "string-index fit ms", "scale fit ms", "speedup"]);
+    let mut base: Option<f64> = None;
+    let mut threads = 1usize;
+    while threads <= max_threads.max(2) {
+        let ds = Dataset::from_dataframe(df.clone(), threads * 2).with_threads(threads);
+
+        let t0 = std::time::Instant::now();
+        let _ = StringIndexEstimator::new("destination", "d_idx").fit(&ds).unwrap();
+        let _ = StringIndexEstimator::new("amenities", "a_idx").fit(&ds).unwrap();
+        let idx_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t0 = std::time::Instant::now();
+        let _ = StandardScaleEstimator::new("price", "p_z").fit(&ds).unwrap();
+        let _ = StandardScaleEstimator::new("review_score", "r_z").fit(&ds).unwrap();
+        let scale_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let total = idx_ms + scale_ms;
+        let speedup = base.map(|b| b / total).unwrap_or(1.0);
+        if base.is_none() {
+            base = Some(total);
+        }
+        table.row(&[
+            threads.to_string(),
+            format!("{idx_ms:.0}"),
+            format!("{scale_ms:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        threads *= 2;
+    }
+    table.print();
+    println!("\nmachine parallelism: {max_threads} worker threads available");
+    println!("shape check: speedup should grow with threads (sublinearly once");
+    println!("the count-merge becomes the bottleneck).");
+}

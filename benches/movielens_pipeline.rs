@@ -1,0 +1,53 @@
+//! Experiment L1 — Listing 1 end-to-end: fit + transform cost of the
+//! MovieLens pipeline, per stage and total, across partition counts.
+
+use kamae::engine::Dataset;
+use kamae::pipeline::catalog;
+use kamae::synth;
+use kamae::util::bench::{black_box, Bencher, Table};
+
+fn main() {
+    let rows = 100_000;
+    println!("L1: MovieLens pipeline (Listing 1) on {rows} synthetic rows\n");
+    let df = synth::gen_movielens(&synth::MovieLensConfig { rows, ..Default::default() });
+
+    // fit time vs partitions
+    let mut table = Table::new(&["partitions", "fit ms", "transform Mrows/s"]);
+    for &parts in &[1usize, 2, 4, 8] {
+        let ds = Dataset::from_dataframe(df.clone(), parts);
+        let t0 = std::time::Instant::now();
+        let model = catalog::movielens_pipeline().fit(&ds).unwrap();
+        let fit_ms = t0.elapsed().as_millis();
+        let st = Bencher::quick().run("transform", || {
+            black_box(model.transform(&ds).unwrap());
+        });
+        table.row(&[
+            parts.to_string(),
+            fit_ms.to_string(),
+            format!("{:.2}", st.throughput(rows as f64) / 1e6),
+        ]);
+    }
+    table.print();
+
+    // per-stage timing at 1 partition
+    println!("\nper-stage transform cost:");
+    let model = catalog::movielens_pipeline()
+        .fit(&Dataset::from_dataframe(df.clone(), 1))
+        .unwrap();
+    let mut stage_table = Table::new(&["stage", "type", "ms/100k rows"]);
+    let mut current = df.clone();
+    for stage in &model.stages {
+        let st = Bencher::quick().run(stage.layer_name(), || {
+            let mut d = current.clone();
+            stage.transform(&mut d).unwrap();
+            black_box(d);
+        });
+        stage_table.row(&[
+            stage.layer_name().to_string(),
+            stage.type_name().to_string(),
+            format!("{:.2}", st.mean_ns / 1e6),
+        ]);
+        stage.transform(&mut current).unwrap();
+    }
+    stage_table.print();
+}

@@ -1,0 +1,86 @@
+//! Experiment C2 — "implemented … using native transformations (rather
+//! than user-defined functions) to guarantee high performance".
+//!
+//! Columnar (native) vs row-at-a-time (UDF/MLeap-model) execution of the
+//! same fitted pipelines, across dataset sizes. The paper's claim is
+//! directional: native wins by a large factor that grows with pipeline
+//! depth.
+
+use kamae::baselines::RowPipeline;
+use kamae::engine::Dataset;
+use kamae::pipeline::catalog;
+use kamae::synth;
+use kamae::util::bench::{black_box, fmt_ns, Bencher, Table};
+
+fn main() {
+    println!("C2: native columnar vs row-wise UDF execution\n");
+    let mut table = Table::new(&["pipeline", "rows", "native", "row-wise", "speedup"]);
+
+    for &rows in &[1_000usize, 10_000, 100_000] {
+        let df = synth::gen_movielens(&synth::MovieLensConfig { rows, ..Default::default() });
+        let model = catalog::movielens_pipeline()
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let spec = model
+            .to_graph_spec("m", catalog::movielens_inputs(), &catalog::MOVIELENS_OUTPUTS)
+            .unwrap();
+        let row_model = catalog::movielens_pipeline()
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let row_pipe = RowPipeline::from_spec(row_model, &spec);
+
+        let bencher = if rows >= 100_000 { Bencher::quick() } else { Bencher::default() };
+        let native = bencher.run("native", || {
+            black_box(model.transform_df(df.clone()).unwrap());
+        });
+        // row-wise is orders slower: bound the measured rows
+        let row_rows = rows.min(2_000);
+        let row_df = df.slice(0, row_rows);
+        let rowwise = Bencher::quick().run("rowwise", || {
+            black_box(row_pipe.transform_rows(&row_df).unwrap());
+        });
+        let native_per_row = native.mean_ns / rows as f64;
+        let row_per_row = rowwise.mean_ns / row_rows as f64;
+        table.row(&[
+            "movielens".into(),
+            rows.to_string(),
+            format!("{}/row", fmt_ns(native_per_row)),
+            format!("{}/row", fmt_ns(row_per_row)),
+            format!("{:.1}x", row_per_row / native_per_row),
+        ]);
+    }
+
+    // LTR pipeline (the ~60-transform chain)
+    let rows = 20_000;
+    let df = synth::gen_ltr(&synth::LtrConfig { rows, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(df.clone(), 1))
+        .unwrap();
+    let spec = model
+        .to_graph_spec("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS)
+        .unwrap();
+    let row_model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(df.clone(), 1))
+        .unwrap();
+    let row_pipe = RowPipeline::from_spec(row_model, &spec);
+    let native = Bencher::quick().run("native", || {
+        black_box(model.transform_df(df.clone()).unwrap());
+    });
+    let row_rows = 500;
+    let row_df = df.slice(0, row_rows);
+    let rowwise = Bencher::quick().run("rowwise", || {
+        black_box(row_pipe.transform_rows(&row_df).unwrap());
+    });
+    let native_per_row = native.mean_ns / rows as f64;
+    let row_per_row = rowwise.mean_ns / row_rows as f64;
+    table.row(&[
+        "ltr(60-op)".into(),
+        rows.to_string(),
+        format!("{}/row", fmt_ns(native_per_row)),
+        format!("{}/row", fmt_ns(row_per_row)),
+        format!("{:.1}x", row_per_row / native_per_row),
+    ]);
+
+    table.print();
+    println!("\nshape check: native should win by >=5x, growing with pipeline depth.");
+}

@@ -1,0 +1,66 @@
+//! Quickstart: build → fit → transform → export → serve in ~60 lines.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (compiled-serving step needs `make artifacts` once).
+
+use kamae::dataframe::{Column, DataFrame};
+use kamae::engine::Dataset;
+use kamae::pipeline::catalog;
+use kamae::serving::load_backend;
+use std::path::Path;
+
+fn main() -> kamae::error::Result<()> {
+    // 1. a small raw dataset: prices spanning decades + a categorical
+    let df = DataFrame::new(vec![
+        (
+            "price".into(),
+            Column::from_f64(vec![12.0, 95.0, 1_500.0, 7.5, 310.0, 42.0]),
+        ),
+        (
+            "city".into(),
+            Column::from_str(vec!["paris", "tokyo", "paris", "lima", "nyc", "tokyo"]),
+        ),
+    ])?;
+
+    // 2. configure a pipeline (log1p -> standard scale; hash-index city)
+    let pipeline = catalog::quickstart_pipeline();
+
+    // 3. fit on a partitioned dataset (the "Spark" side)
+    let model = pipeline.fit(&Dataset::from_dataframe(df.clone(), 2))?;
+
+    // 4. offline transform
+    let out = model.transform_df(df.clone())?;
+    println!("offline transform:");
+    for col in ["price_scaled", "city_indexed"] {
+        println!("  {col}: {:?}", out.column(col)?);
+    }
+
+    // 5. export the GraphSpec (the `build_keras_model()` analogue)
+    let spec = model.to_graph_spec(
+        "quickstart_demo",
+        catalog::quickstart_inputs(),
+        &catalog::QUICKSTART_OUTPUTS,
+    )?;
+    println!(
+        "\nexported spec: {} ingress ops, {} graph ops, {} graph inputs",
+        spec.ingress.len(),
+        spec.nodes.len(),
+        spec.graph_inputs.len()
+    );
+
+    // 6. serve through the AOT-compiled artifact (built by `make artifacts`
+    //    from the canonical quickstart spec)
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("specs/quickstart.json").exists() {
+        let backend = load_backend(&artifacts, "quickstart", "compiled")?;
+        let request = df.slice(0, 3);
+        let tensors = backend.process(&request)?;
+        println!("\ncompiled serving (PJRT, python-free):");
+        for (name, t) in ["price_scaled", "city_indexed"].iter().zip(&tensors) {
+            println!("  {name}: shape {:?} data {:?}", t.shape, t.data);
+        }
+    } else {
+        println!("\n(skip compiled serving: run `make artifacts` first)");
+    }
+    Ok(())
+}

@@ -1,0 +1,12 @@
+"""Build-time compiler: GraphSpec JSON -> JAX -> HLO text artifacts.
+
+This package is the L2/L1 half of the reproduction. It never runs at
+serving time: `make artifacts` invokes `aot.py` once, and the Rust
+binary loads the resulting `artifacts/*.hlo.txt` through PJRT.
+"""
+
+import jax
+
+# The whole stack computes token hashes and date math on int64; x64 must
+# be enabled before anything traces.
+jax.config.update("jax_enable_x64", True)

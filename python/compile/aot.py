@@ -1,0 +1,110 @@
+"""AOT driver: GraphSpec JSON -> HLO text artifacts for the Rust runtime.
+
+For every ``artifacts/specs/*.json`` (exported by ``kamae fit`` /
+``kamae export``), lower the compiled JAX function at each batch-bucket
+size and write ``artifacts/<name>@b<batch>.hlo.txt``.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the Rust `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True —
+the Rust side unwraps with `to_tuple()`.
+
+Usage:
+    python -m compile.aot [--specs DIR] [--out DIR] [--batches 1,8,32,128]
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+
+from . import model  # noqa: E402  (triggers x64 via package __init__)
+
+DEFAULT_BATCHES = (1, 8, 32, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides literals over ~64
+    # elements as `constant({...})`, which the HLO text parser then reads
+    # as garbage — vocab tables silently break without this flag.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def cost_analysis(lowered) -> str:
+    """L2 profile: XLA cost analysis of the lowered module (flops/bytes),
+    recorded per artifact in EXPERIMENTS.md §Perf."""
+    try:
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        flops = cost.get("flops", float("nan"))
+        bytes_ = cost.get("bytes accessed", float("nan"))
+        return f"flops={flops:.0f} bytes={bytes_:.0f}"
+    except Exception as e:  # cost analysis is best-effort
+        return f"cost-analysis unavailable ({e})"
+
+
+def compile_spec(spec_path: pathlib.Path, out_dir: pathlib.Path, batches) -> list:
+    spec = model.load_spec(spec_path)
+    fn = model.build_fn(spec)
+    name = spec.get("name") or spec_path.stem
+    written = []
+    for batch in batches:
+        args = model.example_args(spec, batch)
+        # keep_unused: the positional input contract with the Rust runtime
+        # is exactly spec["graph_inputs"] — jit must not prune params the
+        # graph body happens not to use.
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        out = out_dir / f"{name}@b{batch}.hlo.txt"
+        out.write_text(text)
+        written.append(out)
+        if batch == batches[-1]:
+            print(f"  {name}@b{batch}: {cost_analysis(lowered)}")
+    return written
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--specs", default="../artifacts/specs", help="directory of GraphSpec JSON files")
+    p.add_argument("--out", default="../artifacts", help="artifact output directory")
+    p.add_argument(
+        "--batches",
+        default=",".join(str(b) for b in DEFAULT_BATCHES),
+        help="comma-separated batch-bucket sizes",
+    )
+    args = p.parse_args(argv)
+
+    specs_dir = pathlib.Path(args.specs)
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    batches = [int(b) for b in args.batches.split(",") if b]
+
+    # *.model.json are fitted PipelineModel payloads, not GraphSpecs
+    spec_files = sorted(
+        p for p in specs_dir.glob("*.json") if not p.name.endswith(".model.json")
+    )
+    if not spec_files:
+        print(f"no specs found in {specs_dir}", file=sys.stderr)
+        return 1
+    total = 0
+    for sp in spec_files:
+        written = compile_spec(sp, out_dir, batches)
+        total += len(written)
+        print(f"{sp.name}: wrote {len(written)} artifacts "
+              f"({', '.join(w.name for w in written)})")
+    print(f"done: {total} artifacts in {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

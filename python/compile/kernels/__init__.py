@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the preprocessing hot-spots.
+
+`preprocess` holds the Pallas implementations (hash bucketing, bloom
+probes, fused affine scaling); `ref` holds the pure-jnp oracles used by
+pytest to pin the kernels down. Kernels run with ``interpret=True`` —
+the CPU PJRT plugin cannot execute Mosaic custom-calls; on a real TPU
+the same `pallas_call`s lower natively (structure notes in each
+docstring, perf estimates in DESIGN.md §Perf).
+"""
+
+from . import preprocess, ref  # noqa: F401

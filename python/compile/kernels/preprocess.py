@@ -1,0 +1,123 @@
+"""Pallas kernels for the preprocessing graph's compute hot-spots.
+
+Three kernels cover the profiled hot ops of exported Kamae pipelines:
+
+* ``hash_bucket``  — multiply-shift mixing of 64-bit token hashes into
+  ``[0, bins)`` (HashIndexTransformer, OOV bucketing).
+* ``bloom_probes`` — k independent mixes per token, probe j offset into
+  ``[j*bins, (j+1)*bins)`` (BloomEncodeTransformer).
+* ``affine_scale`` — fused ``x*scale + shift`` with per-position
+  constants (StandardScale / MinMaxScale; the paper's assemble→scale→
+  disassemble chain collapses into this one kernel).
+
+Bit-exactness contract: the integer mixing here must match
+``rust/src/ops/hash.rs::bucket`` exactly (same constants, wrapping u64
+multiplies, *logical* right shifts). The pytest suite checks the kernels
+against ``ref.py``; the Rust parity test then checks the whole compiled
+graph against the engine.
+
+TPU-structure notes (§Hardware-Adaptation): kernels are written over
+flat (N,)/(N,W) blocks sized to VMEM. On CPU they run in interpret
+mode; on TPU, `hash_bucket` at block 8×128 i64 uses ~8 KiB VMEM in +
+8 KiB out, `affine_scale` streams (8,128) f32 tiles with the (1,W)
+constant rows resident — both far under the ~16 MiB/core budget, so the
+grid is purely bandwidth-bound (estimates in DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Odd 64-bit mixing constants — MUST match rust/src/ops/hash.rs::MIX.
+MIX = (
+    0xFF51AFD7ED558CCD,
+    0xC4CEB9FE1A85EC53,
+    0x9E3779B97F4A7C15,
+    0xBF58476D1CE4E5B9,
+    0x94D049BB133111EB,
+    0x2545F4914F6CDD1D,
+    0xD6E8FEB86659FD93,
+    0xA5CB9243F0AEF993,
+)
+
+
+def _mix_bucket(h_u64, k: int, bins: int):
+    """The shared mixing body: ((h*MIX2 ^ h>>33) * MIX[k]) >>33 mod bins.
+
+    Operates on uint64 so multiplies wrap and shifts are logical,
+    matching Rust's `wrapping_mul` / `>>` on u64 exactly.
+    """
+    mixed = (h_u64 * jnp.uint64(MIX[2])) ^ (h_u64 >> jnp.uint64(33))
+    mixed = (mixed * jnp.uint64(MIX[k % len(MIX)])) >> jnp.uint64(33)
+    return (mixed % jnp.uint64(bins)).astype(jnp.int64)
+
+
+# ---------------------------------------------------------------------------
+# hash_bucket
+
+
+def _hash_bucket_kernel(h_ref, o_ref, *, k: int, bins: int):
+    h = h_ref[...].astype(jnp.uint64)
+    o_ref[...] = _mix_bucket(h, k, bins)
+
+
+def hash_bucket(h, bins: int, k: int = 0):
+    """Token hashes (any shape, int64) -> bin indices in [0, bins)."""
+    kernel = functools.partial(_hash_bucket_kernel, k=k, bins=bins)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(h.shape, jnp.int64),
+        interpret=True,
+    )(h)
+
+
+# ---------------------------------------------------------------------------
+# bloom_probes
+
+
+def _bloom_kernel(h_ref, o_ref, *, num_hashes: int, bins: int):
+    h = h_ref[...].astype(jnp.uint64)  # (N,)
+    # vectorise probes across a new trailing axis: each probe j is an
+    # independent mix, offset into its own bin space. On TPU the probe
+    # axis maps onto lanes; no loop-carried state.
+    cols = []
+    for j in range(num_hashes):
+        cols.append(jnp.int64(j * bins) + _mix_bucket(h, j, bins))
+    o_ref[...] = jnp.stack(cols, axis=-1)
+
+
+def bloom_probes(h, num_hashes: int, bins: int):
+    """Token hashes (N,) int64 -> (N, num_hashes) probe indices."""
+    kernel = functools.partial(_bloom_kernel, num_hashes=num_hashes, bins=bins)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((*h.shape, num_hashes), jnp.int64),
+        interpret=True,
+    )(h)
+
+
+# ---------------------------------------------------------------------------
+# affine_scale
+
+
+def _affine_kernel(x_ref, scale_ref, shift_ref, o_ref):
+    o_ref[...] = x_ref[...] * scale_ref[...] + shift_ref[...]
+
+
+def affine_scale(x, scale, shift):
+    """Fused x*scale + shift.
+
+    x: (N,) or (N, W) float32; scale/shift: (W,) float32 broadcast over
+    rows (W = 1 for scalar features).
+    """
+    x2 = x if x.ndim == 2 else x[:, None]
+    s2 = jnp.broadcast_to(scale.astype(jnp.float32), (1, x2.shape[1]))
+    t2 = jnp.broadcast_to(shift.astype(jnp.float32), (1, x2.shape[1]))
+    out = pl.pallas_call(
+        _affine_kernel,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        interpret=True,
+    )(x2.astype(jnp.float32), s2, t2)
+    return out if x.ndim == 2 else out[:, 0]

@@ -1,0 +1,52 @@
+"""Pure-jnp / pure-python oracles for the Pallas kernels.
+
+These are the CORE correctness pins: `ref_bucket_py` is a transliteration
+of ``rust/src/ops/hash.rs::bucket`` using python big-int arithmetic (no
+numpy wrapping subtleties), so a kernel↔ref match here plus the Rust
+parity test closes the loop Rust ⇄ JAX bit-exactly.
+"""
+
+import jax.numpy as jnp
+
+from .preprocess import MIX
+
+_U64 = (1 << 64) - 1
+
+
+def fnv1a64(s: str) -> int:
+    """FNV-1a 64 over UTF-8 bytes, top bit cleared — mirrors
+    rust/src/ops/hash.rs::fnv1a64 (test utility: ingress hashing is
+    Rust-side in production)."""
+    h = 0xCBF29CE484222325
+    for b in s.encode("utf-8"):
+        h ^= b
+        h = (h * 0x100000001B3) & _U64
+    return h & 0x7FFFFFFFFFFFFFFF
+
+
+def ref_bucket_py(h: int, k: int, bins: int) -> int:
+    """Python big-int transliteration of hash.rs::bucket."""
+    h &= _U64
+    mixed = ((h * MIX[2]) & _U64) ^ (h >> 33)
+    mixed = ((mixed * MIX[k % len(MIX)]) & _U64) >> 33
+    return mixed % bins
+
+
+def ref_hash_bucket(h, bins: int, k: int = 0):
+    """Vectorised jnp reference (uint64 arithmetic)."""
+    hu = h.astype(jnp.uint64)
+    mixed = (hu * jnp.uint64(MIX[2])) ^ (hu >> jnp.uint64(33))
+    mixed = (mixed * jnp.uint64(MIX[k % len(MIX)])) >> jnp.uint64(33)
+    return (mixed % jnp.uint64(bins)).astype(jnp.int64)
+
+
+def ref_bloom_probes(h, num_hashes: int, bins: int):
+    cols = [jnp.int64(j * bins) + ref_hash_bucket(h, bins, j) for j in range(num_hashes)]
+    return jnp.stack(cols, axis=-1)
+
+
+def ref_affine_scale(x, scale, shift):
+    x2 = x.astype(jnp.float32)
+    if x2.ndim == 1:
+        return x2 * scale.astype(jnp.float32)[0] + shift.astype(jnp.float32)[0]
+    return x2 * scale.astype(jnp.float32)[None, :] + shift.astype(jnp.float32)[None, :]

@@ -1,0 +1,383 @@
+"""L2: compile a GraphSpec (exported by the Rust engine) into a JAX
+function — the analogue of Kamae's `build_keras_model()`.
+
+The compiled function takes the spec's `graph_inputs` as positional
+arrays (float32 / int64; scalar features (B,), sequence features (B,W))
+and returns the spec's `outputs` as a tuple. String handling never
+reaches this layer: the Rust ingress already hashed/split/parsed
+everything (DESIGN.md §Substitutions).
+
+Each op here mirrors `rust/src/export/interp.rs::eval_node` — that
+interpreter plus the parity tests are the ground truth for semantics.
+The hot ops (hash_bucket, bloom_encode, scale_vec) call the L1 Pallas
+kernels.
+"""
+
+import json
+import math
+
+import jax.numpy as jnp
+
+from .kernels import preprocess as K
+
+# ---------------------------------------------------------------------------
+# date math (mirrors rust/src/ops/date.rs, all int64 floor-division)
+
+
+def _civil_from_days(z):
+    z = z + 719_468
+    era = z // 146_097
+    doe = z - era * 146_097
+    yoe = (doe - doe // 1460 + doe // 36524 - doe // 146_096) // 365
+    y = yoe + era * 400
+    doy = doe - (365 * yoe + yoe // 4 - yoe // 100)
+    mp = (5 * doy + 2) // 153
+    d = doy - (153 * mp + 2) // 5 + 1
+    m = jnp.where(mp < 10, mp + 3, mp - 9)
+    y = jnp.where(m <= 2, y + 1, y)
+    return y, m, d
+
+
+def _days_from_civil(y, m, d):
+    y = jnp.where(m <= 2, y - 1, y)
+    era = y // 400
+    yoe = y - era * 400
+    mp = jnp.where(m > 2, m - 3, m + 9)
+    doy = (153 * mp + 2) // 5 + d - 1
+    doe = yoe * 365 + yoe // 4 - yoe // 100 + doy
+    return era * 146_097 + doe - 719_468
+
+
+def _date_part(z, part: str):
+    if part == "year":
+        return _civil_from_days(z)[0]
+    if part == "month":
+        return _civil_from_days(z)[1]
+    if part == "day":
+        return _civil_from_days(z)[2]
+    if part == "weekday":
+        return (z + 3) % 7 + 1
+    if part == "day_of_year":
+        y, _, _ = _civil_from_days(z)
+        return z - _days_from_civil(y, jnp.int64(1), jnp.int64(1)) + 1
+    raise ValueError(f"unknown date part: {part}")
+
+
+# ---------------------------------------------------------------------------
+# op table
+
+_F = jnp.float32
+_I = jnp.int64
+
+
+def _f(x):
+    return x.astype(_F)
+
+
+def _bcast(x, y):
+    """Row-broadcast for list∘scalar mixes: (B,W)∘(B,) -> (B,W)."""
+    if x.ndim == 2 and y.ndim == 1:
+        return x, y[:, None]
+    if x.ndim == 1 and y.ndim == 2:
+        return x[:, None], y
+    return x, y
+
+
+def _unary(fn):
+    return lambda args, a: fn(_f(args[0]), a)
+
+
+_UNARY = {
+    "log": lambda x, a: jnp.log(x) if a.get("base") is None else jnp.log(x) / _F(math.log(a["base"])),
+    "log1p": lambda x, a: jnp.log1p(x),
+    "exp": lambda x, a: jnp.exp(x),
+    "sqrt": lambda x, a: jnp.sqrt(x),
+    "abs": lambda x, a: jnp.abs(x),
+    "neg": lambda x, a: -x,
+    "reciprocal": lambda x, a: 1.0 / x,
+    "round": lambda x, a: jnp.round(x),  # half-to-even, like the engine
+    "floor": lambda x, a: jnp.floor(x),
+    "ceil": lambda x, a: jnp.ceil(x),
+    "sin": lambda x, a: jnp.sin(x),
+    "cos": lambda x, a: jnp.cos(x),
+    "tanh": lambda x, a: jnp.tanh(x),
+    "sigmoid": lambda x, a: 1.0 / (1.0 + jnp.exp(-x)),
+    "clip": lambda x, a: jnp.clip(
+        x,
+        _F(a["min"]) if a.get("min") is not None else None,
+        _F(a["max"]) if a.get("max") is not None else None,
+    ),
+    "pow_scalar": lambda x, a: jnp.power(x, _F(a["p"])),
+    "add_scalar": lambda x, a: x + _F(a["c"]),
+    "sub_scalar": lambda x, a: x - _F(a["c"]),
+    "mul_scalar": lambda x, a: x * _F(a["c"]),
+    "div_scalar": lambda x, a: x / _F(a["c"]),
+    "scale_shift": lambda x, a: x * _F(a["scale"]) + _F(a["shift"]),
+}
+
+_BINARY = {
+    "add": lambda x, y: x + y,
+    "sub": lambda x, y: x - y,
+    "mul": lambda x, y: x * y,
+    "div": lambda x, y: x / y,
+    "pow": jnp.power,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "mod": jnp.mod,  # python-style sign, matching the engine
+}
+
+_CMP = {
+    "eq": lambda x, y: x == y,
+    "ne": lambda x, y: x != y,
+    "lt": lambda x, y: x < y,
+    "le": lambda x, y: x <= y,
+    "gt": lambda x, y: x > y,
+    "ge": lambda x, y: x >= y,
+}
+
+
+def _bsearch(table, x, side: str):
+    """Unrolled branchless binary search (jnp.searchsorted replacement).
+
+    jnp.searchsorted lowers to a scan/while whose HLO miscompiles on the
+    xla_extension 0.5.1 CPU runtime for large constant tables (found-mask
+    silently all-false); ceil(log2 n)+1 unrolled where-steps are immune,
+    fully vectorised, and map cleanly onto TPU vector units.
+    """
+    n = table.shape[0]
+    iters = max(1, (n).bit_length() + 1)
+    lo = jnp.zeros(x.shape, dtype=_I)
+    hi = jnp.full(x.shape, n, dtype=_I)
+    for _ in range(iters):
+        mid = (lo + hi) >> 1
+        probe = table[jnp.minimum(mid, n - 1)]
+        go_right = (probe <= x) if side == "right" else (probe < x)
+        cond = lo < hi
+        lo = jnp.where(cond & go_right, mid + 1, lo)
+        hi = jnp.where(cond & (~go_right), mid, hi)
+    return lo
+
+
+def _vocab_found(hashes, x):
+    """Sorted-table membership: (found_mask, rank_at_position)."""
+    table = jnp.asarray(hashes, dtype=_I)
+    idx = _bsearch(table, x, side="left")
+    idx_c = jnp.clip(idx, 0, len(hashes) - 1)
+    found = table[idx_c] == x
+    return found, idx_c
+
+
+def _op_vocab_lookup(args, a):
+    x = args[0]
+    hashes, ranks = a["vocab_hashes"], a["vocab_ranks"]
+    num_oov, base = int(a["num_oov"]), int(a["base"])
+    rank_table = jnp.asarray(ranks, dtype=_I)
+    if len(hashes) > 0:
+        found, pos = _vocab_found(hashes, x)
+        in_vocab = base + num_oov + rank_table[pos]
+    else:
+        found = jnp.zeros(x.shape, dtype=bool)
+        in_vocab = jnp.zeros(x.shape, dtype=_I)
+    oov = base + K.hash_bucket(x, num_oov)
+    out = jnp.where(found, in_vocab, oov)
+    if a.get("mask_hash") is not None:
+        out = jnp.where(x == jnp.int64(a["mask_hash"]), jnp.int64(0), out)
+    return out
+
+
+def _op_one_hot(args, a):
+    x = args[0]
+    hashes, ranks = a["vocab_hashes"], a["vocab_ranks"]
+    num_oov = int(a["num_oov"])
+    drop = bool(a.get("drop_unseen", False))
+    depth = len(hashes) if drop else num_oov + len(hashes)
+    rank_table = jnp.asarray(ranks, dtype=_I)
+    found, pos = _vocab_found(hashes, x)
+    rank = rank_table[pos]
+    hot_vocab = rank if drop else num_oov + rank
+    if drop:
+        hot = jnp.where(found, hot_vocab, -1)  # -1 -> all-zero row
+    else:
+        hot = jnp.where(found, hot_vocab, K.hash_bucket(x, num_oov))
+    eye = jnp.arange(depth, dtype=_I)
+    return (hot[..., None] == eye).astype(_F)
+
+
+def _op_impute(args, a):
+    x = _f(args[0])
+    missing = jnp.isnan(x)
+    if a.get("mask_value") is not None:
+        missing = missing | (x == _F(a["mask_value"]))
+    return jnp.where(missing, _F(a["fill"]), x)
+
+
+_OPS = {
+    "identity": lambda args, a: args[0],
+    "to_f32": lambda args, a: _f(args[0]),
+    "to_i64": lambda args, a: args[0].astype(_I),  # trunc toward zero
+    "bucketize": lambda args, a: _bsearch(
+        jnp.asarray(a["splits"], dtype=_F), _f(args[0]), side="right"
+    ),
+    "columns_agg": lambda args, a: _columns_agg(args, a),
+    "date_part": lambda args, a: _date_part(args[0], a["part"]),
+    "sub_i64": lambda args, a: args[0] - args[1],
+    "add_scalar_i64": lambda args, a: args[0] + jnp.int64(a["c"]),
+    "floordiv_scalar_i64": lambda args, a: args[0] // jnp.int64(a["c"]),
+    "compare": lambda args, a: _CMP[a["op"]](*_bcast(_f(args[0]), _f(args[1]))).astype(_I),
+    "compare_scalar": lambda args, a: _CMP[a["op"]](_f(args[0]), _F(a["value"])).astype(_I),
+    "eq_hash": lambda args, a: (args[0] == jnp.int64(a["value_hash"])).astype(_I),
+    "bool_op": lambda args, a: _bool_op(args, a),
+    "not": lambda args, a: (args[0] == 0).astype(_I),
+    "select": lambda args, a: jnp.where(args[0] != 0, _f(args[1]), _f(args[2])),
+    "is_nan": lambda args, a: jnp.isnan(_f(args[0])).astype(_I),
+    "assemble": lambda args, a: jnp.stack([_f(x) for x in args], axis=-1),
+    "vector_at": lambda args, a: args[0][:, int(a["index"])],
+    "list_sum": lambda args, a: jnp.sum(_f(args[0]), axis=-1),
+    "list_mean": lambda args, a: jnp.mean(_f(args[0]), axis=-1),
+    "list_min": lambda args, a: jnp.min(_f(args[0]), axis=-1),
+    "list_max": lambda args, a: jnp.max(_f(args[0]), axis=-1),
+    "list_len": lambda args, a: jnp.full(
+        args[0].shape[:1], args[0].shape[-1] if args[0].ndim > 1 else 1, dtype=_I
+    ),
+    "element_at": lambda args, a: _element_at(args[0], int(a["index"])),
+    "slice_list": lambda args, a: _slice_list(args[0], a),
+    "hash_bucket": lambda args, a: K.hash_bucket(args[0], int(a["num_bins"])),
+    "bloom_encode": lambda args, a: K.bloom_probes(
+        args[0], int(a["num_hashes"]), int(a["num_bins"])
+    ),
+    "vocab_lookup": _op_vocab_lookup,
+    "one_hot": _op_one_hot,
+    "scale_vec": lambda args, a: K.affine_scale(
+        _f(args[0]),
+        jnp.asarray(a["scale"], dtype=_F),
+        jnp.asarray(a["shift"], dtype=_F),
+    ),
+    "impute": _op_impute,
+    "haversine": lambda args, a: _haversine(args),
+    "cosine_similarity": lambda args, a: _cosine(args),
+}
+
+
+def _cosine(args):
+    x, y = _f(args[0]), _f(args[1])
+    dot = jnp.sum(x * y, axis=-1)
+    nx = jnp.sqrt(jnp.sum(x * x, axis=-1))
+    ny = jnp.sqrt(jnp.sum(y * y, axis=-1))
+    denom = nx * ny
+    return jnp.where(denom == 0, _F(0.0), dot / denom)
+
+
+def _columns_agg(args, a):
+    stacked = jnp.stack([_f(x) for x in args], axis=0)
+    agg = a["agg"]
+    if agg == "sum":
+        return jnp.sum(stacked, axis=0)
+    if agg == "mean":
+        return jnp.mean(stacked, axis=0)
+    if agg == "min":
+        return jnp.min(stacked, axis=0)
+    return jnp.max(stacked, axis=0)
+
+
+def _bool_op(args, a):
+    x, y = args[0] != 0, args[1] != 0
+    op = a["op"]
+    if op == "and":
+        return (x & y).astype(_I)
+    if op == "or":
+        return (x | y).astype(_I)
+    return (x ^ y).astype(_I)
+
+
+def _element_at(x, idx: int):
+    w = x.shape[-1]
+    j = w + idx if idx < 0 else idx
+    return x[:, j]
+
+
+def _slice_list(x, a):
+    w = x.shape[-1]
+    s = min(int(a["start"]), w)
+    e = min(int(a["start"]) + int(a["len"]), w)
+    return x[:, s:e]
+
+
+def _haversine(args):
+    lat1, lon1, lat2, lon2 = (_f(x) for x in args)
+    radius = _F(6371.0088)
+    p1, p2 = jnp.radians(lat1), jnp.radians(lat2)
+    dp = jnp.radians(lat2 - lat1)
+    dl = jnp.radians(lon2 - lon1)
+    h = jnp.sin(dp / 2) ** 2 + jnp.cos(p1) * jnp.cos(p2) * jnp.sin(dl / 2) ** 2
+    return 2 * radius * jnp.arcsin(jnp.minimum(jnp.sqrt(h), 1.0))
+
+
+# ---------------------------------------------------------------------------
+# spec compiler
+
+
+def _binary_with_bcast(op, args):
+    x, y = _bcast(_f(args[0]), _f(args[1]))
+    return _BINARY[op](x, y)
+
+
+def load_spec(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def input_meta(spec):
+    """Positional (name, dtype, width) for the compiled function's args."""
+    ingress = {n["id"]: n for n in spec["ingress"]}
+    raw = {i["name"]: i for i in spec["inputs"]}
+    out = []
+    for name in spec["graph_inputs"]:
+        if name in ingress:
+            node = ingress[name]
+            out.append((name, node["dtype"], node.get("width")))
+        else:
+            inp = raw[name]
+            dt = inp["dtype"]
+            if dt.startswith("array<"):
+                dt = dt[len("array<"):-1]
+            spec_dt = "int64" if dt in ("int32", "int64", "bool", "string") else "float32"
+            out.append((name, spec_dt, inp.get("width")))
+    return out
+
+
+def build_fn(spec):
+    """GraphSpec dict -> python callable over positional jnp arrays."""
+    nodes = spec["nodes"]
+    graph_inputs = list(spec["graph_inputs"])
+    outputs = list(spec["outputs"])
+
+    def fn(*args):
+        env = dict(zip(graph_inputs, args))
+        for node in nodes:
+            ins = [env[i] for i in node["inputs"]]
+            op = node["op"]
+            attrs = node.get("attrs", {})
+            if op in _UNARY:
+                val = _UNARY[op](_f(ins[0]), attrs)
+            elif op in _BINARY:
+                val = _binary_with_bcast(op, ins)
+            elif op in _OPS:
+                val = _OPS[op](ins, attrs)
+            else:
+                raise ValueError(f"unknown graph op: {op}")
+            env[node["id"]] = val
+        return tuple(env[o] for o in outputs)
+
+    return fn
+
+
+def example_args(spec, batch: int):
+    """ShapeDtypeStructs for lowering at a given batch size."""
+    import jax
+
+    metas = input_meta(spec)
+    out = []
+    for _, dtype, width in metas:
+        shape = (batch,) if width is None else (batch, int(width))
+        out.append(jax.ShapeDtypeStruct(shape, jnp.dtype(dtype)))
+    return out

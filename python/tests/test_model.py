@@ -1,0 +1,199 @@
+"""L2 spec-compiler correctness: op semantics, date math, binary search,
+and an end-to-end handcrafted spec compiled + executed."""
+
+import datetime
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# date math vs python's datetime (the oracle the Rust side also matches)
+
+
+@settings(max_examples=200, deadline=None)
+@given(days=st.integers(min_value=-150_000, max_value=150_000))
+def test_civil_from_days_matches_datetime(days):
+    d = datetime.date(1970, 1, 1) + datetime.timedelta(days=days)
+    z = jnp.int64(days)
+    y, m, dd = model._civil_from_days(z)
+    assert (int(y), int(m), int(dd)) == (d.year, d.month, d.day)
+    assert int(model._days_from_civil(y, m, dd)) == days
+    # ISO weekday 1..7
+    assert int(model._date_part(z, "weekday")) == d.isoweekday()
+    assert int(model._date_part(z, "day_of_year")) == d.timetuple().tm_yday
+
+
+# ---------------------------------------------------------------------------
+# the searchsorted replacement
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    table=st.lists(st.integers(min_value=-1 << 62, max_value=1 << 62), min_size=1, max_size=200, unique=True),
+    xs=st.lists(st.integers(min_value=-1 << 62, max_value=1 << 62), min_size=1, max_size=50),
+    side=st.sampled_from(["left", "right"]),
+)
+def test_bsearch_matches_numpy(table, xs, side):
+    table = sorted(table)
+    t = jnp.array(table, dtype=jnp.int64)
+    x = jnp.array(xs, dtype=jnp.int64)
+    got = model._bsearch(t, x, side)
+    expected = np.searchsorted(np.array(table), np.array(xs), side=side)
+    np.testing.assert_array_equal(got, expected)
+
+
+# ---------------------------------------------------------------------------
+# op semantics (mirroring rust/src/export/interp.rs)
+
+
+def test_vocab_lookup_semantics():
+    labels = ["drama", "comedy", "action"]  # rank = position
+    pairs = sorted((ref.fnv1a64(s), r) for r, s in enumerate(labels))
+    attrs = {
+        "vocab_hashes": [h for h, _ in pairs],
+        "vocab_ranks": [r for _, r in pairs],
+        "num_oov": 2,
+        "base": 1,
+        "mask_hash": ref.fnv1a64("PAD"),
+    }
+    x = jnp.array(
+        [ref.fnv1a64("comedy"), ref.fnv1a64("PAD"), ref.fnv1a64("zzz_unseen")],
+        dtype=jnp.int64,
+    )
+    out = np.asarray(model._op_vocab_lookup([x], attrs))
+    assert out[0] == 1 + 2 + 1  # base + num_oov + rank(comedy)
+    assert out[1] == 0  # mask
+    assert 1 <= out[2] <= 2  # oov bucket
+
+
+def test_one_hot_semantics():
+    labels = ["a", "b"]
+    pairs = sorted((ref.fnv1a64(s), r) for r, s in enumerate(labels))
+    attrs = {
+        "vocab_hashes": [h for h, _ in pairs],
+        "vocab_ranks": [r for _, r in pairs],
+        "num_oov": 1,
+        "drop_unseen": False,
+    }
+    x = jnp.array([ref.fnv1a64("a"), ref.fnv1a64("nope")], dtype=jnp.int64)
+    out = np.asarray(model._op_one_hot([x], attrs))
+    assert out.shape == (2, 3)
+    np.testing.assert_array_equal(out[0], [0, 1, 0])  # oov slot 0, a -> 1
+    np.testing.assert_array_equal(out[1], [1, 0, 0])  # unseen -> oov
+    attrs["drop_unseen"] = True
+    out = np.asarray(model._op_one_hot([x], attrs))
+    assert out.shape == (2, 2)
+    np.testing.assert_array_equal(out[1], [0, 0])  # dropped
+
+
+def test_impute_and_select():
+    x = jnp.array([1.0, jnp.nan, -1.0], dtype=jnp.float32)
+    out = np.asarray(model._op_impute([x], {"fill": 7.0, "mask_value": -1.0}))
+    np.testing.assert_array_equal(out, [1.0, 7.0, 7.0])
+    cond = jnp.array([1, 0], dtype=jnp.int64)
+    a = jnp.array([10.0, 10.0], dtype=jnp.float32)
+    b = jnp.array([20.0, 20.0], dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(model._OPS["select"]([cond, a, b], {})), [10.0, 20.0]
+    )
+
+
+def test_binary_broadcast_list_scalar():
+    x = jnp.array([[1.0, 2.0], [3.0, 4.0]], dtype=jnp.float32)  # (2,2)
+    y = jnp.array([10.0, 100.0], dtype=jnp.float32)  # (2,)
+    out = np.asarray(model._binary_with_bcast("mul", [x, y]))
+    np.testing.assert_array_equal(out, [[10.0, 20.0], [300.0, 400.0]])
+
+
+def test_mod_python_semantics():
+    x = jnp.array([-7.0, 7.0], dtype=jnp.float32)
+    y = jnp.array([3.0, -3.0], dtype=jnp.float32)
+    out = np.asarray(model._binary_with_bcast("mod", [x, y]))
+    np.testing.assert_allclose(out, [2.0, -2.0])
+
+
+def test_round_half_even():
+    x = jnp.array([0.5, 1.5, 2.5, -0.5], dtype=jnp.float32)
+    out = np.asarray(model._UNARY["round"](x, {}))
+    np.testing.assert_array_equal(out, [0.0, 2.0, 2.0, -0.0])
+
+
+def test_haversine_london_paris():
+    args = [jnp.array([v], dtype=jnp.float32) for v in (51.5074, -0.1278, 48.8566, 2.3522)]
+    d = float(model._OPS["haversine"](args, {})[0])
+    assert abs(d - 344.0) < 5.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: handcrafted spec -> compiled fn -> expected values
+
+
+def _mini_spec():
+    labels = ["nyc", "lon"]
+    pairs = sorted((ref.fnv1a64(s), r) for r, s in enumerate(labels))
+    return {
+        "name": "mini",
+        "inputs": [
+            {"name": "price", "dtype": "float64", "width": None},
+            {"name": "city", "dtype": "string", "width": None},
+        ],
+        "ingress": [
+            {"id": "city__hash", "op": "hash64", "inputs": ["city"], "attrs": {},
+             "dtype": "int64", "width": None},
+        ],
+        "graph_inputs": ["price", "city__hash"],
+        "nodes": [
+            {"id": "price_log", "op": "log1p", "inputs": ["price"], "attrs": {},
+             "dtype": "float32", "width": None},
+            {"id": "city_idx", "op": "vocab_lookup", "inputs": ["city__hash"],
+             "attrs": {"vocab_hashes": [h for h, _ in pairs],
+                       "vocab_ranks": [r for _, r in pairs],
+                       "num_oov": 1, "base": 0, "mask_hash": None},
+             "dtype": "int64", "width": None},
+            {"id": "city_bin", "op": "hash_bucket", "inputs": ["city__hash"],
+             "attrs": {"num_bins": 32}, "dtype": "int64", "width": None},
+        ],
+        "outputs": ["price_log", "city_idx", "city_bin"],
+    }
+
+
+def test_spec_compiles_and_runs():
+    spec = _mini_spec()
+    fn = model.build_fn(spec)
+    metas = model.input_meta(spec)
+    assert [m[0] for m in metas] == ["price", "city__hash"]
+    assert metas[0][1] == "float32" and metas[1][1] == "int64"
+
+    price = jnp.array([0.0, np.e - 1.0], dtype=jnp.float32)
+    city = jnp.array([ref.fnv1a64("lon"), ref.fnv1a64("tokyo")], dtype=jnp.int64)
+    out = fn(price, city)
+    np.testing.assert_allclose(np.asarray(out[0]), [0.0, 1.0], rtol=1e-6)
+    assert int(out[1][0]) == 1 + 1  # num_oov + rank(lon)
+    assert int(out[1][1]) == 0  # oov
+    assert int(out[2][0]) == ref.ref_bucket_py(ref.fnv1a64("lon"), 0, 32)
+
+    # lowering must keep both params and stay jit-compatible
+    lowered = jax.jit(fn, keep_unused=True).lower(*model.example_args(spec, 4))
+    text = lowered.as_text()
+    assert "tensor<4xf32>" in text and "tensor<4xi64>" in text
+
+
+def test_example_args_shapes():
+    spec = _mini_spec()
+    spec["ingress"][0]["width"] = 3
+    spec["inputs"][1]["width"] = 3
+    args = model.example_args(spec, 8)
+    assert args[0].shape == (8,)
+    assert args[1].shape == (8, 3)
+
+
+def test_cosine_similarity_op():
+    x = jnp.array([[1.0, 0.0], [3.0, 4.0], [0.0, 0.0]], dtype=jnp.float32)
+    y = jnp.array([[0.0, 2.0], [3.0, 4.0], [1.0, 1.0]], dtype=jnp.float32)
+    out = np.asarray(model._OPS["cosine_similarity"]([x, y], {}))
+    np.testing.assert_allclose(out, [0.0, 1.0, 0.0], atol=1e-6)

@@ -1,0 +1,12 @@
+//! Baselines the paper compares against.
+//!
+//! [`mleap_like`] reproduces the performance-relevant shape of MLeap's
+//! runtime: the fitted pipeline is interpreted **row at a time** over
+//! boxed dynamically-typed values, with per-row dispatch and allocation
+//! and no vectorisation or fusion — exactly the "user-defined functions"
+//! execution model the paper contrasts with native transformations
+//! (experiments C2 and C3).
+
+pub mod mleap_like;
+
+pub use mleap_like::RowPipeline;

@@ -1,0 +1,553 @@
+//! Typed columns with optional null masks and ragged list columns.
+
+use crate::error::{KamaeError, Result};
+use crate::dataframe::Value;
+
+/// Data type of a column, mirroring the subset of Spark SQL types Kamae's
+/// transformers operate on. One level of list nesting is supported, which
+/// covers the paper's "nested-sequence-native" features (e.g. per-item
+/// amenity lists in Learning-to-Rank data).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum DType {
+    Bool,
+    I32,
+    I64,
+    F32,
+    F64,
+    Str,
+    /// Ragged list of the given element type (no nested lists-of-lists).
+    List(Box<DType>),
+}
+
+impl DType {
+    /// Parse a dtype name as used in transformer configs and GraphSpec JSON
+    /// (`"double"`/`"float64"`, `"string"`, `"array<string>"`, ...).
+    pub fn parse(s: &str) -> Result<DType> {
+        let s = s.trim();
+        if let Some(inner) = s.strip_prefix("array<").and_then(|r| r.strip_suffix('>')) {
+            return Ok(DType::List(Box::new(DType::parse(inner)?)));
+        }
+        match s {
+            "bool" | "boolean" => Ok(DType::Bool),
+            "int" | "int32" | "integer" => Ok(DType::I32),
+            "long" | "int64" | "bigint" => Ok(DType::I64),
+            "float" | "float32" => Ok(DType::F32),
+            "double" | "float64" => Ok(DType::F64),
+            "string" | "str" => Ok(DType::Str),
+            other => Err(KamaeError::InvalidConfig(format!("unknown dtype: {other}"))),
+        }
+    }
+
+    /// Canonical name used in GraphSpec JSON (matches the python side).
+    pub fn name(&self) -> String {
+        match self {
+            DType::Bool => "bool".into(),
+            DType::I32 => "int32".into(),
+            DType::I64 => "int64".into(),
+            DType::F32 => "float32".into(),
+            DType::F64 => "float64".into(),
+            DType::Str => "string".into(),
+            DType::List(inner) => format!("array<{}>", inner.name()),
+        }
+    }
+
+    /// True for the numeric scalar dtypes.
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, DType::I32 | DType::I64 | DType::F32 | DType::F64)
+    }
+
+    /// Element type if this is a list dtype.
+    pub fn element(&self) -> Option<&DType> {
+        match self {
+            DType::List(inner) => Some(inner),
+            _ => None,
+        }
+    }
+}
+
+/// Ragged list storage: `offsets.len() == nrows + 1`, row `i` spans
+/// `values[offsets[i]..offsets[i+1]]`. This is the Arrow layout — list
+/// operations stay vectorised over `values` instead of boxing per row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ListColumn<T> {
+    pub values: Vec<T>,
+    pub offsets: Vec<u32>,
+}
+
+impl<T: Clone> ListColumn<T> {
+    /// Build from per-row vectors (convenience; prefer building
+    /// offsets/values directly in hot paths).
+    pub fn from_rows(rows: Vec<Vec<T>>) -> Self {
+        let mut offsets = Vec::with_capacity(rows.len() + 1);
+        offsets.push(0u32);
+        let total: usize = rows.iter().map(|r| r.len()).sum();
+        let mut values = Vec::with_capacity(total);
+        for row in rows {
+            values.extend(row);
+            offsets.push(values.len() as u32);
+        }
+        ListColumn { values, offsets }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Slice of row `i`'s elements.
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.values[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Iterator over row slices.
+    pub fn rows(&self) -> impl Iterator<Item = &[T]> {
+        self.offsets
+            .windows(2)
+            .map(move |w| &self.values[w[0] as usize..w[1] as usize])
+    }
+
+    /// True if every row has exactly `n` elements (fixed-width list, the
+    /// export contract for compiled graphs).
+    pub fn is_fixed_width(&self, n: usize) -> bool {
+        self.offsets.windows(2).all(|w| (w[1] - w[0]) as usize == n)
+    }
+
+    /// Fixed width if all rows agree, else `None`.
+    pub fn fixed_width(&self) -> Option<usize> {
+        if self.is_empty() {
+            return None;
+        }
+        let w = (self.offsets[1] - self.offsets[0]) as usize;
+        if self.is_fixed_width(w) {
+            Some(w)
+        } else {
+            None
+        }
+    }
+}
+
+/// A column of data. Scalar variants carry an optional null mask
+/// (`true` = null); list variants are ragged and non-nullable at the list
+/// level (matching how Kamae's sequence features behave after padding).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    Bool(Vec<bool>, Option<Vec<bool>>),
+    I32(Vec<i32>, Option<Vec<bool>>),
+    I64(Vec<i64>, Option<Vec<bool>>),
+    F32(Vec<f32>, Option<Vec<bool>>),
+    F64(Vec<f64>, Option<Vec<bool>>),
+    Str(Vec<String>, Option<Vec<bool>>),
+    ListBool(ListColumn<bool>),
+    ListI32(ListColumn<i32>),
+    ListI64(ListColumn<i64>),
+    ListF32(ListColumn<f32>),
+    ListF64(ListColumn<f64>),
+    ListStr(ListColumn<String>),
+}
+
+impl Column {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn from_bool(v: Vec<bool>) -> Self {
+        Column::Bool(v, None)
+    }
+    pub fn from_i32(v: Vec<i32>) -> Self {
+        Column::I32(v, None)
+    }
+    pub fn from_i64(v: Vec<i64>) -> Self {
+        Column::I64(v, None)
+    }
+    pub fn from_f32(v: Vec<f32>) -> Self {
+        Column::F32(v, None)
+    }
+    pub fn from_f64(v: Vec<f64>) -> Self {
+        Column::F64(v, None)
+    }
+    pub fn from_str<S: Into<String>>(v: Vec<S>) -> Self {
+        Column::Str(v.into_iter().map(Into::into).collect(), None)
+    }
+    pub fn from_str_rows<S: Into<String>>(rows: Vec<Vec<S>>) -> Self {
+        Column::ListStr(ListColumn::from_rows(
+            rows.into_iter()
+                .map(|r| r.into_iter().map(Into::into).collect())
+                .collect(),
+        ))
+    }
+    pub fn from_f64_rows(rows: Vec<Vec<f64>>) -> Self {
+        Column::ListF64(ListColumn::from_rows(rows))
+    }
+    pub fn from_i64_rows(rows: Vec<Vec<i64>>) -> Self {
+        Column::ListI64(ListColumn::from_rows(rows))
+    }
+
+    /// Column of nulls-aware optional f64 values.
+    pub fn from_f64_opt(v: Vec<Option<f64>>) -> Self {
+        let nulls: Vec<bool> = v.iter().map(|x| x.is_none()).collect();
+        let data: Vec<f64> = v.into_iter().map(|x| x.unwrap_or(0.0)).collect();
+        let mask = if nulls.iter().any(|&n| n) { Some(nulls) } else { None };
+        Column::F64(data, mask)
+    }
+
+    /// Column of nulls-aware optional strings.
+    pub fn from_str_opt(v: Vec<Option<String>>) -> Self {
+        let nulls: Vec<bool> = v.iter().map(|x| x.is_none()).collect();
+        let data: Vec<String> = v.into_iter().map(|x| x.unwrap_or_default()).collect();
+        let mask = if nulls.iter().any(|&n| n) { Some(nulls) } else { None };
+        Column::Str(data, mask)
+    }
+
+    // ---- basic accessors --------------------------------------------------
+
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Bool(v, _) => v.len(),
+            Column::I32(v, _) => v.len(),
+            Column::I64(v, _) => v.len(),
+            Column::F32(v, _) => v.len(),
+            Column::F64(v, _) => v.len(),
+            Column::Str(v, _) => v.len(),
+            Column::ListBool(l) => l.len(),
+            Column::ListI32(l) => l.len(),
+            Column::ListI64(l) => l.len(),
+            Column::ListF32(l) => l.len(),
+            Column::ListF64(l) => l.len(),
+            Column::ListStr(l) => l.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Column::Bool(..) => DType::Bool,
+            Column::I32(..) => DType::I32,
+            Column::I64(..) => DType::I64,
+            Column::F32(..) => DType::F32,
+            Column::F64(..) => DType::F64,
+            Column::Str(..) => DType::Str,
+            Column::ListBool(_) => DType::List(Box::new(DType::Bool)),
+            Column::ListI32(_) => DType::List(Box::new(DType::I32)),
+            Column::ListI64(_) => DType::List(Box::new(DType::I64)),
+            Column::ListF32(_) => DType::List(Box::new(DType::F32)),
+            Column::ListF64(_) => DType::List(Box::new(DType::F64)),
+            Column::ListStr(_) => DType::List(Box::new(DType::Str)),
+        }
+    }
+
+    /// Null mask for scalar columns (`true` = null), if any nulls present.
+    pub fn nulls(&self) -> Option<&Vec<bool>> {
+        match self {
+            Column::Bool(_, n)
+            | Column::I32(_, n)
+            | Column::I64(_, n)
+            | Column::F32(_, n)
+            | Column::F64(_, n)
+            | Column::Str(_, n) => n.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Whether row `i` is null.
+    pub fn is_null(&self, i: usize) -> bool {
+        self.nulls().map(|n| n[i]).unwrap_or(false)
+    }
+
+    /// Number of null rows.
+    pub fn null_count(&self) -> usize {
+        self.nulls().map(|n| n.iter().filter(|&&x| x).count()).unwrap_or(0)
+    }
+
+    /// Drop the null mask (used after imputation fills every null).
+    pub fn clear_nulls(&mut self) {
+        match self {
+            Column::Bool(_, n)
+            | Column::I32(_, n)
+            | Column::I64(_, n)
+            | Column::F32(_, n)
+            | Column::F64(_, n)
+            | Column::Str(_, n) => *n = None,
+            _ => {}
+        }
+    }
+
+    /// Attach a null mask to a scalar column.
+    pub fn set_nulls(&mut self, mask: Option<Vec<bool>>) -> Result<()> {
+        if let Some(m) = &mask {
+            if m.len() != self.len() {
+                return Err(KamaeError::LengthMismatch {
+                    left: m.len(),
+                    right: self.len(),
+                    context: "set_nulls".into(),
+                });
+            }
+        }
+        match self {
+            Column::Bool(_, n)
+            | Column::I32(_, n)
+            | Column::I64(_, n)
+            | Column::F32(_, n)
+            | Column::F64(_, n)
+            | Column::Str(_, n) => {
+                *n = mask;
+                Ok(())
+            }
+            _ => Err(KamaeError::Unsupported("null mask on list column".into())),
+        }
+    }
+
+    // ---- typed view accessors (used by the op kernels) ---------------------
+
+    pub fn as_bool(&self) -> Result<&[bool]> {
+        match self {
+            Column::Bool(v, _) => Ok(v),
+            other => Err(type_err("bool", other)),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Column::I32(v, _) => Ok(v),
+            other => Err(type_err("int32", other)),
+        }
+    }
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match self {
+            Column::I64(v, _) => Ok(v),
+            other => Err(type_err("int64", other)),
+        }
+    }
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Column::F32(v, _) => Ok(v),
+            other => Err(type_err("float32", other)),
+        }
+    }
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match self {
+            Column::F64(v, _) => Ok(v),
+            other => Err(type_err("float64", other)),
+        }
+    }
+    pub fn as_str(&self) -> Result<&[String]> {
+        match self {
+            Column::Str(v, _) => Ok(v),
+            other => Err(type_err("string", other)),
+        }
+    }
+    pub fn as_list_str(&self) -> Result<&ListColumn<String>> {
+        match self {
+            Column::ListStr(l) => Ok(l),
+            other => Err(type_err("array<string>", other)),
+        }
+    }
+    pub fn as_list_f64(&self) -> Result<&ListColumn<f64>> {
+        match self {
+            Column::ListF64(l) => Ok(l),
+            other => Err(type_err("array<float64>", other)),
+        }
+    }
+    pub fn as_list_i64(&self) -> Result<&ListColumn<i64>> {
+        match self {
+            Column::ListI64(l) => Ok(l),
+            other => Err(type_err("array<int64>", other)),
+        }
+    }
+
+    /// Value of row `i` (boxed — used by the row-wise MLeap-like baseline
+    /// and by tests; never by the vectorised hot path).
+    pub fn value(&self, i: usize) -> Value {
+        if self.is_null(i) {
+            return Value::Null;
+        }
+        match self {
+            Column::Bool(v, _) => Value::Bool(v[i]),
+            Column::I32(v, _) => Value::I64(v[i] as i64),
+            Column::I64(v, _) => Value::I64(v[i]),
+            Column::F32(v, _) => Value::F64(v[i] as f64),
+            Column::F64(v, _) => Value::F64(v[i]),
+            Column::Str(v, _) => Value::Str(v[i].clone()),
+            Column::ListBool(l) => Value::List(l.row(i).iter().map(|&b| Value::Bool(b)).collect()),
+            Column::ListI32(l) => Value::List(l.row(i).iter().map(|&x| Value::I64(x as i64)).collect()),
+            Column::ListI64(l) => Value::List(l.row(i).iter().map(|&x| Value::I64(x)).collect()),
+            Column::ListF32(l) => Value::List(l.row(i).iter().map(|&x| Value::F64(x as f64)).collect()),
+            Column::ListF64(l) => Value::List(l.row(i).iter().map(|&x| Value::F64(x)).collect()),
+            Column::ListStr(l) => Value::List(l.row(i).iter().map(|s| Value::Str(s.clone())).collect()),
+        }
+    }
+
+    /// Take rows `range` into a new column (used for partitioning).
+    pub fn slice(&self, start: usize, len: usize) -> Column {
+        let end = start + len;
+        let slice_nulls = |n: &Option<Vec<bool>>| n.as_ref().map(|m| m[start..end].to_vec());
+        match self {
+            Column::Bool(v, n) => Column::Bool(v[start..end].to_vec(), slice_nulls(n)),
+            Column::I32(v, n) => Column::I32(v[start..end].to_vec(), slice_nulls(n)),
+            Column::I64(v, n) => Column::I64(v[start..end].to_vec(), slice_nulls(n)),
+            Column::F32(v, n) => Column::F32(v[start..end].to_vec(), slice_nulls(n)),
+            Column::F64(v, n) => Column::F64(v[start..end].to_vec(), slice_nulls(n)),
+            Column::Str(v, n) => Column::Str(v[start..end].to_vec(), slice_nulls(n)),
+            Column::ListBool(l) => Column::ListBool(slice_list(l, start, end)),
+            Column::ListI32(l) => Column::ListI32(slice_list(l, start, end)),
+            Column::ListI64(l) => Column::ListI64(slice_list(l, start, end)),
+            Column::ListF32(l) => Column::ListF32(slice_list(l, start, end)),
+            Column::ListF64(l) => Column::ListF64(slice_list(l, start, end)),
+            Column::ListStr(l) => Column::ListStr(slice_list(l, start, end)),
+        }
+    }
+
+    /// Concatenate columns of identical dtype (used to merge partitions).
+    pub fn concat(cols: &[&Column]) -> Result<Column> {
+        let first = cols.first().ok_or_else(|| {
+            KamaeError::InvalidConfig("concat of zero columns".into())
+        })?;
+        let dt = first.dtype();
+        for c in cols {
+            if c.dtype() != dt {
+                return Err(KamaeError::TypeMismatch {
+                    expected: dt.name(),
+                    found: c.dtype().name(),
+                    context: "Column::concat".into(),
+                });
+            }
+        }
+        macro_rules! cat_scalar {
+            ($variant:ident, $as:ident) => {{
+                let total: usize = cols.iter().map(|c| c.len()).sum();
+                let mut data = Vec::with_capacity(total);
+                let any_nulls = cols.iter().any(|c| c.nulls().is_some());
+                let mut nulls: Option<Vec<bool>> =
+                    if any_nulls { Some(Vec::with_capacity(total)) } else { None };
+                for c in cols {
+                    if let Column::$variant(v, n) = c {
+                        data.extend_from_slice(v);
+                        if let Some(mask) = &mut nulls {
+                            match n {
+                                Some(m) => mask.extend_from_slice(m),
+                                None => mask.extend(std::iter::repeat(false).take(v.len())),
+                            }
+                        }
+                    }
+                }
+                Ok(Column::$variant(data, nulls))
+            }};
+        }
+        macro_rules! cat_list {
+            ($variant:ident) => {{
+                let mut values = Vec::new();
+                let mut offsets = vec![0u32];
+                for c in cols {
+                    if let Column::$variant(l) = c {
+                        let base = values.len() as u32;
+                        values.extend_from_slice(&l.values);
+                        offsets.extend(l.offsets[1..].iter().map(|&o| o + base));
+                    }
+                }
+                Ok(Column::$variant(ListColumn { values, offsets }))
+            }};
+        }
+        match dt {
+            DType::Bool => cat_scalar!(Bool, as_bool),
+            DType::I32 => cat_scalar!(I32, as_i32),
+            DType::I64 => cat_scalar!(I64, as_i64),
+            DType::F32 => cat_scalar!(F32, as_f32),
+            DType::F64 => cat_scalar!(F64, as_f64),
+            DType::Str => cat_scalar!(Str, as_str),
+            DType::List(inner) => match *inner {
+                DType::Bool => cat_list!(ListBool),
+                DType::I32 => cat_list!(ListI32),
+                DType::I64 => cat_list!(ListI64),
+                DType::F32 => cat_list!(ListF32),
+                DType::F64 => cat_list!(ListF64),
+                DType::Str => cat_list!(ListStr),
+                DType::List(_) => Err(KamaeError::Unsupported("nested list concat".into())),
+            },
+        }
+    }
+}
+
+fn slice_list<T: Clone>(l: &ListColumn<T>, start: usize, end: usize) -> ListColumn<T> {
+    let v_start = l.offsets[start] as usize;
+    let v_end = l.offsets[end] as usize;
+    let values = l.values[v_start..v_end].to_vec();
+    let offsets = l.offsets[start..=end]
+        .iter()
+        .map(|&o| o - l.offsets[start])
+        .collect();
+    ListColumn { values, offsets }
+}
+
+fn type_err(expected: &str, found: &Column) -> KamaeError {
+    KamaeError::TypeMismatch {
+        expected: expected.into(),
+        found: found.dtype().name(),
+        context: "column accessor".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for name in ["bool", "int32", "int64", "float32", "float64", "string", "array<string>", "array<float64>"] {
+            let dt = DType::parse(name).unwrap();
+            assert_eq!(dt.name(), name);
+        }
+        assert!(DType::parse("complex").is_err());
+        assert_eq!(DType::parse("double").unwrap(), DType::F64);
+        assert_eq!(DType::parse("long").unwrap(), DType::I64);
+    }
+
+    #[test]
+    fn list_column_rows() {
+        let l = ListColumn::from_rows(vec![vec![1i64, 2], vec![], vec![3]]);
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.row(0), &[1, 2]);
+        assert_eq!(l.row(1), &[] as &[i64]);
+        assert_eq!(l.row(2), &[3]);
+        assert_eq!(l.fixed_width(), None);
+        let f = ListColumn::from_rows(vec![vec![1i64, 2], vec![3, 4]]);
+        assert_eq!(f.fixed_width(), Some(2));
+    }
+
+    #[test]
+    fn slice_and_concat_scalar() {
+        let c = Column::from_f64(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let a = c.slice(0, 2);
+        let b = c.slice(2, 3);
+        let back = Column::concat(&[&a, &b]).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn slice_and_concat_list() {
+        let c = Column::from_str_rows(vec![vec!["a", "b"], vec!["c"], vec![], vec!["d", "e", "f"]]);
+        let a = c.slice(0, 2);
+        let b = c.slice(2, 2);
+        let back = Column::concat(&[&a, &b]).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn nulls_concat_mixed() {
+        let a = Column::from_f64_opt(vec![Some(1.0), None]);
+        let b = Column::from_f64(vec![3.0]);
+        let c = Column::concat(&[&a, &b]).unwrap();
+        assert_eq!(c.null_count(), 1);
+        assert!(c.is_null(1));
+        assert!(!c.is_null(2));
+    }
+
+    #[test]
+    fn value_access() {
+        let c = Column::from_str_opt(vec![Some("x".into()), None]);
+        assert_eq!(c.value(0), Value::Str("x".into()));
+        assert_eq!(c.value(1), Value::Null);
+    }
+}

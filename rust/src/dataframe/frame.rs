@@ -1,0 +1,308 @@
+//! The DataFrame: an ordered collection of named, equal-length columns.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::dataframe::{Column, DType};
+use crate::error::{KamaeError, Result};
+
+/// A named, typed column slot in a schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field {
+    pub name: String,
+    pub dtype: DType,
+}
+
+/// Ordered list of fields.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Schema {
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn field(&self, name: &str) -> Option<&Field> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    pub fn dtype(&self, name: &str) -> Option<&DType> {
+        self.field(name).map(|f| &f.dtype)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.fields.iter().map(|f| f.name.as_str()).collect()
+    }
+}
+
+/// An immutable-by-convention columnar table. Transformers append new
+/// columns; existing columns are never mutated in place (Spark semantics —
+/// this is what makes pipeline stages freely composable and re-runnable).
+/// Columns are `Arc`-shared: cloning a DataFrame (every pipeline stage
+/// boundary and every serving request) is O(columns) pointer bumps, not a
+/// deep copy — the §Perf L3 optimisation that makes immutable-by-
+/// convention semantics affordable.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DataFrame {
+    columns: Vec<(String, Arc<Column>)>,
+    index: HashMap<String, usize>,
+    nrows: usize,
+}
+
+impl DataFrame {
+    /// Build from named columns; all columns must have equal length.
+    pub fn new(columns: Vec<(String, Column)>) -> Result<Self> {
+        let mut df = DataFrame::default();
+        let mut first = true;
+        for (name, col) in columns {
+            if first {
+                df.nrows = col.len();
+                first = false;
+            }
+            df.push_column(name, col)?;
+        }
+        Ok(df)
+    }
+
+    /// Empty frame with a fixed row count (used when building up columns).
+    pub fn with_nrows(nrows: usize) -> Self {
+        DataFrame { columns: vec![], index: HashMap::new(), nrows }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn num_columns(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn schema(&self) -> Schema {
+        Schema {
+            fields: self
+                .columns
+                .iter()
+                .map(|(n, c)| Field { name: n.clone(), dtype: c.dtype() })
+                .collect(),
+        }
+    }
+
+    pub fn column_names(&self) -> Vec<&str> {
+        self.columns.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn has_column(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Borrow a column by name.
+    pub fn column(&self, name: &str) -> Result<&Column> {
+        self.index
+            .get(name)
+            .map(|&i| self.columns[i].1.as_ref())
+            .ok_or_else(|| KamaeError::ColumnNotFound(name.into()))
+    }
+
+    /// Shared handle to a column (cheap to clone).
+    pub fn column_arc(&self, name: &str) -> Result<Arc<Column>> {
+        self.index
+            .get(name)
+            .map(|&i| Arc::clone(&self.columns[i].1))
+            .ok_or_else(|| KamaeError::ColumnNotFound(name.into()))
+    }
+
+    /// Append a column. Errors if the name exists or the length disagrees.
+    pub fn push_column<S: Into<String>>(&mut self, name: S, col: Column) -> Result<()> {
+        let name = name.into();
+        if self.index.contains_key(&name) {
+            return Err(KamaeError::InvalidConfig(format!("duplicate column: {name}")));
+        }
+        if !self.columns.is_empty() && col.len() != self.nrows {
+            return Err(KamaeError::LengthMismatch {
+                left: col.len(),
+                right: self.nrows,
+                context: format!("push_column({name})"),
+            });
+        }
+        if self.columns.is_empty() {
+            self.nrows = col.len();
+        }
+        self.index.insert(name.clone(), self.columns.len());
+        self.columns.push((name, Arc::new(col)));
+        Ok(())
+    }
+
+    /// Append or replace a column (pipeline outputs overwrite on re-run).
+    pub fn set_column<S: Into<String>>(&mut self, name: S, col: Column) -> Result<()> {
+        let name = name.into();
+        if let Some(&i) = self.index.get(&name) {
+            if col.len() != self.nrows {
+                return Err(KamaeError::LengthMismatch {
+                    left: col.len(),
+                    right: self.nrows,
+                    context: format!("set_column({name})"),
+                });
+            }
+            self.columns[i].1 = Arc::new(col);
+            Ok(())
+        } else {
+            self.push_column(name, col)
+        }
+    }
+
+    /// Project to a subset of columns, in the given order (zero-copy).
+    pub fn select(&self, names: &[&str]) -> Result<DataFrame> {
+        let mut out = DataFrame::with_nrows(self.nrows);
+        for &n in names {
+            out.push_shared(n.to_string(), self.column_arc(n)?)?;
+        }
+        Ok(out)
+    }
+
+    /// Drop columns by name (ignores missing names, like Spark's drop;
+    /// zero-copy).
+    pub fn drop(&self, names: &[&str]) -> DataFrame {
+        let mut out = DataFrame::with_nrows(self.nrows);
+        for (n, c) in &self.columns {
+            if !names.contains(&n.as_str()) {
+                out.push_shared(n.clone(), Arc::clone(c)).expect("unique names");
+            }
+        }
+        out
+    }
+
+    /// Append a shared column handle without copying data.
+    pub fn push_shared<S: Into<String>>(&mut self, name: S, col: Arc<Column>) -> Result<()> {
+        let name = name.into();
+        if self.index.contains_key(&name) {
+            return Err(KamaeError::InvalidConfig(format!("duplicate column: {name}")));
+        }
+        if !self.columns.is_empty() && col.len() != self.nrows {
+            return Err(KamaeError::LengthMismatch {
+                left: col.len(),
+                right: self.nrows,
+                context: format!("push_shared({name})"),
+            });
+        }
+        if self.columns.is_empty() {
+            self.nrows = col.len();
+        }
+        self.index.insert(name.clone(), self.columns.len());
+        self.columns.push((name, col));
+        Ok(())
+    }
+
+    /// Rename a column.
+    pub fn rename(&mut self, from: &str, to: &str) -> Result<()> {
+        let i = *self
+            .index
+            .get(from)
+            .ok_or_else(|| KamaeError::ColumnNotFound(from.into()))?;
+        if self.index.contains_key(to) {
+            return Err(KamaeError::InvalidConfig(format!("duplicate column: {to}")));
+        }
+        self.index.remove(from);
+        self.index.insert(to.into(), i);
+        self.columns[i].0 = to.into();
+        Ok(())
+    }
+
+    /// Row-range slice (zero-copy would need Arc'd buffers; cloning ranges
+    /// is fine for partitioning which happens once per job).
+    pub fn slice(&self, start: usize, len: usize) -> DataFrame {
+        let cols = self
+            .columns
+            .iter()
+            .map(|(n, c)| (n.clone(), c.slice(start, len)))
+            .collect();
+        DataFrame::new(cols).expect("slice preserves lengths")
+    }
+
+    /// Vertically concatenate frames with identical schemas.
+    pub fn concat(frames: &[&DataFrame]) -> Result<DataFrame> {
+        let first = frames
+            .first()
+            .ok_or_else(|| KamaeError::InvalidConfig("concat of zero frames".into()))?;
+        let schema = first.schema();
+        for f in frames {
+            if f.schema() != schema {
+                return Err(KamaeError::InvalidConfig(
+                    "concat: schema mismatch between frames".into(),
+                ));
+            }
+        }
+        let mut cols = Vec::with_capacity(first.num_columns());
+        for (name, _) in &first.columns {
+            let parts: Vec<&Column> = frames
+                .iter()
+                .map(|f| f.column(name).expect("schema checked"))
+                .collect();
+            cols.push((name.clone(), Column::concat(&parts)?));
+        }
+        DataFrame::new(cols)
+    }
+
+    /// Iterate (name, column) pairs in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Column)> {
+        self.columns.iter().map(|(n, c)| (n.as_str(), c.as_ref()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn df() -> DataFrame {
+        DataFrame::new(vec![
+            ("a".into(), Column::from_i64(vec![1, 2, 3])),
+            ("b".into(), Column::from_str(vec!["x", "y", "z"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let d = df();
+        assert_eq!(d.num_rows(), 3);
+        assert_eq!(d.num_columns(), 2);
+        assert_eq!(d.column_names(), vec!["a", "b"]);
+        assert_eq!(d.schema().dtype("a"), Some(&DType::I64));
+        assert!(d.column("missing").is_err());
+    }
+
+    #[test]
+    fn push_rejects_bad_length_and_dup() {
+        let mut d = df();
+        assert!(d.push_column("c", Column::from_i64(vec![1])).is_err());
+        assert!(d.push_column("a", Column::from_i64(vec![1, 2, 3])).is_err());
+        assert!(d.push_column("c", Column::from_i64(vec![4, 5, 6])).is_ok());
+    }
+
+    #[test]
+    fn set_column_replaces() {
+        let mut d = df();
+        d.set_column("a", Column::from_f64(vec![1.0, 2.0, 3.0])).unwrap();
+        assert_eq!(d.schema().dtype("a"), Some(&DType::F64));
+        assert_eq!(d.num_columns(), 2);
+    }
+
+    #[test]
+    fn select_drop_rename() {
+        let d = df();
+        let s = d.select(&["b"]).unwrap();
+        assert_eq!(s.column_names(), vec!["b"]);
+        let dr = d.drop(&["b", "nonexistent"]);
+        assert_eq!(dr.column_names(), vec!["a"]);
+        let mut r = df();
+        r.rename("a", "alpha").unwrap();
+        assert!(r.column("alpha").is_ok());
+        assert!(r.column("a").is_err());
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let d = df();
+        let a = d.slice(0, 1);
+        let b = d.slice(1, 2);
+        let back = DataFrame::concat(&[&a, &b]).unwrap();
+        assert_eq!(back, d);
+    }
+}

@@ -1,0 +1,419 @@
+//! CSV / JSONL readers and writers.
+//!
+//! Minimal but real: schema-driven typed parsing, quoted CSV fields, null
+//! handling (empty CSV cell / JSON `null`), list columns in JSONL. Used by
+//! the CLI, the examples and the synthetic-data generators.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::dataframe::{Column, DataFrame, DType, Field, ListColumn, Schema};
+use crate::error::{KamaeError, Result};
+use crate::util::json::Json;
+
+/// Read a CSV file with a header row, parsing each column per `schema`.
+/// Empty cells become nulls (scalar columns only).
+pub fn read_csv(path: &Path, schema: &Schema) -> Result<DataFrame> {
+    let file = File::open(path)?;
+    let mut lines = BufReader::new(file).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| KamaeError::Serde("empty csv".into()))??;
+    let names = split_csv_line(&header);
+    let mut builders: Vec<ColumnBuilder> = Vec::with_capacity(names.len());
+    for n in &names {
+        let dt = schema
+            .dtype(n)
+            .ok_or_else(|| KamaeError::ColumnNotFound(format!("{n} (in csv header, not schema)")))?;
+        builders.push(ColumnBuilder::new(dt.clone()));
+    }
+    for line in lines {
+        let line = line?;
+        if line.is_empty() {
+            continue;
+        }
+        let cells = split_csv_line(&line);
+        if cells.len() != names.len() {
+            return Err(KamaeError::Serde(format!(
+                "csv row has {} cells, header has {}",
+                cells.len(),
+                names.len()
+            )));
+        }
+        for (b, cell) in builders.iter_mut().zip(cells.iter()) {
+            b.push_csv(cell)?;
+        }
+    }
+    let cols = names
+        .into_iter()
+        .zip(builders)
+        .map(|(n, b)| (n, b.finish()))
+        .collect();
+    DataFrame::new(cols)
+}
+
+/// Write a DataFrame as CSV (lists serialised as `|`-joined strings).
+pub fn write_csv(df: &DataFrame, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    let names = df.column_names();
+    writeln!(w, "{}", names.join(","))?;
+    for i in 0..df.num_rows() {
+        let mut cells = Vec::with_capacity(names.len());
+        for (_, col) in df.iter() {
+            cells.push(csv_cell(col, i));
+        }
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read newline-delimited JSON. The schema drives typing; missing keys and
+/// JSON `null` become nulls.
+pub fn read_jsonl(path: &Path, schema: &Schema) -> Result<DataFrame> {
+    let file = File::open(path)?;
+    let mut builders: Vec<(String, ColumnBuilder)> = schema
+        .fields
+        .iter()
+        .map(|f| (f.name.clone(), ColumnBuilder::new(f.dtype.clone())))
+        .collect();
+    for line in BufReader::new(file).lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = Json::parse(&line)?;
+        for (name, b) in builders.iter_mut() {
+            b.push_json(obj.get(name.as_str()).unwrap_or(&Json::Null))?;
+        }
+    }
+    DataFrame::new(builders.into_iter().map(|(n, b)| (n, b.finish())).collect())
+}
+
+/// Write newline-delimited JSON.
+pub fn write_jsonl(df: &DataFrame, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for i in 0..df.num_rows() {
+        let mut obj = Json::object();
+        for (name, col) in df.iter() {
+            obj.set(name, json_cell(col, i));
+        }
+        writeln!(w, "{}", obj)?;
+    }
+    Ok(())
+}
+
+/// Infer a Schema from the first JSONL record (strings stay strings,
+/// numbers become f64, integers i64, arrays become typed lists).
+pub fn infer_jsonl_schema(path: &Path) -> Result<Schema> {
+    let file = File::open(path)?;
+    let first = BufReader::new(file)
+        .lines()
+        .next()
+        .ok_or_else(|| KamaeError::Serde("empty jsonl".into()))??;
+    let obj = Json::parse(&first)?;
+    let map = obj
+        .as_object()
+        .ok_or_else(|| KamaeError::Serde("jsonl row is not an object".into()))?;
+    let mut fields = Vec::new();
+    for (k, v) in map {
+        fields.push(Field { name: k.clone(), dtype: infer_dtype(v)? });
+    }
+    Ok(Schema { fields })
+}
+
+fn infer_dtype(v: &Json) -> Result<DType> {
+    Ok(match v {
+        Json::Bool(_) => DType::Bool,
+        Json::Int(_) => DType::I64,
+        Json::Float(_) => DType::F64,
+        Json::Str(_) => DType::Str,
+        Json::Array(items) => {
+            let inner = items
+                .first()
+                .map(infer_dtype)
+                .transpose()?
+                .unwrap_or(DType::Str);
+            DType::List(Box::new(inner))
+        }
+        Json::Null => DType::F64, // least-bad default
+        Json::Object(_) => {
+            return Err(KamaeError::Unsupported("nested objects in jsonl".into()))
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// builders
+
+enum ColumnBuilder {
+    Bool(Vec<bool>, Vec<bool>),
+    I32(Vec<i32>, Vec<bool>),
+    I64(Vec<i64>, Vec<bool>),
+    F32(Vec<f32>, Vec<bool>),
+    F64(Vec<f64>, Vec<bool>),
+    Str(Vec<String>, Vec<bool>),
+    ListStr(ListColumn<String>),
+    ListI64(ListColumn<i64>),
+    ListF64(ListColumn<f64>),
+}
+
+impl ColumnBuilder {
+    fn new(dt: DType) -> Self {
+        match dt {
+            DType::Bool => ColumnBuilder::Bool(vec![], vec![]),
+            DType::I32 => ColumnBuilder::I32(vec![], vec![]),
+            DType::I64 => ColumnBuilder::I64(vec![], vec![]),
+            DType::F32 => ColumnBuilder::F32(vec![], vec![]),
+            DType::F64 => ColumnBuilder::F64(vec![], vec![]),
+            DType::Str => ColumnBuilder::Str(vec![], vec![]),
+            DType::List(inner) => match *inner {
+                DType::Str => ColumnBuilder::ListStr(ListColumn { values: vec![], offsets: vec![0] }),
+                DType::I64 | DType::I32 => {
+                    ColumnBuilder::ListI64(ListColumn { values: vec![], offsets: vec![0] })
+                }
+                _ => ColumnBuilder::ListF64(ListColumn { values: vec![], offsets: vec![0] }),
+            },
+        }
+    }
+
+    fn push_csv(&mut self, cell: &str) -> Result<()> {
+        let null = cell.is_empty();
+        macro_rules! scalar {
+            ($data:expr, $nulls:expr, $parse:expr, $default:expr) => {{
+                $nulls.push(null);
+                if null {
+                    $data.push($default);
+                } else {
+                    $data.push($parse.map_err(|_| {
+                        KamaeError::Serde(format!("cannot parse csv cell: {cell:?}"))
+                    })?);
+                }
+            }};
+        }
+        match self {
+            ColumnBuilder::Bool(d, n) => scalar!(d, n, cell.parse::<bool>(), false),
+            ColumnBuilder::I32(d, n) => scalar!(d, n, cell.parse::<i32>(), 0),
+            ColumnBuilder::I64(d, n) => scalar!(d, n, cell.parse::<i64>(), 0),
+            ColumnBuilder::F32(d, n) => scalar!(d, n, cell.parse::<f32>(), 0.0),
+            ColumnBuilder::F64(d, n) => scalar!(d, n, cell.parse::<f64>(), 0.0),
+            ColumnBuilder::Str(d, n) => {
+                n.push(null);
+                d.push(cell.to_string());
+            }
+            // list columns in CSV: `|`-separated (MovieLens genre style)
+            ColumnBuilder::ListStr(l) => {
+                if !null {
+                    l.values.extend(cell.split('|').map(str::to_string));
+                }
+                l.offsets.push(l.values.len() as u32);
+            }
+            ColumnBuilder::ListI64(l) => {
+                if !null {
+                    for p in cell.split('|') {
+                        l.values.push(p.parse::<i64>().map_err(|_| {
+                            KamaeError::Serde(format!("cannot parse csv list cell: {cell:?}"))
+                        })?);
+                    }
+                }
+                l.offsets.push(l.values.len() as u32);
+            }
+            ColumnBuilder::ListF64(l) => {
+                if !null {
+                    for p in cell.split('|') {
+                        l.values.push(p.parse::<f64>().map_err(|_| {
+                            KamaeError::Serde(format!("cannot parse csv list cell: {cell:?}"))
+                        })?);
+                    }
+                }
+                l.offsets.push(l.values.len() as u32);
+            }
+        }
+        Ok(())
+    }
+
+    fn push_json(&mut self, v: &Json) -> Result<()> {
+        let null = v.is_null();
+        match self {
+            ColumnBuilder::Bool(d, n) => {
+                n.push(null);
+                d.push(v.as_bool().unwrap_or(false));
+            }
+            ColumnBuilder::I32(d, n) => {
+                n.push(null);
+                d.push(v.as_i64().unwrap_or(0) as i32);
+            }
+            ColumnBuilder::I64(d, n) => {
+                n.push(null);
+                d.push(v.as_i64().unwrap_or(0));
+            }
+            ColumnBuilder::F32(d, n) => {
+                n.push(null);
+                d.push(v.as_f64().unwrap_or(0.0) as f32);
+            }
+            ColumnBuilder::F64(d, n) => {
+                n.push(null);
+                d.push(v.as_f64().unwrap_or(0.0));
+            }
+            ColumnBuilder::Str(d, n) => {
+                n.push(null);
+                d.push(v.as_str().unwrap_or("").to_string());
+            }
+            ColumnBuilder::ListStr(l) => {
+                if let Some(items) = v.as_array() {
+                    l.values
+                        .extend(items.iter().map(|x| x.as_str().unwrap_or("").to_string()));
+                }
+                l.offsets.push(l.values.len() as u32);
+            }
+            ColumnBuilder::ListI64(l) => {
+                if let Some(items) = v.as_array() {
+                    l.values.extend(items.iter().map(|x| x.as_i64().unwrap_or(0)));
+                }
+                l.offsets.push(l.values.len() as u32);
+            }
+            ColumnBuilder::ListF64(l) => {
+                if let Some(items) = v.as_array() {
+                    l.values.extend(items.iter().map(|x| x.as_f64().unwrap_or(0.0)));
+                }
+                l.offsets.push(l.values.len() as u32);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(self) -> Column {
+        fn mask(nulls: Vec<bool>) -> Option<Vec<bool>> {
+            if nulls.iter().any(|&n| n) {
+                Some(nulls)
+            } else {
+                None
+            }
+        }
+        match self {
+            ColumnBuilder::Bool(d, n) => Column::Bool(d, mask(n)),
+            ColumnBuilder::I32(d, n) => Column::I32(d, mask(n)),
+            ColumnBuilder::I64(d, n) => Column::I64(d, mask(n)),
+            ColumnBuilder::F32(d, n) => Column::F32(d, mask(n)),
+            ColumnBuilder::F64(d, n) => Column::F64(d, mask(n)),
+            ColumnBuilder::Str(d, n) => Column::Str(d, mask(n)),
+            ColumnBuilder::ListStr(l) => Column::ListStr(l),
+            ColumnBuilder::ListI64(l) => Column::ListI64(l),
+            ColumnBuilder::ListF64(l) => Column::ListF64(l),
+        }
+    }
+}
+
+/// Split one CSV line honouring double-quoted fields with `""` escapes.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                cells.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    cells.push(cur);
+    cells
+}
+
+fn csv_cell(col: &Column, i: usize) -> String {
+    use crate::dataframe::Value;
+    if col.is_null(i) {
+        return String::new();
+    }
+    match col.value(i) {
+        Value::List(vs) => vs
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("|"),
+        Value::Str(s) => {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s
+            }
+        }
+        v => v.to_string(),
+    }
+}
+
+fn json_cell(col: &Column, i: usize) -> Json {
+    use crate::dataframe::Value;
+    fn conv(v: Value) -> Json {
+        match v {
+            Value::Null => Json::Null,
+            Value::Bool(b) => Json::Bool(b),
+            Value::I64(x) => Json::Int(x),
+            Value::F64(x) => Json::Float(x),
+            Value::Str(s) => Json::Str(s),
+            Value::List(vs) => Json::Array(vs.into_iter().map(conv).collect()),
+        }
+    }
+    conv(col.value(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let df = DataFrame::new(vec![
+            ("id".into(), Column::from_i64(vec![1, 2])),
+            ("name".into(), Column::from_str(vec!["a,b", "c\"d"])),
+            ("score".into(), Column::from_f64_opt(vec![Some(1.5), None])),
+            ("genres".into(), Column::from_str_rows(vec![vec!["x", "y"], vec!["z"]])),
+        ])
+        .unwrap();
+        let tmp = std::env::temp_dir().join("kamae_io_test.csv");
+        write_csv(&df, &tmp).unwrap();
+        let back = read_csv(&tmp, &df.schema()).unwrap();
+        assert_eq!(back.column("id").unwrap(), df.column("id").unwrap());
+        assert_eq!(back.column("name").unwrap(), df.column("name").unwrap());
+        assert!(back.column("score").unwrap().is_null(1));
+        assert_eq!(back.column("genres").unwrap(), df.column("genres").unwrap());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn jsonl_roundtrip_and_inference() {
+        let df = DataFrame::new(vec![
+            ("id".into(), Column::from_i64(vec![10, 20])),
+            ("price".into(), Column::from_f64(vec![1.25, 2.5])),
+            ("tags".into(), Column::from_str_rows(vec![vec!["a"], vec!["b", "c"]])),
+        ])
+        .unwrap();
+        let tmp = std::env::temp_dir().join("kamae_io_test.jsonl");
+        write_jsonl(&df, &tmp).unwrap();
+        let schema = infer_jsonl_schema(&tmp).unwrap();
+        assert_eq!(schema.dtype("id"), Some(&DType::I64));
+        assert_eq!(schema.dtype("tags"), Some(&DType::List(Box::new(DType::Str))));
+        let back = read_jsonl(&tmp, &df.schema()).unwrap();
+        assert_eq!(back, df);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn csv_quoting() {
+        assert_eq!(split_csv_line("a,b,c"), vec!["a", "b", "c"]);
+        assert_eq!(split_csv_line("\"a,b\",c"), vec!["a,b", "c"]);
+        assert_eq!(split_csv_line("\"a\"\"b\",c"), vec!["a\"b", "c"]);
+        assert_eq!(split_csv_line("a,,c"), vec!["a", "", "c"]);
+    }
+}

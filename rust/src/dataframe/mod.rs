@@ -1,0 +1,18 @@
+//! In-memory columnar DataFrame — the engine's unit of data.
+//!
+//! This is the "Spark DataFrame" substrate of the reproduction: typed
+//! columns with optional null masks, ragged list columns (Arrow-style
+//! offsets + values), a schema, and CSV/JSONL I/O. Transformations are
+//! implemented as vectorised kernels over [`Column`]s in [`crate::ops`] —
+//! the analogue of Spark's *native* (Catalyst-optimisable) expressions the
+//! paper contrasts with slow row-wise UDFs.
+
+mod column;
+mod frame;
+mod io;
+mod value;
+
+pub use column::{Column, DType, ListColumn};
+pub use frame::{DataFrame, Field, Schema};
+pub use io::{infer_jsonl_schema, read_csv, read_jsonl, write_csv, write_jsonl};
+pub use value::Value;

@@ -1,0 +1,101 @@
+//! Boxed scalar values.
+//!
+//! `Value` is the row-wise, dynamically typed representation used by the
+//! MLeap-like baseline interpreter ([`crate::baselines`]) and by tests. The
+//! vectorised engine never touches it on the hot path — that contrast is
+//! exactly the paper's "native transformations, not UDFs" performance claim
+//! (experiment C2).
+
+use std::fmt;
+
+/// A dynamically typed scalar or list value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    List(Vec<Value>),
+}
+
+impl Value {
+    /// Numeric coercion mirroring Spark SQL's widening rules.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(x) => Some(*x),
+            Value::I64(x) => Some(*x as f64),
+            Value::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::I64(x) => Some(*x),
+            Value::F64(x) => Some(*x as i64),
+            Value::Bool(b) => Some(*b as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::I64(x) => write!(f, "{x}"),
+            Value::F64(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::List(vs) => {
+                write!(f, "[")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coercions() {
+        assert_eq!(Value::I64(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Bool(true).as_f64(), Some(1.0));
+        assert_eq!(Value::F64(2.7).as_i64(), Some(2));
+        assert_eq!(Value::Str("x".into()).as_f64(), None);
+        assert!(Value::Null.is_null());
+    }
+
+    #[test]
+    fn display() {
+        let v = Value::List(vec![Value::I64(1), Value::Str("a".into()), Value::Null]);
+        assert_eq!(v.to_string(), "[1, a, null]");
+    }
+}

@@ -1,0 +1,185 @@
+//! The distributed execution engine — the "Spark" substrate.
+//!
+//! A [`Dataset`] is a partitioned collection of [`DataFrame`]s. Narrow
+//! transformations (`map`) run partition-parallel on worker threads;
+//! estimator fitting uses mergeable accumulators via [`tree_aggregate`]
+//! (the Spark `treeAggregate` pattern). The streaming orchestrator with
+//! bounded-queue backpressure lives in [`stream`]; shard rebalancing in
+//! [`shard`].
+
+pub mod shard;
+pub mod stream;
+
+use crate::dataframe::DataFrame;
+use crate::error::Result;
+use crate::util::pool;
+
+/// A partitioned dataset. Partitions are independent row-range shards
+/// with identical schemas.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub partitions: Vec<DataFrame>,
+    threads: usize,
+}
+
+impl Dataset {
+    /// Split a DataFrame into `n` contiguous partitions.
+    pub fn from_dataframe(df: DataFrame, n: usize) -> Dataset {
+        let n = n.max(1);
+        let rows = df.num_rows();
+        if rows == 0 || n == 1 {
+            return Dataset { partitions: vec![df], threads: pool::default_threads() };
+        }
+        let n = n.min(rows);
+        let base = rows / n;
+        let extra = rows % n;
+        let mut partitions = Vec::with_capacity(n);
+        let mut start = 0;
+        for i in 0..n {
+            let len = base + usize::from(i < extra);
+            partitions.push(df.slice(start, len));
+            start += len;
+        }
+        Dataset { partitions, threads: pool::default_threads() }
+    }
+
+    /// Wrap pre-built partitions.
+    pub fn from_partitions(partitions: Vec<DataFrame>) -> Dataset {
+        Dataset { partitions, threads: pool::default_threads() }
+    }
+
+    /// Cap/raise the worker-thread count (benchmarks sweep this).
+    pub fn with_threads(mut self, threads: usize) -> Dataset {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.partitions.iter().map(|p| p.num_rows()).sum()
+    }
+
+    /// Partition-parallel narrow transformation.
+    pub fn map(&self, f: impl Fn(&DataFrame) -> Result<DataFrame> + Sync) -> Result<Dataset> {
+        let results = pool::parallel_map(&self.partitions, self.threads, |_, df| f(df));
+        let partitions = results.into_iter().collect::<Result<Vec<_>>>()?;
+        Ok(Dataset { partitions, threads: self.threads })
+    }
+
+    /// Gather all partitions into one DataFrame (Spark `collect`).
+    pub fn collect(&self) -> Result<DataFrame> {
+        let refs: Vec<&DataFrame> = self.partitions.iter().collect();
+        DataFrame::concat(&refs)
+    }
+}
+
+/// A mergeable accumulator for distributed fitting (Spark's
+/// `treeAggregate`): each partition folds into a fresh accumulator on a
+/// worker thread, then accumulators merge pairwise.
+pub trait Accumulator: Send + Sized {
+    /// Fold one partition into this accumulator.
+    fn add_partition(&mut self, df: &DataFrame) -> Result<()>;
+
+    /// Merge another accumulator into this one.
+    fn merge(&mut self, other: Self) -> Result<()>;
+}
+
+/// Run a tree aggregation over the dataset: `init()` per partition,
+/// `add_partition`, then pairwise merge. Deterministic regardless of
+/// thread schedule as long as `merge` is associative (all estimator
+/// accumulators here are associative + commutative or order-normalised).
+pub fn tree_aggregate<A: Accumulator>(
+    data: &Dataset,
+    init: impl Fn() -> A + Sync,
+) -> Result<A> {
+    let partials = pool::parallel_map(&data.partitions, data.threads(), |_, df| {
+        let mut acc = init();
+        acc.add_partition(df)?;
+        Ok::<A, crate::error::KamaeError>(acc)
+    });
+    let mut iter = partials.into_iter();
+    let mut acc = match iter.next() {
+        Some(a) => a?,
+        None => init(),
+    };
+    for next in iter {
+        acc.merge(next?)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn df(n: usize) -> DataFrame {
+        DataFrame::new(vec![(
+            "x".into(),
+            Column::from_i64((0..n as i64).collect()),
+        )])
+        .unwrap()
+    }
+
+    #[test]
+    fn partitioning_covers_all_rows() {
+        let d = Dataset::from_dataframe(df(10), 3);
+        assert_eq!(d.num_partitions(), 3);
+        assert_eq!(d.num_rows(), 10);
+        let sizes: Vec<usize> = d.partitions.iter().map(|p| p.num_rows()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        let back = d.collect().unwrap();
+        assert_eq!(back, df(10));
+    }
+
+    #[test]
+    fn more_partitions_than_rows() {
+        let d = Dataset::from_dataframe(df(2), 8);
+        assert_eq!(d.num_partitions(), 2);
+        assert_eq!(d.num_rows(), 2);
+    }
+
+    #[test]
+    fn map_is_partitionwise() {
+        let d = Dataset::from_dataframe(df(100), 4);
+        let out = d
+            .map(|p| {
+                let mut p = p.clone();
+                let doubled = crate::ops::math::unary(
+                    p.column("x")?,
+                    &crate::ops::math::UnaryOp::MulScalar { c: 2.0 },
+                )?;
+                p.push_column("x2", doubled)?;
+                Ok(p)
+            })
+            .unwrap();
+        let c = out.collect().unwrap();
+        assert_eq!(c.column("x2").unwrap().as_f64().unwrap()[99], 198.0);
+    }
+
+    struct SumAcc(i64);
+    impl Accumulator for SumAcc {
+        fn add_partition(&mut self, df: &DataFrame) -> Result<()> {
+            self.0 += df.column("x")?.as_i64()?.iter().sum::<i64>();
+            Ok(())
+        }
+        fn merge(&mut self, other: Self) -> Result<()> {
+            self.0 += other.0;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn tree_aggregate_sums() {
+        let d = Dataset::from_dataframe(df(1000), 7);
+        let acc = tree_aggregate(&d, || SumAcc(0)).unwrap();
+        assert_eq!(acc.0, 999 * 1000 / 2);
+    }
+}

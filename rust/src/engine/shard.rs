@@ -1,0 +1,94 @@
+//! Shard sizing and rebalancing.
+//!
+//! When partitions become skewed (filtering, ragged list growth), worker
+//! utilisation drops; `rebalance` re-cuts a dataset into even row-count
+//! shards, and `coalesce` merges small shards to amortise per-partition
+//! overhead — the engine-side knobs Spark jobs tune with
+//! `repartition`/`coalesce`.
+
+use crate::dataframe::DataFrame;
+use crate::engine::Dataset;
+use crate::error::Result;
+
+/// Relative row-count imbalance: (max - min) / mean over partitions.
+/// 0.0 = perfectly balanced. Empty/1-partition datasets report 0.
+pub fn imbalance(data: &Dataset) -> f64 {
+    if data.num_partitions() <= 1 {
+        return 0.0;
+    }
+    let sizes: Vec<usize> = data.partitions.iter().map(|p| p.num_rows()).collect();
+    let (min, max) = (
+        *sizes.iter().min().unwrap(),
+        *sizes.iter().max().unwrap(),
+    );
+    let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+    if mean == 0.0 {
+        0.0
+    } else {
+        (max - min) as f64 / mean
+    }
+}
+
+/// Re-cut into `n` even contiguous shards (a full shuffle-free rewrite;
+/// Spark's `repartition` without the hash shuffle, sufficient for the
+/// row-independent transforms this engine runs).
+pub fn rebalance(data: &Dataset, n: usize) -> Result<Dataset> {
+    let all = data.collect()?;
+    Ok(Dataset::from_dataframe(all, n).with_threads(data.threads()))
+}
+
+/// Merge adjacent shards until at most `n` remain (Spark `coalesce`).
+pub fn coalesce(data: &Dataset, n: usize) -> Result<Dataset> {
+    let n = n.max(1);
+    if data.num_partitions() <= n {
+        return Ok(data.clone());
+    }
+    let per = data.num_partitions().div_ceil(n);
+    let mut out = Vec::with_capacity(n);
+    for chunk in data.partitions.chunks(per) {
+        let refs: Vec<&DataFrame> = chunk.iter().collect();
+        out.push(DataFrame::concat(&refs)?);
+    }
+    Ok(Dataset::from_partitions(out).with_threads(data.threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn ds(sizes: &[usize]) -> Dataset {
+        let parts = sizes
+            .iter()
+            .map(|&n| {
+                DataFrame::new(vec![("x".into(), Column::from_i64(vec![1; n]))]).unwrap()
+            })
+            .collect();
+        Dataset::from_partitions(parts)
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        assert_eq!(imbalance(&ds(&[10, 10, 10])), 0.0);
+        let skewed = imbalance(&ds(&[1, 10, 1]));
+        assert!(skewed > 1.0, "skewed={skewed}");
+    }
+
+    #[test]
+    fn rebalance_evens_out() {
+        let d = ds(&[100, 1, 1]);
+        let r = rebalance(&d, 3).unwrap();
+        assert_eq!(r.num_rows(), 102);
+        assert!(imbalance(&r) < 0.1);
+    }
+
+    #[test]
+    fn coalesce_merges() {
+        let d = ds(&[5, 5, 5, 5, 5]);
+        let c = coalesce(&d, 2).unwrap();
+        assert_eq!(c.num_partitions(), 2);
+        assert_eq!(c.num_rows(), 25);
+        // already small enough: untouched
+        assert_eq!(coalesce(&c, 4).unwrap().num_partitions(), 2);
+    }
+}

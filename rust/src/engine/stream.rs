@@ -1,0 +1,256 @@
+//! Streaming ingestion orchestrator with bounded-queue backpressure.
+//!
+//! The data-pipeline L3 shape of the paper's offline stage: a producer
+//! reads/generates micro-batches, a bounded channel applies backpressure,
+//! N workers run the fitted pipeline on each micro-batch, and a sink
+//! collects results in order. Throughput is bounded by the slowest stage
+//! rather than memory (the queue never exceeds `queue_cap` batches).
+//!
+//! Built on std mpsc + a counting semaphore (no tokio in the offline
+//! vendor set); the structure matches an async implementation 1:1.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::dataframe::DataFrame;
+use crate::error::{KamaeError, Result};
+
+/// A counting semaphore (queue slots).
+struct Semaphore {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Self {
+        Semaphore { count: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c == 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c -= 1;
+    }
+
+    fn release(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// Statistics of one streaming run.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub batches: usize,
+    pub rows: usize,
+    /// Max number of batches that were in flight at once (≤ queue_cap).
+    pub peak_in_flight: usize,
+}
+
+/// Configuration for [`run_stream`].
+pub struct StreamConfig {
+    /// Worker threads transforming micro-batches.
+    pub workers: usize,
+    /// Bounded-queue capacity (backpressure window).
+    pub queue_cap: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { workers: crate::util::pool::default_threads(), queue_cap: 8 }
+    }
+}
+
+/// Run a streaming job: `source` yields micro-batches until `None`;
+/// `transform` runs on workers; `sink` receives (index, result) strictly
+/// in source order.
+///
+/// The producer blocks once `queue_cap` batches are in flight — that is
+/// the backpressure contract: memory use is `O(queue_cap · batch_size)`
+/// no matter how slow the consumer is.
+pub fn run_stream(
+    config: &StreamConfig,
+    mut source: impl FnMut() -> Option<DataFrame> + Send,
+    transform: impl Fn(DataFrame) -> Result<DataFrame> + Sync,
+    mut sink: impl FnMut(usize, DataFrame) -> Result<()> + Send,
+) -> Result<StreamStats> {
+    let workers = config.workers.max(1);
+    let slots = Arc::new(Semaphore::new(config.queue_cap.max(1)));
+    let (work_tx, work_rx) = mpsc::channel::<(usize, DataFrame)>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Result<DataFrame>)>();
+
+    let in_flight = Arc::new(Mutex::new((0usize, 0usize))); // (current, peak)
+    let stats = Mutex::new(StreamStats::default());
+
+    std::thread::scope(|scope| -> Result<()> {
+        // workers
+        for _ in 0..workers {
+            let work_rx = Arc::clone(&work_rx);
+            let done_tx = done_tx.clone();
+            let transform = &transform;
+            scope.spawn(move || loop {
+                let job = { work_rx.lock().unwrap().recv() };
+                match job {
+                    Ok((idx, df)) => {
+                        let res = transform(df);
+                        if done_tx.send((idx, res)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            });
+        }
+        drop(done_tx);
+
+        // producer
+        let producer_slots = Arc::clone(&slots);
+        let producer_in_flight = Arc::clone(&in_flight);
+        let producer = scope.spawn(move || {
+            let mut idx = 0usize;
+            while let Some(batch) = source() {
+                producer_slots.acquire();
+                {
+                    let mut f = producer_in_flight.lock().unwrap();
+                    f.0 += 1;
+                    f.1 = f.1.max(f.0);
+                }
+                if work_tx.send((idx, batch)).is_err() {
+                    break;
+                }
+                idx += 1;
+            }
+            drop(work_tx); // signal workers to finish
+            idx
+        });
+
+        // sink: reorder buffer for strict source order
+        let mut pending: BTreeMap<usize, DataFrame> = BTreeMap::new();
+        let mut next = 0usize;
+        for (idx, res) in done_rx.iter() {
+            // decrement BEFORE releasing the slot, else the producer can
+            // acquire + increment first and peak_in_flight overshoots
+            {
+                let mut f = in_flight.lock().unwrap();
+                f.0 -= 1;
+            }
+            slots.release();
+            let df = res?;
+            pending.insert(idx, df);
+            while let Some(df) = pending.remove(&next) {
+                let mut s = stats.lock().unwrap();
+                s.batches += 1;
+                s.rows += df.num_rows();
+                drop(s);
+                sink(next, df)?;
+                next += 1;
+            }
+        }
+        let total = producer.join().map_err(|_| {
+            KamaeError::Serving("stream producer panicked".into())
+        })?;
+        if next != total {
+            return Err(KamaeError::Serving(format!(
+                "stream sink saw {next} of {total} batches"
+            )));
+        }
+        Ok(())
+    })?;
+
+    let mut s = stats.into_inner().unwrap();
+    s.peak_in_flight = in_flight.lock().unwrap().1;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn batch(i: i64, rows: usize) -> DataFrame {
+        DataFrame::new(vec![("x".into(), Column::from_i64(vec![i; rows]))]).unwrap()
+    }
+
+    #[test]
+    fn processes_all_batches_in_order() {
+        let mut produced = 0;
+        let seen = Mutex::new(Vec::new());
+        let stats = run_stream(
+            &StreamConfig { workers: 4, queue_cap: 3 },
+            move || {
+                if produced < 20 {
+                    produced += 1;
+                    Some(batch(produced - 1, 5))
+                } else {
+                    None
+                }
+            },
+            |df| Ok(df),
+            |idx, df| {
+                seen.lock().unwrap().push((idx, df.column("x")?.as_i64()?[0]));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.batches, 20);
+        assert_eq!(stats.rows, 100);
+        let seen = seen.into_inner().unwrap();
+        for (i, &(idx, val)) in seen.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert_eq!(val, i as i64);
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_in_flight() {
+        let mut produced = 0;
+        let stats = run_stream(
+            &StreamConfig { workers: 2, queue_cap: 2 },
+            move || {
+                if produced < 30 {
+                    produced += 1;
+                    Some(batch(0, 1))
+                } else {
+                    None
+                }
+            },
+            |df| {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                Ok(df)
+            },
+            |_, _| Ok(()),
+        )
+        .unwrap();
+        assert!(stats.peak_in_flight <= 2, "peak={}", stats.peak_in_flight);
+    }
+
+    #[test]
+    fn transform_error_propagates() {
+        let mut produced = 0;
+        let res = run_stream(
+            &StreamConfig { workers: 2, queue_cap: 2 },
+            move || {
+                if produced < 5 {
+                    produced += 1;
+                    Some(batch(produced as i64 - 1, 1))
+                } else {
+                    None
+                }
+            },
+            |df| {
+                if df.column("x")?.as_i64()?[0] == 3 {
+                    Err(KamaeError::InvalidConfig("boom".into()))
+                } else {
+                    Ok(df)
+                }
+            },
+            |_, _| Ok(()),
+        );
+        assert!(res.is_err());
+    }
+}

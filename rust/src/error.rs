@@ -1,0 +1,67 @@
+//! Crate-wide error type.
+//!
+//! A single lightweight error enum keeps the hot paths allocation-free on
+//! success while still carrying enough context for debugging pipeline
+//! configuration mistakes (the dominant error class in preprocessing code).
+
+use std::fmt;
+
+/// Errors produced by the Kamae engine, pipeline API, exporter and runtime.
+#[derive(Debug)]
+pub enum KamaeError {
+    /// A referenced column does not exist in the DataFrame.
+    ColumnNotFound(String),
+    /// A column had a different dtype than the operation requires.
+    TypeMismatch { expected: String, found: String, context: String },
+    /// Columns participating in one operation disagree on length.
+    LengthMismatch { left: usize, right: usize, context: String },
+    /// Invalid transformer / estimator configuration.
+    InvalidConfig(String),
+    /// Errors from (de)serialising pipelines or specs.
+    Serde(String),
+    /// I/O errors (dataset files, artifacts).
+    Io(std::io::Error),
+    /// Errors surfaced by the XLA / PJRT runtime.
+    Xla(String),
+    /// The GraphSpec interpreter / compiler hit an unsupported construct.
+    Unsupported(String),
+    /// Serving-layer errors (queue closed, deadline exceeded, ...).
+    Serving(String),
+}
+
+impl fmt::Display for KamaeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KamaeError::ColumnNotFound(c) => write!(f, "column not found: {c}"),
+            KamaeError::TypeMismatch { expected, found, context } => {
+                write!(f, "type mismatch in {context}: expected {expected}, found {found}")
+            }
+            KamaeError::LengthMismatch { left, right, context } => {
+                write!(f, "length mismatch in {context}: {left} vs {right}")
+            }
+            KamaeError::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            KamaeError::Serde(m) => write!(f, "serde error: {m}"),
+            KamaeError::Io(e) => write!(f, "io error: {e}"),
+            KamaeError::Xla(m) => write!(f, "xla error: {m}"),
+            KamaeError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            KamaeError::Serving(m) => write!(f, "serving error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for KamaeError {}
+
+impl From<std::io::Error> for KamaeError {
+    fn from(e: std::io::Error) -> Self {
+        KamaeError::Io(e)
+    }
+}
+
+impl From<xla::Error> for KamaeError {
+    fn from(e: xla::Error) -> Self {
+        KamaeError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, KamaeError>;

@@ -1,0 +1,363 @@
+//! Imputation estimator (mean / median / mode fill for missing values).
+//!
+//! "Missing" means: null mask set, NaN (floats), or equal to the
+//! configured `maskValue` sentinel. The fitted fill value exports into
+//! the compiled graph as an `impute` node (NaN/sentinel test + select);
+//! medians are computed from a bounded per-partition reservoir sample
+//! (exact for datasets under the reservoir size — documented substitution
+//! for a full distributed quantile sketch).
+
+use crate::dataframe::{Column, DataFrame};
+use crate::engine::{tree_aggregate, Accumulator, Dataset};
+use crate::error::{KamaeError, Result};
+use crate::export::{SpecBuilder, SpecDType};
+use crate::pipeline::{Estimator, Transformer};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Fill strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImputeStrategy {
+    Mean,
+    Median,
+    /// Most frequent value.
+    Mode,
+}
+
+impl ImputeStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ImputeStrategy::Mean => "mean",
+            ImputeStrategy::Median => "median",
+            ImputeStrategy::Mode => "mode",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ImputeStrategy> {
+        Ok(match s {
+            "mean" => ImputeStrategy::Mean,
+            "median" => ImputeStrategy::Median,
+            "mode" => ImputeStrategy::Mode,
+            other => {
+                return Err(KamaeError::InvalidConfig(format!("unknown impute strategy: {other}")))
+            }
+        })
+    }
+}
+
+const RESERVOIR: usize = 100_000;
+
+struct ImputeAcc {
+    input: String,
+    mask_value: Option<f64>,
+    count: u64,
+    sum: f64,
+    /// Reservoir sample for the median.
+    sample: Vec<f64>,
+    seen: u64,
+    rng: Rng,
+    /// Value counts for the mode (bit-keyed).
+    counts: std::collections::HashMap<u64, u64>,
+}
+
+impl ImputeAcc {
+    fn is_missing(&self, col: &Column, i: usize, x: f64) -> bool {
+        col.is_null(i) || x.is_nan() || Some(x) == self.mask_value
+    }
+}
+
+impl Accumulator for ImputeAcc {
+    fn add_partition(&mut self, df: &DataFrame) -> Result<()> {
+        let col = df.column(&self.input)?;
+        let v = crate::ops::cast::to_f64_vec(col)?;
+        for (i, &x) in v.iter().enumerate() {
+            if self.is_missing(col, i, x) {
+                continue;
+            }
+            self.count += 1;
+            self.sum += x;
+            *self.counts.entry(x.to_bits()).or_insert(0) += 1;
+            self.seen += 1;
+            if self.sample.len() < RESERVOIR {
+                self.sample.push(x);
+            } else {
+                let j = self.rng.below(self.seen) as usize;
+                if j < RESERVOIR {
+                    self.sample[j] = x;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn merge(&mut self, other: Self) -> Result<()> {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (k, v) in other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+        // merge reservoirs (simple concatenate-and-trim; keeps exactness
+        // below the cap and a fair-enough sample above it)
+        self.seen += other.seen;
+        self.sample.extend(other.sample);
+        if self.sample.len() > RESERVOIR {
+            self.rng.shuffle(&mut self.sample);
+            self.sample.truncate(RESERVOIR);
+        }
+        Ok(())
+    }
+}
+
+/// Unfitted imputer.
+#[derive(Debug, Clone)]
+pub struct ImputeEstimator {
+    pub input_col: String,
+    pub output_col: String,
+    pub layer_name: String,
+    pub strategy: ImputeStrategy,
+    /// Sentinel treated as missing in addition to null/NaN.
+    pub mask_value: Option<f64>,
+}
+
+impl ImputeEstimator {
+    pub fn new(input: &str, output: &str, strategy: ImputeStrategy) -> Self {
+        ImputeEstimator {
+            input_col: input.to_string(),
+            output_col: output.to_string(),
+            layer_name: format!("{output}_layer"),
+            strategy,
+            mask_value: None,
+        }
+    }
+
+    pub fn mask_value(mut self, v: f64) -> Self {
+        self.mask_value = Some(v);
+        self
+    }
+
+    pub fn layer_name(mut self, name: &str) -> Self {
+        self.layer_name = name.to_string();
+        self
+    }
+}
+
+impl Estimator for ImputeEstimator {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ImputeEstimator"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<Box<dyn Transformer>> {
+        let acc = tree_aggregate(data, || ImputeAcc {
+            input: self.input_col.clone(),
+            mask_value: self.mask_value,
+            count: 0,
+            sum: 0.0,
+            sample: Vec::new(),
+            seen: 0,
+            rng: Rng::new(0xC0FFEE),
+            counts: std::collections::HashMap::new(),
+        })?;
+        if acc.count == 0 {
+            return Err(KamaeError::InvalidConfig(
+                "ImputeEstimator: no non-missing rows to fit on".into(),
+            ));
+        }
+        let fill = match self.strategy {
+            ImputeStrategy::Mean => acc.sum / acc.count as f64,
+            ImputeStrategy::Median => {
+                let mut s = acc.sample;
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = s.len();
+                if n % 2 == 1 {
+                    s[n / 2]
+                } else {
+                    (s[n / 2 - 1] + s[n / 2]) / 2.0
+                }
+            }
+            ImputeStrategy::Mode => {
+                let (&bits, _) = acc
+                    .counts
+                    .iter()
+                    .max_by_key(|(bits, &c)| (c, std::cmp::Reverse(*bits)))
+                    .expect("count > 0");
+                f64::from_bits(bits)
+            }
+        };
+        Ok(Box::new(ImputeModel {
+            input_col: self.input_col.clone(),
+            output_col: self.output_col.clone(),
+            layer_name: self.layer_name.clone(),
+            fill,
+            mask_value: self.mask_value,
+        }))
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("inputCol", self.input_col.clone());
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        j.set("strategy", self.strategy.name());
+        if let Some(m) = self.mask_value {
+            j.set("maskValue", m);
+        }
+        j
+    }
+}
+
+/// Fitted imputer: replaces null/NaN/sentinel with the learned fill.
+#[derive(Debug, Clone)]
+pub struct ImputeModel {
+    pub input_col: String,
+    pub output_col: String,
+    pub layer_name: String,
+    pub fill: f64,
+    pub mask_value: Option<f64>,
+}
+
+impl Transformer for ImputeModel {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ImputeModel"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let col = df.column(&self.input_col)?;
+        let v = crate::ops::cast::to_f64_vec(col)?;
+        let data: Vec<f64> = v
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                if col.is_null(i) || x.is_nan() || Some(x) == self.mask_value {
+                    self.fill
+                } else {
+                    x
+                }
+            })
+            .collect();
+        // imputation resolves all missingness: no null mask on the output
+        df.set_column(self.output_col.clone(), Column::from_f64(data))
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(&self.input_col)?;
+        let mut attrs = Json::object();
+        attrs.set("fill", self.fill);
+        match self.mask_value {
+            Some(m) => attrs.set("mask_value", m),
+            None => attrs.set("mask_value", Json::Null),
+        };
+        b.graph_node("impute", &[&self.input_col], attrs, &self.output_col, SpecDType::F32, width)?;
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("inputCol", self.input_col.clone());
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        j.set("fill", self.fill);
+        if let Some(m) = self.mask_value {
+            j.set("maskValue", m);
+        }
+        j
+    }
+}
+
+pub(crate) fn model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(ImputeModel {
+        input_col: j.req_str("inputCol")?.to_string(),
+        output_col: j.req_str("outputCol")?.to_string(),
+        layer_name: j.req_str("layerName")?.to_string(),
+        fill: j.req_f64("fill")?,
+        mask_value: j.opt_f64("maskValue"),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> Dataset {
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64_opt(vec![
+                Some(1.0),
+                None,
+                Some(3.0),
+                Some(3.0),
+                Some(f64::NAN),
+                Some(10.0),
+            ]),
+        )])
+        .unwrap();
+        Dataset::from_dataframe(df, 2)
+    }
+
+    #[test]
+    fn mean_impute() {
+        let model = ImputeEstimator::new("x", "xi", ImputeStrategy::Mean)
+            .fit(&data())
+            .unwrap();
+        let mut df = data().collect().unwrap();
+        model.transform(&mut df).unwrap();
+        let v = df.column("xi").unwrap().as_f64().unwrap();
+        let mean = (1.0 + 3.0 + 3.0 + 10.0) / 4.0;
+        assert_eq!(v[1], mean);
+        assert_eq!(v[4], mean);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(df.column("xi").unwrap().null_count(), 0);
+    }
+
+    #[test]
+    fn median_and_mode() {
+        let model = ImputeEstimator::new("x", "xm", ImputeStrategy::Median)
+            .fit(&data())
+            .unwrap();
+        let j = model.save();
+        assert_eq!(j.req_f64("fill").unwrap(), 3.0);
+        let model = ImputeEstimator::new("x", "xo", ImputeStrategy::Mode)
+            .fit(&data())
+            .unwrap();
+        assert_eq!(model.save().req_f64("fill").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn mask_value_sentinel() {
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64(vec![-1.0, 5.0, 7.0]),
+        )])
+        .unwrap();
+        let model = ImputeEstimator::new("x", "xi", ImputeStrategy::Mean)
+            .mask_value(-1.0)
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        assert_eq!(out.column("xi").unwrap().as_f64().unwrap(), &[6.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn save_load() {
+        let model = ImputeEstimator::new("x", "xi", ImputeStrategy::Mean)
+            .fit(&data())
+            .unwrap();
+        let j = crate::pipeline::with_type(model.save(), model.type_name());
+        let loaded = crate::transformers::load(&j).unwrap();
+        let mut a = data().collect().unwrap();
+        let mut b = a.clone();
+        model.transform(&mut a).unwrap();
+        loaded.transform(&mut b).unwrap();
+        // compare imputed outputs only (the raw input contains NaN, and
+        // NaN != NaN under PartialEq)
+        assert_eq!(a.column("xi").unwrap(), b.column("xi").unwrap());
+    }
+}

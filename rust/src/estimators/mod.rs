@@ -1,0 +1,45 @@
+//! The estimator library — Kamae's fitted preprocessing stages
+//! (string-/shared-/one-hot indexing, standard & min-max scaling,
+//! imputation, quantile binning).
+//!
+//! Estimators fit via distributed tree aggregation
+//! ([`crate::engine::tree_aggregate`]) and produce fitted models that
+//! implement [`crate::pipeline::Transformer`], so a fitted pipeline is
+//! transformers end-to-end and exports uniformly.
+
+mod impute;
+mod one_hot;
+mod quantile;
+mod scale;
+mod string_index;
+
+pub use impute::{ImputeEstimator, ImputeModel, ImputeStrategy};
+pub use one_hot::{OneHotEncodeEstimator, OneHotModel};
+pub use quantile::QuantileBinEstimator;
+pub use scale::{MinMaxScaleEstimator, ScaleModel, StandardScaleEstimator};
+pub use string_index::{StringIndexEstimator, StringIndexModel, StringOrder};
+
+use crate::error::Result;
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+// Fitted-model loaders used by the transformer registry.
+pub(crate) fn string_index_model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    string_index::model_from_json(j)
+}
+
+pub(crate) fn one_hot_model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    one_hot::model_from_json(j)
+}
+
+pub(crate) fn standard_scale_model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    scale::scale_model_from_json(j, "StandardScaleModel")
+}
+
+pub(crate) fn min_max_scale_model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    scale::scale_model_from_json(j, "MinMaxScaleModel")
+}
+
+pub(crate) fn impute_model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    impute::model_from_json(j)
+}

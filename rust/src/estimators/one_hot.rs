@@ -1,0 +1,338 @@
+//! One-hot encoding estimator (Listing 1's `OneHotEncodeEstimator`).
+//!
+//! Fits a vocabulary like the string indexer (no mask token — one-hot
+//! features are scalar categoricals), then encodes to a fixed-width 0/1
+//! vector. With `dropUnseen=true` the OOV slots are dropped and unseen
+//! values encode as the all-zeros vector.
+
+use crate::dataframe::{Column, DataFrame, DType, ListColumn};
+use crate::engine::Dataset;
+use crate::error::{KamaeError, Result};
+use crate::export::{SpecBuilder, SpecDType};
+use crate::ops::hash;
+use crate::pipeline::{Estimator, Transformer};
+use crate::util::json::Json;
+
+use super::string_index::{StringIndexEstimator, StringOrder};
+
+/// Unfitted one-hot encoder.
+#[derive(Debug, Clone)]
+pub struct OneHotEncodeEstimator {
+    pub input_col: String,
+    pub output_col: String,
+    pub layer_name: String,
+    pub order: StringOrder,
+    pub num_oov: usize,
+    pub drop_unseen: bool,
+    pub cast_to_string: bool,
+}
+
+impl OneHotEncodeEstimator {
+    pub fn new(input: &str, output: &str) -> Self {
+        OneHotEncodeEstimator {
+            input_col: input.to_string(),
+            output_col: output.to_string(),
+            layer_name: format!("{output}_layer"),
+            order: StringOrder::FrequencyDesc,
+            num_oov: 1,
+            drop_unseen: false,
+            cast_to_string: false,
+        }
+    }
+
+    pub fn order(mut self, order: StringOrder) -> Self {
+        self.order = order;
+        self
+    }
+
+    pub fn num_oov(mut self, n: usize) -> Self {
+        self.num_oov = n;
+        self
+    }
+
+    pub fn drop_unseen(mut self, drop: bool) -> Self {
+        self.drop_unseen = drop;
+        self
+    }
+
+    pub fn cast_to_string(mut self) -> Self {
+        self.cast_to_string = true;
+        self
+    }
+
+    pub fn layer_name(mut self, name: &str) -> Self {
+        self.layer_name = name.to_string();
+        self
+    }
+}
+
+impl Estimator for OneHotEncodeEstimator {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "OneHotEncodeEstimator"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<Box<dyn Transformer>> {
+        let mut inner = StringIndexEstimator::new(&self.input_col, "__onehot_tmp")
+            .order(self.order)
+            .num_oov(self.num_oov)
+            .layer_name(&self.layer_name);
+        if self.cast_to_string {
+            inner = inner.cast_to_string();
+        }
+        let fitted = inner.fit(data)?;
+        let model = fitted
+            .save()
+            .req_array("labels")?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| KamaeError::Serde("label".into()))
+            })
+            .collect::<Result<Vec<String>>>()?;
+        Ok(Box::new(OneHotModel {
+            input_col: self.input_col.clone(),
+            output_col: self.output_col.clone(),
+            layer_name: self.layer_name.clone(),
+            num_oov: self.num_oov,
+            drop_unseen: self.drop_unseen,
+            cast_to_string: self.cast_to_string,
+            lookup: model.iter().cloned().zip(0u32..).collect(),
+            labels: model,
+        }))
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("inputCol", self.input_col.clone());
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        j.set("stringOrderType", self.order.name());
+        j.set("numOOVIndices", self.num_oov);
+        j.set("dropUnseen", self.drop_unseen);
+        j.set("castToString", self.cast_to_string);
+        j
+    }
+}
+
+/// Fitted one-hot encoder.
+#[derive(Debug, Clone)]
+pub struct OneHotModel {
+    pub input_col: String,
+    pub output_col: String,
+    pub layer_name: String,
+    pub num_oov: usize,
+    pub drop_unseen: bool,
+    pub cast_to_string: bool,
+    pub labels: Vec<String>,
+    lookup: std::collections::HashMap<String, u32>,
+}
+
+impl OneHotModel {
+    /// Output vector width.
+    pub fn depth(&self) -> usize {
+        if self.drop_unseen {
+            self.labels.len()
+        } else {
+            self.num_oov + self.labels.len()
+        }
+    }
+
+    /// Hot position for a token, or None for all-zeros (dropped unseen).
+    fn hot(&self, s: &str) -> Option<usize> {
+        match self.lookup.get(s) {
+            Some(&rank) => Some(if self.drop_unseen {
+                rank as usize
+            } else {
+                self.num_oov + rank as usize
+            }),
+            None => {
+                if self.drop_unseen {
+                    None
+                } else {
+                    Some(hash::bucket(hash::fnv1a64(s), 0, self.num_oov as i64) as usize)
+                }
+            }
+        }
+    }
+}
+
+impl Transformer for OneHotModel {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "OneHotModel"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let col = df.column(&self.input_col)?;
+        let col = if self.cast_to_string && !matches!(col.dtype(), DType::Str) {
+            crate::ops::cast::cast(col, &DType::Str)?
+        } else {
+            col.clone()
+        };
+        let v = col.as_str()?;
+        let depth = self.depth();
+        let mut values = vec![0.0f64; v.len() * depth];
+        for (i, s) in v.iter().enumerate() {
+            if let Some(h) = self.hot(s) {
+                values[i * depth + h] = 1.0;
+            }
+        }
+        let offsets = (0..=v.len() as u32).map(|i| i * depth as u32).collect();
+        df.set_column(
+            self.output_col.clone(),
+            Column::ListF64(ListColumn { values, offsets }),
+        )
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut pairs: Vec<(i64, i64)> = self
+            .labels
+            .iter()
+            .enumerate()
+            .map(|(rank, s)| (hash::fnv1a64(s), rank as i64))
+            .collect();
+        pairs.sort();
+        for w in pairs.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(KamaeError::Unsupported("one-hot vocabulary hash collision".into()));
+            }
+        }
+        let (hashes, ranks): (Vec<i64>, Vec<i64>) = pairs.into_iter().unzip();
+        let href = crate::transformers::indexing_hash_ref(b, &self.input_col, None)?;
+        let mut attrs = Json::object();
+        attrs.set("vocab_hashes", Json::Array(hashes.into_iter().map(Json::Int).collect()));
+        attrs.set("vocab_ranks", Json::Array(ranks.into_iter().map(Json::Int).collect()));
+        attrs.set("num_oov", self.num_oov);
+        attrs.set("drop_unseen", self.drop_unseen);
+        b.graph_node(
+            "one_hot",
+            &[&href],
+            attrs,
+            &self.output_col,
+            SpecDType::F32,
+            Some(self.depth()),
+        )?;
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("inputCol", self.input_col.clone());
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        j.set("numOOVIndices", self.num_oov);
+        j.set("dropUnseen", self.drop_unseen);
+        j.set("castToString", self.cast_to_string);
+        j.set(
+            "labels",
+            Json::Array(self.labels.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j
+    }
+}
+
+pub(crate) fn model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let labels: Vec<String> = j
+        .req_array("labels")?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| KamaeError::Serde("label".into()))
+        })
+        .collect::<Result<_>>()?;
+    Ok(Box::new(OneHotModel {
+        input_col: j.req_str("inputCol")?.to_string(),
+        output_col: j.req_str("outputCol")?.to_string(),
+        layer_name: j.req_str("layerName")?.to_string(),
+        num_oov: j.req_i64("numOOVIndices")? as usize,
+        drop_unseen: j.opt_bool("dropUnseen").unwrap_or(false),
+        cast_to_string: j.opt_bool("castToString").unwrap_or(false),
+        lookup: labels.iter().cloned().zip(0u32..).collect(),
+        labels,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> Dataset {
+        let df = DataFrame::new(vec![(
+            "occ".into(),
+            Column::from_str(vec!["eng", "doc", "eng", "art"]),
+        )])
+        .unwrap();
+        Dataset::from_dataframe(df, 2)
+    }
+
+    #[test]
+    fn basic_encoding() {
+        let model = OneHotEncodeEstimator::new("occ", "v").fit(&data()).unwrap();
+        let mut df = DataFrame::new(vec![(
+            "occ".into(),
+            Column::from_str(vec!["eng", "art", "UNSEEN"]),
+        )])
+        .unwrap();
+        model.transform(&mut df).unwrap();
+        let l = df.column("v").unwrap().as_list_f64().unwrap();
+        // depth = 1 oov + 3 labels = 4; eng rank0 -> slot 1
+        assert_eq!(l.row(0), &[0.0, 1.0, 0.0, 0.0]);
+        // art (count 1, tie alpha: art < doc) rank1 -> slot 2
+        assert_eq!(l.row(1), &[0.0, 0.0, 1.0, 0.0]);
+        // unseen -> oov slot 0
+        assert_eq!(l.row(2), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn drop_unseen_zeros() {
+        let model = OneHotEncodeEstimator::new("occ", "v")
+            .drop_unseen(true)
+            .fit(&data())
+            .unwrap();
+        let mut df = DataFrame::new(vec![(
+            "occ".into(),
+            Column::from_str(vec!["eng", "UNSEEN"]),
+        )])
+        .unwrap();
+        model.transform(&mut df).unwrap();
+        let l = df.column("v").unwrap().as_list_f64().unwrap();
+        assert_eq!(l.row(0), &[1.0, 0.0, 0.0]); // depth 3, eng hot at 0
+        assert_eq!(l.row(1), &[0.0, 0.0, 0.0]); // all zeros
+    }
+
+    #[test]
+    fn int_input_with_cast() {
+        // Listing 1: Occupation is int32 with inputDtype="string"
+        let df = DataFrame::new(vec![("occ".into(), Column::from_i32(vec![1, 2, 1]))]).unwrap();
+        let model = OneHotEncodeEstimator::new("occ", "v")
+            .cast_to_string()
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        let l = out.column("v").unwrap().as_list_f64().unwrap();
+        assert_eq!(l.row(0), l.row(2));
+        assert_ne!(l.row(0), l.row(1));
+    }
+
+    #[test]
+    fn save_load() {
+        let model = OneHotEncodeEstimator::new("occ", "v").fit(&data()).unwrap();
+        let j = crate::pipeline::with_type(model.save(), model.type_name());
+        let loaded = crate::transformers::load(&j).unwrap();
+        let mut a = data().collect().unwrap();
+        let mut b = a.clone();
+        model.transform(&mut a).unwrap();
+        loaded.transform(&mut b).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,477 @@
+//! Scaling estimators: standard scaling (z-score) and min-max.
+//!
+//! Fit runs a single-pass distributed moment aggregation (count / sum /
+//! sum-of-squares / min / max per element position), supporting both
+//! scalar columns and fixed-width vector columns — the paper's LTR
+//! pattern "assemble → standard scale → disassemble" needs the vector
+//! form. Standard deviation is the *sample* std (ddof=1), matching
+//! Spark's `StandardScaler`.
+
+use crate::dataframe::{Column, DataFrame, ListColumn};
+use crate::engine::{tree_aggregate, Accumulator, Dataset};
+use crate::error::{KamaeError, Result};
+use crate::export::{SpecBuilder, SpecDType};
+use crate::pipeline::{Estimator, Transformer};
+use crate::util::json::Json;
+
+/// Moments accumulator per element position.
+struct MomentsAcc {
+    input: String,
+    count: u64,
+    sum: Vec<f64>,
+    sumsq: Vec<f64>,
+    min: Vec<f64>,
+    max: Vec<f64>,
+}
+
+impl MomentsAcc {
+    fn new(input: &str) -> Self {
+        MomentsAcc {
+            input: input.to_string(),
+            count: 0,
+            sum: vec![],
+            sumsq: vec![],
+            min: vec![],
+            max: vec![],
+        }
+    }
+
+    fn ensure_width(&mut self, w: usize) -> Result<()> {
+        if self.sum.is_empty() {
+            self.sum = vec![0.0; w];
+            self.sumsq = vec![0.0; w];
+            self.min = vec![f64::INFINITY; w];
+            self.max = vec![f64::NEG_INFINITY; w];
+        } else if self.sum.len() != w {
+            return Err(KamaeError::InvalidConfig(format!(
+                "scale fit: inconsistent vector width {} vs {}",
+                self.sum.len(),
+                w
+            )));
+        }
+        Ok(())
+    }
+
+    fn add_row(&mut self, row: &[f64]) {
+        self.count += 1;
+        for (j, &x) in row.iter().enumerate() {
+            self.sum[j] += x;
+            self.sumsq[j] += x * x;
+            self.min[j] = self.min[j].min(x);
+            self.max[j] = self.max[j].max(x);
+        }
+    }
+}
+
+impl Accumulator for MomentsAcc {
+    fn add_partition(&mut self, df: &DataFrame) -> Result<()> {
+        let col = df.column(&self.input)?;
+        match col {
+            Column::ListF64(_) | Column::ListF32(_) | Column::ListI64(_) | Column::ListI32(_) => {
+                let (values, offsets) = crate::ops::math::list_f64_parts(col)?;
+                let l = ListColumn { values, offsets };
+                let w = l.fixed_width().ok_or_else(|| {
+                    KamaeError::InvalidConfig(
+                        "scale fit requires a fixed-width vector column".into(),
+                    )
+                })?;
+                self.ensure_width(w)?;
+                for i in 0..l.len() {
+                    self.add_row(l.row(i));
+                }
+            }
+            _ => {
+                let v = crate::ops::cast::to_f64_vec(col)?;
+                self.ensure_width(1)?;
+                for (i, &x) in v.iter().enumerate() {
+                    if !col.is_null(i) {
+                        self.add_row(&[x]);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn merge(&mut self, other: Self) -> Result<()> {
+        if other.count == 0 {
+            return Ok(());
+        }
+        if self.count == 0 {
+            self.sum = other.sum;
+            self.sumsq = other.sumsq;
+            self.min = other.min;
+            self.max = other.max;
+            self.count = other.count;
+            return Ok(());
+        }
+        self.ensure_width(other.sum.len())?;
+        self.count += other.count;
+        for j in 0..self.sum.len() {
+            self.sum[j] += other.sum[j];
+            self.sumsq[j] += other.sumsq[j];
+            self.min[j] = self.min[j].min(other.min[j]);
+            self.max[j] = self.max[j].max(other.max[j]);
+        }
+        Ok(())
+    }
+}
+
+/// z-score scaling estimator (Spark `StandardScaler`).
+#[derive(Debug, Clone)]
+pub struct StandardScaleEstimator {
+    pub input_col: String,
+    pub output_col: String,
+    pub layer_name: String,
+    pub with_mean: bool,
+    pub with_std: bool,
+}
+
+impl StandardScaleEstimator {
+    pub fn new(input: &str, output: &str) -> Self {
+        StandardScaleEstimator {
+            input_col: input.to_string(),
+            output_col: output.to_string(),
+            layer_name: format!("{output}_layer"),
+            with_mean: true,
+            with_std: true,
+        }
+    }
+
+    pub fn with_mean(mut self, b: bool) -> Self {
+        self.with_mean = b;
+        self
+    }
+
+    pub fn with_std(mut self, b: bool) -> Self {
+        self.with_std = b;
+        self
+    }
+
+    pub fn layer_name(mut self, name: &str) -> Self {
+        self.layer_name = name.to_string();
+        self
+    }
+}
+
+impl Estimator for StandardScaleEstimator {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StandardScaleEstimator"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<Box<dyn Transformer>> {
+        let acc = tree_aggregate(data, || MomentsAcc::new(&self.input_col))?;
+        if acc.count == 0 {
+            return Err(KamaeError::InvalidConfig(
+                "StandardScaleEstimator: no non-null rows to fit on".into(),
+            ));
+        }
+        let n = acc.count as f64;
+        let w = acc.sum.len();
+        let mut scale = Vec::with_capacity(w);
+        let mut shift = Vec::with_capacity(w);
+        for j in 0..w {
+            let mean = acc.sum[j] / n;
+            // sample variance (ddof=1), like Spark's StandardScaler
+            let var = if acc.count > 1 {
+                ((acc.sumsq[j] - n * mean * mean) / (n - 1.0)).max(0.0)
+            } else {
+                0.0
+            };
+            let std = var.sqrt();
+            let s = if self.with_std && std > 0.0 { 1.0 / std } else { 1.0 };
+            let m = if self.with_mean { mean } else { 0.0 };
+            scale.push(s);
+            shift.push(-m * s);
+        }
+        Ok(Box::new(ScaleModel {
+            input_col: self.input_col.clone(),
+            output_col: self.output_col.clone(),
+            layer_name: self.layer_name.clone(),
+            scale,
+            shift,
+            kind: "StandardScaleModel",
+        }))
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("inputCol", self.input_col.clone());
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        j.set("withMean", self.with_mean);
+        j.set("withStd", self.with_std);
+        j
+    }
+}
+
+/// Min-max scaling estimator: (x − min) / (max − min) → [0, 1].
+#[derive(Debug, Clone)]
+pub struct MinMaxScaleEstimator {
+    pub input_col: String,
+    pub output_col: String,
+    pub layer_name: String,
+}
+
+impl MinMaxScaleEstimator {
+    pub fn new(input: &str, output: &str) -> Self {
+        MinMaxScaleEstimator {
+            input_col: input.to_string(),
+            output_col: output.to_string(),
+            layer_name: format!("{output}_layer"),
+        }
+    }
+
+    pub fn layer_name(mut self, name: &str) -> Self {
+        self.layer_name = name.to_string();
+        self
+    }
+}
+
+impl Estimator for MinMaxScaleEstimator {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "MinMaxScaleEstimator"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<Box<dyn Transformer>> {
+        let acc = tree_aggregate(data, || MomentsAcc::new(&self.input_col))?;
+        if acc.count == 0 {
+            return Err(KamaeError::InvalidConfig(
+                "MinMaxScaleEstimator: no non-null rows to fit on".into(),
+            ));
+        }
+        let w = acc.sum.len();
+        let mut scale = Vec::with_capacity(w);
+        let mut shift = Vec::with_capacity(w);
+        for j in 0..w {
+            let range = acc.max[j] - acc.min[j];
+            let s = if range > 0.0 { 1.0 / range } else { 1.0 };
+            scale.push(s);
+            shift.push(-acc.min[j] * s);
+        }
+        Ok(Box::new(ScaleModel {
+            input_col: self.input_col.clone(),
+            output_col: self.output_col.clone(),
+            layer_name: self.layer_name.clone(),
+            scale,
+            shift,
+            kind: "MinMaxScaleModel",
+        }))
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("inputCol", self.input_col.clone());
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        j
+    }
+}
+
+/// Fitted affine scaling: y = x·scale + shift, per element position.
+/// Shared by standard and min-max scaling (they export identically —
+/// the Pallas fused scale kernel runs both).
+#[derive(Debug, Clone)]
+pub struct ScaleModel {
+    pub input_col: String,
+    pub output_col: String,
+    pub layer_name: String,
+    pub scale: Vec<f64>,
+    pub shift: Vec<f64>,
+    kind: &'static str,
+}
+
+impl Transformer for ScaleModel {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        self.kind
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let col = df.column(&self.input_col)?;
+        let out = if col.dtype().element().is_some() {
+            let (values, offsets) = crate::ops::math::list_f64_parts(col)?;
+            let l = ListColumn { values, offsets };
+            let w = l.fixed_width().ok_or_else(|| {
+                KamaeError::InvalidConfig("scale transform requires fixed-width vectors".into())
+            })?;
+            if w != self.scale.len() {
+                return Err(KamaeError::LengthMismatch {
+                    left: w,
+                    right: self.scale.len(),
+                    context: "scale width".into(),
+                });
+            }
+            let values: Vec<f64> = l
+                .values
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| x * self.scale[i % w] + self.shift[i % w])
+                .collect();
+            Column::ListF64(ListColumn { values, offsets: l.offsets })
+        } else {
+            let v = crate::ops::cast::to_f64_vec(col)?;
+            Column::F64(
+                v.iter().map(|&x| x * self.scale[0] + self.shift[0]).collect(),
+                col.nulls().cloned(),
+            )
+        };
+        df.set_column(self.output_col.clone(), out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(&self.input_col)?;
+        let mut attrs = Json::object();
+        attrs.set("scale", Json::Array(self.scale.iter().map(|&x| Json::Float(x)).collect()));
+        attrs.set("shift", Json::Array(self.shift.iter().map(|&x| Json::Float(x)).collect()));
+        b.graph_node(
+            "scale_vec",
+            &[&self.input_col],
+            attrs,
+            &self.output_col,
+            SpecDType::F32,
+            width,
+        )?;
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("inputCol", self.input_col.clone());
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        j.set("scale", Json::Array(self.scale.iter().map(|&x| Json::Float(x)).collect()));
+        j.set("shift", Json::Array(self.shift.iter().map(|&x| Json::Float(x)).collect()));
+        j
+    }
+}
+
+pub(crate) fn scale_model_from_json(j: &Json, kind: &'static str) -> Result<Box<dyn Transformer>> {
+    let floats = |key: &str| -> Result<Vec<f64>> {
+        j.req_array(key)?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| KamaeError::Serde(format!("{key} entry"))))
+            .collect()
+    };
+    Ok(Box::new(ScaleModel {
+        input_col: j.req_str("inputCol")?.to_string(),
+        output_col: j.req_str("outputCol")?.to_string(),
+        layer_name: j.req_str("layerName")?.to_string(),
+        scale: floats("scale")?,
+        shift: floats("shift")?,
+        kind,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_scale_scalar() {
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64(vec![2.0, 4.0, 6.0, 8.0]),
+        )])
+        .unwrap();
+        let model = StandardScaleEstimator::new("x", "z")
+            .fit(&Dataset::from_dataframe(df.clone(), 2))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        let z = out.column("z").unwrap().as_f64().unwrap();
+        let mean: f64 = z.iter().sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-12);
+        // sample std of z should be 1
+        let var: f64 = z.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / 3.0;
+        assert!((var - 1.0).abs() < 1e-12, "var={var}");
+    }
+
+    #[test]
+    fn vector_scaling_assemble_pattern() {
+        // the paper's assemble -> scale -> disassemble flow
+        let df = DataFrame::new(vec![(
+            "v".into(),
+            Column::from_f64_rows(vec![vec![1.0, 100.0], vec![3.0, 300.0]]),
+        )])
+        .unwrap();
+        let model = StandardScaleEstimator::new("v", "vs")
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        let l = out.column("vs").unwrap().as_list_f64().unwrap();
+        // each element position independently standardised
+        assert!((l.row(0)[0] + l.row(1)[0]).abs() < 1e-12);
+        assert!((l.row(0)[1] + l.row(1)[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max_scale() {
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64(vec![10.0, 20.0, 30.0]),
+        )])
+        .unwrap();
+        let model = MinMaxScaleEstimator::new("x", "m")
+            .fit(&Dataset::from_dataframe(df.clone(), 3))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        assert_eq!(out.column("m").unwrap().as_f64().unwrap(), &[0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn constant_column_degenerates_gracefully() {
+        let df = DataFrame::new(vec![("x".into(), Column::from_f64(vec![5.0, 5.0]))]).unwrap();
+        let model = StandardScaleEstimator::new("x", "z")
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        // std = 0 -> scale 1, just mean-centering
+        assert_eq!(out.column("z").unwrap().as_f64().unwrap(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn nulls_excluded_from_fit() {
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64_opt(vec![Some(1.0), None, Some(3.0)]),
+        )])
+        .unwrap();
+        let model = StandardScaleEstimator::new("x", "z")
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let j = model.save();
+        // mean of [1,3] = 2; shift = -2/std, std = sqrt(2)
+        let shift = j.req_array("shift").unwrap()[0].as_f64().unwrap();
+        assert!((shift + 2.0 / 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn save_load() {
+        let df = DataFrame::new(vec![("x".into(), Column::from_f64(vec![1.0, 2.0]))]).unwrap();
+        let model = StandardScaleEstimator::new("x", "z")
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let j = crate::pipeline::with_type(model.save(), model.type_name());
+        let loaded = crate::transformers::load(&j).unwrap();
+        let mut a = df.clone();
+        let mut b = df;
+        model.transform(&mut a).unwrap();
+        loaded.transform(&mut b).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,564 @@
+//! String indexing estimators (Listing 1's `StringIndexEstimator` and the
+//! shared-vocabulary variant).
+//!
+//! Index layout (identical in the engine, the interpreter and the
+//! compiled graph — the python side receives it via vocab-hash constants):
+//!
+//! ```text
+//! 0                      mask token (only when maskToken is set)
+//! base .. base+numOOV-1  OOV buckets (hash-distributed)
+//! base+numOOV + rank     vocabulary labels, rank per stringOrderType
+//! ```
+//! with `base = 1` if a mask token is configured, else `0`.
+
+use std::collections::HashMap;
+
+use crate::dataframe::{Column, DataFrame, DType, ListColumn};
+use crate::engine::{tree_aggregate, Accumulator, Dataset};
+use crate::error::{KamaeError, Result};
+use crate::export::{SpecBuilder, SpecDType};
+use crate::ops::hash;
+use crate::pipeline::{Estimator, Transformer};
+use crate::util::json::Json;
+
+/// Vocabulary ordering (Kamae `stringOrderType`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StringOrder {
+    FrequencyDesc,
+    FrequencyAsc,
+    AlphabeticalAsc,
+    AlphabeticalDesc,
+}
+
+impl StringOrder {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StringOrder::FrequencyDesc => "frequencyDesc",
+            StringOrder::FrequencyAsc => "frequencyAsc",
+            StringOrder::AlphabeticalAsc => "alphabeticalAsc",
+            StringOrder::AlphabeticalDesc => "alphabeticalDesc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<StringOrder> {
+        Ok(match s {
+            "frequencyDesc" => StringOrder::FrequencyDesc,
+            "frequencyAsc" => StringOrder::FrequencyAsc,
+            "alphabeticalAsc" => StringOrder::AlphabeticalAsc,
+            "alphabeticalDesc" => StringOrder::AlphabeticalDesc,
+            other => {
+                return Err(KamaeError::InvalidConfig(format!("unknown stringOrderType: {other}")))
+            }
+        })
+    }
+}
+
+/// Unfitted string indexer. `fit` builds the vocabulary over the input
+/// column(s) with a distributed count aggregation.
+#[derive(Debug, Clone)]
+pub struct StringIndexEstimator {
+    pub input_cols: Vec<String>,
+    pub output_cols: Vec<String>,
+    pub layer_name: String,
+    pub order: StringOrder,
+    pub num_oov: usize,
+    pub mask_token: Option<String>,
+    /// Cap the vocabulary to the top-N labels (by the configured order).
+    pub max_vocab_size: Option<usize>,
+    /// Cast inputs to string before indexing (`inputDtype="string"`).
+    pub cast_to_string: bool,
+}
+
+impl StringIndexEstimator {
+    pub fn new(input: &str, output: &str) -> Self {
+        StringIndexEstimator {
+            input_cols: vec![input.to_string()],
+            output_cols: vec![output.to_string()],
+            layer_name: format!("{output}_layer"),
+            order: StringOrder::FrequencyDesc,
+            num_oov: 1,
+            mask_token: None,
+            max_vocab_size: None,
+            cast_to_string: false,
+        }
+    }
+
+    /// Shared-vocabulary indexer over multiple columns (Kamae's
+    /// `SharedStringIndexEstimator`).
+    pub fn shared(inputs: &[&str], outputs: &[&str]) -> Self {
+        StringIndexEstimator {
+            input_cols: inputs.iter().map(|s| s.to_string()).collect(),
+            output_cols: outputs.iter().map(|s| s.to_string()).collect(),
+            layer_name: format!("{}_shared_layer", outputs.first().copied().unwrap_or("idx")),
+            order: StringOrder::FrequencyDesc,
+            num_oov: 1,
+            mask_token: None,
+            max_vocab_size: None,
+            cast_to_string: false,
+        }
+    }
+
+    pub fn order(mut self, order: StringOrder) -> Self {
+        self.order = order;
+        self
+    }
+
+    pub fn num_oov(mut self, n: usize) -> Self {
+        self.num_oov = n;
+        self
+    }
+
+    pub fn mask_token(mut self, token: &str) -> Self {
+        self.mask_token = Some(token.to_string());
+        self
+    }
+
+    pub fn max_vocab_size(mut self, n: usize) -> Self {
+        self.max_vocab_size = Some(n);
+        self
+    }
+
+    pub fn layer_name(mut self, name: &str) -> Self {
+        self.layer_name = name.to_string();
+        self
+    }
+
+    pub fn cast_to_string(mut self) -> Self {
+        self.cast_to_string = true;
+        self
+    }
+
+    fn params_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set(
+            "inputCols",
+            Json::Array(self.input_cols.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j.set(
+            "outputCols",
+            Json::Array(self.output_cols.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j.set("layerName", self.layer_name.clone());
+        j.set("stringOrderType", self.order.name());
+        j.set("numOOVIndices", self.num_oov);
+        if let Some(m) = &self.mask_token {
+            j.set("maskToken", m.clone());
+        }
+        if let Some(n) = self.max_vocab_size {
+            j.set("maxVocabSize", n);
+        }
+        j.set("castToString", self.cast_to_string);
+        j
+    }
+}
+
+/// Count accumulator for the fit.
+struct CountAcc {
+    counts: HashMap<String, u64>,
+    inputs: Vec<String>,
+    cast: bool,
+}
+
+impl Accumulator for CountAcc {
+    fn add_partition(&mut self, df: &DataFrame) -> Result<()> {
+        for name in &self.inputs.clone() {
+            let col = df.column(name)?;
+            let col = if self.cast && !matches!(col.dtype(), DType::Str | DType::List(_)) {
+                crate::ops::cast::cast(col, &DType::Str)?
+            } else {
+                col.clone()
+            };
+            match &col {
+                Column::Str(v, nulls) => {
+                    for (i, s) in v.iter().enumerate() {
+                        if nulls.as_ref().map(|n| n[i]).unwrap_or(false) {
+                            continue;
+                        }
+                        *self.counts.entry(s.clone()).or_insert(0) += 1;
+                    }
+                }
+                Column::ListStr(l) => {
+                    for s in &l.values {
+                        *self.counts.entry(s.clone()).or_insert(0) += 1;
+                    }
+                }
+                other => {
+                    return Err(KamaeError::TypeMismatch {
+                        expected: "string".into(),
+                        found: other.dtype().name(),
+                        context: format!("StringIndexEstimator fit on {name}"),
+                    })
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn merge(&mut self, other: Self) -> Result<()> {
+        for (k, v) in other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+        Ok(())
+    }
+}
+
+impl Estimator for StringIndexEstimator {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringIndexEstimator"
+    }
+
+    fn fit(&self, data: &Dataset) -> Result<Box<dyn Transformer>> {
+        if self.input_cols.len() != self.output_cols.len() {
+            return Err(KamaeError::InvalidConfig(
+                "StringIndexEstimator: inputCols/outputCols length mismatch".into(),
+            ));
+        }
+        if self.num_oov == 0 {
+            return Err(KamaeError::InvalidConfig(
+                "StringIndexEstimator: numOOVIndices must be >= 1".into(),
+            ));
+        }
+        let acc = tree_aggregate(data, || CountAcc {
+            counts: HashMap::new(),
+            inputs: self.input_cols.clone(),
+            cast: self.cast_to_string,
+        })?;
+        let mut items: Vec<(String, u64)> = acc
+            .counts
+            .into_iter()
+            .filter(|(s, _)| Some(s) != self.mask_token.as_ref())
+            .collect();
+        match self.order {
+            StringOrder::FrequencyDesc => {
+                items.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)))
+            }
+            StringOrder::FrequencyAsc => {
+                items.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)))
+            }
+            StringOrder::AlphabeticalAsc => items.sort_by(|a, b| a.0.cmp(&b.0)),
+            StringOrder::AlphabeticalDesc => items.sort_by(|a, b| b.0.cmp(&a.0)),
+        }
+        if let Some(n) = self.max_vocab_size {
+            items.truncate(n);
+        }
+        let labels: Vec<String> = items.into_iter().map(|(s, _)| s).collect();
+        Ok(Box::new(StringIndexModel {
+            input_cols: self.input_cols.clone(),
+            output_cols: self.output_cols.clone(),
+            layer_name: self.layer_name.clone(),
+            num_oov: self.num_oov,
+            mask_token: self.mask_token.clone(),
+            cast_to_string: self.cast_to_string,
+            lookup: labels.iter().cloned().zip(0u32..).collect(),
+            labels,
+        }))
+    }
+
+    fn save(&self) -> Json {
+        self.params_json()
+    }
+}
+
+/// Fitted string indexer.
+#[derive(Debug, Clone)]
+pub struct StringIndexModel {
+    pub input_cols: Vec<String>,
+    pub output_cols: Vec<String>,
+    pub layer_name: String,
+    pub num_oov: usize,
+    pub mask_token: Option<String>,
+    pub cast_to_string: bool,
+    pub labels: Vec<String>,
+    lookup: HashMap<String, u32>,
+}
+
+impl StringIndexModel {
+    /// Base offset (1 when a mask token occupies index 0).
+    fn base(&self) -> i64 {
+        i64::from(self.mask_token.is_some())
+    }
+
+    /// Index for one token — THE semantics shared with the compiled graph.
+    pub fn index_of(&self, s: &str) -> i64 {
+        if Some(s) == self.mask_token.as_deref() {
+            return 0;
+        }
+        match self.lookup.get(s) {
+            Some(&rank) => self.base() + self.num_oov as i64 + rank as i64,
+            None => self.base() + hash::bucket(hash::fnv1a64(s), 0, self.num_oov as i64),
+        }
+    }
+
+    /// Total index space size (for embedding tables / one-hot depth).
+    pub fn cardinality(&self) -> usize {
+        self.base() as usize + self.num_oov + self.labels.len()
+    }
+
+    fn index_column(&self, col: &Column) -> Result<Column> {
+        let col = if self.cast_to_string && !matches!(col.dtype(), DType::Str | DType::List(_)) {
+            crate::ops::cast::cast(col, &DType::Str)?
+        } else {
+            col.clone()
+        };
+        match &col {
+            Column::Str(v, nulls) => Ok(Column::I64(
+                v.iter().map(|s| self.index_of(s)).collect(),
+                nulls.clone(),
+            )),
+            Column::ListStr(l) => Ok(Column::ListI64(ListColumn {
+                values: l.values.iter().map(|s| self.index_of(s)).collect(),
+                offsets: l.offsets.clone(),
+            })),
+            other => Err(KamaeError::TypeMismatch {
+                expected: "string".into(),
+                found: other.dtype().name(),
+                context: "StringIndexModel".into(),
+            }),
+        }
+    }
+
+    /// Export constants: (sorted label hashes, rank per sorted hash).
+    /// Verifies hash-injectivity over the vocabulary (collision would be a
+    /// silent semantic change — refuse to export instead).
+    pub fn sorted_hash_ranks(&self) -> Result<(Vec<i64>, Vec<i64>)> {
+        let mut pairs: Vec<(i64, i64)> = self
+            .labels
+            .iter()
+            .enumerate()
+            .map(|(rank, s)| (hash::fnv1a64(s), rank as i64))
+            .collect();
+        pairs.sort();
+        for w in pairs.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(KamaeError::Unsupported(format!(
+                    "vocabulary hash collision between labels ranked {} and {}",
+                    w[0].1, w[1].1
+                )));
+            }
+        }
+        Ok(pairs.into_iter().unzip())
+    }
+}
+
+impl Transformer for StringIndexModel {
+    fn layer_name(&self) -> &str {
+        &self.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringIndexModel"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        for (input, output) in self.input_cols.iter().zip(self.output_cols.iter()) {
+            let col = df.column(input)?.clone();
+            let out = self.index_column(&col)?;
+            df.set_column(output.clone(), out)?;
+        }
+        Ok(())
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let (hashes, ranks) = self.sorted_hash_ranks()?;
+        for (input, output) in self.input_cols.iter().zip(self.output_cols.iter()) {
+            let width = b.width(input)?;
+            let href = crate::transformers::indexing_hash_ref(b, input, width)?;
+            let mut attrs = Json::object();
+            attrs.set("vocab_hashes", Json::Array(hashes.iter().map(|&h| Json::Int(h)).collect()));
+            attrs.set("vocab_ranks", Json::Array(ranks.iter().map(|&r| Json::Int(r)).collect()));
+            attrs.set("num_oov", self.num_oov);
+            attrs.set("base", self.base());
+            match &self.mask_token {
+                Some(m) => attrs.set("mask_hash", hash::fnv1a64(m)),
+                None => attrs.set("mask_hash", Json::Null),
+            };
+            b.graph_node("vocab_lookup", &[&href], attrs, output, SpecDType::I64, width)?;
+        }
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set(
+            "inputCols",
+            Json::Array(self.input_cols.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j.set(
+            "outputCols",
+            Json::Array(self.output_cols.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j.set("layerName", self.layer_name.clone());
+        j.set("numOOVIndices", self.num_oov);
+        if let Some(m) = &self.mask_token {
+            j.set("maskToken", m.clone());
+        }
+        j.set("castToString", self.cast_to_string);
+        j.set(
+            "labels",
+            Json::Array(self.labels.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j
+    }
+}
+
+pub(crate) fn model_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let strings = |key: &str| -> Result<Vec<String>> {
+        j.req_array(key)?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| KamaeError::Serde(format!("{key} entry")))
+            })
+            .collect()
+    };
+    let labels = strings("labels")?;
+    Ok(Box::new(StringIndexModel {
+        input_cols: strings("inputCols")?,
+        output_cols: strings("outputCols")?,
+        layer_name: j.req_str("layerName")?.to_string(),
+        num_oov: j.req_i64("numOOVIndices")? as usize,
+        mask_token: j.opt_str("maskToken").map(str::to_string),
+        cast_to_string: j.opt_bool("castToString").unwrap_or(false),
+        lookup: labels.iter().cloned().zip(0u32..).collect(),
+        labels,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data() -> Dataset {
+        let df = DataFrame::new(vec![(
+            "genre".into(),
+            Column::from_str(vec!["Drama", "Comedy", "Drama", "Action", "Drama", "Comedy"]),
+        )])
+        .unwrap();
+        Dataset::from_dataframe(df, 3)
+    }
+
+    #[test]
+    fn frequency_desc_layout() {
+        let model = StringIndexEstimator::new("genre", "g")
+            .num_oov(1)
+            .fit(&data())
+            .unwrap();
+        let mut df = data().collect().unwrap();
+        model.transform(&mut df).unwrap();
+        let idx = df.column("g").unwrap().as_i64().unwrap();
+        // Drama(3) -> rank0 -> 1+0=1; Comedy(2) -> 2; Action(1) -> 3; oov bucket = 0
+        assert_eq!(idx, &[1, 2, 1, 3, 1, 2]);
+    }
+
+    #[test]
+    fn mask_and_oov() {
+        let train = DataFrame::new(vec![(
+            "g".into(),
+            Column::from_str(vec!["a", "b", "PAD"]),
+        )])
+        .unwrap();
+        let est = StringIndexEstimator::new("g", "gi").mask_token("PAD").num_oov(2);
+        let model = est.fit(&Dataset::from_dataframe(train, 1)).unwrap();
+        // transform data containing a token NOT seen at fit time
+        let mut out = DataFrame::new(vec![(
+            "g".into(),
+            Column::from_str(vec!["a", "b", "PAD", "zzz_unseen"]),
+        )])
+        .unwrap();
+        model.transform(&mut out).unwrap();
+        let idx = out.column("gi").unwrap().as_i64().unwrap();
+        assert_eq!(idx[2], 0); // mask -> 0
+        // a/b have count 1 each -> alpha tiebreak: a rank0 -> 1+2+0=3, b -> 4
+        assert_eq!(idx[0], 3);
+        assert_eq!(idx[1], 4);
+        // unseen -> oov bucket in [1, 2]
+        assert!((1..=2).contains(&idx[3]));
+    }
+
+    #[test]
+    fn list_column_indexing() {
+        // Listing 1: string indexing applied element-wise to genre lists
+        let df = DataFrame::new(vec![(
+            "genres".into(),
+            Column::from_str_rows(vec![
+                vec!["Action", "Comedy", "PAD"],
+                vec!["Comedy", "PAD", "PAD"],
+            ]),
+        )])
+        .unwrap();
+        let model = StringIndexEstimator::new("genres", "gi")
+            .mask_token("PAD")
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        let l = out.column("gi").unwrap().as_list_i64().unwrap();
+        // Comedy(2) rank0 -> 2, Action(1) rank1 -> 3, PAD -> 0
+        assert_eq!(l.row(0), &[3, 2, 0]);
+        assert_eq!(l.row(1), &[2, 0, 0]);
+    }
+
+    #[test]
+    fn shared_vocab() {
+        let df = DataFrame::new(vec![
+            ("a".into(), Column::from_str(vec!["x", "y"])),
+            ("b".into(), Column::from_str(vec!["y", "z"])),
+        ])
+        .unwrap();
+        let model = StringIndexEstimator::shared(&["a", "b"], &["ai", "bi"])
+            .order(StringOrder::AlphabeticalAsc)
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        // shared vocab: x,y,z -> 1,2,3 in both columns
+        assert_eq!(out.column("ai").unwrap().as_i64().unwrap(), &[1, 2]);
+        assert_eq!(out.column("bi").unwrap().as_i64().unwrap(), &[2, 3]);
+    }
+
+    #[test]
+    fn orders_and_cap() {
+        let est = StringIndexEstimator::new("genre", "g")
+            .order(StringOrder::FrequencyAsc)
+            .max_vocab_size(2);
+        let model = est.fit(&data()).unwrap();
+        let mut df = data().collect().unwrap();
+        model.transform(&mut df).unwrap();
+        let idx = df.column("g").unwrap().as_i64().unwrap();
+        // freqAsc: Action(1) rank0 -> 1, Comedy(2) rank1 -> 2; Drama cut off -> oov 0
+        assert_eq!(idx[3], 1);
+        assert_eq!(idx[1], 2);
+        assert_eq!(idx[0], 0);
+    }
+
+    #[test]
+    fn model_save_load_roundtrip() {
+        let model = StringIndexEstimator::new("genre", "g").fit(&data()).unwrap();
+        let j = crate::pipeline::with_type(model.save(), model.type_name());
+        let loaded = crate::transformers::load(&j).unwrap();
+        let mut a = data().collect().unwrap();
+        let mut b = a.clone();
+        model.transform(&mut a).unwrap();
+        loaded.transform(&mut b).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn numeric_input_with_cast() {
+        let df = DataFrame::new(vec![("id".into(), Column::from_i64(vec![7, 8, 7]))]).unwrap();
+        let model = StringIndexEstimator::new("id", "idx")
+            .cast_to_string()
+            .fit(&Dataset::from_dataframe(df.clone(), 1))
+            .unwrap();
+        let mut out = df;
+        model.transform(&mut out).unwrap();
+        let idx = out.column("idx").unwrap().as_i64().unwrap();
+        assert_eq!(idx[0], idx[2]);
+        assert_ne!(idx[0], idx[1]);
+    }
+}

@@ -1,0 +1,360 @@
+//! SpecBuilder — assembles a [`GraphSpec`] while a fitted pipeline walks
+//! its stages.
+//!
+//! The builder owns the ingress/graph split: transformers just declare
+//! "this op is a string op" (`ingress_node`) or "this op is numeric"
+//! (`graph_node`) and the builder
+//!
+//! * auto-inserts `hash64` ingress nodes when a string column flows into
+//!   the numeric graph (the string→token-hash boundary, DESIGN.md
+//!   §Substitutions),
+//! * registers raw-numeric / ingress-produced columns as positional graph
+//!   inputs exactly once,
+//! * rejects ill-formed flows (string op consuming a graph product,
+//!   ragged lists entering the graph, unknown columns).
+
+use std::collections::HashMap;
+
+use crate::dataframe::DType;
+use crate::error::{KamaeError, Result};
+use crate::util::json::Json;
+
+use super::spec::{GraphSpec, SpecDType, SpecInput, SpecNode};
+
+/// Where a column lives during spec construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Side {
+    /// Raw request feature (numeric or string).
+    Raw,
+    /// Produced by an ingress node.
+    Ingress,
+    /// Produced by a compiled-graph node.
+    Graph,
+}
+
+#[derive(Debug, Clone)]
+struct ColMeta {
+    side: Side,
+    /// Engine-level dtype (strings distinguishable from numerics).
+    engine_dtype: DType,
+    width: Option<usize>,
+}
+
+/// Builder for [`GraphSpec`]. Created by
+/// [`crate::pipeline::PipelineModel::to_graph_spec`].
+pub struct SpecBuilder {
+    name: String,
+    inputs: Vec<SpecInput>,
+    cols: HashMap<String, ColMeta>,
+    ingress: Vec<SpecNode>,
+    nodes: Vec<SpecNode>,
+    graph_inputs: Vec<String>,
+}
+
+impl SpecBuilder {
+    /// Start a spec from the serving input schema.
+    pub fn new(name: &str, inputs: Vec<SpecInput>) -> Result<SpecBuilder> {
+        let mut cols = HashMap::new();
+        for i in &inputs {
+            if matches!(i.dtype, DType::List(_)) && i.width.is_none() {
+                return Err(KamaeError::InvalidConfig(format!(
+                    "list-typed input {} must declare a fixed width",
+                    i.name
+                )));
+            }
+            cols.insert(
+                i.name.clone(),
+                ColMeta { side: Side::Raw, engine_dtype: i.dtype.clone(), width: i.width },
+            );
+        }
+        Ok(SpecBuilder {
+            name: name.to_string(),
+            inputs,
+            cols,
+            ingress: vec![],
+            nodes: vec![],
+            graph_inputs: vec![],
+        })
+    }
+
+    /// Engine dtype of a known column.
+    pub fn engine_dtype(&self, col: &str) -> Result<&DType> {
+        self.cols
+            .get(col)
+            .map(|m| &m.engine_dtype)
+            .ok_or_else(|| KamaeError::ColumnNotFound(format!("{col} (in spec builder)")))
+    }
+
+    /// Width of a known column (None = scalar).
+    pub fn width(&self, col: &str) -> Result<Option<usize>> {
+        self.cols
+            .get(col)
+            .map(|m| m.width)
+            .ok_or_else(|| KamaeError::ColumnNotFound(format!("{col} (in spec builder)")))
+    }
+
+    /// Whether the column is string-typed at the engine level.
+    pub fn is_string(&self, col: &str) -> Result<bool> {
+        let dt = self.engine_dtype(col)?;
+        Ok(matches!(dt, DType::Str)
+            || matches!(dt, DType::List(inner) if matches!(**inner, DType::Str)))
+    }
+
+    /// Add a string-side op. Inputs must not be graph products.
+    pub fn ingress_node(
+        &mut self,
+        op: &str,
+        inputs: &[&str],
+        attrs: Json,
+        out: &str,
+        out_dtype: DType,
+        out_width: Option<usize>,
+    ) -> Result<()> {
+        for &i in inputs {
+            let meta = self
+                .cols
+                .get(i)
+                .ok_or_else(|| KamaeError::ColumnNotFound(format!("{i} (ingress input)")))?;
+            if meta.side == Side::Graph {
+                return Err(KamaeError::Unsupported(format!(
+                    "string op '{op}' consumes graph-computed column {i}; string \
+                     transformations must precede numeric ones in exported pipelines"
+                )));
+            }
+        }
+        self.ingress.push(SpecNode {
+            id: out.to_string(),
+            op: op.to_string(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            attrs,
+            dtype: SpecDType::for_engine(&out_dtype),
+            width: out_width,
+        });
+        self.cols.insert(
+            out.to_string(),
+            ColMeta { side: Side::Ingress, engine_dtype: out_dtype, width: out_width },
+        );
+        Ok(())
+    }
+
+    /// Add a compiled-graph op. String inputs are auto-hashed; numeric
+    /// raw/ingress inputs are registered as graph inputs. Returns the
+    /// resolved graph-side input names in order.
+    pub fn graph_node(
+        &mut self,
+        op: &str,
+        inputs: &[&str],
+        attrs: Json,
+        out: &str,
+        out_dtype: SpecDType,
+        out_width: Option<usize>,
+    ) -> Result<Vec<String>> {
+        let resolved: Vec<String> = inputs
+            .iter()
+            .map(|&i| self.graph_ref(i))
+            .collect::<Result<_>>()?;
+        self.nodes.push(SpecNode {
+            id: out.to_string(),
+            op: op.to_string(),
+            inputs: resolved.clone(),
+            attrs,
+            dtype: out_dtype,
+            width: out_width,
+        });
+        let engine_dtype = match out_dtype {
+            SpecDType::F32 => DType::F64, // engine computes f64
+            SpecDType::I64 => DType::I64,
+        };
+        let engine_dtype = if out_width.is_some() {
+            DType::List(Box::new(engine_dtype))
+        } else {
+            engine_dtype
+        };
+        self.cols.insert(
+            out.to_string(),
+            ColMeta { side: Side::Graph, engine_dtype, width: out_width },
+        );
+        Ok(resolved)
+    }
+
+    /// Resolve a column to its graph-side name, inserting `hash64` ingress
+    /// nodes and registering graph inputs as needed.
+    pub fn graph_ref(&mut self, col: &str) -> Result<String> {
+        let meta = self
+            .cols
+            .get(col)
+            .cloned()
+            .ok_or_else(|| KamaeError::ColumnNotFound(format!("{col} (graph input)")))?;
+        let is_string = matches!(meta.engine_dtype, DType::Str)
+            || matches!(&meta.engine_dtype, DType::List(i) if matches!(**i, DType::Str));
+        match meta.side {
+            Side::Graph => Ok(col.to_string()),
+            Side::Raw | Side::Ingress => {
+                if is_string {
+                    if meta.width.is_none() && matches!(meta.engine_dtype, DType::List(_)) {
+                        return Err(KamaeError::InvalidConfig(format!(
+                            "ragged list column {col} cannot enter the compiled graph; \
+                             pad it to a fixed length first"
+                        )));
+                    }
+                    let hashed = format!("{col}__hash");
+                    if !self.cols.contains_key(&hashed) {
+                        let out_dtype = if matches!(meta.engine_dtype, DType::List(_)) {
+                            DType::List(Box::new(DType::I64))
+                        } else {
+                            DType::I64
+                        };
+                        self.ingress_node(
+                            "hash64",
+                            &[col],
+                            Json::object(),
+                            &hashed,
+                            out_dtype,
+                            meta.width,
+                        )?;
+                    }
+                    self.register_graph_input(&hashed);
+                    Ok(hashed)
+                } else {
+                    if meta.width.is_none() && matches!(meta.engine_dtype, DType::List(_)) {
+                        return Err(KamaeError::InvalidConfig(format!(
+                            "ragged list column {col} cannot enter the compiled graph; \
+                             pad it to a fixed length first"
+                        )));
+                    }
+                    self.register_graph_input(col);
+                    Ok(col.to_string())
+                }
+            }
+        }
+    }
+
+    fn register_graph_input(&mut self, col: &str) {
+        if !self.graph_inputs.iter().any(|g| g == col) {
+            self.graph_inputs.push(col.to_string());
+        }
+    }
+
+    /// Finalise the spec with the requested output columns. Every output
+    /// must be graph-side (numeric) — string outputs cannot cross the HLO
+    /// boundary and should stay engine-side.
+    pub fn finish(mut self, outputs: &[&str]) -> Result<GraphSpec> {
+        let mut outs = Vec::with_capacity(outputs.len());
+        for &o in outputs {
+            // pass-through outputs (raw numerics / ingress products) get a
+            // graph identity node so the compiled function returns them.
+            let meta = self
+                .cols
+                .get(o)
+                .cloned()
+                .ok_or_else(|| KamaeError::ColumnNotFound(format!("{o} (spec output)")))?;
+            match meta.side {
+                Side::Graph => outs.push(o.to_string()),
+                _ => {
+                    let gref = self.graph_ref(o)?;
+                    let (dtype, width) = (
+                        SpecDType::for_engine(&meta.engine_dtype),
+                        meta.width,
+                    );
+                    let id = format!("{o}__out");
+                    self.nodes.push(SpecNode {
+                        id: id.clone(),
+                        op: "identity".into(),
+                        inputs: vec![gref],
+                        attrs: Json::object(),
+                        dtype,
+                        width,
+                    });
+                    outs.push(id);
+                }
+            }
+        }
+        Ok(GraphSpec {
+            name: self.name,
+            inputs: self.inputs,
+            ingress: self.ingress,
+            graph_inputs: self.graph_inputs,
+            nodes: self.nodes,
+            outputs: outs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> Vec<SpecInput> {
+        vec![
+            SpecInput { name: "city".into(), dtype: DType::Str, width: None },
+            SpecInput { name: "price".into(), dtype: DType::F64, width: None },
+            SpecInput {
+                name: "amenities".into(),
+                dtype: DType::List(Box::new(DType::Str)),
+                width: Some(4),
+            },
+        ]
+    }
+
+    #[test]
+    fn auto_hash_on_string_input() {
+        let mut b = SpecBuilder::new("t", inputs()).unwrap();
+        let mut attrs = Json::object();
+        attrs.set("num_bins", 32i64);
+        b.graph_node("hash_bucket", &["city"], attrs, "city_idx", SpecDType::I64, None)
+            .unwrap();
+        let spec = b.finish(&["city_idx"]).unwrap();
+        assert_eq!(spec.ingress.len(), 1);
+        assert_eq!(spec.ingress[0].op, "hash64");
+        assert_eq!(spec.graph_inputs, vec!["city__hash".to_string()]);
+        assert_eq!(spec.nodes[0].inputs, vec!["city__hash".to_string()]);
+    }
+
+    #[test]
+    fn pass_through_output_gets_identity() {
+        let b = SpecBuilder::new("t", inputs()).unwrap();
+        let spec = b.finish(&["price"]).unwrap();
+        assert_eq!(spec.nodes.len(), 1);
+        assert_eq!(spec.nodes[0].op, "identity");
+        assert_eq!(spec.outputs, vec!["price__out".to_string()]);
+        assert_eq!(spec.graph_inputs, vec!["price".to_string()]);
+    }
+
+    #[test]
+    fn string_op_after_graph_rejected() {
+        let mut b = SpecBuilder::new("t", inputs()).unwrap();
+        b.graph_node("log1p", &["price"], Json::object(), "lp", SpecDType::F32, None)
+            .unwrap();
+        let err = b.ingress_node("upper", &["lp"], Json::object(), "u", DType::Str, None);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn list_string_hashes_with_width() {
+        let mut b = SpecBuilder::new("t", inputs()).unwrap();
+        let mut attrs = Json::object();
+        attrs.set("num_bins", 8i64);
+        b.graph_node("hash_bucket", &["amenities"], attrs, "am_idx", SpecDType::I64, Some(4))
+            .unwrap();
+        let spec = b.finish(&["am_idx"]).unwrap();
+        assert_eq!(spec.ingress[0].width, Some(4));
+        assert_eq!(spec.nodes[0].width, Some(4));
+    }
+
+    #[test]
+    fn dedup_graph_inputs() {
+        let mut b = SpecBuilder::new("t", inputs()).unwrap();
+        b.graph_node("log1p", &["price"], Json::object(), "a", SpecDType::F32, None).unwrap();
+        b.graph_node("exp", &["price"], Json::object(), "b", SpecDType::F32, None).unwrap();
+        let spec = b.finish(&["a", "b"]).unwrap();
+        assert_eq!(spec.graph_inputs, vec!["price".to_string()]);
+    }
+
+    #[test]
+    fn unknown_column_errors() {
+        let mut b = SpecBuilder::new("t", inputs()).unwrap();
+        assert!(b
+            .graph_node("log1p", &["nope"], Json::object(), "x", SpecDType::F32, None)
+            .is_err());
+    }
+}

@@ -1,0 +1,843 @@
+//! GraphSpec interpreter.
+//!
+//! Executes an exported spec directly on DataFrames: the **ingress**
+//! section (string ops) runs through the same `ops::` kernels the engine
+//! uses, and the **graph** section is evaluated op-by-op over flat
+//! buffers with the same semantics the JAX compiler emits.
+//!
+//! Three roles:
+//! 1. the serving **ingress stage** (`run_ingress`) that feeds the
+//!    compiled PJRT graph,
+//! 2. the **interpreted serving baseline** (`run`) — columnar but
+//!    uncompiled, the ablation point between the MLeap-like row
+//!    interpreter and the compiled graph (experiment C3),
+//! 3. the **parity oracle**: `run` output must match the compiled
+//!    graph's output bit-for-bit on I64 and to f32 rounding on floats.
+
+use std::collections::HashMap;
+
+use crate::dataframe::{Column, DataFrame, DType};
+use crate::error::{KamaeError, Result};
+use crate::ops;
+use crate::runtime::{Tensor, TensorData};
+use crate::util::json::Json;
+
+use super::spec::{GraphSpec, SpecDType, SpecNode};
+
+/// Flat graph-side value: rows × width buffer of f64 or i64.
+#[derive(Debug, Clone)]
+enum GVal {
+    F(Vec<f64>, Option<usize>),
+    I(Vec<i64>, Option<usize>),
+}
+
+impl GVal {
+    fn width(&self) -> Option<usize> {
+        match self {
+            GVal::F(_, w) | GVal::I(_, w) => *w,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            GVal::F(v, w) => v.len() / w.unwrap_or(1),
+            GVal::I(v, w) => v.len() / w.unwrap_or(1),
+        }
+    }
+
+    fn as_f(&self) -> Vec<f64> {
+        match self {
+            GVal::F(v, _) => v.clone(),
+            GVal::I(v, _) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    fn as_i(&self) -> Result<Vec<i64>> {
+        match self {
+            GVal::I(v, _) => Ok(v.clone()),
+            GVal::F(v, _) => Ok(v.iter().map(|&x| x as i64).collect()),
+        }
+    }
+
+    fn to_tensor(&self, batch: usize) -> Tensor {
+        let shape = match self.width() {
+            Some(w) => vec![batch, w],
+            None => vec![batch],
+        };
+        match self {
+            // compiled graphs compute in f32 — match that dtype here
+            GVal::F(v, _) => Tensor {
+                data: TensorData::F32(v.iter().map(|&x| x as f32).collect()),
+                shape,
+            },
+            GVal::I(v, _) => Tensor { data: TensorData::I64(v.clone()), shape },
+        }
+    }
+}
+
+/// Interpreter over one [`GraphSpec`].
+pub struct SpecInterpreter {
+    spec: GraphSpec,
+}
+
+impl SpecInterpreter {
+    pub fn new(spec: GraphSpec) -> SpecInterpreter {
+        SpecInterpreter { spec }
+    }
+
+    pub fn spec(&self) -> &GraphSpec {
+        &self.spec
+    }
+
+    /// Run only the ingress section and marshal the graph inputs as
+    /// tensors (the serving front-end for the compiled path).
+    pub fn run_ingress(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        let mut df = df.clone();
+        for node in &self.spec.ingress {
+            apply_ingress(node, &mut df)?;
+        }
+        let batch = df.num_rows();
+        self.spec
+            .graph_inputs
+            .iter()
+            .map(|name| {
+                let gv = column_to_gval(df.column(name)?)?;
+                // graph inputs declared F32 must arrive as f32 tensors,
+                // I64 as i64 — resolve via spec meta
+                let (dtype, _) = self.spec.graph_input_meta(name).ok_or_else(|| {
+                    KamaeError::Serde(format!("graph input {name} missing meta"))
+                })?;
+                Ok(match (dtype, gv) {
+                    (SpecDType::F32, gv) => gv_to_f32_tensor(gv, batch),
+                    (SpecDType::I64, gv) => {
+                        let w = gv.width();
+                        let data = gv.as_i()?;
+                        Tensor {
+                            data: TensorData::I64(data),
+                            shape: match w {
+                                Some(w) => vec![batch, w],
+                                None => vec![batch],
+                            },
+                        }
+                    }
+                })
+            })
+            .collect()
+    }
+
+    /// Full interpretation: ingress + graph sections. Output order and
+    /// dtypes match the compiled artifact exactly.
+    pub fn run(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        let mut df = df.clone();
+        for node in &self.spec.ingress {
+            apply_ingress(node, &mut df)?;
+        }
+        let batch = df.num_rows();
+        let mut env: HashMap<String, GVal> = HashMap::new();
+        for name in &self.spec.graph_inputs {
+            env.insert(name.clone(), column_to_gval(df.column(name)?)?);
+        }
+        for node in &self.spec.nodes {
+            let val = eval_node(node, &env)?;
+            env.insert(node.id.clone(), val);
+        }
+        self.spec
+            .outputs
+            .iter()
+            .map(|o| {
+                env.get(o)
+                    .map(|g| g.to_tensor(batch))
+                    .ok_or_else(|| KamaeError::ColumnNotFound(format!("{o} (spec output)")))
+            })
+            .collect()
+    }
+}
+
+fn gv_to_f32_tensor(gv: GVal, batch: usize) -> Tensor {
+    let w = gv.width();
+    let data: Vec<f32> = gv.as_f().iter().map(|&x| x as f32).collect();
+    Tensor {
+        data: TensorData::F32(data),
+        shape: match w {
+            Some(w) => vec![batch, w],
+            None => vec![batch],
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ingress section — DataFrame column ops
+
+fn apply_ingress(node: &SpecNode, df: &mut DataFrame) -> Result<()> {
+    let a = node.attrs.clone();
+    let input = |i: usize| -> Result<&Column> { df.column(&node.inputs[i]) };
+    let out: Column = match node.op.as_str() {
+        "hash64" => ops::hash::hash64_column(input(0)?)?,
+        "case" => {
+            let mode = match a.req_str("mode")? {
+                "upper" => ops::string_ops::CaseMode::Upper,
+                "lower" => ops::string_ops::CaseMode::Lower,
+                _ => ops::string_ops::CaseMode::Title,
+            };
+            ops::string_ops::change_case(input(0)?, mode)?
+        }
+        "trim" => ops::string_ops::trim(input(0)?)?,
+        "substring" => ops::string_ops::substring(
+            input(0)?,
+            a.req_i64("start")? as usize,
+            a.req_i64("len")? as usize,
+        )?,
+        "replace" => ops::string_ops::replace_literal(input(0)?, a.req_str("from")?, a.req_str("to")?)?,
+        "regex_replace" => {
+            let re = ops::regex::Regex::new(a.req_str("pattern")?)?;
+            ops::regex::regex_replace(input(0)?, &re, a.req_str("rep")?)?
+        }
+        "regex_extract" => {
+            let re = ops::regex::Regex::new(a.req_str("pattern")?)?;
+            ops::regex::regex_extract(input(0)?, &re, a.req_i64("group")? as usize)?
+        }
+        "concat" => {
+            let cols: Vec<&Column> = node
+                .inputs
+                .iter()
+                .map(|n| df.column(n))
+                .collect::<Result<_>>()?;
+            ops::string_ops::concat_cols(&cols, a.req_str("separator")?)?
+        }
+        "split_pad" => {
+            let split = ops::string_ops::split(input(0)?, a.req_str("separator")?)?;
+            ops::string_ops::pad_list(&split, a.req_i64("list_length")? as usize, a.req_str("default")?)?
+        }
+        "join" => {
+            let l = input(0)?.as_list_str()?;
+            let sep = a.req_str("separator")?;
+            Column::from_str(l.rows().map(|r| r.join(sep)).collect::<Vec<String>>())
+        }
+        "string_match" => {
+            let mode = match a.req_str("mode")? {
+                "starts_with" => ops::string_ops::MatchMode::StartsWith,
+                "ends_with" => ops::string_ops::MatchMode::EndsWith,
+                _ => ops::string_ops::MatchMode::Contains,
+            };
+            ops::string_ops::string_match(input(0)?, a.req_str("needle")?, mode)?
+        }
+        "str_len" => ops::string_ops::str_len(input(0)?)?,
+        "date_to_days" => ops::date::date_to_days(input(0)?)?,
+        "timestamp_to_seconds" => ops::date::timestamp_to_seconds(input(0)?)?,
+        "element_at" => ops::array::element_at(input(0)?, a.req_i64("index")?)?,
+        "slice_list" => ops::array::slice_list(
+            input(0)?,
+            a.req_i64("start")? as usize,
+            a.req_i64("len")? as usize,
+        )?,
+        "pad_list" => ops::string_ops::pad_list(
+            input(0)?,
+            a.req_i64("len")? as usize,
+            a.req_str("default")?,
+        )?,
+        "to_string" => ops::cast::cast(input(0)?, &DType::Str)?,
+        "parse_number" => ops::cast::cast(input(0)?, &DType::F64)?,
+        other => {
+            return Err(KamaeError::Unsupported(format!("ingress op: {other}")))
+        }
+    };
+    df.set_column(node.id.clone(), out)
+}
+
+// ---------------------------------------------------------------------------
+// graph section — flat-buffer ops (the semantics model.py compiles)
+
+fn column_to_gval(col: &Column) -> Result<GVal> {
+    Ok(match col {
+        Column::Bool(v, _) => GVal::I(v.iter().map(|&b| b as i64).collect(), None),
+        Column::I32(v, _) => GVal::I(v.iter().map(|&x| x as i64).collect(), None),
+        Column::I64(v, _) => GVal::I(v.clone(), None),
+        Column::F32(v, _) => GVal::F(v.iter().map(|&x| x as f64).collect(), None),
+        Column::F64(v, _) => GVal::F(v.clone(), None),
+        Column::ListBool(l) => {
+            let w = fixed_width(&l.offsets, "bool list")?;
+            GVal::I(l.values.iter().map(|&b| b as i64).collect(), Some(w))
+        }
+        Column::ListI32(l) => {
+            let w = fixed_width(&l.offsets, "int32 list")?;
+            GVal::I(l.values.iter().map(|&x| x as i64).collect(), Some(w))
+        }
+        Column::ListI64(l) => {
+            let w = fixed_width(&l.offsets, "int64 list")?;
+            GVal::I(l.values.clone(), Some(w))
+        }
+        Column::ListF32(l) => {
+            let w = fixed_width(&l.offsets, "float32 list")?;
+            GVal::F(l.values.iter().map(|&x| x as f64).collect(), Some(w))
+        }
+        Column::ListF64(l) => {
+            let w = fixed_width(&l.offsets, "float64 list")?;
+            GVal::F(l.values.clone(), Some(w))
+        }
+        Column::Str(..) | Column::ListStr(_) => {
+            return Err(KamaeError::Unsupported(
+                "string column crossing into graph section (missing hash64?)".into(),
+            ))
+        }
+    })
+}
+
+fn fixed_width(offsets: &[u32], what: &str) -> Result<usize> {
+    if offsets.len() < 2 {
+        return Ok(0);
+    }
+    let w = (offsets[1] - offsets[0]) as usize;
+    for win in offsets.windows(2) {
+        if (win[1] - win[0]) as usize != w {
+            return Err(KamaeError::InvalidConfig(format!(
+                "ragged {what} cannot enter the graph section"
+            )));
+        }
+    }
+    Ok(w)
+}
+
+fn attr_f64_array(a: &Json, key: &str) -> Result<Vec<f64>> {
+    a.req_array(key)?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| KamaeError::Serde(format!("{key} entry"))))
+        .collect()
+}
+
+fn attr_i64_array(a: &Json, key: &str) -> Result<Vec<i64>> {
+    a.req_array(key)?
+        .iter()
+        .map(|v| v.as_i64().ok_or_else(|| KamaeError::Serde(format!("{key} entry"))))
+        .collect()
+}
+
+fn eval_node(node: &SpecNode, env: &HashMap<String, GVal>) -> Result<GVal> {
+    use ops::math::UnaryOp;
+    let a = &node.attrs;
+    let arg = |i: usize| -> Result<&GVal> {
+        env.get(&node.inputs[i]).ok_or_else(|| {
+            KamaeError::ColumnNotFound(format!("{} (graph value)", node.inputs[i]))
+        })
+    };
+
+    // unary float ops share a table
+    let unary_op: Option<UnaryOp> = match node.op.as_str() {
+        "log" => Some(match a.opt_f64("base") {
+            Some(b) => UnaryOp::Log { base: Some(b) },
+            None => UnaryOp::Log { base: None },
+        }),
+        "log1p" => Some(UnaryOp::Log1p),
+        "exp" => Some(UnaryOp::Exp),
+        "sqrt" => Some(UnaryOp::Sqrt),
+        "abs" => Some(UnaryOp::Abs),
+        "neg" => Some(UnaryOp::Neg),
+        "reciprocal" => Some(UnaryOp::Reciprocal),
+        "round" => Some(UnaryOp::Round),
+        "floor" => Some(UnaryOp::Floor),
+        "ceil" => Some(UnaryOp::Ceil),
+        "sin" => Some(UnaryOp::Sin),
+        "cos" => Some(UnaryOp::Cos),
+        "tanh" => Some(UnaryOp::Tanh),
+        "sigmoid" => Some(UnaryOp::Sigmoid),
+        "clip" => Some(UnaryOp::Clip { min: a.opt_f64("min"), max: a.opt_f64("max") }),
+        "pow_scalar" => Some(UnaryOp::PowScalar { p: a.req_f64("p")? }),
+        "add_scalar" => Some(UnaryOp::AddScalar { c: a.req_f64("c")? }),
+        "sub_scalar" => Some(UnaryOp::SubScalar { c: a.req_f64("c")? }),
+        "mul_scalar" => Some(UnaryOp::MulScalar { c: a.req_f64("c")? }),
+        "div_scalar" => Some(UnaryOp::DivScalar { c: a.req_f64("c")? }),
+        "scale_shift" => Some(UnaryOp::ScaleShift {
+            scale: a.req_f64("scale")?,
+            shift: a.req_f64("shift")?,
+        }),
+        _ => None,
+    };
+    if let Some(op) = unary_op {
+        let x = arg(0)?;
+        // match compiled-graph f32 intermediate rounding
+        let data = x
+            .as_f()
+            .iter()
+            .map(|&v| op.apply(v as f32 as f64) as f32 as f64)
+            .collect();
+        return Ok(GVal::F(data, x.width()));
+    }
+
+    // binary float ops
+    if let Ok(op) = ops::math::BinOp::from_name(&node.op) {
+        let (x, y) = (arg(0)?, arg(1)?);
+        let (xv, yv) = (x.as_f(), y.as_f());
+        let w = x.width().or(y.width());
+        let data: Vec<f64> = match (x.width(), y.width()) {
+            (Some(wx), None) => xv
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| op.apply(p as f32 as f64, yv[i / wx] as f32 as f64) as f32 as f64)
+                .collect(),
+            (None, Some(wy)) => yv
+                .iter()
+                .enumerate()
+                .map(|(i, &q)| op.apply(xv[i / wy] as f32 as f64, q as f32 as f64) as f32 as f64)
+                .collect(),
+            _ => {
+                if xv.len() != yv.len() {
+                    return Err(KamaeError::LengthMismatch {
+                        left: xv.len(),
+                        right: yv.len(),
+                        context: format!("graph op {}", node.op),
+                    });
+                }
+                xv.iter()
+                    .zip(yv.iter())
+                    .map(|(&p, &q)| op.apply(p as f32 as f64, q as f32 as f64) as f32 as f64)
+                    .collect()
+            }
+        };
+        return Ok(GVal::F(data, w));
+    }
+
+    Ok(match node.op.as_str() {
+        "identity" => arg(0)?.clone(),
+        "to_f32" => GVal::F(arg(0)?.as_f(), arg(0)?.width()),
+        "to_i64" => GVal::I(arg(0)?.as_i()?, arg(0)?.width()),
+        "bucketize" => {
+            let splits = attr_f64_array(a, "splits")?;
+            let x = arg(0)?;
+            GVal::I(
+                x.as_f()
+                    .iter()
+                    .map(|&v| splits.partition_point(|&s| s <= v) as i64)
+                    .collect(),
+                x.width(),
+            )
+        }
+        "columns_agg" => {
+            let n = node.inputs.len() as f64;
+            let agg = a.req_str("agg")?;
+            let cols: Vec<Vec<f64>> = (0..node.inputs.len())
+                .map(|i| Ok(arg(i)?.as_f()))
+                .collect::<Result<_>>()?;
+            let rows = cols[0].len();
+            let data = (0..rows)
+                .map(|r| {
+                    let mut acc = cols[0][r];
+                    for c in cols.iter().skip(1) {
+                        acc = match agg {
+                            "min" => acc.min(c[r]),
+                            "max" => acc.max(c[r]),
+                            _ => acc + c[r],
+                        };
+                    }
+                    if agg == "mean" {
+                        acc / n
+                    } else {
+                        acc
+                    }
+                })
+                .collect();
+            GVal::F(data, None)
+        }
+        "date_part" => {
+            let part = ops::date::DatePart::from_name(a.req_str("part")?)?;
+            let x = arg(0)?.as_i()?;
+            GVal::I(x.iter().map(|&d| part.extract(d)).collect(), arg(0)?.width())
+        }
+        "sub_i64" => {
+            let (x, y) = (arg(0)?.as_i()?, arg(1)?.as_i()?);
+            GVal::I(x.iter().zip(y.iter()).map(|(&p, &q)| p - q).collect(), arg(0)?.width())
+        }
+        "add_scalar_i64" => {
+            let c = a.req_i64("c")?;
+            GVal::I(arg(0)?.as_i()?.iter().map(|&x| x + c).collect(), arg(0)?.width())
+        }
+        "floordiv_scalar_i64" => {
+            let c = a.req_i64("c")?;
+            GVal::I(
+                arg(0)?.as_i()?.iter().map(|&x| x.div_euclid(c)).collect(),
+                arg(0)?.width(),
+            )
+        }
+        "compare" => {
+            let op = ops::logical::CmpOp::from_name(a.req_str("op")?)?;
+            let (x, y) = (arg(0)?.as_f(), arg(1)?.as_f());
+            GVal::I(
+                x.iter()
+                    .zip(y.iter())
+                    .map(|(&p, &q)| op.apply_f64(p as f32 as f64, q as f32 as f64) as i64)
+                    .collect(),
+                arg(0)?.width(),
+            )
+        }
+        "compare_scalar" => {
+            let op = ops::logical::CmpOp::from_name(a.req_str("op")?)?;
+            let c = a.req_f64("value")?;
+            GVal::I(
+                arg(0)?
+                    .as_f()
+                    .iter()
+                    .map(|&p| op.apply_f64(p as f32 as f64, c as f32 as f64) as i64)
+                    .collect(),
+                arg(0)?.width(),
+            )
+        }
+        "eq_hash" => {
+            let h = a.req_i64("value_hash")?;
+            GVal::I(
+                arg(0)?.as_i()?.iter().map(|&x| (x == h) as i64).collect(),
+                arg(0)?.width(),
+            )
+        }
+        "bool_op" => {
+            let op = a.req_str("op")?;
+            let (x, y) = (arg(0)?.as_i()?, arg(1)?.as_i()?);
+            GVal::I(
+                x.iter()
+                    .zip(y.iter())
+                    .map(|(&p, &q)| {
+                        let (p, q) = (p != 0, q != 0);
+                        (match op {
+                            "and" => p && q,
+                            "or" => p || q,
+                            _ => p ^ q,
+                        }) as i64
+                    })
+                    .collect(),
+                arg(0)?.width(),
+            )
+        }
+        "not" => GVal::I(
+            arg(0)?.as_i()?.iter().map(|&x| (x == 0) as i64).collect(),
+            arg(0)?.width(),
+        ),
+        "select" => {
+            let c = arg(0)?.as_i()?;
+            let (x, y) = (arg(1)?.as_f(), arg(2)?.as_f());
+            GVal::F(
+                c.iter()
+                    .enumerate()
+                    .map(|(i, &k)| if k != 0 { x[i] } else { y[i] })
+                    .collect(),
+                arg(1)?.width(),
+            )
+        }
+        "is_nan" => GVal::I(
+            arg(0)?.as_f().iter().map(|&x| x.is_nan() as i64).collect(),
+            arg(0)?.width(),
+        ),
+        "assemble" => {
+            let cols: Vec<Vec<f64>> = (0..node.inputs.len())
+                .map(|i| Ok(arg(i)?.as_f()))
+                .collect::<Result<_>>()?;
+            let rows = cols[0].len();
+            let w = cols.len();
+            let mut data = Vec::with_capacity(rows * w);
+            for r in 0..rows {
+                for c in &cols {
+                    data.push(c[r]);
+                }
+            }
+            GVal::F(data, Some(w))
+        }
+        "vector_at" => {
+            let idx = a.req_i64("index")? as usize;
+            let x = arg(0)?;
+            let w = x.width().ok_or_else(|| {
+                KamaeError::InvalidConfig("vector_at on scalar".into())
+            })?;
+            GVal::F(x.as_f().chunks(w).map(|row| row[idx]).collect(), None)
+        }
+        "list_sum" | "list_mean" | "list_min" | "list_max" => {
+            let x = arg(0)?;
+            let w = x
+                .width()
+                .ok_or_else(|| KamaeError::InvalidConfig("list agg on scalar".into()))?;
+            let data = x
+                .as_f()
+                .chunks(w)
+                .map(|row| match node.op.as_str() {
+                    "list_sum" => row.iter().sum(),
+                    "list_mean" => row.iter().sum::<f64>() / w as f64,
+                    "list_min" => row.iter().copied().fold(f64::INFINITY, f64::min),
+                    _ => row.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+                })
+                .collect();
+            GVal::F(data, None)
+        }
+        "list_len" => {
+            let x = arg(0)?;
+            let w = x.width().unwrap_or(1) as i64;
+            GVal::I(vec![w; x.len()], None)
+        }
+        "element_at" => {
+            let x = arg(0)?;
+            let w = x
+                .width()
+                .ok_or_else(|| KamaeError::InvalidConfig("element_at on scalar".into()))?;
+            let idx = a.req_i64("index")?;
+            let j = if idx < 0 { w as i64 + idx } else { idx } as usize;
+            match x {
+                GVal::F(v, _) => GVal::F(v.chunks(w).map(|row| row[j]).collect(), None),
+                GVal::I(v, _) => GVal::I(v.chunks(w).map(|row| row[j]).collect(), None),
+            }
+        }
+        "slice_list" => {
+            let x = arg(0)?;
+            let w = x
+                .width()
+                .ok_or_else(|| KamaeError::InvalidConfig("slice_list on scalar".into()))?;
+            let start = a.req_i64("start")? as usize;
+            let len = a.req_i64("len")? as usize;
+            let s = start.min(w);
+            let e = (start + len).min(w);
+            match x {
+                GVal::F(v, _) => GVal::F(
+                    v.chunks(w).flat_map(|row| row[s..e].to_vec()).collect(),
+                    Some(e - s),
+                ),
+                GVal::I(v, _) => GVal::I(
+                    v.chunks(w).flat_map(|row| row[s..e].to_vec()).collect(),
+                    Some(e - s),
+                ),
+            }
+        }
+        "hash_bucket" => {
+            let bins = a.req_i64("num_bins")?;
+            let x = arg(0)?;
+            GVal::I(
+                x.as_i()?.iter().map(|&h| ops::hash::bucket(h, 0, bins)).collect(),
+                x.width(),
+            )
+        }
+        "bloom_encode" => {
+            let k = a.req_i64("num_hashes")? as usize;
+            let bins = a.req_i64("num_bins")?;
+            let x = arg(0)?.as_i()?;
+            let mut data = Vec::with_capacity(x.len() * k);
+            for &h in &x {
+                for j in 0..k {
+                    data.push(j as i64 * bins + ops::hash::bucket(h, j, bins));
+                }
+            }
+            GVal::I(data, Some(k))
+        }
+        "vocab_lookup" => {
+            let hashes = attr_i64_array(a, "vocab_hashes")?;
+            let ranks = attr_i64_array(a, "vocab_ranks")?;
+            let num_oov = a.req_i64("num_oov")?;
+            let base = a.req_i64("base")?;
+            let mask_hash = a.opt_i64("mask_hash");
+            let x = arg(0)?;
+            let data = x
+                .as_i()?
+                .iter()
+                .map(|&h| {
+                    if Some(h) == mask_hash {
+                        return 0;
+                    }
+                    match hashes.binary_search(&h) {
+                        Ok(i) => base + num_oov + ranks[i],
+                        Err(_) => base + ops::hash::bucket(h, 0, num_oov),
+                    }
+                })
+                .collect();
+            GVal::I(data, x.width())
+        }
+        "one_hot" => {
+            let hashes = attr_i64_array(a, "vocab_hashes")?;
+            let ranks = attr_i64_array(a, "vocab_ranks")?;
+            let num_oov = a.req_i64("num_oov")? as usize;
+            let drop_unseen = a.opt_bool("drop_unseen").unwrap_or(false);
+            let depth = if drop_unseen {
+                hashes.len()
+            } else {
+                num_oov + hashes.len()
+            };
+            let x = arg(0)?.as_i()?;
+            let mut data = vec![0.0f64; x.len() * depth];
+            for (i, &h) in x.iter().enumerate() {
+                let hot = match hashes.binary_search(&h) {
+                    Ok(j) => Some(if drop_unseen {
+                        ranks[j] as usize
+                    } else {
+                        num_oov + ranks[j] as usize
+                    }),
+                    Err(_) => {
+                        if drop_unseen {
+                            None
+                        } else {
+                            Some(ops::hash::bucket(h, 0, num_oov as i64) as usize)
+                        }
+                    }
+                };
+                if let Some(hpos) = hot {
+                    data[i * depth + hpos] = 1.0;
+                }
+            }
+            GVal::F(data, Some(depth))
+        }
+        "scale_vec" => {
+            let scale = attr_f64_array(a, "scale")?;
+            let shift = attr_f64_array(a, "shift")?;
+            let x = arg(0)?;
+            let w = x.width().unwrap_or(1);
+            if scale.len() != w {
+                return Err(KamaeError::LengthMismatch {
+                    left: scale.len(),
+                    right: w,
+                    context: "scale_vec width".into(),
+                });
+            }
+            let data = x
+                .as_f()
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    ((v as f32) * (scale[i % w] as f32) + (shift[i % w] as f32)) as f64
+                })
+                .collect();
+            GVal::F(data, x.width())
+        }
+        "impute" => {
+            let fill = a.req_f64("fill")?;
+            let mask = a.opt_f64("mask_value");
+            let x = arg(0)?;
+            let data = x
+                .as_f()
+                .iter()
+                .map(|&v| {
+                    if v.is_nan() || Some(v) == mask {
+                        fill as f32 as f64
+                    } else {
+                        v as f32 as f64
+                    }
+                })
+                .collect();
+            GVal::F(data, x.width())
+        }
+        "cosine_similarity" => {
+            let (x, y) = (arg(0)?, arg(1)?);
+            let w = x
+                .width()
+                .ok_or_else(|| KamaeError::InvalidConfig("cosine on scalar".into()))?;
+            let (xv, yv) = (x.as_f(), y.as_f());
+            let data = xv
+                .chunks(w)
+                .zip(yv.chunks(w))
+                .map(|(a, b)| {
+                    let dot: f64 = a.iter().zip(b.iter()).map(|(p, q)| (*p as f32 * *q as f32) as f64).sum();
+                    let nx = a.iter().map(|p| (*p as f32 * *p as f32) as f64).sum::<f64>().sqrt();
+                    let ny = b.iter().map(|q| (*q as f32 * *q as f32) as f64).sum::<f64>().sqrt();
+                    if nx == 0.0 || ny == 0.0 {
+                        0.0
+                    } else {
+                        (dot / (nx * ny)) as f32 as f64
+                    }
+                })
+                .collect();
+            GVal::F(data, None)
+        }
+        "haversine" => {
+            let (la1, lo1, la2, lo2) = (arg(0)?.as_f(), arg(1)?.as_f(), arg(2)?.as_f(), arg(3)?.as_f());
+            let data = (0..la1.len())
+                .map(|i| {
+                    ops::geo::haversine_km(
+                        la1[i] as f32 as f64,
+                        lo1[i] as f32 as f64,
+                        la2[i] as f32 as f64,
+                        lo2[i] as f32 as f64,
+                    ) as f32 as f64
+                })
+                .collect();
+            GVal::F(data, None)
+        }
+        other => return Err(KamaeError::Unsupported(format!("graph op: {other}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+    use crate::engine::Dataset;
+    use crate::export::SpecInput;
+    use crate::pipeline::{Pipeline, Stage};
+    use crate::transformers::*;
+
+    fn spec_roundtrip(spec: &GraphSpec) -> GraphSpec {
+        GraphSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn end_to_end_interp_matches_engine() {
+        // build a small mixed pipeline, fit, export, and check the
+        // interpreter agrees with the engine's own transform
+        let df = DataFrame::new(vec![
+            ("price".into(), Column::from_f64(vec![10.0, 100.0, 1000.0])),
+            ("city".into(), Column::from_str(vec!["NYC", "LON", "NYC"])),
+            ("genres".into(), Column::from_str(vec!["a|b", "b", "c|a|b"])),
+        ])
+        .unwrap();
+        let pipeline = Pipeline::new(vec![
+            Stage::transformer(LogTransformer::new("price", "price_log")),
+            Stage::transformer(HashIndexTransformer::new("city", "city_idx", 64)),
+            Stage::transformer(StringToStringListTransformer::new("genres", "gl", "|", 3, "PAD")),
+            Stage::estimator(crate::estimators::StringIndexEstimator::new("gl", "gl_idx").mask_token("PAD")),
+            Stage::estimator(crate::estimators::StandardScaleEstimator::new("price_log", "price_z")),
+        ]);
+        let ds = Dataset::from_dataframe(df.clone(), 2);
+        let model = pipeline.fit(&ds).unwrap();
+        let engine_out = model.transform_df(df.clone()).unwrap();
+
+        let spec = model
+            .to_graph_spec(
+                "t",
+                vec![
+                    SpecInput { name: "price".into(), dtype: DType::F64, width: None },
+                    SpecInput { name: "city".into(), dtype: DType::Str, width: None },
+                    SpecInput { name: "genres".into(), dtype: DType::Str, width: None },
+                ],
+                &["price_z", "city_idx", "gl_idx"],
+            )
+            .unwrap();
+        let spec = spec_roundtrip(&spec);
+        let interp = SpecInterpreter::new(spec);
+        let out = interp.run(&df).unwrap();
+
+        // price_z: f32 tolerance vs engine f64
+        let pz_engine = engine_out.column("price_z").unwrap().as_f64().unwrap();
+        let pz = out[0].as_f32().unwrap();
+        for (a, b) in pz.iter().zip(pz_engine.iter()) {
+            assert!((*a as f64 - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // city_idx: exact
+        assert_eq!(
+            out[1].as_i64().unwrap(),
+            engine_out.column("city_idx").unwrap().as_i64().unwrap()
+        );
+        // gl_idx: exact, shape [3,3]
+        assert_eq!(out[2].shape, vec![3, 3]);
+        let l = engine_out.column("gl_idx").unwrap().as_list_i64().unwrap();
+        assert_eq!(out[2].as_i64().unwrap(), &l.values[..]);
+    }
+
+    #[test]
+    fn ingress_only_produces_graph_inputs() {
+        let df = DataFrame::new(vec![("city".into(), Column::from_str(vec!["NYC", "LON"]))]).unwrap();
+        let t = HashIndexTransformer::new("city", "idx", 8);
+        let model = crate::pipeline::PipelineModel { stages: vec![Box::new(t)] };
+        let spec = model
+            .to_graph_spec(
+                "t",
+                vec![SpecInput { name: "city".into(), dtype: DType::Str, width: None }],
+                &["idx"],
+            )
+            .unwrap();
+        let interp = SpecInterpreter::new(spec);
+        let tensors = interp.run_ingress(&df).unwrap();
+        assert_eq!(tensors.len(), 1);
+        assert_eq!(tensors[0].shape, vec![2]);
+        assert_eq!(
+            tensors[0].as_i64().unwrap()[0],
+            crate::ops::hash::fnv1a64("NYC")
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! GraphSpec — the export IR between the fitted Rust pipeline and the
+//! compiled inference graph.
+//!
+//! This is the reproduction's analogue of Kamae's `build_keras_model()`:
+//! a fitted [`crate::pipeline::PipelineModel`] exports a **GraphSpec**
+//! (JSON), which `python/compile/model.py` compiles to a JAX function
+//! (calling the Pallas kernels) and `python/compile/aot.py` lowers to HLO
+//! text for the PJRT runtime.
+//!
+//! A spec has two sections, split automatically by the builder:
+//!
+//! * **ingress** — string-typed ops (split, regex, case, concat, date
+//!   parsing, string→hash64). HLO has no string dtype, so these execute in
+//!   Rust at serving time, *reusing the exact engine kernels* — one
+//!   implementation on both sides of the train/serve boundary (the
+//!   paper's parity argument, DESIGN.md §Substitutions).
+//! * **nodes** — numeric ops compiled into the graph. All tensors are
+//!   `float32` or `int64`; scalar features have shape `[B]`, fixed-width
+//!   sequence features `[B, W]`.
+
+mod builder;
+mod interp;
+mod spec;
+
+pub use builder::SpecBuilder;
+pub use interp::SpecInterpreter;
+pub use spec::{GraphSpec, SpecDType, SpecInput, SpecNode};

@@ -1,0 +1,282 @@
+//! GraphSpec data model and JSON (de)serialisation.
+
+use crate::dataframe::DType;
+use crate::error::{KamaeError, Result};
+use crate::util::json::Json;
+
+/// Tensor dtype inside the compiled graph. The whole graph runs on two
+/// dtypes: `F32` for continuous features, `I64` for indices/hashes/dates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecDType {
+    F32,
+    I64,
+}
+
+impl SpecDType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecDType::F32 => "float32",
+            SpecDType::I64 => "int64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SpecDType> {
+        match s {
+            "float32" => Ok(SpecDType::F32),
+            "int64" => Ok(SpecDType::I64),
+            other => Err(KamaeError::Serde(format!("bad spec dtype: {other}"))),
+        }
+    }
+
+    /// Graph dtype for an engine column dtype (strings hash to I64).
+    pub fn for_engine(dt: &DType) -> SpecDType {
+        match dt {
+            DType::I32 | DType::I64 | DType::Bool | DType::Str => SpecDType::I64,
+            DType::F32 | DType::F64 => SpecDType::F32,
+            DType::List(inner) => SpecDType::for_engine(inner),
+        }
+    }
+}
+
+/// A raw feature the serving request supplies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecInput {
+    pub name: String,
+    /// Engine dtype of the raw feature (may be `string`, `array<string>`…).
+    pub dtype: DType,
+    /// Fixed sequence width, `None` for scalars. List-typed inputs MUST
+    /// declare a width — ragged data cannot cross into the compiled graph.
+    pub width: Option<usize>,
+}
+
+/// One operation in the spec (ingress or graph section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecNode {
+    /// Output column name (ids and column names share one namespace).
+    pub id: String,
+    /// Op name — the contract with `python/compile/model.py::OPS` and
+    /// [`super::interp`].
+    pub op: String,
+    /// Input column names.
+    pub inputs: Vec<String>,
+    /// Scalar attributes (and constants such as vocab hashes — kept in
+    /// `attrs` as JSON arrays; i64 precision is preserved by our JSON).
+    pub attrs: Json,
+    /// Output dtype in the graph (`F32`/`I64`); for ingress nodes this is
+    /// the *engine* view's graph projection once hashed.
+    pub dtype: SpecDType,
+    /// Output sequence width (`None` = scalar).
+    pub width: Option<usize>,
+}
+
+/// The exported preprocessing graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSpec {
+    pub name: String,
+    pub inputs: Vec<SpecInput>,
+    /// String-side ops run by the Rust ingress at serving time, in order.
+    pub ingress: Vec<SpecNode>,
+    /// Tensors the compiled graph takes, in positional order. Each is a
+    /// column name that is either a numeric raw input or an ingress
+    /// product (e.g. an auto-inserted `<col>__hash`).
+    pub graph_inputs: Vec<String>,
+    /// Numeric ops compiled to HLO, in topological (pipeline) order.
+    pub nodes: Vec<SpecNode>,
+    /// Columns the graph returns, in positional order.
+    pub outputs: Vec<String>,
+}
+
+impl GraphSpec {
+    /// Dtype+width of a graph input column (resolving through ingress).
+    pub fn graph_input_meta(&self, name: &str) -> Option<(SpecDType, Option<usize>)> {
+        if let Some(n) = self.ingress.iter().find(|n| n.id == name) {
+            return Some((n.dtype, n.width));
+        }
+        self.inputs.iter().find(|i| i.name == name).map(|i| {
+            (SpecDType::for_engine(&i.dtype), i.width)
+        })
+    }
+
+    /// Meta of any graph-section column (input or node output).
+    pub fn node_meta(&self, name: &str) -> Option<(SpecDType, Option<usize>)> {
+        if let Some(n) = self.nodes.iter().find(|n| n.id == name) {
+            return Some((n.dtype, n.width));
+        }
+        self.graph_input_meta(name)
+    }
+
+    // ---- JSON ---------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("name", self.name.clone());
+        j.set(
+            "inputs",
+            Json::Array(
+                self.inputs
+                    .iter()
+                    .map(|i| {
+                        let mut o = Json::object();
+                        o.set("name", i.name.clone());
+                        o.set("dtype", i.dtype.name());
+                        match i.width {
+                            Some(w) => o.set("width", w),
+                            None => o.set("width", Json::Null),
+                        };
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("ingress", Json::Array(self.ingress.iter().map(node_to_json).collect()));
+        j.set(
+            "graph_inputs",
+            Json::Array(self.graph_inputs.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j.set("nodes", Json::Array(self.nodes.iter().map(node_to_json).collect()));
+        j.set(
+            "outputs",
+            Json::Array(self.outputs.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<GraphSpec> {
+        let inputs = j
+            .req_array("inputs")?
+            .iter()
+            .map(|o| {
+                Ok(SpecInput {
+                    name: o.req_str("name")?.to_string(),
+                    dtype: DType::parse(o.req_str("dtype")?)?,
+                    width: o.opt_i64("width").map(|w| w as usize),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let parse_nodes = |key: &str| -> Result<Vec<SpecNode>> {
+            j.req_array(key)?.iter().map(node_from_json).collect()
+        };
+        Ok(GraphSpec {
+            name: j.req_str("name")?.to_string(),
+            inputs,
+            ingress: parse_nodes("ingress")?,
+            graph_inputs: j
+                .req_array("graph_inputs")?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| KamaeError::Serde("graph_inputs entry".into()))
+                })
+                .collect::<Result<_>>()?,
+            nodes: parse_nodes("nodes")?,
+            outputs: j
+                .req_array("outputs")?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| KamaeError::Serde("outputs entry".into()))
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<GraphSpec> {
+        let text = std::fs::read_to_string(path)?;
+        GraphSpec::from_json(&Json::parse(&text)?)
+    }
+}
+
+fn node_to_json(n: &SpecNode) -> Json {
+    let mut o = Json::object();
+    o.set("id", n.id.clone());
+    o.set("op", n.op.clone());
+    o.set(
+        "inputs",
+        Json::Array(n.inputs.iter().map(|s| Json::Str(s.clone())).collect()),
+    );
+    o.set("attrs", n.attrs.clone());
+    o.set("dtype", n.dtype.name());
+    match n.width {
+        Some(w) => o.set("width", w),
+        None => o.set("width", Json::Null),
+    };
+    o
+}
+
+fn node_from_json(j: &Json) -> Result<SpecNode> {
+    Ok(SpecNode {
+        id: j.req_str("id")?.to_string(),
+        op: j.req_str("op")?.to_string(),
+        inputs: j
+            .req_array("inputs")?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| KamaeError::Serde("node input".into()))
+            })
+            .collect::<Result<_>>()?,
+        attrs: j.req("attrs")?.clone(),
+        dtype: SpecDType::parse(j.req_str("dtype")?)?,
+        width: j.opt_i64("width").map(|w| w as usize),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> GraphSpec {
+        let mut attrs = Json::object();
+        attrs.set("num_bins", 64i64);
+        GraphSpec {
+            name: "test".into(),
+            inputs: vec![
+                SpecInput { name: "UserID".into(), dtype: DType::Str, width: None },
+                SpecInput { name: "price".into(), dtype: DType::F64, width: None },
+            ],
+            ingress: vec![SpecNode {
+                id: "UserID__hash".into(),
+                op: "hash64".into(),
+                inputs: vec!["UserID".into()],
+                attrs: Json::object(),
+                dtype: SpecDType::I64,
+                width: None,
+            }],
+            graph_inputs: vec!["UserID__hash".into(), "price".into()],
+            nodes: vec![SpecNode {
+                id: "UserID_indexed".into(),
+                op: "hash_bucket".into(),
+                inputs: vec!["UserID__hash".into()],
+                attrs,
+                dtype: SpecDType::I64,
+                width: None,
+            }],
+            outputs: vec!["UserID_indexed".into(), "price".into()],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = sample();
+        let j = s.to_json();
+        let back = GraphSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn meta_resolution() {
+        let s = sample();
+        assert_eq!(s.graph_input_meta("price"), Some((SpecDType::F32, None)));
+        assert_eq!(s.graph_input_meta("UserID__hash"), Some((SpecDType::I64, None)));
+        assert_eq!(s.node_meta("UserID_indexed"), Some((SpecDType::I64, None)));
+        assert_eq!(s.node_meta("missing"), None);
+    }
+}

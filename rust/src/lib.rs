@@ -1,0 +1,48 @@
+//! # Kamae-RS
+//!
+//! A Rust + JAX + Pallas reproduction of *"Kamae: Bridging Spark and Keras
+//! for Seamless ML Preprocessing"* (RecSys 2025).
+//!
+//! The library mirrors the paper's architecture in three layers:
+//!
+//! * **L3 (this crate)** — a Spark-like partitioned columnar engine with a
+//!   `Pipeline`/`PipelineModel` API, a library of configurable transformers
+//!   and estimators, a GraphSpec exporter, and a serving stack (router +
+//!   dynamic batcher) that executes AOT-compiled preprocessing graphs via
+//!   PJRT on the request path.
+//! * **L2 (python/compile/model.py)** — compiles an exported GraphSpec into
+//!   a JAX function, lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (fused scaling, hash/bloom indexing, vocabulary lookup).
+//!
+//! Python never runs on the request path: the serving binary loads
+//! `artifacts/*.hlo.txt` and executes them through the PJRT CPU client.
+//!
+//! ## Quickstart
+//!
+//! See `examples/quickstart.rs` for a fit → transform → export → serve
+//! round trip on a small dataset.
+
+pub mod baselines;
+pub mod dataframe;
+pub mod engine;
+pub mod error;
+pub mod estimators;
+pub mod export;
+pub mod ops;
+pub mod pipeline;
+pub mod runtime;
+pub mod serving;
+pub mod synth;
+pub mod transformers;
+pub mod util;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::dataframe::{Column, DataFrame, DType, Value};
+    pub use crate::engine::Dataset;
+    pub use crate::error::{KamaeError, Result};
+    pub use crate::estimators::*;
+    pub use crate::export::{GraphSpec, SpecInterpreter};
+    pub use crate::transformers::*;
+}

@@ -1,0 +1,223 @@
+//! `kamae` — CLI for the Kamae-RS engine.
+//!
+//! Subcommands:
+//!   gen-data         generate synthetic datasets (movielens | ltr)
+//!   fit              fit a catalog pipeline on synthetic data, save model+spec
+//!   export-examples  fit all example pipelines and write GraphSpec JSONs
+//!                    into artifacts/specs/ (the Rust half of `make artifacts`)
+//!   transform        run a saved PipelineModel over a JSONL file
+//!   serve-bench      load compiled artifacts and run the open-loop
+//!                    Poisson serving benchmark (experiments C3/C5)
+//!
+//! Arg parsing is in-tree (offline environment — no clap).
+
+use std::path::{Path, PathBuf};
+
+use kamae::dataframe::{infer_jsonl_schema, read_jsonl, write_jsonl};
+use kamae::engine::Dataset;
+use kamae::error::{KamaeError, Result};
+use kamae::pipeline::catalog;
+use kamae::pipeline::PipelineModel;
+use kamae::synth;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny `--key value` argument map.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Args {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let value = args.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(key.to_string(), value);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let Some(cmd) = raw.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&raw[1..]);
+    match cmd.as_str() {
+        "gen-data" => gen_data(&args),
+        "fit" => fit(&args),
+        "export-examples" => export_examples(&args),
+        "transform" => transform(&args),
+        "serve-bench" => serve_bench(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(KamaeError::InvalidConfig(format!("unknown subcommand: {other}"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "kamae — Spark-like preprocessing engine with compiled-graph export\n\
+         \n\
+         USAGE: kamae <subcommand> [--key value ...]\n\
+         \n\
+         SUBCOMMANDS:\n\
+         \x20 gen-data         --dataset movielens|ltr --rows N --out FILE.jsonl\n\
+         \x20 fit              --dataset movielens|ltr|quickstart --rows N --out-dir DIR [--partitions P]\n\
+         \x20 export-examples  [--out-dir artifacts/specs] [--rows N]\n\
+         \x20 transform        --model model.json --input in.jsonl --output out.jsonl\n\
+         \x20 serve-bench      --artifacts DIR --spec NAME --rps R --seconds S [--mode compiled|interpreted|mleap]\n"
+    );
+}
+
+fn gen_dataset(name: &str, rows: usize) -> Result<kamae::dataframe::DataFrame> {
+    match name {
+        "movielens" => Ok(synth::gen_movielens(&synth::MovieLensConfig { rows, ..Default::default() })),
+        "ltr" => Ok(synth::gen_ltr(&synth::LtrConfig { rows, ..Default::default() })),
+        other => Err(KamaeError::InvalidConfig(format!("unknown dataset: {other}"))),
+    }
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "movielens");
+    let rows = args.usize_or("rows", 100_000);
+    let out = PathBuf::from(args.get_or("out", &format!("{dataset}.jsonl")));
+    let df = gen_dataset(&dataset, rows)?;
+    write_jsonl(&df, &out)?;
+    println!("wrote {rows} rows of {dataset} to {}", out.display());
+    Ok(())
+}
+
+/// Fit one catalog pipeline and save model + spec.
+fn fit_one(name: &str, rows: usize, partitions: usize, out_dir: &Path) -> Result<()> {
+    let (pipeline, inputs, outputs, data): (_, _, Vec<&str>, _) = match name {
+        "movielens" => (
+            catalog::movielens_pipeline(),
+            catalog::movielens_inputs(),
+            catalog::MOVIELENS_OUTPUTS.to_vec(),
+            gen_dataset("movielens", rows)?,
+        ),
+        "ltr" => (
+            catalog::ltr_pipeline(),
+            catalog::ltr_inputs(),
+            catalog::LTR_OUTPUTS.to_vec(),
+            gen_dataset("ltr", rows)?,
+        ),
+        "quickstart" => (
+            catalog::quickstart_pipeline(),
+            catalog::quickstart_inputs(),
+            catalog::QUICKSTART_OUTPUTS.to_vec(),
+            kamae::serving::request_pool("quickstart", rows)?,
+        ),
+        other => return Err(KamaeError::InvalidConfig(format!("unknown pipeline: {other}"))),
+    };
+    let ds = Dataset::from_dataframe(data, partitions);
+    let t0 = std::time::Instant::now();
+    let model = pipeline.fit(&ds)?;
+    let fit_ms = t0.elapsed().as_millis();
+    std::fs::create_dir_all(out_dir)?;
+    let model_path = out_dir.join(format!("{name}.model.json"));
+    model.save(&model_path)?;
+    let spec = model.to_graph_spec(name, inputs, &outputs)?;
+    let spec_path = out_dir.join(format!("{name}.json"));
+    spec.save(&spec_path)?;
+    println!(
+        "{name}: fitted {} stages on {} rows x {} partitions in {fit_ms} ms -> {}",
+        model.stages.len(),
+        ds.num_rows(),
+        ds.num_partitions(),
+        spec_path.display()
+    );
+    Ok(())
+}
+
+fn fit(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "quickstart");
+    let rows = args.usize_or("rows", 50_000);
+    let partitions = args.usize_or("partitions", kamae::util::pool::default_threads());
+    let out_dir = PathBuf::from(args.get_or("out-dir", "artifacts/specs"));
+    fit_one(&dataset, rows, partitions, &out_dir)
+}
+
+fn export_examples(args: &Args) -> Result<()> {
+    let out_dir = PathBuf::from(args.get_or("out-dir", "artifacts/specs"));
+    let rows = args.usize_or("rows", 50_000);
+    let partitions = args.usize_or("partitions", kamae::util::pool::default_threads());
+    for name in ["quickstart", "movielens", "ltr"] {
+        fit_one(name, rows, partitions, &out_dir)?;
+    }
+    Ok(())
+}
+
+fn transform(args: &Args) -> Result<()> {
+    let model_path = PathBuf::from(
+        args.get("model")
+            .ok_or_else(|| KamaeError::InvalidConfig("--model required".into()))?,
+    );
+    let input = PathBuf::from(
+        args.get("input")
+            .ok_or_else(|| KamaeError::InvalidConfig("--input required".into()))?,
+    );
+    let output = PathBuf::from(
+        args.get("output")
+            .ok_or_else(|| KamaeError::InvalidConfig("--output required".into()))?,
+    );
+    let model = PipelineModel::load(&model_path)?;
+    let schema = infer_jsonl_schema(&input)?;
+    let df = read_jsonl(&input, &schema)?;
+    let partitions = args.usize_or("partitions", kamae::util::pool::default_threads());
+    let ds = Dataset::from_dataframe(df, partitions);
+    let t0 = std::time::Instant::now();
+    let out = model.transform(&ds)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let rows = out.num_rows();
+    write_jsonl(&out.collect()?, &output)?;
+    println!(
+        "transformed {rows} rows in {secs:.3}s ({:.0} rows/s) -> {}",
+        rows as f64 / secs,
+        output.display()
+    );
+    Ok(())
+}
+
+fn serve_bench(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let spec_name = args.get_or("spec", "ltr");
+    let rps = args.usize_or("rps", 200);
+    let seconds = args.usize_or("seconds", 10);
+    let mode = args.get_or("mode", "compiled");
+    let report = kamae::serving::bench_serve(&artifacts, &spec_name, rps, seconds, &mode)?;
+    println!("{report}");
+    Ok(())
+}

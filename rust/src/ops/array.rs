@@ -1,0 +1,326 @@
+//! Array/sequence kernels — Kamae's "nested-sequence-native" operations.
+//!
+//! `assemble`/`disassemble` implement the paper's LTR pattern: "selected
+//! numerical features are assembled into a single array which is
+//! subsequently standard scaled and disassembled into original features".
+//! Aggregations reduce a list feature to a scalar; `element_at`/`slice`
+//! address fixed positions.
+
+use crate::dataframe::{Column, ListColumn};
+use crate::error::{KamaeError, Result};
+
+/// Assemble N numeric scalar columns into a fixed-width ListF64 column
+/// (VectorAssembler).
+pub fn assemble(cols: &[&Column]) -> Result<Column> {
+    if cols.is_empty() {
+        return Err(KamaeError::InvalidConfig("assemble of zero columns".into()));
+    }
+    let views: Vec<Vec<f64>> = cols
+        .iter()
+        .map(|c| super::cast::to_f64_vec(c))
+        .collect::<Result<_>>()?;
+    let n = views[0].len();
+    for v in &views {
+        if v.len() != n {
+            return Err(KamaeError::LengthMismatch {
+                left: v.len(),
+                right: n,
+                context: "assemble".into(),
+            });
+        }
+    }
+    let w = views.len();
+    let mut values = Vec::with_capacity(n * w);
+    for i in 0..n {
+        for v in &views {
+            values.push(v[i]);
+        }
+    }
+    let offsets = (0..=n as u32).map(|i| i * w as u32).collect();
+    Ok(Column::ListF64(ListColumn { values, offsets }))
+}
+
+/// Disassemble a fixed-width list column into scalar F64 columns
+/// (inverse of [`assemble`]).
+pub fn disassemble(col: &Column) -> Result<Vec<Column>> {
+    let (values, offsets) = super::math::list_f64_parts(col)?;
+    let l = ListColumn { values, offsets };
+    let w = l.fixed_width().ok_or_else(|| {
+        KamaeError::InvalidConfig("disassemble requires a fixed-width list".into())
+    })?;
+    let n = l.len();
+    let mut out = vec![Vec::with_capacity(n); w];
+    for row in l.rows() {
+        for (j, &x) in row.iter().enumerate() {
+            out[j].push(x);
+        }
+    }
+    Ok(out.into_iter().map(Column::from_f64).collect())
+}
+
+/// List-level aggregations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ListAgg {
+    Sum,
+    Mean,
+    Min,
+    Max,
+    /// Number of elements.
+    Len,
+}
+
+impl ListAgg {
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            ListAgg::Sum => "list_sum",
+            ListAgg::Mean => "list_mean",
+            ListAgg::Min => "list_min",
+            ListAgg::Max => "list_max",
+            ListAgg::Len => "list_len",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<ListAgg> {
+        Ok(match s {
+            "sum" => ListAgg::Sum,
+            "mean" | "avg" => ListAgg::Mean,
+            "min" => ListAgg::Min,
+            "max" => ListAgg::Max,
+            "len" | "length" | "size" => ListAgg::Len,
+            other => {
+                return Err(KamaeError::InvalidConfig(format!("unknown list agg: {other}")))
+            }
+        })
+    }
+}
+
+/// Reduce each row's list to a scalar. Empty rows produce the reduction
+/// identity (0 for sum/len, NaN for mean/min/max — matching jnp on empty
+/// slices is moot because exported graphs only see fixed-width lists).
+pub fn aggregate(col: &Column, agg: ListAgg) -> Result<Column> {
+    if agg == ListAgg::Len {
+        // works for any list dtype incl. strings
+        let offsets: &[u32] = match col {
+            Column::ListBool(l) => &l.offsets,
+            Column::ListI32(l) => &l.offsets,
+            Column::ListI64(l) => &l.offsets,
+            Column::ListF32(l) => &l.offsets,
+            Column::ListF64(l) => &l.offsets,
+            Column::ListStr(l) => &l.offsets,
+            other => {
+                return Err(KamaeError::TypeMismatch {
+                    expected: "list".into(),
+                    found: other.dtype().name(),
+                    context: "list_len".into(),
+                })
+            }
+        };
+        return Ok(Column::I64(
+            offsets.windows(2).map(|w| (w[1] - w[0]) as i64).collect(),
+            None,
+        ));
+    }
+    let (values, offsets) = super::math::list_f64_parts(col)?;
+    let l = ListColumn { values, offsets };
+    let data = l
+        .rows()
+        .map(|row| match agg {
+            ListAgg::Sum => row.iter().sum(),
+            ListAgg::Mean => {
+                if row.is_empty() {
+                    f64::NAN
+                } else {
+                    row.iter().sum::<f64>() / row.len() as f64
+                }
+            }
+            ListAgg::Min => row.iter().copied().fold(f64::INFINITY, f64::min),
+            ListAgg::Max => row.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            ListAgg::Len => unreachable!(),
+        })
+        .collect();
+    Ok(Column::F64(data, None))
+}
+
+/// Element at fixed position `idx` of each row (negative = from the end).
+/// Out-of-bounds rows become null.
+pub fn element_at(col: &Column, idx: i64) -> Result<Column> {
+    macro_rules! gather {
+        ($l:expr, $variant:ident, $default:expr) => {{
+            let mut nulls = vec![false; $l.len()];
+            let data = $l
+                .rows()
+                .enumerate()
+                .map(|(i, row)| {
+                    let j = if idx < 0 { row.len() as i64 + idx } else { idx };
+                    if (0..row.len() as i64).contains(&j) {
+                        row[j as usize].clone()
+                    } else {
+                        nulls[i] = true;
+                        $default
+                    }
+                })
+                .collect();
+            let mask = if nulls.iter().any(|&b| b) { Some(nulls) } else { None };
+            Ok(Column::$variant(data, mask))
+        }};
+    }
+    match col {
+        Column::ListBool(l) => gather!(l, Bool, false),
+        Column::ListI32(l) => gather!(l, I32, 0),
+        Column::ListI64(l) => gather!(l, I64, 0),
+        Column::ListF32(l) => gather!(l, F32, 0.0),
+        Column::ListF64(l) => gather!(l, F64, 0.0),
+        Column::ListStr(l) => gather!(l, Str, String::new()),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "list".into(),
+            found: other.dtype().name(),
+            context: "element_at".into(),
+        }),
+    }
+}
+
+/// Row-wise cosine similarity between two fixed-width numeric vector
+/// columns (Kamae's `CosineSimilarityTransformer`). Zero vectors yield 0.
+pub fn cosine_similarity(a: &Column, b: &Column) -> Result<Column> {
+    let (av, ao) = super::math::list_f64_parts(a)?;
+    let (bv, bo) = super::math::list_f64_parts(b)?;
+    if ao != bo {
+        return Err(KamaeError::LengthMismatch {
+            left: av.len(),
+            right: bv.len(),
+            context: "cosine_similarity".into(),
+        });
+    }
+    let la = ListColumn { values: av, offsets: ao };
+    let lb = ListColumn { values: bv, offsets: bo };
+    let data = la
+        .rows()
+        .zip(lb.rows())
+        .map(|(x, y)| {
+            let dot: f64 = x.iter().zip(y.iter()).map(|(p, q)| p * q).sum();
+            let nx: f64 = x.iter().map(|p| p * p).sum::<f64>().sqrt();
+            let ny: f64 = y.iter().map(|q| q * q).sum::<f64>().sqrt();
+            if nx == 0.0 || ny == 0.0 {
+                0.0
+            } else {
+                dot / (nx * ny)
+            }
+        })
+        .collect();
+    Ok(Column::F64(data, None))
+}
+
+/// Per-row slice `[start, start+len)` of each list (clamped to row size).
+pub fn slice_list(col: &Column, start: usize, len: usize) -> Result<Column> {
+    macro_rules! sl {
+        ($l:expr, $variant:ident) => {{
+            let mut values = Vec::new();
+            let mut offsets = Vec::with_capacity($l.len() + 1);
+            offsets.push(0u32);
+            for row in $l.rows() {
+                let s = start.min(row.len());
+                let e = (start + len).min(row.len());
+                values.extend_from_slice(&row[s..e]);
+                offsets.push(values.len() as u32);
+            }
+            Ok(Column::$variant(ListColumn { values, offsets }))
+        }};
+    }
+    match col {
+        Column::ListBool(l) => sl!(l, ListBool),
+        Column::ListI32(l) => sl!(l, ListI32),
+        Column::ListI64(l) => sl!(l, ListI64),
+        Column::ListF32(l) => sl!(l, ListF32),
+        Column::ListF64(l) => sl!(l, ListF64),
+        Column::ListStr(l) => sl!(l, ListStr),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "list".into(),
+            found: other.dtype().name(),
+            context: "slice_list".into(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_disassemble_roundtrip() {
+        let a = Column::from_f64(vec![1.0, 2.0]);
+        let b = Column::from_i64(vec![10, 20]);
+        let v = assemble(&[&a, &b]).unwrap();
+        let l = v.as_list_f64().unwrap();
+        assert_eq!(l.row(0), &[1.0, 10.0]);
+        assert_eq!(l.row(1), &[2.0, 20.0]);
+        let parts = disassemble(&v).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].as_f64().unwrap(), &[1.0, 2.0]);
+        assert_eq!(parts[1].as_f64().unwrap(), &[10.0, 20.0]);
+    }
+
+    #[test]
+    fn disassemble_requires_fixed_width() {
+        let ragged = Column::from_f64_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+        assert!(disassemble(&ragged).is_err());
+    }
+
+    #[test]
+    fn aggregations() {
+        let l = Column::from_f64_rows(vec![vec![1.0, 2.0, 3.0], vec![5.0]]);
+        assert_eq!(
+            aggregate(&l, ListAgg::Sum).unwrap().as_f64().unwrap(),
+            &[6.0, 5.0]
+        );
+        assert_eq!(
+            aggregate(&l, ListAgg::Mean).unwrap().as_f64().unwrap(),
+            &[2.0, 5.0]
+        );
+        assert_eq!(
+            aggregate(&l, ListAgg::Max).unwrap().as_f64().unwrap(),
+            &[3.0, 5.0]
+        );
+        assert_eq!(
+            aggregate(&l, ListAgg::Len).unwrap().as_i64().unwrap(),
+            &[3, 1]
+        );
+    }
+
+    #[test]
+    fn len_on_string_lists() {
+        let l = Column::from_str_rows(vec![vec!["a", "b"], vec![]]);
+        assert_eq!(aggregate(&l, ListAgg::Len).unwrap().as_i64().unwrap(), &[2, 0]);
+    }
+
+    #[test]
+    fn element_at_with_negatives_and_oob() {
+        let l = Column::from_str_rows(vec![vec!["a", "b"], vec!["c"]]);
+        let first = element_at(&l, 0).unwrap();
+        assert_eq!(first.as_str().unwrap(), &["a".to_string(), "c".to_string()]);
+        let last = element_at(&l, -1).unwrap();
+        assert_eq!(last.as_str().unwrap(), &["b".to_string(), "c".to_string()]);
+        let oob = element_at(&l, 1).unwrap();
+        assert!(!oob.is_null(0));
+        assert!(oob.is_null(1));
+    }
+
+    #[test]
+    fn cosine() {
+        let a = Column::from_f64_rows(vec![vec![1.0, 0.0], vec![1.0, 1.0], vec![0.0, 0.0]]);
+        let b = Column::from_f64_rows(vec![vec![1.0, 0.0], vec![-1.0, -1.0], vec![1.0, 2.0]]);
+        let c = cosine_similarity(&a, &b).unwrap();
+        let v = c.as_f64().unwrap();
+        assert!((v[0] - 1.0).abs() < 1e-12);
+        assert!((v[1] + 1.0).abs() < 1e-12);
+        assert_eq!(v[2], 0.0); // zero vector
+    }
+
+    #[test]
+    fn slicing() {
+        let l = Column::from_i64_rows(vec![vec![1, 2, 3, 4], vec![5]]);
+        let s = slice_list(&l, 1, 2).unwrap();
+        let s = s.as_list_i64().unwrap();
+        assert_eq!(s.row(0), &[2, 3]);
+        assert_eq!(s.row(1), &[] as &[i64]);
+    }
+}

@@ -1,0 +1,244 @@
+//! Dtype casting — the engine's implementation of Kamae's
+//! `inputDtype`/`outputDtype` transformer parameters.
+//!
+//! Semantics follow Spark SQL casts: numeric widening/narrowing by value,
+//! string→number parses (unparseable → null), number→string canonical
+//! form, bool↔number as 0/1. List columns cast element-wise.
+
+use crate::dataframe::{Column, DType, ListColumn};
+use crate::error::{KamaeError, Result};
+
+/// Cast a column to the target dtype. No-op (clone) when dtypes match.
+pub fn cast(col: &Column, to: &DType) -> Result<Column> {
+    if &col.dtype() == to {
+        return Ok(col.clone());
+    }
+    match (col, to) {
+        // ---- list → list: element-wise --------------------------------
+        (_, DType::List(inner)) if col.dtype().element().is_some() => {
+            cast_list(col, inner)
+        }
+        // ---- scalar → scalar -------------------------------------------
+        (_, DType::Bool) => {
+            let f = to_f64_vec(col)?;
+            Ok(Column::Bool(f.iter().map(|&x| x != 0.0).collect(), col.nulls().cloned()))
+        }
+        (_, DType::I32) => {
+            let f = to_f64_lossy(col)?;
+            merge_parse_nulls(col, f.1, Column::I32(f.0.iter().map(|&x| x as i32).collect(), None))
+        }
+        (_, DType::I64) => {
+            // int64 must NOT round-trip through f64 (hash precision)
+            if let Column::I32(v, n) = col {
+                return Ok(Column::I64(v.iter().map(|&x| x as i64).collect(), n.clone()));
+            }
+            if let Column::Str(v, _) = col {
+                let mut nulls = vec![false; v.len()];
+                let data: Vec<i64> = v
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        s.trim().parse::<i64>().unwrap_or_else(|_| {
+                            nulls[i] = true;
+                            0
+                        })
+                    })
+                    .collect();
+                return merge_parse_nulls(col, Some(nulls), Column::I64(data, None));
+            }
+            let f = to_f64_lossy(col)?;
+            merge_parse_nulls(col, f.1, Column::I64(f.0.iter().map(|&x| x as i64).collect(), None))
+        }
+        (_, DType::F32) => {
+            let f = to_f64_lossy(col)?;
+            merge_parse_nulls(col, f.1, Column::F32(f.0.iter().map(|&x| x as f32).collect(), None))
+        }
+        (_, DType::F64) => {
+            let f = to_f64_lossy(col)?;
+            merge_parse_nulls(col, f.1, Column::F64(f.0, None))
+        }
+        (_, DType::Str) => Ok(Column::Str(to_string_vec(col)?, col.nulls().cloned())),
+        // ---- scalar → list is invalid ----------------------------------
+        (_, DType::List(_)) => Err(KamaeError::TypeMismatch {
+            expected: to.name(),
+            found: col.dtype().name(),
+            context: "cast scalar to list".into(),
+        }),
+    }
+}
+
+fn cast_list(col: &Column, inner: &DType) -> Result<Column> {
+    macro_rules! go {
+        ($l:expr, $mk:expr) => {{
+            let scalar = $mk($l.values.clone());
+            let cast_values = cast(&scalar, inner)?;
+            rebuild_list(cast_values, $l.offsets.clone())
+        }};
+    }
+    match col {
+        Column::ListBool(l) => go!(l, Column::from_bool),
+        Column::ListI32(l) => go!(l, Column::from_i32),
+        Column::ListI64(l) => go!(l, Column::from_i64),
+        Column::ListF32(l) => go!(l, Column::from_f32),
+        Column::ListF64(l) => go!(l, Column::from_f64),
+        Column::ListStr(l) => go!(l, Column::from_str::<String>),
+        _ => unreachable!("cast_list called on scalar"),
+    }
+}
+
+fn rebuild_list(values: Column, offsets: Vec<u32>) -> Result<Column> {
+    Ok(match values {
+        Column::Bool(v, _) => Column::ListBool(ListColumn { values: v, offsets }),
+        Column::I32(v, _) => Column::ListI32(ListColumn { values: v, offsets }),
+        Column::I64(v, _) => Column::ListI64(ListColumn { values: v, offsets }),
+        Column::F32(v, _) => Column::ListF32(ListColumn { values: v, offsets }),
+        Column::F64(v, _) => Column::ListF64(ListColumn { values: v, offsets }),
+        Column::Str(v, _) => Column::ListStr(ListColumn { values: v, offsets }),
+        other => other,
+    })
+}
+
+/// Numeric view of a scalar column as f64 (error on strings/lists).
+pub fn to_f64_vec(col: &Column) -> Result<Vec<f64>> {
+    match col {
+        Column::Bool(v, _) => Ok(v.iter().map(|&b| b as u8 as f64).collect()),
+        Column::I32(v, _) => Ok(v.iter().map(|&x| x as f64).collect()),
+        Column::I64(v, _) => Ok(v.iter().map(|&x| x as f64).collect()),
+        Column::F32(v, _) => Ok(v.iter().map(|&x| x as f64).collect()),
+        Column::F64(v, _) => Ok(v.clone()),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "numeric".into(),
+            found: other.dtype().name(),
+            context: "to_f64_vec".into(),
+        }),
+    }
+}
+
+/// f64 view that also parses strings; returns (data, parse-null mask).
+fn to_f64_lossy(col: &Column) -> Result<(Vec<f64>, Option<Vec<bool>>)> {
+    if let Column::Str(v, _) = col {
+        let mut nulls = vec![false; v.len()];
+        let data = v
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.trim().parse::<f64>().unwrap_or_else(|_| {
+                    nulls[i] = true;
+                    0.0
+                })
+            })
+            .collect();
+        Ok((data, Some(nulls)))
+    } else {
+        Ok((to_f64_vec(col)?, None))
+    }
+}
+
+/// Canonical string form of each row (Kamae's cast-to-string). Integers
+/// print without decimal point; floats in shortest-roundtrip form (Rust's
+/// `{}`); bools as "true"/"false". This is the form the string indexers
+/// see when `inputDtype="string"` — the python side never needs to
+/// replicate it because indexing happens against exported vocab hashes.
+pub fn to_string_vec(col: &Column) -> Result<Vec<String>> {
+    match col {
+        Column::Bool(v, _) => Ok(v.iter().map(|b| b.to_string()).collect()),
+        Column::I32(v, _) => Ok(v.iter().map(|x| x.to_string()).collect()),
+        Column::I64(v, _) => Ok(v.iter().map(|x| x.to_string()).collect()),
+        Column::F32(v, _) => Ok(v.iter().map(|x| x.to_string()).collect()),
+        Column::F64(v, _) => Ok(v.iter().map(|x| x.to_string()).collect()),
+        Column::Str(v, _) => Ok(v.clone()),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "scalar".into(),
+            found: other.dtype().name(),
+            context: "to_string_vec".into(),
+        }),
+    }
+}
+
+/// Merge parse-nulls with original nulls and finish the cast column.
+fn merge_parse_nulls(
+    original: &Column,
+    parse_nulls: Option<Vec<bool>>,
+    mut out: Column,
+) -> Result<Column> {
+    let merged = match (original.nulls(), parse_nulls) {
+        (None, None) => None,
+        (Some(a), None) => Some(a.clone()),
+        (None, Some(b)) => {
+            if b.iter().any(|&x| x) {
+                Some(b)
+            } else {
+                None
+            }
+        }
+        (Some(a), Some(b)) => Some(a.iter().zip(b.iter()).map(|(&x, &y)| x || y).collect()),
+    };
+    out.set_nulls(merged)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_casts() {
+        let c = Column::from_f64(vec![1.9, -2.9, 0.0]);
+        let i = cast(&c, &DType::I64).unwrap();
+        assert_eq!(i.as_i64().unwrap(), &[1, -2, 0]); // trunc, like Spark
+        let b = cast(&c, &DType::Bool).unwrap();
+        assert_eq!(b.as_bool().unwrap(), &[true, true, false]);
+    }
+
+    #[test]
+    fn i32_to_i64_exact() {
+        let c = Column::from_i32(vec![i32::MAX, i32::MIN]);
+        let i = cast(&c, &DType::I64).unwrap();
+        assert_eq!(i.as_i64().unwrap(), &[i32::MAX as i64, i32::MIN as i64]);
+    }
+
+    #[test]
+    fn string_parses_with_nulls() {
+        let c = Column::from_str(vec!["3.5", "oops", " 7 "]);
+        let f = cast(&c, &DType::F64).unwrap();
+        assert_eq!(f.as_f64().unwrap()[0], 3.5);
+        assert_eq!(f.as_f64().unwrap()[2], 7.0);
+        assert!(f.is_null(1));
+        let i = cast(&c, &DType::I64).unwrap();
+        assert!(i.is_null(0)); // "3.5" is not an int64
+        assert_eq!(i.as_i64().unwrap()[2], 7);
+    }
+
+    #[test]
+    fn to_string_canonical() {
+        let c = Column::from_i64(vec![42]);
+        assert_eq!(cast(&c, &DType::Str).unwrap().as_str().unwrap()[0], "42");
+        let f = Column::from_f64(vec![1.5]);
+        assert_eq!(cast(&f, &DType::Str).unwrap().as_str().unwrap()[0], "1.5");
+        let b = Column::from_bool(vec![true]);
+        assert_eq!(cast(&b, &DType::Str).unwrap().as_str().unwrap()[0], "true");
+    }
+
+    #[test]
+    fn list_casts_elementwise() {
+        let c = Column::from_i64_rows(vec![vec![1, 2], vec![3]]);
+        let f = cast(&c, &DType::parse("array<float64>").unwrap()).unwrap();
+        let f = f.as_list_f64().unwrap();
+        assert_eq!(f.row(0), &[1.0, 2.0]);
+        assert_eq!(f.row(1), &[3.0]);
+    }
+
+    #[test]
+    fn scalar_to_list_rejected() {
+        let c = Column::from_i64(vec![1]);
+        assert!(cast(&c, &DType::parse("array<int64>").unwrap()).is_err());
+    }
+
+    #[test]
+    fn preexisting_nulls_survive() {
+        let c = Column::from_f64_opt(vec![Some(1.0), None]);
+        let i = cast(&c, &DType::I32).unwrap();
+        assert!(!i.is_null(0));
+        assert!(i.is_null(1));
+    }
+}

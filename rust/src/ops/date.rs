@@ -1,0 +1,263 @@
+//! Date/time kernels.
+//!
+//! Ingress side: parse `YYYY-MM-DD[ HH:MM:SS]` strings into **days since
+//! the Unix epoch** (`i64`) or seconds since epoch. Graph side: all part
+//! extraction (year/month/day/weekday/...) and date arithmetic is pure
+//! integer math on those epoch values — implemented here with the civil-
+//! calendar algorithm (Howard Hinnant's `days_from_civil`/`civil_from_days`)
+//! and mirrored op-for-op in `python/compile/model.py` so the compiled
+//! graph reproduces it exactly (parity test: `test_date_parts`).
+
+use crate::dataframe::Column;
+use crate::error::{KamaeError, Result};
+
+/// days since epoch → (year, month [1,12], day [1,31]).
+/// Hinnant's civil_from_days, valid for ±millions of years.
+pub fn civil_from_days(z: i64) -> (i64, i64, i64) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = doy - (153 * mp + 2) / 5 + 1; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 }; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// (year, month, day) → days since epoch. Inverse of [`civil_from_days`].
+pub fn days_from_civil(y: i64, m: i64, d: i64) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = y - era * 400; // [0, 399]
+    let mp = if m > 2 { m - 3 } else { m + 9 };
+    let doy = (153 * mp + 2) / 5 + d - 1; // [0, 365]
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy; // [0, 146096]
+    era * 146_097 + doe - 719_468
+}
+
+/// ISO weekday from days since epoch: 1 = Monday ... 7 = Sunday.
+/// (1970-01-01 was a Thursday.)
+pub fn weekday_from_days(z: i64) -> i64 {
+    (z + 3).rem_euclid(7) + 1
+}
+
+/// Day of year [1, 366].
+pub fn day_of_year(z: i64) -> i64 {
+    let (y, _, _) = civil_from_days(z);
+    z - days_from_civil(y, 1, 1) + 1
+}
+
+/// Parse "YYYY-MM-DD" (optionally with a time part after ' ' or 'T',
+/// which is ignored) into days since epoch. Unparseable → None.
+pub fn parse_date(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let date_part = s.split(|c| c == ' ' || c == 'T').next()?;
+    let mut it = date_part.split('-');
+    // leading '-' for negative years is not supported (not in any config)
+    let y: i64 = it.next()?.parse().ok()?;
+    let m: i64 = it.next()?.parse().ok()?;
+    let d: i64 = it.next()?.parse().ok()?;
+    if it.next().is_some() || !(1..=12).contains(&m) || !(1..=31).contains(&d) {
+        return None;
+    }
+    // reject days invalid for the month (roundtrip check)
+    let days = days_from_civil(y, m, d);
+    let (ry, rm, rd) = civil_from_days(days);
+    if (ry, rm, rd) != (y, m, d) {
+        return None;
+    }
+    Some(days)
+}
+
+/// Parse "YYYY-MM-DD HH:MM:SS" (or with 'T') into seconds since epoch.
+/// A bare date parses as midnight. Unparseable → None.
+pub fn parse_timestamp(s: &str) -> Option<i64> {
+    let s = s.trim();
+    let days = parse_date(s)?;
+    let time_part = s
+        .split_once(|c| c == ' ' || c == 'T')
+        .map(|(_, t)| t)
+        .unwrap_or("");
+    let secs = if time_part.is_empty() {
+        0
+    } else {
+        let mut it = time_part.split(':');
+        let h: i64 = it.next()?.trim().parse().ok()?;
+        let m: i64 = it.next()?.parse().ok()?;
+        let sec: i64 = it
+            .next()
+            .map(|x| x.split('.').next().unwrap_or("0").parse().ok())
+            .unwrap_or(Some(0))?;
+        if it.next().is_some() || !(0..24).contains(&h) || !(0..60).contains(&m) || !(0..60).contains(&sec)
+        {
+            return None;
+        }
+        h * 3600 + m * 60 + sec
+    };
+    Some(days * 86_400 + secs)
+}
+
+/// Ingress kernel: string column → days-since-epoch I64 (parse failures
+/// become nulls).
+pub fn date_to_days(col: &Column) -> Result<Column> {
+    let v = col.as_str()?;
+    let mut nulls = vec![false; v.len()];
+    let data: Vec<i64> = v
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            parse_date(s).unwrap_or_else(|| {
+                nulls[i] = true;
+                0
+            })
+        })
+        .collect();
+    let merged = merge_mask(col.nulls(), nulls);
+    Ok(Column::I64(data, merged))
+}
+
+/// Ingress kernel: string column → seconds-since-epoch I64.
+pub fn timestamp_to_seconds(col: &Column) -> Result<Column> {
+    let v = col.as_str()?;
+    let mut nulls = vec![false; v.len()];
+    let data: Vec<i64> = v
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            parse_timestamp(s).unwrap_or_else(|| {
+                nulls[i] = true;
+                0
+            })
+        })
+        .collect();
+    let merged = merge_mask(col.nulls(), nulls);
+    Ok(Column::I64(data, merged))
+}
+
+/// Date parts extractable from an epoch-days column (graph-side op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatePart {
+    Year,
+    Month,
+    Day,
+    /// ISO weekday 1=Mon..7=Sun.
+    Weekday,
+    DayOfYear,
+}
+
+impl DatePart {
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            DatePart::Year => "year",
+            DatePart::Month => "month",
+            DatePart::Day => "day",
+            DatePart::Weekday => "weekday",
+            DatePart::DayOfYear => "day_of_year",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DatePart> {
+        Ok(match s {
+            "year" => DatePart::Year,
+            "month" => DatePart::Month,
+            "day" | "dayofmonth" => DatePart::Day,
+            "weekday" | "dayofweek" => DatePart::Weekday,
+            "day_of_year" | "dayofyear" => DatePart::DayOfYear,
+            other => {
+                return Err(KamaeError::InvalidConfig(format!("unknown date part: {other}")))
+            }
+        })
+    }
+
+    pub fn extract(&self, days: i64) -> i64 {
+        match self {
+            DatePart::Year => civil_from_days(days).0,
+            DatePart::Month => civil_from_days(days).1,
+            DatePart::Day => civil_from_days(days).2,
+            DatePart::Weekday => weekday_from_days(days),
+            DatePart::DayOfYear => day_of_year(days),
+        }
+    }
+}
+
+/// Extract a date part from an epoch-days I64 column.
+pub fn extract_part(col: &Column, part: DatePart) -> Result<Column> {
+    let v = col.as_i64()?;
+    Ok(Column::I64(
+        v.iter().map(|&d| part.extract(d)).collect(),
+        col.nulls().cloned(),
+    ))
+}
+
+fn merge_mask(existing: Option<&Vec<bool>>, new: Vec<bool>) -> Option<Vec<bool>> {
+    match existing {
+        Some(e) => Some(e.iter().zip(new.iter()).map(|(&a, &b)| a || b).collect()),
+        None => {
+            if new.iter().any(|&b| b) {
+                Some(new)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn civil_roundtrip_sweep() {
+        // sweep several eras incl. leap-century boundaries
+        for &days in &[-719468i64, -1, 0, 59, 365, 11016, 18262, 20000, 738000] {
+            let (y, m, d) = civil_from_days(days);
+            assert_eq!(days_from_civil(y, m, d), days, "days={days} ymd={y}-{m}-{d}");
+        }
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19723), (2024, 1, 1)); // 2024-01-01
+    }
+
+    #[test]
+    fn parse_dates() {
+        assert_eq!(parse_date("1970-01-01"), Some(0));
+        assert_eq!(parse_date("2000-02-29"), Some(days_from_civil(2000, 2, 29)));
+        assert_eq!(parse_date("2001-02-29"), None); // not a leap year
+        assert_eq!(parse_date("2024-13-01"), None);
+        assert_eq!(parse_date("oops"), None);
+        assert_eq!(parse_date("2024-06-15 10:30:00"), Some(days_from_civil(2024, 6, 15)));
+    }
+
+    #[test]
+    fn parse_timestamps() {
+        assert_eq!(parse_timestamp("1970-01-01 00:00:01"), Some(1));
+        assert_eq!(parse_timestamp("1970-01-02T00:00:00"), Some(86_400));
+        assert_eq!(parse_timestamp("1970-01-01"), Some(0));
+        assert_eq!(parse_timestamp("1970-01-01 25:00:00"), None);
+        assert_eq!(
+            parse_timestamp("2024-06-15 10:30:05.123"),
+            Some(days_from_civil(2024, 6, 15) * 86_400 + 10 * 3600 + 30 * 60 + 5)
+        );
+    }
+
+    #[test]
+    fn weekday_known_values() {
+        assert_eq!(weekday_from_days(0), 4); // 1970-01-01 = Thursday
+        assert_eq!(weekday_from_days(parse_date("2024-06-17").unwrap()), 1); // Monday
+        assert_eq!(weekday_from_days(parse_date("2024-06-16").unwrap()), 7); // Sunday
+        assert_eq!(weekday_from_days(-1), 3); // 1969-12-31 = Wednesday
+    }
+
+    #[test]
+    fn parts_column() {
+        let c = Column::from_str(vec!["2024-02-29", "1999-12-31", "bad"]);
+        let days = date_to_days(&c).unwrap();
+        assert!(days.is_null(2));
+        let year = extract_part(&days, DatePart::Year).unwrap();
+        assert_eq!(&year.as_i64().unwrap()[..2], &[2024, 1999]);
+        let doy = extract_part(&days, DatePart::DayOfYear).unwrap();
+        assert_eq!(doy.as_i64().unwrap()[0], 60); // Feb 29 = day 60
+        assert_eq!(doy.as_i64().unwrap()[1], 365);
+    }
+}

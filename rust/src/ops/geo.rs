@@ -1,0 +1,63 @@
+//! Geographical kernels (Kamae's geographical transformer family).
+
+use crate::dataframe::Column;
+use crate::error::Result;
+
+/// Mean Earth radius in kilometres (IUGG).
+pub const EARTH_RADIUS_KM: f64 = 6371.0088;
+
+/// Haversine great-circle distance in km between (lat1,lon1) and
+/// (lat2,lon2), all in degrees. Mirrored in the compiled graph as plain
+/// trigonometric HLO ops.
+#[inline(always)]
+pub fn haversine_km(lat1: f64, lon1: f64, lat2: f64, lon2: f64) -> f64 {
+    let (p1, p2) = (lat1.to_radians(), lat2.to_radians());
+    let dp = (lat2 - lat1).to_radians();
+    let dl = (lon2 - lon1).to_radians();
+    let a = (dp / 2.0).sin().powi(2) + p1.cos() * p2.cos() * (dl / 2.0).sin().powi(2);
+    2.0 * EARTH_RADIUS_KM * a.sqrt().min(1.0).asin()
+}
+
+/// Column kernel over four coordinate columns.
+pub fn haversine(
+    lat1: &Column,
+    lon1: &Column,
+    lat2: &Column,
+    lon2: &Column,
+) -> Result<Column> {
+    let a = super::cast::to_f64_vec(lat1)?;
+    let b = super::cast::to_f64_vec(lon1)?;
+    let c = super::cast::to_f64_vec(lat2)?;
+    let d = super::cast::to_f64_vec(lon2)?;
+    let data = (0..a.len())
+        .map(|i| haversine_km(a[i], b[i], c[i], d[i]))
+        .collect();
+    Ok(Column::F64(data, super::merge_nulls(&[lat1, lon1, lat2, lon2])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_distances() {
+        // London -> Paris ≈ 344 km
+        let d = haversine_km(51.5074, -0.1278, 48.8566, 2.3522);
+        assert!((d - 344.0).abs() < 5.0, "d={d}");
+        // identical points
+        assert_eq!(haversine_km(10.0, 20.0, 10.0, 20.0), 0.0);
+        // antipodal ≈ half circumference ≈ 20015 km
+        let anti = haversine_km(0.0, 0.0, 0.0, 180.0);
+        assert!((anti - 20015.0).abs() < 10.0, "anti={anti}");
+    }
+
+    #[test]
+    fn column_kernel() {
+        let lat1 = Column::from_f64(vec![51.5074]);
+        let lon1 = Column::from_f64(vec![-0.1278]);
+        let lat2 = Column::from_f64(vec![48.8566]);
+        let lon2 = Column::from_f64(vec![2.3522]);
+        let d = haversine(&lat1, &lon1, &lat2, &lon2).unwrap();
+        assert!((d.as_f64().unwrap()[0] - 344.0).abs() < 5.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Hashing kernels — the bridge between string features and the compiled
+//! numeric graph.
+//!
+//! HLO has no string dtype, so string-valued features cross the
+//! ingress/graph boundary as **FNV-1a 64-bit token hashes** (see DESIGN.md
+//! §Substitutions). Everything downstream of the raw hash — bin mixing,
+//! modulo, bloom probes — must be reproducible *bit-exactly* inside the
+//! compiled graph, so the post-hash arithmetic here is written in the
+//! exact operations the JAX side mirrors (`python/compile/kernels/
+//! preprocess.py::hash_bucket` / `bloom_probes`):
+//!
+//! ```text
+//! bucket_k(h) = ((h * GOLDEN ⊕ (h >>> 33)) * PHI_k  >>> 33) mod bins
+//! ```
+//!
+//! with all multiplies wrapping on i64 and `>>>` a *logical* shift
+//! (jax `lax.shift_right_logical`).
+
+use crate::dataframe::{Column, ListColumn};
+use crate::error::Result;
+
+/// FNV-1a 64-bit offset basis / prime.
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Odd 64-bit mixing constants (splitmix64 finalizer family). `PHI[k]`
+/// parameterises the k-th bloom probe; `PHI[0]` is the plain hash bucket.
+pub const MIX: [u64; 8] = [
+    0xff51afd7ed558ccd,
+    0xc4ceb9fe1a85ec53,
+    0x9e3779b97f4a7c15,
+    0xbf58476d1ce4e5b9,
+    0x94d049bb133111eb,
+    0x2545f4914f6cdd1d,
+    0xd6e8feb86659fd93,
+    0xa5cb9243f0aef993,
+];
+
+/// FNV-1a over a string's UTF-8 bytes, as non-negative i64 (top bit
+/// cleared so the value survives signed HLO arithmetic and JSON).
+pub fn fnv1a64(s: &str) -> i64 {
+    let mut h = FNV_OFFSET;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    (h & 0x7fff_ffff_ffff_ffff) as i64
+}
+
+/// The graph-side bucket function for probe `k`: deterministic mixing of a
+/// token hash into `[0, bins)`. Mirrored bit-exactly by the Pallas kernel.
+pub fn bucket(h: i64, k: usize, bins: i64) -> i64 {
+    debug_assert!(bins > 0);
+    let h = h as u64;
+    let mixed = (h.wrapping_mul(MIX[2]) ^ (h >> 33)).wrapping_mul(MIX[k % MIX.len()]) >> 33;
+    (mixed % bins as u64) as i64
+}
+
+/// Hash a string column to token hashes (the ingress `hash64` op).
+pub fn hash64_column(col: &Column) -> Result<Column> {
+    match col {
+        Column::Str(v, n) => Ok(Column::I64(
+            v.iter().map(|s| fnv1a64(s)).collect(),
+            n.clone(),
+        )),
+        Column::ListStr(l) => Ok(Column::ListI64(ListColumn {
+            values: l.values.iter().map(|s| fnv1a64(s)).collect(),
+            offsets: l.offsets.clone(),
+        })),
+        // Numeric inputs with inputDtype="string": hash their canonical
+        // string form, matching Kamae's cast-then-index behaviour.
+        other => {
+            let strings = super::cast::to_string_vec(other)?;
+            Ok(Column::I64(
+                strings.iter().map(|s| fnv1a64(s)).collect(),
+                other.nulls().cloned(),
+            ))
+        }
+    }
+}
+
+/// Vectorised hash-index (HashIndexTransformer semantics): token hash →
+/// bin in `[0, num_bins)`. Works on I64 scalar or list columns.
+pub fn hash_bucket_column(col: &Column, num_bins: i64) -> Result<Column> {
+    match col {
+        Column::I64(v, n) => Ok(Column::I64(
+            v.iter().map(|&h| bucket(h, 0, num_bins)).collect(),
+            n.clone(),
+        )),
+        Column::ListI64(l) => Ok(Column::ListI64(ListColumn {
+            values: l.values.iter().map(|&h| bucket(h, 0, num_bins)).collect(),
+            offsets: l.offsets.clone(),
+        })),
+        other => hash_bucket_column(&hash64_column(other)?, num_bins),
+    }
+}
+
+/// Bloom-encode (Serrà & Karatzoglou): `k` probes per token, each in its
+/// own bin space, offset so probe j lands in `[j*bins, (j+1)*bins)`.
+/// Output is a fixed-width list of `k` indices per row.
+pub fn bloom_encode_column(col: &Column, num_hashes: usize, num_bins: i64) -> Result<Column> {
+    let hashed = match col {
+        Column::I64(..) => col.clone(),
+        other => hash64_column(other)?,
+    };
+    match &hashed {
+        Column::I64(v, _) => {
+            let mut values = Vec::with_capacity(v.len() * num_hashes);
+            for &h in v {
+                for k in 0..num_hashes {
+                    values.push(k as i64 * num_bins + bucket(h, k, num_bins));
+                }
+            }
+            let offsets = (0..=v.len() as u32).map(|i| i * num_hashes as u32).collect();
+            Ok(Column::ListI64(ListColumn { values, offsets }))
+        }
+        other => Err(crate::error::KamaeError::TypeMismatch {
+            expected: "int64 token hashes".into(),
+            found: other.dtype().name(),
+            context: "bloom_encode".into(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_values() {
+        // FNV-1a reference vectors (top bit cleared).
+        assert_eq!(fnv1a64(""), (0xcbf29ce484222325u64 & 0x7fffffffffffffff) as i64);
+        // stability: same string, same hash, different strings differ
+        assert_eq!(fnv1a64("hotel"), fnv1a64("hotel"));
+        assert_ne!(fnv1a64("hotel"), fnv1a64("hostel"));
+        assert!(fnv1a64("anything") >= 0);
+    }
+
+    #[test]
+    fn bucket_in_range_and_spread() {
+        let bins = 1000;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..5000 {
+            let b = bucket(fnv1a64(&format!("token{i}")), 0, bins);
+            assert!((0..bins).contains(&b));
+            seen.insert(b);
+        }
+        // good mixing: nearly all bins hit
+        assert!(seen.len() > 950, "only {} bins hit", seen.len());
+    }
+
+    #[test]
+    fn probes_are_independent() {
+        let h = fnv1a64("pool");
+        let b0 = bucket(h, 0, 1 << 20);
+        let b1 = bucket(h, 1, 1 << 20);
+        assert_ne!(b0, b1);
+    }
+
+    #[test]
+    fn hash_column_scalar_and_list() {
+        let c = Column::from_str(vec!["a", "b"]);
+        let h = hash64_column(&c).unwrap();
+        assert_eq!(h.as_i64().unwrap()[0], fnv1a64("a"));
+        let l = Column::from_str_rows(vec![vec!["a"], vec!["b", "c"]]);
+        let hl = hash64_column(&l).unwrap();
+        let hl = hl.as_list_i64().unwrap();
+        assert_eq!(hl.row(1)[1], fnv1a64("c"));
+    }
+
+    #[test]
+    fn hash_bucket_from_string_directly() {
+        let c = Column::from_str(vec!["x", "y", "x"]);
+        let b = hash_bucket_column(&c, 16).unwrap();
+        let b = b.as_i64().unwrap();
+        assert_eq!(b[0], b[2]);
+        assert!(b.iter().all(|&x| (0..16).contains(&x)));
+    }
+
+    #[test]
+    fn bloom_layout() {
+        let c = Column::from_str(vec!["a", "b"]);
+        let e = bloom_encode_column(&c, 3, 100).unwrap();
+        let e = e.as_list_i64().unwrap();
+        assert_eq!(e.len(), 2);
+        for row in e.rows() {
+            assert_eq!(row.len(), 3);
+            for (k, &idx) in row.iter().enumerate() {
+                let lo = k as i64 * 100;
+                assert!((lo..lo + 100).contains(&idx), "probe {k} idx {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn numeric_input_hashes_via_string_form() {
+        // inputDtype="string" on an int column: 42 hashes as "42"
+        let c = Column::from_i64(vec![42]);
+        let h = hash64_column(&c).unwrap();
+        assert_eq!(h.as_i64().unwrap()[0], fnv1a64("42"));
+    }
+}

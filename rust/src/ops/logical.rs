@@ -1,0 +1,284 @@
+//! Logical and comparison kernels (graph-side ops).
+
+use crate::dataframe::{Column, ListColumn};
+use crate::error::{KamaeError, Result};
+
+/// Comparison operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+impl CmpOp {
+    #[inline(always)]
+    pub fn apply_f64(&self, a: f64, b: f64) -> bool {
+        match self {
+            CmpOp::Eq => a == b,
+            CmpOp::Ne => a != b,
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Gt => a > b,
+            CmpOp::Ge => a >= b,
+        }
+    }
+
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            CmpOp::Eq => "eq",
+            CmpOp::Ne => "ne",
+            CmpOp::Lt => "lt",
+            CmpOp::Le => "le",
+            CmpOp::Gt => "gt",
+            CmpOp::Ge => "ge",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<CmpOp> {
+        Ok(match s {
+            "eq" | "==" => CmpOp::Eq,
+            "ne" | "!=" => CmpOp::Ne,
+            "lt" | "<" => CmpOp::Lt,
+            "le" | "<=" => CmpOp::Le,
+            "gt" | ">" => CmpOp::Gt,
+            "ge" | ">=" => CmpOp::Ge,
+            other => return Err(KamaeError::InvalidConfig(format!("unknown cmp op: {other}"))),
+        })
+    }
+}
+
+/// Compare two columns. Numeric comparisons go through f64; string
+/// columns support Eq/Ne only (string ordering is locale-trap territory
+/// and no Kamae config uses it).
+pub fn compare(a: &Column, b: &Column, op: CmpOp) -> Result<Column> {
+    if let (Column::Str(x, _), Column::Str(y, _)) = (a, b) {
+        if !matches!(op, CmpOp::Eq | CmpOp::Ne) {
+            return Err(KamaeError::Unsupported("string ordering comparison".into()));
+        }
+        if x.len() != y.len() {
+            return Err(len_err(x.len(), y.len()));
+        }
+        let data = x
+            .iter()
+            .zip(y.iter())
+            .map(|(p, q)| match op {
+                CmpOp::Eq => p == q,
+                _ => p != q,
+            })
+            .collect();
+        return Ok(Column::Bool(data, super::merge_nulls(&[a, b])));
+    }
+    let x = super::cast::to_f64_vec(a)?;
+    let y = super::cast::to_f64_vec(b)?;
+    if x.len() != y.len() {
+        return Err(len_err(x.len(), y.len()));
+    }
+    let data = x
+        .iter()
+        .zip(y.iter())
+        .map(|(&p, &q)| op.apply_f64(p, q))
+        .collect();
+    Ok(Column::Bool(data, super::merge_nulls(&[a, b])))
+}
+
+/// Compare a column against a scalar constant.
+pub fn compare_scalar(a: &Column, c: f64, op: CmpOp) -> Result<Column> {
+    if a.dtype().element().is_some() {
+        let (values, offsets) = super::math::list_f64_parts(a)?;
+        return Ok(Column::ListBool(ListColumn {
+            values: values.iter().map(|&x| op.apply_f64(x, c)).collect(),
+            offsets,
+        }));
+    }
+    let x = super::cast::to_f64_vec(a)?;
+    Ok(Column::Bool(
+        x.iter().map(|&p| op.apply_f64(p, c)).collect(),
+        a.nulls().cloned(),
+    ))
+}
+
+/// String equality against a constant.
+pub fn equals_str(a: &Column, needle: &str) -> Result<Column> {
+    match a {
+        Column::Str(v, n) => Ok(Column::Bool(
+            v.iter().map(|s| s == needle).collect(),
+            n.clone(),
+        )),
+        Column::ListStr(l) => Ok(Column::ListBool(ListColumn {
+            values: l.values.iter().map(|s| s == needle).collect(),
+            offsets: l.offsets.clone(),
+        })),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "string".into(),
+            found: other.dtype().name(),
+            context: "equals_str".into(),
+        }),
+    }
+}
+
+/// Boolean connectives over two Bool columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoolOp {
+    And,
+    Or,
+    Xor,
+}
+
+impl BoolOp {
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            BoolOp::And => "and",
+            BoolOp::Or => "or",
+            BoolOp::Xor => "xor",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<BoolOp> {
+        Ok(match s {
+            "and" => BoolOp::And,
+            "or" => BoolOp::Or,
+            "xor" => BoolOp::Xor,
+            other => return Err(KamaeError::InvalidConfig(format!("unknown bool op: {other}"))),
+        })
+    }
+}
+
+pub fn bool_binary(a: &Column, b: &Column, op: BoolOp) -> Result<Column> {
+    let x = a.as_bool()?;
+    let y = b.as_bool()?;
+    if x.len() != y.len() {
+        return Err(len_err(x.len(), y.len()));
+    }
+    let data = x
+        .iter()
+        .zip(y.iter())
+        .map(|(&p, &q)| match op {
+            BoolOp::And => p && q,
+            BoolOp::Or => p || q,
+            BoolOp::Xor => p ^ q,
+        })
+        .collect();
+    Ok(Column::Bool(data, super::merge_nulls(&[a, b])))
+}
+
+pub fn bool_not(a: &Column) -> Result<Column> {
+    match a {
+        Column::Bool(v, n) => Ok(Column::Bool(v.iter().map(|&b| !b).collect(), n.clone())),
+        Column::ListBool(l) => Ok(Column::ListBool(ListColumn {
+            values: l.values.iter().map(|&b| !b).collect(),
+            offsets: l.offsets.clone(),
+        })),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "bool".into(),
+            found: other.dtype().name(),
+            context: "not".into(),
+        }),
+    }
+}
+
+/// `if cond then a else b`, elementwise. `a`/`b` must share dtype; cond is
+/// Bool. This is the engine half of Kamae's conditional transformers.
+pub fn select(cond: &Column, a: &Column, b: &Column) -> Result<Column> {
+    let c = cond.as_bool()?;
+    if a.dtype() != b.dtype() {
+        return Err(KamaeError::TypeMismatch {
+            expected: a.dtype().name(),
+            found: b.dtype().name(),
+            context: "select branches".into(),
+        });
+    }
+    if c.len() != a.len() || a.len() != b.len() {
+        return Err(len_err(a.len(), b.len()));
+    }
+    macro_rules! sel {
+        ($variant:ident, $x:expr, $y:expr) => {{
+            let data = c
+                .iter()
+                .zip($x.iter().zip($y.iter()))
+                .map(|(&k, (p, q))| if k { p.clone() } else { q.clone() })
+                .collect();
+            Ok(Column::$variant(data, super::merge_nulls(&[cond, a, b])))
+        }};
+    }
+    match (a, b) {
+        (Column::Bool(x, _), Column::Bool(y, _)) => sel!(Bool, x, y),
+        (Column::I32(x, _), Column::I32(y, _)) => sel!(I32, x, y),
+        (Column::I64(x, _), Column::I64(y, _)) => sel!(I64, x, y),
+        (Column::F32(x, _), Column::F32(y, _)) => sel!(F32, x, y),
+        (Column::F64(x, _), Column::F64(y, _)) => sel!(F64, x, y),
+        (Column::Str(x, _), Column::Str(y, _)) => sel!(Str, x, y),
+        _ => Err(KamaeError::Unsupported("select on list columns".into())),
+    }
+}
+
+fn len_err(left: usize, right: usize) -> KamaeError {
+    KamaeError::LengthMismatch { left, right, context: "logical op".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_compare() {
+        let a = Column::from_f64(vec![1.0, 2.0, 3.0]);
+        let b = Column::from_i64(vec![2, 2, 2]);
+        let lt = compare(&a, &b, CmpOp::Lt).unwrap();
+        assert_eq!(lt.as_bool().unwrap(), &[true, false, false]);
+        let ge = compare(&a, &b, CmpOp::Ge).unwrap();
+        assert_eq!(ge.as_bool().unwrap(), &[false, true, true]);
+    }
+
+    #[test]
+    fn string_compare_eq_only() {
+        let a = Column::from_str(vec!["x", "y"]);
+        let b = Column::from_str(vec!["x", "z"]);
+        let eq = compare(&a, &b, CmpOp::Eq).unwrap();
+        assert_eq!(eq.as_bool().unwrap(), &[true, false]);
+        assert!(compare(&a, &b, CmpOp::Lt).is_err());
+    }
+
+    #[test]
+    fn scalar_compare_on_list() {
+        let l = Column::from_f64_rows(vec![vec![1.0, 5.0], vec![3.0]]);
+        let out = compare_scalar(&l, 2.0, CmpOp::Gt).unwrap();
+        match out {
+            Column::ListBool(lb) => {
+                assert_eq!(lb.row(0), &[false, true]);
+                assert_eq!(lb.row(1), &[true]);
+            }
+            _ => panic!("expected ListBool"),
+        }
+    }
+
+    #[test]
+    fn connectives_and_not() {
+        let a = Column::from_bool(vec![true, true, false]);
+        let b = Column::from_bool(vec![true, false, false]);
+        assert_eq!(
+            bool_binary(&a, &b, BoolOp::And).unwrap().as_bool().unwrap(),
+            &[true, false, false]
+        );
+        assert_eq!(
+            bool_binary(&a, &b, BoolOp::Xor).unwrap().as_bool().unwrap(),
+            &[false, true, false]
+        );
+        assert_eq!(bool_not(&a).unwrap().as_bool().unwrap(), &[false, false, true]);
+    }
+
+    #[test]
+    fn select_branches() {
+        let c = Column::from_bool(vec![true, false]);
+        let a = Column::from_str(vec!["yes", "yes"]);
+        let b = Column::from_str(vec!["no", "no"]);
+        let s = select(&c, &a, &b).unwrap();
+        assert_eq!(s.as_str().unwrap(), &["yes".to_string(), "no".to_string()]);
+        // dtype mismatch rejected
+        let n = Column::from_i64(vec![1, 2]);
+        assert!(select(&c, &a, &n).is_err());
+    }
+}

@@ -1,0 +1,396 @@
+//! Numeric math kernels (unary, binary, bucketize).
+//!
+//! All kernels compute in `f64` and return `F64`/`ListF64` columns
+//! (`bucketize` returns `I64`). Each enum variant corresponds 1:1 to a
+//! GraphSpec op the python compiler implements with the same semantics —
+//! parity tests in `rust/tests/parity.rs` hold these two implementations
+//! together.
+
+use crate::dataframe::{Column, ListColumn};
+use crate::error::{KamaeError, Result};
+
+/// Unary elementwise operations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UnaryOp {
+    /// log_base(x); base e when `base` is None.
+    Log { base: Option<f64> },
+    /// log(1 + x) — the paper's "values spanning many orders of magnitude".
+    Log1p,
+    Exp,
+    Sqrt,
+    Abs,
+    Neg,
+    /// 1/x (inf on zero, like Spark's double division).
+    Reciprocal,
+    Round,
+    Floor,
+    Ceil,
+    Sin,
+    Cos,
+    Tanh,
+    Sigmoid,
+    /// Clamp into [min, max] (either side optional).
+    Clip { min: Option<f64>, max: Option<f64> },
+    /// x^p.
+    PowScalar { p: f64 },
+    AddScalar { c: f64 },
+    SubScalar { c: f64 },
+    MulScalar { c: f64 },
+    DivScalar { c: f64 },
+    /// x * scale + shift — the fused form standard scaling exports
+    /// (scale = 1/σ, shift = −μ/σ).
+    ScaleShift { scale: f64, shift: f64 },
+}
+
+impl UnaryOp {
+    /// Scalar kernel body (shared by column kernel, list kernel, and the
+    /// row-wise baseline so all agree bit-for-bit).
+    #[inline(always)]
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            UnaryOp::Log { base: None } => x.ln(),
+            UnaryOp::Log { base: Some(b) } => x.ln() / b.ln(),
+            UnaryOp::Log1p => x.ln_1p(),
+            UnaryOp::Exp => x.exp(),
+            UnaryOp::Sqrt => x.sqrt(),
+            UnaryOp::Abs => x.abs(),
+            UnaryOp::Neg => -x,
+            UnaryOp::Reciprocal => 1.0 / x,
+            UnaryOp::Round => {
+                // round-half-to-even, matching jnp.round / Spark's bround
+                let r = x.round();
+                if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+                    r - (x.signum())
+                } else {
+                    r
+                }
+            }
+            UnaryOp::Floor => x.floor(),
+            UnaryOp::Ceil => x.ceil(),
+            UnaryOp::Sin => x.sin(),
+            UnaryOp::Cos => x.cos(),
+            UnaryOp::Tanh => x.tanh(),
+            UnaryOp::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            UnaryOp::Clip { min, max } => {
+                let mut y = x;
+                if let Some(m) = min {
+                    y = y.max(*m);
+                }
+                if let Some(m) = max {
+                    y = y.min(*m);
+                }
+                y
+            }
+            UnaryOp::PowScalar { p } => x.powf(*p),
+            UnaryOp::AddScalar { c } => x + c,
+            UnaryOp::SubScalar { c } => x - c,
+            UnaryOp::MulScalar { c } => x * c,
+            UnaryOp::DivScalar { c } => x / c,
+            UnaryOp::ScaleShift { scale, shift } => x * scale + shift,
+        }
+    }
+
+    /// GraphSpec op name (python side implements the same table).
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            UnaryOp::Log { .. } => "log",
+            UnaryOp::Log1p => "log1p",
+            UnaryOp::Exp => "exp",
+            UnaryOp::Sqrt => "sqrt",
+            UnaryOp::Abs => "abs",
+            UnaryOp::Neg => "neg",
+            UnaryOp::Reciprocal => "reciprocal",
+            UnaryOp::Round => "round",
+            UnaryOp::Floor => "floor",
+            UnaryOp::Ceil => "ceil",
+            UnaryOp::Sin => "sin",
+            UnaryOp::Cos => "cos",
+            UnaryOp::Tanh => "tanh",
+            UnaryOp::Sigmoid => "sigmoid",
+            UnaryOp::Clip { .. } => "clip",
+            UnaryOp::PowScalar { .. } => "pow_scalar",
+            UnaryOp::AddScalar { .. } => "add_scalar",
+            UnaryOp::SubScalar { .. } => "sub_scalar",
+            UnaryOp::MulScalar { .. } => "mul_scalar",
+            UnaryOp::DivScalar { .. } => "div_scalar",
+            UnaryOp::ScaleShift { .. } => "scale_shift",
+        }
+    }
+}
+
+/// Apply a unary op over a numeric scalar or list column.
+pub fn unary(col: &Column, op: &UnaryOp) -> Result<Column> {
+    match col {
+        Column::ListI32(_) | Column::ListI64(_) | Column::ListF32(_) | Column::ListF64(_)
+        | Column::ListBool(_) => {
+            let (values, offsets) = list_f64_parts(col)?;
+            Ok(Column::ListF64(ListColumn {
+                values: values.iter().map(|&x| op.apply(x)).collect(),
+                offsets,
+            }))
+        }
+        _ => {
+            let data = super::cast::to_f64_vec(col)?;
+            Ok(Column::F64(
+                data.iter().map(|&x| op.apply(x)).collect(),
+                col.nulls().cloned(),
+            ))
+        }
+    }
+}
+
+/// Binary elementwise operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Min,
+    Max,
+    Mod,
+}
+
+impl BinOp {
+    #[inline(always)]
+    pub fn apply(&self, a: f64, b: f64) -> f64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Pow => a.powf(b),
+            BinOp::Min => a.min(b),
+            BinOp::Max => a.max(b),
+            // Python-style modulo (result has divisor's sign), matching
+            // jnp.mod — NOT Rust's `%`.
+            BinOp::Mod => a - b * (a / b).floor(),
+        }
+    }
+
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            BinOp::Add => "add",
+            BinOp::Sub => "sub",
+            BinOp::Mul => "mul",
+            BinOp::Div => "div",
+            BinOp::Pow => "pow",
+            BinOp::Min => "min",
+            BinOp::Max => "max",
+            BinOp::Mod => "mod",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<BinOp> {
+        Ok(match name {
+            "add" | "+" => BinOp::Add,
+            "sub" | "-" => BinOp::Sub,
+            "mul" | "*" => BinOp::Mul,
+            "div" | "/" => BinOp::Div,
+            "pow" | "^" => BinOp::Pow,
+            "min" => BinOp::Min,
+            "max" => BinOp::Max,
+            "mod" | "%" => BinOp::Mod,
+            other => {
+                return Err(KamaeError::InvalidConfig(format!("unknown binary op: {other}")))
+            }
+        })
+    }
+}
+
+/// Elementwise binary over two columns. Shapes supported:
+/// scalar∘scalar, list∘list (identical offsets), list∘scalar and
+/// scalar∘list (row-broadcast).
+pub fn binary(a: &Column, b: &Column, op: BinOp) -> Result<Column> {
+    let a_list = a.dtype().element().is_some();
+    let b_list = b.dtype().element().is_some();
+    match (a_list, b_list) {
+        (false, false) => {
+            let (x, y) = (super::cast::to_f64_vec(a)?, super::cast::to_f64_vec(b)?);
+            if x.len() != y.len() {
+                return Err(KamaeError::LengthMismatch {
+                    left: x.len(),
+                    right: y.len(),
+                    context: format!("binary {}", op.spec_name()),
+                });
+            }
+            let data = x.iter().zip(y.iter()).map(|(&p, &q)| op.apply(p, q)).collect();
+            Ok(Column::F64(data, super::merge_nulls(&[a, b])))
+        }
+        (true, true) => {
+            let (xv, xo) = list_f64_parts(a)?;
+            let (yv, yo) = list_f64_parts(b)?;
+            if xo != yo {
+                return Err(KamaeError::LengthMismatch {
+                    left: xv.len(),
+                    right: yv.len(),
+                    context: format!("binary {} on ragged lists", op.spec_name()),
+                });
+            }
+            let values = xv.iter().zip(yv.iter()).map(|(&p, &q)| op.apply(p, q)).collect();
+            Ok(Column::ListF64(ListColumn { values, offsets: xo }))
+        }
+        (true, false) => {
+            let (xv, xo) = list_f64_parts(a)?;
+            let y = super::cast::to_f64_vec(b)?;
+            let mut values = Vec::with_capacity(xv.len());
+            for (row, &s) in xo.windows(2).zip(y.iter()) {
+                for &p in &xv[row[0] as usize..row[1] as usize] {
+                    values.push(op.apply(p, s));
+                }
+            }
+            Ok(Column::ListF64(ListColumn { values, offsets: xo }))
+        }
+        (false, true) => {
+            let x = super::cast::to_f64_vec(a)?;
+            let (yv, yo) = list_f64_parts(b)?;
+            let mut values = Vec::with_capacity(yv.len());
+            for (row, &s) in yo.windows(2).zip(x.iter()) {
+                for &q in &yv[row[0] as usize..row[1] as usize] {
+                    values.push(op.apply(s, q));
+                }
+            }
+            Ok(Column::ListF64(ListColumn { values, offsets: yo }))
+        }
+    }
+}
+
+/// Bucketize: index of the first split greater than x (Spark's Bucketizer
+/// with +/-inf sentinels). `splits` must be strictly increasing. Output
+/// indices are in [0, splits.len()].
+pub fn bucketize(col: &Column, splits: &[f64]) -> Result<Column> {
+    for w in splits.windows(2) {
+        if w[0] >= w[1] {
+            return Err(KamaeError::InvalidConfig(
+                "bucketize splits must be strictly increasing".into(),
+            ));
+        }
+    }
+    let idx = |x: f64| -> i64 { splits.partition_point(|&s| s <= x) as i64 };
+    if col.dtype().element().is_some() {
+        let (values, offsets) = list_f64_parts(col)?;
+        Ok(Column::ListI64(ListColumn {
+            values: values.iter().map(|&x| idx(x)).collect(),
+            offsets,
+        }))
+    } else {
+        let data = super::cast::to_f64_vec(col)?;
+        Ok(Column::I64(
+            data.iter().map(|&x| idx(x)).collect(),
+            col.nulls().cloned(),
+        ))
+    }
+}
+
+/// Flat f64 view of any numeric list column plus its offsets.
+pub fn list_f64_parts(col: &Column) -> Result<(Vec<f64>, Vec<u32>)> {
+    match col {
+        Column::ListBool(l) => Ok((
+            l.values.iter().map(|&b| b as u8 as f64).collect(),
+            l.offsets.clone(),
+        )),
+        Column::ListI32(l) => Ok((
+            l.values.iter().map(|&x| x as f64).collect(),
+            l.offsets.clone(),
+        )),
+        Column::ListI64(l) => Ok((
+            l.values.iter().map(|&x| x as f64).collect(),
+            l.offsets.clone(),
+        )),
+        Column::ListF32(l) => Ok((
+            l.values.iter().map(|&x| x as f64).collect(),
+            l.offsets.clone(),
+        )),
+        Column::ListF64(l) => Ok((l.values.clone(), l.offsets.clone())),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "numeric list".into(),
+            found: other.dtype().name(),
+            context: "list_f64_parts".into(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unary_log_and_clip() {
+        let c = Column::from_f64(vec![1.0, std::f64::consts::E, 100.0]);
+        let l = unary(&c, &UnaryOp::Log { base: None }).unwrap();
+        assert!((l.as_f64().unwrap()[1] - 1.0).abs() < 1e-12);
+        let l10 = unary(&c, &UnaryOp::Log { base: Some(10.0) }).unwrap();
+        assert!((l10.as_f64().unwrap()[2] - 2.0).abs() < 1e-12);
+        let cl = unary(&c, &UnaryOp::Clip { min: Some(2.0), max: Some(50.0) }).unwrap();
+        assert_eq!(cl.as_f64().unwrap(), &[2.0, std::f64::consts::E, 50.0]);
+    }
+
+    #[test]
+    fn round_half_even() {
+        let c = Column::from_f64(vec![0.5, 1.5, 2.5, -0.5, 2.4]);
+        let r = unary(&c, &UnaryOp::Round).unwrap();
+        assert_eq!(r.as_f64().unwrap(), &[0.0, 2.0, 2.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn unary_on_int_list() {
+        let c = Column::from_i64_rows(vec![vec![1, 4], vec![9]]);
+        let s = unary(&c, &UnaryOp::Sqrt).unwrap();
+        let s = s.as_list_f64().unwrap();
+        assert_eq!(s.row(0), &[1.0, 2.0]);
+        assert_eq!(s.row(1), &[3.0]);
+    }
+
+    #[test]
+    fn binary_shapes() {
+        let a = Column::from_f64(vec![1.0, 2.0]);
+        let b = Column::from_f64(vec![10.0, 20.0]);
+        assert_eq!(
+            binary(&a, &b, BinOp::Add).unwrap().as_f64().unwrap(),
+            &[11.0, 22.0]
+        );
+        // list ∘ scalar broadcast
+        let l = Column::from_f64_rows(vec![vec![1.0, 2.0], vec![3.0]]);
+        let out = binary(&l, &a, BinOp::Mul).unwrap();
+        let out = out.as_list_f64().unwrap();
+        assert_eq!(out.row(0), &[1.0, 2.0]);
+        assert_eq!(out.row(1), &[6.0]);
+        // scalar ∘ list broadcast
+        let out2 = binary(&a, &l, BinOp::Sub).unwrap();
+        assert_eq!(out2.as_list_f64().unwrap().row(0), &[0.0, -1.0]);
+    }
+
+    #[test]
+    fn binary_mod_matches_python() {
+        let a = Column::from_f64(vec![-7.0, 7.0]);
+        let b = Column::from_f64(vec![3.0, -3.0]);
+        let m = binary(&a, &b, BinOp::Mod).unwrap();
+        assert_eq!(m.as_f64().unwrap(), &[2.0, -2.0]); // python -7%3=2, 7%-3=-2
+    }
+
+    #[test]
+    fn binary_length_mismatch() {
+        let a = Column::from_f64(vec![1.0]);
+        let b = Column::from_f64(vec![1.0, 2.0]);
+        assert!(binary(&a, &b, BinOp::Add).is_err());
+    }
+
+    #[test]
+    fn bucketize_bounds() {
+        let c = Column::from_f64(vec![-5.0, 0.0, 0.5, 1.0, 99.0]);
+        let b = bucketize(&c, &[0.0, 1.0]).unwrap();
+        assert_eq!(b.as_i64().unwrap(), &[0, 1, 1, 2, 2]);
+        assert!(bucketize(&c, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn nulls_propagate() {
+        let a = Column::from_f64_opt(vec![Some(1.0), None]);
+        let b = Column::from_f64(vec![1.0, 1.0]);
+        let out = binary(&a, &b, BinOp::Add).unwrap();
+        assert!(out.is_null(1));
+        let u = unary(&a, &UnaryOp::Exp).unwrap();
+        assert!(u.is_null(1));
+    }
+}

@@ -1,0 +1,44 @@
+//! Vectorised column kernels — the engine's "native transformations".
+//!
+//! Every transformer in [`crate::transformers`] is a thin configuration
+//! struct over a kernel in this module. Kernels operate column-at-a-time
+//! over contiguous buffers (the analogue of Spark's Catalyst-optimisable
+//! native expressions); the row-at-a-time boxed alternative lives in
+//! [`crate::baselines`] and exists only to reproduce the paper's
+//! native-vs-UDF comparison (experiment C2).
+//!
+//! Conventions:
+//! * numeric math computes in `f64` and returns `F64` (Spark's `double`
+//!   semantics); transformers apply `outputDtype` casts on top;
+//! * null masks propagate: any null input row yields a null output row;
+//! * list kernels run element-wise over the flat `values` buffer, reusing
+//!   the scalar kernel bodies — this is what makes Kamae "nested-sequence
+//!   native" without per-row boxing.
+
+pub mod array;
+pub mod cast;
+pub mod date;
+pub mod geo;
+pub mod hash;
+pub mod logical;
+pub mod math;
+pub mod regex;
+pub mod string_ops;
+
+use crate::dataframe::Column;
+
+/// Merge null masks of several columns (row is null if null in any input).
+pub(crate) fn merge_nulls(cols: &[&Column]) -> Option<Vec<bool>> {
+    let masks: Vec<&Vec<bool>> = cols.iter().filter_map(|c| c.nulls()).collect();
+    if masks.is_empty() {
+        return None;
+    }
+    let n = cols[0].len();
+    let mut out = vec![false; n];
+    for m in masks {
+        for (o, &b) in out.iter_mut().zip(m.iter()) {
+            *o |= b;
+        }
+    }
+    Some(out)
+}

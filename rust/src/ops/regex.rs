@@ -1,0 +1,535 @@
+//! A small backtracking regex engine — substrate for the RegexReplace /
+//! RegexExtract transformers (no `regex` crate for the library itself in
+//! the offline vendor set, and these ops are ingress-side only, so no
+//! python mirror is needed).
+//!
+//! Supported syntax (the subset Kamae's preprocessing configs use):
+//! `.` any char · `*` `+` `?` quantifiers (greedy) · `[abc]`, `[a-z]`,
+//! `[^...]` classes · `\d \w \s \D \W \S` · escapes `\.` etc ·
+//! `( ... )` capture groups · `|` alternation · `^ $` anchors.
+//! No lazy quantifiers, backrefs, or lookaround — configs needing those
+//! belong in a custom transformer.
+
+use crate::dataframe::Column;
+use crate::error::{KamaeError, Result};
+
+/// A compiled regular expression.
+#[derive(Debug, Clone)]
+pub struct Regex {
+    prog: Vec<Node>,
+    n_groups: usize,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Char(char),
+    Any,
+    Class { negated: bool, items: Vec<ClassItem> },
+    Star(Box<Node>),
+    Plus(Box<Node>),
+    Quest(Box<Node>),
+    Group(usize, Vec<Vec<Node>>), // group index, alternatives
+    StartAnchor,
+    EndAnchor,
+}
+
+#[derive(Debug, Clone)]
+enum ClassItem {
+    Char(char),
+    Range(char, char),
+    Digit(bool),  // \d / \D
+    Word(bool),   // \w / \W
+    Space(bool),  // \s / \S
+}
+
+impl Regex {
+    /// Compile a pattern.
+    pub fn new(pattern: &str) -> Result<Regex> {
+        let mut p = RegexParser {
+            chars: pattern.chars().collect(),
+            pos: 0,
+            group_count: 0,
+        };
+        let alts = p.alternation()?;
+        if p.pos != p.chars.len() {
+            return Err(KamaeError::InvalidConfig(format!(
+                "regex parse error at char {} in {pattern:?}",
+                p.pos
+            )));
+        }
+        let n_groups = p.group_count;
+        // wrap top level in group 0
+        Ok(Regex { prog: vec![Node::Group(0, alts)], n_groups: n_groups + 1 })
+    }
+
+    /// First match in `text`: returns (start, end, group captures).
+    pub fn find(&self, text: &str) -> Option<Match> {
+        let chars: Vec<char> = text.chars().collect();
+        for start in 0..=chars.len() {
+            let mut caps = vec![None; self.n_groups];
+            if let Some(end) = match_seq(&self.prog, &chars, start, &mut caps) {
+                return Some(Match { start, end, caps });
+            }
+            // ^-anchored patterns can only match at 0
+            if matches!(first_atom(&self.prog), Some(Node::StartAnchor)) {
+                break;
+            }
+        }
+        None
+    }
+
+    /// Whether the pattern matches anywhere in `text`.
+    pub fn is_match(&self, text: &str) -> bool {
+        self.find(text).is_some()
+    }
+
+    /// Replace all non-overlapping matches with `rep` (supports `$1`..`$9`
+    /// group references and `$0` for the whole match).
+    pub fn replace_all(&self, text: &str, rep: &str) -> String {
+        let chars: Vec<char> = text.chars().collect();
+        let mut out = String::new();
+        let mut i = 0usize;
+        while i <= chars.len() {
+            let rest: String = chars[i..].iter().collect();
+            match self.find(&rest) {
+                Some(m) => {
+                    // m offsets are relative to rest
+                    out.extend(&chars[i..i + m.start]);
+                    out.push_str(&expand(rep, &rest, &m));
+                    let advance = if m.end > m.start { m.end } else {
+                        // empty match: copy one char to guarantee progress
+                        if i + m.start < chars.len() {
+                            out.push(chars[i + m.start]);
+                        }
+                        m.end + 1
+                    };
+                    i += advance.max(1);
+                }
+                None => {
+                    out.extend(&chars[i..]);
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Extract group `g` of the first match, or `""` if no match.
+    pub fn extract(&self, text: &str, g: usize) -> String {
+        match self.find(text) {
+            Some(m) => m.group(text, g).unwrap_or_default(),
+            None => String::new(),
+        }
+    }
+}
+
+/// A regex match: char offsets plus group capture spans.
+#[derive(Debug, Clone)]
+pub struct Match {
+    pub start: usize,
+    pub end: usize,
+    caps: Vec<Option<(usize, usize)>>,
+}
+
+impl Match {
+    /// Text of capture group `g` (0 = whole match).
+    pub fn group(&self, text: &str, g: usize) -> Option<String> {
+        let (s, e) = (*self.caps.get(g)?)?;
+        let chars: Vec<char> = text.chars().collect();
+        Some(chars[s..e].iter().collect())
+    }
+}
+
+fn expand(rep: &str, text: &str, m: &Match) -> String {
+    let mut out = String::new();
+    let mut chars = rep.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '$' {
+            if let Some(d) = chars.peek().and_then(|c| c.to_digit(10)) {
+                chars.next();
+                out.push_str(&m.group(text, d as usize).unwrap_or_default());
+                continue;
+            }
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn first_atom(prog: &[Node]) -> Option<&Node> {
+    match prog.first() {
+        Some(Node::Group(_, alts)) => alts.first().and_then(|a| a.first()),
+        n => n,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matcher: classic backtracking over the node sequence
+
+fn match_seq(
+    nodes: &[Node],
+    chars: &[char],
+    pos: usize,
+    caps: &mut Vec<Option<(usize, usize)>>,
+) -> Option<usize> {
+    let Some((head, rest)) = nodes.split_first() else {
+        return Some(pos);
+    };
+    match head {
+        Node::StartAnchor => {
+            if pos == 0 {
+                match_seq(rest, chars, pos, caps)
+            } else {
+                None
+            }
+        }
+        Node::EndAnchor => {
+            if pos == chars.len() {
+                match_seq(rest, chars, pos, caps)
+            } else {
+                None
+            }
+        }
+        Node::Char(c) => {
+            if chars.get(pos) == Some(c) {
+                match_seq(rest, chars, pos + 1, caps)
+            } else {
+                None
+            }
+        }
+        Node::Any => {
+            if pos < chars.len() {
+                match_seq(rest, chars, pos + 1, caps)
+            } else {
+                None
+            }
+        }
+        Node::Class { negated, items } => {
+            let c = *chars.get(pos)?;
+            if class_matches(items, c) != *negated {
+                match_seq(rest, chars, pos + 1, caps)
+            } else {
+                None
+            }
+        }
+        Node::Star(inner) => match_repeat(inner, 0, usize::MAX, rest, chars, pos, caps),
+        Node::Plus(inner) => match_repeat(inner, 1, usize::MAX, rest, chars, pos, caps),
+        Node::Quest(inner) => match_repeat(inner, 0, 1, rest, chars, pos, caps),
+        Node::Group(idx, alts) => {
+            for alt in alts {
+                let saved = caps.clone();
+                if let Some(mid) = match_seq(alt, chars, pos, caps) {
+                    caps[*idx] = Some((pos, mid));
+                    if let Some(end) = match_seq(rest, chars, mid, caps) {
+                        return Some(end);
+                    }
+                }
+                *caps = saved;
+            }
+            None
+        }
+    }
+}
+
+/// Greedy repeat with backtracking: try the longest count first.
+fn match_repeat(
+    inner: &Node,
+    min: usize,
+    max: usize,
+    rest: &[Node],
+    chars: &[char],
+    pos: usize,
+    caps: &mut Vec<Option<(usize, usize)>>,
+) -> Option<usize> {
+    // collect all reachable end positions of inner^k
+    let mut ends = vec![pos];
+    let mut cur = pos;
+    let one = std::slice::from_ref(inner);
+    while ends.len() - 1 < max {
+        match match_seq(one, chars, cur, caps) {
+            Some(next) if next > cur || ends.len() - 1 < min => {
+                ends.push(next);
+                if next == cur {
+                    break; // empty-width inner: stop
+                }
+                cur = next;
+            }
+            _ => break,
+        }
+    }
+    if ends.len() - 1 < min {
+        return None;
+    }
+    for &end in ends.iter().skip(min).rev() {
+        let saved = caps.clone();
+        if let Some(res) = match_seq(rest, chars, end, caps) {
+            return Some(res);
+        }
+        *caps = saved;
+    }
+    None
+}
+
+fn class_matches(items: &[ClassItem], c: char) -> bool {
+    items.iter().any(|it| match it {
+        ClassItem::Char(x) => c == *x,
+        ClassItem::Range(lo, hi) => (*lo..=*hi).contains(&c),
+        ClassItem::Digit(pos) => c.is_ascii_digit() == *pos,
+        ClassItem::Word(pos) => (c.is_alphanumeric() || c == '_') == *pos,
+        ClassItem::Space(pos) => c.is_whitespace() == *pos,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// parser
+
+struct RegexParser {
+    chars: Vec<char>,
+    pos: usize,
+    group_count: usize,
+}
+
+impl RegexParser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn alternation(&mut self) -> Result<Vec<Vec<Node>>> {
+        let mut alts = vec![self.sequence()?];
+        while self.peek() == Some('|') {
+            self.bump();
+            alts.push(self.sequence()?);
+        }
+        Ok(alts)
+    }
+
+    fn sequence(&mut self) -> Result<Vec<Node>> {
+        let mut nodes = Vec::new();
+        while let Some(c) = self.peek() {
+            if c == '|' || c == ')' {
+                break;
+            }
+            let atom = self.atom()?;
+            let node = match self.peek() {
+                Some('*') => {
+                    self.bump();
+                    Node::Star(Box::new(atom))
+                }
+                Some('+') => {
+                    self.bump();
+                    Node::Plus(Box::new(atom))
+                }
+                Some('?') => {
+                    self.bump();
+                    Node::Quest(Box::new(atom))
+                }
+                _ => atom,
+            };
+            nodes.push(node);
+        }
+        Ok(nodes)
+    }
+
+    fn atom(&mut self) -> Result<Node> {
+        match self.bump() {
+            Some('.') => Ok(Node::Any),
+            Some('^') => Ok(Node::StartAnchor),
+            Some('$') => Ok(Node::EndAnchor),
+            Some('(') => {
+                self.group_count += 1;
+                let idx = self.group_count;
+                let alts = self.alternation()?;
+                if self.bump() != Some(')') {
+                    return Err(KamaeError::InvalidConfig("regex: unclosed group".into()));
+                }
+                Ok(Node::Group(idx, alts))
+            }
+            Some('[') => self.class(),
+            Some('\\') => self.escape(),
+            Some(c) if !"*+?".contains(c) => Ok(Node::Char(c)),
+            Some(c) => Err(KamaeError::InvalidConfig(format!(
+                "regex: dangling quantifier '{c}'"
+            ))),
+            None => Err(KamaeError::InvalidConfig("regex: unexpected end".into())),
+        }
+    }
+
+    fn escape(&mut self) -> Result<Node> {
+        let c = self
+            .bump()
+            .ok_or_else(|| KamaeError::InvalidConfig("regex: trailing backslash".into()))?;
+        Ok(match c {
+            'd' => Node::Class { negated: false, items: vec![ClassItem::Digit(true)] },
+            'D' => Node::Class { negated: false, items: vec![ClassItem::Digit(false)] },
+            'w' => Node::Class { negated: false, items: vec![ClassItem::Word(true)] },
+            'W' => Node::Class { negated: false, items: vec![ClassItem::Word(false)] },
+            's' => Node::Class { negated: false, items: vec![ClassItem::Space(true)] },
+            'S' => Node::Class { negated: false, items: vec![ClassItem::Space(false)] },
+            'n' => Node::Char('\n'),
+            't' => Node::Char('\t'),
+            'r' => Node::Char('\r'),
+            c => Node::Char(c),
+        })
+    }
+
+    fn class(&mut self) -> Result<Node> {
+        let negated = self.peek() == Some('^');
+        if negated {
+            self.bump();
+        }
+        let mut items = Vec::new();
+        loop {
+            match self.bump() {
+                None => return Err(KamaeError::InvalidConfig("regex: unclosed class".into())),
+                Some(']') => break,
+                Some('\\') => {
+                    let c = self.bump().ok_or_else(|| {
+                        KamaeError::InvalidConfig("regex: trailing backslash in class".into())
+                    })?;
+                    items.push(match c {
+                        'd' => ClassItem::Digit(true),
+                        'w' => ClassItem::Word(true),
+                        's' => ClassItem::Space(true),
+                        'n' => ClassItem::Char('\n'),
+                        't' => ClassItem::Char('\t'),
+                        c => ClassItem::Char(c),
+                    });
+                }
+                Some(lo) => {
+                    if self.peek() == Some('-')
+                        && self.chars.get(self.pos + 1).map_or(false, |&c| c != ']')
+                    {
+                        self.bump(); // '-'
+                        let hi = self.bump().unwrap();
+                        items.push(ClassItem::Range(lo, hi));
+                    } else {
+                        items.push(ClassItem::Char(lo));
+                    }
+                }
+            }
+        }
+        Ok(Node::Class { negated, items })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// column kernels
+
+/// Replace all regex matches in each row.
+pub fn regex_replace(col: &Column, re: &Regex, rep: &str) -> Result<Column> {
+    match col {
+        Column::Str(v, n) => Ok(Column::Str(
+            v.iter().map(|s| re.replace_all(s, rep)).collect(),
+            n.clone(),
+        )),
+        Column::ListStr(l) => Ok(Column::ListStr(crate::dataframe::ListColumn {
+            values: l.values.iter().map(|s| re.replace_all(s, rep)).collect(),
+            offsets: l.offsets.clone(),
+        })),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "string".into(),
+            found: other.dtype().name(),
+            context: "regex_replace".into(),
+        }),
+    }
+}
+
+/// Extract capture group `g` of the first match per row ("" on no match).
+pub fn regex_extract(col: &Column, re: &Regex, g: usize) -> Result<Column> {
+    let v = col.as_str()?;
+    Ok(Column::Str(
+        v.iter().map(|s| re.extract(s, g)).collect(),
+        col.nulls().cloned(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_and_classes() {
+        let re = Regex::new("ab").unwrap();
+        assert!(re.is_match("xxabyy"));
+        assert!(!re.is_match("a b"));
+        let re = Regex::new(r"[a-c]+\d").unwrap();
+        assert!(re.is_match("zzcab9"));
+        assert!(!re.is_match("d9"));
+        let re = Regex::new("[^0-9]+").unwrap();
+        assert_eq!(re.find("123abc").map(|m| (m.start, m.end)), Some((3, 6)));
+    }
+
+    #[test]
+    fn quantifiers_and_backtracking() {
+        let re = Regex::new("a*ab").unwrap();
+        assert!(re.is_match("aaab")); // needs backtracking
+        let re = Regex::new("colou?r").unwrap();
+        assert!(re.is_match("color") && re.is_match("colour"));
+        let re = Regex::new("(ab)+c").unwrap();
+        assert!(re.is_match("ababc"));
+        assert!(!re.is_match("abac"));
+    }
+
+    #[test]
+    fn anchors() {
+        let re = Regex::new("^abc$").unwrap();
+        assert!(re.is_match("abc"));
+        assert!(!re.is_match("xabc"));
+        assert!(!re.is_match("abcx"));
+    }
+
+    #[test]
+    fn alternation_and_groups() {
+        let re = Regex::new("(cat|dog)s?").unwrap();
+        let m = re.find("hotdogs!").unwrap();
+        assert_eq!(m.group("hotdogs!", 1).unwrap(), "dog");
+        assert_eq!(m.group("hotdogs!", 0).unwrap(), "dogs");
+    }
+
+    #[test]
+    fn replace_with_groups() {
+        let re = Regex::new(r"(\d+)-(\d+)").unwrap();
+        assert_eq!(re.replace_all("range 3-7 and 10-20", "$2..$1"), "range 7..3 and 20..10");
+        let re = Regex::new(r"\s+").unwrap();
+        assert_eq!(re.replace_all("a  b\t c", " "), "a b c");
+    }
+
+    #[test]
+    fn extract_column() {
+        let re = Regex::new(r"(\w+)@(\w+)").unwrap();
+        let c = Column::from_str(vec!["bob@host", "nope"]);
+        let e = regex_extract(&c, &re, 2).unwrap();
+        assert_eq!(e.as_str().unwrap(), &["host".to_string(), String::new()]);
+    }
+
+    #[test]
+    fn replace_column_and_lists() {
+        let re = Regex::new(r"\d").unwrap();
+        let c = Column::from_str_rows(vec![vec!["a1", "b22"]]);
+        let r = regex_replace(&c, &re, "#").unwrap();
+        assert_eq!(r.as_list_str().unwrap().row(0), &["a#".to_string(), "b##".to_string()]);
+    }
+
+    #[test]
+    fn empty_match_progress() {
+        let re = Regex::new("x*").unwrap();
+        // must terminate and leave non-x chars in place
+        // (matches python: re.sub('x*', '-', 'abxxc') == '-a-b--c-')
+        assert_eq!(re.replace_all("abxxc", "-"), "-a-b--c-");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Regex::new("(unclosed").is_err());
+        assert!(Regex::new("[unclosed").is_err());
+        assert!(Regex::new("*dangling").is_err());
+    }
+}

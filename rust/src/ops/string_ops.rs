@@ -1,0 +1,302 @@
+//! String kernels (ingress-side ops).
+//!
+//! These run in the offline engine *and* verbatim in the serving ingress
+//! stage — a single implementation on both sides of the train/serve
+//! boundary, which is the paper's core parity argument. They never enter
+//! the compiled graph (HLO has no string dtype; see DESIGN.md
+//! §Substitutions).
+
+use crate::dataframe::{Column, ListColumn};
+use crate::error::{KamaeError, Result};
+
+/// Case transformations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CaseMode {
+    Upper,
+    Lower,
+    Title,
+}
+
+pub fn change_case(col: &Column, mode: CaseMode) -> Result<Column> {
+    let f = |s: &String| -> String {
+        match mode {
+            CaseMode::Upper => s.to_uppercase(),
+            CaseMode::Lower => s.to_lowercase(),
+            CaseMode::Title => title_case(s),
+        }
+    };
+    map_str(col, f)
+}
+
+fn title_case(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut at_start = true;
+    for c in s.chars() {
+        if c.is_whitespace() {
+            at_start = true;
+            out.push(c);
+        } else if at_start {
+            out.extend(c.to_uppercase());
+            at_start = false;
+        } else {
+            out.extend(c.to_lowercase());
+        }
+    }
+    out
+}
+
+/// Trim whitespace from both ends.
+pub fn trim(col: &Column) -> Result<Column> {
+    map_str(col, |s| s.trim().to_string())
+}
+
+/// Substring by char offsets [start, start+len) (start 0-based; Spark's
+/// substring is 1-based but Kamae normalises to 0-based).
+pub fn substring(col: &Column, start: usize, len: usize) -> Result<Column> {
+    map_str(col, |s| s.chars().skip(start).take(len).collect())
+}
+
+/// Literal find/replace (all occurrences).
+pub fn replace_literal(col: &Column, from: &str, to: &str) -> Result<Column> {
+    map_str(col, |s| s.replace(from, to))
+}
+
+/// Left-pad with a char to a minimum width.
+pub fn lpad(col: &Column, width: usize, pad: char) -> Result<Column> {
+    map_str(col, |s| {
+        let n = s.chars().count();
+        if n >= width {
+            s.clone()
+        } else {
+            let mut out = String::with_capacity(width);
+            out.extend(std::iter::repeat(pad).take(width - n));
+            out.push_str(s);
+            out
+        }
+    })
+}
+
+/// Concatenate several string columns row-wise with a separator
+/// (numeric inputs are cast to their canonical string form first).
+pub fn concat_cols(cols: &[&Column], separator: &str) -> Result<Column> {
+    if cols.is_empty() {
+        return Err(KamaeError::InvalidConfig("concat of zero columns".into()));
+    }
+    let string_views: Vec<Vec<String>> = cols
+        .iter()
+        .map(|c| super::cast::to_string_vec(c))
+        .collect::<Result<_>>()?;
+    let n = string_views[0].len();
+    for v in &string_views {
+        if v.len() != n {
+            return Err(KamaeError::LengthMismatch {
+                left: v.len(),
+                right: n,
+                context: "concat_cols".into(),
+            });
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut s = String::new();
+        for (j, v) in string_views.iter().enumerate() {
+            if j > 0 {
+                s.push_str(separator);
+            }
+            s.push_str(&v[i]);
+        }
+        out.push(s);
+    }
+    Ok(Column::Str(out, super::merge_nulls(cols)))
+}
+
+/// Split on a literal separator into a ragged list column
+/// (StringToStringListTransformer before padding).
+pub fn split(col: &Column, separator: &str) -> Result<Column> {
+    let v = col.as_str()?;
+    let mut values = Vec::new();
+    let mut offsets = Vec::with_capacity(v.len() + 1);
+    offsets.push(0u32);
+    for s in v {
+        if !s.is_empty() {
+            values.extend(s.split(separator).map(str::to_string));
+        }
+        offsets.push(values.len() as u32);
+    }
+    Ok(Column::ListStr(ListColumn { values, offsets }))
+}
+
+/// Pad (with `default`) or truncate every row of a list column to exactly
+/// `len` elements — the export contract for fixed-shape sequence features.
+pub fn pad_list(col: &Column, len: usize, default: &str) -> Result<Column> {
+    match col {
+        Column::ListStr(l) => {
+            let mut values = Vec::with_capacity(l.len() * len);
+            for row in l.rows() {
+                for i in 0..len {
+                    values.push(row.get(i).cloned().unwrap_or_else(|| default.to_string()));
+                }
+            }
+            let offsets = (0..=l.len() as u32).map(|i| i * len as u32).collect();
+            Ok(Column::ListStr(ListColumn { values, offsets }))
+        }
+        Column::ListI64(l) => {
+            let d: i64 = default.parse().map_err(|_| {
+                KamaeError::InvalidConfig(format!("pad default {default:?} is not int64"))
+            })?;
+            let mut values = Vec::with_capacity(l.len() * len);
+            for row in l.rows() {
+                for i in 0..len {
+                    values.push(row.get(i).copied().unwrap_or(d));
+                }
+            }
+            let offsets = (0..=l.len() as u32).map(|i| i * len as u32).collect();
+            Ok(Column::ListI64(ListColumn { values, offsets }))
+        }
+        Column::ListF64(l) => {
+            let d: f64 = default.parse().map_err(|_| {
+                KamaeError::InvalidConfig(format!("pad default {default:?} is not float64"))
+            })?;
+            let mut values = Vec::with_capacity(l.len() * len);
+            for row in l.rows() {
+                for i in 0..len {
+                    values.push(row.get(i).copied().unwrap_or(d));
+                }
+            }
+            let offsets = (0..=l.len() as u32).map(|i| i * len as u32).collect();
+            Ok(Column::ListF64(ListColumn { values, offsets }))
+        }
+        other => Err(KamaeError::TypeMismatch {
+            expected: "list".into(),
+            found: other.dtype().name(),
+            context: "pad_list".into(),
+        }),
+    }
+}
+
+/// Contains / starts-with / ends-with predicates → Bool column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatchMode {
+    Contains,
+    StartsWith,
+    EndsWith,
+}
+
+pub fn string_match(col: &Column, needle: &str, mode: MatchMode) -> Result<Column> {
+    let v = col.as_str()?;
+    let data = v
+        .iter()
+        .map(|s| match mode {
+            MatchMode::Contains => s.contains(needle),
+            MatchMode::StartsWith => s.starts_with(needle),
+            MatchMode::EndsWith => s.ends_with(needle),
+        })
+        .collect();
+    Ok(Column::Bool(data, col.nulls().cloned()))
+}
+
+/// String length in chars.
+pub fn str_len(col: &Column) -> Result<Column> {
+    let v = col.as_str()?;
+    Ok(Column::I64(
+        v.iter().map(|s| s.chars().count() as i64).collect(),
+        col.nulls().cloned(),
+    ))
+}
+
+/// Map a string function over a Str or ListStr column.
+fn map_str(col: &Column, f: impl Fn(&String) -> String) -> Result<Column> {
+    match col {
+        Column::Str(v, n) => Ok(Column::Str(v.iter().map(f).collect(), n.clone())),
+        Column::ListStr(l) => Ok(Column::ListStr(ListColumn {
+            values: l.values.iter().map(f).collect(),
+            offsets: l.offsets.clone(),
+        })),
+        other => Err(KamaeError::TypeMismatch {
+            expected: "string".into(),
+            found: other.dtype().name(),
+            context: "string op".into(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_modes() {
+        let c = Column::from_str(vec!["hello WORLD"]);
+        assert_eq!(
+            change_case(&c, CaseMode::Upper).unwrap().as_str().unwrap()[0],
+            "HELLO WORLD"
+        );
+        assert_eq!(
+            change_case(&c, CaseMode::Lower).unwrap().as_str().unwrap()[0],
+            "hello world"
+        );
+        assert_eq!(
+            change_case(&c, CaseMode::Title).unwrap().as_str().unwrap()[0],
+            "Hello World"
+        );
+    }
+
+    #[test]
+    fn case_on_list() {
+        let c = Column::from_str_rows(vec![vec!["a", "B"]]);
+        let u = change_case(&c, CaseMode::Upper).unwrap();
+        assert_eq!(u.as_list_str().unwrap().row(0), &["A".to_string(), "B".to_string()]);
+    }
+
+    #[test]
+    fn split_and_pad() {
+        let c = Column::from_str(vec!["Action|Comedy", "Drama", ""]);
+        let s = split(&c, "|").unwrap();
+        let l = s.as_list_str().unwrap();
+        assert_eq!(l.row(0), &["Action".to_string(), "Comedy".to_string()]);
+        assert_eq!(l.row(2), &[] as &[String]);
+        let p = pad_list(&s, 3, "PAD").unwrap();
+        let p = p.as_list_str().unwrap();
+        assert_eq!(p.row(0), &["Action".to_string(), "Comedy".to_string(), "PAD".to_string()]);
+        assert_eq!(p.row(2), &vec!["PAD".to_string(); 3][..]);
+        assert!(p.is_fixed_width(3));
+    }
+
+    #[test]
+    fn pad_truncates() {
+        let c = Column::from_str_rows(vec![vec!["a", "b", "c", "d"]]);
+        let p = pad_list(&c, 2, "x").unwrap();
+        assert_eq!(p.as_list_str().unwrap().row(0), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn concat_mixed_types() {
+        let a = Column::from_str(vec!["US", "GB"]);
+        let b = Column::from_i64(vec![1, 2]);
+        let c = concat_cols(&[&a, &b], "_").unwrap();
+        assert_eq!(c.as_str().unwrap(), &["US_1".to_string(), "GB_2".to_string()]);
+    }
+
+    #[test]
+    fn substring_and_pad_chars() {
+        let c = Column::from_str(vec!["héllo"]);
+        assert_eq!(substring(&c, 1, 3).unwrap().as_str().unwrap()[0], "éll");
+        assert_eq!(lpad(&c, 7, '0').unwrap().as_str().unwrap()[0], "00héllo");
+    }
+
+    #[test]
+    fn matches_and_len() {
+        let c = Column::from_str(vec!["wifi,pool", "spa"]);
+        let m = string_match(&c, "pool", MatchMode::Contains).unwrap();
+        assert_eq!(m.as_bool().unwrap(), &[true, false]);
+        assert_eq!(str_len(&c).unwrap().as_i64().unwrap(), &[9, 3]);
+    }
+
+    #[test]
+    fn pad_numeric_lists() {
+        let c = Column::from_i64_rows(vec![vec![1], vec![2, 3]]);
+        let p = pad_list(&c, 2, "-1").unwrap();
+        assert_eq!(p.as_list_i64().unwrap().row(0), &[1, -1]);
+        assert!(pad_list(&c, 2, "zzz").is_err());
+    }
+}

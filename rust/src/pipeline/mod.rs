@@ -1,0 +1,198 @@
+//! The pipeline API — Spark's `Pipeline`/`PipelineModel` programming model
+//! over the Kamae transformer/estimator library.
+//!
+//! * A [`Transformer`] is a configured, stateless (or already-fitted)
+//!   column operation: `DataFrame -> DataFrame`.
+//! * An [`Estimator`] fits on a [`Dataset`] (distributed aggregation) and
+//!   produces a fitted `Transformer` ("model" in Spark terms).
+//! * A [`Pipeline`] is an ordered list of stages. `fit` runs stages in
+//!   order, fitting each estimator on the data as transformed by all
+//!   previous stages (Spark semantics), yielding a [`PipelineModel`].
+//! * `PipelineModel::to_graph_spec` exports the fitted pipeline as a
+//!   [`GraphSpec`] — the analogue of Kamae's `build_keras_model()`.
+
+pub mod catalog;
+pub mod tuner;
+
+use crate::dataframe::DataFrame;
+use crate::engine::Dataset;
+use crate::error::{KamaeError, Result};
+use crate::export::{GraphSpec, SpecBuilder, SpecInput};
+use crate::util::json::Json;
+
+/// A configured column transformation. Implementations live in
+/// [`crate::transformers`] (stateless) and as the fitted models of
+/// [`crate::estimators`].
+pub trait Transformer: Send + Sync {
+    /// Unique stage name (Kamae's `layerName`).
+    fn layer_name(&self) -> &str;
+
+    /// Registry type tag used by save/load.
+    fn type_name(&self) -> &'static str;
+
+    /// Apply to a DataFrame in place (appends/replaces output columns).
+    fn transform(&self, df: &mut DataFrame) -> Result<()>;
+
+    /// Contribute this stage's ops to a GraphSpec under construction.
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()>;
+
+    /// Serialise parameters (without the type tag — the registry adds it).
+    fn save(&self) -> Json;
+}
+
+/// An unfitted stage that learns state from data.
+pub trait Estimator: Send + Sync {
+    /// Unique stage name (Kamae's `layerName`).
+    fn layer_name(&self) -> &str;
+
+    /// Registry type tag used by save/load.
+    fn type_name(&self) -> &'static str;
+
+    /// Fit on a (partitioned) dataset, producing the fitted transformer.
+    fn fit(&self, data: &Dataset) -> Result<Box<dyn Transformer>>;
+
+    /// Serialise parameters (for saving unfitted pipelines).
+    fn save(&self) -> Json;
+}
+
+/// A pipeline stage: either ready-to-run or needing a fit.
+pub enum Stage {
+    Transformer(Box<dyn Transformer>),
+    Estimator(Box<dyn Estimator>),
+}
+
+impl Stage {
+    /// Convenience constructor from a concrete transformer.
+    pub fn transformer<T: Transformer + 'static>(t: T) -> Stage {
+        Stage::Transformer(Box::new(t))
+    }
+
+    /// Convenience constructor from a concrete estimator.
+    pub fn estimator<E: Estimator + 'static>(e: E) -> Stage {
+        Stage::Estimator(Box::new(e))
+    }
+
+    pub fn layer_name(&self) -> &str {
+        match self {
+            Stage::Transformer(t) => t.layer_name(),
+            Stage::Estimator(e) => e.layer_name(),
+        }
+    }
+}
+
+/// An ordered preprocessing pipeline (`KamaeSparkPipeline` in the paper's
+/// Listing 1).
+pub struct Pipeline {
+    pub stages: Vec<Stage>,
+}
+
+impl Pipeline {
+    pub fn new(stages: Vec<Stage>) -> Pipeline {
+        Pipeline { stages }
+    }
+
+    /// Fit the pipeline: estimators fit on the data as transformed by all
+    /// preceding stages; transformers apply eagerly so later estimators
+    /// see their outputs.
+    pub fn fit(&self, data: &Dataset) -> Result<PipelineModel> {
+        let mut current = data.clone();
+        let mut fitted: Vec<Box<dyn Transformer>> = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            let t: Box<dyn Transformer> = match stage {
+                Stage::Transformer(t) => {
+                    // re-load through the registry to get an owned copy
+                    crate::transformers::load(&with_type(t.save(), t.type_name()))?
+                }
+                Stage::Estimator(e) => e.fit(&current)?,
+            };
+            current = current.map(|df| {
+                let mut df = df.clone();
+                t.transform(&mut df)?;
+                Ok(df)
+            })?;
+            fitted.push(t);
+        }
+        Ok(PipelineModel { stages: fitted })
+    }
+}
+
+/// A fitted pipeline: pure transformers end-to-end.
+pub struct PipelineModel {
+    pub stages: Vec<Box<dyn Transformer>>,
+}
+
+impl PipelineModel {
+    /// Transform a single DataFrame (one partition / one request batch).
+    pub fn transform_df(&self, mut df: DataFrame) -> Result<DataFrame> {
+        for t in &self.stages {
+            t.transform(&mut df)?;
+        }
+        Ok(df)
+    }
+
+    /// Transform a partitioned dataset in parallel.
+    pub fn transform(&self, data: &Dataset) -> Result<Dataset> {
+        data.map(|df| self.transform_df(df.clone()))
+    }
+
+    /// Export as a GraphSpec (the `build_keras_model` analogue).
+    ///
+    /// `inputs` is the serving input schema (Listing 1's
+    /// `tf_input_schema`); `outputs` the columns the compiled graph must
+    /// return.
+    pub fn to_graph_spec(
+        &self,
+        name: &str,
+        inputs: Vec<SpecInput>,
+        outputs: &[&str],
+    ) -> Result<GraphSpec> {
+        let mut b = SpecBuilder::new(name, inputs)?;
+        for t in &self.stages {
+            t.spec_nodes(&mut b)?;
+        }
+        b.finish(outputs)
+    }
+
+    // ---- persistence ---------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|t| with_type(t.save(), t.type_name()))
+            .collect();
+        let mut j = Json::object();
+        j.set("format", "kamae-pipeline-model/1");
+        j.set("stages", Json::Array(stages));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<PipelineModel> {
+        let format = j.req_str("format")?;
+        if format != "kamae-pipeline-model/1" {
+            return Err(KamaeError::Serde(format!("unknown pipeline format: {format}")));
+        }
+        let stages = j
+            .req_array("stages")?
+            .iter()
+            .map(crate::transformers::load)
+            .collect::<Result<_>>()?;
+        Ok(PipelineModel { stages })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<PipelineModel> {
+        let text = std::fs::read_to_string(path)?;
+        PipelineModel::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Attach the registry type tag to a transformer's parameter object.
+pub(crate) fn with_type(mut params: Json, type_name: &str) -> Json {
+    params.set("type", type_name);
+    params
+}

@@ -1,0 +1,237 @@
+//! Preprocessing hyperparameter search — the reproduction of the paper's
+//! **Keras Tuner support**: "an exported preprocessing model can be fused
+//! with a neural model … Keras Tuner can be configured to search for the
+//! best hyperparameter settings of the preprocessing layers …
+//! particularly useful for tuning parameters such as the number of hash
+//! bins, embedding dimensions, or thresholds in feature engineering".
+//!
+//! Here the tunable is any closure `params -> Pipeline`; the tuner fits
+//! each candidate on the training split and scores it on a validation
+//! split with a user-supplied objective (e.g. downstream-proxy metrics
+//! like collision rate, coverage, or a model's loss). Grid and random
+//! search are provided — the search *strategy* is not the paper's
+//! contribution, the tunable-preprocessing plumbing is.
+
+use std::collections::BTreeMap;
+
+use crate::engine::Dataset;
+use crate::error::Result;
+use crate::pipeline::{Pipeline, PipelineModel};
+use crate::util::rng::Rng;
+
+/// One hyperparameter assignment (name → integer-valued setting; Kamae's
+/// tunables — bins, hash counts, list lengths, vocab caps — are integer).
+pub type Params = BTreeMap<String, i64>;
+
+/// A search space dimension.
+#[derive(Debug, Clone)]
+pub struct ParamRange {
+    pub name: String,
+    pub candidates: Vec<i64>,
+}
+
+/// Result of evaluating one candidate.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub params: Params,
+    /// Lower is better.
+    pub score: f64,
+}
+
+/// Tuner over a pipeline-builder closure.
+pub struct Tuner<'a> {
+    space: Vec<ParamRange>,
+    build: Box<dyn Fn(&Params) -> Pipeline + 'a>,
+    objective: Box<dyn Fn(&PipelineModel, &Dataset) -> Result<f64> + 'a>,
+}
+
+impl<'a> Tuner<'a> {
+    pub fn new(
+        space: Vec<ParamRange>,
+        build: impl Fn(&Params) -> Pipeline + 'a,
+        objective: impl Fn(&PipelineModel, &Dataset) -> Result<f64> + 'a,
+    ) -> Tuner<'a> {
+        Tuner { space, build: Box::new(build), objective: Box::new(objective) }
+    }
+
+    /// Exhaustive grid search. Returns trials sorted best-first.
+    pub fn grid_search(&self, train: &Dataset, valid: &Dataset) -> Result<Vec<Trial>> {
+        let mut trials = Vec::new();
+        let mut idx = vec![0usize; self.space.len()];
+        loop {
+            let params: Params = self
+                .space
+                .iter()
+                .zip(idx.iter())
+                .map(|(dim, &i)| (dim.name.clone(), dim.candidates[i]))
+                .collect();
+            trials.push(self.run_trial(&params, train, valid)?);
+            // odometer increment
+            let mut d = 0;
+            loop {
+                if d == self.space.len() {
+                    sort_trials(&mut trials);
+                    return Ok(trials);
+                }
+                idx[d] += 1;
+                if idx[d] < self.space[d].candidates.len() {
+                    break;
+                }
+                idx[d] = 0;
+                d += 1;
+            }
+        }
+    }
+
+    /// Random search with `budget` samples (with replacement).
+    pub fn random_search(
+        &self,
+        train: &Dataset,
+        valid: &Dataset,
+        budget: usize,
+        seed: u64,
+    ) -> Result<Vec<Trial>> {
+        let mut rng = Rng::new(seed);
+        let mut trials = Vec::with_capacity(budget);
+        for _ in 0..budget {
+            let params: Params = self
+                .space
+                .iter()
+                .map(|dim| {
+                    let i = rng.below(dim.candidates.len() as u64) as usize;
+                    (dim.name.clone(), dim.candidates[i])
+                })
+                .collect();
+            trials.push(self.run_trial(&params, train, valid)?);
+        }
+        sort_trials(&mut trials);
+        Ok(trials)
+    }
+
+    fn run_trial(&self, params: &Params, train: &Dataset, valid: &Dataset) -> Result<Trial> {
+        let pipeline = (self.build)(params);
+        let model = pipeline.fit(train)?;
+        let score = (self.objective)(&model, valid)?;
+        Ok(Trial { params: params.clone(), score })
+    }
+}
+
+fn sort_trials(trials: &mut [Trial]) {
+    trials.sort_by(|a, b| a.score.partial_cmp(&b.score).unwrap());
+}
+
+/// Ready-made objective: collision rate of an indexed column on the
+/// validation split — the metric that tunes `numBins` (the paper's
+/// canonical example of a tunable preprocessing parameter).
+pub fn collision_objective<'a>(
+    raw_col: &'a str,
+    indexed_col: &'a str,
+) -> impl Fn(&PipelineModel, &Dataset) -> Result<f64> + 'a {
+    move |model, valid| {
+        let df = model.transform_df(valid.collect()?)?;
+        let raw = crate::ops::cast::to_string_vec(df.column(raw_col)?)?;
+        let idx = df.column(indexed_col)?.as_i64()?;
+        let mut first: std::collections::HashMap<&str, i64> = std::collections::HashMap::new();
+        let mut codes: std::collections::HashMap<i64, &str> = std::collections::HashMap::new();
+        let mut distinct = 0usize;
+        let mut collided = 0usize;
+        for (t, &i) in raw.iter().zip(idx.iter()) {
+            if first.insert(t, i).is_none() {
+                distinct += 1;
+                match codes.get(&i) {
+                    Some(other) if *other != t.as_str() => collided += 1,
+                    _ => {
+                        codes.insert(i, t);
+                    }
+                }
+            }
+        }
+        Ok(collided as f64 / distinct.max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::{Column, DataFrame};
+    use crate::pipeline::Stage;
+    use crate::transformers::HashIndexTransformer;
+
+    fn token_ds(rows: usize, cardinality: u64, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let tokens: Vec<String> = (0..rows)
+            .map(|_| format!("tok_{}", rng.below(cardinality)))
+            .collect();
+        Dataset::from_dataframe(
+            DataFrame::new(vec![("t".into(), Column::from_str(tokens))]).unwrap(),
+            2,
+        )
+    }
+
+    #[test]
+    fn grid_search_prefers_more_bins() {
+        let train = token_ds(2_000, 800, 1);
+        let valid = token_ds(2_000, 800, 2);
+        let tuner = Tuner::new(
+            vec![ParamRange {
+                name: "numBins".into(),
+                candidates: vec![64, 512, 8192],
+            }],
+            |p| {
+                Pipeline::new(vec![Stage::transformer(HashIndexTransformer::new(
+                    "t",
+                    "t_idx",
+                    p["numBins"],
+                ))])
+            },
+            collision_objective("t", "t_idx"),
+        );
+        let trials = tuner.grid_search(&train, &valid).unwrap();
+        assert_eq!(trials.len(), 3);
+        // best trial must be the largest bin count, and strictly better
+        assert_eq!(trials[0].params["numBins"], 8192);
+        assert!(trials[0].score < trials.last().unwrap().score);
+    }
+
+    #[test]
+    fn random_search_covers_space() {
+        let train = token_ds(500, 100, 3);
+        let valid = token_ds(500, 100, 4);
+        let tuner = Tuner::new(
+            vec![
+                ParamRange { name: "numBins".into(), candidates: vec![32, 1024] },
+            ],
+            |p| {
+                Pipeline::new(vec![Stage::transformer(HashIndexTransformer::new(
+                    "t",
+                    "t_idx",
+                    p["numBins"],
+                ))])
+            },
+            collision_objective("t", "t_idx"),
+        );
+        let trials = tuner.random_search(&train, &valid, 6, 9).unwrap();
+        assert_eq!(trials.len(), 6);
+        assert!(trials.windows(2).all(|w| w[0].score <= w[1].score));
+    }
+
+    #[test]
+    fn multi_dimensional_grid() {
+        let train = token_ds(300, 50, 5);
+        let valid = token_ds(300, 50, 6);
+        let tuner = Tuner::new(
+            vec![
+                ParamRange { name: "a".into(), candidates: vec![1, 2] },
+                ParamRange { name: "b".into(), candidates: vec![10, 20, 30] },
+            ],
+            |_| {
+                Pipeline::new(vec![Stage::transformer(HashIndexTransformer::new(
+                    "t", "t_idx", 64,
+                ))])
+            },
+            |_, _| Ok(0.0),
+        );
+        let trials = tuner.grid_search(&train, &valid).unwrap();
+        assert_eq!(trials.len(), 6); // 2 x 3 grid
+    }
+}

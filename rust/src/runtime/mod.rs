@@ -1,0 +1,166 @@
+//! PJRT runtime — loads AOT-compiled preprocessing graphs and executes
+//! them from the Rust serving hot path.
+//!
+//! The interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md`).
+//!
+//! Python is only involved at build time (`make artifacts`); this module is
+//! what replaces the paper's "TensorFlow Java" inference dependency.
+
+mod tensor;
+
+pub use tensor::{Tensor, TensorData};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{KamaeError, Result};
+
+/// A compiled preprocessing executable: one `.hlo.txt` artifact compiled
+/// onto the PJRT CPU client.
+///
+/// `execute` takes positional input tensors (matching the GraphSpec input
+/// order recorded at export time) and returns the graph's output tensors.
+pub struct CompiledGraph {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+    /// Execution lock shared by every graph compiled on the same PJRT
+    /// client: the `xla` crate's executables clone a non-atomic `Rc`
+    /// client handle per output buffer, so *all* executes (and drops)
+    /// touching one client must be serialized.
+    lock: Arc<Mutex<()>>,
+}
+
+// SAFETY: the raw PJRT pointers inside are only dereferenced by
+// `execute`, which holds the shared per-client lock for the full
+// literal→buffer→literal round trip (the TfrtCpuClient itself is
+// thread-safe); graphs are compiled before any cross-thread use and the
+// backend that owns them drops them together.
+unsafe impl Send for CompiledGraph {}
+unsafe impl Sync for CompiledGraph {}
+
+impl CompiledGraph {
+    /// Load an HLO text file and compile it on the given client.
+    /// `lock` must be the client-wide execution lock (one per client).
+    pub fn load_locked(
+        client: &xla::PjRtClient,
+        path: &Path,
+        lock: Arc<Mutex<()>>,
+    ) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| KamaeError::Serde("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(CompiledGraph { exe, name: artifact_stem(path), lock })
+    }
+
+    /// Load with a fresh private lock (single-graph uses).
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        Self::load_locked(client, path, Arc::new(Mutex::new(())))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute the graph. Inputs are marshalled to XLA literals; the
+    /// (tuple) output is decomposed back into [`Tensor`]s.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = {
+            let _guard = self
+                .lock
+                .lock()
+                .map_err(|_| KamaeError::Serving("compiled graph lock poisoned".into()))?;
+            self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?
+        };
+        // aot.py lowers with return_tuple=True, so output is always a tuple.
+        let parts = result.to_tuple()?;
+        parts.iter().map(tensor::from_literal).collect()
+    }
+}
+
+/// `model.hlo.txt` → `model`.
+fn artifact_stem(path: &Path) -> String {
+    let file = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "graph".into());
+    file.strip_suffix(".hlo.txt").unwrap_or(&file).to_string()
+}
+
+/// Registry of compiled graphs, keyed by artifact stem — the router's view
+/// of "deployed models".
+pub struct Runtime {
+    client: xla::PjRtClient,
+    graphs: HashMap<String, CompiledGraph>,
+    exec_lock: Arc<Mutex<()>>,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU runtime.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            graphs: HashMap::new(),
+            exec_lock: Arc::new(Mutex::new(())),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile a single artifact; registers under its file stem.
+    pub fn load_graph(&mut self, path: &Path) -> Result<&CompiledGraph> {
+        let g = CompiledGraph::load_locked(&self.client, path, Arc::clone(&self.exec_lock))?;
+        let name = g.name().to_string();
+        self.graphs.insert(name.clone(), g);
+        Ok(&self.graphs[&name])
+    }
+
+    /// Load every `*.hlo.txt` in a directory (the artifacts dir).
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.to_string_lossy().ends_with(".hlo.txt") {
+                self.load_graph(&path)?;
+                loaded.push(artifact_stem(&path));
+            }
+        }
+        loaded.sort();
+        Ok(loaded)
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&CompiledGraph> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| KamaeError::Xla(format!("graph not loaded: {name}")))
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.graphs.keys().map(String::as_str).collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_stem_strips_suffix() {
+        assert_eq!(artifact_stem(Path::new("artifacts/movielens.hlo.txt")), "movielens");
+        assert_eq!(artifact_stem(Path::new("plain")), "plain");
+    }
+}

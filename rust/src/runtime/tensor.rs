@@ -1,0 +1,285 @@
+//! Dense tensors and XLA literal marshaling.
+//!
+//! `Tensor` is the serving-side data representation: what the ingress
+//! stage produces from a request batch and what the compiled graph
+//! consumes/returns. Boolean columns travel as `i32` (0/1) because the
+//! `xla` crate exposes no `Pred`-typed literal constructor — the GraphSpec
+//! compiler on the python side uses the same convention.
+
+use crate::error::{KamaeError, Result};
+
+/// Typed flat buffer. Row-major (C) layout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::F64(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            TensorData::F32(_) => "float32",
+            TensorData::F64(_) => "float64",
+            TensorData::I32(_) => "int32",
+            TensorData::I64(_) => "int64",
+        }
+    }
+}
+
+/// A dense, row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: TensorData,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: TensorData, shape: Vec<usize>) -> Result<Self> {
+        let expected: usize = shape.iter().product();
+        if data.len() != expected {
+            return Err(KamaeError::LengthMismatch {
+                left: data.len(),
+                right: expected,
+                context: format!("Tensor::new shape {shape:?}"),
+            });
+        }
+        Ok(Tensor { data, shape })
+    }
+
+    pub fn f32(v: Vec<f32>, shape: Vec<usize>) -> Result<Self> {
+        Tensor::new(TensorData::F32(v), shape)
+    }
+    pub fn f64(v: Vec<f64>, shape: Vec<usize>) -> Result<Self> {
+        Tensor::new(TensorData::F64(v), shape)
+    }
+    pub fn i32(v: Vec<i32>, shape: Vec<usize>) -> Result<Self> {
+        Tensor::new(TensorData::I32(v), shape)
+    }
+    pub fn i64(v: Vec<i64>, shape: Vec<usize>) -> Result<Self> {
+        Tensor::new(TensorData::I64(v), shape)
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Leading dimension (batch size) or 0 for rank-0 tensors.
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => Err(tensor_type_err("float32", other)),
+        }
+    }
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match &self.data {
+            TensorData::F64(v) => Ok(v),
+            other => Err(tensor_type_err("float64", other)),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => Err(tensor_type_err("int32", other)),
+        }
+    }
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match &self.data {
+            TensorData::I64(v) => Ok(v),
+            other => Err(tensor_type_err("int64", other)),
+        }
+    }
+
+    /// Concatenate along axis 0 (dynamic batching). All tensors must agree
+    /// on dtype and trailing dims.
+    pub fn concat_batch(parts: &[&Tensor]) -> Result<Tensor> {
+        let first = parts
+            .first()
+            .ok_or_else(|| KamaeError::InvalidConfig("concat of zero tensors".into()))?;
+        let trailing = &first.shape[1..];
+        let mut batch = 0usize;
+        for p in parts {
+            if &p.shape[1..] != trailing {
+                return Err(KamaeError::LengthMismatch {
+                    left: p.shape.len(),
+                    right: first.shape.len(),
+                    context: "concat_batch trailing dims".into(),
+                });
+            }
+            batch += p.shape[0];
+        }
+        let mut shape = vec![batch];
+        shape.extend_from_slice(trailing);
+        macro_rules! cat {
+            ($variant:ident, $as:ident) => {{
+                let mut out = Vec::with_capacity(shape.iter().product());
+                for p in parts {
+                    out.extend_from_slice(p.$as()?);
+                }
+                Tensor::new(TensorData::$variant(out), shape)
+            }};
+        }
+        match &first.data {
+            TensorData::F32(_) => cat!(F32, as_f32),
+            TensorData::F64(_) => cat!(F64, as_f64),
+            TensorData::I32(_) => cat!(I32, as_i32),
+            TensorData::I64(_) => cat!(I64, as_i64),
+        }
+    }
+
+    /// Pad along axis 0 to `target` rows by repeating the final row
+    /// (batch-bucket padding; padded rows are sliced off after execute).
+    pub fn pad_batch(&self, target: usize) -> Tensor {
+        let batch = self.batch();
+        if batch >= target || batch == 0 {
+            return self.clone();
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let extra = target - batch;
+        let mut shape = self.shape.clone();
+        shape[0] = target;
+        macro_rules! pad {
+            ($v:expr, $variant:ident) => {{
+                let mut out = Vec::with_capacity(target * row);
+                out.extend_from_slice($v);
+                let last = &$v[(batch - 1) * row..batch * row];
+                for _ in 0..extra {
+                    out.extend_from_slice(last);
+                }
+                TensorData::$variant(out)
+            }};
+        }
+        let data = match &self.data {
+            TensorData::F32(v) => pad!(v, F32),
+            TensorData::F64(v) => pad!(v, F64),
+            TensorData::I32(v) => pad!(v, I32),
+            TensorData::I64(v) => pad!(v, I64),
+        };
+        Tensor { data, shape }
+    }
+
+    /// Split along axis 0 into chunks of the given batch sizes (the inverse
+    /// of [`Tensor::concat_batch`], used to scatter batched results back to
+    /// requests).
+    pub fn split_batch(&self, sizes: &[usize]) -> Result<Vec<Tensor>> {
+        let row: usize = self.shape[1..].iter().product();
+        let total: usize = sizes.iter().sum();
+        if total != self.batch() {
+            return Err(KamaeError::LengthMismatch {
+                left: total,
+                right: self.batch(),
+                context: "split_batch".into(),
+            });
+        }
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut start = 0usize;
+        for &n in sizes {
+            let mut shape = vec![n];
+            shape.extend_from_slice(&self.shape[1..]);
+            let range = start * row..(start + n) * row;
+            let data = match &self.data {
+                TensorData::F32(v) => TensorData::F32(v[range].to_vec()),
+                TensorData::F64(v) => TensorData::F64(v[range].to_vec()),
+                TensorData::I32(v) => TensorData::I32(v[range].to_vec()),
+                TensorData::I64(v) => TensorData::I64(v[range].to_vec()),
+            };
+            out.push(Tensor::new(data, shape)?);
+            start += n;
+        }
+        Ok(out)
+    }
+}
+
+fn tensor_type_err(expected: &str, found: &TensorData) -> KamaeError {
+    KamaeError::TypeMismatch {
+        expected: expected.into(),
+        found: found.dtype_name().into(),
+        context: "tensor accessor".into(),
+    }
+}
+
+/// Marshal to an XLA literal. Uses the raw-bytes constructor so the host
+/// buffer is copied exactly once into the literal at its final row-major
+/// shape (`vec1` + `reshape` would copy twice — §Perf L3 hot path).
+pub(crate) fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    fn bytes_of<T>(v: &[T]) -> &[u8] {
+        // SAFETY: plain-old-data element types, reading only.
+        unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+        }
+    }
+    let (ty, bytes) = match &t.data {
+        TensorData::F32(v) => (xla::ElementType::F32, bytes_of(v)),
+        TensorData::F64(v) => (xla::ElementType::F64, bytes_of(v)),
+        TensorData::I32(v) => (xla::ElementType::S32, bytes_of(v)),
+        TensorData::I64(v) => (xla::ElementType::S64, bytes_of(v)),
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ty, &t.shape, bytes,
+    )?)
+}
+
+/// Unmarshal an XLA literal back to a [`Tensor`].
+pub(crate) fn from_literal(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => TensorData::F32(l.to_vec::<f32>()?),
+        xla::ElementType::F64 => TensorData::F64(l.to_vec::<f64>()?),
+        xla::ElementType::S32 => TensorData::I32(l.to_vec::<i32>()?),
+        xla::ElementType::S64 => TensorData::I64(l.to_vec::<i64>()?),
+        other => {
+            return Err(KamaeError::Unsupported(format!(
+                "literal element type {other:?}"
+            )))
+        }
+    };
+    Tensor::new(data, dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::f32(vec![1.0, 2.0], vec![2, 2]).is_err());
+        assert!(Tensor::f32(vec![1.0; 4], vec![2, 2]).is_ok());
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let a = Tensor::i64(vec![1, 2, 3, 4], vec![2, 2]).unwrap();
+        let b = Tensor::i64(vec![5, 6], vec![1, 2]).unwrap();
+        let c = Tensor::concat_batch(&[&a, &b]).unwrap();
+        assert_eq!(c.shape, vec![3, 2]);
+        let parts = c.split_batch(&[2, 1]).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn concat_rejects_mismatched_trailing() {
+        let a = Tensor::i64(vec![1, 2], vec![1, 2]).unwrap();
+        let b = Tensor::i64(vec![1, 2, 3], vec![1, 3]).unwrap();
+        assert!(Tensor::concat_batch(&[&a, &b]).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Serving backends: compiled (PJRT), interpreted (columnar), and
+//! MLeap-like (row-wise boxed).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::baselines::RowPipeline;
+use crate::dataframe::DataFrame;
+use crate::error::{KamaeError, Result};
+use crate::export::{GraphSpec, SpecInterpreter};
+use crate::pipeline::PipelineModel;
+use crate::runtime::{CompiledGraph, Tensor};
+
+/// A preprocessing execution backend: request batch in, output tensors
+/// out. Implementations must be `Send + Sync` (the batcher worker owns
+/// one; benches probe them directly).
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Process one (possibly merged) request batch.
+    fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>>;
+}
+
+/// Rust ingress + AOT-compiled HLO via PJRT, with batch-bucket padding.
+pub struct CompiledBackend {
+    interp: SpecInterpreter,
+    /// batch-bucket size -> compiled executable.
+    graphs: BTreeMap<usize, CompiledGraph>,
+    name: String,
+}
+
+impl CompiledBackend {
+    /// Load every `<spec>@b<batch>.hlo.txt` artifact for this spec.
+    pub fn load(artifacts: &Path, spec: GraphSpec) -> Result<CompiledBackend> {
+        let client = xla::PjRtClient::cpu()?;
+        let exec_lock = std::sync::Arc::new(std::sync::Mutex::new(()));
+        let mut graphs = BTreeMap::new();
+        let prefix = format!("{}@b", spec.name);
+        for entry in std::fs::read_dir(artifacts)? {
+            let path = entry?.path();
+            let fname = path
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            if let Some(rest) = fname
+                .strip_prefix(&prefix)
+                .and_then(|r| r.strip_suffix(".hlo.txt"))
+            {
+                if let Ok(batch) = rest.parse::<usize>() {
+                    graphs.insert(
+                        batch,
+                        CompiledGraph::load_locked(&client, &path, exec_lock.clone())?,
+                    );
+                }
+            }
+        }
+        if graphs.is_empty() {
+            return Err(KamaeError::Xla(format!(
+                "no compiled artifacts found for spec {} in {}",
+                spec.name,
+                artifacts.display()
+            )));
+        }
+        Ok(CompiledBackend {
+            name: format!("{}-compiled", spec.name),
+            interp: SpecInterpreter::new(spec),
+            graphs,
+        })
+    }
+
+    /// Smallest compiled bucket that fits `batch`, or the largest bucket
+    /// (larger batches chunk).
+    fn bucket_for(&self, batch: usize) -> usize {
+        self.graphs
+            .range(batch..)
+            .next()
+            .map(|(&b, _)| b)
+            .unwrap_or_else(|| *self.graphs.keys().next_back().expect("non-empty"))
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.graphs.keys().copied().collect()
+    }
+
+    fn execute_bucketed(&self, inputs: &[Tensor], batch: usize) -> Result<Vec<Tensor>> {
+        let bucket = self.bucket_for(batch);
+        let max = *self.graphs.keys().next_back().expect("non-empty");
+        if batch > max {
+            // chunk oversized batches through the largest bucket
+            let mut out: Option<Vec<Tensor>> = None;
+            let mut start = 0;
+            while start < batch {
+                let n = (batch - start).min(max);
+                let chunk: Vec<Tensor> = inputs
+                    .iter()
+                    .map(|t| {
+                        t.split_batch(&[start, n, batch - start - n])
+                            .map(|mut parts| parts.swap_remove(1))
+                    })
+                    .collect::<Result<_>>()?;
+                let res = self.execute_bucketed(&chunk, n)?;
+                out = Some(match out {
+                    None => res,
+                    Some(acc) => acc
+                        .iter()
+                        .zip(res.iter())
+                        .map(|(a, b)| Tensor::concat_batch(&[a, b]))
+                        .collect::<Result<_>>()?,
+                });
+                start += n;
+            }
+            return Ok(out.expect("batch > 0"));
+        }
+        let graph = &self.graphs[&bucket];
+        if bucket == batch {
+            return graph.execute(inputs);
+        }
+        // pad to bucket, execute, slice back
+        let padded: Vec<Tensor> = inputs.iter().map(|t| t.pad_batch(bucket)).collect();
+        let full = graph.execute(&padded)?;
+        full.iter()
+            .map(|t| {
+                t.split_batch(&[batch, bucket - batch])
+                    .map(|mut parts| parts.swap_remove(0))
+            })
+            .collect()
+    }
+}
+
+impl Backend for CompiledBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        let inputs = self.interp.run_ingress(df)?;
+        self.execute_bucketed(&inputs, df.num_rows())
+    }
+}
+
+/// Columnar interpreted backend (no compilation).
+pub struct InterpretedBackend {
+    interp: SpecInterpreter,
+    name: String,
+}
+
+impl InterpretedBackend {
+    pub fn new(spec: GraphSpec) -> InterpretedBackend {
+        InterpretedBackend {
+            name: format!("{}-interpreted", spec.name),
+            interp: SpecInterpreter::new(spec),
+        }
+    }
+}
+
+impl Backend for InterpretedBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        self.interp.run(df)
+    }
+}
+
+/// Row-at-a-time MLeap-like backend.
+pub struct MleapBackend {
+    rows: RowPipeline,
+    name: String,
+}
+
+impl MleapBackend {
+    pub fn new(model: PipelineModel, spec: &GraphSpec) -> MleapBackend {
+        MleapBackend {
+            name: format!("{}-mleap", spec.name),
+            rows: RowPipeline::from_spec(model, spec),
+        }
+    }
+}
+
+impl Backend for MleapBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        self.rows.process(df)
+    }
+}

@@ -1,0 +1,285 @@
+//! Dynamic batcher + server loop.
+//!
+//! Requests (small DataFrames) queue onto a channel; the worker thread
+//! drains up to `max_batch_rows` or until `max_wait` elapses from the
+//! first queued request, concatenates them into one batch, runs the
+//! backend once, then splits the output tensors back per request —
+//! amortising graph-execution overhead exactly the way TF-Serving's
+//! dynamic batching does for the paper's production service.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::dataframe::DataFrame;
+use crate::error::{KamaeError, Result};
+use crate::runtime::Tensor;
+
+use super::backend::Backend;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Max rows merged into one backend call.
+    pub max_batch_rows: usize,
+    /// Max time the first request in a batch waits for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        // max_wait 300µs: at production-like rates (~200 rps) requests
+        // rarely overlap, so long waits only pad p50; under bursts the
+        // queue drains in whole batches anyway because the worker picks
+        // up everything already queued before waiting (§Perf L3 log).
+        BatchConfig { max_batch_rows: 128, max_wait: Duration::from_micros(300) }
+    }
+}
+
+struct Job {
+    df: DataFrame,
+    resp: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// A running server: one batcher thread owning the backend.
+pub struct Server {
+    tx: Option<mpsc::Sender<Job>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    busy_ns: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
+    requests: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Spawn the batcher thread.
+    pub fn start(backend: Box<dyn Backend>, config: BatchConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let busy_ns = Arc::new(AtomicU64::new(0));
+        let batches = Arc::new(AtomicU64::new(0));
+        let requests = Arc::new(AtomicU64::new(0));
+        let worker = {
+            let busy_ns = Arc::clone(&busy_ns);
+            let batches = Arc::clone(&batches);
+            let requests = Arc::clone(&requests);
+            std::thread::spawn(move || {
+                batch_loop(backend, config, rx, busy_ns, batches, requests);
+            })
+        };
+        Server { tx: Some(tx), worker: Some(worker), busy_ns, batches, requests }
+    }
+
+    /// Submit a request; the receiver yields the output tensors for this
+    /// request's rows.
+    pub fn submit(&self, df: DataFrame) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        if let Some(tx) = &self.tx {
+            if tx.send(Job { df, resp: resp_tx.clone() }).is_err() {
+                let _ = resp_tx.send(Err(KamaeError::Serving("server stopped".into())));
+            }
+        }
+        resp_rx
+    }
+
+    /// Total backend-execution time (the cost proxy: CPU-seconds of
+    /// preprocessing work, single worker).
+    pub fn busy_time(&self) -> Duration {
+        Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed))
+    }
+
+    /// (batches executed, requests served) — batching efficiency.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.batches.load(Ordering::Relaxed), self.requests.load(Ordering::Relaxed))
+    }
+
+    /// Stop the worker and wait for it.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the channel
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn batch_loop(
+    backend: Box<dyn Backend>,
+    config: BatchConfig,
+    rx: mpsc::Receiver<Job>,
+    busy_ns: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
+    requests: Arc<AtomicU64>,
+) {
+    loop {
+        // block for the first request of the next batch
+        let first = match rx.recv() {
+            Ok(job) => job,
+            Err(_) => return, // channel closed: shutdown
+        };
+        let mut jobs = vec![first];
+        let mut rows = jobs[0].df.num_rows();
+        // greedily take everything already queued (free batching)
+        while rows < config.max_batch_rows {
+            match rx.try_recv() {
+                Ok(job) => {
+                    rows += job.df.num_rows();
+                    jobs.push(job);
+                }
+                Err(_) => break,
+            }
+        }
+        // then wait at most max_wait for stragglers — but only if the
+        // batch still has meaningful headroom
+        let deadline = Instant::now() + config.max_wait;
+        while rows < config.max_batch_rows {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => {
+                    rows += job.df.num_rows();
+                    jobs.push(job);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let t0 = Instant::now();
+        let result = run_batch(backend.as_ref(), &jobs);
+        busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        batches.fetch_add(1, Ordering::Relaxed);
+        requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+
+        match result {
+            Ok(per_job) => {
+                for (job, tensors) in jobs.into_iter().zip(per_job) {
+                    let _ = job.resp.send(Ok(tensors));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for job in jobs {
+                    let _ = job.resp.send(Err(KamaeError::Serving(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Merge jobs, run the backend once, split outputs per job.
+fn run_batch(backend: &dyn Backend, jobs: &[Job]) -> Result<Vec<Vec<Tensor>>> {
+    let merged = if jobs.len() == 1 {
+        jobs[0].df.clone()
+    } else {
+        let frames: Vec<&DataFrame> = jobs.iter().map(|j| &j.df).collect();
+        DataFrame::concat(&frames)?
+    };
+    let outputs = backend.process(&merged)?;
+    if jobs.len() == 1 {
+        return Ok(vec![outputs]);
+    }
+    let sizes: Vec<usize> = jobs.iter().map(|j| j.df.num_rows()).collect();
+    // transpose: per-output splits -> per-job tensor lists
+    let mut per_job: Vec<Vec<Tensor>> = vec![Vec::with_capacity(outputs.len()); jobs.len()];
+    for out in &outputs {
+        let parts = out.split_batch(&sizes)?;
+        for (slot, part) in per_job.iter_mut().zip(parts) {
+            slot.push(part);
+        }
+    }
+    Ok(per_job)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    /// Backend that doubles an f64 column; records max batch seen.
+    struct Doubler {
+        max_batch: std::sync::atomic::AtomicUsize,
+    }
+
+    impl Backend for Doubler {
+        fn name(&self) -> &str {
+            "doubler"
+        }
+
+        fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+            self.max_batch.fetch_max(df.num_rows(), Ordering::Relaxed);
+            let v = df.column("x")?.as_f64()?;
+            Tensor::f32(v.iter().map(|&x| 2.0 * x as f32).collect(), vec![v.len()])
+                .map(|t| vec![t])
+        }
+    }
+
+    fn req(vals: &[f64]) -> DataFrame {
+        DataFrame::new(vec![("x".into(), Column::from_f64(vals.to_vec()))]).unwrap()
+    }
+
+    #[test]
+    fn responses_route_back_to_requests() {
+        let server = Server::start(
+            Box::new(Doubler { max_batch: Default::default() }),
+            BatchConfig { max_batch_rows: 64, max_wait: Duration::from_millis(5) },
+        );
+        let rxs: Vec<_> = (0..20)
+            .map(|i| (i, server.submit(req(&[i as f64, i as f64 + 0.5]))))
+            .collect();
+        for (i, rx) in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].as_f32().unwrap(), &[2.0 * i as f32, 2.0 * i as f32 + 1.0]);
+        }
+        let (batches, requests) = server.counts();
+        assert_eq!(requests, 20);
+        assert!(batches <= 20);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_merges() {
+        let backend = Box::new(Doubler { max_batch: Default::default() });
+        let probe: *const Doubler = backend.as_ref();
+        let server = Server::start(
+            backend,
+            BatchConfig { max_batch_rows: 1024, max_wait: Duration::from_millis(50) },
+        );
+        // burst of requests within the batching window
+        let rxs: Vec<_> = (0..32).map(|_| server.submit(req(&[1.0]))).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        // SAFETY: server still alive, backend not moved
+        let max_seen = unsafe { (*probe).max_batch.load(Ordering::Relaxed) };
+        assert!(max_seen > 1, "batcher never merged (max batch {max_seen})");
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_propagates_to_all_requests() {
+        struct Failing;
+        impl Backend for Failing {
+            fn name(&self) -> &str {
+                "fail"
+            }
+            fn process(&self, _: &DataFrame) -> Result<Vec<Tensor>> {
+                Err(KamaeError::Serving("boom".into()))
+            }
+        }
+        let server = Server::start(Box::new(Failing), BatchConfig::default());
+        let rx = server.submit(req(&[1.0]));
+        assert!(rx.recv().unwrap().is_err());
+        server.shutdown();
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving metrics: latency recording and the benchmark report.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::bench::{fmt_ns, percentile};
+
+/// Thread-safe latency sample collector.
+pub struct LatencyRecorder {
+    samples_ns: Mutex<Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder { samples_ns: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, latency: Duration) {
+        self.samples_ns.lock().unwrap().push(latency.as_nanos() as f64);
+    }
+
+    /// Produce the final report.
+    pub fn report(
+        &self,
+        name: &str,
+        requests: usize,
+        wall: Duration,
+        busy: Duration,
+    ) -> ServeReport {
+        let mut ns = self.samples_ns.lock().unwrap().clone();
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ServeReport {
+            name: name.to_string(),
+            requests,
+            wall_secs: wall.as_secs_f64(),
+            throughput_rps: requests as f64 / wall.as_secs_f64(),
+            p50_ns: percentile(&ns, 50.0),
+            p95_ns: percentile(&ns, 95.0),
+            p99_ns: percentile(&ns, 99.0),
+            mean_ns: ns.iter().sum::<f64>() / ns.len().max(1) as f64,
+            busy_secs: busy.as_secs_f64(),
+            cost_cpu_s_per_1k: busy.as_secs_f64() / (requests as f64 / 1000.0),
+        }
+    }
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One serving benchmark run's results (experiments C3/C5).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub name: String,
+    pub requests: usize,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    /// Total backend busy time — the service-cost proxy.
+    pub busy_secs: f64,
+    pub cost_cpu_s_per_1k: f64,
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "=== serving report: {} ===", self.name)?;
+        writeln!(f, "requests        {}", self.requests)?;
+        writeln!(f, "wall time       {:.2} s", self.wall_secs)?;
+        writeln!(f, "throughput      {:.1} req/s", self.throughput_rps)?;
+        writeln!(f, "latency mean    {}", fmt_ns(self.mean_ns))?;
+        writeln!(f, "latency p50     {}", fmt_ns(self.p50_ns))?;
+        writeln!(f, "latency p95     {}", fmt_ns(self.p95_ns))?;
+        writeln!(f, "latency p99     {}", fmt_ns(self.p99_ns))?;
+        writeln!(f, "backend busy    {:.2} s", self.busy_secs)?;
+        write!(f, "cost proxy      {:.3} cpu-s / 1k req", self.cost_cpu_s_per_1k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math() {
+        let r = LatencyRecorder::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            r.record(Duration::from_millis(ms));
+        }
+        let rep = r.report("t", 5, Duration::from_secs(1), Duration::from_millis(110));
+        assert_eq!(rep.requests, 5);
+        assert!((rep.throughput_rps - 5.0).abs() < 1e-9);
+        assert!(rep.p50_ns >= 2e6 && rep.p50_ns <= 4e6);
+        assert!(rep.p99_ns > 9e7);
+        assert!((rep.cost_cpu_s_per_1k - 22.0).abs() < 0.01);
+        let text = rep.to_string();
+        assert!(text.contains("p99"));
+    }
+}

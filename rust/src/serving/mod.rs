@@ -1,0 +1,158 @@
+//! The serving stack — the online half of the paper's story.
+//!
+//! A deployed preprocessing model is served by a [`Server`]: a request
+//! router over named model variants, each with a dynamic batcher
+//! ([`batcher`]) in front of a [`Backend`]:
+//!
+//! * [`CompiledBackend`] — Rust ingress (string ops via the engine
+//!   kernels) + AOT-compiled HLO executed through PJRT, with batch-bucket
+//!   padding. This is the paper's "Keras model in TensorFlow Java"
+//!   replacement — python never runs here.
+//! * [`InterpretedBackend`] — same ingress, graph section interpreted
+//!   columnar op-by-op (the ablation point: columnar but uncompiled).
+//! * [`MleapBackend`] — row-at-a-time boxed interpretation of the fitted
+//!   pipeline ([`crate::baselines`]), the MLeap stand-in.
+//!
+//! `bench_serve` is the open-loop Poisson driver used for experiments
+//! C3/C5 (latency vs mode, 200 req/s sustained service).
+
+mod backend;
+mod batcher;
+mod metrics;
+
+pub use backend::{Backend, CompiledBackend, InterpretedBackend, MleapBackend};
+pub use batcher::{BatchConfig, Server};
+pub use metrics::{LatencyRecorder, ServeReport};
+
+use std::path::Path;
+
+use crate::dataframe::DataFrame;
+use crate::error::{KamaeError, Result};
+use crate::export::GraphSpec;
+use crate::pipeline::PipelineModel;
+use crate::util::rng::Rng;
+
+/// Load a backend for `spec_name` from an artifacts directory laid out
+/// by `make artifacts` (`specs/<name>.json`, `specs/<name>.model.json`,
+/// `<name>@b<batch>.hlo.txt`).
+pub fn load_backend(artifacts: &Path, spec_name: &str, mode: &str) -> Result<Box<dyn Backend>> {
+    let spec = GraphSpec::load(&artifacts.join("specs").join(format!("{spec_name}.json")))?;
+    match mode {
+        "compiled" => Ok(Box::new(CompiledBackend::load(artifacts, spec)?)),
+        "interpreted" => Ok(Box::new(InterpretedBackend::new(spec))),
+        "mleap" => {
+            let model = PipelineModel::load(
+                &artifacts.join("specs").join(format!("{spec_name}.model.json")),
+            )?;
+            Ok(Box::new(MleapBackend::new(model, &spec)))
+        }
+        other => Err(KamaeError::InvalidConfig(format!("unknown serving mode: {other}"))),
+    }
+}
+
+/// Open-loop Poisson serving benchmark: `rps` requests/second for
+/// `seconds`, each request a small batch of rows drawn from the
+/// synthetic workload matching `spec_name`. Returns the latency /
+/// throughput / cost report (experiments C3 + C5).
+pub fn bench_serve(
+    artifacts: &Path,
+    spec_name: &str,
+    rps: usize,
+    seconds: usize,
+    mode: &str,
+) -> Result<ServeReport> {
+    let backend = load_backend(artifacts, spec_name, mode)?;
+    let server = Server::start(backend, BatchConfig::default());
+
+    // request pool: pre-generated rows, requests sample row-ranges
+    let pool = request_pool(spec_name, 4096)?;
+    let rows_per_request = 8; // an LTR request scores a small slate
+    let total_requests = rps * seconds;
+    let mut rng = Rng::new(0xBEEF);
+
+    let recorder = LatencyRecorder::new();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(total_requests);
+    let mut next_arrival = 0.0f64;
+    for _ in 0..total_requests {
+        next_arrival += rng.exponential(rps as f64);
+        // open-loop: wait until the scheduled arrival time
+        let now = t0.elapsed().as_secs_f64();
+        if next_arrival > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(next_arrival - now));
+        }
+        let start = rng.below((pool.num_rows() - rows_per_request) as u64) as usize;
+        let req = pool.slice(start, rows_per_request);
+        let sent = std::time::Instant::now();
+        let rx = server.submit(req);
+        pending.push((sent, rx));
+        // drain completed responses opportunistically
+        while let Some((sent, rx)) = pending.first() {
+            match rx.try_recv() {
+                Ok(res) => {
+                    res?;
+                    recorder.record(sent.elapsed());
+                    pending.remove(0);
+                }
+                Err(_) => break,
+            }
+        }
+    }
+    for (sent, rx) in pending {
+        rx.recv()
+            .map_err(|_| KamaeError::Serving("server dropped response".into()))??;
+        recorder.record(sent.elapsed());
+    }
+    let wall = t0.elapsed();
+    let busy = server.busy_time();
+    server.shutdown();
+
+    Ok(recorder.report(
+        &format!("{spec_name}/{mode}"),
+        total_requests,
+        wall,
+        busy,
+    ))
+}
+
+/// Synthetic request rows matching each catalog spec's input schema.
+pub fn request_pool(spec_name: &str, rows: usize) -> Result<DataFrame> {
+    match spec_name {
+        "movielens" => {
+            let df = crate::synth::gen_movielens(&crate::synth::MovieLensConfig {
+                rows,
+                seed: 999, // unseen at fit time: realistic OOV rate
+                ..Default::default()
+            });
+            df.select(&["UserID", "MovieID", "Occupation", "Genres"])
+        }
+        "ltr" => {
+            let df = crate::synth::gen_ltr(&crate::synth::LtrConfig {
+                rows,
+                seed: 999,
+                ..Default::default()
+            });
+            Ok(df.drop(&["clicked"]))
+        }
+        "quickstart" => {
+            let mut rng = Rng::new(999);
+            crate::dataframe::DataFrame::new(vec![
+                (
+                    "price".into(),
+                    crate::dataframe::Column::from_f64(
+                        (0..rows).map(|_| rng.log_normal(4.0, 1.0)).collect(),
+                    ),
+                ),
+                (
+                    "city".into(),
+                    crate::dataframe::Column::from_str(
+                        (0..rows)
+                            .map(|_| format!("city_{}", rng.below(80)))
+                            .collect::<Vec<_>>(),
+                    ),
+                ),
+            ])
+        }
+        other => Err(KamaeError::InvalidConfig(format!("no request pool for {other}"))),
+    }
+}

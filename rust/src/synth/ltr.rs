@@ -1,0 +1,184 @@
+//! Synthetic Expedia-style Learning-to-Rank search traces: the raw
+//! feature schema the paper's ~60-transform search-filters pipeline
+//! consumes (dates, durations, log-scale numerics, delimited strings,
+//! coordinates, categoricals, amenity lists).
+
+use crate::dataframe::{Column, DataFrame};
+use crate::util::rng::{Rng, Zipf};
+
+pub const AMENITIES: [&str; 12] = [
+    "wifi", "pool", "spa", "parking", "gym", "breakfast", "bar", "pets",
+    "beach", "aircon", "kitchen", "washer",
+];
+
+pub const COUNTRIES: [&str; 10] =
+    ["US", "GB", "DE", "FR", "JP", "BR", "AU", "CA", "IN", "MX"];
+
+/// Destination pool: (name, lat, lon).
+pub const DESTINATIONS: [(&str, f64, f64); 8] = [
+    ("paris", 48.8566, 2.3522),
+    ("london", 51.5074, -0.1278),
+    ("new-york", 40.7128, -74.0060),
+    ("tokyo", 35.6762, 139.6503),
+    ("cancun", 21.1619, -86.8515),
+    ("rome", 41.9028, 12.4964),
+    ("sydney", -33.8688, 151.2093),
+    ("barcelona", 41.3851, 2.1734),
+];
+
+#[derive(Debug, Clone)]
+pub struct LtrConfig {
+    pub rows: usize,
+    pub num_properties: usize,
+    pub seed: u64,
+}
+
+impl Default for LtrConfig {
+    fn default() -> Self {
+        LtrConfig { rows: 50_000, num_properties: 20_000, seed: 7 }
+    }
+}
+
+/// One row = one (search, property) impression.
+pub fn gen_ltr(cfg: &LtrConfig) -> DataFrame {
+    let mut rng = Rng::new(cfg.seed);
+    let prop_pop = Zipf::new(cfg.num_properties, 1.05);
+
+    let n = cfg.rows;
+    let mut search_ts = Vec::with_capacity(n);
+    let mut checkin = Vec::with_capacity(n);
+    let mut checkout = Vec::with_capacity(n);
+    let mut destination = Vec::with_capacity(n);
+    let mut user_country = Vec::with_capacity(n);
+    let mut device = Vec::with_capacity(n);
+    let mut num_adults = Vec::with_capacity(n);
+    let mut num_children = Vec::with_capacity(n);
+    let mut property_id = Vec::with_capacity(n);
+    let mut price = Vec::with_capacity(n);
+    let mut star_rating = Vec::with_capacity(n);
+    let mut review_score = Vec::with_capacity(n);
+    let mut review_count = Vec::with_capacity(n);
+    let mut amenities = Vec::with_capacity(n);
+    let mut prop_lat = Vec::with_capacity(n);
+    let mut prop_lon = Vec::with_capacity(n);
+    let mut dest_lat = Vec::with_capacity(n);
+    let mut dest_lon = Vec::with_capacity(n);
+    let mut historical_ctr = Vec::with_capacity(n);
+    let mut clicked = Vec::with_capacity(n);
+
+    for _ in 0..n {
+        // search date in 2024, seasonal peak in summer
+        let doy = 1 + ((rng.normal() * 60.0 + 190.0).rem_euclid(365.0)) as i64;
+        let days = crate::ops::date::days_from_civil(2024, 1, 1) + doy - 1;
+        let (y, m, d) = crate::ops::date::civil_from_days(days);
+        search_ts.push(format!(
+            "{y:04}-{m:02}-{d:02} {:02}:{:02}:{:02}",
+            rng.below(24),
+            rng.below(60),
+            rng.below(60)
+        ));
+        let lead = 1 + rng.below(90) as i64;
+        let stay = 1 + rng.below(10) as i64;
+        let (cy, cm, cd) = crate::ops::date::civil_from_days(days + lead);
+        checkin.push(format!("{cy:04}-{cm:02}-{cd:02}"));
+        let (oy, om, od) = crate::ops::date::civil_from_days(days + lead + stay);
+        checkout.push(format!("{oy:04}-{om:02}-{od:02}"));
+
+        let dest = &DESTINATIONS[rng.below(DESTINATIONS.len() as u64) as usize];
+        destination.push(dest.0.to_string());
+        dest_lat.push(dest.1);
+        dest_lon.push(dest.2);
+        user_country.push(COUNTRIES[rng.below(COUNTRIES.len() as u64) as usize].to_string());
+        device.push(if rng.bool(0.55) { "mobile" } else { "desktop" }.to_string());
+        num_adults.push(1 + rng.below(4) as i64);
+        num_children.push(rng.below(3) as i64);
+
+        let p = prop_pop.sample(&mut rng) as i64;
+        property_id.push(p);
+        // price: log-normal, spans orders of magnitude (paper: log-transformed)
+        price.push(rng.log_normal(4.8, 0.9));
+        star_rating.push(1.0 + rng.below(9) as f64 * 0.5);
+        review_score.push((rng.normal() * 1.2 + 7.8).clamp(1.0, 10.0));
+        review_count.push(rng.log_normal(4.0, 1.5) as i64);
+
+        // ragged amenity list, comma-delimited, 1..=7 amenities
+        let k = 1 + rng.below(7) as usize;
+        let mut picks: Vec<&str> = Vec::with_capacity(k);
+        while picks.len() < k {
+            let cand = AMENITIES[rng.below(AMENITIES.len() as u64) as usize];
+            if !picks.contains(&cand) {
+                picks.push(cand);
+            }
+        }
+        amenities.push(picks.join(","));
+
+        // property near its destination
+        prop_lat.push(dest.1 + rng.normal() * 0.15);
+        prop_lon.push(dest.2 + rng.normal() * 0.15);
+        historical_ctr.push((rng.normal() * 0.03 + 0.06).clamp(0.0, 1.0));
+        clicked.push(rng.bool(0.08));
+    }
+
+    DataFrame::new(vec![
+        ("search_ts".into(), Column::from_str(search_ts)),
+        ("checkin".into(), Column::from_str(checkin)),
+        ("checkout".into(), Column::from_str(checkout)),
+        ("destination".into(), Column::from_str(destination)),
+        ("user_country".into(), Column::from_str(user_country)),
+        ("device".into(), Column::from_str(device)),
+        ("num_adults".into(), Column::from_i64(num_adults)),
+        ("num_children".into(), Column::from_i64(num_children)),
+        ("property_id".into(), Column::from_i64(property_id)),
+        ("price".into(), Column::from_f64(price)),
+        ("star_rating".into(), Column::from_f64(star_rating)),
+        ("review_score".into(), Column::from_f64(review_score)),
+        ("review_count".into(), Column::from_i64(review_count)),
+        ("amenities".into(), Column::from_str(amenities)),
+        ("prop_lat".into(), Column::from_f64(prop_lat)),
+        ("prop_lon".into(), Column::from_f64(prop_lon)),
+        ("dest_lat".into(), Column::from_f64(dest_lat)),
+        ("dest_lon".into(), Column::from_f64(dest_lon)),
+        ("historical_ctr".into(), Column::from_f64(historical_ctr)),
+        ("clicked".into(), Column::from_bool(clicked)),
+    ])
+    .expect("columns same length")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_and_validity() {
+        let df = gen_ltr(&LtrConfig { rows: 1000, ..Default::default() });
+        assert_eq!(df.num_rows(), 1000);
+        assert_eq!(df.num_columns(), 20);
+        // all dates parse
+        for col in ["checkin", "checkout"] {
+            let v = df.column(col).unwrap().as_str().unwrap();
+            assert!(v.iter().all(|s| crate::ops::date::parse_date(s).is_some()));
+        }
+        let ts = df.column("search_ts").unwrap().as_str().unwrap();
+        assert!(ts.iter().all(|s| crate::ops::date::parse_timestamp(s).is_some()));
+        // checkout strictly after checkin
+        let ci = df.column("checkin").unwrap().as_str().unwrap();
+        let co = df.column("checkout").unwrap().as_str().unwrap();
+        for (a, b) in ci.iter().zip(co.iter()) {
+            assert!(
+                crate::ops::date::parse_date(b).unwrap() > crate::ops::date::parse_date(a).unwrap()
+            );
+        }
+        // prices span orders of magnitude
+        let price = df.column("price").unwrap().as_f64().unwrap();
+        let (min, max) = price
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &p| (lo.min(p), hi.max(p)));
+        assert!(max / min > 20.0, "price range too tight: {min}..{max}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = LtrConfig { rows: 500, ..Default::default() };
+        assert_eq!(gen_ltr(&cfg), gen_ltr(&cfg));
+    }
+}

@@ -1,0 +1,13 @@
+//! Schema-faithful synthetic dataset generators.
+//!
+//! The environment has no dataset downloads, so the MovieLens rows and
+//! Expedia-style Learning-to-Rank traces are generated synthetically with
+//! realistic marginals (Zipf-popular ids, log-normal prices, seasonal
+//! dates, ragged amenity lists) — the *pipelines* applied to them are
+//! identical to the paper's (DESIGN.md §Substitutions).
+
+mod ltr;
+mod movielens;
+
+pub use ltr::{gen_ltr, LtrConfig};
+pub use movielens::{gen_movielens, MovieLensConfig, GENRES};

@@ -1,0 +1,144 @@
+//! Synthetic MovieLens-1M-shaped ratings (Listing 1's input schema:
+//! UserID, MovieID, Occupation as int32; Genres as a `|`-joined string).
+
+use crate::dataframe::{Column, DataFrame};
+use crate::util::rng::{Rng, Zipf};
+
+/// 18 MovieLens genre labels.
+pub const GENRES: [&str; 18] = [
+    "Action", "Adventure", "Animation", "Children's", "Comedy", "Crime",
+    "Documentary", "Drama", "Fantasy", "Film-Noir", "Horror", "Musical",
+    "Mystery", "Romance", "Sci-Fi", "Thriller", "War", "Western",
+];
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct MovieLensConfig {
+    pub rows: usize,
+    pub num_users: usize,
+    pub num_movies: usize,
+    pub num_occupations: i32,
+    pub seed: u64,
+}
+
+impl Default for MovieLensConfig {
+    fn default() -> Self {
+        MovieLensConfig {
+            rows: 100_000,
+            num_users: 6_040,   // ML-1M marginals
+            num_movies: 3_883,
+            num_occupations: 21,
+            seed: 42,
+        }
+    }
+}
+
+/// Generate a ratings table. Movie popularity is Zipf(1.1) (heavy head,
+/// like real ML-1M); each movie has a stable genre set of 1–4 genres;
+/// ratings skew positive.
+pub fn gen_movielens(cfg: &MovieLensConfig) -> DataFrame {
+    let mut rng = Rng::new(cfg.seed);
+    let movie_pop = Zipf::new(cfg.num_movies, 1.1);
+    let user_pop = Zipf::new(cfg.num_users, 0.8);
+
+    // stable per-movie genre sets, keyed by movie id
+    let movie_genres: Vec<String> = (0..cfg.num_movies)
+        .map(|m| {
+            let mut g = Rng::new(cfg.seed ^ (m as u64).wrapping_mul(0x9E37)); // per-movie
+            let k = 1 + g.below(4) as usize;
+            let mut picks: Vec<&str> = Vec::with_capacity(k);
+            while picks.len() < k {
+                let cand = GENRES[g.below(GENRES.len() as u64) as usize];
+                if !picks.contains(&cand) {
+                    picks.push(cand);
+                }
+            }
+            picks.join("|")
+        })
+        .collect();
+
+    let mut user_id = Vec::with_capacity(cfg.rows);
+    let mut movie_id = Vec::with_capacity(cfg.rows);
+    let mut rating = Vec::with_capacity(cfg.rows);
+    let mut timestamp = Vec::with_capacity(cfg.rows);
+    let mut occupation = Vec::with_capacity(cfg.rows);
+    let mut genres = Vec::with_capacity(cfg.rows);
+
+    for _ in 0..cfg.rows {
+        let u = user_pop.sample(&mut rng) as i32 + 1;
+        let m = movie_pop.sample(&mut rng);
+        user_id.push(u);
+        movie_id.push(m as i32 + 1);
+        // positive-skewed ratings 1..=5
+        let r = match rng.below(10) {
+            0 => 1.0,
+            1 => 2.0,
+            2 | 3 => 3.0,
+            4..=6 => 4.0,
+            _ => 5.0,
+        };
+        rating.push(r);
+        // timestamps across 2000-04 .. 2003-02 (ML-1M window)
+        timestamp.push(956_703_932 + rng.below(90_000_000) as i64);
+        // occupation correlates weakly with user id (stable per user)
+        occupation.push((u as i64 % cfg.num_occupations as i64) as i32);
+        genres.push(movie_genres[m].clone());
+    }
+
+    DataFrame::new(vec![
+        ("UserID".into(), Column::from_i32(user_id)),
+        ("MovieID".into(), Column::from_i32(movie_id)),
+        ("Rating".into(), Column::from_f64(rating)),
+        ("Timestamp".into(), Column::from_i64(timestamp)),
+        ("Occupation".into(), Column::from_i32(occupation)),
+        ("Genres".into(), Column::from_str(genres)),
+    ])
+    .expect("columns same length")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_ranges() {
+        let cfg = MovieLensConfig { rows: 2000, ..Default::default() };
+        let df = gen_movielens(&cfg);
+        assert_eq!(df.num_rows(), 2000);
+        let users = df.column("UserID").unwrap().as_i32().unwrap();
+        assert!(users.iter().all(|&u| u >= 1 && u <= cfg.num_users as i32));
+        let ratings = df.column("Rating").unwrap().as_f64().unwrap();
+        assert!(ratings.iter().all(|&r| (1.0..=5.0).contains(&r)));
+        let genres = df.column("Genres").unwrap().as_str().unwrap();
+        assert!(genres.iter().all(|g| !g.is_empty() && g.split('|').count() <= 4));
+    }
+
+    #[test]
+    fn deterministic_and_popularity_skewed() {
+        let cfg = MovieLensConfig { rows: 5000, ..Default::default() };
+        let a = gen_movielens(&cfg);
+        let b = gen_movielens(&cfg);
+        assert_eq!(a, b);
+        // head movie should be much more frequent than the median movie
+        let movies = a.column("MovieID").unwrap().as_i32().unwrap();
+        let mut counts = std::collections::HashMap::new();
+        for &m in movies {
+            *counts.entry(m).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().unwrap();
+        assert!(*max > 50, "head count {max}");
+    }
+
+    #[test]
+    fn genres_stable_per_movie() {
+        let cfg = MovieLensConfig { rows: 3000, ..Default::default() };
+        let df = gen_movielens(&cfg);
+        let movies = df.column("MovieID").unwrap().as_i32().unwrap();
+        let genres = df.column("Genres").unwrap().as_str().unwrap();
+        let mut seen = std::collections::HashMap::new();
+        for (m, g) in movies.iter().zip(genres.iter()) {
+            let prev = seen.entry(*m).or_insert_with(|| g.clone());
+            assert_eq!(prev, g, "movie {m} has inconsistent genres");
+        }
+    }
+}

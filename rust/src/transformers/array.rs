@@ -1,0 +1,525 @@
+//! Array / sequence transformers (Kamae's nested-sequence-native family).
+
+use crate::dataframe::{DataFrame, DType};
+use crate::error::{KamaeError, Result};
+use crate::export::{SpecBuilder, SpecDType};
+use crate::ops::array::{self, ListAgg};
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+use super::common::{spec_out_name, spec_output_cast, Io};
+
+/// Assemble N numeric scalar columns into one fixed-width vector column
+/// (the paper's "assembled into a single array which is subsequently
+/// standard scaled").
+#[derive(Debug, Clone)]
+pub struct VectorAssembleTransformer {
+    io: Io,
+}
+
+impl VectorAssembleTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(inputs: &[&str], output: &str) -> Self {
+        VectorAssembleTransformer { io: Io::multi(inputs, output) }
+    }
+}
+
+impl Transformer for VectorAssembleTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "VectorAssembleTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let cols: Vec<crate::dataframe::Column> = (0..self.io.input_cols.len())
+            .map(|i| self.io.get(df, i))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&crate::dataframe::Column> = cols.iter().collect();
+        self.io.finish(df, array::assemble(&refs)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let inputs: Vec<&str> = self.io.input_cols.iter().map(String::as_str).collect();
+        let w = inputs.len();
+        b.graph_node(
+            "assemble",
+            &inputs,
+            Json::object(),
+            &self.io.output_col,
+            SpecDType::F32,
+            Some(w),
+        )?;
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn assemble_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(VectorAssembleTransformer { io: Io::from_json(j)? }))
+}
+
+/// Disassemble a fixed-width vector column into scalar columns named
+/// `<outputCol>_0..N` (or explicit `outputCols`).
+#[derive(Debug, Clone)]
+pub struct VectorDisassembleTransformer {
+    io: Io,
+    output_cols: Vec<String>,
+}
+
+impl VectorDisassembleTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, outputs: &[&str]) -> Self {
+        VectorDisassembleTransformer {
+            io: Io::single(input, outputs.first().copied().unwrap_or("disassembled")),
+            output_cols: outputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl Transformer for VectorDisassembleTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "VectorDisassembleTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let parts = array::disassemble(&input)?;
+        if parts.len() != self.output_cols.len() {
+            return Err(KamaeError::InvalidConfig(format!(
+                "{}: vector has width {}, {} output cols configured",
+                self.io.layer_name,
+                parts.len(),
+                self.output_cols.len()
+            )));
+        }
+        for (name, col) in self.output_cols.iter().zip(parts) {
+            df.set_column(name.clone(), col)?;
+        }
+        Ok(())
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        for (i, name) in self.output_cols.iter().enumerate() {
+            let mut attrs = Json::object();
+            attrs.set("index", i);
+            b.graph_node("vector_at", &[self.io.input()], attrs, name, SpecDType::F32, None)?;
+        }
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set(
+            "outputCols",
+            Json::Array(self.output_cols.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn disassemble_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let output_cols: Vec<String> = j
+        .req_array("outputCols")?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| KamaeError::Serde("outputCols entry".into()))
+        })
+        .collect::<Result<_>>()?;
+    Ok(Box::new(VectorDisassembleTransformer { io: Io::from_json(j)?, output_cols }))
+}
+
+/// Reduce each row's list to a scalar (sum/mean/min/max/len).
+#[derive(Debug, Clone)]
+pub struct ListAggregateTransformer {
+    io: Io,
+    agg: ListAgg,
+}
+
+impl ListAggregateTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, agg: ListAgg) -> Self {
+        ListAggregateTransformer { io: Io::single(input, output), agg }
+    }
+}
+
+impl Transformer for ListAggregateTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ListAggregateTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, array::aggregate(&input, self.agg)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let dtype = if self.agg == ListAgg::Len { SpecDType::I64 } else { SpecDType::F32 };
+        let out = spec_out_name(&self.io, dtype);
+        b.graph_node(self.agg.spec_name(), &[self.io.input()], Json::object(), &out, dtype, None)?;
+        spec_output_cast(b, &self.io, &out, dtype, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set(
+            "agg",
+            match self.agg {
+                ListAgg::Sum => "sum",
+                ListAgg::Mean => "mean",
+                ListAgg::Min => "min",
+                ListAgg::Max => "max",
+                ListAgg::Len => "len",
+            },
+        );
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn list_agg_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(ListAggregateTransformer {
+        io: Io::from_json(j)?,
+        agg: ListAgg::from_name(j.req_str("agg")?)?,
+    }))
+}
+
+/// Element at a fixed position of each row's list.
+#[derive(Debug, Clone)]
+pub struct ElementAtTransformer {
+    io: Io,
+    index: i64,
+}
+
+impl ElementAtTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, index: i64) -> Self {
+        ElementAtTransformer { io: Io::single(input, output), index }
+    }
+}
+
+impl Transformer for ElementAtTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ElementAtTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, array::element_at(&input, self.index)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let in_dtype = b.engine_dtype(self.io.input())?.clone();
+        let is_string = matches!(&in_dtype, DType::List(i) if matches!(**i, DType::Str));
+        let dtype = match &in_dtype {
+            DType::List(inner) => SpecDType::for_engine(inner),
+            _ => SpecDType::F32,
+        };
+        let mut attrs = Json::object();
+        attrs.set("index", self.index);
+        if is_string {
+            // element extraction of a string list is still ingress work
+            b.ingress_node("element_at", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+        } else {
+            let out = spec_out_name(&self.io, dtype);
+            b.graph_node("element_at", &[self.io.input()], attrs, &out, dtype, None)?;
+            spec_output_cast(b, &self.io, &out, dtype, None)
+        }
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("index", self.index);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn element_at_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(ElementAtTransformer {
+        io: Io::from_json(j)?,
+        index: j.req_i64("index")?,
+    }))
+}
+
+/// Slice `[start, start+len)` of each row's list.
+#[derive(Debug, Clone)]
+pub struct ListSliceTransformer {
+    io: Io,
+    start: usize,
+    len: usize,
+}
+
+impl ListSliceTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, start: usize, len: usize) -> Self {
+        ListSliceTransformer { io: Io::single(input, output), start, len }
+    }
+}
+
+impl Transformer for ListSliceTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ListSliceTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, array::slice_list(&input, self.start, self.len)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let in_dtype = b.engine_dtype(self.io.input())?.clone();
+        let in_width = b.width(self.io.input())?;
+        let out_width = match in_width {
+            Some(w) => self.len.min(w.saturating_sub(self.start)),
+            None => self.len,
+        };
+        let mut attrs = Json::object();
+        attrs.set("start", self.start).set("len", self.len);
+        let is_string = matches!(&in_dtype, DType::List(i) if matches!(**i, DType::Str));
+        if is_string {
+            b.ingress_node(
+                "slice_list",
+                &[self.io.input()],
+                attrs,
+                &self.io.output_col,
+                in_dtype,
+                Some(out_width),
+            )
+        } else {
+            let dtype = match &in_dtype {
+                DType::List(inner) => SpecDType::for_engine(inner),
+                _ => SpecDType::F32,
+            };
+            b.graph_node("slice_list", &[self.io.input()], attrs, &self.io.output_col, dtype, Some(out_width))?;
+            Ok(())
+        }
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("start", self.start).set("len", self.len);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn list_slice_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(ListSliceTransformer {
+        io: Io::from_json(j)?,
+        start: j.req_i64("start")? as usize,
+        len: j.req_i64("len")? as usize,
+    }))
+}
+
+/// Row-wise cosine similarity between two fixed-width vector columns
+/// (Kamae's `CosineSimilarityTransformer` — e.g. user-embedding vs
+/// item-embedding similarity as a ranking feature).
+#[derive(Debug, Clone)]
+pub struct CosineSimilarityTransformer {
+    io: Io,
+}
+
+impl CosineSimilarityTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(left: &str, right: &str, output: &str) -> Self {
+        CosineSimilarityTransformer { io: Io::multi(&[left, right], output) }
+    }
+}
+
+impl Transformer for CosineSimilarityTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "CosineSimilarityTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        let b = self.io.get(df, 1)?;
+        self.io.finish(df, array::cosine_similarity(&a, &b)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let wa = b.width(&self.io.input_cols[0])?;
+        let wb = b.width(&self.io.input_cols[1])?;
+        if wa.is_none() || wa != wb {
+            return Err(KamaeError::InvalidConfig(format!(
+                "{}: cosine similarity needs two fixed-width vectors of equal width",
+                self.io.layer_name
+            )));
+        }
+        let out = spec_out_name(&self.io, SpecDType::F32);
+        b.graph_node(
+            "cosine_similarity",
+            &[&self.io.input_cols[0], &self.io.input_cols[1]],
+            Json::object(),
+            &out,
+            SpecDType::F32,
+            None,
+        )?;
+        spec_output_cast(b, &self.io, &out, SpecDType::F32, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn cosine_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(CosineSimilarityTransformer { io: Io::from_json(j)? }))
+}
+
+/// Pad/truncate a numeric or string list to a fixed length (the generic
+/// version of Listing 1's padding; required before a list crosses into
+/// the compiled graph).
+#[derive(Debug, Clone)]
+pub struct ListPadTransformer {
+    io: Io,
+    len: usize,
+    default: String,
+}
+
+impl ListPadTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, len: usize, default: &str) -> Self {
+        ListPadTransformer { io: Io::single(input, output), len, default: default.to_string() }
+    }
+}
+
+impl Transformer for ListPadTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ListPadTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, crate::ops::string_ops::pad_list(&input, self.len, &self.default)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let in_dtype = b.engine_dtype(self.io.input())?.clone();
+        let mut attrs = Json::object();
+        attrs.set("len", self.len).set("default", self.default.clone());
+        // padding is ingress work for strings; for numerics it is a graph
+        // op only if the input is already fixed-width — otherwise it is
+        // the op that *makes* it fixed-width, i.e. ingress.
+        b.ingress_node("pad_list", &[self.io.input()], attrs, &self.io.output_col, in_dtype, Some(self.len))
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("len", self.len).set("default", self.default.clone());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn list_pad_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(ListPadTransformer {
+        io: Io::from_json(j)?,
+        len: j.req_i64("len")? as usize,
+        default: j.req_str("default")?.to_string(),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn df() -> DataFrame {
+        DataFrame::new(vec![
+            ("a".into(), Column::from_f64(vec![1.0, 2.0])),
+            ("b".into(), Column::from_f64(vec![3.0, 4.0])),
+            ("l".into(), Column::from_f64_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0]])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn assemble_scale_disassemble_pattern() {
+        let mut d = df();
+        VectorAssembleTransformer::new(&["a", "b"], "vec").transform(&mut d).unwrap();
+        VectorDisassembleTransformer::new("vec", &["a2", "b2"]).transform(&mut d).unwrap();
+        assert_eq!(d.column("a2").unwrap().as_f64().unwrap(), &[1.0, 2.0]);
+        assert_eq!(d.column("b2").unwrap().as_f64().unwrap(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn disassemble_width_mismatch_errors() {
+        let mut d = df();
+        VectorAssembleTransformer::new(&["a", "b"], "vec").transform(&mut d).unwrap();
+        let t = VectorDisassembleTransformer::new("vec", &["only_one"]);
+        assert!(t.transform(&mut d).is_err());
+    }
+
+    #[test]
+    fn cosine_similarity_stage() {
+        let mut d = DataFrame::new(vec![
+            ("u".into(), Column::from_f64_rows(vec![vec![1.0, 0.0], vec![3.0, 4.0]])),
+            ("v".into(), Column::from_f64_rows(vec![vec![0.0, 2.0], vec![3.0, 4.0]])),
+        ])
+        .unwrap();
+        CosineSimilarityTransformer::new("u", "v", "sim").transform(&mut d).unwrap();
+        let s = d.column("sim").unwrap().as_f64().unwrap();
+        assert!(s[0].abs() < 1e-12);
+        assert!((s[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn list_ops() {
+        let mut d = df();
+        ListAggregateTransformer::new("l", "sum", ListAgg::Sum).transform(&mut d).unwrap();
+        assert_eq!(d.column("sum").unwrap().as_f64().unwrap(), &[6.0, 4.0]);
+        ElementAtTransformer::new("l", "first", 0).transform(&mut d).unwrap();
+        assert_eq!(d.column("first").unwrap().as_f64().unwrap(), &[1.0, 4.0]);
+        ListSliceTransformer::new("l", "sl", 1, 2).transform(&mut d).unwrap();
+        assert_eq!(d.column("sl").unwrap().as_list_f64().unwrap().row(0), &[2.0, 3.0]);
+        ListPadTransformer::new("l", "pad", 2, "0").transform(&mut d).unwrap();
+        let p = d.column("pad").unwrap().as_list_f64().unwrap();
+        assert_eq!(p.row(1), &[4.0, 0.0]);
+        assert!(p.is_fixed_width(2));
+    }
+}

@@ -1,0 +1,185 @@
+//! Shared transformer parameter plumbing (Kamae's common params:
+//! `inputCol(s)`, `outputCol`, `layerName`, `inputDtype`, `outputDtype`).
+
+use crate::dataframe::{Column, DataFrame, DType};
+use crate::error::{KamaeError, Result};
+use crate::ops::cast;
+use crate::util::json::Json;
+
+/// Common I/O configuration carried by every transformer.
+#[derive(Debug, Clone)]
+pub struct Io {
+    pub input_cols: Vec<String>,
+    pub output_col: String,
+    pub layer_name: String,
+    /// Optional cast applied to inputs before the op (Listing 1's
+    /// `inputDtype="string"`).
+    pub input_dtype: Option<DType>,
+    /// Optional cast applied to the output after the op.
+    pub output_dtype: Option<DType>,
+}
+
+impl Io {
+    pub fn single(input: &str, output: &str) -> Io {
+        Io {
+            input_cols: vec![input.to_string()],
+            output_col: output.to_string(),
+            layer_name: format!("{output}_layer"),
+            input_dtype: None,
+            output_dtype: None,
+        }
+    }
+
+    pub fn multi(inputs: &[&str], output: &str) -> Io {
+        Io {
+            input_cols: inputs.iter().map(|s| s.to_string()).collect(),
+            output_col: output.to_string(),
+            layer_name: format!("{output}_layer"),
+            input_dtype: None,
+            output_dtype: None,
+        }
+    }
+
+    pub fn input(&self) -> &str {
+        &self.input_cols[0]
+    }
+
+    /// Fetch input `i`, applying the `inputDtype` cast if configured.
+    pub fn get(&self, df: &DataFrame, i: usize) -> Result<Column> {
+        let name = self.input_cols.get(i).ok_or_else(|| {
+            KamaeError::InvalidConfig(format!(
+                "{}: missing input column index {i}",
+                self.layer_name
+            ))
+        })?;
+        let col = df.column(name)?;
+        match &self.input_dtype {
+            Some(dt) => cast::cast(col, dt),
+            None => Ok(col.clone()),
+        }
+    }
+
+    /// Store the op result, applying the `outputDtype` cast if configured.
+    pub fn finish(&self, df: &mut DataFrame, col: Column) -> Result<()> {
+        let col = match &self.output_dtype {
+            Some(dt) => cast::cast(&col, dt)?,
+            None => col,
+        };
+        df.set_column(self.output_col.clone(), col)
+    }
+
+    // ---- JSON ----------------------------------------------------------
+
+    pub fn write_json(&self, j: &mut Json) {
+        if self.input_cols.len() == 1 {
+            j.set("inputCol", self.input_cols[0].clone());
+        } else {
+            j.set(
+                "inputCols",
+                Json::Array(self.input_cols.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
+        j.set("outputCol", self.output_col.clone());
+        j.set("layerName", self.layer_name.clone());
+        if let Some(dt) = &self.input_dtype {
+            j.set("inputDtype", dt.name());
+        }
+        if let Some(dt) = &self.output_dtype {
+            j.set("outputDtype", dt.name());
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Io> {
+        let input_cols: Vec<String> = if let Some(one) = j.opt_str("inputCol") {
+            vec![one.to_string()]
+        } else {
+            j.req_array("inputCols")?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| KamaeError::Serde("inputCols entry".into()))
+                })
+                .collect::<Result<_>>()?
+        };
+        let output_col = j.req_str("outputCol")?.to_string();
+        Ok(Io {
+            layer_name: j
+                .opt_str("layerName")
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{output_col}_layer")),
+            input_cols,
+            output_col,
+            input_dtype: j.opt_str("inputDtype").map(DType::parse).transpose()?,
+            output_dtype: j.opt_str("outputDtype").map(DType::parse).transpose()?,
+        })
+    }
+}
+
+/// Builder-style setters shared by all transformer config structs.
+#[macro_export]
+macro_rules! io_builder_methods {
+    () => {
+        /// Set the Kamae `layerName`.
+        pub fn layer_name(mut self, name: &str) -> Self {
+            self.io.layer_name = name.to_string();
+            self
+        }
+
+        /// Cast inputs to this dtype before the op (`inputDtype`).
+        pub fn input_dtype(mut self, dt: crate::dataframe::DType) -> Self {
+            self.io.input_dtype = Some(dt);
+            self
+        }
+
+        /// Cast the output to this dtype after the op (`outputDtype`).
+        pub fn output_dtype(mut self, dt: crate::dataframe::DType) -> Self {
+            self.io.output_dtype = Some(dt);
+            self
+        }
+    };
+}
+
+/// Append the spec-side output cast node if `outputDtype` forces a dtype
+/// class change (float↔int). Returns the final graph column name.
+pub fn spec_output_cast(
+    b: &mut crate::export::SpecBuilder,
+    io: &Io,
+    produced: &str,
+    produced_dtype: crate::export::SpecDType,
+    width: Option<usize>,
+) -> Result<()> {
+    use crate::export::SpecDType;
+    let Some(target) = &io.output_dtype else {
+        return Ok(());
+    };
+    let target_spec = SpecDType::for_engine(target);
+    if target_spec == produced_dtype || matches!(target, DType::Str | DType::List(_)) {
+        return Ok(());
+    }
+    // rename: produced op wrote to a temp name `<out>__pre`; here we cast
+    // into the real output name.
+    let op = match target_spec {
+        SpecDType::I64 => "to_i64",
+        SpecDType::F32 => "to_f32",
+    };
+    b.graph_node(op, &[produced], Json::object(), &io.output_col, target_spec, width)?;
+    Ok(())
+}
+
+/// Decide the graph-node output name: if an output cast is needed the op
+/// writes to `<out>__pre` and [`spec_output_cast`] writes the final name.
+pub fn spec_out_name(io: &Io, produced_dtype: crate::export::SpecDType) -> String {
+    use crate::export::SpecDType;
+    match &io.output_dtype {
+        Some(t) => {
+            let t_spec = SpecDType::for_engine(t);
+            if t_spec != produced_dtype && !matches!(t, DType::Str | DType::List(_)) {
+                format!("{}__pre", io.output_col)
+            } else {
+                io.output_col.clone()
+            }
+        }
+        None => io.output_col.clone(),
+    }
+}

@@ -1,0 +1,378 @@
+//! Date/time transformers — the paper's LTR pipeline "disassembles date
+//! features into parts (month, weekday) so the model can accommodate
+//! seasonality" and "subtracts particular dates to generate durations".
+//!
+//! Parsing is ingress-side (strings); part extraction and arithmetic are
+//! graph-side integer math on epoch days/seconds (see
+//! [`crate::ops::date`]).
+
+use crate::dataframe::{DataFrame, DType};
+use crate::error::Result;
+use crate::export::{SpecBuilder, SpecDType};
+use crate::ops::date::{self, DatePart};
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+use super::common::{spec_out_name, spec_output_cast, Io};
+
+/// Parse `YYYY-MM-DD` strings → days since epoch (I64).
+#[derive(Debug, Clone)]
+pub struct DateParseTransformer {
+    io: Io,
+}
+
+impl DateParseTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str) -> Self {
+        DateParseTransformer { io: Io::single(input, output) }
+    }
+}
+
+impl Transformer for DateParseTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "DateParseTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, date::date_to_days(&input)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        b.ingress_node("date_to_days", &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn date_parse_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(DateParseTransformer { io: Io::from_json(j)? }))
+}
+
+/// Parse `YYYY-MM-DD HH:MM:SS` strings → seconds since epoch (I64).
+#[derive(Debug, Clone)]
+pub struct TimestampParseTransformer {
+    io: Io,
+}
+
+impl TimestampParseTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str) -> Self {
+        TimestampParseTransformer { io: Io::single(input, output) }
+    }
+}
+
+impl Transformer for TimestampParseTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "TimestampParseTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, date::timestamp_to_seconds(&input)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        b.ingress_node("timestamp_to_seconds", &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn timestamp_parse_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(TimestampParseTransformer { io: Io::from_json(j)? }))
+}
+
+/// Extract a calendar part (year/month/day/weekday/day-of-year) from an
+/// epoch-days column — graph-side integer math.
+#[derive(Debug, Clone)]
+pub struct DatePartTransformer {
+    io: Io,
+    part: DatePart,
+}
+
+impl DatePartTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, part: DatePart) -> Self {
+        DatePartTransformer { io: Io::single(input, output), part }
+    }
+}
+
+impl Transformer for DatePartTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "DatePartTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, date::extract_part(&input, self.part)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut attrs = Json::object();
+        attrs.set("part", self.part.spec_name());
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        b.graph_node("date_part", &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("part", self.part.spec_name());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn date_part_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(DatePartTransformer {
+        io: Io::from_json(j)?,
+        part: DatePart::from_name(j.req_str("part")?)?,
+    }))
+}
+
+/// Difference in days between two epoch-days columns (durations).
+#[derive(Debug, Clone)]
+pub struct DateDiffTransformer {
+    io: Io,
+}
+
+impl DateDiffTransformer {
+    crate::io_builder_methods!();
+
+    /// `output = end - start` in days.
+    pub fn new(end: &str, start: &str, output: &str) -> Self {
+        DateDiffTransformer { io: Io::multi(&[end, start], output) }
+    }
+}
+
+impl Transformer for DateDiffTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "DateDiffTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let end = self.io.get(df, 0)?;
+        let start = self.io.get(df, 1)?;
+        let (e, s) = (end.as_i64()?, start.as_i64()?);
+        let data: Vec<i64> = e.iter().zip(s.iter()).map(|(&a, &b)| a - b).collect();
+        let mut out = crate::dataframe::Column::I64(data, None);
+        out.set_nulls(crate::ops::merge_nulls(&[&end, &start]))?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        b.graph_node(
+            "sub_i64",
+            &[&self.io.input_cols[0], &self.io.input_cols[1]],
+            Json::object(),
+            &out,
+            SpecDType::I64,
+            None,
+        )?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn date_diff_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(DateDiffTransformer { io: Io::from_json(j)? }))
+}
+
+/// Add a constant number of days to an epoch-days column.
+#[derive(Debug, Clone)]
+pub struct DateAddTransformer {
+    io: Io,
+    days: i64,
+}
+
+impl DateAddTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, days: i64) -> Self {
+        DateAddTransformer { io: Io::single(input, output), days }
+    }
+}
+
+impl Transformer for DateAddTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "DateAddTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let v = input.as_i64()?;
+        let data: Vec<i64> = v.iter().map(|&x| x + self.days).collect();
+        self.io.finish(df, crate::dataframe::Column::I64(data, input.nulls().cloned()))
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut attrs = Json::object();
+        attrs.set("c", self.days);
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        b.graph_node("add_scalar_i64", &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("days", self.days);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn date_add_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(DateAddTransformer {
+        io: Io::from_json(j)?,
+        days: j.req_i64("days")?,
+    }))
+}
+
+/// Seconds-since-epoch → days-since-epoch (floor division; graph-side).
+#[derive(Debug, Clone)]
+pub struct SecondsToDaysTransformer {
+    io: Io,
+}
+
+impl SecondsToDaysTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str) -> Self {
+        SecondsToDaysTransformer { io: Io::single(input, output) }
+    }
+}
+
+impl Transformer for SecondsToDaysTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "SecondsToDaysTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let v = input.as_i64()?;
+        let data: Vec<i64> = v.iter().map(|&x| x.div_euclid(86_400)).collect();
+        self.io.finish(df, crate::dataframe::Column::I64(data, input.nulls().cloned()))
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        let mut attrs = Json::object();
+        attrs.set("c", 86_400i64);
+        b.graph_node("floordiv_scalar_i64", &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn seconds_to_days_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(SecondsToDaysTransformer { io: Io::from_json(j)? }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn df() -> DataFrame {
+        DataFrame::new(vec![
+            (
+                "checkin".into(),
+                Column::from_str(vec!["2024-06-15", "2024-12-31"]),
+            ),
+            (
+                "checkout".into(),
+                Column::from_str(vec!["2024-06-18", "2025-01-02"]),
+            ),
+            (
+                "ts".into(),
+                Column::from_str(vec!["2024-06-15 12:30:00", "2024-12-31 23:59:59"]),
+            ),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn duration_pipeline() {
+        // the paper's "particular dates are subtracted to generate durations"
+        let mut d = df();
+        DateParseTransformer::new("checkin", "in_days").transform(&mut d).unwrap();
+        DateParseTransformer::new("checkout", "out_days").transform(&mut d).unwrap();
+        DateDiffTransformer::new("out_days", "in_days", "stay_len").transform(&mut d).unwrap();
+        assert_eq!(d.column("stay_len").unwrap().as_i64().unwrap(), &[3, 2]);
+    }
+
+    #[test]
+    fn seasonality_parts() {
+        let mut d = df();
+        DateParseTransformer::new("checkin", "days").transform(&mut d).unwrap();
+        DatePartTransformer::new("days", "month", DatePart::Month).transform(&mut d).unwrap();
+        DatePartTransformer::new("days", "wd", DatePart::Weekday).transform(&mut d).unwrap();
+        assert_eq!(d.column("month").unwrap().as_i64().unwrap(), &[6, 12]);
+        assert_eq!(d.column("wd").unwrap().as_i64().unwrap(), &[6, 2]); // Sat, Tue
+    }
+
+    #[test]
+    fn timestamp_flow() {
+        let mut d = df();
+        TimestampParseTransformer::new("ts", "secs").transform(&mut d).unwrap();
+        SecondsToDaysTransformer::new("secs", "days").transform(&mut d).unwrap();
+        DatePartTransformer::new("days", "y", DatePart::Year).transform(&mut d).unwrap();
+        assert_eq!(d.column("y").unwrap().as_i64().unwrap(), &[2024, 2024]);
+    }
+
+    #[test]
+    fn date_add() {
+        let mut d = df();
+        DateParseTransformer::new("checkin", "days").transform(&mut d).unwrap();
+        DateAddTransformer::new("days", "later", 30).transform(&mut d).unwrap();
+        DatePartTransformer::new("later", "m", DatePart::Month).transform(&mut d).unwrap();
+        assert_eq!(d.column("m").unwrap().as_i64().unwrap(), &[7, 1]);
+    }
+}

@@ -1,0 +1,226 @@
+//! Stateless indexing transformers: hash indexing and bloom encoding
+//! (Listing 1's `HashIndexTransformer`; bloom per Serrà & Karatzoglou).
+//!
+//! Both run entirely graph-side on 64-bit token hashes produced by the
+//! ingress `hash64` op — the Pallas `hash_bucket`/`bloom_probes` kernels
+//! mirror [`crate::ops::hash`] bit-exactly.
+
+use crate::dataframe::DataFrame;
+use crate::error::Result;
+use crate::export::{SpecBuilder, SpecDType};
+use crate::ops::hash;
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+use super::common::Io;
+
+/// Map a (string) feature into `[0, numBins)` by hashing — for
+/// overwhelming-cardinality categoricals (Listing 1: `UserID`, 10k bins).
+#[derive(Debug, Clone)]
+pub struct HashIndexTransformer {
+    io: Io,
+    num_bins: i64,
+}
+
+impl HashIndexTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, num_bins: i64) -> Self {
+        HashIndexTransformer { io: Io::single(input, output), num_bins }
+    }
+}
+
+impl Transformer for HashIndexTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "HashIndexTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        // inputDtype handling: hashing always goes through the canonical
+        // string form, so ints hash identically on both paths.
+        let hashed = hash::hash64_column(&input)?;
+        let out = hash::hash_bucket_column(&hashed, self.num_bins)?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        // force the hash64 ingress boundary even for numeric inputs
+        let href = hash_ref(b, self.io.input(), width)?;
+        let mut attrs = Json::object();
+        attrs.set("num_bins", self.num_bins);
+        b.graph_node("hash_bucket", &[&href], attrs, &self.io.output_col, SpecDType::I64, width)?;
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("numBins", self.num_bins);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn hash_index_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(HashIndexTransformer {
+        io: Io::from_json(j)?,
+        num_bins: j.req_i64("numBins")?,
+    }))
+}
+
+/// Bloom encoding: k hash probes per token, probe j offset into
+/// `[j·numBins, (j+1)·numBins)` — memory-efficient high-cardinality
+/// encoding (experiment C4 sweeps k and numBins).
+#[derive(Debug, Clone)]
+pub struct BloomEncodeTransformer {
+    io: Io,
+    num_hashes: usize,
+    num_bins: i64,
+}
+
+impl BloomEncodeTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, num_hashes: usize, num_bins: i64) -> Self {
+        BloomEncodeTransformer { io: Io::single(input, output), num_hashes, num_bins }
+    }
+}
+
+impl Transformer for BloomEncodeTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "BloomEncodeTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let out = hash::bloom_encode_column(&input, self.num_hashes, self.num_bins)?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let in_width = b.width(self.io.input())?;
+        if in_width.is_some() {
+            return Err(crate::error::KamaeError::Unsupported(
+                "bloom encoding of list features (encode elements before padding instead)".into(),
+            ));
+        }
+        let href = hash_ref(b, self.io.input(), None)?;
+        let mut attrs = Json::object();
+        attrs.set("num_hashes", self.num_hashes).set("num_bins", self.num_bins);
+        b.graph_node(
+            "bloom_encode",
+            &[&href],
+            attrs,
+            &self.io.output_col,
+            SpecDType::I64,
+            Some(self.num_hashes),
+        )?;
+        Ok(())
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("numHashes", self.num_hashes).set("numBins", self.num_bins);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn bloom_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(BloomEncodeTransformer {
+        io: Io::from_json(j)?,
+        num_hashes: j.req_i64("numHashes")? as usize,
+        num_bins: j.req_i64("numBins")?,
+    }))
+}
+
+/// Resolve a column to its hashed graph reference, inserting the `hash64`
+/// ingress node even when the engine dtype is numeric (indexers hash the
+/// canonical string form — matching `inputDtype="string"` semantics).
+pub(crate) fn hash_ref(
+    b: &mut SpecBuilder,
+    col: &str,
+    width: Option<usize>,
+) -> Result<String> {
+    use crate::dataframe::DType;
+    let dt = b.engine_dtype(col)?.clone();
+    let is_string = matches!(dt, DType::Str)
+        || matches!(&dt, DType::List(i) if matches!(**i, DType::Str));
+    if is_string {
+        // builder's auto-hash path
+        b.graph_ref(col)
+    } else {
+        let hashed = format!("{col}__hash");
+        if b.engine_dtype(&hashed).is_err() {
+            let out_dtype = if matches!(dt, DType::List(_)) {
+                DType::List(Box::new(DType::I64))
+            } else {
+                DType::I64
+            };
+            b.ingress_node("hash64", &[col], Json::object(), &hashed, out_dtype, width)?;
+        }
+        b.graph_ref(&hashed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn df() -> DataFrame {
+        DataFrame::new(vec![
+            ("user".into(), Column::from_i64(vec![42, 99, 42])),
+            ("city".into(), Column::from_str(vec!["NYC", "LON", "PAR"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn hash_index_stable_and_bounded() {
+        let mut d = df();
+        HashIndexTransformer::new("user", "u_idx", 10_000)
+            .input_dtype(crate::dataframe::DType::Str)
+            .transform(&mut d)
+            .unwrap();
+        let idx = d.column("u_idx").unwrap().as_i64().unwrap();
+        assert_eq!(idx[0], idx[2]); // same id, same bin
+        assert!(idx.iter().all(|&i| (0..10_000).contains(&i)));
+        // must equal hashing the canonical string form
+        assert_eq!(idx[0], hash::bucket(hash::fnv1a64("42"), 0, 10_000));
+    }
+
+    #[test]
+    fn bloom_encode_shape() {
+        let mut d = df();
+        BloomEncodeTransformer::new("city", "c_bloom", 3, 500).transform(&mut d).unwrap();
+        let l = d.column("c_bloom").unwrap().as_list_i64().unwrap();
+        assert!(l.is_fixed_width(3));
+        for row in l.rows() {
+            for (k, &v) in row.iter().enumerate() {
+                assert!((k as i64 * 500..(k as i64 + 1) * 500).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn save_load() {
+        let t = HashIndexTransformer::new("user", "u", 64).layer_name("uh");
+        let j = crate::pipeline::with_type(t.save(), t.type_name());
+        let loaded = crate::transformers::load(&j).unwrap();
+        let mut a = df();
+        let mut b = df();
+        t.transform(&mut a).unwrap();
+        loaded.transform(&mut b).unwrap();
+        assert_eq!(a, b);
+    }
+}

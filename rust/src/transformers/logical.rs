@@ -1,0 +1,454 @@
+//! Logical / conditional transformers.
+
+use crate::dataframe::{Column, DataFrame, DType};
+use crate::error::Result;
+use crate::export::{SpecBuilder, SpecDType};
+use crate::ops::logical::{self, BoolOp, CmpOp};
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+use super::common::{spec_out_name, spec_output_cast, Io};
+
+/// Compare two numeric columns → bool (graph-side; bool travels as I64).
+#[derive(Debug, Clone)]
+pub struct CompareTransformer {
+    io: Io,
+    op: CmpOp,
+}
+
+impl CompareTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(left: &str, right: &str, output: &str, op: CmpOp) -> Self {
+        CompareTransformer { io: Io::multi(&[left, right], output), op }
+    }
+}
+
+impl Transformer for CompareTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "CompareTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        let b = self.io.get(df, 1)?;
+        self.io.finish(df, logical::compare(&a, &b, self.op)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        let mut attrs = Json::object();
+        attrs.set("op", self.op.spec_name());
+        b.graph_node(
+            "compare",
+            &[&self.io.input_cols[0], &self.io.input_cols[1]],
+            attrs,
+            &out,
+            SpecDType::I64,
+            None,
+        )?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("op", self.op.spec_name());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn compare_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(CompareTransformer {
+        io: Io::from_json(j)?,
+        op: CmpOp::from_name(j.req_str("op")?)?,
+    }))
+}
+
+/// Compare a column against a numeric constant → bool.
+#[derive(Debug, Clone)]
+pub struct CompareConstantTransformer {
+    io: Io,
+    op: CmpOp,
+    value: f64,
+}
+
+impl CompareConstantTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, op: CmpOp, value: f64) -> Self {
+        CompareConstantTransformer { io: Io::single(input, output), op, value }
+    }
+}
+
+impl Transformer for CompareConstantTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "CompareConstantTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        self.io.finish(df, logical::compare_scalar(&a, self.value, self.op)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        let mut attrs = Json::object();
+        attrs.set("op", self.op.spec_name()).set("value", self.value);
+        b.graph_node("compare_scalar", &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("op", self.op.spec_name()).set("value", self.value);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn compare_constant_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(CompareConstantTransformer {
+        io: Io::from_json(j)?,
+        op: CmpOp::from_name(j.req_str("op")?)?,
+        value: j.req_f64("value")?,
+    }))
+}
+
+/// String equality against a constant → bool. Engine compares strings;
+/// the compiled graph compares 64-bit token hashes (same answer modulo a
+/// 2⁻⁶⁴ collision — DESIGN.md §Substitutions).
+#[derive(Debug, Clone)]
+pub struct StringEqualsTransformer {
+    io: Io,
+    value: String,
+}
+
+impl StringEqualsTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, value: &str) -> Self {
+        StringEqualsTransformer { io: Io::single(input, output), value: value.to_string() }
+    }
+}
+
+impl Transformer for StringEqualsTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringEqualsTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        self.io.finish(df, logical::equals_str(&a, &self.value)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        let mut attrs = Json::object();
+        attrs.set("value_hash", crate::ops::hash::fnv1a64(&self.value));
+        b.graph_node("eq_hash", &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("value", self.value.clone());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn string_equals_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringEqualsTransformer {
+        io: Io::from_json(j)?,
+        value: j.req_str("value")?.to_string(),
+    }))
+}
+
+/// and/or/xor of two bool columns.
+#[derive(Debug, Clone)]
+pub struct BooleanTransformer {
+    io: Io,
+    op: BoolOp,
+}
+
+impl BooleanTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(left: &str, right: &str, output: &str, op: BoolOp) -> Self {
+        BooleanTransformer { io: Io::multi(&[left, right], output), op }
+    }
+}
+
+impl Transformer for BooleanTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "BooleanTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        let b = self.io.get(df, 1)?;
+        self.io.finish(df, logical::bool_binary(&a, &b, self.op)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        let mut attrs = Json::object();
+        attrs.set("op", self.op.spec_name());
+        b.graph_node(
+            "bool_op",
+            &[&self.io.input_cols[0], &self.io.input_cols[1]],
+            attrs,
+            &out,
+            SpecDType::I64,
+            None,
+        )?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("op", self.op.spec_name());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn boolean_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(BooleanTransformer {
+        io: Io::from_json(j)?,
+        op: BoolOp::from_name(j.req_str("op")?)?,
+    }))
+}
+
+/// Boolean negation.
+#[derive(Debug, Clone)]
+pub struct NotTransformer {
+    io: Io,
+}
+
+impl NotTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str) -> Self {
+        NotTransformer { io: Io::single(input, output) }
+    }
+}
+
+impl Transformer for NotTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "NotTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        self.io.finish(df, logical::bool_not(&a)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        b.graph_node("not", &[self.io.input()], Json::object(), &out, SpecDType::I64, width)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn not_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(NotTransformer { io: Io::from_json(j)? }))
+}
+
+/// `if cond then left else right`, elementwise (Kamae's conditional
+/// transformer). Branch columns must share a numeric dtype.
+#[derive(Debug, Clone)]
+pub struct IfThenElseTransformer {
+    io: Io,
+}
+
+impl IfThenElseTransformer {
+    crate::io_builder_methods!();
+
+    /// inputs = [cond, then_col, else_col]
+    pub fn new(cond: &str, then_col: &str, else_col: &str, output: &str) -> Self {
+        IfThenElseTransformer { io: Io::multi(&[cond, then_col, else_col], output) }
+    }
+}
+
+impl Transformer for IfThenElseTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "IfThenElseTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let c = self.io.get(df, 0)?;
+        let a = self.io.get(df, 1)?;
+        let b = self.io.get(df, 2)?;
+        // normalise both branches to f64 so mixed int/float configs work
+        let a = crate::ops::cast::cast(&a, &DType::F64)?;
+        let b = crate::ops::cast::cast(&b, &DType::F64)?;
+        self.io.finish(df, logical::select(&c, &a, &b)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let out = spec_out_name(&self.io, SpecDType::F32);
+        b.graph_node(
+            "select",
+            &[
+                &self.io.input_cols[0],
+                &self.io.input_cols[1],
+                &self.io.input_cols[2],
+            ],
+            Json::object(),
+            &out,
+            SpecDType::F32,
+            None,
+        )?;
+        spec_output_cast(b, &self.io, &out, SpecDType::F32, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn if_then_else_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(IfThenElseTransformer { io: Io::from_json(j)? }))
+}
+
+/// Null indicator for float columns (null or NaN → true). Serving-side
+/// the graph tests NaN — the ingress encodes nulls as NaN for floats.
+#[derive(Debug, Clone)]
+pub struct IsNullTransformer {
+    io: Io,
+}
+
+impl IsNullTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str) -> Self {
+        IsNullTransformer { io: Io::single(input, output) }
+    }
+}
+
+impl Transformer for IsNullTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "IsNullTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        let vals = crate::ops::cast::to_f64_vec(&a)?;
+        let data: Vec<bool> = vals
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| a.is_null(i) || x.is_nan())
+            .collect();
+        self.io.finish(df, Column::from_bool(data))
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        b.graph_node("is_nan", &[self.io.input()], Json::object(), &out, SpecDType::I64, width)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn is_null_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(IsNullTransformer { io: Io::from_json(j)? }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn df() -> DataFrame {
+        DataFrame::new(vec![
+            ("x".into(), Column::from_f64(vec![1.0, 5.0, 3.0])),
+            ("y".into(), Column::from_f64(vec![2.0, 2.0, 3.0])),
+            ("city".into(), Column::from_str(vec!["NYC", "LON", "NYC"])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn compare_and_select() {
+        let mut d = df();
+        CompareTransformer::new("x", "y", "gt", CmpOp::Gt).transform(&mut d).unwrap();
+        assert_eq!(d.column("gt").unwrap().as_bool().unwrap(), &[false, true, false]);
+        IfThenElseTransformer::new("gt", "x", "y", "m").transform(&mut d).unwrap();
+        assert_eq!(d.column("m").unwrap().as_f64().unwrap(), &[2.0, 5.0, 3.0]);
+    }
+
+    #[test]
+    fn compare_constant_and_bool_ops() {
+        let mut d = df();
+        CompareConstantTransformer::new("x", "big", CmpOp::Ge, 3.0).transform(&mut d).unwrap();
+        CompareConstantTransformer::new("y", "small", CmpOp::Lt, 3.0).transform(&mut d).unwrap();
+        BooleanTransformer::new("big", "small", "both", BoolOp::And).transform(&mut d).unwrap();
+        assert_eq!(d.column("both").unwrap().as_bool().unwrap(), &[false, true, false]);
+        NotTransformer::new("both", "neither").transform(&mut d).unwrap();
+        assert_eq!(d.column("neither").unwrap().as_bool().unwrap(), &[true, false, true]);
+    }
+
+    #[test]
+    fn string_equals() {
+        let mut d = df();
+        StringEqualsTransformer::new("city", "is_nyc", "NYC").transform(&mut d).unwrap();
+        assert_eq!(d.column("is_nyc").unwrap().as_bool().unwrap(), &[true, false, true]);
+    }
+
+    #[test]
+    fn is_null_covers_nan_and_mask() {
+        let mut d = DataFrame::new(vec![(
+            "v".into(),
+            Column::from_f64_opt(vec![Some(1.0), None, Some(f64::NAN)]),
+        )])
+        .unwrap();
+        IsNullTransformer::new("v", "missing").transform(&mut d).unwrap();
+        assert_eq!(d.column("missing").unwrap().as_bool().unwrap(), &[false, true, true]);
+    }
+}

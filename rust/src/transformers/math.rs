@@ -1,0 +1,566 @@
+//! Mathematical transformers (Kamae's math family).
+
+use crate::dataframe::DataFrame;
+use crate::error::{KamaeError, Result};
+use crate::export::{SpecBuilder, SpecDType};
+use crate::ops::math::{self, BinOp, UnaryOp};
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+use super::common::{spec_out_name, spec_output_cast, Io};
+
+/// Shared implementation for all single-input unary math transformers:
+/// each public transformer type is a configuration of [`UnaryOp`].
+#[derive(Debug, Clone)]
+pub struct UnaryMathTransformer {
+    pub(crate) io: Io,
+    pub(crate) op: UnaryOp,
+    type_name: &'static str,
+}
+
+impl UnaryMathTransformer {
+    fn new(io: Io, op: UnaryOp, type_name: &'static str) -> Self {
+        UnaryMathTransformer { io, op, type_name }
+    }
+
+    fn attrs(&self) -> Json {
+        let mut a = Json::object();
+        match &self.op {
+            UnaryOp::Log { base } => {
+                if let Some(b) = base {
+                    a.set("base", *b);
+                }
+            }
+            UnaryOp::Clip { min, max } => {
+                if let Some(m) = min {
+                    a.set("min", *m);
+                }
+                if let Some(m) = max {
+                    a.set("max", *m);
+                }
+            }
+            UnaryOp::PowScalar { p } => {
+                a.set("p", *p);
+            }
+            UnaryOp::AddScalar { c }
+            | UnaryOp::SubScalar { c }
+            | UnaryOp::MulScalar { c }
+            | UnaryOp::DivScalar { c } => {
+                a.set("c", *c);
+            }
+            UnaryOp::ScaleShift { scale, shift } => {
+                a.set("scale", *scale);
+                a.set("shift", *shift);
+            }
+            _ => {}
+        }
+        a
+    }
+
+    pub(crate) fn op_from_json(op_name: &str, j: &Json) -> Result<UnaryOp> {
+        Ok(match op_name {
+            "log" => UnaryOp::Log { base: j.opt_f64("base") },
+            "log1p" => UnaryOp::Log1p,
+            "exp" => UnaryOp::Exp,
+            "sqrt" => UnaryOp::Sqrt,
+            "abs" => UnaryOp::Abs,
+            "neg" => UnaryOp::Neg,
+            "reciprocal" => UnaryOp::Reciprocal,
+            "round" => UnaryOp::Round,
+            "floor" => UnaryOp::Floor,
+            "ceil" => UnaryOp::Ceil,
+            "sin" => UnaryOp::Sin,
+            "cos" => UnaryOp::Cos,
+            "tanh" => UnaryOp::Tanh,
+            "sigmoid" => UnaryOp::Sigmoid,
+            "clip" => UnaryOp::Clip { min: j.opt_f64("min"), max: j.opt_f64("max") },
+            "pow_scalar" => UnaryOp::PowScalar { p: j.req_f64("p")? },
+            "add_scalar" => UnaryOp::AddScalar { c: j.req_f64("c")? },
+            "sub_scalar" => UnaryOp::SubScalar { c: j.req_f64("c")? },
+            "mul_scalar" => UnaryOp::MulScalar { c: j.req_f64("c")? },
+            "div_scalar" => UnaryOp::DivScalar { c: j.req_f64("c")? },
+            "scale_shift" => UnaryOp::ScaleShift {
+                scale: j.req_f64("scale")?,
+                shift: j.req_f64("shift")?,
+            },
+            other => {
+                return Err(KamaeError::Serde(format!("unknown unary op: {other}")))
+            }
+        })
+    }
+}
+
+impl Transformer for UnaryMathTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        self.type_name
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let out = math::unary(&input, &self.op)?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let out = spec_out_name(&self.io, SpecDType::F32);
+        b.graph_node(
+            self.op.spec_name(),
+            &[self.io.input()],
+            self.attrs(),
+            &out,
+            SpecDType::F32,
+            width,
+        )?;
+        spec_output_cast(b, &self.io, &out, SpecDType::F32, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = self.attrs();
+        j.set("op", self.op.spec_name());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+/// Construct the concrete transformer types the public API exposes.
+macro_rules! unary_transformer {
+    ($(#[$doc:meta])* $name:ident, $type_tag:literal, ($($arg:ident : $ty:ty),*), $op:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone)]
+        pub struct $name(pub(crate) UnaryMathTransformer);
+
+        impl $name {
+            #[allow(clippy::new_without_default)]
+            pub fn new(input: &str, output: &str $(, $arg: $ty)*) -> $name {
+                $name(UnaryMathTransformer::new(
+                    Io::single(input, output),
+                    $op,
+                    $type_tag,
+                ))
+            }
+
+            /// Set the Kamae `layerName`.
+            pub fn layer_name(mut self, name: &str) -> Self {
+                self.0.io.layer_name = name.to_string();
+                self
+            }
+
+            /// Cast inputs before the op (`inputDtype`).
+            pub fn input_dtype(mut self, dt: crate::dataframe::DType) -> Self {
+                self.0.io.input_dtype = Some(dt);
+                self
+            }
+
+            /// Cast the output after the op (`outputDtype`).
+            pub fn output_dtype(mut self, dt: crate::dataframe::DType) -> Self {
+                self.0.io.output_dtype = Some(dt);
+                self
+            }
+        }
+
+        impl Transformer for $name {
+            fn layer_name(&self) -> &str { &self.0.io.layer_name }
+            fn type_name(&self) -> &'static str { Transformer::type_name(&self.0) }
+            fn transform(&self, df: &mut DataFrame) -> Result<()> { self.0.transform(df) }
+            fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> { self.0.spec_nodes(b) }
+            fn save(&self) -> Json { self.0.save() }
+        }
+    };
+}
+
+unary_transformer!(
+    /// `log(x + alpha)` in the configured base (Kamae `LogTransformer`).
+    /// With `alpha = 1` and base *e* this is the paper's log1p transform
+    /// for "values spanning many orders of magnitude".
+    LogTransformer, "LogTransformer", (), UnaryOp::Log { base: None });
+
+impl LogTransformer {
+    /// Use a specific logarithm base.
+    pub fn base(mut self, base: f64) -> Self {
+        self.0.op = UnaryOp::Log { base: Some(base) };
+        self
+    }
+
+    /// Switch to log1p (log(1+x), base e).
+    pub fn log1p(mut self) -> Self {
+        self.0.op = UnaryOp::Log1p;
+        self
+    }
+}
+
+unary_transformer!(
+    /// e^x (Kamae `ExpTransformer`).
+    ExpTransformer, "ExpTransformer", (), UnaryOp::Exp);
+unary_transformer!(
+    /// √x.
+    SqrtTransformer, "SqrtTransformer", (), UnaryOp::Sqrt);
+unary_transformer!(
+    /// |x|.
+    AbsTransformer, "AbsTransformer", (), UnaryOp::Abs);
+unary_transformer!(
+    /// −x.
+    NegTransformer, "NegTransformer", (), UnaryOp::Neg);
+unary_transformer!(
+    /// 1/x.
+    ReciprocalTransformer, "ReciprocalTransformer", (), UnaryOp::Reciprocal);
+unary_transformer!(
+    /// Round half-to-even.
+    RoundTransformer, "RoundTransformer", (), UnaryOp::Round);
+unary_transformer!(
+    /// ⌊x⌋.
+    FloorTransformer, "FloorTransformer", (), UnaryOp::Floor);
+unary_transformer!(
+    /// ⌈x⌉.
+    CeilTransformer, "CeilTransformer", (), UnaryOp::Ceil);
+unary_transformer!(
+    /// sin(x).
+    SinTransformer, "SinTransformer", (), UnaryOp::Sin);
+unary_transformer!(
+    /// cos(x).
+    CosTransformer, "CosTransformer", (), UnaryOp::Cos);
+unary_transformer!(
+    /// tanh(x).
+    TanhTransformer, "TanhTransformer", (), UnaryOp::Tanh);
+unary_transformer!(
+    /// σ(x) = 1/(1+e^−x).
+    SigmoidTransformer, "SigmoidTransformer", (), UnaryOp::Sigmoid);
+unary_transformer!(
+    /// Clamp into [min, max] (Kamae `ClipTransformer`).
+    ClipTransformer, "ClipTransformer", (min: Option<f64>, max: Option<f64>),
+    UnaryOp::Clip { min, max });
+unary_transformer!(
+    /// x^p (Kamae `PowerTransformer`).
+    PowerTransformer, "PowerTransformer", (p: f64), UnaryOp::PowScalar { p });
+unary_transformer!(
+    /// x + c.
+    AddConstantTransformer, "AddConstantTransformer", (c: f64), UnaryOp::AddScalar { c });
+unary_transformer!(
+    /// x − c.
+    SubtractConstantTransformer, "SubtractConstantTransformer", (c: f64), UnaryOp::SubScalar { c });
+unary_transformer!(
+    /// x · c.
+    MultiplyConstantTransformer, "MultiplyConstantTransformer", (c: f64), UnaryOp::MulScalar { c });
+unary_transformer!(
+    /// x / c.
+    DivideConstantTransformer, "DivideConstantTransformer", (c: f64), UnaryOp::DivScalar { c });
+unary_transformer!(
+    /// x·scale + shift (the exported form of standard scaling).
+    ScaleShiftTransformer, "ScaleShiftTransformer", (scale: f64, shift: f64),
+    UnaryOp::ScaleShift { scale, shift });
+
+/// Elementwise arithmetic between two columns (Kamae's binary math
+/// transformers: `SumTransformer`, `SubtractTransformer`, ... — here one
+/// type parameterised by [`BinOp`]).
+#[derive(Debug, Clone)]
+pub struct ArithmeticTransformer {
+    io: Io,
+    op: BinOp,
+}
+
+impl ArithmeticTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(left: &str, right: &str, output: &str, op: BinOp) -> Self {
+        ArithmeticTransformer { io: Io::multi(&[left, right], output), op }
+    }
+}
+
+impl Transformer for ArithmeticTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ArithmeticTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let a = self.io.get(df, 0)?;
+        let b = self.io.get(df, 1)?;
+        let out = math::binary(&a, &b, self.op)?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let wa = b.width(&self.io.input_cols[0])?;
+        let wb = b.width(&self.io.input_cols[1])?;
+        let width = wa.or(wb); // broadcast: list side wins
+        let out = spec_out_name(&self.io, SpecDType::F32);
+        b.graph_node(
+            self.op.spec_name(),
+            &[&self.io.input_cols[0], &self.io.input_cols[1]],
+            Json::object(),
+            &out,
+            SpecDType::F32,
+            width,
+        )?;
+        spec_output_cast(b, &self.io, &out, SpecDType::F32, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("op", self.op.spec_name());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn arithmetic_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let io = Io::from_json(j)?;
+    let op = BinOp::from_name(j.req_str("op")?)?;
+    Ok(Box::new(ArithmeticTransformer { io, op }))
+}
+
+pub(crate) fn unary_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let io = Io::from_json(j)?;
+    let op = UnaryMathTransformer::op_from_json(j.req_str("op")?, j)?;
+    // the concrete wrapper type is irrelevant after load; reuse the shared
+    // implementation with a stable tag so re-save round-trips.
+    Ok(Box::new(UnaryMathTransformer::new(io, op, "UnaryMath")))
+}
+
+/// Bucketize by explicit splits (Spark `Bucketizer`).
+#[derive(Debug, Clone)]
+pub struct BucketizeTransformer {
+    io: Io,
+    splits: Vec<f64>,
+}
+
+impl BucketizeTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, splits: Vec<f64>) -> Self {
+        BucketizeTransformer { io: Io::single(input, output), splits }
+    }
+}
+
+impl Transformer for BucketizeTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "BucketizeTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let out = math::bucketize(&input, &self.splits)?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let mut attrs = Json::object();
+        attrs.set("splits", Json::Array(self.splits.iter().map(|&s| Json::Float(s)).collect()));
+        let out = spec_out_name(&self.io, SpecDType::I64);
+        b.graph_node("bucketize", &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("splits", Json::Array(self.splits.iter().map(|&s| Json::Float(s)).collect()));
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn bucketize_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let io = Io::from_json(j)?;
+    let splits = j
+        .req_array("splits")?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| KamaeError::Serde("split".into())))
+        .collect::<Result<_>>()?;
+    Ok(Box::new(BucketizeTransformer { io, splits }))
+}
+
+/// Row-wise min/max/sum/mean over N columns (Kamae's multi-column math).
+#[derive(Debug, Clone)]
+pub struct ColumnsAggTransformer {
+    io: Io,
+    agg: ColumnsAgg,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnsAgg {
+    Sum,
+    Mean,
+    Min,
+    Max,
+}
+
+impl ColumnsAgg {
+    fn name(&self) -> &'static str {
+        match self {
+            ColumnsAgg::Sum => "sum",
+            ColumnsAgg::Mean => "mean",
+            ColumnsAgg::Min => "min",
+            ColumnsAgg::Max => "max",
+        }
+    }
+
+    fn parse(s: &str) -> Result<ColumnsAgg> {
+        Ok(match s {
+            "sum" => ColumnsAgg::Sum,
+            "mean" => ColumnsAgg::Mean,
+            "min" => ColumnsAgg::Min,
+            "max" => ColumnsAgg::Max,
+            other => {
+                return Err(KamaeError::InvalidConfig(format!("unknown columns agg: {other}")))
+            }
+        })
+    }
+}
+
+impl ColumnsAggTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(inputs: &[&str], output: &str, agg: ColumnsAgg) -> Self {
+        ColumnsAggTransformer { io: Io::multi(inputs, output), agg }
+    }
+}
+
+impl Transformer for ColumnsAggTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "ColumnsAggTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let mut acc = crate::ops::cast::to_f64_vec(&self.io.get(df, 0)?)?;
+        let mut cols = vec![self.io.get(df, 0)?];
+        for i in 1..self.io.input_cols.len() {
+            let c = self.io.get(df, i)?;
+            let v = crate::ops::cast::to_f64_vec(&c)?;
+            if v.len() != acc.len() {
+                return Err(KamaeError::LengthMismatch {
+                    left: v.len(),
+                    right: acc.len(),
+                    context: "columns agg".into(),
+                });
+            }
+            for (a, &x) in acc.iter_mut().zip(v.iter()) {
+                *a = match self.agg {
+                    ColumnsAgg::Sum | ColumnsAgg::Mean => *a + x,
+                    ColumnsAgg::Min => a.min(x),
+                    ColumnsAgg::Max => a.max(x),
+                };
+            }
+            cols.push(c);
+        }
+        if self.agg == ColumnsAgg::Mean {
+            let n = self.io.input_cols.len() as f64;
+            for a in acc.iter_mut() {
+                *a /= n;
+            }
+        }
+        let refs: Vec<&crate::dataframe::Column> = cols.iter().collect();
+        let mut out = crate::dataframe::Column::F64(acc, None);
+        out.set_nulls(crate::ops::merge_nulls(&refs))?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let inputs: Vec<&str> = self.io.input_cols.iter().map(String::as_str).collect();
+        let mut attrs = Json::object();
+        attrs.set("agg", self.agg.name());
+        let out = spec_out_name(&self.io, SpecDType::F32);
+        b.graph_node("columns_agg", &inputs, attrs, &out, SpecDType::F32, None)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::F32, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("agg", self.agg.name());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn columns_agg_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let io = Io::from_json(j)?;
+    let agg = ColumnsAgg::parse(j.req_str("agg")?)?;
+    Ok(Box::new(ColumnsAggTransformer { io, agg }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn df() -> DataFrame {
+        DataFrame::new(vec![
+            ("x".into(), Column::from_f64(vec![1.0, 10.0, 100.0])),
+            ("y".into(), Column::from_f64(vec![2.0, 3.0, 4.0])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn log_transformer() {
+        let mut d = df();
+        LogTransformer::new("x", "x_log").base(10.0).transform(&mut d).unwrap();
+        let out = d.column("x_log").unwrap().as_f64().unwrap();
+        assert!((out[2] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn output_dtype_cast() {
+        let mut d = df();
+        SqrtTransformer::new("x", "s")
+            .output_dtype(crate::dataframe::DType::I64)
+            .transform(&mut d)
+            .unwrap();
+        assert_eq!(d.column("s").unwrap().as_i64().unwrap(), &[1, 3, 10]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut d = df();
+        ArithmeticTransformer::new("x", "y", "q", BinOp::Div).transform(&mut d).unwrap();
+        assert_eq!(d.column("q").unwrap().as_f64().unwrap(), &[0.5, 10.0 / 3.0, 25.0]);
+    }
+
+    #[test]
+    fn columns_agg_all_modes() {
+        let mut d = df();
+        for (agg, expect0) in [
+            (ColumnsAgg::Sum, 3.0),
+            (ColumnsAgg::Mean, 1.5),
+            (ColumnsAgg::Min, 1.0),
+            (ColumnsAgg::Max, 2.0),
+        ] {
+            let t = ColumnsAggTransformer::new(&["x", "y"], "agg", agg);
+            t.transform(&mut d).unwrap();
+            assert_eq!(d.column("agg").unwrap().as_f64().unwrap()[0], expect0, "{agg:?}");
+        }
+    }
+
+    #[test]
+    fn bucketize_transformer() {
+        let mut d = df();
+        BucketizeTransformer::new("x", "b", vec![5.0, 50.0]).transform(&mut d).unwrap();
+        assert_eq!(d.column("b").unwrap().as_i64().unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = LogTransformer::new("x", "x_log").base(2.0).layer_name("my_log");
+        let j = crate::pipeline::with_type(t.save(), t.type_name());
+        let loaded = crate::transformers::load(&j).unwrap();
+        let mut d = df();
+        loaded.transform(&mut d).unwrap();
+        assert!((d.column("x_log").unwrap().as_f64().unwrap()[1] - 10.0f64.log2()).abs() < 1e-12);
+        assert_eq!(loaded.layer_name(), "my_log");
+    }
+}

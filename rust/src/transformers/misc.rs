@@ -1,0 +1,174 @@
+//! Geographic and dtype-cast transformers.
+
+use crate::dataframe::{DataFrame, DType};
+use crate::error::Result;
+use crate::export::{SpecBuilder, SpecDType};
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+use super::common::{spec_out_name, spec_output_cast, Io};
+
+/// Haversine great-circle distance (km) between two coordinate pairs.
+#[derive(Debug, Clone)]
+pub struct HaversineTransformer {
+    io: Io,
+}
+
+impl HaversineTransformer {
+    crate::io_builder_methods!();
+
+    /// inputs = [lat1, lon1, lat2, lon2]
+    pub fn new(lat1: &str, lon1: &str, lat2: &str, lon2: &str, output: &str) -> Self {
+        HaversineTransformer { io: Io::multi(&[lat1, lon1, lat2, lon2], output) }
+    }
+}
+
+impl Transformer for HaversineTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "HaversineTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let cols: Vec<crate::dataframe::Column> =
+            (0..4).map(|i| self.io.get(df, i)).collect::<Result<_>>()?;
+        let out = crate::ops::geo::haversine(&cols[0], &cols[1], &cols[2], &cols[3])?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let inputs: Vec<&str> = self.io.input_cols.iter().map(String::as_str).collect();
+        let out = spec_out_name(&self.io, SpecDType::F32);
+        b.graph_node("haversine", &inputs, Json::object(), &out, SpecDType::F32, None)?;
+        spec_output_cast(b, &self.io, &out, SpecDType::F32, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn haversine_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(HaversineTransformer { io: Io::from_json(j)? }))
+}
+
+/// Pure dtype cast as a pipeline stage.
+#[derive(Debug, Clone)]
+pub struct CastTransformer {
+    io: Io,
+    to: DType,
+}
+
+impl CastTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, to: DType) -> Self {
+        CastTransformer { io: Io::single(input, output), to }
+    }
+}
+
+impl Transformer for CastTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "CastTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, crate::ops::cast::cast(&input, &self.to)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let in_dtype = b.engine_dtype(self.io.input())?.clone();
+        match &self.to {
+            // cast to string: ingress op (canonical string form)
+            DType::Str => b.ingress_node(
+                "to_string",
+                &[self.io.input()],
+                Json::object(),
+                &self.io.output_col,
+                DType::Str,
+                width,
+            ),
+            // numeric casts: graph-side convert between f32/i64 classes
+            to => {
+                let target = SpecDType::for_engine(to);
+                let op = match target {
+                    SpecDType::I64 => "to_i64",
+                    SpecDType::F32 => "to_f32",
+                };
+                // string inputs cast to number stay ingress (parsing)
+                let is_string_in = matches!(in_dtype, DType::Str)
+                    || matches!(&in_dtype, DType::List(i) if matches!(**i, DType::Str));
+                if is_string_in {
+                    b.ingress_node(
+                        "parse_number",
+                        &[self.io.input()],
+                        Json::object(),
+                        &self.io.output_col,
+                        to.clone(),
+                        width,
+                    )
+                } else {
+                    b.graph_node(op, &[self.io.input()], Json::object(), &self.io.output_col, target, width)?;
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("to", self.to.name());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn cast_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(CastTransformer {
+        io: Io::from_json(j)?,
+        to: DType::parse(j.req_str("to")?)?,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    #[test]
+    fn haversine_distance() {
+        let mut d = DataFrame::new(vec![
+            ("la1".into(), Column::from_f64(vec![51.5074])),
+            ("lo1".into(), Column::from_f64(vec![-0.1278])),
+            ("la2".into(), Column::from_f64(vec![48.8566])),
+            ("lo2".into(), Column::from_f64(vec![2.3522])),
+        ])
+        .unwrap();
+        HaversineTransformer::new("la1", "lo1", "la2", "lo2", "dist")
+            .transform(&mut d)
+            .unwrap();
+        assert!((d.column("dist").unwrap().as_f64().unwrap()[0] - 344.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn cast_stage() {
+        let mut d = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_str(vec!["1.5", "2.5"]),
+        )])
+        .unwrap();
+        CastTransformer::new("x", "xf", DType::F64).transform(&mut d).unwrap();
+        assert_eq!(d.column("xf").unwrap().as_f64().unwrap(), &[1.5, 2.5]);
+    }
+}

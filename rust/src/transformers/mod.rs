@@ -1,0 +1,131 @@
+//! The transformer library — Kamae's configurable, stateless column
+//! operations (mathematical, string, date, geographical, logical, array,
+//! conditional and hash-indexing families), each exporting a 1:1 GraphSpec
+//! op for the compiled inference graph.
+//!
+//! Fitted estimator models ([`crate::estimators`]) also implement
+//! [`crate::pipeline::Transformer`] and register in the same [`load`]
+//! registry so pipelines round-trip through JSON regardless of stage kind.
+
+mod array;
+mod common;
+mod date;
+mod indexing;
+mod logical;
+mod math;
+mod misc;
+mod string;
+
+pub use array::{
+    CosineSimilarityTransformer, ElementAtTransformer, ListAggregateTransformer,
+    ListPadTransformer, ListSliceTransformer, VectorAssembleTransformer,
+    VectorDisassembleTransformer,
+};
+pub use common::Io;
+pub use date::{
+    DateAddTransformer, DateDiffTransformer, DateParseTransformer, DatePartTransformer,
+    SecondsToDaysTransformer, TimestampParseTransformer,
+};
+pub use indexing::{BloomEncodeTransformer, HashIndexTransformer};
+pub(crate) use indexing::hash_ref as indexing_hash_ref;
+pub use logical::{
+    BooleanTransformer, CompareConstantTransformer, CompareTransformer, IfThenElseTransformer,
+    IsNullTransformer, NotTransformer, StringEqualsTransformer,
+};
+pub use math::{
+    AbsTransformer, AddConstantTransformer, ArithmeticTransformer, BucketizeTransformer,
+    CeilTransformer, ClipTransformer, ColumnsAgg, ColumnsAggTransformer, CosTransformer,
+    DivideConstantTransformer, ExpTransformer, FloorTransformer, LogTransformer,
+    MultiplyConstantTransformer, NegTransformer, PowerTransformer, ReciprocalTransformer,
+    RoundTransformer, ScaleShiftTransformer, SigmoidTransformer, SinTransformer,
+    SqrtTransformer, SubtractConstantTransformer, TanhTransformer,
+};
+pub use misc::{CastTransformer, HaversineTransformer};
+pub use string::{
+    RegexExtractTransformer, RegexReplaceTransformer, StringCaseTransformer,
+    StringConcatTransformer, StringContainsTransformer, StringLengthTransformer,
+    StringListToStringTransformer, StringReplaceTransformer, StringToStringListTransformer,
+    SubstringTransformer, TrimTransformer,
+};
+
+// re-export op enums used in constructors
+pub use crate::ops::array::ListAgg;
+pub use crate::ops::date::DatePart;
+pub use crate::ops::logical::{BoolOp, CmpOp};
+pub use crate::ops::math::BinOp;
+pub use crate::ops::string_ops::{CaseMode, MatchMode};
+
+use crate::error::{KamaeError, Result};
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+/// Deserialise any registered transformer (or fitted estimator model)
+/// from its `{"type": ..., params...}` JSON form.
+pub fn load(j: &Json) -> Result<Box<dyn Transformer>> {
+    let type_name = j.req_str("type")?;
+    match type_name {
+        // math family — all unary ops share one loader keyed by "op"
+        "LogTransformer" | "ExpTransformer" | "SqrtTransformer" | "AbsTransformer"
+        | "NegTransformer" | "ReciprocalTransformer" | "RoundTransformer" | "FloorTransformer"
+        | "CeilTransformer" | "SinTransformer" | "CosTransformer" | "TanhTransformer"
+        | "SigmoidTransformer" | "ClipTransformer" | "PowerTransformer"
+        | "AddConstantTransformer" | "SubtractConstantTransformer"
+        | "MultiplyConstantTransformer" | "DivideConstantTransformer"
+        | "ScaleShiftTransformer" | "UnaryMath" => math::unary_from_json(j),
+        "ArithmeticTransformer" => math::arithmetic_from_json(j),
+        "BucketizeTransformer" => math::bucketize_from_json(j),
+        "ColumnsAggTransformer" => math::columns_agg_from_json(j),
+        // string family
+        "StringCaseTransformer" => string::case_from_json(j),
+        "TrimTransformer" => string::trim_from_json(j),
+        "SubstringTransformer" => string::substring_from_json(j),
+        "StringReplaceTransformer" => string::replace_from_json(j),
+        "RegexReplaceTransformer" => string::regex_replace_from_json(j),
+        "RegexExtractTransformer" => string::regex_extract_from_json(j),
+        "StringConcatTransformer" => string::concat_from_json(j),
+        "StringToStringListTransformer" => string::split_from_json(j),
+        "StringListToStringTransformer" => string::join_from_json(j),
+        "StringContainsTransformer" => string::contains_from_json(j),
+        "StringLengthTransformer" => string::str_len_from_json(j),
+        // date family
+        "DateParseTransformer" => date::date_parse_from_json(j),
+        "TimestampParseTransformer" => date::timestamp_parse_from_json(j),
+        "DatePartTransformer" => date::date_part_from_json(j),
+        "DateDiffTransformer" => date::date_diff_from_json(j),
+        "DateAddTransformer" => date::date_add_from_json(j),
+        "SecondsToDaysTransformer" => date::seconds_to_days_from_json(j),
+        // logical family
+        "CompareTransformer" => logical::compare_from_json(j),
+        "CompareConstantTransformer" => logical::compare_constant_from_json(j),
+        "StringEqualsTransformer" => logical::string_equals_from_json(j),
+        "BooleanTransformer" => logical::boolean_from_json(j),
+        "NotTransformer" => logical::not_from_json(j),
+        "IfThenElseTransformer" => logical::if_then_else_from_json(j),
+        "IsNullTransformer" => logical::is_null_from_json(j),
+        // array family
+        "VectorAssembleTransformer" => array::assemble_from_json(j),
+        "VectorDisassembleTransformer" => array::disassemble_from_json(j),
+        "ListAggregateTransformer" => array::list_agg_from_json(j),
+        "ElementAtTransformer" => array::element_at_from_json(j),
+        "ListSliceTransformer" => array::list_slice_from_json(j),
+        "ListPadTransformer" => array::list_pad_from_json(j),
+        "CosineSimilarityTransformer" => array::cosine_from_json(j),
+        // indexing family
+        "HashIndexTransformer" => indexing::hash_index_from_json(j),
+        "BloomEncodeTransformer" => indexing::bloom_from_json(j),
+        // misc
+        "HaversineTransformer" => haversine_load(j),
+        "CastTransformer" => misc::cast_from_json(j),
+        // fitted estimator models
+        "StringIndexModel" => crate::estimators::string_index_model_from_json(j),
+        "OneHotModel" => crate::estimators::one_hot_model_from_json(j),
+        "StandardScaleModel" => crate::estimators::standard_scale_model_from_json(j),
+        "MinMaxScaleModel" => crate::estimators::min_max_scale_model_from_json(j),
+        "ImputeModel" => crate::estimators::impute_model_from_json(j),
+        other => Err(KamaeError::Serde(format!("unknown transformer type: {other}"))),
+    }
+}
+
+fn haversine_load(j: &Json) -> Result<Box<dyn Transformer>> {
+    misc::haversine_from_json(j)
+}

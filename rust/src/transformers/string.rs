@@ -1,0 +1,734 @@
+//! String transformers (ingress-side ops).
+
+use crate::dataframe::{DataFrame, DType};
+use crate::error::{KamaeError, Result};
+use crate::export::SpecBuilder;
+use crate::ops::regex::Regex;
+use crate::ops::string_ops::{self, CaseMode, MatchMode};
+use crate::pipeline::Transformer;
+use crate::util::json::Json;
+
+use super::common::Io;
+
+/// Upper/lower/title casing (Kamae `StringCaseTransformer`).
+#[derive(Debug, Clone)]
+pub struct StringCaseTransformer {
+    io: Io,
+    mode: CaseMode,
+}
+
+impl StringCaseTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, mode: CaseMode) -> Self {
+        StringCaseTransformer { io: Io::single(input, output), mode }
+    }
+}
+
+fn case_name(m: CaseMode) -> &'static str {
+    match m {
+        CaseMode::Upper => "upper",
+        CaseMode::Lower => "lower",
+        CaseMode::Title => "title",
+    }
+}
+
+fn case_parse(s: &str) -> Result<CaseMode> {
+    Ok(match s {
+        "upper" => CaseMode::Upper,
+        "lower" => CaseMode::Lower,
+        "title" => CaseMode::Title,
+        other => return Err(KamaeError::InvalidConfig(format!("unknown case mode: {other}"))),
+    })
+}
+
+impl Transformer for StringCaseTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringCaseTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let out = string_ops::change_case(&input, self.mode)?;
+        self.io.finish(df, out)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let dt = b.engine_dtype(self.io.input())?.clone();
+        let mut attrs = Json::object();
+        attrs.set("mode", case_name(self.mode));
+        b.ingress_node("case", &[self.io.input()], attrs, &self.io.output_col, dt, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("mode", case_name(self.mode));
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn case_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringCaseTransformer {
+        io: Io::from_json(j)?,
+        mode: case_parse(j.req_str("mode")?)?,
+    }))
+}
+
+/// Whitespace trim.
+#[derive(Debug, Clone)]
+pub struct TrimTransformer {
+    io: Io,
+}
+
+impl TrimTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str) -> Self {
+        TrimTransformer { io: Io::single(input, output) }
+    }
+}
+
+impl Transformer for TrimTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "TrimTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, string_ops::trim(&input)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let dt = b.engine_dtype(self.io.input())?.clone();
+        b.ingress_node("trim", &[self.io.input()], Json::object(), &self.io.output_col, dt, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn trim_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(TrimTransformer { io: Io::from_json(j)? }))
+}
+
+/// Substring by char offsets.
+#[derive(Debug, Clone)]
+pub struct SubstringTransformer {
+    io: Io,
+    start: usize,
+    len: usize,
+}
+
+impl SubstringTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, start: usize, len: usize) -> Self {
+        SubstringTransformer { io: Io::single(input, output), start, len }
+    }
+}
+
+impl Transformer for SubstringTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "SubstringTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, string_ops::substring(&input, self.start, self.len)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut attrs = Json::object();
+        attrs.set("start", self.start).set("len", self.len);
+        b.ingress_node("substring", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("start", self.start).set("len", self.len);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn substring_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(SubstringTransformer {
+        io: Io::from_json(j)?,
+        start: j.req_i64("start")? as usize,
+        len: j.req_i64("len")? as usize,
+    }))
+}
+
+/// Literal find/replace.
+#[derive(Debug, Clone)]
+pub struct StringReplaceTransformer {
+    io: Io,
+    from: String,
+    to: String,
+}
+
+impl StringReplaceTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, from: &str, to: &str) -> Self {
+        StringReplaceTransformer {
+            io: Io::single(input, output),
+            from: from.to_string(),
+            to: to.to_string(),
+        }
+    }
+}
+
+impl Transformer for StringReplaceTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringReplaceTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, string_ops::replace_literal(&input, &self.from, &self.to)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let dt = b.engine_dtype(self.io.input())?.clone();
+        let mut attrs = Json::object();
+        attrs.set("from", self.from.clone()).set("to", self.to.clone());
+        b.ingress_node("replace", &[self.io.input()], attrs, &self.io.output_col, dt, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("from", self.from.clone()).set("to", self.to.clone());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn replace_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringReplaceTransformer {
+        io: Io::from_json(j)?,
+        from: j.req_str("from")?.to_string(),
+        to: j.req_str("to")?.to_string(),
+    }))
+}
+
+/// Regex find/replace (engine regex — see [`crate::ops::regex`]).
+#[derive(Debug, Clone)]
+pub struct RegexReplaceTransformer {
+    io: Io,
+    pattern: String,
+    rep: String,
+    compiled: Regex,
+}
+
+impl RegexReplaceTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, pattern: &str, rep: &str) -> Result<Self> {
+        Ok(RegexReplaceTransformer {
+            io: Io::single(input, output),
+            pattern: pattern.to_string(),
+            rep: rep.to_string(),
+            compiled: Regex::new(pattern)?,
+        })
+    }
+}
+
+impl Transformer for RegexReplaceTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "RegexReplaceTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, crate::ops::regex::regex_replace(&input, &self.compiled, &self.rep)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let width = b.width(self.io.input())?;
+        let dt = b.engine_dtype(self.io.input())?.clone();
+        let mut attrs = Json::object();
+        attrs.set("pattern", self.pattern.clone()).set("rep", self.rep.clone());
+        b.ingress_node("regex_replace", &[self.io.input()], attrs, &self.io.output_col, dt, width)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("pattern", self.pattern.clone()).set("rep", self.rep.clone());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn regex_replace_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let mut t = RegexReplaceTransformer::new("", "", j.req_str("pattern")?, j.req_str("rep")?)?;
+    t.io = Io::from_json(j)?;
+    Ok(Box::new(t))
+}
+
+/// Regex capture-group extraction ("" on no match).
+#[derive(Debug, Clone)]
+pub struct RegexExtractTransformer {
+    io: Io,
+    pattern: String,
+    group: usize,
+    compiled: Regex,
+}
+
+impl RegexExtractTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, pattern: &str, group: usize) -> Result<Self> {
+        Ok(RegexExtractTransformer {
+            io: Io::single(input, output),
+            pattern: pattern.to_string(),
+            group,
+            compiled: Regex::new(pattern)?,
+        })
+    }
+}
+
+impl Transformer for RegexExtractTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "RegexExtractTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, crate::ops::regex::regex_extract(&input, &self.compiled, self.group)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut attrs = Json::object();
+        attrs.set("pattern", self.pattern.clone()).set("group", self.group);
+        b.ingress_node("regex_extract", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("pattern", self.pattern.clone()).set("group", self.group);
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn regex_extract_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    let mut t = RegexExtractTransformer::new("", "", j.req_str("pattern")?, j.req_i64("group")? as usize)?;
+    t.io = Io::from_json(j)?;
+    Ok(Box::new(t))
+}
+
+/// Concatenate N columns with a separator (numerics via canonical string
+/// form).
+#[derive(Debug, Clone)]
+pub struct StringConcatTransformer {
+    io: Io,
+    separator: String,
+}
+
+impl StringConcatTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(inputs: &[&str], output: &str, separator: &str) -> Self {
+        StringConcatTransformer { io: Io::multi(inputs, output), separator: separator.to_string() }
+    }
+}
+
+impl Transformer for StringConcatTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringConcatTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let cols: Vec<crate::dataframe::Column> = (0..self.io.input_cols.len())
+            .map(|i| self.io.get(df, i))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&crate::dataframe::Column> = cols.iter().collect();
+        self.io.finish(df, string_ops::concat_cols(&refs, &self.separator)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let inputs: Vec<&str> = self.io.input_cols.iter().map(String::as_str).collect();
+        let mut attrs = Json::object();
+        attrs.set("separator", self.separator.clone());
+        b.ingress_node("concat", &inputs, attrs, &self.io.output_col, DType::Str, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("separator", self.separator.clone());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn concat_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringConcatTransformer {
+        io: Io::from_json(j)?,
+        separator: j.req_str("separator")?.to_string(),
+    }))
+}
+
+/// Split on a separator into a **fixed-length** padded list — Listing 1's
+/// `StringToStringListTransformer` (`separator`, `listLength`,
+/// `defaultValue`).
+#[derive(Debug, Clone)]
+pub struct StringToStringListTransformer {
+    io: Io,
+    separator: String,
+    list_length: usize,
+    default_value: String,
+}
+
+impl StringToStringListTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, separator: &str, list_length: usize, default_value: &str) -> Self {
+        StringToStringListTransformer {
+            io: Io::single(input, output),
+            separator: separator.to_string(),
+            list_length,
+            default_value: default_value.to_string(),
+        }
+    }
+}
+
+impl Transformer for StringToStringListTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringToStringListTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let split = string_ops::split(&input, &self.separator)?;
+        let padded = string_ops::pad_list(&split, self.list_length, &self.default_value)?;
+        self.io.finish(df, padded)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut attrs = Json::object();
+        attrs
+            .set("separator", self.separator.clone())
+            .set("list_length", self.list_length)
+            .set("default", self.default_value.clone());
+        b.ingress_node(
+            "split_pad",
+            &[self.io.input()],
+            attrs,
+            &self.io.output_col,
+            DType::List(Box::new(DType::Str)),
+            Some(self.list_length),
+        )
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("separator", self.separator.clone())
+            .set("listLength", self.list_length)
+            .set("defaultValue", self.default_value.clone());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn split_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringToStringListTransformer {
+        io: Io::from_json(j)?,
+        separator: j.req_str("separator")?.to_string(),
+        list_length: j.req_i64("listLength")? as usize,
+        default_value: j.req_str("defaultValue")?.to_string(),
+    }))
+}
+
+/// Join a string list back into one string.
+#[derive(Debug, Clone)]
+pub struct StringListToStringTransformer {
+    io: Io,
+    separator: String,
+}
+
+impl StringListToStringTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, separator: &str) -> Self {
+        StringListToStringTransformer {
+            io: Io::single(input, output),
+            separator: separator.to_string(),
+        }
+    }
+}
+
+impl Transformer for StringListToStringTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringListToStringTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        let l = input.as_list_str()?;
+        let data: Vec<String> = l.rows().map(|r| r.join(&self.separator)).collect();
+        self.io.finish(df, crate::dataframe::Column::from_str(data))
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut attrs = Json::object();
+        attrs.set("separator", self.separator.clone());
+        b.ingress_node("join", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("separator", self.separator.clone());
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn join_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringListToStringTransformer {
+        io: Io::from_json(j)?,
+        separator: j.req_str("separator")?.to_string(),
+    }))
+}
+
+/// Contains / starts-with / ends-with → bool (graph sees it as I64 0/1
+/// computed at ingress, because the predicate needs the string).
+#[derive(Debug, Clone)]
+pub struct StringContainsTransformer {
+    io: Io,
+    needle: String,
+    mode: MatchMode,
+}
+
+impl StringContainsTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str, needle: &str, mode: MatchMode) -> Self {
+        StringContainsTransformer {
+            io: Io::single(input, output),
+            needle: needle.to_string(),
+            mode,
+        }
+    }
+}
+
+fn match_name(m: MatchMode) -> &'static str {
+    match m {
+        MatchMode::Contains => "contains",
+        MatchMode::StartsWith => "starts_with",
+        MatchMode::EndsWith => "ends_with",
+    }
+}
+
+fn match_parse(s: &str) -> Result<MatchMode> {
+    Ok(match s {
+        "contains" => MatchMode::Contains,
+        "starts_with" => MatchMode::StartsWith,
+        "ends_with" => MatchMode::EndsWith,
+        other => return Err(KamaeError::InvalidConfig(format!("unknown match mode: {other}"))),
+    })
+}
+
+impl Transformer for StringContainsTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringContainsTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, string_ops::string_match(&input, &self.needle, self.mode)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        let mut attrs = Json::object();
+        attrs.set("needle", self.needle.clone()).set("mode", match_name(self.mode));
+        b.ingress_node("string_match", &[self.io.input()], attrs, &self.io.output_col, DType::Bool, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        j.set("needle", self.needle.clone()).set("mode", match_name(self.mode));
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn contains_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringContainsTransformer {
+        io: Io::from_json(j)?,
+        needle: j.req_str("needle")?.to_string(),
+        mode: match_parse(j.req_str("mode")?)?,
+    }))
+}
+
+/// String length in chars.
+#[derive(Debug, Clone)]
+pub struct StringLengthTransformer {
+    io: Io,
+}
+
+impl StringLengthTransformer {
+    crate::io_builder_methods!();
+
+    pub fn new(input: &str, output: &str) -> Self {
+        StringLengthTransformer { io: Io::single(input, output) }
+    }
+}
+
+impl Transformer for StringLengthTransformer {
+    fn layer_name(&self) -> &str {
+        &self.io.layer_name
+    }
+
+    fn type_name(&self) -> &'static str {
+        "StringLengthTransformer"
+    }
+
+    fn transform(&self, df: &mut DataFrame) -> Result<()> {
+        let input = self.io.get(df, 0)?;
+        self.io.finish(df, string_ops::str_len(&input)?)
+    }
+
+    fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
+        b.ingress_node("str_len", &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
+    }
+
+    fn save(&self) -> Json {
+        let mut j = Json::object();
+        self.io.write_json(&mut j);
+        j
+    }
+}
+
+pub(crate) fn str_len_from_json(j: &Json) -> Result<Box<dyn Transformer>> {
+    Ok(Box::new(StringLengthTransformer { io: Io::from_json(j)? }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Column;
+
+    fn df() -> DataFrame {
+        DataFrame::new(vec![
+            ("s".into(), Column::from_str(vec!["  Action|Comedy  ", "Drama"])),
+            ("n".into(), Column::from_i64(vec![7, 8])),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn chained_string_pipeline() {
+        let mut d = df();
+        TrimTransformer::new("s", "t").transform(&mut d).unwrap();
+        StringCaseTransformer::new("t", "u", CaseMode::Lower).transform(&mut d).unwrap();
+        StringToStringListTransformer::new("u", "l", "|", 3, "PAD")
+            .transform(&mut d)
+            .unwrap();
+        let l = d.column("l").unwrap().as_list_str().unwrap();
+        assert_eq!(l.row(0), &["action".to_string(), "comedy".to_string(), "PAD".to_string()]);
+        assert_eq!(l.row(1), &["drama".to_string(), "PAD".to_string(), "PAD".to_string()]);
+    }
+
+    #[test]
+    fn concat_and_length() {
+        let mut d = df();
+        StringConcatTransformer::new(&["s", "n"], "c", "_").transform(&mut d).unwrap();
+        assert_eq!(d.column("c").unwrap().as_str().unwrap()[1], "Drama_8");
+        StringLengthTransformer::new("c", "len").transform(&mut d).unwrap();
+        assert_eq!(d.column("len").unwrap().as_i64().unwrap()[1], 7);
+    }
+
+    #[test]
+    fn regex_transformers() {
+        let mut d = df();
+        let t = RegexReplaceTransformer::new("s", "r", r"\s+", "").unwrap();
+        t.transform(&mut d).unwrap();
+        assert_eq!(d.column("r").unwrap().as_str().unwrap()[0], "Action|Comedy");
+        let e = RegexExtractTransformer::new("s", "x", r"(\w+)\|", 1).unwrap();
+        e.transform(&mut d).unwrap();
+        assert_eq!(d.column("x").unwrap().as_str().unwrap()[0], "Action");
+        assert_eq!(d.column("x").unwrap().as_str().unwrap()[1], "");
+    }
+
+    #[test]
+    fn join_roundtrip() {
+        let mut d = df();
+        StringToStringListTransformer::new("s", "l", "|", 2, "P").transform(&mut d).unwrap();
+        StringListToStringTransformer::new("l", "j", "+").transform(&mut d).unwrap();
+        assert_eq!(d.column("j").unwrap().as_str().unwrap()[1], "Drama+P");
+    }
+
+    #[test]
+    fn save_load_all() {
+        let d = df();
+        let transformers: Vec<Box<dyn Transformer>> = vec![
+            Box::new(StringCaseTransformer::new("s", "o1", CaseMode::Title)),
+            Box::new(TrimTransformer::new("s", "o2")),
+            Box::new(SubstringTransformer::new("s", "o3", 2, 4)),
+            Box::new(StringReplaceTransformer::new("s", "o4", "|", ";")),
+            Box::new(RegexReplaceTransformer::new("s", "o5", r"\d+", "#").unwrap()),
+            Box::new(RegexExtractTransformer::new("s", "o6", r"(\w+)", 1).unwrap()),
+            Box::new(StringConcatTransformer::new(&["s", "n"], "o7", "-")),
+            Box::new(StringToStringListTransformer::new("s", "o8", "|", 2, "P")),
+            Box::new(StringContainsTransformer::new("s", "o9", "Drama", MatchMode::Contains)),
+            Box::new(StringLengthTransformer::new("s", "o10")),
+        ];
+        for t in transformers {
+            let j = crate::pipeline::with_type(t.save(), t.type_name());
+            let loaded = crate::transformers::load(&j).unwrap();
+            let mut a = d.clone();
+            let mut b = d.clone();
+            t.transform(&mut a).unwrap();
+            loaded.transform(&mut b).unwrap();
+            assert_eq!(a, b, "mismatch for {}", t.type_name());
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Benchmark harness (criterion replacement for the offline environment).
+//!
+//! Provides warmup + timed iterations with robust statistics (mean, p50,
+//! p95, p99, min), throughput reporting, and a tiny table printer so each
+//! bench binary can regenerate its experiment's rows in one run.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case, in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Compute percentile from a sorted slice (linear interpolation).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Compute [`Stats`] from raw per-iteration durations.
+pub fn stats_from(name: &str, samples: &[Duration]) -> Stats {
+    let mut ns: Vec<f64> = samples.iter().map(|d| d.as_nanos() as f64).collect();
+    ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = ns.iter().sum::<f64>() / ns.len().max(1) as f64;
+    Stats {
+        name: name.to_string(),
+        iters: ns.len(),
+        mean_ns: mean,
+        p50_ns: percentile(&ns, 50.0),
+        p95_ns: percentile(&ns, 95.0),
+        p99_ns: percentile(&ns, 99.0),
+        min_ns: ns.first().copied().unwrap_or(f64::NAN),
+    }
+}
+
+/// Benchmark runner: warm up for `warmup`, then collect timed iterations
+/// until `measure` wall time has elapsed (min 10, max 10_000 iterations).
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: Duration::from_millis(300), measure: Duration::from_secs(2) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: Duration::from_millis(50), measure: Duration::from_millis(500) }
+    }
+
+    /// Run `f` repeatedly; the closure must do one full unit of work.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure && samples.len() < 10_000) || samples.len() < 10 {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        stats_from(name, &samples)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (ptr::read-based
+/// black_box, stable-rust friendly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width results table, criterion-style.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = widths.get(i).copied().unwrap_or(0)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Human-readable duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interp() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 4.0);
+        assert_eq!(percentile(&s, 50.0), 2.5);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let b = Bencher { warmup: Duration::from_millis(1), measure: Duration::from_millis(20) };
+        let mut acc = 0u64;
+        let st = b.run("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(st.iters >= 10);
+        assert!(st.mean_ns >= 0.0);
+        assert!(st.p99_ns >= st.p50_ns);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1500.0).contains("µs"));
+        assert!(fmt_ns(2_500_000.0).contains("ms"));
+        assert!(fmt_ns(1.5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` dependency
+//! tree vendored, so the usual ecosystem crates are re-implemented here at
+//! the scale this project needs: a JSON parser/writer ([`json`]), a
+//! deterministic PRNG with the distributions the synthetic generators use
+//! ([`rng`]), a benchmark harness with robust statistics ([`bench`]), a
+//! property-testing mini-framework ([`prop`]), and a scoped thread pool
+//! ([`pool`]).
+
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;

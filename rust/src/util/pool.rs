@@ -1,0 +1,91 @@
+//! Scoped worker-thread helpers — the compute substrate under the
+//! partitioned engine (no rayon in the offline vendor set).
+//!
+//! `parallel_map` fans a slice of work items over `threads` OS threads
+//! using `std::thread::scope`, preserving input order in the output. Work
+//! stealing is approximated with an atomic cursor over the item list,
+//! which balances well when per-item cost varies (skewed partitions).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `items` on up to `threads` worker threads, preserving
+/// order. `f` must be `Sync` (it is shared by reference across workers).
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    let slots = Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                // Store the result; contention is negligible because the
+                // critical section is a single Vec write.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .iter_mut()
+        .map(|s| s.take().expect("worker filled every slot"))
+        .collect()
+}
+
+/// Default worker count: available parallelism minus one (leave a core for
+/// the coordinator), at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map(&items, 1, |i, &x| x + i);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn skewed_work_balances() {
+        // Items with wildly different costs still all complete.
+        let items: Vec<u64> = (0..32).map(|i| if i % 7 == 0 { 200_000 } else { 10 }).collect();
+        let out = parallel_map(&items, 4, |_, &n| (0..n).fold(0u64, |a, b| a.wrapping_add(b)));
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u64> = vec![];
+        let out = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,121 @@
+//! Property-testing mini-framework (proptest replacement).
+//!
+//! `check` runs a property over `cases` randomly generated inputs with a
+//! fixed seed base (deterministic CI) and, on failure, re-reports the
+//! failing seed so the case can be replayed. Generators are plain closures
+//! over [`crate::util::rng::Rng`] — enough to sweep the coordinator
+//! invariants (routing, batching, pipeline state) the tests target.
+
+use crate::util::rng::Rng;
+
+/// Run `property` over `cases` inputs drawn from `gen`. Panics with the
+/// failing seed and debug-printed input on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0xA5A5_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !property(&input) {
+            panic!("property '{name}' failed at seed {seed:#x} with input: {input:?}");
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` for richer
+/// failure messages.
+pub fn check_res<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0xC3C3_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!("property '{name}' failed at seed {seed:#x}: {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Random ASCII-ish string of length in [0, max_len].
+    pub fn string(rng: &mut Rng, max_len: usize) -> String {
+        let len = rng.below(max_len as u64 + 1) as usize;
+        (0..len)
+            .map(|_| {
+                // mix of letters, digits, separators and a few unicode chars
+                const ALPHABET: &[char] = &[
+                    'a', 'b', 'c', 'x', 'y', 'z', 'A', 'Z', '0', '1', '9', ' ', '-', '_', '|',
+                    ',', '.', '/', 'é', 'ß', '中',
+                ];
+                ALPHABET[rng.below(ALPHABET.len() as u64) as usize]
+            })
+            .collect()
+    }
+
+    /// Random f64 in a "interesting" mixture: uniform, large, tiny,
+    /// negative, zero.
+    pub fn f64_mixed(rng: &mut Rng) -> f64 {
+        match rng.below(6) {
+            0 => 0.0,
+            1 => rng.range_f64(-1.0, 1.0),
+            2 => rng.range_f64(-1e9, 1e9),
+            3 => rng.range_f64(0.0, 1e-9),
+            4 => -rng.range_f64(0.0, 1e6),
+            _ => rng.range_f64(0.0, 1e3),
+        }
+    }
+
+    /// Vector of length in [min_len, max_len] from an element generator.
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        min_len: usize,
+        max_len: usize,
+        mut el: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
+        let len = min_len + rng.below((max_len - min_len + 1) as u64) as usize;
+        (0..len).map(|_| el(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("reverse twice is identity", 50,
+            |rng| gen::vec_of(rng, 0, 20, |r| r.next_u64()),
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                *v == w
+            });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics() {
+        check("always fails", 5, |rng| rng.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn string_gen_in_bounds() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let s = gen::string(&mut rng, 12);
+            assert!(s.chars().count() <= 12);
+        }
+    }
+}

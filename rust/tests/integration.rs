@@ -1,0 +1,235 @@
+//! Cross-module integration tests: full pipelines over the partitioned
+//! engine, streaming, serving through the dynamic batcher, persistence
+//! round trips through real files, and failure injection.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use kamae::dataframe::{read_jsonl, write_jsonl, Column, DataFrame};
+use kamae::engine::stream::{run_stream, StreamConfig};
+use kamae::engine::Dataset;
+use kamae::error::KamaeError;
+use kamae::pipeline::catalog;
+use kamae::pipeline::{Pipeline, PipelineModel, Stage};
+use kamae::serving::{BatchConfig, Server};
+use kamae::synth;
+use kamae::transformers::*;
+
+#[test]
+fn ltr_pipeline_partition_invariance() {
+    // transform result must be identical no matter the partitioning
+    let df = synth::gen_ltr(&synth::LtrConfig { rows: 3_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(df.clone(), 4))
+        .unwrap();
+    let whole = model.transform_df(df.clone()).unwrap();
+    for parts in [1usize, 3, 7] {
+        let ds = Dataset::from_dataframe(df.clone(), parts);
+        let out = model.transform(&ds).unwrap().collect().unwrap();
+        for col in catalog::LTR_OUTPUTS {
+            assert_eq!(
+                format!("{:?}", out.column(col).unwrap()),
+                format!("{:?}", whole.column(col).unwrap()),
+                "{col} differs at {parts} partitions"
+            );
+        }
+    }
+}
+
+#[test]
+fn fit_is_partition_invariant() {
+    // vocabularies and moments must not depend on partitioning
+    let df = synth::gen_movielens(&synth::MovieLensConfig { rows: 20_000, ..Default::default() });
+    let spec_of = |parts: usize| {
+        let model = catalog::movielens_pipeline()
+            .fit(&Dataset::from_dataframe(df.clone(), parts))
+            .unwrap();
+        model
+            .to_graph_spec("m", catalog::movielens_inputs(), &catalog::MOVIELENS_OUTPUTS)
+            .unwrap()
+            .to_json()
+            .to_string()
+    };
+    let one = spec_of(1);
+    assert_eq!(one, spec_of(4));
+    assert_eq!(one, spec_of(13));
+}
+
+#[test]
+fn model_file_roundtrip_on_disk() {
+    let df = synth::gen_ltr(&synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(df.clone(), 2))
+        .unwrap();
+    let tmp = std::env::temp_dir().join("kamae_it_model.json");
+    model.save(&tmp).unwrap();
+    let loaded = PipelineModel::load(&tmp).unwrap();
+    let a = model.transform_df(df.clone()).unwrap();
+    let b = loaded.transform_df(df).unwrap();
+    for col in catalog::LTR_OUTPUTS {
+        assert_eq!(
+            format!("{:?}", a.column(col).unwrap()),
+            format!("{:?}", b.column(col).unwrap()),
+        );
+    }
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn jsonl_dataset_roundtrip_through_pipeline() {
+    let df = synth::gen_movielens(&synth::MovieLensConfig { rows: 500, ..Default::default() });
+    let tmp = std::env::temp_dir().join("kamae_it_data.jsonl");
+    write_jsonl(&df, &tmp).unwrap();
+    let back = read_jsonl(&tmp, &df.schema()).unwrap();
+    assert_eq!(back, df);
+    let model = catalog::movielens_pipeline()
+        .fit(&Dataset::from_dataframe(back.clone(), 2))
+        .unwrap();
+    let out = model.transform_df(back).unwrap();
+    assert!(out.has_column("Genres_indexed"));
+    std::fs::remove_file(tmp).ok();
+}
+
+#[test]
+fn streaming_applies_fitted_pipeline() {
+    let head = synth::gen_ltr(&synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(head, 2))
+        .unwrap();
+    let mut produced = 0;
+    let rows_seen = Mutex::new(0usize);
+    let stats = run_stream(
+        &StreamConfig { workers: 2, queue_cap: 3 },
+        move || {
+            if produced < 10 {
+                produced += 1;
+                Some(synth::gen_ltr(&synth::LtrConfig {
+                    rows: 200,
+                    seed: produced,
+                    ..Default::default()
+                }))
+            } else {
+                None
+            }
+        },
+        |batch| model.transform_df(batch),
+        |_, df| {
+            assert!(df.has_column("price_z"));
+            *rows_seen.lock().unwrap() += df.num_rows();
+            Ok(())
+        },
+    )
+    .unwrap();
+    assert_eq!(stats.batches, 10);
+    assert_eq!(*rows_seen.lock().unwrap(), 2_000);
+    assert!(stats.peak_in_flight <= 3);
+}
+
+/// Deterministic backend for batcher integration below.
+struct EchoBackend;
+
+impl kamae::serving::Backend for EchoBackend {
+    fn name(&self) -> &str {
+        "echo"
+    }
+
+    fn process(
+        &self,
+        df: &DataFrame,
+    ) -> kamae::error::Result<Vec<kamae::runtime::Tensor>> {
+        let v = df.column("x")?.as_i64()?;
+        Ok(vec![kamae::runtime::Tensor::i64(v.to_vec(), vec![v.len()])?])
+    }
+}
+
+#[test]
+fn server_under_concurrent_submitters() {
+    let server = std::sync::Arc::new(Server::start(
+        Box::new(EchoBackend),
+        BatchConfig { max_batch_rows: 64, max_wait: Duration::from_millis(1) },
+    ));
+    std::thread::scope(|scope| {
+        for t in 0..4i64 {
+            let server = std::sync::Arc::clone(&server);
+            scope.spawn(move || {
+                for i in 0..50i64 {
+                    let v = t * 1000 + i;
+                    let df = DataFrame::new(vec![("x".into(), Column::from_i64(vec![v, v + 1]))])
+                        .unwrap();
+                    let rx = server.submit(df);
+                    let out = rx.recv().unwrap().unwrap();
+                    assert_eq!(out[0].as_i64().unwrap(), &[v, v + 1]);
+                }
+            });
+        }
+    });
+    let (_batches, requests) = server.counts();
+    assert_eq!(requests, 200);
+}
+
+#[test]
+fn pipeline_errors_surface_cleanly() {
+    // missing column
+    let df = DataFrame::new(vec![("a".into(), Column::from_f64(vec![1.0]))]).unwrap();
+    let t = LogTransformer::new("missing", "out");
+    let mut d = df.clone();
+    let err = kamae::pipeline::Transformer::transform(&t, &mut d).unwrap_err();
+    assert!(matches!(err, KamaeError::ColumnNotFound(_)), "{err}");
+
+    // wrong dtype for a string op
+    let t = TrimTransformer::new("a", "out");
+    let mut d = df.clone();
+    let err = kamae::pipeline::Transformer::transform(&t, &mut d).unwrap_err();
+    assert!(matches!(err, KamaeError::TypeMismatch { .. }), "{err}");
+
+    // estimator on empty data
+    let empty = DataFrame::new(vec![("a".into(), Column::from_f64(vec![]))]).unwrap();
+    let est = kamae::estimators::StandardScaleEstimator::new("a", "z");
+    let err = kamae::pipeline::Estimator::fit(&est, &Dataset::from_dataframe(empty, 1));
+    assert!(err.is_err());
+}
+
+#[test]
+fn export_rejects_invalid_flows() {
+    use kamae::dataframe::DType;
+    use kamae::export::SpecInput;
+    // string op after a numeric graph op cannot export
+    let df = DataFrame::new(vec![("x".into(), Column::from_f64(vec![1.0, 2.0]))]).unwrap();
+    let pipeline = Pipeline::new(vec![
+        Stage::transformer(LogTransformer::new("x", "x_log")),
+        Stage::transformer(CastTransformer::new("x_log", "x_str", DType::Str)),
+        Stage::transformer(TrimTransformer::new("x_str", "x_trim")),
+    ]);
+    let model = pipeline.fit(&Dataset::from_dataframe(df, 1)).unwrap();
+    let res = model.to_graph_spec(
+        "bad",
+        vec![SpecInput { name: "x".into(), dtype: DType::F64, width: None }],
+        &["x_trim"],
+    );
+    assert!(res.is_err(), "string-after-graph must be rejected at export");
+}
+
+#[test]
+fn unseen_category_rate_is_handled() {
+    // fit on seed A, serve data from seed B: OOV tokens must land in the
+    // reserved buckets, never panic, never alias into the vocab range
+    let train = synth::gen_movielens(&synth::MovieLensConfig {
+        rows: 5_000,
+        num_movies: 500,
+        ..Default::default()
+    });
+    let model = catalog::movielens_pipeline()
+        .fit(&Dataset::from_dataframe(train, 2))
+        .unwrap();
+    let serve = synth::gen_movielens(&synth::MovieLensConfig {
+        rows: 1_000,
+        num_movies: 4_000, // most ids unseen
+        seed: 777,
+        ..Default::default()
+    });
+    let out = model.transform_df(serve).unwrap();
+    let idx = out.column("MovieID_indexed").unwrap().as_i64().unwrap();
+    let oov = idx.iter().filter(|&&i| i == 0).count();
+    assert!(oov > 100, "expected many OOV hits, got {oov}");
+    assert!(idx.iter().all(|&i| i >= 0));
+}

@@ -1,0 +1,214 @@
+//! Property-based tests on coordinator invariants: routing/batching
+//! (tensor split/concat round trips), pipeline state (save/load/re-save
+//! canonicalisation), spec-builder invariants, and ingress determinism.
+
+use kamae::dataframe::{Column, DataFrame, DType};
+use kamae::engine::Dataset;
+use kamae::export::SpecInput;
+use kamae::pipeline::{Pipeline, Stage};
+use kamae::runtime::Tensor;
+use kamae::transformers::*;
+use kamae::util::prop::{check, check_res, gen};
+use kamae::util::rng::Rng;
+
+/// Random DataFrame with a string and a float column.
+fn random_df(rng: &mut Rng, max_rows: usize) -> DataFrame {
+    let rows = 1 + rng.below(max_rows as u64) as usize;
+    let strings: Vec<String> = (0..rows).map(|_| gen::string(rng, 12)).collect();
+    let floats: Vec<f64> = (0..rows).map(|_| gen::f64_mixed(rng)).collect();
+    DataFrame::new(vec![
+        ("s".into(), Column::from_str(strings)),
+        ("x".into(), Column::from_f64(floats)),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn tensor_concat_split_roundtrip() {
+    check_res(
+        "concat(split(t)) == t for random splits",
+        60,
+        |rng| {
+            let total = 1 + rng.below(50) as usize;
+            let width = 1 + rng.below(5) as usize;
+            let data: Vec<i64> = (0..total * width).map(|_| rng.next_u64() as i64).collect();
+            // random partition of `total`
+            let mut sizes = Vec::new();
+            let mut left = total;
+            while left > 0 {
+                let take = 1 + rng.below(left as u64) as usize;
+                sizes.push(take);
+                left -= take;
+            }
+            (data, width, total, sizes)
+        },
+        |(data, width, total, sizes)| {
+            let t = Tensor::i64(data.clone(), vec![*total, *width]).map_err(|e| e.to_string())?;
+            let parts = t.split_batch(sizes).map_err(|e| e.to_string())?;
+            if parts.len() != sizes.len() {
+                return Err("wrong part count".into());
+            }
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            let back = Tensor::concat_batch(&refs).map_err(|e| e.to_string())?;
+            if back != t {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tensor_pad_preserves_prefix() {
+    check(
+        "pad_batch keeps original rows intact",
+        40,
+        |rng| {
+            let rows = 1 + rng.below(20) as usize;
+            let data: Vec<f32> = (0..rows).map(|_| rng.f64() as f32).collect();
+            let target = rows + rng.below(30) as usize;
+            (data, rows, target)
+        },
+        |(data, rows, target)| {
+            let t = Tensor::f32(data.clone(), vec![*rows]).unwrap();
+            let p = t.pad_batch(*target);
+            p.batch() == (*target).max(*rows) && p.as_f32().unwrap()[..*rows] == data[..]
+        },
+    );
+}
+
+#[test]
+fn partitioning_never_loses_rows() {
+    check(
+        "Dataset::from_dataframe covers all rows in order",
+        40,
+        |rng| {
+            let df = random_df(rng, 200);
+            let parts = 1 + rng.below(16) as usize;
+            (df, parts)
+        },
+        |(df, parts)| {
+            let ds = Dataset::from_dataframe(df.clone(), *parts);
+            ds.num_rows() == df.num_rows() && ds.collect().unwrap() == *df
+        },
+    );
+}
+
+#[test]
+fn hash_ingress_deterministic_across_partitioning() {
+    check(
+        "hash64 of a column is independent of partitioning",
+        30,
+        |rng| (random_df(rng, 120), 1 + rng.below(8) as usize),
+        |(df, parts)| {
+            let whole = kamae::ops::hash::hash64_column(df.column("s").unwrap()).unwrap();
+            let ds = Dataset::from_dataframe(df.clone(), *parts);
+            let mapped = ds
+                .map(|p| {
+                    let mut p = p.clone();
+                    let h = kamae::ops::hash::hash64_column(p.column("s")?)?;
+                    p.set_column("h", h)?;
+                    Ok(p)
+                })
+                .unwrap()
+                .collect()
+                .unwrap();
+            mapped.column("h").unwrap() == &whole
+        },
+    );
+}
+
+#[test]
+fn pipeline_save_load_transform_identical() {
+    check_res(
+        "fitted pipeline: load(save(m)) transforms identically",
+        15,
+        |rng| random_df(rng, 80),
+        |df| {
+            let pipeline = Pipeline::new(vec![
+                Stage::transformer(LogTransformer::new("x", "x_log").log1p()),
+                Stage::transformer(ClipTransformer::new("x_log", "x_clip", Some(-10.0), Some(10.0))),
+                Stage::transformer(HashIndexTransformer::new("s", "s_idx", 97)),
+                Stage::estimator(kamae::estimators::StringIndexEstimator::new("s", "s_vocab")),
+            ]);
+            let ds = Dataset::from_dataframe(df.clone(), 2);
+            let model = pipeline.fit(&ds).map_err(|e| e.to_string())?;
+            let json = model.to_json();
+            let loaded =
+                kamae::pipeline::PipelineModel::from_json(&json).map_err(|e| e.to_string())?;
+            let a = model.transform_df(df.clone()).map_err(|e| e.to_string())?;
+            let b = loaded.transform_df(df.clone()).map_err(|e| e.to_string())?;
+            // NaN-tolerant comparison via debug render of output columns
+            for col in ["x_log", "x_clip", "s_idx", "s_vocab"] {
+                let ca = format!("{:?}", a.column(col).unwrap());
+                let cb = format!("{:?}", b.column(col).unwrap());
+                if ca != cb {
+                    return Err(format!("{col} differs after save/load"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn interp_engine_parity_random_strings() {
+    // the C1 invariant under adversarial string inputs (unicode,
+    // separators, empties)
+    check_res(
+        "engine == interpreter on random data",
+        15,
+        |rng| random_df(rng, 60),
+        |df| {
+            let pipeline = Pipeline::new(vec![
+                Stage::transformer(HashIndexTransformer::new("s", "s_idx", 1009)),
+                Stage::transformer(LogTransformer::new("x", "x_log").log1p()),
+                Stage::estimator(
+                    kamae::estimators::StringIndexEstimator::new("s", "s_vocab").num_oov(2),
+                ),
+            ]);
+            let ds = Dataset::from_dataframe(df.clone(), 2);
+            let model = pipeline.fit(&ds).map_err(|e| e.to_string())?;
+            let spec = model
+                .to_graph_spec(
+                    "prop",
+                    vec![
+                        SpecInput { name: "s".into(), dtype: DType::Str, width: None },
+                        SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+                    ],
+                    &["s_idx", "s_vocab", "x_log"],
+                )
+                .map_err(|e| e.to_string())?;
+            let interp = kamae::export::SpecInterpreter::new(spec);
+            let out = interp.run(df).map_err(|e| e.to_string())?;
+            let engine = model.transform_df(df.clone()).map_err(|e| e.to_string())?;
+            if out[0].as_i64().unwrap() != engine.column("s_idx").unwrap().as_i64().unwrap() {
+                return Err("s_idx mismatch".into());
+            }
+            if out[1].as_i64().unwrap() != engine.column("s_vocab").unwrap().as_i64().unwrap() {
+                return Err("s_vocab mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shard_rebalance_preserves_content() {
+    check(
+        "rebalance/coalesce keep rows and order",
+        25,
+        |rng| {
+            let df = random_df(rng, 150);
+            let parts = 1 + rng.below(10) as usize;
+            let target = 1 + rng.below(6) as usize;
+            (df, parts, target)
+        },
+        |(df, parts, target)| {
+            let ds = Dataset::from_dataframe(df.clone(), *parts);
+            let re = kamae::engine::shard::rebalance(&ds, *target).unwrap();
+            let co = kamae::engine::shard::coalesce(&ds, *target).unwrap();
+            re.collect().unwrap() == *df && co.collect().unwrap() == *df
+        },
+    );
+}
