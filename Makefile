@@ -1,0 +1,42 @@
+# Kamae-RS build/verify entry points.
+#
+# `make verify` is the tier-1 gate (ROADMAP.md): release build, tests,
+# formatting. `make artifacts` produces the spec JSONs + AOT-compiled
+# HLO the serving benchmarks and parity tests consume.
+#
+# NOTE: the seed tree ships without a Cargo.toml — the build image
+# provides the manifest wiring the in-tree `xla` (PJRT) dependency.
+# When adding one: lib path rust/src/lib.rs, bin path rust/src/main.rs,
+# and `harness = false` [[bench]]/[[example]] entries for everything
+# under benches/ and examples/ (each defines its own `fn main`).
+
+.PHONY: verify build test fmt bench-optimizer artifacts clean
+
+verify:
+	cargo build --release
+	cargo test -q
+	cargo fmt --check
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt
+
+# Optimizer node counts + interpreted-backend throughput, passes on vs
+# off; appends a record to BENCH_optimizer.json.
+bench-optimizer:
+	cargo bench --bench optimizer
+
+# Fit the example pipelines, export (optimized) GraphSpec JSONs, then
+# AOT-lower them to HLO text via the python L2 compiler.
+artifacts:
+	cargo run --release -- export-examples --out-dir artifacts/specs
+	cd python && python -m compile.aot --specs ../artifacts/specs --out ../artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts

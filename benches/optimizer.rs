@@ -1,0 +1,126 @@
+//! Optimizer benchmark — interpreted-backend serving throughput and
+//! per-request latency with passes on vs. off.
+//!
+//! No artifacts needed: pipelines are fitted in-process, exported at
+//! `OptimizeLevel::None` and `OptimizeLevel::Full`, and probed directly
+//! through `InterpretedBackend` (8-row requests, the LTR slate size).
+//! Per-pass node counts are printed for each spec, and every run
+//! appends a machine-readable record to `BENCH_optimizer.json` for the
+//! perf trajectory.
+//!
+//! MovieLens is the paper's Listing-1 pipeline: every exported node is
+//! live, so it measures the optimizer's no-win floor (the two specs
+//! should tie). LTR is where the wins are: dead offline-only features,
+//! prunable ingress hashing and scalar-affine ladders.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use kamae::engine::Dataset;
+use kamae::export::GraphSpec;
+use kamae::optim::OptimizeLevel;
+use kamae::pipeline::catalog;
+use kamae::serving::{request_pool, Backend, InterpretedBackend, LatencyRecorder};
+use kamae::util::bench::{fmt_ns, Table};
+use kamae::util::json::Json;
+use kamae::util::rng::Rng;
+
+const FIT_ROWS: usize = 20_000;
+const REQUESTS: usize = 2_000;
+const ROWS_PER_REQUEST: usize = 8;
+
+fn export_pair(name: &str) -> (GraphSpec, GraphSpec, kamae::optim::OptReport) {
+    let (pipeline, inputs, outputs, data): (_, fn() -> Vec<kamae::export::SpecInput>, Vec<&str>, _) =
+        match name {
+            "movielens" => (
+                catalog::movielens_pipeline(),
+                catalog::movielens_inputs as _,
+                catalog::MOVIELENS_OUTPUTS.to_vec(),
+                kamae::synth::gen_movielens(&kamae::synth::MovieLensConfig {
+                    rows: FIT_ROWS,
+                    ..Default::default()
+                }),
+            ),
+            _ => (
+                catalog::ltr_pipeline(),
+                catalog::ltr_inputs as _,
+                catalog::LTR_OUTPUTS.to_vec(),
+                kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
+                    rows: FIT_ROWS,
+                    ..Default::default()
+                }),
+            ),
+        };
+    let model = pipeline.fit(&Dataset::from_dataframe(data, 4)).unwrap();
+    let (raw, _) = model.to_graph_spec_opt(name, inputs(), &outputs, OptimizeLevel::None).unwrap();
+    let (opt, report) =
+        model.to_graph_spec_opt(name, inputs(), &outputs, OptimizeLevel::Full).unwrap();
+    (raw, opt, report)
+}
+
+fn drive(spec: GraphSpec, label: &str, spec_name: &str) -> kamae::serving::ServeReport {
+    let backend = InterpretedBackend::new(spec);
+    let pool = request_pool(spec_name, 4096).unwrap();
+    let recorder = LatencyRecorder::new();
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut busy = Duration::ZERO;
+    let t0 = Instant::now();
+    for _ in 0..REQUESTS {
+        let start = rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+        let req = pool.slice(start, ROWS_PER_REQUEST);
+        let sent = Instant::now();
+        backend.process(&req).unwrap();
+        let d = sent.elapsed();
+        busy += d;
+        recorder.record(d);
+    }
+    recorder.report(&format!("{spec_name}/{label}"), REQUESTS, t0.elapsed(), busy)
+}
+
+fn main() {
+    let mut records = Vec::new();
+    for spec_name in ["movielens", "ltr"] {
+        println!("== {spec_name} ==\n");
+        let (raw, opt, report) = export_pair(spec_name);
+        println!("{report}\n");
+        let mut table =
+            Table::new(&["mode", "graph nodes", "ingress", "throughput", "p50", "p95", "p99"]);
+        let mut rps = Vec::new();
+        for (label, spec) in [("interpreted-O0", raw), ("interpreted-O2", opt)] {
+            let (nodes, ingress) = (spec.nodes.len(), spec.ingress.len());
+            let rep = drive(spec, label, spec_name);
+            table.row(&[
+                label.into(),
+                nodes.to_string(),
+                ingress.to_string(),
+                format!("{:.0} req/s", rep.throughput_rps),
+                fmt_ns(rep.p50_ns),
+                fmt_ns(rep.p95_ns),
+                fmt_ns(rep.p99_ns),
+            ]);
+            rps.push(rep.throughput_rps);
+            records.push(rep.to_json());
+        }
+        table.print();
+        if let [before, after] = rps[..] {
+            println!("\nthroughput with passes on: {:+.1}%\n", 100.0 * (after / before - 1.0));
+        }
+        records.push(report.to_json());
+    }
+
+    // append this run to the perf trajectory
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_optimizer.json");
+    let mut runs = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_array().cloned())
+        .unwrap_or_default();
+    let mut run = Json::object();
+    run.set("bench", "optimizer");
+    run.set("requests", REQUESTS);
+    run.set("rows_per_request", ROWS_PER_REQUEST);
+    run.set("records", Json::Array(records));
+    runs.push(run);
+    std::fs::write(&path, Json::Array(runs).to_string_pretty()).unwrap();
+    println!("appended run to {}", path.display());
+}

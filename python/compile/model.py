@@ -203,6 +203,30 @@ def _op_one_hot(args, a):
     return (hot[..., None] == eye).astype(_F)
 
 
+def _op_affine(args, a):
+    """Fused scalar-affine chain (rust `optim::passes::AffineFuse`).
+
+    `steps` records the original op/constant sequence; replaying it in
+    f32 reproduces the unfused nodes bit-for-bit. The canonical
+    standard-scaling shape — a multiply followed by an add/sub — lowers
+    onto the fused-scaling Pallas kernel instead (one kernel, same
+    semantics as `scale_vec`; the kernel's FMA contraction may differ
+    from the two-op form in the last ulp, exactly like `scale_vec`
+    already does, and well inside the C1 parity tolerance).
+    """
+    x = _f(args[0])
+    steps = a["steps"]
+    ops = [s["op"] for s in steps]
+    if ops in (["mul_scalar", "add_scalar"], ["mul_scalar", "sub_scalar"]):
+        scale = jnp.asarray([steps[0]["c"]], dtype=_F)
+        sign = 1.0 if ops[1] == "add_scalar" else -1.0
+        shift = jnp.asarray([sign * steps[1]["c"]], dtype=_F)
+        return K.affine_scale(x, scale, shift)
+    for s in steps:
+        x = _UNARY[s["op"]](x, s)
+    return x
+
+
 def _op_impute(args, a):
     x = _f(args[0])
     missing = jnp.isnan(x)
@@ -245,6 +269,7 @@ _OPS = {
     "bloom_encode": lambda args, a: K.bloom_probes(
         args[0], int(a["num_hashes"]), int(a["num_bins"])
     ),
+    "affine": _op_affine,
     "vocab_lookup": _op_vocab_lookup,
     "one_hot": _op_one_hot,
     "scale_vec": lambda args, a: K.affine_scale(

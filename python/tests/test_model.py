@@ -197,3 +197,23 @@ def test_cosine_similarity_op():
     y = jnp.array([[0.0, 2.0], [3.0, 4.0], [1.0, 1.0]], dtype=jnp.float32)
     out = np.asarray(model._OPS["cosine_similarity"]([x, y], {}))
     np.testing.assert_allclose(out, [0.0, 1.0, 0.0], atol=1e-6)
+
+
+def test_affine_replays_steps_bit_exactly():
+    # the fused node must reproduce the unfused chain's f32 arithmetic
+    x = jnp.asarray(np.random.RandomState(7).randn(128).astype(np.float32) * 1e3)
+    steps = [{"op": "add_scalar", "c": -1.0}, {"op": "mul_scalar", "c": 0.5235987755982988}]
+    fused = model._OPS["affine"]([x], {"steps": steps, "scale": 0.5235987755982988, "shift": -0.5235987755982988})
+    sep = model._UNARY["mul_scalar"](model._UNARY["add_scalar"](x, {"c": -1.0}), {"c": 0.5235987755982988})
+    np.testing.assert_array_equal(np.asarray(fused).view(np.uint32), np.asarray(sep).view(np.uint32))
+
+
+def test_affine_kernel_path_matches_chain():
+    # mul-then-add lowers onto the fused-scaling Pallas kernel; like
+    # scale_vec, FMA contraction may differ in the last ulp
+    x = jnp.asarray(np.random.RandomState(8).randn(16, 4).astype(np.float32))
+    steps = [{"op": "mul_scalar", "c": 2.5}, {"op": "sub_scalar", "c": 3.25}]
+    fused = model._OPS["affine"]([x], {"steps": steps, "scale": 2.5, "shift": -3.25})
+    sep = model._UNARY["sub_scalar"](model._UNARY["mul_scalar"](x, {"c": 2.5}), {"c": 3.25})
+    assert fused.shape == x.shape
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(sep), rtol=1e-6)

@@ -14,6 +14,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::pipeline::{Estimator, Transformer};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::optim::names as op_names;
 
 /// Fill strategy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -254,7 +255,7 @@ impl Transformer for ImputeModel {
             Some(m) => attrs.set("mask_value", m),
             None => attrs.set("mask_value", Json::Null),
         };
-        b.graph_node("impute", &[&self.input_col], attrs, &self.output_col, SpecDType::F32, width)?;
+        b.graph_node(op_names::IMPUTE, &[&self.input_col], attrs, &self.output_col, SpecDType::F32, width)?;
         Ok(())
     }
 

@@ -12,6 +12,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::ops::hash;
 use crate::pipeline::{Estimator, Transformer};
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::string_index::{StringIndexEstimator, StringOrder};
 
@@ -213,7 +214,7 @@ impl Transformer for OneHotModel {
         attrs.set("num_oov", self.num_oov);
         attrs.set("drop_unseen", self.drop_unseen);
         b.graph_node(
-            "one_hot",
+            op_names::ONE_HOT,
             &[&href],
             attrs,
             &self.output_col,

@@ -13,6 +13,7 @@ use crate::error::{KamaeError, Result};
 use crate::export::{SpecBuilder, SpecDType};
 use crate::pipeline::{Estimator, Transformer};
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 /// Moments accumulator per element position.
 struct MomentsAcc {
@@ -336,7 +337,7 @@ impl Transformer for ScaleModel {
         attrs.set("scale", Json::Array(self.scale.iter().map(|&x| Json::Float(x)).collect()));
         attrs.set("shift", Json::Array(self.shift.iter().map(|&x| Json::Float(x)).collect()));
         b.graph_node(
-            "scale_vec",
+            op_names::SCALE_VEC,
             &[&self.input_col],
             attrs,
             &self.output_col,

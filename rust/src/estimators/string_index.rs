@@ -20,6 +20,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::ops::hash;
 use crate::pipeline::{Estimator, Transformer};
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 /// Vocabulary ordering (Kamae `stringOrderType`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -376,7 +377,7 @@ impl Transformer for StringIndexModel {
                 Some(m) => attrs.set("mask_hash", hash::fnv1a64(m)),
                 None => attrs.set("mask_hash", Json::Null),
             };
-            b.graph_node("vocab_lookup", &[&href], attrs, output, SpecDType::I64, width)?;
+            b.graph_node(op_names::VOCAB_LOOKUP, &[&href], attrs, output, SpecDType::I64, width)?;
         }
         Ok(())
     }

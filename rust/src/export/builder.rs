@@ -17,6 +17,7 @@ use std::collections::HashMap;
 
 use crate::dataframe::DType;
 use crate::error::{KamaeError, Result};
+use crate::optim::names as op_names;
 use crate::util::json::Json;
 
 use super::spec::{GraphSpec, SpecDType, SpecInput, SpecNode};
@@ -205,7 +206,7 @@ impl SpecBuilder {
                             DType::I64
                         };
                         self.ingress_node(
-                            "hash64",
+                            op_names::HASH64,
                             &[col],
                             Json::object(),
                             &hashed,
@@ -259,7 +260,7 @@ impl SpecBuilder {
                     let id = format!("{o}__out");
                     self.nodes.push(SpecNode {
                         id: id.clone(),
-                        op: "identity".into(),
+                        op: op_names::IDENTITY.into(),
                         inputs: vec![gref],
                         attrs: Json::object(),
                         dtype,

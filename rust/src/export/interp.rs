@@ -362,6 +362,44 @@ fn eval_node(node: &SpecNode, env: &HashMap<String, GVal>) -> Result<GVal> {
         return Ok(GVal::F(data, x.width()));
     }
 
+    // fused scalar-affine chain (produced by optim::passes::AffineFuse).
+    // Replays the original per-node steps with the same f32 rounding, so
+    // fused and unfused graphs agree bit-for-bit.
+    if node.op == "affine" {
+        let x = arg(0)?;
+        let steps: Vec<UnaryOp> = a
+            .req_array("steps")?
+            .iter()
+            .map(|s| {
+                Ok(match s.req_str("op")? {
+                    "add_scalar" => UnaryOp::AddScalar { c: s.req_f64("c")? },
+                    "sub_scalar" => UnaryOp::SubScalar { c: s.req_f64("c")? },
+                    "mul_scalar" => UnaryOp::MulScalar { c: s.req_f64("c")? },
+                    "div_scalar" => UnaryOp::DivScalar { c: s.req_f64("c")? },
+                    "scale_shift" => UnaryOp::ScaleShift {
+                        scale: s.req_f64("scale")?,
+                        shift: s.req_f64("shift")?,
+                    },
+                    other => {
+                        return Err(KamaeError::Unsupported(format!("affine step: {other}")))
+                    }
+                })
+            })
+            .collect::<Result<_>>()?;
+        let data = x
+            .as_f()
+            .iter()
+            .map(|&v| {
+                let mut y = v;
+                for op in &steps {
+                    y = op.apply(y as f32 as f64) as f32 as f64;
+                }
+                y
+            })
+            .collect();
+        return Ok(GVal::F(data, x.width()));
+    }
+
     // binary float ops
     if let Ok(op) = ops::math::BinOp::from_name(&node.op) {
         let (x, y) = (arg(0)?, arg(1)?);

@@ -7,6 +7,15 @@
 //! (calling the Pallas kernels) and `python/compile/aot.py` lowers to HLO
 //! text for the PJRT runtime.
 //!
+//! The full lifecycle is **export → optimize → compile/interpret**: the
+//! builder emits the fitted pipeline verbatim, then the
+//! [`crate::optim`] pass manager rewrites the spec (dead-node
+//! elimination, identity/no-op-cast removal, constant folding, CSE,
+//! scalar-affine fusion) before it reaches the compiler or the
+//! interpreter. `PipelineModel::to_graph_spec` optimizes by default;
+//! the op vocabulary shared by the builder, the interpreter and
+//! `model.py` is declared once in [`crate::optim::registry`].
+//!
 //! A spec has two sections, split automatically by the builder:
 //!
 //! * **ingress** — string-typed ops (split, regex, case, concat, date

@@ -10,6 +10,14 @@
 //!   and estimators, a GraphSpec exporter, and a serving stack (router +
 //!   dynamic batcher) that executes AOT-compiled preprocessing graphs via
 //!   PJRT on the request path.
+//! * **Optimizer ([`optim`])** — a pass-based rewriter sitting between
+//!   "fitted pipeline" and "executable graph": exported specs are
+//!   dead-code-eliminated, deduplicated and fused (scalar-affine chains
+//!   collapse onto the fused-scaling kernel path) before they are
+//!   compiled or interpreted. The lifecycle is
+//!   `fit → export → optimize → compile/interpret → serve`; optimization
+//!   is on by default with `OptimizeLevel::None` as the escape hatch,
+//!   and preserves interpreter outputs bit-for-bit.
 //! * **L2 (python/compile/model.py)** — compiles an exported GraphSpec into
 //!   a JAX function, lowered once to HLO text (`make artifacts`).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
@@ -30,6 +38,7 @@ pub mod error;
 pub mod estimators;
 pub mod export;
 pub mod ops;
+pub mod optim;
 pub mod pipeline;
 pub mod runtime;
 pub mod serving;
@@ -44,5 +53,6 @@ pub mod prelude {
     pub use crate::error::{KamaeError, Result};
     pub use crate::estimators::*;
     pub use crate::export::{GraphSpec, SpecInterpreter};
+    pub use crate::optim::{optimize, OptimizeLevel};
     pub use crate::transformers::*;
 }

@@ -6,6 +6,8 @@
 //!   export-examples  fit all example pipelines and write GraphSpec JSONs
 //!                    into artifacts/specs/ (the Rust half of `make artifacts`)
 //!   transform        run a saved PipelineModel over a JSONL file
+//!   optimize         run the GraphSpec optimizer over a spec JSON and
+//!                    print the per-pass node-count report
 //!   serve-bench      load compiled artifacts and run the open-loop
 //!                    Poisson serving benchmark (experiments C3/C5)
 //!
@@ -77,6 +79,7 @@ fn run(raw: &[String]) -> Result<()> {
         "fit" => fit(&args),
         "export-examples" => export_examples(&args),
         "transform" => transform(&args),
+        "optimize" => optimize(&args),
         "serve-bench" => serve_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -97,6 +100,7 @@ fn print_usage() {
          \x20 fit              --dataset movielens|ltr|quickstart --rows N --out-dir DIR [--partitions P]\n\
          \x20 export-examples  [--out-dir artifacts/specs] [--rows N]\n\
          \x20 transform        --model model.json --input in.jsonl --output out.jsonl\n\
+         \x20 optimize         --spec spec.json --out opt.json [--level none|basic|full]\n\
          \x20 serve-bench      --artifacts DIR --spec NAME --rps R --seconds S [--mode compiled|interpreted|mleap]\n"
     );
 }
@@ -208,6 +212,37 @@ fn transform(args: &Args) -> Result<()> {
         rows as f64 / secs,
         output.display()
     );
+    Ok(())
+}
+
+/// Optimize a spec JSON to `--out`, printing the per-pass node-count
+/// report and any registry lint findings. `--out` is mandatory (it may
+/// equal `--spec`): rewriting an artifact spec in place would silently
+/// break the compiled backend's positional contract with HLO files
+/// lowered from the old graph, so overwriting must be an explicit
+/// choice — and any rewritten spec must be re-lowered (`make
+/// artifacts`) before compiled serving.
+fn optimize(args: &Args) -> Result<()> {
+    let spec_path = PathBuf::from(
+        args.get("spec")
+            .ok_or_else(|| KamaeError::InvalidConfig("--spec required".into()))?,
+    );
+    let out = PathBuf::from(args.get("out").ok_or_else(|| {
+        KamaeError::InvalidConfig(
+            "--out required (pass the same path as --spec to overwrite in place; \
+             re-run `make artifacts` afterwards if compiled serving uses this spec)"
+                .into(),
+        )
+    })?);
+    let level = kamae::optim::OptimizeLevel::parse(&args.get_or("level", "full"))?;
+    let spec = kamae::export::GraphSpec::load(&spec_path)?;
+    for finding in kamae::optim::lint_spec(&spec) {
+        eprintln!("warning: {finding}");
+    }
+    let (spec, report) = kamae::optim::optimize(spec, level)?;
+    println!("{report}");
+    spec.save(&out)?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 

@@ -70,13 +70,17 @@ pub enum ListAgg {
 }
 
 impl ListAgg {
+    /// GraphSpec op name — routed through the op registry so the
+    /// engine, the interpreter and `model.py` can never drift (the
+    /// registry's coverage tests pin all three).
     pub fn spec_name(&self) -> &'static str {
+        use crate::optim::names as op;
         match self {
-            ListAgg::Sum => "list_sum",
-            ListAgg::Mean => "list_mean",
-            ListAgg::Min => "list_min",
-            ListAgg::Max => "list_max",
-            ListAgg::Len => "list_len",
+            ListAgg::Sum => op::LIST_SUM,
+            ListAgg::Mean => op::LIST_MEAN,
+            ListAgg::Min => op::LIST_MIN,
+            ListAgg::Max => op::LIST_MAX,
+            ListAgg::Len => op::LIST_LEN,
         }
     }
 

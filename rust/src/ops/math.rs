@@ -90,30 +90,32 @@ impl UnaryOp {
         }
     }
 
-    /// GraphSpec op name (python side implements the same table).
+    /// GraphSpec op name, routed through the op registry (python side
+    /// implements the same table).
     pub fn spec_name(&self) -> &'static str {
+        use crate::optim::names as op;
         match self {
-            UnaryOp::Log { .. } => "log",
-            UnaryOp::Log1p => "log1p",
-            UnaryOp::Exp => "exp",
-            UnaryOp::Sqrt => "sqrt",
-            UnaryOp::Abs => "abs",
-            UnaryOp::Neg => "neg",
-            UnaryOp::Reciprocal => "reciprocal",
-            UnaryOp::Round => "round",
-            UnaryOp::Floor => "floor",
-            UnaryOp::Ceil => "ceil",
-            UnaryOp::Sin => "sin",
-            UnaryOp::Cos => "cos",
-            UnaryOp::Tanh => "tanh",
-            UnaryOp::Sigmoid => "sigmoid",
-            UnaryOp::Clip { .. } => "clip",
-            UnaryOp::PowScalar { .. } => "pow_scalar",
-            UnaryOp::AddScalar { .. } => "add_scalar",
-            UnaryOp::SubScalar { .. } => "sub_scalar",
-            UnaryOp::MulScalar { .. } => "mul_scalar",
-            UnaryOp::DivScalar { .. } => "div_scalar",
-            UnaryOp::ScaleShift { .. } => "scale_shift",
+            UnaryOp::Log { .. } => op::LOG,
+            UnaryOp::Log1p => op::LOG1P,
+            UnaryOp::Exp => op::EXP,
+            UnaryOp::Sqrt => op::SQRT,
+            UnaryOp::Abs => op::ABS,
+            UnaryOp::Neg => op::NEG,
+            UnaryOp::Reciprocal => op::RECIPROCAL,
+            UnaryOp::Round => op::ROUND,
+            UnaryOp::Floor => op::FLOOR,
+            UnaryOp::Ceil => op::CEIL,
+            UnaryOp::Sin => op::SIN,
+            UnaryOp::Cos => op::COS,
+            UnaryOp::Tanh => op::TANH,
+            UnaryOp::Sigmoid => op::SIGMOID,
+            UnaryOp::Clip { .. } => op::CLIP,
+            UnaryOp::PowScalar { .. } => op::POW_SCALAR,
+            UnaryOp::AddScalar { .. } => op::ADD_SCALAR,
+            UnaryOp::SubScalar { .. } => op::SUB_SCALAR,
+            UnaryOp::MulScalar { .. } => op::MUL_SCALAR,
+            UnaryOp::DivScalar { .. } => op::DIV_SCALAR,
+            UnaryOp::ScaleShift { .. } => op::SCALE_SHIFT,
         }
     }
 }
@@ -170,15 +172,16 @@ impl BinOp {
     }
 
     pub fn spec_name(&self) -> &'static str {
+        use crate::optim::names as op;
         match self {
-            BinOp::Add => "add",
-            BinOp::Sub => "sub",
-            BinOp::Mul => "mul",
-            BinOp::Div => "div",
-            BinOp::Pow => "pow",
-            BinOp::Min => "min",
-            BinOp::Max => "max",
-            BinOp::Mod => "mod",
+            BinOp::Add => op::ADD,
+            BinOp::Sub => op::SUB,
+            BinOp::Mul => op::MUL,
+            BinOp::Div => op::DIV,
+            BinOp::Pow => op::POW,
+            BinOp::Min => op::MIN,
+            BinOp::Max => op::MAX,
+            BinOp::Mod => op::MOD,
         }
     }
 

@@ -1,0 +1,259 @@
+//! GraphSpec optimizer — a pass-based IR optimization layer between the
+//! fitted pipeline and the executable graph.
+//!
+//! `SpecBuilder` emits specs verbatim: one node per transformer op, an
+//! `identity` node per pass-through output, repeated subexpressions kept,
+//! and every offline-only feature still present. Serving pays for all of
+//! it on every request. This module rewrites a [`GraphSpec`] into a
+//! cheaper, **observably identical** graph:
+//!
+//! * [`passes::DeadNodeElim`] — drop graph nodes, graph inputs and
+//!   ingress nodes not reachable from the spec outputs,
+//! * [`passes::IdentityElim`] — remove `identity` and no-op `to_f32`/
+//!   `to_i64` cast nodes,
+//! * [`passes::ConstFold`] — rewrite provably no-op scalar math
+//!   (`mul_scalar 1`, `div_scalar 1`, …) to `identity`,
+//! * [`passes::CommonSubexprElim`] — deduplicate nodes computing the
+//!   same (op, inputs, attrs) value,
+//! * [`passes::AffineFuse`] — collapse chains of scalar-affine ops into
+//!   one fused `affine` node (lowered onto the fused-scaling kernel
+//!   path by `python/compile/model.py`).
+//!
+//! **Exactness contract:** every pass preserves interpreter outputs
+//! *bit-for-bit* (i64 and f32 alike), not merely "within tolerance".
+//! The interpreter emulates the compiled graph's f32 arithmetic by
+//! rounding float ops through f32; a pass may therefore only remove an
+//! op when doing so removes no rounding step (see
+//! [`registry::OpInfo::rounds_f32`] and the per-pass comments). The
+//! fused `affine` node replays its original chain step-by-step for the
+//! same reason. `rust/tests/parity.rs` and `rust/tests/properties.rs`
+//! enforce the contract on the MovieLens and LTR pipelines and on
+//! random data.
+//!
+//! Passes never rename entries of `spec.outputs`: output names are an
+//! external contract (serving backends map them to engine columns).
+//!
+//! Entry points: [`optimize`] /
+//! [`crate::pipeline::PipelineModel::to_graph_spec_opt`] at export time,
+//! [`crate::serving::load_backend`] at load time (interpreted/mleap
+//! modes), and the `kamae optimize` CLI subcommand.
+
+pub mod passes;
+pub mod registry;
+
+pub use registry::{lint_spec, lookup, names, Arity, OpInfo, Section};
+
+use crate::error::{KamaeError, Result};
+use crate::export::GraphSpec;
+use crate::util::json::Json;
+
+/// How aggressively to optimize an exported spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptimizeLevel {
+    /// Escape hatch: emit the builder's graph verbatim.
+    None,
+    /// Exact cleanup passes only (DCE, identity/no-op elimination,
+    /// constant folding, CSE).
+    Basic,
+    /// `Basic` plus scalar-affine chain fusion. The default.
+    #[default]
+    Full,
+}
+
+impl OptimizeLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizeLevel::None => "none",
+            OptimizeLevel::Basic => "basic",
+            OptimizeLevel::Full => "full",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<OptimizeLevel> {
+        Ok(match s {
+            "none" | "O0" | "off" => OptimizeLevel::None,
+            "basic" | "O1" => OptimizeLevel::Basic,
+            "full" | "O2" | "on" => OptimizeLevel::Full,
+            other => {
+                return Err(KamaeError::InvalidConfig(format!(
+                    "unknown optimize level: {other} (expected none|basic|full)"
+                )))
+            }
+        })
+    }
+}
+
+/// One rewrite pass over a spec. Implementations mutate in place and
+/// report whether anything changed.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool>;
+}
+
+/// Node counts around one pass execution.
+#[derive(Debug, Clone)]
+pub struct PassStat {
+    pub pass: &'static str,
+    pub graph_nodes_before: usize,
+    pub graph_nodes_after: usize,
+    pub ingress_before: usize,
+    pub ingress_after: usize,
+    pub changed: bool,
+}
+
+/// Per-pass report of one optimization run.
+#[derive(Debug, Clone)]
+pub struct OptReport {
+    pub spec: String,
+    pub level: OptimizeLevel,
+    pub stats: Vec<PassStat>,
+}
+
+impl OptReport {
+    pub fn graph_nodes_before(&self) -> usize {
+        self.stats.first().map(|s| s.graph_nodes_before).unwrap_or(0)
+    }
+
+    pub fn graph_nodes_after(&self) -> usize {
+        self.stats.last().map(|s| s.graph_nodes_after).unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("spec", self.spec.clone());
+        j.set("level", self.level.name());
+        j.set(
+            "passes",
+            Json::Array(
+                self.stats
+                    .iter()
+                    .map(|s| {
+                        let mut o = Json::object();
+                        o.set("pass", s.pass);
+                        o.set("graph_nodes_before", s.graph_nodes_before);
+                        o.set("graph_nodes_after", s.graph_nodes_after);
+                        o.set("ingress_before", s.ingress_before);
+                        o.set("ingress_after", s.ingress_after);
+                        o.set("changed", s.changed);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+impl std::fmt::Display for OptReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "=== optimize report: {} (level {}) ===", self.spec, self.level.name())?;
+        writeln!(f, "{:<22} {:>12} {:>14}", "pass", "graph nodes", "ingress nodes")?;
+        for s in &self.stats {
+            writeln!(
+                f,
+                "{:<22} {:>5} -> {:<4} {:>6} -> {:<4}{}",
+                s.pass,
+                s.graph_nodes_before,
+                s.graph_nodes_after,
+                s.ingress_before,
+                s.ingress_after,
+                if s.changed { "" } else { "  (no change)" }
+            )?;
+        }
+        write!(
+            f,
+            "total: {} -> {} graph nodes",
+            self.graph_nodes_before(),
+            self.graph_nodes_after()
+        )
+    }
+}
+
+/// Drives an ordered pass list over one spec.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn new(passes: Vec<Box<dyn Pass>>) -> PassManager {
+        PassManager { passes }
+    }
+
+    /// The standard pass pipeline for a level (empty for
+    /// [`OptimizeLevel::None`]).
+    pub fn for_level(level: OptimizeLevel) -> PassManager {
+        use crate::optim::passes::{
+            AffineFuse, CommonSubexprElim, ConstFold, DeadNodeElim, IdentityElim,
+        };
+        let mut p: Vec<Box<dyn Pass>> = Vec::new();
+        if level != OptimizeLevel::None {
+            p.push(Box::new(DeadNodeElim));
+            p.push(Box::new(IdentityElim));
+            p.push(Box::new(ConstFold));
+            // ConstFold rewrites no-ops into `identity`; sweep them up.
+            p.push(Box::new(IdentityElim));
+            p.push(Box::new(CommonSubexprElim));
+            if level == OptimizeLevel::Full {
+                p.push(Box::new(AffineFuse));
+            }
+            // CSE/fusion can strand nodes whose consumers were rewritten.
+            p.push(Box::new(DeadNodeElim));
+        }
+        PassManager { passes: p }
+    }
+
+    /// Run every pass in order, collecting per-pass node counts.
+    pub fn run(&self, mut spec: GraphSpec, level: OptimizeLevel) -> Result<(GraphSpec, OptReport)> {
+        let mut report =
+            OptReport { spec: spec.name.clone(), level, stats: Vec::with_capacity(self.passes.len()) };
+        for pass in &self.passes {
+            let (gb, ib) = (spec.nodes.len(), spec.ingress.len());
+            let changed = pass.run(&mut spec)?;
+            report.stats.push(PassStat {
+                pass: pass.name(),
+                graph_nodes_before: gb,
+                graph_nodes_after: spec.nodes.len(),
+                ingress_before: ib,
+                ingress_after: spec.ingress.len(),
+                changed,
+            });
+        }
+        Ok((spec, report))
+    }
+}
+
+/// Optimize a spec at the given level. The returned spec is observably
+/// identical to the input: same outputs (names, order, dtypes) and
+/// bit-identical values under [`crate::export::SpecInterpreter`].
+pub fn optimize(spec: GraphSpec, level: OptimizeLevel) -> Result<(GraphSpec, OptReport)> {
+    PassManager::for_level(level).run(spec, level)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(OptimizeLevel::parse("none").unwrap(), OptimizeLevel::None);
+        assert_eq!(OptimizeLevel::parse("O1").unwrap(), OptimizeLevel::Basic);
+        assert_eq!(OptimizeLevel::parse("full").unwrap(), OptimizeLevel::Full);
+        assert!(OptimizeLevel::parse("O3").is_err());
+        assert_eq!(OptimizeLevel::default(), OptimizeLevel::Full);
+    }
+
+    #[test]
+    fn none_level_is_a_no_op() {
+        let spec = crate::export::GraphSpec {
+            name: "t".into(),
+            inputs: vec![],
+            ingress: vec![],
+            graph_inputs: vec![],
+            nodes: vec![],
+            outputs: vec![],
+        };
+        let (out, report) = optimize(spec.clone(), OptimizeLevel::None).unwrap();
+        assert_eq!(out, spec);
+        assert!(report.stats.is_empty());
+    }
+}

@@ -1,0 +1,195 @@
+//! Scalar-affine chain fusion.
+//!
+//! Pipelines are full of scalar-math ladders — `(x - 1) * (2π/12)`,
+//! unit conversions, normalisations — which the builder exports as one
+//! node per step. Each interpreted step costs a full column
+//! materialisation plus an env round trip; each compiled step is an
+//! extra HLO op. This pass collapses a maximal chain of single-use
+//! `add_scalar` / `sub_scalar` / `mul_scalar` / `div_scalar` /
+//! `scale_shift` nodes into ONE fused `affine` node.
+//!
+//! The fused node's attrs carry two representations:
+//!
+//! * `steps` — the original op/constant sequence. The interpreter
+//!   replays it step-by-step with the exact same f32 rounding the
+//!   separate nodes had, which is what makes this pass bit-exact under
+//!   `SpecInterpreter`.
+//! * `scale` / `shift` — the composition collapsed to `x*scale + shift`
+//!   (f64), for reporting and kernel lowering.
+//!   `python/compile/model.py` lowers the canonical mul-then-add/sub
+//!   pattern onto the fused-scaling Pallas kernel
+//!   (`kernels.affine_scale`) — same semantics as `scale_vec`, within
+//!   the kernel's f32 FMA contraction — and replays `steps` otherwise.
+//!
+//! Interior chain nodes must have exactly one consumer and must not be
+//! spec outputs; the fused node inherits the chain tail's id, so
+//! downstream references are untouched.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecNode};
+use crate::optim::{names, registry, Pass};
+use crate::util::json::Json;
+
+use super::{output_set, use_counts};
+
+pub struct AffineFuse;
+
+/// One original chain step, as recorded in `attrs.steps`.
+struct Step {
+    op: String,
+    attrs: Json,
+}
+
+/// Parse a node as an affine step; `None` if it is not fusable.
+fn as_step(node: &SpecNode) -> Option<Step> {
+    let info = registry::lookup(&node.op)?;
+    if !info.affine || node.inputs.len() != 1 {
+        return None;
+    }
+    // validate the constants now so fusion never produces a node the
+    // interpreter cannot evaluate
+    let ok = if node.op == names::SCALE_SHIFT {
+        node.attrs.opt_f64("scale").is_some() && node.attrs.opt_f64("shift").is_some()
+    } else {
+        node.attrs.opt_f64("c").is_some()
+    };
+    if !ok {
+        return None;
+    }
+    Some(Step { op: node.op.clone(), attrs: node.attrs.clone() })
+}
+
+/// Compose the collapsed `x*scale + shift` form of a step sequence.
+fn collapse(steps: &[Step]) -> (f64, f64) {
+    let (mut scale, mut shift) = (1.0f64, 0.0f64);
+    for s in steps {
+        match s.op.as_str() {
+            names::ADD_SCALAR => shift += s.attrs.opt_f64("c").unwrap_or(0.0),
+            names::SUB_SCALAR => shift -= s.attrs.opt_f64("c").unwrap_or(0.0),
+            names::MUL_SCALAR => {
+                let c = s.attrs.opt_f64("c").unwrap_or(1.0);
+                scale *= c;
+                shift *= c;
+            }
+            names::DIV_SCALAR => {
+                let c = s.attrs.opt_f64("c").unwrap_or(1.0);
+                scale /= c;
+                shift /= c;
+            }
+            _ => {
+                // scale_shift
+                let s2 = s.attrs.opt_f64("scale").unwrap_or(1.0);
+                let t2 = s.attrs.opt_f64("shift").unwrap_or(0.0);
+                scale *= s2;
+                shift = shift * s2 + t2;
+            }
+        }
+    }
+    (scale, shift)
+}
+
+impl Pass for AffineFuse {
+    fn name(&self) -> &'static str {
+        "affine-fuse"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let uses = use_counts(spec);
+        let outputs = output_set(spec);
+        // id -> node index, and the (unique) affine consumer of each id
+        let index: HashMap<&str, usize> =
+            spec.nodes.iter().enumerate().map(|(i, n)| (n.id.as_str(), i)).collect();
+        let mut affine_consumer: HashMap<usize, usize> = HashMap::new();
+        for (ci, node) in spec.nodes.iter().enumerate() {
+            if as_step(node).is_some() {
+                if let Some(&pi) = index.get(node.inputs[0].as_str()) {
+                    affine_consumer.insert(pi, ci);
+                }
+            }
+        }
+
+        let mut visited = vec![false; spec.nodes.len()];
+        let mut removed = vec![false; spec.nodes.len()];
+        let mut fused: Vec<(usize, SpecNode)> = Vec::new();
+
+        for start in 0..spec.nodes.len() {
+            if visited[start] || as_step(&spec.nodes[start]).is_none() {
+                continue;
+            }
+            // grow the chain forward while the current tail has exactly
+            // one consumer, that consumer is the next affine step, and
+            // the tail's value is not externally visible
+            let mut chain = vec![start];
+            let mut tail = start;
+            loop {
+                let tail_node = &spec.nodes[tail];
+                let single_use = uses.get(&tail_node.id).copied().unwrap_or(0) == 1;
+                if !single_use || outputs.contains(&tail_node.id) {
+                    break;
+                }
+                match affine_consumer.get(&tail) {
+                    Some(&next) if !visited[next] => {
+                        chain.push(next);
+                        tail = next;
+                    }
+                    _ => break,
+                }
+            }
+            for &i in &chain {
+                visited[i] = true;
+            }
+            if chain.len() < 2 {
+                continue;
+            }
+
+            let steps: Vec<Step> =
+                chain.iter().map(|&i| as_step(&spec.nodes[i]).expect("validated")).collect();
+            let (scale, shift) = collapse(&steps);
+            let mut attrs = Json::object();
+            attrs.set(
+                "steps",
+                Json::Array(
+                    steps
+                        .iter()
+                        .map(|s| {
+                            let mut o = s.attrs.clone();
+                            o.set("op", s.op.clone());
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+            attrs.set("scale", scale);
+            attrs.set("shift", shift);
+
+            let head = &spec.nodes[chain[0]];
+            let tail_node = &spec.nodes[*chain.last().unwrap()];
+            fused.push((
+                *chain.last().unwrap(),
+                SpecNode {
+                    id: tail_node.id.clone(),
+                    op: names::AFFINE.to_string(),
+                    inputs: vec![head.inputs[0].clone()],
+                    attrs,
+                    dtype: tail_node.dtype,
+                    width: tail_node.width,
+                },
+            ));
+            for &i in &chain[..chain.len() - 1] {
+                removed[i] = true;
+            }
+        }
+
+        if fused.is_empty() {
+            return Ok(false);
+        }
+        for (i, node) in fused {
+            spec.nodes[i] = node;
+        }
+        let mut keep = removed.iter().map(|r| !r);
+        spec.nodes.retain(|_| keep.next().unwrap());
+        Ok(true)
+    }
+}

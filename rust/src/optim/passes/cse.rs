@@ -1,0 +1,78 @@
+//! Common-subexpression elimination.
+//!
+//! Two graph nodes with the same (op, inputs, attrs, dtype, width)
+//! compute the same value — every registered graph op is deterministic
+//! — so later duplicates are redirected to the first occurrence.
+//! Large pipelines produce these naturally: repeated `log1p` feature
+//! chains, the same hash feeding several encoders, copy-pasted stage
+//! configs.
+//!
+//! Only ops marked `pure` in the registry participate; unknown ops are
+//! skipped. A duplicate whose id is a spec output keeps its name (the
+//! output contract) but is rewritten to an `identity` of the first
+//! occurrence, so the value is still computed once.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::GraphSpec;
+use crate::optim::{names, registry, Pass};
+use crate::util::json::Json;
+
+use super::{apply_renames, output_set};
+
+pub struct CommonSubexprElim;
+
+impl Pass for CommonSubexprElim {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let outputs = output_set(spec);
+        let mut seen: HashMap<String, String> = HashMap::new();
+        let mut renames: HashMap<String, String> = HashMap::new();
+        let nodes = std::mem::take(&mut spec.nodes);
+        let mut kept = Vec::with_capacity(nodes.len());
+        let mut changed = false;
+
+        for mut node in nodes {
+            apply_renames(&mut node.inputs, &renames);
+            let pure = registry::lookup(&node.op).map(|i| i.pure).unwrap_or(false);
+            if !pure {
+                kept.push(node);
+                continue;
+            }
+            // \x1f cannot appear in column names coming from JSON specs
+            let key = format!(
+                "{}\x1f{}\x1f{}\x1f{}\x1f{:?}",
+                node.op,
+                node.inputs.join("\x1f"),
+                node.attrs,
+                node.dtype.name(),
+                node.width
+            );
+            match seen.get(&key) {
+                Some(first) if first != &node.id => {
+                    changed = true;
+                    if outputs.contains(&node.id) {
+                        // keep the output name alive as a cheap alias
+                        node.op = names::IDENTITY.to_string();
+                        node.inputs = vec![first.clone()];
+                        node.attrs = Json::object();
+                        kept.push(node);
+                    } else {
+                        renames.insert(node.id, first.clone());
+                    }
+                }
+                _ => {
+                    seen.insert(key, node.id.clone());
+                    kept.push(node);
+                }
+            }
+        }
+
+        spec.nodes = kept;
+        Ok(changed)
+    }
+}

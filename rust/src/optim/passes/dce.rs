@@ -1,0 +1,69 @@
+//! Dead-node elimination.
+//!
+//! The builder exports every fitted stage, but serving only needs what
+//! the declared outputs depend on — offline-only features (labels,
+//! diagnostics, intermediate columns that never reach the model) ride
+//! along as dead weight. This pass walks liveness backwards from
+//! `spec.outputs` and drops:
+//!
+//! 1. graph nodes not reachable from any output,
+//! 2. graph inputs no remaining node or output references,
+//! 3. ingress nodes (and their upstream ingress chains) that only fed
+//!    pruned graph inputs.
+//!
+//! Removing never-evaluated nodes cannot change surviving values, so
+//! the pass is unconditionally exact. Nodes whose op is unknown to the
+//! registry or not pure are pinned live (conservative: they might have
+//! effects).
+
+use std::collections::HashSet;
+
+use crate::error::Result;
+use crate::export::GraphSpec;
+use crate::optim::{registry, Pass};
+
+pub struct DeadNodeElim;
+
+impl Pass for DeadNodeElim {
+    fn name(&self) -> &'static str {
+        "dead-node-elim"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let before = (spec.nodes.len(), spec.graph_inputs.len(), spec.ingress.len());
+
+        // ---- graph section -------------------------------------------
+        let mut live: HashSet<String> = spec.outputs.iter().cloned().collect();
+        // pin impure/unknown ops
+        for n in &spec.nodes {
+            let pure = registry::lookup(&n.op).map(|i| i.pure).unwrap_or(false);
+            if !pure {
+                live.insert(n.id.clone());
+            }
+        }
+        for n in spec.nodes.iter().rev() {
+            if live.contains(&n.id) {
+                live.extend(n.inputs.iter().cloned());
+            }
+        }
+        spec.nodes.retain(|n| live.contains(&n.id));
+        spec.graph_inputs.retain(|g| live.contains(g));
+
+        // ---- ingress section -----------------------------------------
+        let mut live_i: HashSet<String> = spec.graph_inputs.iter().cloned().collect();
+        for n in &spec.ingress {
+            let pure = registry::lookup(&n.op).map(|i| i.pure).unwrap_or(false);
+            if !pure {
+                live_i.insert(n.id.clone());
+            }
+        }
+        for n in spec.ingress.iter().rev() {
+            if live_i.contains(&n.id) {
+                live_i.extend(n.inputs.iter().cloned());
+            }
+        }
+        spec.ingress.retain(|n| live_i.contains(&n.id));
+
+        Ok(before != (spec.nodes.len(), spec.graph_inputs.len(), spec.ingress.len()))
+    }
+}

@@ -1,0 +1,84 @@
+//! Constant folding of no-op scalar math.
+//!
+//! Rewrites scalar ops whose constant makes them mathematically a
+//! no-op into `identity` (which the identity pass then removes):
+//!
+//! * `mul_scalar c=1`, `div_scalar c=1`, `pow_scalar p=1` — exact for
+//!   every IEEE value including NaN and signed zero,
+//! * `clip` with neither bound set,
+//! * `columns_agg` over a single float column (`sum`/`min`/`max`
+//!   reduce to the column itself; `mean` divides by 1.0, exact).
+//!
+//! **Why `add_scalar c=0` is NOT folded:** IEEE `-0.0 + 0.0 == +0.0`,
+//! so x+0 is not a bitwise identity (same for `sub_scalar 0` and
+//! `scale_shift {1, 0}`). The win is negligible; exactness is the
+//! contract.
+//!
+//! **The rounding gate:** the interpreter rounds scalar-math results
+//! through f32 to mirror the compiled graph. Folding `mul_scalar 1`
+//! away also removes that rounding step, which is only exact when the
+//! input is already f32-rounded — i.e. when its producer is a graph
+//! node whose registry entry sets `rounds_f32`. Inputs coming straight
+//! from the request (raw f64) never qualify.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecDType};
+use crate::optim::{names, registry, Pass};
+
+use super::meta_map;
+
+pub struct ConstFold;
+
+impl Pass for ConstFold {
+    fn name(&self) -> &'static str {
+        "const-fold"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let meta = meta_map(spec);
+        // producer op of every node-produced name (owned: the node list
+        // is mutated below)
+        let producer: HashMap<String, String> =
+            spec.nodes.iter().map(|n| (n.id.clone(), n.op.clone())).collect();
+        let input_already_rounded = |input: &str| -> bool {
+            producer
+                .get(input)
+                .and_then(|op| registry::lookup(op))
+                .map(|i| i.rounds_f32)
+                .unwrap_or(false)
+        };
+
+        let mut changed = false;
+        for node in &mut spec.nodes {
+            let a = &node.attrs;
+            let no_op = match node.op.as_str() {
+                names::MUL_SCALAR | names::DIV_SCALAR => a.opt_f64("c") == Some(1.0),
+                names::POW_SCALAR => a.opt_f64("p") == Some(1.0),
+                names::CLIP => a.opt_f64("min").is_none() && a.opt_f64("max").is_none(),
+                _ => false,
+            };
+            // these ops round through f32; only fold when that rounding
+            // is provably redundant
+            let fold_scalar =
+                no_op && node.inputs.len() == 1 && input_already_rounded(&node.inputs[0]);
+
+            // columns_agg over one column never rounds — exact whenever
+            // the input is already a float (an int input would have been
+            // converted to float by the aggregation)
+            let fold_agg = node.op == names::COLUMNS_AGG
+                && node.inputs.len() == 1
+                && meta.get(&node.inputs[0]).map(|&(dt, w)| {
+                    dt == SpecDType::F32 && w == node.width
+                }) == Some(true);
+
+            if fold_scalar || fold_agg {
+                node.op = names::IDENTITY.to_string();
+                node.attrs = crate::util::json::Json::object();
+                changed = true;
+            }
+        }
+        Ok(changed)
+    }
+}

@@ -1,0 +1,74 @@
+//! Identity and no-op-cast elimination.
+//!
+//! Removes three shapes of pass-through node, rewiring consumers to the
+//! node's input:
+//!
+//! * `identity` — the interpreter evaluates it as a value clone (no
+//!   rounding), so removal is unconditionally exact,
+//! * `to_f32` whose input is already `float32` — the interpreter's
+//!   `as_f()` on a float value is a clone, and the compiled graph's
+//!   `astype(float32)` on a float32 array is a no-op,
+//! * `to_i64` whose input is already `int64` — same reasoning.
+//!
+//! A cast whose input has a *different* dtype class is a real
+//! conversion and is kept. Nodes whose id is a spec output are kept
+//! (output names are an external contract), as are nodes whose
+//! declared dtype/width disagree with their input's (a malformed or
+//! hand-edited spec — leave it alone).
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecDType};
+use crate::optim::{names, Pass};
+
+use super::{apply_renames, meta_map, output_set};
+
+pub struct IdentityElim;
+
+impl Pass for IdentityElim {
+    fn name(&self) -> &'static str {
+        "identity-elim"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let meta = meta_map(spec);
+        let outputs = output_set(spec);
+        let mut renames: HashMap<String, String> = HashMap::new();
+        let nodes = std::mem::take(&mut spec.nodes);
+        let mut kept = Vec::with_capacity(nodes.len());
+
+        for mut node in nodes {
+            apply_renames(&mut node.inputs, &renames);
+            let removable = !outputs.contains(&node.id)
+                && node.inputs.len() == 1
+                && match meta.get(&node.inputs[0]) {
+                    Some(&(in_dtype, in_width)) => {
+                        in_width == node.width
+                            && match node.op.as_str() {
+                                names::IDENTITY => in_dtype == node.dtype,
+                                names::TO_F32 => {
+                                    in_dtype == SpecDType::F32 && node.dtype == SpecDType::F32
+                                }
+                                names::TO_I64 => {
+                                    in_dtype == SpecDType::I64 && node.dtype == SpecDType::I64
+                                }
+                                _ => false,
+                            }
+                    }
+                    None => false,
+                };
+            if removable {
+                // inputs[0] is already fully resolved (renames applied
+                // above), so map values never need a second hop.
+                renames.insert(node.id, node.inputs[0].clone());
+            } else {
+                kept.push(node);
+            }
+        }
+
+        let changed = !renames.is_empty();
+        spec.nodes = kept;
+        Ok(changed)
+    }
+}

@@ -1,0 +1,261 @@
+//! The optimizer pass suite.
+//!
+//! Every pass upholds the subsystem's exactness contract (see
+//! [`crate::optim`] module docs): interpreter outputs are preserved
+//! bit-for-bit, spec output names are never renamed, and unknown ops
+//! are treated conservatively (impure, never folded or fused).
+
+mod affine;
+mod cse;
+mod dce;
+mod fold;
+mod identity;
+
+pub use affine::AffineFuse;
+pub use cse::CommonSubexprElim;
+pub use dce::DeadNodeElim;
+pub use fold::ConstFold;
+pub use identity::IdentityElim;
+
+use std::collections::{HashMap, HashSet};
+
+use crate::export::{GraphSpec, SpecDType};
+
+/// Dtype/width of every graph-section name (graph inputs resolved
+/// through ingress, plus every node output).
+pub(crate) fn meta_map(spec: &GraphSpec) -> HashMap<String, (SpecDType, Option<usize>)> {
+    let mut m = HashMap::new();
+    for g in &spec.graph_inputs {
+        if let Some(meta) = spec.graph_input_meta(g) {
+            m.insert(g.clone(), meta);
+        }
+    }
+    for n in &spec.nodes {
+        m.insert(n.id.clone(), (n.dtype, n.width));
+    }
+    m
+}
+
+/// How many times each graph-section name is referenced (node inputs
+/// plus spec outputs).
+pub(crate) fn use_counts(spec: &GraphSpec) -> HashMap<String, usize> {
+    let mut uses: HashMap<String, usize> = HashMap::new();
+    for n in &spec.nodes {
+        for i in &n.inputs {
+            *uses.entry(i.clone()).or_insert(0) += 1;
+        }
+    }
+    for o in &spec.outputs {
+        *uses.entry(o.clone()).or_insert(0) += 1;
+    }
+    uses
+}
+
+/// The set of spec output names (never renamed by any pass).
+pub(crate) fn output_set(spec: &GraphSpec) -> HashSet<String> {
+    spec.outputs.iter().cloned().collect()
+}
+
+/// Rewrite a node input through an accumulated rename map. Map values
+/// are already fully resolved at insertion time, so one hop suffices.
+pub(crate) fn apply_renames(inputs: &mut [String], renames: &HashMap<String, String>) {
+    for i in inputs.iter_mut() {
+        if let Some(t) = renames.get(i) {
+            *i = t.clone();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dataframe::DType;
+    use crate::export::{GraphSpec, SpecDType, SpecInput, SpecNode};
+    use crate::optim::{names, optimize, OptimizeLevel, Pass};
+    use crate::util::json::Json;
+
+    use super::*;
+
+    fn node(
+        id: &str,
+        op: &str,
+        inputs: &[&str],
+        attrs: &str,
+        dtype: SpecDType,
+        width: Option<usize>,
+    ) -> SpecNode {
+        SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype,
+            width,
+        }
+    }
+
+    /// Spec over a raw float `x` and a string `c` (hashed at ingress).
+    fn base_spec(nodes: Vec<SpecNode>, outputs: &[&str]) -> GraphSpec {
+        GraphSpec {
+            name: "t".into(),
+            inputs: vec![
+                SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+                SpecInput { name: "c".into(), dtype: DType::Str, width: None },
+            ],
+            ingress: vec![node("c__hash", names::HASH64, &["c"], "{}", SpecDType::I64, None)],
+            graph_inputs: vec!["x".into(), "c__hash".into()],
+            nodes,
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    #[test]
+    fn dce_drops_dead_nodes_inputs_and_ingress() {
+        let mut spec = base_spec(
+            vec![
+                node("l", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                node("dead", names::EXP, &["x"], "{}", SpecDType::F32, None),
+                node("idx", names::HASH_BUCKET, &["c__hash"], r#"{"num_bins": 8}"#, SpecDType::I64, None),
+            ],
+            &["l"],
+        );
+        assert!(DeadNodeElim.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 1);
+        assert_eq!(spec.nodes[0].id, "l");
+        // the hash feature died, so its graph input and ingress node go too
+        assert_eq!(spec.graph_inputs, vec!["x".to_string()]);
+        assert!(spec.ingress.is_empty());
+        // second run: fixpoint
+        assert!(!DeadNodeElim.run(&mut spec).unwrap());
+    }
+
+    #[test]
+    fn identity_elim_rewires_consumers_but_keeps_outputs() {
+        let mut spec = base_spec(
+            vec![
+                node("l", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                node("i", names::IDENTITY, &["l"], "{}", SpecDType::F32, None),
+                node("e", names::EXP, &["i"], "{}", SpecDType::F32, None),
+                node("o", names::IDENTITY, &["l"], "{}", SpecDType::F32, None),
+            ],
+            &["e", "o"],
+        );
+        assert!(IdentityElim.run(&mut spec).unwrap());
+        let ids: Vec<&str> = spec.nodes.iter().map(|n| n.id.as_str()).collect();
+        assert_eq!(ids, vec!["l", "e", "o"]); // "i" gone, output alias "o" kept
+        assert_eq!(spec.nodes[1].inputs, vec!["l".to_string()]);
+    }
+
+    #[test]
+    fn identity_elim_removes_noop_casts_only() {
+        let mut spec = base_spec(
+            vec![
+                node("l", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                // no-op: float -> to_f32
+                node("lf", names::TO_F32, &["l"], "{}", SpecDType::F32, None),
+                node("e", names::EXP, &["lf"], "{}", SpecDType::F32, None),
+                // real cast: float -> to_i64 must survive
+                node("li", names::TO_I64, &["l"], "{}", SpecDType::I64, None),
+                node("n", names::NOT, &["li"], "{}", SpecDType::I64, None),
+            ],
+            &["e", "n"],
+        );
+        assert!(IdentityElim.run(&mut spec).unwrap());
+        let ids: Vec<&str> = spec.nodes.iter().map(|n| n.id.as_str()).collect();
+        assert_eq!(ids, vec!["l", "e", "li", "n"]);
+        assert_eq!(spec.nodes[1].inputs, vec!["l".to_string()]);
+    }
+
+    #[test]
+    fn const_fold_requires_a_rounded_producer() {
+        let mut spec = base_spec(
+            vec![
+                node("l", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                // producer rounds through f32: foldable
+                node("a", names::MUL_SCALAR, &["l"], r#"{"c": 1.0}"#, SpecDType::F32, None),
+                // producer is the raw request input: NOT foldable (the
+                // multiply's f32 rounding is observable downstream)
+                node("b", names::MUL_SCALAR, &["x"], r#"{"c": 1.0}"#, SpecDType::F32, None),
+            ],
+            &["a", "b"],
+        );
+        assert!(ConstFold.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes[1].op, names::IDENTITY);
+        assert_eq!(spec.nodes[2].op, names::MUL_SCALAR);
+    }
+
+    #[test]
+    fn cse_dedupes_and_aliases_output_duplicates() {
+        let mut spec = base_spec(
+            vec![
+                node("l1", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                node("l2", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                node("e1", names::EXP, &["l1"], "{}", SpecDType::F32, None),
+                node("e2", names::EXP, &["l2"], "{}", SpecDType::F32, None),
+            ],
+            &["e1", "e2"],
+        );
+        assert!(CommonSubexprElim.run(&mut spec).unwrap());
+        let ids: Vec<&str> = spec.nodes.iter().map(|n| n.id.as_str()).collect();
+        assert_eq!(ids, vec!["l1", "e1", "e2"]); // l2 merged into l1
+        // e2 became a rename-aware duplicate of e1; being an output it
+        // survives as an identity alias
+        assert_eq!(spec.nodes[2].op, names::IDENTITY);
+        assert_eq!(spec.nodes[2].inputs, vec!["e1".to_string()]);
+    }
+
+    #[test]
+    fn affine_fuse_collapses_single_use_chains() {
+        let mut spec = base_spec(
+            vec![
+                node("t1", names::ADD_SCALAR, &["x"], r#"{"c": 1.0}"#, SpecDType::F32, None),
+                node("t2", names::MUL_SCALAR, &["t1"], r#"{"c": 2.0}"#, SpecDType::F32, None),
+            ],
+            &["t2"],
+        );
+        assert!(AffineFuse.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 1);
+        let fused = &spec.nodes[0];
+        assert_eq!(fused.id, "t2");
+        assert_eq!(fused.op, names::AFFINE);
+        assert_eq!(fused.inputs, vec!["x".to_string()]);
+        let steps = fused.attrs.req_array("steps").unwrap();
+        assert_eq!(steps.len(), 2);
+        assert_eq!(steps[0].req_str("op").unwrap(), names::ADD_SCALAR);
+        // collapsed (x+1)*2 = 2x + 2
+        assert_eq!(fused.attrs.req_f64("scale").unwrap(), 2.0);
+        assert_eq!(fused.attrs.req_f64("shift").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn affine_fuse_stops_at_multi_use_and_output_boundaries() {
+        let mut spec = base_spec(
+            vec![
+                node("t1", names::ADD_SCALAR, &["x"], r#"{"c": 1.0}"#, SpecDType::F32, None),
+                node("t2", names::MUL_SCALAR, &["t1"], r#"{"c": 2.0}"#, SpecDType::F32, None),
+                // second consumer of t1 pins it
+                node("e", names::EXP, &["t1"], "{}", SpecDType::F32, None),
+            ],
+            &["t2", "e"],
+        );
+        assert!(!AffineFuse.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 3);
+    }
+
+    #[test]
+    fn optimize_is_idempotent() {
+        let spec = base_spec(
+            vec![
+                node("l", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                node("t1", names::ADD_SCALAR, &["l"], r#"{"c": 1.0}"#, SpecDType::F32, None),
+                node("t2", names::MUL_SCALAR, &["t1"], r#"{"c": 2.0}"#, SpecDType::F32, None),
+                node("dead", names::EXP, &["x"], "{}", SpecDType::F32, None),
+                node("o", names::IDENTITY, &["t2"], "{}", SpecDType::F32, None),
+            ],
+            &["o"],
+        );
+        let (once, _) = optimize(spec, OptimizeLevel::Full).unwrap();
+        let (twice, report) = optimize(once.clone(), OptimizeLevel::Full).unwrap();
+        assert_eq!(once, twice, "second optimize run changed the spec:\n{report}");
+        assert!(report.stats.iter().all(|s| !s.changed), "{report}");
+    }
+}

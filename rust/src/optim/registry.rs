@@ -1,0 +1,657 @@
+//! The op registry — the single source of truth for the GraphSpec op
+//! vocabulary.
+//!
+//! Every op name that can appear in a spec is declared here once, with
+//! the metadata the optimizer (and any other spec consumer) needs:
+//! which section it belongs to, its input arity, whether it is pure
+//! (safe to deduplicate / dead-code-eliminate) and whether the
+//! interpreter rounds its float output through f32 (the compiled graph
+//! computes in f32; the interpreter emulates that per op — passes that
+//! *remove* an op must know whether they are removing a rounding step).
+//!
+//! Emission sites (`SpecBuilder`, transformers, estimators) reference
+//! the [`names`] constants instead of scattering string literals; the
+//! tests at the bottom assert that every op the builder can emit is
+//! known to both the registry and [`crate::export::SpecInterpreter`].
+
+use crate::error::{KamaeError, Result};
+use crate::export::GraphSpec;
+
+/// Canonical op-name constants. `rust/src/export/interp.rs` and
+/// `python/compile/model.py` implement exactly this vocabulary.
+pub mod names {
+    // ---- ingress (string-side) ops ------------------------------------
+    pub const HASH64: &str = "hash64";
+    pub const CASE: &str = "case";
+    pub const TRIM: &str = "trim";
+    pub const SUBSTRING: &str = "substring";
+    pub const REPLACE: &str = "replace";
+    pub const REGEX_REPLACE: &str = "regex_replace";
+    pub const REGEX_EXTRACT: &str = "regex_extract";
+    pub const CONCAT: &str = "concat";
+    pub const SPLIT_PAD: &str = "split_pad";
+    pub const JOIN: &str = "join";
+    pub const STRING_MATCH: &str = "string_match";
+    pub const STR_LEN: &str = "str_len";
+    pub const DATE_TO_DAYS: &str = "date_to_days";
+    pub const TIMESTAMP_TO_SECONDS: &str = "timestamp_to_seconds";
+    pub const PAD_LIST: &str = "pad_list";
+    pub const TO_STRING: &str = "to_string";
+    pub const PARSE_NUMBER: &str = "parse_number";
+
+    // ---- graph (numeric) ops ------------------------------------------
+    pub const IDENTITY: &str = "identity";
+    pub const TO_F32: &str = "to_f32";
+    pub const TO_I64: &str = "to_i64";
+    pub const LOG: &str = "log";
+    pub const LOG1P: &str = "log1p";
+    pub const EXP: &str = "exp";
+    pub const SQRT: &str = "sqrt";
+    pub const ABS: &str = "abs";
+    pub const NEG: &str = "neg";
+    pub const RECIPROCAL: &str = "reciprocal";
+    pub const ROUND: &str = "round";
+    pub const FLOOR: &str = "floor";
+    pub const CEIL: &str = "ceil";
+    pub const SIN: &str = "sin";
+    pub const COS: &str = "cos";
+    pub const TANH: &str = "tanh";
+    pub const SIGMOID: &str = "sigmoid";
+    pub const CLIP: &str = "clip";
+    pub const POW_SCALAR: &str = "pow_scalar";
+    pub const ADD_SCALAR: &str = "add_scalar";
+    pub const SUB_SCALAR: &str = "sub_scalar";
+    pub const MUL_SCALAR: &str = "mul_scalar";
+    pub const DIV_SCALAR: &str = "div_scalar";
+    pub const SCALE_SHIFT: &str = "scale_shift";
+    /// Fused scalar-affine chain (produced by the optimizer, never by
+    /// the builder). `attrs.steps` replays the original chain exactly;
+    /// `attrs.scale`/`attrs.shift` carry the collapsed form for kernels.
+    pub const AFFINE: &str = "affine";
+    pub const ADD: &str = "add";
+    pub const SUB: &str = "sub";
+    pub const MUL: &str = "mul";
+    pub const DIV: &str = "div";
+    pub const POW: &str = "pow";
+    pub const MIN: &str = "min";
+    pub const MAX: &str = "max";
+    pub const MOD: &str = "mod";
+    pub const BUCKETIZE: &str = "bucketize";
+    pub const COLUMNS_AGG: &str = "columns_agg";
+    pub const DATE_PART: &str = "date_part";
+    pub const SUB_I64: &str = "sub_i64";
+    pub const ADD_SCALAR_I64: &str = "add_scalar_i64";
+    pub const FLOORDIV_SCALAR_I64: &str = "floordiv_scalar_i64";
+    pub const COMPARE: &str = "compare";
+    pub const COMPARE_SCALAR: &str = "compare_scalar";
+    pub const EQ_HASH: &str = "eq_hash";
+    pub const BOOL_OP: &str = "bool_op";
+    pub const NOT: &str = "not";
+    pub const SELECT: &str = "select";
+    pub const IS_NAN: &str = "is_nan";
+    pub const ASSEMBLE: &str = "assemble";
+    pub const VECTOR_AT: &str = "vector_at";
+    pub const LIST_SUM: &str = "list_sum";
+    pub const LIST_MEAN: &str = "list_mean";
+    pub const LIST_MIN: &str = "list_min";
+    pub const LIST_MAX: &str = "list_max";
+    pub const LIST_LEN: &str = "list_len";
+    pub const HASH_BUCKET: &str = "hash_bucket";
+    pub const BLOOM_ENCODE: &str = "bloom_encode";
+    pub const VOCAB_LOOKUP: &str = "vocab_lookup";
+    pub const ONE_HOT: &str = "one_hot";
+    pub const SCALE_VEC: &str = "scale_vec";
+    pub const IMPUTE: &str = "impute";
+    pub const COSINE_SIMILARITY: &str = "cosine_similarity";
+    pub const HAVERSINE: &str = "haversine";
+
+    // ---- ops usable in either section ---------------------------------
+    pub const ELEMENT_AT: &str = "element_at";
+    pub const SLICE_LIST: &str = "slice_list";
+}
+
+/// Which spec section an op may appear in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Section {
+    /// String-side, executed by the Rust ingress.
+    Ingress,
+    /// Numeric, compiled/interpreted graph section.
+    Graph,
+    /// Valid in both sections (list addressing works on strings too).
+    Both,
+}
+
+impl Section {
+    pub fn allows_ingress(&self) -> bool {
+        matches!(self, Section::Ingress | Section::Both)
+    }
+
+    pub fn allows_graph(&self) -> bool {
+        matches!(self, Section::Graph | Section::Both)
+    }
+}
+
+/// Input arity of an op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arity {
+    Exact(usize),
+    AtLeast(usize),
+}
+
+impl Arity {
+    pub fn accepts(&self, n: usize) -> bool {
+        match self {
+            Arity::Exact(k) => n == *k,
+            Arity::AtLeast(k) => n >= *k,
+        }
+    }
+}
+
+/// Registry entry for one op.
+#[derive(Debug, Clone, Copy)]
+pub struct OpInfo {
+    pub name: &'static str,
+    pub section: Section,
+    pub arity: Arity,
+    /// Deterministic and side-effect free: safe for CSE and DCE. (All
+    /// current ops are pure; the flag exists so a future stateful op —
+    /// e.g. a request-counter feature — degrades the optimizer safely.)
+    pub pure: bool,
+    /// The interpreter rounds this op's float output through f32 (to
+    /// match the compiled graph's f32 arithmetic). A pass may only fold
+    /// away such an op when its input is already f32-rounded, otherwise
+    /// it would *remove* a rounding step and change downstream bits.
+    pub rounds_f32: bool,
+    /// Member of the scalar-affine family fusable into [`names::AFFINE`].
+    pub affine: bool,
+}
+
+const fn ingress(name: &'static str, arity: Arity) -> OpInfo {
+    OpInfo { name, section: Section::Ingress, arity, pure: true, rounds_f32: false, affine: false }
+}
+
+const fn graph(name: &'static str, arity: Arity, rounds_f32: bool) -> OpInfo {
+    OpInfo { name, section: Section::Graph, arity, pure: true, rounds_f32, affine: false }
+}
+
+const fn graph_affine(name: &'static str) -> OpInfo {
+    OpInfo {
+        name,
+        section: Section::Graph,
+        arity: Arity::Exact(1),
+        pure: true,
+        rounds_f32: true,
+        affine: true,
+    }
+}
+
+const fn both(name: &'static str) -> OpInfo {
+    OpInfo {
+        name,
+        section: Section::Both,
+        arity: Arity::Exact(1),
+        pure: true,
+        rounds_f32: false,
+        affine: false,
+    }
+}
+
+/// The full op vocabulary.
+pub const OPS: &[OpInfo] = &[
+    // ---- ingress ------------------------------------------------------
+    ingress(names::HASH64, Arity::Exact(1)),
+    ingress(names::CASE, Arity::Exact(1)),
+    ingress(names::TRIM, Arity::Exact(1)),
+    ingress(names::SUBSTRING, Arity::Exact(1)),
+    ingress(names::REPLACE, Arity::Exact(1)),
+    ingress(names::REGEX_REPLACE, Arity::Exact(1)),
+    ingress(names::REGEX_EXTRACT, Arity::Exact(1)),
+    ingress(names::CONCAT, Arity::AtLeast(1)),
+    ingress(names::SPLIT_PAD, Arity::Exact(1)),
+    ingress(names::JOIN, Arity::Exact(1)),
+    ingress(names::STRING_MATCH, Arity::Exact(1)),
+    ingress(names::STR_LEN, Arity::Exact(1)),
+    ingress(names::DATE_TO_DAYS, Arity::Exact(1)),
+    ingress(names::TIMESTAMP_TO_SECONDS, Arity::Exact(1)),
+    ingress(names::PAD_LIST, Arity::Exact(1)),
+    ingress(names::TO_STRING, Arity::Exact(1)),
+    ingress(names::PARSE_NUMBER, Arity::Exact(1)),
+    // ---- graph: identity / casts --------------------------------------
+    graph(names::IDENTITY, Arity::Exact(1), false),
+    graph(names::TO_F32, Arity::Exact(1), false),
+    graph(names::TO_I64, Arity::Exact(1), false),
+    // ---- graph: unary float (all round through f32) -------------------
+    graph(names::LOG, Arity::Exact(1), true),
+    graph(names::LOG1P, Arity::Exact(1), true),
+    graph(names::EXP, Arity::Exact(1), true),
+    graph(names::SQRT, Arity::Exact(1), true),
+    graph(names::ABS, Arity::Exact(1), true),
+    graph(names::NEG, Arity::Exact(1), true),
+    graph(names::RECIPROCAL, Arity::Exact(1), true),
+    graph(names::ROUND, Arity::Exact(1), true),
+    graph(names::FLOOR, Arity::Exact(1), true),
+    graph(names::CEIL, Arity::Exact(1), true),
+    graph(names::SIN, Arity::Exact(1), true),
+    graph(names::COS, Arity::Exact(1), true),
+    graph(names::TANH, Arity::Exact(1), true),
+    graph(names::SIGMOID, Arity::Exact(1), true),
+    graph(names::CLIP, Arity::Exact(1), true),
+    graph(names::POW_SCALAR, Arity::Exact(1), true),
+    graph_affine(names::ADD_SCALAR),
+    graph_affine(names::SUB_SCALAR),
+    graph_affine(names::MUL_SCALAR),
+    graph_affine(names::DIV_SCALAR),
+    graph_affine(names::SCALE_SHIFT),
+    graph(names::AFFINE, Arity::Exact(1), true),
+    // ---- graph: binary float ------------------------------------------
+    graph(names::ADD, Arity::Exact(2), true),
+    graph(names::SUB, Arity::Exact(2), true),
+    graph(names::MUL, Arity::Exact(2), true),
+    graph(names::DIV, Arity::Exact(2), true),
+    graph(names::POW, Arity::Exact(2), true),
+    graph(names::MIN, Arity::Exact(2), true),
+    graph(names::MAX, Arity::Exact(2), true),
+    graph(names::MOD, Arity::Exact(2), true),
+    // ---- graph: the rest ----------------------------------------------
+    graph(names::BUCKETIZE, Arity::Exact(1), false),
+    graph(names::COLUMNS_AGG, Arity::AtLeast(1), false),
+    graph(names::DATE_PART, Arity::Exact(1), false),
+    graph(names::SUB_I64, Arity::Exact(2), false),
+    graph(names::ADD_SCALAR_I64, Arity::Exact(1), false),
+    graph(names::FLOORDIV_SCALAR_I64, Arity::Exact(1), false),
+    graph(names::COMPARE, Arity::Exact(2), false),
+    graph(names::COMPARE_SCALAR, Arity::Exact(1), false),
+    graph(names::EQ_HASH, Arity::Exact(1), false),
+    graph(names::BOOL_OP, Arity::Exact(2), false),
+    graph(names::NOT, Arity::Exact(1), false),
+    graph(names::SELECT, Arity::Exact(3), false),
+    graph(names::IS_NAN, Arity::Exact(1), false),
+    graph(names::ASSEMBLE, Arity::AtLeast(1), false),
+    graph(names::VECTOR_AT, Arity::Exact(1), false),
+    graph(names::LIST_SUM, Arity::Exact(1), false),
+    graph(names::LIST_MEAN, Arity::Exact(1), false),
+    graph(names::LIST_MIN, Arity::Exact(1), false),
+    graph(names::LIST_MAX, Arity::Exact(1), false),
+    graph(names::LIST_LEN, Arity::Exact(1), false),
+    graph(names::HASH_BUCKET, Arity::Exact(1), false),
+    graph(names::BLOOM_ENCODE, Arity::Exact(1), false),
+    graph(names::VOCAB_LOOKUP, Arity::Exact(1), false),
+    graph(names::ONE_HOT, Arity::Exact(1), true),
+    graph(names::SCALE_VEC, Arity::Exact(1), true),
+    graph(names::IMPUTE, Arity::Exact(1), true),
+    graph(names::COSINE_SIMILARITY, Arity::Exact(2), true),
+    graph(names::HAVERSINE, Arity::Exact(4), true),
+    // ---- both sections ------------------------------------------------
+    both(names::ELEMENT_AT),
+    both(names::SLICE_LIST),
+];
+
+/// Look up an op by name.
+pub fn lookup(name: &str) -> Option<&'static OpInfo> {
+    OPS.iter().find(|o| o.name == name)
+}
+
+/// Look up an op, erroring with context on unknown names.
+pub fn require(name: &str) -> Result<&'static OpInfo> {
+    lookup(name).ok_or_else(|| KamaeError::Unsupported(format!("op not in registry: {name}")))
+}
+
+/// Structural lint of a spec against the registry: unknown ops, ops in
+/// the wrong section, arity mismatches. Returns human-readable findings
+/// (empty = clean). Unknown ops are reported, not fatal — the optimizer
+/// treats them conservatively (impure, never folded).
+pub fn lint_spec(spec: &GraphSpec) -> Vec<String> {
+    let mut findings = Vec::new();
+    for node in &spec.ingress {
+        match lookup(&node.op) {
+            None => findings.push(format!("ingress node {}: unknown op '{}'", node.id, node.op)),
+            Some(info) => {
+                if !info.section.allows_ingress() {
+                    findings.push(format!(
+                        "ingress node {}: op '{}' is graph-only",
+                        node.id, node.op
+                    ));
+                }
+                if !info.arity.accepts(node.inputs.len()) {
+                    findings.push(format!(
+                        "ingress node {}: op '{}' got {} inputs",
+                        node.id,
+                        node.op,
+                        node.inputs.len()
+                    ));
+                }
+            }
+        }
+    }
+    for node in &spec.nodes {
+        match lookup(&node.op) {
+            None => findings.push(format!("graph node {}: unknown op '{}'", node.id, node.op)),
+            Some(info) => {
+                if !info.section.allows_graph() {
+                    findings.push(format!(
+                        "graph node {}: op '{}' is ingress-only",
+                        node.id, node.op
+                    ));
+                }
+                if !info.arity.accepts(node.inputs.len()) {
+                    findings.push(format!(
+                        "graph node {}: op '{}' got {} inputs",
+                        node.id,
+                        node.op,
+                        node.inputs.len()
+                    ));
+                }
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::{Column, DataFrame, DType};
+    use crate::engine::Dataset;
+    use crate::export::{SpecDType, SpecInput, SpecInterpreter, SpecNode};
+    use crate::pipeline::catalog;
+    use crate::util::json::Json;
+
+    #[test]
+    fn lookup_known_and_unknown() {
+        assert!(lookup(names::HASH_BUCKET).is_some());
+        assert!(lookup(names::AFFINE).is_some());
+        assert!(lookup("definitely_not_an_op").is_none());
+        assert!(require("nope").is_err());
+        // no duplicate names in the table
+        for (i, a) in OPS.iter().enumerate() {
+            for b in &OPS[i + 1..] {
+                assert_ne!(a.name, b.name, "duplicate registry entry");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_name_helpers_are_registered() {
+        use crate::ops::array::ListAgg;
+        use crate::ops::math::{BinOp, UnaryOp};
+        let unary = [
+            UnaryOp::Log { base: None },
+            UnaryOp::Log1p,
+            UnaryOp::Exp,
+            UnaryOp::Sqrt,
+            UnaryOp::Abs,
+            UnaryOp::Neg,
+            UnaryOp::Reciprocal,
+            UnaryOp::Round,
+            UnaryOp::Floor,
+            UnaryOp::Ceil,
+            UnaryOp::Sin,
+            UnaryOp::Cos,
+            UnaryOp::Tanh,
+            UnaryOp::Sigmoid,
+            UnaryOp::Clip { min: None, max: None },
+            UnaryOp::PowScalar { p: 2.0 },
+            UnaryOp::AddScalar { c: 1.0 },
+            UnaryOp::SubScalar { c: 1.0 },
+            UnaryOp::MulScalar { c: 1.0 },
+            UnaryOp::DivScalar { c: 1.0 },
+            UnaryOp::ScaleShift { scale: 1.0, shift: 0.0 },
+        ];
+        for op in unary {
+            let info = require(op.spec_name()).unwrap();
+            assert!(info.section.allows_graph(), "{}", op.spec_name());
+        }
+        for op in [
+            BinOp::Add,
+            BinOp::Sub,
+            BinOp::Mul,
+            BinOp::Div,
+            BinOp::Pow,
+            BinOp::Min,
+            BinOp::Max,
+            BinOp::Mod,
+        ] {
+            assert!(require(op.spec_name()).is_ok(), "{}", op.spec_name());
+        }
+        for agg in [ListAgg::Sum, ListAgg::Mean, ListAgg::Min, ListAgg::Max, ListAgg::Len] {
+            assert!(require(agg.spec_name()).is_ok(), "{}", agg.spec_name());
+        }
+    }
+
+    /// Every op a catalog pipeline can emit is known to the registry and
+    /// sits in the section the builder placed it in.
+    #[test]
+    fn catalog_specs_only_emit_registered_ops() {
+        let specs = [
+            {
+                let df = crate::synth::gen_movielens(&crate::synth::MovieLensConfig {
+                    rows: 800,
+                    ..Default::default()
+                });
+                catalog::movielens_pipeline()
+                    .fit(&Dataset::from_dataframe(df, 2))
+                    .unwrap()
+                    .to_graph_spec_opt(
+                        "m",
+                        catalog::movielens_inputs(),
+                        &catalog::MOVIELENS_OUTPUTS,
+                        crate::optim::OptimizeLevel::None,
+                    )
+                    .unwrap()
+                    .0
+            },
+            {
+                let df = crate::synth::gen_ltr(&crate::synth::LtrConfig {
+                    rows: 800,
+                    ..Default::default()
+                });
+                catalog::ltr_pipeline()
+                    .fit(&Dataset::from_dataframe(df, 2))
+                    .unwrap()
+                    .to_graph_spec_opt(
+                        "l",
+                        catalog::ltr_inputs(),
+                        &catalog::LTR_OUTPUTS,
+                        crate::optim::OptimizeLevel::None,
+                    )
+                    .unwrap()
+                    .0
+            },
+        ];
+        for spec in &specs {
+            let findings = lint_spec(spec);
+            assert!(findings.is_empty(), "{}: {findings:?}", spec.name);
+        }
+    }
+
+    // ---- every registered op is executable by the interpreter ---------
+
+    fn sample_df() -> DataFrame {
+        DataFrame::new(vec![
+            ("s".into(), Column::from_str(vec!["alpha", "beta-1"])),
+            ("ls".into(), Column::from_str_rows(vec![vec!["a", "b"], vec!["c", "d"]])),
+            ("xf".into(), Column::from_f64(vec![1.5, -2.25])),
+            ("yf".into(), Column::from_f64(vec![0.5, 3.0])),
+            ("xi".into(), Column::from_i64(vec![3, 19_876])),
+            ("vf".into(), Column::from_f64_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]])),
+            ("vi".into(), Column::from_i64_rows(vec![vec![1, 2], vec![3, 4]])),
+            ("d".into(), Column::from_str(vec!["2024-01-02", "1999-12-31"])),
+            ("ts".into(), Column::from_str(vec!["2024-01-02 03:04:05", "1999-12-31 23:59:59"])),
+        ])
+        .unwrap()
+    }
+
+    fn sample_inputs() -> Vec<SpecInput> {
+        vec![
+            SpecInput { name: "s".into(), dtype: DType::Str, width: None },
+            SpecInput { name: "ls".into(), dtype: DType::List(Box::new(DType::Str)), width: Some(2) },
+            SpecInput { name: "xf".into(), dtype: DType::F64, width: None },
+            SpecInput { name: "yf".into(), dtype: DType::F64, width: None },
+            SpecInput { name: "xi".into(), dtype: DType::I64, width: None },
+            SpecInput { name: "vf".into(), dtype: DType::List(Box::new(DType::F64)), width: Some(2) },
+            SpecInput { name: "vi".into(), dtype: DType::List(Box::new(DType::I64)), width: Some(2) },
+        ]
+    }
+
+    /// (inputs, attrs-json, out dtype, out width) template for executing
+    /// one graph-section op against [`sample_df`]. Adding an op to the
+    /// registry without a template here fails the coverage test — by
+    /// design: the interpreter (and model.py) must learn it too.
+    fn graph_template(op: &str) -> (Vec<&'static str>, &'static str, SpecDType, Option<usize>) {
+        use SpecDType::{F32, I64};
+        match op {
+            "identity" | "to_f32" => (vec!["xf"], "{}", F32, None),
+            "to_i64" => (vec!["xf"], "{}", I64, None),
+            "log" => (vec!["xf"], r#"{"base": 10.0}"#, F32, None),
+            "log1p" | "exp" | "sqrt" | "abs" | "neg" | "reciprocal" | "round" | "floor"
+            | "ceil" | "sin" | "cos" | "tanh" | "sigmoid" => (vec!["xf"], "{}", F32, None),
+            "clip" => (vec!["xf"], r#"{"min": -1.0, "max": 1.0}"#, F32, None),
+            "pow_scalar" => (vec!["xf"], r#"{"p": 2.0}"#, F32, None),
+            "add_scalar" | "sub_scalar" | "mul_scalar" | "div_scalar" => {
+                (vec!["xf"], r#"{"c": 2.5}"#, F32, None)
+            }
+            "scale_shift" => (vec!["xf"], r#"{"scale": 2.0, "shift": 1.0}"#, F32, None),
+            "affine" => (
+                vec!["xf"],
+                r#"{"steps": [{"op": "mul_scalar", "c": 2.0}, {"op": "add_scalar", "c": 1.0}], "scale": 2.0, "shift": 1.0}"#,
+                F32,
+                None,
+            ),
+            "add" | "sub" | "mul" | "div" | "pow" | "min" | "max" | "mod" => {
+                (vec!["xf", "yf"], "{}", F32, None)
+            }
+            "bucketize" => (vec!["xf"], r#"{"splits": [0.0, 1.0]}"#, I64, None),
+            "columns_agg" => (vec!["xf", "yf"], r#"{"agg": "mean"}"#, F32, None),
+            "date_part" => (vec!["xi"], r#"{"part": "weekday"}"#, I64, None),
+            "sub_i64" => (vec!["xi", "xi"], "{}", I64, None),
+            "add_scalar_i64" | "floordiv_scalar_i64" => (vec!["xi"], r#"{"c": 7}"#, I64, None),
+            "compare" => (vec!["xf", "yf"], r#"{"op": "lt"}"#, I64, None),
+            "compare_scalar" => (vec!["xf"], r#"{"op": "ge", "value": 0.0}"#, I64, None),
+            "eq_hash" => (vec!["xi"], r#"{"value_hash": 3}"#, I64, None),
+            "bool_op" => (vec!["xi", "xi"], r#"{"op": "and"}"#, I64, None),
+            "not" | "is_nan" => (vec!["xi"], "{}", I64, None),
+            "select" => (vec!["xi", "xf", "yf"], "{}", F32, None),
+            "assemble" => (vec!["xf", "yf"], "{}", F32, Some(2)),
+            "vector_at" => (vec!["vf"], r#"{"index": 1}"#, F32, None),
+            "list_sum" | "list_mean" | "list_min" | "list_max" => (vec!["vf"], "{}", F32, None),
+            "list_len" => (vec!["vf"], "{}", I64, None),
+            "element_at" => (vec!["vf"], r#"{"index": -1}"#, F32, None),
+            "slice_list" => (vec!["vf"], r#"{"start": 0, "len": 1}"#, F32, Some(1)),
+            "hash_bucket" => (vec!["xi"], r#"{"num_bins": 16}"#, I64, None),
+            "bloom_encode" => (vec!["xi"], r#"{"num_hashes": 2, "num_bins": 32}"#, I64, Some(2)),
+            "vocab_lookup" => (
+                vec!["xi"],
+                r#"{"vocab_hashes": [3], "vocab_ranks": [0], "num_oov": 1, "base": 0}"#,
+                I64,
+                None,
+            ),
+            "one_hot" => (
+                vec!["xi"],
+                r#"{"vocab_hashes": [3], "vocab_ranks": [0], "num_oov": 1}"#,
+                F32,
+                Some(2),
+            ),
+            "scale_vec" => (vec!["vf"], r#"{"scale": [1.0, 2.0], "shift": [0.0, 1.0]}"#, F32, Some(2)),
+            "impute" => (vec!["xf"], r#"{"fill": 0.0}"#, F32, None),
+            "cosine_similarity" => (vec!["vf", "vf"], "{}", F32, None),
+            "haversine" => (vec!["xf", "yf", "xf", "yf"], "{}", F32, None),
+            other => panic!("graph op '{other}' has no interpreter-coverage template"),
+        }
+    }
+
+    /// (input, attrs-json, out engine dtype, out width) template for one
+    /// ingress op.
+    fn ingress_template(op: &str) -> (&'static str, &'static str, DType, Option<usize>) {
+        match op {
+            "hash64" => ("s", "{}", DType::I64, None),
+            "case" => ("s", r#"{"mode": "upper"}"#, DType::Str, None),
+            "trim" | "to_string" => ("s", "{}", DType::Str, None),
+            "substring" => ("s", r#"{"start": 0, "len": 2}"#, DType::Str, None),
+            "replace" => ("s", r#"{"from": "a", "to": "b"}"#, DType::Str, None),
+            "regex_replace" => ("s", r#"{"pattern": "[0-9]+", "rep": "#"}"#, DType::Str, None),
+            "regex_extract" => ("s", r#"{"pattern": "([a-z]+)", "group": 1}"#, DType::Str, None),
+            "concat" => ("s", r#"{"separator": "-"}"#, DType::Str, None),
+            "split_pad" => (
+                "s",
+                r#"{"separator": "-", "list_length": 2, "default": "PAD"}"#,
+                DType::List(Box::new(DType::Str)),
+                Some(2),
+            ),
+            "join" => ("ls", r#"{"separator": ","}"#, DType::Str, None),
+            "string_match" => ("s", r#"{"mode": "contains", "needle": "a"}"#, DType::Bool, None),
+            "str_len" => ("s", "{}", DType::I64, None),
+            "date_to_days" => ("d", "{}", DType::I64, None),
+            "timestamp_to_seconds" => ("ts", "{}", DType::I64, None),
+            "element_at" => ("ls", r#"{"index": 0}"#, DType::Str, None),
+            "slice_list" => ("ls", r#"{"start": 0, "len": 1}"#, DType::List(Box::new(DType::Str)), Some(1)),
+            "pad_list" => ("ls", r#"{"len": 3, "default": "PAD"}"#, DType::List(Box::new(DType::Str)), Some(3)),
+            "parse_number" => ("d", "{}", DType::F64, None),
+            other => panic!("ingress op '{other}' has no interpreter-coverage template"),
+        }
+    }
+
+    #[test]
+    fn every_registered_graph_op_runs_in_the_interpreter() {
+        let df = sample_df();
+        for info in OPS.iter().filter(|o| o.section.allows_graph()) {
+            let (inputs, attrs, dtype, width) = graph_template(info.name);
+            assert!(
+                info.arity.accepts(inputs.len()),
+                "{}: template arity disagrees with registry",
+                info.name
+            );
+            let spec = GraphSpec {
+                name: format!("op_{}", info.name),
+                inputs: sample_inputs(),
+                ingress: vec![],
+                graph_inputs: inputs.iter().map(|s| s.to_string()).collect(),
+                nodes: vec![SpecNode {
+                    id: "out".into(),
+                    op: info.name.into(),
+                    inputs: inputs.iter().map(|s| s.to_string()).collect(),
+                    attrs: Json::parse(attrs).unwrap(),
+                    dtype,
+                    width,
+                }],
+                outputs: vec!["out".into()],
+            };
+            let got = SpecInterpreter::new(spec).run(&df);
+            assert!(got.is_ok(), "graph op {} failed: {:?}", info.name, got.err());
+            assert_eq!(got.unwrap().len(), 1, "{}", info.name);
+        }
+    }
+
+    #[test]
+    fn every_registered_ingress_op_runs_in_the_interpreter() {
+        let df = sample_df();
+        for info in OPS.iter().filter(|o| o.section.allows_ingress()) {
+            let (input, attrs, out_dtype, width) = ingress_template(info.name);
+            let spec = GraphSpec {
+                name: format!("ing_{}", info.name),
+                inputs: vec![
+                    SpecInput { name: "s".into(), dtype: DType::Str, width: None },
+                    SpecInput {
+                        name: "ls".into(),
+                        dtype: DType::List(Box::new(DType::Str)),
+                        width: Some(2),
+                    },
+                    SpecInput { name: "d".into(), dtype: DType::Str, width: None },
+                    SpecInput { name: "ts".into(), dtype: DType::Str, width: None },
+                ],
+                ingress: vec![SpecNode {
+                    id: "out".into(),
+                    op: info.name.into(),
+                    inputs: vec![input.to_string()],
+                    attrs: Json::parse(attrs).unwrap(),
+                    dtype: SpecDType::for_engine(&out_dtype),
+                    width,
+                }],
+                graph_inputs: vec![],
+                nodes: vec![],
+                outputs: vec![],
+            };
+            let got = SpecInterpreter::new(spec).run(&df);
+            assert!(got.is_ok(), "ingress op {} failed: {:?}", info.name, got.err());
+        }
+    }
+}

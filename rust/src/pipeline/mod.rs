@@ -18,6 +18,7 @@ use crate::dataframe::DataFrame;
 use crate::engine::Dataset;
 use crate::error::{KamaeError, Result};
 use crate::export::{GraphSpec, SpecBuilder, SpecInput};
+use crate::optim::{OptReport, OptimizeLevel};
 use crate::util::json::Json;
 
 /// A configured column transformation. Implementations live in
@@ -139,18 +140,33 @@ impl PipelineModel {
     ///
     /// `inputs` is the serving input schema (Listing 1's
     /// `tf_input_schema`); `outputs` the columns the compiled graph must
-    /// return.
+    /// return. The exported spec is optimized at the default level
+    /// ([`OptimizeLevel::Full`] — bit-exact rewrites only); use
+    /// [`Self::to_graph_spec_opt`] with [`OptimizeLevel::None`] to get
+    /// the builder's graph verbatim.
     pub fn to_graph_spec(
         &self,
         name: &str,
         inputs: Vec<SpecInput>,
         outputs: &[&str],
     ) -> Result<GraphSpec> {
+        Ok(self.to_graph_spec_opt(name, inputs, outputs, OptimizeLevel::default())?.0)
+    }
+
+    /// [`Self::to_graph_spec`] with an explicit optimization level,
+    /// returning the per-pass [`OptReport`] alongside the spec.
+    pub fn to_graph_spec_opt(
+        &self,
+        name: &str,
+        inputs: Vec<SpecInput>,
+        outputs: &[&str],
+        level: OptimizeLevel,
+    ) -> Result<(GraphSpec, OptReport)> {
         let mut b = SpecBuilder::new(name, inputs)?;
         for t in &self.stages {
             t.spec_nodes(&mut b)?;
         }
-        b.finish(outputs)
+        crate::optim::optimize(b.finish(outputs)?, level)
     }
 
     // ---- persistence ---------------------------------------------------

@@ -4,6 +4,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::bench::{fmt_ns, percentile};
+use crate::util::json::Json;
 
 /// Thread-safe latency sample collector.
 pub struct LatencyRecorder {
@@ -66,6 +67,34 @@ pub struct ServeReport {
     pub cost_cpu_s_per_1k: f64,
 }
 
+impl ServeReport {
+    /// Machine-readable benchmark record, for appending to the
+    /// `BENCH_*.json` perf-trajectory files. Report names follow the
+    /// `<spec>/<mode>` convention (see [`crate::serving::bench_serve`]);
+    /// both halves are emitted as separate fields so trajectory tooling
+    /// never has to re-parse them.
+    pub fn to_json(&self) -> Json {
+        let (spec, mode) = match self.name.split_once('/') {
+            Some((s, m)) => (s, m),
+            None => (self.name.as_str(), ""),
+        };
+        let mut j = Json::object();
+        j.set("name", self.name.clone());
+        j.set("spec", spec);
+        j.set("mode", mode);
+        j.set("requests", self.requests);
+        j.set("wall_secs", self.wall_secs);
+        j.set("throughput_rps", self.throughput_rps);
+        j.set("mean_ns", self.mean_ns);
+        j.set("p50_ns", self.p50_ns);
+        j.set("p95_ns", self.p95_ns);
+        j.set("p99_ns", self.p99_ns);
+        j.set("busy_secs", self.busy_secs);
+        j.set("cost_cpu_s_per_1k", self.cost_cpu_s_per_1k);
+        j
+    }
+}
+
 impl std::fmt::Display for ServeReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "=== serving report: {} ===", self.name)?;
@@ -99,5 +128,20 @@ mod tests {
         assert!((rep.cost_cpu_s_per_1k - 22.0).abs() < 0.01);
         let text = rep.to_string();
         assert!(text.contains("p99"));
+    }
+
+    #[test]
+    fn report_json_record() {
+        let r = LatencyRecorder::new();
+        r.record(Duration::from_millis(2));
+        let rep = r.report("ltr/interpreted", 1, Duration::from_secs(1), Duration::from_millis(2));
+        let j = rep.to_json();
+        assert_eq!(j.req_str("spec").unwrap(), "ltr");
+        assert_eq!(j.req_str("mode").unwrap(), "interpreted");
+        assert_eq!(j.req_i64("requests").unwrap(), 1);
+        assert!(j.req_f64("p99_ns").unwrap() > 0.0);
+        // record must survive a JSON round trip (trajectory files)
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
     }
 }

@@ -29,18 +29,43 @@ use std::path::Path;
 use crate::dataframe::DataFrame;
 use crate::error::{KamaeError, Result};
 use crate::export::GraphSpec;
+use crate::optim::OptimizeLevel;
 use crate::pipeline::PipelineModel;
 use crate::util::rng::Rng;
 
 /// Load a backend for `spec_name` from an artifacts directory laid out
 /// by `make artifacts` (`specs/<name>.json`, `specs/<name>.model.json`,
 /// `<name>@b<batch>.hlo.txt`).
+///
+/// Specs are optimized at load time at the default level, so the
+/// interpreted and mleap ablations benefit from the same graph cleanup
+/// the compiled path received at export time (and legacy unoptimized
+/// spec files get it retroactively). Use [`load_backend_with`] to
+/// control the level.
 pub fn load_backend(artifacts: &Path, spec_name: &str, mode: &str) -> Result<Box<dyn Backend>> {
+    load_backend_with(artifacts, spec_name, mode, OptimizeLevel::default())
+}
+
+/// [`load_backend`] with an explicit load-time optimization level.
+///
+/// The compiled mode never re-optimizes: its positional tensor contract
+/// is against the HLO artifacts compiled from the spec JSON exactly as
+/// it sits on disk.
+pub fn load_backend_with(
+    artifacts: &Path,
+    spec_name: &str,
+    mode: &str,
+    level: OptimizeLevel,
+) -> Result<Box<dyn Backend>> {
     let spec = GraphSpec::load(&artifacts.join("specs").join(format!("{spec_name}.json")))?;
     match mode {
         "compiled" => Ok(Box::new(CompiledBackend::load(artifacts, spec)?)),
-        "interpreted" => Ok(Box::new(InterpretedBackend::new(spec))),
+        "interpreted" => {
+            let (spec, _) = crate::optim::optimize(spec, level)?;
+            Ok(Box::new(InterpretedBackend::new(spec)))
+        }
         "mleap" => {
+            let (spec, _) = crate::optim::optimize(spec, level)?;
             let model = PipelineModel::load(
                 &artifacts.join("specs").join(format!("{spec_name}.model.json")),
             )?;

@@ -6,6 +6,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::ops::array::{self, ListAgg};
 use crate::pipeline::Transformer;
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::common::{spec_out_name, spec_output_cast, Io};
 
@@ -46,7 +47,7 @@ impl Transformer for VectorAssembleTransformer {
         let inputs: Vec<&str> = self.io.input_cols.iter().map(String::as_str).collect();
         let w = inputs.len();
         b.graph_node(
-            "assemble",
+            op_names::ASSEMBLE,
             &inputs,
             Json::object(),
             &self.io.output_col,
@@ -116,7 +117,7 @@ impl Transformer for VectorDisassembleTransformer {
         for (i, name) in self.output_cols.iter().enumerate() {
             let mut attrs = Json::object();
             attrs.set("index", i);
-            b.graph_node("vector_at", &[self.io.input()], attrs, name, SpecDType::F32, None)?;
+            b.graph_node(op_names::VECTOR_AT, &[self.io.input()], attrs, name, SpecDType::F32, None)?;
         }
         Ok(())
     }
@@ -245,10 +246,10 @@ impl Transformer for ElementAtTransformer {
         attrs.set("index", self.index);
         if is_string {
             // element extraction of a string list is still ingress work
-            b.ingress_node("element_at", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+            b.ingress_node(op_names::ELEMENT_AT, &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
         } else {
             let out = spec_out_name(&self.io, dtype);
-            b.graph_node("element_at", &[self.io.input()], attrs, &out, dtype, None)?;
+            b.graph_node(op_names::ELEMENT_AT, &[self.io.input()], attrs, &out, dtype, None)?;
             spec_output_cast(b, &self.io, &out, dtype, None)
         }
     }
@@ -310,7 +311,7 @@ impl Transformer for ListSliceTransformer {
         let is_string = matches!(&in_dtype, DType::List(i) if matches!(**i, DType::Str));
         if is_string {
             b.ingress_node(
-                "slice_list",
+                op_names::SLICE_LIST,
                 &[self.io.input()],
                 attrs,
                 &self.io.output_col,
@@ -322,7 +323,7 @@ impl Transformer for ListSliceTransformer {
                 DType::List(inner) => SpecDType::for_engine(inner),
                 _ => SpecDType::F32,
             };
-            b.graph_node("slice_list", &[self.io.input()], attrs, &self.io.output_col, dtype, Some(out_width))?;
+            b.graph_node(op_names::SLICE_LIST, &[self.io.input()], attrs, &self.io.output_col, dtype, Some(out_width))?;
             Ok(())
         }
     }
@@ -385,7 +386,7 @@ impl Transformer for CosineSimilarityTransformer {
         }
         let out = spec_out_name(&self.io, SpecDType::F32);
         b.graph_node(
-            "cosine_similarity",
+            op_names::COSINE_SIMILARITY,
             &[&self.io.input_cols[0], &self.io.input_cols[1]],
             Json::object(),
             &out,
@@ -445,7 +446,7 @@ impl Transformer for ListPadTransformer {
         // padding is ingress work for strings; for numerics it is a graph
         // op only if the input is already fixed-width — otherwise it is
         // the op that *makes* it fixed-width, i.e. ingress.
-        b.ingress_node("pad_list", &[self.io.input()], attrs, &self.io.output_col, in_dtype, Some(self.len))
+        b.ingress_node(op_names::PAD_LIST, &[self.io.input()], attrs, &self.io.output_col, in_dtype, Some(self.len))
     }
 
     fn save(&self) -> Json {

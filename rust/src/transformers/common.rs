@@ -160,8 +160,8 @@ pub fn spec_output_cast(
     // rename: produced op wrote to a temp name `<out>__pre`; here we cast
     // into the real output name.
     let op = match target_spec {
-        SpecDType::I64 => "to_i64",
-        SpecDType::F32 => "to_f32",
+        SpecDType::I64 => crate::optim::names::TO_I64,
+        SpecDType::F32 => crate::optim::names::TO_F32,
     };
     b.graph_node(op, &[produced], Json::object(), &io.output_col, target_spec, width)?;
     Ok(())

@@ -12,6 +12,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::ops::date::{self, DatePart};
 use crate::pipeline::Transformer;
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::common::{spec_out_name, spec_output_cast, Io};
 
@@ -44,7 +45,7 @@ impl Transformer for DateParseTransformer {
     }
 
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
-        b.ingress_node("date_to_days", &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
+        b.ingress_node(op_names::DATE_TO_DAYS, &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
     }
 
     fn save(&self) -> Json {
@@ -87,7 +88,7 @@ impl Transformer for TimestampParseTransformer {
     }
 
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
-        b.ingress_node("timestamp_to_seconds", &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
+        b.ingress_node(op_names::TIMESTAMP_TO_SECONDS, &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
     }
 
     fn save(&self) -> Json {
@@ -135,7 +136,7 @@ impl Transformer for DatePartTransformer {
         let mut attrs = Json::object();
         attrs.set("part", self.part.spec_name());
         let out = spec_out_name(&self.io, SpecDType::I64);
-        b.graph_node("date_part", &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
+        b.graph_node(op_names::DATE_PART, &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
     }
 
@@ -191,7 +192,7 @@ impl Transformer for DateDiffTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let out = spec_out_name(&self.io, SpecDType::I64);
         b.graph_node(
-            "sub_i64",
+            op_names::SUB_I64,
             &[&self.io.input_cols[0], &self.io.input_cols[1]],
             Json::object(),
             &out,
@@ -247,7 +248,7 @@ impl Transformer for DateAddTransformer {
         let mut attrs = Json::object();
         attrs.set("c", self.days);
         let out = spec_out_name(&self.io, SpecDType::I64);
-        b.graph_node("add_scalar_i64", &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
+        b.graph_node(op_names::ADD_SCALAR_I64, &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
     }
 
@@ -300,7 +301,7 @@ impl Transformer for SecondsToDaysTransformer {
         let out = spec_out_name(&self.io, SpecDType::I64);
         let mut attrs = Json::object();
         attrs.set("c", 86_400i64);
-        b.graph_node("floordiv_scalar_i64", &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
+        b.graph_node(op_names::FLOORDIV_SCALAR_I64, &[self.io.input()], attrs, &out, SpecDType::I64, None)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, None)
     }
 

@@ -11,6 +11,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::ops::hash;
 use crate::pipeline::Transformer;
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::common::Io;
 
@@ -54,7 +55,7 @@ impl Transformer for HashIndexTransformer {
         let href = hash_ref(b, self.io.input(), width)?;
         let mut attrs = Json::object();
         attrs.set("num_bins", self.num_bins);
-        b.graph_node("hash_bucket", &[&href], attrs, &self.io.output_col, SpecDType::I64, width)?;
+        b.graph_node(op_names::HASH_BUCKET, &[&href], attrs, &self.io.output_col, SpecDType::I64, width)?;
         Ok(())
     }
 
@@ -117,7 +118,7 @@ impl Transformer for BloomEncodeTransformer {
         let mut attrs = Json::object();
         attrs.set("num_hashes", self.num_hashes).set("num_bins", self.num_bins);
         b.graph_node(
-            "bloom_encode",
+            op_names::BLOOM_ENCODE,
             &[&href],
             attrs,
             &self.io.output_col,
@@ -166,7 +167,7 @@ pub(crate) fn hash_ref(
             } else {
                 DType::I64
             };
-            b.ingress_node("hash64", &[col], Json::object(), &hashed, out_dtype, width)?;
+            b.ingress_node(op_names::HASH64, &[col], Json::object(), &hashed, out_dtype, width)?;
         }
         b.graph_ref(&hashed)
     }

@@ -6,6 +6,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::ops::logical::{self, BoolOp, CmpOp};
 use crate::pipeline::Transformer;
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::common::{spec_out_name, spec_output_cast, Io};
 
@@ -44,7 +45,7 @@ impl Transformer for CompareTransformer {
         let mut attrs = Json::object();
         attrs.set("op", self.op.spec_name());
         b.graph_node(
-            "compare",
+            op_names::COMPARE,
             &[&self.io.input_cols[0], &self.io.input_cols[1]],
             attrs,
             &out,
@@ -104,7 +105,7 @@ impl Transformer for CompareConstantTransformer {
         let out = spec_out_name(&self.io, SpecDType::I64);
         let mut attrs = Json::object();
         attrs.set("op", self.op.spec_name()).set("value", self.value);
-        b.graph_node("compare_scalar", &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
+        b.graph_node(op_names::COMPARE_SCALAR, &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
     }
 
@@ -160,7 +161,7 @@ impl Transformer for StringEqualsTransformer {
         let out = spec_out_name(&self.io, SpecDType::I64);
         let mut attrs = Json::object();
         attrs.set("value_hash", crate::ops::hash::fnv1a64(&self.value));
-        b.graph_node("eq_hash", &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
+        b.graph_node(op_names::EQ_HASH, &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
     }
 
@@ -214,7 +215,7 @@ impl Transformer for BooleanTransformer {
         let mut attrs = Json::object();
         attrs.set("op", self.op.spec_name());
         b.graph_node(
-            "bool_op",
+            op_names::BOOL_OP,
             &[&self.io.input_cols[0], &self.io.input_cols[1]],
             attrs,
             &out,
@@ -270,7 +271,7 @@ impl Transformer for NotTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let width = b.width(self.io.input())?;
         let out = spec_out_name(&self.io, SpecDType::I64);
-        b.graph_node("not", &[self.io.input()], Json::object(), &out, SpecDType::I64, width)?;
+        b.graph_node(op_names::NOT, &[self.io.input()], Json::object(), &out, SpecDType::I64, width)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
     }
 
@@ -323,7 +324,7 @@ impl Transformer for IfThenElseTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let out = spec_out_name(&self.io, SpecDType::F32);
         b.graph_node(
-            "select",
+            op_names::SELECT,
             &[
                 &self.io.input_cols[0],
                 &self.io.input_cols[1],
@@ -386,7 +387,7 @@ impl Transformer for IsNullTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let width = b.width(self.io.input())?;
         let out = spec_out_name(&self.io, SpecDType::I64);
-        b.graph_node("is_nan", &[self.io.input()], Json::object(), &out, SpecDType::I64, width)?;
+        b.graph_node(op_names::IS_NAN, &[self.io.input()], Json::object(), &out, SpecDType::I64, width)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
     }
 

@@ -6,6 +6,7 @@ use crate::export::{SpecBuilder, SpecDType};
 use crate::ops::math::{self, BinOp, UnaryOp};
 use crate::pipeline::Transformer;
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::common::{spec_out_name, spec_output_cast, Io};
 
@@ -359,7 +360,7 @@ impl Transformer for BucketizeTransformer {
         let mut attrs = Json::object();
         attrs.set("splits", Json::Array(self.splits.iter().map(|&s| Json::Float(s)).collect()));
         let out = spec_out_name(&self.io, SpecDType::I64);
-        b.graph_node("bucketize", &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
+        b.graph_node(op_names::BUCKETIZE, &[self.io.input()], attrs, &out, SpecDType::I64, width)?;
         spec_output_cast(b, &self.io, &out, SpecDType::I64, width)
     }
 
@@ -475,7 +476,7 @@ impl Transformer for ColumnsAggTransformer {
         let mut attrs = Json::object();
         attrs.set("agg", self.agg.name());
         let out = spec_out_name(&self.io, SpecDType::F32);
-        b.graph_node("columns_agg", &inputs, attrs, &out, SpecDType::F32, None)?;
+        b.graph_node(op_names::COLUMNS_AGG, &inputs, attrs, &out, SpecDType::F32, None)?;
         spec_output_cast(b, &self.io, &out, SpecDType::F32, None)
     }
 

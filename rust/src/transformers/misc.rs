@@ -5,6 +5,7 @@ use crate::error::Result;
 use crate::export::{SpecBuilder, SpecDType};
 use crate::pipeline::Transformer;
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::common::{spec_out_name, spec_output_cast, Io};
 
@@ -42,7 +43,7 @@ impl Transformer for HaversineTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let inputs: Vec<&str> = self.io.input_cols.iter().map(String::as_str).collect();
         let out = spec_out_name(&self.io, SpecDType::F32);
-        b.graph_node("haversine", &inputs, Json::object(), &out, SpecDType::F32, None)?;
+        b.graph_node(op_names::HAVERSINE, &inputs, Json::object(), &out, SpecDType::F32, None)?;
         spec_output_cast(b, &self.io, &out, SpecDType::F32, None)
     }
 
@@ -92,7 +93,7 @@ impl Transformer for CastTransformer {
         match &self.to {
             // cast to string: ingress op (canonical string form)
             DType::Str => b.ingress_node(
-                "to_string",
+                op_names::TO_STRING,
                 &[self.io.input()],
                 Json::object(),
                 &self.io.output_col,
@@ -103,15 +104,15 @@ impl Transformer for CastTransformer {
             to => {
                 let target = SpecDType::for_engine(to);
                 let op = match target {
-                    SpecDType::I64 => "to_i64",
-                    SpecDType::F32 => "to_f32",
+                    SpecDType::I64 => op_names::TO_I64,
+                    SpecDType::F32 => op_names::TO_F32,
                 };
                 // string inputs cast to number stay ingress (parsing)
                 let is_string_in = matches!(in_dtype, DType::Str)
                     || matches!(&in_dtype, DType::List(i) if matches!(**i, DType::Str));
                 if is_string_in {
                     b.ingress_node(
-                        "parse_number",
+                        op_names::PARSE_NUMBER,
                         &[self.io.input()],
                         Json::object(),
                         &self.io.output_col,

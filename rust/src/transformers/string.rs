@@ -7,6 +7,7 @@ use crate::ops::regex::Regex;
 use crate::ops::string_ops::{self, CaseMode, MatchMode};
 use crate::pipeline::Transformer;
 use crate::util::json::Json;
+use crate::optim::names as op_names;
 
 use super::common::Io;
 
@@ -62,7 +63,7 @@ impl Transformer for StringCaseTransformer {
         let dt = b.engine_dtype(self.io.input())?.clone();
         let mut attrs = Json::object();
         attrs.set("mode", case_name(self.mode));
-        b.ingress_node("case", &[self.io.input()], attrs, &self.io.output_col, dt, width)
+        b.ingress_node(op_names::CASE, &[self.io.input()], attrs, &self.io.output_col, dt, width)
     }
 
     fn save(&self) -> Json {
@@ -111,7 +112,7 @@ impl Transformer for TrimTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let width = b.width(self.io.input())?;
         let dt = b.engine_dtype(self.io.input())?.clone();
-        b.ingress_node("trim", &[self.io.input()], Json::object(), &self.io.output_col, dt, width)
+        b.ingress_node(op_names::TRIM, &[self.io.input()], Json::object(), &self.io.output_col, dt, width)
     }
 
     fn save(&self) -> Json {
@@ -158,7 +159,7 @@ impl Transformer for SubstringTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let mut attrs = Json::object();
         attrs.set("start", self.start).set("len", self.len);
-        b.ingress_node("substring", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+        b.ingress_node(op_names::SUBSTRING, &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
     }
 
     fn save(&self) -> Json {
@@ -216,7 +217,7 @@ impl Transformer for StringReplaceTransformer {
         let dt = b.engine_dtype(self.io.input())?.clone();
         let mut attrs = Json::object();
         attrs.set("from", self.from.clone()).set("to", self.to.clone());
-        b.ingress_node("replace", &[self.io.input()], attrs, &self.io.output_col, dt, width)
+        b.ingress_node(op_names::REPLACE, &[self.io.input()], attrs, &self.io.output_col, dt, width)
     }
 
     fn save(&self) -> Json {
@@ -276,7 +277,7 @@ impl Transformer for RegexReplaceTransformer {
         let dt = b.engine_dtype(self.io.input())?.clone();
         let mut attrs = Json::object();
         attrs.set("pattern", self.pattern.clone()).set("rep", self.rep.clone());
-        b.ingress_node("regex_replace", &[self.io.input()], attrs, &self.io.output_col, dt, width)
+        b.ingress_node(op_names::REGEX_REPLACE, &[self.io.input()], attrs, &self.io.output_col, dt, width)
     }
 
     fn save(&self) -> Json {
@@ -332,7 +333,7 @@ impl Transformer for RegexExtractTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let mut attrs = Json::object();
         attrs.set("pattern", self.pattern.clone()).set("group", self.group);
-        b.ingress_node("regex_extract", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+        b.ingress_node(op_names::REGEX_EXTRACT, &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
     }
 
     fn save(&self) -> Json {
@@ -386,7 +387,7 @@ impl Transformer for StringConcatTransformer {
         let inputs: Vec<&str> = self.io.input_cols.iter().map(String::as_str).collect();
         let mut attrs = Json::object();
         attrs.set("separator", self.separator.clone());
-        b.ingress_node("concat", &inputs, attrs, &self.io.output_col, DType::Str, None)
+        b.ingress_node(op_names::CONCAT, &inputs, attrs, &self.io.output_col, DType::Str, None)
     }
 
     fn save(&self) -> Json {
@@ -451,7 +452,7 @@ impl Transformer for StringToStringListTransformer {
             .set("list_length", self.list_length)
             .set("default", self.default_value.clone());
         b.ingress_node(
-            "split_pad",
+            op_names::SPLIT_PAD,
             &[self.io.input()],
             attrs,
             &self.io.output_col,
@@ -516,7 +517,7 @@ impl Transformer for StringListToStringTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let mut attrs = Json::object();
         attrs.set("separator", self.separator.clone());
-        b.ingress_node("join", &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
+        b.ingress_node(op_names::JOIN, &[self.io.input()], attrs, &self.io.output_col, DType::Str, None)
     }
 
     fn save(&self) -> Json {
@@ -589,7 +590,7 @@ impl Transformer for StringContainsTransformer {
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
         let mut attrs = Json::object();
         attrs.set("needle", self.needle.clone()).set("mode", match_name(self.mode));
-        b.ingress_node("string_match", &[self.io.input()], attrs, &self.io.output_col, DType::Bool, None)
+        b.ingress_node(op_names::STRING_MATCH, &[self.io.input()], attrs, &self.io.output_col, DType::Bool, None)
     }
 
     fn save(&self) -> Json {
@@ -637,7 +638,7 @@ impl Transformer for StringLengthTransformer {
     }
 
     fn spec_nodes(&self, b: &mut SpecBuilder) -> Result<()> {
-        b.ingress_node("str_len", &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
+        b.ingress_node(op_names::STR_LEN, &[self.io.input()], Json::object(), &self.io.output_col, DType::I64, None)
     }
 
     fn save(&self) -> Json {

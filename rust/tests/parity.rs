@@ -156,6 +156,131 @@ fn fitted_pipelines_round_trip_through_json() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// optimizer parity — no artifacts needed: pipelines are fitted in-test.
+// The optimizer's contract is stronger than the C1 float tolerance:
+// optimized and unoptimized specs must agree BIT-FOR-BIT under the
+// interpreter, i64 and f32 alike.
+
+fn assert_tensors_bit_identical(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape");
+    match (&a.data, &b.data) {
+        (TensorData::I64(x), TensorData::I64(y)) => {
+            assert_eq!(x, y, "{what}: i64 values must match bit-for-bit");
+        }
+        (TensorData::F32(x), TensorData::F32(y)) => {
+            for (i, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+                assert!(
+                    p.to_bits() == q.to_bits() || (p.is_nan() && q.is_nan()),
+                    "{what}[{i}]: {p:?} vs {q:?} (bits {:#010x} vs {:#010x})",
+                    p.to_bits(),
+                    q.to_bits()
+                );
+            }
+        }
+        other => panic!("{what}: dtype mismatch {other:?}"),
+    }
+}
+
+/// Fit a catalog pipeline, export it unoptimized and fully optimized,
+/// and require bit-identical interpreter outputs on fresh request data
+/// (seed 999 — unseen at fit time, so OOV paths are exercised too).
+fn optimizer_parity(spec_name: &str) {
+    use kamae::optim::OptimizeLevel;
+
+    let (pipeline, inputs, outputs, data): (_, fn() -> Vec<kamae::export::SpecInput>, Vec<&str>, _) =
+        match spec_name {
+            "movielens" => (
+                catalog::movielens_pipeline(),
+                catalog::movielens_inputs as _,
+                catalog::MOVIELENS_OUTPUTS.to_vec(),
+                kamae::synth::gen_movielens(&kamae::synth::MovieLensConfig {
+                    rows: 4_000,
+                    ..Default::default()
+                }),
+            ),
+            "ltr" => (
+                catalog::ltr_pipeline(),
+                catalog::ltr_inputs as _,
+                catalog::LTR_OUTPUTS.to_vec(),
+                kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
+                    rows: 4_000,
+                    ..Default::default()
+                }),
+            ),
+            other => panic!("no optimizer-parity fixture for {other}"),
+        };
+    let model = pipeline.fit(&Dataset::from_dataframe(data, 4)).unwrap();
+    let (raw, _) = model
+        .to_graph_spec_opt(spec_name, inputs(), &outputs, OptimizeLevel::None)
+        .unwrap();
+    let (opt, _report) = model
+        .to_graph_spec_opt(spec_name, inputs(), &outputs, OptimizeLevel::Full)
+        .unwrap();
+    assert!(
+        opt.nodes.len() <= raw.nodes.len(),
+        "{spec_name}: optimizer grew the graph ({} -> {})",
+        raw.nodes.len(),
+        opt.nodes.len()
+    );
+    assert_eq!(opt.outputs, raw.outputs, "{spec_name}: output contract changed");
+
+    // serving loads specs from JSON — round-trip the optimized one
+    let opt = GraphSpec::from_json(
+        &kamae::util::json::Json::parse(&opt.to_json().to_string()).unwrap(),
+    )
+    .unwrap();
+
+    let out_names = opt.outputs.clone();
+    let df = request_pool(spec_name, 256).unwrap();
+    let a = SpecInterpreter::new(raw).run(&df).unwrap();
+    let b = SpecInterpreter::new(opt).run(&df).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (out_name, (x, y)) in out_names.iter().zip(a.iter().zip(b.iter())) {
+        assert_tensors_bit_identical(y, x, &format!("{spec_name}/{out_name} optimized-vs-raw"));
+    }
+}
+
+#[test]
+fn optimizer_parity_movielens() {
+    optimizer_parity("movielens");
+}
+
+#[test]
+fn optimizer_parity_ltr() {
+    optimizer_parity("ltr");
+}
+
+#[test]
+fn optimizer_shrinks_the_ltr_graph() {
+    use kamae::optim::OptimizeLevel;
+    // LTR carries offline-only features (price_decile, stay_norm,
+    // property hashing) and scalar-affine ladders (cyclic month
+    // encodings) — the optimizer must find real wins, not just tie.
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline().fit(&Dataset::from_dataframe(data, 4)).unwrap();
+    let (raw, _) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::None)
+        .unwrap();
+    let (opt, report) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::Full)
+        .unwrap();
+    assert!(
+        opt.nodes.len() < raw.nodes.len(),
+        "expected a strict node reduction, got {} -> {}\n{report}",
+        raw.nodes.len(),
+        opt.nodes.len()
+    );
+    // dead property hashing must also drop its ingress node + graph input
+    assert!(opt.ingress.len() < raw.ingress.len(), "ingress not pruned\n{report}");
+    assert!(opt.graph_inputs.len() < raw.graph_inputs.len(), "graph inputs not pruned");
+    // at least one affine chain (the cyclic month encodings) fused
+    assert!(
+        opt.nodes.iter().any(|n| n.op == "affine"),
+        "no affine fusion happened\n{report}"
+    );
+}
+
 #[test]
 fn spec_exports_are_stable() {
     // re-fitting on the same seed must export an identical spec (the

@@ -194,6 +194,90 @@ fn interp_engine_parity_random_strings() {
 }
 
 #[test]
+fn optimizer_preserves_interpreter_outputs_bitwise() {
+    // the optim contract under adversarial float inputs (NaN-producing
+    // logs, huge magnitudes, negatives): optimized and unoptimized
+    // specs must agree bit-for-bit, not just within tolerance. The
+    // pipeline is built so every pass fires: a dead branch (DCE), a
+    // duplicated subexpression (CSE), a multiply-by-one on a rounded
+    // producer (const fold) and a scalar-affine ladder (fusion).
+    use kamae::optim::OptimizeLevel;
+    use kamae::runtime::TensorData;
+
+    check_res(
+        "optimized == unoptimized interpreter outputs (bitwise)",
+        12,
+        |rng| random_df(rng, 60),
+        |df| {
+            let pipeline = Pipeline::new(vec![
+                Stage::transformer(HashIndexTransformer::new("s", "s_idx", 1009)),
+                Stage::transformer(LogTransformer::new("x", "x_log").log1p()),
+                // affine ladder: fused into one node at OptimizeLevel::Full
+                Stage::transformer(AddConstantTransformer::new("x_log", "t1", -1.5)),
+                Stage::transformer(MultiplyConstantTransformer::new("t1", "t2", 0.25)),
+                // no-op on an f32-rounded producer: const-folded
+                Stage::transformer(MultiplyConstantTransformer::new("t2", "t2_noop", 1.0)),
+                // duplicate subexpression: CSE'd into x_log
+                Stage::transformer(LogTransformer::new("x", "x_log_dup").log1p()),
+                Stage::transformer(MultiplyConstantTransformer::new("x_log_dup", "t3", 2.0)),
+                // dead branch: dropped by DCE
+                Stage::transformer(SqrtTransformer::new("x", "x_dead")),
+                Stage::estimator(
+                    kamae::estimators::StringIndexEstimator::new("s", "s_vocab").num_oov(2),
+                ),
+            ]);
+            let ds = Dataset::from_dataframe(df.clone(), 2);
+            let model = pipeline.fit(&ds).map_err(|e| e.to_string())?;
+            let inputs = || {
+                vec![
+                    SpecInput { name: "s".into(), dtype: DType::Str, width: None },
+                    SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+                ]
+            };
+            let outputs = ["s_idx", "s_vocab", "t2_noop", "t3", "x_log"];
+            let (raw, _) = model
+                .to_graph_spec_opt("prop", inputs(), &outputs, OptimizeLevel::None)
+                .map_err(|e| e.to_string())?;
+            let (opt, _) = model
+                .to_graph_spec_opt("prop", inputs(), &outputs, OptimizeLevel::Full)
+                .map_err(|e| e.to_string())?;
+            if opt.nodes.len() >= raw.nodes.len() {
+                return Err(format!(
+                    "optimizer found nothing: {} -> {} nodes",
+                    raw.nodes.len(),
+                    opt.nodes.len()
+                ));
+            }
+            let a = kamae::export::SpecInterpreter::new(raw).run(df).map_err(|e| e.to_string())?;
+            let b = kamae::export::SpecInterpreter::new(opt).run(df).map_err(|e| e.to_string())?;
+            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                if x.shape != y.shape {
+                    return Err(format!("output {i}: shape {:?} vs {:?}", x.shape, y.shape));
+                }
+                match (&x.data, &y.data) {
+                    (TensorData::I64(p), TensorData::I64(q)) => {
+                        if p != q {
+                            return Err(format!("output {i}: i64 mismatch"));
+                        }
+                    }
+                    (TensorData::F32(p), TensorData::F32(q)) => {
+                        for (j, (u, v)) in p.iter().zip(q.iter()).enumerate() {
+                            let same =
+                                u.to_bits() == v.to_bits() || (u.is_nan() && v.is_nan());
+                            if !same {
+                                return Err(format!("output {i}[{j}]: {u:?} vs {v:?}"));
+                            }
+                        }
+                    }
+                    _ => return Err(format!("output {i}: dtype mismatch")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn shard_rebalance_preserves_content() {
     check(
         "rebalance/coalesce keep rows and order",
