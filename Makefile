@@ -10,7 +10,7 @@
 # and `harness = false` [[bench]]/[[example]] entries for everything
 # under benches/ and examples/ (each defines its own `fn main`).
 
-.PHONY: verify build test fmt bench-optimizer artifacts clean
+.PHONY: verify build test fmt bench-optimizer bench-smoke bench-all artifacts clean
 
 verify:
 	cargo build --release
@@ -30,6 +30,22 @@ fmt:
 # off; appends a record to BENCH_optimizer.json.
 bench-optimizer:
 	cargo bench --bench optimizer
+
+# CI smoke flavour of bench-optimizer: reduced rows/requests, and exits
+# non-zero if optimized throughput regresses below the unoptimized
+# baseline (the gate the bench-smoke CI job enforces).
+bench-smoke:
+	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
+
+# Every bench, each appending a record to its BENCH_<name>.json
+# trajectory file (serving benches skip themselves without artifacts).
+bench-all: bench-optimizer
+	cargo bench --bench movielens_pipeline
+	cargo bench --bench native_vs_udf
+	cargo bench --bench indexing
+	cargo bench --bench fit_scaling
+	cargo bench --bench serving_latency
+	cargo bench --bench serving_throughput
 
 # Fit the example pipelines, export (optimized) GraphSpec JSONs, then
 # AOT-lower them to HLO text via the python L2 compiler.

@@ -8,7 +8,8 @@ use kamae::engine::Dataset;
 use kamae::estimators::{StandardScaleEstimator, StringIndexEstimator};
 use kamae::pipeline::Estimator;
 use kamae::synth;
-use kamae::util::bench::Table;
+use kamae::util::bench::{append_run, Table};
+use kamae::util::json::Json;
 
 fn main() {
     let rows = 400_000;
@@ -17,6 +18,7 @@ fn main() {
     let max_threads = kamae::util::pool::default_threads();
 
     let mut table = Table::new(&["threads", "string-index fit ms", "scale fit ms", "speedup"]);
+    let mut records = Vec::new();
     let mut base: Option<f64> = None;
     let mut threads = 1usize;
     while threads <= max_threads.max(2) {
@@ -43,9 +45,17 @@ fn main() {
             format!("{scale_ms:.0}"),
             format!("{speedup:.2}x"),
         ]);
+        let mut rec = Json::object();
+        rec.set("threads", threads);
+        rec.set("string_index_fit_ms", idx_ms);
+        rec.set("scale_fit_ms", scale_ms);
+        rec.set("speedup", speedup);
+        records.push(rec);
         threads *= 2;
     }
     table.print();
+    let path = append_run("fit_scaling", &[("rows", Json::Int(rows as i64))], records);
+    println!("\nappended run to {}", path.display());
     println!("\nmachine parallelism: {max_threads} worker threads available");
     println!("shape check: speedup should grow with threads (sublinearly once");
     println!("the count-merge becomes the bottleneck).");

@@ -14,8 +14,20 @@ use kamae::engine::Dataset;
 use kamae::estimators::StringIndexEstimator;
 use kamae::pipeline::{Estimator, Transformer};
 use kamae::transformers::{BloomEncodeTransformer, HashIndexTransformer};
-use kamae::util::bench::{black_box, Bencher, Table};
+use kamae::util::bench::{append_run, black_box, Bencher, Table};
+use kamae::util::json::Json;
 use kamae::util::rng::{Rng, Zipf};
+
+/// BENCH_indexing.json record for one strategy row.
+fn record(strategy: &str, fit_ms: f64, export_kib: f64, mrows_s: f64, collisions: f64) -> Json {
+    let mut j = Json::object();
+    j.set("strategy", strategy);
+    j.set("fit_ms", fit_ms);
+    j.set("export_kib", export_kib);
+    j.set("transform_mrows_s", mrows_s);
+    j.set("collision_rate", collisions);
+    j
+}
 
 fn token_data(rows: usize, cardinality: usize) -> DataFrame {
     let mut rng = Rng::new(11);
@@ -57,6 +69,7 @@ fn main() {
     let mut table = Table::new(&[
         "strategy", "fit ms", "export KiB", "transform Mrows/s", "collision rate",
     ]);
+    let mut records = Vec::new();
 
     // --- full vocabulary ---------------------------------------------------
     let t0 = std::time::Instant::now();
@@ -77,6 +90,13 @@ fn main() {
         format!("{:.2}", st.throughput(rows as f64) / 1e6),
         format!("{:.5}", collision_rate(&out, "idx")),
     ]);
+    records.push(record(
+        "full vocab",
+        fit_ms as f64,
+        export_kib,
+        st.throughput(rows as f64) / 1e6,
+        collision_rate(&out, "idx"),
+    ));
 
     // --- hash indexing at several bin counts ---------------------------------
     for &bins in &[1 << 14, 1 << 17, 1 << 20] {
@@ -96,6 +116,13 @@ fn main() {
             format!("{:.2}", st.throughput(rows as f64) / 1e6),
             format!("{:.5}", collision_rate(&out, "idx_h")),
         ]);
+        records.push(record(
+            &format!("hash {}k bins", bins / 1024),
+            0.0,
+            export_kib,
+            st.throughput(rows as f64) / 1e6,
+            collision_rate(&out, "idx_h"),
+        ));
     }
 
     // --- bloom encoding: k probes, smaller bin spaces -------------------------
@@ -116,9 +143,18 @@ fn main() {
             format!("{:.2}", st.throughput(rows as f64) / 1e6),
             format!("{:.5}", collision_rate(&out, "idx_b")),
         ]);
+        records.push(record(
+            &format!("bloom k={k} {}k bins", bins / 1024),
+            0.0,
+            export_kib,
+            st.throughput(rows as f64) / 1e6,
+            collision_rate(&out, "idx_b"),
+        ));
     }
 
     table.print();
+    let path = append_run("indexing", &[("rows", Json::Int(rows as i64))], records);
+    println!("\nappended run to {}", path.display());
     println!("\nshape check: bloom with k*bins << cardinality should reach");
     println!("near-vocab collision rates at a fraction of the embedding rows");
     println!("(k=3 x 4k bins addresses 12k embedding rows vs 100k vocab).");

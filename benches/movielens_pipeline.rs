@@ -4,7 +4,8 @@
 use kamae::engine::Dataset;
 use kamae::pipeline::catalog;
 use kamae::synth;
-use kamae::util::bench::{black_box, Bencher, Table};
+use kamae::util::bench::{append_run, black_box, Bencher, Table};
+use kamae::util::json::Json;
 
 fn main() {
     let rows = 100_000;
@@ -13,6 +14,7 @@ fn main() {
 
     // fit time vs partitions
     let mut table = Table::new(&["partitions", "fit ms", "transform Mrows/s"]);
+    let mut records = Vec::new();
     for &parts in &[1usize, 2, 4, 8] {
         let ds = Dataset::from_dataframe(df.clone(), parts);
         let t0 = std::time::Instant::now();
@@ -26,6 +28,11 @@ fn main() {
             fit_ms.to_string(),
             format!("{:.2}", st.throughput(rows as f64) / 1e6),
         ]);
+        let mut rec = Json::object();
+        rec.set("partitions", parts);
+        rec.set("fit_ms", fit_ms as i64);
+        rec.set("transform_mrows_s", st.throughput(rows as f64) / 1e6);
+        records.push(rec);
     }
     table.print();
 
@@ -47,7 +54,13 @@ fn main() {
             stage.type_name().to_string(),
             format!("{:.2}", st.mean_ns / 1e6),
         ]);
+        let mut rec = st.to_json();
+        rec.set("stage", stage.layer_name());
+        rec.set("type", stage.type_name());
+        records.push(rec);
         stage.transform(&mut current).unwrap();
     }
     stage_table.print();
+    let path = append_run("movielens_pipeline", &[("rows", Json::Int(rows as i64))], records);
+    println!("\nappended run to {}", path.display());
 }

@@ -10,11 +10,24 @@ use kamae::baselines::RowPipeline;
 use kamae::engine::Dataset;
 use kamae::pipeline::catalog;
 use kamae::synth;
-use kamae::util::bench::{black_box, fmt_ns, Bencher, Table};
+use kamae::util::bench::{append_run, black_box, fmt_ns, Bencher, Table};
+use kamae::util::json::Json;
+
+/// BENCH_native_vs_udf.json record for one (pipeline, rows) case.
+fn record(pipeline: &str, rows: usize, native_per_row: f64, row_per_row: f64) -> Json {
+    let mut j = Json::object();
+    j.set("pipeline", pipeline);
+    j.set("rows", rows);
+    j.set("native_ns_per_row", native_per_row);
+    j.set("rowwise_ns_per_row", row_per_row);
+    j.set("speedup", row_per_row / native_per_row);
+    j
+}
 
 fn main() {
     println!("C2: native columnar vs row-wise UDF execution\n");
     let mut table = Table::new(&["pipeline", "rows", "native", "row-wise", "speedup"]);
+    let mut records = Vec::new();
 
     for &rows in &[1_000usize, 10_000, 100_000] {
         let df = synth::gen_movielens(&synth::MovieLensConfig { rows, ..Default::default() });
@@ -48,6 +61,7 @@ fn main() {
             format!("{}/row", fmt_ns(row_per_row)),
             format!("{:.1}x", row_per_row / native_per_row),
         ]);
+        records.push(record("movielens", rows, native_per_row, row_per_row));
     }
 
     // LTR pipeline (the ~60-transform chain)
@@ -80,7 +94,10 @@ fn main() {
         format!("{}/row", fmt_ns(row_per_row)),
         format!("{:.1}x", row_per_row / native_per_row),
     ]);
+    records.push(record("ltr", rows, native_per_row, row_per_row));
 
     table.print();
-    println!("\nshape check: native should win by >=5x, growing with pipeline depth.");
+    let path = append_run("native_vs_udf", &[], records);
+    println!("\nappended run to {}", path.display());
+    println!("shape check: native should win by >=5x, growing with pipeline depth.");
 }

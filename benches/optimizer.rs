@@ -4,16 +4,21 @@
 //! No artifacts needed: pipelines are fitted in-process, exported at
 //! `OptimizeLevel::None` and `OptimizeLevel::Full`, and probed directly
 //! through `InterpretedBackend` (8-row requests, the LTR slate size).
-//! Per-pass node counts are printed for each spec, and every run
-//! appends a machine-readable record to `BENCH_optimizer.json` for the
-//! perf trajectory.
+//! Per-pass node counts and cost estimates are printed for each spec,
+//! and every run appends a machine-readable record to
+//! `BENCH_optimizer.json` for the perf trajectory.
 //!
-//! MovieLens is the paper's Listing-1 pipeline: every exported node is
-//! live, so it measures the optimizer's no-win floor (the two specs
-//! should tie). LTR is where the wins are: dead offline-only features,
-//! prunable ingress hashing and scalar-affine ladders.
+//! MovieLens is the paper's Listing-1 pipeline: with the round-2 fusion
+//! passes its split/hash ingress chain fuses, so even the "no-win
+//! floor" now carries a small win. LTR is where the big wins are: dead
+//! offline-only features, prunable ingress hashing, scalar-affine
+//! ladders, bucketize/compare ladders and select-over-compare branches.
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + request count
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero if optimized throughput
+//!                                 regresses below 90% of unoptimized
 
-use std::path::Path;
 use std::time::{Duration, Instant};
 
 use kamae::engine::Dataset;
@@ -21,15 +26,17 @@ use kamae::export::GraphSpec;
 use kamae::optim::OptimizeLevel;
 use kamae::pipeline::catalog;
 use kamae::serving::{request_pool, Backend, InterpretedBackend, LatencyRecorder};
-use kamae::util::bench::{fmt_ns, Table};
+use kamae::util::bench::{append_run, fmt_ns, Table};
 use kamae::util::json::Json;
 use kamae::util::rng::Rng;
 
-const FIT_ROWS: usize = 20_000;
-const REQUESTS: usize = 2_000;
 const ROWS_PER_REQUEST: usize = 8;
+/// Gate threshold: optimized throughput below this fraction of the
+/// unoptimized baseline fails a --gate run (0.9 absorbs CI noise while
+/// still catching real pessimisation).
+const GATE_RATIO: f64 = 0.9;
 
-fn export_pair(name: &str) -> (GraphSpec, GraphSpec, kamae::optim::OptReport) {
+fn export_pair(name: &str, fit_rows: usize) -> (GraphSpec, GraphSpec, kamae::optim::OptReport) {
     let (pipeline, inputs, outputs, data): (_, fn() -> Vec<kamae::export::SpecInput>, Vec<&str>, _) =
         match name {
             "movielens" => (
@@ -37,7 +44,7 @@ fn export_pair(name: &str) -> (GraphSpec, GraphSpec, kamae::optim::OptReport) {
                 catalog::movielens_inputs as _,
                 catalog::MOVIELENS_OUTPUTS.to_vec(),
                 kamae::synth::gen_movielens(&kamae::synth::MovieLensConfig {
-                    rows: FIT_ROWS,
+                    rows: fit_rows,
                     ..Default::default()
                 }),
             ),
@@ -46,7 +53,7 @@ fn export_pair(name: &str) -> (GraphSpec, GraphSpec, kamae::optim::OptReport) {
                 catalog::ltr_inputs as _,
                 catalog::LTR_OUTPUTS.to_vec(),
                 kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
-                    rows: FIT_ROWS,
+                    rows: fit_rows,
                     ..Default::default()
                 }),
             ),
@@ -58,14 +65,14 @@ fn export_pair(name: &str) -> (GraphSpec, GraphSpec, kamae::optim::OptReport) {
     (raw, opt, report)
 }
 
-fn drive(spec: GraphSpec, label: &str, spec_name: &str) -> kamae::serving::ServeReport {
+fn drive(spec: GraphSpec, label: &str, spec_name: &str, requests: usize) -> kamae::serving::ServeReport {
     let backend = InterpretedBackend::new(spec);
     let pool = request_pool(spec_name, 4096).unwrap();
     let recorder = LatencyRecorder::new();
     let mut rng = Rng::new(0xC0FFEE);
     let mut busy = Duration::ZERO;
     let t0 = Instant::now();
-    for _ in 0..REQUESTS {
+    for _ in 0..requests {
         let start = rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
         let req = pool.slice(start, ROWS_PER_REQUEST);
         let sent = Instant::now();
@@ -74,21 +81,37 @@ fn drive(spec: GraphSpec, label: &str, spec_name: &str) -> kamae::serving::Serve
         busy += d;
         recorder.record(d);
     }
-    recorder.report(&format!("{spec_name}/{label}"), REQUESTS, t0.elapsed(), busy)
+    recorder.report(&format!("{spec_name}/{label}"), requests, t0.elapsed(), busy)
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let (fit_rows, requests) = if quick { (2_000, 200) } else { (20_000, 2_000) };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows, {requests} requests)\n");
+    }
+
     let mut records = Vec::new();
+    let mut gate_failures = Vec::new();
     for spec_name in ["movielens", "ltr"] {
         println!("== {spec_name} ==\n");
-        let (raw, opt, report) = export_pair(spec_name);
+        let (raw, opt, report) = export_pair(spec_name, fit_rows);
         println!("{report}\n");
         let mut table =
             Table::new(&["mode", "graph nodes", "ingress", "throughput", "p50", "p95", "p99"]);
         let mut rps = Vec::new();
         for (label, spec) in [("interpreted-O0", raw), ("interpreted-O2", opt)] {
             let (nodes, ingress) = (spec.nodes.len(), spec.ingress.len());
-            let rep = drive(spec, label, spec_name);
+            let rep = drive(spec, label, spec_name, requests);
             table.row(&[
                 label.into(),
                 nodes.to_string(),
@@ -104,23 +127,32 @@ fn main() {
         table.print();
         if let [before, after] = rps[..] {
             println!("\nthroughput with passes on: {:+.1}%\n", 100.0 * (after / before - 1.0));
+            if gate && after < before * GATE_RATIO {
+                gate_failures.push(format!(
+                    "{spec_name}: optimized {after:.0} req/s < {:.0}% of unoptimized {before:.0} req/s",
+                    GATE_RATIO * 100.0
+                ));
+            }
         }
         records.push(report.to_json());
     }
 
     // append this run to the perf trajectory
-    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_optimizer.json");
-    let mut runs = std::fs::read_to_string(&path)
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .and_then(|j| j.as_array().cloned())
-        .unwrap_or_default();
-    let mut run = Json::object();
-    run.set("bench", "optimizer");
-    run.set("requests", REQUESTS);
-    run.set("rows_per_request", ROWS_PER_REQUEST);
-    run.set("records", Json::Array(records));
-    runs.push(run);
-    std::fs::write(&path, Json::Array(runs).to_string_pretty()).unwrap();
+    let path = append_run(
+        "optimizer",
+        &[
+            ("requests", Json::Int(requests as i64)),
+            ("rows_per_request", Json::Int(ROWS_PER_REQUEST as i64)),
+            ("quick", Json::Bool(quick)),
+        ],
+        records,
+    );
     println!("appended run to {}", path.display());
+
+    if !gate_failures.is_empty() {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        std::process::exit(1);
+    }
 }

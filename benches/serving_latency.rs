@@ -11,7 +11,7 @@
 use std::path::Path;
 
 use kamae::serving::{load_backend, request_pool};
-use kamae::util::bench::{black_box, fmt_ns, Bencher, Table};
+use kamae::util::bench::{append_run, black_box, fmt_ns, Bencher, Table};
 
 fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -24,6 +24,7 @@ fn main() {
         "spec", "batch", "mleap-like", "interpreted", "compiled", "compiled vs mleap",
     ]);
     let mut reductions = Vec::new();
+    let mut records = Vec::new();
 
     for spec in ["movielens", "ltr"] {
         let mleap = load_backend(&dir, spec, "mleap").unwrap();
@@ -34,17 +35,18 @@ fn main() {
         for &batch in &[1usize, 8, 32] {
             let df = pool.slice(17, batch);
             let b = Bencher::quick();
-            let m = b.run("mleap", || {
+            let m = b.run(&format!("{spec}/b{batch}/mleap"), || {
                 black_box(mleap.process(&df).unwrap());
             });
-            let i = b.run("interp", || {
+            let i = b.run(&format!("{spec}/b{batch}/interpreted"), || {
                 black_box(interp.process(&df).unwrap());
             });
-            let c = b.run("compiled", || {
+            let c = b.run(&format!("{spec}/b{batch}/compiled"), || {
                 black_box(compiled.process(&df).unwrap());
             });
             let reduction = 100.0 * (1.0 - c.p50_ns / m.p50_ns);
             reductions.push(reduction);
+            records.extend([m.to_json(), i.to_json(), c.to_json()]);
             table.row(&[
                 spec.into(),
                 batch.to_string(),
@@ -56,8 +58,10 @@ fn main() {
         }
     }
     table.print();
+    let path = append_run("serving_latency", &[], records);
+    println!("\nappended run to {}", path.display());
     let avg = reductions.iter().sum::<f64>() / reductions.len() as f64;
-    println!("\nmean per-call latency delta compiled vs MLeap-like: {:+.0}%", -avg);
+    println!("mean per-call latency delta compiled vs MLeap-like: {:+.0}%", -avg);
     println!("paper reports -61% on production traffic — i.e. *batched* service");
     println!("latency, reproduced by the C5 harness / ltr_filters example; at");
     println!("batch 1 the PJRT dispatch floor (~50-80µs) dominates, so compiled");

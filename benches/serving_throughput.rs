@@ -11,7 +11,8 @@
 use std::path::Path;
 
 use kamae::serving::bench_serve;
-use kamae::util::bench::{fmt_ns, Table};
+use kamae::util::bench::{append_run, fmt_ns, Table};
+use kamae::util::json::Json;
 
 fn main() {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -24,6 +25,7 @@ fn main() {
         "mode", "offered rps", "achieved rps", "p50", "p95", "p99", "cpu-s/1k req",
     ]);
     let mut costs = std::collections::HashMap::new();
+    let mut records = Vec::new();
     for mode in ["compiled", "interpreted", "mleap"] {
         // mleap at 200rps would overload; offer what it can take
         let rps = if mode == "mleap" { 50 } else { 200 };
@@ -38,6 +40,9 @@ fn main() {
             fmt_ns(report.p99_ns),
             format!("{:.3}", report.cost_cpu_s_per_1k),
         ]);
+        let mut rec = report.to_json();
+        rec.set("offered_rps", rps);
+        records.push(rec);
     }
     table.print();
     if let (Some(c), Some(m)) = (costs.get("compiled"), costs.get("mleap")) {
@@ -46,6 +51,12 @@ fn main() {
             100.0 * (1.0 - c / m)
         );
     }
+    let path = append_run(
+        "serving_throughput",
+        &[("spec", Json::Str("ltr".into()))],
+        records,
+    );
+    println!("appended run to {}", path.display());
     println!("shape check: compiled sustains 200 rps with p99 well under the");
     println!("mleap-like backend's p50.");
 }

@@ -242,6 +242,14 @@ _OPS = {
     "bucketize": lambda args, a: _bsearch(
         jnp.asarray(a["splits"], dtype=_F), _f(args[0]), side="right"
     ),
+    # fused compare_scalar(bucketize(x)) — rust optim::passes::BucketizeMerge.
+    # One branchless _bsearch over the sorted splits feeding the threshold
+    # compare directly; composes the two ops' lowerings exactly, so parity
+    # with the unfused ladder is op-for-op.
+    "multi_bucketize": lambda args, a: _CMP[a["op"]](
+        _f(_bsearch(jnp.asarray(a["splits"], dtype=_F), _f(args[0]), side="right")),
+        _F(a["value"]),
+    ).astype(_I),
     "columns_agg": lambda args, a: _columns_agg(args, a),
     "date_part": lambda args, a: _date_part(args[0], a["part"]),
     "sub_i64": lambda args, a: args[0] - args[1],
@@ -253,6 +261,12 @@ _OPS = {
     "bool_op": lambda args, a: _bool_op(args, a),
     "not": lambda args, a: (args[0] == 0).astype(_I),
     "select": lambda args, a: jnp.where(args[0] != 0, _f(args[1]), _f(args[2])),
+    # fused select(compare_scalar(x), a, b) — rust optim::passes::SelectCmpFuse.
+    # The predicate is evaluated inside the where: branchless, and the i64
+    # mask column of the unfused pair never exists.
+    "select_cmp": lambda args, a: jnp.where(
+        _CMP[a["op"]](_f(args[0]), _F(a["value"])), _f(args[1]), _f(args[2])
+    ),
     "is_nan": lambda args, a: jnp.isnan(_f(args[0])).astype(_I),
     "assemble": lambda args, a: jnp.stack([_f(x) for x in args], axis=-1),
     "vector_at": lambda args, a: args[0][:, int(a["index"])],

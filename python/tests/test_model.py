@@ -217,3 +217,27 @@ def test_affine_kernel_path_matches_chain():
     sep = model._UNARY["sub_scalar"](model._UNARY["mul_scalar"](x, {"c": 2.5}), {"c": 3.25})
     assert fused.shape == x.shape
     np.testing.assert_allclose(np.asarray(fused), np.asarray(sep), rtol=1e-6)
+
+
+def test_multi_bucketize_matches_unfused_ladder():
+    # the fused ladder must compose bucketize + compare_scalar op-for-op
+    x = jnp.asarray(np.random.RandomState(11).randn(256).astype(np.float32) * 2.0)
+    splits = [-1.0, 0.0, 1.0]
+    bucket = model._OPS["bucketize"]([x], {"splits": splits})
+    for op, value in [("le", 1.0), ("ge", 2.0), ("lt", 3.0), ("eq", 0.0)]:
+        sep = model._OPS["compare_scalar"]([bucket], {"op": op, "value": value})
+        fused = model._OPS["multi_bucketize"]([x], {"splits": splits, "op": op, "value": value})
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(sep))
+
+
+def test_select_cmp_matches_unfused_pair():
+    x = jnp.asarray(np.random.RandomState(13).randn(256).astype(np.float32))
+    a = jnp.asarray(np.random.RandomState(17).randn(256).astype(np.float32))
+    b = jnp.asarray(np.random.RandomState(19).randn(256).astype(np.float32))
+    for op, value in [("gt", 0.0), ("ge", 0.5), ("lt", -0.25)]:
+        mask = model._OPS["compare_scalar"]([x], {"op": op, "value": value})
+        sep = model._OPS["select"]([mask, a, b], {})
+        fused = model._OPS["select_cmp"]([x, a, b], {"op": op, "value": value})
+        np.testing.assert_array_equal(
+            np.asarray(fused).view(np.uint32), np.asarray(sep).view(np.uint32)
+        )

@@ -169,9 +169,26 @@ fn gv_to_f32_tensor(gv: GVal, batch: usize) -> Tensor {
 // ingress section — DataFrame column ops
 
 fn apply_ingress(node: &SpecNode, df: &mut DataFrame) -> Result<()> {
-    let a = node.attrs.clone();
-    let input = |i: usize| -> Result<&Column> { df.column(&node.inputs[i]) };
-    let out: Column = match node.op.as_str() {
+    let cols: Vec<&Column> = node
+        .inputs
+        .iter()
+        .map(|n| df.column(n))
+        .collect::<Result<_>>()?;
+    let out = ingress_op_column(&node.op, &node.attrs, &cols)?;
+    df.set_column(node.id.clone(), out)
+}
+
+/// Evaluate one ingress op over already-resolved input columns. Shared
+/// by [`apply_ingress`] (columns from the request DataFrame) and the
+/// fused-chain replay (columns are in-flight intermediates that never
+/// touch the DataFrame).
+fn ingress_op_column(op: &str, a: &Json, cols: &[&Column]) -> Result<Column> {
+    let input = |i: usize| -> Result<&Column> {
+        cols.get(i).copied().ok_or_else(|| {
+            KamaeError::InvalidConfig(format!("ingress op {op}: missing input {i}"))
+        })
+    };
+    Ok(match op {
         "hash64" => ops::hash::hash64_column(input(0)?)?,
         "case" => {
             let mode = match a.req_str("mode")? {
@@ -196,14 +213,7 @@ fn apply_ingress(node: &SpecNode, df: &mut DataFrame) -> Result<()> {
             let re = ops::regex::Regex::new(a.req_str("pattern")?)?;
             ops::regex::regex_extract(input(0)?, &re, a.req_i64("group")? as usize)?
         }
-        "concat" => {
-            let cols: Vec<&Column> = node
-                .inputs
-                .iter()
-                .map(|n| df.column(n))
-                .collect::<Result<_>>()?;
-            ops::string_ops::concat_cols(&cols, a.req_str("separator")?)?
-        }
+        "concat" => ops::string_ops::concat_cols(cols, a.req_str("separator")?)?,
         "split_pad" => {
             let split = ops::string_ops::split(input(0)?, a.req_str("separator")?)?;
             ops::string_ops::pad_list(&split, a.req_i64("list_length")? as usize, a.req_str("default")?)?
@@ -237,11 +247,107 @@ fn apply_ingress(node: &SpecNode, df: &mut DataFrame) -> Result<()> {
         )?,
         "to_string" => ops::cast::cast(input(0)?, &DType::Str)?,
         "parse_number" => ops::cast::cast(input(0)?, &DType::F64)?,
+        "fused_ingress" => run_fused_ingress(a, input(0)?)?,
         other => {
             return Err(KamaeError::Unsupported(format!("ingress op: {other}")))
         }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// fused ingress chains (optim::passes::IngressFuse)
+
+/// One per-value step of the fused string fast path.
+enum StrStep {
+    Trim,
+    Case(ops::string_ops::CaseMode),
+    Replace(String, String),
+    Substring(usize, usize),
+}
+
+/// Execute a fused ingress chain. The common shape — per-value string
+/// ops optionally terminated by `hash64` — runs as ONE walk over the
+/// column (no intermediate column materialisation at all); anything
+/// else replays the recorded steps with the exact column kernels the
+/// separate nodes used. Both paths are bit-identical to the unfused
+/// chain by construction.
+fn run_fused_ingress(a: &Json, input: &Column) -> Result<Column> {
+    let steps = a.req_array("steps")?;
+    if let Some(out) = fused_string_walk(steps, input)? {
+        return Ok(out);
+    }
+    let mut col = input.clone();
+    for s in steps {
+        col = ingress_op_column(s.req_str("op")?, s, &[&col])?;
+    }
+    Ok(col)
+}
+
+/// Single-walk fast path; `None` when the chain or input shape doesn't
+/// qualify (the caller falls back to step replay).
+fn fused_string_walk(steps: &[Json], input: &Column) -> Result<Option<Column>> {
+    use crate::dataframe::ListColumn;
+    use ops::string_ops as so;
+
+    let mut chain: Vec<StrStep> = Vec::new();
+    let mut hash_tail = false;
+    for (i, s) in steps.iter().enumerate() {
+        match s.req_str("op")? {
+            "trim" => chain.push(StrStep::Trim),
+            "case" => {
+                let mode = match s.req_str("mode")? {
+                    "upper" => so::CaseMode::Upper,
+                    "lower" => so::CaseMode::Lower,
+                    _ => so::CaseMode::Title,
+                };
+                chain.push(StrStep::Case(mode));
+            }
+            "replace" => chain.push(StrStep::Replace(
+                s.req_str("from")?.to_string(),
+                s.req_str("to")?.to_string(),
+            )),
+            "substring" => chain.push(StrStep::Substring(
+                s.req_i64("start")? as usize,
+                s.req_i64("len")? as usize,
+            )),
+            "hash64" if i == steps.len() - 1 => hash_tail = true,
+            _ => return Ok(None),
+        }
+    }
+    let apply = |s: &str| -> String {
+        let mut cur = s.to_string();
+        for step in &chain {
+            cur = match step {
+                StrStep::Trim => cur.trim().to_string(),
+                StrStep::Case(mode) => so::case_value(&cur, *mode),
+                StrStep::Replace(from, to) => cur.replace(from.as_str(), to.as_str()),
+                StrStep::Substring(start, len) => so::substring_value(&cur, *start, *len),
+            };
+        }
+        cur
     };
-    df.set_column(node.id.clone(), out)
+    Ok(match input {
+        Column::Str(v, nulls) => Some(if hash_tail {
+            Column::I64(
+                v.iter().map(|s| ops::hash::fnv1a64(&apply(s))).collect(),
+                nulls.clone(),
+            )
+        } else {
+            Column::Str(v.iter().map(|s| apply(s.as_str())).collect(), nulls.clone())
+        }),
+        Column::ListStr(l) => Some(if hash_tail {
+            Column::ListI64(ListColumn {
+                values: l.values.iter().map(|s| ops::hash::fnv1a64(&apply(s))).collect(),
+                offsets: l.offsets.clone(),
+            })
+        } else {
+            Column::ListStr(ListColumn {
+                values: l.values.iter().map(|s| apply(s.as_str())).collect(),
+                offsets: l.offsets.clone(),
+            })
+        }),
+        _ => None,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -557,6 +663,48 @@ fn eval_node(node: &SpecNode, env: &HashMap<String, GVal>) -> Result<GVal> {
                 arg(1)?.width(),
             )
         }
+        // fused select(compare_scalar(x), a, b) — optim::passes::SelectCmpFuse.
+        // The predicate replays compare_scalar's exact arithmetic (f32-rounded
+        // operands compared in f64), the branches copy raw values like select.
+        "select_cmp" => {
+            let op = ops::logical::CmpOp::from_name(a.req_str("op")?)?;
+            let value = a.req_f64("value")?;
+            let c = arg(0)?.as_f();
+            let (x, y) = (arg(1)?.as_f(), arg(2)?.as_f());
+            GVal::F(
+                c.iter()
+                    .enumerate()
+                    .map(|(i, &v)| {
+                        if op.apply_f64(v as f32 as f64, value as f32 as f64) {
+                            x[i]
+                        } else {
+                            y[i]
+                        }
+                    })
+                    .collect(),
+                arg(1)?.width(),
+            )
+        }
+        // fused compare_scalar(bucketize(x)) — optim::passes::BucketizeMerge.
+        // One sorted-splits binary search per value (raw f64, exactly like
+        // bucketize), then the threshold compare of the bucket index with
+        // compare_scalar's f32 rounding discipline.
+        "multi_bucketize" => {
+            let splits = attr_f64_array(a, "splits")?;
+            let op = ops::logical::CmpOp::from_name(a.req_str("op")?)?;
+            let value = a.req_f64("value")?;
+            let x = arg(0)?;
+            GVal::I(
+                x.as_f()
+                    .iter()
+                    .map(|&v| {
+                        let bucket = splits.partition_point(|&s| s <= v) as i64;
+                        op.apply_f64(bucket as f64 as f32 as f64, value as f32 as f64) as i64
+                    })
+                    .collect(),
+                x.width(),
+            )
+        }
         "is_nan" => GVal::I(
             arg(0)?.as_f().iter().map(|&x| x.is_nan() as i64).collect(),
             arg(0)?.width(),
@@ -855,6 +1003,161 @@ mod tests {
         assert_eq!(out[2].shape, vec![3, 3]);
         let l = engine_out.column("gl_idx").unwrap().as_list_i64().unwrap();
         assert_eq!(out[2].as_i64().unwrap(), &l.values[..]);
+    }
+
+    #[test]
+    fn fused_ingress_matches_unfused_chain() {
+        // fast path (trim->case->hash64 on Str) and replay path
+        // (split_pad->hash64, not per-value) must both reproduce the
+        // unfused chains exactly — including unicode, empties and nulls
+        let df = DataFrame::new(vec![
+            (
+                "s".into(),
+                Column::from_str(vec!["  Hello World ", "ACTION|comedy", "", " é|B "]),
+            ),
+        ])
+        .unwrap();
+        let node = |id: &str, op: &str, inputs: &[&str], attrs: &str| SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+        };
+        let spec = |ingress: Vec<SpecNode>, tail: &str, width: Option<usize>| {
+            let mut ingress = ingress;
+            if let Some(last) = ingress.last_mut() {
+                last.width = width;
+            }
+            GraphSpec {
+                name: "t".into(),
+                inputs: vec![SpecInput { name: "s".into(), dtype: DType::Str, width: None }],
+                ingress,
+                graph_inputs: vec![tail.to_string()],
+                nodes: vec![SpecNode {
+                    id: "out".into(),
+                    op: "identity".into(),
+                    inputs: vec![tail.to_string()],
+                    attrs: Json::object(),
+                    dtype: SpecDType::I64,
+                    width,
+                }],
+                outputs: vec!["out".into()],
+            }
+        };
+
+        // --- fast path: trim -> case -> hash64 -------------------------
+        let unfused = spec(
+            vec![
+                node("a", "trim", &["s"], "{}"),
+                node("b", "case", &["a"], r#"{"mode": "lower"}"#),
+                node("h", "hash64", &["b"], "{}"),
+            ],
+            "h",
+            None,
+        );
+        let fused = spec(
+            vec![node(
+                "h",
+                "fused_ingress",
+                &["s"],
+                r#"{"steps": [{"op": "trim"}, {"op": "case", "mode": "lower"}, {"op": "hash64"}]}"#,
+            )],
+            "h",
+            None,
+        );
+        let a = SpecInterpreter::new(unfused).run(&df).unwrap();
+        let b = SpecInterpreter::new(fused).run(&df).unwrap();
+        assert_eq!(a, b);
+
+        // --- replay path: split_pad -> hash64 (list output) ------------
+        let unfused = spec(
+            vec![
+                node("sp", "split_pad", &["s"], r#"{"separator": "|", "list_length": 3, "default": "PAD"}"#),
+                node("h", "hash64", &["sp"], "{}"),
+            ],
+            "h",
+            Some(3),
+        );
+        let fused = spec(
+            vec![node(
+                "h",
+                "fused_ingress",
+                &["s"],
+                r#"{"steps": [{"op": "split_pad", "separator": "|", "list_length": 3, "default": "PAD"}, {"op": "hash64"}]}"#,
+            )],
+            "h",
+            Some(3),
+        );
+        let a = SpecInterpreter::new(unfused).run(&df).unwrap();
+        let b = SpecInterpreter::new(fused).run(&df).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fused_graph_ops_match_unfused_pairs() {
+        // multi_bucketize == compare_scalar(bucketize(x)) and
+        // select_cmp == select(compare_scalar(x), a, b), bit-for-bit
+        let df = DataFrame::new(vec![
+            ("x".into(), Column::from_f64(vec![-2.5, -1.0, 0.0, 0.3, 1.0, 2.0, f64::NAN])),
+            ("y".into(), Column::from_f64(vec![7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0])),
+        ])
+        .unwrap();
+        let inputs = vec![
+            SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+            SpecInput { name: "y".into(), dtype: DType::F64, width: None },
+        ];
+        let node = |id: &str, op: &str, ins: &[&str], attrs: &str, dtype: SpecDType| SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype,
+            width: None,
+        };
+        let run = |nodes: Vec<SpecNode>, outputs: &[&str]| {
+            SpecInterpreter::new(GraphSpec {
+                name: "t".into(),
+                inputs: inputs.clone(),
+                ingress: vec![],
+                graph_inputs: vec!["x".into(), "y".into()],
+                nodes,
+                outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            })
+            .run(&df)
+            .unwrap()
+        };
+
+        let unfused = run(
+            vec![
+                node("b", "bucketize", &["x"], r#"{"splits": [-1.0, 0.0, 1.0]}"#, SpecDType::I64),
+                node("f", "compare_scalar", &["b"], r#"{"op": "ge", "value": 2.0}"#, SpecDType::I64),
+                node("m", "compare_scalar", &["x"], r#"{"op": "gt", "value": 0.0}"#, SpecDType::I64),
+                node("s", "select", &["m", "x", "y"], "{}", SpecDType::F32),
+            ],
+            &["f", "s"],
+        );
+        let fused = run(
+            vec![
+                node(
+                    "f",
+                    "multi_bucketize",
+                    &["x"],
+                    r#"{"splits": [-1.0, 0.0, 1.0], "op": "ge", "value": 2.0}"#,
+                    SpecDType::I64,
+                ),
+                node("s", "select_cmp", &["x", "x", "y"], r#"{"op": "gt", "value": 0.0}"#, SpecDType::F32),
+            ],
+            &["f", "s"],
+        );
+        assert_eq!(unfused[0], fused[0], "multi_bucketize diverged");
+        // f32 NaN != NaN under PartialEq on the raw vecs — compare bits
+        let (a, b) = (unfused[1].as_f32().unwrap(), fused[1].as_f32().unwrap());
+        assert_eq!(a.len(), b.len());
+        for (p, q) in a.iter().zip(b.iter()) {
+            assert_eq!(p.to_bits(), q.to_bits(), "select_cmp diverged");
+        }
     }
 
     #[test]

@@ -101,6 +101,7 @@ fn print_usage() {
          \x20 export-examples  [--out-dir artifacts/specs] [--rows N]\n\
          \x20 transform        --model model.json --input in.jsonl --output out.jsonl\n\
          \x20 optimize         --spec spec.json --out opt.json [--level none|basic|full]\n\
+         \x20                  [--report-json report.json]\n\
          \x20 serve-bench      --artifacts DIR --spec NAME --rps R --seconds S [--mode compiled|interpreted|mleap]\n"
     );
 }
@@ -243,6 +244,12 @@ fn optimize(args: &Args) -> Result<()> {
     println!("{report}");
     spec.save(&out)?;
     println!("wrote {}", out.display());
+    // machine-readable per-pass node/cost trajectory (CI and perf tooling)
+    if let Some(path) = args.get("report-json") {
+        let path = PathBuf::from(path);
+        std::fs::write(&path, report.to_json().to_string_pretty())?;
+        println!("wrote report to {}", path.display());
+    }
     Ok(())
 }
 

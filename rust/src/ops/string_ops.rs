@@ -18,14 +18,18 @@ pub enum CaseMode {
 }
 
 pub fn change_case(col: &Column, mode: CaseMode) -> Result<Column> {
-    let f = |s: &String| -> String {
-        match mode {
-            CaseMode::Upper => s.to_uppercase(),
-            CaseMode::Lower => s.to_lowercase(),
-            CaseMode::Title => title_case(s),
-        }
-    };
-    map_str(col, f)
+    map_str(col, |s| case_value(s, mode))
+}
+
+/// Per-value case kernel — shared by [`change_case`] and the fused
+/// ingress chain walk in `export::interp`, so the fused and unfused
+/// paths are the same code (bit-exactness by construction).
+pub fn case_value(s: &str, mode: CaseMode) -> String {
+    match mode {
+        CaseMode::Upper => s.to_uppercase(),
+        CaseMode::Lower => s.to_lowercase(),
+        CaseMode::Title => title_case(s),
+    }
 }
 
 fn title_case(s: &str) -> String {
@@ -53,7 +57,12 @@ pub fn trim(col: &Column) -> Result<Column> {
 /// Substring by char offsets [start, start+len) (start 0-based; Spark's
 /// substring is 1-based but Kamae normalises to 0-based).
 pub fn substring(col: &Column, start: usize, len: usize) -> Result<Column> {
-    map_str(col, |s| s.chars().skip(start).take(len).collect())
+    map_str(col, |s| substring_value(s, start, len))
+}
+
+/// Per-value substring kernel (shared with the fused ingress walk).
+pub fn substring_value(s: &str, start: usize, len: usize) -> String {
+    s.chars().skip(start).take(len).collect()
 }
 
 /// Literal find/replace (all occurrences).

@@ -7,17 +7,30 @@
 //! it on every request. This module rewrites a [`GraphSpec`] into a
 //! cheaper, **observably identical** graph:
 //!
-//! * [`passes::DeadNodeElim`] — drop graph nodes, graph inputs and
-//!   ingress nodes not reachable from the spec outputs,
-//! * [`passes::IdentityElim`] — remove `identity` and no-op `to_f32`/
-//!   `to_i64` cast nodes,
-//! * [`passes::ConstFold`] — rewrite provably no-op scalar math
-//!   (`mul_scalar 1`, `div_scalar 1`, …) to `identity`,
-//! * [`passes::CommonSubexprElim`] — deduplicate nodes computing the
-//!   same (op, inputs, attrs) value,
-//! * [`passes::AffineFuse`] — collapse chains of scalar-affine ops into
-//!   one fused `affine` node (lowered onto the fused-scaling kernel
-//!   path by `python/compile/model.py`).
+//! ## Pass catalog
+//!
+//! | pass | pattern matched | rewrite | lowering |
+//! |------|-----------------|---------|----------|
+//! | [`passes::DeadNodeElim`] | nodes/inputs/ingress unreachable from outputs | dropped | — |
+//! | [`passes::IdentityElim`] | `identity`, no-op `to_f32`/`to_i64` | consumers rewired | — |
+//! | [`passes::ConstFold`] | no-op scalar math (`mul_scalar 1`, …) | rewritten to `identity` | — |
+//! | [`passes::CommonSubexprElim`] | duplicate (op, inputs, attrs) nodes | redirected to first | — |
+//! | [`passes::AffineFuse`] | scalar-affine chains (`add/sub/mul/div_scalar`, `scale_shift`) | one fused `affine` node | fused-scaling Pallas kernel (`kernels.affine_scale`) |
+//! | [`passes::IngressFuse`] | single-consumer ingress chains (`trim`→`case`→`hash64`, `split_pad`→`hash64`, …) | one `fused_ingress` node | Rust ingress single-walk (never reaches HLO) |
+//! | [`passes::BucketizeMerge`] | `compare_scalar(bucketize(x))` ladders with a dead bucket index | one `multi_bucketize` node | one `_bsearch` + compare in model.py |
+//! | [`passes::SelectCmpFuse`] | `select(compare_scalar(x), a, b)` with a dead mask | one branchless `select_cmp` node | `jnp.where` over the comparison |
+//!
+//! ## Cost model and driver
+//!
+//! The registry carries per-op work estimates ([`registry::OpInfo::work`])
+//! and [`registry::node_cost`] adds the fixed per-node overhead (column
+//! materialisation + env round trip) that fusion passes eliminate.
+//! [`PassManager::run`] is a fixpoint driver over that model: it sweeps
+//! the pass list, recording per-pass node counts *and* estimated cost,
+//! reverts any rewrite that would raise the estimate (an enforced
+//! invariant, not an expectation), and re-sweeps until no pass reduces
+//! estimated cost (bounded by a small round cap). `kamae optimize
+//! --report-json` serialises the resulting trajectory.
 //!
 //! **Exactness contract:** every pass preserves interpreter outputs
 //! *bit-for-bit* (i64 and f32 alike), not merely "within tolerance".
@@ -41,7 +54,7 @@
 pub mod passes;
 pub mod registry;
 
-pub use registry::{lint_spec, lookup, names, Arity, OpInfo, Section};
+pub use registry::{lint_spec, lookup, names, node_cost, spec_cost, Arity, OpInfo, Section};
 
 use crate::error::{KamaeError, Result};
 use crate::export::GraphSpec;
@@ -90,14 +103,19 @@ pub trait Pass {
     fn run(&self, spec: &mut GraphSpec) -> Result<bool>;
 }
 
-/// Node counts around one pass execution.
+/// Node counts and cost estimates around one pass execution.
 #[derive(Debug, Clone)]
 pub struct PassStat {
     pub pass: &'static str,
+    /// 1-based fixpoint round this execution belongs to.
+    pub round: usize,
     pub graph_nodes_before: usize,
     pub graph_nodes_after: usize,
     pub ingress_before: usize,
     pub ingress_after: usize,
+    /// Estimated spec cost ([`registry::spec_cost`]) around the pass.
+    pub cost_before: u64,
+    pub cost_after: u64,
     pub changed: bool,
 }
 
@@ -118,10 +136,22 @@ impl OptReport {
         self.stats.last().map(|s| s.graph_nodes_after).unwrap_or(0)
     }
 
+    pub fn cost_before(&self) -> u64 {
+        self.stats.first().map(|s| s.cost_before).unwrap_or(0)
+    }
+
+    pub fn cost_after(&self) -> u64 {
+        self.stats.last().map(|s| s.cost_after).unwrap_or(0)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::object();
         j.set("spec", self.spec.clone());
         j.set("level", self.level.name());
+        j.set("graph_nodes_before", self.graph_nodes_before());
+        j.set("graph_nodes_after", self.graph_nodes_after());
+        j.set("cost_before", self.cost_before() as i64);
+        j.set("cost_after", self.cost_after() as i64);
         j.set(
             "passes",
             Json::Array(
@@ -130,10 +160,13 @@ impl OptReport {
                     .map(|s| {
                         let mut o = Json::object();
                         o.set("pass", s.pass);
+                        o.set("round", s.round);
                         o.set("graph_nodes_before", s.graph_nodes_before);
                         o.set("graph_nodes_after", s.graph_nodes_after);
                         o.set("ingress_before", s.ingress_before);
                         o.set("ingress_after", s.ingress_after);
+                        o.set("cost_before", s.cost_before as i64);
+                        o.set("cost_after", s.cost_after as i64);
                         o.set("changed", s.changed);
                         o
                     })
@@ -147,24 +180,39 @@ impl OptReport {
 impl std::fmt::Display for OptReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(f, "=== optimize report: {} (level {}) ===", self.spec, self.level.name())?;
-        writeln!(f, "{:<22} {:>12} {:>14}", "pass", "graph nodes", "ingress nodes")?;
+        writeln!(
+            f,
+            "{:<22} {:>12} {:>14} {:>14}",
+            "pass", "graph nodes", "ingress nodes", "est. cost"
+        )?;
+        let mut round = 0;
         for s in &self.stats {
+            if s.round != round {
+                round = s.round;
+                if round > 1 {
+                    writeln!(f, "-- round {round} --")?;
+                }
+            }
             writeln!(
                 f,
-                "{:<22} {:>5} -> {:<4} {:>6} -> {:<4}{}",
+                "{:<22} {:>5} -> {:<4} {:>6} -> {:<4} {:>6} -> {:<5}{}",
                 s.pass,
                 s.graph_nodes_before,
                 s.graph_nodes_after,
                 s.ingress_before,
                 s.ingress_after,
+                s.cost_before,
+                s.cost_after,
                 if s.changed { "" } else { "  (no change)" }
             )?;
         }
         write!(
             f,
-            "total: {} -> {} graph nodes",
+            "total: {} -> {} graph nodes, est. cost {} -> {}",
             self.graph_nodes_before(),
-            self.graph_nodes_after()
+            self.graph_nodes_after(),
+            self.cost_before(),
+            self.cost_after()
         )
     }
 }
@@ -180,10 +228,15 @@ impl PassManager {
     }
 
     /// The standard pass pipeline for a level (empty for
-    /// [`OptimizeLevel::None`]).
+    /// [`OptimizeLevel::None`]). Cleanup passes run first (dead and
+    /// duplicate work must not inflate fusion chains), then the fusion
+    /// passes, then a final DCE sweep for nodes the fusions stranded —
+    /// an ordering the cost-guarded fixpoint driver re-runs until the
+    /// estimate stops improving.
     pub fn for_level(level: OptimizeLevel) -> PassManager {
         use crate::optim::passes::{
-            AffineFuse, CommonSubexprElim, ConstFold, DeadNodeElim, IdentityElim,
+            AffineFuse, BucketizeMerge, CommonSubexprElim, ConstFold, DeadNodeElim, IdentityElim,
+            IngressFuse, SelectCmpFuse,
         };
         let mut p: Vec<Box<dyn Pass>> = Vec::new();
         if level != OptimizeLevel::None {
@@ -195,6 +248,9 @@ impl PassManager {
             p.push(Box::new(CommonSubexprElim));
             if level == OptimizeLevel::Full {
                 p.push(Box::new(AffineFuse));
+                p.push(Box::new(IngressFuse));
+                p.push(Box::new(BucketizeMerge));
+                p.push(Box::new(SelectCmpFuse));
             }
             // CSE/fusion can strand nodes whose consumers were rewritten.
             p.push(Box::new(DeadNodeElim));
@@ -202,21 +258,51 @@ impl PassManager {
         PassManager { passes: p }
     }
 
-    /// Run every pass in order, collecting per-pass node counts.
+    /// Maximum fixpoint rounds — a safety bound; well-behaved pass
+    /// suites converge in two (one working round, one no-op round).
+    const MAX_ROUNDS: usize = 4;
+
+    /// Cost-model-driven fixpoint driver: sweep the pass list, recording
+    /// per-pass node counts and [`spec_cost`] estimates; revert any pass
+    /// whose rewrite would *raise* the estimate (enforcing the cost
+    /// invariant instead of assuming it); repeat until a full sweep
+    /// neither changes the spec nor lowers its estimated cost.
     pub fn run(&self, mut spec: GraphSpec, level: OptimizeLevel) -> Result<(GraphSpec, OptReport)> {
         let mut report =
             OptReport { spec: spec.name.clone(), level, stats: Vec::with_capacity(self.passes.len()) };
-        for pass in &self.passes {
-            let (gb, ib) = (spec.nodes.len(), spec.ingress.len());
-            let changed = pass.run(&mut spec)?;
-            report.stats.push(PassStat {
-                pass: pass.name(),
-                graph_nodes_before: gb,
-                graph_nodes_after: spec.nodes.len(),
-                ingress_before: ib,
-                ingress_after: spec.ingress.len(),
-                changed,
-            });
+        if self.passes.is_empty() {
+            return Ok((spec, report));
+        }
+        for round in 1..=Self::MAX_ROUNDS {
+            let round_start_cost = spec_cost(&spec);
+            let mut any_change = false;
+            for pass in &self.passes {
+                let (gb, ib) = (spec.nodes.len(), spec.ingress.len());
+                let cb = spec_cost(&spec);
+                let snapshot = spec.clone();
+                let mut changed = pass.run(&mut spec)?;
+                let mut ca = spec_cost(&spec);
+                if changed && ca > cb {
+                    spec = snapshot;
+                    ca = cb;
+                    changed = false;
+                }
+                any_change |= changed;
+                report.stats.push(PassStat {
+                    pass: pass.name(),
+                    round,
+                    graph_nodes_before: gb,
+                    graph_nodes_after: spec.nodes.len(),
+                    ingress_before: ib,
+                    ingress_after: spec.ingress.len(),
+                    cost_before: cb,
+                    cost_after: ca,
+                    changed,
+                });
+            }
+            if !any_change || spec_cost(&spec) >= round_start_cost {
+                break;
+            }
         }
         Ok((spec, report))
     }
@@ -255,5 +341,48 @@ mod tests {
         let (out, report) = optimize(spec.clone(), OptimizeLevel::None).unwrap();
         assert_eq!(out, spec);
         assert!(report.stats.is_empty());
+    }
+
+    #[test]
+    fn report_trajectory_is_monotone_and_serialisable() {
+        use crate::dataframe::DType;
+        use crate::export::{SpecDType, SpecInput, SpecNode};
+
+        // a spec with dead work, an identity, and a fusable ingress chain
+        let node = |id: &str, op: &str, inputs: &[&str], attrs: &str, dtype: SpecDType| SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype,
+            width: None,
+        };
+        let spec = crate::export::GraphSpec {
+            name: "t".into(),
+            inputs: vec![SpecInput { name: "c".into(), dtype: DType::Str, width: None }],
+            ingress: vec![
+                node("c_t", names::TRIM, &["c"], "{}", SpecDType::I64),
+                node("c_h", names::HASH64, &["c_t"], "{}", SpecDType::I64),
+            ],
+            graph_inputs: vec!["c_h".into()],
+            nodes: vec![
+                node("idx", names::HASH_BUCKET, &["c_h"], r#"{"num_bins": 8}"#, SpecDType::I64),
+                node("alias", names::IDENTITY, &["idx"], "{}", SpecDType::I64),
+                node("dead", names::NOT, &["idx"], "{}", SpecDType::I64),
+            ],
+            outputs: vec!["alias".into()],
+        };
+        let (opt, report) = optimize(spec, OptimizeLevel::Full).unwrap();
+        assert!(opt.ingress.iter().any(|n| n.op == names::FUSED_INGRESS), "{report}");
+        for s in &report.stats {
+            assert!(s.graph_nodes_after <= s.graph_nodes_before, "{report}");
+            assert!(s.ingress_after <= s.ingress_before, "{report}");
+            assert!(s.cost_after <= s.cost_before, "{report}");
+        }
+        assert!(report.cost_after() < report.cost_before(), "{report}");
+        // the JSON record round-trips (the --report-json contract)
+        let j = report.to_json();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert!(j.req_array("passes").unwrap().len() >= report.stats.len());
     }
 }

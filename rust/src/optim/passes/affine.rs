@@ -120,8 +120,11 @@ impl Pass for AffineFuse {
             }
             // grow the chain forward while the current tail has exactly
             // one consumer, that consumer is the next affine step, and
-            // the tail's value is not externally visible
+            // the tail's value is not externally visible. Nodes are
+            // marked visited as they are appended so a malformed cyclic
+            // spec terminates the walk instead of hanging it.
             let mut chain = vec![start];
+            visited[start] = true;
             let mut tail = start;
             loop {
                 let tail_node = &spec.nodes[tail];
@@ -131,14 +134,12 @@ impl Pass for AffineFuse {
                 }
                 match affine_consumer.get(&tail) {
                     Some(&next) if !visited[next] => {
+                        visited[next] = true;
                         chain.push(next);
                         tail = next;
                     }
                     _ => break,
                 }
-            }
-            for &i in &chain {
-                visited[i] = true;
             }
             if chain.len() < 2 {
                 continue;

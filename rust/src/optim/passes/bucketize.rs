@@ -1,0 +1,118 @@
+//! Bucketize/compare ladder merging.
+//!
+//! Quantile binning followed by threshold flags exports as a two-node
+//! ladder — `bucketize(x, splits)` then `compare_scalar(bucket, op, k)`
+//! — that materialises a full bucket-index column only to compare it
+//! against a constant. When the bucket index is invisible outside the
+//! compare (single consumer, not a spec output), this pass collapses
+//! the ladder into ONE `multi_bucketize` node: one sorted-splits binary
+//! search per value feeding the threshold compare directly.
+//!
+//! Exactness: the fused op replays both original steps verbatim — the
+//! split search runs on raw f64 values exactly like `bucketize` (no
+//! rounding), and the bucket index is compared with `compare_scalar`'s
+//! f32 rounding discipline (a no-op for the small integers bucket
+//! indices are, but replayed anyway). i64 outputs are bit-identical.
+//!
+//! The pass skips ladders whose attrs it cannot validate (malformed
+//! splits, unknown cmp op) and list-typed inputs — conservatism over
+//! cleverness.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecNode};
+use crate::ops::logical::CmpOp;
+use crate::optim::{names, Pass};
+
+use super::{output_set, use_counts};
+
+pub struct BucketizeMerge;
+
+/// A bucketize node whose ladder may fuse: scalar, with a well-formed
+/// f64 splits table.
+fn mergeable_bucketize(node: &SpecNode) -> bool {
+    node.op == names::BUCKETIZE
+        && node.inputs.len() == 1
+        && node.width.is_none()
+        && node
+            .attrs
+            .req_array("splits")
+            .map(|s| s.iter().all(|v| v.as_f64().is_some()))
+            .unwrap_or(false)
+}
+
+/// A compare_scalar node with a parseable op and value.
+fn mergeable_compare(node: &SpecNode) -> bool {
+    node.op == names::COMPARE_SCALAR
+        && node.inputs.len() == 1
+        && node.width.is_none()
+        && node
+            .attrs
+            .opt_str("op")
+            .map(|o| CmpOp::from_name(o).is_ok())
+            .unwrap_or(false)
+        && node.attrs.opt_f64("value").is_some()
+}
+
+impl Pass for BucketizeMerge {
+    fn name(&self) -> &'static str {
+        "bucketize-merge"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let uses = use_counts(spec);
+        let outputs = output_set(spec);
+        let bucketize_at: HashMap<&str, usize> = spec
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| mergeable_bucketize(n))
+            .map(|(i, n)| (n.id.as_str(), i))
+            .collect();
+
+        let mut removed = vec![false; spec.nodes.len()];
+        let mut rewrites: Vec<(usize, SpecNode)> = Vec::new();
+        for (ci, node) in spec.nodes.iter().enumerate() {
+            if !mergeable_compare(node) {
+                continue;
+            }
+            let Some(&bi) = bucketize_at.get(node.inputs[0].as_str()) else {
+                continue;
+            };
+            let bucket = &spec.nodes[bi];
+            // the bucket index must be invisible outside this compare
+            if removed[bi]
+                || outputs.contains(&bucket.id)
+                || uses.get(&bucket.id).copied().unwrap_or(0) != 1
+            {
+                continue;
+            }
+            let mut attrs = bucket.attrs.clone(); // carries "splits"
+            attrs.set("op", node.attrs.req_str("op")?.to_string());
+            attrs.set("value", node.attrs.req_f64("value")?);
+            rewrites.push((
+                ci,
+                SpecNode {
+                    id: node.id.clone(),
+                    op: names::MULTI_BUCKETIZE.to_string(),
+                    inputs: bucket.inputs.clone(),
+                    attrs,
+                    dtype: node.dtype,
+                    width: node.width,
+                },
+            ));
+            removed[bi] = true;
+        }
+
+        if rewrites.is_empty() {
+            return Ok(false);
+        }
+        for (i, node) in rewrites {
+            spec.nodes[i] = node;
+        }
+        let mut keep = removed.iter().map(|r| !r);
+        spec.nodes.retain(|_| keep.next().unwrap());
+        Ok(true)
+    }
+}

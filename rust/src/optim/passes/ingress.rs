@@ -1,0 +1,153 @@
+//! Ingress chain fusion.
+//!
+//! String preprocessing exports as one ingress node per step —
+//! `split_pad` → `hash64`, `trim` → `case` → `hash64`, … — and the
+//! serving ingress pays one full DataFrame column materialisation (plus
+//! a column-map insert) per node on every request. This pass collapses
+//! a maximal chain of single-input, single-consumer ingress nodes into
+//! ONE `fused_ingress` node whose `attrs.steps` records the original
+//! op/attr sequence.
+//!
+//! `export::interp` executes the fused node as a single walk over the
+//! input column for the common per-value string shapes (trim / case /
+//! replace / substring, optionally ending in `hash64`) and otherwise
+//! replays the steps with the exact column kernels the separate nodes
+//! used — bit-identical either way, intermediates never touch the
+//! DataFrame.
+//!
+//! Interior chain nodes must have exactly one consumer (counting other
+//! ingress nodes *and* `graph_inputs` references) so removing them is
+//! invisible; the fused node inherits the chain tail's id, dtype and
+//! width, so graph-side references are untouched. Already-fused nodes
+//! flatten into longer chains (their steps are spliced), which keeps
+//! the pass convergent under the fixpoint driver.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecNode};
+use crate::optim::{names, registry, Pass};
+use crate::util::json::Json;
+
+pub struct IngressFuse;
+
+/// A node that can participate in a fused chain: single-input, pure,
+/// and known to the registry as an ingress-capable op.
+fn fusable(node: &SpecNode) -> bool {
+    node.inputs.len() == 1
+        && registry::lookup(&node.op)
+            .map(|info| info.pure && info.section.allows_ingress())
+            .unwrap_or(false)
+}
+
+/// The step list a node contributes (flattens already-fused nodes).
+fn steps_of(node: &SpecNode) -> Result<Vec<Json>> {
+    if node.op == names::FUSED_INGRESS {
+        Ok(node.attrs.req_array("steps")?.clone())
+    } else {
+        let mut step = node.attrs.clone();
+        step.set("op", node.op.clone());
+        Ok(vec![step])
+    }
+}
+
+impl Pass for IngressFuse {
+    fn name(&self) -> &'static str {
+        "ingress-fuse"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        // how often each ingress-produced name is referenced: other
+        // ingress nodes' inputs plus graph_inputs (the graph section
+        // resolves ingress products only through graph_inputs)
+        let mut uses: HashMap<String, usize> = HashMap::new();
+        for n in &spec.ingress {
+            for i in &n.inputs {
+                *uses.entry(i.clone()).or_insert(0) += 1;
+            }
+        }
+        for g in &spec.graph_inputs {
+            *uses.entry(g.clone()).or_insert(0) += 1;
+        }
+
+        // the (unique) fusable ingress consumer of each ingress node
+        let index: HashMap<&str, usize> =
+            spec.ingress.iter().enumerate().map(|(i, n)| (n.id.as_str(), i)).collect();
+        let mut consumer: HashMap<usize, usize> = HashMap::new();
+        for (ci, node) in spec.ingress.iter().enumerate() {
+            if fusable(node) {
+                if let Some(&pi) = index.get(node.inputs[0].as_str()) {
+                    consumer.insert(pi, ci);
+                }
+            }
+        }
+
+        let mut visited = vec![false; spec.ingress.len()];
+        let mut removed = vec![false; spec.ingress.len()];
+        let mut fused: Vec<(usize, SpecNode)> = Vec::new();
+
+        // ingress nodes are topologically ordered, so chain heads are
+        // reached before their interiors and each chain is found once
+        for start in 0..spec.ingress.len() {
+            if visited[start] || !fusable(&spec.ingress[start]) {
+                continue;
+            }
+            // mark nodes visited AS the chain grows: a malformed cyclic
+            // spec (lint warns but does not reject) must terminate the
+            // walk, not hang the optimizer
+            let mut chain = vec![start];
+            visited[start] = true;
+            let mut tail = start;
+            loop {
+                let tail_node = &spec.ingress[tail];
+                if uses.get(&tail_node.id).copied().unwrap_or(0) != 1 {
+                    break;
+                }
+                match consumer.get(&tail) {
+                    Some(&next) if !visited[next] => {
+                        visited[next] = true;
+                        chain.push(next);
+                        tail = next;
+                    }
+                    _ => break,
+                }
+            }
+            if chain.len() < 2 {
+                continue;
+            }
+
+            let mut steps: Vec<Json> = Vec::new();
+            for &i in &chain {
+                steps.extend(steps_of(&spec.ingress[i])?);
+            }
+            let mut attrs = Json::object();
+            attrs.set("steps", Json::Array(steps));
+            let head = &spec.ingress[chain[0]];
+            let tail_node = &spec.ingress[*chain.last().unwrap()];
+            fused.push((
+                *chain.last().unwrap(),
+                SpecNode {
+                    id: tail_node.id.clone(),
+                    op: names::FUSED_INGRESS.to_string(),
+                    inputs: head.inputs.clone(),
+                    attrs,
+                    dtype: tail_node.dtype,
+                    width: tail_node.width,
+                },
+            ));
+            for &i in &chain[..chain.len() - 1] {
+                removed[i] = true;
+            }
+        }
+
+        if fused.is_empty() {
+            return Ok(false);
+        }
+        for (i, node) in fused {
+            spec.ingress[i] = node;
+        }
+        let mut keep = removed.iter().map(|r| !r);
+        spec.ingress.retain(|_| keep.next().unwrap());
+        Ok(true)
+    }
+}

@@ -6,16 +6,22 @@
 //! are treated conservatively (impure, never folded or fused).
 
 mod affine;
+mod bucketize;
 mod cse;
 mod dce;
 mod fold;
 mod identity;
+mod ingress;
+mod select;
 
 pub use affine::AffineFuse;
+pub use bucketize::BucketizeMerge;
 pub use cse::CommonSubexprElim;
 pub use dce::DeadNodeElim;
 pub use fold::ConstFold;
 pub use identity::IdentityElim;
+pub use ingress::IngressFuse;
+pub use select::SelectCmpFuse;
 
 use std::collections::{HashMap, HashSet};
 
@@ -239,6 +245,151 @@ mod tests {
         );
         assert!(!AffineFuse.run(&mut spec).unwrap());
         assert_eq!(spec.nodes.len(), 3);
+    }
+
+    #[test]
+    fn ingress_fuse_collapses_chains_and_flattens() {
+        // trim -> case -> hash64 over c, hash feeding the graph
+        let mut spec = GraphSpec {
+            name: "t".into(),
+            inputs: vec![SpecInput { name: "c".into(), dtype: DType::Str, width: None }],
+            ingress: vec![
+                node("c_t", names::TRIM, &["c"], "{}", SpecDType::I64, None),
+                node("c_u", names::CASE, &["c_t"], r#"{"mode": "upper"}"#, SpecDType::I64, None),
+                node("c_h", names::HASH64, &["c_u"], "{}", SpecDType::I64, None),
+            ],
+            graph_inputs: vec!["c_h".into()],
+            nodes: vec![node(
+                "idx",
+                names::HASH_BUCKET,
+                &["c_h"],
+                r#"{"num_bins": 8}"#,
+                SpecDType::I64,
+                None,
+            )],
+            outputs: vec!["idx".into()],
+        };
+        assert!(IngressFuse.run(&mut spec).unwrap());
+        assert_eq!(spec.ingress.len(), 1);
+        let fused = &spec.ingress[0];
+        assert_eq!(fused.op, names::FUSED_INGRESS);
+        assert_eq!(fused.id, "c_h"); // tail id: graph refs untouched
+        assert_eq!(fused.inputs, vec!["c".to_string()]);
+        let steps = fused.attrs.req_array("steps").unwrap();
+        assert_eq!(steps.len(), 3);
+        assert_eq!(steps[0].req_str("op").unwrap(), names::TRIM);
+        assert_eq!(steps[2].req_str("op").unwrap(), names::HASH64);
+        // second run: nothing left to fuse
+        assert!(!IngressFuse.run(&mut spec).unwrap());
+    }
+
+    #[test]
+    fn ingress_fuse_respects_multi_use_interiors() {
+        // c_t feeds both case and the graph section: not fusable past it
+        let mut spec = GraphSpec {
+            name: "t".into(),
+            inputs: vec![SpecInput { name: "c".into(), dtype: DType::Str, width: None }],
+            ingress: vec![
+                node("c_t", names::TRIM, &["c"], "{}", SpecDType::I64, None),
+                node("c_u", names::CASE, &["c_t"], r#"{"mode": "upper"}"#, SpecDType::I64, None),
+                node("c_th", names::HASH64, &["c_t"], "{}", SpecDType::I64, None),
+                node("c_uh", names::HASH64, &["c_u"], "{}", SpecDType::I64, None),
+            ],
+            graph_inputs: vec!["c_th".into(), "c_uh".into()],
+            nodes: vec![],
+            outputs: vec![],
+        };
+        // c_t has two consumers (case + hash64), so only case->hash64 fuses
+        assert!(IngressFuse.run(&mut spec).unwrap());
+        assert_eq!(spec.ingress.len(), 3);
+        assert!(spec.ingress.iter().any(|n| n.id == "c_t" && n.op == names::TRIM));
+        assert!(spec.ingress.iter().any(|n| n.id == "c_uh" && n.op == names::FUSED_INGRESS));
+    }
+
+    #[test]
+    fn ingress_fuse_terminates_on_cyclic_specs() {
+        // a malformed spec with mutually-referential ingress nodes gets
+        // through lint_spec (warnings only); the chain walk must
+        // terminate rather than hang the optimizer / server startup
+        let mut spec = GraphSpec {
+            name: "t".into(),
+            inputs: vec![SpecInput { name: "c".into(), dtype: DType::Str, width: None }],
+            ingress: vec![
+                node("a", names::TRIM, &["b"], "{}", SpecDType::I64, None),
+                node("b", names::TRIM, &["a"], "{}", SpecDType::I64, None),
+            ],
+            graph_inputs: vec![],
+            nodes: vec![],
+            outputs: vec![],
+        };
+        let _ = IngressFuse.run(&mut spec).unwrap();
+    }
+
+    #[test]
+    fn bucketize_merge_fuses_dead_index_ladders() {
+        let mut spec = base_spec(
+            vec![
+                node("b", names::BUCKETIZE, &["x"], r#"{"splits": [0.0, 1.0, 2.0]}"#, SpecDType::I64, None),
+                node("flag", names::COMPARE_SCALAR, &["b"], r#"{"op": "le", "value": 1.0}"#, SpecDType::I64, None),
+            ],
+            &["flag"],
+        );
+        assert!(BucketizeMerge.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 1);
+        let fused = &spec.nodes[0];
+        assert_eq!(fused.op, names::MULTI_BUCKETIZE);
+        assert_eq!(fused.id, "flag");
+        assert_eq!(fused.inputs, vec!["x".to_string()]);
+        assert_eq!(fused.attrs.req_array("splits").unwrap().len(), 3);
+        assert_eq!(fused.attrs.req_str("op").unwrap(), "le");
+        assert!(!BucketizeMerge.run(&mut spec).unwrap());
+    }
+
+    #[test]
+    fn bucketize_merge_keeps_visible_indices() {
+        // the bucket index is itself an output: fusing would duplicate it
+        let mut spec = base_spec(
+            vec![
+                node("b", names::BUCKETIZE, &["x"], r#"{"splits": [0.0]}"#, SpecDType::I64, None),
+                node("flag", names::COMPARE_SCALAR, &["b"], r#"{"op": "ge", "value": 1.0}"#, SpecDType::I64, None),
+            ],
+            &["b", "flag"],
+        );
+        assert!(!BucketizeMerge.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 2);
+    }
+
+    #[test]
+    fn select_cmp_fuse_removes_dead_masks() {
+        let mut spec = base_spec(
+            vec![
+                node("l", names::LOG1P, &["x"], "{}", SpecDType::F32, None),
+                node("m", names::COMPARE_SCALAR, &["x"], r#"{"op": "gt", "value": 0.0}"#, SpecDType::I64, None),
+                node("s", names::SELECT, &["m", "l", "x"], "{}", SpecDType::F32, None),
+            ],
+            &["s"],
+        );
+        assert!(SelectCmpFuse.run(&mut spec).unwrap());
+        let ids: Vec<&str> = spec.nodes.iter().map(|n| n.id.as_str()).collect();
+        assert_eq!(ids, vec!["l", "s"]); // mask gone
+        let fused = &spec.nodes[1];
+        assert_eq!(fused.op, names::SELECT_CMP);
+        assert_eq!(fused.inputs, vec!["x".to_string(), "l".to_string(), "x".to_string()]);
+        assert_eq!(fused.attrs.req_str("op").unwrap(), "gt");
+        assert!(!SelectCmpFuse.run(&mut spec).unwrap());
+    }
+
+    #[test]
+    fn select_cmp_fuse_leaves_output_masks() {
+        let mut spec = base_spec(
+            vec![
+                node("m", names::COMPARE_SCALAR, &["x"], r#"{"op": "gt", "value": 0.0}"#, SpecDType::I64, None),
+                node("s", names::SELECT, &["m", "x", "x"], "{}", SpecDType::F32, None),
+            ],
+            &["m", "s"],
+        );
+        assert!(!SelectCmpFuse.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 2);
     }
 
     #[test]

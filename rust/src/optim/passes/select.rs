@@ -1,0 +1,107 @@
+//! Select/compare simplification.
+//!
+//! Conditional features export as `select(compare_scalar(x, op, c), a,
+//! b)`: an i64 mask column is fully materialised just to steer the
+//! select. When the mask has no other consumer and is not a spec
+//! output, this pass rewrites the pair into ONE `select_cmp` node that
+//! evaluates the predicate inside the select — branchless under the
+//! compiled lowering (`jnp.where` over the comparison), one column walk
+//! and no mask materialisation in the interpreter — and deletes the
+//! dead compare node.
+//!
+//! Exactness: `select_cmp` replays compare_scalar's arithmetic exactly
+//! (both operands rounded through f32, compared in f64; NaN compares
+//! false, picking the else branch) and copies branch values raw, like
+//! `select`. Masks that are spec outputs or multi-use are left alone —
+//! fusing those would duplicate the compare instead of removing it.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecNode};
+use crate::ops::logical::CmpOp;
+use crate::optim::{names, Pass};
+use crate::util::json::Json;
+
+use super::{output_set, use_counts};
+
+pub struct SelectCmpFuse;
+
+/// A compare_scalar node able to fold into a consuming select.
+fn foldable_compare(node: &SpecNode) -> bool {
+    node.op == names::COMPARE_SCALAR
+        && node.inputs.len() == 1
+        && node.width.is_none()
+        && node
+            .attrs
+            .opt_str("op")
+            .map(|o| CmpOp::from_name(o).is_ok())
+            .unwrap_or(false)
+        && node.attrs.opt_f64("value").is_some()
+}
+
+impl Pass for SelectCmpFuse {
+    fn name(&self) -> &'static str {
+        "select-cmp-fuse"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let uses = use_counts(spec);
+        let outputs = output_set(spec);
+        let compare_at: HashMap<&str, usize> = spec
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| foldable_compare(n))
+            .map(|(i, n)| (n.id.as_str(), i))
+            .collect();
+
+        let mut removed = vec![false; spec.nodes.len()];
+        let mut rewrites: Vec<(usize, SpecNode)> = Vec::new();
+        for (si, node) in spec.nodes.iter().enumerate() {
+            if node.op != names::SELECT || node.inputs.len() != 3 {
+                continue;
+            }
+            let Some(&ci) = compare_at.get(node.inputs[0].as_str()) else {
+                continue;
+            };
+            let cmp = &spec.nodes[ci];
+            // the mask must die with the fusion, or there is no win
+            if removed[ci]
+                || outputs.contains(&cmp.id)
+                || uses.get(&cmp.id).copied().unwrap_or(0) != 1
+            {
+                continue;
+            }
+            let mut attrs = Json::object();
+            attrs.set("op", cmp.attrs.req_str("op")?.to_string());
+            attrs.set("value", cmp.attrs.req_f64("value")?);
+            rewrites.push((
+                si,
+                SpecNode {
+                    id: node.id.clone(),
+                    op: names::SELECT_CMP.to_string(),
+                    inputs: vec![
+                        cmp.inputs[0].clone(),
+                        node.inputs[1].clone(),
+                        node.inputs[2].clone(),
+                    ],
+                    attrs,
+                    dtype: node.dtype,
+                    width: node.width,
+                },
+            ));
+            removed[ci] = true;
+        }
+
+        if rewrites.is_empty() {
+            return Ok(false);
+        }
+        for (i, node) in rewrites {
+            spec.nodes[i] = node;
+        }
+        let mut keep = removed.iter().map(|r| !r);
+        spec.nodes.retain(|_| keep.next().unwrap());
+        Ok(true)
+    }
+}

@@ -15,7 +15,8 @@
 //! known to both the registry and [`crate::export::SpecInterpreter`].
 
 use crate::error::{KamaeError, Result};
-use crate::export::GraphSpec;
+use crate::export::{GraphSpec, SpecNode};
+use crate::util::json::Json;
 
 /// Canonical op-name constants. `rust/src/export/interp.rs` and
 /// `python/compile/model.py` implement exactly this vocabulary.
@@ -38,6 +39,11 @@ pub mod names {
     pub const PAD_LIST: &str = "pad_list";
     pub const TO_STRING: &str = "to_string";
     pub const PARSE_NUMBER: &str = "parse_number";
+    /// Fused ingress chain (produced by `optim::passes::IngressFuse`,
+    /// never by the builder). `attrs.steps` replays the original
+    /// single-input op sequence in order; the interpreter executes the
+    /// common scalar string chains as one walk over the column.
+    pub const FUSED_INGRESS: &str = "fused_ingress";
 
     // ---- graph (numeric) ops ------------------------------------------
     pub const IDENTITY: &str = "identity";
@@ -77,6 +83,11 @@ pub mod names {
     pub const MAX: &str = "max";
     pub const MOD: &str = "mod";
     pub const BUCKETIZE: &str = "bucketize";
+    /// Fused `compare_scalar(bucketize(x))` ladder (produced by
+    /// `optim::passes::BucketizeMerge`): one sorted-splits binary search
+    /// feeding the threshold compare directly, instead of materialising
+    /// the intermediate bucket-index column.
+    pub const MULTI_BUCKETIZE: &str = "multi_bucketize";
     pub const COLUMNS_AGG: &str = "columns_agg";
     pub const DATE_PART: &str = "date_part";
     pub const SUB_I64: &str = "sub_i64";
@@ -88,6 +99,11 @@ pub mod names {
     pub const BOOL_OP: &str = "bool_op";
     pub const NOT: &str = "not";
     pub const SELECT: &str = "select";
+    /// Fused `select(compare_scalar(x), a, b)` (produced by
+    /// `optim::passes::SelectCmpFuse`): the predicate is evaluated inside
+    /// the select — branchless under the compiled lowering — so the
+    /// intermediate i64 mask column is never materialised.
+    pub const SELECT_CMP: &str = "select_cmp";
     pub const IS_NAN: &str = "is_nan";
     pub const ASSEMBLE: &str = "assemble";
     pub const VECTOR_AT: &str = "vector_at";
@@ -164,14 +180,35 @@ pub struct OpInfo {
     pub rounds_f32: bool,
     /// Member of the scalar-affine family fusable into [`names::AFFINE`].
     pub affine: bool,
+    /// Estimated per-row work in abstract cost units (the registry half
+    /// of the optimizer's cost model — see [`node_cost`]). Relative
+    /// magnitudes are what matter: string processing > table lookups >
+    /// scalar math > moves.
+    pub work: u32,
+}
+
+impl OpInfo {
+    /// Override the default work estimate (const-friendly builder).
+    const fn work(mut self, w: u32) -> OpInfo {
+        self.work = w;
+        self
+    }
 }
 
 const fn ingress(name: &'static str, arity: Arity) -> OpInfo {
-    OpInfo { name, section: Section::Ingress, arity, pure: true, rounds_f32: false, affine: false }
+    OpInfo {
+        name,
+        section: Section::Ingress,
+        arity,
+        pure: true,
+        rounds_f32: false,
+        affine: false,
+        work: 6,
+    }
 }
 
 const fn graph(name: &'static str, arity: Arity, rounds_f32: bool) -> OpInfo {
-    OpInfo { name, section: Section::Graph, arity, pure: true, rounds_f32, affine: false }
+    OpInfo { name, section: Section::Graph, arity, pure: true, rounds_f32, affine: false, work: 2 }
 }
 
 const fn graph_affine(name: &'static str) -> OpInfo {
@@ -182,6 +219,7 @@ const fn graph_affine(name: &'static str) -> OpInfo {
         pure: true,
         rounds_f32: true,
         affine: true,
+        work: 2,
     }
 }
 
@@ -193,33 +231,36 @@ const fn both(name: &'static str) -> OpInfo {
         pure: true,
         rounds_f32: false,
         affine: false,
+        work: 2,
     }
 }
 
 /// The full op vocabulary.
 pub const OPS: &[OpInfo] = &[
     // ---- ingress ------------------------------------------------------
-    ingress(names::HASH64, Arity::Exact(1)),
+    ingress(names::HASH64, Arity::Exact(1)).work(8),
     ingress(names::CASE, Arity::Exact(1)),
     ingress(names::TRIM, Arity::Exact(1)),
     ingress(names::SUBSTRING, Arity::Exact(1)),
-    ingress(names::REPLACE, Arity::Exact(1)),
-    ingress(names::REGEX_REPLACE, Arity::Exact(1)),
-    ingress(names::REGEX_EXTRACT, Arity::Exact(1)),
-    ingress(names::CONCAT, Arity::AtLeast(1)),
-    ingress(names::SPLIT_PAD, Arity::Exact(1)),
-    ingress(names::JOIN, Arity::Exact(1)),
+    ingress(names::REPLACE, Arity::Exact(1)).work(8),
+    ingress(names::REGEX_REPLACE, Arity::Exact(1)).work(24),
+    ingress(names::REGEX_EXTRACT, Arity::Exact(1)).work(20),
+    ingress(names::CONCAT, Arity::AtLeast(1)).work(8),
+    ingress(names::SPLIT_PAD, Arity::Exact(1)).work(12),
+    ingress(names::JOIN, Arity::Exact(1)).work(8),
     ingress(names::STRING_MATCH, Arity::Exact(1)),
-    ingress(names::STR_LEN, Arity::Exact(1)),
-    ingress(names::DATE_TO_DAYS, Arity::Exact(1)),
-    ingress(names::TIMESTAMP_TO_SECONDS, Arity::Exact(1)),
+    ingress(names::STR_LEN, Arity::Exact(1)).work(3),
+    ingress(names::DATE_TO_DAYS, Arity::Exact(1)).work(10),
+    ingress(names::TIMESTAMP_TO_SECONDS, Arity::Exact(1)).work(10),
     ingress(names::PAD_LIST, Arity::Exact(1)),
     ingress(names::TO_STRING, Arity::Exact(1)),
     ingress(names::PARSE_NUMBER, Arity::Exact(1)),
+    // fused chain: work is steps-dependent, see node_cost
+    ingress(names::FUSED_INGRESS, Arity::Exact(1)),
     // ---- graph: identity / casts --------------------------------------
-    graph(names::IDENTITY, Arity::Exact(1), false),
-    graph(names::TO_F32, Arity::Exact(1), false),
-    graph(names::TO_I64, Arity::Exact(1), false),
+    graph(names::IDENTITY, Arity::Exact(1), false).work(0),
+    graph(names::TO_F32, Arity::Exact(1), false).work(1),
+    graph(names::TO_I64, Arity::Exact(1), false).work(1),
     // ---- graph: unary float (all round through f32) -------------------
     graph(names::LOG, Arity::Exact(1), true),
     graph(names::LOG1P, Arity::Exact(1), true),
@@ -253,9 +294,11 @@ pub const OPS: &[OpInfo] = &[
     graph(names::MAX, Arity::Exact(2), true),
     graph(names::MOD, Arity::Exact(2), true),
     // ---- graph: the rest ----------------------------------------------
+    // splits-table search: work is table-size-dependent, see node_cost
     graph(names::BUCKETIZE, Arity::Exact(1), false),
-    graph(names::COLUMNS_AGG, Arity::AtLeast(1), false),
-    graph(names::DATE_PART, Arity::Exact(1), false),
+    graph(names::MULTI_BUCKETIZE, Arity::Exact(1), false),
+    graph(names::COLUMNS_AGG, Arity::AtLeast(1), false).work(3),
+    graph(names::DATE_PART, Arity::Exact(1), false).work(6),
     graph(names::SUB_I64, Arity::Exact(2), false),
     graph(names::ADD_SCALAR_I64, Arity::Exact(1), false),
     graph(names::FLOORDIV_SCALAR_I64, Arity::Exact(1), false),
@@ -264,23 +307,24 @@ pub const OPS: &[OpInfo] = &[
     graph(names::EQ_HASH, Arity::Exact(1), false),
     graph(names::BOOL_OP, Arity::Exact(2), false),
     graph(names::NOT, Arity::Exact(1), false),
-    graph(names::SELECT, Arity::Exact(3), false),
+    graph(names::SELECT, Arity::Exact(3), false).work(3),
+    graph(names::SELECT_CMP, Arity::Exact(3), false).work(4),
     graph(names::IS_NAN, Arity::Exact(1), false),
-    graph(names::ASSEMBLE, Arity::AtLeast(1), false),
-    graph(names::VECTOR_AT, Arity::Exact(1), false),
-    graph(names::LIST_SUM, Arity::Exact(1), false),
-    graph(names::LIST_MEAN, Arity::Exact(1), false),
-    graph(names::LIST_MIN, Arity::Exact(1), false),
-    graph(names::LIST_MAX, Arity::Exact(1), false),
-    graph(names::LIST_LEN, Arity::Exact(1), false),
-    graph(names::HASH_BUCKET, Arity::Exact(1), false),
-    graph(names::BLOOM_ENCODE, Arity::Exact(1), false),
-    graph(names::VOCAB_LOOKUP, Arity::Exact(1), false),
-    graph(names::ONE_HOT, Arity::Exact(1), true),
-    graph(names::SCALE_VEC, Arity::Exact(1), true),
+    graph(names::ASSEMBLE, Arity::AtLeast(1), false).work(3),
+    graph(names::VECTOR_AT, Arity::Exact(1), false).work(1),
+    graph(names::LIST_SUM, Arity::Exact(1), false).work(3),
+    graph(names::LIST_MEAN, Arity::Exact(1), false).work(3),
+    graph(names::LIST_MIN, Arity::Exact(1), false).work(3),
+    graph(names::LIST_MAX, Arity::Exact(1), false).work(3),
+    graph(names::LIST_LEN, Arity::Exact(1), false).work(1),
+    graph(names::HASH_BUCKET, Arity::Exact(1), false).work(4),
+    graph(names::BLOOM_ENCODE, Arity::Exact(1), false).work(8),
+    graph(names::VOCAB_LOOKUP, Arity::Exact(1), false).work(6),
+    graph(names::ONE_HOT, Arity::Exact(1), true).work(10),
+    graph(names::SCALE_VEC, Arity::Exact(1), true).work(3),
     graph(names::IMPUTE, Arity::Exact(1), true),
-    graph(names::COSINE_SIMILARITY, Arity::Exact(2), true),
-    graph(names::HAVERSINE, Arity::Exact(4), true),
+    graph(names::COSINE_SIMILARITY, Arity::Exact(2), true).work(8),
+    graph(names::HAVERSINE, Arity::Exact(4), true).work(12),
     // ---- both sections ------------------------------------------------
     both(names::ELEMENT_AT),
     both(names::SLICE_LIST),
@@ -289,6 +333,67 @@ pub const OPS: &[OpInfo] = &[
 /// Look up an op by name.
 pub fn lookup(name: &str) -> Option<&'static OpInfo> {
     OPS.iter().find(|o| o.name == name)
+}
+
+// ---------------------------------------------------------------------------
+// cost model
+
+/// Fixed per-node overhead in the same units as [`OpInfo::work`]: one
+/// output-column materialisation plus one env round trip per node in the
+/// interpreter (one extra HLO op in the compiled graph). Fusion passes
+/// win by collapsing k nodes' overheads into one.
+pub const NODE_OVERHEAD: u64 = 8;
+
+/// ~floor(log2(n)) + 1 — comparisons in a binary search over n entries.
+fn search_depth(n: u64) -> u64 {
+    (64 - n.leading_zeros()) as u64
+}
+
+/// Estimated per-row cost of one spec node: [`NODE_OVERHEAD`] plus op
+/// work, attr-aware for fused ops (charged per recorded step, which is
+/// exactly what makes fusion profitable under the model: the steps keep
+/// their work, the interior overheads disappear) and for splits-table
+/// searches (work grows with table depth). Unknown ops get a
+/// conservative default.
+pub fn node_cost(node: &SpecNode) -> u64 {
+    let base = lookup(&node.op).map(|i| i.work as u64).unwrap_or(4);
+    let work = match node.op.as_str() {
+        names::AFFINE => steps_work(&node.attrs, Some(2)),
+        names::FUSED_INGRESS => steps_work(&node.attrs, None),
+        names::BUCKETIZE | names::MULTI_BUCKETIZE => {
+            let n = node.attrs.req_array("splits").map(|s| s.len()).unwrap_or(0) as u64;
+            base + search_depth(n + 1)
+        }
+        _ => base,
+    };
+    NODE_OVERHEAD + work
+}
+
+/// Summed work of a fused node's recorded steps; `flat` charges a flat
+/// per-step cost (affine steps are all scalar math), `None` charges each
+/// step its registry work.
+fn steps_work(attrs: &Json, flat: Option<u64>) -> u64 {
+    match attrs.req_array("steps") {
+        Ok(steps) => steps
+            .iter()
+            .map(|s| match flat {
+                Some(w) => w,
+                None => s
+                    .opt_str("op")
+                    .and_then(lookup)
+                    .map(|i| i.work as u64)
+                    .unwrap_or(4),
+            })
+            .sum::<u64>()
+            .max(1),
+        Err(_) => 4,
+    }
+}
+
+/// Estimated per-row cost of a whole spec (ingress + graph sections) —
+/// the objective the PassManager's fixpoint driver minimises.
+pub fn spec_cost(spec: &GraphSpec) -> u64 {
+    spec.ingress.iter().chain(spec.nodes.iter()).map(node_cost).sum()
 }
 
 /// Look up an op, erroring with context on unknown names.
@@ -521,6 +626,9 @@ mod tests {
                 (vec!["xf", "yf"], "{}", F32, None)
             }
             "bucketize" => (vec!["xf"], r#"{"splits": [0.0, 1.0]}"#, I64, None),
+            "multi_bucketize" => {
+                (vec!["xf"], r#"{"splits": [0.0, 1.0], "op": "ge", "value": 1.0}"#, I64, None)
+            }
             "columns_agg" => (vec!["xf", "yf"], r#"{"agg": "mean"}"#, F32, None),
             "date_part" => (vec!["xi"], r#"{"part": "weekday"}"#, I64, None),
             "sub_i64" => (vec!["xi", "xi"], "{}", I64, None),
@@ -531,6 +639,7 @@ mod tests {
             "bool_op" => (vec!["xi", "xi"], r#"{"op": "and"}"#, I64, None),
             "not" | "is_nan" => (vec!["xi"], "{}", I64, None),
             "select" => (vec!["xi", "xf", "yf"], "{}", F32, None),
+            "select_cmp" => (vec!["xf", "xf", "yf"], r#"{"op": "ge", "value": 0.0}"#, F32, None),
             "assemble" => (vec!["xf", "yf"], "{}", F32, Some(2)),
             "vector_at" => (vec!["vf"], r#"{"index": 1}"#, F32, None),
             "list_sum" | "list_mean" | "list_min" | "list_max" => (vec!["vf"], "{}", F32, None),
@@ -586,6 +695,12 @@ mod tests {
             "slice_list" => ("ls", r#"{"start": 0, "len": 1}"#, DType::List(Box::new(DType::Str)), Some(1)),
             "pad_list" => ("ls", r#"{"len": 3, "default": "PAD"}"#, DType::List(Box::new(DType::Str)), Some(3)),
             "parse_number" => ("d", "{}", DType::F64, None),
+            "fused_ingress" => (
+                "s",
+                r#"{"steps": [{"op": "trim"}, {"op": "case", "mode": "upper"}, {"op": "hash64"}]}"#,
+                DType::I64,
+                None,
+            ),
             other => panic!("ingress op '{other}' has no interpreter-coverage template"),
         }
     }

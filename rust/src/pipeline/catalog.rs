@@ -143,6 +143,12 @@ pub fn ltr_pipeline() -> Pipeline {
         Stage::estimator(QuantileBinEstimator::new("price", "price_decile", 10)),
         Stage::transformer(ClipTransformer::new("stay_length", "stay_clipped", Some(1.0), Some(14.0))),
         Stage::transformer(DivideConstantTransformer::new("stay_clipped", "stay_norm", 14.0)),
+        // --- threshold / seasonal conditionals ----------------------------
+        // budget flag over the price deciles (a bucketize→compare ladder),
+        // and a seasonal price signal whose summer mask is internal-only
+        Stage::transformer(CompareConstantTransformer::new("price_decile", "is_budget_decile", CmpOp::Le, 2.0)),
+        Stage::transformer(CompareConstantTransformer::new("search_doy", "is_summer", CmpOp::Ge, 172.0)),
+        Stage::transformer(IfThenElseTransformer::new("is_summer", "ppp_log", "price_log", "seasonal_price_signal")),
     ])
 }
 
@@ -173,7 +179,9 @@ pub fn ltr_inputs() -> Vec<SpecInput> {
 }
 
 /// Output columns of the LTR graph (what the ranking model consumes).
-pub const LTR_OUTPUTS: [&str; 26] = [
+/// `is_summer` and `price_decile` stay internal: the optimizer fuses
+/// them into `select_cmp` / `multi_bucketize` nodes at serving time.
+pub const LTR_OUTPUTS: [&str; 28] = [
     "search_month_sin",
     "search_month_cos",
     "search_weekday",
@@ -200,6 +208,8 @@ pub const LTR_OUTPUTS: [&str; 26] = [
     "country_indexed",
     "is_mobile",
     "star_onehot",
+    "is_budget_decile",
+    "seasonal_price_signal",
 ];
 
 /// Count of transformer applications in [`ltr_pipeline`] (the paper says

@@ -6,6 +6,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 /// Result statistics for one benchmark case, in nanoseconds.
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -27,6 +29,46 @@ impl Stats {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.mean_ns / 1e9)
     }
+
+    /// Machine-readable record for the `BENCH_*.json` trajectory files
+    /// (the Stats analogue of `ServeReport::to_json`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("name", self.name.clone());
+        j.set("iters", self.iters);
+        j.set("mean_ns", self.mean_ns);
+        j.set("p50_ns", self.p50_ns);
+        j.set("p95_ns", self.p95_ns);
+        j.set("p99_ns", self.p99_ns);
+        j.set("min_ns", self.min_ns);
+        j
+    }
+}
+
+/// Append one run record to `BENCH_<bench>.json` at the repo root (the
+/// perf-trajectory convention started by `benches/optimizer.rs`): the
+/// file holds a JSON array of runs, each `{bench, ...fields, records}`.
+/// Returns the file path written.
+pub fn append_run(
+    bench: &str,
+    fields: &[(&str, Json)],
+    records: Vec<Json>,
+) -> std::path::PathBuf {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{bench}.json"));
+    let mut runs = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_array().cloned())
+        .unwrap_or_default();
+    let mut run = Json::object();
+    run.set("bench", bench);
+    for (key, value) in fields {
+        run.set(*key, value.clone());
+    }
+    run.set("records", Json::Array(records));
+    runs.push(run);
+    std::fs::write(&path, Json::Array(runs).to_string_pretty()).expect("write bench trajectory");
+    path
 }
 
 /// Compute percentile from a sorted slice (linear interpolation).
@@ -177,6 +219,15 @@ mod tests {
         assert!(st.iters >= 10);
         assert!(st.mean_ns >= 0.0);
         assert!(st.p99_ns >= st.p50_ns);
+    }
+
+    #[test]
+    fn stats_json_roundtrip() {
+        let st = stats_from("case", &[Duration::from_millis(1), Duration::from_millis(3)]);
+        let j = st.to_json();
+        assert_eq!(j.req_str("name").unwrap(), "case");
+        assert_eq!(j.req_i64("iters").unwrap(), 2);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 
     #[test]

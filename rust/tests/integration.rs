@@ -209,6 +209,88 @@ fn export_rejects_invalid_flows() {
     assert!(res.is_err(), "string-after-graph must be rejected at export");
 }
 
+/// Satellite coverage for the `kamae optimize` CLI: export an
+/// unoptimized MovieLens spec into a tempdir, run the real binary with
+/// `--report-json`, and check the trajectory parses with node counts
+/// and cost estimates monotonically non-increasing pass over pass.
+#[test]
+fn optimize_cli_report_json_trajectory() {
+    use kamae::export::GraphSpec;
+    use kamae::optim::OptimizeLevel;
+    use kamae::util::json::Json;
+
+    // resolved at compile time for integration tests of the package that
+    // defines the binary; guarded so a renamed bin target skips loudly
+    // instead of breaking the suite
+    let Some(bin) = option_env!("CARGO_BIN_EXE_kamae") else {
+        eprintln!("SKIP: kamae binary path not provided by cargo");
+        return;
+    };
+
+    let dir = std::env::temp_dir().join(format!("kamae_cli_opt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let df = synth::gen_movielens(&synth::MovieLensConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::movielens_pipeline()
+        .fit(&Dataset::from_dataframe(df, 2))
+        .unwrap();
+    let (spec, _) = model
+        .to_graph_spec_opt(
+            "movielens",
+            catalog::movielens_inputs(),
+            &catalog::MOVIELENS_OUTPUTS,
+            OptimizeLevel::None,
+        )
+        .unwrap();
+    let spec_path = dir.join("movielens.json");
+    spec.save(&spec_path).unwrap();
+    let out_path = dir.join("movielens.opt.json");
+    let report_path = dir.join("report.json");
+
+    let status = std::process::Command::new(bin)
+        .args([
+            "optimize",
+            "--spec",
+            spec_path.to_str().unwrap(),
+            "--out",
+            out_path.to_str().unwrap(),
+            "--level",
+            "full",
+            "--report-json",
+            report_path.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success(), "kamae optimize failed: {status}");
+
+    let report = Json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+    let passes = report.req_array("passes").unwrap();
+    assert!(!passes.is_empty());
+    let mut prev_nodes = i64::MAX;
+    let mut prev_cost = i64::MAX;
+    for p in passes {
+        let (nb, na) = (
+            p.req_i64("graph_nodes_before").unwrap(),
+            p.req_i64("graph_nodes_after").unwrap(),
+        );
+        let (cb, ca) = (p.req_i64("cost_before").unwrap(), p.req_i64("cost_after").unwrap());
+        let pass = p.req_str("pass").unwrap();
+        assert!(na <= nb, "pass {pass} grew the graph: {nb} -> {na}");
+        assert!(ca <= cb, "pass {pass} raised the cost estimate: {cb} -> {ca}");
+        assert!(nb <= prev_nodes, "trajectory not monotone at {pass}");
+        assert!(cb <= prev_cost, "cost trajectory not monotone at {pass}");
+        prev_nodes = na;
+        prev_cost = ca;
+    }
+    assert!(report.req_i64("cost_after").unwrap() < report.req_i64("cost_before").unwrap());
+
+    // the rewritten spec loads and actually carries a fused ingress chain
+    let opt = GraphSpec::load(&out_path).unwrap();
+    assert_eq!(opt.outputs.len(), catalog::MOVIELENS_OUTPUTS.len());
+    assert!(opt.ingress.iter().any(|n| n.op == "fused_ingress"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn unseen_category_rate_is_handled() {
     // fit on seed A, serve data from seed B: OOV tokens must land in the

@@ -185,7 +185,10 @@ fn assert_tensors_bit_identical(a: &Tensor, b: &Tensor, what: &str) {
 /// Fit a catalog pipeline, export it unoptimized and fully optimized,
 /// and require bit-identical interpreter outputs on fresh request data
 /// (seed 999 — unseen at fit time, so OOV paths are exercised too).
-fn optimizer_parity(spec_name: &str) {
+/// `expect_fused` names fused ops that MUST appear in the optimized
+/// spec — the fusion passes have to actually fire on the example
+/// pipelines, not just exist.
+fn optimizer_parity(spec_name: &str, expect_fused: &[&str]) {
     use kamae::optim::OptimizeLevel;
 
     let (pipeline, inputs, outputs, data): (_, fn() -> Vec<kamae::export::SpecInput>, Vec<&str>, _) =
@@ -224,6 +227,12 @@ fn optimizer_parity(spec_name: &str) {
         opt.nodes.len()
     );
     assert_eq!(opt.outputs, raw.outputs, "{spec_name}: output contract changed");
+    for op in expect_fused {
+        assert!(
+            opt.nodes.iter().any(|n| n.op == *op) || opt.ingress.iter().any(|n| n.op == *op),
+            "{spec_name}: expected fused op '{op}' in the optimized spec"
+        );
+    }
 
     // serving loads specs from JSON — round-trip the optimized one
     let opt = GraphSpec::from_json(
@@ -243,12 +252,17 @@ fn optimizer_parity(spec_name: &str) {
 
 #[test]
 fn optimizer_parity_movielens() {
-    optimizer_parity("movielens");
+    // the Genres split_pad -> hash64 chain must fuse
+    optimizer_parity("movielens", &["fused_ingress"]);
 }
 
 #[test]
 fn optimizer_parity_ltr() {
-    optimizer_parity("ltr");
+    // all three round-2 fusions plus the round-1 affine fusion must fire:
+    // amenities split_pad->hash64 (ingress chain), the price-decile
+    // bucketize->compare ladder, the seasonal select-over-compare, and
+    // the cyclic month affine ladders
+    optimizer_parity("ltr", &["fused_ingress", "affine", "multi_bucketize", "select_cmp"]);
 }
 
 #[test]

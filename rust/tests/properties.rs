@@ -196,11 +196,14 @@ fn interp_engine_parity_random_strings() {
 #[test]
 fn optimizer_preserves_interpreter_outputs_bitwise() {
     // the optim contract under adversarial float inputs (NaN-producing
-    // logs, huge magnitudes, negatives): optimized and unoptimized
-    // specs must agree bit-for-bit, not just within tolerance. The
-    // pipeline is built so every pass fires: a dead branch (DCE), a
-    // duplicated subexpression (CSE), a multiply-by-one on a rounded
-    // producer (const fold) and a scalar-affine ladder (fusion).
+    // logs, huge magnitudes, negatives) and adversarial strings:
+    // optimized and unoptimized specs must agree bit-for-bit, not just
+    // within tolerance. The pipeline is built so every pass fires: a
+    // dead branch (DCE), a duplicated subexpression (CSE), a
+    // multiply-by-one on a rounded producer (const fold), a
+    // scalar-affine ladder (AffineFuse), a trim→case→hash64 string
+    // chain (IngressFuse), a bucketize→compare ladder (BucketizeMerge)
+    // and a select over a dead compare mask (SelectCmpFuse).
     use kamae::optim::OptimizeLevel;
     use kamae::runtime::TensorData;
 
@@ -222,6 +225,16 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
                 Stage::transformer(MultiplyConstantTransformer::new("x_log_dup", "t3", 2.0)),
                 // dead branch: dropped by DCE
                 Stage::transformer(SqrtTransformer::new("x", "x_dead")),
+                // ingress chain: trim -> case -> hash64, fused by IngressFuse
+                Stage::transformer(TrimTransformer::new("s", "s_trim")),
+                Stage::transformer(StringCaseTransformer::new("s_trim", "s_up", CaseMode::Upper)),
+                Stage::transformer(HashIndexTransformer::new("s_up", "s_up_idx", 257)),
+                // bucketize -> compare ladder, fused by BucketizeMerge
+                Stage::transformer(BucketizeTransformer::new("x", "x_bucket", vec![-1.0, 0.0, 1.0])),
+                Stage::transformer(CompareConstantTransformer::new("x_bucket", "x_high", CmpOp::Ge, 2.0)),
+                // select over a single-use compare mask, fused by SelectCmpFuse
+                Stage::transformer(CompareConstantTransformer::new("x_log", "x_pos", CmpOp::Gt, 0.0)),
+                Stage::transformer(IfThenElseTransformer::new("x_pos", "t3", "x_log", "sel")),
                 Stage::estimator(
                     kamae::estimators::StringIndexEstimator::new("s", "s_vocab").num_oov(2),
                 ),
@@ -234,7 +247,7 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
                     SpecInput { name: "x".into(), dtype: DType::F64, width: None },
                 ]
             };
-            let outputs = ["s_idx", "s_vocab", "t2_noop", "t3", "x_log"];
+            let outputs = ["s_idx", "s_vocab", "t2_noop", "t3", "x_log", "s_up_idx", "x_high", "sel"];
             let (raw, _) = model
                 .to_graph_spec_opt("prop", inputs(), &outputs, OptimizeLevel::None)
                 .map_err(|e| e.to_string())?;
@@ -247,6 +260,13 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
                     raw.nodes.len(),
                     opt.nodes.len()
                 ));
+            }
+            for fused_op in ["fused_ingress", "multi_bucketize", "select_cmp", "affine"] {
+                let present = opt.nodes.iter().any(|n| n.op == fused_op)
+                    || opt.ingress.iter().any(|n| n.op == fused_op);
+                if !present {
+                    return Err(format!("fusion '{fused_op}' did not fire"));
+                }
             }
             let a = kamae::export::SpecInterpreter::new(raw).run(df).map_err(|e| e.to_string())?;
             let b = kamae::export::SpecInterpreter::new(opt).run(df).map_err(|e| e.to_string())?;
