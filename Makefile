@@ -33,7 +33,9 @@ bench-optimizer:
 
 # CI smoke flavour of bench-optimizer: reduced rows/requests, and exits
 # non-zero if optimized throughput regresses below the unoptimized
-# baseline (the gate the bench-smoke CI job enforces).
+# baseline, if multilane-bucketize / cross-output-dedup fail to fire on
+# the LTR catalog, or if the full pass set does not beat the PR 2 pass
+# set's cost estimate (the gates the bench-smoke CI job enforces).
 bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
 

@@ -54,7 +54,8 @@ fn main() {
         threads *= 2;
     }
     table.print();
-    let path = append_run("fit_scaling", &[("rows", Json::Int(rows as i64))], records);
+    let path = append_run("fit_scaling", &[("rows", Json::Int(rows as i64))], records)
+        .expect("bench trajectory");
     println!("\nappended run to {}", path.display());
     println!("\nmachine parallelism: {max_threads} worker threads available");
     println!("shape check: speedup should grow with threads (sublinearly once");

@@ -153,7 +153,8 @@ fn main() {
     }
 
     table.print();
-    let path = append_run("indexing", &[("rows", Json::Int(rows as i64))], records);
+    let path = append_run("indexing", &[("rows", Json::Int(rows as i64))], records)
+        .expect("bench trajectory");
     println!("\nappended run to {}", path.display());
     println!("\nshape check: bloom with k*bins << cardinality should reach");
     println!("near-vocab collision rates at a fraction of the embedding rows");

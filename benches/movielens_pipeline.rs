@@ -61,6 +61,7 @@ fn main() {
         stage.transform(&mut current).unwrap();
     }
     stage_table.print();
-    let path = append_run("movielens_pipeline", &[("rows", Json::Int(rows as i64))], records);
+    let path = append_run("movielens_pipeline", &[("rows", Json::Int(rows as i64))], records)
+        .expect("bench trajectory");
     println!("\nappended run to {}", path.display());
 }

@@ -97,7 +97,7 @@ fn main() {
     records.push(record("ltr", rows, native_per_row, row_per_row));
 
     table.print();
-    let path = append_run("native_vs_udf", &[], records);
+    let path = append_run("native_vs_udf", &[], records).expect("bench trajectory");
     println!("\nappended run to {}", path.display());
     println!("shape check: native should win by >=5x, growing with pipeline depth.");
 }

@@ -14,16 +14,32 @@
 //! offline-only features, prunable ingress hashing, scalar-affine
 //! ladders, bucketize/compare ladders and select-over-compare branches.
 //!
+//! Two additional sections cover the PR 3 multi-output passes:
+//!
+//! * **pass-set cost comparison** — the LTR spec optimized with the
+//!   PR 2 pass list vs the full list (adds MultiLaneBucketize +
+//!   CrossOutputDedup); the full set must land strictly below,
+//! * **multi-variant dedup** — full + lite LTR variants merged into one
+//!   spec; CrossOutputDedup must fire and the merged optimized cost
+//!   must undercut the sum of the separately-optimized variants.
+//!
 //! Flags (also settable via env for CI):
 //!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + request count
 //!   --gate  / KAMAE_BENCH_GATE    exit non-zero if optimized throughput
-//!                                 regresses below 90% of unoptimized
+//!                                 regresses below 90% of unoptimized,
+//!                                 if either new pass fails to fire on
+//!                                 the LTR catalog, or if either cost
+//!                                 comparison above fails
 
 use std::time::{Duration, Instant};
 
 use kamae::engine::Dataset;
 use kamae::export::GraphSpec;
-use kamae::optim::OptimizeLevel;
+use kamae::optim::passes::{
+    AffineFuse, BucketizeMerge, CommonSubexprElim, ConstFold, DeadNodeElim, IdentityElim,
+    IngressFuse, SelectCmpFuse,
+};
+use kamae::optim::{optimize, spec_cost, OptReport, OptimizeLevel, Pass, PassManager};
 use kamae::pipeline::catalog;
 use kamae::serving::{request_pool, Backend, InterpretedBackend, LatencyRecorder};
 use kamae::util::bench::{append_run, fmt_ns, Table};
@@ -36,7 +52,10 @@ const ROWS_PER_REQUEST: usize = 8;
 /// still catching real pessimisation).
 const GATE_RATIO: f64 = 0.9;
 
-fn export_pair(name: &str, fit_rows: usize) -> (GraphSpec, GraphSpec, kamae::optim::OptReport) {
+fn export_pair(
+    name: &str,
+    fit_rows: usize,
+) -> (kamae::pipeline::PipelineModel, GraphSpec, GraphSpec, OptReport) {
     let (pipeline, inputs, outputs, data): (_, fn() -> Vec<kamae::export::SpecInput>, Vec<&str>, _) =
         match name {
             "movielens" => (
@@ -62,7 +81,7 @@ fn export_pair(name: &str, fit_rows: usize) -> (GraphSpec, GraphSpec, kamae::opt
     let (raw, _) = model.to_graph_spec_opt(name, inputs(), &outputs, OptimizeLevel::None).unwrap();
     let (opt, report) =
         model.to_graph_spec_opt(name, inputs(), &outputs, OptimizeLevel::Full).unwrap();
-    (raw, opt, report)
+    (model, raw, opt, report)
 }
 
 fn drive(spec: GraphSpec, label: &str, spec_name: &str, requests: usize) -> kamae::serving::ServeReport {
@@ -84,6 +103,44 @@ fn drive(spec: GraphSpec, label: &str, spec_name: &str, requests: usize) -> kama
     recorder.report(&format!("{spec_name}/{label}"), requests, t0.elapsed(), busy)
 }
 
+/// The PR 2 pass list (everything except the PR 3 multi-output passes),
+/// for the cost-trajectory comparison on an identical catalog.
+fn pr2_pass_manager() -> PassManager {
+    let passes: Vec<Box<dyn Pass>> = vec![
+        Box::new(DeadNodeElim),
+        Box::new(IdentityElim),
+        Box::new(ConstFold),
+        Box::new(IdentityElim),
+        Box::new(CommonSubexprElim),
+        Box::new(AffineFuse),
+        Box::new(IngressFuse),
+        Box::new(BucketizeMerge),
+        Box::new(SelectCmpFuse),
+        Box::new(DeadNodeElim),
+    ];
+    PassManager::new(passes)
+}
+
+/// Multi-variant serving costs over the already-fitted LTR model:
+/// export the full + lite variants, merge, optimize. Returns (full,
+/// lite, merged-optimized) spec costs and the merged run's report.
+fn variant_costs(model: &kamae::pipeline::PipelineModel) -> (u64, u64, u64, OptReport) {
+    let (full, _) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::Full)
+        .unwrap();
+    let (lite, _) = model
+        .to_graph_spec_opt(
+            "ltr_lite",
+            catalog::ltr_inputs(),
+            &catalog::LTR_LITE_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    let merged = GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged_opt, report) = optimize(merged, OptimizeLevel::Full).unwrap();
+    (spec_cost(&full), spec_cost(&lite), spec_cost(&merged_opt), report)
+}
+
 /// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
 fn env_flag(name: &str) -> bool {
     std::env::var(name)
@@ -102,10 +159,47 @@ fn main() {
 
     let mut records = Vec::new();
     let mut gate_failures = Vec::new();
+    let mut ltr_model = None;
     for spec_name in ["movielens", "ltr"] {
         println!("== {spec_name} ==\n");
-        let (raw, opt, report) = export_pair(spec_name, fit_rows);
+        let (model, raw, opt, report) = export_pair(spec_name, fit_rows);
         println!("{report}\n");
+        if spec_name == "ltr" {
+            // keep the fitted model: the multi-variant section below
+            // re-exports it instead of paying a second fit
+            ltr_model = Some(model);
+            // the sibling lead_time fan-out must actually merge
+            let multilane_fired = report
+                .stats
+                .iter()
+                .any(|s| s.pass == "multilane-bucketize" && s.changed);
+            // pass-set trajectory: PR 2 passes vs the full set, same spec
+            let (pr2_spec, _) = pr2_pass_manager()
+                .run(raw.clone(), OptimizeLevel::Full)
+                .unwrap();
+            let (pr2_cost, full_cost) = (spec_cost(&pr2_spec), spec_cost(&opt));
+            println!(
+                "ltr optimized est. cost: PR2 pass set {pr2_cost} -> full pass set {full_cost}\n"
+            );
+            let mut rec = Json::object();
+            rec.set("spec", "ltr");
+            rec.set("mode", "pass-set-cost");
+            rec.set("cost_pr2_passes", pr2_cost as i64);
+            rec.set("cost_full_passes", full_cost as i64);
+            rec.set("multilane_fired", multilane_fired);
+            records.push(rec);
+            if gate {
+                if !multilane_fired {
+                    gate_failures
+                        .push("ltr: multilane-bucketize did not fire on the catalog".into());
+                }
+                if full_cost >= pr2_cost {
+                    gate_failures.push(format!(
+                        "ltr: full pass set cost {full_cost} not below PR2 pass set {pr2_cost}"
+                    ));
+                }
+            }
+        }
         let mut table =
             Table::new(&["mode", "graph nodes", "ingress", "throughput", "p50", "p95", "p99"]);
         let mut rps = Vec::new();
@@ -137,6 +231,43 @@ fn main() {
         records.push(report.to_json());
     }
 
+    // --- multi-variant serving: shared-prefix dedup ---------------------
+    println!("== ltr multi-variant (full + lite) ==\n");
+    let (full_cost, lite_cost, merged_cost, merged_report) =
+        variant_costs(&ltr_model.expect("ltr fitted above"));
+    println!("{merged_report}\n");
+    let dedup_fired = merged_report
+        .stats
+        .iter()
+        .any(|s| s.pass == "cross-output-dedup" && s.changed);
+    println!(
+        "est. cost: full {full_cost} + lite {lite_cost} = {} separate, {merged_cost} merged \
+         ({:+.1}%)\n",
+        full_cost + lite_cost,
+        100.0 * (merged_cost as f64 / (full_cost + lite_cost) as f64 - 1.0)
+    );
+    let mut rec = Json::object();
+    rec.set("spec", "ltr+ltr_lite");
+    rec.set("mode", "variant-dedup-cost");
+    rec.set("cost_full", full_cost as i64);
+    rec.set("cost_lite", lite_cost as i64);
+    rec.set("cost_merged_optimized", merged_cost as i64);
+    rec.set("dedup_fired", dedup_fired);
+    records.push(rec);
+    records.push(merged_report.to_json());
+    if gate {
+        if !dedup_fired {
+            gate_failures
+                .push("ltr+ltr_lite: cross-output-dedup did not fire on the merged spec".into());
+        }
+        if merged_cost >= full_cost + lite_cost {
+            gate_failures.push(format!(
+                "ltr+ltr_lite: merged cost {merged_cost} not below separate {}",
+                full_cost + lite_cost
+            ));
+        }
+    }
+
     // append this run to the perf trajectory
     let path = append_run(
         "optimizer",
@@ -146,7 +277,8 @@ fn main() {
             ("quick", Json::Bool(quick)),
         ],
         records,
-    );
+    )
+    .expect("bench trajectory");
     println!("appended run to {}", path.display());
 
     if !gate_failures.is_empty() {

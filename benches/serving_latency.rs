@@ -58,7 +58,7 @@ fn main() {
         }
     }
     table.print();
-    let path = append_run("serving_latency", &[], records);
+    let path = append_run("serving_latency", &[], records).expect("bench trajectory");
     println!("\nappended run to {}", path.display());
     let avg = reductions.iter().sum::<f64>() / reductions.len() as f64;
     println!("mean per-call latency delta compiled vs MLeap-like: {:+.0}%", -avg);

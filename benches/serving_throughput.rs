@@ -55,7 +55,8 @@ fn main() {
         "serving_throughput",
         &[("spec", Json::Str("ltr".into()))],
         records,
-    );
+    )
+    .expect("bench trajectory");
     println!("appended run to {}", path.display());
     println!("shape check: compiled sustains 200 rps with p99 well under the");
     println!("mleap-like backend's p50.");

@@ -235,6 +235,42 @@ def _op_impute(args, a):
     return jnp.where(missing, _F(a["fill"]), x)
 
 
+def _eval_lanes(node, args, a):
+    """Multi-output node -> [(lane_name, value)].
+
+    Mirrors ``rust/src/export/interp.rs::eval_multi``: the only
+    multi-output op is the multi-lane ``multi_bucketize`` produced by the
+    rust ``MultiLaneBucketize`` pass. ONE branchless ``_bsearch`` over
+    the merged splits table feeds every lane:
+
+    * ``bucket`` lanes gather their original bucket index through the
+      lane's ``remap`` table (composing ``bucketize``'s lowering exactly),
+    * ``compare`` lanes replay ``compare_scalar``'s f32 compare on the
+      raw input (they share the node, not the search),
+    * ``bucket_compare`` lanes compose the remap gather with
+      ``multi_bucketize``'s threshold compare, op for op.
+    """
+    if node["op"] != "multi_bucketize":
+        raise ValueError(f"multi-output graph op: {node['op']}")
+    x = _f(args[0])
+    m = _bsearch(jnp.asarray(a["splits"], dtype=_F), x, side="right")
+    out = []
+    for lane in node["lanes"]:
+        la = lane["attrs"]
+        kind = la["kind"]
+        if kind == "bucket":
+            val = jnp.asarray(la["remap"], dtype=_I)[m]
+        elif kind == "compare":
+            val = _CMP[la["op"]](x, _F(la["value"])).astype(_I)
+        elif kind == "bucket_compare":
+            bucket = jnp.asarray(la["remap"], dtype=_I)[m]
+            val = _CMP[la["op"]](_f(bucket), _F(la["value"])).astype(_I)
+        else:
+            raise ValueError(f"multi_bucketize lane kind: {kind}")
+        out.append((lane["name"], val))
+    return out
+
+
 _OPS = {
     "identity": lambda args, a: args[0],
     "to_f32": lambda args, a: _f(args[0]),
@@ -396,6 +432,15 @@ def build_fn(spec):
             ins = [env[i] for i in node["inputs"]]
             op = node["op"]
             attrs = node.get("attrs", {})
+            if node.get("lanes"):
+                # multi-output node: lanes bind under both the qualified
+                # "id.lane" reference and the bare lane name (the latter
+                # is how spec outputs resolve) — mirroring the rust
+                # interpreter's env contract
+                for lane_name, val in _eval_lanes(node, ins, attrs):
+                    env[f"{node['id']}.{lane_name}"] = val
+                    env[lane_name] = val
+                continue
             if op in _UNARY:
                 val = _UNARY[op](_f(ins[0]), attrs)
             elif op in _BINARY:

@@ -241,3 +241,72 @@ def test_select_cmp_matches_unfused_pair():
         np.testing.assert_array_equal(
             np.asarray(fused).view(np.uint32), np.asarray(sep).view(np.uint32)
         )
+
+
+# ---------------------------------------------------------------------------
+# multi-output lanes (MultiLaneBucketize on the rust side)
+
+
+def _lanes_node():
+    # merged splits = sorted union of [0.0, 1.0], [0.5] and the ladder's
+    # [-1.0, 1.0] -> [-1.0, 0.0, 0.5, 1.0]
+    return {
+        "id": "x__lanes",
+        "op": "multi_bucketize",
+        "inputs": ["x"],
+        "attrs": {"splits": [-1.0, 0.0, 0.5, 1.0]},
+        "dtype": "int64",
+        "width": None,
+        "lanes": [
+            {"name": "b1", "attrs": {"kind": "bucket", "remap": [0, 0, 1, 1, 2]},
+             "dtype": "int64", "width": None},
+            {"name": "b2", "attrs": {"kind": "bucket", "remap": [0, 0, 0, 1, 1]},
+             "dtype": "int64", "width": None},
+            {"name": "c1", "attrs": {"kind": "compare", "op": "gt", "value": 0.0},
+             "dtype": "int64", "width": None},
+            {"name": "f", "attrs": {"kind": "bucket_compare",
+                                    "remap": [0, 1, 1, 1, 2], "op": "ge", "value": 2.0},
+             "dtype": "int64", "width": None},
+        ],
+    }
+
+
+def test_multilane_bucketize_matches_sibling_nodes():
+    # one merged search must reproduce the sibling nodes exactly
+    x = jnp.asarray(np.random.RandomState(23).randn(512).astype(np.float32) * 2.0)
+    node = _lanes_node()
+    lanes = dict(model._eval_lanes(node, [x], node["attrs"]))
+    b1 = model._OPS["bucketize"]([x], {"splits": [0.0, 1.0]})
+    b2 = model._OPS["bucketize"]([x], {"splits": [0.5]})
+    c1 = model._OPS["compare_scalar"]([x], {"op": "gt", "value": 0.0})
+    f = model._OPS["multi_bucketize"]([x], {"splits": [-1.0, 1.0], "op": "ge", "value": 2.0})
+    np.testing.assert_array_equal(np.asarray(lanes["b1"]), np.asarray(b1))
+    np.testing.assert_array_equal(np.asarray(lanes["b2"]), np.asarray(b2))
+    np.testing.assert_array_equal(np.asarray(lanes["c1"]), np.asarray(c1))
+    np.testing.assert_array_equal(np.asarray(lanes["f"]), np.asarray(f))
+
+
+def test_multilane_spec_binds_qualified_and_bare_names():
+    # consumers may address a lane as "<id>.<lane>" or by its bare name
+    # (spec outputs use the latter); the compiled fn must bind both
+    spec = {
+        "name": "lanes",
+        "inputs": [{"name": "x", "dtype": "float64", "width": None}],
+        "ingress": [],
+        "graph_inputs": ["x"],
+        "nodes": [
+            _lanes_node(),
+            {"id": "n", "op": "not", "inputs": ["x__lanes.c1"], "attrs": {},
+             "dtype": "int64", "width": None},
+        ],
+        "outputs": ["b1", "f", "n"],
+    }
+    fn = model.build_fn(spec)
+    x = jnp.array([-2.0, -0.5, 0.25, 0.75, 3.0], dtype=jnp.float32)
+    b1, f, n = fn(x)
+    np.testing.assert_array_equal(np.asarray(b1), [0, 0, 1, 1, 2])
+    np.testing.assert_array_equal(np.asarray(f), [0, 0, 0, 0, 1])
+    np.testing.assert_array_equal(np.asarray(n), [1, 1, 0, 0, 0])
+    # and it still lowers under jit with the positional input contract
+    lowered = jax.jit(fn, keep_unused=True).lower(*model.example_args(spec, 4))
+    assert "tensor<4x" in lowered.as_text()

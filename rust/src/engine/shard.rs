@@ -31,8 +31,11 @@ pub fn imbalance(data: &Dataset) -> f64 {
 
 /// Re-cut into `n` even contiguous shards (a full shuffle-free rewrite;
 /// Spark's `repartition` without the hash shuffle, sufficient for the
-/// row-independent transforms this engine runs).
+/// row-independent transforms this engine runs). `n = 0` clamps to 1,
+/// matching [`coalesce`] — degenerate targets must not depend on which
+/// downstream constructor happens to guard them.
 pub fn rebalance(data: &Dataset, n: usize) -> Result<Dataset> {
+    let n = n.max(1);
     let all = data.collect()?;
     Ok(Dataset::from_dataframe(all, n).with_threads(data.threads()))
 }
@@ -80,6 +83,25 @@ mod tests {
         let r = rebalance(&d, 3).unwrap();
         assert_eq!(r.num_rows(), 102);
         assert!(imbalance(&r) < 0.1);
+    }
+
+    #[test]
+    fn degenerate_targets_clamp_consistently() {
+        // property-style sweep over n ∈ {0, 1, partitions, 10×partitions}:
+        // rebalance and coalesce must both survive every target (n = 0
+        // included), preserve content, and produce ≥ 1 partition
+        let d = ds(&[7, 0, 5, 3]);
+        let parts = d.num_partitions();
+        let content = d.collect().unwrap();
+        for n in [0usize, 1, parts, 10 * parts] {
+            let r = rebalance(&d, n).unwrap();
+            let c = coalesce(&d, n).unwrap();
+            for (what, out) in [("rebalance", &r), ("coalesce", &c)] {
+                assert!(out.num_partitions() >= 1, "{what}({n}) produced no partitions");
+                assert_eq!(out.collect().unwrap(), content, "{what}({n}) changed rows");
+            }
+            assert!(r.num_partitions() <= n.max(1), "rebalance({n}) overshot");
+        }
     }
 
     #[test]

@@ -12,6 +12,11 @@
 //!   inputs exactly once,
 //! * rejects ill-formed flows (string op consuming a graph product,
 //!   ragged lists entering the graph, unknown columns).
+//!
+//! The builder only ever emits single-output nodes (`lanes` stays
+//! empty): multi-output nodes ([`crate::export::SpecLane`]) are an
+//! optimizer product, created when `optim::passes::MultiLaneBucketize`
+//! merges sibling nodes after export.
 
 use std::collections::HashMap;
 
@@ -130,6 +135,7 @@ impl SpecBuilder {
             attrs,
             dtype: SpecDType::for_engine(&out_dtype),
             width: out_width,
+            lanes: vec![],
         });
         self.cols.insert(
             out.to_string(),
@@ -161,6 +167,7 @@ impl SpecBuilder {
             attrs,
             dtype: out_dtype,
             width: out_width,
+            lanes: vec![],
         });
         let engine_dtype = match out_dtype {
             SpecDType::F32 => DType::F64, // engine computes f64
@@ -265,6 +272,7 @@ impl SpecBuilder {
                         attrs: Json::object(),
                         dtype,
                         width,
+                        lanes: vec![],
                     });
                     outs.push(id);
                 }

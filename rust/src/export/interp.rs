@@ -78,11 +78,23 @@ impl GVal {
 /// Interpreter over one [`GraphSpec`].
 pub struct SpecInterpreter {
     spec: GraphSpec,
+    /// Every graph-section name the spec actually reads (node inputs +
+    /// outputs), computed once so multi-output lane binding does not
+    /// clone values for alias names nothing consumes (each lane may be
+    /// addressed as `"id.lane"` AND by its bare name).
+    referenced: std::collections::HashSet<String>,
 }
 
 impl SpecInterpreter {
     pub fn new(spec: GraphSpec) -> SpecInterpreter {
-        SpecInterpreter { spec }
+        let referenced = spec
+            .nodes
+            .iter()
+            .flat_map(|n| n.inputs.iter())
+            .chain(spec.outputs.iter())
+            .cloned()
+            .collect();
+        SpecInterpreter { spec, referenced }
     }
 
     pub fn spec(&self) -> &GraphSpec {
@@ -138,8 +150,29 @@ impl SpecInterpreter {
             env.insert(name.clone(), column_to_gval(df.column(name)?)?);
         }
         for node in &self.spec.nodes {
-            let val = eval_node(node, &env)?;
-            env.insert(node.id.clone(), val);
+            if node.lanes.is_empty() {
+                let val = eval_node(node, &env)?;
+                env.insert(node.id.clone(), val);
+            } else {
+                for (lane_name, val) in eval_multi(node, &env)? {
+                    // lanes bind under the qualified `id.lane` reference
+                    // AND the bare lane name (spec outputs resolve by
+                    // bare name; rewired consumers use the qualified
+                    // one) — but only actually-consumed names get a
+                    // binding, so nothing is cloned for unused aliases
+                    let qualified = node.lane_ref(&lane_name);
+                    if self.referenced.contains(&qualified) {
+                        if self.referenced.contains(&lane_name) {
+                            env.insert(qualified, val.clone());
+                            env.insert(lane_name, val);
+                        } else {
+                            env.insert(qualified, val);
+                        }
+                    } else {
+                        env.insert(lane_name, val);
+                    }
+                }
+            }
         }
         self.spec
             .outputs
@@ -939,6 +972,106 @@ fn eval_node(node: &SpecNode, env: &HashMap<String, GVal>) -> Result<GVal> {
     })
 }
 
+/// Evaluate a multi-output node: one shared pass over the input produces
+/// every declared lane (`(bare_lane_name, value)` pairs).
+///
+/// Currently `multi_bucketize` is the only multi-output op (produced by
+/// `optim::passes::MultiLaneBucketize`): the merged sorted-splits binary
+/// search runs ONCE per value, and each lane replays its original
+/// sibling node's exact arithmetic on top of it —
+///
+/// * `kind: "bucket"` — a merged-away `bucketize(x, splits_i)`. The
+///   lane's `remap` table recovers the original bucket index from the
+///   merged index (`remap[k]` = number of `splits_i` entries ≤ the k-th
+///   merged prefix), exact on raw f64 because `splits_i` ⊆ merged splits
+///   and both are sorted.
+/// * `kind: "compare"` — a merged-away `compare_scalar(x, op, v)`,
+///   replayed with its f32 operand rounding (shares the node's single
+///   column walk, not the search — the rounding makes the search result
+///   unusable for it).
+/// * `kind: "bucket_compare"` — a merged-away single-output
+///   `multi_bucketize` ladder (PR 2's bucketize→compare fusion):
+///   remapped bucket index, then the f32-rounded threshold compare.
+///
+/// All three are bit-identical to the sibling nodes the optimizer merged.
+fn eval_multi(node: &SpecNode, env: &HashMap<String, GVal>) -> Result<Vec<(String, GVal)>> {
+    if node.op != "multi_bucketize" {
+        return Err(KamaeError::Unsupported(format!(
+            "multi-output graph op: {}",
+            node.op
+        )));
+    }
+    let input_name = node.inputs.first().ok_or_else(|| {
+        KamaeError::InvalidConfig(format!("multi-output node {} has no input", node.id))
+    })?;
+    let x = env
+        .get(input_name)
+        .ok_or_else(|| KamaeError::ColumnNotFound(format!("{input_name} (graph value)")))?;
+    let splits = attr_f64_array(&node.attrs, "splits")?;
+    let xs = x.as_f();
+    // the shared search: merged bucket index per value, raw f64 like
+    // `bucketize`
+    let merged: Vec<usize> = xs
+        .iter()
+        .map(|&v| splits.partition_point(|&s| s <= v))
+        .collect();
+    let mut out = Vec::with_capacity(node.lanes.len());
+    for lane in &node.lanes {
+        let a = &lane.attrs;
+        let remap_for = |a: &Json| -> Result<Vec<i64>> {
+            let remap = attr_i64_array(a, "remap")?;
+            if remap.len() != splits.len() + 1 {
+                return Err(KamaeError::Serde(format!(
+                    "lane {}: remap table has {} entries for {} splits",
+                    lane.name,
+                    remap.len(),
+                    splits.len()
+                )));
+            }
+            Ok(remap)
+        };
+        let val = match a.req_str("kind")? {
+            "bucket" => {
+                let remap = remap_for(a)?;
+                GVal::I(merged.iter().map(|&m| remap[m]).collect(), lane.width)
+            }
+            "compare" => {
+                let op = ops::logical::CmpOp::from_name(a.req_str("op")?)?;
+                let value = a.req_f64("value")?;
+                GVal::I(
+                    xs.iter()
+                        .map(|&v| op.apply_f64(v as f32 as f64, value as f32 as f64) as i64)
+                        .collect(),
+                    lane.width,
+                )
+            }
+            "bucket_compare" => {
+                let remap = remap_for(a)?;
+                let op = ops::logical::CmpOp::from_name(a.req_str("op")?)?;
+                let value = a.req_f64("value")?;
+                GVal::I(
+                    merged
+                        .iter()
+                        .map(|&m| {
+                            let bucket = remap[m];
+                            op.apply_f64(bucket as f64 as f32 as f64, value as f32 as f64)
+                                as i64
+                        })
+                        .collect(),
+                    lane.width,
+                )
+            }
+            other => {
+                return Err(KamaeError::Unsupported(format!(
+                    "multi_bucketize lane kind: {other}"
+                )))
+            }
+        };
+        out.push((lane.name.clone(), val));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1024,6 +1157,7 @@ mod tests {
             attrs: Json::parse(attrs).unwrap(),
             dtype: SpecDType::I64,
             width: None,
+            lanes: vec![],
         };
         let spec = |ingress: Vec<SpecNode>, tail: &str, width: Option<usize>| {
             let mut ingress = ingress;
@@ -1042,6 +1176,7 @@ mod tests {
                     attrs: Json::object(),
                     dtype: SpecDType::I64,
                     width,
+                    lanes: vec![],
                 }],
                 outputs: vec!["out".into()],
             }
@@ -1115,6 +1250,7 @@ mod tests {
             attrs: Json::parse(attrs).unwrap(),
             dtype,
             width: None,
+            lanes: vec![],
         };
         let run = |nodes: Vec<SpecNode>, outputs: &[&str]| {
             SpecInterpreter::new(GraphSpec {
@@ -1158,6 +1294,86 @@ mod tests {
         for (p, q) in a.iter().zip(b.iter()) {
             assert_eq!(p.to_bits(), q.to_bits(), "select_cmp diverged");
         }
+    }
+
+    #[test]
+    fn multi_lane_bucketize_matches_sibling_nodes() {
+        // one multi-output node with bucket / compare / bucket_compare
+        // lanes must reproduce the separate sibling nodes bit-for-bit,
+        // NaN and boundary values included
+        use crate::export::SpecLane;
+
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64(vec![-2.0, -1.0, -0.5, 0.0, 0.25, 0.5, 1.0, 7.0, f64::NAN]),
+        )])
+        .unwrap();
+        let inputs = vec![SpecInput { name: "x".into(), dtype: DType::F64, width: None }];
+        let node = |id: &str, op: &str, ins: &[&str], attrs: &str| SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+            lanes: vec![],
+        };
+        let run = |nodes: Vec<SpecNode>, outputs: &[&str]| {
+            SpecInterpreter::new(GraphSpec {
+                name: "t".into(),
+                inputs: inputs.clone(),
+                ingress: vec![],
+                graph_inputs: vec!["x".into()],
+                nodes,
+                outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            })
+            .run(&df)
+            .unwrap()
+        };
+
+        let siblings = run(
+            vec![
+                node("b1", "bucketize", &["x"], r#"{"splits": [-1.0, 0.0, 1.0]}"#),
+                node("b2", "bucketize", &["x"], r#"{"splits": [0.5]}"#),
+                node("c1", "compare_scalar", &["x"], r#"{"op": "gt", "value": 0.0}"#),
+                node(
+                    "f",
+                    "multi_bucketize",
+                    &["x"],
+                    r#"{"splits": [-1.0, 0.0], "op": "ge", "value": 2.0}"#,
+                ),
+                node("n", "not", &["c1"], "{}"),
+            ],
+            &["b1", "b2", "c1", "f", "n"],
+        );
+
+        // merged splits: sorted union [-1, 0, 0.5, 1]
+        let lane = |name: &str, attrs: &str| SpecLane {
+            name: name.into(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+        };
+        let mut merged_node = node("x__lanes", "multi_bucketize", &["x"], r#"{"splits": [-1.0, 0.0, 0.5, 1.0]}"#);
+        merged_node.lanes = vec![
+            lane("b1", r#"{"kind": "bucket", "remap": [0, 1, 2, 2, 3]}"#),
+            lane("b2", r#"{"kind": "bucket", "remap": [0, 0, 0, 1, 1]}"#),
+            lane("c1", r#"{"kind": "compare", "op": "gt", "value": 0.0}"#),
+            lane(
+                "f",
+                r#"{"kind": "bucket_compare", "remap": [0, 1, 2, 2, 2], "op": "ge", "value": 2.0}"#,
+            ),
+        ];
+        let merged = run(
+            vec![
+                merged_node,
+                // a rewired consumer addressing a lane through the
+                // qualified `id.lane` reference
+                node("n", "not", &["x__lanes.c1"], "{}"),
+            ],
+            &["b1", "b2", "c1", "f", "n"],
+        );
+        assert_eq!(siblings, merged);
     }
 
     #[test]

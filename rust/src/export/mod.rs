@@ -26,6 +26,11 @@
 //! * **nodes** — numeric ops compiled into the graph. All tensors are
 //!   `float32` or `int64`; scalar features have shape `[B]`, fixed-width
 //!   sequence features `[B, W]`.
+//!
+//! A graph node may be **multi-output**: it declares named
+//! [`SpecLane`]s and consumers reference `"<node_id>.<lane_name>"` (or
+//! the lane's bare name — lanes share the column namespace). The
+//! builder never emits these; the optimizer's multi-lane passes do.
 
 mod builder;
 mod interp;
@@ -33,4 +38,4 @@ mod spec;
 
 pub use builder::SpecBuilder;
 pub use interp::SpecInterpreter;
-pub use spec::{GraphSpec, SpecDType, SpecInput, SpecNode};
+pub use spec::{GraphSpec, SpecDType, SpecInput, SpecLane, SpecNode};

@@ -49,24 +49,59 @@ pub struct SpecInput {
     pub width: Option<usize>,
 }
 
+/// One named output lane of a multi-output node.
+///
+/// A node may declare N lanes instead of a single output value; each
+/// lane is addressable by consumers as `"<node_id>.<lane_name>"` AND by
+/// its bare `name` (lane names live in the node/column namespace, which
+/// is what lets a lane keep serving a spec output whose producing node
+/// the optimizer merged away — spec outputs are never renamed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecLane {
+    /// Lane name. Must be unique across the whole graph section (it is
+    /// a column name); the optimizer uses the merged-away node's id.
+    pub name: String,
+    /// Per-lane op parameters (e.g. a bucket remap table or a compare
+    /// op/threshold) — the node-level `attrs` carry the shared work.
+    pub attrs: Json,
+    pub dtype: SpecDType,
+    pub width: Option<usize>,
+}
+
 /// One operation in the spec (ingress or graph section).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpecNode {
     /// Output column name (ids and column names share one namespace).
+    /// For a multi-output node the id only namespaces its lanes — the
+    /// bare id is not itself a value.
     pub id: String,
     /// Op name — the contract with `python/compile/model.py::OPS` and
     /// [`super::interp`].
     pub op: String,
-    /// Input column names.
+    /// Input column names. An entry may be a lane reference
+    /// `"<node_id>.<lane_name>"` into a multi-output node.
     pub inputs: Vec<String>,
     /// Scalar attributes (and constants such as vocab hashes — kept in
     /// `attrs` as JSON arrays; i64 precision is preserved by our JSON).
     pub attrs: Json,
     /// Output dtype in the graph (`F32`/`I64`); for ingress nodes this is
-    /// the *engine* view's graph projection once hashed.
+    /// the *engine* view's graph projection once hashed. Ignored by
+    /// consumers when `lanes` is non-empty (each lane carries its own).
     pub dtype: SpecDType,
     /// Output sequence width (`None` = scalar).
     pub width: Option<usize>,
+    /// Named output lanes. Empty for ordinary single-output nodes (and
+    /// always empty for ingress nodes); only ops the registry marks
+    /// `multi_output` may declare lanes. Serialised only when non-empty,
+    /// so pre-lane spec JSON round-trips unchanged.
+    pub lanes: Vec<SpecLane>,
+}
+
+impl SpecNode {
+    /// The qualified reference consumers use for one of this node's lanes.
+    pub fn lane_ref(&self, lane: &str) -> String {
+        format!("{}.{}", self.id, lane)
+    }
 }
 
 /// The exported preprocessing graph.
@@ -97,12 +132,162 @@ impl GraphSpec {
         })
     }
 
-    /// Meta of any graph-section column (input or node output).
+    /// Meta of any graph-section column (input, node output, or lane).
+    /// Lane values resolve both through their qualified `"id.lane"`
+    /// reference and through their bare lane name. A multi-output
+    /// node's *bare id* is not a value (the interpreter never binds it),
+    /// so it deliberately does not resolve here.
     pub fn node_meta(&self, name: &str) -> Option<(SpecDType, Option<usize>)> {
-        if let Some(n) = self.nodes.iter().find(|n| n.id == name) {
+        if let Some(n) = self.nodes.iter().find(|n| n.id == name && n.lanes.is_empty()) {
             return Some((n.dtype, n.width));
         }
+        for n in self.nodes.iter().filter(|n| !n.lanes.is_empty()) {
+            for l in &n.lanes {
+                if l.name == name || name == n.lane_ref(&l.name) {
+                    return Some((l.dtype, l.width));
+                }
+            }
+        }
         self.graph_input_meta(name)
+    }
+
+    /// Merge K variant specs into one multi-variant spec evaluated in a
+    /// single shared env — the serving shape for multi-variant models
+    /// (K rankers sharing a preprocessing prefix). Inputs are unioned by
+    /// name (conflicting dtype/width is an error); every variant-local
+    /// ingress/node id is prefixed `"<variant>::"` so the sections
+    /// concatenate without collisions; outputs are exposed as
+    /// `"<variant>::<output>"` in variant order. The merged spec is
+    /// correct but naive — run the optimizer (whose `CrossOutputDedup`
+    /// pass exists for exactly this shape) to collapse the shared
+    /// prefix to one evaluation.
+    pub fn merge_variants(name: &str, variants: &[&GraphSpec]) -> Result<GraphSpec> {
+        if variants.is_empty() {
+            return Err(KamaeError::InvalidConfig(
+                "merge_variants: no variant specs given".into(),
+            ));
+        }
+        let mut inputs: Vec<SpecInput> = Vec::new();
+        let mut seen_names: Vec<&str> = Vec::new();
+        let mut ingress = Vec::new();
+        let mut graph_inputs: Vec<String> = Vec::new();
+        let mut nodes = Vec::new();
+        let mut outputs = Vec::new();
+        for v in variants {
+            if seen_names.contains(&v.name.as_str()) {
+                return Err(KamaeError::InvalidConfig(format!(
+                    "duplicate variant name: {}",
+                    v.name
+                )));
+            }
+            seen_names.push(&v.name);
+            for i in &v.inputs {
+                match inputs.iter().find(|e| e.name == i.name) {
+                    None => inputs.push(i.clone()),
+                    Some(e) if e == i => {}
+                    Some(e) => {
+                        return Err(KamaeError::InvalidConfig(format!(
+                            "variant {}: input {} conflicts with another variant's \
+                             declaration ({:?}/width {:?} vs {:?}/width {:?})",
+                            v.name, i.name, i.dtype, i.width, e.dtype, e.width
+                        )))
+                    }
+                }
+            }
+            // variant-local producer names (raw inputs stay unprefixed)
+            let local: std::collections::HashSet<&str> = v
+                .ingress
+                .iter()
+                .chain(v.nodes.iter())
+                .map(|n| n.id.as_str())
+                .chain(v.nodes.iter().flat_map(|n| n.lanes.iter().map(|l| l.name.as_str())))
+                .collect();
+            let raw_inputs: std::collections::HashSet<&str> =
+                v.inputs.iter().map(|i| i.name.as_str()).collect();
+            let prefix = |r: &str| -> String {
+                if local.contains(r) {
+                    return format!("{}::{r}", v.name);
+                }
+                // lane reference: both halves are variant-local names
+                // (the node id and the lane's bare column name). A raw
+                // input whose own name contains a '.' is NOT a lane ref
+                // even when its pre-dot segment matches a local id —
+                // names are opaque keys everywhere else, so full-string
+                // matches win over the split interpretation. The FIRST
+                // dot splits: multi-output node ids are generated
+                // dot-free (see MultiLaneBucketize), while lane names —
+                // merged-away node ids, i.e. arbitrary column names —
+                // may themselves contain dots.
+                if !raw_inputs.contains(r) {
+                    if let Some((head, lane)) = r.split_once('.') {
+                        if local.contains(head) {
+                            return format!("{0}::{head}.{0}::{lane}", v.name);
+                        }
+                    }
+                }
+                r.to_string()
+            };
+            for n in &v.ingress {
+                let mut n = n.clone();
+                n.id = format!("{}::{}", v.name, n.id);
+                for i in n.inputs.iter_mut() {
+                    *i = prefix(i);
+                }
+                ingress.push(n);
+            }
+            for g in &v.graph_inputs {
+                let g = prefix(g);
+                if !graph_inputs.contains(&g) {
+                    graph_inputs.push(g);
+                }
+            }
+            for n in &v.nodes {
+                let mut n = n.clone();
+                n.id = format!("{}::{}", v.name, n.id);
+                for i in n.inputs.iter_mut() {
+                    *i = prefix(i);
+                }
+                for l in n.lanes.iter_mut() {
+                    l.name = format!("{}::{}", v.name, l.name);
+                }
+                nodes.push(n);
+            }
+            for o in &v.outputs {
+                let r = prefix(o);
+                if local.contains(o.as_str()) {
+                    outputs.push(r);
+                } else {
+                    // pass-through output (a raw graph input): alias it
+                    // under the variant-prefixed name so the merged
+                    // output list has no cross-variant duplicates
+                    let (dtype, width) = v.node_meta(o).ok_or_else(|| {
+                        KamaeError::InvalidConfig(format!(
+                            "variant {}: output {o} does not resolve",
+                            v.name
+                        ))
+                    })?;
+                    let id = format!("{}::{o}", v.name);
+                    nodes.push(SpecNode {
+                        id: id.clone(),
+                        op: "identity".into(),
+                        inputs: vec![r],
+                        attrs: Json::object(),
+                        dtype,
+                        width,
+                        lanes: vec![],
+                    });
+                    outputs.push(id);
+                }
+            }
+        }
+        Ok(GraphSpec {
+            name: name.to_string(),
+            inputs,
+            ingress,
+            graph_inputs,
+            nodes,
+            outputs,
+        })
     }
 
     // ---- JSON ---------------------------------------------------------
@@ -207,10 +392,53 @@ fn node_to_json(n: &SpecNode) -> Json {
         Some(w) => o.set("width", w),
         None => o.set("width", Json::Null),
     };
+    // written only when present: single-output nodes keep the exact
+    // pre-lane JSON shape (and old readers keep loading new specs that
+    // never went through the multi-lane passes)
+    if !n.lanes.is_empty() {
+        o.set(
+            "lanes",
+            Json::Array(
+                n.lanes
+                    .iter()
+                    .map(|l| {
+                        let mut lo = Json::object();
+                        lo.set("name", l.name.clone());
+                        lo.set("attrs", l.attrs.clone());
+                        lo.set("dtype", l.dtype.name());
+                        match l.width {
+                            Some(w) => lo.set("width", w),
+                            None => lo.set("width", Json::Null),
+                        };
+                        lo
+                    })
+                    .collect(),
+            ),
+        );
+    }
     o
 }
 
 fn node_from_json(j: &Json) -> Result<SpecNode> {
+    // "lanes" is optional: pre-lane (PR ≤ 2) spec JSON has no such key
+    // and must keep loading — backward compatibility is part of the
+    // serving contract (old artifact specs are re-optimized at load).
+    let lanes = match j.get("lanes") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(l) => l
+            .as_array()
+            .ok_or_else(|| KamaeError::Serde("node lanes is not an array".into()))?
+            .iter()
+            .map(|lo| {
+                Ok(SpecLane {
+                    name: lo.req_str("name")?.to_string(),
+                    attrs: lo.req("attrs")?.clone(),
+                    dtype: SpecDType::parse(lo.req_str("dtype")?)?,
+                    width: lo.opt_i64("width").map(|w| w as usize),
+                })
+            })
+            .collect::<Result<_>>()?,
+    };
     Ok(SpecNode {
         id: j.req_str("id")?.to_string(),
         op: j.req_str("op")?.to_string(),
@@ -226,6 +454,7 @@ fn node_from_json(j: &Json) -> Result<SpecNode> {
         attrs: j.req("attrs")?.clone(),
         dtype: SpecDType::parse(j.req_str("dtype")?)?,
         width: j.opt_i64("width").map(|w| w as usize),
+        lanes,
     })
 }
 
@@ -249,6 +478,7 @@ mod tests {
                 attrs: Json::object(),
                 dtype: SpecDType::I64,
                 width: None,
+                lanes: vec![],
             }],
             graph_inputs: vec!["UserID__hash".into(), "price".into()],
             nodes: vec![SpecNode {
@@ -258,8 +488,61 @@ mod tests {
                 attrs,
                 dtype: SpecDType::I64,
                 width: None,
+                lanes: vec![],
             }],
             outputs: vec!["UserID_indexed".into(), "price".into()],
+        }
+    }
+
+    /// A spec carrying a multi-output `multi_bucketize` node with one
+    /// bucket lane and one compare lane.
+    fn sample_with_lanes() -> GraphSpec {
+        let mut attrs = Json::object();
+        attrs.set("splits", Json::Array(vec![Json::Float(0.0), Json::Float(1.0)]));
+        let mut bucket = Json::object();
+        bucket.set("kind", "bucket");
+        bucket.set("remap", Json::Array(vec![Json::Int(0), Json::Int(1), Json::Int(2)]));
+        let mut cmp = Json::object();
+        cmp.set("kind", "compare").set("op", "ge").set("value", 1.0);
+        GraphSpec {
+            name: "lanes".into(),
+            inputs: vec![SpecInput { name: "price".into(), dtype: DType::F64, width: None }],
+            ingress: vec![],
+            graph_inputs: vec!["price".into()],
+            nodes: vec![
+                SpecNode {
+                    id: "price__lanes".into(),
+                    op: "multi_bucketize".into(),
+                    inputs: vec!["price".into()],
+                    attrs,
+                    dtype: SpecDType::I64,
+                    width: None,
+                    lanes: vec![
+                        SpecLane {
+                            name: "price_bucket".into(),
+                            attrs: bucket,
+                            dtype: SpecDType::I64,
+                            width: None,
+                        },
+                        SpecLane {
+                            name: "is_pricey".into(),
+                            attrs: cmp,
+                            dtype: SpecDType::I64,
+                            width: None,
+                        },
+                    ],
+                },
+                SpecNode {
+                    id: "bucket_not".into(),
+                    op: "not".into(),
+                    inputs: vec!["price__lanes.is_pricey".into()],
+                    attrs: Json::object(),
+                    dtype: SpecDType::I64,
+                    width: None,
+                    lanes: vec![],
+                },
+            ],
+            outputs: vec!["price_bucket".into(), "bucket_not".into()],
         }
     }
 
@@ -278,5 +561,135 @@ mod tests {
         assert_eq!(s.graph_input_meta("UserID__hash"), Some((SpecDType::I64, None)));
         assert_eq!(s.node_meta("UserID_indexed"), Some((SpecDType::I64, None)));
         assert_eq!(s.node_meta("missing"), None);
+    }
+
+    #[test]
+    fn lanes_json_roundtrip() {
+        let s = sample_with_lanes();
+        let j = s.to_json();
+        let back = GraphSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // lane meta resolves through both the qualified ref and the bare name
+        assert_eq!(s.node_meta("price__lanes.price_bucket"), Some((SpecDType::I64, None)));
+        assert_eq!(s.node_meta("price_bucket"), Some((SpecDType::I64, None)));
+        assert_eq!(s.node_meta("price__lanes.nope"), None);
+    }
+
+    #[test]
+    fn single_output_nodes_serialise_without_a_lanes_key() {
+        // the pre-lane JSON shape is preserved exactly for ordinary nodes
+        let s = sample();
+        let j = s.to_json();
+        let node = &j.req_array("nodes").unwrap()[0];
+        assert!(node.get("lanes").is_none());
+    }
+
+    #[test]
+    fn pre_lane_spec_json_still_loads() {
+        // a spec serialised before lanes existed (no "lanes" key anywhere)
+        // must keep loading — old artifact files are re-optimized at
+        // serving load time, not re-exported
+        let text = r#"{
+            "name": "legacy",
+            "inputs": [{"name": "x", "dtype": "float64", "width": null}],
+            "ingress": [],
+            "graph_inputs": ["x"],
+            "nodes": [{
+                "id": "y", "op": "log1p", "inputs": ["x"],
+                "attrs": {}, "dtype": "float32", "width": null
+            }],
+            "outputs": ["y"]
+        }"#;
+        let spec = GraphSpec::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.nodes.len(), 1);
+        assert!(spec.nodes[0].lanes.is_empty());
+        // and it re-serialises into the same lane-free node shape
+        let j = spec.to_json();
+        assert!(j.req_array("nodes").unwrap()[0].get("lanes").is_none());
+    }
+
+    #[test]
+    fn merge_variants_prefixes_and_unions() {
+        let mut a = sample();
+        a.name = "a".into();
+        let mut b = sample();
+        b.name = "b".into();
+        let m = GraphSpec::merge_variants("ab", &[&a, &b]).unwrap();
+        // inputs unioned by name, sections concatenated with prefixes
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.ingress.len(), 2);
+        assert_eq!(m.ingress[0].id, "a::UserID__hash");
+        // per variant: the indexed node plus an identity alias for the
+        // pass-through "price" output
+        assert_eq!(m.nodes.len(), 4);
+        assert_eq!(m.nodes[1].id, "a::price");
+        assert_eq!(m.nodes[1].op, "identity");
+        assert_eq!(m.nodes[2].id, "b::UserID_indexed");
+        assert_eq!(m.nodes[2].inputs, vec!["b::UserID__hash".to_string()]);
+        // raw inputs stay unprefixed and dedupe in graph_inputs
+        assert!(m.graph_inputs.contains(&"price".to_string()));
+        assert_eq!(m.graph_inputs.iter().filter(|g| *g == "price").count(), 1);
+        assert_eq!(
+            m.outputs,
+            vec!["a::UserID_indexed", "a::price", "b::UserID_indexed", "b::price"]
+        );
+        // duplicate variant names are rejected
+        assert!(GraphSpec::merge_variants("aa", &[&a, &a]).is_err());
+        // conflicting input declarations are rejected
+        let mut c = sample();
+        c.name = "c".into();
+        c.inputs[1].dtype = DType::Str;
+        assert!(GraphSpec::merge_variants("ac", &[&a, &c]).is_err());
+    }
+
+    #[test]
+    fn merge_variants_keeps_dotted_raw_input_names_opaque() {
+        // a raw input named "lead.days" alongside a local node "lead":
+        // references to the raw column must NOT be parsed as a lane ref
+        // of the "lead" node
+        let mut a = sample();
+        a.name = "a".into();
+        a.inputs.push(SpecInput { name: "lead.days".into(), dtype: DType::F64, width: None });
+        a.graph_inputs.push("lead.days".into());
+        a.nodes.push(SpecNode {
+            id: "lead".into(),
+            op: "log1p".into(),
+            inputs: vec!["lead.days".into()],
+            attrs: Json::object(),
+            dtype: SpecDType::F32,
+            width: None,
+            lanes: vec![],
+        });
+        a.nodes.push(SpecNode {
+            id: "days_neg".into(),
+            op: "neg".into(),
+            inputs: vec!["lead.days".into()],
+            attrs: Json::object(),
+            dtype: SpecDType::F32,
+            width: None,
+            lanes: vec![],
+        });
+        a.outputs = vec!["lead".into(), "days_neg".into()];
+        let m = GraphSpec::merge_variants("m", &[&a]).unwrap();
+        // both consumers still reference the raw column verbatim
+        for n in m.nodes.iter().filter(|n| n.op == "log1p" || n.op == "neg") {
+            assert_eq!(n.inputs, vec!["lead.days".to_string()], "{}", n.id);
+        }
+        assert!(m.graph_inputs.contains(&"lead.days".to_string()));
+    }
+
+    #[test]
+    fn merge_variants_rewrites_lane_references() {
+        let mut a = sample_with_lanes();
+        a.name = "a".into();
+        let m = GraphSpec::merge_variants("m", &[&a]).unwrap();
+        assert_eq!(m.nodes[0].id, "a::price__lanes");
+        assert_eq!(m.nodes[0].lanes[0].name, "a::price_bucket");
+        // the consumer's lane ref is rewritten on both halves
+        assert_eq!(m.nodes[1].inputs, vec!["a::price__lanes.a::is_pricey".to_string()]);
+        assert_eq!(m.outputs, vec!["a::price_bucket", "a::bucket_not"]);
+        // lane meta still resolves in the merged spec
+        assert_eq!(m.node_meta("a::price__lanes.a::is_pricey"), Some((SpecDType::I64, None)));
+        assert_eq!(m.node_meta("a::price_bucket"), Some((SpecDType::I64, None)));
     }
 }

@@ -102,6 +102,9 @@ fn print_usage() {
          \x20 transform        --model model.json --input in.jsonl --output out.jsonl\n\
          \x20 optimize         --spec spec.json --out opt.json [--level none|basic|full]\n\
          \x20                  [--report-json report.json]\n\
+         \x20                  or --variants a.json,b.json[,...] --out merged.json — merge\n\
+         \x20                  K spec variants into one multi-variant spec (shared-prefix\n\
+         \x20                  dedup) before optimizing\n\
          \x20 serve-bench      --artifacts DIR --spec NAME --rps R --seconds S [--mode compiled|interpreted|mleap]\n"
     );
 }
@@ -224,10 +227,6 @@ fn transform(args: &Args) -> Result<()> {
 /// choice — and any rewritten spec must be re-lowered (`make
 /// artifacts`) before compiled serving.
 fn optimize(args: &Args) -> Result<()> {
-    let spec_path = PathBuf::from(
-        args.get("spec")
-            .ok_or_else(|| KamaeError::InvalidConfig("--spec required".into()))?,
-    );
     let out = PathBuf::from(args.get("out").ok_or_else(|| {
         KamaeError::InvalidConfig(
             "--out required (pass the same path as --spec to overwrite in place; \
@@ -236,7 +235,31 @@ fn optimize(args: &Args) -> Result<()> {
         )
     })?);
     let level = kamae::optim::OptimizeLevel::parse(&args.get_or("level", "full"))?;
-    let spec = kamae::export::GraphSpec::load(&spec_path)?;
+    let spec = match (args.get("spec"), args.get("variants")) {
+        (Some(p), None) => kamae::export::GraphSpec::load(&PathBuf::from(p))?,
+        (None, Some(list)) => {
+            // merge K variant specs into one multi-variant spec; the
+            // optimizer's CrossOutputDedup pass collapses their shared
+            // preprocessing prefix
+            let specs = list
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|p| kamae::export::GraphSpec::load(&PathBuf::from(p)))
+                .collect::<Result<Vec<_>>>()?;
+            let refs: Vec<&kamae::export::GraphSpec> = specs.iter().collect();
+            let name = refs
+                .iter()
+                .map(|s| s.name.as_str())
+                .collect::<Vec<_>>()
+                .join("+");
+            kamae::export::GraphSpec::merge_variants(&name, &refs)?
+        }
+        _ => {
+            return Err(KamaeError::InvalidConfig(
+                "pass exactly one of --spec spec.json or --variants a.json,b.json".into(),
+            ))
+        }
+    };
     for finding in kamae::optim::lint_spec(&spec) {
         eprintln!("warning: {finding}");
     }

@@ -19,6 +19,21 @@
 //! | [`passes::IngressFuse`] | single-consumer ingress chains (`trim`→`case`→`hash64`, `split_pad`→`hash64`, …) | one `fused_ingress` node | Rust ingress single-walk (never reaches HLO) |
 //! | [`passes::BucketizeMerge`] | `compare_scalar(bucketize(x))` ladders with a dead bucket index | one `multi_bucketize` node | one `_bsearch` + compare in model.py |
 //! | [`passes::SelectCmpFuse`] | `select(compare_scalar(x), a, b)` with a dead mask | one branchless `select_cmp` node | `jnp.where` over the comparison |
+//! | [`passes::CrossOutputDedup`] | structurally identical ingress/graph/multi-output nodes (multi-variant specs) | redirected to first, outputs aliased | — |
+//! | [`passes::MultiLaneBucketize`] | sibling `bucketize`/`compare_scalar`/ladder nodes over one input | one multi-output `multi_bucketize` with a lane per sibling | one shared `_bsearch` + per-lane remap gather / compare |
+//!
+//! ## Multi-output nodes and lane syntax
+//!
+//! A graph node may declare named output lanes
+//! ([`crate::export::SpecLane`], ops marked
+//! [`registry::OpInfo::multi_output`]). Consumers reference a lane as
+//! **`"<node_id>.<lane_name>"`**; each lane is *also* bound under its
+//! bare `lane_name` in the evaluation env — lane names live in the
+//! node/column namespace — which is how a lane keeps serving a spec
+//! output whose producing node was merged away (spec outputs are never
+//! renamed). In serialized specs the per-node `"lanes"` array is
+//! present only on multi-output nodes; pre-lane spec JSON loads
+//! unchanged.
 //!
 //! ## Cost model and driver
 //!
@@ -66,9 +81,11 @@ pub enum OptimizeLevel {
     /// Escape hatch: emit the builder's graph verbatim.
     None,
     /// Exact cleanup passes only (DCE, identity/no-op elimination,
-    /// constant folding, CSE).
+    /// constant folding, CSE, cross-output dedup).
     Basic,
-    /// `Basic` plus scalar-affine chain fusion. The default.
+    /// `Basic` plus the fusion passes (scalar-affine chains, ingress
+    /// chains, bucketize/select ladders, multi-lane bucketize). The
+    /// default.
     #[default]
     Full,
 }
@@ -235,8 +252,8 @@ impl PassManager {
     /// estimate stops improving.
     pub fn for_level(level: OptimizeLevel) -> PassManager {
         use crate::optim::passes::{
-            AffineFuse, BucketizeMerge, CommonSubexprElim, ConstFold, DeadNodeElim, IdentityElim,
-            IngressFuse, SelectCmpFuse,
+            AffineFuse, BucketizeMerge, CommonSubexprElim, ConstFold, CrossOutputDedup,
+            DeadNodeElim, IdentityElim, IngressFuse, MultiLaneBucketize, SelectCmpFuse,
         };
         let mut p: Vec<Box<dyn Pass>> = Vec::new();
         if level != OptimizeLevel::None {
@@ -246,11 +263,17 @@ impl PassManager {
             // ConstFold rewrites no-ops into `identity`; sweep them up.
             p.push(Box::new(IdentityElim));
             p.push(Box::new(CommonSubexprElim));
+            // cross-section / cross-variant dedup after CSE: on merged
+            // multi-variant specs the shared prefix collapses here
+            p.push(Box::new(CrossOutputDedup));
             if level == OptimizeLevel::Full {
                 p.push(Box::new(AffineFuse));
                 p.push(Box::new(IngressFuse));
                 p.push(Box::new(BucketizeMerge));
                 p.push(Box::new(SelectCmpFuse));
+                // after the ladder fusions, so fused single-output
+                // `multi_bucketize` nodes can join sibling lane groups
+                p.push(Box::new(MultiLaneBucketize));
             }
             // CSE/fusion can strand nodes whose consumers were rewritten.
             p.push(Box::new(DeadNodeElim));
@@ -356,6 +379,7 @@ mod tests {
             attrs: Json::parse(attrs).unwrap(),
             dtype,
             width: None,
+            lanes: vec![],
         };
         let spec = crate::export::GraphSpec {
             name: "t".into(),

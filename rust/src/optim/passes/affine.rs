@@ -176,6 +176,7 @@ impl Pass for AffineFuse {
                     attrs,
                     dtype: tail_node.dtype,
                     width: tail_node.width,
+                    lanes: vec![],
                 },
             ));
             for &i in &chain[..chain.len() - 1] {

@@ -100,6 +100,7 @@ impl Pass for BucketizeMerge {
                     attrs,
                     dtype: node.dtype,
                     width: node.width,
+                    lanes: vec![],
                 },
             ));
             removed[bi] = true;

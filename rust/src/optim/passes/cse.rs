@@ -39,19 +39,15 @@ impl Pass for CommonSubexprElim {
         for mut node in nodes {
             apply_renames(&mut node.inputs, &renames);
             let pure = registry::lookup(&node.op).map(|i| i.pure).unwrap_or(false);
-            if !pure {
+            // multi-output nodes need per-lane redirection — that is
+            // CrossOutputDedup's job, not this pass's
+            if !pure || !node.lanes.is_empty() {
                 kept.push(node);
                 continue;
             }
-            // \x1f cannot appear in column names coming from JSON specs
-            let key = format!(
-                "{}\x1f{}\x1f{}\x1f{}\x1f{:?}",
-                node.op,
-                node.inputs.join("\x1f"),
-                node.attrs,
-                node.dtype.name(),
-                node.width
-            );
+            // the shared structural identity (same key CrossOutputDedup
+            // hashes by — the two passes must never disagree)
+            let key = super::structural_key(&node);
             match seen.get(&key) {
                 Some(first) if first != &node.id => {
                     changed = true;

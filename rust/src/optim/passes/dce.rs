@@ -15,14 +15,28 @@
 //! the pass is unconditionally exact. Nodes whose op is unknown to the
 //! registry or not pure are pinned live (conservative: they might have
 //! effects).
+//!
+//! Multi-output nodes are live when *any* of their lanes is referenced
+//! — by qualified `"id.lane"` reference or by bare lane name (spec
+//! outputs use the latter). On a surviving node, individually dead
+//! lanes are pruned (a never-read lane is never-evaluated work), as
+//! long as at least one lane remains.
 
 use std::collections::HashSet;
 
 use crate::error::Result;
-use crate::export::GraphSpec;
+use crate::export::{GraphSpec, SpecNode};
 use crate::optim::{registry, Pass};
 
 pub struct DeadNodeElim;
+
+/// Whether any of the node's produced names is referenced.
+fn node_is_live(n: &SpecNode, live: &HashSet<String>) -> bool {
+    live.contains(&n.id)
+        || n.lanes
+            .iter()
+            .any(|l| live.contains(&l.name) || live.contains(&n.lane_ref(&l.name)))
+}
 
 impl Pass for DeadNodeElim {
     fn name(&self) -> &'static str {
@@ -30,7 +44,9 @@ impl Pass for DeadNodeElim {
     }
 
     fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
-        let before = (spec.nodes.len(), spec.graph_inputs.len(), spec.ingress.len());
+        let lanes_before: usize = spec.nodes.iter().map(|n| n.lanes.len()).sum();
+        let before =
+            (spec.nodes.len(), spec.graph_inputs.len(), spec.ingress.len(), lanes_before);
 
         // ---- graph section -------------------------------------------
         let mut live: HashSet<String> = spec.outputs.iter().cloned().collect();
@@ -42,11 +58,28 @@ impl Pass for DeadNodeElim {
             }
         }
         for n in spec.nodes.iter().rev() {
-            if live.contains(&n.id) {
+            if node_is_live(n, &live) {
                 live.extend(n.inputs.iter().cloned());
             }
         }
-        spec.nodes.retain(|n| live.contains(&n.id));
+        spec.nodes.retain(|n| node_is_live(n, &live));
+        // prune individually dead lanes on surviving multi-output nodes
+        // (keeping at least one — an empty lane list would change the
+        // node's meaning)
+        for n in &mut spec.nodes {
+            if n.lanes.is_empty() {
+                continue;
+            }
+            let lane_live: Vec<bool> = n
+                .lanes
+                .iter()
+                .map(|l| live.contains(&l.name) || live.contains(&n.lane_ref(&l.name)))
+                .collect();
+            if lane_live.iter().any(|&b| b) && !lane_live.iter().all(|&b| b) {
+                let mut keep = lane_live.into_iter();
+                n.lanes.retain(|_| keep.next().unwrap());
+            }
+        }
         spec.graph_inputs.retain(|g| live.contains(g));
 
         // ---- ingress section -----------------------------------------
@@ -64,6 +97,8 @@ impl Pass for DeadNodeElim {
         }
         spec.ingress.retain(|n| live_i.contains(&n.id));
 
-        Ok(before != (spec.nodes.len(), spec.graph_inputs.len(), spec.ingress.len()))
+        let lanes_after: usize = spec.nodes.iter().map(|n| n.lanes.len()).sum();
+        Ok(before
+            != (spec.nodes.len(), spec.graph_inputs.len(), spec.ingress.len(), lanes_after))
     }
 }

@@ -1,0 +1,160 @@
+//! Cross-output subgraph deduplication — one evaluation env, shared.
+//!
+//! [`CommonSubexprElim`](super::CommonSubexprElim) dedupes graph nodes;
+//! this pass generalises the idea to the whole spec so that a
+//! **multi-variant** spec ([`GraphSpec::merge_variants`]) serving K
+//! output variants pays for the shared preprocessing prefix once
+//! instead of K times:
+//!
+//! * **ingress nodes** dedupe too — variants share the string-side work
+//!   (trims, splits, hashes, fused chains), and the graph-input list is
+//!   rewritten/deduplicated to match,
+//! * **multi-output nodes** dedupe by structure with lane names
+//!   *excluded* from the key: two merged fan-outs computing identical
+//!   lanes under different (variant-prefixed) names collapse to one,
+//!   lane by lane, with every `"<id>.<lane>"` reference and bare lane
+//!   name redirected to the kept node's corresponding lane,
+//! * duplicates whose name is a spec output keep the name alive as an
+//!   `identity` alias — spec outputs are never renamed.
+//!
+//! Renames accumulate front-to-back, so chains collapse transitively in
+//! one sweep: once variant B's hash dedupes onto variant A's, B's
+//! downstream nodes key identically to A's and dedupe in turn — the
+//! whole overlapping subgraph folds. On a freshly CSE'd single-variant
+//! spec the pass is a no-op.
+//!
+//! Exactness: only ops the registry marks pure participate, and a
+//! duplicate is removed exactly when op, (renamed) inputs, attrs, dtype
+//! and width all match — the evaluation it redirects to is the same
+//! computation, bit for bit.
+
+use std::collections::HashMap;
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecNode};
+use crate::optim::{names, registry, Pass};
+use crate::util::json::Json;
+
+use super::{apply_renames, output_set, structural_key};
+
+pub struct CrossOutputDedup;
+
+impl Pass for CrossOutputDedup {
+    fn name(&self) -> &'static str {
+        "cross-output-dedup"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        let outputs = output_set(spec);
+        let mut renames: HashMap<String, String> = HashMap::new();
+        let mut changed = false;
+
+        // ---- ingress section ---------------------------------------------
+        let ingress = std::mem::take(&mut spec.ingress);
+        let mut seen: HashMap<String, String> = HashMap::new();
+        let mut kept = Vec::with_capacity(ingress.len());
+        for mut node in ingress {
+            apply_renames(&mut node.inputs, &renames);
+            let pure = registry::lookup(&node.op).map(|i| i.pure).unwrap_or(false);
+            if !pure {
+                kept.push(node);
+                continue;
+            }
+            let key = structural_key(&node);
+            match seen.get(&key) {
+                // an output-named duplicate keeps its name (output names
+                // are sacred and ingress has no identity op to alias
+                // with) — but it still *registers* below on first sight,
+                // so later copies dedupe onto it
+                Some(first) if first != &node.id && !outputs.contains(&node.id) => {
+                    changed = true;
+                    renames.insert(node.id, first.clone());
+                }
+                _ => {
+                    if !seen.contains_key(&key) {
+                        seen.insert(key, node.id.clone());
+                    }
+                    kept.push(node);
+                }
+            }
+        }
+        spec.ingress = kept;
+
+        // graph inputs follow the ingress renames and dedupe in order
+        let graph_inputs = std::mem::take(&mut spec.graph_inputs);
+        for g in graph_inputs {
+            let g = renames.get(&g).cloned().unwrap_or(g);
+            if !spec.graph_inputs.contains(&g) {
+                spec.graph_inputs.push(g);
+            }
+        }
+
+        // ---- graph section ------------------------------------------------
+        // key -> (kept node id, kept node's lane names in order)
+        let mut seen_g: HashMap<String, (String, Vec<String>)> = HashMap::new();
+        let nodes = std::mem::take(&mut spec.nodes);
+        let mut kept = Vec::with_capacity(nodes.len());
+        for mut node in nodes {
+            apply_renames(&mut node.inputs, &renames);
+            let pure = registry::lookup(&node.op).map(|i| i.pure).unwrap_or(false);
+            if !pure {
+                kept.push(node);
+                continue;
+            }
+            let key = structural_key(&node);
+            match seen_g.get(&key) {
+                Some((first, first_lanes)) if first != &node.id => {
+                    if node.lanes.is_empty() {
+                        changed = true;
+                        if outputs.contains(&node.id) {
+                            // keep the output name alive as a cheap alias
+                            node.op = names::IDENTITY.to_string();
+                            node.inputs = vec![first.clone()];
+                            node.attrs = Json::object();
+                            kept.push(node);
+                        } else {
+                            renames.insert(node.id, first.clone());
+                        }
+                    } else if node
+                        .lanes
+                        .iter()
+                        .any(|dl| outputs.contains(&node.lane_ref(&dl.name)))
+                    {
+                        // a *qualified* lane ref used directly as a spec
+                        // output — never produced by our own exporter,
+                        // but output names are sacred: leave the node
+                        kept.push(node);
+                    } else {
+                        changed = true;
+                        // redirect lane by lane (identity is positional)
+                        for (dl, kl_name) in node.lanes.iter().zip(first_lanes) {
+                            let target = format!("{first}.{kl_name}");
+                            renames
+                                .insert(format!("{}.{}", node.id, dl.name), target.clone());
+                            if outputs.contains(&dl.name) {
+                                kept.push(SpecNode {
+                                    id: dl.name.clone(),
+                                    op: names::IDENTITY.to_string(),
+                                    inputs: vec![target],
+                                    attrs: Json::object(),
+                                    dtype: dl.dtype,
+                                    width: dl.width,
+                                    lanes: vec![],
+                                });
+                            } else {
+                                renames.insert(dl.name.clone(), target);
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    let lane_names = node.lanes.iter().map(|l| l.name.clone()).collect();
+                    seen_g.insert(key, (node.id.clone(), lane_names));
+                    kept.push(node);
+                }
+            }
+        }
+        spec.nodes = kept;
+        Ok(changed)
+    }
+}

@@ -133,6 +133,7 @@ impl Pass for IngressFuse {
                     attrs,
                     dtype: tail_node.dtype,
                     width: tail_node.width,
+                    lanes: vec![],
                 },
             ));
             for &i in &chain[..chain.len() - 1] {

@@ -9,18 +9,22 @@ mod affine;
 mod bucketize;
 mod cse;
 mod dce;
+mod dedup;
 mod fold;
 mod identity;
 mod ingress;
+mod multilane;
 mod select;
 
 pub use affine::AffineFuse;
 pub use bucketize::BucketizeMerge;
 pub use cse::CommonSubexprElim;
 pub use dce::DeadNodeElim;
+pub use dedup::CrossOutputDedup;
 pub use fold::ConstFold;
 pub use identity::IdentityElim;
 pub use ingress::IngressFuse;
+pub use multilane::MultiLaneBucketize;
 pub use select::SelectCmpFuse;
 
 use std::collections::{HashMap, HashSet};
@@ -28,7 +32,9 @@ use std::collections::{HashMap, HashSet};
 use crate::export::{GraphSpec, SpecDType};
 
 /// Dtype/width of every graph-section name (graph inputs resolved
-/// through ingress, plus every node output).
+/// through ingress, every node output, and every lane of a multi-output
+/// node — under both its qualified `"id.lane"` reference and its bare
+/// name).
 pub(crate) fn meta_map(spec: &GraphSpec) -> HashMap<String, (SpecDType, Option<usize>)> {
     let mut m = HashMap::new();
     for g in &spec.graph_inputs {
@@ -37,7 +43,15 @@ pub(crate) fn meta_map(spec: &GraphSpec) -> HashMap<String, (SpecDType, Option<u
         }
     }
     for n in &spec.nodes {
-        m.insert(n.id.clone(), (n.dtype, n.width));
+        if n.lanes.is_empty() {
+            m.insert(n.id.clone(), (n.dtype, n.width));
+        }
+        // a multi-output node's bare id is not a value — only its lanes
+        // (qualified and bare) resolve
+        for l in &n.lanes {
+            m.insert(n.lane_ref(&l.name), (l.dtype, l.width));
+            m.insert(l.name.clone(), (l.dtype, l.width));
+        }
     }
     m
 }
@@ -72,6 +86,27 @@ pub(crate) fn apply_renames(inputs: &mut [String], renames: &HashMap<String, Str
     }
 }
 
+/// Structural identity of a node — the ONE key both dedup-style passes
+/// (CSE, CrossOutputDedup) hash by, so they can never disagree about
+/// which nodes are "the same computation". `\x1f`/`\x1e` cannot appear
+/// in column names coming from JSON specs. Lane *names* are
+/// deliberately not part of the key (lane identity is positional);
+/// everything else about the lanes is.
+pub(crate) fn structural_key(node: &crate::export::SpecNode) -> String {
+    let mut key = format!(
+        "{}\x1f{}\x1f{}\x1f{}\x1f{:?}",
+        node.op,
+        node.inputs.join("\x1f"),
+        node.attrs,
+        node.dtype.name(),
+        node.width
+    );
+    for l in &node.lanes {
+        key.push_str(&format!("\x1e{}\x1f{}\x1f{:?}", l.attrs, l.dtype.name(), l.width));
+    }
+    key
+}
+
 #[cfg(test)]
 mod tests {
     use crate::dataframe::DType;
@@ -96,6 +131,7 @@ mod tests {
             attrs: Json::parse(attrs).unwrap(),
             dtype,
             width,
+            lanes: vec![],
         }
     }
 
@@ -390,6 +426,243 @@ mod tests {
         );
         assert!(!SelectCmpFuse.run(&mut spec).unwrap());
         assert_eq!(spec.nodes.len(), 2);
+    }
+
+    #[test]
+    fn multilane_bucketize_merges_siblings() {
+        let mut spec = base_spec(
+            vec![
+                node("b1", names::BUCKETIZE, &["x"], r#"{"splits": [0.0, 1.0]}"#, SpecDType::I64, None),
+                node("b2", names::BUCKETIZE, &["x"], r#"{"splits": [0.5]}"#, SpecDType::I64, None),
+                node("c1", names::COMPARE_SCALAR, &["x"], r#"{"op": "gt", "value": 0.0}"#, SpecDType::I64, None),
+                node("n", names::NOT, &["b2"], "{}", SpecDType::I64, None),
+            ],
+            &["b1", "c1", "n"],
+        );
+        assert!(MultiLaneBucketize.run(&mut spec).unwrap());
+        // one merged multi-output node + the rewired consumer
+        assert_eq!(spec.nodes.len(), 2);
+        let m = &spec.nodes[0];
+        assert_eq!(m.op, names::MULTI_BUCKETIZE);
+        assert_eq!(m.id, "x__lanes");
+        assert_eq!(m.inputs, vec!["x".to_string()]);
+        let splits: Vec<f64> = m
+            .attrs
+            .req_array("splits")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(splits, vec![0.0, 0.5, 1.0]);
+        let lane_names: Vec<&str> = m.lanes.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(lane_names, vec!["b1", "b2", "c1"]);
+        // remap recovers each sibling's own bucket index from the merged one
+        let remap = |i: usize| -> Vec<i64> {
+            m.lanes[i]
+                .attrs
+                .req_array("remap")
+                .unwrap()
+                .iter()
+                .map(|v| v.as_i64().unwrap())
+                .collect()
+        };
+        assert_eq!(remap(0), vec![0, 1, 1, 2]);
+        assert_eq!(remap(1), vec![0, 0, 1, 1]);
+        assert_eq!(m.lanes[2].attrs.req_str("kind").unwrap(), "compare");
+        // the surviving consumer was rewired to the qualified lane ref
+        assert_eq!(spec.nodes[1].inputs, vec!["x__lanes.b2".to_string()]);
+        // fixpoint: the merged node is not itself a merge candidate
+        assert!(!MultiLaneBucketize.run(&mut spec).unwrap());
+    }
+
+    #[test]
+    fn multilane_bucketize_absorbs_fused_ladders() {
+        // a PR-2 single-output multi_bucketize ladder joins the group as
+        // a bucket_compare lane
+        let mut spec = base_spec(
+            vec![
+                node("b1", names::BUCKETIZE, &["x"], r#"{"splits": [0.0]}"#, SpecDType::I64, None),
+                node(
+                    "flag",
+                    names::MULTI_BUCKETIZE,
+                    &["x"],
+                    r#"{"splits": [-1.0, 1.0], "op": "ge", "value": 2.0}"#,
+                    SpecDType::I64,
+                    None,
+                ),
+            ],
+            &["b1", "flag"],
+        );
+        assert!(MultiLaneBucketize.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 1);
+        let m = &spec.nodes[0];
+        assert_eq!(m.lanes[1].attrs.req_str("kind").unwrap(), "bucket_compare");
+        assert_eq!(m.lanes[1].attrs.req_str("op").unwrap(), "ge");
+    }
+
+    #[test]
+    fn multilane_bucketize_needs_a_shared_search() {
+        // two bare compares share no splits search: left alone
+        let mut spec = base_spec(
+            vec![
+                node("c1", names::COMPARE_SCALAR, &["x"], r#"{"op": "gt", "value": 0.0}"#, SpecDType::I64, None),
+                node("c2", names::COMPARE_SCALAR, &["x"], r#"{"op": "lt", "value": 1.0}"#, SpecDType::I64, None),
+            ],
+            &["c1", "c2"],
+        );
+        assert!(!MultiLaneBucketize.run(&mut spec).unwrap());
+        // a single bucketize has no sibling: left alone
+        let mut spec = base_spec(
+            vec![node("b", names::BUCKETIZE, &["x"], r#"{"splits": [0.0]}"#, SpecDType::I64, None)],
+            &["b"],
+        );
+        assert!(!MultiLaneBucketize.run(&mut spec).unwrap());
+        // unsorted splits disqualify the node (partition_point semantics
+        // over an unsorted table cannot be reproduced from a merged one)
+        let mut spec = base_spec(
+            vec![
+                node("b1", names::BUCKETIZE, &["x"], r#"{"splits": [1.0, 0.0]}"#, SpecDType::I64, None),
+                node("b2", names::BUCKETIZE, &["x"], r#"{"splits": [0.5]}"#, SpecDType::I64, None),
+            ],
+            &["b1", "b2"],
+        );
+        assert!(!MultiLaneBucketize.run(&mut spec).unwrap());
+    }
+
+    #[test]
+    fn cross_output_dedup_collapses_variant_copies() {
+        // the shape GraphSpec::merge_variants produces: two variants,
+        // identical ingress chain and graph chain, different prefixes
+        let mut spec = GraphSpec {
+            name: "m".into(),
+            inputs: vec![SpecInput { name: "c".into(), dtype: DType::Str, width: None }],
+            ingress: vec![
+                node("a::c_h", names::HASH64, &["c"], "{}", SpecDType::I64, None),
+                node("b::c_h", names::HASH64, &["c"], "{}", SpecDType::I64, None),
+            ],
+            graph_inputs: vec!["a::c_h".into(), "b::c_h".into()],
+            nodes: vec![
+                node("a::idx", names::HASH_BUCKET, &["a::c_h"], r#"{"num_bins": 8}"#, SpecDType::I64, None),
+                node("b::idx", names::HASH_BUCKET, &["b::c_h"], r#"{"num_bins": 8}"#, SpecDType::I64, None),
+            ],
+            outputs: vec!["a::idx".into(), "b::idx".into()],
+        };
+        assert!(CrossOutputDedup.run(&mut spec).unwrap());
+        // ingress shared, graph input deduped
+        assert_eq!(spec.ingress.len(), 1);
+        assert_eq!(spec.graph_inputs, vec!["a::c_h".to_string()]);
+        // the second variant's chain keyed identically after the ingress
+        // rename cascaded, so it collapsed to an output alias
+        assert_eq!(spec.nodes.len(), 2);
+        assert_eq!(spec.nodes[0].id, "a::idx");
+        assert_eq!(spec.nodes[0].op, names::HASH_BUCKET);
+        assert_eq!(spec.nodes[0].inputs, vec!["a::c_h".to_string()]);
+        assert_eq!(spec.nodes[1].id, "b::idx");
+        assert_eq!(spec.nodes[1].op, names::IDENTITY);
+        assert_eq!(spec.nodes[1].inputs, vec!["a::idx".to_string()]);
+        // second run: fixpoint
+        assert!(!CrossOutputDedup.run(&mut spec).unwrap());
+    }
+
+    #[test]
+    fn cross_output_dedup_redirects_lanes_positionally() {
+        use crate::export::SpecLane;
+        let lane = |name: &str, attrs: &str| SpecLane {
+            name: name.into(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+        };
+        let mlb = |id: &str, lanes: Vec<SpecLane>| {
+            let mut n = node(
+                id,
+                names::MULTI_BUCKETIZE,
+                &["x"],
+                r#"{"splits": [0.0, 1.0]}"#,
+                SpecDType::I64,
+                None,
+            );
+            n.lanes = lanes;
+            n
+        };
+        let mut spec = base_spec(
+            vec![
+                mlb(
+                    "a::x__lanes",
+                    vec![
+                        lane("a::bucket", r#"{"kind": "bucket", "remap": [0, 1, 2]}"#),
+                        lane("a::flag", r#"{"kind": "compare", "op": "gt", "value": 0.0}"#),
+                    ],
+                ),
+                mlb(
+                    "b::x__lanes",
+                    vec![
+                        lane("b::bucket", r#"{"kind": "bucket", "remap": [0, 1, 2]}"#),
+                        lane("b::flag", r#"{"kind": "compare", "op": "gt", "value": 0.0}"#),
+                    ],
+                ),
+                node("b::n", names::NOT, &["b::x__lanes.b::flag"], "{}", SpecDType::I64, None),
+            ],
+            &["a::bucket", "b::bucket", "b::n"],
+        );
+        assert!(CrossOutputDedup.run(&mut spec).unwrap());
+        // the duplicate multi-output node is gone; its output-named lane
+        // survives as an identity alias of the kept node's lane, and the
+        // consumer's qualified ref was redirected positionally
+        let ids: Vec<&str> = spec.nodes.iter().map(|n| n.id.as_str()).collect();
+        assert_eq!(ids, vec!["a::x__lanes", "b::bucket", "b::n"]);
+        assert_eq!(spec.nodes[1].op, names::IDENTITY);
+        assert_eq!(spec.nodes[1].inputs, vec!["a::x__lanes.a::bucket".to_string()]);
+        assert_eq!(spec.nodes[2].inputs, vec!["a::x__lanes.a::flag".to_string()]);
+    }
+
+    #[test]
+    fn dce_prunes_dead_lanes_and_lane_only_live_nodes() {
+        use crate::export::SpecLane;
+        let lane = |name: &str| SpecLane {
+            name: name.into(),
+            attrs: Json::parse(r#"{"kind": "bucket", "remap": [0, 1]}"#).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+        };
+        let mut mlb = node(
+            "x__lanes",
+            names::MULTI_BUCKETIZE,
+            &["x"],
+            r#"{"splits": [0.0]}"#,
+            SpecDType::I64,
+            None,
+        );
+        mlb.lanes = vec![lane("keep_out"), lane("keep_ref"), lane("dead")];
+        let mut spec = base_spec(
+            vec![
+                mlb,
+                node("n", names::NOT, &["x__lanes.keep_ref"], "{}", SpecDType::I64, None),
+            ],
+            // "keep_out" is live through its bare lane name (spec output)
+            &["keep_out", "n"],
+        );
+        assert!(DeadNodeElim.run(&mut spec).unwrap());
+        let lane_names: Vec<&str> =
+            spec.nodes[0].lanes.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(lane_names, vec!["keep_out", "keep_ref"]);
+        // nothing references any lane -> the whole node dies
+        let mut mlb = node(
+            "x__lanes",
+            names::MULTI_BUCKETIZE,
+            &["x"],
+            r#"{"splits": [0.0]}"#,
+            SpecDType::I64,
+            None,
+        );
+        mlb.lanes = vec![lane("a"), lane("b")];
+        let mut spec = base_spec(
+            vec![mlb, node("l", names::LOG1P, &["x"], "{}", SpecDType::F32, None)],
+            &["l"],
+        );
+        assert!(DeadNodeElim.run(&mut spec).unwrap());
+        assert_eq!(spec.nodes.len(), 1);
+        assert_eq!(spec.nodes[0].id, "l");
     }
 
     #[test]

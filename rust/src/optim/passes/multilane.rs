@@ -1,0 +1,256 @@
+//! Multi-lane bucketize merging — sibling fan-outs over one input.
+//!
+//! Quantile features tend to fan out: the same raw column feeds a
+//! coarse `bucketize`, a fine `bucketize`, and a couple of
+//! `compare_scalar` threshold flags. Each sibling costs a full node —
+//! column materialisation, env round trip, and (for the bucketizes) its
+//! own binary search over its own splits table. This pass merges ≥ 2
+//! sibling nodes over the *same scalar input* into ONE multi-output
+//! `multi_bucketize` node ([`crate::export::SpecLane`]): a single
+//! binary search over the merged (sorted, deduplicated) splits table
+//! emits one lane per original sibling, and consumers are rewired to
+//! `"<merged_id>.<lane>"` references. Lanes keep the merged-away node
+//! ids as their names, so spec outputs — which are never renamed —
+//! resolve through the lane's bare-name binding with no alias nodes.
+//!
+//! Mergeable siblings:
+//!
+//! * `bucketize(x, splits_i)` → a `"bucket"` lane. Its `remap` table
+//!   recovers the original bucket index from the merged search:
+//!   `remap[k] = |{s ∈ splits_i : s ≤ M[k-1]}|` (`remap[0] = 0`).
+//!   Because `splits_i ⊆ M`, both sorted, and the search compares raw
+//!   f64 exactly like `bucketize`, the lane is bit-exact.
+//! * `compare_scalar(x, op, v)` → a `"compare"` lane replaying the
+//!   compare's f32 operand rounding verbatim. It rides the merged
+//!   node's single column walk (its rounding makes the raw-f64 search
+//!   unusable for it — conservatism over cleverness).
+//! * single-output `multi_bucketize` ladders (PR 2's bucketize→compare
+//!   fusion) → a `"bucket_compare"` lane: remapped bucket index, then
+//!   the f32-rounded threshold compare, step for step.
+//!
+//! Nodes with unsorted or non-finite splits tables, list-typed widths,
+//! or unparseable attrs never join a group. Groups need at least one
+//! splits-carrying member — merging two bare compares would share no
+//! search, only overhead, and the cost-guarded PassManager would veto
+//! marginal rewrites anyway.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecLane, SpecNode};
+use crate::ops::logical::CmpOp;
+use crate::optim::{names, Pass};
+use crate::util::json::Json;
+
+use super::apply_renames;
+
+pub struct MultiLaneBucketize;
+
+/// How one sibling node becomes a lane.
+enum Member {
+    /// `bucketize` with its (sorted, finite) splits table.
+    Bucket(Vec<f64>),
+    /// `compare_scalar` (op/value validated).
+    Compare,
+    /// single-output `multi_bucketize` ladder with its splits table.
+    BucketCompare(Vec<f64>),
+}
+
+/// Parse a sorted all-finite f64 splits table; `None` disqualifies.
+fn sorted_splits(attrs: &Json) -> Option<Vec<f64>> {
+    let arr = attrs.req_array("splits").ok()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let f = v.as_f64()?;
+        if !f.is_finite() {
+            return None;
+        }
+        out.push(f);
+    }
+    if out.windows(2).any(|w| w[0] > w[1]) {
+        return None;
+    }
+    Some(out)
+}
+
+fn valid_compare_attrs(attrs: &Json) -> bool {
+    attrs
+        .opt_str("op")
+        .map(|o| CmpOp::from_name(o).is_ok())
+        .unwrap_or(false)
+        && attrs.opt_f64("value").is_some()
+}
+
+/// Classify a node as a mergeable sibling.
+fn member_of(node: &SpecNode) -> Option<Member> {
+    if node.inputs.len() != 1 || node.width.is_some() || !node.lanes.is_empty() {
+        return None;
+    }
+    match node.op.as_str() {
+        names::BUCKETIZE => sorted_splits(&node.attrs).map(Member::Bucket),
+        names::COMPARE_SCALAR if valid_compare_attrs(&node.attrs) => Some(Member::Compare),
+        names::MULTI_BUCKETIZE if valid_compare_attrs(&node.attrs) => {
+            sorted_splits(&node.attrs).map(Member::BucketCompare)
+        }
+        _ => None,
+    }
+}
+
+/// `remap[k]` = original bucket index for merged index `k` — the number
+/// of this member's splits ≤ the k-th merged prefix bound.
+fn remap_table(member_splits: &[f64], merged: &[f64]) -> Vec<i64> {
+    let mut remap = Vec::with_capacity(merged.len() + 1);
+    remap.push(0);
+    for bound in merged {
+        remap.push(member_splits.partition_point(|&s| s <= *bound) as i64);
+    }
+    remap
+}
+
+impl Pass for MultiLaneBucketize {
+    fn name(&self) -> &'static str {
+        "multilane-bucketize"
+    }
+
+    fn run(&self, spec: &mut GraphSpec) -> Result<bool> {
+        // group mergeable siblings by their input name, in node order
+        let mut group_of: HashMap<String, usize> = HashMap::new();
+        let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+        let mut members: Vec<Option<Member>> = Vec::with_capacity(spec.nodes.len());
+        for (i, node) in spec.nodes.iter().enumerate() {
+            let m = member_of(node);
+            if m.is_some() {
+                let input = node.inputs[0].clone();
+                let gi = *group_of.entry(input.clone()).or_insert_with(|| {
+                    groups.push((input, Vec::new()));
+                    groups.len() - 1
+                });
+                groups[gi].1.push(i);
+            }
+            members.push(m);
+        }
+
+        // every name already defined in the graph section (for unique
+        // merged-node ids)
+        let mut taken: HashSet<String> = spec
+            .graph_inputs
+            .iter()
+            .cloned()
+            .chain(spec.nodes.iter().map(|n| n.id.clone()))
+            .chain(
+                spec.nodes
+                    .iter()
+                    .flat_map(|n| n.lanes.iter().map(|l| l.name.clone())),
+            )
+            .chain(spec.inputs.iter().map(|i| i.name.clone()))
+            .collect();
+
+        let mut merged_at: HashMap<usize, SpecNode> = HashMap::new();
+        let mut removed = vec![false; spec.nodes.len()];
+        let mut renames: HashMap<String, String> = HashMap::new();
+        for (input, idxs) in &groups {
+            if idxs.len() < 2 {
+                continue;
+            }
+            // merged splits: sorted union of every carrier's table
+            let mut merged: Vec<f64> = Vec::new();
+            for &i in idxs {
+                match members[i].as_ref().expect("grouped") {
+                    Member::Bucket(s) | Member::BucketCompare(s) => merged.extend(s),
+                    Member::Compare => {}
+                }
+            }
+            if merged.is_empty() {
+                // compares only: no search to share
+                continue;
+            }
+            merged.sort_by(|a, b| a.partial_cmp(b).expect("finite splits"));
+            merged.dedup();
+
+            // '.' is the lane-reference separator — keep generated ids
+            // clean of it even when the shared input is itself a lane
+            let mut id = format!("{}__lanes", input.replace('.', "_"));
+            while taken.contains(&id) {
+                id.push('_');
+            }
+            taken.insert(id.clone());
+
+            let mut lanes = Vec::with_capacity(idxs.len());
+            for &i in idxs {
+                let node = &spec.nodes[i];
+                let mut attrs = Json::object();
+                match members[i].as_ref().expect("grouped") {
+                    Member::Bucket(s) => {
+                        attrs.set("kind", "bucket");
+                        attrs.set(
+                            "remap",
+                            Json::Array(
+                                remap_table(s, &merged).into_iter().map(Json::Int).collect(),
+                            ),
+                        );
+                    }
+                    Member::Compare => {
+                        attrs.set("kind", "compare");
+                        attrs.set("op", node.attrs.req_str("op")?.to_string());
+                        attrs.set("value", node.attrs.req_f64("value")?);
+                    }
+                    Member::BucketCompare(s) => {
+                        attrs.set("kind", "bucket_compare");
+                        attrs.set(
+                            "remap",
+                            Json::Array(
+                                remap_table(s, &merged).into_iter().map(Json::Int).collect(),
+                            ),
+                        );
+                        attrs.set("op", node.attrs.req_str("op")?.to_string());
+                        attrs.set("value", node.attrs.req_f64("value")?);
+                    }
+                }
+                lanes.push(SpecLane {
+                    name: node.id.clone(),
+                    attrs,
+                    dtype: node.dtype,
+                    width: node.width,
+                });
+                renames.insert(node.id.clone(), format!("{id}.{}", node.id));
+                removed[i] = true;
+            }
+
+            let mut attrs = Json::object();
+            attrs.set(
+                "splits",
+                Json::Array(merged.iter().map(|&s| Json::Float(s)).collect()),
+            );
+            merged_at.insert(
+                idxs[0],
+                SpecNode {
+                    id,
+                    op: names::MULTI_BUCKETIZE.to_string(),
+                    inputs: vec![input.clone()],
+                    attrs,
+                    dtype: crate::export::SpecDType::I64,
+                    width: None,
+                    lanes,
+                },
+            );
+        }
+
+        if merged_at.is_empty() {
+            return Ok(false);
+        }
+        let nodes = std::mem::take(&mut spec.nodes);
+        let mut kept = Vec::with_capacity(nodes.len());
+        for (i, mut node) in nodes.into_iter().enumerate() {
+            if let Some(m) = merged_at.remove(&i) {
+                kept.push(m);
+            }
+            if removed[i] {
+                continue;
+            }
+            apply_renames(&mut node.inputs, &renames);
+            kept.push(node);
+        }
+        spec.nodes = kept;
+        Ok(true)
+    }
+}

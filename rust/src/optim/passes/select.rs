@@ -89,6 +89,7 @@ impl Pass for SelectCmpFuse {
                     attrs,
                     dtype: node.dtype,
                     width: node.width,
+                    lanes: vec![],
                 },
             ));
             removed[ci] = true;

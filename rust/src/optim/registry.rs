@@ -180,6 +180,11 @@ pub struct OpInfo {
     pub rounds_f32: bool,
     /// Member of the scalar-affine family fusable into [`names::AFFINE`].
     pub affine: bool,
+    /// The op may declare named output lanes
+    /// ([`crate::export::SpecLane`]) — consumers then reference
+    /// `"<id>.<lane>"` or the lane's bare name. Nodes of every other op
+    /// must keep `lanes` empty ([`lint_spec`] enforces this).
+    pub multi_output: bool,
     /// Estimated per-row work in abstract cost units (the registry half
     /// of the optimizer's cost model — see [`node_cost`]). Relative
     /// magnitudes are what matter: string processing > table lookups >
@@ -193,6 +198,12 @@ impl OpInfo {
         self.work = w;
         self
     }
+
+    /// Mark the op as able to declare output lanes.
+    const fn multi(mut self) -> OpInfo {
+        self.multi_output = true;
+        self
+    }
 }
 
 const fn ingress(name: &'static str, arity: Arity) -> OpInfo {
@@ -203,12 +214,22 @@ const fn ingress(name: &'static str, arity: Arity) -> OpInfo {
         pure: true,
         rounds_f32: false,
         affine: false,
+        multi_output: false,
         work: 6,
     }
 }
 
 const fn graph(name: &'static str, arity: Arity, rounds_f32: bool) -> OpInfo {
-    OpInfo { name, section: Section::Graph, arity, pure: true, rounds_f32, affine: false, work: 2 }
+    OpInfo {
+        name,
+        section: Section::Graph,
+        arity,
+        pure: true,
+        rounds_f32,
+        affine: false,
+        multi_output: false,
+        work: 2,
+    }
 }
 
 const fn graph_affine(name: &'static str) -> OpInfo {
@@ -219,6 +240,7 @@ const fn graph_affine(name: &'static str) -> OpInfo {
         pure: true,
         rounds_f32: true,
         affine: true,
+        multi_output: false,
         work: 2,
     }
 }
@@ -231,6 +253,7 @@ const fn both(name: &'static str) -> OpInfo {
         pure: true,
         rounds_f32: false,
         affine: false,
+        multi_output: false,
         work: 2,
     }
 }
@@ -296,7 +319,7 @@ pub const OPS: &[OpInfo] = &[
     // ---- graph: the rest ----------------------------------------------
     // splits-table search: work is table-size-dependent, see node_cost
     graph(names::BUCKETIZE, Arity::Exact(1), false),
-    graph(names::MULTI_BUCKETIZE, Arity::Exact(1), false),
+    graph(names::MULTI_BUCKETIZE, Arity::Exact(1), false).multi(),
     graph(names::COLUMNS_AGG, Arity::AtLeast(1), false).work(3),
     graph(names::DATE_PART, Arity::Exact(1), false).work(6),
     graph(names::SUB_I64, Arity::Exact(2), false),
@@ -361,8 +384,12 @@ pub fn node_cost(node: &SpecNode) -> u64 {
         names::AFFINE => steps_work(&node.attrs, Some(2)),
         names::FUSED_INGRESS => steps_work(&node.attrs, None),
         names::BUCKETIZE | names::MULTI_BUCKETIZE => {
+            // one binary search over the (possibly merged) splits table,
+            // plus a unit of per-lane work for multi-output nodes (remap
+            // gather / threshold compare per lane). Single-output nodes
+            // keep the PR 2 estimate exactly (lanes is empty).
             let n = node.attrs.req_array("splits").map(|s| s.len()).unwrap_or(0) as u64;
-            base + search_depth(n + 1)
+            base + search_depth(n + 1) + node.lanes.len() as u64
         }
         _ => base,
     };
@@ -408,6 +435,12 @@ pub fn require(name: &str) -> Result<&'static OpInfo> {
 pub fn lint_spec(spec: &GraphSpec) -> Vec<String> {
     let mut findings = Vec::new();
     for node in &spec.ingress {
+        if !node.lanes.is_empty() {
+            findings.push(format!(
+                "ingress node {}: output lanes are graph-section only",
+                node.id
+            ));
+        }
         match lookup(&node.op) {
             None => findings.push(format!("ingress node {}: unknown op '{}'", node.id, node.op)),
             Some(info) => {
@@ -428,7 +461,21 @@ pub fn lint_spec(spec: &GraphSpec) -> Vec<String> {
             }
         }
     }
+    // lane names live in the node/column namespace: collect every
+    // graph-side definition and flag collisions
+    let mut defined: std::collections::HashSet<&str> =
+        spec.graph_inputs.iter().map(String::as_str).collect();
     for node in &spec.nodes {
+        for name in std::iter::once(node.id.as_str())
+            .chain(node.lanes.iter().map(|l| l.name.as_str()))
+        {
+            if !defined.insert(name) {
+                findings.push(format!(
+                    "graph node {}: name '{name}' is defined more than once",
+                    node.id
+                ));
+            }
+        }
         match lookup(&node.op) {
             None => findings.push(format!("graph node {}: unknown op '{}'", node.id, node.op)),
             Some(info) => {
@@ -444,6 +491,12 @@ pub fn lint_spec(spec: &GraphSpec) -> Vec<String> {
                         node.id,
                         node.op,
                         node.inputs.len()
+                    ));
+                }
+                if !node.lanes.is_empty() && !info.multi_output {
+                    findings.push(format!(
+                        "graph node {}: op '{}' may not declare output lanes",
+                        node.id, node.op
                     ));
                 }
             }
@@ -521,6 +574,51 @@ mod tests {
         for agg in [ListAgg::Sum, ListAgg::Mean, ListAgg::Min, ListAgg::Max, ListAgg::Len] {
             assert!(require(agg.spec_name()).is_ok(), "{}", agg.spec_name());
         }
+    }
+
+    #[test]
+    fn lane_cost_and_lint() {
+        use crate::export::SpecLane;
+        let mut node = SpecNode {
+            id: "x__lanes".into(),
+            op: names::MULTI_BUCKETIZE.into(),
+            inputs: vec!["x".into()],
+            attrs: Json::parse(r#"{"splits": [0.0, 1.0]}"#).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+            lanes: vec![],
+        };
+        let bare = node_cost(&node);
+        let lane = |name: &str| SpecLane {
+            name: name.into(),
+            attrs: Json::parse(r#"{"kind": "bucket", "remap": [0, 1, 2]}"#).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+        };
+        node.lanes = vec![lane("a"), lane("b")];
+        // each lane charges a unit of work on top of the shared search
+        assert_eq!(node_cost(&node), bare + 2);
+
+        let spec = |nodes: Vec<SpecNode>| GraphSpec {
+            name: "t".into(),
+            inputs: vec![SpecInput { name: "x".into(), dtype: DType::F64, width: None }],
+            ingress: vec![],
+            graph_inputs: vec!["x".into()],
+            nodes,
+            outputs: vec![],
+        };
+        // lanes on a multi_output op: clean
+        assert!(lint_spec(&spec(vec![node.clone()])).is_empty());
+        // lanes on an op that may not declare them: flagged
+        let mut bad = node.clone();
+        bad.op = names::BUCKETIZE.into();
+        let findings = lint_spec(&spec(vec![bad]));
+        assert!(findings.iter().any(|f| f.contains("may not declare output lanes")), "{findings:?}");
+        // a lane name colliding with another definition: flagged
+        let mut dup = node.clone();
+        dup.lanes[1].name = "x".into(); // collides with the graph input
+        let findings = lint_spec(&spec(vec![dup]));
+        assert!(findings.iter().any(|f| f.contains("defined more than once")), "{findings:?}");
     }
 
     /// Every op a catalog pipeline can emit is known to the registry and
@@ -727,6 +825,7 @@ mod tests {
                     attrs: Json::parse(attrs).unwrap(),
                     dtype,
                     width,
+                    lanes: vec![],
                 }],
                 outputs: vec!["out".into()],
             };
@@ -760,6 +859,7 @@ mod tests {
                     attrs: Json::parse(attrs).unwrap(),
                     dtype: SpecDType::for_engine(&out_dtype),
                     width,
+                    lanes: vec![],
                 }],
                 graph_inputs: vec![],
                 nodes: vec![],

@@ -102,7 +102,16 @@ pub fn ltr_pipeline() -> Pipeline {
         // --- durations ---------------------------------------------------
         Stage::transformer(DateDiffTransformer::new("checkout_days", "checkin_days", "stay_length")),
         Stage::transformer(DateDiffTransformer::new("checkin_days", "search_days", "lead_time")),
+        // lead_time fans out into sibling bucketizes + a threshold flag —
+        // the optimizer's MultiLaneBucketize merges the three into one
+        // multi-output node sharing a single merged-splits search
         Stage::transformer(BucketizeTransformer::new("lead_time", "lead_bucket", vec![7.0, 30.0, 90.0])),
+        Stage::transformer(BucketizeTransformer::new(
+            "lead_time",
+            "lead_bucket_fine",
+            vec![1.0, 3.0, 7.0, 14.0, 30.0, 60.0, 90.0, 180.0],
+        )),
+        Stage::transformer(CompareConstantTransformer::new("lead_time", "is_last_minute", CmpOp::Le, 3.0)),
         Stage::transformer(CompareConstantTransformer::new("checkin_weekday", "is_weekend_checkin", CmpOp::Ge, 6.0)),
         Stage::transformer(CompareConstantTransformer::new("stay_length", "is_long_stay", CmpOp::Gt, 7.0)),
         // --- log transforms for wide-range numerics ----------------------
@@ -181,7 +190,10 @@ pub fn ltr_inputs() -> Vec<SpecInput> {
 /// Output columns of the LTR graph (what the ranking model consumes).
 /// `is_summer` and `price_decile` stay internal: the optimizer fuses
 /// them into `select_cmp` / `multi_bucketize` nodes at serving time.
-pub const LTR_OUTPUTS: [&str; 28] = [
+/// `lead_bucket` / `lead_bucket_fine` / `is_last_minute` are the
+/// sibling fan-out over `lead_time` that MultiLaneBucketize merges into
+/// one multi-output node.
+pub const LTR_OUTPUTS: [&str; 30] = [
     "search_month_sin",
     "search_month_cos",
     "search_weekday",
@@ -192,6 +204,8 @@ pub const LTR_OUTPUTS: [&str; 28] = [
     "stay_length",
     "lead_time",
     "lead_bucket",
+    "lead_bucket_fine",
+    "is_last_minute",
     "is_long_stay",
     "price_z",
     "review_count_z",
@@ -210,6 +224,25 @@ pub const LTR_OUTPUTS: [&str; 28] = [
     "star_onehot",
     "is_budget_decile",
     "seasonal_price_signal",
+];
+
+/// The "lite" ranking variant: a lightweight model serving a subset of
+/// the full LTR feature set. Exporting the same fitted pipeline under
+/// these outputs yields a second spec whose entire graph is a prefix of
+/// the full one — the multi-variant serving shape
+/// (`GraphSpec::merge_variants` + the CrossOutputDedup pass) serves
+/// both for roughly the cost of the full variant alone.
+pub const LTR_LITE_OUTPUTS: [&str; 10] = [
+    "price_z",
+    "review_count_z",
+    "dist_z",
+    "ctr_z",
+    "stay_length",
+    "lead_time",
+    "lead_bucket",
+    "amenities_indexed",
+    "dest_indexed",
+    "is_mobile",
 ];
 
 /// Count of transformer applications in [`ltr_pipeline`] (the paper says

@@ -55,7 +55,11 @@ impl CompiledBackend {
             }
         }
         if graphs.is_empty() {
-            return Err(KamaeError::Xla(format!(
+            // a Serving error, not an Xla one: this is a deployment
+            // problem (nothing to route requests to), and it must
+            // surface at construction — not as an `expect` panic on the
+            // first request
+            return Err(KamaeError::Serving(format!(
                 "no compiled artifacts found for spec {} in {}",
                 spec.name,
                 artifacts.display()
@@ -68,23 +72,12 @@ impl CompiledBackend {
         })
     }
 
-    /// Smallest compiled bucket that fits `batch`, or the largest bucket
-    /// (larger batches chunk).
-    fn bucket_for(&self, batch: usize) -> usize {
-        self.graphs
-            .range(batch..)
-            .next()
-            .map(|(&b, _)| b)
-            .unwrap_or_else(|| *self.graphs.keys().next_back().expect("non-empty"))
-    }
-
     pub fn buckets(&self) -> Vec<usize> {
         self.graphs.keys().copied().collect()
     }
 
     fn execute_bucketed(&self, inputs: &[Tensor], batch: usize) -> Result<Vec<Tensor>> {
-        let bucket = self.bucket_for(batch);
-        let max = *self.graphs.keys().next_back().expect("non-empty");
+        let (bucket, max) = pick_bucket(&self.graphs, batch)?;
         if batch > max {
             // chunk oversized batches through the largest bucket
             let mut out: Option<Vec<Tensor>> = None;
@@ -109,7 +102,9 @@ impl CompiledBackend {
                 });
                 start += n;
             }
-            return Ok(out.expect("batch > 0"));
+            return out.ok_or_else(|| {
+                KamaeError::Serving("empty batch reached the compiled executor".into())
+            });
         }
         let graph = &self.graphs[&bucket];
         if bucket == batch {
@@ -136,6 +131,23 @@ impl Backend for CompiledBackend {
         let inputs = self.interp.run_ingress(df)?;
         self.execute_bucketed(&inputs, df.num_rows())
     }
+}
+
+/// Pick the serving bucket for `batch` from the bucket map: the
+/// smallest bucket that fits, else the largest (the caller chunks
+/// oversized batches). Returns `(bucket, largest)`. Allocation-free —
+/// this sits on the per-request hot path.
+///
+/// An empty bucket map is a [`KamaeError::Serving`] error, never a
+/// panic: construction already rejects it, but a request-time lookup
+/// must not be able to take the worker thread down either.
+fn pick_bucket<V>(graphs: &BTreeMap<usize, V>, batch: usize) -> Result<(usize, usize)> {
+    let max = *graphs
+        .keys()
+        .next_back()
+        .ok_or_else(|| KamaeError::Serving("no compiled batch buckets loaded".into()))?;
+    let bucket = graphs.range(batch..).next().map(|(&b, _)| b).unwrap_or(max);
+    Ok((bucket, max))
 }
 
 /// Columnar interpreted backend (no compilation).
@@ -185,5 +197,32 @@ impl Backend for MleapBackend {
 
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
         self.rows.process(df)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_lookup_errors_instead_of_panicking() {
+        // regression: an empty bucket map used to hit
+        // `expect("non-empty")` at request time
+        let empty: BTreeMap<usize, ()> = BTreeMap::new();
+        let err = pick_bucket(&empty, 8).unwrap_err();
+        assert!(matches!(err, KamaeError::Serving(_)), "{err}");
+    }
+
+    #[test]
+    fn bucket_lookup_picks_smallest_fit_then_largest() {
+        let buckets: BTreeMap<usize, ()> =
+            [1usize, 8, 32, 128].into_iter().map(|b| (b, ())).collect();
+        assert_eq!(pick_bucket(&buckets, 0).unwrap(), (1, 128));
+        assert_eq!(pick_bucket(&buckets, 1).unwrap(), (1, 128));
+        assert_eq!(pick_bucket(&buckets, 2).unwrap(), (8, 128));
+        assert_eq!(pick_bucket(&buckets, 8).unwrap(), (8, 128));
+        assert_eq!(pick_bucket(&buckets, 100).unwrap(), (128, 128));
+        // oversized: the largest bucket comes back so the caller chunks
+        assert_eq!(pick_bucket(&buckets, 1000).unwrap(), (128, 128));
     }
 }

@@ -267,6 +267,35 @@ mod tests {
     }
 
     #[test]
+    fn oversized_request_is_served_whole() {
+        // a single request larger than max_batch_rows must run as its
+        // own batch — never stall waiting for headroom, never split, and
+        // never drop rows. (The drain loops only *top up* small batches;
+        // an oversized first job skips them and executes immediately.)
+        let backend = Box::new(Doubler { max_batch: Default::default() });
+        let probe: *const Doubler = backend.as_ref();
+        let server = Server::start(
+            backend,
+            BatchConfig { max_batch_rows: 8, max_wait: Duration::from_millis(5) },
+        );
+        let vals: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let rx = server.submit(req(&vals));
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), 1);
+        let got = out[0].as_f32().unwrap();
+        assert_eq!(got.len(), 50, "oversized request lost rows");
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, 2.0 * i as f32);
+        }
+        let (batches, requests) = server.counts();
+        assert_eq!((batches, requests), (1, 1), "oversized request was split or retried");
+        // SAFETY: server still alive, backend not moved
+        let max_seen = unsafe { (*probe).max_batch.load(Ordering::Relaxed) };
+        assert_eq!(max_seen, 50, "backend saw a different batch than submitted");
+        server.shutdown();
+    }
+
+    #[test]
     fn error_propagates_to_all_requests() {
         struct Failing;
         impl Backend for Failing {

@@ -21,6 +21,12 @@ impl LatencyRecorder {
     }
 
     /// Produce the final report.
+    ///
+    /// Zero-request / zero-sample runs (a bench aborted before traffic,
+    /// a variant that received nothing) must still produce a fully
+    /// finite report: a `0/0` here used to put `NaN`/`inf` into the
+    /// `BENCH_<name>.json` trajectory files. Rates and percentiles
+    /// report 0 when there is nothing to aggregate.
     pub fn report(
         &self,
         name: &str,
@@ -30,17 +36,27 @@ impl LatencyRecorder {
     ) -> ServeReport {
         let mut ns = self.samples_ns.lock().unwrap().clone();
         ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let wall_secs = wall.as_secs_f64();
+        let pct = |p: f64| if ns.is_empty() { 0.0 } else { percentile(&ns, p) };
         ServeReport {
             name: name.to_string(),
             requests,
-            wall_secs: wall.as_secs_f64(),
-            throughput_rps: requests as f64 / wall.as_secs_f64(),
-            p50_ns: percentile(&ns, 50.0),
-            p95_ns: percentile(&ns, 95.0),
-            p99_ns: percentile(&ns, 99.0),
+            wall_secs,
+            throughput_rps: if requests == 0 || wall_secs == 0.0 {
+                0.0
+            } else {
+                requests as f64 / wall_secs
+            },
+            p50_ns: pct(50.0),
+            p95_ns: pct(95.0),
+            p99_ns: pct(99.0),
             mean_ns: ns.iter().sum::<f64>() / ns.len().max(1) as f64,
             busy_secs: busy.as_secs_f64(),
-            cost_cpu_s_per_1k: busy.as_secs_f64() / (requests as f64 / 1000.0),
+            cost_cpu_s_per_1k: if requests == 0 {
+                0.0
+            } else {
+                busy.as_secs_f64() / (requests as f64 / 1000.0)
+            },
         }
     }
 }
@@ -128,6 +144,29 @@ mod tests {
         assert!((rep.cost_cpu_s_per_1k - 22.0).abs() < 0.01);
         let text = rep.to_string();
         assert!(text.contains("p99"));
+    }
+
+    #[test]
+    fn zero_request_report_is_finite() {
+        // regression: requests == 0 (and an empty sample set) used to
+        // produce NaN throughput / inf cost that corrupted the
+        // BENCH_<name>.json trajectory files
+        let r = LatencyRecorder::new();
+        let rep = r.report("empty/interpreted", 0, Duration::ZERO, Duration::ZERO);
+        for (what, v) in [
+            ("throughput_rps", rep.throughput_rps),
+            ("mean_ns", rep.mean_ns),
+            ("p50_ns", rep.p50_ns),
+            ("p95_ns", rep.p95_ns),
+            ("p99_ns", rep.p99_ns),
+            ("cost_cpu_s_per_1k", rep.cost_cpu_s_per_1k),
+        ] {
+            assert!(v.is_finite(), "{what} = {v}");
+            assert_eq!(v, 0.0, "{what}");
+        }
+        // the record is accepted by the trajectory writer
+        let j = rep.to_json();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 
     #[test]

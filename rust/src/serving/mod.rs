@@ -75,6 +75,36 @@ pub fn load_backend_with(
     }
 }
 
+/// Load K spec variants as ONE multi-variant interpreted backend
+/// sharing a single evaluation env per request.
+///
+/// The variant specs are merged ([`GraphSpec::merge_variants`]) and
+/// optimized at load time, so the `CrossOutputDedup` pass collapses the
+/// preprocessing prefix the variants share — serving K overlapping
+/// variants costs roughly one pass over the shared work instead of K.
+/// Output tensors are the variants' outputs concatenated in variant
+/// order under `"<variant>::<output>"` names (see
+/// [`crate::export::GraphSpec::outputs`] on the returned backend's
+/// spec). Only the interpreted mode exists for merged specs: compiled
+/// artifacts are lowered per single-variant spec.
+pub fn load_variant_backend(
+    artifacts: &Path,
+    spec_names: &[&str],
+    level: OptimizeLevel,
+) -> Result<Box<dyn Backend>> {
+    if spec_names.is_empty() {
+        return Err(KamaeError::InvalidConfig("no spec variants given".into()));
+    }
+    let specs = spec_names
+        .iter()
+        .map(|name| GraphSpec::load(&artifacts.join("specs").join(format!("{name}.json"))))
+        .collect::<Result<Vec<_>>>()?;
+    let refs: Vec<&GraphSpec> = specs.iter().collect();
+    let merged = GraphSpec::merge_variants(&spec_names.join("+"), &refs)?;
+    let (merged, _) = crate::optim::optimize(merged, level)?;
+    Ok(Box::new(InterpretedBackend::new(merged)))
+}
+
 /// Open-loop Poisson serving benchmark: `rps` requests/second for
 /// `seconds`, each request a small batch of rows drawn from the
 /// synthetic workload matching `spec_name`. Returns the latency /

@@ -6,6 +6,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::error::{KamaeError, Result};
 use crate::util::json::Json;
 
 /// Result statistics for one benchmark case, in nanoseconds.
@@ -45,15 +46,37 @@ impl Stats {
     }
 }
 
+/// First non-finite float found anywhere in a JSON value, as a path
+/// string for the error message (`None` = all numbers finite).
+fn find_non_finite(v: &Json, path: &str) -> Option<String> {
+    match v {
+        Json::Float(x) if !x.is_finite() => Some(format!("{path} = {x}")),
+        Json::Array(items) => items
+            .iter()
+            .enumerate()
+            .find_map(|(i, item)| find_non_finite(item, &format!("{path}[{i}]"))),
+        Json::Object(map) => map
+            .iter()
+            .find_map(|(k, item)| find_non_finite(item, &format!("{path}.{k}"))),
+        _ => None,
+    }
+}
+
 /// Append one run record to `BENCH_<bench>.json` at the repo root (the
 /// perf-trajectory convention started by `benches/optimizer.rs`): the
 /// file holds a JSON array of runs, each `{bench, ...fields, records}`.
 /// Returns the file path written.
+///
+/// Non-finite numbers are rejected: JSON has no NaN/Inf (our writer
+/// would degrade them to `null`), so a buggy record would silently
+/// poison the whole trajectory file for downstream tooling. Benches
+/// must fix the record (see `ServeReport`'s zero-request guard), not
+/// serialise the corruption.
 pub fn append_run(
     bench: &str,
     fields: &[(&str, Json)],
     records: Vec<Json>,
-) -> std::path::PathBuf {
+) -> Result<std::path::PathBuf> {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{bench}.json"));
     let mut runs = std::fs::read_to_string(&path)
         .ok()
@@ -66,9 +89,14 @@ pub fn append_run(
         run.set(*key, value.clone());
     }
     run.set("records", Json::Array(records));
+    if let Some(what) = find_non_finite(&run, "run") {
+        return Err(KamaeError::InvalidConfig(format!(
+            "bench record for '{bench}' contains a non-finite number: {what}"
+        )));
+    }
     runs.push(run);
-    std::fs::write(&path, Json::Array(runs).to_string_pretty()).expect("write bench trajectory");
-    path
+    std::fs::write(&path, Json::Array(runs).to_string_pretty())?;
+    Ok(path)
 }
 
 /// Compute percentile from a sorted slice (linear interpolation).
@@ -228,6 +256,21 @@ mod tests {
         assert_eq!(j.req_str("name").unwrap(), "case");
         assert_eq!(j.req_i64("iters").unwrap(), 2);
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn append_run_rejects_non_finite_records() {
+        let mut bad = Json::object();
+        bad.set("throughput_rps", f64::NAN);
+        let err = append_run("reject_test", &[], vec![bad]).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let mut bad = Json::object();
+        bad.set("nested", Json::Array(vec![Json::Float(f64::INFINITY)]));
+        assert!(append_run("reject_test", &[("quick", Json::Bool(true))], vec![bad]).is_err());
+        // nothing was written for the rejected runs
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_reject_test.json");
+        assert!(!path.exists());
     }
 
     #[test]

@@ -291,6 +291,119 @@ fn optimize_cli_report_json_trajectory() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Multi-variant serving end to end: export full + lite LTR specs into
+/// an artifacts layout, load them as ONE merged interpreted backend,
+/// and check the response is the two variants' outputs concatenated and
+/// identical to serving each variant separately.
+#[test]
+fn variant_backend_serves_merged_outputs() {
+    use kamae::optim::OptimizeLevel;
+
+    let dir = std::env::temp_dir().join(format!("kamae_it_variants_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("specs")).unwrap();
+    let df = synth::gen_ltr(&synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(df, 2))
+        .unwrap();
+    for (name, outputs) in [
+        ("ltr", catalog::LTR_OUTPUTS.as_slice()),
+        ("ltr_lite", catalog::LTR_LITE_OUTPUTS.as_slice()),
+    ] {
+        let spec = model
+            .to_graph_spec(name, catalog::ltr_inputs(), outputs)
+            .unwrap();
+        spec.save(&dir.join("specs").join(format!("{name}.json"))).unwrap();
+    }
+
+    let backend =
+        kamae::serving::load_variant_backend(&dir, &["ltr", "ltr_lite"], OptimizeLevel::default())
+            .unwrap();
+    let req = kamae::serving::request_pool("ltr", 32).unwrap();
+    let merged_out = backend.process(&req).unwrap();
+    assert_eq!(
+        merged_out.len(),
+        catalog::LTR_OUTPUTS.len() + catalog::LTR_LITE_OUTPUTS.len()
+    );
+    // each variant served alone must agree with its slice of the merged
+    // response
+    for (name, range) in [
+        ("ltr", 0..catalog::LTR_OUTPUTS.len()),
+        ("ltr_lite", catalog::LTR_OUTPUTS.len()..merged_out.len()),
+    ] {
+        let single = kamae::serving::load_backend(&dir, name, "interpreted").unwrap();
+        let single_out = single.process(&req).unwrap();
+        assert_eq!(single_out.len(), range.len());
+        for (a, b) in merged_out[range].iter().zip(single_out.iter()) {
+            // debug render: bitwise-identical tensors print identically
+            // (NaN-tolerant, unlike PartialEq on f32)
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "{name}: merged backend diverged from single-variant"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `kamae optimize --variants a.json,b.json` merges, optimizes, and
+/// writes a multi-variant spec whose outputs carry variant prefixes.
+#[test]
+fn optimize_cli_merges_variants() {
+    use kamae::export::GraphSpec;
+    use kamae::optim::OptimizeLevel;
+    use kamae::util::json::Json;
+
+    let Some(bin) = option_env!("CARGO_BIN_EXE_kamae") else {
+        eprintln!("SKIP: kamae binary path not provided by cargo");
+        return;
+    };
+    let dir = std::env::temp_dir().join(format!("kamae_cli_variants_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let df = synth::gen_movielens(&synth::MovieLensConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::movielens_pipeline()
+        .fit(&Dataset::from_dataframe(df, 2))
+        .unwrap();
+    for (name, outputs) in [
+        ("ml_a", catalog::MOVIELENS_OUTPUTS.as_slice()),
+        ("ml_b", &catalog::MOVIELENS_OUTPUTS[..2]),
+    ] {
+        let (spec, _) = model
+            .to_graph_spec_opt(name, catalog::movielens_inputs(), outputs, OptimizeLevel::None)
+            .unwrap();
+        spec.save(&dir.join(format!("{name}.json"))).unwrap();
+    }
+    let out_path = dir.join("merged.json");
+    let report_path = dir.join("report.json");
+    let status = std::process::Command::new(bin)
+        .args([
+            "optimize",
+            "--variants",
+            &format!("{},{}", dir.join("ml_a.json").display(), dir.join("ml_b.json").display()),
+            "--out",
+            out_path.to_str().unwrap(),
+            "--report-json",
+            report_path.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success(), "kamae optimize --variants failed: {status}");
+
+    let merged = GraphSpec::load(&out_path).unwrap();
+    assert_eq!(merged.outputs.len(), 6);
+    assert!(merged.outputs.iter().take(4).all(|o| o.starts_with("ml_a::")));
+    assert!(merged.outputs.iter().skip(4).all(|o| o.starts_with("ml_b::")));
+    // the overlap must have deduped: fewer nodes than the two variants
+    // concatenated, and the dedup pass shows up in the report
+    let report = Json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+    let deduped = report.req_array("passes").unwrap().iter().any(|p| {
+        p.req_str("pass").unwrap() == "cross-output-dedup"
+            && p.get("changed").and_then(|c| c.as_bool()) == Some(true)
+    });
+    assert!(deduped, "cross-output-dedup did not fire via the CLI");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn unseen_category_rate_is_handled() {
     // fit on seed A, serve data from seed B: OOV tokens must land in the

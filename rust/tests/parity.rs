@@ -187,8 +187,9 @@ fn assert_tensors_bit_identical(a: &Tensor, b: &Tensor, what: &str) {
 /// (seed 999 — unseen at fit time, so OOV paths are exercised too).
 /// `expect_fused` names fused ops that MUST appear in the optimized
 /// spec — the fusion passes have to actually fire on the example
-/// pipelines, not just exist.
-fn optimizer_parity(spec_name: &str, expect_fused: &[&str]) {
+/// pipelines, not just exist. `expect_lanes` additionally requires a
+/// multi-output node (MultiLaneBucketize's product).
+fn optimizer_parity(spec_name: &str, expect_fused: &[&str], expect_lanes: bool) {
     use kamae::optim::OptimizeLevel;
 
     let (pipeline, inputs, outputs, data): (_, fn() -> Vec<kamae::export::SpecInput>, Vec<&str>, _) =
@@ -233,6 +234,12 @@ fn optimizer_parity(spec_name: &str, expect_fused: &[&str]) {
             "{spec_name}: expected fused op '{op}' in the optimized spec"
         );
     }
+    if expect_lanes {
+        assert!(
+            opt.nodes.iter().any(|n| !n.lanes.is_empty()),
+            "{spec_name}: expected a multi-output (lanes) node in the optimized spec"
+        );
+    }
 
     // serving loads specs from JSON — round-trip the optimized one
     let opt = GraphSpec::from_json(
@@ -253,7 +260,7 @@ fn optimizer_parity(spec_name: &str, expect_fused: &[&str]) {
 #[test]
 fn optimizer_parity_movielens() {
     // the Genres split_pad -> hash64 chain must fuse
-    optimizer_parity("movielens", &["fused_ingress"]);
+    optimizer_parity("movielens", &["fused_ingress"], false);
 }
 
 #[test]
@@ -261,8 +268,76 @@ fn optimizer_parity_ltr() {
     // all three round-2 fusions plus the round-1 affine fusion must fire:
     // amenities split_pad->hash64 (ingress chain), the price-decile
     // bucketize->compare ladder, the seasonal select-over-compare, and
-    // the cyclic month affine ladders
-    optimizer_parity("ltr", &["fused_ingress", "affine", "multi_bucketize", "select_cmp"]);
+    // the cyclic month affine ladders — and the round-3 multi-lane merge
+    // of the lead_time sibling fan-out (lead_bucket / lead_bucket_fine /
+    // is_last_minute) must produce a multi-output node
+    optimizer_parity("ltr", &["fused_ingress", "affine", "multi_bucketize", "select_cmp"], true);
+}
+
+/// Multi-variant serving parity: the merged, deduped full+lite LTR spec
+/// must reproduce each variant's raw (unoptimized) outputs bit-for-bit,
+/// the CrossOutputDedup pass must actually fire on the merged spec, and
+/// sharing must make the merged graph strictly cheaper than serving the
+/// two variants separately.
+#[test]
+fn cross_variant_dedup_parity_ltr() {
+    use kamae::optim::{spec_cost, OptimizeLevel};
+
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig { rows: 4_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let export = |name: &str, outputs: &[&str], level| {
+        model
+            .to_graph_spec_opt(name, catalog::ltr_inputs(), outputs, level)
+            .unwrap()
+            .0
+    };
+    let full_raw = export("ltr", &catalog::LTR_OUTPUTS, OptimizeLevel::None);
+    let lite_raw = export("ltr_lite", &catalog::LTR_LITE_OUTPUTS, OptimizeLevel::None);
+    let full_opt = export("ltr", &catalog::LTR_OUTPUTS, OptimizeLevel::Full);
+    let lite_opt = export("ltr_lite", &catalog::LTR_LITE_OUTPUTS, OptimizeLevel::Full);
+
+    let merged = GraphSpec::merge_variants("ltr+ltr_lite", &[&full_opt, &lite_opt]).unwrap();
+    let (merged_opt, report) =
+        kamae::optim::optimize(merged, OptimizeLevel::Full).unwrap();
+    assert!(
+        report.stats.iter().any(|s| s.pass == "cross-output-dedup" && s.changed),
+        "cross-output-dedup did not fire on the merged spec\n{report}"
+    );
+    assert!(
+        spec_cost(&merged_opt) < spec_cost(&full_opt) + spec_cost(&lite_opt),
+        "merged cost {} not below separate {} + {}\n{report}",
+        spec_cost(&merged_opt),
+        spec_cost(&full_opt),
+        spec_cost(&lite_opt)
+    );
+
+    // serving loads merged specs from JSON — round-trip first (this also
+    // exercises lane serialization on a real optimized spec)
+    let merged_opt = GraphSpec::from_json(
+        &kamae::util::json::Json::parse(&merged_opt.to_json().to_string()).unwrap(),
+    )
+    .unwrap();
+
+    let df = request_pool("ltr", 256).unwrap();
+    let merged_out = SpecInterpreter::new(merged_opt.clone()).run(&df).unwrap();
+    let full_out = SpecInterpreter::new(full_raw.clone()).run(&df).unwrap();
+    let lite_out = SpecInterpreter::new(lite_raw.clone()).run(&df).unwrap();
+    assert_eq!(merged_out.len(), full_out.len() + lite_out.len());
+    for (i, (name, raw_t)) in full_raw
+        .outputs
+        .iter()
+        .zip(full_out.iter())
+        .chain(lite_raw.outputs.iter().zip(lite_out.iter()))
+        .enumerate()
+    {
+        assert_tensors_bit_identical(
+            &merged_out[i],
+            raw_t,
+            &format!("merged[{i}] ({name}) vs separate raw"),
+        );
+    }
 }
 
 #[test]

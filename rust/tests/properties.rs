@@ -232,6 +232,13 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
                 // bucketize -> compare ladder, fused by BucketizeMerge
                 Stage::transformer(BucketizeTransformer::new("x", "x_bucket", vec![-1.0, 0.0, 1.0])),
                 Stage::transformer(CompareConstantTransformer::new("x_bucket", "x_high", CmpOp::Ge, 2.0)),
+                // sibling fan-out over x: two more bucketizes + a flag.
+                // MultiLaneBucketize merges them (with the fused ladder
+                // above riding along as a bucket_compare lane) into one
+                // multi-output node — all three lane kinds exercised
+                Stage::transformer(BucketizeTransformer::new("x", "x_coarse", vec![0.0])),
+                Stage::transformer(BucketizeTransformer::new("x", "x_fine", vec![-2.0, -0.5, 0.0, 0.5, 2.0])),
+                Stage::transformer(CompareConstantTransformer::new("x", "x_big", CmpOp::Ge, 1.0)),
                 // select over a single-use compare mask, fused by SelectCmpFuse
                 Stage::transformer(CompareConstantTransformer::new("x_log", "x_pos", CmpOp::Gt, 0.0)),
                 Stage::transformer(IfThenElseTransformer::new("x_pos", "t3", "x_log", "sel")),
@@ -247,7 +254,10 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
                     SpecInput { name: "x".into(), dtype: DType::F64, width: None },
                 ]
             };
-            let outputs = ["s_idx", "s_vocab", "t2_noop", "t3", "x_log", "s_up_idx", "x_high", "sel"];
+            let outputs = [
+                "s_idx", "s_vocab", "t2_noop", "t3", "x_log", "s_up_idx", "x_high",
+                "x_coarse", "x_fine", "x_big", "sel",
+            ];
             let (raw, _) = model
                 .to_graph_spec_opt("prop", inputs(), &outputs, OptimizeLevel::None)
                 .map_err(|e| e.to_string())?;
@@ -266,6 +276,16 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
                     || opt.ingress.iter().any(|n| n.op == fused_op);
                 if !present {
                     return Err(format!("fusion '{fused_op}' did not fire"));
+                }
+            }
+            // the x fan-out must have merged into a multi-output node
+            // carrying all three lane kinds
+            let Some(mlb) = opt.nodes.iter().find(|n| !n.lanes.is_empty()) else {
+                return Err("multilane-bucketize did not fire".into());
+            };
+            for kind in ["bucket", "compare", "bucket_compare"] {
+                if !mlb.lanes.iter().any(|l| l.attrs.opt_str("kind") == Some(kind)) {
+                    return Err(format!("no '{kind}' lane in the merged node"));
                 }
             }
             let a = kamae::export::SpecInterpreter::new(raw).run(df).map_err(|e| e.to_string())?;
@@ -305,7 +325,8 @@ fn shard_rebalance_preserves_content() {
         |rng| {
             let df = random_df(rng, 150);
             let parts = 1 + rng.below(10) as usize;
-            let target = 1 + rng.below(6) as usize;
+            // target 0 included on purpose: both helpers clamp to 1
+            let target = rng.below(7) as usize;
             (df, parts, target)
         },
         |(df, parts, target)| {
