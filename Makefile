@@ -10,7 +10,7 @@
 # and `harness = false` [[bench]]/[[example]] entries for everything
 # under benches/ and examples/ (each defines its own `fn main`).
 
-.PHONY: verify build test fmt bench-optimizer bench-smoke bench-all artifacts clean
+.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-smoke bench-all artifacts clean
 
 verify:
 	cargo build --release
@@ -31,17 +31,26 @@ fmt:
 bench-optimizer:
 	cargo bench --bench optimizer
 
-# CI smoke flavour of bench-optimizer: reduced rows/requests, and exits
+# Variant-routed serving over the merged ltr+ltr_lite backend: routed
+# mixed-variant throughput vs the all-outputs-per-request and
+# separate-backend baselines; appends to BENCH_variant_routing.json.
+bench-variant-routing:
+	cargo bench --bench variant_routing
+
+# CI smoke flavour of the gated benches: reduced rows/requests, exits
 # non-zero if optimized throughput regresses below the unoptimized
 # baseline, if multilane-bucketize / cross-output-dedup fail to fire on
-# the LTR catalog, or if the full pass set does not beat the PR 2 pass
-# set's cost estimate (the gates the bench-smoke CI job enforces).
+# the LTR catalog, if the full pass set does not beat the PR 2 pass
+# set's cost estimate, or if variant-routed serving fails to strictly
+# beat the all-outputs and separate-backend baselines (the gates the
+# bench-smoke CI job enforces).
 bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
+	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench variant_routing
 
 # Every bench, each appending a record to its BENCH_<name>.json
 # trajectory file (serving benches skip themselves without artifacts).
-bench-all: bench-optimizer
+bench-all: bench-optimizer bench-variant-routing
 	cargo bench --bench movielens_pipeline
 	cargo bench --bench native_vs_udf
 	cargo bench --bench indexing

@@ -1,0 +1,357 @@
+//! Variant-routed serving benchmark — the gate for per-variant request
+//! targeting over one merged multi-variant backend.
+//!
+//! No artifacts needed: the LTR pipeline is fitted in-process, exported
+//! as the full (`ltr`, 30 outputs) and lite (`ltr_lite`, 10 outputs)
+//! variants at `OptimizeLevel::Full`, merged
+//! (`GraphSpec::merge_variants` + `CrossOutputDedup`) and probed three
+//! ways over an IDENTICAL mixed workload (8-row requests, half per
+//! variant, coalesced into one mixed batch the way the dynamic batcher
+//! does under bursts):
+//!
+//! * **routed**   — the merged backend's `process_routed`: shared
+//!   prefix once over the whole mixed batch, variant-exclusive nodes
+//!   only on their variant's rows, each request answered with its
+//!   variant's outputs only;
+//! * **all-outputs** — the merged backend's plain `process`: every
+//!   request pays for (and receives) every variant's outputs — the
+//!   PR 3 baseline routing replaces;
+//! * **separate** — two dedicated single-variant interpreted backends,
+//!   each processing its own variant's sub-batch — the
+//!   one-deployment-per-variant baseline.
+//!
+//! All three run single-threaded through the backends directly, so the
+//! comparison measures evaluation work, not thread scheduling. Routed
+//! responses are asserted bit-identical to the dedicated backends
+//! before any timing runs (the differential harness in
+//! `rust/tests/properties.rs` pins the same contract across optimize
+//! levels and random interleavings).
+//!
+//! A second section drives the real `Server` batcher with mixed
+//! CLOSED-loop traffic (a bounded in-flight window, routed vs
+//! route-off) so the per-variant request/latency split lands in the
+//! trajectory records. Closed-loop latencies self-throttle under load —
+//! compare them with each other, not with the open-loop Poisson
+//! numbers `serving::bench_serve_variants` reports under the same
+//! `<spec>/routed` naming.
+//!
+//! Every run appends machine-readable records to
+//! `BENCH_variant_routing.json`.
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + measure time
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero unless routed
+//!                                 throughput strictly beats BOTH the
+//!                                 all-outputs and the separate-backend
+//!                                 baselines
+
+use std::time::Instant;
+
+use kamae::dataframe::DataFrame;
+use kamae::engine::Dataset;
+use kamae::export::GraphSpec;
+use kamae::optim::{optimize, variant_costs, OptimizeLevel};
+use kamae::pipeline::catalog;
+use kamae::runtime::{Tensor, TensorData};
+use kamae::serving::{
+    request_pool, Backend, BatchConfig, InterpretedBackend, LatencyRecorder, Server, VariantGroup,
+};
+use kamae::util::bench::{append_run, fmt_ns, Bencher, Table};
+use kamae::util::json::Json;
+use kamae::util::rng::Rng;
+
+const ROWS_PER_REQUEST: usize = 8;
+/// Requests per mixed batch (half per variant) — the minimal mixed
+/// burst the batcher produces when one slate request per variant lands
+/// inside a flush window. Small batches are where routing's
+/// one-backend-call shape matters most: per-call fixed work (vocab
+/// attr parsing, env setup, per-node dispatch) is paid once instead of
+/// once per variant backend.
+const REQUESTS_PER_BATCH: usize = 2;
+
+/// Fit LTR once and export the three specs the bench compares.
+fn build_specs(fit_rows: usize) -> (GraphSpec, GraphSpec, GraphSpec) {
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
+        rows: fit_rows,
+        ..Default::default()
+    });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let (full, _) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::Full)
+        .unwrap();
+    let (lite, _) = model
+        .to_graph_spec_opt(
+            "ltr_lite",
+            catalog::ltr_inputs(),
+            &catalog::LTR_LITE_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    let merged = GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged, _) = optimize(merged, OptimizeLevel::Full).unwrap();
+    (full, lite, merged)
+}
+
+/// One pre-built mixed batch: the concatenated frame, its per-variant
+/// groups, and the per-variant sub-frames the separate baseline serves.
+struct MixedBatch {
+    merged_df: DataFrame,
+    groups: Vec<VariantGroup>,
+    full_df: DataFrame,
+    lite_df: DataFrame,
+}
+
+/// Pre-build the request batches outside the timed loops (request
+/// construction is identical across modes and not what this bench
+/// measures).
+fn build_batches(pool: &DataFrame, count: usize) -> Vec<MixedBatch> {
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut batches = Vec::with_capacity(count);
+    let per_variant = REQUESTS_PER_BATCH / 2;
+    for _ in 0..count {
+        let mut reqs = Vec::with_capacity(REQUESTS_PER_BATCH);
+        for _ in 0..REQUESTS_PER_BATCH {
+            let start = rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+            reqs.push(pool.slice(start, ROWS_PER_REQUEST));
+        }
+        let (full_reqs, lite_reqs) = reqs.split_at(per_variant);
+        let full_df = DataFrame::concat(&full_reqs.iter().collect::<Vec<_>>()).unwrap();
+        let lite_df = DataFrame::concat(&lite_reqs.iter().collect::<Vec<_>>()).unwrap();
+        let merged_df = DataFrame::concat(&[&full_df, &lite_df]).unwrap();
+        let split = full_df.num_rows();
+        let groups = vec![
+            VariantGroup { variant: Some("ltr".into()), rows: 0..split },
+            VariantGroup { variant: Some("ltr_lite".into()), rows: split..merged_df.num_rows() },
+        ];
+        batches.push(MixedBatch { merged_df, groups, full_df, lite_df });
+    }
+    batches
+}
+
+fn assert_bit_identical(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape");
+    match (&a.data, &b.data) {
+        (TensorData::I64(x), TensorData::I64(y)) => assert_eq!(x, y, "{what}: i64"),
+        (TensorData::F32(x), TensorData::F32(y)) => {
+            for (i, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+                assert!(
+                    p.to_bits() == q.to_bits() || (p.is_nan() && q.is_nan()),
+                    "{what}[{i}]: {p:?} vs {q:?}"
+                );
+            }
+        }
+        other => panic!("{what}: dtype mismatch {other:?}"),
+    }
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let (fit_rows, server_requests) = if quick { (2_000, 400) } else { (20_000, 2_000) };
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows)\n");
+    }
+
+    let (full, lite, merged) = build_specs(fit_rows);
+    println!(
+        "merged ltr+ltr_lite: {} ingress + {} graph nodes, {} outputs",
+        merged.ingress.len(),
+        merged.nodes.len(),
+        merged.outputs.len()
+    );
+    let attribution = variant_costs(&merged);
+    for c in &attribution {
+        println!(
+            "  {:<10} {:>2} outputs  exclusive {:>5}  shared share {:>5}",
+            c.variant, c.outputs, c.exclusive, c.shared
+        );
+    }
+    println!();
+
+    let routed_backend = InterpretedBackend::new(merged.clone());
+    let all_backend = InterpretedBackend::new(merged.clone());
+    let full_backend = InterpretedBackend::new(full.clone());
+    let lite_backend = InterpretedBackend::new(lite.clone());
+
+    let pool = request_pool("ltr", 4096).unwrap();
+    let batches = build_batches(&pool, 64);
+
+    // ---- differential pin: routed == dedicated, bit for bit -----------
+    for batch in batches.iter().take(4) {
+        let routed = routed_backend.process_routed(&batch.merged_df, &batch.groups).unwrap();
+        let full_out = full_backend.process(&batch.full_df).unwrap();
+        let lite_out = lite_backend.process(&batch.lite_df).unwrap();
+        assert_eq!(routed[0].len(), full_out.len());
+        assert_eq!(routed[1].len(), lite_out.len());
+        for (i, (a, b)) in routed[0].iter().zip(full_out.iter()).enumerate() {
+            assert_bit_identical(a, b, &format!("ltr output {i} routed-vs-dedicated"));
+        }
+        for (i, (a, b)) in routed[1].iter().zip(lite_out.iter()).enumerate() {
+            assert_bit_identical(a, b, &format!("ltr_lite output {i} routed-vs-dedicated"));
+        }
+    }
+    println!("differential pin: routed == dedicated backends, bit for bit\n");
+
+    // ---- single-threaded throughput: routed vs both baselines ---------
+    let mut idx = 0usize;
+    let routed_stats = bencher.run("routed", || {
+        let b = &batches[idx % batches.len()];
+        idx += 1;
+        kamae::util::bench::black_box(
+            routed_backend.process_routed(&b.merged_df, &b.groups).unwrap(),
+        );
+    });
+    let mut idx = 0usize;
+    let all_stats = bencher.run("all-outputs", || {
+        let b = &batches[idx % batches.len()];
+        idx += 1;
+        // the un-routed baseline serves every output; the per-request
+        // split is the client's problem, so process() alone is charged
+        kamae::util::bench::black_box(all_backend.process(&b.merged_df).unwrap());
+    });
+    let mut idx = 0usize;
+    let separate_stats = bencher.run("separate", || {
+        let b = &batches[idx % batches.len()];
+        idx += 1;
+        kamae::util::bench::black_box(full_backend.process(&b.full_df).unwrap());
+        kamae::util::bench::black_box(lite_backend.process(&b.lite_df).unwrap());
+    });
+
+    let rps = |st: &kamae::util::bench::Stats| st.throughput(REQUESTS_PER_BATCH as f64);
+    let (routed_rps, all_rps, separate_rps) =
+        (rps(&routed_stats), rps(&all_stats), rps(&separate_stats));
+    let mut table = Table::new(&["mode", "mean/batch", "p99/batch", "throughput"]);
+    for (label, st, r) in [
+        ("routed", &routed_stats, routed_rps),
+        ("all-outputs", &all_stats, all_rps),
+        ("separate", &separate_stats, separate_rps),
+    ] {
+        table.row(&[
+            label.into(),
+            fmt_ns(st.mean_ns),
+            fmt_ns(st.p99_ns),
+            format!("{r:.0} req/s"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nrouted vs all-outputs: {:+.1}%   routed vs separate: {:+.1}%\n",
+        100.0 * (routed_rps / all_rps - 1.0),
+        100.0 * (routed_rps / separate_rps - 1.0)
+    );
+
+    // ---- server-driven mixed traffic (batcher + per-variant split) ----
+    let mut records = Vec::new();
+    for (label, route) in [("routed", true), ("merged-all", false)] {
+        let backend = Box::new(InterpretedBackend::new(merged.clone()));
+        let server = Server::start(backend, BatchConfig::default());
+        let recorder = LatencyRecorder::new();
+        let mut rng = Rng::new(0xBEEF);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        // closed loop with a bounded in-flight window: keeps the
+        // batcher fed (mixed batches form) without unbounded queueing
+        for i in 0..server_requests {
+            let start = rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+            let req = pool.slice(start, ROWS_PER_REQUEST);
+            let variant = if i % 2 == 0 { "ltr" } else { "ltr_lite" };
+            let sent = Instant::now();
+            let rx = if route { server.submit_variant(req, variant) } else { server.submit(req) };
+            pending.push((sent, variant, rx));
+            while pending.len() >= 32 {
+                let (sent, variant, rx) = pending.remove(0);
+                rx.recv().unwrap().unwrap();
+                recorder.record_variant(variant, sent.elapsed());
+            }
+        }
+        for (sent, variant, rx) in pending {
+            rx.recv().unwrap().unwrap();
+            recorder.record_variant(variant, sent.elapsed());
+        }
+        let wall = t0.elapsed();
+        let busy = server.busy_time();
+        let (batches_n, requests_n) = server.counts();
+        server.shutdown();
+        let report = recorder.report(
+            &format!("ltr+ltr_lite/{label}"),
+            server_requests,
+            wall,
+            busy,
+        );
+        println!("{report}");
+        println!(
+            "batches {batches_n}  requests {requests_n}  ({:.1} req/batch)\n",
+            requests_n as f64 / batches_n.max(1) as f64
+        );
+        records.push(report.to_json());
+    }
+
+    // ---- trajectory + gate ---------------------------------------------
+    let mut rec = Json::object();
+    rec.set("spec", "ltr+ltr_lite");
+    rec.set("mode", "routing-throughput");
+    rec.set("requests_per_batch", REQUESTS_PER_BATCH);
+    rec.set("rows_per_request", ROWS_PER_REQUEST);
+    rec.set("routed_rps", routed_rps);
+    rec.set("all_outputs_rps", all_rps);
+    rec.set("separate_rps", separate_rps);
+    rec.set(
+        "variants",
+        Json::Array(
+            attribution
+                .iter()
+                .map(|c| {
+                    let mut v = Json::object();
+                    v.set("variant", c.variant.clone());
+                    v.set("outputs", c.outputs);
+                    v.set("exclusive_cost", c.exclusive as i64);
+                    v.set("shared_cost", c.shared as i64);
+                    v
+                })
+                .collect(),
+        ),
+    );
+    records.push(rec);
+    let path = append_run(
+        "variant_routing",
+        &[("quick", Json::Bool(quick))],
+        records,
+    )
+    .expect("bench trajectory");
+    println!("appended run to {}", path.display());
+
+    let mut gate_failures = Vec::new();
+    if routed_rps <= all_rps {
+        gate_failures.push(format!(
+            "routed {routed_rps:.0} req/s does not beat all-outputs {all_rps:.0} req/s"
+        ));
+    }
+    if routed_rps <= separate_rps {
+        gate_failures.push(format!(
+            "routed {routed_rps:.0} req/s does not beat separate backends {separate_rps:.0} req/s"
+        ));
+    }
+    if gate {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        if !gate_failures.is_empty() {
+            std::process::exit(1);
+        }
+    } else {
+        for f in &gate_failures {
+            eprintln!("warning (ungated): {f}");
+        }
+    }
+}

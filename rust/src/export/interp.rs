@@ -22,7 +22,7 @@ use crate::ops;
 use crate::runtime::{Tensor, TensorData};
 use crate::util::json::Json;
 
-use super::spec::{GraphSpec, SpecDType, SpecNode};
+use super::spec::{Cone, GraphSpec, SpecDType, SpecNode};
 
 /// Flat graph-side value: rows × width buffer of f64 or i64.
 #[derive(Debug, Clone)]
@@ -59,6 +59,17 @@ impl GVal {
         }
     }
 
+    /// Copy out a contiguous row range (`start..start + len`). Row-wise
+    /// ops make this exact: evaluating a node on a row subset yields the
+    /// same bits as slicing its full-batch evaluation.
+    fn slice_rows(&self, start: usize, len: usize) -> GVal {
+        let w = self.width().unwrap_or(1);
+        match self {
+            GVal::F(v, width) => GVal::F(v[start * w..(start + len) * w].to_vec(), *width),
+            GVal::I(v, width) => GVal::I(v[start * w..(start + len) * w].to_vec(), *width),
+        }
+    }
+
     fn to_tensor(&self, batch: usize) -> Tensor {
         let shape = match self.width() {
             Some(w) => vec![batch, w],
@@ -75,6 +86,67 @@ impl GVal {
     }
 }
 
+/// Pattern-string → compiled regex, built once per backend load.
+///
+/// `regex_replace` / `regex_extract` ingress steps used to recompile
+/// their pattern on every request (ROADMAP open item); the interpreter
+/// now precompiles every pattern its spec mentions — standalone nodes
+/// and `fused_ingress` steps alike — at construction. A pattern that
+/// fails to compile is simply absent from the cache, so it keeps
+/// erroring at request time exactly as before (construction stays
+/// infallible).
+struct RegexCache(HashMap<String, ops::regex::Regex>);
+
+impl RegexCache {
+    fn for_spec(spec: &GraphSpec) -> RegexCache {
+        let mut cache = HashMap::new();
+        let mut add = |attrs: &Json| {
+            if let Some(pattern) = attrs.opt_str("pattern") {
+                if !cache.contains_key(pattern) {
+                    if let Ok(re) = ops::regex::Regex::new(pattern) {
+                        cache.insert(pattern.to_string(), re);
+                    }
+                }
+            }
+        };
+        for node in &spec.ingress {
+            match node.op.as_str() {
+                "regex_replace" | "regex_extract" => add(&node.attrs),
+                "fused_ingress" => {
+                    if let Ok(steps) = node.attrs.req_array("steps") {
+                        for s in steps {
+                            if matches!(s.opt_str("op"), Some("regex_replace" | "regex_extract")) {
+                                add(s);
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        RegexCache(cache)
+    }
+
+    /// Cached regex for `pattern`, compiling on miss (bit-identical to
+    /// the old per-request path: same engine, same pattern).
+    fn get(&self, pattern: &str) -> Result<std::borrow::Cow<'_, ops::regex::Regex>> {
+        match self.0.get(pattern) {
+            Some(re) => Ok(std::borrow::Cow::Borrowed(re)),
+            None => Ok(std::borrow::Cow::Owned(ops::regex::Regex::new(pattern)?)),
+        }
+    }
+}
+
+/// One contiguous row range of a routed batch and the spec outputs
+/// (indices into `spec.outputs`) it requests — the interpreter-level
+/// shape of a per-variant request group
+/// ([`SpecInterpreter::run_routed`]).
+#[derive(Debug, Clone)]
+pub struct RouteGroup {
+    pub outputs: Vec<usize>,
+    pub rows: std::ops::Range<usize>,
+}
+
 /// Interpreter over one [`GraphSpec`].
 pub struct SpecInterpreter {
     spec: GraphSpec,
@@ -83,6 +155,12 @@ pub struct SpecInterpreter {
     /// clone values for alias names nothing consumes (each lane may be
     /// addressed as `"id.lane"` AND by its bare name).
     referenced: std::collections::HashSet<String>,
+    /// Precompiled regexes for every pattern in the ingress section.
+    regexes: RegexCache,
+    /// Ancestor cones per requested output subset, memoised across
+    /// routed batches (the subsets a server sees are the handful of
+    /// variant output lists, so this stays tiny).
+    cones: std::sync::Mutex<HashMap<Vec<usize>, std::sync::Arc<Cone>>>,
 }
 
 impl SpecInterpreter {
@@ -94,7 +172,24 @@ impl SpecInterpreter {
             .chain(spec.outputs.iter())
             .cloned()
             .collect();
-        SpecInterpreter { spec, referenced }
+        let regexes = RegexCache::for_spec(&spec);
+        SpecInterpreter {
+            spec,
+            referenced,
+            regexes,
+            cones: std::sync::Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Memoised ancestor cone for one requested output subset.
+    fn cone_for(&self, outputs: &[usize]) -> std::sync::Arc<Cone> {
+        let mut cache = self.cones.lock().unwrap();
+        if let Some(c) = cache.get(outputs) {
+            return std::sync::Arc::clone(c);
+        }
+        let cone = std::sync::Arc::new(self.spec.ancestor_cone_of(outputs));
+        cache.insert(outputs.to_vec(), std::sync::Arc::clone(&cone));
+        cone
     }
 
     pub fn spec(&self) -> &GraphSpec {
@@ -106,7 +201,7 @@ impl SpecInterpreter {
     pub fn run_ingress(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
         let mut df = df.clone();
         for node in &self.spec.ingress {
-            apply_ingress(node, &mut df)?;
+            apply_ingress(node, &mut df, &self.regexes)?;
         }
         let batch = df.num_rows();
         self.spec
@@ -142,7 +237,7 @@ impl SpecInterpreter {
     pub fn run(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
         let mut df = df.clone();
         for node in &self.spec.ingress {
-            apply_ingress(node, &mut df)?;
+            apply_ingress(node, &mut df, &self.regexes)?;
         }
         let batch = df.num_rows();
         let mut env: HashMap<String, GVal> = HashMap::new();
@@ -150,29 +245,7 @@ impl SpecInterpreter {
             env.insert(name.clone(), column_to_gval(df.column(name)?)?);
         }
         for node in &self.spec.nodes {
-            if node.lanes.is_empty() {
-                let val = eval_node(node, &env)?;
-                env.insert(node.id.clone(), val);
-            } else {
-                for (lane_name, val) in eval_multi(node, &env)? {
-                    // lanes bind under the qualified `id.lane` reference
-                    // AND the bare lane name (spec outputs resolve by
-                    // bare name; rewired consumers use the qualified
-                    // one) — but only actually-consumed names get a
-                    // binding, so nothing is cloned for unused aliases
-                    let qualified = node.lane_ref(&lane_name);
-                    if self.referenced.contains(&qualified) {
-                        if self.referenced.contains(&lane_name) {
-                            env.insert(qualified, val.clone());
-                            env.insert(lane_name, val);
-                        } else {
-                            env.insert(qualified, val);
-                        }
-                    } else {
-                        env.insert(lane_name, val);
-                    }
-                }
-            }
+            self.eval_into(node, &mut env)?;
         }
         self.spec
             .outputs
@@ -181,6 +254,214 @@ impl SpecInterpreter {
                 env.get(o)
                     .map(|g| g.to_tensor(batch))
                     .ok_or_else(|| KamaeError::ColumnNotFound(format!("{o} (spec output)")))
+            })
+            .collect()
+    }
+
+    /// Evaluate one graph node into an env, binding multi-output lanes
+    /// under the qualified `id.lane` reference AND the bare lane name
+    /// (spec outputs resolve by bare name; rewired consumers use the
+    /// qualified one) — but only actually-consumed names get a binding,
+    /// so nothing is cloned for unused aliases.
+    fn eval_into(&self, node: &SpecNode, env: &mut HashMap<String, GVal>) -> Result<()> {
+        if node.lanes.is_empty() {
+            let val = eval_node(node, env)?;
+            env.insert(node.id.clone(), val);
+        } else {
+            for (lane_name, val) in eval_multi(node, env)? {
+                let qualified = node.lane_ref(&lane_name);
+                if self.referenced.contains(&qualified) {
+                    if self.referenced.contains(&lane_name) {
+                        env.insert(qualified, val.clone());
+                        env.insert(lane_name, val);
+                    } else {
+                        env.insert(qualified, val);
+                    }
+                } else {
+                    env.insert(lane_name, val);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Variant-routed interpretation: one mixed batch whose contiguous
+    /// row groups each request only a *subset* of the spec's outputs
+    /// (one serving variant per group, in the batcher's shape). Returns
+    /// the requested output tensors per group, in the group's
+    /// `outputs` order.
+    ///
+    /// Evaluation walks only the union of the groups' ancestor cones,
+    /// at **row granularity**:
+    ///
+    /// * a node needed by two or more groups (the shared preprocessing
+    ///   prefix of a merged multi-variant spec) evaluates ONCE over the
+    ///   full batch — the shared-prefix env is reused across every
+    ///   variant in the batch,
+    /// * a node needed by exactly one group evaluates over that group's
+    ///   rows only — variant-exclusive work never runs on another
+    ///   variant's rows,
+    /// * a node needed by no group never runs at all.
+    ///
+    /// Every op in the vocabulary is row-wise, so restricting a node to
+    /// a row subset is bit-identical to slicing its full-batch
+    /// evaluation — `run_routed` output equals the matching slices of
+    /// [`Self::run`] bit for bit (pinned by the routing property
+    /// tests). Shared values consumed by group-scoped nodes are sliced
+    /// once per group and memoised in the group env.
+    pub fn run_routed(&self, df: &DataFrame, groups: &[RouteGroup]) -> Result<Vec<Vec<Tensor>>> {
+        let spec = &self.spec;
+        // validate the group cover: contiguous, in order, non-empty
+        let mut expect_start = 0usize;
+        for g in groups {
+            if g.rows.start != expect_start || g.rows.is_empty() {
+                return Err(KamaeError::InvalidConfig(format!(
+                    "route groups must cover the batch contiguously: group at \
+                     {}..{} after row {expect_start}",
+                    g.rows.start, g.rows.end
+                )));
+            }
+            expect_start = g.rows.end;
+        }
+        if expect_start != df.num_rows() {
+            return Err(KamaeError::InvalidConfig(format!(
+                "route groups cover {expect_start} of {} batch rows",
+                df.num_rows()
+            )));
+        }
+        // group-count cap for the per-node bitmasks; a server routes
+        // between a handful of variants, so this is never the fallback
+        // in practice
+        if groups.len() > 64 {
+            return Err(KamaeError::InvalidConfig(format!(
+                "too many route groups ({} > 64)",
+                groups.len()
+            )));
+        }
+
+        // per-node / per-input needed-by bitmasks over the groups
+        let cones: Vec<std::sync::Arc<Cone>> =
+            groups.iter().map(|g| self.cone_for(&g.outputs)).collect();
+        let mut ingress_masks = vec![0u64; spec.ingress.len()];
+        let mut input_masks = vec![0u64; spec.graph_inputs.len()];
+        let mut node_masks = vec![0u64; spec.nodes.len()];
+        for (gi, cone) in cones.iter().enumerate() {
+            let bit = 1u64 << gi;
+            for (masks, members) in [
+                (&mut ingress_masks, &cone.ingress),
+                (&mut input_masks, &cone.graph_inputs),
+                (&mut node_masks, &cone.nodes),
+            ] {
+                for (i, needed) in members.iter().enumerate() {
+                    if *needed {
+                        masks[i] |= bit;
+                    }
+                }
+            }
+        }
+
+        // ---- ingress, shared scope: nodes ≥2 groups need run over the
+        // full batch first (their inputs are at least as shared — a
+        // consumer's cone membership implies its producers'), then each
+        // group's exclusive ingress nodes run over that group's slice
+        let mut full_df = df.clone();
+        for (i, node) in spec.ingress.iter().enumerate() {
+            if ingress_masks[i].count_ones() >= 2 {
+                apply_ingress(node, &mut full_df, &self.regexes)?;
+            }
+        }
+        let mut group_dfs: Vec<Option<DataFrame>> = vec![None; groups.len()];
+        for (gi, g) in groups.iter().enumerate() {
+            let mut gdf: Option<DataFrame> = None;
+            for (i, node) in spec.ingress.iter().enumerate() {
+                if ingress_masks[i] == 1 << gi {
+                    let gdf = gdf.get_or_insert_with(|| {
+                        full_df.slice(g.rows.start, g.rows.len())
+                    });
+                    apply_ingress(node, gdf, &self.regexes)?;
+                }
+            }
+            group_dfs[gi] = gdf;
+        }
+
+        // ---- graph inputs: marshal shared ones from the full batch,
+        // group-exclusive ones from the group's rows, skip the rest
+        let mut env_full: HashMap<String, GVal> = HashMap::new();
+        let mut env_groups: Vec<HashMap<String, GVal>> =
+            (0..groups.len()).map(|_| HashMap::new()).collect();
+        for (i, name) in spec.graph_inputs.iter().enumerate() {
+            let m = input_masks[i];
+            if m.count_ones() >= 2 {
+                env_full.insert(name.clone(), column_to_gval(full_df.column(name)?)?);
+            } else if m != 0 {
+                let gi = m.trailing_zeros() as usize;
+                let g = &groups[gi];
+                let col = match &group_dfs[gi] {
+                    Some(gdf) => column_to_gval(gdf.column(name)?)?,
+                    None => column_to_gval(
+                        full_df.slice(g.rows.start, g.rows.len()).column(name)?,
+                    )?,
+                };
+                env_groups[gi].insert(name.clone(), col);
+            }
+        }
+
+        // ---- graph nodes at row granularity
+        for (i, node) in spec.nodes.iter().enumerate() {
+            let m = node_masks[i];
+            if m == 0 {
+                continue;
+            }
+            if m.count_ones() >= 2 {
+                self.eval_into(node, &mut env_full)?;
+            } else {
+                let gi = m.trailing_zeros() as usize;
+                let g = &groups[gi];
+                // group-scoped inputs come from the group env; shared
+                // inputs are sliced to the group's rows once and
+                // memoised there
+                for input in &node.inputs {
+                    if !env_groups[gi].contains_key(input) {
+                        if let Some(v) = env_full.get(input) {
+                            env_groups[gi].insert(
+                                input.clone(),
+                                v.slice_rows(g.rows.start, g.rows.len()),
+                            );
+                        }
+                    }
+                }
+                self.eval_into(node, &mut env_groups[gi])?;
+            }
+        }
+
+        // ---- collect each group's requested outputs
+        groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                g.outputs
+                    .iter()
+                    .map(|&oi| {
+                        let name = spec.outputs.get(oi).ok_or_else(|| {
+                            KamaeError::InvalidConfig(format!(
+                                "route group requests output {oi} of {}",
+                                spec.outputs.len()
+                            ))
+                        })?;
+                        if let Some(v) = env_groups[gi].get(name) {
+                            return Ok(v.to_tensor(g.rows.len()));
+                        }
+                        env_full
+                            .get(name)
+                            .map(|v| {
+                                v.slice_rows(g.rows.start, g.rows.len())
+                                    .to_tensor(g.rows.len())
+                            })
+                            .ok_or_else(|| {
+                                KamaeError::ColumnNotFound(format!("{name} (routed spec output)"))
+                            })
+                    })
+                    .collect()
             })
             .collect()
     }
@@ -201,21 +482,22 @@ fn gv_to_f32_tensor(gv: GVal, batch: usize) -> Tensor {
 // ---------------------------------------------------------------------------
 // ingress section — DataFrame column ops
 
-fn apply_ingress(node: &SpecNode, df: &mut DataFrame) -> Result<()> {
+fn apply_ingress(node: &SpecNode, df: &mut DataFrame, regexes: &RegexCache) -> Result<()> {
     let cols: Vec<&Column> = node
         .inputs
         .iter()
         .map(|n| df.column(n))
         .collect::<Result<_>>()?;
-    let out = ingress_op_column(&node.op, &node.attrs, &cols)?;
+    let out = ingress_op_column(&node.op, &node.attrs, &cols, regexes)?;
     df.set_column(node.id.clone(), out)
 }
 
 /// Evaluate one ingress op over already-resolved input columns. Shared
 /// by [`apply_ingress`] (columns from the request DataFrame) and the
 /// fused-chain replay (columns are in-flight intermediates that never
-/// touch the DataFrame).
-fn ingress_op_column(op: &str, a: &Json, cols: &[&Column]) -> Result<Column> {
+/// touch the DataFrame). Regex steps resolve through the interpreter's
+/// per-spec precompiled cache instead of recompiling per request.
+fn ingress_op_column(op: &str, a: &Json, cols: &[&Column], regexes: &RegexCache) -> Result<Column> {
     let input = |i: usize| -> Result<&Column> {
         cols.get(i).copied().ok_or_else(|| {
             KamaeError::InvalidConfig(format!("ingress op {op}: missing input {i}"))
@@ -239,11 +521,11 @@ fn ingress_op_column(op: &str, a: &Json, cols: &[&Column]) -> Result<Column> {
         )?,
         "replace" => ops::string_ops::replace_literal(input(0)?, a.req_str("from")?, a.req_str("to")?)?,
         "regex_replace" => {
-            let re = ops::regex::Regex::new(a.req_str("pattern")?)?;
+            let re = regexes.get(a.req_str("pattern")?)?;
             ops::regex::regex_replace(input(0)?, &re, a.req_str("rep")?)?
         }
         "regex_extract" => {
-            let re = ops::regex::Regex::new(a.req_str("pattern")?)?;
+            let re = regexes.get(a.req_str("pattern")?)?;
             ops::regex::regex_extract(input(0)?, &re, a.req_i64("group")? as usize)?
         }
         "concat" => ops::string_ops::concat_cols(cols, a.req_str("separator")?)?,
@@ -280,7 +562,7 @@ fn ingress_op_column(op: &str, a: &Json, cols: &[&Column]) -> Result<Column> {
         )?,
         "to_string" => ops::cast::cast(input(0)?, &DType::Str)?,
         "parse_number" => ops::cast::cast(input(0)?, &DType::F64)?,
-        "fused_ingress" => run_fused_ingress(a, input(0)?)?,
+        "fused_ingress" => run_fused_ingress(a, input(0)?, regexes)?,
         other => {
             return Err(KamaeError::Unsupported(format!("ingress op: {other}")))
         }
@@ -304,14 +586,14 @@ enum StrStep {
 /// else replays the recorded steps with the exact column kernels the
 /// separate nodes used. Both paths are bit-identical to the unfused
 /// chain by construction.
-fn run_fused_ingress(a: &Json, input: &Column) -> Result<Column> {
+fn run_fused_ingress(a: &Json, input: &Column, regexes: &RegexCache) -> Result<Column> {
     let steps = a.req_array("steps")?;
     if let Some(out) = fused_string_walk(steps, input)? {
         return Ok(out);
     }
     let mut col = input.clone();
     for s in steps {
-        col = ingress_op_column(s.req_str("op")?, s, &[&col])?;
+        col = ingress_op_column(s.req_str("op")?, s, &[&col], regexes)?;
     }
     Ok(col)
 }
@@ -1374,6 +1656,172 @@ mod tests {
             &["b1", "b2", "c1", "f", "n"],
         );
         assert_eq!(siblings, merged);
+    }
+
+    #[test]
+    fn run_routed_matches_full_run_slices() {
+        // a merged two-variant spec: routed evaluation over mixed row
+        // groups must reproduce the matching row slices of the full run
+        // bit-for-bit — shared nodes over the whole batch, exclusive
+        // nodes over their group's rows only
+        use crate::export::SpecInput;
+
+        let node = |id: &str, op: &str, ins: &[&str], attrs: &str, dtype: SpecDType| SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype,
+            width: None,
+            lanes: vec![],
+        };
+        // variant a: log1p(x) and hashed city; variant b: the same
+        // log1p (shared after merge keys match) plus an exclusive sqrt
+        let mk = |name: &str, extra: bool| {
+            let mut nodes = vec![node("xl", "log1p", &["x"], "{}", SpecDType::F32)];
+            let mut outputs = vec!["xl".to_string(), "c_idx".to_string()];
+            if extra {
+                nodes.push(node("xs", "sqrt", &["x"], "{}", SpecDType::F32));
+                outputs.push("xs".to_string());
+            }
+            nodes.push(node(
+                "c_idx",
+                "hash_bucket",
+                &["c_h"],
+                r#"{"num_bins": 32}"#,
+                SpecDType::I64,
+            ));
+            GraphSpec {
+                name: name.into(),
+                inputs: vec![
+                    SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+                    SpecInput { name: "c".into(), dtype: DType::Str, width: None },
+                ],
+                ingress: vec![node("c_h", "hash64", &["c"], "{}", SpecDType::I64)],
+                graph_inputs: vec!["x".into(), "c_h".into()],
+                nodes,
+                outputs,
+            }
+        };
+        let a = mk("a", false);
+        let b = mk("b", true);
+        let merged = GraphSpec::merge_variants("a+b", &[&a, &b]).unwrap();
+        let (merged, _) =
+            crate::optim::optimize(merged, crate::optim::OptimizeLevel::Full).unwrap();
+
+        let df = DataFrame::new(vec![
+            (
+                "x".into(),
+                Column::from_f64(vec![0.5, 2.0, -1.0, 9.0, 4.0, 0.0, 16.0]),
+            ),
+            (
+                "c".into(),
+                Column::from_str(vec!["nyc", "lon", "par", "ber", "rio", "syd", "tok"]),
+            ),
+        ])
+        .unwrap();
+        let interp = SpecInterpreter::new(merged.clone());
+        let full = interp.run(&df).unwrap();
+
+        // rows 0..4 request variant a, rows 4..7 variant b
+        let groups = vec![
+            super::RouteGroup { outputs: merged.variant_outputs("a"), rows: 0..4 },
+            super::RouteGroup { outputs: merged.variant_outputs("b"), rows: 4..7 },
+        ];
+        let routed = interp.run_routed(&df, &groups).unwrap();
+        assert_eq!(routed.len(), 2);
+        for (g, got) in groups.iter().zip(routed.iter()) {
+            assert_eq!(got.len(), g.outputs.len());
+            for (t, &oi) in got.iter().zip(g.outputs.iter()) {
+                let expect = full[oi]
+                    .split_batch(&[g.rows.start, g.rows.len(), df.num_rows() - g.rows.end])
+                    .unwrap()
+                    .swap_remove(1);
+                assert_eq!(t, &expect, "output {} rows {:?}", merged.outputs[oi], g.rows);
+            }
+        }
+
+        // same-variant-only batches route too (single group, full cover)
+        let solo = vec![super::RouteGroup {
+            outputs: merged.variant_outputs("a"),
+            rows: 0..df.num_rows(),
+        }];
+        let routed = interp.run_routed(&df, &solo).unwrap();
+        for (t, &oi) in routed[0].iter().zip(solo[0].outputs.iter()) {
+            assert_eq!(t, &full[oi]);
+        }
+
+        // malformed group covers are rejected, not miscomputed
+        let gap = vec![super::RouteGroup { outputs: vec![0], rows: 1..df.num_rows() }];
+        assert!(interp.run_routed(&df, &gap).is_err());
+        let short = vec![super::RouteGroup { outputs: vec![0], rows: 0..2 }];
+        assert!(interp.run_routed(&df, &short).is_err());
+    }
+
+    #[test]
+    fn regex_ingress_precompiles_and_stays_exact() {
+        // the per-spec regex cache (standalone nodes AND fused-chain
+        // steps) must reproduce the direct kernel output exactly
+        let df = DataFrame::new(vec![(
+            "s".into(),
+            Column::from_str(vec!["item-12 x", "no digits", "éé-7", ""]),
+        )])
+        .unwrap();
+        let node = |id: &str, op: &str, ins: &[&str], attrs: &str| SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+            lanes: vec![],
+        };
+        let spec = GraphSpec {
+            name: "re".into(),
+            inputs: vec![SpecInput { name: "s".into(), dtype: DType::Str, width: None }],
+            ingress: vec![
+                node("r1", "regex_replace", &["s"], r#"{"pattern": "[0-9]+", "rep": "#"}"#),
+                node("h1", "hash64", &["r1"], "{}"),
+                node(
+                    "h2",
+                    "fused_ingress",
+                    &["s"],
+                    r#"{"steps": [{"op": "regex_extract", "pattern": "([a-z]+)", "group": 1}, {"op": "hash64"}]}"#,
+                ),
+            ],
+            graph_inputs: vec!["h1".into(), "h2".into()],
+            nodes: vec![
+                node("o1", "identity", &["h1"], "{}"),
+                node("o2", "identity", &["h2"], "{}"),
+            ],
+            outputs: vec!["o1".into(), "o2".into()],
+        };
+        let interp = SpecInterpreter::new(spec);
+        let out = interp.run(&df).unwrap();
+
+        // oracle: the kernels applied directly, regexes compiled fresh
+        let re1 = crate::ops::regex::Regex::new("[0-9]+").unwrap();
+        let replaced =
+            crate::ops::regex::regex_replace(df.column("s").unwrap(), &re1, "#").unwrap();
+        let h1 = crate::ops::hash::hash64_column(&replaced).unwrap();
+        assert_eq!(out[0].as_i64().unwrap(), h1.as_i64().unwrap());
+        let re2 = crate::ops::regex::Regex::new("([a-z]+)").unwrap();
+        let extracted =
+            crate::ops::regex::regex_extract(df.column("s").unwrap(), &re2, 1).unwrap();
+        let h2 = crate::ops::hash::hash64_column(&extracted).unwrap();
+        assert_eq!(out[1].as_i64().unwrap(), h2.as_i64().unwrap());
+
+        // an invalid pattern still fails at request time, not at load
+        let bad = GraphSpec {
+            name: "bad".into(),
+            inputs: vec![SpecInput { name: "s".into(), dtype: DType::Str, width: None }],
+            ingress: vec![node("r", "regex_replace", &["s"], r#"{"pattern": "[", "rep": ""}"#)],
+            graph_inputs: vec![],
+            nodes: vec![],
+            outputs: vec![],
+        };
+        let interp = SpecInterpreter::new(bad);
+        assert!(interp.run(&df).is_err());
     }
 
     #[test]

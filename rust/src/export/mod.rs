@@ -37,5 +37,5 @@ mod interp;
 mod spec;
 
 pub use builder::SpecBuilder;
-pub use interp::SpecInterpreter;
-pub use spec::{GraphSpec, SpecDType, SpecInput, SpecLane, SpecNode};
+pub use interp::{RouteGroup, SpecInterpreter};
+pub use spec::{Cone, GraphSpec, SpecDType, SpecInput, SpecLane, SpecNode};

@@ -104,6 +104,30 @@ impl SpecNode {
     }
 }
 
+/// The ancestor cone of a set of spec outputs: which ingress nodes,
+/// graph inputs and graph nodes must execute to produce them. The three
+/// vectors are parallel to `spec.ingress` / `spec.graph_inputs` /
+/// `spec.nodes` ([`GraphSpec::ancestor_cone`]).
+///
+/// This is the serving-side complement of the optimizer's
+/// `DeadNodeElim`: DCE rewrites the spec once against *all* outputs,
+/// the cone restricts one *request* to the subset its variant asked
+/// for — without touching the spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cone {
+    pub ingress: Vec<bool>,
+    pub graph_inputs: Vec<bool>,
+    pub nodes: Vec<bool>,
+}
+
+impl Cone {
+    /// Count of (ingress, graph) nodes inside the cone.
+    pub fn node_counts(&self) -> (usize, usize) {
+        let alive = |v: &[bool]| v.iter().filter(|b| **b).count();
+        (alive(&self.ingress), alive(&self.nodes))
+    }
+}
+
 /// The exported preprocessing graph.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GraphSpec {
@@ -149,6 +173,98 @@ impl GraphSpec {
             }
         }
         self.graph_input_meta(name)
+    }
+
+    /// Compute the ancestor cone of a set of output names: the ingress
+    /// nodes, graph inputs and graph nodes transitively required to
+    /// produce them. Names may be anything a node input may be — node
+    /// ids, bare lane names, qualified `"id.lane"` references, ingress
+    /// products or raw inputs. Unknown names are simply absent from the
+    /// cone (the interpreter will surface them as missing values when it
+    /// actually needs them).
+    ///
+    /// Both sections are walked in reverse: `nodes` and `ingress` are
+    /// stored in topological order, so one backward sweep per section
+    /// settles transitive membership.
+    pub fn ancestor_cone(&self, outputs: &[&str]) -> Cone {
+        let mut needed: std::collections::HashSet<&str> = outputs.iter().copied().collect();
+        let mut nodes = vec![false; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate().rev() {
+            let wanted = if n.lanes.is_empty() {
+                needed.contains(n.id.as_str())
+            } else {
+                // a multi-output node runs if ANY lane is consumed —
+                // under either its bare name or its qualified reference
+                n.lanes.iter().any(|l| {
+                    needed.contains(l.name.as_str())
+                        || needed.contains(n.lane_ref(&l.name).as_str())
+                })
+            };
+            if wanted {
+                nodes[i] = true;
+                for input in &n.inputs {
+                    needed.insert(input.as_str());
+                }
+            }
+        }
+        let graph_inputs: Vec<bool> = self
+            .graph_inputs
+            .iter()
+            .map(|g| needed.contains(g.as_str()))
+            .collect();
+        let mut ingress = vec![false; self.ingress.len()];
+        for (i, n) in self.ingress.iter().enumerate().rev() {
+            if needed.contains(n.id.as_str()) {
+                ingress[i] = true;
+                for input in &n.inputs {
+                    needed.insert(input.as_str());
+                }
+            }
+        }
+        Cone { ingress, graph_inputs, nodes }
+    }
+
+    /// [`Self::ancestor_cone`] over output *indices* into
+    /// `self.outputs` (the shape serving request routing works in).
+    pub fn ancestor_cone_of(&self, output_indices: &[usize]) -> Cone {
+        let names: Vec<&str> = output_indices
+            .iter()
+            .filter_map(|&i| self.outputs.get(i).map(String::as_str))
+            .collect();
+        self.ancestor_cone(&names)
+    }
+
+    /// Variant names of a merged multi-variant spec, in first-appearance
+    /// order — the distinct `"<variant>::"` prefixes of `outputs`
+    /// ([`Self::merge_variants`] names every output that way). Empty for
+    /// ordinary single-variant specs (any unprefixed output disqualifies
+    /// the whole spec: a half-prefixed output list is not a variant
+    /// contract anyone should route on).
+    pub fn variants(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for o in &self.outputs {
+            match o.split_once("::") {
+                Some((v, _)) => {
+                    if !out.contains(&v) {
+                        out.push(v);
+                    }
+                }
+                None => return Vec::new(),
+            }
+        }
+        out
+    }
+
+    /// Output indices belonging to one variant of a merged spec, in
+    /// output order (the order [`Self::merge_variants`] copied them in —
+    /// identical to the variant's own `outputs` order).
+    pub fn variant_outputs(&self, variant: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.split_once("::").map(|(v, _)| v == variant).unwrap_or(false))
+            .map(|(i, _)| i)
+            .collect()
     }
 
     /// Merge K variant specs into one multi-variant spec evaluated in a
@@ -676,6 +792,62 @@ mod tests {
             assert_eq!(n.inputs, vec!["lead.days".to_string()], "{}", n.id);
         }
         assert!(m.graph_inputs.contains(&"lead.days".to_string()));
+    }
+
+    #[test]
+    fn ancestor_cone_walks_lanes_ingress_and_graph_inputs() {
+        let s = sample();
+        // full outputs: everything is in the cone
+        let full = s.ancestor_cone(&["UserID_indexed", "price"]);
+        assert_eq!(full.ingress, vec![true]);
+        assert_eq!(full.graph_inputs, vec![true, true]);
+        assert_eq!(full.nodes, vec![true]);
+        // price only: the hash ingress and the indexed node drop out
+        let lite = s.ancestor_cone(&["price"]);
+        assert_eq!(lite.ingress, vec![false]);
+        assert_eq!(lite.graph_inputs, vec![false, true]);
+        assert_eq!(lite.nodes, vec![false]);
+        assert_eq!(lite.node_counts(), (0, 0));
+        // indices variant agrees with the name variant
+        assert_eq!(s.ancestor_cone_of(&[1]), lite);
+        assert_eq!(s.ancestor_cone_of(&[0, 1]), full);
+        // unknown names are simply absent
+        let none = s.ancestor_cone(&["nope"]);
+        assert_eq!(none.node_counts(), (0, 0));
+
+        // lane spec: consuming one lane (via its qualified ref through
+        // the `not` consumer) pulls in the multi-output node
+        let l = sample_with_lanes();
+        let c = l.ancestor_cone(&["bucket_not"]);
+        assert_eq!(c.nodes, vec![true, true]);
+        // consuming only the bare-named bucket lane also pulls the node
+        // but not the `not` consumer
+        let c = l.ancestor_cone(&["price_bucket"]);
+        assert_eq!(c.nodes, vec![true, false]);
+        assert_eq!(c.graph_inputs, vec![true]);
+    }
+
+    #[test]
+    fn variant_helpers_split_merged_outputs() {
+        let mut a = sample();
+        a.name = "a".into();
+        let mut b = sample();
+        b.name = "b".into();
+        let m = GraphSpec::merge_variants("ab", &[&a, &b]).unwrap();
+        assert_eq!(m.variants(), vec!["a", "b"]);
+        assert_eq!(m.variant_outputs("a"), vec![0, 1]);
+        assert_eq!(m.variant_outputs("b"), vec![2, 3]);
+        assert!(m.variant_outputs("c").is_empty());
+        // per-variant cone: variant b's outputs never need variant a's
+        // nodes, and both share the unprefixed raw input
+        let cone = m.ancestor_cone_of(&m.variant_outputs("b"));
+        for (i, n) in m.nodes.iter().enumerate() {
+            let is_b = n.id.starts_with("b::");
+            assert_eq!(cone.nodes[i], is_b, "{}", n.id);
+        }
+        assert!(cone.graph_inputs[m.graph_inputs.iter().position(|g| g == "price").unwrap()]);
+        // ordinary specs expose no variants
+        assert!(sample().variants().is_empty());
     }
 
     #[test]

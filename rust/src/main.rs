@@ -10,6 +10,9 @@
 //!                    print the per-pass node-count report
 //!   serve-bench      load compiled artifacts and run the open-loop
 //!                    Poisson serving benchmark (experiments C3/C5)
+//!   serve            load K spec variants as ONE merged routed backend
+//!                    and drive mixed per-variant traffic through the
+//!                    batcher, reporting the per-variant split
 //!
 //! Arg parsing is in-tree (offline environment — no clap).
 
@@ -81,6 +84,7 @@ fn run(raw: &[String]) -> Result<()> {
         "transform" => transform(&args),
         "optimize" => optimize(&args),
         "serve-bench" => serve_bench(&args),
+        "serve" => serve(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -105,7 +109,11 @@ fn print_usage() {
          \x20                  or --variants a.json,b.json[,...] --out merged.json — merge\n\
          \x20                  K spec variants into one multi-variant spec (shared-prefix\n\
          \x20                  dedup) before optimizing\n\
-         \x20 serve-bench      --artifacts DIR --spec NAME --rps R --seconds S [--mode compiled|interpreted|mleap]\n"
+         \x20 serve-bench      --artifacts DIR --spec NAME --rps R --seconds S [--mode compiled|interpreted|mleap]\n\
+         \x20 serve            --artifacts DIR --variants a,b[,...] [--rps R] [--seconds S]\n\
+         \x20                  [--level none|basic|full] [--route on|off] — serve K catalog\n\
+         \x20                  variants from ONE merged backend; requests target their\n\
+         \x20                  variant (routed cone evaluation) unless --route off\n"
     );
 }
 
@@ -265,6 +273,7 @@ fn optimize(args: &Args) -> Result<()> {
     }
     let (spec, report) = kamae::optim::optimize(spec, level)?;
     println!("{report}");
+    print_variant_costs(&spec);
     spec.save(&out)?;
     println!("wrote {}", out.display());
     // machine-readable per-pass node/cost trajectory (CI and perf tooling)
@@ -283,6 +292,64 @@ fn serve_bench(args: &Args) -> Result<()> {
     let seconds = args.usize_or("seconds", 10);
     let mode = args.get_or("mode", "compiled");
     let report = kamae::serving::bench_serve(&artifacts, &spec_name, rps, seconds, &mode)?;
+    println!("{report}");
+    Ok(())
+}
+
+/// Per-variant cost attribution table for a merged multi-variant spec
+/// (no-op on ordinary specs).
+fn print_variant_costs(spec: &kamae::export::GraphSpec) {
+    let costs = kamae::optim::variant_costs(spec);
+    if costs.is_empty() {
+        return;
+    }
+    println!("per-variant cost attribution (est. units/row):");
+    for c in &costs {
+        println!(
+            "  {:<16} {:>3} outputs  exclusive {:>6}  shared share {:>6}  cone total {:>6}",
+            c.variant,
+            c.outputs,
+            c.exclusive,
+            c.shared,
+            c.exclusive + c.shared
+        );
+    }
+}
+
+/// Serve K catalog variants from one merged routed backend: mixed
+/// open-loop traffic, each request targeting its variant round-robin.
+/// `--route off` degrades to all-outputs-per-request on the same
+/// backend (the PR 3 behavior) for comparison.
+fn serve(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variants_arg = args.get("variants").ok_or_else(|| {
+        KamaeError::InvalidConfig("--variants a,b[,...] required (artifact spec names)".into())
+    })?;
+    let names: Vec<&str> = variants_arg.split(',').filter(|s| !s.is_empty()).collect();
+    let rps = args.usize_or("rps", 200);
+    let seconds = args.usize_or("seconds", 5);
+    let level = kamae::optim::OptimizeLevel::parse(&args.get_or("level", "full"))?;
+    let route = match args.get_or("route", "on").as_str() {
+        "on" | "1" | "true" => true,
+        "off" | "0" | "false" => false,
+        other => {
+            return Err(KamaeError::InvalidConfig(format!(
+                "--route takes on|off, got {other}"
+            )))
+        }
+    };
+    // show what the merged backend looks like before driving traffic
+    let spec = kamae::serving::load_variant_spec(&artifacts, &names, level)?;
+    println!(
+        "merged backend {}: {} ingress + {} graph nodes, {} outputs",
+        spec.name,
+        spec.ingress.len(),
+        spec.nodes.len(),
+        spec.outputs.len()
+    );
+    print_variant_costs(&spec);
+    let report =
+        kamae::serving::bench_serve_variants(&artifacts, &names, rps, seconds, level, route)?;
     println!("{report}");
     Ok(())
 }

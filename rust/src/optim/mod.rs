@@ -69,7 +69,10 @@
 pub mod passes;
 pub mod registry;
 
-pub use registry::{lint_spec, lookup, names, node_cost, spec_cost, Arity, OpInfo, Section};
+pub use registry::{
+    cone_cost, lint_spec, lookup, names, node_cost, spec_cost, variant_costs, Arity, OpInfo,
+    Section, VariantCost,
+};
 
 use crate::error::{KamaeError, Result};
 use crate::export::GraphSpec;

@@ -423,6 +423,86 @@ pub fn spec_cost(spec: &GraphSpec) -> u64 {
     spec.ingress.iter().chain(spec.nodes.iter()).map(node_cost).sum()
 }
 
+/// Estimated per-row cost of serving ONE output subset of a spec: the
+/// summed [`node_cost`] of the subset's ancestor cone
+/// ([`GraphSpec::ancestor_cone`]). This is what a variant-routed
+/// request actually pays on a merged multi-variant backend — the
+/// serving-side counterpart of [`spec_cost`].
+pub fn cone_cost(spec: &GraphSpec, outputs: &[&str]) -> u64 {
+    let cone = spec.ancestor_cone(outputs);
+    spec.ingress
+        .iter()
+        .zip(cone.ingress.iter())
+        .chain(spec.nodes.iter().zip(cone.nodes.iter()))
+        .filter(|(_, needed)| **needed)
+        .map(|(n, _)| node_cost(n))
+        .sum()
+}
+
+/// Per-variant cost attribution over a merged multi-variant spec.
+#[derive(Debug, Clone)]
+pub struct VariantCost {
+    pub variant: String,
+    /// Number of the variant's outputs.
+    pub outputs: usize,
+    /// Cost of nodes ONLY this variant's cone needs — what request
+    /// routing stops charging to the other variants' rows.
+    pub exclusive: u64,
+    /// The variant's even share of nodes several variants' cones need
+    /// (the deduped shared prefix).
+    pub shared: u64,
+}
+
+/// Attribute a merged multi-variant spec's estimated cost to its
+/// variants ([`GraphSpec::variants`]): each node's cost goes to the one
+/// variant whose cone needs it, or is split evenly across the sharers.
+/// Empty for ordinary single-variant specs. The sum of all
+/// `exclusive + shared` equals the cost of the union cone (integer
+/// division remainders are charged to the first sharer so nothing is
+/// lost).
+pub fn variant_costs(spec: &GraphSpec) -> Vec<VariantCost> {
+    let variants = spec.variants();
+    if variants.is_empty() {
+        return Vec::new();
+    }
+    let cones: Vec<_> = variants
+        .iter()
+        .map(|v| spec.ancestor_cone_of(&spec.variant_outputs(v)))
+        .collect();
+    let mut out: Vec<VariantCost> = variants
+        .iter()
+        .map(|v| VariantCost {
+            variant: v.to_string(),
+            outputs: spec.variant_outputs(v).len(),
+            exclusive: 0,
+            shared: 0,
+        })
+        .collect();
+    let mut charge = |node: &SpecNode, pick: &dyn Fn(&crate::export::Cone) -> bool| {
+        let users: Vec<usize> = (0..cones.len()).filter(|&i| pick(&cones[i])).collect();
+        if users.is_empty() {
+            return;
+        }
+        let cost = node_cost(node);
+        if users.len() == 1 {
+            out[users[0]].exclusive += cost;
+        } else {
+            let share = cost / users.len() as u64;
+            let remainder = cost - share * users.len() as u64;
+            for (k, &u) in users.iter().enumerate() {
+                out[u].shared += share + if k == 0 { remainder } else { 0 };
+            }
+        }
+    };
+    for (i, node) in spec.ingress.iter().enumerate() {
+        charge(node, &|c| c.ingress[i]);
+    }
+    for (i, node) in spec.nodes.iter().enumerate() {
+        charge(node, &|c| c.nodes[i]);
+    }
+    out
+}
+
 /// Look up an op, erroring with context on unknown names.
 pub fn require(name: &str) -> Result<&'static OpInfo> {
     lookup(name).ok_or_else(|| KamaeError::Unsupported(format!("op not in registry: {name}")))
@@ -619,6 +699,72 @@ mod tests {
         dup.lanes[1].name = "x".into(); // collides with the graph input
         let findings = lint_spec(&spec(vec![dup]));
         assert!(findings.iter().any(|f| f.contains("defined more than once")), "{findings:?}");
+    }
+
+    #[test]
+    fn variant_cost_attribution_splits_shared_and_exclusive() {
+        // merged two-variant shape: a shared ingress hash + shared
+        // bucket node, plus one exclusive node per variant
+        let node = |id: &str, op: &str, ins: &[&str], attrs: &str| SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+            lanes: vec![],
+        };
+        let spec = GraphSpec {
+            name: "a+b".into(),
+            inputs: vec![
+                SpecInput { name: "c".into(), dtype: DType::Str, width: None },
+                SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+            ],
+            ingress: vec![node("a::c_h", names::HASH64, &["c"], "{}")],
+            graph_inputs: vec!["a::c_h".into(), "x".into()],
+            nodes: vec![
+                node("a::idx", names::HASH_BUCKET, &["a::c_h"], r#"{"num_bins": 8}"#),
+                node("a::flag", names::COMPARE_SCALAR, &["x"], r#"{"op": "ge", "value": 0.0}"#),
+                node("b::idx", names::IDENTITY, &["a::idx"], "{}"),
+                node("b::neg", names::NOT, &["a::flag"], "{}"),
+            ],
+            outputs: vec!["a::idx".into(), "a::flag".into(), "b::idx".into(), "b::neg".into()],
+        };
+        let costs = variant_costs(&spec);
+        assert_eq!(costs.len(), 2);
+        assert_eq!(costs[0].variant, "a");
+        assert_eq!(costs[1].variant, "b");
+        assert_eq!((costs[0].outputs, costs[1].outputs), (2, 2));
+        // shared: the ingress hash, a::idx, a::flag (b's cone reaches
+        // them through its identity/not consumers); exclusive: nothing
+        // for a, b::idx + b::neg for b
+        let shared_total = node_cost(&spec.ingress[0])
+            + node_cost(&spec.nodes[0])
+            + node_cost(&spec.nodes[1]);
+        assert_eq!(costs[0].exclusive, 0);
+        assert_eq!(
+            costs[1].exclusive,
+            node_cost(&spec.nodes[2]) + node_cost(&spec.nodes[3])
+        );
+        assert_eq!(costs[0].shared + costs[1].shared, shared_total);
+        // nothing lost to rounding: attribution sums to the union cone
+        let union: u64 = costs.iter().map(|c| c.exclusive + c.shared).sum();
+        assert_eq!(union, spec_cost(&spec));
+        // cone_cost agrees with a variant's own reachable set
+        assert_eq!(
+            cone_cost(&spec, &["a::idx", "a::flag"]),
+            shared_total
+        );
+        // single-variant specs attribute nothing
+        let plain = GraphSpec {
+            name: "p".into(),
+            inputs: vec![],
+            ingress: vec![],
+            graph_inputs: vec![],
+            nodes: vec![],
+            outputs: vec!["y".into()],
+        };
+        assert!(variant_costs(&plain).is_empty());
     }
 
     /// Every op a catalog pipeline can emit is known to the registry and

@@ -7,9 +7,20 @@ use std::path::Path;
 use crate::baselines::RowPipeline;
 use crate::dataframe::DataFrame;
 use crate::error::{KamaeError, Result};
-use crate::export::{GraphSpec, SpecInterpreter};
+use crate::export::{GraphSpec, RouteGroup, SpecInterpreter};
 use crate::pipeline::PipelineModel;
 use crate::runtime::{CompiledGraph, Tensor};
+
+/// One contiguous per-variant row range of a routed batch: the batcher
+/// sorts variant-tagged requests into these groups before the single
+/// backend call ([`Backend::process_routed`]).
+#[derive(Debug, Clone)]
+pub struct VariantGroup {
+    /// Requested variant, or `None` for an untargeted request (the full
+    /// output set).
+    pub variant: Option<String>,
+    pub rows: std::ops::Range<usize>,
+}
 
 /// A preprocessing execution backend: request batch in, output tensors
 /// out. Implementations must be `Send + Sync` (the batcher worker owns
@@ -19,6 +30,65 @@ pub trait Backend: Send + Sync {
 
     /// Process one (possibly merged) request batch.
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>>;
+
+    /// Named variants requests may target ([`VariantGroup::variant`] /
+    /// `Server::submit_variant`) — the `"<variant>::"` output prefixes
+    /// of a merged multi-variant spec. Empty for single-variant
+    /// backends, which only accept untargeted requests.
+    fn variants(&self) -> &[String] {
+        &[]
+    }
+
+    /// Process a batch whose contiguous row groups each target one
+    /// variant (or `None` for all outputs), returning each group's
+    /// output tensors — for a targeted group, only its variant's
+    /// outputs, in that variant's output order.
+    ///
+    /// The default is the un-routed fallback: evaluate everything once
+    /// and hand every group the full output set sliced to its rows —
+    /// correct for untargeted groups, an error for targeted ones
+    /// (backends that cannot restrict evaluation must not silently
+    /// return the wrong tensor list). [`InterpretedBackend`] overrides
+    /// this with real cone-restricted evaluation.
+    fn process_routed(&self, df: &DataFrame, groups: &[VariantGroup]) -> Result<Vec<Vec<Tensor>>> {
+        if let Some(g) = groups.iter().find(|g| g.variant.is_some()) {
+            return Err(KamaeError::Serving(format!(
+                "backend {} cannot route variant '{}' (no variant support)",
+                self.name(),
+                g.variant.as_deref().unwrap_or_default()
+            )));
+        }
+        let outputs = self.process(df)?;
+        split_by_groups(&outputs, df.num_rows(), groups)
+    }
+}
+
+/// Slice every output tensor into the groups' row ranges and transpose
+/// to per-group tensor lists (the un-routed fallback shape).
+fn split_by_groups(
+    outputs: &[Tensor],
+    batch: usize,
+    groups: &[VariantGroup],
+) -> Result<Vec<Vec<Tensor>>> {
+    let mut per_group: Vec<Vec<Tensor>> =
+        groups.iter().map(|_| Vec::with_capacity(outputs.len())).collect();
+    for g in groups {
+        if g.rows.end > batch || g.rows.start > g.rows.end {
+            return Err(KamaeError::Serving(format!(
+                "variant group rows {}..{} outside batch of {batch}",
+                g.rows.start, g.rows.end
+            )));
+        }
+    }
+    for out in outputs {
+        for (slot, g) in per_group.iter_mut().zip(groups) {
+            let part = out
+                .split_batch(&[g.rows.start, g.rows.len(), batch - g.rows.end])?
+                .swap_remove(1);
+            slot.push(part);
+        }
+    }
+    Ok(per_group)
 }
 
 /// Rust ingress + AOT-compiled HLO via PJRT, with batch-bucket padding.
@@ -150,17 +220,49 @@ fn pick_bucket<V>(graphs: &BTreeMap<usize, V>, batch: usize) -> Result<(usize, u
     Ok((bucket, max))
 }
 
-/// Columnar interpreted backend (no compilation).
+/// Columnar interpreted backend (no compilation). On a merged
+/// multi-variant spec it is variant-aware: targeted requests evaluate
+/// only the ancestor cone of their variant's outputs
+/// ([`SpecInterpreter::run_routed`]).
 pub struct InterpretedBackend {
     interp: SpecInterpreter,
     name: String,
+    /// Variant names parsed from the spec's `"<variant>::"` output
+    /// prefixes (empty on ordinary single-variant specs), with each
+    /// variant's output indices precomputed for request routing.
+    variants: Vec<String>,
+    variant_outputs: Vec<Vec<usize>>,
 }
 
 impl InterpretedBackend {
     pub fn new(spec: GraphSpec) -> InterpretedBackend {
+        let variants: Vec<String> = spec.variants().into_iter().map(str::to_string).collect();
+        let variant_outputs = variants.iter().map(|v| spec.variant_outputs(v)).collect();
         InterpretedBackend {
             name: format!("{}-interpreted", spec.name),
+            variants,
+            variant_outputs,
             interp: SpecInterpreter::new(spec),
+        }
+    }
+
+    /// Output indices a routed group resolves to: the variant's own
+    /// outputs, or every output for untargeted groups.
+    fn outputs_for(&self, variant: Option<&str>) -> Result<Vec<usize>> {
+        match variant {
+            None => Ok((0..self.interp.spec().outputs.len()).collect()),
+            Some(v) => self
+                .variants
+                .iter()
+                .position(|name| name == v)
+                .map(|i| self.variant_outputs[i].clone())
+                .ok_or_else(|| {
+                    KamaeError::Serving(format!(
+                        "backend {} has no variant '{v}' (variants: {})",
+                        self.name,
+                        self.variants.join(", ")
+                    ))
+                }),
         }
     }
 }
@@ -172,6 +274,23 @@ impl Backend for InterpretedBackend {
 
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
         self.interp.run(df)
+    }
+
+    fn variants(&self) -> &[String] {
+        &self.variants
+    }
+
+    fn process_routed(&self, df: &DataFrame, groups: &[VariantGroup]) -> Result<Vec<Vec<Tensor>>> {
+        let route_groups: Vec<RouteGroup> = groups
+            .iter()
+            .map(|g| {
+                Ok(RouteGroup {
+                    outputs: self.outputs_for(g.variant.as_deref())?,
+                    rows: g.rows.clone(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        self.interp.run_routed(df, &route_groups)
     }
 }
 
@@ -211,6 +330,45 @@ mod tests {
         let empty: BTreeMap<usize, ()> = BTreeMap::new();
         let err = pick_bucket(&empty, 8).unwrap_err();
         assert!(matches!(err, KamaeError::Serving(_)), "{err}");
+    }
+
+    #[test]
+    fn default_routed_path_slices_untargeted_and_rejects_targeted() {
+        use crate::dataframe::Column;
+
+        struct Echo;
+        impl Backend for Echo {
+            fn name(&self) -> &str {
+                "echo"
+            }
+            fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+                let v = df.column("x")?.as_f64()?;
+                Tensor::f32(v.iter().map(|&x| x as f32).collect(), vec![v.len()])
+                    .map(|t| vec![t])
+            }
+        }
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64(vec![1.0, 2.0, 3.0, 4.0, 5.0]),
+        )])
+        .unwrap();
+        let groups = vec![
+            VariantGroup { variant: None, rows: 0..2 },
+            VariantGroup { variant: None, rows: 2..5 },
+        ];
+        let per_group = Echo.process_routed(&df, &groups).unwrap();
+        assert_eq!(per_group.len(), 2);
+        assert_eq!(per_group[0][0].as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(per_group[1][0].as_f32().unwrap(), &[3.0, 4.0, 5.0]);
+        // a targeted group must error, not silently return all outputs
+        let targeted = vec![VariantGroup { variant: Some("a".into()), rows: 0..5 }];
+        let err = Echo.process_routed(&df, &targeted).unwrap_err();
+        assert!(matches!(err, KamaeError::Serving(_)), "{err}");
+        // out-of-range groups error instead of slicing garbage
+        let oob = vec![VariantGroup { variant: None, rows: 0..9 }];
+        assert!(Echo.process_routed(&df, &oob).is_err());
+        // a backend without variants advertises none
+        assert!(Echo.variants().is_empty());
     }
 
     #[test]

@@ -6,17 +6,31 @@
 //! backend once, then splits the output tensors back per request —
 //! amortising graph-execution overhead exactly the way TF-Serving's
 //! dynamic batching does for the paper's production service.
+//!
+//! ## Variant routing
+//!
+//! A request may target one **variant** of a merged multi-variant
+//! backend ([`Server::submit_variant`]). The batcher still coalesces
+//! mixed-variant submissions into ONE batch: jobs are sorted into
+//! contiguous per-variant groups (arrival order preserved within each
+//! group), the frames are concatenated in group order, and the backend
+//! runs once via [`Backend::process_routed`] — the shared preprocessing
+//! prefix executes a single time over the whole mixed batch while each
+//! variant's exclusive work runs only on its own rows. A targeted
+//! request's response carries exactly its variant's output tensors, in
+//! that variant's output order.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::dataframe::DataFrame;
 use crate::error::{KamaeError, Result};
 use crate::runtime::Tensor;
 
-use super::backend::Backend;
+use super::backend::{Backend, VariantGroup};
 
 /// Batching policy.
 #[derive(Debug, Clone)]
@@ -25,6 +39,13 @@ pub struct BatchConfig {
     pub max_batch_rows: usize,
     /// Max time the first request in a batch waits for company.
     pub max_wait: Duration,
+    /// Route variant-tagged requests through
+    /// [`Backend::process_routed`] (cone-restricted evaluation, one
+    /// merged batch across variants). When `false` the tags are ignored
+    /// and every request is served the backend's full output set — the
+    /// all-outputs-per-request baseline the routing benchmark gates
+    /// against.
+    pub route_variants: bool,
 }
 
 impl Default for BatchConfig {
@@ -33,12 +54,19 @@ impl Default for BatchConfig {
         // rarely overlap, so long waits only pad p50; under bursts the
         // queue drains in whole batches anyway because the worker picks
         // up everything already queued before waiting (§Perf L3 log).
-        BatchConfig { max_batch_rows: 128, max_wait: Duration::from_micros(300) }
+        BatchConfig {
+            max_batch_rows: 128,
+            max_wait: Duration::from_micros(300),
+            route_variants: true,
+        }
     }
 }
 
 struct Job {
     df: DataFrame,
+    /// Target variant of a merged multi-variant backend; `None` asks
+    /// for the full output set.
+    variant: Option<String>,
     resp: mpsc::Sender<Result<Vec<Tensor>>>,
 }
 
@@ -49,32 +77,87 @@ pub struct Server {
     busy_ns: Arc<AtomicU64>,
     batches: Arc<AtomicU64>,
     requests: Arc<AtomicU64>,
+    /// Requests served per variant tag (untargeted requests count under
+    /// `""`) — the per-variant split [`crate::serving::ServeReport`]
+    /// surfaces.
+    variant_requests: Arc<Mutex<BTreeMap<String, u64>>>,
+    /// Variant names the backend can route, captured before the backend
+    /// moves into the worker; `None` when routing is disabled
+    /// ([`BatchConfig::route_variants`] off — tags are ignored, so
+    /// nothing is validated). Used to reject unknown variants at submit
+    /// time: a bad tag must error its OWN request, never poison the
+    /// co-batched ones.
+    known_variants: Option<Vec<String>>,
 }
 
 impl Server {
     /// Spawn the batcher thread.
     pub fn start(backend: Box<dyn Backend>, config: BatchConfig) -> Server {
+        let known_variants =
+            if config.route_variants { Some(backend.variants().to_vec()) } else { None };
         let (tx, rx) = mpsc::channel::<Job>();
         let busy_ns = Arc::new(AtomicU64::new(0));
         let batches = Arc::new(AtomicU64::new(0));
         let requests = Arc::new(AtomicU64::new(0));
+        let variant_requests = Arc::new(Mutex::new(BTreeMap::new()));
         let worker = {
             let busy_ns = Arc::clone(&busy_ns);
             let batches = Arc::clone(&batches);
             let requests = Arc::clone(&requests);
+            let variant_requests = Arc::clone(&variant_requests);
             std::thread::spawn(move || {
-                batch_loop(backend, config, rx, busy_ns, batches, requests);
+                batch_loop(backend, config, rx, busy_ns, batches, requests, variant_requests);
             })
         };
-        Server { tx: Some(tx), worker: Some(worker), busy_ns, batches, requests }
+        Server {
+            tx: Some(tx),
+            worker: Some(worker),
+            busy_ns,
+            batches,
+            requests,
+            variant_requests,
+            known_variants,
+        }
     }
 
-    /// Submit a request; the receiver yields the output tensors for this
-    /// request's rows.
+    /// Submit an untargeted request; the receiver yields the backend's
+    /// full output tensors for this request's rows.
     pub fn submit(&self, df: DataFrame) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        self.enqueue(df, None)
+    }
+
+    /// Submit a request targeting one variant of a merged multi-variant
+    /// backend; the receiver yields only that variant's output tensors
+    /// (in the variant's own output order). Unknown variants (or a
+    /// backend without variant support) error on THIS request's
+    /// receiver immediately — the bad tag never reaches the batcher, so
+    /// it cannot fail the requests it would have been coalesced with.
+    pub fn submit_variant(
+        &self,
+        df: DataFrame,
+        variant: &str,
+    ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        if let Some(known) = &self.known_variants {
+            if !known.iter().any(|v| v == variant) {
+                let (resp_tx, resp_rx) = mpsc::channel();
+                let _ = resp_tx.send(Err(KamaeError::Serving(format!(
+                    "no variant '{variant}' to route to (backend variants: {})",
+                    known.join(", ")
+                ))));
+                return resp_rx;
+            }
+        }
+        self.enqueue(df, Some(variant.to_string()))
+    }
+
+    fn enqueue(
+        &self,
+        df: DataFrame,
+        variant: Option<String>,
+    ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
         let (resp_tx, resp_rx) = mpsc::channel();
         if let Some(tx) = &self.tx {
-            if tx.send(Job { df, resp: resp_tx.clone() }).is_err() {
+            if tx.send(Job { df, variant, resp: resp_tx.clone() }).is_err() {
                 let _ = resp_tx.send(Err(KamaeError::Serving("server stopped".into())));
             }
         }
@@ -92,7 +175,14 @@ impl Server {
         (self.batches.load(Ordering::Relaxed), self.requests.load(Ordering::Relaxed))
     }
 
-    /// Stop the worker and wait for it.
+    /// Requests served per variant tag (untargeted under `""`).
+    pub fn variant_counts(&self) -> BTreeMap<String, u64> {
+        self.variant_requests.lock().unwrap().clone()
+    }
+
+    /// Stop the worker and wait for it. Requests already queued are
+    /// still served before the worker exits (the channel drains before
+    /// disconnecting).
     pub fn shutdown(mut self) {
         self.tx.take(); // close the channel
         if let Some(w) = self.worker.take() {
@@ -117,6 +207,7 @@ fn batch_loop(
     busy_ns: Arc<AtomicU64>,
     batches: Arc<AtomicU64>,
     requests: Arc<AtomicU64>,
+    variant_requests: Arc<Mutex<BTreeMap<String, u64>>>,
 ) {
     loop {
         // block for the first request of the next batch
@@ -154,8 +245,19 @@ fn batch_loop(
             }
         }
 
+        {
+            let mut counts = variant_requests.lock().unwrap();
+            for job in &jobs {
+                *counts.entry(job.variant.clone().unwrap_or_default()).or_insert(0) += 1;
+            }
+        }
+        let routed = config.route_variants && jobs.iter().any(|j| j.variant.is_some());
         let t0 = Instant::now();
-        let result = run_batch(backend.as_ref(), &jobs);
+        let result = if routed {
+            run_batch_routed(backend.as_ref(), &jobs)
+        } else {
+            run_batch(backend.as_ref(), &jobs)
+        };
         busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         batches.fetch_add(1, Ordering::Relaxed);
         requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
@@ -200,6 +302,53 @@ fn run_batch(backend: &dyn Backend, jobs: &[Job]) -> Result<Vec<Vec<Tensor>>> {
     Ok(per_job)
 }
 
+/// Variant-routed batch execution: reorder the drained jobs into
+/// contiguous per-variant groups (first-appearance group order, arrival
+/// order within each group), concatenate once, run the backend's routed
+/// path once, then split each group's tensors back to its jobs. The
+/// returned per-job tensor lists are in the ORIGINAL job order, so the
+/// caller's response loop stays oblivious to the reordering.
+fn run_batch_routed(backend: &dyn Backend, jobs: &[Job]) -> Result<Vec<Vec<Tensor>>> {
+    // stable-partition job indices into per-variant groups
+    let mut group_jobs: Vec<(Option<String>, Vec<usize>)> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        match group_jobs.iter_mut().find(|(v, _)| *v == job.variant) {
+            Some((_, members)) => members.push(i),
+            None => group_jobs.push((job.variant.clone(), vec![i])),
+        }
+    }
+    // concat in group order; build the contiguous row ranges
+    let order: Vec<usize> = group_jobs.iter().flat_map(|(_, m)| m.iter().copied()).collect();
+    let frames: Vec<&DataFrame> = order.iter().map(|&i| &jobs[i].df).collect();
+    let merged = if frames.len() == 1 { frames[0].clone() } else { DataFrame::concat(&frames)? };
+    let mut groups = Vec::with_capacity(group_jobs.len());
+    let mut start = 0usize;
+    for (variant, members) in &group_jobs {
+        let len: usize = members.iter().map(|&i| jobs[i].df.num_rows()).sum();
+        groups.push(VariantGroup { variant: variant.clone(), rows: start..start + len });
+        start += len;
+    }
+
+    let per_group = backend.process_routed(&merged, &groups)?;
+
+    // split each group's tensors across its jobs, back in job order
+    let mut per_job: Vec<Vec<Tensor>> = jobs.iter().map(|_| Vec::new()).collect();
+    for ((_, members), tensors) in group_jobs.iter().zip(per_group) {
+        if members.len() == 1 {
+            per_job[members[0]] = tensors;
+            continue;
+        }
+        let sizes: Vec<usize> = members.iter().map(|&i| jobs[i].df.num_rows()).collect();
+        for out in &tensors {
+            let parts = out.split_batch(&sizes)?;
+            for (&i, part) in members.iter().zip(parts) {
+                per_job[i].push(part);
+            }
+        }
+    }
+    Ok(per_job)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,7 +380,11 @@ mod tests {
     fn responses_route_back_to_requests() {
         let server = Server::start(
             Box::new(Doubler { max_batch: Default::default() }),
-            BatchConfig { max_batch_rows: 64, max_wait: Duration::from_millis(5) },
+            BatchConfig {
+                max_batch_rows: 64,
+                max_wait: Duration::from_millis(5),
+                ..BatchConfig::default()
+            },
         );
         let rxs: Vec<_> = (0..20)
             .map(|i| (i, server.submit(req(&[i as f64, i as f64 + 0.5]))))
@@ -253,7 +406,11 @@ mod tests {
         let probe: *const Doubler = backend.as_ref();
         let server = Server::start(
             backend,
-            BatchConfig { max_batch_rows: 1024, max_wait: Duration::from_millis(50) },
+            BatchConfig {
+                max_batch_rows: 1024,
+                max_wait: Duration::from_millis(50),
+                ..BatchConfig::default()
+            },
         );
         // burst of requests within the batching window
         let rxs: Vec<_> = (0..32).map(|_| server.submit(req(&[1.0]))).collect();
@@ -276,7 +433,11 @@ mod tests {
         let probe: *const Doubler = backend.as_ref();
         let server = Server::start(
             backend,
-            BatchConfig { max_batch_rows: 8, max_wait: Duration::from_millis(5) },
+            BatchConfig {
+                max_batch_rows: 8,
+                max_wait: Duration::from_millis(5),
+                ..BatchConfig::default()
+            },
         );
         let vals: Vec<f64> = (0..50).map(|i| i as f64).collect();
         let rx = server.submit(req(&vals));
@@ -309,6 +470,281 @@ mod tests {
         let server = Server::start(Box::new(Failing), BatchConfig::default());
         let rx = server.submit(req(&[1.0]));
         assert!(rx.recv().unwrap().is_err());
+        server.shutdown();
+    }
+
+    // ---- variant routing --------------------------------------------------
+
+    /// Two-variant mock backend over one f64 column `x`: variant "dbl"
+    /// serves [2x], variant "tri" serves [3x], untargeted requests get
+    /// both in that order. Routed calls are counted so tests can pin
+    /// which path executed.
+    struct VariantDoubler {
+        variants: Vec<String>,
+        routed_calls: std::sync::atomic::AtomicUsize,
+        max_batch: std::sync::atomic::AtomicUsize,
+    }
+
+    impl VariantDoubler {
+        fn new() -> VariantDoubler {
+            VariantDoubler {
+                variants: vec!["dbl".into(), "tri".into()],
+                routed_calls: Default::default(),
+                max_batch: Default::default(),
+            }
+        }
+
+        fn scale(df: &DataFrame, k: f64) -> Result<Tensor> {
+            let v = df.column("x")?.as_f64()?;
+            Tensor::f32(v.iter().map(|&x| (k * x) as f32).collect(), vec![v.len()])
+        }
+    }
+
+    impl Backend for VariantDoubler {
+        fn name(&self) -> &str {
+            "variant-doubler"
+        }
+
+        fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+            self.max_batch.fetch_max(df.num_rows(), Ordering::Relaxed);
+            Ok(vec![Self::scale(df, 2.0)?, Self::scale(df, 3.0)?])
+        }
+
+        fn variants(&self) -> &[String] {
+            &self.variants
+        }
+
+        fn process_routed(
+            &self,
+            df: &DataFrame,
+            groups: &[super::VariantGroup],
+        ) -> Result<Vec<Vec<Tensor>>> {
+            self.routed_calls.fetch_add(1, Ordering::Relaxed);
+            self.max_batch.fetch_max(df.num_rows(), Ordering::Relaxed);
+            groups
+                .iter()
+                .map(|g| {
+                    let slice = df.slice(g.rows.start, g.rows.len());
+                    match g.variant.as_deref() {
+                        Some("dbl") => Ok(vec![Self::scale(&slice, 2.0)?]),
+                        Some("tri") => Ok(vec![Self::scale(&slice, 3.0)?]),
+                        None => Ok(vec![Self::scale(&slice, 2.0)?, Self::scale(&slice, 3.0)?]),
+                        Some(other) => {
+                            Err(KamaeError::Serving(format!("unknown variant {other}")))
+                        }
+                    }
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn mixed_variant_batch_routes_back_to_each_request() {
+        // interleaved dbl/tri/untargeted submissions within one batching
+        // window: every response must carry exactly its variant's
+        // outputs for its own rows, whatever the batcher reordered
+        let backend = Box::new(VariantDoubler::new());
+        let probe: *const VariantDoubler = backend.as_ref();
+        let server = Server::start(
+            backend,
+            BatchConfig {
+                max_batch_rows: 1024,
+                max_wait: Duration::from_millis(50),
+                ..BatchConfig::default()
+            },
+        );
+        let mut rxs = Vec::new();
+        for i in 0..24 {
+            let vals = [i as f64, i as f64 + 0.25];
+            let rx = match i % 3 {
+                0 => server.submit_variant(req(&vals), "dbl"),
+                1 => server.submit_variant(req(&vals), "tri"),
+                _ => server.submit(req(&vals)),
+            };
+            rxs.push((i, rx));
+        }
+        for (i, rx) in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            let vals = [i as f64, i as f64 + 0.25];
+            match i % 3 {
+                0 => {
+                    assert_eq!(out.len(), 1, "dbl request got {} tensors", out.len());
+                    assert_eq!(out[0].as_f32().unwrap(), &[
+                        2.0 * vals[0] as f32,
+                        2.0 * vals[1] as f32
+                    ]);
+                }
+                1 => {
+                    assert_eq!(out.len(), 1, "tri request got {} tensors", out.len());
+                    assert_eq!(out[0].as_f32().unwrap(), &[
+                        3.0 * vals[0] as f32,
+                        3.0 * vals[1] as f32
+                    ]);
+                }
+                _ => {
+                    assert_eq!(out.len(), 2, "untargeted request got {} tensors", out.len());
+                    assert_eq!(out[0].as_f32().unwrap()[0], 2.0 * vals[0] as f32);
+                    assert_eq!(out[1].as_f32().unwrap()[0], 3.0 * vals[0] as f32);
+                }
+            }
+        }
+        let counts = server.variant_counts();
+        assert_eq!(counts.get("dbl"), Some(&8));
+        assert_eq!(counts.get("tri"), Some(&8));
+        assert_eq!(counts.get(""), Some(&8));
+        // SAFETY: server still alive, backend not moved
+        let (routed, max_batch) = unsafe {
+            (
+                (*probe).routed_calls.load(Ordering::Relaxed),
+                (*probe).max_batch.load(Ordering::Relaxed),
+            )
+        };
+        assert!(routed > 0, "no batch took the routed path");
+        assert!(max_batch > 2, "mixed-variant batch never merged (max {max_batch})");
+        server.shutdown();
+    }
+
+    #[test]
+    fn route_off_serves_tagged_requests_the_full_output_set() {
+        // the all-outputs baseline: with routing disabled the variant
+        // tag is ignored and process() serves everything
+        let server = Server::start(
+            Box::new(VariantDoubler::new()),
+            BatchConfig { route_variants: false, ..BatchConfig::default() },
+        );
+        let out = server
+            .submit_variant(req(&[2.0]), "dbl")
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(out.len(), 2, "route-off must serve the full output set");
+        assert_eq!(out[0].as_f32().unwrap(), &[4.0]);
+        assert_eq!(out[1].as_f32().unwrap(), &[6.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_errors_only_its_own_request() {
+        // a bad tag is rejected at submit time, BEFORE batching — so a
+        // valid request submitted in the same flush window (which the
+        // batcher would have coalesced with it) still succeeds
+        let server = Server::start(
+            Box::new(VariantDoubler::new()),
+            BatchConfig {
+                max_batch_rows: 1024,
+                max_wait: Duration::from_millis(50),
+                ..BatchConfig::default()
+            },
+        );
+        let bad = server.submit_variant(req(&[1.0]), "nope");
+        let ok = server.submit_variant(req(&[1.0]), "dbl");
+        let err = bad.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+        assert_eq!(ok.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[2.0]);
+        // the rejected request never reached the batcher
+        let (_, requests) = server.counts();
+        assert_eq!(requests, 1);
+        server.shutdown();
+
+        // with routing off, tags are ignored rather than validated: the
+        // same bad tag serves the full output set
+        let server = Server::start(
+            Box::new(VariantDoubler::new()),
+            BatchConfig { route_variants: false, ..BatchConfig::default() },
+        );
+        let out = server.submit_variant(req(&[1.0]), "nope").recv().unwrap().unwrap();
+        assert_eq!(out.len(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn flush_deadline_expires_partial_batches() {
+        // requests spaced further apart than max_wait must not wait for
+        // a full batch: each flushes as its own (partial) batch
+        let server = Server::start(
+            Box::new(Doubler { max_batch: Default::default() }),
+            BatchConfig {
+                max_batch_rows: 1024,
+                max_wait: Duration::from_millis(20),
+                ..BatchConfig::default()
+            },
+        );
+        let rx1 = server.submit(req(&[1.0]));
+        assert_eq!(rx1.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[2.0]);
+        // well past the first batch's deadline
+        std::thread::sleep(Duration::from_millis(120));
+        let rx2 = server.submit(req(&[2.0]));
+        assert_eq!(rx2.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[4.0]);
+        let (batches, requests) = server.counts();
+        assert_eq!(requests, 2);
+        assert_eq!(batches, 2, "spaced requests must flush as separate partial batches");
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_mixed_variant_requests() {
+        // shutdown closes the channel but the worker drains what is
+        // already queued: every submitted request still gets an answer
+        let server = Server::start(
+            Box::new(VariantDoubler::new()),
+            BatchConfig {
+                max_batch_rows: 8,
+                max_wait: Duration::from_millis(1),
+                ..BatchConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                let vals = [i as f64];
+                match i % 3 {
+                    0 => (i, server.submit_variant(req(&vals), "dbl"), 2.0f32),
+                    1 => (i, server.submit_variant(req(&vals), "tri"), 3.0f32),
+                    _ => (i, server.submit(req(&vals)), 2.0f32),
+                }
+            })
+            .collect();
+        server.shutdown(); // worker must finish the queue before exiting
+        for (i, rx, k) in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0].as_f32().unwrap(), &[k * i as f32], "request {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_variant_request_is_served_whole_and_routed() {
+        // a tagged request larger than max_batch_rows still runs as its
+        // own (routed) batch: never split, never stalled, only its
+        // variant's outputs
+        let backend = Box::new(VariantDoubler::new());
+        let probe: *const VariantDoubler = backend.as_ref();
+        let server = Server::start(
+            backend,
+            BatchConfig {
+                max_batch_rows: 8,
+                max_wait: Duration::from_millis(5),
+                ..BatchConfig::default()
+            },
+        );
+        let vals: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        let rx = server.submit_variant(req(&vals), "tri");
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), 1, "tagged oversized request must get only its variant");
+        let got = out[0].as_f32().unwrap();
+        assert_eq!(got.len(), 40, "oversized request lost rows");
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, 3.0 * i as f32);
+        }
+        let (batches, requests) = server.counts();
+        assert_eq!((batches, requests), (1, 1), "oversized request was split or retried");
+        // SAFETY: server still alive, backend not moved
+        let (routed, max_batch) = unsafe {
+            (
+                (*probe).routed_calls.load(Ordering::Relaxed),
+                (*probe).max_batch.load(Ordering::Relaxed),
+            )
+        };
+        assert_eq!(routed, 1, "oversized tagged request did not take the routed path");
+        assert_eq!(max_batch, 40, "backend saw a different batch than submitted");
         server.shutdown();
     }
 }

@@ -1,23 +1,42 @@
 //! Serving metrics: latency recording and the benchmark report.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::bench::{fmt_ns, percentile};
 use crate::util::json::Json;
 
-/// Thread-safe latency sample collector.
+/// Thread-safe latency sample collector. Samples may optionally carry a
+/// variant tag ([`Self::record_variant`]); the report then includes the
+/// per-variant request/latency split alongside the aggregate.
 pub struct LatencyRecorder {
     samples_ns: Mutex<Vec<f64>>,
+    tagged_ns: Mutex<BTreeMap<String, Vec<f64>>>,
 }
 
 impl LatencyRecorder {
     pub fn new() -> LatencyRecorder {
-        LatencyRecorder { samples_ns: Mutex::new(Vec::new()) }
+        LatencyRecorder {
+            samples_ns: Mutex::new(Vec::new()),
+            tagged_ns: Mutex::new(BTreeMap::new()),
+        }
     }
 
     pub fn record(&self, latency: Duration) {
         self.samples_ns.lock().unwrap().push(latency.as_nanos() as f64);
+    }
+
+    /// Record a sample under a variant tag AND in the aggregate.
+    pub fn record_variant(&self, variant: &str, latency: Duration) {
+        let ns = latency.as_nanos() as f64;
+        self.samples_ns.lock().unwrap().push(ns);
+        self.tagged_ns
+            .lock()
+            .unwrap()
+            .entry(variant.to_string())
+            .or_default()
+            .push(ns);
     }
 
     /// Produce the final report.
@@ -38,6 +57,25 @@ impl LatencyRecorder {
         ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let wall_secs = wall.as_secs_f64();
         let pct = |p: f64| if ns.is_empty() { 0.0 } else { percentile(&ns, p) };
+        let variants = self
+            .tagged_ns
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(variant, samples)| {
+                let mut vs = samples.clone();
+                vs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let vp = |p: f64| if vs.is_empty() { 0.0 } else { percentile(&vs, p) };
+                VariantStats {
+                    variant: variant.clone(),
+                    requests: vs.len(),
+                    mean_ns: vs.iter().sum::<f64>() / vs.len().max(1) as f64,
+                    p50_ns: vp(50.0),
+                    p95_ns: vp(95.0),
+                    p99_ns: vp(99.0),
+                }
+            })
+            .collect();
         ServeReport {
             name: name.to_string(),
             requests,
@@ -57,6 +95,7 @@ impl LatencyRecorder {
             } else {
                 busy.as_secs_f64() / (requests as f64 / 1000.0)
             },
+            variants,
         }
     }
 }
@@ -64,6 +103,30 @@ impl LatencyRecorder {
 impl Default for LatencyRecorder {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Per-variant request/latency split of a routed serving run.
+#[derive(Debug, Clone)]
+pub struct VariantStats {
+    pub variant: String,
+    pub requests: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl VariantStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("variant", self.variant.clone());
+        j.set("requests", self.requests);
+        j.set("mean_ns", self.mean_ns);
+        j.set("p50_ns", self.p50_ns);
+        j.set("p95_ns", self.p95_ns);
+        j.set("p99_ns", self.p99_ns);
+        j
     }
 }
 
@@ -81,6 +144,9 @@ pub struct ServeReport {
     /// Total backend busy time — the service-cost proxy.
     pub busy_secs: f64,
     pub cost_cpu_s_per_1k: f64,
+    /// Per-variant split of a routed run (empty when nothing was
+    /// recorded per variant — single-variant benches are unchanged).
+    pub variants: Vec<VariantStats>,
 }
 
 impl ServeReport {
@@ -88,7 +154,9 @@ impl ServeReport {
     /// `BENCH_*.json` perf-trajectory files. Report names follow the
     /// `<spec>/<mode>` convention (see [`crate::serving::bench_serve`]);
     /// both halves are emitted as separate fields so trajectory tooling
-    /// never has to re-parse them.
+    /// never has to re-parse them. The `variants` key appears only on
+    /// routed runs, so single-variant trajectory records keep their
+    /// exact pre-routing shape.
     pub fn to_json(&self) -> Json {
         let (spec, mode) = match self.name.split_once('/') {
             Some((s, m)) => (s, m),
@@ -107,6 +175,12 @@ impl ServeReport {
         j.set("p99_ns", self.p99_ns);
         j.set("busy_secs", self.busy_secs);
         j.set("cost_cpu_s_per_1k", self.cost_cpu_s_per_1k);
+        if !self.variants.is_empty() {
+            j.set(
+                "variants",
+                Json::Array(self.variants.iter().map(VariantStats::to_json).collect()),
+            );
+        }
         j
     }
 }
@@ -122,7 +196,19 @@ impl std::fmt::Display for ServeReport {
         writeln!(f, "latency p95     {}", fmt_ns(self.p95_ns))?;
         writeln!(f, "latency p99     {}", fmt_ns(self.p99_ns))?;
         writeln!(f, "backend busy    {:.2} s", self.busy_secs)?;
-        write!(f, "cost proxy      {:.3} cpu-s / 1k req", self.cost_cpu_s_per_1k)
+        write!(f, "cost proxy      {:.3} cpu-s / 1k req", self.cost_cpu_s_per_1k)?;
+        for v in &self.variants {
+            write!(
+                f,
+                "\n  variant {:<12} {:>6} req  p50 {}  p95 {}  p99 {}",
+                v.variant,
+                v.requests,
+                fmt_ns(v.p50_ns),
+                fmt_ns(v.p95_ns),
+                fmt_ns(v.p99_ns)
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -167,6 +253,46 @@ mod tests {
         // the record is accepted by the trajectory writer
         let j = rep.to_json();
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn per_variant_split_lands_in_report_and_json() {
+        let r = LatencyRecorder::new();
+        r.record_variant("ltr", Duration::from_millis(4));
+        r.record_variant("ltr", Duration::from_millis(6));
+        r.record_variant("ltr_lite", Duration::from_millis(1));
+        let rep = r.report(
+            "ltr+ltr_lite/routed",
+            3,
+            Duration::from_secs(1),
+            Duration::from_millis(11),
+        );
+        // tagged samples aggregate into the overall stats too
+        assert_eq!(rep.requests, 3);
+        assert!(rep.p99_ns >= 5e6, "{}", rep.p99_ns);
+        assert_eq!(rep.variants.len(), 2);
+        let ltr = &rep.variants[0];
+        assert_eq!((ltr.variant.as_str(), ltr.requests), ("ltr", 2));
+        assert!(ltr.p50_ns >= 4e6 && ltr.p50_ns <= 6e6, "{}", ltr.p50_ns);
+        let lite = &rep.variants[1];
+        assert_eq!((lite.variant.as_str(), lite.requests), ("ltr_lite", 1));
+        assert!(lite.p99_ns <= 2e6, "{}", lite.p99_ns);
+        // the split shows up in the trajectory record and round-trips
+        let j = rep.to_json();
+        let vs = j.req_array("variants").unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].req_str("variant").unwrap(), "ltr");
+        assert_eq!(vs[0].req_i64("requests").unwrap(), 2);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // untagged reports keep the exact pre-routing record shape
+        let plain = LatencyRecorder::new();
+        plain.record(Duration::from_millis(1));
+        let j = plain
+            .report("ltr/interpreted", 1, Duration::from_secs(1), Duration::ZERO)
+            .to_json();
+        assert!(j.get("variants").is_none());
+        // display renders the split
+        assert!(rep.to_string().contains("variant ltr_lite"));
     }
 
     #[test]

@@ -14,15 +14,43 @@
 //!   pipeline ([`crate::baselines`]), the MLeap stand-in.
 //!
 //! `bench_serve` is the open-loop Poisson driver used for experiments
-//! C3/C5 (latency vs mode, 200 req/s sustained service).
+//! C3/C5 (latency vs mode, 200 req/s sustained service);
+//! `bench_serve_variants` is its mixed-variant counterpart.
+//!
+//! ## Variant-routed request flow
+//!
+//! K catalog variants (e.g. the full `ltr` ranker and its `ltr_lite`
+//! sibling) deploy as ONE backend: their specs are merged
+//! ([`GraphSpec::merge_variants`]) and optimized so the shared
+//! preprocessing prefix exists once (`CrossOutputDedup`). A request
+//! then targets a variant end to end:
+//!
+//! 1. **submit** — [`Server::submit_variant`] tags the request with a
+//!    variant name (untargeted [`Server::submit`] keeps meaning "all
+//!    outputs");
+//! 2. **batch** — the batcher coalesces mixed-variant submissions into
+//!    one batch, sorted into contiguous per-variant row groups
+//!    ([`VariantGroup`]);
+//! 3. **evaluate** — [`Backend::process_routed`] walks only the
+//!    ancestor cone of each group's outputs
+//!    ([`crate::export::SpecInterpreter::run_routed`]): shared-prefix
+//!    nodes run once over the whole mixed batch, variant-exclusive
+//!    nodes run only on their variant's rows;
+//! 4. **respond** — each request receives exactly its variant's output
+//!    tensors, in the variant's own output order, and the per-variant
+//!    request/latency split lands in [`ServeReport::variants`].
+//!
+//! `benches/variant_routing.rs` gates the win: routed mixed-variant
+//! serving must strictly beat both all-outputs-per-request on the
+//! merged backend and two separate single-variant backends.
 
 mod backend;
 mod batcher;
 mod metrics;
 
-pub use backend::{Backend, CompiledBackend, InterpretedBackend, MleapBackend};
+pub use backend::{Backend, CompiledBackend, InterpretedBackend, MleapBackend, VariantGroup};
 pub use batcher::{BatchConfig, Server};
-pub use metrics::{LatencyRecorder, ServeReport};
+pub use metrics::{LatencyRecorder, ServeReport, VariantStats};
 
 use std::path::Path;
 
@@ -92,6 +120,20 @@ pub fn load_variant_backend(
     spec_names: &[&str],
     level: OptimizeLevel,
 ) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(InterpretedBackend::new(load_variant_spec(
+        artifacts, spec_names, level,
+    )?)))
+}
+
+/// The merged, optimized multi-variant spec [`load_variant_backend`]
+/// serves — exposed separately so callers (the `kamae serve` CLI, cost
+/// tooling) can inspect per-variant structure and cost attribution
+/// without loading a second copy.
+pub fn load_variant_spec(
+    artifacts: &Path,
+    spec_names: &[&str],
+    level: OptimizeLevel,
+) -> Result<GraphSpec> {
     if spec_names.is_empty() {
         return Err(KamaeError::InvalidConfig("no spec variants given".into()));
     }
@@ -102,7 +144,7 @@ pub fn load_variant_backend(
     let refs: Vec<&GraphSpec> = specs.iter().collect();
     let merged = GraphSpec::merge_variants(&spec_names.join("+"), &refs)?;
     let (merged, _) = crate::optim::optimize(merged, level)?;
-    Ok(Box::new(InterpretedBackend::new(merged)))
+    Ok(merged)
 }
 
 /// Open-loop Poisson serving benchmark: `rps` requests/second for
@@ -169,6 +211,89 @@ pub fn bench_serve(
         busy,
     ))
 }
+
+/// Open-loop Poisson serving benchmark over a MERGED multi-variant
+/// backend with mixed traffic: requests cycle round-robin through
+/// `spec_names` and, when `route` is set, target their variant via
+/// [`Server::submit_variant`] (cone-restricted evaluation). With
+/// `route` off every request is served the full merged output set — the
+/// all-outputs-per-request baseline. Latencies are recorded per variant
+/// so the returned report carries the split
+/// ([`ServeReport::variants`]).
+///
+/// Requests draw rows from the FIRST variant's request pool: merged
+/// variants share an input schema (the LTR full/lite shape); serving
+/// variants with disjoint schemas would need a per-variant pool.
+pub fn bench_serve_variants(
+    artifacts: &Path,
+    spec_names: &[&str],
+    rps: usize,
+    seconds: usize,
+    level: OptimizeLevel,
+    route: bool,
+) -> Result<ServeReport> {
+    if spec_names.is_empty() {
+        return Err(KamaeError::InvalidConfig("no spec variants given".into()));
+    }
+    let backend = load_variant_backend(artifacts, spec_names, level)?;
+    let config = BatchConfig { route_variants: route, ..BatchConfig::default() };
+    let server = Server::start(backend, config);
+
+    let pool = request_pool(spec_names[0], 4096)?;
+    let rows_per_request = 8;
+    let total_requests = rps * seconds;
+    let mut rng = Rng::new(0xBEEF);
+
+    let recorder = LatencyRecorder::new();
+    let t0 = std::time::Instant::now();
+    let mut pending: Vec<(std::time::Instant, &str, RespRx)> = Vec::with_capacity(total_requests);
+    let mut next_arrival = 0.0f64;
+    for i in 0..total_requests {
+        next_arrival += rng.exponential(rps as f64);
+        let now = t0.elapsed().as_secs_f64();
+        if next_arrival > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(next_arrival - now));
+        }
+        let start = rng.below((pool.num_rows() - rows_per_request) as u64) as usize;
+        let req = pool.slice(start, rows_per_request);
+        let variant = spec_names[i % spec_names.len()];
+        let sent = std::time::Instant::now();
+        let rx = if route { server.submit_variant(req, variant) } else { server.submit(req) };
+        pending.push((sent, variant, rx));
+        while let Some((sent, variant, rx)) = pending.first() {
+            match rx.try_recv() {
+                Ok(res) => {
+                    res?;
+                    recorder.record_variant(variant, sent.elapsed());
+                    pending.remove(0);
+                }
+                Err(_) => break,
+            }
+        }
+    }
+    for (sent, variant, rx) in pending {
+        rx.recv()
+            .map_err(|_| KamaeError::Serving("server dropped response".into()))??;
+        recorder.record_variant(variant, sent.elapsed());
+    }
+    let wall = t0.elapsed();
+    let busy = server.busy_time();
+    server.shutdown();
+
+    Ok(recorder.report(
+        &format!(
+            "{}/{}",
+            spec_names.join("+"),
+            if route { "routed" } else { "merged-all" }
+        ),
+        total_requests,
+        wall,
+        busy,
+    ))
+}
+
+/// Response-channel alias for the pending-request bookkeeping above.
+type RespRx = std::sync::mpsc::Receiver<Result<Vec<crate::runtime::Tensor>>>;
 
 /// Synthetic request rows matching each catalog spec's input schema.
 pub fn request_pool(spec_name: &str, rows: usize) -> Result<DataFrame> {

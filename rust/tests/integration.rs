@@ -146,7 +146,11 @@ impl kamae::serving::Backend for EchoBackend {
 fn server_under_concurrent_submitters() {
     let server = std::sync::Arc::new(Server::start(
         Box::new(EchoBackend),
-        BatchConfig { max_batch_rows: 64, max_wait: Duration::from_millis(1) },
+        BatchConfig {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(1),
+            ..BatchConfig::default()
+        },
     ));
     std::thread::scope(|scope| {
         for t in 0..4i64 {
@@ -343,6 +347,74 @@ fn variant_backend_serves_merged_outputs() {
             );
         }
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Variant-ROUTED serving end to end through the public API: the same
+/// artifacts layout, driven by `bench_serve_variants` with routing on —
+/// mixed ltr/ltr_lite traffic through the real batcher, each response
+/// carrying only its variant's outputs, and the per-variant split
+/// landing in the report.
+#[test]
+fn routed_variant_serving_end_to_end() {
+    use kamae::optim::OptimizeLevel;
+
+    let dir = std::env::temp_dir().join(format!("kamae_it_routed_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("specs")).unwrap();
+    let df = synth::gen_ltr(&synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(df, 2))
+        .unwrap();
+    for (name, outputs) in [
+        ("ltr", catalog::LTR_OUTPUTS.as_slice()),
+        ("ltr_lite", catalog::LTR_LITE_OUTPUTS.as_slice()),
+    ] {
+        let spec = model
+            .to_graph_spec(name, catalog::ltr_inputs(), outputs)
+            .unwrap();
+        spec.save(&dir.join("specs").join(format!("{name}.json"))).unwrap();
+    }
+
+    // direct submit path: a targeted request gets ONLY its variant's
+    // outputs, in the variant's own order
+    let backend = kamae::serving::load_variant_backend(
+        &dir,
+        &["ltr", "ltr_lite"],
+        OptimizeLevel::default(),
+    )
+    .unwrap();
+    assert_eq!(backend.variants(), &["ltr".to_string(), "ltr_lite".to_string()]);
+    let server = Server::start(backend, BatchConfig::default());
+    let req = kamae::serving::request_pool("ltr", 16).unwrap();
+    let lite_out = server
+        .submit_variant(req.slice(0, 8), "ltr_lite")
+        .recv()
+        .unwrap()
+        .unwrap();
+    assert_eq!(lite_out.len(), catalog::LTR_LITE_OUTPUTS.len());
+    let full_out = server.submit_variant(req.slice(8, 8), "ltr").recv().unwrap().unwrap();
+    assert_eq!(full_out.len(), catalog::LTR_OUTPUTS.len());
+    let counts = server.variant_counts();
+    assert_eq!(counts.get("ltr"), Some(&1));
+    assert_eq!(counts.get("ltr_lite"), Some(&1));
+    server.shutdown();
+
+    // the mixed open-loop driver: report carries the per-variant split
+    let report = kamae::serving::bench_serve_variants(
+        &dir,
+        &["ltr", "ltr_lite"],
+        100,
+        1,
+        OptimizeLevel::default(),
+        true,
+    )
+    .unwrap();
+    assert_eq!(report.requests, 100);
+    assert_eq!(report.variants.len(), 2);
+    assert_eq!(report.variants[0].variant, "ltr");
+    assert_eq!(report.variants[1].variant, "ltr_lite");
+    assert_eq!(report.variants.iter().map(|v| v.requests).sum::<usize>(), 100);
+    assert!(report.to_json().get("variants").is_some());
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -341,6 +341,71 @@ fn cross_variant_dedup_parity_ltr() {
 }
 
 #[test]
+fn regex_ingress_precompile_parity() {
+    // Regex step specialisation (ROADMAP): the interpreter precompiles
+    // every ingress regex once per backend load — standalone
+    // `regex_replace` / `regex_extract` nodes AND steps inside
+    // IngressFuse's `fused_ingress` chains. Precompilation must not
+    // change a single bit: engine transform, unoptimized
+    // interpretation, and the fully optimized spec (where the
+    // regex→hash chain fuses and replays through the cache) must agree
+    // exactly — including across repeated requests over one backend
+    // (the cache is reused, not rebuilt).
+    use kamae::dataframe::{Column, DataFrame, DType};
+    use kamae::export::SpecInput;
+    use kamae::optim::OptimizeLevel;
+    use kamae::pipeline::{Pipeline, Stage};
+    use kamae::transformers::{HashIndexTransformer, RegexExtractTransformer, RegexReplaceTransformer};
+
+    let df = DataFrame::new(vec![(
+        "s".into(),
+        Column::from_str(vec!["item-12 x", "no digits", "éé-7 ab", "", "42"]),
+    )])
+    .unwrap();
+    let pipeline = Pipeline::new(vec![
+        Stage::transformer(
+            RegexReplaceTransformer::new("s", "s_clean", "[0-9]+", "#").unwrap(),
+        ),
+        Stage::transformer(HashIndexTransformer::new("s_clean", "s_clean_idx", 257)),
+        Stage::transformer(
+            RegexExtractTransformer::new("s", "s_word", "([a-z]+)", 1).unwrap(),
+        ),
+        Stage::transformer(HashIndexTransformer::new("s_word", "s_word_idx", 509)),
+    ]);
+    let model = pipeline.fit(&Dataset::from_dataframe(df.clone(), 2)).unwrap();
+
+    let inputs = || vec![SpecInput { name: "s".into(), dtype: DType::Str, width: None }];
+    let outputs = ["s_clean_idx", "s_word_idx"];
+    let (raw, _) = model
+        .to_graph_spec_opt("re", inputs(), &outputs, OptimizeLevel::None)
+        .unwrap();
+    let (opt, _) = model
+        .to_graph_spec_opt("re", inputs(), &outputs, OptimizeLevel::Full)
+        .unwrap();
+    // the regex→hash chains must actually fuse, so the cached replay
+    // path (not just standalone nodes) is what this test pins
+    assert!(
+        opt.ingress.iter().any(|n| n.op == "fused_ingress"),
+        "regex ingress chain did not fuse"
+    );
+
+    let raw_interp = SpecInterpreter::new(raw);
+    let opt_interp = SpecInterpreter::new(opt);
+    // two requests through the same interpreters: the second reuses the
+    // warm regex cache and must not drift
+    for request in [df.clone(), df.slice(1, 3)] {
+        let engine_req = model.transform_df(request.clone()).unwrap();
+        let a = raw_interp.run(&request).unwrap();
+        let b = opt_interp.run(&request).unwrap();
+        for (i, out_name) in outputs.iter().enumerate() {
+            let engine_col = engine_req.column(out_name).unwrap().as_i64().unwrap();
+            assert_eq!(a[i].as_i64().unwrap(), engine_col, "{out_name} raw-vs-engine");
+            assert_eq!(b[i].as_i64().unwrap(), engine_col, "{out_name} optimized-vs-engine");
+        }
+    }
+}
+
+#[test]
 fn optimizer_shrinks_the_ltr_graph() {
     use kamae::optim::OptimizeLevel;
     // LTR carries offline-only features (price_decile, stay_norm,

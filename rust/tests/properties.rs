@@ -318,6 +318,163 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
 }
 
 #[test]
+fn routed_merged_backend_matches_dedicated_variants_bitwise() {
+    // The variant-routing differential: interleaved ltr / ltr_lite
+    // requests through the ROUTED merged backend must be bit-identical
+    // to dedicated single-variant interpreted backends — across
+    // optimize levels (None / Basic / Full merged specs all against the
+    // raw dedicated oracle) and across random request interleavings,
+    // sizes, and variant mixes (including same-variant-only batches).
+    use kamae::optim::OptimizeLevel;
+    use kamae::pipeline::catalog;
+    use kamae::runtime::TensorData;
+    use kamae::serving::{request_pool, Backend, InterpretedBackend, VariantGroup};
+
+    // fit once (outside the property loop — the property randomises the
+    // traffic, not the model)
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let export = |name: &str, outputs: &[&str], level| {
+        model
+            .to_graph_spec_opt(name, catalog::ltr_inputs(), outputs, level)
+            .unwrap()
+            .0
+    };
+    // raw dedicated oracles
+    let full_oracle = kamae::export::SpecInterpreter::new(export(
+        "ltr",
+        &catalog::LTR_OUTPUTS,
+        OptimizeLevel::None,
+    ));
+    let lite_oracle = kamae::export::SpecInterpreter::new(export(
+        "ltr_lite",
+        &catalog::LTR_LITE_OUTPUTS,
+        OptimizeLevel::None,
+    ));
+    // routed merged backends, one per optimize level (variants exported
+    // at the same level, like the artifact flow)
+    let routed: Vec<(OptimizeLevel, InterpretedBackend)> =
+        [OptimizeLevel::None, OptimizeLevel::Basic, OptimizeLevel::Full]
+            .into_iter()
+            .map(|level| {
+                let full = export("ltr", &catalog::LTR_OUTPUTS, level);
+                let lite = export("ltr_lite", &catalog::LTR_LITE_OUTPUTS, level);
+                let merged =
+                    kamae::export::GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite])
+                        .unwrap();
+                let (merged, _) = kamae::optim::optimize(merged, level).unwrap();
+                (level, InterpretedBackend::new(merged))
+            })
+            .collect();
+    let pool = request_pool("ltr", 512).unwrap();
+
+    check_res(
+        "routed merged backend == dedicated variant backends (bitwise)",
+        10,
+        |rng| {
+            // 1..=5 requests of 1..=12 rows each, random variant tags
+            let n = 1 + rng.below(5) as usize;
+            (0..n)
+                .map(|_| {
+                    let rows = 1 + rng.below(12) as usize;
+                    let start = rng.below((pool.num_rows() - rows) as u64) as usize;
+                    let lite = rng.below(2) == 0;
+                    (start, rows, lite)
+                })
+                .collect::<Vec<_>>()
+        },
+        |requests| {
+            // batcher shape: contiguous per-variant groups, arrival
+            // order preserved within each group
+            let mut order: Vec<&(usize, usize, bool)> = Vec::new();
+            for lite in [false, true] {
+                order.extend(requests.iter().filter(|r| r.2 == lite));
+            }
+            let frames: Vec<kamae::dataframe::DataFrame> =
+                order.iter().map(|&&(start, rows, _)| pool.slice(start, rows)).collect();
+            let refs: Vec<&kamae::dataframe::DataFrame> = frames.iter().collect();
+            let merged_df =
+                kamae::dataframe::DataFrame::concat(&refs).map_err(|e| e.to_string())?;
+            let mut groups = Vec::new();
+            let mut row = 0usize;
+            for lite in [false, true] {
+                let len: usize =
+                    requests.iter().filter(|r| r.2 == lite).map(|r| r.1).sum();
+                if len > 0 {
+                    groups.push(VariantGroup {
+                        variant: Some(if lite { "ltr_lite" } else { "ltr" }.to_string()),
+                        rows: row..row + len,
+                    });
+                    row += len;
+                }
+            }
+            for (level, backend) in &routed {
+                let per_group = backend
+                    .process_routed(&merged_df, &groups)
+                    .map_err(|e| format!("{level:?}: {e}"))?;
+                // each group's tensors must equal the dedicated raw
+                // oracle on the group's own rows
+                for (g, got) in groups.iter().zip(per_group.iter()) {
+                    let gdf = merged_df.slice(g.rows.start, g.rows.len());
+                    let want = if g.variant.as_deref() == Some("ltr_lite") {
+                        lite_oracle.run(&gdf).map_err(|e| e.to_string())?
+                    } else {
+                        full_oracle.run(&gdf).map_err(|e| e.to_string())?
+                    };
+                    if got.len() != want.len() {
+                        return Err(format!(
+                            "{level:?}/{:?}: {} tensors vs oracle {}",
+                            g.variant,
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                    for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                        if a.shape != b.shape {
+                            return Err(format!(
+                                "{level:?}/{:?} output {i}: shape {:?} vs {:?}",
+                                g.variant, a.shape, b.shape
+                            ));
+                        }
+                        match (&a.data, &b.data) {
+                            (TensorData::I64(p), TensorData::I64(q)) => {
+                                if p != q {
+                                    return Err(format!(
+                                        "{level:?}/{:?} output {i}: i64 mismatch",
+                                        g.variant
+                                    ));
+                                }
+                            }
+                            (TensorData::F32(p), TensorData::F32(q)) => {
+                                for (j, (u, v)) in p.iter().zip(q.iter()).enumerate() {
+                                    let same = u.to_bits() == v.to_bits()
+                                        || (u.is_nan() && v.is_nan());
+                                    if !same {
+                                        return Err(format!(
+                                            "{level:?}/{:?} output {i}[{j}]: {u:?} vs {v:?}",
+                                            g.variant
+                                        ));
+                                    }
+                                }
+                            }
+                            _ => {
+                                return Err(format!(
+                                    "{level:?}/{:?} output {i}: dtype mismatch",
+                                    g.variant
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn shard_rebalance_preserves_content() {
     check(
         "rebalance/coalesce keep rows and order",

@@ -1,0 +1,192 @@
+//! Golden GraphSpec fixtures — serialization drift is caught by DIFF,
+//! not by construction-in-test.
+//!
+//! `rust/tests/fixtures/` holds committed spec JSON in the exact
+//! canonical form `GraphSpec::save` writes (`Json::to_string_pretty`:
+//! sorted keys, 2-space indent, integral floats as `x.0`):
+//!
+//! * `prelane.json`          — the pre-lane (PR ≤ 2) node shape, no
+//!                             `lanes` key anywhere: the back-compat
+//!                             contract for old artifact specs,
+//! * `lanes.json`            — a multi-output `multi_bucketize` node
+//!                             with bucket + compare lanes and a
+//!                             qualified `id.lane` consumer,
+//! * `merged_variants.json`  — a naive merged two-variant spec (the
+//!                             `GraphSpec::merge_variants` shape before
+//!                             optimization: `::`-prefixed ids, shared
+//!                             raw inputs, duplicate cross-variant
+//!                             subgraphs for `CrossOutputDedup`).
+//!
+//! Each fixture must load, re-serialise to the exact committed bytes,
+//! and keep behaving (interpretation, variant routing, optimization).
+//! If an intentional format change breaks the byte comparison,
+//! regenerate the fixture and review the diff — that diff IS the
+//! serialization change review.
+
+use std::path::PathBuf;
+
+use kamae::dataframe::{Column, DataFrame};
+use kamae::export::{GraphSpec, RouteGroup, SpecInterpreter};
+use kamae::optim::{optimize, OptimizeLevel};
+use kamae::util::json::Json;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(format!("{name}.json"))
+}
+
+fn load_fixture(name: &str) -> (GraphSpec, String) {
+    let path = fixture_path(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()));
+    let spec = GraphSpec::load(&path)
+        .unwrap_or_else(|e| panic!("fixture {} does not load: {e}", path.display()));
+    (spec, text)
+}
+
+/// load → to_json → pretty must reproduce the committed bytes exactly
+/// (modulo a trailing newline, which `GraphSpec::save` never writes).
+fn assert_canonical_roundtrip(name: &str) -> GraphSpec {
+    let (spec, text) = load_fixture(name);
+    let serialized = spec.to_json().to_string_pretty();
+    assert_eq!(
+        serialized,
+        text.trim_end(),
+        "fixture {name}.json is not byte-canonical: the serializer changed \
+         (or the fixture was edited by hand) — regenerate it and review the diff"
+    );
+    // and a full parse → construct → parse cycle is lossless
+    let back = GraphSpec::from_json(&Json::parse(&serialized).unwrap()).unwrap();
+    assert_eq!(back, spec, "fixture {name}.json round-trip lost information");
+    spec
+}
+
+#[test]
+fn prelane_fixture_is_canonical_and_stays_lane_free() {
+    let spec = assert_canonical_roundtrip("prelane");
+    // the pre-lane shape must survive: no lanes key materialises on
+    // re-serialisation (old readers keep loading what we write)
+    assert!(spec.ingress.iter().chain(spec.nodes.iter()).all(|n| n.lanes.is_empty()));
+    let text = spec.to_json().to_string_pretty();
+    assert!(!text.contains("\"lanes\""), "lanes key leaked into pre-lane JSON");
+    // and it still runs
+    let df = DataFrame::new(vec![
+        ("price".into(), Column::from_f64(vec![1.0, 100.0])),
+        ("city".into(), Column::from_str(vec!["NYC", "LON"])),
+    ])
+    .unwrap();
+    let out = SpecInterpreter::new(spec).run(&df).unwrap();
+    assert_eq!(out.len(), 2);
+    // mirror the interpreter's arithmetic exactly: f64 ln_1p, f32 round
+    assert_eq!(out[0].as_f32().unwrap()[0], 1.0f64.ln_1p() as f32);
+}
+
+#[test]
+fn lanes_fixture_is_canonical_and_lane_refs_resolve() {
+    let spec = assert_canonical_roundtrip("lanes");
+    let mlb = &spec.nodes[0];
+    assert_eq!(mlb.lanes.len(), 2);
+    // lane meta resolves through the bare name AND the qualified ref
+    assert!(spec.node_meta("price_bucket").is_some());
+    assert!(spec.node_meta("price__lanes.is_pricey").is_some());
+    // behavior: bucket lane + negated compare lane
+    let df = DataFrame::new(vec![(
+        "price".into(),
+        Column::from_f64(vec![-1.0, 0.5, 2.0]),
+    )])
+    .unwrap();
+    let out = SpecInterpreter::new(spec).run(&df).unwrap();
+    assert_eq!(out[0].as_i64().unwrap(), &[0, 1, 2]);
+    assert_eq!(out[1].as_i64().unwrap(), &[1, 1, 0]); // not(price >= 1.0)
+}
+
+#[test]
+fn merged_variants_fixture_routes_and_dedupes() {
+    let spec = assert_canonical_roundtrip("merged_variants");
+    assert_eq!(spec.variants(), vec!["a", "b"]);
+    assert_eq!(spec.variant_outputs("a"), vec![0, 1]);
+    assert_eq!(spec.variant_outputs("b"), vec![2, 3]);
+
+    let df = DataFrame::new(vec![
+        ("price".into(), Column::from_f64(vec![1.0, 50.0, 150.0, 200.0, 3.0])),
+        ("city".into(), Column::from_str(vec!["NYC", "LON", "PAR", "BER", "RIO"])),
+    ])
+    .unwrap();
+
+    // routed evaluation over a mixed batch equals the full run's slices
+    let interp = SpecInterpreter::new(spec.clone());
+    let full = interp.run(&df).unwrap();
+    let groups = vec![
+        RouteGroup { outputs: spec.variant_outputs("a"), rows: 0..2 },
+        RouteGroup { outputs: spec.variant_outputs("b"), rows: 2..5 },
+    ];
+    let routed = interp.run_routed(&df, &groups).unwrap();
+    for (g, got) in groups.iter().zip(routed.iter()) {
+        for (t, &oi) in got.iter().zip(g.outputs.iter()) {
+            let expect = full[oi]
+                .split_batch(&[g.rows.start, g.rows.len(), df.num_rows() - g.rows.end])
+                .unwrap()
+                .swap_remove(1);
+            assert_eq!(t, &expect, "{} rows {:?}", spec.outputs[oi], g.rows);
+        }
+    }
+
+    // the naive merged shape is exactly what CrossOutputDedup exists
+    // for: optimizing must fire it (b::price_log duplicates
+    // a::price_log) and preserve outputs + values bit-for-bit
+    let (opt, report) = optimize(spec.clone(), OptimizeLevel::Full).unwrap();
+    assert!(
+        report.stats.iter().any(|s| s.pass == "cross-output-dedup" && s.changed),
+        "cross-output-dedup did not fire on the merged fixture\n{report}"
+    );
+    assert_eq!(opt.outputs, spec.outputs);
+    let opt_out = SpecInterpreter::new(opt).run(&df).unwrap();
+    assert_eq!(opt_out, full, "optimizing the merged fixture changed its outputs");
+}
+
+#[test]
+fn fixtures_match_their_generated_counterparts() {
+    // prelane.json must be exactly what the current exporter writes for
+    // the same spec built in code — pinning the WRITER, not just the
+    // reader (a one-sided reader test would let the written format
+    // drift until old readers break)
+    use kamae::dataframe::DType;
+    use kamae::export::{SpecDType, SpecInput, SpecNode};
+
+    let node = |id: &str, op: &str, inputs: &[&str], attrs: &str, dtype: SpecDType| SpecNode {
+        id: id.into(),
+        op: op.into(),
+        inputs: inputs.iter().map(|s| s.to_string()).collect(),
+        attrs: Json::parse(attrs).unwrap(),
+        dtype,
+        width: None,
+        lanes: vec![],
+    };
+    let spec = GraphSpec {
+        name: "prelane".into(),
+        inputs: vec![
+            SpecInput { name: "price".into(), dtype: DType::F64, width: None },
+            SpecInput { name: "city".into(), dtype: DType::Str, width: None },
+        ],
+        ingress: vec![node("city__hash", "hash64", &["city"], "{}", SpecDType::I64)],
+        graph_inputs: vec!["city__hash".into(), "price".into()],
+        nodes: vec![
+            node("price_log", "log1p", &["price"], "{}", SpecDType::F32),
+            node(
+                "city_idx",
+                "hash_bucket",
+                &["city__hash"],
+                r#"{"num_bins": 64}"#,
+                SpecDType::I64,
+            ),
+        ],
+        outputs: vec!["price_log".into(), "city_idx".into()],
+    };
+    let (_, text) = load_fixture("prelane");
+    assert_eq!(
+        spec.to_json().to_string_pretty(),
+        text.trim_end(),
+        "the exporter no longer writes the committed pre-lane shape"
+    );
+}
