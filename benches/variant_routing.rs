@@ -52,7 +52,7 @@ use kamae::engine::Dataset;
 use kamae::export::GraphSpec;
 use kamae::optim::{optimize, variant_costs, OptimizeLevel};
 use kamae::pipeline::catalog;
-use kamae::runtime::{Tensor, TensorData};
+use kamae::runtime::Tensor;
 use kamae::serving::{
     request_pool, Backend, BatchConfig, InterpretedBackend, LatencyRecorder, Server, VariantGroup,
 };
@@ -130,19 +130,12 @@ fn build_batches(pool: &DataFrame, count: usize) -> Vec<MixedBatch> {
     batches
 }
 
-fn assert_bit_identical(a: &Tensor, b: &Tensor, what: &str) {
-    assert_eq!(a.shape, b.shape, "{what}: shape");
-    match (&a.data, &b.data) {
-        (TensorData::I64(x), TensorData::I64(y)) => assert_eq!(x, y, "{what}: i64"),
-        (TensorData::F32(x), TensorData::F32(y)) => {
-            for (i, (p, q)) in x.iter().zip(y.iter()).enumerate() {
-                assert!(
-                    p.to_bits() == q.to_bits() || (p.is_nan() && q.is_nan()),
-                    "{what}[{i}]: {p:?} vs {q:?}"
-                );
-            }
-        }
-        other => panic!("{what}: dtype mismatch {other:?}"),
+/// Bitwise tensor-list equality via the shared oracle
+/// ([`kamae::util::prop::tensors_bit_identical`]), with a context
+/// prefix.
+fn assert_bit_identical_lists(got: &[Tensor], want: &[Tensor], what: &str) {
+    if let Err(e) = kamae::util::prop::tensors_bit_identical(got, want) {
+        panic!("{what}: {e}");
     }
 }
 
@@ -192,14 +185,8 @@ fn main() {
         let routed = routed_backend.process_routed(&batch.merged_df, &batch.groups).unwrap();
         let full_out = full_backend.process(&batch.full_df).unwrap();
         let lite_out = lite_backend.process(&batch.lite_df).unwrap();
-        assert_eq!(routed[0].len(), full_out.len());
-        assert_eq!(routed[1].len(), lite_out.len());
-        for (i, (a, b)) in routed[0].iter().zip(full_out.iter()).enumerate() {
-            assert_bit_identical(a, b, &format!("ltr output {i} routed-vs-dedicated"));
-        }
-        for (i, (a, b)) in routed[1].iter().zip(lite_out.iter()).enumerate() {
-            assert_bit_identical(a, b, &format!("ltr_lite output {i} routed-vs-dedicated"));
-        }
+        assert_bit_identical_lists(&routed[0], &full_out, "ltr routed-vs-dedicated");
+        assert_bit_identical_lists(&routed[1], &lite_out, "ltr_lite routed-vs-dedicated");
     }
     println!("differential pin: routed == dedicated backends, bit for bit\n");
 
@@ -255,7 +242,7 @@ fn main() {
     let mut records = Vec::new();
     for (label, route) in [("routed", true), ("merged-all", false)] {
         let backend = Box::new(InterpretedBackend::new(merged.clone()));
-        let server = Server::start(backend, BatchConfig::default());
+        let server = Server::start(backend, BatchConfig::default()).unwrap();
         let recorder = LatencyRecorder::new();
         let mut rng = Rng::new(0xBEEF);
         let t0 = Instant::now();

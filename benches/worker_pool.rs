@@ -1,0 +1,474 @@
+//! Worker-pool serving benchmark — the gate for the multi-worker
+//! batcher: N batcher threads draining one shared queue against ONE
+//! shared merged backend.
+//!
+//! No artifacts needed: the LTR pipeline is fitted in-process, exported
+//! as the full (`ltr`) and lite (`ltr_lite`) variants, merged and
+//! optimized at `OptimizeLevel::Full` exactly like
+//! `benches/variant_routing.rs`, then driven with CLOSED-loop mixed
+//! routed traffic (M producer threads, bounded in-flight window — the
+//! saturating load where pool parallelism must show) three ways:
+//!
+//! * **pool-1**  — the worker pool at `workers = 1`: the refactored
+//!   queue (`Mutex` + `Condvar`, multi-consumer) with a single drainer;
+//! * **pool-4**  — the same pool at `workers = 4`: concurrent batches
+//!   against the one shared backend;
+//! * **legacy**  — the PR 4 architecture reconstructed in-bench: one
+//!   dedicated thread owning the backend behind a single-consumer
+//!   `mpsc` channel. This is the pre-pool baseline the 1-worker pool
+//!   must not regress against.
+//!
+//! Before any timing, the **differential pin** runs: concurrent
+//! mixed-variant requests through the 4-worker pool must come back
+//! bit-identical to dedicated single-variant backends — the PR 4
+//! routing property re-asserted under real thread interleavings.
+//!
+//! Every run appends machine-readable records to
+//! `BENCH_worker_pool.json` (pool reports carry `workers` +
+//! `worker_utilization`).
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + request count
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero unless 4-worker routed
+//!                                 throughput strictly beats 1-worker,
+//!                                 and 1-worker holds >= 90% of the
+//!                                 legacy single-thread baseline
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use kamae::dataframe::DataFrame;
+use kamae::engine::Dataset;
+use kamae::export::GraphSpec;
+use kamae::optim::{optimize, OptimizeLevel};
+use kamae::pipeline::catalog;
+use kamae::runtime::Tensor;
+use kamae::serving::{
+    request_pool, Backend, BatchConfig, InterpretedBackend, LatencyRecorder, Server, VariantGroup,
+};
+use kamae::util::bench::{append_run, Table};
+use kamae::util::json::Json;
+use kamae::util::prop::tensors_bit_identical;
+use kamae::util::rng::Rng;
+
+const ROWS_PER_REQUEST: usize = 8;
+const PRODUCERS: usize = 4;
+/// Per-producer in-flight window: deep enough to keep every worker fed
+/// (PRODUCERS * WINDOW >> workers * requests-per-batch), bounded so the
+/// queue cannot grow without limit.
+const WINDOW: usize = 16;
+const POOL_WORKERS: usize = 4;
+
+type RespRx = mpsc::Receiver<kamae::error::Result<Vec<Tensor>>>;
+
+/// Fit LTR once and export the specs: merged (served) + dedicated
+/// oracles for the differential pin.
+fn build_specs(fit_rows: usize) -> (GraphSpec, GraphSpec, GraphSpec) {
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
+        rows: fit_rows,
+        ..Default::default()
+    });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let (full, _) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::Full)
+        .unwrap();
+    let (lite, _) = model
+        .to_graph_spec_opt(
+            "ltr_lite",
+            catalog::ltr_inputs(),
+            &catalog::LTR_LITE_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    let merged = GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged, _) = optimize(merged, OptimizeLevel::Full).unwrap();
+    (full, lite, merged)
+}
+
+/// Pre-built request streams: one per producer thread, round-robin
+/// variant tags, identical across every mode (request construction is
+/// not what this bench measures).
+fn build_requests(
+    pool: &DataFrame,
+    producers: usize,
+    per_producer: usize,
+) -> Vec<Vec<(DataFrame, &'static str)>> {
+    let mut rng = Rng::new(0xD00D);
+    (0..producers)
+        .map(|_| {
+            (0..per_producer)
+                .map(|i| {
+                    let start =
+                        rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+                    let variant = if i % 2 == 0 { "ltr" } else { "ltr_lite" };
+                    (pool.slice(start, ROWS_PER_REQUEST), variant)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Closed-loop driver: each producer thread runs its own submit closure
+/// (one per producer from `make_submit`) over its request stream with a
+/// bounded in-flight window. Returns the wall time to complete EVERY
+/// request; latencies land in `recorder`.
+fn drive_closed_loop<F, S>(
+    make_submit: F,
+    streams: &[Vec<(DataFrame, &'static str)>],
+    recorder: &LatencyRecorder,
+) -> Duration
+where
+    F: Fn() -> S,
+    S: FnMut(DataFrame, &'static str) -> RespRx + Send,
+{
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for stream in streams {
+            let mut submit = make_submit();
+            scope.spawn(move || {
+                let mut pending: VecDeque<(Instant, &'static str, RespRx)> = VecDeque::new();
+                for (df, variant) in stream {
+                    let sent = Instant::now();
+                    let rx = submit(df.clone(), *variant);
+                    pending.push_back((sent, *variant, rx));
+                    while pending.len() >= WINDOW {
+                        let (sent, variant, rx) = pending.pop_front().unwrap();
+                        rx.recv().unwrap().unwrap();
+                        recorder.record_variant(variant, sent.elapsed());
+                    }
+                }
+                for (sent, variant, rx) in pending {
+                    rx.recv().unwrap().unwrap();
+                    recorder.record_variant(variant, sent.elapsed());
+                }
+            });
+        }
+    });
+    t0.elapsed()
+}
+
+// ---------------------------------------------------------------------------
+// legacy baseline: the PR 4 single-thread mpsc batcher, reconstructed
+
+struct LegacyJob {
+    df: DataFrame,
+    variant: String,
+    resp: mpsc::Sender<kamae::error::Result<Vec<Tensor>>>,
+}
+
+/// One dedicated thread owning the backend behind a single-consumer
+/// channel — the exact pre-pool `Server` shape (drain greedily, wait
+/// `max_wait` for stragglers, one routed backend call per batch).
+/// `busy_ns` accumulates backend-execution time like the old
+/// `batch_loop` did, so the baseline's cost proxy is real, not zero.
+fn legacy_loop(
+    backend: Box<dyn Backend>,
+    rx: mpsc::Receiver<LegacyJob>,
+    config: BatchConfig,
+    busy_ns: std::sync::Arc<std::sync::atomic::AtomicU64>,
+) {
+    loop {
+        let first = match rx.recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let mut rows = first.df.num_rows();
+        let mut jobs = vec![first];
+        while rows < config.max_batch_rows {
+            match rx.try_recv() {
+                Ok(job) => {
+                    rows += job.df.num_rows();
+                    jobs.push(job);
+                }
+                Err(_) => break,
+            }
+        }
+        let deadline = Instant::now() + config.max_wait;
+        while rows < config.max_batch_rows {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => {
+                    rows += job.df.num_rows();
+                    jobs.push(job);
+                }
+                Err(_) => break,
+            }
+        }
+        // contiguous per-variant groups, arrival order within each
+        let mut group_members: Vec<(String, Vec<usize>)> = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            match group_members.iter_mut().find(|(v, _)| *v == job.variant) {
+                Some((_, m)) => m.push(i),
+                None => group_members.push((job.variant.clone(), vec![i])),
+            }
+        }
+        let order: Vec<usize> =
+            group_members.iter().flat_map(|(_, m)| m.iter().copied()).collect();
+        let frames: Vec<&DataFrame> = order.iter().map(|&i| &jobs[i].df).collect();
+        let merged =
+            if frames.len() == 1 { frames[0].clone() } else { DataFrame::concat(&frames).unwrap() };
+        let mut groups = Vec::with_capacity(group_members.len());
+        let mut start = 0usize;
+        for (variant, members) in &group_members {
+            let len: usize = members.iter().map(|&i| jobs[i].df.num_rows()).sum();
+            groups.push(VariantGroup {
+                variant: Some(variant.clone()),
+                rows: start..start + len,
+            });
+            start += len;
+        }
+        let t0 = Instant::now();
+        let result = backend.process_routed(&merged, &groups);
+        busy_ns.fetch_add(
+            t0.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        match result {
+            Ok(per_group) => {
+                for ((_, members), tensors) in group_members.iter().zip(per_group) {
+                    if members.len() == 1 {
+                        let _ = jobs[members[0]].resp.send(Ok(tensors));
+                        continue;
+                    }
+                    let sizes: Vec<usize> =
+                        members.iter().map(|&i| jobs[i].df.num_rows()).collect();
+                    let mut split: Vec<Vec<Tensor>> =
+                        members.iter().map(|_| Vec::new()).collect();
+                    for out in &tensors {
+                        for (slot, part) in
+                            split.iter_mut().zip(out.split_batch(&sizes).unwrap())
+                        {
+                            slot.push(part);
+                        }
+                    }
+                    for (&i, tensors) in members.iter().zip(split) {
+                        let _ = jobs[i].resp.send(Ok(tensors));
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for job in jobs {
+                    let _ = job
+                        .resp
+                        .send(Err(kamae::error::KamaeError::Serving(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let (fit_rows, per_producer) = if quick { (2_000, 500) } else { (20_000, 2_500) };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows, {per_producer} requests/producer)\n");
+    }
+    let total_requests = PRODUCERS * per_producer;
+
+    let (full, lite, merged) = build_specs(fit_rows);
+    println!(
+        "merged ltr+ltr_lite: {} ingress + {} graph nodes, {} outputs",
+        merged.ingress.len(),
+        merged.nodes.len(),
+        merged.outputs.len()
+    );
+    let pool_df = request_pool("ltr", 4096).unwrap();
+    let streams = build_requests(&pool_df, PRODUCERS, per_producer);
+
+    // ---- differential pin: pooled concurrent routed serving must be
+    // bit-identical to dedicated single-variant backends, BEFORE any
+    // throughput comparison ------------------------------------------------
+    {
+        let full_backend = InterpretedBackend::new(full.clone());
+        let lite_backend = InterpretedBackend::new(lite.clone());
+        let server = Server::start(
+            Box::new(InterpretedBackend::new(merged.clone())),
+            BatchConfig { workers: POOL_WORKERS, ..BatchConfig::default() },
+        )
+        .unwrap();
+        std::thread::scope(|scope| {
+            for stream in streams.iter() {
+                let server = &server;
+                let full_backend = &full_backend;
+                let lite_backend = &lite_backend;
+                scope.spawn(move || {
+                    // a slice of each stream is plenty: the pin is about
+                    // interleaving, the property tests cover breadth
+                    for (df, variant) in stream.iter().take(48) {
+                        let got =
+                            server.submit_variant(df.clone(), variant).recv().unwrap().unwrap();
+                        let want = if *variant == "ltr" {
+                            full_backend.process(df).unwrap()
+                        } else {
+                            lite_backend.process(df).unwrap()
+                        };
+                        if let Err(e) = tensors_bit_identical(&got, &want) {
+                            panic!("{variant} pooled-vs-dedicated: {e}");
+                        }
+                    }
+                });
+            }
+        });
+        server.shutdown();
+        println!("differential pin: 4-worker pooled routed == dedicated backends, bit for bit\n");
+    }
+
+    // ---- closed-loop throughput: legacy vs pool-1 vs pool-N ---------------
+    let mut records = Vec::new();
+    let mut rps = std::collections::BTreeMap::new();
+    let mut utilizations = String::new();
+
+    // legacy single-thread mpsc batcher (PR 4 architecture)
+    {
+        let backend: Box<dyn Backend> = Box::new(InterpretedBackend::new(merged.clone()));
+        let (tx, rx) = mpsc::channel::<LegacyJob>();
+        let config = BatchConfig::default();
+        let busy_ns = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let worker = {
+            let busy_ns = std::sync::Arc::clone(&busy_ns);
+            std::thread::spawn(move || legacy_loop(backend, rx, config, busy_ns))
+        };
+        let recorder = LatencyRecorder::new();
+        let wall = drive_closed_loop(
+            || {
+                let tx = tx.clone();
+                move |df: DataFrame, variant: &'static str| {
+                    let (rtx, rrx) = mpsc::channel();
+                    tx.send(LegacyJob { df, variant: variant.to_string(), resp: rtx })
+                        .unwrap();
+                    rrx
+                }
+            },
+            &streams,
+            &recorder,
+        );
+        drop(tx); // close the channel so the worker exits
+        worker.join().unwrap();
+        let busy = Duration::from_nanos(busy_ns.load(std::sync::atomic::Ordering::Relaxed));
+        let report = recorder.report("ltr+ltr_lite/legacy", total_requests, wall, busy);
+        println!("{report}\n");
+        rps.insert("legacy", report.throughput_rps);
+        records.push(report.to_json());
+    }
+
+    // worker pool at 1 and POOL_WORKERS
+    for workers in [1usize, POOL_WORKERS] {
+        let server = Server::start(
+            Box::new(InterpretedBackend::new(merged.clone())),
+            BatchConfig { workers, ..BatchConfig::default() },
+        )
+        .unwrap();
+        let recorder = LatencyRecorder::new();
+        let sref = &server;
+        let wall = drive_closed_loop(
+            move || move |df: DataFrame, variant: &'static str| sref.submit_variant(df, variant),
+            &streams,
+            &recorder,
+        );
+        let worker_busy = server.worker_busy_times();
+        let (batches, requests) = server.counts();
+        server.shutdown();
+        assert_eq!(requests as usize, total_requests, "pool-{workers} lost requests");
+        let report = recorder.report_pool(
+            &format!("ltr+ltr_lite/pool{workers}"),
+            total_requests,
+            wall,
+            &worker_busy,
+        );
+        println!("{report}");
+        println!(
+            "batches {batches}  requests {requests}  ({:.1} req/batch)\n",
+            requests as f64 / batches.max(1) as f64
+        );
+        let key: &'static str = if workers == 1 { "pool1" } else { "poolN" };
+        rps.insert(key, report.throughput_rps);
+        if workers > 1 {
+            utilizations = report
+                .worker_utilization
+                .iter()
+                .map(|u| format!("{:.0}%", 100.0 * u))
+                .collect::<Vec<_>>()
+                .join(" ");
+        }
+        records.push(report.to_json());
+    }
+
+    let (legacy_rps, pool1_rps, pooln_rps) = (rps["legacy"], rps["pool1"], rps["poolN"]);
+    let mut table = Table::new(&["mode", "throughput", "vs pool-1"]);
+    for (label, r) in [
+        ("legacy (PR 4)", legacy_rps),
+        ("pool-1", pool1_rps),
+        ("pool-4", pooln_rps),
+    ] {
+        table.row(&[
+            label.into(),
+            format!("{r:.0} req/s"),
+            format!("{:+.1}%", 100.0 * (r / pool1_rps - 1.0)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npool-4 vs pool-1: {:+.1}%   pool-1 vs legacy: {:+.1}%   pool-4 utilization: {utilizations}\n",
+        100.0 * (pooln_rps / pool1_rps - 1.0),
+        100.0 * (pool1_rps / legacy_rps - 1.0)
+    );
+
+    // ---- trajectory + gate ------------------------------------------------
+    let mut rec = Json::object();
+    rec.set("spec", "ltr+ltr_lite");
+    rec.set("mode", "pool-scaling");
+    rec.set("producers", PRODUCERS);
+    rec.set("window", WINDOW);
+    rec.set("rows_per_request", ROWS_PER_REQUEST);
+    rec.set("pool_workers", POOL_WORKERS);
+    rec.set("legacy_rps", legacy_rps);
+    rec.set("pool1_rps", pool1_rps);
+    rec.set("pooln_rps", pooln_rps);
+    rec.set("scaling_x", if pool1_rps > 0.0 { pooln_rps / pool1_rps } else { 0.0 });
+    records.push(rec);
+    let path = append_run("worker_pool", &[("quick", Json::Bool(quick))], records)
+        .expect("bench trajectory");
+    println!("appended run to {}", path.display());
+
+    let mut gate_failures = Vec::new();
+    if pooln_rps <= pool1_rps {
+        gate_failures.push(format!(
+            "{POOL_WORKERS}-worker routed throughput {pooln_rps:.0} req/s does not strictly \
+             beat 1-worker {pool1_rps:.0} req/s"
+        ));
+    }
+    if pool1_rps < 0.9 * legacy_rps {
+        gate_failures.push(format!(
+            "1-worker pool {pool1_rps:.0} req/s regressed below 90% of the PR 4 \
+             single-thread baseline {legacy_rps:.0} req/s"
+        ));
+    }
+    if gate {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        if !gate_failures.is_empty() {
+            std::process::exit(1);
+        }
+    } else {
+        for f in &gate_failures {
+            eprintln!("warning (ungated): {f}");
+        }
+    }
+}

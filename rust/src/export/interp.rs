@@ -147,6 +147,43 @@ pub struct RouteGroup {
     pub rows: std::ops::Range<usize>,
 }
 
+/// Memoised ancestor cones per requested output subset.
+///
+/// The subsets a server actually routes are known at load time: the
+/// full output set (untargeted requests) and each variant's output list
+/// — so those keys are **pre-warmed** at construction and their cones
+/// fill through a [`OnceLock`](std::sync::OnceLock) on first use.
+/// After that, every hot-path lookup is a lock-free read: N pool
+/// workers routing concurrent batches ([`crate::serving::Server`] with
+/// `BatchConfig::workers > 1`) never serialise on a cache mutex. The
+/// cold half keeps the old mutexed memo for ad-hoc subsets (tests,
+/// tooling) that no server traffic pattern produces.
+struct ConeCache {
+    warm: Vec<(Vec<usize>, std::sync::OnceLock<std::sync::Arc<Cone>>)>,
+    cold: std::sync::Mutex<HashMap<Vec<usize>, std::sync::Arc<Cone>>>,
+}
+
+impl ConeCache {
+    /// Pre-warm the routing subsets of `spec`: all outputs, plus one
+    /// entry per variant of a merged multi-variant spec.
+    fn for_spec(spec: &GraphSpec) -> ConeCache {
+        let mut keys: Vec<Vec<usize>> = vec![(0..spec.outputs.len()).collect()];
+        for v in spec.variants() {
+            let outputs = spec.variant_outputs(v);
+            if !keys.contains(&outputs) {
+                keys.push(outputs);
+            }
+        }
+        ConeCache {
+            warm: keys
+                .into_iter()
+                .map(|k| (k, std::sync::OnceLock::new()))
+                .collect(),
+            cold: std::sync::Mutex::new(HashMap::new()),
+        }
+    }
+}
+
 /// Interpreter over one [`GraphSpec`].
 pub struct SpecInterpreter {
     spec: GraphSpec,
@@ -157,10 +194,9 @@ pub struct SpecInterpreter {
     referenced: std::collections::HashSet<String>,
     /// Precompiled regexes for every pattern in the ingress section.
     regexes: RegexCache,
-    /// Ancestor cones per requested output subset, memoised across
-    /// routed batches (the subsets a server sees are the handful of
-    /// variant output lists, so this stays tiny).
-    cones: std::sync::Mutex<HashMap<Vec<usize>, std::sync::Arc<Cone>>>,
+    /// Ancestor cones per requested output subset — pre-warmed per
+    /// variant, lock-free on the routed serving path.
+    cones: ConeCache,
 }
 
 impl SpecInterpreter {
@@ -173,17 +209,22 @@ impl SpecInterpreter {
             .cloned()
             .collect();
         let regexes = RegexCache::for_spec(&spec);
-        SpecInterpreter {
-            spec,
-            referenced,
-            regexes,
-            cones: std::sync::Mutex::new(HashMap::new()),
-        }
+        let cones = ConeCache::for_spec(&spec);
+        SpecInterpreter { spec, referenced, regexes, cones }
     }
 
-    /// Memoised ancestor cone for one requested output subset.
+    /// Memoised ancestor cone for one requested output subset:
+    /// lock-free for the pre-warmed per-variant subsets a routed server
+    /// requests, mutexed memo only for ad-hoc subsets.
     fn cone_for(&self, outputs: &[usize]) -> std::sync::Arc<Cone> {
-        let mut cache = self.cones.lock().unwrap();
+        for (key, slot) in &self.cones.warm {
+            if key.as_slice() == outputs {
+                return std::sync::Arc::clone(slot.get_or_init(|| {
+                    std::sync::Arc::new(self.spec.ancestor_cone_of(outputs))
+                }));
+            }
+        }
+        let mut cache = self.cones.cold.lock().unwrap();
         if let Some(c) = cache.get(outputs) {
             return std::sync::Arc::clone(c);
         }
@@ -465,6 +506,71 @@ impl SpecInterpreter {
             })
             .collect()
     }
+
+    /// Time every spec node's evaluation over one batch — the
+    /// measurement half of the cost-model calibration harness
+    /// (`kamae optimize --calibrate`, [`crate::optim::calibrate`]).
+    ///
+    /// Each node is evaluated `repeats` times in spec order and its
+    /// mean wall time recorded. Re-evaluation is idempotent: a node
+    /// only ever writes its own output column / env binding, never its
+    /// inputs, so every repeat sees identical operands. The timing
+    /// deliberately includes the per-node bookkeeping (column
+    /// materialisation, env round trip) — that is exactly the overhead
+    /// the registry cost model charges as `NODE_OVERHEAD`, so measured
+    /// and estimated costs describe the same quantity.
+    pub fn profile(&self, df: &DataFrame, repeats: usize) -> Result<Vec<NodeTiming>> {
+        let repeats = repeats.max(1);
+        let rows = df.num_rows();
+        let mut out = Vec::with_capacity(self.spec.ingress.len() + self.spec.nodes.len());
+        let mut df = df.clone();
+        for node in &self.spec.ingress {
+            let t0 = std::time::Instant::now();
+            for _ in 0..repeats {
+                apply_ingress(node, &mut df, &self.regexes)?;
+            }
+            out.push(NodeTiming {
+                id: node.id.clone(),
+                op: node.op.clone(),
+                ingress: true,
+                mean_ns: t0.elapsed().as_nanos() as f64 / repeats as f64,
+                rows,
+            });
+        }
+        let mut env: HashMap<String, GVal> = HashMap::new();
+        for name in &self.spec.graph_inputs {
+            env.insert(name.clone(), column_to_gval(df.column(name)?)?);
+        }
+        for node in &self.spec.nodes {
+            let t0 = std::time::Instant::now();
+            for _ in 0..repeats {
+                self.eval_into(node, &mut env)?;
+            }
+            out.push(NodeTiming {
+                id: node.id.clone(),
+                op: node.op.clone(),
+                ingress: false,
+                mean_ns: t0.elapsed().as_nanos() as f64 / repeats as f64,
+                rows,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// One timed spec node from [`SpecInterpreter::profile`].
+#[derive(Debug, Clone)]
+pub struct NodeTiming {
+    /// Node id (the output column / env binding it produces).
+    pub id: String,
+    /// Op name (the registry key the cost model estimates under).
+    pub op: String,
+    /// True for ingress-section nodes, false for graph-section nodes.
+    pub ingress: bool,
+    /// Mean wall time of ONE evaluation over the profiled batch, ns.
+    pub mean_ns: f64,
+    /// Rows in the profiled batch.
+    pub rows: usize,
 }
 
 fn gv_to_f32_tensor(gv: GVal, batch: usize) -> Tensor {
@@ -1844,5 +1950,81 @@ mod tests {
             tensors[0].as_i64().unwrap()[0],
             crate::ops::hash::fnv1a64("NYC")
         );
+    }
+
+    #[test]
+    fn cone_cache_prewarms_variant_subsets() {
+        // a two-variant spec shape: every output carries a "<variant>::"
+        // prefix, so the cache must pre-warm the full set AND each
+        // variant's subset — repeated lookups return the SAME Arc via
+        // the lock-free warm path, and ad-hoc subsets memoise in the
+        // cold half
+        let node = |id: &str, input: &str| SpecNode {
+            id: id.into(),
+            op: "mul_scalar".into(),
+            inputs: vec![input.into()],
+            attrs: Json::parse(r#"{"c": 2.0}"#).unwrap(),
+            dtype: SpecDType::F32,
+            width: None,
+            lanes: vec![],
+        };
+        let spec = GraphSpec {
+            name: "t".into(),
+            inputs: vec![SpecInput { name: "x".into(), dtype: DType::F64, width: None }],
+            ingress: vec![],
+            graph_inputs: vec!["x".into()],
+            nodes: vec![node("a::o", "x"), node("b::p", "x")],
+            outputs: vec!["a::o".into(), "b::p".into()],
+        };
+        assert_eq!(spec.variants(), vec!["a", "b"]);
+        let interp = SpecInterpreter::new(spec);
+        // warm keys: full set + one per variant
+        assert_eq!(interp.cones.warm.len(), 3);
+        for outputs in [vec![0usize, 1], vec![0], vec![1]] {
+            let first = interp.cone_for(&outputs);
+            let second = interp.cone_for(&outputs);
+            assert!(
+                std::sync::Arc::ptr_eq(&first, &second),
+                "warm subset {outputs:?} was recomputed"
+            );
+        }
+        // nothing above touched the cold memo
+        assert!(interp.cones.cold.lock().unwrap().is_empty());
+        // an ad-hoc subset (reversed order — no warm key matches) lands
+        // in the cold memo and still memoises
+        let adhoc = interp.cone_for(&[1, 0]);
+        assert!(std::sync::Arc::ptr_eq(&adhoc, &interp.cone_for(&[1, 0])));
+        assert_eq!(interp.cones.cold.lock().unwrap().len(), 1);
+        // warm and cold agree on the cone itself
+        assert_eq!(*interp.cone_for(&[0, 1]), interp.spec().ancestor_cone_of(&[0, 1]));
+    }
+
+    #[test]
+    fn profile_times_every_node_and_stays_idempotent() {
+        let df = DataFrame::new(vec![(
+            "city".into(),
+            Column::from_str(vec!["NYC", "LON", "SFO"]),
+        )])
+        .unwrap();
+        let t = HashIndexTransformer::new("city", "idx", 8);
+        let model = crate::pipeline::PipelineModel { stages: vec![Box::new(t)] };
+        let spec = model
+            .to_graph_spec(
+                "t",
+                vec![SpecInput { name: "city".into(), dtype: DType::Str, width: None }],
+                &["idx"],
+            )
+            .unwrap();
+        let interp = SpecInterpreter::new(spec.clone());
+        let timings = interp.profile(&df, 3).unwrap();
+        assert_eq!(timings.len(), spec.ingress.len() + spec.nodes.len());
+        for t in &timings {
+            assert!(t.mean_ns >= 0.0 && t.mean_ns.is_finite(), "{}: {}", t.op, t.mean_ns);
+            assert_eq!(t.rows, 3);
+        }
+        // profiling must not perturb results: a fresh run still matches
+        let a = interp.run(&df).unwrap();
+        let b = SpecInterpreter::new(spec).run(&df).unwrap();
+        assert_eq!(a, b);
     }
 }

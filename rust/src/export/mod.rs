@@ -37,5 +37,5 @@ mod interp;
 mod spec;
 
 pub use builder::SpecBuilder;
-pub use interp::{RouteGroup, SpecInterpreter};
+pub use interp::{NodeTiming, RouteGroup, SpecInterpreter};
 pub use spec::{Cone, GraphSpec, SpecDType, SpecInput, SpecLane, SpecNode};

@@ -109,11 +109,19 @@ fn print_usage() {
          \x20                  or --variants a.json,b.json[,...] --out merged.json — merge\n\
          \x20                  K spec variants into one multi-variant spec (shared-prefix\n\
          \x20                  dedup) before optimizing\n\
+         \x20                  or --calibrate ltr|movielens|quickstart [--fit-rows N]\n\
+         \x20                  [--rows N] [--repeats R] — fit a catalog pipeline, time\n\
+         \x20                  per-op interpreter evaluation on a synthetic batch, print\n\
+         \x20                  measured-vs-registry cost drift and append the trajectory\n\
+         \x20                  to BENCH_op_costs.json\n\
          \x20 serve-bench      --artifacts DIR --spec NAME --rps R --seconds S [--mode compiled|interpreted|mleap]\n\
          \x20 serve            --artifacts DIR --variants a,b[,...] [--rps R] [--seconds S]\n\
-         \x20                  [--level none|basic|full] [--route on|off] — serve K catalog\n\
-         \x20                  variants from ONE merged backend; requests target their\n\
-         \x20                  variant (routed cone evaluation) unless --route off\n"
+         \x20                  [--level none|basic|full] [--route on|off] [--workers N]\n\
+         \x20                  — serve K catalog variants from ONE merged backend; requests\n\
+         \x20                  target their variant (routed cone evaluation) unless\n\
+         \x20                  --route off; --workers N drains the queue with an N-thread\n\
+         \x20                  pool over the shared backend (reports per-worker\n\
+         \x20                  utilization; requires --route on)\n"
     );
 }
 
@@ -235,6 +243,10 @@ fn transform(args: &Args) -> Result<()> {
 /// choice — and any rewritten spec must be re-lowered (`make
 /// artifacts`) before compiled serving.
 fn optimize(args: &Args) -> Result<()> {
+    // --calibrate is a separate mode: no spec rewrite, no --out
+    if let Some(catalog_name) = args.get("calibrate") {
+        return calibrate(catalog_name, args);
+    }
     let out = PathBuf::from(args.get("out").ok_or_else(|| {
         KamaeError::InvalidConfig(
             "--out required (pass the same path as --spec to overwrite in place; \
@@ -285,6 +297,68 @@ fn optimize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `kamae optimize --calibrate <catalog>` — the cost-model calibration
+/// harness (first step of the ROADMAP "fit the work constants from
+/// measured timings" item): fit the named catalog pipeline in-process,
+/// export its optimized spec, time per-op interpreter evaluation over a
+/// synthetic request batch, print the measured-vs-registry drift table,
+/// and append the per-op records to BENCH_op_costs.json so the
+/// constants can be refitted from the accumulated trajectory.
+fn calibrate(catalog_name: &str, args: &Args) -> Result<()> {
+    use kamae::util::json::Json;
+
+    let fit_rows = args.usize_or("fit-rows", 10_000);
+    let rows = args.usize_or("rows", 1024);
+    let repeats = args.usize_or("repeats", 20);
+    let level = kamae::optim::OptimizeLevel::parse(&args.get_or("level", "full"))?;
+    let (pipeline, inputs, outputs, data): (_, _, Vec<&str>, _) = match catalog_name {
+        "movielens" => (
+            catalog::movielens_pipeline(),
+            catalog::movielens_inputs(),
+            catalog::MOVIELENS_OUTPUTS.to_vec(),
+            gen_dataset("movielens", fit_rows)?,
+        ),
+        "ltr" => (
+            catalog::ltr_pipeline(),
+            catalog::ltr_inputs(),
+            catalog::LTR_OUTPUTS.to_vec(),
+            gen_dataset("ltr", fit_rows)?,
+        ),
+        "quickstart" => (
+            catalog::quickstart_pipeline(),
+            catalog::quickstart_inputs(),
+            catalog::QUICKSTART_OUTPUTS.to_vec(),
+            kamae::serving::request_pool("quickstart", fit_rows)?,
+        ),
+        other => {
+            return Err(KamaeError::InvalidConfig(format!(
+                "--calibrate takes a catalog pipeline (ltr|movielens|quickstart), got {other}"
+            )))
+        }
+    };
+    let ds = Dataset::from_dataframe(data, kamae::util::pool::default_threads());
+    let model = pipeline.fit(&ds)?;
+    let (spec, _) = model.to_graph_spec_opt(catalog_name, inputs, &outputs, level)?;
+    let batch = kamae::serving::request_pool(catalog_name, rows)?;
+    let report = kamae::optim::calibrate(&spec, &batch, repeats)?;
+    println!("{report}");
+    let records = report.to_records();
+    let n = records.len();
+    let path = kamae::util::bench::append_run(
+        "op_costs",
+        &[
+            ("spec", Json::from(catalog_name)),
+            ("level", Json::from(level.name())),
+            ("rows", Json::from(report.rows)),
+            ("repeats", Json::from(report.repeats)),
+            ("scale_ns_per_unit", Json::from(report.scale_ns_per_unit)),
+        ],
+        records,
+    )?;
+    println!("\nappended {n} per-op records to {}", path.display());
+    Ok(())
+}
+
 fn serve_bench(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let spec_name = args.get_or("spec", "ltr");
@@ -319,7 +393,9 @@ fn print_variant_costs(spec: &kamae::export::GraphSpec) {
 /// Serve K catalog variants from one merged routed backend: mixed
 /// open-loop traffic, each request targeting its variant round-robin.
 /// `--route off` degrades to all-outputs-per-request on the same
-/// backend (the PR 3 behavior) for comparison.
+/// backend (the PR 3 behavior) for comparison; `--workers N` serves the
+/// queue with an N-thread pool over the one shared backend and reports
+/// per-worker utilization.
 fn serve(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let variants_arg = args.get("variants").ok_or_else(|| {
@@ -338,6 +414,18 @@ fn serve(args: &Args) -> Result<()> {
             )))
         }
     };
+    // workers != 1 (including the nonsense 0) takes the pool path, so
+    // Server::start's BatchConfig validation rejects 0 loudly instead
+    // of a silent single-worker fallback
+    let workers = args.usize_or("workers", 1);
+    if workers != 1 && !route {
+        // the pool driver is routed-only: the route-off baseline exists
+        // to isolate routing's win, mixing it with pooling would
+        // measure neither cleanly
+        return Err(KamaeError::InvalidConfig(
+            "--workers N > 1 requires --route on (the pool serves routed traffic)".into(),
+        ));
+    }
     // show what the merged backend looks like before driving traffic
     let spec = kamae::serving::load_variant_spec(&artifacts, &names, level)?;
     println!(
@@ -348,8 +436,11 @@ fn serve(args: &Args) -> Result<()> {
         spec.outputs.len()
     );
     print_variant_costs(&spec);
-    let report =
-        kamae::serving::bench_serve_variants(&artifacts, &names, rps, seconds, level, route)?;
+    let report = if workers != 1 {
+        kamae::serving::bench_serve_pool(&artifacts, &names, rps, seconds, level, workers)?
+    } else {
+        kamae::serving::bench_serve_variants(&artifacts, &names, rps, seconds, level, route)?
+    };
     println!("{report}");
     Ok(())
 }

@@ -1,0 +1,270 @@
+//! Cost-model calibration: measured per-op interpreter timings vs the
+//! registry's hand-set work constants.
+//!
+//! The optimizer's cost model ([`super::registry::node_cost`]) drives
+//! real decisions — pass ordering, the fixpoint driver's stop
+//! condition, per-variant attribution — yet its per-op `work` units
+//! were set by hand. This harness is the first step of the ROADMAP's
+//! "fit the constants from measured timings" item: it times every node
+//! of a spec with [`SpecInterpreter::profile`] on a synthetic batch,
+//! aggregates the timings per op, fits the single global scale
+//! (ns per cost unit) that best explains the total, and reports each
+//! op's **drift** — how far its measured cost sits from what the
+//! registry predicts under that scale. Persistent positive drift means
+//! the op's `work` constant is too low (the optimizer under-weights
+//! it); negative means too high. The numbers append to
+//! `BENCH_op_costs.json` (`kamae optimize --calibrate`), building the
+//! trajectory a follow-up will refit the constants from.
+
+use std::collections::BTreeMap;
+
+use crate::dataframe::DataFrame;
+use crate::error::Result;
+use crate::export::{GraphSpec, SpecInterpreter};
+use crate::util::json::Json;
+
+use super::registry::node_cost;
+
+/// One op's measured-vs-estimated calibration row.
+#[derive(Debug, Clone)]
+pub struct OpCalibration {
+    pub op: String,
+    /// True for ingress-section ops (string kernels), false for graph
+    /// ops (flat-buffer numeric). `element_at`/`slice_list` exist in
+    /// both sections with different kernels, so the split is part of
+    /// the key.
+    pub ingress: bool,
+    /// Node instances of this op in the profiled spec.
+    pub nodes: usize,
+    /// Summed measured time of one evaluation of every instance,
+    /// per batch row, ns.
+    pub measured_ns_per_row: f64,
+    /// Summed registry estimate ([`node_cost`], overhead included) of
+    /// the same instances, cost units per row.
+    pub estimated_units: u64,
+    /// Relative drift of measured vs `scale * estimated`: positive
+    /// means the registry under-estimates this op, negative
+    /// over-estimates. Percent.
+    pub drift_pct: f64,
+}
+
+impl OpCalibration {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("op", self.op.clone());
+        j.set("section", if self.ingress { "ingress" } else { "graph" });
+        j.set("nodes", self.nodes);
+        j.set("measured_ns_per_row", self.measured_ns_per_row);
+        j.set("estimated_units", self.estimated_units as i64);
+        j.set("drift_pct", self.drift_pct);
+        j
+    }
+}
+
+/// Whole-spec calibration result.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub spec: String,
+    /// Rows in the profiled synthetic batch.
+    pub rows: usize,
+    /// Evaluations averaged per node.
+    pub repeats: usize,
+    /// Fitted global scale: nanoseconds per registry cost unit (total
+    /// measured / total estimated). One scale for the whole spec — the
+    /// registry's *relative* magnitudes are what calibration tests.
+    pub scale_ns_per_unit: f64,
+    /// Per-op rows, worst |drift| first.
+    pub ops: Vec<OpCalibration>,
+}
+
+impl CalibrationReport {
+    /// Machine-readable records for `BENCH_op_costs.json` (one per op,
+    /// the shape `util::bench::append_run` nests under `records`).
+    pub fn to_records(&self) -> Vec<Json> {
+        self.ops.iter().map(OpCalibration::to_json).collect()
+    }
+}
+
+impl std::fmt::Display for CalibrationReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "=== cost-model calibration: {} ({} rows x {} repeats) ===",
+            self.spec, self.rows, self.repeats
+        )?;
+        writeln!(f, "fitted scale: {:.2} ns/unit", self.scale_ns_per_unit)?;
+        writeln!(
+            f,
+            "{:<22} {:>7} {:>6} {:>14} {:>10} {:>9}",
+            "op", "section", "nodes", "measured ns/row", "est units", "drift"
+        )?;
+        for op in &self.ops {
+            writeln!(
+                f,
+                "{:<22} {:>7} {:>6} {:>14.1} {:>10} {:>8.0}%",
+                op.op,
+                if op.ingress { "ingress" } else { "graph" },
+                op.nodes,
+                op.measured_ns_per_row,
+                op.estimated_units,
+                op.drift_pct
+            )?;
+        }
+        write!(
+            f,
+            "(positive drift: registry under-estimates the op; refit the \
+             OpInfo::work constants from the BENCH_op_costs.json trajectory)"
+        )
+    }
+}
+
+/// Profile `spec` over one synthetic batch and aggregate per-op
+/// measured-vs-registry cost drift. `df` must satisfy the spec's input
+/// schema (the caller draws it from the matching request pool /
+/// synthetic generator).
+pub fn calibrate(spec: &GraphSpec, df: &DataFrame, repeats: usize) -> Result<CalibrationReport> {
+    let rows = df.num_rows().max(1);
+    let interp = SpecInterpreter::new(spec.clone());
+    let timings = interp.profile(df, repeats)?;
+
+    // profile() emits ingress nodes then graph nodes, each in spec
+    // order — zip the estimates in the same order
+    let estimates = spec.ingress.iter().chain(spec.nodes.iter()).map(node_cost);
+
+    // aggregate per (section, op)
+    let mut agg: BTreeMap<(bool, String), (usize, f64, u64)> = BTreeMap::new();
+    let (mut total_ns, mut total_units) = (0.0f64, 0u64);
+    for (t, est) in timings.iter().zip(estimates) {
+        let e = agg.entry((t.ingress, t.op.clone())).or_insert((0, 0.0, 0));
+        e.0 += 1;
+        e.1 += t.mean_ns / rows as f64;
+        e.2 += est;
+        total_ns += t.mean_ns / rows as f64;
+        total_units += est;
+    }
+
+    let scale = if total_units == 0 { 0.0 } else { total_ns / total_units as f64 };
+    let mut ops: Vec<OpCalibration> = agg
+        .into_iter()
+        .map(|((ingress, op), (nodes, measured, units))| {
+            let expected = scale * units as f64;
+            // a zero expectation (empty spec / zero-resolution clock)
+            // reports zero drift rather than dividing into inf — the
+            // trajectory writer rejects non-finite records
+            let drift_pct =
+                if expected == 0.0 { 0.0 } else { 100.0 * (measured / expected - 1.0) };
+            OpCalibration {
+                op,
+                ingress,
+                nodes,
+                measured_ns_per_row: measured,
+                estimated_units: units,
+                drift_pct,
+            }
+        })
+        .collect();
+    ops.sort_by(|a, b| {
+        b.drift_pct
+            .abs()
+            .partial_cmp(&a.drift_pct.abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    Ok(CalibrationReport {
+        spec: spec.name.clone(),
+        rows,
+        repeats,
+        scale_ns_per_unit: scale,
+        ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::{Column, DType};
+    use crate::export::{SpecDType, SpecInput, SpecNode};
+
+    fn node(id: &str, op: &str, inputs: &[&str], attrs: &str, dtype: SpecDType) -> SpecNode {
+        SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype,
+            width: None,
+            lanes: vec![],
+        }
+    }
+
+    #[test]
+    fn calibration_report_is_finite_and_covers_every_op() {
+        let rows = 256usize;
+        let df = DataFrame::new(vec![
+            (
+                "x".into(),
+                Column::from_f64((0..rows).map(|i| i as f64 * 0.5).collect()),
+            ),
+            (
+                "s".into(),
+                Column::from_str(
+                    (0..rows).map(|i| format!("  city_{i} ")).collect::<Vec<String>>(),
+                ),
+            ),
+        ])
+        .unwrap();
+        let spec = GraphSpec {
+            name: "cal-test".into(),
+            inputs: vec![
+                SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+                SpecInput { name: "s".into(), dtype: DType::Str, width: None },
+            ],
+            ingress: vec![
+                node("t", "trim", &["s"], "{}", SpecDType::I64),
+                node("h", "hash64", &["t"], "{}", SpecDType::I64),
+            ],
+            graph_inputs: vec!["x".into(), "h".into()],
+            nodes: vec![
+                node("lx", "log1p", &["x"], "{}", SpecDType::F32),
+                node(
+                    "bx",
+                    "bucketize",
+                    &["lx"],
+                    r#"{"splits": [0.5, 1.5, 2.5, 3.5]}"#,
+                    SpecDType::I64,
+                ),
+                node("hb", "hash_bucket", &["h"], r#"{"num_bins": 64}"#, SpecDType::I64),
+            ],
+            outputs: vec!["bx".into(), "hb".into()],
+        };
+        let report = calibrate(&spec, &df, 5).unwrap();
+        assert_eq!(report.rows, rows);
+        // every distinct op shows up exactly once
+        let mut ops: Vec<&str> = report.ops.iter().map(|o| o.op.as_str()).collect();
+        ops.sort_unstable();
+        assert_eq!(ops, vec!["bucketize", "hash64", "hash_bucket", "log1p", "trim"]);
+        assert!(report.scale_ns_per_unit.is_finite());
+        for op in &report.ops {
+            assert!(op.measured_ns_per_row.is_finite(), "{}", op.op);
+            assert!(op.drift_pct.is_finite(), "{}", op.op);
+            assert!(op.estimated_units > 0, "{}", op.op);
+            assert_eq!(op.nodes, 1, "{}", op.op);
+        }
+        // drifts are measured against ONE fitted scale, so they cannot
+        // all sit on the same side of zero (the fit balances them) —
+        // unless the clock resolved nothing at all
+        if report.scale_ns_per_unit > 0.0 {
+            let max = report.ops.iter().map(|o| o.drift_pct).fold(f64::MIN, f64::max);
+            let min = report.ops.iter().map(|o| o.drift_pct).fold(f64::MAX, f64::min);
+            assert!(max >= 0.0 && min <= 0.0, "drift range [{min}, {max}]");
+        }
+        // records survive the trajectory writer's JSON round trip
+        for rec in report.to_records() {
+            assert_eq!(Json::parse(&rec.to_string()).unwrap(), rec);
+        }
+        // the table renders
+        let text = report.to_string();
+        assert!(text.contains("cost-model calibration"));
+        assert!(text.contains("bucketize"));
+    }
+}

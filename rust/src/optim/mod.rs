@@ -61,14 +61,23 @@
 //! Passes never rename entries of `spec.outputs`: output names are an
 //! external contract (serving backends map them to engine columns).
 //!
+//! The `work` constants are hand-set estimates; the
+//! [`calibrate`](calibrate::calibrate) harness (`kamae optimize
+//! --calibrate`) measures per-op interpreter
+//! timings against them and appends the drift trajectory to
+//! `BENCH_op_costs.json`, so a follow-up can refit the constants from
+//! data instead of judgement.
+//!
 //! Entry points: [`optimize`] /
 //! [`crate::pipeline::PipelineModel::to_graph_spec_opt`] at export time,
 //! [`crate::serving::load_backend`] at load time (interpreted/mleap
 //! modes), and the `kamae optimize` CLI subcommand.
 
+pub mod calibrate;
 pub mod passes;
 pub mod registry;
 
+pub use calibrate::{calibrate, CalibrationReport, OpCalibration};
 pub use registry::{
     cone_cost, lint_spec, lookup, names, node_cost, spec_cost, variant_costs, Arity, OpInfo,
     Section, VariantCost,

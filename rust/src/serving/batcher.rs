@@ -1,29 +1,47 @@
-//! Dynamic batcher + server loop.
+//! Dynamic batcher + worker-pool server loop.
 //!
-//! Requests (small DataFrames) queue onto a channel; the worker thread
-//! drains up to `max_batch_rows` or until `max_wait` elapses from the
-//! first queued request, concatenates them into one batch, runs the
-//! backend once, then splits the output tensors back per request —
+//! Requests (small DataFrames) queue onto one shared [`JobQueue`]; N
+//! worker threads ([`BatchConfig::workers`]) each drain up to
+//! `max_batch_rows` or until `max_wait` elapses from the first queued
+//! request, concatenate their drained jobs into one batch, run the ONE
+//! shared backend once, then split the output tensors back per request —
 //! amortising graph-execution overhead exactly the way TF-Serving's
-//! dynamic batching does for the paper's production service.
+//! dynamic batching does for the paper's production service, but across
+//! every core instead of one.
+//!
+//! ## Worker pool
+//!
+//! The backend is shared (`Arc<dyn Backend>`, immutable after load), so
+//! workers call it concurrently with no synchronisation of their own:
+//! batch formation is serialised by the queue mutex (held only while
+//! *draining*, never while *processing*), and everything after the drain
+//! — concat, backend call, response split — runs outside any lock. Each
+//! worker owns its [`WorkerMetrics`]; the hot path touches no shared
+//! mutex, and [`Server::busy_time`] / [`Server::counts`] /
+//! [`Server::variant_counts`] merge the per-worker counters at read
+//! time.
+//!
+//! Per-request response order is unaffected by pooling: every job
+//! carries its own response channel, and a batch's responses are sent in
+//! the batch's original job order, whichever worker served it.
 //!
 //! ## Variant routing
 //!
 //! A request may target one **variant** of a merged multi-variant
-//! backend ([`Server::submit_variant`]). The batcher still coalesces
-//! mixed-variant submissions into ONE batch: jobs are sorted into
-//! contiguous per-variant groups (arrival order preserved within each
-//! group), the frames are concatenated in group order, and the backend
-//! runs once via [`Backend::process_routed`] — the shared preprocessing
-//! prefix executes a single time over the whole mixed batch while each
-//! variant's exclusive work runs only on its own rows. A targeted
-//! request's response carries exactly its variant's output tensors, in
-//! that variant's output order.
+//! backend ([`Server::submit_variant`]). Each worker still coalesces the
+//! mixed-variant submissions it drained into ONE batch: jobs are sorted
+//! into contiguous per-variant groups (arrival order preserved within
+//! each group), the frames are concatenated in group order, and the
+//! backend runs once via [`Backend::process_routed`] — the shared
+//! preprocessing prefix executes a single time over the whole mixed
+//! batch while each variant's exclusive work runs only on its own rows.
+//! A targeted request's response carries exactly its variant's output
+//! tensors, in that variant's output order.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::dataframe::DataFrame;
@@ -46,19 +64,50 @@ pub struct BatchConfig {
     /// all-outputs-per-request baseline the routing benchmark gates
     /// against.
     pub route_variants: bool,
+    /// Batcher threads draining the shared queue against the ONE shared
+    /// backend. `1` reproduces the single-threaded server exactly;
+    /// higher values let concurrent batches execute on idle cores
+    /// (`benches/worker_pool.rs` gates the scaling win).
+    pub workers: usize,
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
         // max_wait 300µs: at production-like rates (~200 rps) requests
         // rarely overlap, so long waits only pad p50; under bursts the
-        // queue drains in whole batches anyway because the worker picks
+        // queue drains in whole batches anyway because a worker picks
         // up everything already queued before waiting (§Perf L3 log).
         BatchConfig {
             max_batch_rows: 128,
             max_wait: Duration::from_micros(300),
             route_variants: true,
+            workers: 1,
         }
+    }
+}
+
+impl BatchConfig {
+    /// Reject configurations the drain loop cannot serve: zero workers
+    /// would strand every queued request (nothing ever drains), and a
+    /// zero row budget used to make the greedy top-up loop a no-op that
+    /// still flushed — but only after burning a full `max_wait` per
+    /// request, and only by accident of loop ordering. Both are
+    /// deployment mistakes that must fail at [`Server::start`], not
+    /// hang (or spin) at the first request.
+    fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(KamaeError::Serving(
+                "BatchConfig::workers must be >= 1 (0 workers would never drain the queue)"
+                    .into(),
+            ));
+        }
+        if self.max_batch_rows == 0 {
+            return Err(KamaeError::Serving(
+                "BatchConfig::max_batch_rows must be >= 1 (a zero row budget cannot batch)"
+                    .into(),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -70,19 +119,140 @@ struct Job {
     resp: mpsc::Sender<Result<Vec<Tensor>>>,
 }
 
-/// A running server: one batcher thread owning the backend.
-pub struct Server {
-    tx: Option<mpsc::Sender<Job>>,
-    worker: Option<std::thread::JoinHandle<()>>,
-    busy_ns: Arc<AtomicU64>,
-    batches: Arc<AtomicU64>,
-    requests: Arc<AtomicU64>,
+/// The shared request queue: a deque + condvar that N workers drain in
+/// batches. Replaces the PR 4 `mpsc` channel, whose receiver is
+/// single-consumer by construction.
+struct JobQueue {
+    state: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// Set at shutdown: producers are rejected, workers drain whatever
+    /// is still queued and then exit.
+    closed: bool,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job, handing it back if the queue is already closed
+    /// (the caller errors that request's own response channel).
+    fn push(&self, job: Job) -> std::result::Result<(), Job> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(job);
+        }
+        s.jobs.push_back(job);
+        drop(s);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: producers start bouncing, every worker wakes to
+    /// drain the remainder and exit.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+
+    /// Drain the next batch for one worker: block for the first job,
+    /// greedily take everything already queued up to `max_rows`, then
+    /// wait at most `max_wait` (from the first job) for stragglers.
+    /// Returns `None` once the queue is closed AND empty — the worker's
+    /// exit signal. The lock is held only while moving jobs out of the
+    /// deque; it is released during the straggler wait (other workers
+    /// keep draining concurrently) and for the entire backend call.
+    fn pop_batch(&self, max_rows: usize, max_wait: Duration) -> Option<Vec<Job>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(first) = s.jobs.pop_front() {
+                let mut rows = first.df.num_rows();
+                let mut jobs = vec![first];
+                // greedily take everything already queued (free batching)
+                while rows < max_rows {
+                    match s.jobs.pop_front() {
+                        Some(job) => {
+                            rows += job.df.num_rows();
+                            jobs.push(job);
+                        }
+                        None => break,
+                    }
+                }
+                // then wait at most max_wait for stragglers — but only
+                // if the batch still has headroom and nobody is
+                // shutting down (a closing queue flushes immediately)
+                let deadline = Instant::now() + max_wait;
+                while rows < max_rows && !s.closed {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, timeout) =
+                        self.cond.wait_timeout(s, deadline - now).unwrap();
+                    s = guard;
+                    while rows < max_rows {
+                        match s.jobs.pop_front() {
+                            Some(job) => {
+                                rows += job.df.num_rows();
+                                jobs.push(job);
+                            }
+                            None => break,
+                        }
+                    }
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+                return Some(jobs);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cond.wait(s).unwrap();
+        }
+    }
+}
+
+/// One worker's counters. Owned exclusively by that worker on the hot
+/// path — the atomics exist so [`Server`] can *read* them while the
+/// worker runs, and the variant map's mutex is only ever contended by
+/// report-time readers, never by another worker.
+struct WorkerMetrics {
+    busy_ns: AtomicU64,
+    batches: AtomicU64,
+    requests: AtomicU64,
     /// Requests served per variant tag (untargeted requests count under
-    /// `""`) — the per-variant split [`crate::serving::ServeReport`]
-    /// surfaces.
-    variant_requests: Arc<Mutex<BTreeMap<String, u64>>>,
-    /// Variant names the backend can route, captured before the backend
-    /// moves into the worker; `None` when routing is disabled
+    /// `""`) — merged into the per-variant split
+    /// [`crate::serving::ServeReport`] surfaces.
+    variant_requests: Mutex<BTreeMap<String, u64>>,
+}
+
+impl WorkerMetrics {
+    fn new() -> WorkerMetrics {
+        WorkerMetrics {
+            busy_ns: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            variant_requests: Mutex::new(BTreeMap::new()),
+        }
+    }
+}
+
+/// A running server: N batcher threads draining one shared queue
+/// against one shared backend.
+pub struct Server {
+    queue: Arc<JobQueue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    metrics: Vec<Arc<WorkerMetrics>>,
+    /// Variant names the backend can route, captured before the workers
+    /// spawn; `None` when routing is disabled
     /// ([`BatchConfig::route_variants`] off — tags are ignored, so
     /// nothing is validated). Used to reject unknown variants at submit
     /// time: a bad tag must error its OWN request, never poison the
@@ -91,33 +261,49 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn the batcher thread.
-    pub fn start(backend: Box<dyn Backend>, config: BatchConfig) -> Server {
+    /// Spawn the worker pool over an owned backend. Rejects
+    /// un-serveable configs ([`BatchConfig`] with zero workers or a
+    /// zero row budget) with [`KamaeError::Serving`] instead of
+    /// spawning a pool that can never answer.
+    pub fn start(backend: Box<dyn Backend>, config: BatchConfig) -> Result<Server> {
+        Server::start_shared(Arc::from(backend), config)
+    }
+
+    /// [`Server::start`] over an already-shared backend — callers that
+    /// keep probing the backend while the server runs (benches, tests)
+    /// clone the `Arc` instead of round-tripping raw pointers.
+    pub fn start_shared(backend: Arc<dyn Backend>, config: BatchConfig) -> Result<Server> {
+        config.validate()?;
         let known_variants =
             if config.route_variants { Some(backend.variants().to_vec()) } else { None };
-        let (tx, rx) = mpsc::channel::<Job>();
-        let busy_ns = Arc::new(AtomicU64::new(0));
-        let batches = Arc::new(AtomicU64::new(0));
-        let requests = Arc::new(AtomicU64::new(0));
-        let variant_requests = Arc::new(Mutex::new(BTreeMap::new()));
-        let worker = {
-            let busy_ns = Arc::clone(&busy_ns);
-            let batches = Arc::clone(&batches);
-            let requests = Arc::clone(&requests);
-            let variant_requests = Arc::clone(&variant_requests);
-            std::thread::spawn(move || {
-                batch_loop(backend, config, rx, busy_ns, batches, requests, variant_requests);
-            })
-        };
-        Server {
-            tx: Some(tx),
-            worker: Some(worker),
-            busy_ns,
-            batches,
-            requests,
-            variant_requests,
-            known_variants,
+        let queue = Arc::new(JobQueue::new());
+        let mut metrics = Vec::with_capacity(config.workers);
+        let mut workers = Vec::with_capacity(config.workers);
+        for i in 0..config.workers {
+            let m = Arc::new(WorkerMetrics::new());
+            metrics.push(Arc::clone(&m));
+            let backend = Arc::clone(&backend);
+            let queue = Arc::clone(&queue);
+            let config = config.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("kamae-batcher-{i}"))
+                .spawn(move || worker_loop(backend, config, queue, m))
+                .map_err(|e| {
+                    KamaeError::Serving(format!("failed to spawn batcher worker {i}: {e}"))
+                });
+            match handle {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // unwind the partial pool before surfacing the error
+                    queue.close();
+                    for w in workers {
+                        let _ = w.join();
+                    }
+                    return Err(e);
+                }
+            }
         }
+        Ok(Server { queue, workers, metrics, known_variants })
     }
 
     /// Submit an untargeted request; the receiver yields the backend's
@@ -130,7 +316,7 @@ impl Server {
     /// backend; the receiver yields only that variant's output tensors
     /// (in the variant's own output order). Unknown variants (or a
     /// backend without variant support) error on THIS request's
-    /// receiver immediately — the bad tag never reaches the batcher, so
+    /// receiver immediately — the bad tag never reaches a worker, so
     /// it cannot fail the requests it would have been coalesced with.
     pub fn submit_variant(
         &self,
@@ -156,36 +342,62 @@ impl Server {
         variant: Option<String>,
     ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        if let Some(tx) = &self.tx {
-            if tx.send(Job { df, variant, resp: resp_tx.clone() }).is_err() {
-                let _ = resp_tx.send(Err(KamaeError::Serving("server stopped".into())));
-            }
+        if let Err(job) = self.queue.push(Job { df, variant, resp: resp_tx }) {
+            let _ = job.resp.send(Err(KamaeError::Serving("server stopped".into())));
         }
         resp_rx
     }
 
-    /// Total backend-execution time (the cost proxy: CPU-seconds of
-    /// preprocessing work, single worker).
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total backend-execution time summed across workers (the cost
+    /// proxy: CPU-seconds of preprocessing work).
     pub fn busy_time(&self) -> Duration {
-        Duration::from_nanos(self.busy_ns.load(Ordering::Relaxed))
+        self.worker_busy_times().into_iter().sum()
     }
 
-    /// (batches executed, requests served) — batching efficiency.
+    /// Per-worker backend-execution time, in worker order — feeds the
+    /// per-worker utilization split in
+    /// [`crate::serving::ServeReport`].
+    pub fn worker_busy_times(&self) -> Vec<Duration> {
+        self.metrics
+            .iter()
+            .map(|m| Duration::from_nanos(m.busy_ns.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// (batches executed, requests served) across the pool — batching
+    /// efficiency.
     pub fn counts(&self) -> (u64, u64) {
-        (self.batches.load(Ordering::Relaxed), self.requests.load(Ordering::Relaxed))
+        self.metrics.iter().fold((0, 0), |(b, r), m| {
+            (
+                b + m.batches.load(Ordering::Relaxed),
+                r + m.requests.load(Ordering::Relaxed),
+            )
+        })
     }
 
-    /// Requests served per variant tag (untargeted under `""`).
+    /// Requests served per variant tag (untargeted under `""`), merged
+    /// across workers.
     pub fn variant_counts(&self) -> BTreeMap<String, u64> {
-        self.variant_requests.lock().unwrap().clone()
+        let mut merged = BTreeMap::new();
+        for m in &self.metrics {
+            for (variant, n) in m.variant_requests.lock().unwrap().iter() {
+                *merged.entry(variant.clone()).or_insert(0) += n;
+            }
+        }
+        merged
     }
 
-    /// Stop the worker and wait for it. Requests already queued are
-    /// still served before the worker exits (the channel drains before
-    /// disconnecting).
+    /// Stop the pool and wait for every worker. Requests already queued
+    /// are still served before the workers exit (the queue drains
+    /// before disconnecting).
     pub fn shutdown(mut self) {
-        self.tx.take(); // close the channel
-        if let Some(w) = self.worker.take() {
+        self.queue.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -193,60 +405,24 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
+        self.queue.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn batch_loop(
-    backend: Box<dyn Backend>,
+fn worker_loop(
+    backend: Arc<dyn Backend>,
     config: BatchConfig,
-    rx: mpsc::Receiver<Job>,
-    busy_ns: Arc<AtomicU64>,
-    batches: Arc<AtomicU64>,
-    requests: Arc<AtomicU64>,
-    variant_requests: Arc<Mutex<BTreeMap<String, u64>>>,
+    queue: Arc<JobQueue>,
+    metrics: Arc<WorkerMetrics>,
 ) {
-    loop {
-        // block for the first request of the next batch
-        let first = match rx.recv() {
-            Ok(job) => job,
-            Err(_) => return, // channel closed: shutdown
-        };
-        let mut jobs = vec![first];
-        let mut rows = jobs[0].df.num_rows();
-        // greedily take everything already queued (free batching)
-        while rows < config.max_batch_rows {
-            match rx.try_recv() {
-                Ok(job) => {
-                    rows += job.df.num_rows();
-                    jobs.push(job);
-                }
-                Err(_) => break,
-            }
-        }
-        // then wait at most max_wait for stragglers — but only if the
-        // batch still has meaningful headroom
-        let deadline = Instant::now() + config.max_wait;
-        while rows < config.max_batch_rows {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(job) => {
-                    rows += job.df.num_rows();
-                    jobs.push(job);
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
+    while let Some(jobs) = queue.pop_batch(config.max_batch_rows, config.max_wait) {
         {
-            let mut counts = variant_requests.lock().unwrap();
+            // this worker is the map's only hot-path writer; the lock
+            // is for report-time readers and therefore uncontended here
+            let mut counts = metrics.variant_requests.lock().unwrap();
             for job in &jobs {
                 *counts.entry(job.variant.clone().unwrap_or_default()).or_insert(0) += 1;
             }
@@ -258,9 +434,9 @@ fn batch_loop(
         } else {
             run_batch(backend.as_ref(), &jobs)
         };
-        busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        batches.fetch_add(1, Ordering::Relaxed);
-        requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
 
         match result {
             Ok(per_job) => {
@@ -359,6 +535,12 @@ mod tests {
         max_batch: std::sync::atomic::AtomicUsize,
     }
 
+    impl Doubler {
+        fn new() -> Doubler {
+            Doubler { max_batch: Default::default() }
+        }
+    }
+
     impl Backend for Doubler {
         fn name(&self) -> &str {
             "doubler"
@@ -379,13 +561,14 @@ mod tests {
     #[test]
     fn responses_route_back_to_requests() {
         let server = Server::start(
-            Box::new(Doubler { max_batch: Default::default() }),
+            Box::new(Doubler::new()),
             BatchConfig {
                 max_batch_rows: 64,
                 max_wait: Duration::from_millis(5),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let rxs: Vec<_> = (0..20)
             .map(|i| (i, server.submit(req(&[i as f64, i as f64 + 0.5]))))
             .collect();
@@ -401,24 +584,51 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_configs_are_rejected_at_start() {
+        // regression (pool refactor): workers == 0 would leave the
+        // queue undrained — every submit would hang forever; a zero
+        // row budget starved the greedy top-up loop. Both must be a
+        // Serving error at start, before any thread spawns.
+        for config in [
+            BatchConfig { workers: 0, ..BatchConfig::default() },
+            BatchConfig { max_batch_rows: 0, ..BatchConfig::default() },
+        ] {
+            let err = Server::start(Box::new(Doubler::new()), config).unwrap_err();
+            assert!(matches!(err, KamaeError::Serving(_)), "{err}");
+        }
+        // the error message names the offending knob
+        let err = Server::start(
+            Box::new(Doubler::new()),
+            BatchConfig { workers: 0, ..BatchConfig::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
+        let err = Server::start(
+            Box::new(Doubler::new()),
+            BatchConfig { max_batch_rows: 0, ..BatchConfig::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_batch_rows"), "{err}");
+    }
+
+    #[test]
     fn batching_actually_merges() {
-        let backend = Box::new(Doubler { max_batch: Default::default() });
-        let probe: *const Doubler = backend.as_ref();
-        let server = Server::start(
-            backend,
+        let backend = Arc::new(Doubler::new());
+        let server = Server::start_shared(
+            backend.clone(),
             BatchConfig {
                 max_batch_rows: 1024,
                 max_wait: Duration::from_millis(50),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         // burst of requests within the batching window
         let rxs: Vec<_> = (0..32).map(|_| server.submit(req(&[1.0]))).collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();
         }
-        // SAFETY: server still alive, backend not moved
-        let max_seen = unsafe { (*probe).max_batch.load(Ordering::Relaxed) };
+        let max_seen = backend.max_batch.load(Ordering::Relaxed);
         assert!(max_seen > 1, "batcher never merged (max batch {max_seen})");
         server.shutdown();
     }
@@ -429,16 +639,16 @@ mod tests {
         // own batch — never stall waiting for headroom, never split, and
         // never drop rows. (The drain loops only *top up* small batches;
         // an oversized first job skips them and executes immediately.)
-        let backend = Box::new(Doubler { max_batch: Default::default() });
-        let probe: *const Doubler = backend.as_ref();
-        let server = Server::start(
-            backend,
+        let backend = Arc::new(Doubler::new());
+        let server = Server::start_shared(
+            backend.clone(),
             BatchConfig {
                 max_batch_rows: 8,
                 max_wait: Duration::from_millis(5),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let vals: Vec<f64> = (0..50).map(|i| i as f64).collect();
         let rx = server.submit(req(&vals));
         let out = rx.recv().unwrap().unwrap();
@@ -450,9 +660,11 @@ mod tests {
         }
         let (batches, requests) = server.counts();
         assert_eq!((batches, requests), (1, 1), "oversized request was split or retried");
-        // SAFETY: server still alive, backend not moved
-        let max_seen = unsafe { (*probe).max_batch.load(Ordering::Relaxed) };
-        assert_eq!(max_seen, 50, "backend saw a different batch than submitted");
+        assert_eq!(
+            backend.max_batch.load(Ordering::Relaxed),
+            50,
+            "backend saw a different batch than submitted"
+        );
         server.shutdown();
     }
 
@@ -467,7 +679,7 @@ mod tests {
                 Err(KamaeError::Serving("boom".into()))
             }
         }
-        let server = Server::start(Box::new(Failing), BatchConfig::default());
+        let server = Server::start(Box::new(Failing), BatchConfig::default()).unwrap();
         let rx = server.submit(req(&[1.0]));
         assert!(rx.recv().unwrap().is_err());
         server.shutdown();
@@ -543,16 +755,16 @@ mod tests {
         // interleaved dbl/tri/untargeted submissions within one batching
         // window: every response must carry exactly its variant's
         // outputs for its own rows, whatever the batcher reordered
-        let backend = Box::new(VariantDoubler::new());
-        let probe: *const VariantDoubler = backend.as_ref();
-        let server = Server::start(
-            backend,
+        let backend = Arc::new(VariantDoubler::new());
+        let server = Server::start_shared(
+            backend.clone(),
             BatchConfig {
                 max_batch_rows: 1024,
                 max_wait: Duration::from_millis(50),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let mut rxs = Vec::new();
         for i in 0..24 {
             let vals = [i as f64, i as f64 + 0.25];
@@ -592,13 +804,8 @@ mod tests {
         assert_eq!(counts.get("dbl"), Some(&8));
         assert_eq!(counts.get("tri"), Some(&8));
         assert_eq!(counts.get(""), Some(&8));
-        // SAFETY: server still alive, backend not moved
-        let (routed, max_batch) = unsafe {
-            (
-                (*probe).routed_calls.load(Ordering::Relaxed),
-                (*probe).max_batch.load(Ordering::Relaxed),
-            )
-        };
+        let routed = backend.routed_calls.load(Ordering::Relaxed);
+        let max_batch = backend.max_batch.load(Ordering::Relaxed);
         assert!(routed > 0, "no batch took the routed path");
         assert!(max_batch > 2, "mixed-variant batch never merged (max {max_batch})");
         server.shutdown();
@@ -611,7 +818,8 @@ mod tests {
         let server = Server::start(
             Box::new(VariantDoubler::new()),
             BatchConfig { route_variants: false, ..BatchConfig::default() },
-        );
+        )
+        .unwrap();
         let out = server
             .submit_variant(req(&[2.0]), "dbl")
             .recv()
@@ -635,7 +843,8 @@ mod tests {
                 max_wait: Duration::from_millis(50),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let bad = server.submit_variant(req(&[1.0]), "nope");
         let ok = server.submit_variant(req(&[1.0]), "dbl");
         let err = bad.recv().unwrap().unwrap_err();
@@ -651,7 +860,8 @@ mod tests {
         let server = Server::start(
             Box::new(VariantDoubler::new()),
             BatchConfig { route_variants: false, ..BatchConfig::default() },
-        );
+        )
+        .unwrap();
         let out = server.submit_variant(req(&[1.0]), "nope").recv().unwrap().unwrap();
         assert_eq!(out.len(), 2);
         server.shutdown();
@@ -662,13 +872,14 @@ mod tests {
         // requests spaced further apart than max_wait must not wait for
         // a full batch: each flushes as its own (partial) batch
         let server = Server::start(
-            Box::new(Doubler { max_batch: Default::default() }),
+            Box::new(Doubler::new()),
             BatchConfig {
                 max_batch_rows: 1024,
                 max_wait: Duration::from_millis(20),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let rx1 = server.submit(req(&[1.0]));
         assert_eq!(rx1.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[2.0]);
         // well past the first batch's deadline
@@ -683,7 +894,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_queued_mixed_variant_requests() {
-        // shutdown closes the channel but the worker drains what is
+        // shutdown closes the queue but the workers drain what is
         // already queued: every submitted request still gets an answer
         let server = Server::start(
             Box::new(VariantDoubler::new()),
@@ -692,7 +903,8 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let rxs: Vec<_> = (0..16)
             .map(|i| {
                 let vals = [i as f64];
@@ -703,7 +915,7 @@ mod tests {
                 }
             })
             .collect();
-        server.shutdown(); // worker must finish the queue before exiting
+        server.shutdown(); // workers must finish the queue before exiting
         for (i, rx, k) in rxs {
             let out = rx.recv().unwrap().unwrap();
             assert_eq!(out[0].as_f32().unwrap(), &[k * i as f32], "request {i}");
@@ -715,16 +927,16 @@ mod tests {
         // a tagged request larger than max_batch_rows still runs as its
         // own (routed) batch: never split, never stalled, only its
         // variant's outputs
-        let backend = Box::new(VariantDoubler::new());
-        let probe: *const VariantDoubler = backend.as_ref();
-        let server = Server::start(
-            backend,
+        let backend = Arc::new(VariantDoubler::new());
+        let server = Server::start_shared(
+            backend.clone(),
             BatchConfig {
                 max_batch_rows: 8,
                 max_wait: Duration::from_millis(5),
                 ..BatchConfig::default()
             },
-        );
+        )
+        .unwrap();
         let vals: Vec<f64> = (0..40).map(|i| i as f64).collect();
         let rx = server.submit_variant(req(&vals), "tri");
         let out = rx.recv().unwrap().unwrap();
@@ -736,15 +948,122 @@ mod tests {
         }
         let (batches, requests) = server.counts();
         assert_eq!((batches, requests), (1, 1), "oversized request was split or retried");
-        // SAFETY: server still alive, backend not moved
-        let (routed, max_batch) = unsafe {
-            (
-                (*probe).routed_calls.load(Ordering::Relaxed),
-                (*probe).max_batch.load(Ordering::Relaxed),
-            )
-        };
-        assert_eq!(routed, 1, "oversized tagged request did not take the routed path");
-        assert_eq!(max_batch, 40, "backend saw a different batch than submitted");
+        assert_eq!(
+            backend.routed_calls.load(Ordering::Relaxed),
+            1,
+            "oversized tagged request did not take the routed path"
+        );
+        assert_eq!(
+            backend.max_batch.load(Ordering::Relaxed),
+            40,
+            "backend saw a different batch than submitted"
+        );
         server.shutdown();
+    }
+
+    // ---- worker pool ------------------------------------------------------
+
+    /// Bitwise tensor-list equality via the shared oracle
+    /// ([`crate::util::prop::tensors_bit_identical`]), with a context
+    /// prefix.
+    fn assert_bitwise_eq(a: &[Tensor], b: &[Tensor], what: &str) {
+        if let Err(e) = crate::util::prop::tensors_bit_identical(a, b) {
+            panic!("{what}: {e}");
+        }
+    }
+
+    #[test]
+    fn pooled_mixed_variant_stress_matches_single_worker_oracle() {
+        // M producer threads hammer a 4-worker pool with interleaved
+        // mixed-variant requests while a 1-worker server (the PR 4
+        // architecture) serves the IDENTICAL frames as the oracle:
+        // every pooled response must be bit-identical to the oracle's,
+        // whatever worker/batch each side landed in.
+        let pool = Server::start(
+            Box::new(VariantDoubler::new()),
+            BatchConfig {
+                workers: 4,
+                max_batch_rows: 32,
+                max_wait: Duration::from_micros(200),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let oracle = Server::start(
+            Box::new(VariantDoubler::new()),
+            BatchConfig {
+                workers: 1,
+                max_batch_rows: 32,
+                max_wait: Duration::from_micros(200),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..4i64 {
+                let pool = &pool;
+                let oracle = &oracle;
+                scope.spawn(move || {
+                    for i in 0..40i64 {
+                        let v = (t * 1000 + i) as f64;
+                        let frame = req(&[v, v + 0.5, v + 0.75]);
+                        let (rx_pool, rx_oracle) = match i % 3 {
+                            0 => (
+                                pool.submit_variant(frame.clone(), "dbl"),
+                                oracle.submit_variant(frame, "dbl"),
+                            ),
+                            1 => (
+                                pool.submit_variant(frame.clone(), "tri"),
+                                oracle.submit_variant(frame, "tri"),
+                            ),
+                            _ => (pool.submit(frame.clone()), oracle.submit(frame)),
+                        };
+                        let got = rx_pool.recv().unwrap().unwrap();
+                        let want = rx_oracle.recv().unwrap().unwrap();
+                        assert_bitwise_eq(&got, &want, &format!("producer {t} request {i}"));
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.workers(), 4);
+        assert_eq!(pool.worker_busy_times().len(), 4);
+        let (_, requests) = pool.counts();
+        assert_eq!(requests, 160, "pool lost or duplicated requests");
+        // per-worker variant splits merge into the correct totals
+        let counts = pool.variant_counts();
+        assert_eq!(counts.values().sum::<u64>(), 160);
+        // per-worker busy times sum to the aggregate cost proxy
+        let summed: Duration = pool.worker_busy_times().into_iter().sum();
+        assert_eq!(summed, pool.busy_time());
+
+        // shutdown drains: queue another burst without receiving, then
+        // shut the pool down — every request must still be answered
+        let parked: Vec<_> = (0..32)
+            .map(|i| {
+                let v = 9_000.0 + i as f64;
+                (v, pool.submit_variant(req(&[v]), "dbl"))
+            })
+            .collect();
+        pool.shutdown();
+        for (v, rx) in parked {
+            let out = rx.recv().expect("response channel dropped").unwrap();
+            assert_eq!(out[0].as_f32().unwrap(), &[2.0 * v as f32]);
+        }
+        oracle.shutdown();
+    }
+
+    #[test]
+    fn submits_after_shutdown_error_cleanly() {
+        // a stopped pool must bounce new submissions on their own
+        // channel, not panic or hang
+        let backend = Arc::new(Doubler::new());
+        let server = Server::start_shared(backend.clone(), BatchConfig::default()).unwrap();
+        let queue = Arc::clone(&server.queue);
+        server.shutdown();
+        // the queue is closed: a late push is handed back
+        let (tx, rx) = mpsc::channel();
+        let job = Job { df: req(&[1.0]), variant: None, resp: tx };
+        assert!(queue.push(job).is_err());
+        drop(rx);
     }
 }

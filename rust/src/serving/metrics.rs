@@ -96,7 +96,34 @@ impl LatencyRecorder {
                 busy.as_secs_f64() / (requests as f64 / 1000.0)
             },
             variants,
+            workers: 1,
+            worker_utilization: Vec::new(),
         }
+    }
+
+    /// [`Self::report`] for a worker-pool run: total busy time is the
+    /// SUM of the per-worker busy times (the same cost proxy — pool
+    /// CPU-seconds), and the report carries the pool size plus each
+    /// worker's utilization (busy / wall). The per-worker counters are
+    /// contention-free on the serving hot path
+    /// ([`crate::serving::Server::worker_busy_times`]); this merge is
+    /// the only place they meet.
+    pub fn report_pool(
+        &self,
+        name: &str,
+        requests: usize,
+        wall: Duration,
+        worker_busy: &[Duration],
+    ) -> ServeReport {
+        let busy: Duration = worker_busy.iter().sum();
+        let mut report = self.report(name, requests, wall, busy);
+        report.workers = worker_busy.len().max(1);
+        let wall_secs = wall.as_secs_f64();
+        report.worker_utilization = worker_busy
+            .iter()
+            .map(|b| if wall_secs == 0.0 { 0.0 } else { b.as_secs_f64() / wall_secs })
+            .collect();
+        report
     }
 }
 
@@ -147,6 +174,14 @@ pub struct ServeReport {
     /// Per-variant split of a routed run (empty when nothing was
     /// recorded per variant — single-variant benches are unchanged).
     pub variants: Vec<VariantStats>,
+    /// Batcher threads that served the run ([`Self::report`] runs are
+    /// single-worker; [`LatencyRecorder::report_pool`] records the pool
+    /// size).
+    pub workers: usize,
+    /// Per-worker busy/wall ratio of a pool run, in worker order —
+    /// empty for single-worker reports. Low utilization with high
+    /// latency means queueing, not compute, is the bottleneck.
+    pub worker_utilization: Vec<f64>,
 }
 
 impl ServeReport {
@@ -181,6 +216,15 @@ impl ServeReport {
                 Json::Array(self.variants.iter().map(VariantStats::to_json).collect()),
             );
         }
+        // pool keys appear only on multi-worker runs, so single-worker
+        // trajectory records keep their exact pre-pool shape
+        if self.workers > 1 {
+            j.set("workers", self.workers);
+            j.set(
+                "worker_utilization",
+                Json::Array(self.worker_utilization.iter().map(|&u| Json::Float(u)).collect()),
+            );
+        }
         j
     }
 }
@@ -197,6 +241,19 @@ impl std::fmt::Display for ServeReport {
         writeln!(f, "latency p99     {}", fmt_ns(self.p99_ns))?;
         writeln!(f, "backend busy    {:.2} s", self.busy_secs)?;
         write!(f, "cost proxy      {:.3} cpu-s / 1k req", self.cost_cpu_s_per_1k)?;
+        if self.workers > 1 {
+            let util: Vec<String> = self
+                .worker_utilization
+                .iter()
+                .map(|u| format!("{:.0}%", 100.0 * u))
+                .collect();
+            write!(
+                f,
+                "\nworkers         {} (utilization {})",
+                self.workers,
+                util.join(" ")
+            )?;
+        }
         for v in &self.variants {
             write!(
                 f,
@@ -293,6 +350,52 @@ mod tests {
         assert!(j.get("variants").is_none());
         // display renders the split
         assert!(rep.to_string().contains("variant ltr_lite"));
+    }
+
+    #[test]
+    fn pool_report_merges_worker_busy_and_gates_json_keys() {
+        let r = LatencyRecorder::new();
+        r.record(Duration::from_millis(2));
+        r.record(Duration::from_millis(4));
+        let rep = r.report_pool(
+            "ltr+ltr_lite/pool4",
+            2,
+            Duration::from_secs(2),
+            &[
+                Duration::from_millis(1000),
+                Duration::from_millis(500),
+                Duration::from_millis(0),
+                Duration::from_millis(250),
+            ],
+        );
+        assert_eq!(rep.workers, 4);
+        // busy is the pool SUM (the cost proxy counts every core)
+        assert!((rep.busy_secs - 1.75).abs() < 1e-9, "{}", rep.busy_secs);
+        assert_eq!(rep.worker_utilization.len(), 4);
+        assert!((rep.worker_utilization[0] - 0.5).abs() < 1e-9);
+        assert!((rep.worker_utilization[2] - 0.0).abs() < 1e-9);
+        let j = rep.to_json();
+        assert_eq!(j.req_i64("workers").unwrap(), 4);
+        assert_eq!(j.req_array("worker_utilization").unwrap().len(), 4);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // display renders the pool line
+        assert!(rep.to_string().contains("workers         4"));
+
+        // single-worker pool reports keep the pre-pool record shape
+        let rep1 = r.report_pool(
+            "ltr/pool1",
+            2,
+            Duration::from_secs(2),
+            &[Duration::from_millis(100)],
+        );
+        assert_eq!(rep1.workers, 1);
+        let j1 = rep1.to_json();
+        assert!(j1.get("workers").is_none());
+        assert!(j1.get("worker_utilization").is_none());
+        // zero wall must not divide into NaN utilization
+        let rep0 = r.report_pool("z/pool2", 0, Duration::ZERO, &[Duration::ZERO, Duration::ZERO]);
+        assert!(rep0.worker_utilization.iter().all(|u| u.is_finite()));
+        assert_eq!(Json::parse(&rep0.to_json().to_string()).unwrap(), rep0.to_json());
     }
 
     #[test]

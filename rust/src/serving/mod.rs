@@ -43,6 +43,44 @@
 //! `benches/variant_routing.rs` gates the win: routed mixed-variant
 //! serving must strictly beat both all-outputs-per-request on the
 //! merged backend and two separate single-variant backends.
+//!
+//! ## Worker pool
+//!
+//! A [`Server`] is a **pool**: one shared request queue feeding
+//! [`BatchConfig::workers`] batcher threads that drain batches
+//! concurrently against ONE shared backend —
+//!
+//! ```text
+//!   submit / submit_variant
+//!            │
+//!            ▼
+//!      ┌───────────┐     worker 0 ──┐
+//!      │ JobQueue  │────▶ worker 1 ──┼──▶ Arc<dyn Backend>  (shared,
+//!      │ (1 queue) │     …          │     immutable after load)
+//!      └───────────┘     worker N-1 ┘
+//!            ▲                │
+//!     batch formation        │ per-worker metrics (no shared
+//!     serialised by the      │ hot-path mutex)
+//!     queue lock only        ▼
+//!                      merged at report time:
+//!                      ServeReport { workers, worker_utilization, … }
+//! ```
+//!
+//! Backends are immutable after load (`&self` processing, `Send +
+//! Sync`; the interpreter's regex cache is read-only and its per-variant
+//! cone memo is pre-warmed/lock-free — see
+//! [`crate::export::SpecInterpreter`]), so workers share one instance
+//! with zero coordination: batch *formation* is serialised by the queue
+//! mutex, batch *execution* is fully parallel, and responses route back
+//! per request exactly as in the single-worker case. Metrics stay
+//! contention-free — each worker owns its counters, and
+//! [`LatencyRecorder::report_pool`] merges them into one
+//! [`ServeReport`] carrying the pool size and per-worker utilization.
+//! `bench_serve_pool` drives mixed routed traffic through an N-worker
+//! pool; `benches/worker_pool.rs` gates that 4 workers strictly beat 1
+//! on routed mixed-variant throughput (and that 1 worker does not
+//! regress against the single-thread baseline) after pinning pooled
+//! responses bit-for-bit against dedicated backends.
 
 mod backend;
 mod batcher;
@@ -159,7 +197,7 @@ pub fn bench_serve(
     mode: &str,
 ) -> Result<ServeReport> {
     let backend = load_backend(artifacts, spec_name, mode)?;
-    let server = Server::start(backend, BatchConfig::default());
+    let server = Server::start(backend, BatchConfig::default())?;
 
     // request pool: pre-generated rows, requests sample row-ranges
     let pool = request_pool(spec_name, 4096)?;
@@ -237,14 +275,83 @@ pub fn bench_serve_variants(
     }
     let backend = load_variant_backend(artifacts, spec_names, level)?;
     let config = BatchConfig { route_variants: route, ..BatchConfig::default() };
-    let server = Server::start(backend, config);
+    let server = Server::start(backend, config)?;
 
+    let recorder = LatencyRecorder::new();
+    let (total_requests, wall) =
+        drive_mixed_open_loop(&server, spec_names, rps, seconds, route, &recorder)?;
+    let busy = server.busy_time();
+    server.shutdown();
+
+    Ok(recorder.report(
+        &format!(
+            "{}/{}",
+            spec_names.join("+"),
+            if route { "routed" } else { "merged-all" }
+        ),
+        total_requests,
+        wall,
+        busy,
+    ))
+}
+
+/// Open-loop Poisson serving benchmark over a MERGED multi-variant
+/// backend served by an N-worker pool ([`BatchConfig::workers`]):
+/// mixed routed traffic exactly like [`bench_serve_variants`] with
+/// `route` on, but drained by `workers` batcher threads against the one
+/// shared backend. The report carries the pool size and per-worker
+/// utilization ([`ServeReport::workers`] /
+/// [`ServeReport::worker_utilization`]) under the
+/// `"<specs>/pool<N>"` naming, so trajectory records separate pool
+/// sizes without re-parsing. `benches/worker_pool.rs` is the gated
+/// (closed-loop, saturating) counterpart; this open-loop driver is the
+/// `kamae serve --workers N` entry point.
+pub fn bench_serve_pool(
+    artifacts: &Path,
+    spec_names: &[&str],
+    rps: usize,
+    seconds: usize,
+    level: OptimizeLevel,
+    workers: usize,
+) -> Result<ServeReport> {
+    if spec_names.is_empty() {
+        return Err(KamaeError::InvalidConfig("no spec variants given".into()));
+    }
+    let backend = load_variant_backend(artifacts, spec_names, level)?;
+    let config = BatchConfig { workers, ..BatchConfig::default() };
+    let server = Server::start(backend, config)?;
+
+    let recorder = LatencyRecorder::new();
+    let (total_requests, wall) =
+        drive_mixed_open_loop(&server, spec_names, rps, seconds, true, &recorder)?;
+    let worker_busy = server.worker_busy_times();
+    server.shutdown();
+
+    Ok(recorder.report_pool(
+        &format!("{}/pool{workers}", spec_names.join("+")),
+        total_requests,
+        wall,
+        &worker_busy,
+    ))
+}
+
+/// Shared open-loop Poisson driver for the mixed-variant benches:
+/// `rps * seconds` requests, round-robin through `spec_names`, targeted
+/// via [`Server::submit_variant`] when `route` is set. Latencies land
+/// in `recorder` per variant; returns (requests, wall time).
+fn drive_mixed_open_loop(
+    server: &Server,
+    spec_names: &[&str],
+    rps: usize,
+    seconds: usize,
+    route: bool,
+    recorder: &LatencyRecorder,
+) -> Result<(usize, std::time::Duration)> {
     let pool = request_pool(spec_names[0], 4096)?;
     let rows_per_request = 8;
     let total_requests = rps * seconds;
     let mut rng = Rng::new(0xBEEF);
 
-    let recorder = LatencyRecorder::new();
     let t0 = std::time::Instant::now();
     let mut pending: Vec<(std::time::Instant, &str, RespRx)> = Vec::with_capacity(total_requests);
     let mut next_arrival = 0.0f64;
@@ -276,20 +383,7 @@ pub fn bench_serve_variants(
             .map_err(|_| KamaeError::Serving("server dropped response".into()))??;
         recorder.record_variant(variant, sent.elapsed());
     }
-    let wall = t0.elapsed();
-    let busy = server.busy_time();
-    server.shutdown();
-
-    Ok(recorder.report(
-        &format!(
-            "{}/{}",
-            spec_names.join("+"),
-            if route { "routed" } else { "merged-all" }
-        ),
-        total_requests,
-        wall,
-        busy,
-    ))
+    Ok((total_requests, t0.elapsed()))
 }
 
 /// Response-channel alias for the pending-request bookkeeping above.

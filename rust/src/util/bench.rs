@@ -67,6 +67,12 @@ fn find_non_finite(v: &Json, path: &str) -> Option<String> {
 /// file holds a JSON array of runs, each `{bench, ...fields, records}`.
 /// Returns the file path written.
 ///
+/// The target directory defaults to the repo root but honours the
+/// `KAMAE_BENCH_DIR` env var — tests that drive trajectory-writing
+/// tooling (e.g. the `kamae optimize --calibrate` integration test)
+/// point it at a temp dir so throwaway runs never pollute the real
+/// trajectory files the perf tooling is fitted from.
+///
 /// Non-finite numbers are rejected: JSON has no NaN/Inf (our writer
 /// would degrade them to `null`), so a buggy record would silently
 /// poison the whole trajectory file for downstream tooling. Benches
@@ -77,7 +83,10 @@ pub fn append_run(
     fields: &[(&str, Json)],
     records: Vec<Json>,
 ) -> Result<std::path::PathBuf> {
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{bench}.json"));
+    let dir = std::env::var_os("KAMAE_BENCH_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let path = dir.join(format!("BENCH_{bench}.json"));
     let mut runs = std::fs::read_to_string(&path)
         .ok()
         .and_then(|t| Json::parse(&t).ok())

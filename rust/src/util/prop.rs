@@ -5,8 +5,55 @@
 //! failing seed so the case can be replayed. Generators are plain closures
 //! over [`crate::util::rng::Rng`] — enough to sweep the coordinator
 //! invariants (routing, batching, pipeline state) the tests target.
+//!
+//! [`tensors_bit_identical`] is the one shared bit-exactness oracle for
+//! output tensor lists — the serving differentials (routed vs dedicated,
+//! pooled vs single-worker), the optimizer parity properties, and the
+//! gated benches all compare through it so "bit-for-bit" means the same
+//! thing everywhere.
 
+use crate::runtime::{Tensor, TensorData};
 use crate::util::rng::Rng;
+
+/// Bit-level equality of two output tensor lists: tensor counts and
+/// shapes strict, I64 exact, F32 by bit pattern — with NaN equal to NaN
+/// (a bit-exactness oracle must not reject matching NaN results), other
+/// dtype pairings rejected. `Err` names the first mismatching position
+/// and values so callers can prefix their own context (variant, level,
+/// request id) without reimplementing the walk.
+pub fn tensors_bit_identical(got: &[Tensor], want: &[Tensor]) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{} tensors vs expected {}", got.len(), want.len()));
+    }
+    for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+        if a.shape != b.shape {
+            return Err(format!("output {i}: shape {:?} vs {:?}", a.shape, b.shape));
+        }
+        match (&a.data, &b.data) {
+            (TensorData::I64(p), TensorData::I64(q)) => {
+                if let Some(j) = (0..p.len().min(q.len())).find(|&j| p[j] != q[j]) {
+                    return Err(format!("output {i}[{j}]: i64 {} vs {}", p[j], q[j]));
+                }
+                if p.len() != q.len() {
+                    return Err(format!("output {i}: i64 len {} vs {}", p.len(), q.len()));
+                }
+            }
+            (TensorData::F32(p), TensorData::F32(q)) => {
+                for (j, (u, v)) in p.iter().zip(q.iter()).enumerate() {
+                    let same = u.to_bits() == v.to_bits() || (u.is_nan() && v.is_nan());
+                    if !same {
+                        return Err(format!("output {i}[{j}]: {u:?} vs {v:?}"));
+                    }
+                }
+                if p.len() != q.len() {
+                    return Err(format!("output {i}: f32 len {} vs {}", p.len(), q.len()));
+                }
+            }
+            other => return Err(format!("output {i}: dtype mismatch {other:?}")),
+        }
+    }
+    Ok(())
+}
 
 /// Run `property` over `cases` inputs drawn from `gen`. Panics with the
 /// failing seed and debug-printed input on the first violation.
@@ -108,6 +155,28 @@ mod tests {
     #[should_panic(expected = "property 'always fails'")]
     fn failing_property_panics() {
         check("always fails", 5, |rng| rng.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn tensors_bit_identical_oracle() {
+        let a = Tensor::f32(vec![1.0, f32::NAN], vec![2]).unwrap();
+        let b = Tensor::f32(vec![1.0, f32::NAN], vec![2]).unwrap();
+        // NaN == NaN: matching NaNs must not fail a bit-exactness pin
+        assert!(tensors_bit_identical(&[a.clone()], &[b]).is_ok());
+        let c = Tensor::f32(vec![1.0, 2.0], vec![2]).unwrap();
+        assert!(tensors_bit_identical(&[a.clone()], &[c]).is_err());
+        let i = Tensor::i64(vec![1, 2], vec![2]).unwrap();
+        let err = tensors_bit_identical(&[a.clone()], &[i.clone()]).unwrap_err();
+        assert!(err.contains("dtype"), "{err}");
+        let err = tensors_bit_identical(&[], &[i.clone()]).unwrap_err();
+        assert!(err.contains("tensors"), "{err}");
+        let j = Tensor::i64(vec![1, 3], vec![2]).unwrap();
+        let err = tensors_bit_identical(&[i.clone()], &[j]).unwrap_err();
+        assert!(err.contains("i64"), "{err}");
+        // -0.0 vs 0.0 differ by bit pattern: strict by design
+        let z0 = Tensor::f32(vec![0.0], vec![1]).unwrap();
+        let z1 = Tensor::f32(vec![-0.0], vec![1]).unwrap();
+        assert!(tensors_bit_identical(&[z0], &[z1]).is_err());
     }
 
     #[test]

@@ -144,14 +144,17 @@ impl kamae::serving::Backend for EchoBackend {
 
 #[test]
 fn server_under_concurrent_submitters() {
-    let server = std::sync::Arc::new(Server::start(
-        Box::new(EchoBackend),
-        BatchConfig {
-            max_batch_rows: 64,
-            max_wait: Duration::from_millis(1),
-            ..BatchConfig::default()
-        },
-    ));
+    let server = std::sync::Arc::new(
+        Server::start(
+            Box::new(EchoBackend),
+            BatchConfig {
+                max_batch_rows: 64,
+                max_wait: Duration::from_millis(1),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap(),
+    );
     std::thread::scope(|scope| {
         for t in 0..4i64 {
             let server = std::sync::Arc::clone(&server);
@@ -384,7 +387,7 @@ fn routed_variant_serving_end_to_end() {
     )
     .unwrap();
     assert_eq!(backend.variants(), &["ltr".to_string(), "ltr_lite".to_string()]);
-    let server = Server::start(backend, BatchConfig::default());
+    let server = Server::start(backend, BatchConfig::default()).unwrap();
     let req = kamae::serving::request_pool("ltr", 16).unwrap();
     let lite_out = server
         .submit_variant(req.slice(0, 8), "ltr_lite")
@@ -499,4 +502,57 @@ fn unseen_category_rate_is_handled() {
     let oov = idx.iter().filter(|&&i| i == 0).count();
     assert!(oov > 100, "expected many OOV hits, got {oov}");
     assert!(idx.iter().all(|&i| i >= 0));
+}
+
+/// `kamae optimize --calibrate` (cost-model calibration harness): the
+/// real binary fits the quickstart catalog, times per-op interpreter
+/// evaluation on a synthetic batch, and appends finite per-op drift
+/// records to the BENCH_op_costs.json trajectory at the repo root.
+#[test]
+fn optimize_cli_calibrate_appends_op_cost_records() {
+    use kamae::util::json::Json;
+
+    let Some(bin) = option_env!("CARGO_BIN_EXE_kamae") else {
+        eprintln!("SKIP: kamae binary path not provided by cargo");
+        return;
+    };
+    // write the trajectory into a temp dir (KAMAE_BENCH_DIR) — a tiny
+    // 2-repeat test run must never pollute the real BENCH_op_costs.json
+    // the cost-model refit will be fitted from
+    let dir = std::env::temp_dir().join(format!("kamae_cli_calibrate_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let status = std::process::Command::new(bin)
+        .env("KAMAE_BENCH_DIR", &dir)
+        .args([
+            "optimize",
+            "--calibrate",
+            "quickstart",
+            "--fit-rows",
+            "400",
+            "--rows",
+            "128",
+            "--repeats",
+            "2",
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success(), "kamae optimize --calibrate failed: {status}");
+
+    let path = dir.join("BENCH_op_costs.json");
+    let runs = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let runs = runs.as_array().unwrap();
+    let last = runs.last().unwrap();
+    assert_eq!(last.req_str("bench").unwrap(), "op_costs");
+    assert_eq!(last.req_str("spec").unwrap(), "quickstart");
+    assert!(last.req_f64("scale_ns_per_unit").unwrap().is_finite());
+    let records = last.req_array("records").unwrap();
+    assert!(!records.is_empty(), "calibration produced no per-op records");
+    for r in records {
+        let op = r.req_str("op").unwrap();
+        assert!(!op.is_empty());
+        assert!(r.req_f64("drift_pct").unwrap().is_finite(), "{op}");
+        assert!(r.req_f64("measured_ns_per_row").unwrap() >= 0.0, "{op}");
+        assert!(r.req_i64("estimated_units").unwrap() > 0, "{op}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -205,7 +205,6 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
     // chain (IngressFuse), a bucketize→compare ladder (BucketizeMerge)
     // and a select over a dead compare mask (SelectCmpFuse).
     use kamae::optim::OptimizeLevel;
-    use kamae::runtime::TensorData;
 
     check_res(
         "optimized == unoptimized interpreter outputs (bitwise)",
@@ -290,28 +289,7 @@ fn optimizer_preserves_interpreter_outputs_bitwise() {
             }
             let a = kamae::export::SpecInterpreter::new(raw).run(df).map_err(|e| e.to_string())?;
             let b = kamae::export::SpecInterpreter::new(opt).run(df).map_err(|e| e.to_string())?;
-            for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
-                if x.shape != y.shape {
-                    return Err(format!("output {i}: shape {:?} vs {:?}", x.shape, y.shape));
-                }
-                match (&x.data, &y.data) {
-                    (TensorData::I64(p), TensorData::I64(q)) => {
-                        if p != q {
-                            return Err(format!("output {i}: i64 mismatch"));
-                        }
-                    }
-                    (TensorData::F32(p), TensorData::F32(q)) => {
-                        for (j, (u, v)) in p.iter().zip(q.iter()).enumerate() {
-                            let same =
-                                u.to_bits() == v.to_bits() || (u.is_nan() && v.is_nan());
-                            if !same {
-                                return Err(format!("output {i}[{j}]: {u:?} vs {v:?}"));
-                            }
-                        }
-                    }
-                    _ => return Err(format!("output {i}: dtype mismatch")),
-                }
-            }
+            kamae::util::prop::tensors_bit_identical(&a, &b)?;
             Ok(())
         },
     );
@@ -327,7 +305,6 @@ fn routed_merged_backend_matches_dedicated_variants_bitwise() {
     // sizes, and variant mixes (including same-variant-only batches).
     use kamae::optim::OptimizeLevel;
     use kamae::pipeline::catalog;
-    use kamae::runtime::TensorData;
     use kamae::serving::{request_pool, Backend, InterpretedBackend, VariantGroup};
 
     // fit once (outside the property loop — the property randomises the
@@ -423,50 +400,8 @@ fn routed_merged_backend_matches_dedicated_variants_bitwise() {
                     } else {
                         full_oracle.run(&gdf).map_err(|e| e.to_string())?
                     };
-                    if got.len() != want.len() {
-                        return Err(format!(
-                            "{level:?}/{:?}: {} tensors vs oracle {}",
-                            g.variant,
-                            got.len(),
-                            want.len()
-                        ));
-                    }
-                    for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
-                        if a.shape != b.shape {
-                            return Err(format!(
-                                "{level:?}/{:?} output {i}: shape {:?} vs {:?}",
-                                g.variant, a.shape, b.shape
-                            ));
-                        }
-                        match (&a.data, &b.data) {
-                            (TensorData::I64(p), TensorData::I64(q)) => {
-                                if p != q {
-                                    return Err(format!(
-                                        "{level:?}/{:?} output {i}: i64 mismatch",
-                                        g.variant
-                                    ));
-                                }
-                            }
-                            (TensorData::F32(p), TensorData::F32(q)) => {
-                                for (j, (u, v)) in p.iter().zip(q.iter()).enumerate() {
-                                    let same = u.to_bits() == v.to_bits()
-                                        || (u.is_nan() && v.is_nan());
-                                    if !same {
-                                        return Err(format!(
-                                            "{level:?}/{:?} output {i}[{j}]: {u:?} vs {v:?}",
-                                            g.variant
-                                        ));
-                                    }
-                                }
-                            }
-                            _ => {
-                                return Err(format!(
-                                    "{level:?}/{:?} output {i}: dtype mismatch",
-                                    g.variant
-                                ))
-                            }
-                        }
-                    }
+                    kamae::util::prop::tensors_bit_identical(got, &want)
+                        .map_err(|e| format!("{level:?}/{:?}: {e}", g.variant))?;
                 }
             }
             Ok(())
@@ -493,4 +428,96 @@ fn shard_rebalance_preserves_content() {
             re.collect().unwrap() == *df && co.collect().unwrap() == *df
         },
     );
+}
+
+#[test]
+fn pooled_server_matches_dedicated_variants_bitwise() {
+    // The PR 4 routing differential re-run against the WORKER POOL:
+    // concurrent producers submit interleaved ltr / ltr_lite requests
+    // to a 4-worker server over the merged backend, and every response
+    // must be bit-identical to the raw dedicated single-variant oracle
+    // on that request's own rows — whatever worker drained it, whatever
+    // mixed batch it was coalesced into, under real thread
+    // interleavings.
+    use kamae::optim::OptimizeLevel;
+    use kamae::pipeline::catalog;
+    use kamae::serving::{request_pool, BatchConfig, InterpretedBackend, Server};
+
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let export = |name: &str, outputs: &[&str], level| {
+        model
+            .to_graph_spec_opt(name, catalog::ltr_inputs(), outputs, level)
+            .unwrap()
+            .0
+    };
+    // raw dedicated oracles (same contract as the process_routed
+    // differential above)
+    let full_oracle = kamae::export::SpecInterpreter::new(export(
+        "ltr",
+        &catalog::LTR_OUTPUTS,
+        OptimizeLevel::None,
+    ));
+    let lite_oracle = kamae::export::SpecInterpreter::new(export(
+        "ltr_lite",
+        &catalog::LTR_LITE_OUTPUTS,
+        OptimizeLevel::None,
+    ));
+    let full = export("ltr", &catalog::LTR_OUTPUTS, OptimizeLevel::Full);
+    let lite = export("ltr_lite", &catalog::LTR_LITE_OUTPUTS, OptimizeLevel::Full);
+    let merged =
+        kamae::export::GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged, _) = kamae::optim::optimize(merged, OptimizeLevel::Full).unwrap();
+
+    let server = Server::start(
+        Box::new(InterpretedBackend::new(merged)),
+        BatchConfig {
+            workers: 4,
+            // short flush + small batches force plenty of distinct
+            // mixed batches across the workers
+            max_batch_rows: 64,
+            max_wait: std::time::Duration::from_micros(200),
+            ..BatchConfig::default()
+        },
+    )
+    .unwrap();
+    let pool = request_pool("ltr", 512).unwrap();
+
+    std::thread::scope(|scope| {
+        for t in 0..3u64 {
+            let server = &server;
+            let pool = &pool;
+            let full_oracle = &full_oracle;
+            let lite_oracle = &lite_oracle;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xA11CE + t);
+                for i in 0..30 {
+                    let rows = 1 + rng.below(12) as usize;
+                    let start = rng.below((pool.num_rows() - rows) as u64) as usize;
+                    let frame = pool.slice(start, rows);
+                    let lite = rng.below(2) == 0;
+                    let variant = if lite { "ltr_lite" } else { "ltr" };
+                    let got = server
+                        .submit_variant(frame.clone(), variant)
+                        .recv()
+                        .unwrap()
+                        .unwrap();
+                    let want = if lite {
+                        lite_oracle.run(&frame).unwrap()
+                    } else {
+                        full_oracle.run(&frame).unwrap()
+                    };
+                    if let Err(e) = kamae::util::prop::tensors_bit_identical(&got, &want) {
+                        panic!("producer {t} request {i} ({variant}): {e}");
+                    }
+                }
+            });
+        }
+    });
+    // the pool served every request across its workers
+    let (_, requests) = server.counts();
+    assert_eq!(requests, 90);
+    server.shutdown();
 }
