@@ -10,7 +10,7 @@
 # and `harness = false` [[bench]]/[[example]] entries for everything
 # under benches/ and examples/ (each defines its own `fn main`).
 
-.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-smoke bench-all artifacts clean
+.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-smoke bench-all artifacts clean
 
 verify:
 	cargo build --release
@@ -44,23 +44,33 @@ bench-variant-routing:
 bench-worker-pool:
 	cargo bench --bench worker_pool
 
+# HTTP front-end serving: a real listener on an ephemeral port driven by
+# closed-loop keep-alive clients — wire responses pinned bit-for-bit
+# against dedicated backends, saturation throughput, then a deliberate
+# overload phase where sheds must be 429 + Retry-After with p99 an order
+# of magnitude below accepted p99; appends to BENCH_net_serving.json.
+bench-net-serving:
+	cargo bench --bench net_serving
+
 # CI smoke flavour of the gated benches: reduced rows/requests, exits
 # non-zero if optimized throughput regresses below the unoptimized
 # baseline, if multilane-bucketize / cross-output-dedup fail to fire on
 # the LTR catalog, if the full pass set does not beat the PR 2 pass
 # set's cost estimate, if variant-routed serving fails to strictly
-# beat the all-outputs and separate-backend baselines, or if the
+# beat the all-outputs and separate-backend baselines, if the
 # 4-worker pool fails to strictly beat 1 worker / 1 worker regresses
-# against the single-thread baseline (the gates the bench-smoke CI job
-# enforces).
+# against the single-thread baseline, or if the HTTP listener fails to
+# shed under overload / sheds too slowly (the gates the bench-smoke CI
+# job enforces).
 bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench variant_routing
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench worker_pool
+	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench net_serving
 
 # Every bench, each appending a record to its BENCH_<name>.json
 # trajectory file (serving benches skip themselves without artifacts).
-bench-all: bench-optimizer bench-variant-routing bench-worker-pool
+bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving
 	cargo bench --bench movielens_pipeline
 	cargo bench --bench native_vs_udf
 	cargo bench --bench indexing

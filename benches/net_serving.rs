@@ -1,0 +1,469 @@
+//! Network serving benchmark — the gate for the HTTP/1.1 front-end:
+//! the listener + bounded admission window over the shared worker pool.
+//!
+//! No artifacts needed: the LTR pipeline is fitted in-process and merged
+//! exactly like `benches/worker_pool.rs`, then served by a real
+//! `NetServer` on an ephemeral loopback port and driven with CLOSED-loop
+//! keep-alive HTTP clients (each client has one request in flight, the
+//! wire analogue of the pool bench's bounded window) in three phases:
+//!
+//! * **pin**        — sampled requests over the wire must come back
+//!   bit-identical to dedicated single-variant backends (the PR 4/5
+//!   routing property re-asserted through JSON encode/decode);
+//! * **saturation** — a wide admission window (`64`, nothing sheds):
+//!   measures the front-end's saturated throughput `sat_rps`;
+//! * **overload**   — a deliberately narrow window (`2`) under the same
+//!   client fleet: most requests MUST shed. Sheds must be `429` with a
+//!   `Retry-After` header, accepted responses stay bit-identical, and
+//!   `/metrics` must report the exact shed count, the admission limit,
+//!   and one per-client entry per driver thread.
+//!
+//! Every run appends machine-readable records to
+//! `BENCH_net_serving.json` (both phases' serve reports + a summary).
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + request count
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero unless the overload
+//!                                 phase sheds, offered load reaches
+//!                                 2x sat_rps, and shed p99 latency is
+//!                                 at least 10x below accepted p99
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use kamae::dataframe::{DataFrame, Value};
+use kamae::engine::Dataset;
+use kamae::export::GraphSpec;
+use kamae::optim::{optimize, OptimizeLevel};
+use kamae::pipeline::catalog;
+use kamae::runtime::Tensor;
+use kamae::serving::{
+    request_pool, tensor_from_json, Backend, BatchConfig, InterpretedBackend, NetClient,
+    NetConfig, NetResponse, NetServer,
+};
+use kamae::util::bench::{append_run, percentile, Table};
+use kamae::util::json::Json;
+use kamae::util::prop::tensors_bit_identical;
+use kamae::util::rng::Rng;
+
+const CLIENTS: usize = 8;
+const ROWS_PER_REQUEST: usize = 8;
+const SERVER_WORKERS: usize = 2;
+/// Wide window for the saturation phase: with 8 closed-loop clients the
+/// in-flight count can never reach it, so nothing sheds.
+const SAT_ADMISSION: usize = 64;
+/// Narrow window for the overload phase: 8 clients against 2 slots, so
+/// most requests MUST shed.
+const OVERLOAD_ADMISSION: usize = 2;
+/// Wire requests replayed against dedicated backends before any timing.
+const PIN_REQUESTS: usize = 64;
+/// Accepted responses each overload client re-verifies against the
+/// oracle (bounded so verification cost does not distort offered load).
+const OVERLOAD_COMPARES: usize = 16;
+
+/// One pre-built HTTP request: the JSON body that goes over the wire
+/// plus the source frame + variant for oracle replay.
+struct Req {
+    body: String,
+    df: DataFrame,
+    variant: &'static str,
+}
+
+/// Fit LTR once and export the specs: merged (served) + dedicated
+/// oracles for the differential pin.
+fn build_specs(fit_rows: usize) -> (GraphSpec, GraphSpec, GraphSpec) {
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
+        rows: fit_rows,
+        ..Default::default()
+    });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let (full, _) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::Full)
+        .unwrap();
+    let (lite, _) = model
+        .to_graph_spec_opt(
+            "ltr_lite",
+            catalog::ltr_inputs(),
+            &catalog::LTR_LITE_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    let merged = GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged, _) = optimize(merged, OptimizeLevel::Full).unwrap();
+    (full, lite, merged)
+}
+
+fn value_to_json(v: Value) -> Json {
+    match v {
+        Value::Null => Json::Null,
+        Value::Bool(b) => Json::Bool(b),
+        Value::I64(x) => Json::Int(x),
+        Value::F64(x) => Json::Float(x),
+        Value::Str(s) => Json::Str(s),
+        Value::List(vs) => Json::Array(vs.into_iter().map(value_to_json).collect()),
+    }
+}
+
+/// Encode a request frame as the listener's wire format:
+/// `{"variant": ..., "rows": [{col: cell, ...}, ...]}`.
+fn request_body(df: &DataFrame, variant: &str) -> String {
+    let rows: Vec<Json> = (0..df.num_rows())
+        .map(|i| {
+            let mut row = Json::object();
+            for (name, col) in df.iter() {
+                row.set(name, value_to_json(col.value(i)));
+            }
+            row
+        })
+        .collect();
+    let mut j = Json::object();
+    j.set("variant", variant);
+    j.set("rows", Json::Array(rows));
+    j.to_string()
+}
+
+/// Pre-built request streams: one per client thread, round-robin variant
+/// tags, built once up front (JSON encoding is not what this bench
+/// measures).
+fn build_streams(pool: &DataFrame, clients: usize, per_client: usize) -> Vec<Vec<Req>> {
+    let mut rng = Rng::new(0xBEEF);
+    (0..clients)
+        .map(|_| {
+            (0..per_client)
+                .map(|i| {
+                    let start =
+                        rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+                    let variant = if i % 2 == 0 { "ltr" } else { "ltr_lite" };
+                    let df = pool.slice(start, ROWS_PER_REQUEST);
+                    let body = request_body(&df, variant);
+                    Req { body, df, variant }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn bind_server(merged: &GraphSpec, admission: usize) -> NetServer {
+    let backend: std::sync::Arc<dyn Backend> =
+        std::sync::Arc::new(InterpretedBackend::new(merged.clone()));
+    NetServer::bind(
+        backend,
+        "127.0.0.1:0",
+        NetConfig {
+            batch: BatchConfig { workers: SERVER_WORKERS, ..BatchConfig::default() },
+            admission,
+            ..NetConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn decode_outputs(resp: &NetResponse) -> Vec<Tensor> {
+    resp.json()
+        .unwrap()
+        .get("outputs")
+        .and_then(Json::as_array)
+        .expect("response has an 'outputs' array")
+        .iter()
+        .map(|o| tensor_from_json(o).unwrap())
+        .collect()
+}
+
+fn fetch_metrics(addr: &str) -> Json {
+    let mut client = NetClient::connect(addr).unwrap();
+    let resp = client.request("GET", "/metrics", &[], "").unwrap();
+    assert_eq!(resp.status, 200, "metrics: {}", resp.body);
+    resp.json().unwrap()
+}
+
+struct PhaseOutcome {
+    wall_secs: f64,
+    accepted_ns: Vec<f64>,
+    shed_ns: Vec<f64>,
+}
+
+/// Closed-loop HTTP driver: one keep-alive client per stream, one
+/// request in flight per client. 200s land in `accepted_ns`, 429s (which
+/// must carry `Retry-After`) in `shed_ns`; anything else panics. The
+/// first `compare_per_client` accepted responses per client are replayed
+/// against the dedicated oracle backends bit-for-bit.
+fn drive_http(
+    addr: &str,
+    streams: &[Vec<Req>],
+    full: &InterpretedBackend,
+    lite: &InterpretedBackend,
+    compare_per_client: usize,
+) -> PhaseOutcome {
+    let accepted = Mutex::new(Vec::new());
+    let shed = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for (c, stream) in streams.iter().enumerate() {
+            let accepted = &accepted;
+            let shed = &shed;
+            scope.spawn(move || {
+                let client_id = format!("client-{c}");
+                let mut client = NetClient::connect(addr).unwrap();
+                let mut acc = Vec::new();
+                let mut sh = Vec::new();
+                let mut compared = 0usize;
+                for req in stream {
+                    let sent = Instant::now();
+                    let resp = client
+                        .request("POST", "/v1/infer", &[("x-kamae-client", &client_id)], &req.body)
+                        .unwrap();
+                    let ns = sent.elapsed().as_nanos() as f64;
+                    match resp.status {
+                        200 => {
+                            acc.push(ns);
+                            if compared < compare_per_client {
+                                compared += 1;
+                                let got = decode_outputs(&resp);
+                                let want = if req.variant == "ltr" {
+                                    full.process(&req.df).unwrap()
+                                } else {
+                                    lite.process(&req.df).unwrap()
+                                };
+                                if let Err(e) = tensors_bit_identical(&got, &want) {
+                                    panic!("{} wire-vs-dedicated under load: {e}", req.variant);
+                                }
+                            }
+                        }
+                        429 => {
+                            assert!(
+                                resp.header("retry-after").is_some(),
+                                "429 shed without a Retry-After header"
+                            );
+                            sh.push(ns);
+                        }
+                        other => panic!("unexpected status {other}: {}", resp.body),
+                    }
+                    if resp.closed {
+                        client = NetClient::connect(addr).unwrap();
+                    }
+                }
+                accepted.lock().unwrap().extend(acc);
+                shed.lock().unwrap().extend(sh);
+            });
+        }
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    PhaseOutcome {
+        wall_secs,
+        accepted_ns: accepted.into_inner().unwrap(),
+        shed_ns: shed.into_inner().unwrap(),
+    }
+}
+
+/// p99 in milliseconds; 0.0 on an empty sample (the gates catch the
+/// empty case separately, and `append_run` rejects non-finite values).
+fn p99_ms(samples: &mut [f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(samples, 99.0) / 1e6
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let (fit_rows, sat_per_client, overload_per_client) =
+        if quick { (2_000, 250, 200) } else { (12_000, 1_200, 800) };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows, {sat_per_client} requests/client)\n");
+    }
+
+    let (full, lite, merged) = build_specs(fit_rows);
+    println!(
+        "merged ltr+ltr_lite: {} ingress + {} graph nodes, {} outputs",
+        merged.ingress.len(),
+        merged.nodes.len(),
+        merged.outputs.len()
+    );
+    let pool_df = request_pool("ltr", 4096).unwrap();
+    let sat_streams = build_streams(&pool_df, CLIENTS, sat_per_client);
+    let overload_streams = build_streams(&pool_df, CLIENTS, overload_per_client);
+    let full_backend = InterpretedBackend::new(full.clone());
+    let lite_backend = InterpretedBackend::new(lite.clone());
+
+    // ---- differential pin: routed inference over the wire must be
+    // bit-identical to dedicated single-variant backends, BEFORE any
+    // throughput measurement ------------------------------------------------
+    {
+        let server = bind_server(&merged, SAT_ADMISSION);
+        let addr = server.addr().to_string();
+        let mut client = NetClient::connect(&addr).unwrap();
+        let health = client.request("GET", "/healthz", &[], "").unwrap();
+        assert_eq!(health.status, 200, "healthz: {}", health.body);
+        for req in sat_streams.iter().flatten().take(PIN_REQUESTS) {
+            let resp = client
+                .request("POST", "/v1/infer", &[("x-kamae-client", "pin")], &req.body)
+                .unwrap();
+            assert_eq!(resp.status, 200, "infer over the wire: {}", resp.body);
+            let got = decode_outputs(&resp);
+            let want = if req.variant == "ltr" {
+                full_backend.process(&req.df).unwrap()
+            } else {
+                lite_backend.process(&req.df).unwrap()
+            };
+            if let Err(e) = tensors_bit_identical(&got, &want) {
+                panic!("{} wire-vs-dedicated: {e}", req.variant);
+            }
+        }
+        server.shutdown();
+        println!(
+            "differential pin: HTTP routed == dedicated backends, bit for bit \
+             ({PIN_REQUESTS} requests)\n"
+        );
+    }
+
+    let mut records = Vec::new();
+
+    // ---- saturation: wide admission window, nothing sheds -----------------
+    let (sat_rps, sat_p99_ms) = {
+        let server = bind_server(&merged, SAT_ADMISSION);
+        let addr = server.addr().to_string();
+        let mut out = drive_http(&addr, &sat_streams, &full_backend, &lite_backend, 0);
+        let metrics = fetch_metrics(&addr);
+        server.shutdown();
+        assert!(
+            out.shed_ns.is_empty(),
+            "saturation phase shed {} requests under a {SAT_ADMISSION}-wide window",
+            out.shed_ns.len()
+        );
+        let total = CLIENTS * sat_per_client;
+        assert_eq!(out.accepted_ns.len(), total, "saturation phase lost requests");
+        let rps = total as f64 / out.wall_secs;
+        let p99 = p99_ms(&mut out.accepted_ns);
+        println!(
+            "saturation: {total} requests, {rps:.0} req/s over {CLIENTS} clients, \
+             accepted p99 {p99:.3} ms"
+        );
+        records.push(metrics.get("serve_report").cloned().expect("serve_report in metrics"));
+        (rps, p99)
+    };
+
+    // ---- overload: narrow window, most requests must shed -----------------
+    let server = bind_server(&merged, OVERLOAD_ADMISSION);
+    let addr = server.addr().to_string();
+    let mut out =
+        drive_http(&addr, &overload_streams, &full_backend, &lite_backend, OVERLOAD_COMPARES);
+    let metrics = fetch_metrics(&addr);
+    server.shutdown();
+    let accepted_count = out.accepted_ns.len();
+    let shed_count = out.shed_ns.len();
+    let total = CLIENTS * overload_per_client;
+    assert_eq!(accepted_count + shed_count, total, "overload phase lost requests");
+    let offered_rps = total as f64 / out.wall_secs;
+    let accepted_p99_ms = p99_ms(&mut out.accepted_ns);
+    let shed_p99_ms = p99_ms(&mut out.shed_ns);
+    println!(
+        "overload:   {total} offered at {offered_rps:.0} req/s -> {accepted_count} accepted, \
+         {shed_count} shed (429 + Retry-After)"
+    );
+
+    // the listener's own accounting must agree with what the clients saw
+    let report = metrics.get("serve_report").cloned().expect("serve_report in metrics");
+    assert_eq!(
+        report.get("shed_requests").and_then(Json::as_i64).unwrap_or(0),
+        shed_count as i64,
+        "/metrics shed_requests disagrees with observed 429 count"
+    );
+    assert_eq!(
+        report.get("admission_limit").and_then(Json::as_i64).unwrap_or(0),
+        OVERLOAD_ADMISSION as i64,
+        "/metrics admission_limit"
+    );
+    let clients_seen = metrics
+        .get("clients")
+        .and_then(Json::as_object)
+        .map(|c| c.len())
+        .unwrap_or(0);
+    assert_eq!(clients_seen, CLIENTS, "/metrics per-client counter entries");
+    records.push(report);
+
+    let mut table = Table::new(&["phase", "requests", "rate", "p99"]);
+    table.row(&[
+        "saturation".into(),
+        (CLIENTS * sat_per_client).to_string(),
+        format!("{sat_rps:.0} req/s"),
+        format!("{sat_p99_ms:.3} ms"),
+    ]);
+    table.row(&[
+        "overload accepted".into(),
+        accepted_count.to_string(),
+        format!("{offered_rps:.0} req/s offered"),
+        format!("{accepted_p99_ms:.3} ms"),
+    ]);
+    table.row(&[
+        "overload shed".into(),
+        shed_count.to_string(),
+        "-".into(),
+        format!("{shed_p99_ms:.3} ms"),
+    ]);
+    table.print();
+
+    // ---- trajectory + gate ------------------------------------------------
+    let mut rec = Json::object();
+    rec.set("spec", "ltr+ltr_lite");
+    rec.set("mode", "net-closed-loop");
+    rec.set("clients", CLIENTS);
+    rec.set("rows_per_request", ROWS_PER_REQUEST);
+    rec.set("server_workers", SERVER_WORKERS);
+    rec.set("sat_admission", SAT_ADMISSION);
+    rec.set("overload_admission", OVERLOAD_ADMISSION);
+    rec.set("sat_rps", sat_rps);
+    rec.set("sat_p99_ms", sat_p99_ms);
+    rec.set("offered_rps", offered_rps);
+    rec.set("overload_accepted", accepted_count);
+    rec.set("overload_shed", shed_count);
+    rec.set("accepted_p99_ms", accepted_p99_ms);
+    rec.set("shed_p99_ms", shed_p99_ms);
+    records.push(rec);
+    let path = append_run("net_serving", &[("quick", Json::Bool(quick))], records)
+        .expect("bench trajectory");
+    println!("appended run to {}", path.display());
+
+    let mut gate_failures = Vec::new();
+    if shed_count == 0 {
+        gate_failures.push(format!(
+            "overload phase shed nothing: {CLIENTS} clients against a \
+             {OVERLOAD_ADMISSION}-slot window should overrun it"
+        ));
+    }
+    if offered_rps < 2.0 * sat_rps {
+        gate_failures.push(format!(
+            "offered load {offered_rps:.0} req/s under overload did not reach 2x the \
+             saturated throughput {sat_rps:.0} req/s (shedding is not cheap enough)"
+        ));
+    }
+    if shed_count > 0 && shed_p99_ms * 10.0 > accepted_p99_ms {
+        gate_failures.push(format!(
+            "shed p99 {shed_p99_ms:.3} ms is not an order of magnitude below \
+             accepted p99 {accepted_p99_ms:.3} ms"
+        ));
+    }
+    if gate {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        if !gate_failures.is_empty() {
+            std::process::exit(1);
+        }
+    } else {
+        for f in &gate_failures {
+            eprintln!("warning (ungated): {f}");
+        }
+    }
+}

@@ -90,6 +90,28 @@ pub fn read_jsonl(path: &Path, schema: &Schema) -> Result<DataFrame> {
     DataFrame::new(builders.into_iter().map(|(n, b)| (n, b.finish())).collect())
 }
 
+/// Build a DataFrame from already-parsed JSON row objects, typed by
+/// `schema` — the in-memory sibling of [`read_jsonl`], used by the
+/// network front-end to decode request bodies. Missing keys and JSON
+/// `null` become nulls; a non-object row is a [`KamaeError::Serde`]
+/// error naming the row index.
+pub fn dataframe_from_json_rows(rows: &[Json], schema: &Schema) -> Result<DataFrame> {
+    let mut builders: Vec<(String, ColumnBuilder)> = schema
+        .fields
+        .iter()
+        .map(|f| (f.name.clone(), ColumnBuilder::new(f.dtype.clone())))
+        .collect();
+    for (i, row) in rows.iter().enumerate() {
+        if row.as_object().is_none() {
+            return Err(KamaeError::Serde(format!("row {i} is not a JSON object")));
+        }
+        for (name, b) in builders.iter_mut() {
+            b.push_json(row.get(name.as_str()).unwrap_or(&Json::Null))?;
+        }
+    }
+    DataFrame::new(builders.into_iter().map(|(n, b)| (n, b.finish())).collect())
+}
+
 /// Write newline-delimited JSON.
 pub fn write_jsonl(df: &DataFrame, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
@@ -407,6 +429,32 @@ mod tests {
         let back = read_jsonl(&tmp, &df.schema()).unwrap();
         assert_eq!(back, df);
         std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn json_rows_decode_with_schema_typing() {
+        let schema = Schema {
+            fields: vec![
+                Field { name: "price".into(), dtype: DType::F64 },
+                Field { name: "city".into(), dtype: DType::Str },
+                Field { name: "tags".into(), dtype: DType::List(Box::new(DType::Str)) },
+            ],
+        };
+        let rows = vec![
+            Json::parse(r#"{"price": 12.5, "city": "berlin", "tags": ["a", "b"]}"#).unwrap(),
+            // integer-valued JSON numbers land in f64 columns; missing
+            // keys become nulls
+            Json::parse(r#"{"price": 99, "tags": []}"#).unwrap(),
+        ];
+        let df = dataframe_from_json_rows(&rows, &schema).unwrap();
+        assert_eq!(df.num_rows(), 2);
+        assert_eq!(df.column("price").unwrap().as_f64().unwrap(), &[12.5, 99.0]);
+        assert!(df.column("city").unwrap().is_null(1));
+        assert!(!df.column("city").unwrap().is_null(0));
+        // a non-object row errors with its index, not a panic
+        let bad = vec![Json::parse("[1, 2]").unwrap()];
+        let err = dataframe_from_json_rows(&bad, &schema).unwrap_err();
+        assert!(err.to_string().contains("row 0"), "{err}");
     }
 
     #[test]

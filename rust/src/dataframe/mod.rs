@@ -14,5 +14,7 @@ mod value;
 
 pub use column::{Column, DType, ListColumn};
 pub use frame::{DataFrame, Field, Schema};
-pub use io::{infer_jsonl_schema, read_csv, read_jsonl, write_csv, write_jsonl};
+pub use io::{
+    dataframe_from_json_rows, infer_jsonl_schema, read_csv, read_jsonl, write_csv, write_jsonl,
+};
 pub use value::Value;

@@ -6,41 +6,21 @@
 //! collects results in order. Throughput is bounded by the slowest stage
 //! rather than memory (the queue never exceeds `queue_cap` batches).
 //!
-//! Built on std mpsc + a counting semaphore (no tokio in the offline
-//! vendor set); the structure matches an async implementation 1:1.
+//! Built on std mpsc + the shared counting semaphore from [`crate::util::sync`]
+//! (no tokio in the offline vendor set); the structure matches an async
+//! implementation 1:1. The same semaphore also backs admission control in
+//! the network front-end (`serving::net`).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 
 use crate::dataframe::DataFrame;
 use crate::error::{KamaeError, Result};
 
-/// A counting semaphore (queue slots).
-struct Semaphore {
-    count: Mutex<usize>,
-    cv: Condvar,
-}
-
-impl Semaphore {
-    fn new(n: usize) -> Self {
-        Semaphore { count: Mutex::new(n), cv: Condvar::new() }
-    }
-
-    fn acquire(&self) {
-        let mut c = self.count.lock().unwrap();
-        while *c == 0 {
-            c = self.cv.wait(c).unwrap();
-        }
-        *c -= 1;
-    }
-
-    fn release(&self) {
-        let mut c = self.count.lock().unwrap();
-        *c += 1;
-        self.cv.notify_one();
-    }
-}
+/// Counting semaphore used for the bounded-queue backpressure window
+/// (re-exported so existing `engine::stream::Semaphore` users keep working).
+pub use crate::util::sync::Semaphore;
 
 /// Statistics of one streaming run.
 #[derive(Debug, Clone, Default)]

@@ -12,7 +12,9 @@
 //!                    Poisson serving benchmark (experiments C3/C5)
 //!   serve            load K spec variants as ONE merged routed backend
 //!                    and drive mixed per-variant traffic through the
-//!                    batcher, reporting the per-variant split
+//!                    batcher, reporting the per-variant split — or, with
+//!                    --listen ADDR, serve it over HTTP/1.1 with bounded
+//!                    admission control and load shedding
 //!
 //! Arg parsing is in-tree (offline environment — no clap).
 
@@ -121,7 +123,11 @@ fn print_usage() {
          \x20                  target their variant (routed cone evaluation) unless\n\
          \x20                  --route off; --workers N drains the queue with an N-thread\n\
          \x20                  pool over the shared backend (reports per-worker\n\
-         \x20                  utilization; requires --route on)\n"
+         \x20                  utilization; requires --route on)\n\
+         \x20                  or --listen ADDR [--admission M] — serve the merged backend\n\
+         \x20                  over HTTP/1.1 (POST /v1/infer, GET /healthz, GET /metrics,\n\
+         \x20                  POST /admin/shutdown); at most M requests are in flight at\n\
+         \x20                  once, beyond that the listener sheds with 429 + Retry-After\n"
     );
 }
 
@@ -405,6 +411,9 @@ fn serve(args: &Args) -> Result<()> {
     let rps = args.usize_or("rps", 200);
     let seconds = args.usize_or("seconds", 5);
     let level = kamae::optim::OptimizeLevel::parse(&args.get_or("level", "full"))?;
+    if let Some(listen) = args.get("listen") {
+        return serve_listen(args, &artifacts, &names, level, listen);
+    }
     let route = match args.get_or("route", "on").as_str() {
         "on" | "1" | "true" => true,
         "off" | "0" | "false" => false,
@@ -442,5 +451,48 @@ fn serve(args: &Args) -> Result<()> {
         kamae::serving::bench_serve_variants(&artifacts, &names, rps, seconds, level, route)?
     };
     println!("{report}");
+    Ok(())
+}
+
+/// `kamae serve --listen ADDR`: put the HTTP/1.1 front-end in front of
+/// the merged routed backend and park until `POST /admin/shutdown`
+/// begins the drain. `--rps/--seconds/--route` are bench-driver knobs
+/// and are ignored here — traffic comes over the wire.
+fn serve_listen(
+    args: &Args,
+    artifacts: &Path,
+    names: &[&str],
+    level: kamae::optim::OptimizeLevel,
+    listen: &str,
+) -> Result<()> {
+    use kamae::serving::{BatchConfig, NetConfig, NetServer};
+
+    let workers = args.usize_or("workers", 1);
+    let admission = args.usize_or("admission", 64);
+    let spec = kamae::serving::load_variant_spec(artifacts, names, level)?;
+    println!(
+        "merged backend {}: {} ingress + {} graph nodes, {} outputs",
+        spec.name,
+        spec.ingress.len(),
+        spec.nodes.len(),
+        spec.outputs.len()
+    );
+    print_variant_costs(&spec);
+    let backend: std::sync::Arc<dyn kamae::serving::Backend> =
+        std::sync::Arc::from(kamae::serving::load_variant_backend(artifacts, names, level)?);
+    let config = NetConfig {
+        batch: BatchConfig { workers, ..Default::default() },
+        admission,
+        ..NetConfig::default()
+    };
+    let server = NetServer::bind(backend, listen, config)?;
+    println!(
+        "kamae serve: listening on http://{} (variants: {}; workers {workers}; admission {admission})",
+        server.addr(),
+        names.join(", ")
+    );
+    println!("endpoints: POST /v1/infer  GET /healthz  GET /metrics  POST /admin/shutdown");
+    server.wait();
+    println!("kamae serve: drained and stopped");
     Ok(())
 }

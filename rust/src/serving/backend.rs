@@ -28,6 +28,21 @@ pub struct VariantGroup {
 pub trait Backend: Send + Sync {
     fn name(&self) -> &str;
 
+    /// Execution-strategy label ("compiled", "interpreted", "mleap", …)
+    /// used in error messages and surfaced over the wire so routed
+    /// rejections are actionable from the error JSON alone.
+    fn kind(&self) -> &'static str {
+        "opaque"
+    }
+
+    /// The graph spec this backend serves, when it has one. The network
+    /// front-end uses it to derive the request schema and the per-variant
+    /// output names; backends without a spec cannot be bound to a
+    /// listener.
+    fn spec(&self) -> Option<&GraphSpec> {
+        None
+    }
+
     /// Process one (possibly merged) request batch.
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>>;
 
@@ -53,8 +68,11 @@ pub trait Backend: Send + Sync {
     fn process_routed(&self, df: &DataFrame, groups: &[VariantGroup]) -> Result<Vec<Vec<Tensor>>> {
         if let Some(g) = groups.iter().find(|g| g.variant.is_some()) {
             return Err(KamaeError::Serving(format!(
-                "backend {} cannot route variant '{}' (no variant support)",
+                "backend '{}' ({} backend) cannot route variant '{}': routed \
+                 evaluation needs variant support (serve this spec on the \
+                 interpreted backend, or submit untargeted requests)",
                 self.name(),
+                self.kind(),
                 g.variant.as_deref().unwrap_or_default()
             )));
         }
@@ -197,6 +215,14 @@ impl Backend for CompiledBackend {
         &self.name
     }
 
+    fn kind(&self) -> &'static str {
+        "compiled"
+    }
+
+    fn spec(&self) -> Option<&GraphSpec> {
+        Some(self.interp.spec())
+    }
+
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
         let inputs = self.interp.run_ingress(df)?;
         self.execute_bucketed(&inputs, df.num_rows())
@@ -272,6 +298,14 @@ impl Backend for InterpretedBackend {
         &self.name
     }
 
+    fn kind(&self) -> &'static str {
+        "interpreted"
+    }
+
+    fn spec(&self) -> Option<&GraphSpec> {
+        Some(self.interp.spec())
+    }
+
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
         self.interp.run(df)
     }
@@ -298,6 +332,7 @@ impl Backend for InterpretedBackend {
 pub struct MleapBackend {
     rows: RowPipeline,
     name: String,
+    spec: GraphSpec,
 }
 
 impl MleapBackend {
@@ -305,6 +340,7 @@ impl MleapBackend {
         MleapBackend {
             name: format!("{}-mleap", spec.name),
             rows: RowPipeline::from_spec(model, spec),
+            spec: spec.clone(),
         }
     }
 }
@@ -312,6 +348,14 @@ impl MleapBackend {
 impl Backend for MleapBackend {
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        "mleap"
+    }
+
+    fn spec(&self) -> Option<&GraphSpec> {
+        Some(&self.spec)
     }
 
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
@@ -360,10 +404,19 @@ mod tests {
         assert_eq!(per_group.len(), 2);
         assert_eq!(per_group[0][0].as_f32().unwrap(), &[1.0, 2.0]);
         assert_eq!(per_group[1][0].as_f32().unwrap(), &[3.0, 4.0, 5.0]);
-        // a targeted group must error, not silently return all outputs
+        // a targeted group must error, not silently return all outputs —
+        // and the message must name the variant, the backend, and its
+        // kind so wire-level error JSON is actionable
         let targeted = vec![VariantGroup { variant: Some("a".into()), rows: 0..5 }];
         let err = Echo.process_routed(&df, &targeted).unwrap_err();
         assert!(matches!(err, KamaeError::Serving(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("variant 'a'"), "{msg}");
+        assert!(msg.contains("'echo'"), "{msg}");
+        assert!(msg.contains("opaque"), "{msg}");
+        // trait defaults: no strategy label override, no spec
+        assert_eq!(Echo.kind(), "opaque");
+        assert!(Echo.spec().is_none());
         // out-of-range groups error instead of slicing garbage
         let oob = vec![VariantGroup { variant: None, rows: 0..9 }];
         assert!(Echo.process_routed(&df, &oob).is_err());

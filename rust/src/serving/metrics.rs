@@ -98,6 +98,8 @@ impl LatencyRecorder {
             variants,
             workers: 1,
             worker_utilization: Vec::new(),
+            shed_requests: 0,
+            admission_limit: 0,
         }
     }
 
@@ -182,6 +184,14 @@ pub struct ServeReport {
     /// empty for single-worker reports. Low utilization with high
     /// latency means queueing, not compute, is the bottleneck.
     pub worker_utilization: Vec<f64>,
+    /// Requests refused with `429` by the network front-end's admission
+    /// control. 0 for in-process runs (and for net runs that never shed);
+    /// merged contention-free like the per-worker counters — the atomic
+    /// shed counter is read once at report time.
+    pub shed_requests: usize,
+    /// The admission window (max in-flight requests) the run was served
+    /// under. 0 when no admission control was in front of the server.
+    pub admission_limit: usize,
 }
 
 impl ServeReport {
@@ -225,6 +235,14 @@ impl ServeReport {
                 Json::Array(self.worker_utilization.iter().map(|&u| Json::Float(u)).collect()),
             );
         }
+        // admission keys appear only on runs that had an admission window
+        // or actually shed, so pre-net trajectory records keep their shape
+        if self.shed_requests > 0 {
+            j.set("shed_requests", self.shed_requests);
+        }
+        if self.admission_limit > 0 {
+            j.set("admission_limit", self.admission_limit);
+        }
         j
     }
 }
@@ -252,6 +270,13 @@ impl std::fmt::Display for ServeReport {
                 "\nworkers         {} (utilization {})",
                 self.workers,
                 util.join(" ")
+            )?;
+        }
+        if self.admission_limit > 0 || self.shed_requests > 0 {
+            write!(
+                f,
+                "\nadmission       window {}  shed {}",
+                self.admission_limit, self.shed_requests
             )?;
         }
         for v in &self.variants {
@@ -396,6 +421,33 @@ mod tests {
         let rep0 = r.report_pool("z/pool2", 0, Duration::ZERO, &[Duration::ZERO, Duration::ZERO]);
         assert!(rep0.worker_utilization.iter().all(|u| u.is_finite()));
         assert_eq!(Json::parse(&rep0.to_json().to_string()).unwrap(), rep0.to_json());
+    }
+
+    #[test]
+    fn shed_and_admission_keys_gate_on_non_zero() {
+        let r = LatencyRecorder::new();
+        r.record(Duration::from_millis(2));
+        let mut rep =
+            r.report("ltr/net", 1, Duration::from_secs(1), Duration::from_millis(2));
+        // default reports keep the exact pre-net record shape
+        assert_eq!(rep.shed_requests, 0);
+        assert_eq!(rep.admission_limit, 0);
+        let j = rep.to_json();
+        assert!(j.get("shed_requests").is_none());
+        assert!(j.get("admission_limit").is_none());
+        // once set (the net layer stamps them from its atomic counters),
+        // both keys land in the record and round-trip
+        rep.shed_requests = 7;
+        rep.admission_limit = 4;
+        let j = rep.to_json();
+        assert_eq!(j.req_i64("shed_requests").unwrap(), 7);
+        assert_eq!(j.req_i64("admission_limit").unwrap(), 4);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // display renders the admission line only when present
+        assert!(rep.to_string().contains("admission       window 4  shed 7"));
+        rep.shed_requests = 0;
+        rep.admission_limit = 0;
+        assert!(!rep.to_string().contains("admission"));
     }
 
     #[test]

@@ -81,14 +81,50 @@
 //! on routed mixed-variant throughput (and that 1 worker does not
 //! regress against the single-thread baseline) after pinning pooled
 //! responses bit-for-bit against dedicated backends.
+//!
+//! ## Network front-end
+//!
+//! [`net`] puts a wire in front of the pool: a std-only threaded
+//! HTTP/1.1 listener (`kamae serve --listen`) that decodes JSON request
+//! bodies into row batches, admits them through a bounded window, and
+//! feeds the same [`Server`] —
+//!
+//! ```text
+//!   HTTP clients (keep-alive)
+//!        │  POST /v1/infer {"variant", "rows"}
+//!        ▼
+//!   ┌──────────┐  conn   ┌───────────────┐ try_acquire ┌───────────┐
+//!   │ listener │────────▶│ admission     │────────────▶│ JobQueue  │
+//!   │ (accept  │ thread  │ Semaphore     │  submit /   │ → worker  │──▶ Arc<dyn Backend>
+//!   │  poll)   │  each   │ (window of M) │  submit_    │   pool    │    (ONE shared)
+//!   └──────────┘         └───────┬───────┘  variant    └───────────┘
+//!                                │ no permit
+//!                                ▼
+//!                429 {"error": {"code": "overloaded"}} + Retry-After
+//!                (shed before the body is parsed — refusal stays cheap)
+//! ```
+//!
+//! `GET /healthz` answers readiness (503 once draining); `GET /metrics`
+//! surfaces the full [`ServeReport`] — per-variant and per-worker splits
+//! plus the shed/admission counters ([`ServeReport::shed_requests`],
+//! [`ServeReport::admission_limit`]) — and per-client request/shed/
+//! latency counters keyed by the `X-Kamae-Client` header. Every failure
+//! is a typed [`WireError`] with a stable `code` and status.
+//! `benches/net_serving.rs` gates saturation throughput, wire
+//! bit-identity against in-process submission, and cheap shedding under
+//! 2× overload.
 
 mod backend;
 mod batcher;
 mod metrics;
+mod net;
 
 pub use backend::{Backend, CompiledBackend, InterpretedBackend, MleapBackend, VariantGroup};
 pub use batcher::{BatchConfig, Server};
 pub use metrics::{LatencyRecorder, ServeReport, VariantStats};
+pub use net::{
+    tensor_from_json, tensor_to_json, NetClient, NetConfig, NetResponse, NetServer, WireError,
+};
 
 use std::path::Path;
 

@@ -1,0 +1,1032 @@
+//! Network serving front-end: a std-only threaded HTTP/1.1 listener in
+//! front of the worker-pool [`Server`].
+//!
+//! The wire layer the "millions of users" story needs (MMLSpark ships
+//! Spark pipelines as RESTful web services; this is that shape on the
+//! pooled backend from PR 5), with the two production concerns the
+//! in-process API cannot provide:
+//!
+//! - **Bounded admission.** In-flight requests are capped by a counting
+//!   [`Semaphore`] window ([`NetConfig::admission`]) — the same primitive
+//!   that bounds the streaming orchestrator's queue, used non-blockingly
+//!   here: a request that finds no permit is answered `429 Too Many
+//!   Requests` with a `Retry-After` hint *before* its body is even
+//!   parsed, so shedding stays orders of magnitude cheaper than serving
+//!   (`benches/net_serving.rs` gates this).
+//! - **Typed wire errors.** Every failure mode is a [`WireError`] with a
+//!   stable machine-readable `code` and a proper status, so clients can
+//!   distinguish "fix your JSON" (400) from "back off" (429) from "the
+//!   variant does not exist" (404) from "redeploy in progress" (503).
+//!
+//! ## Protocol
+//!
+//! ```text
+//! POST /v1/infer          {"variant": "a", "rows": [{col: val, ...}, ...]}
+//!   200  {"outputs": [{"name","dtype","shape","data"}, ...],
+//!         "rows": N, "variant": "a"}          (variant key only if targeted)
+//!   4xx/5xx  {"error": {"code","message","status"}}
+//! GET  /healthz           readiness: 200 while serving, 503 once draining
+//! GET  /metrics           full ServeReport + per-client counters as JSON
+//! POST /admin/shutdown    begin drain: stop accepting, finish in-flight
+//! ```
+//!
+//! Requests may carry an `X-Kamae-Client` header; per-client
+//! request/shed/latency counters are split by it in `/metrics` (clients
+//! without one aggregate under `"anon"`).
+//!
+//! Connections are keep-alive HTTP/1.1 (one thread per connection; the
+//! accept loop polls a non-blocking listener so shutdown never hangs in
+//! `accept`). Bodies are `Content-Length`-framed; reads run under a short
+//! socket timeout so idle keep-alive connections notice the stop flag.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::dataframe::{dataframe_from_json_rows, Field, Schema};
+use crate::error::{KamaeError, Result};
+use crate::runtime::{Tensor, TensorData};
+use crate::util::json::Json;
+use crate::util::sync::Semaphore;
+
+use super::backend::Backend;
+use super::batcher::{BatchConfig, Server};
+use super::metrics::LatencyRecorder;
+
+/// Listener configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Worker-pool policy for the backing [`Server`].
+    pub batch: BatchConfig,
+    /// Admission window: max requests past the front door at once.
+    /// Request `admission + 1` is shed with `429` instead of queueing.
+    pub admission: usize,
+    /// Max rows one request may carry (413 beyond it).
+    pub max_request_rows: usize,
+    /// Max request-body bytes (413 beyond it, connection closed without
+    /// reading the body).
+    pub max_body_bytes: usize,
+    /// `Retry-After` hint (seconds) on shed responses.
+    pub retry_after_secs: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            batch: BatchConfig::default(),
+            admission: 64,
+            max_request_rows: 1024,
+            max_body_bytes: 1 << 22,
+            retry_after_secs: 1,
+        }
+    }
+}
+
+impl NetConfig {
+    fn validate(&self) -> Result<()> {
+        if self.admission == 0 {
+            return Err(KamaeError::Serving(
+                "NetConfig::admission must be >= 1 (a zero window sheds every request)".into(),
+            ));
+        }
+        if self.max_request_rows == 0 {
+            return Err(KamaeError::Serving(
+                "NetConfig::max_request_rows must be >= 1".into(),
+            ));
+        }
+        if self.max_body_bytes == 0 {
+            return Err(KamaeError::Serving(
+                "NetConfig::max_body_bytes must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Typed wire-error model: every failure a request can hit, with a
+/// stable `code` string and its HTTP status. Serialised as
+/// `{"error": {"code", "message", "status"}}`.
+#[derive(Debug, Clone)]
+pub enum WireError {
+    /// Malformed request (bad JSON, wrong body shape, non-object rows).
+    BadRequest(String),
+    /// Unknown path.
+    NotFound(String),
+    /// Known path, wrong method.
+    MethodNotAllowed(String),
+    /// `variant` names nothing the backend can route.
+    UnknownVariant(String),
+    /// More rows than [`NetConfig::max_request_rows`].
+    OversizedBatch { rows: usize, max_rows: usize },
+    /// Body larger than [`NetConfig::max_body_bytes`].
+    OversizedBody { bytes: usize, max_bytes: usize },
+    /// Shed by admission control; carries the `Retry-After` hint.
+    Overloaded { retry_after_secs: u64 },
+    /// The listener is draining (or the pool is gone).
+    ShuttingDown,
+    /// Backend-side failure.
+    Internal(String),
+}
+
+impl WireError {
+    pub fn status(&self) -> u16 {
+        match self {
+            WireError::BadRequest(_) => 400,
+            WireError::NotFound(_) | WireError::UnknownVariant(_) => 404,
+            WireError::MethodNotAllowed(_) => 405,
+            WireError::OversizedBatch { .. } | WireError::OversizedBody { .. } => 413,
+            WireError::Overloaded { .. } => 429,
+            WireError::Internal(_) => 500,
+            WireError::ShuttingDown => 503,
+        }
+    }
+
+    pub fn code(&self) -> &'static str {
+        match self {
+            WireError::BadRequest(_) => "bad_request",
+            WireError::NotFound(_) => "not_found",
+            WireError::MethodNotAllowed(_) => "method_not_allowed",
+            WireError::UnknownVariant(_) => "unknown_variant",
+            WireError::OversizedBatch { .. } => "oversized_batch",
+            WireError::OversizedBody { .. } => "oversized_body",
+            WireError::Overloaded { .. } => "overloaded",
+            WireError::ShuttingDown => "shutting_down",
+            WireError::Internal(_) => "internal",
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            WireError::BadRequest(m)
+            | WireError::NotFound(m)
+            | WireError::MethodNotAllowed(m)
+            | WireError::UnknownVariant(m)
+            | WireError::Internal(m) => m.clone(),
+            WireError::OversizedBatch { rows, max_rows } => {
+                format!("request has {rows} rows, max_request_rows is {max_rows}")
+            }
+            WireError::OversizedBody { bytes, max_bytes } => {
+                format!("request body is {bytes} bytes, max_body_bytes is {max_bytes}")
+            }
+            WireError::Overloaded { retry_after_secs } => format!(
+                "admission window full, request shed; retry after {retry_after_secs}s"
+            ),
+            WireError::ShuttingDown => "server is shutting down".to_string(),
+        }
+    }
+
+    /// Response headers beyond the defaults (`Retry-After` on sheds).
+    pub fn extra_headers(&self) -> Vec<(String, String)> {
+        match self {
+            WireError::Overloaded { retry_after_secs } => {
+                vec![("Retry-After".to_string(), retry_after_secs.to_string())]
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// The `{"error": {...}}` response body.
+    pub fn to_body(&self) -> String {
+        let mut e = Json::object();
+        e.set("code", self.code());
+        e.set("message", self.message());
+        e.set("status", self.status() as i64);
+        let mut j = Json::object();
+        j.set("error", e);
+        j.to_string()
+    }
+}
+
+type Handled = (u16, Vec<(String, String)>, String);
+
+/// Per-client request/shed/latency counters, keyed by `X-Kamae-Client`.
+#[derive(Debug, Default, Clone)]
+struct ClientStats {
+    requests: u64,
+    shed: u64,
+    latency_ns_sum: u64,
+    latency_ns_max: u64,
+}
+
+/// Shared listener state: everything a connection thread needs.
+struct NetState {
+    backend: Arc<dyn Backend>,
+    /// The pooled server; `None` once drained. Handlers take the read
+    /// lock only long enough to enqueue (responses arrive on a channel),
+    /// so drain's `write()` never waits behind a slow request.
+    server: RwLock<Option<Server>>,
+    config: NetConfig,
+    /// Request schema derived from the spec's raw inputs.
+    schema: Schema,
+    /// Spec output names (merged order) and the per-variant index split.
+    outputs: Vec<String>,
+    variants: Vec<String>,
+    variant_outputs: Vec<Vec<usize>>,
+    admission: Semaphore,
+    in_flight: AtomicUsize,
+    stop: AtomicBool,
+    active_conns: AtomicUsize,
+    started: Instant,
+    recorder: LatencyRecorder,
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    clients: Mutex<BTreeMap<String, ClientStats>>,
+}
+
+/// Releases one admission permit (and the in-flight gauge) when a
+/// request finishes, on every exit path including panics.
+struct AdmissionGuard<'a> {
+    state: &'a NetState,
+}
+
+impl Drop for AdmissionGuard<'_> {
+    fn drop(&mut self) {
+        self.state.in_flight.fetch_sub(1, Ordering::SeqCst);
+        self.state.admission.release();
+    }
+}
+
+/// Decrements the connection gauge when a connection thread exits, on
+/// every path including panics (the drain loop waits on this gauge).
+struct ConnGuard(Arc<NetState>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The running listener. Dropping it (or calling [`Self::shutdown`])
+/// stops accepting, waits for connection threads, then drains the pool.
+pub struct NetServer {
+    state: Arc<NetState>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `backend` through a worker pool. The backend must
+    /// expose its [`crate::export::GraphSpec`] — that is where the
+    /// request schema and the per-variant output names come from.
+    pub fn bind(backend: Arc<dyn Backend>, addr: &str, config: NetConfig) -> Result<NetServer> {
+        config.validate()?;
+        let (schema, outputs) = {
+            let spec = backend.spec().ok_or_else(|| {
+                KamaeError::Serving(format!(
+                    "backend '{}' ({} backend) exposes no GraphSpec; the network \
+                     front-end needs one to derive the request schema",
+                    backend.name(),
+                    backend.kind()
+                ))
+            })?;
+            let fields = spec
+                .inputs
+                .iter()
+                .map(|i| Field { name: i.name.clone(), dtype: i.dtype.clone() })
+                .collect();
+            (Schema { fields }, spec.outputs.clone())
+        };
+        let variants: Vec<String> = backend.variants().to_vec();
+        let variant_outputs: Vec<Vec<usize>> = {
+            let spec = backend.spec().expect("spec checked above");
+            variants.iter().map(|v| spec.variant_outputs(v)).collect()
+        };
+        let server = Server::start_shared(Arc::clone(&backend), config.batch.clone())?;
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(NetState {
+            backend,
+            server: RwLock::new(Some(server)),
+            admission: Semaphore::new(config.admission),
+            config,
+            schema,
+            outputs,
+            variants,
+            variant_outputs,
+            in_flight: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            started: Instant::now(),
+            recorder: LatencyRecorder::new(),
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            clients: Mutex::new(BTreeMap::new()),
+        });
+        let accept_state = Arc::clone(&state);
+        let accept = std::thread::Builder::new()
+            .name("kamae-net-accept".into())
+            .spawn(move || accept_loop(accept_state, listener))
+            .map_err(|e| KamaeError::Serving(format!("failed to spawn accept thread: {e}")))?;
+        Ok(NetServer { state, accept: Some(accept), addr })
+    }
+
+    /// The bound address (resolves the actual port after binding `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until a drain begins (`POST /admin/shutdown` or
+    /// [`Self::shutdown`] from another thread is not possible — this
+    /// consumes the server), then finish the drain: `kamae serve
+    /// --listen` parks here.
+    pub fn wait(mut self) {
+        while !self.state.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        self.drain_in_place();
+    }
+
+    /// Begin and complete a drain: stop accepting, let in-flight
+    /// connections finish, then shut the pool down (queued requests are
+    /// still served).
+    pub fn shutdown(mut self) {
+        self.drain_in_place();
+    }
+
+    fn drain_in_place(&mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // connection threads notice the stop flag at their next read
+        // timeout; don't wait forever on a peer that never hangs up
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.state.active_conns.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        if let Some(server) = self.state.server.write().unwrap().take() {
+            server.shutdown();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.drain_in_place();
+    }
+}
+
+fn accept_loop(state: Arc<NetState>, listener: TcpListener) {
+    loop {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let conn_state = Arc::clone(&state);
+                conn_state.active_conns.fetch_add(1, Ordering::SeqCst);
+                let spawned = std::thread::Builder::new()
+                    .name("kamae-net-conn".into())
+                    .spawn(move || {
+                        let guard = ConnGuard(Arc::clone(&conn_state));
+                        handle_connection(&conn_state, stream);
+                        drop(guard);
+                    });
+                if spawned.is_err() {
+                    state.active_conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            // non-blocking listener: poll the stop flag between accepts
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn io_retryable(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// Serve one keep-alive connection until the peer hangs up, an error
+/// closes it, or the stop flag finds it idle.
+fn handle_connection(state: &NetState, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // short read timeout so idle keep-alive connections poll the stop flag
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut stream = stream;
+    loop {
+        // request line; on timeout a partial line stays buffered in
+        // `line` (std keeps already-read valid UTF-8), so retrying
+        // accumulates correctly
+        let mut line = String::new();
+        loop {
+            match reader.read_line(&mut line) {
+                Ok(0) => return, // peer closed
+                Ok(_) => break,
+                Err(e) if io_retryable(&e) => {
+                    if state.stop.load(Ordering::SeqCst) && line.is_empty() {
+                        return; // idle connection during drain
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        let request_line = line.trim().to_string();
+        if request_line.is_empty() {
+            continue; // stray CRLF between pipelined requests
+        }
+        let mut parts = request_line.split_whitespace();
+        let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v.to_string()),
+            _ => {
+                let e = WireError::BadRequest("malformed request line".into());
+                let _ = write_response(&mut stream, e.status(), &e.extra_headers(), &e.to_body(), true);
+                return;
+            }
+        };
+        // a started request must finish within this window or the
+        // connection is dropped (slow-loris bound)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut headers: BTreeMap<String, String> = BTreeMap::new();
+        loop {
+            let mut h = String::new();
+            loop {
+                match reader.read_line(&mut h) {
+                    Ok(0) => return,
+                    Ok(_) => break,
+                    Err(e) if io_retryable(&e) => {
+                        if Instant::now() > deadline {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            match h.split_once(':') {
+                Some((k, v)) => {
+                    headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+                }
+                None => {
+                    let e = WireError::BadRequest(format!("malformed header line: {h:?}"));
+                    let _ = write_response(
+                        &mut stream,
+                        e.status(),
+                        &e.extra_headers(),
+                        &e.to_body(),
+                        true,
+                    );
+                    return;
+                }
+            }
+        }
+        let content_length = headers
+            .get("content-length")
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        if content_length > state.config.max_body_bytes {
+            // refuse without reading: the framing is lost, so close too
+            let e = WireError::OversizedBody {
+                bytes: content_length,
+                max_bytes: state.config.max_body_bytes,
+            };
+            let _ = write_response(&mut stream, e.status(), &e.extra_headers(), &e.to_body(), true);
+            return;
+        }
+        let mut body = vec![0u8; content_length];
+        let mut filled = 0usize;
+        while filled < content_length {
+            match reader.read(&mut body[filled..]) {
+                Ok(0) => return, // peer closed mid-body
+                Ok(n) => filled += n,
+                Err(e) if io_retryable(&e) => {
+                    if Instant::now() > deadline {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        let body = match String::from_utf8(body) {
+            Ok(b) => b,
+            Err(_) => {
+                let e = WireError::BadRequest("request body is not valid UTF-8".into());
+                let _ = write_response(&mut stream, e.status(), &e.extra_headers(), &e.to_body(), true);
+                return;
+            }
+        };
+        let keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0")
+            && !headers
+                .get("connection")
+                .is_some_and(|c| c.eq_ignore_ascii_case("close"));
+        let (status, extra, resp_body) = dispatch(state, &method, &path, &headers, &body);
+        let close = !keep_alive || state.stop.load(Ordering::SeqCst);
+        if write_response(&mut stream, status, &extra, &resp_body, close).is_err() || close {
+            return;
+        }
+    }
+}
+
+fn dispatch(
+    state: &NetState,
+    method: &str,
+    path: &str,
+    headers: &BTreeMap<String, String>,
+    body: &str,
+) -> Handled {
+    let result: std::result::Result<Handled, WireError> = match (method, path) {
+        ("GET", "/healthz") => Ok(handle_healthz(state)),
+        ("GET", "/metrics") => Ok(handle_metrics(state)),
+        ("POST", "/v1/infer") => handle_infer(state, headers, body),
+        ("POST", "/admin/shutdown") => {
+            // respond first (the write happens after dispatch returns),
+            // then the accept loop and idle connections wind down
+            state.stop.store(true, Ordering::SeqCst);
+            let mut j = Json::object();
+            j.set("status", "draining");
+            Ok((200, Vec::new(), j.to_string()))
+        }
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/infer") | (_, "/admin/shutdown") => {
+            Err(WireError::MethodNotAllowed(format!(
+                "method {method} not allowed for {path}"
+            )))
+        }
+        _ => Err(WireError::NotFound(format!("no route for {path}"))),
+    };
+    match result {
+        Ok(handled) => handled,
+        Err(e) => (e.status(), e.extra_headers(), e.to_body()),
+    }
+}
+
+fn handle_healthz(state: &NetState) -> Handled {
+    let mut j = Json::object();
+    if state.stop.load(Ordering::SeqCst) {
+        j.set("status", "draining");
+        return (503, Vec::new(), j.to_string());
+    }
+    let workers = state
+        .server
+        .read()
+        .unwrap()
+        .as_ref()
+        .map(|s| s.workers())
+        .unwrap_or(0);
+    j.set("status", "ok");
+    j.set("backend", state.backend.name());
+    j.set("kind", state.backend.kind());
+    j.set(
+        "variants",
+        Json::Array(state.variants.iter().map(|v| Json::Str(v.clone())).collect()),
+    );
+    j.set("workers", workers);
+    j.set("admission_limit", state.config.admission);
+    j.set("in_flight", state.in_flight.load(Ordering::SeqCst));
+    (200, Vec::new(), j.to_string())
+}
+
+fn handle_metrics(state: &NetState) -> Handled {
+    let accepted = state.accepted.load(Ordering::Relaxed) as usize;
+    let worker_busy = state
+        .server
+        .read()
+        .unwrap()
+        .as_ref()
+        .map(|s| s.worker_busy_times())
+        .unwrap_or_default();
+    let mut report = state.recorder.report_pool(
+        &format!("{}/net", state.backend.name()),
+        accepted,
+        state.started.elapsed(),
+        &worker_busy,
+    );
+    report.shed_requests = state.shed.load(Ordering::Relaxed) as usize;
+    report.admission_limit = state.config.admission;
+    let mut clients = Json::object();
+    for (id, c) in state.clients.lock().unwrap().iter() {
+        let mut o = Json::object();
+        o.set("requests", c.requests as i64);
+        o.set("shed", c.shed as i64);
+        o.set(
+            "mean_ns",
+            if c.requests == 0 { 0.0 } else { c.latency_ns_sum as f64 / c.requests as f64 },
+        );
+        o.set("max_ns", c.latency_ns_max as f64);
+        clients.set(id.as_str(), o);
+    }
+    let mut j = Json::object();
+    j.set("serve_report", report.to_json());
+    j.set("in_flight", state.in_flight.load(Ordering::SeqCst));
+    j.set("clients", clients);
+    (200, Vec::new(), j.to_string())
+}
+
+fn handle_infer(
+    state: &NetState,
+    headers: &BTreeMap<String, String>,
+    body: &str,
+) -> std::result::Result<Handled, WireError> {
+    if state.stop.load(Ordering::SeqCst) {
+        return Err(WireError::ShuttingDown);
+    }
+    let client = headers
+        .get("x-kamae-client")
+        .cloned()
+        .unwrap_or_else(|| "anon".to_string());
+    // shed BEFORE parsing: refusal must stay cheap under overload
+    if !state.admission.try_acquire() {
+        state.shed.fetch_add(1, Ordering::Relaxed);
+        state.clients.lock().unwrap().entry(client).or_default().shed += 1;
+        return Err(WireError::Overloaded {
+            retry_after_secs: state.config.retry_after_secs,
+        });
+    }
+    state.in_flight.fetch_add(1, Ordering::SeqCst);
+    let _permit = AdmissionGuard { state };
+    let t0 = Instant::now();
+
+    let parsed = Json::parse(body)
+        .map_err(|e| WireError::BadRequest(format!("bad request JSON: {e}")))?;
+    if parsed.as_object().is_none() {
+        return Err(WireError::BadRequest("request body is not a JSON object".into()));
+    }
+    let variant = match parsed.get("variant") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(v)) => Some(v.clone()),
+        Some(_) => return Err(WireError::BadRequest("'variant' must be a string".into())),
+    };
+    let rows = parsed
+        .get("rows")
+        .and_then(Json::as_array)
+        .ok_or_else(|| WireError::BadRequest("request needs a 'rows' array of row objects".into()))?;
+    if rows.is_empty() {
+        return Err(WireError::BadRequest("'rows' is empty".into()));
+    }
+    if rows.len() > state.config.max_request_rows {
+        return Err(WireError::OversizedBatch {
+            rows: rows.len(),
+            max_rows: state.config.max_request_rows,
+        });
+    }
+    // resolve the variant up front so the error is typed 404, not a 500
+    // bounced off the pool
+    let out_idx: Vec<usize> = match &variant {
+        None => (0..state.outputs.len()).collect(),
+        Some(v) => {
+            let i = state.variants.iter().position(|x| x == v).ok_or_else(|| {
+                WireError::UnknownVariant(format!(
+                    "no variant '{v}' to route to (backend variants: {})",
+                    state.variants.join(", ")
+                ))
+            })?;
+            state.variant_outputs[i].clone()
+        }
+    };
+    let df = dataframe_from_json_rows(rows, &state.schema)
+        .map_err(|e| WireError::BadRequest(e.to_string()))?;
+    let n_rows = df.num_rows();
+    // take the read lock only to enqueue; the response channel outlives it
+    let rx = {
+        let server = state.server.read().unwrap();
+        let server = server.as_ref().ok_or(WireError::ShuttingDown)?;
+        match &variant {
+            Some(v) => server.submit_variant(df, v),
+            None => server.submit(df),
+        }
+    };
+    let tensors = match rx.recv() {
+        Ok(Ok(t)) => t,
+        Ok(Err(e)) => {
+            let msg = e.to_string();
+            return Err(if msg.contains("server stopped") {
+                WireError::ShuttingDown
+            } else {
+                WireError::Internal(msg)
+            });
+        }
+        Err(_) => return Err(WireError::ShuttingDown),
+    };
+    let elapsed = t0.elapsed();
+    match &variant {
+        Some(v) => state.recorder.record_variant(v, elapsed),
+        None => state.recorder.record(elapsed),
+    }
+    state.accepted.fetch_add(1, Ordering::Relaxed);
+    {
+        let mut clients = state.clients.lock().unwrap();
+        let c = clients.entry(client).or_default();
+        c.requests += 1;
+        let ns = elapsed.as_nanos() as u64;
+        c.latency_ns_sum += ns;
+        c.latency_ns_max = c.latency_ns_max.max(ns);
+    }
+    if tensors.len() != out_idx.len() {
+        return Err(WireError::Internal(format!(
+            "backend returned {} outputs, expected {}",
+            tensors.len(),
+            out_idx.len()
+        )));
+    }
+    let outs: Vec<Json> = tensors
+        .iter()
+        .zip(out_idx.iter())
+        .map(|(t, &i)| tensor_to_json(&state.outputs[i], t))
+        .collect();
+    let mut resp = Json::object();
+    resp.set("outputs", Json::Array(outs));
+    resp.set("rows", n_rows);
+    if let Some(v) = &variant {
+        resp.set("variant", v.clone());
+    }
+    Ok((200, Vec::new(), resp.to_string()))
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one framed HTTP/1.1 response.
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    extra_headers: &[(String, String)],
+    body: &str,
+    close: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+        status,
+        reason_phrase(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    if close {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Serialise one output tensor for the wire. `f32` values survive the
+/// round trip bit-exactly: the JSON writer prints the shortest `f64`
+/// representation, and every finite `f32` widens to `f64` and back
+/// losslessly (non-finite values serialise as `null` — the differential
+/// bench would fail loudly if a spec ever emitted them).
+pub fn tensor_to_json(name: &str, t: &Tensor) -> Json {
+    let data = match &t.data {
+        TensorData::F32(v) => Json::Array(v.iter().map(|&x| Json::Float(f64::from(x))).collect()),
+        TensorData::F64(v) => Json::Array(v.iter().map(|&x| Json::Float(x)).collect()),
+        TensorData::I32(v) => Json::Array(v.iter().map(|&x| Json::Int(i64::from(x))).collect()),
+        TensorData::I64(v) => Json::Array(v.iter().map(|&x| Json::Int(x)).collect()),
+    };
+    let mut j = Json::object();
+    j.set("name", name);
+    j.set("dtype", t.data.dtype_name());
+    j.set(
+        "shape",
+        Json::Array(t.shape.iter().map(|&d| Json::Int(d as i64)).collect()),
+    );
+    j.set("data", data);
+    j
+}
+
+/// Decode one wire tensor back into a [`Tensor`] — the inverse of
+/// [`tensor_to_json`], used by the protocol tests and the closed-loop
+/// bench to compare wire results bit-for-bit against the in-process
+/// oracle.
+pub fn tensor_from_json(j: &Json) -> Result<Tensor> {
+    let dtype = j.req_str("dtype")?.to_string();
+    let shape: Vec<usize> = j
+        .req_array("shape")?
+        .iter()
+        .map(|d| {
+            d.as_i64()
+                .map(|x| x as usize)
+                .ok_or_else(|| KamaeError::Serde("tensor shape entry is not an integer".into()))
+        })
+        .collect::<Result<_>>()?;
+    let data = j.req_array("data")?;
+    let num = |x: &Json| {
+        x.as_f64()
+            .ok_or_else(|| KamaeError::Serde("tensor data entry is not a number".into()))
+    };
+    let int = |x: &Json| {
+        x.as_i64()
+            .ok_or_else(|| KamaeError::Serde("tensor data entry is not an integer".into()))
+    };
+    match dtype.as_str() {
+        "float32" => Tensor::f32(
+            data.iter().map(|x| num(x).map(|v| v as f32)).collect::<Result<_>>()?,
+            shape,
+        ),
+        "float64" => Tensor::f64(data.iter().map(num).collect::<Result<_>>()?, shape),
+        "int32" => Tensor::i32(
+            data.iter().map(|x| int(x).map(|v| v as i32)).collect::<Result<_>>()?,
+            shape,
+        ),
+        "int64" => Tensor::i64(data.iter().map(int).collect::<Result<_>>()?, shape),
+        other => Err(KamaeError::Serde(format!("unknown tensor dtype on the wire: {other}"))),
+    }
+}
+
+/// A minimal blocking HTTP/1.1 client for the listener's protocol —
+/// keep-alive aware, used by the protocol tests, the closed-loop bench,
+/// and the CLI integration test (no external HTTP crates in the vendor
+/// set).
+pub struct NetClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// One parsed HTTP response.
+#[derive(Debug, Clone)]
+pub struct NetResponse {
+    pub status: u16,
+    /// Header names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+    /// The server asked to close the connection (reconnect before the
+    /// next request).
+    pub closed: bool,
+}
+
+impl NetResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn json(&self) -> Result<Json> {
+        Json::parse(&self.body)
+    }
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(NetClient { stream, reader })
+    }
+
+    /// Issue one request and block for the response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: &str,
+    ) -> Result<NetResponse> {
+        let mut req = format!(
+            "{method} {path} HTTP/1.1\r\nhost: kamae\r\ncontent-length: {}\r\n",
+            body.len()
+        );
+        for (k, v) in headers {
+            req.push_str(&format!("{k}: {v}\r\n"));
+        }
+        req.push_str("\r\n");
+        self.stream.write_all(req.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()?;
+
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(KamaeError::Serving("connection closed before response".into()));
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| KamaeError::Serving(format!("malformed status line: {line:?}")))?;
+        let mut resp_headers = Vec::new();
+        let mut content_length = 0usize;
+        let mut closed = false;
+        loop {
+            let mut h = String::new();
+            if self.reader.read_line(&mut h)? == 0 {
+                return Err(KamaeError::Serving("connection closed mid-response".into()));
+            }
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let k = k.trim().to_ascii_lowercase();
+                let v = v.trim().to_string();
+                if k == "content-length" {
+                    content_length = v.parse().unwrap_or(0);
+                }
+                if k == "connection" && v.eq_ignore_ascii_case("close") {
+                    closed = true;
+                }
+                resp_headers.push((k, v));
+            }
+        }
+        let mut body_buf = vec![0u8; content_length];
+        self.reader.read_exact(&mut body_buf)?;
+        let body = String::from_utf8(body_buf)
+            .map_err(|_| KamaeError::Serving("response body is not UTF-8".into()))?;
+        Ok(NetResponse { status, headers: resp_headers, body, closed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_errors_map_to_status_and_code() {
+        let cases: Vec<(WireError, u16, &str)> = vec![
+            (WireError::BadRequest("x".into()), 400, "bad_request"),
+            (WireError::NotFound("x".into()), 404, "not_found"),
+            (WireError::MethodNotAllowed("x".into()), 405, "method_not_allowed"),
+            (WireError::UnknownVariant("x".into()), 404, "unknown_variant"),
+            (WireError::OversizedBatch { rows: 9, max_rows: 4 }, 413, "oversized_batch"),
+            (WireError::OversizedBody { bytes: 9, max_bytes: 4 }, 413, "oversized_body"),
+            (WireError::Overloaded { retry_after_secs: 1 }, 429, "overloaded"),
+            (WireError::ShuttingDown, 503, "shutting_down"),
+            (WireError::Internal("x".into()), 500, "internal"),
+        ];
+        for (e, status, code) in cases {
+            assert_eq!(e.status(), status, "{code}");
+            assert_eq!(e.code(), code);
+            let body = Json::parse(&e.to_body()).unwrap();
+            let err = body.get("error").unwrap();
+            assert_eq!(err.req_str("code").unwrap(), code);
+            assert_eq!(err.req_i64("status").unwrap(), i64::from(status));
+            assert!(!err.req_str("message").unwrap().is_empty());
+        }
+        // only sheds carry the Retry-After hint
+        let shed = WireError::Overloaded { retry_after_secs: 3 };
+        assert_eq!(
+            shed.extra_headers(),
+            vec![("Retry-After".to_string(), "3".to_string())]
+        );
+        assert!(WireError::ShuttingDown.extra_headers().is_empty());
+    }
+
+    #[test]
+    fn net_config_rejects_unserveable_windows() {
+        assert!(NetConfig::default().validate().is_ok());
+        for broken in [
+            NetConfig { admission: 0, ..NetConfig::default() },
+            NetConfig { max_request_rows: 0, ..NetConfig::default() },
+            NetConfig { max_body_bytes: 0, ..NetConfig::default() },
+        ] {
+            assert!(broken.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn tensor_json_round_trip_is_bit_exact() {
+        let cases = vec![
+            Tensor::f32(vec![1.5, -0.125, 3.0, f32::MIN_POSITIVE], vec![4]).unwrap(),
+            Tensor::f64(vec![2.0, 1e-300, -7.25], vec![3]).unwrap(),
+            Tensor::i32(vec![1, -2, 3, 4], vec![2, 2]).unwrap(),
+            Tensor::i64(vec![i64::MAX, i64::MIN, 0], vec![3]).unwrap(),
+        ];
+        for t in cases {
+            let j = tensor_to_json("out", &t);
+            assert_eq!(j.req_str("name").unwrap(), "out");
+            assert_eq!(j.req_str("dtype").unwrap(), t.data.dtype_name());
+            // through the writer + parser, exactly as the wire sees it
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            let back = tensor_from_json(&reparsed).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn reason_phrases_cover_every_wire_status() {
+        for status in [200u16, 400, 404, 405, 413, 429, 500, 503] {
+            assert_ne!(reason_phrase(status), "Unknown", "{status}");
+        }
+    }
+}

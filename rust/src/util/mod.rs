@@ -5,11 +5,13 @@
 //! the scale this project needs: a JSON parser/writer ([`json`]), a
 //! deterministic PRNG with the distributions the synthetic generators use
 //! ([`rng`]), a benchmark harness with robust statistics ([`bench`]), a
-//! property-testing mini-framework ([`prop`]), and a scoped thread pool
-//! ([`pool`]).
+//! property-testing mini-framework ([`prop`]), a scoped thread pool
+//! ([`pool`]), and shared synchronization primitives such as the counting
+//! semaphore ([`sync`]).
 
 pub mod bench;
 pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sync;

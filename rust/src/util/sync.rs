@@ -1,0 +1,122 @@
+//! Shared synchronization primitives.
+//!
+//! The offline vendor set has no tokio/parking_lot, so the handful of
+//! primitives the project needs beyond `std::sync` live here. Today that
+//! is a counting [`Semaphore`] built on `Mutex` + `Condvar`, used by two
+//! subsystems:
+//!
+//! - the streaming orchestrator (`engine::stream`) bounds its in-flight
+//!   micro-batch queue with blocking [`Semaphore::acquire`] calls
+//!   (backpressure: the producer sleeps until a slot frees up), and
+//! - the network front-end (`serving::net`) bounds in-flight HTTP
+//!   requests with non-blocking [`Semaphore::try_acquire`] calls
+//!   (load shedding: a request that finds no slot is answered `429`
+//!   immediately instead of queueing).
+
+use std::sync::{Condvar, Mutex};
+
+/// A counting semaphore over `n` permits.
+///
+/// `acquire`/`release` may be called from different threads (the stream
+/// orchestrator acquires on the producer thread and releases on the sink
+/// thread), so the permit count lives behind a `Mutex` rather than being
+/// tied to a guard lifetime.
+pub struct Semaphore {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    /// A semaphore holding `n` permits.
+    pub fn new(n: usize) -> Self {
+        Semaphore { count: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    /// Block until a permit is available, then take it.
+    pub fn acquire(&self) {
+        let mut c = self.count.lock().unwrap();
+        while *c == 0 {
+            c = self.cv.wait(c).unwrap();
+        }
+        *c -= 1;
+    }
+
+    /// Take a permit if one is available right now; never blocks.
+    ///
+    /// Returns `true` if a permit was taken. The caller owns the permit
+    /// and must `release` it exactly once.
+    pub fn try_acquire(&self) -> bool {
+        let mut c = self.count.lock().unwrap();
+        if *c == 0 {
+            false
+        } else {
+            *c -= 1;
+            true
+        }
+    }
+
+    /// Return a permit and wake one waiter.
+    pub fn release(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c += 1;
+        self.cv.notify_one();
+    }
+
+    /// Number of permits currently available (racy by nature; useful for
+    /// metrics and tests, not for flow control).
+    pub fn available(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn try_acquire_counts_down_then_refuses() {
+        let s = Semaphore::new(2);
+        assert_eq!(s.available(), 2);
+        assert!(s.try_acquire());
+        assert!(s.try_acquire());
+        assert_eq!(s.available(), 0);
+        assert!(!s.try_acquire());
+        s.release();
+        assert_eq!(s.available(), 1);
+        assert!(s.try_acquire());
+        assert!(!s.try_acquire());
+    }
+
+    #[test]
+    fn acquire_blocks_until_cross_thread_release() {
+        let s = Arc::new(Semaphore::new(0));
+        let released = Arc::new(AtomicBool::new(false));
+
+        let waiter = {
+            let s = Arc::clone(&s);
+            let released = Arc::clone(&released);
+            std::thread::spawn(move || {
+                s.acquire();
+                // acquire must not return before the releasing thread ran
+                assert!(released.load(Ordering::SeqCst));
+            })
+        };
+
+        std::thread::sleep(Duration::from_millis(50));
+        released.store(true, Ordering::SeqCst);
+        s.release();
+        waiter.join().unwrap();
+        assert_eq!(s.available(), 0);
+    }
+
+    #[test]
+    fn zero_permit_semaphore_refuses_try_acquire() {
+        let s = Semaphore::new(0);
+        assert!(!s.try_acquire());
+        s.release();
+        assert!(s.try_acquire());
+    }
+}

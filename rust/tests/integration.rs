@@ -556,3 +556,135 @@ fn optimize_cli_calibrate_appends_op_cost_records() {
     }
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// `kamae serve --listen` end to end through the real binary: export a
+/// quickstart spec, spawn the server on an ephemeral port, hit
+/// `/healthz` and `/v1/infer` over the wire, then `/admin/shutdown` and
+/// assert the process drains to a clean exit.
+#[test]
+fn serve_cli_listens_answers_and_drains() {
+    use kamae::optim::OptimizeLevel;
+    use kamae::serving::NetClient;
+    use kamae::util::json::Json;
+    use std::io::BufRead;
+
+    let Some(bin) = option_env!("CARGO_BIN_EXE_kamae") else {
+        eprintln!("SKIP: kamae binary path not provided by cargo");
+        return;
+    };
+    let dir = std::env::temp_dir().join(format!("kamae_cli_serve_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("specs")).unwrap();
+    let df = kamae::serving::request_pool("quickstart", 2_000).unwrap();
+    let model = catalog::quickstart_pipeline()
+        .fit(&Dataset::from_dataframe(df, 2))
+        .unwrap();
+    let (spec, _) = model
+        .to_graph_spec_opt(
+            "quickstart",
+            catalog::quickstart_inputs(),
+            &catalog::QUICKSTART_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    spec.save(&dir.join("specs").join("quickstart.json")).unwrap();
+
+    let mut child = std::process::Command::new(bin)
+        .args([
+            "serve",
+            "--artifacts",
+            dir.to_str().unwrap(),
+            "--variants",
+            "quickstart",
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--admission",
+            "8",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // the binary prints its bound address once the listener is up
+    let stdout = child.stdout.take().unwrap();
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("server exited before announcing its address")
+            .unwrap();
+        if let Some(rest) = line.split("listening on http://").nth(1) {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    let health = client.request("GET", "/healthz", &[], "").unwrap();
+    assert_eq!(health.status, 200, "{}", health.body);
+    let j = health.json().unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(j.get("workers").and_then(Json::as_i64), Some(2));
+    assert_eq!(j.get("admission_limit").and_then(Json::as_i64), Some(8));
+
+    let body = r#"{"variant":"quickstart","rows":[{"city":"city_3","price":12.5},{"city":"city_7","price":99.0}]}"#;
+    let resp = client.request("POST", "/v1/infer", &[], body).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("rows").and_then(Json::as_i64), Some(2));
+    let outs = j.get("outputs").and_then(Json::as_array).unwrap();
+    assert_eq!(outs.len(), catalog::QUICKSTART_OUTPUTS.len());
+    // a single spec still goes through the variant merge, so the served
+    // output names carry the variant prefix
+    for (o, want) in outs.iter().zip(catalog::QUICKSTART_OUTPUTS) {
+        assert_eq!(
+            o.get("name").and_then(Json::as_str),
+            Some(format!("quickstart::{want}").as_str())
+        );
+    }
+
+    let resp = client.request("POST", "/admin/shutdown", &[], "").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    // the drain must finish on its own: poll for a clean exit
+    let deadline = std::time::Instant::now() + Duration::from_secs(15);
+    let status = loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            break status;
+        }
+        if std::time::Instant::now() > deadline {
+            child.kill().ok();
+            panic!("kamae serve did not drain within 15s of /admin/shutdown");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "kamae serve exited uncleanly: {status}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The routed-rejection bugfix pinned on a REAL spec-less-routing
+/// backend: MLeap cannot restrict evaluation to one variant, and its
+/// refusal must name the backend, its kind, and the offending variant.
+#[test]
+fn mleap_backend_rejection_names_backend_kind_and_variant() {
+    use kamae::serving::{MleapBackend, VariantGroup};
+
+    let df = kamae::serving::request_pool("quickstart", 1_000).unwrap();
+    let model = catalog::quickstart_pipeline()
+        .fit(&Dataset::from_dataframe(df.clone(), 2))
+        .unwrap();
+    let spec = model
+        .to_graph_spec("quickstart", catalog::quickstart_inputs(), &catalog::QUICKSTART_OUTPUTS)
+        .unwrap();
+    let backend = MleapBackend::new(model, &spec);
+    let err = kamae::serving::Backend::process_routed(
+        &backend,
+        &df.slice(0, 8),
+        &[VariantGroup { variant: Some("quickstart".into()), rows: 0..8 }],
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("quickstart-mleap"), "{err}");
+    assert!(err.contains("(mleap backend)"), "{err}");
+    assert!(err.contains("variant 'quickstart'"), "{err}");
+}

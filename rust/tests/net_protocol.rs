@@ -1,0 +1,361 @@
+//! Golden wire-protocol tests for the HTTP/1.1 serving front-end.
+//!
+//! `rust/tests/fixtures/net/*.json` hold committed request/response
+//! fixtures — each one a list of requests (method, path, JSON body or a
+//! deliberately broken `raw_body`) with the expected status, error code
+//! + message fragment, or output names/dtypes. The driver replays every
+//! fixture against a REAL listener (`NetServer::bind` on an ephemeral
+//! loopback port, serving the `merged_variants.json` spec on the
+//! interpreted backend) over one keep-alive `NetClient` connection, and
+//! re-verifies every accepted response bit-for-bit against an in-process
+//! oracle: decode the fixture's rows with the same schema, run the
+//! backend directly, compare tensors.
+//!
+//! * `net_single_variant.json` — targeted requests, one variant each;
+//! * `net_mixed_variant.json`  — different variants + an untargeted
+//!                               request over ONE connection;
+//! * `net_malformed.json`      — every typed 4xx the parser can emit;
+//! * `net_oversized.json`      — the `max_request_rows` 413 boundary
+//!                               (5 rows rejected, 4 accepted).
+//!
+//! Beyond the fixtures: admission-window shedding (429 + `Retry-After`
+//! + `/metrics` accounting) against a deliberately slow backend, the
+//! `/healthz` shape, and a clean in-process shutdown drain.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use kamae::dataframe::{dataframe_from_json_rows, DataFrame, Field, Schema};
+use kamae::export::GraphSpec;
+use kamae::runtime::Tensor;
+use kamae::serving::{
+    tensor_from_json, Backend, BatchConfig, InterpretedBackend, NetClient, NetConfig, NetServer,
+    VariantGroup,
+};
+use kamae::util::json::Json;
+use kamae::util::prop::tensors_bit_identical;
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(format!("{name}.json"))
+}
+
+/// Request/response fixtures live in a `net/` subdirectory so the spec
+/// fixtures directory keeps holding only GraphSpec JSON (the python AOT
+/// probe compiles every top-level `fixtures/*.json` as a spec).
+fn fixture(name: &str) -> Json {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/net")
+        .join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("fixture {} is not JSON: {e}", path.display()))
+}
+
+fn merged_spec() -> GraphSpec {
+    GraphSpec::load(&fixture_path("merged_variants")).unwrap()
+}
+
+/// The listener config every fixture runs under: 2 pool workers and the
+/// 4-row cap the oversized fixture probes (all other fixture requests
+/// stay at or under 4 rows).
+fn test_config() -> NetConfig {
+    NetConfig {
+        batch: BatchConfig { workers: 2, ..BatchConfig::default() },
+        max_request_rows: 4,
+        ..NetConfig::default()
+    }
+}
+
+fn bind(config: NetConfig) -> (NetServer, String, GraphSpec) {
+    let spec = merged_spec();
+    let backend: Arc<dyn Backend> = Arc::new(InterpretedBackend::new(spec.clone()));
+    let server = NetServer::bind(backend, "127.0.0.1:0", config).unwrap();
+    let addr = server.addr().to_string();
+    (server, addr, spec)
+}
+
+fn request_schema(spec: &GraphSpec) -> Schema {
+    Schema {
+        fields: spec
+            .inputs
+            .iter()
+            .map(|i| Field { name: i.name.clone(), dtype: i.dtype.clone() })
+            .collect(),
+    }
+}
+
+/// Replay one fixture file against a fresh listener.
+fn run_fixture(name: &str) {
+    let doc = fixture(name);
+    let (server, addr, spec) = bind(test_config());
+    let schema = request_schema(&spec);
+    let oracle = InterpretedBackend::new(spec.clone());
+    let mut client = NetClient::connect(&addr).unwrap();
+    let requests = doc
+        .get("requests")
+        .and_then(Json::as_array)
+        .unwrap_or_else(|| panic!("{name}: fixture has no 'requests' array"));
+    for req in requests {
+        let case = req.get("name").and_then(Json::as_str).expect("request has a name");
+        let method = req.get("method").and_then(Json::as_str).expect("method");
+        let path = req.get("path").and_then(Json::as_str).expect("path");
+        let body = match req.get("raw_body") {
+            Some(Json::Str(s)) => s.clone(),
+            _ => req.get("body").expect("request has body or raw_body").to_string(),
+        };
+        let resp = client.request(method, path, &[], &body).unwrap();
+        let expect = req.get("expect").expect("request has expectations");
+        let want_status = expect.get("status").and_then(Json::as_i64).expect("status") as u16;
+        assert_eq!(resp.status, want_status, "{name}/{case}: {}", resp.body);
+        if want_status == 200 {
+            assert_success(name, case, req, expect, &resp, &spec, &schema, &oracle);
+        } else {
+            let j = resp.json().unwrap();
+            let err = j.get("error").unwrap_or_else(|| panic!("{name}/{case}: no error object"));
+            assert_eq!(
+                err.get("code").and_then(Json::as_str),
+                expect.get("code").and_then(Json::as_str),
+                "{name}/{case}: error code"
+            );
+            assert_eq!(
+                err.get("status").and_then(Json::as_i64),
+                Some(want_status as i64),
+                "{name}/{case}: status echoed in the error body"
+            );
+            let msg = err.get("message").and_then(Json::as_str).unwrap_or_default();
+            let frag = expect
+                .get("message_contains")
+                .and_then(Json::as_str)
+                .expect("error expectation has message_contains");
+            assert!(
+                msg.contains(frag),
+                "{name}/{case}: message {msg:?} does not contain {frag:?}"
+            );
+        }
+        if resp.closed {
+            client = NetClient::connect(&addr).unwrap();
+        }
+    }
+    server.shutdown();
+}
+
+/// A 200 must echo the row count + variant, carry the expected output
+/// names/dtypes, and decode bit-identical to the in-process oracle.
+#[allow(clippy::too_many_arguments)]
+fn assert_success(
+    name: &str,
+    case: &str,
+    req: &Json,
+    expect: &Json,
+    resp: &kamae::serving::NetResponse,
+    spec: &GraphSpec,
+    schema: &Schema,
+    oracle: &InterpretedBackend,
+) {
+    let j = resp.json().unwrap();
+    assert_eq!(
+        j.get("rows").and_then(Json::as_i64),
+        expect.get("rows").and_then(Json::as_i64),
+        "{name}/{case}: row count echo"
+    );
+    let variant = expect.get("variant").and_then(Json::as_str);
+    assert_eq!(
+        j.get("variant").and_then(Json::as_str),
+        variant,
+        "{name}/{case}: variant echo"
+    );
+    let outs = j.get("outputs").and_then(Json::as_array).expect("outputs array");
+    let want_outs = expect.get("outputs").and_then(Json::as_array).expect("expected outputs");
+    assert_eq!(outs.len(), want_outs.len(), "{name}/{case}: output count");
+    for (o, w) in outs.iter().zip(want_outs) {
+        assert_eq!(o.get("name"), w.get("name"), "{name}/{case}: output name");
+        assert_eq!(o.get("dtype"), w.get("dtype"), "{name}/{case}: output dtype");
+    }
+    // oracle replay: same rows, same schema, straight through the backend
+    let rows = req
+        .get("body")
+        .and_then(|b| b.get("rows"))
+        .and_then(Json::as_array)
+        .expect("success case has body rows");
+    let df = dataframe_from_json_rows(rows, schema).unwrap();
+    let full = oracle.process(&df).unwrap();
+    let idx: Vec<usize> = match variant {
+        Some(v) => spec.variant_outputs(v),
+        None => (0..spec.outputs.len()).collect(),
+    };
+    let got: Vec<Tensor> = outs.iter().map(|o| tensor_from_json(o).unwrap()).collect();
+    let want: Vec<Tensor> = idx.iter().map(|&i| full[i].clone()).collect();
+    if let Err(e) = tensors_bit_identical(&got, &want) {
+        panic!("{name}/{case}: wire-vs-oracle: {e}");
+    }
+}
+
+#[test]
+fn single_variant_fixture_round_trips() {
+    run_fixture("net_single_variant");
+}
+
+#[test]
+fn mixed_variant_fixture_round_trips_on_one_connection() {
+    run_fixture("net_mixed_variant");
+}
+
+#[test]
+fn malformed_fixture_gets_typed_4xx_errors() {
+    run_fixture("net_malformed");
+}
+
+#[test]
+fn oversized_fixture_hits_the_batch_cap() {
+    run_fixture("net_oversized");
+}
+
+/// An interpreted backend slowed down enough that a 1-slot admission
+/// window must shed concurrent clients.
+struct SlowBackend {
+    inner: InterpretedBackend,
+    delay: Duration,
+}
+
+impl Backend for SlowBackend {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn kind(&self) -> &'static str {
+        "interpreted"
+    }
+    fn spec(&self) -> Option<&GraphSpec> {
+        self.inner.spec()
+    }
+    fn variants(&self) -> &[String] {
+        self.inner.variants()
+    }
+    fn process(&self, df: &DataFrame) -> kamae::error::Result<Vec<Tensor>> {
+        std::thread::sleep(self.delay);
+        self.inner.process(df)
+    }
+    fn process_routed(
+        &self,
+        df: &DataFrame,
+        groups: &[VariantGroup],
+    ) -> kamae::error::Result<Vec<Vec<Tensor>>> {
+        std::thread::sleep(self.delay);
+        self.inner.process_routed(df, groups)
+    }
+}
+
+#[test]
+fn overload_sheds_429_with_retry_after_and_metrics_account_for_it() {
+    let spec = merged_spec();
+    let backend: Arc<dyn Backend> = Arc::new(SlowBackend {
+        inner: InterpretedBackend::new(spec.clone()),
+        delay: Duration::from_millis(50),
+    });
+    let server =
+        NetServer::bind(backend, "127.0.0.1:0", NetConfig { admission: 1, ..NetConfig::default() })
+            .unwrap();
+    let addr = server.addr().to_string();
+    let body = r#"{"variant":"a","rows":[{"city":"NYC","price":1.0}]}"#;
+    let accepted = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let (addr, accepted, shed) = (&addr, &accepted, &shed);
+            scope.spawn(move || {
+                let mut client = NetClient::connect(addr).unwrap();
+                for _ in 0..6 {
+                    let resp = client
+                        .request("POST", "/v1/infer", &[("x-kamae-client", "shed-test")], body)
+                        .unwrap();
+                    match resp.status {
+                        200 => {
+                            accepted.fetch_add(1, Ordering::SeqCst);
+                        }
+                        429 => {
+                            assert_eq!(
+                                resp.header("retry-after"),
+                                Some("1"),
+                                "shed without the Retry-After hint"
+                            );
+                            let j = resp.json().unwrap();
+                            assert_eq!(
+                                j.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+                                Some("overloaded")
+                            );
+                            shed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        other => panic!("unexpected status {other}: {}", resp.body),
+                    }
+                    if resp.closed {
+                        client = NetClient::connect(addr).unwrap();
+                    }
+                }
+            });
+        }
+    });
+    let accepted = accepted.load(Ordering::SeqCst);
+    let shed = shed.load(Ordering::SeqCst);
+    assert!(accepted >= 1, "nothing was accepted");
+    assert!(shed >= 1, "4 concurrent clients against a 1-slot window never shed");
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    let m = client.request("GET", "/metrics", &[], "").unwrap();
+    assert_eq!(m.status, 200, "{}", m.body);
+    let j = m.json().unwrap();
+    let report = j.get("serve_report").expect("metrics carries serve_report");
+    assert_eq!(report.get("admission_limit").and_then(Json::as_i64), Some(1));
+    assert_eq!(
+        report.get("shed_requests").and_then(Json::as_i64),
+        Some(shed as i64),
+        "/metrics shed_requests disagrees with the 429s the clients saw"
+    );
+    let clients = j.get("clients").and_then(Json::as_object).expect("per-client counters");
+    let c = clients.get("shed-test").expect("the X-Kamae-Client id is tracked");
+    assert_eq!(c.get("requests").and_then(Json::as_i64), Some(accepted as i64));
+    assert_eq!(c.get("shed").and_then(Json::as_i64), Some(shed as i64));
+    server.shutdown();
+}
+
+#[test]
+fn healthz_reports_the_listener_shape() {
+    let (server, addr, _spec) = bind(test_config());
+    let mut client = NetClient::connect(&addr).unwrap();
+    let resp = client.request("GET", "/healthz", &[], "").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(j.get("backend").and_then(Json::as_str), Some("a+b"));
+    assert_eq!(j.get("kind").and_then(Json::as_str), Some("interpreted"));
+    assert_eq!(j.get("workers").and_then(Json::as_i64), Some(2));
+    assert_eq!(j.get("admission_limit").and_then(Json::as_i64), Some(64));
+    let variants: Vec<&str> = j
+        .get("variants")
+        .and_then(Json::as_array)
+        .expect("variants array")
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(variants, vec!["a", "b"]);
+    server.shutdown();
+}
+
+#[test]
+fn admin_shutdown_drains_and_closes() {
+    let (server, addr, _spec) = bind(test_config());
+    let mut client = NetClient::connect(&addr).unwrap();
+    let resp = client.request("POST", "/admin/shutdown", &[], "").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(resp.json().unwrap().get("status").and_then(Json::as_str), Some("draining"));
+    assert!(resp.closed, "drain response should ask the client to hang up");
+    // the stop flag is set, so wait() completes the drain promptly
+    server.wait();
+    // the listener is gone: a fresh request cannot complete
+    assert!(
+        NetClient::connect(&addr).and_then(|mut c| c.request("GET", "/healthz", &[], "")).is_err(),
+        "listener still answering after drain"
+    );
+}
