@@ -10,12 +10,13 @@
 # and `harness = false` [[bench]]/[[example]] entries for everything
 # under benches/ and examples/ (each defines its own `fn main`).
 
-.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-smoke bench-all artifacts clean
+.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-smoke bench-all artifacts clean
 
 verify:
 	cargo build --release
 	cargo test -q
 	cargo fmt --check
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 build:
 	cargo build --release
@@ -52,6 +53,13 @@ bench-worker-pool:
 bench-net-serving:
 	cargo bench --bench net_serving
 
+# Kernel-program serving: the compiled columnar hot path vs the
+# eval_node oracle over the merged LTR backend, pinned bit-for-bit
+# first, gated at >= 2x routed throughput; appends to
+# BENCH_kernel_program.json.
+bench-kernel-program:
+	cargo bench --bench kernel_program
+
 # CI smoke flavour of the gated benches: reduced rows/requests, exits
 # non-zero if optimized throughput regresses below the unoptimized
 # baseline, if multilane-bucketize / cross-output-dedup fail to fire on
@@ -59,18 +67,20 @@ bench-net-serving:
 # set's cost estimate, if variant-routed serving fails to strictly
 # beat the all-outputs and separate-backend baselines, if the
 # 4-worker pool fails to strictly beat 1 worker / 1 worker regresses
-# against the single-thread baseline, or if the HTTP listener fails to
-# shed under overload / sheds too slowly (the gates the bench-smoke CI
-# job enforces).
+# against the single-thread baseline, if the HTTP listener fails to
+# shed under overload / sheds too slowly, or if the kernel program
+# fails to compile for / outpace the eval_node oracle on the LTR
+# catalog (the gates the bench-smoke CI job enforces).
 bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench variant_routing
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench worker_pool
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench net_serving
+	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench kernel_program
 
 # Every bench, each appending a record to its BENCH_<name>.json
 # trajectory file (serving benches skip themselves without artifacts).
-bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving
+bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program
 	cargo bench --bench movielens_pipeline
 	cargo bench --bench native_vs_udf
 	cargo bench --bench indexing

@@ -1,0 +1,275 @@
+//! Kernel-program benchmark — the gate for the compiled columnar hot
+//! path in the spec interpreter.
+//!
+//! At backend load the `SpecInterpreter` compiles the optimized spec
+//! once into a kernel program: a topologically ordered list of typed
+//! kernels with pre-parsed attributes and slot-indexed flat buffers,
+//! executed batch-at-a-time — no per-batch string matching, attr
+//! lookups or `HashMap` env. The original per-node `eval_node`
+//! interpreter is retained verbatim as the differential oracle
+//! (`InterpretedBackend::new_oracle`); this bench pins the two paths
+//! bit-identical and then gates the speedup.
+//!
+//! No artifacts needed: the LTR pipeline is fitted in-process, exported
+//! as the full (`ltr`) and lite (`ltr_lite`) variants at
+//! `OptimizeLevel::Full`, merged (`GraphSpec::merge_variants` +
+//! `CrossOutputDedup`) and driven two ways over an IDENTICAL mixed
+//! workload (8-row requests, half per variant, coalesced the way the
+//! dynamic batcher does under bursts):
+//!
+//! * **routed** — `process_routed` on the merged backend: the serving
+//!   hot path, per-cone sub-programs over the variant row groups;
+//! * **process** — plain all-outputs `process` on the merged backend.
+//!
+//! Both shapes run on the kernel-program backend and on the oracle
+//! backend; responses are asserted bit-identical before any timing runs
+//! (the randomized differential property in `rust/tests/properties.rs`
+//! pins the same contract per op and under random routing).
+//!
+//! Every run appends machine-readable records to
+//! `BENCH_kernel_program.json` (gated metrics end in `_rps`; the
+//! nightly `tools/bench_compare.py` comparator watches them).
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + measure time
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero unless the kernel
+//!                                 program serves routed mixed traffic
+//!                                 at >= 2x the oracle's throughput
+
+use kamae::dataframe::DataFrame;
+use kamae::engine::Dataset;
+use kamae::export::{GraphSpec, SpecInterpreter};
+use kamae::optim::{optimize, OptimizeLevel};
+use kamae::pipeline::catalog;
+use kamae::runtime::Tensor;
+use kamae::serving::{request_pool, Backend, InterpretedBackend, VariantGroup};
+use kamae::util::bench::{append_run, fmt_ns, Bencher, Table};
+use kamae::util::json::Json;
+use kamae::util::rng::Rng;
+
+const ROWS_PER_REQUEST: usize = 8;
+/// Requests per mixed batch (half per variant) — matches
+/// `benches/variant_routing.rs` so the routed numbers are comparable
+/// across trajectory files.
+const REQUESTS_PER_BATCH: usize = 2;
+
+/// The gate: kernel-program routed throughput must be at least this
+/// multiple of the `eval_node` oracle's.
+const MIN_SPEEDUP: f64 = 2.0;
+
+/// Fit LTR once and export the merged two-variant spec.
+fn build_spec(fit_rows: usize) -> GraphSpec {
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
+        rows: fit_rows,
+        ..Default::default()
+    });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let (full, _) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::Full)
+        .unwrap();
+    let (lite, _) = model
+        .to_graph_spec_opt(
+            "ltr_lite",
+            catalog::ltr_inputs(),
+            &catalog::LTR_LITE_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    let merged = GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged, _) = optimize(merged, OptimizeLevel::Full).unwrap();
+    merged
+}
+
+/// One pre-built mixed batch: the concatenated frame and its
+/// per-variant row groups.
+struct MixedBatch {
+    merged_df: DataFrame,
+    groups: Vec<VariantGroup>,
+}
+
+/// Pre-build the request batches outside the timed loops (request
+/// construction is identical across paths and not what this bench
+/// measures).
+fn build_batches(pool: &DataFrame, count: usize) -> Vec<MixedBatch> {
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut batches = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut reqs = Vec::with_capacity(REQUESTS_PER_BATCH);
+        for _ in 0..REQUESTS_PER_BATCH {
+            let start = rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+            reqs.push(pool.slice(start, ROWS_PER_REQUEST));
+        }
+        let refs: Vec<&DataFrame> = reqs.iter().collect();
+        let merged_df = DataFrame::concat(&refs).unwrap();
+        let split = reqs[0].num_rows();
+        let groups = vec![
+            VariantGroup { variant: Some("ltr".into()), rows: 0..split },
+            VariantGroup { variant: Some("ltr_lite".into()), rows: split..merged_df.num_rows() },
+        ];
+        batches.push(MixedBatch { merged_df, groups });
+    }
+    batches
+}
+
+/// Bitwise tensor-list equality via the shared oracle
+/// ([`kamae::util::prop::tensors_bit_identical`]), with a context
+/// prefix.
+fn assert_bit_identical_lists(got: &[Tensor], want: &[Tensor], what: &str) {
+    if let Err(e) = kamae::util::prop::tensors_bit_identical(got, want) {
+        panic!("{what}: {e}");
+    }
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let fit_rows = if quick { 2_000 } else { 20_000 };
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows)\n");
+    }
+
+    let merged = build_spec(fit_rows);
+    println!(
+        "merged ltr+ltr_lite: {} ingress + {} graph nodes, {} outputs",
+        merged.ingress.len(),
+        merged.nodes.len(),
+        merged.outputs.len()
+    );
+
+    // the gate is meaningless if the kernel compiler silently fell back
+    // to the oracle on this spec — fail loudly instead of measuring
+    // oracle-vs-oracle
+    assert!(
+        SpecInterpreter::new(merged.clone()).is_compiled(),
+        "LTR catalog spec did not compile to a kernel program"
+    );
+    println!("kernel program compiled for the merged LTR spec\n");
+
+    let kernel_backend = InterpretedBackend::new(merged.clone());
+    let oracle_backend = InterpretedBackend::new_oracle(merged.clone());
+
+    let pool = request_pool("ltr", 4096).unwrap();
+    let batches = build_batches(&pool, 64);
+
+    // ---- differential pin: kernel == oracle, bit for bit --------------
+    for batch in batches.iter().take(4) {
+        let k = kernel_backend.process(&batch.merged_df).unwrap();
+        let o = oracle_backend.process(&batch.merged_df).unwrap();
+        assert_bit_identical_lists(&k, &o, "process kernel-vs-oracle");
+        let kr = kernel_backend.process_routed(&batch.merged_df, &batch.groups).unwrap();
+        let or = oracle_backend.process_routed(&batch.merged_df, &batch.groups).unwrap();
+        assert_eq!(kr.len(), or.len(), "routed group count");
+        for (gi, (kg, og)) in kr.iter().zip(or.iter()).enumerate() {
+            assert_bit_identical_lists(kg, og, &format!("routed group {gi} kernel-vs-oracle"));
+        }
+    }
+    println!("differential pin: kernel program == eval_node oracle, bit for bit\n");
+
+    // ---- throughput: kernel program vs oracle, routed + plain ---------
+    let mut idx = 0usize;
+    let kernel_routed_stats = bencher.run("kernel routed", || {
+        let b = &batches[idx % batches.len()];
+        idx += 1;
+        kamae::util::bench::black_box(
+            kernel_backend.process_routed(&b.merged_df, &b.groups).unwrap(),
+        );
+    });
+    let mut idx = 0usize;
+    let oracle_routed_stats = bencher.run("oracle routed", || {
+        let b = &batches[idx % batches.len()];
+        idx += 1;
+        kamae::util::bench::black_box(
+            oracle_backend.process_routed(&b.merged_df, &b.groups).unwrap(),
+        );
+    });
+    let mut idx = 0usize;
+    let kernel_process_stats = bencher.run("kernel process", || {
+        let b = &batches[idx % batches.len()];
+        idx += 1;
+        kamae::util::bench::black_box(kernel_backend.process(&b.merged_df).unwrap());
+    });
+    let mut idx = 0usize;
+    let oracle_process_stats = bencher.run("oracle process", || {
+        let b = &batches[idx % batches.len()];
+        idx += 1;
+        kamae::util::bench::black_box(oracle_backend.process(&b.merged_df).unwrap());
+    });
+
+    let rps = |st: &kamae::util::bench::Stats| st.throughput(REQUESTS_PER_BATCH as f64);
+    let kernel_routed_rps = rps(&kernel_routed_stats);
+    let oracle_routed_rps = rps(&oracle_routed_stats);
+    let kernel_process_rps = rps(&kernel_process_stats);
+    let oracle_process_rps = rps(&oracle_process_stats);
+
+    let mut table = Table::new(&["path", "mean/batch", "p99/batch", "throughput"]);
+    for (label, st, r) in [
+        ("kernel routed", &kernel_routed_stats, kernel_routed_rps),
+        ("oracle routed", &oracle_routed_stats, oracle_routed_rps),
+        ("kernel process", &kernel_process_stats, kernel_process_rps),
+        ("oracle process", &oracle_process_stats, oracle_process_rps),
+    ] {
+        table.row(&[
+            label.into(),
+            fmt_ns(st.mean_ns),
+            fmt_ns(st.p99_ns),
+            format!("{r:.0} req/s"),
+        ]);
+    }
+    table.print();
+    let routed_speedup = kernel_routed_rps / oracle_routed_rps;
+    let process_speedup = kernel_process_rps / oracle_process_rps;
+    println!(
+        "\nkernel vs oracle: routed {routed_speedup:.2}x   process {process_speedup:.2}x\n"
+    );
+
+    // ---- trajectory + gate --------------------------------------------
+    let mut rec = Json::object();
+    rec.set("spec", "ltr+ltr_lite");
+    rec.set("mode", "kernel-program-throughput");
+    rec.set("requests_per_batch", REQUESTS_PER_BATCH);
+    rec.set("rows_per_request", ROWS_PER_REQUEST);
+    rec.set("kernel_routed_rps", kernel_routed_rps);
+    rec.set("oracle_routed_rps", oracle_routed_rps);
+    rec.set("kernel_process_rps", kernel_process_rps);
+    rec.set("oracle_process_rps", oracle_process_rps);
+    rec.set("routed_speedup", routed_speedup);
+    rec.set("process_speedup", process_speedup);
+    let path = append_run(
+        "kernel_program",
+        &[("quick", Json::Bool(quick))],
+        vec![rec],
+    )
+    .expect("bench trajectory");
+    println!("appended run to {}", path.display());
+
+    let mut gate_failures = Vec::new();
+    if routed_speedup < MIN_SPEEDUP {
+        gate_failures.push(format!(
+            "kernel routed {kernel_routed_rps:.0} req/s is only {routed_speedup:.2}x the \
+             oracle's {oracle_routed_rps:.0} req/s (gate: >= {MIN_SPEEDUP}x)"
+        ));
+    }
+    if gate {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        if !gate_failures.is_empty() {
+            std::process::exit(1);
+        }
+    } else {
+        for f in &gate_failures {
+            eprintln!("warning (ungated): {f}");
+        }
+    }
+}

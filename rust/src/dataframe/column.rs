@@ -470,6 +470,31 @@ impl Column {
     }
 }
 
+/// Row-wise union of several optional null masks (`true` = null): the
+/// canonical mask-propagation rule for columnar kernels — a derived row
+/// is null when ANY contributing row was. `None` entries contribute
+/// nothing; returns `None` when no input carries a mask (so mask-free
+/// pipelines stay allocation-free). Masks of different lengths fold by
+/// index (shorter masks simply stop contributing), which matches
+/// broadcast-style kernels where one operand is a per-row scalar lane.
+pub fn union_null_masks(masks: &[Option<&[bool]>]) -> Option<Vec<bool>> {
+    let mut out: Option<Vec<bool>> = None;
+    for m in masks.iter().flatten() {
+        match &mut out {
+            None => out = Some(m.to_vec()),
+            Some(acc) => {
+                if m.len() > acc.len() {
+                    acc.resize(m.len(), false);
+                }
+                for (a, &b) in acc.iter_mut().zip(m.iter()) {
+                    *a |= b;
+                }
+            }
+        }
+    }
+    out
+}
+
 fn slice_list<T: Clone>(l: &ListColumn<T>, start: usize, end: usize) -> ListColumn<T> {
     let v_start = l.offsets[start] as usize;
     let v_end = l.offsets[end] as usize;
@@ -549,5 +574,25 @@ mod tests {
         let c = Column::from_str_opt(vec![Some("x".into()), None]);
         assert_eq!(c.value(0), Value::Str("x".into()));
         assert_eq!(c.value(1), Value::Null);
+    }
+
+    #[test]
+    fn union_null_masks_folds_row_wise() {
+        // no masks at all -> None (mask-free stays allocation-free)
+        assert_eq!(union_null_masks(&[None, None]), None);
+        let a = vec![true, false, false];
+        let b = vec![false, true, false];
+        assert_eq!(
+            union_null_masks(&[Some(&a), None, Some(&b)]),
+            Some(vec![true, true, false])
+        );
+        // single mask passes through unchanged
+        assert_eq!(union_null_masks(&[Some(&a)]), Some(a.clone()));
+        // shorter masks stop contributing past their length
+        let short = vec![true];
+        assert_eq!(
+            union_null_masks(&[Some(&a), Some(&short)]),
+            Some(vec![true, false, false])
+        );
     }
 }

@@ -12,7 +12,7 @@ mod frame;
 mod io;
 mod value;
 
-pub use column::{Column, DType, ListColumn};
+pub use column::{union_null_masks, Column, DType, ListColumn};
 pub use frame::{DataFrame, Field, Schema};
 pub use io::{
     dataframe_from_json_rows, infer_jsonl_schema, read_csv, read_jsonl, write_csv, write_jsonl,

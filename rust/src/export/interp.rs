@@ -13,6 +13,16 @@
 //!    interpreter and the compiled graph (experiment C3),
 //! 3. the **parity oracle**: `run` output must match the compiled
 //!    graph's output bit-for-bit on I64 and to f32 rounding on floats.
+//!
+//! Since the kernel-program rewrite, the interpreter's hot path is the
+//! compiled [`super::kernel::KernelProgram`] built once at construction:
+//! typed kernels over dense slot-indexed buffers, no per-batch attr
+//! parsing or env `HashMap`. The `eval_node` path in this file is kept
+//! verbatim as the **differential oracle** ([`SpecInterpreter::new_oracle`])
+//! — every kernel is pinned bit-identical to it by tests, properties and
+//! the `benches/kernel_program.rs` gate. Specs the kernel compiler does
+//! not understand silently fall back to the oracle path, preserving
+//! request-time behaviour exactly.
 
 use std::collections::HashMap;
 
@@ -22,6 +32,7 @@ use crate::ops;
 use crate::runtime::{Tensor, TensorData};
 use crate::util::json::Json;
 
+use super::kernel::KernelProgram;
 use super::spec::{Cone, GraphSpec, SpecDType, SpecNode};
 
 /// Flat graph-side value: rows × width buffer of f64 or i64.
@@ -197,10 +208,30 @@ pub struct SpecInterpreter {
     /// Ancestor cones per requested output subset — pre-warmed per
     /// variant, lock-free on the routed serving path.
     cones: ConeCache,
+    /// The spec compiled to columnar kernels over a slot-indexed buffer
+    /// arena ([`KernelProgram`]) — the hot path for `run` /
+    /// `run_routed`. `None` when the spec has a shape the kernel
+    /// compiler does not handle (or for [`Self::new_oracle`]); those
+    /// specs serve through the original `eval_node` oracle unchanged.
+    program: Option<KernelProgram>,
 }
 
 impl SpecInterpreter {
     pub fn new(spec: GraphSpec) -> SpecInterpreter {
+        let mut interp = SpecInterpreter::new_oracle(spec);
+        // best-effort: a compile failure (unknown op, malformed attrs, a
+        // regex that does not compile, ...) leaves the oracle path in
+        // charge, so construction stays infallible and request-time
+        // error behaviour is preserved exactly
+        interp.program = KernelProgram::compile(&interp.spec).ok();
+        interp
+    }
+
+    /// Construct WITHOUT compiling a kernel program: every request runs
+    /// through the original `eval_node` path. This is the differential
+    /// baseline the kernel path is pinned against (tests, properties,
+    /// `benches/kernel_program.rs`).
+    pub fn new_oracle(spec: GraphSpec) -> SpecInterpreter {
         let referenced = spec
             .nodes
             .iter()
@@ -210,7 +241,13 @@ impl SpecInterpreter {
             .collect();
         let regexes = RegexCache::for_spec(&spec);
         let cones = ConeCache::for_spec(&spec);
-        SpecInterpreter { spec, referenced, regexes, cones }
+        SpecInterpreter { spec, referenced, regexes, cones, program: None }
+    }
+
+    /// Whether this interpreter serves through a compiled kernel program
+    /// (false = `eval_node` oracle, by fallback or by `new_oracle`).
+    pub fn is_compiled(&self) -> bool {
+        self.program.is_some()
     }
 
     /// Memoised ancestor cone for one requested output subset:
@@ -241,8 +278,14 @@ impl SpecInterpreter {
     /// tensors (the serving front-end for the compiled path).
     pub fn run_ingress(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
         let mut df = df.clone();
-        for node in &self.spec.ingress {
-            apply_ingress(node, &mut df, &self.regexes)?;
+        if let Some(p) = &self.program {
+            // pre-parsed ingress kernels (same column ops, no per-batch
+            // attr lookups)
+            p.apply_ingress(&mut df)?;
+        } else {
+            for node in &self.spec.ingress {
+                apply_ingress(node, &mut df, &self.regexes)?;
+            }
         }
         let batch = df.num_rows();
         self.spec
@@ -275,7 +318,14 @@ impl SpecInterpreter {
 
     /// Full interpretation: ingress + graph sections. Output order and
     /// dtypes match the compiled artifact exactly.
+    ///
+    /// Serves through the compiled kernel program when one exists; the
+    /// two paths are bit-identical (pinned differentially), so callers
+    /// never observe which one ran.
     pub fn run(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        if let Some(p) = &self.program {
+            return p.run(df);
+        }
         let mut df = df.clone();
         for node in &self.spec.ingress {
             apply_ingress(node, &mut df, &self.regexes)?;
@@ -401,6 +451,14 @@ impl SpecInterpreter {
             }
         }
 
+        // compiled hot path: the kernel program executes the same
+        // per-cone sub-program shape (shared nodes once over the full
+        // batch, exclusive nodes on their group's rows) over slot
+        // arenas instead of name envs — bit-identical by construction
+        if let Some(p) = &self.program {
+            return p.run_routed(df, groups, &ingress_masks, &input_masks, &node_masks);
+        }
+
         // ---- ingress, shared scope: nodes ≥2 groups need run over the
         // full batch first (their inputs are at least as shared — a
         // consumer's cone membership implies its producers'), then each
@@ -519,6 +577,11 @@ impl SpecInterpreter {
     /// materialisation, env round trip) — that is exactly the overhead
     /// the registry cost model charges as `NODE_OVERHEAD`, so measured
     /// and estimated costs describe the same quantity.
+    ///
+    /// Profiling deliberately stays on the `eval_node` oracle path even
+    /// when a kernel program is compiled: the cost model describes (and
+    /// is calibrated against) per-node env evaluation, and the kernel
+    /// program has no per-node seam to time in isolation.
     pub fn profile(&self, df: &DataFrame, repeats: usize) -> Result<Vec<NodeTiming>> {
         let repeats = repeats.max(1);
         let rows = df.num_rows();
@@ -678,8 +741,10 @@ fn ingress_op_column(op: &str, a: &Json, cols: &[&Column], regexes: &RegexCache)
 // ---------------------------------------------------------------------------
 // fused ingress chains (optim::passes::IngressFuse)
 
-/// One per-value step of the fused string fast path.
-enum StrStep {
+/// One per-value step of the fused string fast path (shared with the
+/// kernel-program ingress compiler, which parses the chain once at
+/// backend load instead of per batch).
+pub(super) enum StrStep {
     Trim,
     Case(ops::string_ops::CaseMode),
     Replace(String, String),
@@ -707,9 +772,18 @@ fn run_fused_ingress(a: &Json, input: &Column, regexes: &RegexCache) -> Result<C
 /// Single-walk fast path; `None` when the chain or input shape doesn't
 /// qualify (the caller falls back to step replay).
 fn fused_string_walk(steps: &[Json], input: &Column) -> Result<Option<Column>> {
-    use crate::dataframe::ListColumn;
-    use ops::string_ops as so;
+    Ok(match parse_fused_chain(steps)? {
+        Some((chain, hash_tail)) => run_fused_walk(&chain, hash_tail, input),
+        None => None,
+    })
+}
 
+/// Parse a fused-ingress step list into the per-value walk chain, once.
+/// `None` when the chain doesn't qualify for the single-walk path
+/// (replay handles it). Shared with the kernel-program compiler, which
+/// hoists this parse to backend-load time.
+pub(super) fn parse_fused_chain(steps: &[Json]) -> Result<Option<(Vec<StrStep>, bool)>> {
+    use ops::string_ops as so;
     let mut chain: Vec<StrStep> = Vec::new();
     let mut hash_tail = false;
     for (i, s) in steps.iter().enumerate() {
@@ -735,9 +809,17 @@ fn fused_string_walk(steps: &[Json], input: &Column) -> Result<Option<Column>> {
             _ => return Ok(None),
         }
     }
+    Ok(Some((chain, hash_tail)))
+}
+
+/// Apply a parsed fused chain as one walk over the column. `None` when
+/// the input column shape doesn't qualify (caller replays step by step).
+pub(super) fn run_fused_walk(chain: &[StrStep], hash_tail: bool, input: &Column) -> Option<Column> {
+    use crate::dataframe::ListColumn;
+    use ops::string_ops as so;
     let apply = |s: &str| -> String {
         let mut cur = s.to_string();
-        for step in &chain {
+        for step in chain {
             cur = match step {
                 StrStep::Trim => cur.trim().to_string(),
                 StrStep::Case(mode) => so::case_value(&cur, *mode),
@@ -747,7 +829,7 @@ fn fused_string_walk(steps: &[Json], input: &Column) -> Result<Option<Column>> {
         }
         cur
     };
-    Ok(match input {
+    match input {
         Column::Str(v, nulls) => Some(if hash_tail {
             Column::I64(
                 v.iter().map(|s| ops::hash::fnv1a64(&apply(s))).collect(),
@@ -768,7 +850,7 @@ fn fused_string_walk(steps: &[Json], input: &Column) -> Result<Option<Column>> {
             })
         }),
         _ => None,
-    })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -809,7 +891,7 @@ fn column_to_gval(col: &Column) -> Result<GVal> {
     })
 }
 
-fn fixed_width(offsets: &[u32], what: &str) -> Result<usize> {
+pub(super) fn fixed_width(offsets: &[u32], what: &str) -> Result<usize> {
     if offsets.len() < 2 {
         return Ok(0);
     }
@@ -824,14 +906,14 @@ fn fixed_width(offsets: &[u32], what: &str) -> Result<usize> {
     Ok(w)
 }
 
-fn attr_f64_array(a: &Json, key: &str) -> Result<Vec<f64>> {
+pub(super) fn attr_f64_array(a: &Json, key: &str) -> Result<Vec<f64>> {
     a.req_array(key)?
         .iter()
         .map(|v| v.as_f64().ok_or_else(|| KamaeError::Serde(format!("{key} entry"))))
         .collect()
 }
 
-fn attr_i64_array(a: &Json, key: &str) -> Result<Vec<i64>> {
+pub(super) fn attr_i64_array(a: &Json, key: &str) -> Result<Vec<i64>> {
     a.req_array(key)?
         .iter()
         .map(|v| v.as_i64().ok_or_else(|| KamaeError::Serde(format!("{key} entry"))))

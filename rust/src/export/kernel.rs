@@ -1,0 +1,1597 @@
+//! Columnar kernel programs — the compiled form of a [`GraphSpec`].
+//!
+//! [`KernelProgram::compile`] runs ONCE at backend-load time and turns a
+//! spec into a topologically ordered `Vec<Kernel>` of typed enum
+//! variants with every attribute pre-parsed (splits materialised,
+//! regexes compiled, affine step tables built, vocab arrays decoded)
+//! and every input/output resolved to a dense **slot index** into a
+//! flat buffer arena. The per-batch hot path then does no op-name
+//! string matching, no attr JSON lookups and no `HashMap` env walk —
+//! each kernel is a batch-at-a-time columnar loop over dense
+//! `Vec<f64>` / `Vec<i64>` buffers ([`KVal`]) written as iterator
+//! chains the compiler can auto-vectorize.
+//!
+//! **Bit-exactness contract:** every kernel body replicates the
+//! matching `eval_node` / `eval_multi` arm in `interp.rs` expression
+//! for expression — including the `as f32 as f64` intermediate
+//! rounding the compiled graphs use — so the kernel path, the
+//! interpreted oracle and the compiled artifact agree bit for bit
+//! (pinned by the differential property in `tests/properties.rs` and
+//! the `benches/kernel_program.rs` gate).
+//!
+//! **Fallback contract:** compilation is best-effort. Any spec shape
+//! the compiler does not understand (unknown op, malformed attrs, a
+//! regex that fails to compile, duplicate bindings) makes
+//! `compile` return an error and [`super::SpecInterpreter`] silently
+//! keeps `program: None`, serving through the original `eval_node`
+//! oracle — request-time behaviour (including error messages) is
+//! preserved exactly.
+//!
+//! **Null bitmask:** graph values carry an explicit per-row null mask
+//! captured from the input [`Column`]s (the shape
+//! `dataframe/column.rs` already uses). Masks are advisory metadata —
+//! values flow exactly as in the oracle, which ignores engine nulls —
+//! propagated as the union of the argument masks; `impute` is the one
+//! op that *defines* missing values, so it clears the mask.
+
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+use crate::dataframe::{union_null_masks, Column, DataFrame, DType};
+use crate::error::{KamaeError, Result};
+use crate::ops;
+use crate::ops::logical::CmpOp;
+use crate::ops::math::{BinOp, UnaryOp};
+use crate::runtime::{Tensor, TensorData};
+use crate::util::json::Json;
+
+use super::interp::{
+    attr_f64_array, attr_i64_array, fixed_width, parse_fused_chain, run_fused_walk, StrStep,
+};
+use super::spec::{GraphSpec, SpecNode};
+use super::RouteGroup;
+
+// ---------------------------------------------------------------------------
+// values
+
+/// Dense columnar buffer: the kernel-program analogue of `GVal`.
+#[derive(Debug, Clone)]
+pub(crate) enum KBuf {
+    F(Vec<f64>),
+    I(Vec<i64>),
+}
+
+/// One graph value in the arena: a flat rows × width buffer plus an
+/// explicit per-row null mask (advisory — see module docs).
+#[derive(Debug, Clone)]
+pub(crate) struct KVal {
+    buf: KBuf,
+    width: Option<usize>,
+    nulls: Option<Vec<bool>>,
+}
+
+impl KVal {
+    fn rows(&self) -> usize {
+        let w = self.width.unwrap_or(1);
+        match &self.buf {
+            KBuf::F(v) => v.len() / w,
+            KBuf::I(v) => v.len() / w,
+        }
+    }
+
+    /// Float view: borrows when already `F`, converts like `GVal::as_f`
+    /// otherwise (`i64 as f64`).
+    fn as_f(&self) -> Cow<'_, [f64]> {
+        match &self.buf {
+            KBuf::F(v) => Cow::Borrowed(v.as_slice()),
+            KBuf::I(v) => Cow::Owned(v.iter().map(|&x| x as f64).collect()),
+        }
+    }
+
+    /// Int view: borrows when already `I`, converts like `GVal::as_i`
+    /// otherwise (`f64 as i64`).
+    fn as_i(&self) -> Cow<'_, [i64]> {
+        match &self.buf {
+            KBuf::I(v) => Cow::Borrowed(v.as_slice()),
+            KBuf::F(v) => Cow::Owned(v.iter().map(|&x| x as i64).collect()),
+        }
+    }
+
+    /// Copy out a contiguous row range — bit-identical to
+    /// `GVal::slice_rows`; the null mask slices row-wise.
+    fn slice_rows(&self, start: usize, len: usize) -> KVal {
+        let w = self.width.unwrap_or(1);
+        let buf = match &self.buf {
+            KBuf::F(v) => KBuf::F(v[start * w..(start + len) * w].to_vec()),
+            KBuf::I(v) => KBuf::I(v[start * w..(start + len) * w].to_vec()),
+        };
+        KVal {
+            buf,
+            width: self.width,
+            nulls: self.nulls.as_ref().map(|n| n[start..start + len].to_vec()),
+        }
+    }
+
+    /// Marshal to a serving tensor — same dtype/shape rules as
+    /// `GVal::to_tensor` (floats leave as f32; the mask is dropped).
+    fn to_tensor(&self, batch: usize) -> Tensor {
+        let shape = match self.width {
+            Some(w) => vec![batch, w],
+            None => vec![batch],
+        };
+        match &self.buf {
+            KBuf::F(v) => Tensor {
+                data: TensorData::F32(v.iter().map(|&x| x as f32).collect()),
+                shape,
+            },
+            KBuf::I(v) => Tensor { data: TensorData::I64(v.clone()), shape },
+        }
+    }
+
+    /// Bind a request column — `column_to_gval` semantics plus null
+    /// capture (list columns have no mask at the column layer).
+    fn from_column(col: &Column) -> Result<KVal> {
+        let scalar = |buf: KBuf, nulls: &Option<Vec<bool>>| KVal {
+            buf,
+            width: None,
+            nulls: nulls.clone(),
+        };
+        let list = |buf: KBuf, w: usize| KVal { buf, width: Some(w), nulls: None };
+        Ok(match col {
+            Column::Bool(v, n) => scalar(KBuf::I(v.iter().map(|&b| b as i64).collect()), n),
+            Column::I32(v, n) => scalar(KBuf::I(v.iter().map(|&x| x as i64).collect()), n),
+            Column::I64(v, n) => scalar(KBuf::I(v.clone()), n),
+            Column::F32(v, n) => scalar(KBuf::F(v.iter().map(|&x| x as f64).collect()), n),
+            Column::F64(v, n) => scalar(KBuf::F(v.clone()), n),
+            Column::ListBool(l) => list(
+                KBuf::I(l.values.iter().map(|&b| b as i64).collect()),
+                fixed_width(&l.offsets, "bool list")?,
+            ),
+            Column::ListI32(l) => list(
+                KBuf::I(l.values.iter().map(|&x| x as i64).collect()),
+                fixed_width(&l.offsets, "int32 list")?,
+            ),
+            Column::ListI64(l) => list(
+                KBuf::I(l.values.clone()),
+                fixed_width(&l.offsets, "int64 list")?,
+            ),
+            Column::ListF32(l) => list(
+                KBuf::F(l.values.iter().map(|&x| x as f64).collect()),
+                fixed_width(&l.offsets, "float32 list")?,
+            ),
+            Column::ListF64(l) => list(
+                KBuf::F(l.values.clone()),
+                fixed_width(&l.offsets, "float64 list")?,
+            ),
+            Column::Str(..) | Column::ListStr(_) => {
+                return Err(KamaeError::Unsupported(
+                    "string column crossing into graph section (missing hash64?)".into(),
+                ))
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ingress kernels
+
+/// One pre-parsed ingress op. Bodies call the exact engine kernels
+/// `ingress_op_column` dispatches to — only the per-batch string match
+/// and attr parsing are gone; regexes are compiled at program build.
+enum IngressStep {
+    Hash64,
+    Case(ops::string_ops::CaseMode),
+    Trim,
+    Substring { start: usize, len: usize },
+    Replace { from: String, to: String },
+    RegexReplace { re: ops::regex::Regex, rep: String },
+    RegexExtract { re: ops::regex::Regex, group: usize },
+    Concat { separator: String },
+    SplitPad { separator: String, list_length: usize, default: String },
+    Join { separator: String },
+    StringMatch { needle: String, mode: ops::string_ops::MatchMode },
+    StrLen,
+    DateToDays,
+    TimestampToSeconds,
+    ElementAt { index: i64 },
+    SliceList { start: usize, len: usize },
+    PadList { len: usize, default: String },
+    ToString,
+    ParseNumber,
+    /// Fused chain: the per-value string walk when the chain qualifies
+    /// (parsed once), else step replay over pre-parsed sub-steps.
+    Fused { walk: Option<(Vec<StrStep>, bool)>, replay: Vec<IngressStep> },
+}
+
+impl IngressStep {
+    fn compile(op: &str, a: &Json) -> Result<IngressStep> {
+        use ops::string_ops::{CaseMode, MatchMode};
+        Ok(match op {
+            "hash64" => IngressStep::Hash64,
+            "case" => IngressStep::Case(match a.req_str("mode")? {
+                "upper" => CaseMode::Upper,
+                "lower" => CaseMode::Lower,
+                _ => CaseMode::Title,
+            }),
+            "trim" => IngressStep::Trim,
+            "substring" => IngressStep::Substring {
+                start: a.req_i64("start")? as usize,
+                len: a.req_i64("len")? as usize,
+            },
+            "replace" => IngressStep::Replace {
+                from: a.req_str("from")?.to_string(),
+                to: a.req_str("to")?.to_string(),
+            },
+            "regex_replace" => IngressStep::RegexReplace {
+                re: ops::regex::Regex::new(a.req_str("pattern")?)?,
+                rep: a.req_str("rep")?.to_string(),
+            },
+            "regex_extract" => IngressStep::RegexExtract {
+                re: ops::regex::Regex::new(a.req_str("pattern")?)?,
+                group: a.req_i64("group")? as usize,
+            },
+            "concat" => IngressStep::Concat {
+                separator: a.req_str("separator")?.to_string(),
+            },
+            "split_pad" => IngressStep::SplitPad {
+                separator: a.req_str("separator")?.to_string(),
+                list_length: a.req_i64("list_length")? as usize,
+                default: a.req_str("default")?.to_string(),
+            },
+            "join" => IngressStep::Join {
+                separator: a.req_str("separator")?.to_string(),
+            },
+            "string_match" => IngressStep::StringMatch {
+                needle: a.req_str("needle")?.to_string(),
+                mode: match a.req_str("mode")? {
+                    "starts_with" => MatchMode::StartsWith,
+                    "ends_with" => MatchMode::EndsWith,
+                    _ => MatchMode::Contains,
+                },
+            },
+            "str_len" => IngressStep::StrLen,
+            "date_to_days" => IngressStep::DateToDays,
+            "timestamp_to_seconds" => IngressStep::TimestampToSeconds,
+            "element_at" => IngressStep::ElementAt { index: a.req_i64("index")? },
+            "slice_list" => IngressStep::SliceList {
+                start: a.req_i64("start")? as usize,
+                len: a.req_i64("len")? as usize,
+            },
+            "pad_list" => IngressStep::PadList {
+                len: a.req_i64("len")? as usize,
+                default: a.req_str("default")?.to_string(),
+            },
+            "to_string" => IngressStep::ToString,
+            "parse_number" => IngressStep::ParseNumber,
+            "fused_ingress" => {
+                let steps = a.req_array("steps")?;
+                let walk = parse_fused_chain(steps)?;
+                let replay = steps
+                    .iter()
+                    .map(|s| IngressStep::compile(s.req_str("op")?, s))
+                    .collect::<Result<Vec<_>>>()?;
+                IngressStep::Fused { walk, replay }
+            }
+            other => return Err(KamaeError::Unsupported(format!("ingress op: {other}"))),
+        })
+    }
+
+    fn run(&self, cols: &[&Column]) -> Result<Column> {
+        use ops::string_ops as so;
+        let input = |i: usize| -> Result<&Column> {
+            cols.get(i).copied().ok_or_else(|| {
+                KamaeError::InvalidConfig(format!("ingress kernel: missing input {i}"))
+            })
+        };
+        Ok(match self {
+            IngressStep::Hash64 => ops::hash::hash64_column(input(0)?)?,
+            IngressStep::Case(mode) => so::change_case(input(0)?, *mode)?,
+            IngressStep::Trim => so::trim(input(0)?)?,
+            IngressStep::Substring { start, len } => so::substring(input(0)?, *start, *len)?,
+            IngressStep::Replace { from, to } => so::replace_literal(input(0)?, from, to)?,
+            IngressStep::RegexReplace { re, rep } => {
+                ops::regex::regex_replace(input(0)?, re, rep)?
+            }
+            IngressStep::RegexExtract { re, group } => {
+                ops::regex::regex_extract(input(0)?, re, *group)?
+            }
+            IngressStep::Concat { separator } => so::concat_cols(cols, separator)?,
+            IngressStep::SplitPad { separator, list_length, default } => {
+                let split = so::split(input(0)?, separator)?;
+                so::pad_list(&split, *list_length, default)?
+            }
+            IngressStep::Join { separator } => {
+                let l = input(0)?.as_list_str()?;
+                Column::from_str(l.rows().map(|r| r.join(separator)).collect::<Vec<String>>())
+            }
+            IngressStep::StringMatch { needle, mode } => {
+                so::string_match(input(0)?, needle, *mode)?
+            }
+            IngressStep::StrLen => so::str_len(input(0)?)?,
+            IngressStep::DateToDays => ops::date::date_to_days(input(0)?)?,
+            IngressStep::TimestampToSeconds => ops::date::timestamp_to_seconds(input(0)?)?,
+            IngressStep::ElementAt { index } => ops::array::element_at(input(0)?, *index)?,
+            IngressStep::SliceList { start, len } => {
+                ops::array::slice_list(input(0)?, *start, *len)?
+            }
+            IngressStep::PadList { len, default } => so::pad_list(input(0)?, *len, default)?,
+            IngressStep::ToString => ops::cast::cast(input(0)?, &DType::Str)?,
+            IngressStep::ParseNumber => ops::cast::cast(input(0)?, &DType::F64)?,
+            IngressStep::Fused { walk, replay } => {
+                if let Some((chain, hash_tail)) = walk {
+                    if let Some(out) = run_fused_walk(chain, *hash_tail, input(0)?) {
+                        return Ok(out);
+                    }
+                }
+                let mut col = input(0)?.clone();
+                for s in replay {
+                    col = s.run(&[&col])?;
+                }
+                col
+            }
+        })
+    }
+}
+
+/// One ingress node with its inputs and output column id resolved.
+struct IngressKernel {
+    id: String,
+    inputs: Vec<String>,
+    step: IngressStep,
+}
+
+impl IngressKernel {
+    fn compile(node: &SpecNode) -> Result<IngressKernel> {
+        Ok(IngressKernel {
+            id: node.id.clone(),
+            inputs: node.inputs.clone(),
+            step: IngressStep::compile(&node.op, &node.attrs)?,
+        })
+    }
+
+    fn run(&self, df: &mut DataFrame) -> Result<()> {
+        let cols: Vec<&Column> = self
+            .inputs
+            .iter()
+            .map(|n| df.column(n))
+            .collect::<Result<_>>()?;
+        let out = self.step.run(&cols)?;
+        df.set_column(self.id.clone(), out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph kernels
+
+#[derive(Debug, Clone, Copy)]
+enum Agg {
+    Sum,
+    Min,
+    Max,
+    Mean,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum BoolKind {
+    And,
+    Or,
+    Xor,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ListAggKind {
+    Sum,
+    Mean,
+    Min,
+    Max,
+}
+
+/// One pre-parsed lane of a multi-output `multi_bucketize` node.
+enum LaneStep {
+    Bucket { remap: Vec<i64>, width: Option<usize> },
+    Compare { op: CmpOp, value: f64, width: Option<usize> },
+    BucketCompare { remap: Vec<i64>, op: CmpOp, value: f64, width: Option<usize> },
+}
+
+/// Typed, fully pre-parsed kernel body. Every arm mirrors the matching
+/// `eval_node` / `eval_multi` arm expression for expression.
+enum Step {
+    Identity,
+    ToF32,
+    ToI64,
+    Unary(UnaryOp),
+    Affine(Vec<UnaryOp>),
+    Binary(BinOp),
+    Bucketize(Vec<f64>),
+    /// Single-output `multi_bucketize` (PR 2 ladder fusion).
+    BucketCompare { splits: Vec<f64>, op: CmpOp, value: f64 },
+    /// Multi-output `multi_bucketize` with named lanes (PR 3).
+    Lanes { splits: Vec<f64>, lanes: Vec<LaneStep> },
+    ColumnsAgg(Agg),
+    DatePart(ops::date::DatePart),
+    SubI64,
+    AddScalarI64(i64),
+    FloordivScalarI64(i64),
+    Compare(CmpOp),
+    CompareScalar { op: CmpOp, value: f64 },
+    EqHash(i64),
+    BoolOp(BoolKind),
+    Not,
+    Select,
+    SelectCmp { op: CmpOp, value: f64 },
+    IsNan,
+    Assemble,
+    VectorAt(usize),
+    ListAgg(ListAggKind),
+    ListLen,
+    ElementAt(i64),
+    SliceList { start: usize, len: usize },
+    HashBucket(i64),
+    BloomEncode { k: usize, bins: i64 },
+    VocabLookup {
+        hashes: Vec<i64>,
+        ranks: Vec<i64>,
+        num_oov: i64,
+        base: i64,
+        mask_hash: Option<i64>,
+    },
+    OneHot { hashes: Vec<i64>, ranks: Vec<i64>, num_oov: usize, drop_unseen: bool },
+    ScaleVec { scale: Vec<f64>, shift: Vec<f64> },
+    Impute { fill: f64, mask: Option<f64> },
+    Cosine,
+    Haversine,
+}
+
+impl Step {
+    /// Parse one single-output node — same dispatch order and attr keys
+    /// as `eval_node`, so anything it rejects the oracle would reject
+    /// (or the oracle handles and we must too).
+    fn compile(node: &SpecNode) -> Result<Step> {
+        let a = &node.attrs;
+        let unary_op: Option<UnaryOp> = match node.op.as_str() {
+            "log" => Some(UnaryOp::Log { base: a.opt_f64("base") }),
+            "log1p" => Some(UnaryOp::Log1p),
+            "exp" => Some(UnaryOp::Exp),
+            "sqrt" => Some(UnaryOp::Sqrt),
+            "abs" => Some(UnaryOp::Abs),
+            "neg" => Some(UnaryOp::Neg),
+            "reciprocal" => Some(UnaryOp::Reciprocal),
+            "round" => Some(UnaryOp::Round),
+            "floor" => Some(UnaryOp::Floor),
+            "ceil" => Some(UnaryOp::Ceil),
+            "sin" => Some(UnaryOp::Sin),
+            "cos" => Some(UnaryOp::Cos),
+            "tanh" => Some(UnaryOp::Tanh),
+            "sigmoid" => Some(UnaryOp::Sigmoid),
+            "clip" => Some(UnaryOp::Clip { min: a.opt_f64("min"), max: a.opt_f64("max") }),
+            "pow_scalar" => Some(UnaryOp::PowScalar { p: a.req_f64("p")? }),
+            "add_scalar" => Some(UnaryOp::AddScalar { c: a.req_f64("c")? }),
+            "sub_scalar" => Some(UnaryOp::SubScalar { c: a.req_f64("c")? }),
+            "mul_scalar" => Some(UnaryOp::MulScalar { c: a.req_f64("c")? }),
+            "div_scalar" => Some(UnaryOp::DivScalar { c: a.req_f64("c")? }),
+            "scale_shift" => Some(UnaryOp::ScaleShift {
+                scale: a.req_f64("scale")?,
+                shift: a.req_f64("shift")?,
+            }),
+            _ => None,
+        };
+        if let Some(op) = unary_op {
+            return Ok(Step::Unary(op));
+        }
+        if node.op == "affine" {
+            let steps: Vec<UnaryOp> = a
+                .req_array("steps")?
+                .iter()
+                .map(|s| {
+                    Ok(match s.req_str("op")? {
+                        "add_scalar" => UnaryOp::AddScalar { c: s.req_f64("c")? },
+                        "sub_scalar" => UnaryOp::SubScalar { c: s.req_f64("c")? },
+                        "mul_scalar" => UnaryOp::MulScalar { c: s.req_f64("c")? },
+                        "div_scalar" => UnaryOp::DivScalar { c: s.req_f64("c")? },
+                        "scale_shift" => UnaryOp::ScaleShift {
+                            scale: s.req_f64("scale")?,
+                            shift: s.req_f64("shift")?,
+                        },
+                        other => {
+                            return Err(KamaeError::Unsupported(format!("affine step: {other}")))
+                        }
+                    })
+                })
+                .collect::<Result<_>>()?;
+            return Ok(Step::Affine(steps));
+        }
+        if let Ok(op) = BinOp::from_name(&node.op) {
+            return Ok(Step::Binary(op));
+        }
+        Ok(match node.op.as_str() {
+            "identity" => Step::Identity,
+            "to_f32" => Step::ToF32,
+            "to_i64" => Step::ToI64,
+            "bucketize" => Step::Bucketize(attr_f64_array(a, "splits")?),
+            "columns_agg" => Step::ColumnsAgg(match a.req_str("agg")? {
+                "min" => Agg::Min,
+                "max" => Agg::Max,
+                "mean" => Agg::Mean,
+                _ => Agg::Sum,
+            }),
+            "date_part" => Step::DatePart(ops::date::DatePart::from_name(a.req_str("part")?)?),
+            "sub_i64" => Step::SubI64,
+            "add_scalar_i64" => Step::AddScalarI64(a.req_i64("c")?),
+            "floordiv_scalar_i64" => Step::FloordivScalarI64(a.req_i64("c")?),
+            "compare" => Step::Compare(CmpOp::from_name(a.req_str("op")?)?),
+            "compare_scalar" => Step::CompareScalar {
+                op: CmpOp::from_name(a.req_str("op")?)?,
+                value: a.req_f64("value")?,
+            },
+            "eq_hash" => Step::EqHash(a.req_i64("value_hash")?),
+            "bool_op" => Step::BoolOp(match a.req_str("op")? {
+                "and" => BoolKind::And,
+                "or" => BoolKind::Or,
+                _ => BoolKind::Xor,
+            }),
+            "not" => Step::Not,
+            "select" => Step::Select,
+            "select_cmp" => Step::SelectCmp {
+                op: CmpOp::from_name(a.req_str("op")?)?,
+                value: a.req_f64("value")?,
+            },
+            "multi_bucketize" => Step::BucketCompare {
+                splits: attr_f64_array(a, "splits")?,
+                op: CmpOp::from_name(a.req_str("op")?)?,
+                value: a.req_f64("value")?,
+            },
+            "is_nan" => Step::IsNan,
+            "assemble" => Step::Assemble,
+            "vector_at" => Step::VectorAt(a.req_i64("index")? as usize),
+            "list_sum" => Step::ListAgg(ListAggKind::Sum),
+            "list_mean" => Step::ListAgg(ListAggKind::Mean),
+            "list_min" => Step::ListAgg(ListAggKind::Min),
+            "list_max" => Step::ListAgg(ListAggKind::Max),
+            "list_len" => Step::ListLen,
+            "element_at" => Step::ElementAt(a.req_i64("index")?),
+            "slice_list" => Step::SliceList {
+                start: a.req_i64("start")? as usize,
+                len: a.req_i64("len")? as usize,
+            },
+            "hash_bucket" => Step::HashBucket(a.req_i64("num_bins")?),
+            "bloom_encode" => Step::BloomEncode {
+                k: a.req_i64("num_hashes")? as usize,
+                bins: a.req_i64("num_bins")?,
+            },
+            "vocab_lookup" => Step::VocabLookup {
+                hashes: attr_i64_array(a, "vocab_hashes")?,
+                ranks: attr_i64_array(a, "vocab_ranks")?,
+                num_oov: a.req_i64("num_oov")?,
+                base: a.req_i64("base")?,
+                mask_hash: a.opt_i64("mask_hash"),
+            },
+            "one_hot" => Step::OneHot {
+                hashes: attr_i64_array(a, "vocab_hashes")?,
+                ranks: attr_i64_array(a, "vocab_ranks")?,
+                num_oov: a.req_i64("num_oov")? as usize,
+                drop_unseen: a.opt_bool("drop_unseen").unwrap_or(false),
+            },
+            "scale_vec" => Step::ScaleVec {
+                scale: attr_f64_array(a, "scale")?,
+                shift: attr_f64_array(a, "shift")?,
+            },
+            "impute" => Step::Impute { fill: a.req_f64("fill")?, mask: a.opt_f64("mask_value") },
+            "cosine_similarity" => Step::Cosine,
+            "haversine" => Step::Haversine,
+            other => return Err(KamaeError::Unsupported(format!("graph op: {other}"))),
+        })
+    }
+
+    /// Parse a multi-output node (lanes declared) — `eval_multi` only
+    /// handles `multi_bucketize`; lane remap tables are validated here
+    /// so the hot path never re-checks them.
+    fn compile_lanes(node: &SpecNode) -> Result<Step> {
+        if node.op != "multi_bucketize" {
+            return Err(KamaeError::Unsupported(format!(
+                "multi-output graph op: {}",
+                node.op
+            )));
+        }
+        if node.inputs.is_empty() {
+            return Err(KamaeError::InvalidConfig(format!(
+                "multi-output node {} has no input",
+                node.id
+            )));
+        }
+        let splits = attr_f64_array(&node.attrs, "splits")?;
+        let lanes = node
+            .lanes
+            .iter()
+            .map(|lane| {
+                let a = &lane.attrs;
+                let remap_for = |a: &Json| -> Result<Vec<i64>> {
+                    let remap = attr_i64_array(a, "remap")?;
+                    if remap.len() != splits.len() + 1 {
+                        return Err(KamaeError::Serde(format!(
+                            "lane {}: remap table has {} entries for {} splits",
+                            lane.name,
+                            remap.len(),
+                            splits.len()
+                        )));
+                    }
+                    Ok(remap)
+                };
+                Ok(match a.req_str("kind")? {
+                    "bucket" => LaneStep::Bucket { remap: remap_for(a)?, width: lane.width },
+                    "compare" => LaneStep::Compare {
+                        op: CmpOp::from_name(a.req_str("op")?)?,
+                        value: a.req_f64("value")?,
+                        width: lane.width,
+                    },
+                    "bucket_compare" => LaneStep::BucketCompare {
+                        remap: remap_for(a)?,
+                        op: CmpOp::from_name(a.req_str("op")?)?,
+                        value: a.req_f64("value")?,
+                        width: lane.width,
+                    },
+                    other => {
+                        return Err(KamaeError::Unsupported(format!(
+                            "multi_bucketize lane kind: {other}"
+                        )))
+                    }
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Step::Lanes { splits, lanes })
+    }
+}
+
+/// One compiled graph node: argument and output slots plus the typed
+/// body. `node` indexes `spec.nodes` so routed cone bitmasks apply
+/// directly to the kernel list.
+struct Kernel {
+    node: usize,
+    args: Vec<usize>,
+    outs: Vec<usize>,
+    step: Step,
+}
+
+impl Kernel {
+    fn arg<'a>(&self, arena: &'a [Option<KVal>], i: usize) -> Result<&'a KVal> {
+        arena[self.args[i]].as_ref().ok_or_else(|| {
+            KamaeError::ColumnNotFound(format!("kernel slot {} (graph value)", self.args[i]))
+        })
+    }
+
+    /// Union of the argument row-masks (advisory null propagation).
+    fn arg_nulls(&self, arena: &[Option<KVal>]) -> Option<Vec<bool>> {
+        let masks: Vec<Option<&[bool]>> = self
+            .args
+            .iter()
+            .map(|&s| arena[s].as_ref().and_then(|v| v.nulls.as_deref()))
+            .collect();
+        union_null_masks(&masks)
+    }
+
+    fn run(&self, arena: &mut [Option<KVal>]) -> Result<()> {
+        if let Step::Lanes { .. } = self.step {
+            let vals = self.eval_lanes(arena)?;
+            for (&slot, v) in self.outs.iter().zip(vals) {
+                arena[slot] = Some(v);
+            }
+        } else {
+            let v = self.eval_single(arena)?;
+            arena[self.outs[0]] = Some(v);
+        }
+        Ok(())
+    }
+
+    /// Single-output body. Every arm is the matching `eval_node` arm
+    /// with attr parsing hoisted to compile time — the arithmetic
+    /// (including every `as f32 as f64` rounding) is verbatim.
+    fn eval_single(&self, arena: &[Option<KVal>]) -> Result<KVal> {
+        let nulls = self.arg_nulls(arena);
+        let f = |buf: Vec<f64>, width: Option<usize>, nulls: Option<Vec<bool>>| KVal {
+            buf: KBuf::F(buf),
+            width,
+            nulls,
+        };
+        let i = |buf: Vec<i64>, width: Option<usize>, nulls: Option<Vec<bool>>| KVal {
+            buf: KBuf::I(buf),
+            width,
+            nulls,
+        };
+        Ok(match &self.step {
+            Step::Lanes { .. } => unreachable!("lanes handled by eval_lanes"),
+            Step::Identity => self.arg(arena, 0)?.clone(),
+            Step::ToF32 => {
+                let x = self.arg(arena, 0)?;
+                f(x.as_f().into_owned(), x.width, nulls)
+            }
+            Step::ToI64 => {
+                let x = self.arg(arena, 0)?;
+                i(x.as_i().into_owned(), x.width, nulls)
+            }
+            Step::Unary(op) => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_f()
+                    .iter()
+                    .map(|&v| op.apply(v as f32 as f64) as f32 as f64)
+                    .collect();
+                f(data, x.width, nulls)
+            }
+            Step::Affine(steps) => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_f()
+                    .iter()
+                    .map(|&v| {
+                        let mut y = v;
+                        for op in steps {
+                            y = op.apply(y as f32 as f64) as f32 as f64;
+                        }
+                        y
+                    })
+                    .collect();
+                f(data, x.width, nulls)
+            }
+            Step::Binary(op) => {
+                let (x, y) = (self.arg(arena, 0)?, self.arg(arena, 1)?);
+                let (xv, yv) = (x.as_f(), y.as_f());
+                let w = x.width.or(y.width);
+                let data: Vec<f64> = match (x.width, y.width) {
+                    (Some(wx), None) => xv
+                        .iter()
+                        .enumerate()
+                        .map(|(k, &p)| {
+                            op.apply(p as f32 as f64, yv[k / wx] as f32 as f64) as f32 as f64
+                        })
+                        .collect(),
+                    (None, Some(wy)) => yv
+                        .iter()
+                        .enumerate()
+                        .map(|(k, &q)| {
+                            op.apply(xv[k / wy] as f32 as f64, q as f32 as f64) as f32 as f64
+                        })
+                        .collect(),
+                    _ => {
+                        if xv.len() != yv.len() {
+                            return Err(KamaeError::LengthMismatch {
+                                left: xv.len(),
+                                right: yv.len(),
+                                context: format!("graph op {}", op.spec_name()),
+                            });
+                        }
+                        xv.iter()
+                            .zip(yv.iter())
+                            .map(|(&p, &q)| op.apply(p as f32 as f64, q as f32 as f64) as f32 as f64)
+                            .collect()
+                    }
+                };
+                f(data, w, nulls)
+            }
+            Step::Bucketize(splits) => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_f()
+                    .iter()
+                    .map(|&v| splits.partition_point(|&s| s <= v) as i64)
+                    .collect();
+                i(data, x.width, nulls)
+            }
+            Step::BucketCompare { splits, op, value } => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_f()
+                    .iter()
+                    .map(|&v| {
+                        let bucket = splits.partition_point(|&s| s <= v) as i64;
+                        op.apply_f64(bucket as f64 as f32 as f64, *value as f32 as f64) as i64
+                    })
+                    .collect();
+                i(data, x.width, nulls)
+            }
+            Step::ColumnsAgg(agg) => {
+                let n = self.args.len() as f64;
+                let cols: Vec<Cow<[f64]>> = (0..self.args.len())
+                    .map(|k| Ok(self.arg(arena, k)?.as_f()))
+                    .collect::<Result<_>>()?;
+                let rows = cols[0].len();
+                let data = (0..rows)
+                    .map(|r| {
+                        let mut acc = cols[0][r];
+                        for c in cols.iter().skip(1) {
+                            acc = match agg {
+                                Agg::Min => acc.min(c[r]),
+                                Agg::Max => acc.max(c[r]),
+                                _ => acc + c[r],
+                            };
+                        }
+                        if matches!(agg, Agg::Mean) {
+                            acc / n
+                        } else {
+                            acc
+                        }
+                    })
+                    .collect();
+                f(data, None, nulls)
+            }
+            Step::DatePart(part) => {
+                let x = self.arg(arena, 0)?;
+                let data = x.as_i().iter().map(|&d| part.extract(d)).collect();
+                i(data, x.width, nulls)
+            }
+            Step::SubI64 => {
+                let (x, y) = (self.arg(arena, 0)?, self.arg(arena, 1)?);
+                let w = x.width;
+                let (xv, yv) = (x.as_i(), y.as_i());
+                let data = xv.iter().zip(yv.iter()).map(|(&p, &q)| p - q).collect();
+                i(data, w, nulls)
+            }
+            Step::AddScalarI64(c) => {
+                let x = self.arg(arena, 0)?;
+                i(x.as_i().iter().map(|&v| v + c).collect(), x.width, nulls)
+            }
+            Step::FloordivScalarI64(c) => {
+                let x = self.arg(arena, 0)?;
+                i(
+                    x.as_i().iter().map(|&v| v.div_euclid(*c)).collect(),
+                    x.width,
+                    nulls,
+                )
+            }
+            Step::Compare(op) => {
+                let (x, y) = (self.arg(arena, 0)?, self.arg(arena, 1)?);
+                let w = x.width;
+                let (xv, yv) = (x.as_f(), y.as_f());
+                let data = xv
+                    .iter()
+                    .zip(yv.iter())
+                    .map(|(&p, &q)| op.apply_f64(p as f32 as f64, q as f32 as f64) as i64)
+                    .collect();
+                i(data, w, nulls)
+            }
+            Step::CompareScalar { op, value } => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_f()
+                    .iter()
+                    .map(|&p| op.apply_f64(p as f32 as f64, *value as f32 as f64) as i64)
+                    .collect();
+                i(data, x.width, nulls)
+            }
+            Step::EqHash(h) => {
+                let x = self.arg(arena, 0)?;
+                i(
+                    x.as_i().iter().map(|&v| (v == *h) as i64).collect(),
+                    x.width,
+                    nulls,
+                )
+            }
+            Step::BoolOp(kind) => {
+                let (x, y) = (self.arg(arena, 0)?, self.arg(arena, 1)?);
+                let w = x.width;
+                let (xv, yv) = (x.as_i(), y.as_i());
+                let data = xv
+                    .iter()
+                    .zip(yv.iter())
+                    .map(|(&p, &q)| {
+                        let (p, q) = (p != 0, q != 0);
+                        (match kind {
+                            BoolKind::And => p && q,
+                            BoolKind::Or => p || q,
+                            BoolKind::Xor => p ^ q,
+                        }) as i64
+                    })
+                    .collect();
+                i(data, w, nulls)
+            }
+            Step::Not => {
+                let x = self.arg(arena, 0)?;
+                i(
+                    x.as_i().iter().map(|&v| (v == 0) as i64).collect(),
+                    x.width,
+                    nulls,
+                )
+            }
+            Step::Select => {
+                let c = self.arg(arena, 0)?.as_i();
+                let (xa, ya) = (self.arg(arena, 1)?, self.arg(arena, 2)?);
+                let w = xa.width;
+                let (x, y) = (xa.as_f(), ya.as_f());
+                let data = c
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &m)| if m != 0 { x[k] } else { y[k] })
+                    .collect();
+                f(data, w, nulls)
+            }
+            Step::SelectCmp { op, value } => {
+                let c = self.arg(arena, 0)?.as_f();
+                let (xa, ya) = (self.arg(arena, 1)?, self.arg(arena, 2)?);
+                let w = xa.width;
+                let (x, y) = (xa.as_f(), ya.as_f());
+                let data = c
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &v)| {
+                        if op.apply_f64(v as f32 as f64, *value as f32 as f64) {
+                            x[k]
+                        } else {
+                            y[k]
+                        }
+                    })
+                    .collect();
+                f(data, w, nulls)
+            }
+            Step::IsNan => {
+                let x = self.arg(arena, 0)?;
+                i(
+                    x.as_f().iter().map(|&v| v.is_nan() as i64).collect(),
+                    x.width,
+                    nulls,
+                )
+            }
+            Step::Assemble => {
+                let cols: Vec<Cow<[f64]>> = (0..self.args.len())
+                    .map(|k| Ok(self.arg(arena, k)?.as_f()))
+                    .collect::<Result<_>>()?;
+                let rows = cols[0].len();
+                let w = cols.len();
+                let mut data = Vec::with_capacity(rows * w);
+                for r in 0..rows {
+                    for c in &cols {
+                        data.push(c[r]);
+                    }
+                }
+                f(data, Some(w), nulls)
+            }
+            Step::VectorAt(idx) => {
+                let x = self.arg(arena, 0)?;
+                let w = x
+                    .width
+                    .ok_or_else(|| KamaeError::InvalidConfig("vector_at on scalar".into()))?;
+                f(x.as_f().chunks(w).map(|row| row[*idx]).collect(), None, nulls)
+            }
+            Step::ListAgg(kind) => {
+                let x = self.arg(arena, 0)?;
+                let w = x
+                    .width
+                    .ok_or_else(|| KamaeError::InvalidConfig("list agg on scalar".into()))?;
+                let data = x
+                    .as_f()
+                    .chunks(w)
+                    .map(|row| match kind {
+                        ListAggKind::Sum => row.iter().sum(),
+                        ListAggKind::Mean => row.iter().sum::<f64>() / w as f64,
+                        ListAggKind::Min => row.iter().copied().fold(f64::INFINITY, f64::min),
+                        ListAggKind::Max => row.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+                    })
+                    .collect();
+                f(data, None, nulls)
+            }
+            Step::ListLen => {
+                let x = self.arg(arena, 0)?;
+                let w = x.width.unwrap_or(1) as i64;
+                i(vec![w; x.rows()], None, nulls)
+            }
+            Step::ElementAt(idx) => {
+                let x = self.arg(arena, 0)?;
+                let w = x
+                    .width
+                    .ok_or_else(|| KamaeError::InvalidConfig("element_at on scalar".into()))?;
+                let j = if *idx < 0 { w as i64 + idx } else { *idx } as usize;
+                match &x.buf {
+                    KBuf::F(v) => f(v.chunks(w).map(|row| row[j]).collect(), None, nulls),
+                    KBuf::I(v) => i(v.chunks(w).map(|row| row[j]).collect(), None, nulls),
+                }
+            }
+            Step::SliceList { start, len } => {
+                let x = self.arg(arena, 0)?;
+                let w = x
+                    .width
+                    .ok_or_else(|| KamaeError::InvalidConfig("slice_list on scalar".into()))?;
+                let s = (*start).min(w);
+                let e = (start + len).min(w);
+                match &x.buf {
+                    KBuf::F(v) => f(
+                        v.chunks(w).flat_map(|row| row[s..e].to_vec()).collect(),
+                        Some(e - s),
+                        nulls,
+                    ),
+                    KBuf::I(v) => i(
+                        v.chunks(w).flat_map(|row| row[s..e].to_vec()).collect(),
+                        Some(e - s),
+                        nulls,
+                    ),
+                }
+            }
+            Step::HashBucket(bins) => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_i()
+                    .iter()
+                    .map(|&h| ops::hash::bucket(h, 0, *bins))
+                    .collect();
+                i(data, x.width, nulls)
+            }
+            Step::BloomEncode { k, bins } => {
+                let x = self.arg(arena, 0)?;
+                let xv = x.as_i();
+                let mut data = Vec::with_capacity(xv.len() * k);
+                for &h in xv.iter() {
+                    for j in 0..*k {
+                        data.push(j as i64 * bins + ops::hash::bucket(h, j, *bins));
+                    }
+                }
+                i(data, Some(*k), nulls)
+            }
+            Step::VocabLookup { hashes, ranks, num_oov, base, mask_hash } => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_i()
+                    .iter()
+                    .map(|&h| {
+                        if Some(h) == *mask_hash {
+                            return 0;
+                        }
+                        match hashes.binary_search(&h) {
+                            Ok(k) => base + num_oov + ranks[k],
+                            Err(_) => base + ops::hash::bucket(h, 0, *num_oov),
+                        }
+                    })
+                    .collect();
+                i(data, x.width, nulls)
+            }
+            Step::OneHot { hashes, ranks, num_oov, drop_unseen } => {
+                let x = self.arg(arena, 0)?;
+                let xv = x.as_i();
+                let depth = if *drop_unseen {
+                    hashes.len()
+                } else {
+                    num_oov + hashes.len()
+                };
+                let mut data = vec![0.0f64; xv.len() * depth];
+                for (k, &h) in xv.iter().enumerate() {
+                    let hot = match hashes.binary_search(&h) {
+                        Ok(j) => Some(if *drop_unseen {
+                            ranks[j] as usize
+                        } else {
+                            num_oov + ranks[j] as usize
+                        }),
+                        Err(_) => {
+                            if *drop_unseen {
+                                None
+                            } else {
+                                Some(ops::hash::bucket(h, 0, *num_oov as i64) as usize)
+                            }
+                        }
+                    };
+                    if let Some(hpos) = hot {
+                        data[k * depth + hpos] = 1.0;
+                    }
+                }
+                f(data, Some(depth), nulls)
+            }
+            Step::ScaleVec { scale, shift } => {
+                let x = self.arg(arena, 0)?;
+                let w = x.width.unwrap_or(1);
+                if scale.len() != w {
+                    return Err(KamaeError::LengthMismatch {
+                        left: scale.len(),
+                        right: w,
+                        context: "scale_vec width".into(),
+                    });
+                }
+                let data = x
+                    .as_f()
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &v)| {
+                        ((v as f32) * (scale[k % w] as f32) + (shift[k % w] as f32)) as f64
+                    })
+                    .collect();
+                f(data, x.width, nulls)
+            }
+            Step::Impute { fill, mask } => {
+                let x = self.arg(arena, 0)?;
+                let data = x
+                    .as_f()
+                    .iter()
+                    .map(|&v| {
+                        if v.is_nan() || Some(v) == *mask {
+                            *fill as f32 as f64
+                        } else {
+                            v as f32 as f64
+                        }
+                    })
+                    .collect();
+                // impute DEFINES every value — the advisory mask clears
+                f(data, x.width, None)
+            }
+            Step::Cosine => {
+                let (xa, ya) = (self.arg(arena, 0)?, self.arg(arena, 1)?);
+                let w = xa
+                    .width
+                    .ok_or_else(|| KamaeError::InvalidConfig("cosine on scalar".into()))?;
+                let (xv, yv) = (xa.as_f(), ya.as_f());
+                let data = xv
+                    .chunks(w)
+                    .zip(yv.chunks(w))
+                    .map(|(a, b)| {
+                        let dot: f64 = a
+                            .iter()
+                            .zip(b.iter())
+                            .map(|(p, q)| (*p as f32 * *q as f32) as f64)
+                            .sum();
+                        let nx = a.iter().map(|p| (*p as f32 * *p as f32) as f64).sum::<f64>().sqrt();
+                        let ny = b.iter().map(|q| (*q as f32 * *q as f32) as f64).sum::<f64>().sqrt();
+                        if nx == 0.0 || ny == 0.0 {
+                            0.0
+                        } else {
+                            (dot / (nx * ny)) as f32 as f64
+                        }
+                    })
+                    .collect();
+                f(data, None, nulls)
+            }
+            Step::Haversine => {
+                let (la1, lo1, la2, lo2) = (
+                    self.arg(arena, 0)?.as_f(),
+                    self.arg(arena, 1)?.as_f(),
+                    self.arg(arena, 2)?.as_f(),
+                    self.arg(arena, 3)?.as_f(),
+                );
+                let data = (0..la1.len())
+                    .map(|k| {
+                        ops::geo::haversine_km(
+                            la1[k] as f32 as f64,
+                            lo1[k] as f32 as f64,
+                            la2[k] as f32 as f64,
+                            lo2[k] as f32 as f64,
+                        ) as f32 as f64
+                    })
+                    .collect();
+                f(data, None, nulls)
+            }
+        })
+    }
+
+    /// Multi-output body — mirrors `eval_multi`: ONE merged-splits
+    /// binary search shared by every lane.
+    fn eval_lanes(&self, arena: &[Option<KVal>]) -> Result<Vec<KVal>> {
+        let Step::Lanes { splits, lanes } = &self.step else {
+            unreachable!("eval_lanes on single-output kernel")
+        };
+        let nulls = self.arg_nulls(arena);
+        let x = self.arg(arena, 0)?;
+        let xs = x.as_f();
+        let merged: Vec<usize> = xs
+            .iter()
+            .map(|&v| splits.partition_point(|&s| s <= v))
+            .collect();
+        Ok(lanes
+            .iter()
+            .map(|lane| {
+                let (data, width) = match lane {
+                    LaneStep::Bucket { remap, width } => {
+                        (merged.iter().map(|&m| remap[m]).collect::<Vec<i64>>(), *width)
+                    }
+                    LaneStep::Compare { op, value, width } => (
+                        xs.iter()
+                            .map(|&v| op.apply_f64(v as f32 as f64, *value as f32 as f64) as i64)
+                            .collect(),
+                        *width,
+                    ),
+                    LaneStep::BucketCompare { remap, op, value, width } => (
+                        merged
+                            .iter()
+                            .map(|&m| {
+                                let bucket = remap[m];
+                                op.apply_f64(bucket as f64 as f32 as f64, *value as f32 as f64)
+                                    as i64
+                            })
+                            .collect(),
+                        *width,
+                    ),
+                };
+                KVal { buf: KBuf::I(data), width, nulls: nulls.clone() }
+            })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// program
+
+/// A [`GraphSpec`] compiled to slot-indexed columnar kernels.
+pub(crate) struct KernelProgram {
+    ingress: Vec<IngressKernel>,
+    /// Graph-input column names; input `i` binds arena slot `i`.
+    inputs: Vec<String>,
+    kernels: Vec<Kernel>,
+    /// `spec.outputs[i]` lives in arena slot `output_slots[i]`.
+    output_slots: Vec<usize>,
+    output_names: Vec<String>,
+    slots: usize,
+}
+
+fn bind(map: &mut HashMap<String, usize>, name: &str, slot: usize) -> Result<()> {
+    if map.insert(name.to_string(), slot).is_some() {
+        return Err(KamaeError::InvalidConfig(format!(
+            "kernel program: duplicate graph binding '{name}'"
+        )));
+    }
+    Ok(())
+}
+
+impl KernelProgram {
+    /// Compile `spec` — called once per backend load. Errors mean "this
+    /// spec shape is not kernel-compilable"; the interpreter falls back
+    /// to the `eval_node` oracle so request behaviour is unchanged.
+    pub(crate) fn compile(spec: &GraphSpec) -> Result<KernelProgram> {
+        let ingress = spec
+            .ingress
+            .iter()
+            .map(IngressKernel::compile)
+            .collect::<Result<Vec<_>>>()?;
+        let mut slot_of: HashMap<String, usize> = HashMap::new();
+        let mut slots = 0usize;
+        for name in &spec.graph_inputs {
+            bind(&mut slot_of, name, slots)?;
+            slots += 1;
+        }
+        let mut kernels = Vec::with_capacity(spec.nodes.len());
+        for (ni, node) in spec.nodes.iter().enumerate() {
+            let args = node
+                .inputs
+                .iter()
+                .map(|input| {
+                    slot_of.get(input).copied().ok_or_else(|| {
+                        KamaeError::ColumnNotFound(format!("{input} (graph value)"))
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let (step, outs) = if node.lanes.is_empty() {
+                let step = Step::compile(node)?;
+                let slot = slots;
+                slots += 1;
+                bind(&mut slot_of, &node.id, slot)?;
+                (step, vec![slot])
+            } else {
+                let step = Step::compile_lanes(node)?;
+                let mut outs = Vec::with_capacity(node.lanes.len());
+                for lane in &node.lanes {
+                    let slot = slots;
+                    slots += 1;
+                    // the bare lane name and the qualified `id.lane`
+                    // reference alias ONE slot — no clone for aliases
+                    bind(&mut slot_of, &lane.name, slot)?;
+                    bind(&mut slot_of, &node.lane_ref(&lane.name), slot)?;
+                    outs.push(slot);
+                }
+                (step, outs)
+            };
+            kernels.push(Kernel { node: ni, args, outs, step });
+        }
+        let output_slots = spec
+            .outputs
+            .iter()
+            .map(|o| {
+                slot_of
+                    .get(o)
+                    .copied()
+                    .ok_or_else(|| KamaeError::ColumnNotFound(format!("{o} (spec output)")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(KernelProgram {
+            ingress,
+            inputs: spec.graph_inputs.clone(),
+            kernels,
+            output_slots,
+            output_names: spec.outputs.clone(),
+            slots,
+        })
+    }
+
+    /// Run the pre-parsed ingress kernels over `df` in place.
+    pub(crate) fn apply_ingress(&self, df: &mut DataFrame) -> Result<()> {
+        for k in &self.ingress {
+            k.run(df)?;
+        }
+        Ok(())
+    }
+
+    /// Full interpretation through the kernel program — the hot-path
+    /// replacement for the env-walking `SpecInterpreter::run` body.
+    pub(crate) fn run(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        let mut df = df.clone();
+        self.apply_ingress(&mut df)?;
+        let batch = df.num_rows();
+        let mut arena: Vec<Option<KVal>> = vec![None; self.slots];
+        for (slot, name) in self.inputs.iter().enumerate() {
+            arena[slot] = Some(KVal::from_column(df.column(name)?)?);
+        }
+        for k in &self.kernels {
+            k.run(&mut arena)?;
+        }
+        self.output_slots
+            .iter()
+            .zip(self.output_names.iter())
+            .map(|(&slot, name)| {
+                arena[slot]
+                    .as_ref()
+                    .map(|v| v.to_tensor(batch))
+                    .ok_or_else(|| KamaeError::ColumnNotFound(format!("{name} (spec output)")))
+            })
+            .collect()
+    }
+
+    /// Variant-routed interpretation over per-group cone bitmasks (the
+    /// masks `SpecInterpreter::run_routed` computes from its
+    /// `ConeCache`). Same row-granularity algorithm as the oracle:
+    /// nodes needed by ≥2 groups run once over the full batch, nodes
+    /// needed by one group run on that group's rows only, shared values
+    /// are sliced into the group arena on demand.
+    pub(crate) fn run_routed(
+        &self,
+        df: &DataFrame,
+        groups: &[RouteGroup],
+        ingress_masks: &[u64],
+        input_masks: &[u64],
+        node_masks: &[u64],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        // ---- ingress: shared over the full batch, exclusive per group
+        let mut full_df = df.clone();
+        for (k, mask) in self.ingress.iter().zip(ingress_masks.iter()) {
+            if mask.count_ones() >= 2 {
+                k.run(&mut full_df)?;
+            }
+        }
+        let mut group_dfs: Vec<Option<DataFrame>> = vec![None; groups.len()];
+        for (gi, g) in groups.iter().enumerate() {
+            let mut gdf: Option<DataFrame> = None;
+            for (k, mask) in self.ingress.iter().zip(ingress_masks.iter()) {
+                if *mask == 1 << gi {
+                    let gdf =
+                        gdf.get_or_insert_with(|| full_df.slice(g.rows.start, g.rows.len()));
+                    k.run(gdf)?;
+                }
+            }
+            group_dfs[gi] = gdf;
+        }
+
+        // ---- graph inputs into the shared / per-group arenas
+        let mut arena_full: Vec<Option<KVal>> = vec![None; self.slots];
+        let mut arena_groups: Vec<Vec<Option<KVal>>> =
+            (0..groups.len()).map(|_| vec![None; self.slots]).collect();
+        for (slot, name) in self.inputs.iter().enumerate() {
+            let m = input_masks[slot];
+            if m.count_ones() >= 2 {
+                arena_full[slot] = Some(KVal::from_column(full_df.column(name)?)?);
+            } else if m != 0 {
+                let gi = m.trailing_zeros() as usize;
+                let g = &groups[gi];
+                let v = match &group_dfs[gi] {
+                    Some(gdf) => KVal::from_column(gdf.column(name)?)?,
+                    None => KVal::from_column(
+                        full_df.slice(g.rows.start, g.rows.len()).column(name)?,
+                    )?,
+                };
+                arena_groups[gi][slot] = Some(v);
+            }
+        }
+
+        // ---- kernels at row granularity
+        for k in &self.kernels {
+            let m = node_masks[k.node];
+            if m == 0 {
+                continue;
+            }
+            if m.count_ones() >= 2 {
+                k.run(&mut arena_full)?;
+            } else {
+                let gi = m.trailing_zeros() as usize;
+                let g = &groups[gi];
+                for &slot in &k.args {
+                    if arena_groups[gi][slot].is_none() {
+                        if let Some(v) = &arena_full[slot] {
+                            arena_groups[gi][slot] =
+                                Some(v.slice_rows(g.rows.start, g.rows.len()));
+                        }
+                    }
+                }
+                k.run(&mut arena_groups[gi])?;
+            }
+        }
+
+        // ---- collect each group's requested outputs
+        groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                g.outputs
+                    .iter()
+                    .map(|&oi| {
+                        let slot = *self.output_slots.get(oi).ok_or_else(|| {
+                            KamaeError::InvalidConfig(format!(
+                                "route group requests output {oi} of {}",
+                                self.output_slots.len()
+                            ))
+                        })?;
+                        if let Some(v) = &arena_groups[gi][slot] {
+                            return Ok(v.to_tensor(g.rows.len()));
+                        }
+                        arena_full[slot]
+                            .as_ref()
+                            .map(|v| {
+                                v.slice_rows(g.rows.start, g.rows.len()).to_tensor(g.rows.len())
+                            })
+                            .ok_or_else(|| {
+                                KamaeError::ColumnNotFound(format!(
+                                    "{} (routed spec output)",
+                                    self.output_names[oi]
+                                ))
+                            })
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Number of compiled graph kernels (diagnostics / tests).
+    pub(crate) fn kernel_count(&self) -> usize {
+        self.kernels.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::export::{SpecDType, SpecInput, SpecInterpreter, SpecLane};
+
+    fn node(id: &str, op: &str, ins: &[&str], attrs: &str, dtype: SpecDType) -> SpecNode {
+        SpecNode {
+            id: id.into(),
+            op: op.into(),
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype,
+            width: None,
+            lanes: vec![],
+        }
+    }
+
+    fn two_input_spec(nodes: Vec<SpecNode>, outputs: &[&str]) -> GraphSpec {
+        GraphSpec {
+            name: "t".into(),
+            inputs: vec![
+                SpecInput { name: "x".into(), dtype: DType::F64, width: None },
+                SpecInput { name: "y".into(), dtype: DType::F64, width: None },
+            ],
+            ingress: vec![],
+            graph_inputs: vec!["x".into(), "y".into()],
+            nodes,
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    fn sample_df() -> DataFrame {
+        DataFrame::new(vec![
+            (
+                "x".into(),
+                Column::from_f64(vec![-2.5, -1.0, 0.0, 0.3, 1.0, 2.0, f64::NAN]),
+            ),
+            (
+                "y".into(),
+                Column::from_f64(vec![7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0]),
+            ),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn kernel_program_matches_oracle_on_graph_ops() {
+        let nodes = vec![
+            node("l", "log1p", &["x"], "{}", SpecDType::F32),
+            node("s", "add", &["l", "y"], "{}", SpecDType::F32),
+            node("b", "bucketize", &["x"], r#"{"splits": [-1.0, 0.0, 1.0]}"#, SpecDType::I64),
+            node("c", "compare_scalar", &["b"], r#"{"op": "ge", "value": 2.0}"#, SpecDType::I64),
+            node("sel", "select", &["c", "x", "y"], "{}", SpecDType::F32),
+            node("im", "impute", &["x"], r#"{"fill": 0.25}"#, SpecDType::F32),
+        ];
+        let spec = two_input_spec(nodes, &["s", "c", "sel", "im"]);
+        let df = sample_df();
+        let program = KernelProgram::compile(&spec).unwrap();
+        assert_eq!(program.kernel_count(), 6);
+        let got = program.run(&df).unwrap();
+        let want = SpecInterpreter::new_oracle(spec).run(&df).unwrap();
+        crate::util::prop::tensors_bit_identical(&got, &want).unwrap();
+    }
+
+    #[test]
+    fn kernel_program_matches_oracle_on_lanes() {
+        let mut lanes_node = node(
+            "x__lanes",
+            "multi_bucketize",
+            &["x"],
+            r#"{"splits": [-1.0, 0.0, 0.5, 1.0]}"#,
+            SpecDType::I64,
+        );
+        let lane = |name: &str, attrs: &str| SpecLane {
+            name: name.into(),
+            attrs: Json::parse(attrs).unwrap(),
+            dtype: SpecDType::I64,
+            width: None,
+        };
+        lanes_node.lanes = vec![
+            lane("b1", r#"{"kind": "bucket", "remap": [0, 1, 2, 2, 3]}"#),
+            lane("c1", r#"{"kind": "compare", "op": "gt", "value": 0.0}"#),
+            lane(
+                "f1",
+                r#"{"kind": "bucket_compare", "remap": [0, 1, 2, 2, 2], "op": "ge", "value": 2.0}"#,
+            ),
+        ];
+        let nodes = vec![
+            lanes_node,
+            node("n", "not", &["x__lanes.c1"], "{}", SpecDType::I64),
+        ];
+        let spec = two_input_spec(nodes, &["b1", "c1", "f1", "n"]);
+        let df = sample_df();
+        let program = KernelProgram::compile(&spec).unwrap();
+        let got = program.run(&df).unwrap();
+        let want = SpecInterpreter::new_oracle(spec).run(&df).unwrap();
+        crate::util::prop::tensors_bit_identical(&got, &want).unwrap();
+    }
+
+    #[test]
+    fn unknown_op_fails_compile_but_interpreter_falls_back() {
+        let spec = two_input_spec(
+            vec![node("z", "no_such_op", &["x"], "{}", SpecDType::F32)],
+            &["z"],
+        );
+        assert!(KernelProgram::compile(&spec).is_err());
+        // the interpreter keeps working (oracle path) and reports the
+        // same request-time error the oracle always did
+        let interp = SpecInterpreter::new(spec);
+        assert!(!interp.is_compiled());
+        let err = interp.run(&sample_df()).unwrap_err();
+        assert!(err.to_string().contains("graph op: no_such_op"), "{err}");
+    }
+
+    #[test]
+    fn null_masks_propagate_and_impute_clears() {
+        let df = DataFrame::new(vec![
+            (
+                "x".into(),
+                Column::F64(vec![1.0, 2.0, 3.0], Some(vec![false, true, false])),
+            ),
+            (
+                "y".into(),
+                Column::F64(vec![4.0, 5.0, 6.0], Some(vec![true, false, false])),
+            ),
+        ])
+        .unwrap();
+        let spec = two_input_spec(
+            vec![
+                node("s", "add", &["x", "y"], "{}", SpecDType::F32),
+                node("im", "impute", &["s"], r#"{"fill": 0.0}"#, SpecDType::F32),
+            ],
+            &["s", "im"],
+        );
+        let program = KernelProgram::compile(&spec).unwrap();
+        let mut arena: Vec<Option<KVal>> = vec![None; program.slots];
+        for (slot, name) in program.inputs.iter().enumerate() {
+            arena[slot] = Some(KVal::from_column(df.column(name).unwrap()).unwrap());
+        }
+        for k in &program.kernels {
+            k.run(&mut arena).unwrap();
+        }
+        // slot 2 = "s": union of the input masks; slot 3 = "im": cleared
+        assert_eq!(
+            arena[2].as_ref().unwrap().nulls,
+            Some(vec![true, true, false])
+        );
+        assert_eq!(arena[3].as_ref().unwrap().nulls, None);
+        // values still match the oracle exactly (masks are advisory)
+        let got = program.run(&df).unwrap();
+        let want = SpecInterpreter::new_oracle(spec).run(&df).unwrap();
+        crate::util::prop::tensors_bit_identical(&got, &want).unwrap();
+    }
+}

@@ -31,9 +31,20 @@
 //! [`SpecLane`]s and consumers reference `"<node_id>.<lane_name>"` (or
 //! the lane's bare name — lanes share the column namespace). The
 //! builder never emits these; the optimizer's multi-lane passes do.
+//!
+//! On the serving side the full pipeline is **spec → optimized IR →
+//! kernel program → pooled server**: at backend load the
+//! [`SpecInterpreter`] compiles the (already optimizer-rewritten) spec
+//! once into a [`kernel`] program — a topologically ordered list of
+//! typed kernels with pre-parsed attributes and slot-indexed buffers —
+//! and every request (`run`, and `run_routed`'s per-cone sub-programs)
+//! executes through it. The original `eval_node` interpreter is retained
+//! verbatim as the differential oracle the kernels are pinned against;
+//! specs the kernel compiler cannot handle fall back to it silently.
 
 mod builder;
 mod interp;
+mod kernel;
 mod spec;
 
 pub use builder::SpecBuilder;

@@ -192,6 +192,25 @@ pub struct OpInfo {
     pub work: u32,
 }
 
+/// Coarse throughput class of an op's kernel-program body
+/// ([`crate::export::SpecInterpreter`] compiles specs into columnar
+/// kernels at backend load). Derived from the same [`OpInfo::work`]
+/// estimate [`node_cost`] charges — the classification introduces no new
+/// numbers, it buckets the existing ones for consumers that only need
+/// "tight loop vs heavy body" (scheduling heuristics, bench reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelClass {
+    /// Straight-line columnar arithmetic over dense buffers: casts,
+    /// unary/binary float math, compares, selects, small gathers. The
+    /// kernel body is a branch-light per-row loop.
+    Fast,
+    /// Table-, search-, or allocation-heavy body: string processing
+    /// (all ingress ops), vocab/bloom/one-hot lookups, trig-heavy
+    /// geo math. Per-row cost is dominated by memory traffic or
+    /// per-element work, not loop overhead.
+    Slow,
+}
+
 impl OpInfo {
     /// Override the default work estimate (const-friendly builder).
     const fn work(mut self, w: u32) -> OpInfo {
@@ -203,6 +222,18 @@ impl OpInfo {
     const fn multi(mut self) -> OpInfo {
         self.multi_output = true;
         self
+    }
+
+    /// Classify this op's kernel-program body. Ingress (string-side)
+    /// ops are always [`KernelClass::Slow`]; graph ops are bucketed by
+    /// their registry work estimate so the split stays consistent with
+    /// [`node_cost`] without duplicating per-op judgement calls.
+    pub fn kernel_class(&self) -> KernelClass {
+        if matches!(self.section, Section::Ingress) || self.work >= 6 {
+            KernelClass::Slow
+        } else {
+            KernelClass::Fast
+        }
     }
 }
 
@@ -377,7 +408,8 @@ fn search_depth(n: u64) -> u64 {
 /// exactly what makes fusion profitable under the model: the steps keep
 /// their work, the interior overheads disappear) and for splits-table
 /// searches (work grows with table depth). Unknown ops get a
-/// conservative default.
+/// conservative default. The coarse fast/slow split of the same numbers
+/// is [`OpInfo::kernel_class`] — the kernel-program view of this model.
 pub fn node_cost(node: &SpecNode) -> u64 {
     let base = lookup(&node.op).map(|i| i.work as u64).unwrap_or(4);
     let work = match node.op.as_str() {
@@ -585,10 +617,163 @@ pub fn lint_spec(spec: &GraphSpec) -> Vec<String> {
     findings
 }
 
+/// Per-op execution templates: for every registered op, one concrete
+/// (inputs, attrs, output dtype/width) instantiation plus the sample
+/// DataFrame it runs against. Shared by the registry coverage tests
+/// below and the kernel-program differential property
+/// (`rust/tests/properties.rs`), which replays every template through
+/// both the compiled kernel program and the `eval_node` oracle and pins
+/// the outputs bit-for-bit. Hidden from docs: this is test scaffolding,
+/// not API.
+#[doc(hidden)]
+pub mod coverage {
+    use crate::dataframe::{Column, DType, DataFrame};
+    use crate::export::{SpecDType, SpecInput};
+
+    /// Sample batch covering every input shape the templates need:
+    /// strings, string lists, f64/i64 scalars, fixed-width numeric
+    /// lists, date and timestamp strings.
+    pub fn sample_df() -> DataFrame {
+        DataFrame::new(vec![
+            ("s".into(), Column::from_str(vec!["alpha", "beta-1"])),
+            ("ls".into(), Column::from_str_rows(vec![vec!["a", "b"], vec!["c", "d"]])),
+            ("xf".into(), Column::from_f64(vec![1.5, -2.25])),
+            ("yf".into(), Column::from_f64(vec![0.5, 3.0])),
+            ("xi".into(), Column::from_i64(vec![3, 19_876])),
+            ("vf".into(), Column::from_f64_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]])),
+            ("vi".into(), Column::from_i64_rows(vec![vec![1, 2], vec![3, 4]])),
+            ("d".into(), Column::from_str(vec!["2024-01-02", "1999-12-31"])),
+            ("ts".into(), Column::from_str(vec!["2024-01-02 03:04:05", "1999-12-31 23:59:59"])),
+        ])
+        .unwrap()
+    }
+
+    /// Spec inputs matching [`sample_df`]'s numeric/graph columns.
+    pub fn sample_inputs() -> Vec<SpecInput> {
+        vec![
+            SpecInput { name: "s".into(), dtype: DType::Str, width: None },
+            SpecInput { name: "ls".into(), dtype: DType::List(Box::new(DType::Str)), width: Some(2) },
+            SpecInput { name: "xf".into(), dtype: DType::F64, width: None },
+            SpecInput { name: "yf".into(), dtype: DType::F64, width: None },
+            SpecInput { name: "xi".into(), dtype: DType::I64, width: None },
+            SpecInput { name: "vf".into(), dtype: DType::List(Box::new(DType::F64)), width: Some(2) },
+            SpecInput { name: "vi".into(), dtype: DType::List(Box::new(DType::I64)), width: Some(2) },
+        ]
+    }
+
+    /// (inputs, attrs-json, out dtype, out width) template for executing
+    /// one graph-section op against [`sample_df`]. Adding an op to the
+    /// registry without a template here fails the coverage test — by
+    /// design: the interpreter (and model.py) must learn it too.
+    pub fn graph_template(op: &str) -> (Vec<&'static str>, &'static str, SpecDType, Option<usize>) {
+        use SpecDType::{F32, I64};
+        match op {
+            "identity" | "to_f32" => (vec!["xf"], "{}", F32, None),
+            "to_i64" => (vec!["xf"], "{}", I64, None),
+            "log" => (vec!["xf"], r#"{"base": 10.0}"#, F32, None),
+            "log1p" | "exp" | "sqrt" | "abs" | "neg" | "reciprocal" | "round" | "floor"
+            | "ceil" | "sin" | "cos" | "tanh" | "sigmoid" => (vec!["xf"], "{}", F32, None),
+            "clip" => (vec!["xf"], r#"{"min": -1.0, "max": 1.0}"#, F32, None),
+            "pow_scalar" => (vec!["xf"], r#"{"p": 2.0}"#, F32, None),
+            "add_scalar" | "sub_scalar" | "mul_scalar" | "div_scalar" => {
+                (vec!["xf"], r#"{"c": 2.5}"#, F32, None)
+            }
+            "scale_shift" => (vec!["xf"], r#"{"scale": 2.0, "shift": 1.0}"#, F32, None),
+            "affine" => (
+                vec!["xf"],
+                r#"{"steps": [{"op": "mul_scalar", "c": 2.0}, {"op": "add_scalar", "c": 1.0}], "scale": 2.0, "shift": 1.0}"#,
+                F32,
+                None,
+            ),
+            "add" | "sub" | "mul" | "div" | "pow" | "min" | "max" | "mod" => {
+                (vec!["xf", "yf"], "{}", F32, None)
+            }
+            "bucketize" => (vec!["xf"], r#"{"splits": [0.0, 1.0]}"#, I64, None),
+            "multi_bucketize" => {
+                (vec!["xf"], r#"{"splits": [0.0, 1.0], "op": "ge", "value": 1.0}"#, I64, None)
+            }
+            "columns_agg" => (vec!["xf", "yf"], r#"{"agg": "mean"}"#, F32, None),
+            "date_part" => (vec!["xi"], r#"{"part": "weekday"}"#, I64, None),
+            "sub_i64" => (vec!["xi", "xi"], "{}", I64, None),
+            "add_scalar_i64" | "floordiv_scalar_i64" => (vec!["xi"], r#"{"c": 7}"#, I64, None),
+            "compare" => (vec!["xf", "yf"], r#"{"op": "lt"}"#, I64, None),
+            "compare_scalar" => (vec!["xf"], r#"{"op": "ge", "value": 0.0}"#, I64, None),
+            "eq_hash" => (vec!["xi"], r#"{"value_hash": 3}"#, I64, None),
+            "bool_op" => (vec!["xi", "xi"], r#"{"op": "and"}"#, I64, None),
+            "not" | "is_nan" => (vec!["xi"], "{}", I64, None),
+            "select" => (vec!["xi", "xf", "yf"], "{}", F32, None),
+            "select_cmp" => (vec!["xf", "xf", "yf"], r#"{"op": "ge", "value": 0.0}"#, F32, None),
+            "assemble" => (vec!["xf", "yf"], "{}", F32, Some(2)),
+            "vector_at" => (vec!["vf"], r#"{"index": 1}"#, F32, None),
+            "list_sum" | "list_mean" | "list_min" | "list_max" => (vec!["vf"], "{}", F32, None),
+            "list_len" => (vec!["vf"], "{}", I64, None),
+            "element_at" => (vec!["vf"], r#"{"index": -1}"#, F32, None),
+            "slice_list" => (vec!["vf"], r#"{"start": 0, "len": 1}"#, F32, Some(1)),
+            "hash_bucket" => (vec!["xi"], r#"{"num_bins": 16}"#, I64, None),
+            "bloom_encode" => (vec!["xi"], r#"{"num_hashes": 2, "num_bins": 32}"#, I64, Some(2)),
+            "vocab_lookup" => (
+                vec!["xi"],
+                r#"{"vocab_hashes": [3], "vocab_ranks": [0], "num_oov": 1, "base": 0}"#,
+                I64,
+                None,
+            ),
+            "one_hot" => (
+                vec!["xi"],
+                r#"{"vocab_hashes": [3], "vocab_ranks": [0], "num_oov": 1}"#,
+                F32,
+                Some(2),
+            ),
+            "scale_vec" => (vec!["vf"], r#"{"scale": [1.0, 2.0], "shift": [0.0, 1.0]}"#, F32, Some(2)),
+            "impute" => (vec!["xf"], r#"{"fill": 0.0}"#, F32, None),
+            "cosine_similarity" => (vec!["vf", "vf"], "{}", F32, None),
+            "haversine" => (vec!["xf", "yf", "xf", "yf"], "{}", F32, None),
+            other => panic!("graph op '{other}' has no interpreter-coverage template"),
+        }
+    }
+
+    /// (input, attrs-json, out engine dtype, out width) template for one
+    /// ingress op.
+    pub fn ingress_template(op: &str) -> (&'static str, &'static str, DType, Option<usize>) {
+        match op {
+            "hash64" => ("s", "{}", DType::I64, None),
+            "case" => ("s", r#"{"mode": "upper"}"#, DType::Str, None),
+            "trim" | "to_string" => ("s", "{}", DType::Str, None),
+            "substring" => ("s", r#"{"start": 0, "len": 2}"#, DType::Str, None),
+            "replace" => ("s", r#"{"from": "a", "to": "b"}"#, DType::Str, None),
+            "regex_replace" => ("s", r#"{"pattern": "[0-9]+", "rep": "#"}"#, DType::Str, None),
+            "regex_extract" => ("s", r#"{"pattern": "([a-z]+)", "group": 1}"#, DType::Str, None),
+            "concat" => ("s", r#"{"separator": "-"}"#, DType::Str, None),
+            "split_pad" => (
+                "s",
+                r#"{"separator": "-", "list_length": 2, "default": "PAD"}"#,
+                DType::List(Box::new(DType::Str)),
+                Some(2),
+            ),
+            "join" => ("ls", r#"{"separator": ","}"#, DType::Str, None),
+            "string_match" => ("s", r#"{"mode": "contains", "needle": "a"}"#, DType::Bool, None),
+            "str_len" => ("s", "{}", DType::I64, None),
+            "date_to_days" => ("d", "{}", DType::I64, None),
+            "timestamp_to_seconds" => ("ts", "{}", DType::I64, None),
+            "element_at" => ("ls", r#"{"index": 0}"#, DType::Str, None),
+            "slice_list" => ("ls", r#"{"start": 0, "len": 1}"#, DType::List(Box::new(DType::Str)), Some(1)),
+            "pad_list" => ("ls", r#"{"len": 3, "default": "PAD"}"#, DType::List(Box::new(DType::Str)), Some(3)),
+            "parse_number" => ("d", "{}", DType::F64, None),
+            "fused_ingress" => (
+                "s",
+                r#"{"steps": [{"op": "trim"}, {"op": "case", "mode": "upper"}, {"op": "hash64"}]}"#,
+                DType::I64,
+                None,
+            ),
+            other => panic!("ingress op '{other}' has no interpreter-coverage template"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::coverage::{graph_template, ingress_template, sample_df, sample_inputs};
     use super::*;
-    use crate::dataframe::{Column, DataFrame, DType};
+    use crate::dataframe::DType;
     use crate::engine::Dataset;
     use crate::export::{SpecDType, SpecInput, SpecInterpreter, SpecNode};
     use crate::pipeline::catalog;
@@ -814,140 +999,7 @@ mod tests {
     }
 
     // ---- every registered op is executable by the interpreter ---------
-
-    fn sample_df() -> DataFrame {
-        DataFrame::new(vec![
-            ("s".into(), Column::from_str(vec!["alpha", "beta-1"])),
-            ("ls".into(), Column::from_str_rows(vec![vec!["a", "b"], vec!["c", "d"]])),
-            ("xf".into(), Column::from_f64(vec![1.5, -2.25])),
-            ("yf".into(), Column::from_f64(vec![0.5, 3.0])),
-            ("xi".into(), Column::from_i64(vec![3, 19_876])),
-            ("vf".into(), Column::from_f64_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]])),
-            ("vi".into(), Column::from_i64_rows(vec![vec![1, 2], vec![3, 4]])),
-            ("d".into(), Column::from_str(vec!["2024-01-02", "1999-12-31"])),
-            ("ts".into(), Column::from_str(vec!["2024-01-02 03:04:05", "1999-12-31 23:59:59"])),
-        ])
-        .unwrap()
-    }
-
-    fn sample_inputs() -> Vec<SpecInput> {
-        vec![
-            SpecInput { name: "s".into(), dtype: DType::Str, width: None },
-            SpecInput { name: "ls".into(), dtype: DType::List(Box::new(DType::Str)), width: Some(2) },
-            SpecInput { name: "xf".into(), dtype: DType::F64, width: None },
-            SpecInput { name: "yf".into(), dtype: DType::F64, width: None },
-            SpecInput { name: "xi".into(), dtype: DType::I64, width: None },
-            SpecInput { name: "vf".into(), dtype: DType::List(Box::new(DType::F64)), width: Some(2) },
-            SpecInput { name: "vi".into(), dtype: DType::List(Box::new(DType::I64)), width: Some(2) },
-        ]
-    }
-
-    /// (inputs, attrs-json, out dtype, out width) template for executing
-    /// one graph-section op against [`sample_df`]. Adding an op to the
-    /// registry without a template here fails the coverage test — by
-    /// design: the interpreter (and model.py) must learn it too.
-    fn graph_template(op: &str) -> (Vec<&'static str>, &'static str, SpecDType, Option<usize>) {
-        use SpecDType::{F32, I64};
-        match op {
-            "identity" | "to_f32" => (vec!["xf"], "{}", F32, None),
-            "to_i64" => (vec!["xf"], "{}", I64, None),
-            "log" => (vec!["xf"], r#"{"base": 10.0}"#, F32, None),
-            "log1p" | "exp" | "sqrt" | "abs" | "neg" | "reciprocal" | "round" | "floor"
-            | "ceil" | "sin" | "cos" | "tanh" | "sigmoid" => (vec!["xf"], "{}", F32, None),
-            "clip" => (vec!["xf"], r#"{"min": -1.0, "max": 1.0}"#, F32, None),
-            "pow_scalar" => (vec!["xf"], r#"{"p": 2.0}"#, F32, None),
-            "add_scalar" | "sub_scalar" | "mul_scalar" | "div_scalar" => {
-                (vec!["xf"], r#"{"c": 2.5}"#, F32, None)
-            }
-            "scale_shift" => (vec!["xf"], r#"{"scale": 2.0, "shift": 1.0}"#, F32, None),
-            "affine" => (
-                vec!["xf"],
-                r#"{"steps": [{"op": "mul_scalar", "c": 2.0}, {"op": "add_scalar", "c": 1.0}], "scale": 2.0, "shift": 1.0}"#,
-                F32,
-                None,
-            ),
-            "add" | "sub" | "mul" | "div" | "pow" | "min" | "max" | "mod" => {
-                (vec!["xf", "yf"], "{}", F32, None)
-            }
-            "bucketize" => (vec!["xf"], r#"{"splits": [0.0, 1.0]}"#, I64, None),
-            "multi_bucketize" => {
-                (vec!["xf"], r#"{"splits": [0.0, 1.0], "op": "ge", "value": 1.0}"#, I64, None)
-            }
-            "columns_agg" => (vec!["xf", "yf"], r#"{"agg": "mean"}"#, F32, None),
-            "date_part" => (vec!["xi"], r#"{"part": "weekday"}"#, I64, None),
-            "sub_i64" => (vec!["xi", "xi"], "{}", I64, None),
-            "add_scalar_i64" | "floordiv_scalar_i64" => (vec!["xi"], r#"{"c": 7}"#, I64, None),
-            "compare" => (vec!["xf", "yf"], r#"{"op": "lt"}"#, I64, None),
-            "compare_scalar" => (vec!["xf"], r#"{"op": "ge", "value": 0.0}"#, I64, None),
-            "eq_hash" => (vec!["xi"], r#"{"value_hash": 3}"#, I64, None),
-            "bool_op" => (vec!["xi", "xi"], r#"{"op": "and"}"#, I64, None),
-            "not" | "is_nan" => (vec!["xi"], "{}", I64, None),
-            "select" => (vec!["xi", "xf", "yf"], "{}", F32, None),
-            "select_cmp" => (vec!["xf", "xf", "yf"], r#"{"op": "ge", "value": 0.0}"#, F32, None),
-            "assemble" => (vec!["xf", "yf"], "{}", F32, Some(2)),
-            "vector_at" => (vec!["vf"], r#"{"index": 1}"#, F32, None),
-            "list_sum" | "list_mean" | "list_min" | "list_max" => (vec!["vf"], "{}", F32, None),
-            "list_len" => (vec!["vf"], "{}", I64, None),
-            "element_at" => (vec!["vf"], r#"{"index": -1}"#, F32, None),
-            "slice_list" => (vec!["vf"], r#"{"start": 0, "len": 1}"#, F32, Some(1)),
-            "hash_bucket" => (vec!["xi"], r#"{"num_bins": 16}"#, I64, None),
-            "bloom_encode" => (vec!["xi"], r#"{"num_hashes": 2, "num_bins": 32}"#, I64, Some(2)),
-            "vocab_lookup" => (
-                vec!["xi"],
-                r#"{"vocab_hashes": [3], "vocab_ranks": [0], "num_oov": 1, "base": 0}"#,
-                I64,
-                None,
-            ),
-            "one_hot" => (
-                vec!["xi"],
-                r#"{"vocab_hashes": [3], "vocab_ranks": [0], "num_oov": 1}"#,
-                F32,
-                Some(2),
-            ),
-            "scale_vec" => (vec!["vf"], r#"{"scale": [1.0, 2.0], "shift": [0.0, 1.0]}"#, F32, Some(2)),
-            "impute" => (vec!["xf"], r#"{"fill": 0.0}"#, F32, None),
-            "cosine_similarity" => (vec!["vf", "vf"], "{}", F32, None),
-            "haversine" => (vec!["xf", "yf", "xf", "yf"], "{}", F32, None),
-            other => panic!("graph op '{other}' has no interpreter-coverage template"),
-        }
-    }
-
-    /// (input, attrs-json, out engine dtype, out width) template for one
-    /// ingress op.
-    fn ingress_template(op: &str) -> (&'static str, &'static str, DType, Option<usize>) {
-        match op {
-            "hash64" => ("s", "{}", DType::I64, None),
-            "case" => ("s", r#"{"mode": "upper"}"#, DType::Str, None),
-            "trim" | "to_string" => ("s", "{}", DType::Str, None),
-            "substring" => ("s", r#"{"start": 0, "len": 2}"#, DType::Str, None),
-            "replace" => ("s", r#"{"from": "a", "to": "b"}"#, DType::Str, None),
-            "regex_replace" => ("s", r#"{"pattern": "[0-9]+", "rep": "#"}"#, DType::Str, None),
-            "regex_extract" => ("s", r#"{"pattern": "([a-z]+)", "group": 1}"#, DType::Str, None),
-            "concat" => ("s", r#"{"separator": "-"}"#, DType::Str, None),
-            "split_pad" => (
-                "s",
-                r#"{"separator": "-", "list_length": 2, "default": "PAD"}"#,
-                DType::List(Box::new(DType::Str)),
-                Some(2),
-            ),
-            "join" => ("ls", r#"{"separator": ","}"#, DType::Str, None),
-            "string_match" => ("s", r#"{"mode": "contains", "needle": "a"}"#, DType::Bool, None),
-            "str_len" => ("s", "{}", DType::I64, None),
-            "date_to_days" => ("d", "{}", DType::I64, None),
-            "timestamp_to_seconds" => ("ts", "{}", DType::I64, None),
-            "element_at" => ("ls", r#"{"index": 0}"#, DType::Str, None),
-            "slice_list" => ("ls", r#"{"start": 0, "len": 1}"#, DType::List(Box::new(DType::Str)), Some(1)),
-            "pad_list" => ("ls", r#"{"len": 3, "default": "PAD"}"#, DType::List(Box::new(DType::Str)), Some(3)),
-            "parse_number" => ("d", "{}", DType::F64, None),
-            "fused_ingress" => (
-                "s",
-                r#"{"steps": [{"op": "trim"}, {"op": "case", "mode": "upper"}, {"op": "hash64"}]}"#,
-                DType::I64,
-                None,
-            ),
-            other => panic!("ingress op '{other}' has no interpreter-coverage template"),
-        }
-    }
+    // (templates live in super::coverage, shared with tests/properties.rs)
 
     #[test]
     fn every_registered_graph_op_runs_in_the_interpreter() {

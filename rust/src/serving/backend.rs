@@ -272,6 +272,22 @@ impl InterpretedBackend {
         }
     }
 
+    /// Backend over the `eval_node` oracle interpreter — no kernel
+    /// program is compiled, every request walks the original per-node
+    /// env path. This is the differential / benchmark baseline for the
+    /// kernel-program hot path (`benches/kernel_program.rs`), never the
+    /// backend `load_backend` serves.
+    pub fn new_oracle(spec: GraphSpec) -> InterpretedBackend {
+        let variants: Vec<String> = spec.variants().into_iter().map(str::to_string).collect();
+        let variant_outputs = variants.iter().map(|v| spec.variant_outputs(v)).collect();
+        InterpretedBackend {
+            name: format!("{}-interpreted-oracle", spec.name),
+            variants,
+            variant_outputs,
+            interp: SpecInterpreter::new_oracle(spec),
+        }
+    }
+
     /// Output indices a routed group resolves to: the variant's own
     /// outputs, or every output for untargeted groups.
     fn outputs_for(&self, variant: Option<&str>) -> Result<Vec<usize>> {

@@ -1,17 +1,28 @@
 //! The serving stack — the online half of the paper's story.
 //!
 //! A deployed preprocessing model is served by a [`Server`]: a request
-//! router over named model variants, each with a dynamic batcher
-//! ([`batcher`]) in front of a [`Backend`]:
+//! router over named model variants, each with a dynamic batcher (the
+//! `batcher` module behind [`Server`]) in front of a [`Backend`]:
 //!
 //! * [`CompiledBackend`] — Rust ingress (string ops via the engine
 //!   kernels) + AOT-compiled HLO executed through PJRT, with batch-bucket
 //!   padding. This is the paper's "Keras model in TensorFlow Java"
 //!   replacement — python never runs here.
-//! * [`InterpretedBackend`] — same ingress, graph section interpreted
-//!   columnar op-by-op (the ablation point: columnar but uncompiled).
+//! * [`InterpretedBackend`] — same ingress, graph section executed
+//!   columnar without HLO (the ablation point: columnar but uncompiled).
+//!   At load the spec is compiled once into a **kernel program**
+//!   (typed, slot-indexed, attribute-pre-parsed — see
+//!   [`crate::export::SpecInterpreter`]); specs the kernel compiler
+//!   cannot handle fall back to the per-node `eval_node` oracle, which
+//!   [`InterpretedBackend::new_oracle`] also exposes directly as the
+//!   differential/benchmark baseline (`benches/kernel_program.rs`).
 //! * [`MleapBackend`] — row-at-a-time boxed interpretation of the fitted
 //!   pipeline ([`crate::baselines`]), the MLeap stand-in.
+//!
+//! End to end the serving pipeline is **spec → optimized IR → kernel
+//! program → pooled server**: the optimizer rewrites the spec at load,
+//! the interpreter compiles the rewritten spec into a kernel program,
+//! and the worker pool below drains batches through it.
 //!
 //! `bench_serve` is the open-loop Poisson driver used for experiments
 //! C3/C5 (latency vs mode, 200 req/s sustained service);
@@ -84,7 +95,8 @@
 //!
 //! ## Network front-end
 //!
-//! [`net`] puts a wire in front of the pool: a std-only threaded
+//! The `net` module ([`NetServer`]) puts a wire in front of the pool: a
+//! std-only threaded
 //! HTTP/1.1 listener (`kamae serve --listen`) that decodes JSON request
 //! bodies into row batches, admits them through a bounded window, and
 //! feeds the same [`Server`] —

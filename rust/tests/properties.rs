@@ -1,6 +1,9 @@
 //! Property-based tests on coordinator invariants: routing/batching
 //! (tensor split/concat round trips), pipeline state (save/load/re-save
-//! canonicalisation), spec-builder invariants, and ingress determinism.
+//! canonicalisation), spec-builder invariants, ingress determinism, and
+//! the kernel-program differential (compiled columnar hot path ==
+//! `eval_node` oracle, bit for bit, per registry op / lane kind / null
+//! mask / routed cone).
 
 use kamae::dataframe::{Column, DataFrame, DType};
 use kamae::engine::Dataset;
@@ -520,4 +523,463 @@ fn pooled_server_matches_dedicated_variants_bitwise() {
     let (_, requests) = server.counts();
     assert_eq!(requests, 90);
     server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// kernel-program differential: the compiled columnar hot path must be
+// bit-identical to the `eval_node` oracle — per registry op, per
+// multi_bucketize lane kind, under null masks, and over routed cone
+// sub-programs. `SpecInterpreter::new` compiles the program (asserted
+// via `is_compiled`, so a silent fallback can't turn these into
+// oracle-vs-oracle no-ops); `new_oracle` never compiles.
+
+/// Run `spec` through both interpreter paths and compare bitwise.
+/// Divergent success/failure — or divergent error text — is a failure
+/// too: the kernel program must preserve request-time error behaviour
+/// exactly.
+fn kernel_vs_oracle_run(
+    spec: &kamae::export::GraphSpec,
+    df: &DataFrame,
+    what: &str,
+) -> Result<(), String> {
+    use kamae::export::SpecInterpreter;
+    let kernel = SpecInterpreter::new(spec.clone());
+    if !kernel.is_compiled() {
+        return Err(format!("{what}: spec did not compile to a kernel program"));
+    }
+    let oracle = SpecInterpreter::new_oracle(spec.clone());
+    match (kernel.run(df), oracle.run(df)) {
+        (Ok(k), Ok(o)) => kamae::util::prop::tensors_bit_identical(&k, &o)
+            .map_err(|e| format!("{what}: {e}")),
+        (Err(k), Err(o)) if k.to_string() == o.to_string() => Ok(()),
+        (k, o) => Err(format!(
+            "{what}: paths diverge: kernel={:?} oracle={:?}",
+            k.map(|_| "ok"),
+            o.map(|_| "ok")
+        )),
+    }
+}
+
+/// Random batch covering every column the registry coverage templates
+/// read — adversarial floats (NaN, huge magnitudes) plus occasional
+/// null masks on the scalar columns (masks ride through both paths and
+/// must not perturb the output bits).
+fn random_kernel_df(rng: &mut Rng) -> DataFrame {
+    let rows = 1 + rng.below(9) as usize;
+    let f_col = |rng: &mut Rng| -> Column {
+        if rng.below(4) == 0 {
+            Column::from_f64_opt(
+                (0..rows)
+                    .map(|_| {
+                        if rng.below(5) == 0 { None } else { Some(gen::f64_mixed(rng)) }
+                    })
+                    .collect(),
+            )
+        } else {
+            Column::from_f64((0..rows).map(|_| gen::f64_mixed(rng)).collect())
+        }
+    };
+    let i_vals = |rng: &mut Rng| -> Vec<i64> {
+        // modest range: date_part arithmetic on arbitrary i64 days
+        // would overflow (identically in both paths, but panicking
+        // under debug), so stay in a sane day window
+        (0..rows).map(|_| rng.below(40_000) as i64 - 20_000).collect()
+    };
+    let xi = if rng.below(4) == 0 {
+        let nulls: Vec<bool> = (0..rows).map(|_| rng.below(5) == 0).collect();
+        let mask = if nulls.iter().any(|&n| n) { Some(nulls) } else { None };
+        Column::I64(i_vals(rng), mask)
+    } else {
+        Column::from_i64(i_vals(rng))
+    };
+    let strings: Vec<String> = (0..rows)
+        .map(|_| {
+            if rng.below(2) == 0 {
+                // embedded separator so split_pad / concat do real work
+                format!("{}-{}", gen::string(rng, 5), gen::string(rng, 5))
+            } else {
+                gen::string(rng, 8)
+            }
+        })
+        .collect();
+    let s = if rng.below(4) == 0 {
+        Column::from_str_opt(
+            strings
+                .iter()
+                .map(|v| if rng.below(6) == 0 { None } else { Some(v.clone()) })
+                .collect(),
+        )
+    } else {
+        Column::from_str(strings)
+    };
+    DataFrame::new(vec![
+        ("s".into(), s),
+        (
+            "ls".into(),
+            Column::from_str_rows(
+                (0..rows)
+                    .map(|_| vec![gen::string(rng, 4), gen::string(rng, 4)])
+                    .collect(),
+            ),
+        ),
+        ("xf".into(), f_col(rng)),
+        ("yf".into(), f_col(rng)),
+        ("xi".into(), xi),
+        (
+            "vf".into(),
+            Column::from_f64_rows(
+                (0..rows).map(|_| vec![gen::f64_mixed(rng), gen::f64_mixed(rng)]).collect(),
+            ),
+        ),
+        (
+            "vi".into(),
+            Column::from_i64_rows(
+                (0..rows)
+                    .map(|_| vec![rng.below(100) as i64 - 50, rng.below(100) as i64 - 50])
+                    .collect(),
+            ),
+        ),
+        (
+            "d".into(),
+            Column::from_str(
+                (0..rows)
+                    .map(|_| {
+                        format!(
+                            "20{:02}-{:02}-{:02}",
+                            rng.below(30),
+                            1 + rng.below(12),
+                            1 + rng.below(28)
+                        )
+                    })
+                    .collect::<Vec<String>>(),
+            ),
+        ),
+        (
+            "ts".into(),
+            Column::from_str(
+                (0..rows)
+                    .map(|_| {
+                        format!(
+                            "20{:02}-{:02}-{:02} {:02}:{:02}:{:02}",
+                            rng.below(30),
+                            1 + rng.below(12),
+                            1 + rng.below(28),
+                            rng.below(24),
+                            rng.below(60),
+                            rng.below(60)
+                        )
+                    })
+                    .collect::<Vec<String>>(),
+            ),
+        ),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn kernel_program_matches_oracle_on_every_graph_op() {
+    // every graph-section registry op, instantiated from its coverage
+    // template, over randomized batches (NaN, null masks, tiny rows)
+    use kamae::export::{GraphSpec, SpecNode};
+    use kamae::optim::registry::{coverage, OPS};
+    use kamae::util::json::Json;
+
+    check_res(
+        "kernel program == eval_node oracle per graph op (bitwise)",
+        10,
+        random_kernel_df,
+        |df| {
+            for info in OPS.iter().filter(|o| o.section.allows_graph()) {
+                let (inputs, attrs, dtype, width) = coverage::graph_template(info.name);
+                let spec = GraphSpec {
+                    name: format!("op_{}", info.name),
+                    inputs: coverage::sample_inputs(),
+                    ingress: vec![],
+                    graph_inputs: inputs.iter().map(|s| s.to_string()).collect(),
+                    nodes: vec![SpecNode {
+                        id: "out".into(),
+                        op: info.name.into(),
+                        inputs: inputs.iter().map(|s| s.to_string()).collect(),
+                        attrs: Json::parse(attrs).unwrap(),
+                        dtype,
+                        width,
+                        lanes: vec![],
+                    }],
+                    outputs: vec!["out".into()],
+                };
+                kernel_vs_oracle_run(&spec, df, info.name)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_program_matches_oracle_on_every_ingress_op() {
+    // every ingress-section registry op through `run_ingress` (the
+    // pre-parsed ingress kernels vs the per-node oracle walk). String
+    // outputs can't cross into the graph section, so each template op
+    // is chained into a hash64 node whose i64 output is the observable
+    // graph input — same trick the engine uses for string features.
+    use kamae::export::{GraphSpec, SpecDType, SpecInterpreter, SpecNode};
+    use kamae::optim::registry::{coverage, OPS};
+    use kamae::util::json::Json;
+
+    check_res(
+        "kernel ingress == oracle ingress per op (bitwise)",
+        10,
+        random_kernel_df,
+        |df| {
+            for info in OPS.iter().filter(|o| o.section.allows_ingress()) {
+                let (input, attrs, out_dtype, width) = coverage::ingress_template(info.name);
+                let out_width = match &out_dtype {
+                    DType::List(_) => width,
+                    _ => None,
+                };
+                let node = |id: &str, op: &str, input: &str, attrs: &str, dtype, width| SpecNode {
+                    id: id.into(),
+                    op: op.into(),
+                    inputs: vec![input.into()],
+                    attrs: Json::parse(attrs).unwrap(),
+                    dtype,
+                    width,
+                    lanes: vec![],
+                };
+                let spec = GraphSpec {
+                    name: format!("ing_{}", info.name),
+                    inputs: vec![
+                        SpecInput { name: "s".into(), dtype: DType::Str, width: None },
+                        SpecInput {
+                            name: "ls".into(),
+                            dtype: DType::List(Box::new(DType::Str)),
+                            width: Some(2),
+                        },
+                        SpecInput { name: "d".into(), dtype: DType::Str, width: None },
+                        SpecInput { name: "ts".into(), dtype: DType::Str, width: None },
+                    ],
+                    ingress: vec![
+                        node(
+                            "mid",
+                            info.name,
+                            input,
+                            attrs,
+                            SpecDType::for_engine(&out_dtype),
+                            width,
+                        ),
+                        // hash64 accepts every template output shape:
+                        // Str and List(Str) hash directly, numeric /
+                        // bool scalars hash via their string render
+                        node("out_h", "hash64", "mid", "{}", SpecDType::I64, out_width),
+                    ],
+                    graph_inputs: vec!["out_h".into()],
+                    nodes: vec![],
+                    outputs: vec![],
+                };
+                let what = info.name;
+                let kernel = SpecInterpreter::new(spec.clone());
+                if !kernel.is_compiled() {
+                    return Err(format!("{what}: spec did not compile to a kernel program"));
+                }
+                let oracle = SpecInterpreter::new_oracle(spec);
+                match (kernel.run_ingress(df), oracle.run_ingress(df)) {
+                    (Ok(k), Ok(o)) => kamae::util::prop::tensors_bit_identical(&k, &o)
+                        .map_err(|e| format!("{what}: {e}"))?,
+                    (Err(k), Err(o)) if k.to_string() == o.to_string() => {}
+                    (k, o) => {
+                        return Err(format!(
+                            "{what}: paths diverge: kernel={:?} oracle={:?}",
+                            k.map(|_| "ok"),
+                            o.map(|_| "ok")
+                        ))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kernel_program_matches_oracle_on_multilane_bucketize() {
+    // the multi-output node: one shared split search feeding all three
+    // lane kinds (bucket remap, f32-rounded compare, remapped
+    // bucket_compare), with randomized splits / remap tables / compare
+    // ops, and probe values planted exactly ON split boundaries
+    use kamae::export::{GraphSpec, SpecDType, SpecInput, SpecLane, SpecNode};
+    use kamae::util::json::Json;
+
+    check_res(
+        "kernel program == oracle on multi_bucketize lanes (bitwise)",
+        25,
+        |rng| {
+            let n_splits = 1 + rng.below(4) as usize;
+            let mut splits = Vec::with_capacity(n_splits);
+            let mut s = -2.0 + rng.f64();
+            for _ in 0..n_splits {
+                splits.push(s);
+                s += 0.1 + rng.f64();
+            }
+            let remap =
+                |rng: &mut Rng| -> Vec<i64> { (0..=n_splits).map(|_| rng.below(10) as i64).collect() };
+            let (r1, r2) = (remap(rng), remap(rng));
+            let cmps = ["lt", "le", "gt", "ge", "eq", "ne"];
+            let op1 = cmps[rng.below(6) as usize];
+            let op2 = cmps[rng.below(6) as usize];
+            // half the thresholds sit exactly on a split / remap value
+            // to probe the boundary semantics of the rounded compares
+            let value = |rng: &mut Rng| -> f64 {
+                if rng.below(2) == 0 {
+                    splits[rng.below(n_splits as u64) as usize]
+                } else {
+                    -3.0 + 6.0 * rng.f64()
+                }
+            };
+            let (v1, v2) = (value(rng), value(rng));
+            let rows = 1 + rng.below(16) as usize;
+            let xs: Vec<f64> = (0..rows)
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        // exact boundary hit: partition_point's `<=` edge
+                        splits[rng.below(n_splits as u64) as usize]
+                    } else {
+                        gen::f64_mixed(rng)
+                    }
+                })
+                .collect();
+            (splits, r1, r2, op1, op2, v1, v2, xs)
+        },
+        |(splits, r1, r2, op1, op2, v1, v2, xs)| {
+            let arr = |vals: &[f64]| {
+                vals.iter().map(|v| format!("{v:?}")).collect::<Vec<_>>().join(", ")
+            };
+            let iarr = |vals: &[i64]| {
+                vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+            };
+            let lane = |name: &str, attrs: String| SpecLane {
+                name: name.into(),
+                attrs: Json::parse(&attrs).unwrap(),
+                dtype: SpecDType::I64,
+                width: None,
+            };
+            let spec = GraphSpec {
+                name: "mlb_prop".into(),
+                inputs: vec![SpecInput { name: "x".into(), dtype: DType::F64, width: None }],
+                ingress: vec![],
+                graph_inputs: vec!["x".into()],
+                nodes: vec![SpecNode {
+                    id: "mx".into(),
+                    op: "multi_bucketize".into(),
+                    inputs: vec!["x".into()],
+                    attrs: Json::parse(&format!(r#"{{"splits": [{}]}}"#, arr(splits))).unwrap(),
+                    dtype: SpecDType::I64,
+                    width: None,
+                    lanes: vec![
+                        lane("lb", format!(r#"{{"kind": "bucket", "remap": [{}]}}"#, iarr(r1))),
+                        lane(
+                            "lc",
+                            format!(r#"{{"kind": "compare", "op": "{op1}", "value": {v1:?}}}"#),
+                        ),
+                        lane(
+                            "lbc",
+                            format!(
+                                r#"{{"kind": "bucket_compare", "remap": [{}], "op": "{op2}", "value": {v2:?}}}"#,
+                                iarr(r2)
+                            ),
+                        ),
+                    ],
+                }],
+                outputs: vec!["lb".into(), "lc".into(), "lbc".into()],
+            };
+            let df = DataFrame::new(vec![("x".into(), Column::from_f64(xs.clone()))])
+                .map_err(|e| e.to_string())?;
+            kernel_vs_oracle_run(&spec, &df, "multi_bucketize lanes")
+        },
+    );
+}
+
+#[test]
+fn kernel_program_routed_cones_match_oracle_bitwise() {
+    // routed serving: per-group cone SUB-programs on the merged LTR
+    // catalog vs the oracle's env-walking `run_routed`, over random
+    // request interleavings / sizes / variant mixes — plus the plain
+    // all-outputs `process` path on the same mixed frames
+    use kamae::optim::OptimizeLevel;
+    use kamae::pipeline::catalog;
+    use kamae::serving::{request_pool, Backend, InterpretedBackend, VariantGroup};
+
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig { rows: 2_000, ..Default::default() });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let export = |name: &str, outputs: &[&str]| {
+        model
+            .to_graph_spec_opt(name, catalog::ltr_inputs(), outputs, OptimizeLevel::Full)
+            .unwrap()
+            .0
+    };
+    let full = export("ltr", &catalog::LTR_OUTPUTS);
+    let lite = export("ltr_lite", &catalog::LTR_LITE_OUTPUTS);
+    let merged =
+        kamae::export::GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged, _) = kamae::optim::optimize(merged, OptimizeLevel::Full).unwrap();
+    // the differential is vacuous if the kernel compiler fell back
+    assert!(
+        kamae::export::SpecInterpreter::new(merged.clone()).is_compiled(),
+        "merged LTR catalog spec did not compile to a kernel program"
+    );
+    let kernel = InterpretedBackend::new(merged.clone());
+    let oracle = InterpretedBackend::new_oracle(merged);
+    let pool = request_pool("ltr", 512).unwrap();
+
+    check_res(
+        "kernel routed cones == oracle routed (bitwise)",
+        10,
+        |rng| {
+            let n = 1 + rng.below(5) as usize;
+            (0..n)
+                .map(|_| {
+                    let rows = 1 + rng.below(12) as usize;
+                    let start = rng.below((pool.num_rows() - rows) as u64) as usize;
+                    let lite = rng.below(2) == 0;
+                    (start, rows, lite)
+                })
+                .collect::<Vec<_>>()
+        },
+        |requests| {
+            // batcher shape: contiguous per-variant groups
+            let mut order: Vec<&(usize, usize, bool)> = Vec::new();
+            for lite in [false, true] {
+                order.extend(requests.iter().filter(|r| r.2 == lite));
+            }
+            let frames: Vec<DataFrame> =
+                order.iter().map(|&&(start, rows, _)| pool.slice(start, rows)).collect();
+            let refs: Vec<&DataFrame> = frames.iter().collect();
+            let merged_df = DataFrame::concat(&refs).map_err(|e| e.to_string())?;
+            let mut groups = Vec::new();
+            let mut row = 0usize;
+            for lite in [false, true] {
+                let len: usize = requests.iter().filter(|r| r.2 == lite).map(|r| r.1).sum();
+                if len > 0 {
+                    groups.push(VariantGroup {
+                        variant: Some(if lite { "ltr_lite" } else { "ltr" }.to_string()),
+                        rows: row..row + len,
+                    });
+                    row += len;
+                }
+            }
+            let k = kernel.process_routed(&merged_df, &groups).map_err(|e| e.to_string())?;
+            let o = oracle.process_routed(&merged_df, &groups).map_err(|e| e.to_string())?;
+            if k.len() != o.len() {
+                return Err(format!("group count: kernel {} vs oracle {}", k.len(), o.len()));
+            }
+            for (g, (kg, og)) in groups.iter().zip(k.iter().zip(o.iter())) {
+                kamae::util::prop::tensors_bit_identical(kg, og)
+                    .map_err(|e| format!("routed {:?}: {e}", g.variant))?;
+            }
+            let kp = kernel.process(&merged_df).map_err(|e| e.to_string())?;
+            let op = oracle.process(&merged_df).map_err(|e| e.to_string())?;
+            kamae::util::prop::tensors_bit_identical(&kp, &op)
+                .map_err(|e| format!("process: {e}"))
+        },
+    );
 }

@@ -1,0 +1,206 @@
+#!/usr/bin/env python3
+"""Compare bench trajectory artifacts and fail on throughput regressions.
+
+The nightly `bench-trajectory` job runs `make bench-all`, which appends
+one run per bench to `BENCH_<name>.json` (a JSON array of runs; each run
+is ``{"bench": ..., "quick": ..., "records": [...]}``). This tool diffs
+the freshly produced files against the previous night's artifact and
+exits non-zero when any gated throughput metric dropped by more than the
+allowed regression.
+
+Gated metrics are the numeric record fields whose key ends in ``_rps``
+or starts with ``throughput`` — the same naming every gated bench uses
+for its req/s numbers. Latency fields (``*_ns``), counts and cost fields
+are reported for context only, never gated (they scale with workload
+knobs, not just machine speed).
+
+Only the LATEST non-quick run in each file is compared: quick
+(``"quick": true``) runs are the `make bench-smoke` flavour with reduced
+workloads — their numbers are not comparable across nights. The CI
+smoke job redirects its trajectory output to a temp dir via
+``KAMAE_BENCH_DIR`` precisely so quick runs never land in the nightly
+artifact; finding one in --current therefore fails the run (it means
+that redirect regressed).
+
+Usage:
+    python3 tools/bench_compare.py --current . --previous prev-artifact/
+
+Exit codes: 0 ok (including "no previous artifact yet"), 1 regression or
+malformed input.
+
+Override knob: ``--max-regression <pct>`` (default 10), or the
+``KAMAE_BENCH_COMPARE_MAX_REGRESSION`` env var — e.g. set it to 25 on a
+known-noisy runner, or to a huge value with an accompanying commit
+message to deliberately accept a regression. The env var loses to an
+explicit flag.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_MAX_REGRESSION_PCT = 10.0
+
+
+def is_gated_metric(key, value):
+    """Numeric throughput field? (bools are ints in Python — exclude.)"""
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        return False
+    return key.endswith("_rps") or key.startswith("throughput")
+
+
+def load_runs(path):
+    with open(path) as f:
+        runs = json.load(f)
+    if not isinstance(runs, list):
+        raise ValueError(f"{path}: expected a JSON array of runs")
+    return runs
+
+
+def latest_full_run(runs):
+    """Last run whose `quick` field is not true, or None."""
+    for run in reversed(runs):
+        if isinstance(run, dict) and run.get("quick") is not True:
+            return run
+    return None
+
+
+def record_label(record, index):
+    """Stable-ish label for one record inside a run."""
+    for key in ("name", "mode", "spec"):
+        v = record.get(key)
+        if isinstance(v, str) and v:
+            return v
+    return f"record[{index}]"
+
+
+def gated_metrics(run):
+    """{(record_label, key): value} for every gated metric in a run."""
+    out = {}
+    for i, record in enumerate(run.get("records", [])):
+        if not isinstance(record, dict):
+            continue
+        label = record_label(record, i)
+        for key, value in record.items():
+            if is_gated_metric(key, value):
+                out[(label, key)] = float(value)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="dir with fresh BENCH_*.json files")
+    ap.add_argument("--previous", required=True, help="dir with the prior artifact's BENCH_*.json files")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=None,
+        help=f"allowed throughput drop in percent (default {DEFAULT_MAX_REGRESSION_PCT}, "
+        "env KAMAE_BENCH_COMPARE_MAX_REGRESSION)",
+    )
+    args = ap.parse_args()
+
+    max_regression = args.max_regression
+    if max_regression is None:
+        env = os.environ.get("KAMAE_BENCH_COMPARE_MAX_REGRESSION", "")
+        try:
+            max_regression = float(env) if env else DEFAULT_MAX_REGRESSION_PCT
+        except ValueError:
+            print(f"bad KAMAE_BENCH_COMPARE_MAX_REGRESSION={env!r}", file=sys.stderr)
+            return 1
+
+    current_files = sorted(glob.glob(os.path.join(args.current, "BENCH_*.json")))
+    if not current_files:
+        print(f"no BENCH_*.json files in --current {args.current}", file=sys.stderr)
+        return 1
+    if not os.path.isdir(args.previous) or not glob.glob(
+        os.path.join(args.previous, "BENCH_*.json")
+    ):
+        # first nightly run (or artifact expired): nothing to diff against
+        print(f"no previous artifact in {args.previous!r}; skipping comparison")
+        return 0
+
+    failures = []
+    compared = 0
+    for cur_path in current_files:
+        bench = os.path.basename(cur_path)
+        try:
+            cur_runs = load_runs(cur_path)
+        except (ValueError, json.JSONDecodeError) as e:
+            failures.append(f"{bench}: unreadable current file: {e}")
+            continue
+
+        # smoke-exclusion assert: quick runs must never reach the
+        # nightly artifact (bench-smoke writes to a KAMAE_BENCH_DIR
+        # temp dir; a quick run here means that redirect regressed)
+        quick_runs = sum(
+            1 for r in cur_runs if isinstance(r, dict) and r.get("quick") is True
+        )
+        if quick_runs:
+            failures.append(
+                f"{bench}: {quick_runs} quick (smoke) run(s) in the nightly artifact — "
+                "bench-smoke must write to a KAMAE_BENCH_DIR temp dir, not the repo"
+            )
+            continue
+
+        cur = latest_full_run(cur_runs)
+        if cur is None:
+            failures.append(f"{bench}: no full (non-quick) run in current file")
+            continue
+
+        prev_path = os.path.join(args.previous, bench)
+        if not os.path.exists(prev_path):
+            print(f"{bench}: new bench (no previous file); skipping")
+            continue
+        try:
+            prev = latest_full_run(load_runs(prev_path))
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"{bench}: unreadable previous file ({e}); skipping")
+            continue
+        if prev is None:
+            print(f"{bench}: previous file has no full run; skipping")
+            continue
+
+        cur_metrics = gated_metrics(cur)
+        prev_metrics = gated_metrics(prev)
+        for (label, key), prev_value in sorted(prev_metrics.items()):
+            cur_value = cur_metrics.get((label, key))
+            if cur_value is None:
+                # a renamed/removed metric is not a perf regression;
+                # note it so silent gate erosion is at least visible
+                print(f"{bench} {label}.{key}: metric gone from current run")
+                continue
+            if prev_value <= 0:
+                continue
+            delta_pct = 100.0 * (cur_value / prev_value - 1.0)
+            verdict = "ok"
+            if delta_pct < -max_regression:
+                verdict = "REGRESSION"
+                failures.append(
+                    f"{bench} {label}.{key}: {prev_value:.0f} -> {cur_value:.0f} "
+                    f"({delta_pct:+.1f}%, allowed -{max_regression:g}%)"
+                )
+            print(
+                f"{bench} {label}.{key}: {prev_value:.0f} -> {cur_value:.0f} "
+                f"({delta_pct:+.1f}%) {verdict}"
+            )
+            compared += 1
+
+    print(f"\ncompared {compared} gated metric(s), {len(failures)} failure(s)")
+    if failures:
+        print("", file=sys.stderr)
+        for f in failures:
+            print(f"BENCH COMPARE FAILURE: {f}", file=sys.stderr)
+        print(
+            "\noverride: --max-regression <pct> or KAMAE_BENCH_COMPARE_MAX_REGRESSION "
+            "(see examples/bench_compare.md)",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
