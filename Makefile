@@ -10,7 +10,7 @@
 # and `harness = false` [[bench]]/[[example]] entries for everything
 # under benches/ and examples/ (each defines its own `fn main`).
 
-.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-smoke bench-all artifacts clean
+.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-smoke bench-all artifacts clean
 
 verify:
 	cargo build --release
@@ -60,6 +60,15 @@ bench-net-serving:
 bench-kernel-program:
 	cargo bench --bench kernel_program
 
+# Registry hot-swap serving: closed-loop routed traffic against a
+# registry-resolved tenant while a deployer thread swaps the active
+# version every few ms (plus periodic full rebuilds), responses pinned
+# bit-for-bit against dedicated oracles DURING the storm, gated at
+# >= 90% of the no-swap baseline throughput with zero lost requests and
+# bounded swap visibility; appends to BENCH_hot_swap.json.
+bench-hot-swap:
+	cargo bench --bench hot_swap
+
 # CI smoke flavour of the gated benches: reduced rows/requests, exits
 # non-zero if optimized throughput regresses below the unoptimized
 # baseline, if multilane-bucketize / cross-output-dedup fail to fire on
@@ -70,17 +79,20 @@ bench-kernel-program:
 # against the single-thread baseline, if the HTTP listener fails to
 # shed under overload / sheds too slowly, or if the kernel program
 # fails to compile for / outpace the eval_node oracle on the LTR
-# catalog (the gates the bench-smoke CI job enforces).
+# catalog, or if hot-swapping the registry's active version under load
+# costs more than 10% throughput, loses a request, or stalls a swap
+# past its visibility bound (the gates the bench-smoke CI job enforces).
 bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench variant_routing
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench worker_pool
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench net_serving
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench kernel_program
+	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench hot_swap
 
 # Every bench, each appending a record to its BENCH_<name>.json
 # trajectory file (serving benches skip themselves without artifacts).
-bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program
+bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap
 	cargo bench --bench movielens_pipeline
 	cargo bench --bench native_vs_udf
 	cargo bench --bench indexing

@@ -1,0 +1,429 @@
+//! Hot-swap serving benchmark — the gate for the spec registry's
+//! zero-downtime claim: continuous deploys must not meaningfully dent
+//! throughput, drop requests, or change a single bit of any response.
+//!
+//! No artifacts needed: the LTR pipeline is fitted in-process and
+//! exported as the merged `ltr+ltr_lite` spec exactly like
+//! `benches/worker_pool.rs`. The merged backend is deployed as tenant
+//! `ltr` in a [`SpecRegistry`] behind a 4-worker [`Server`], then driven
+//! with CLOSED-loop mixed routed traffic two ways:
+//!
+//! * **steady** — no deploys: the no-swap baseline throughput;
+//! * **swap storm** — the same traffic while a deployer thread swaps
+//!   the tenant's active version every few milliseconds (pre-built
+//!   backends, O(1) Arc swaps) and periodically rebuilds from raw specs
+//!   (`deploy_specs`: merge → optimize → compile, all off the swap
+//!   path).
+//!
+//! Before any timing, the **differential pin** runs: concurrent routed
+//! requests during a live swap storm must come back bit-identical to
+//! dedicated single-variant oracle backends — whichever version serves
+//! a request, the answer is the same, and no request errors or is
+//! dropped mid-swap.
+//!
+//! Every run appends machine-readable records to `BENCH_hot_swap.json`.
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + request count
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero unless swap-storm
+//!                                 throughput holds >= 90% of steady,
+//!                                 every request is accounted to exactly
+//!                                 one version, and the slowest swap
+//!                                 stays under the visibility bound
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kamae::dataframe::DataFrame;
+use kamae::engine::Dataset;
+use kamae::export::GraphSpec;
+use kamae::optim::{optimize, OptimizeLevel};
+use kamae::pipeline::catalog;
+use kamae::runtime::Tensor;
+use kamae::serving::{
+    request_pool, Backend, BatchConfig, InterpretedBackend, LatencyRecorder, Server, SpecRegistry,
+};
+use kamae::util::bench::{append_run, Table};
+use kamae::util::json::Json;
+use kamae::util::prop::tensors_bit_identical;
+use kamae::util::rng::Rng;
+
+const ROWS_PER_REQUEST: usize = 8;
+const PRODUCERS: usize = 4;
+/// Per-producer in-flight window (same shape as `worker_pool.rs`).
+const WINDOW: usize = 16;
+const POOL_WORKERS: usize = 4;
+const TENANT: &str = "ltr";
+/// Pause between storm swaps: short enough that every closed-loop run
+/// sees many swaps, long enough that the deployer doesn't monopolise
+/// the tenant's write lock.
+const SWAP_PAUSE: Duration = Duration::from_millis(3);
+/// Every Nth storm swap is a full rebuild from raw specs instead of a
+/// pre-built Arc swap — the expensive path must also stay off-path.
+const REBUILD_EVERY: u64 = 16;
+/// Swap visibility bound: time from "new version built" to "active".
+const MAX_SWAP: Duration = Duration::from_millis(100);
+
+type RespRx = std::sync::mpsc::Receiver<kamae::error::Result<Vec<Tensor>>>;
+
+/// Fit LTR once: dedicated oracles + the merged spec the tenant serves.
+fn build_specs(fit_rows: usize) -> (GraphSpec, GraphSpec, GraphSpec) {
+    let data = kamae::synth::gen_ltr(&kamae::synth::LtrConfig {
+        rows: fit_rows,
+        ..Default::default()
+    });
+    let model = catalog::ltr_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let (full, _) = model
+        .to_graph_spec_opt("ltr", catalog::ltr_inputs(), &catalog::LTR_OUTPUTS, OptimizeLevel::Full)
+        .unwrap();
+    let (lite, _) = model
+        .to_graph_spec_opt(
+            "ltr_lite",
+            catalog::ltr_inputs(),
+            &catalog::LTR_LITE_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    let merged = GraphSpec::merge_variants("ltr+ltr_lite", &[&full, &lite]).unwrap();
+    let (merged, _) = optimize(merged, OptimizeLevel::Full).unwrap();
+    (full, lite, merged)
+}
+
+/// Pre-built request streams, identical across phases.
+fn build_requests(
+    pool: &DataFrame,
+    producers: usize,
+    per_producer: usize,
+) -> Vec<Vec<(DataFrame, &'static str)>> {
+    let mut rng = Rng::new(0xD00D);
+    (0..producers)
+        .map(|_| {
+            (0..per_producer)
+                .map(|i| {
+                    let start =
+                        rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+                    let variant = if i % 2 == 0 { "ltr" } else { "ltr_lite" };
+                    (pool.slice(start, ROWS_PER_REQUEST), variant)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Closed-loop driver against the registry-backed server: every request
+/// is addressed to the tenant and MUST succeed (a dropped or errored
+/// response during a swap fails the bench by panic). Returns wall time.
+fn drive_closed_loop(
+    server: &Server,
+    streams: &[Vec<(DataFrame, &'static str)>],
+    recorder: &LatencyRecorder,
+) -> Duration {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for stream in streams {
+            scope.spawn(move || {
+                let mut pending: VecDeque<(Instant, &'static str, RespRx)> = VecDeque::new();
+                for (df, variant) in stream {
+                    let sent = Instant::now();
+                    let rx = server.submit_tenant(df.clone(), TENANT, Some(*variant));
+                    pending.push_back((sent, *variant, rx));
+                    while pending.len() >= WINDOW {
+                        let (sent, variant, rx) = pending.pop_front().unwrap();
+                        rx.recv().unwrap().unwrap();
+                        recorder.record_variant(variant, sent.elapsed());
+                    }
+                }
+                for (sent, variant, rx) in pending {
+                    rx.recv().unwrap().unwrap();
+                    recorder.record_variant(variant, sent.elapsed());
+                }
+            });
+        }
+    });
+    t0.elapsed()
+}
+
+/// Deployer thread body: alternate pre-built backends with O(1) swaps,
+/// rebuilding from raw specs every `REBUILD_EVERY`th deploy. Returns
+/// (swaps, rebuilds, max swap ns, total swap ns).
+fn swap_storm(
+    registry: &SpecRegistry,
+    prebuilt: &[Arc<dyn Backend>],
+    raw_specs: &[GraphSpec],
+    stop: &AtomicBool,
+) -> (u64, u64, u64, u64) {
+    let mut swaps = 0u64;
+    let mut rebuilds = 0u64;
+    let mut max_swap_ns = 0u64;
+    let mut total_swap_ns = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        let summary = if swaps % REBUILD_EVERY == REBUILD_EVERY - 1 {
+            rebuilds += 1;
+            registry
+                .deploy_specs(TENANT, raw_specs, None, Some(OptimizeLevel::Full))
+                .unwrap()
+        } else {
+            let backend = Arc::clone(&prebuilt[(swaps % prebuilt.len() as u64) as usize]);
+            registry.deploy_backend(TENANT, backend, None).unwrap()
+        };
+        let ns = summary.swap.as_nanos() as u64;
+        max_swap_ns = max_swap_ns.max(ns);
+        total_swap_ns += ns;
+        swaps += 1;
+        std::thread::sleep(SWAP_PAUSE);
+    }
+    (swaps, rebuilds, max_swap_ns, total_swap_ns)
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let (fit_rows, per_producer) = if quick { (2_000, 400) } else { (20_000, 2_000) };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows, {per_producer} requests/producer)\n");
+    }
+    let total_requests = PRODUCERS * per_producer;
+
+    let (full, lite, merged) = build_specs(fit_rows);
+    println!(
+        "merged ltr+ltr_lite: {} ingress + {} graph nodes, {} outputs",
+        merged.ingress.len(),
+        merged.nodes.len(),
+        merged.outputs.len()
+    );
+    let pool_df = request_pool("ltr", 4096).unwrap();
+    let streams = build_requests(&pool_df, PRODUCERS, per_producer);
+    let raw_specs = vec![full.clone(), lite.clone()];
+    // the storm alternates between two independently-built instances of
+    // the same optimized spec: bit-identical by construction, so the
+    // oracle pin below holds whichever version answers
+    let prebuilt: Vec<Arc<dyn Backend>> = (0..2)
+        .map(|_| Arc::new(InterpretedBackend::new(merged.clone())) as Arc<dyn Backend>)
+        .collect();
+
+    // ---- differential pin: responses during a live swap storm are
+    // bit-identical to dedicated oracles, zero requests lost ---------------
+    {
+        let registry = Arc::new(SpecRegistry::with_level(OptimizeLevel::Full));
+        registry
+            .deploy_backend(TENANT, Arc::clone(&prebuilt[0]), None)
+            .unwrap();
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            BatchConfig { workers: POOL_WORKERS, ..BatchConfig::default() },
+        )
+        .unwrap();
+        let full_backend = InterpretedBackend::new(full.clone());
+        let lite_backend = InterpretedBackend::new(lite.clone());
+        let stop = AtomicBool::new(false);
+        let pinned = AtomicU64::new(0);
+        let (swaps, ..) = std::thread::scope(|scope| {
+            let deployer = scope.spawn(|| swap_storm(&registry, &prebuilt, &raw_specs, &stop));
+            for stream in streams.iter() {
+                let (server, stop, pinned) = (&server, &stop, &pinned);
+                let full_backend = &full_backend;
+                let lite_backend = &lite_backend;
+                scope.spawn(move || {
+                    for (df, variant) in stream.iter().take(48) {
+                        let got = server
+                            .submit_tenant(df.clone(), TENANT, Some(*variant))
+                            .recv()
+                            .unwrap()
+                            .unwrap();
+                        let want = if *variant == "ltr" {
+                            full_backend.process(df).unwrap()
+                        } else {
+                            lite_backend.process(df).unwrap()
+                        };
+                        if let Err(e) = tensors_bit_identical(&got, &want) {
+                            panic!("{variant} under swap storm vs dedicated oracle: {e}");
+                        }
+                        pinned.fetch_add(1, Ordering::Relaxed);
+                    }
+                    stop.store(true, Ordering::SeqCst);
+                });
+            }
+            deployer.join().unwrap()
+        });
+        let (_, requests) = server.counts();
+        server.shutdown();
+        assert_eq!(requests, pinned.load(Ordering::Relaxed), "pin lost requests");
+        assert!(swaps > 0, "the pin never saw a swap");
+        println!(
+            "differential pin: {} routed requests bit-identical to oracles across {swaps} live swaps\n",
+            pinned.load(Ordering::Relaxed)
+        );
+    }
+
+    // ---- steady baseline: no deploys --------------------------------------
+    let steady_report = {
+        let registry = Arc::new(SpecRegistry::with_level(OptimizeLevel::Full));
+        registry
+            .deploy_backend(TENANT, Arc::clone(&prebuilt[0]), None)
+            .unwrap();
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            BatchConfig { workers: POOL_WORKERS, ..BatchConfig::default() },
+        )
+        .unwrap();
+        let recorder = LatencyRecorder::new();
+        let wall = drive_closed_loop(&server, &streams, &recorder);
+        let worker_busy = server.worker_busy_times();
+        let (_, requests) = server.counts();
+        server.shutdown();
+        assert_eq!(requests as usize, total_requests, "steady phase lost requests");
+        let report = recorder.report_pool(
+            "ltr+ltr_lite/hot-swap-steady",
+            total_requests,
+            wall,
+            &worker_busy,
+        );
+        println!("{report}\n");
+        report
+    };
+
+    // ---- swap storm: same traffic under continuous deploys ----------------
+    let (storm_report, swaps, rebuilds, max_swap_ns, mean_swap_ns, versions_serving) = {
+        let registry = Arc::new(SpecRegistry::with_level(OptimizeLevel::Full));
+        registry
+            .deploy_backend(TENANT, Arc::clone(&prebuilt[0]), None)
+            .unwrap();
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            BatchConfig { workers: POOL_WORKERS, ..BatchConfig::default() },
+        )
+        .unwrap();
+        let recorder = LatencyRecorder::new();
+        let stop = AtomicBool::new(false);
+        let (wall, storm) = std::thread::scope(|scope| {
+            let deployer = scope.spawn(|| swap_storm(&registry, &prebuilt, &raw_specs, &stop));
+            let wall = drive_closed_loop(&server, &streams, &recorder);
+            stop.store(true, Ordering::SeqCst);
+            (wall, deployer.join().unwrap())
+        });
+        let (swaps, rebuilds, max_swap_ns, total_swap_ns) = storm;
+        let worker_busy = server.worker_busy_times();
+        let (_, requests) = server.counts();
+        server.shutdown();
+        assert_eq!(requests as usize, total_requests, "swap storm lost requests");
+        // every request is accounted to exactly ONE version
+        let snapshot = registry.snapshot();
+        let tenant = snapshot.iter().find(|s| s.tenant == TENANT).unwrap();
+        let per_version_total: u64 = tenant.versions.iter().map(|v| v.requests).sum();
+        assert_eq!(
+            per_version_total, total_requests as u64,
+            "per-version request counters do not conserve the total"
+        );
+        let versions_serving =
+            tenant.versions.iter().filter(|v| v.requests > 0).count();
+        assert!(
+            versions_serving >= 2,
+            "traffic never spanned a swap ({versions_serving} version(s) served)"
+        );
+        let report = recorder.report_pool(
+            "ltr+ltr_lite/hot-swap-storm",
+            total_requests,
+            wall,
+            &worker_busy,
+        );
+        println!("{report}");
+        println!(
+            "swaps {swaps} ({rebuilds} full rebuilds)  versions serving {versions_serving}  \
+             swap max {:.1}µs  mean {:.1}µs\n",
+            max_swap_ns as f64 / 1e3,
+            total_swap_ns as f64 / swaps.max(1) as f64 / 1e3
+        );
+        (
+            report,
+            swaps,
+            rebuilds,
+            max_swap_ns,
+            total_swap_ns as f64 / swaps.max(1) as f64,
+            versions_serving,
+        )
+    };
+
+    let steady_rps = steady_report.throughput_rps;
+    let storm_rps = storm_report.throughput_rps;
+    let retention = if steady_rps > 0.0 { storm_rps / steady_rps } else { 0.0 };
+    let mut table = Table::new(&["mode", "throughput", "vs steady"]);
+    for (label, r) in [("steady (no swaps)", steady_rps), ("swap storm", storm_rps)] {
+        table.row(&[
+            label.into(),
+            format!("{r:.0} req/s"),
+            format!("{:+.1}%", 100.0 * (r / steady_rps - 1.0)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nthroughput retention under {swaps} swaps: {:.1}%  (gate: >= 90%)\n",
+        100.0 * retention
+    );
+
+    // ---- trajectory + gate ------------------------------------------------
+    let mut records = vec![steady_report.to_json(), storm_report.to_json()];
+    let mut rec = Json::object();
+    rec.set("spec", "ltr+ltr_lite");
+    rec.set("mode", "hot-swap");
+    rec.set("producers", PRODUCERS);
+    rec.set("window", WINDOW);
+    rec.set("rows_per_request", ROWS_PER_REQUEST);
+    rec.set("pool_workers", POOL_WORKERS);
+    rec.set("steady_rps", steady_rps);
+    rec.set("swap_storm_rps", storm_rps);
+    rec.set("retention", retention);
+    rec.set("swaps", swaps as i64);
+    rec.set("rebuilds", rebuilds as i64);
+    rec.set("versions_serving", versions_serving);
+    rec.set("max_swap_ns", max_swap_ns as f64);
+    rec.set("mean_swap_ns", mean_swap_ns);
+    records.push(rec);
+    let path = append_run("hot_swap", &[("quick", Json::Bool(quick))], records)
+        .expect("bench trajectory");
+    println!("appended run to {}", path.display());
+
+    let mut gate_failures = Vec::new();
+    if storm_rps < 0.9 * steady_rps {
+        gate_failures.push(format!(
+            "swap-storm throughput {storm_rps:.0} req/s fell below 90% of the no-swap \
+             baseline {steady_rps:.0} req/s ({:.1}% retention)",
+            100.0 * retention
+        ));
+    }
+    if swaps < 10 {
+        gate_failures.push(format!(
+            "only {swaps} swaps landed during the storm — the storm did not storm"
+        ));
+    }
+    if max_swap_ns > MAX_SWAP.as_nanos() as u64 {
+        gate_failures.push(format!(
+            "slowest swap took {:.1}ms, visibility bound is {:?}",
+            max_swap_ns as f64 / 1e6,
+            MAX_SWAP
+        ));
+    }
+    if gate {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        if !gate_failures.is_empty() {
+            std::process::exit(1);
+        }
+    } else {
+        for f in &gate_failures {
+            eprintln!("warning (ungated): {f}");
+        }
+    }
+}

@@ -92,24 +92,130 @@ pub fn read_jsonl(path: &Path, schema: &Schema) -> Result<DataFrame> {
 
 /// Build a DataFrame from already-parsed JSON row objects, typed by
 /// `schema` — the in-memory sibling of [`read_jsonl`], used by the
-/// network front-end to decode request bodies. Missing keys and JSON
-/// `null` become nulls; a non-object row is a [`KamaeError::Serde`]
-/// error naming the row index.
+/// network front-end to decode request bodies.
+///
+/// Unlike the file reader this decoder is STRICT — request bodies are
+/// caller mistakes waiting to happen, and a silent zero-fill turns a
+/// typo'd column into a wrong prediction. Every violation is a
+/// [`KamaeError::Serde`] naming the row index and offending column:
+///
+/// - a row that is not a JSON object,
+/// - a key the schema does not have (usually a typo'd column name),
+/// - a schema column the row lacks (explicit `null` is the way to send
+///   an intentional null),
+/// - a value whose JSON type does not fit the column dtype (floats fit
+///   float columns, integers fit both; nothing else coerces).
 pub fn dataframe_from_json_rows(rows: &[Json], schema: &Schema) -> Result<DataFrame> {
-    let mut builders: Vec<(String, ColumnBuilder)> = schema
+    let mut builders: Vec<ColumnBuilder> = schema
         .fields
         .iter()
-        .map(|f| (f.name.clone(), ColumnBuilder::new(f.dtype.clone())))
+        .map(|f| ColumnBuilder::new(f.dtype.clone()))
         .collect();
     for (i, row) in rows.iter().enumerate() {
-        if row.as_object().is_none() {
+        let Some(obj) = row.as_object() else {
             return Err(KamaeError::Serde(format!("row {i} is not a JSON object")));
+        };
+        for key in obj.keys() {
+            if schema.field(key).is_none() {
+                return Err(KamaeError::Serde(format!(
+                    "row {i} has unknown column '{key}' (schema columns: {})",
+                    schema.names().join(", ")
+                )));
+            }
         }
-        for (name, b) in builders.iter_mut() {
-            b.push_json(row.get(name.as_str()).unwrap_or(&Json::Null))?;
+        for (f, b) in schema.fields.iter().zip(builders.iter_mut()) {
+            let Some(v) = row.get(&f.name) else {
+                return Err(KamaeError::Serde(format!(
+                    "row {i} is missing required column '{}' (send null for an intentional null)",
+                    f.name
+                )));
+            };
+            check_json_dtype(v, &f.dtype, &f.name, i)?;
+            b.push_json(v)?;
         }
     }
-    DataFrame::new(builders.into_iter().map(|(n, b)| (n, b.finish())).collect())
+    DataFrame::new(
+        schema
+            .fields
+            .iter()
+            .zip(builders)
+            .map(|(f, b)| (f.name.clone(), b.finish()))
+            .collect(),
+    )
+}
+
+/// The JSON type name used in strict-decode error messages.
+fn json_type_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "bool",
+        Json::Int(_) => "integer",
+        Json::Float(_) => "number",
+        Json::Str(_) => "string",
+        Json::Array(_) => "array",
+        Json::Object(_) => "object",
+    }
+}
+
+/// Strict dtype check for one request cell: `null` fits everything,
+/// integers fit both integer and float columns, floats only float
+/// columns; strings, bools and arrays only their own dtype, with list
+/// elements checked against the element dtype.
+fn check_json_dtype(v: &Json, dt: &DType, col: &str, row: usize) -> Result<()> {
+    let mismatch = || {
+        Err(KamaeError::Serde(format!(
+            "row {row} column '{col}' expects {}, got JSON {}",
+            dt.name(),
+            json_type_name(v)
+        )))
+    };
+    if v.is_null() {
+        return Ok(());
+    }
+    match dt {
+        DType::Bool => match v {
+            Json::Bool(_) => Ok(()),
+            _ => mismatch(),
+        },
+        DType::I32 | DType::I64 => match v {
+            Json::Int(_) => Ok(()),
+            _ => mismatch(),
+        },
+        DType::F32 | DType::F64 => match v {
+            Json::Int(_) | Json::Float(_) => Ok(()),
+            _ => mismatch(),
+        },
+        DType::Str => match v {
+            Json::Str(_) => Ok(()),
+            _ => mismatch(),
+        },
+        DType::List(inner) => match v {
+            Json::Array(items) => {
+                for item in items {
+                    if item.is_null() {
+                        return Err(KamaeError::Serde(format!(
+                            "row {row} column '{col}' expects {}, got a null list element",
+                            dt.name()
+                        )));
+                    }
+                    let ok = match inner.as_ref() {
+                        DType::Str => matches!(item, Json::Str(_)),
+                        DType::I32 | DType::I64 => matches!(item, Json::Int(_)),
+                        _ => matches!(item, Json::Int(_) | Json::Float(_)),
+                    };
+                    if !ok {
+                        return Err(KamaeError::Serde(format!(
+                            "row {row} column '{col}' expects {}, got a {} list element",
+                            dt.name(),
+                            json_type_name(item)
+                        )));
+                    }
+                }
+                Ok(())
+            }
+            _ => mismatch(),
+        },
+    }
 }
 
 /// Write newline-delimited JSON.
@@ -431,20 +537,24 @@ mod tests {
         std::fs::remove_file(tmp).ok();
     }
 
-    #[test]
-    fn json_rows_decode_with_schema_typing() {
-        let schema = Schema {
+    fn request_schema() -> Schema {
+        Schema {
             fields: vec![
                 Field { name: "price".into(), dtype: DType::F64 },
                 Field { name: "city".into(), dtype: DType::Str },
                 Field { name: "tags".into(), dtype: DType::List(Box::new(DType::Str)) },
             ],
-        };
+        }
+    }
+
+    #[test]
+    fn json_rows_decode_with_schema_typing() {
+        let schema = request_schema();
         let rows = vec![
             Json::parse(r#"{"price": 12.5, "city": "berlin", "tags": ["a", "b"]}"#).unwrap(),
-            // integer-valued JSON numbers land in f64 columns; missing
-            // keys become nulls
-            Json::parse(r#"{"price": 99, "tags": []}"#).unwrap(),
+            // integer-valued JSON numbers land in f64 columns; explicit
+            // null is how a request sends a null cell
+            Json::parse(r#"{"price": 99, "city": null, "tags": []}"#).unwrap(),
         ];
         let df = dataframe_from_json_rows(&rows, &schema).unwrap();
         assert_eq!(df.num_rows(), 2);
@@ -455,6 +565,58 @@ mod tests {
         let bad = vec![Json::parse("[1, 2]").unwrap()];
         let err = dataframe_from_json_rows(&bad, &schema).unwrap_err();
         assert!(err.to_string().contains("row 0"), "{err}");
+    }
+
+    #[test]
+    fn json_rows_reject_wrong_dtype_naming_the_column() {
+        let schema = request_schema();
+        // (body, offending column, what the message must mention)
+        let cases = [
+            (r#"{"price": "cheap", "city": "berlin", "tags": []}"#, "price", "float64"),
+            (r#"{"price": 1.0, "city": 7, "tags": []}"#, "city", "string"),
+            (r#"{"price": 1.0, "city": "x", "tags": "a,b"}"#, "tags", "array<string>"),
+            (r#"{"price": 1.0, "city": "x", "tags": [1, 2]}"#, "tags", "list element"),
+            (r#"{"price": 1.0, "city": "x", "tags": [null]}"#, "tags", "null list element"),
+            (r#"{"price": true, "city": "x", "tags": []}"#, "price", "bool"),
+        ];
+        for (body, col, mention) in cases {
+            let rows = vec![Json::parse(body).unwrap()];
+            let err = dataframe_from_json_rows(&rows, &schema).unwrap_err().to_string();
+            assert!(err.contains(&format!("column '{col}'")), "{body}: {err}");
+            assert!(err.contains("row 0"), "{body}: {err}");
+            assert!(err.contains(mention), "{body}: {err}");
+        }
+        // integer dtypes refuse floats (silent truncation is a wrong answer)
+        let int_schema = Schema {
+            fields: vec![Field { name: "n".into(), dtype: DType::I64 }],
+        };
+        let rows = vec![Json::parse(r#"{"n": 1.5}"#).unwrap()];
+        let err = dataframe_from_json_rows(&rows, &int_schema).unwrap_err().to_string();
+        assert!(err.contains("column 'n'") && err.contains("int64"), "{err}");
+    }
+
+    #[test]
+    fn json_rows_reject_missing_and_unknown_columns() {
+        let schema = request_schema();
+        // missing required column, named, with the null hint
+        let rows = vec![
+            Json::parse(r#"{"price": 1.0, "city": "a", "tags": []}"#).unwrap(),
+            Json::parse(r#"{"price": 2.0, "tags": []}"#).unwrap(),
+        ];
+        let err = dataframe_from_json_rows(&rows, &schema).unwrap_err().to_string();
+        assert!(err.contains("row 1"), "{err}");
+        assert!(err.contains("missing required column 'city'"), "{err}");
+        // unknown extra column, named, with the schema listed
+        let rows = vec![
+            Json::parse(r#"{"price": 1.0, "city": "a", "tags": [], "pricee": 2.0}"#).unwrap(),
+        ];
+        let err = dataframe_from_json_rows(&rows, &schema).unwrap_err().to_string();
+        assert!(err.contains("unknown column 'pricee'"), "{err}");
+        assert!(err.contains("price, city, tags"), "{err}");
+        // explicit null is NOT a missing column
+        let rows = vec![Json::parse(r#"{"price": null, "city": null, "tags": null}"#).unwrap()];
+        let df = dataframe_from_json_rows(&rows, &schema).unwrap();
+        assert!(df.column("price").unwrap().is_null(0));
     }
 
     #[test]

@@ -27,6 +27,16 @@ pub enum KamaeError {
     Unsupported(String),
     /// Serving-layer errors (queue closed, deadline exceeded, ...).
     Serving(String),
+    /// A request (or admin verb) addressed a tenant the spec registry
+    /// does not know. Kept separate from [`KamaeError::Serving`] so the
+    /// network layer can map it to a typed `404 unknown_tenant` instead
+    /// of a generic 500.
+    UnknownTenant(String),
+    /// A deploy/rollback named an expected version that no longer
+    /// matches the tenant's active version (compare-and-swap lost the
+    /// race, or a rollback has nowhere to go). Maps to `409
+    /// version_conflict` on the wire.
+    VersionConflict(String),
 }
 
 impl fmt::Display for KamaeError {
@@ -45,6 +55,8 @@ impl fmt::Display for KamaeError {
             KamaeError::Xla(m) => write!(f, "xla error: {m}"),
             KamaeError::Unsupported(m) => write!(f, "unsupported: {m}"),
             KamaeError::Serving(m) => write!(f, "serving error: {m}"),
+            KamaeError::UnknownTenant(m) => write!(f, "unknown tenant: {m}"),
+            KamaeError::VersionConflict(m) => write!(f, "version conflict: {m}"),
         }
     }
 }

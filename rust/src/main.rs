@@ -39,25 +39,38 @@ fn main() {
     std::process::exit(code);
 }
 
-/// Tiny `--key value` argument map.
+/// Tiny `--key value` argument map, plus bare `--flag` switches and
+/// positional operands (`kamae deploy <tenant> <spec.json>`).
 struct Args {
     flags: std::collections::HashMap<String, String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
     fn parse(args: &[String]) -> Args {
         let mut flags = std::collections::HashMap::new();
+        let mut positionals = Vec::new();
         let mut i = 0;
         while i < args.len() {
             if let Some(key) = args[i].strip_prefix("--") {
-                let value = args.get(i + 1).cloned().unwrap_or_default();
-                flags.insert(key.to_string(), value);
-                i += 2;
+                // a following token that is itself a flag means this one
+                // is a bare switch (e.g. --registry)
+                match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), String::new());
+                        i += 1;
+                    }
+                }
             } else {
+                positionals.push(args[i].clone());
                 i += 1;
             }
         }
-        Args { flags }
+        Args { flags, positionals }
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -70,6 +83,14 @@ impl Args {
 
     fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn pos(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
     }
 }
 
@@ -87,6 +108,9 @@ fn run(raw: &[String]) -> Result<()> {
         "optimize" => optimize(&args),
         "serve-bench" => serve_bench(&args),
         "serve" => serve(&args),
+        "deploy" => deploy(&args),
+        "rollback" => rollback(&args),
+        "tenants" => tenants(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -127,7 +151,21 @@ fn print_usage() {
          \x20                  or --listen ADDR [--admission M] — serve the merged backend\n\
          \x20                  over HTTP/1.1 (POST /v1/infer, GET /healthz, GET /metrics,\n\
          \x20                  POST /admin/shutdown); at most M requests are in flight at\n\
-         \x20                  once, beyond that the listener sheds with 429 + Retry-After\n"
+         \x20                  once, beyond that the listener sheds with 429 + Retry-After\n\
+         \x20                  — add --registry [--tenants t=a+b,u=c] for multi-tenant mode:\n\
+         \x20                  each tenant serves its own merged spec set, addressed as\n\
+         \x20                  POST /v1/infer/<tenant>, hot-swappable at runtime via\n\
+         \x20                  POST /admin/deploy / /admin/rollback (zero-downtime; without\n\
+         \x20                  --tenants the --variants list becomes the 'default' tenant)\n\
+         \x20 deploy           <tenant> <spec.json[,spec2.json...]> --addr HOST:PORT\n\
+         \x20                  [--expect-version N] [--level none|basic|full] — hot-swap a\n\
+         \x20                  tenant's specs on a running --registry listener (creates the\n\
+         \x20                  tenant if new; N protects against concurrent deploys, 409 on\n\
+         \x20                  a lost race)\n\
+         \x20 rollback         <tenant> --addr HOST:PORT [--to-version N] — re-activate the\n\
+         \x20                  previous (or an explicit) still-warm version, no rebuild\n\
+         \x20 tenants          --addr HOST:PORT — list tenants, versions and per-version\n\
+         \x20                  request counts on a running listener\n"
     );
 }
 
@@ -457,7 +495,12 @@ fn serve(args: &Args) -> Result<()> {
 /// `kamae serve --listen ADDR`: put the HTTP/1.1 front-end in front of
 /// the merged routed backend and park until `POST /admin/shutdown`
 /// begins the drain. `--rps/--seconds/--route` are bench-driver knobs
-/// and are ignored here — traffic comes over the wire.
+/// and are ignored here — traffic comes over the wire. With
+/// `--registry` the listener serves a whole [`kamae::serving::SpecRegistry`]:
+/// tenants come from `--tenants t=a+b,u=c` (artifact spec names joined
+/// with `+` merge into one backend per tenant) or, without it, the
+/// `--variants` list seeds the `default` tenant; further tenants and
+/// versions deploy at runtime with zero downtime.
 fn serve_listen(
     args: &Args,
     artifacts: &Path,
@@ -465,34 +508,174 @@ fn serve_listen(
     level: kamae::optim::OptimizeLevel,
     listen: &str,
 ) -> Result<()> {
-    use kamae::serving::{BatchConfig, NetConfig, NetServer};
+    use kamae::serving::{BatchConfig, NetConfig, NetServer, SpecRegistry, DEFAULT_TENANT};
 
     let workers = args.usize_or("workers", 1);
     let admission = args.usize_or("admission", 64);
-    let spec = kamae::serving::load_variant_spec(artifacts, names, level)?;
-    println!(
-        "merged backend {}: {} ingress + {} graph nodes, {} outputs",
-        spec.name,
-        spec.ingress.len(),
-        spec.nodes.len(),
-        spec.outputs.len()
-    );
-    print_variant_costs(&spec);
-    let backend: std::sync::Arc<dyn kamae::serving::Backend> =
-        std::sync::Arc::from(kamae::serving::load_variant_backend(artifacts, names, level)?);
     let config = NetConfig {
         batch: BatchConfig { workers, ..Default::default() },
         admission,
         ..NetConfig::default()
     };
-    let server = NetServer::bind(backend, listen, config)?;
+    let registry_mode = args.has("registry");
+    let server = if registry_mode {
+        // tenant -> spec-name list; default: the --variants list under
+        // the default tenant
+        let tenant_specs: Vec<(String, Vec<String>)> = match args.get("tenants") {
+            Some(list) => {
+                let mut out = Vec::new();
+                for entry in list.split(',').filter(|s| !s.is_empty()) {
+                    let (tenant, specs) = entry.split_once('=').ok_or_else(|| {
+                        KamaeError::InvalidConfig(format!(
+                            "--tenants entries are tenant=spec[+spec...], got '{entry}'"
+                        ))
+                    })?;
+                    out.push((
+                        tenant.to_string(),
+                        specs.split('+').map(str::to_string).collect(),
+                    ));
+                }
+                out
+            }
+            None => vec![(
+                DEFAULT_TENANT.to_string(),
+                names.iter().map(|s| s.to_string()).collect(),
+            )],
+        };
+        let registry = std::sync::Arc::new(SpecRegistry::with_level(level));
+        for (tenant, spec_names) in &tenant_specs {
+            let specs = spec_names
+                .iter()
+                .map(|n| {
+                    kamae::export::GraphSpec::load(
+                        &artifacts.join("specs").join(format!("{n}.json")),
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let summary = registry.deploy_specs(tenant, &specs, None, None)?;
+            println!(
+                "tenant {tenant}: v{} backend {} ({})",
+                summary.version,
+                summary.backend,
+                spec_names.join("+")
+            );
+        }
+        NetServer::bind_registry(registry, listen, config)?
+    } else {
+        let spec = kamae::serving::load_variant_spec(artifacts, names, level)?;
+        println!(
+            "merged backend {}: {} ingress + {} graph nodes, {} outputs",
+            spec.name,
+            spec.ingress.len(),
+            spec.nodes.len(),
+            spec.outputs.len()
+        );
+        print_variant_costs(&spec);
+        let backend: std::sync::Arc<dyn kamae::serving::Backend> =
+            std::sync::Arc::from(kamae::serving::load_variant_backend(artifacts, names, level)?);
+        NetServer::bind(backend, listen, config)?
+    };
     println!(
-        "kamae serve: listening on http://{} (variants: {}; workers {workers}; admission {admission})",
+        "kamae serve: listening on http://{} ({}; workers {workers}; admission {admission})",
         server.addr(),
-        names.join(", ")
+        if registry_mode {
+            "registry mode".to_string()
+        } else {
+            format!("variants: {}", names.join(", "))
+        }
     );
-    println!("endpoints: POST /v1/infer  GET /healthz  GET /metrics  POST /admin/shutdown");
+    if registry_mode {
+        println!(
+            "endpoints: POST /v1/infer[/<tenant>]  GET /healthz  GET /metrics  \
+             POST /admin/deploy  POST /admin/rollback  GET /admin/tenants  POST /admin/shutdown"
+        );
+    } else {
+        println!("endpoints: POST /v1/infer  GET /healthz  GET /metrics  POST /admin/shutdown");
+    }
     server.wait();
     println!("kamae serve: drained and stopped");
     Ok(())
+}
+
+/// POST `body` to `path` on the listener at `--addr`, pretty-print the
+/// JSON reply, and fail loudly on a non-2xx status (the wire error body
+/// carries the typed code + message).
+fn admin_call(args: &Args, method: &str, path: &str, body: &str) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| {
+        KamaeError::InvalidConfig("--addr HOST:PORT required (a running `kamae serve --listen --registry`)".into())
+    })?;
+    let mut client = kamae::serving::NetClient::connect(addr)?;
+    let resp = client.request(method, path, &[], body)?;
+    let pretty = resp
+        .json()
+        .map(|j| j.to_string_pretty())
+        .unwrap_or_else(|_| resp.body.clone());
+    if resp.status >= 300 {
+        return Err(KamaeError::Serving(format!(
+            "{path} returned {}: {pretty}",
+            resp.status
+        )));
+    }
+    println!("{pretty}");
+    Ok(())
+}
+
+/// `kamae deploy <tenant> <spec.json[,spec2.json...]> --addr HOST:PORT`
+/// — hot-swap a tenant's spec set on a running registry listener. The
+/// listener builds the new version off the request path and swaps
+/// atomically; in-flight requests finish on the old version.
+fn deploy(args: &Args) -> Result<()> {
+    use kamae::util::json::Json;
+
+    let tenant = args.pos(0).ok_or_else(|| {
+        KamaeError::InvalidConfig("usage: kamae deploy <tenant> <spec.json[,spec2...]> --addr HOST:PORT".into())
+    })?;
+    let spec_paths = args.pos(1).ok_or_else(|| {
+        KamaeError::InvalidConfig("usage: kamae deploy <tenant> <spec.json[,spec2...]> --addr HOST:PORT".into())
+    })?;
+    let mut specs = Vec::new();
+    for p in spec_paths.split(',').filter(|s| !s.is_empty()) {
+        // parse locally first: a bad file should fail here, not 400 on
+        // the server
+        specs.push(kamae::export::GraphSpec::load(&PathBuf::from(p))?.to_json());
+    }
+    let mut body = Json::object();
+    body.set("tenant", tenant);
+    body.set("specs", Json::Array(specs));
+    if let Some(v) = args.get("expect-version") {
+        let v: i64 = v.parse().map_err(|_| {
+            KamaeError::InvalidConfig(format!("--expect-version takes an integer, got {v}"))
+        })?;
+        body.set("expect_version", v);
+    }
+    if let Some(level) = args.get("level") {
+        kamae::optim::OptimizeLevel::parse(level)?; // fail fast locally
+        body.set("level", level);
+    }
+    admin_call(args, "POST", "/admin/deploy", &body.to_string())
+}
+
+/// `kamae rollback <tenant> --addr HOST:PORT [--to-version N]` —
+/// re-activate a previous still-warm version (no rebuild).
+fn rollback(args: &Args) -> Result<()> {
+    use kamae::util::json::Json;
+
+    let tenant = args.pos(0).ok_or_else(|| {
+        KamaeError::InvalidConfig("usage: kamae rollback <tenant> --addr HOST:PORT [--to-version N]".into())
+    })?;
+    let mut body = Json::object();
+    body.set("tenant", tenant);
+    if let Some(v) = args.get("to-version") {
+        let v: i64 = v.parse().map_err(|_| {
+            KamaeError::InvalidConfig(format!("--to-version takes an integer, got {v}"))
+        })?;
+        body.set("to_version", v);
+    }
+    admin_call(args, "POST", "/admin/rollback", &body.to_string())
+}
+
+/// `kamae tenants --addr HOST:PORT` — registry snapshot: every tenant's
+/// versions with per-version request counts.
+fn tenants(args: &Args) -> Result<()> {
+    admin_call(args, "GET", "/admin/tenants", "")
 }

@@ -46,6 +46,20 @@ pub trait Backend: Send + Sync {
     /// Process one (possibly merged) request batch.
     fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>>;
 
+    /// The wire-facing request schema, derived from the spec's declared
+    /// inputs. `None` for spec-less backends — the registry carries it
+    /// per deployed version so the network layer decodes rows against
+    /// the SAME version that will execute them.
+    fn request_schema(&self) -> Option<crate::dataframe::Schema> {
+        self.spec().map(|s| crate::dataframe::Schema {
+            fields: s
+                .inputs
+                .iter()
+                .map(|i| crate::dataframe::Field { name: i.name.clone(), dtype: i.dtype.clone() })
+                .collect(),
+        })
+    }
+
     /// Named variants requests may target ([`VariantGroup::variant`] /
     /// `Server::submit_variant`) — the `"<variant>::"` output prefixes
     /// of a merged multi-variant spec. Empty for single-variant

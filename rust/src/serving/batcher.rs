@@ -3,21 +3,36 @@
 //! Requests (small DataFrames) queue onto one shared [`JobQueue`]; N
 //! worker threads ([`BatchConfig::workers`]) each drain up to
 //! `max_batch_rows` or until `max_wait` elapses from the first queued
-//! request, concatenate their drained jobs into one batch, run the ONE
-//! shared backend once, then split the output tensors back per request —
-//! amortising graph-execution overhead exactly the way TF-Serving's
-//! dynamic batching does for the paper's production service, but across
-//! every core instead of one.
+//! request, concatenate their drained jobs into one batch, run the
+//! job's resolved backend once, then split the output tensors back per
+//! request — amortising graph-execution overhead exactly the way
+//! TF-Serving's dynamic batching does for the paper's production
+//! service, but across every core instead of one.
+//!
+//! ## Registry resolution & hot swap
+//!
+//! The pool no longer owns a backend: every job carries the
+//! `Arc<TenantVersion>` it resolved from the shared
+//! [`SpecRegistry`] at submit time ([`Server::submit_tenant`]), so ONE
+//! pool serves many tenants and a live deploy never touches the pool.
+//! Workers sub-batch the jobs they drained by resolved version
+//! (`Arc::ptr_eq` — a version is identity, not equality) and run each
+//! version's backend exactly once per sub-batch; a job drained across a
+//! hot swap still executes on the version it resolved, so in-flight
+//! requests finish on the old backend bit-for-bit while new arrivals
+//! resolve the new one. The single-spec [`Server::start`] /
+//! [`Server::start_shared`] API is a thin wrapper: a one-tenant
+//! registry under [`DEFAULT_TENANT`].
 //!
 //! ## Worker pool
 //!
-//! The backend is shared (`Arc<dyn Backend>`, immutable after load), so
-//! workers call it concurrently with no synchronisation of their own:
-//! batch formation is serialised by the queue mutex (held only while
-//! *draining*, never while *processing*), and everything after the drain
-//! — concat, backend call, response split — runs outside any lock. Each
-//! worker owns its [`WorkerMetrics`]; the hot path touches no shared
-//! mutex, and [`Server::busy_time`] / [`Server::counts`] /
+//! Backends are shared (`Arc<dyn Backend>`, immutable once deployed),
+//! so workers call them concurrently with no synchronisation of their
+//! own: batch formation is serialised by the queue mutex (held only
+//! while *draining*, never while *processing*), and everything after
+//! the drain — concat, backend call, response split — runs outside any
+//! lock. Each worker owns its [`WorkerMetrics`]; the hot path touches
+//! no shared mutex, and [`Server::busy_time`] / [`Server::counts`] /
 //! [`Server::variant_counts`] merge the per-worker counters at read
 //! time.
 //!
@@ -49,6 +64,7 @@ use crate::error::{KamaeError, Result};
 use crate::runtime::Tensor;
 
 use super::backend::{Backend, VariantGroup};
+use super::registry::{SpecRegistry, TenantVersion, DEFAULT_TENANT};
 
 /// Batching policy.
 #[derive(Debug, Clone)]
@@ -116,6 +132,11 @@ struct Job {
     /// Target variant of a merged multi-variant backend; `None` asks
     /// for the full output set.
     variant: Option<String>,
+    /// The tenant version this request resolved at submit time. The job
+    /// executes on THIS backend even if a deploy swaps the tenant's
+    /// active version while it is queued — hot swaps never change a
+    /// request mid-flight.
+    resolved: Arc<TenantVersion>,
     resp: mpsc::Sender<Result<Vec<Tensor>>>,
 }
 
@@ -245,19 +266,21 @@ impl WorkerMetrics {
     }
 }
 
-/// A running server: N batcher threads draining one shared queue
-/// against one shared backend.
+/// A running server: N batcher threads draining one shared queue, each
+/// job executing on the tenant version it resolved from the shared
+/// [`SpecRegistry`] at submit time.
 pub struct Server {
     queue: Arc<JobQueue>,
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Vec<Arc<WorkerMetrics>>,
-    /// Variant names the backend can route, captured before the workers
-    /// spawn; `None` when routing is disabled
-    /// ([`BatchConfig::route_variants`] off — tags are ignored, so
-    /// nothing is validated). Used to reject unknown variants at submit
-    /// time: a bad tag must error its OWN request, never poison the
-    /// co-batched ones.
-    known_variants: Option<Vec<String>>,
+    /// The registry requests resolve against. Deploys/rollbacks through
+    /// this handle take effect on the NEXT submit; nothing queued or
+    /// in-flight changes.
+    registry: Arc<SpecRegistry>,
+    /// Captured from [`BatchConfig::route_variants`]: when off, variant
+    /// tags are ignored rather than validated, so submits skip the
+    /// known-variant check.
+    route_variants: bool,
 }
 
 impl Server {
@@ -271,23 +294,32 @@ impl Server {
 
     /// [`Server::start`] over an already-shared backend — callers that
     /// keep probing the backend while the server runs (benches, tests)
-    /// clone the `Arc` instead of round-tripping raw pointers.
+    /// clone the `Arc` instead of round-tripping raw pointers. A thin
+    /// wrapper over [`Server::start_registry`] with a one-tenant
+    /// registry ([`DEFAULT_TENANT`]) — the single-spec API is
+    /// registry-backed underneath, so it inherits hot-swap support for
+    /// free while behaving exactly as before.
     pub fn start_shared(backend: Arc<dyn Backend>, config: BatchConfig) -> Result<Server> {
         config.validate()?;
-        let known_variants =
-            if config.route_variants { Some(backend.variants().to_vec()) } else { None };
+        Server::start_registry(SpecRegistry::single(DEFAULT_TENANT, backend)?, config)
+    }
+
+    /// Spawn the worker pool over a [`SpecRegistry`]: requests address
+    /// tenants ([`Server::submit_tenant`]), deploys/rollbacks through
+    /// the registry handle swap versions with zero downtime.
+    pub fn start_registry(registry: Arc<SpecRegistry>, config: BatchConfig) -> Result<Server> {
+        config.validate()?;
         let queue = Arc::new(JobQueue::new());
         let mut metrics = Vec::with_capacity(config.workers);
         let mut workers = Vec::with_capacity(config.workers);
         for i in 0..config.workers {
             let m = Arc::new(WorkerMetrics::new());
             metrics.push(Arc::clone(&m));
-            let backend = Arc::clone(&backend);
             let queue = Arc::clone(&queue);
             let config = config.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("kamae-batcher-{i}"))
-                .spawn(move || worker_loop(backend, config, queue, m))
+                .spawn(move || worker_loop(config, queue, m))
                 .map_err(|e| {
                     KamaeError::Serving(format!("failed to spawn batcher worker {i}: {e}"))
                 });
@@ -303,48 +335,92 @@ impl Server {
                 }
             }
         }
-        Ok(Server { queue, workers, metrics, known_variants })
+        Ok(Server {
+            queue,
+            workers,
+            metrics,
+            registry,
+            route_variants: config.route_variants,
+        })
     }
 
-    /// Submit an untargeted request; the receiver yields the backend's
-    /// full output tensors for this request's rows.
+    /// The registry this pool resolves requests against — deploy /
+    /// rollback / snapshot through this handle while the pool serves.
+    pub fn registry(&self) -> &Arc<SpecRegistry> {
+        &self.registry
+    }
+
+    /// Submit an untargeted request to the default tenant; the receiver
+    /// yields the backend's full output tensors for this request's rows.
     pub fn submit(&self, df: DataFrame) -> mpsc::Receiver<Result<Vec<Tensor>>> {
-        self.enqueue(df, None)
+        self.submit_tenant(df, DEFAULT_TENANT, None)
     }
 
-    /// Submit a request targeting one variant of a merged multi-variant
-    /// backend; the receiver yields only that variant's output tensors
-    /// (in the variant's own output order). Unknown variants (or a
-    /// backend without variant support) error on THIS request's
-    /// receiver immediately — the bad tag never reaches a worker, so
-    /// it cannot fail the requests it would have been coalesced with.
+    /// Submit a request targeting one variant of the default tenant's
+    /// merged multi-variant backend; the receiver yields only that
+    /// variant's output tensors (in the variant's own output order).
+    /// Unknown variants (or a backend without variant support) error on
+    /// THIS request's receiver immediately — the bad tag never reaches
+    /// a worker, so it cannot fail the requests it would have been
+    /// coalesced with.
     pub fn submit_variant(
         &self,
         df: DataFrame,
         variant: &str,
     ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
-        if let Some(known) = &self.known_variants {
-            if !known.iter().any(|v| v == variant) {
-                let (resp_tx, resp_rx) = mpsc::channel();
-                let _ = resp_tx.send(Err(KamaeError::Serving(format!(
-                    "no variant '{variant}' to route to (backend variants: {})",
-                    known.join(", ")
-                ))));
-                return resp_rx;
-            }
-        }
-        self.enqueue(df, Some(variant.to_string()))
+        self.submit_tenant(df, DEFAULT_TENANT, Some(variant))
     }
 
-    fn enqueue(
+    /// Submit a request addressed to `tenant` (optionally targeting one
+    /// of its variants): resolves the tenant's active version ONCE,
+    /// then rides that version to completion regardless of concurrent
+    /// deploys. Unknown tenants and (when routing is on) unknown
+    /// variants error on this request's own receiver immediately.
+    pub fn submit_tenant(
+        &self,
+        df: DataFrame,
+        tenant: &str,
+        variant: Option<&str>,
+    ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        match self.registry.resolve(tenant) {
+            Ok(resolved) => self.submit_resolved(df, variant.map(str::to_string), resolved),
+            Err(e) => Self::reject(e),
+        }
+    }
+
+    /// Submit against an already-resolved tenant version — callers that
+    /// validated a request against a version (the network front-end)
+    /// use this so validation, execution and output naming all see the
+    /// SAME version even across a concurrent hot swap.
+    pub fn submit_resolved(
         &self,
         df: DataFrame,
         variant: Option<String>,
+        resolved: Arc<TenantVersion>,
     ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        if self.route_variants {
+            if let Some(v) = &variant {
+                let known = resolved.variants();
+                if !known.iter().any(|k| k == v) {
+                    return Self::reject(KamaeError::Serving(format!(
+                        "no variant '{v}' to route to (backend variants: {})",
+                        known.join(", ")
+                    )));
+                }
+            }
+        }
         let (resp_tx, resp_rx) = mpsc::channel();
-        if let Err(job) = self.queue.push(Job { df, variant, resp: resp_tx }) {
+        if let Err(job) = self.queue.push(Job { df, variant, resolved, resp: resp_tx }) {
             let _ = job.resp.send(Err(KamaeError::Serving("server stopped".into())));
         }
+        resp_rx
+    }
+
+    /// A receiver already primed with `err` — submit-time rejections
+    /// fail their OWN request without touching the queue.
+    fn reject(err: KamaeError) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let _ = resp_tx.send(Err(err));
         resp_rx
     }
 
@@ -412,12 +488,7 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(
-    backend: Arc<dyn Backend>,
-    config: BatchConfig,
-    queue: Arc<JobQueue>,
-    metrics: Arc<WorkerMetrics>,
-) {
+fn worker_loop(config: BatchConfig, queue: Arc<JobQueue>, metrics: Arc<WorkerMetrics>) {
     while let Some(jobs) = queue.pop_batch(config.max_batch_rows, config.max_wait) {
         {
             // this worker is the map's only hot-path writer; the lock
@@ -427,27 +498,46 @@ fn worker_loop(
                 *counts.entry(job.variant.clone().unwrap_or_default()).or_insert(0) += 1;
             }
         }
-        let routed = config.route_variants && jobs.iter().any(|j| j.variant.is_some());
-        let t0 = Instant::now();
-        let result = if routed {
-            run_batch_routed(backend.as_ref(), &jobs)
-        } else {
-            run_batch(backend.as_ref(), &jobs)
-        };
-        metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-
-        match result {
-            Ok(per_job) => {
-                for (job, tensors) in jobs.into_iter().zip(per_job) {
-                    let _ = job.resp.send(Ok(tensors));
+        // sub-batch by resolved tenant version (Arc identity): a drain
+        // can straddle tenants — or a hot swap on ONE tenant — and each
+        // version's backend must see only its own jobs. Arrival order
+        // is preserved within each sub-batch; in the common steady
+        // state (one tenant, no swap in flight) this is a single group
+        // and the loop body is exactly the pre-registry hot path.
+        let mut sub_batches: Vec<(Arc<TenantVersion>, Vec<Job>)> = Vec::new();
+        for job in jobs {
+            match sub_batches.iter_mut().find(|(v, _)| Arc::ptr_eq(v, &job.resolved)) {
+                Some((_, members)) => members.push(job),
+                None => {
+                    let version = Arc::clone(&job.resolved);
+                    sub_batches.push((version, vec![job]));
                 }
             }
-            Err(e) => {
-                let msg = e.to_string();
-                for job in jobs {
-                    let _ = job.resp.send(Err(KamaeError::Serving(msg.clone())));
+        }
+        for (version, jobs) in sub_batches {
+            let routed = config.route_variants && jobs.iter().any(|j| j.variant.is_some());
+            let t0 = Instant::now();
+            let result = if routed {
+                run_batch_routed(version.backend(), &jobs)
+            } else {
+                run_batch(version.backend(), &jobs)
+            };
+            metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            version.record_served(jobs.len() as u64);
+
+            match result {
+                Ok(per_job) => {
+                    for (job, tensors) in jobs.into_iter().zip(per_job) {
+                        let _ = job.resp.send(Ok(tensors));
+                    }
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    for job in jobs {
+                        let _ = job.resp.send(Err(KamaeError::Serving(msg.clone())));
+                    }
                 }
             }
         }
@@ -1059,11 +1149,75 @@ mod tests {
         let backend = Arc::new(Doubler::new());
         let server = Server::start_shared(backend.clone(), BatchConfig::default()).unwrap();
         let queue = Arc::clone(&server.queue);
+        let resolved = server.registry().resolve(DEFAULT_TENANT).unwrap();
         server.shutdown();
         // the queue is closed: a late push is handed back
         let (tx, rx) = mpsc::channel();
-        let job = Job { df: req(&[1.0]), variant: None, resp: tx };
+        let job = Job { df: req(&[1.0]), variant: None, resolved, resp: tx };
         assert!(queue.push(job).is_err());
         drop(rx);
+    }
+
+    // ---- registry addressing ----------------------------------------------
+
+    #[test]
+    fn unknown_tenant_errors_only_its_own_request() {
+        // like an unknown variant, an unknown tenant is rejected at
+        // submit time on its own channel — co-batched requests to real
+        // tenants are untouched
+        let server = Server::start(Box::new(Doubler::new()), BatchConfig::default()).unwrap();
+        let bad = server.submit_tenant(req(&[1.0]), "ghost", None);
+        let ok = server.submit(req(&[1.0]));
+        let err = bad.recv().unwrap().unwrap_err();
+        assert!(matches!(err, KamaeError::UnknownTenant(_)), "{err}");
+        assert!(err.to_string().contains("ghost"), "{err}");
+        assert_eq!(ok.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[2.0]);
+        let (_, requests) = server.counts();
+        assert_eq!(requests, 1, "rejected tenant reached the batcher");
+        server.shutdown();
+    }
+
+    #[test]
+    fn one_pool_serves_multiple_tenants() {
+        // two tenants with bit-distinguishable backends behind ONE
+        // queue + worker: each request lands on its own tenant's
+        // backend, and the single-spec submit keeps addressing the
+        // default tenant
+        let registry = Arc::new(SpecRegistry::new());
+        registry
+            .deploy_backend(DEFAULT_TENANT, Arc::new(Doubler::new()), None)
+            .unwrap();
+        registry
+            .deploy_backend("variants", Arc::new(VariantDoubler::new()), None)
+            .unwrap();
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            BatchConfig {
+                max_batch_rows: 1024,
+                max_wait: Duration::from_millis(20),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        // burst within one batching window so a drain can straddle both
+        // tenants — the worker must still split per version
+        let rx_default = server.submit(req(&[2.0]));
+        let rx_tri = server.submit_tenant(req(&[2.0]), "variants", Some("tri"));
+        let rx_both = server.submit_tenant(req(&[2.0]), "variants", None);
+        assert_eq!(rx_default.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[4.0]);
+        let tri = rx_tri.recv().unwrap().unwrap();
+        assert_eq!(tri.len(), 1);
+        assert_eq!(tri[0].as_f32().unwrap(), &[6.0]);
+        let both = rx_both.recv().unwrap().unwrap();
+        assert_eq!(both.len(), 2);
+        assert_eq!(both[0].as_f32().unwrap(), &[4.0]);
+        assert_eq!(both[1].as_f32().unwrap(), &[6.0]);
+        // per-version counters saw each tenant's own traffic
+        let snap = registry.snapshot();
+        let by_name: BTreeMap<_, _> =
+            snap.iter().map(|s| (s.tenant.as_str(), s)).collect();
+        assert_eq!(by_name[DEFAULT_TENANT].versions[0].requests, 1);
+        assert_eq!(by_name["variants"].versions[0].requests, 2);
+        server.shutdown();
     }
 }

@@ -13,6 +13,10 @@ use crate::util::json::Json;
 pub struct LatencyRecorder {
     samples_ns: Mutex<Vec<f64>>,
     tagged_ns: Mutex<BTreeMap<String, Vec<f64>>>,
+    /// Per-tenant samples of a registry-mode run. Kept separate from
+    /// the variant map so one request tagged both ways is never double
+    /// counted in either split.
+    tenant_ns: Mutex<BTreeMap<String, Vec<f64>>>,
 }
 
 impl LatencyRecorder {
@@ -20,6 +24,7 @@ impl LatencyRecorder {
         LatencyRecorder {
             samples_ns: Mutex::new(Vec::new()),
             tagged_ns: Mutex::new(BTreeMap::new()),
+            tenant_ns: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -37,6 +42,18 @@ impl LatencyRecorder {
             .entry(variant.to_string())
             .or_default()
             .push(ns);
+    }
+
+    /// Record a sample under a tenant — ONLY in the per-tenant split;
+    /// the caller records the aggregate (and any variant tag)
+    /// separately, so tenant splits never inflate the overall stats.
+    pub fn record_tenant(&self, tenant: &str, latency: Duration) {
+        self.tenant_ns
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_default()
+            .push(latency.as_nanos() as f64);
     }
 
     /// Produce the final report.
@@ -76,6 +93,27 @@ impl LatencyRecorder {
                 }
             })
             .collect();
+        let tenants = self
+            .tenant_ns
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(tenant, samples)| {
+                let mut ts = samples.clone();
+                ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let tp = |p: f64| if ts.is_empty() { 0.0 } else { percentile(&ts, p) };
+                TenantStats {
+                    tenant: tenant.clone(),
+                    requests: ts.len(),
+                    shed: 0,
+                    active_version: 0,
+                    mean_ns: ts.iter().sum::<f64>() / ts.len().max(1) as f64,
+                    p50_ns: tp(50.0),
+                    p95_ns: tp(95.0),
+                    p99_ns: tp(99.0),
+                }
+            })
+            .collect();
         ServeReport {
             name: name.to_string(),
             requests,
@@ -96,6 +134,7 @@ impl LatencyRecorder {
                 busy.as_secs_f64() / (requests as f64 / 1000.0)
             },
             variants,
+            tenants,
             workers: 1,
             worker_utilization: Vec::new(),
             shed_requests: 0,
@@ -159,6 +198,46 @@ impl VariantStats {
     }
 }
 
+/// Per-tenant request/latency/shed split of a registry-mode serving
+/// run, with the tenant's active-version gauge. Latency fields come
+/// from [`LatencyRecorder::record_tenant`] samples; `shed` and
+/// `active_version` are stamped by the layer that owns those counters
+/// (the network front-end's per-tenant shed map and the registry
+/// snapshot).
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub tenant: String,
+    pub requests: usize,
+    /// Requests for this tenant refused by admission control.
+    pub shed: usize,
+    /// The tenant's active registry version at report time (gauge);
+    /// 0 when the run was not registry-backed.
+    pub active_version: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl TenantStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("tenant", self.tenant.clone());
+        j.set("requests", self.requests);
+        if self.shed > 0 {
+            j.set("shed", self.shed);
+        }
+        if self.active_version > 0 {
+            j.set("active_version", self.active_version as i64);
+        }
+        j.set("mean_ns", self.mean_ns);
+        j.set("p50_ns", self.p50_ns);
+        j.set("p95_ns", self.p95_ns);
+        j.set("p99_ns", self.p99_ns);
+        j
+    }
+}
+
 /// One serving benchmark run's results (experiments C3/C5).
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -176,6 +255,9 @@ pub struct ServeReport {
     /// Per-variant split of a routed run (empty when nothing was
     /// recorded per variant — single-variant benches are unchanged).
     pub variants: Vec<VariantStats>,
+    /// Per-tenant split of a registry-mode run (empty when nothing was
+    /// recorded per tenant — single-spec runs are unchanged).
+    pub tenants: Vec<TenantStats>,
     /// Batcher threads that served the run ([`Self::report`] runs are
     /// single-worker; [`LatencyRecorder::report_pool`] records the pool
     /// size).
@@ -224,6 +306,14 @@ impl ServeReport {
             j.set(
                 "variants",
                 Json::Array(self.variants.iter().map(VariantStats::to_json).collect()),
+            );
+        }
+        // tenant keys appear only on registry-mode runs, so single-spec
+        // trajectory records keep their exact pre-registry shape
+        if !self.tenants.is_empty() {
+            j.set(
+                "tenants",
+                Json::Array(self.tenants.iter().map(TenantStats::to_json).collect()),
             );
         }
         // pool keys appear only on multi-worker runs, so single-worker
@@ -288,6 +378,18 @@ impl std::fmt::Display for ServeReport {
                 fmt_ns(v.p50_ns),
                 fmt_ns(v.p95_ns),
                 fmt_ns(v.p99_ns)
+            )?;
+        }
+        for t in &self.tenants {
+            write!(
+                f,
+                "\n  tenant  {:<12} {:>6} req  shed {:>4}  v{}  p50 {}  p99 {}",
+                t.tenant,
+                t.requests,
+                t.shed,
+                t.active_version,
+                fmt_ns(t.p50_ns),
+                fmt_ns(t.p99_ns)
             )?;
         }
         Ok(())
@@ -375,6 +477,49 @@ mod tests {
         assert!(j.get("variants").is_none());
         // display renders the split
         assert!(rep.to_string().contains("variant ltr_lite"));
+    }
+
+    #[test]
+    fn per_tenant_split_gates_like_variants() {
+        let r = LatencyRecorder::new();
+        // the handler records aggregate and tenant separately — the
+        // tenant split must not inflate the overall sample set
+        r.record(Duration::from_millis(4));
+        r.record_tenant("shop", Duration::from_millis(4));
+        r.record(Duration::from_millis(2));
+        r.record_tenant("ads", Duration::from_millis(2));
+        let mut rep =
+            r.report("registry/net", 2, Duration::from_secs(1), Duration::from_millis(6));
+        assert_eq!(rep.requests, 2);
+        assert_eq!(rep.tenants.len(), 2);
+        let ads = &rep.tenants[0];
+        assert_eq!((ads.tenant.as_str(), ads.requests), ("ads", 1));
+        assert!(ads.p99_ns <= 3e6, "{}", ads.p99_ns);
+        let shop = &rep.tenants[1];
+        assert_eq!((shop.tenant.as_str(), shop.requests), ("shop", 1));
+        assert!(shop.p50_ns >= 3e6, "{}", shop.p50_ns);
+        // shed / active_version are stamped by the owning layer and
+        // gate their own keys inside each tenant record
+        rep.tenants[1].shed = 3;
+        rep.tenants[1].active_version = 2;
+        let j = rep.to_json();
+        let ts = j.req_array("tenants").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].req_str("tenant").unwrap(), "ads");
+        assert!(ts[0].get("shed").is_none());
+        assert!(ts[0].get("active_version").is_none());
+        assert_eq!(ts[1].req_i64("shed").unwrap(), 3);
+        assert_eq!(ts[1].req_i64("active_version").unwrap(), 2);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // display renders the split
+        assert!(rep.to_string().contains("tenant  shop"));
+        // untenanted reports keep the exact pre-registry record shape
+        let plain = LatencyRecorder::new();
+        plain.record(Duration::from_millis(1));
+        let j = plain
+            .report("ltr/interpreted", 1, Duration::from_secs(1), Duration::ZERO)
+            .to_json();
+        assert!(j.get("tenants").is_none());
     }
 
     #[test]

@@ -117,25 +117,65 @@
 //! ```
 //!
 //! `GET /healthz` answers readiness (503 once draining); `GET /metrics`
-//! surfaces the full [`ServeReport`] — per-variant and per-worker splits
+//! surfaces the full [`ServeReport`] — per-variant, per-tenant and
+//! per-worker splits
 //! plus the shed/admission counters ([`ServeReport::shed_requests`],
 //! [`ServeReport::admission_limit`]) — and per-client request/shed/
-//! latency counters keyed by the `X-Kamae-Client` header. Every failure
+//! latency counters keyed by the `X-Kamae-Client` header (bounded table
+//! with an `other_clients` rollup). Every failure
 //! is a typed [`WireError`] with a stable `code` and status.
 //! `benches/net_serving.rs` gates saturation throughput, wire
 //! bit-identity against in-process submission, and cheap shedding under
 //! 2× overload.
+//!
+//! ## Spec registry & hot swap
+//!
+//! The `registry` module makes the backend a **runtime-resolved,
+//! versioned entry** instead of a fixed constructor argument. The full
+//! request path in registry mode is
+//!
+//! ```text
+//!   submit_tenant(df, "shop", variant)        POST /v1/infer/shop
+//!            │                                       │
+//!            ▼                                       ▼
+//!      resolve("shop") ──▶ Arc<TenantVersion>  (schema, outputs,
+//!            │                                  variants, backend —
+//!            ▼                                  ONE atomic snapshot)
+//!      ┌───────────┐     worker pool drains per-version sub-batches
+//!      │ JobQueue  │────▶ (jobs carry their resolved Arc; a deploy
+//!      └───────────┘      never re-routes a queued request)
+//!            │
+//!            ▼
+//!      merged metrics: ServeReport { variants, tenants, workers, … }
+//! ```
+//!
+//! A deploy ([`SpecRegistry::deploy_specs`]) builds the new version —
+//! optimize → merge → compile kernel program — entirely **off the swap
+//! path**, then swaps the tenant's active `Arc<TenantVersion>` in O(1)
+//! under a short write lock. In-flight and queued requests finish on
+//! the version they resolved: zero requests dropped, zero mixed
+//! versions. Rollback re-activates a still-warm prior version with no
+//! rebuild. The single-spec constructors ([`Server::start`],
+//! [`NetServer::bind`]) are thin wrappers over a one-tenant registry
+//! under [`DEFAULT_TENANT`], so the pre-registry API keeps working
+//! unchanged. `benches/hot_swap.rs` gates throughput under a
+//! continuous swap storm at ≥ 90% of the no-swap baseline with zero
+//! errors and bounded swap latency.
 
 mod backend;
 mod batcher;
 mod metrics;
 mod net;
+mod registry;
 
 pub use backend::{Backend, CompiledBackend, InterpretedBackend, MleapBackend, VariantGroup};
 pub use batcher::{BatchConfig, Server};
-pub use metrics::{LatencyRecorder, ServeReport, VariantStats};
+pub use metrics::{LatencyRecorder, ServeReport, TenantStats, VariantStats};
 pub use net::{
     tensor_from_json, tensor_to_json, NetClient, NetConfig, NetResponse, NetServer, WireError,
+};
+pub use registry::{
+    DeploySummary, SpecRegistry, TenantSnapshot, TenantVersion, VersionInfo, DEFAULT_TENANT,
 };
 
 use std::path::Path;

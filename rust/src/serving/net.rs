@@ -25,14 +25,34 @@
 //!   200  {"outputs": [{"name","dtype","shape","data"}, ...],
 //!         "rows": N, "variant": "a"}          (variant key only if targeted)
 //!   4xx/5xx  {"error": {"code","message","status"}}
+//! POST /v1/infer/<tenant> same, addressed to one registry tenant
+//!                         (bare /v1/infer is the "default" tenant)
 //! GET  /healthz           readiness: 200 while serving, 503 once draining
-//! GET  /metrics           full ServeReport + per-client counters as JSON
+//! GET  /metrics           full ServeReport (incl. per-tenant splits) +
+//!                         per-client counters as JSON
+//! POST /admin/deploy      {"tenant", "spec"|"specs", "expect_version"?,
+//!                          "level"?} — build off-thread, hot-swap the
+//!                         tenant's active version (409 on a lost CAS)
+//! POST /admin/rollback    {"tenant", "to_version"?} — re-activate a
+//!                         previous version (409 when there is none)
+//! GET  /admin/tenants     registry snapshot: versions + request gauges
 //! POST /admin/shutdown    begin drain: stop accepting, finish in-flight
 //! ```
 //!
 //! Requests may carry an `X-Kamae-Client` header; per-client
 //! request/shed/latency counters are split by it in `/metrics` (clients
-//! without one aggregate under `"anon"`).
+//! without one aggregate under `"anon"`). The client table is bounded
+//! ([`NetConfig::max_clients`]): beyond the cap the least-recently-seen
+//! client's counters fold into an `other_clients` rollup instead of
+//! growing the map without bound.
+//!
+//! ## Registry mode
+//!
+//! [`NetServer::bind_registry`] serves a whole [`SpecRegistry`]: the
+//! request schema, variant tables and output names all come from the
+//! tenant version a request RESOLVES (not from bind-time state), so a
+//! hot swap mid-request can never mix two versions' surfaces.
+//! [`NetServer::bind`] is the one-tenant wrapper over it.
 //!
 //! Connections are keep-alive HTTP/1.1 (one thread per connection; the
 //! accept loop polls a non-blocking listener so shutdown never hangs in
@@ -46,15 +66,18 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::dataframe::{dataframe_from_json_rows, Field, Schema};
+use crate::dataframe::dataframe_from_json_rows;
 use crate::error::{KamaeError, Result};
+use crate::export::GraphSpec;
+use crate::optim::OptimizeLevel;
 use crate::runtime::{Tensor, TensorData};
 use crate::util::json::Json;
 use crate::util::sync::Semaphore;
 
 use super::backend::Backend;
 use super::batcher::{BatchConfig, Server};
-use super::metrics::LatencyRecorder;
+use super::metrics::{LatencyRecorder, TenantStats};
+use super::registry::{SpecRegistry, TenantVersion, DEFAULT_TENANT};
 
 /// Listener configuration.
 #[derive(Debug, Clone)]
@@ -71,6 +94,11 @@ pub struct NetConfig {
     pub max_body_bytes: usize,
     /// `Retry-After` hint (seconds) on shed responses.
     pub retry_after_secs: u64,
+    /// Max distinct `X-Kamae-Client` ids tracked in `/metrics`. Beyond
+    /// the cap, the least-recently-seen client's counters fold into the
+    /// `other_clients` rollup — unique ids must not grow the map (and
+    /// its report cost) without bound.
+    pub max_clients: usize,
 }
 
 impl Default for NetConfig {
@@ -81,6 +109,7 @@ impl Default for NetConfig {
             max_request_rows: 1024,
             max_body_bytes: 1 << 22,
             retry_after_secs: 1,
+            max_clients: 64,
         }
     }
 }
@@ -102,6 +131,11 @@ impl NetConfig {
                 "NetConfig::max_body_bytes must be >= 1".into(),
             ));
         }
+        if self.max_clients == 0 {
+            return Err(KamaeError::Serving(
+                "NetConfig::max_clients must be >= 1 (every request has a client id)".into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -119,6 +153,14 @@ pub enum WireError {
     MethodNotAllowed(String),
     /// `variant` names nothing the backend can route.
     UnknownVariant(String),
+    /// The request (or admin verb) addressed a tenant the registry does
+    /// not know.
+    UnknownTenant(String),
+    /// A deploy/rollback named an expected version that no longer
+    /// matches (optimistic concurrency lost, or nothing to roll back
+    /// to). The registry is unchanged; re-read `/admin/tenants` and
+    /// retry.
+    VersionConflict(String),
     /// More rows than [`NetConfig::max_request_rows`].
     OversizedBatch { rows: usize, max_rows: usize },
     /// Body larger than [`NetConfig::max_body_bytes`].
@@ -135,8 +177,11 @@ impl WireError {
     pub fn status(&self) -> u16 {
         match self {
             WireError::BadRequest(_) => 400,
-            WireError::NotFound(_) | WireError::UnknownVariant(_) => 404,
+            WireError::NotFound(_)
+            | WireError::UnknownVariant(_)
+            | WireError::UnknownTenant(_) => 404,
             WireError::MethodNotAllowed(_) => 405,
+            WireError::VersionConflict(_) => 409,
             WireError::OversizedBatch { .. } | WireError::OversizedBody { .. } => 413,
             WireError::Overloaded { .. } => 429,
             WireError::Internal(_) => 500,
@@ -150,6 +195,8 @@ impl WireError {
             WireError::NotFound(_) => "not_found",
             WireError::MethodNotAllowed(_) => "method_not_allowed",
             WireError::UnknownVariant(_) => "unknown_variant",
+            WireError::UnknownTenant(_) => "unknown_tenant",
+            WireError::VersionConflict(_) => "version_conflict",
             WireError::OversizedBatch { .. } => "oversized_batch",
             WireError::OversizedBody { .. } => "oversized_body",
             WireError::Overloaded { .. } => "overloaded",
@@ -164,6 +211,8 @@ impl WireError {
             | WireError::NotFound(m)
             | WireError::MethodNotAllowed(m)
             | WireError::UnknownVariant(m)
+            | WireError::UnknownTenant(m)
+            | WireError::VersionConflict(m)
             | WireError::Internal(m) => m.clone(),
             WireError::OversizedBatch { rows, max_rows } => {
                 format!("request has {rows} rows, max_request_rows is {max_rows}")
@@ -211,20 +260,76 @@ struct ClientStats {
     latency_ns_max: u64,
 }
 
+#[derive(Debug, Default)]
+struct ClientEntry {
+    stats: ClientStats,
+    /// Logical clock of the entry's last request — the LRU key.
+    last_seen: u64,
+}
+
+/// Bounded per-client counter table. Unbounded unique client ids used
+/// to grow the map (and every `/metrics` render) without limit; beyond
+/// `cap` the least-recently-seen client's counters fold into the
+/// `other` rollup, so totals are conserved while memory is bounded.
+struct ClientTable {
+    cap: usize,
+    tick: u64,
+    clients: BTreeMap<String, ClientEntry>,
+    /// Sum of every evicted client's counters (`other_clients` in
+    /// `/metrics`).
+    other: ClientStats,
+    /// Distinct client ids evicted so far (gates the rollup key).
+    evicted: u64,
+}
+
+impl ClientTable {
+    fn new(cap: usize) -> ClientTable {
+        ClientTable {
+            cap: cap.max(1),
+            tick: 0,
+            clients: BTreeMap::new(),
+            other: ClientStats::default(),
+            evicted: 0,
+        }
+    }
+
+    /// The client's counters, bumping its recency. Inserting past the
+    /// cap first evicts the least-recently-seen entry into the rollup.
+    fn entry(&mut self, id: &str) -> &mut ClientStats {
+        self.tick += 1;
+        if !self.clients.contains_key(id) && self.clients.len() >= self.cap {
+            let victim = self
+                .clients
+                .iter()
+                .min_by_key(|(_, e)| e.last_seen)
+                .map(|(k, _)| k.clone())
+                .expect("cap >= 1, table non-empty");
+            let e = self.clients.remove(&victim).expect("victim came from the map");
+            self.other.requests += e.stats.requests;
+            self.other.shed += e.stats.shed;
+            self.other.latency_ns_sum += e.stats.latency_ns_sum;
+            self.other.latency_ns_max = self.other.latency_ns_max.max(e.stats.latency_ns_max);
+            self.evicted += 1;
+        }
+        let tick = self.tick;
+        let e = self.clients.entry(id.to_string()).or_default();
+        e.last_seen = tick;
+        &mut e.stats
+    }
+}
+
 /// Shared listener state: everything a connection thread needs.
 struct NetState {
-    backend: Arc<dyn Backend>,
+    /// The registry requests resolve against. Everything request-facing
+    /// (schema, outputs, variants) lives on the resolved
+    /// [`TenantVersion`], never here — bind-time state cannot go stale
+    /// across a hot swap.
+    registry: Arc<SpecRegistry>,
     /// The pooled server; `None` once drained. Handlers take the read
     /// lock only long enough to enqueue (responses arrive on a channel),
     /// so drain's `write()` never waits behind a slow request.
     server: RwLock<Option<Server>>,
     config: NetConfig,
-    /// Request schema derived from the spec's raw inputs.
-    schema: Schema,
-    /// Spec output names (merged order) and the per-variant index split.
-    outputs: Vec<String>,
-    variants: Vec<String>,
-    variant_outputs: Vec<Vec<usize>>,
     admission: Semaphore,
     in_flight: AtomicUsize,
     stop: AtomicBool,
@@ -233,7 +338,23 @@ struct NetState {
     recorder: LatencyRecorder,
     accepted: AtomicU64,
     shed: AtomicU64,
-    clients: Mutex<BTreeMap<String, ClientStats>>,
+    clients: Mutex<ClientTable>,
+    /// Per-tenant shed counts (sheds happen before latency samples
+    /// exist, so they cannot live in the recorder).
+    tenant_shed: Mutex<BTreeMap<String, u64>>,
+}
+
+impl NetState {
+    /// The "primary" tenant version for naming and health payloads: the
+    /// default tenant when registered, else the first tenant, else
+    /// `None` (an empty registry awaiting its first deploy).
+    fn primary_version(&self) -> Option<Arc<TenantVersion>> {
+        if let Ok(v) = self.registry.resolve(DEFAULT_TENANT) {
+            return Some(v);
+        }
+        let names = self.registry.tenant_names();
+        names.first().and_then(|n| self.registry.resolve(n).ok())
+    }
 }
 
 /// Releases one admission permit (and the in-flight gauge) when a
@@ -273,41 +394,38 @@ impl NetServer {
     /// expose its [`crate::export::GraphSpec`] — that is where the
     /// request schema and the per-variant output names come from.
     pub fn bind(backend: Arc<dyn Backend>, addr: &str, config: NetConfig) -> Result<NetServer> {
+        if backend.spec().is_none() {
+            return Err(KamaeError::Serving(format!(
+                "backend '{}' ({} backend) exposes no GraphSpec; the network \
+                 front-end needs one to derive the request schema",
+                backend.name(),
+                backend.kind()
+            )));
+        }
+        let registry = SpecRegistry::single(DEFAULT_TENANT, backend)?;
+        NetServer::bind_registry(registry, addr, config)
+    }
+
+    /// Bind `addr` and serve every tenant in `registry` through one
+    /// shared worker pool. Requests address `POST /v1/infer/<tenant>`
+    /// (the bare path is the default tenant), and the admin endpoints
+    /// deploy, roll back, and list tenants at runtime.
+    pub fn bind_registry(
+        registry: Arc<SpecRegistry>,
+        addr: &str,
+        config: NetConfig,
+    ) -> Result<NetServer> {
         config.validate()?;
-        let (schema, outputs) = {
-            let spec = backend.spec().ok_or_else(|| {
-                KamaeError::Serving(format!(
-                    "backend '{}' ({} backend) exposes no GraphSpec; the network \
-                     front-end needs one to derive the request schema",
-                    backend.name(),
-                    backend.kind()
-                ))
-            })?;
-            let fields = spec
-                .inputs
-                .iter()
-                .map(|i| Field { name: i.name.clone(), dtype: i.dtype.clone() })
-                .collect();
-            (Schema { fields }, spec.outputs.clone())
-        };
-        let variants: Vec<String> = backend.variants().to_vec();
-        let variant_outputs: Vec<Vec<usize>> = {
-            let spec = backend.spec().expect("spec checked above");
-            variants.iter().map(|v| spec.variant_outputs(v)).collect()
-        };
-        let server = Server::start_shared(Arc::clone(&backend), config.batch.clone())?;
+        let server = Server::start_registry(Arc::clone(&registry), config.batch.clone())?;
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let max_clients = config.max_clients;
         let state = Arc::new(NetState {
-            backend,
+            registry,
             server: RwLock::new(Some(server)),
             admission: Semaphore::new(config.admission),
             config,
-            schema,
-            outputs,
-            variants,
-            variant_outputs,
             in_flight: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             active_conns: AtomicUsize::new(0),
@@ -315,7 +433,8 @@ impl NetServer {
             recorder: LatencyRecorder::new(),
             accepted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
-            clients: Mutex::new(BTreeMap::new()),
+            clients: Mutex::new(ClientTable::new(max_clients)),
+            tenant_shed: Mutex::new(BTreeMap::new()),
         });
         let accept_state = Arc::clone(&state);
         let accept = std::thread::Builder::new()
@@ -547,7 +666,18 @@ fn dispatch(
     let result: std::result::Result<Handled, WireError> = match (method, path) {
         ("GET", "/healthz") => Ok(handle_healthz(state)),
         ("GET", "/metrics") => Ok(handle_metrics(state)),
-        ("POST", "/v1/infer") => handle_infer(state, headers, body),
+        ("POST", "/v1/infer") => handle_infer(state, DEFAULT_TENANT, headers, body),
+        ("POST", p) if p.starts_with("/v1/infer/") => {
+            let tenant = &p["/v1/infer/".len()..];
+            if tenant.is_empty() || tenant.contains('/') {
+                Err(WireError::NotFound(format!("no route for {path}")))
+            } else {
+                handle_infer(state, tenant, headers, body)
+            }
+        }
+        ("POST", "/admin/deploy") => handle_deploy(state, body),
+        ("POST", "/admin/rollback") => handle_rollback(state, body),
+        ("GET", "/admin/tenants") => Ok(handle_tenants(state)),
         ("POST", "/admin/shutdown") => {
             // respond first (the write happens after dispatch returns),
             // then the accept loop and idle connections wind down
@@ -556,7 +686,16 @@ fn dispatch(
             j.set("status", "draining");
             Ok((200, Vec::new(), j.to_string()))
         }
-        (_, "/healthz") | (_, "/metrics") | (_, "/v1/infer") | (_, "/admin/shutdown") => {
+        (_, p)
+            if p == "/healthz"
+                || p == "/metrics"
+                || p == "/v1/infer"
+                || p.starts_with("/v1/infer/")
+                || p == "/admin/deploy"
+                || p == "/admin/rollback"
+                || p == "/admin/tenants"
+                || p == "/admin/shutdown" =>
+        {
             Err(WireError::MethodNotAllowed(format!(
                 "method {method} not allowed for {path}"
             )))
@@ -583,11 +722,24 @@ fn handle_healthz(state: &NetState) -> Handled {
         .map(|s| s.workers())
         .unwrap_or(0);
     j.set("status", "ok");
-    j.set("backend", state.backend.name());
-    j.set("kind", state.backend.kind());
+    if let Some(primary) = state.primary_version() {
+        j.set("backend", primary.backend().name());
+        j.set("kind", primary.backend().kind());
+        j.set(
+            "variants",
+            Json::Array(primary.variants().iter().map(|v| Json::Str(v.clone())).collect()),
+        );
+    }
     j.set(
-        "variants",
-        Json::Array(state.variants.iter().map(|v| Json::Str(v.clone())).collect()),
+        "tenants",
+        Json::Array(
+            state
+                .registry
+                .tenant_names()
+                .into_iter()
+                .map(Json::Str)
+                .collect(),
+        ),
     );
     j.set("workers", workers);
     j.set("admission_limit", state.config.admission);
@@ -604,25 +756,82 @@ fn handle_metrics(state: &NetState) -> Handled {
         .as_ref()
         .map(|s| s.worker_busy_times())
         .unwrap_or_default();
+    let report_name = match state.primary_version() {
+        Some(p) => format!("{}/net", p.backend().name()),
+        None => "registry/net".to_string(),
+    };
     let mut report = state.recorder.report_pool(
-        &format!("{}/net", state.backend.name()),
+        &report_name,
         accepted,
         state.started.elapsed(),
         &worker_busy,
     );
     report.shed_requests = state.shed.load(Ordering::Relaxed) as usize;
     report.admission_limit = state.config.admission;
+    // stamp the per-tenant split with what the recorder cannot know:
+    // shed counts (no latency sample exists for a shed) and the
+    // currently-active version from the registry
+    {
+        let tenant_shed = state.tenant_shed.lock().unwrap();
+        for t in report.tenants.iter_mut() {
+            t.shed = tenant_shed.get(&t.tenant).copied().unwrap_or(0) as usize;
+            if let Ok(v) = state.registry.resolve(&t.tenant) {
+                t.active_version = v.version();
+            }
+        }
+        // a tenant that only ever shed has no latency samples; surface
+        // it anyway so operators can see who is being refused
+        for (tenant, &shed) in tenant_shed.iter() {
+            if report.tenants.iter().any(|t| &t.tenant == tenant) {
+                continue;
+            }
+            report.tenants.push(TenantStats {
+                tenant: tenant.clone(),
+                requests: 0,
+                shed: shed as usize,
+                active_version: state
+                    .registry
+                    .resolve(tenant)
+                    .map(|v| v.version())
+                    .unwrap_or(0),
+                mean_ns: 0.0,
+                p50_ns: 0.0,
+                p95_ns: 0.0,
+                p99_ns: 0.0,
+            });
+        }
+        report.tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+    }
     let mut clients = Json::object();
-    for (id, c) in state.clients.lock().unwrap().iter() {
-        let mut o = Json::object();
-        o.set("requests", c.requests as i64);
-        o.set("shed", c.shed as i64);
-        o.set(
-            "mean_ns",
-            if c.requests == 0 { 0.0 } else { c.latency_ns_sum as f64 / c.requests as f64 },
-        );
-        o.set("max_ns", c.latency_ns_max as f64);
-        clients.set(id.as_str(), o);
+    {
+        let table = state.clients.lock().unwrap();
+        for (id, e) in table.clients.iter() {
+            let c = &e.stats;
+            let mut o = Json::object();
+            o.set("requests", c.requests as i64);
+            o.set("shed", c.shed as i64);
+            o.set(
+                "mean_ns",
+                if c.requests == 0 { 0.0 } else { c.latency_ns_sum as f64 / c.requests as f64 },
+            );
+            o.set("max_ns", c.latency_ns_max as f64);
+            clients.set(id.as_str(), o);
+        }
+        // rollup for clients evicted from the bounded table — totals
+        // across clients + other_clients are conserved
+        if table.evicted > 0 {
+            let c = &table.other;
+            let mut o = Json::object();
+            o.set("evicted", table.evicted as i64);
+            o.set("requests", c.requests as i64);
+            o.set("shed", c.shed as i64);
+            o.set(
+                "mean_ns",
+                if c.requests == 0 { 0.0 } else { c.latency_ns_sum as f64 / c.requests as f64 },
+            );
+            o.set("max_ns", c.latency_ns_max as f64);
+            clients.set("other_clients", o);
+        }
     }
     let mut j = Json::object();
     j.set("serve_report", report.to_json());
@@ -633,6 +842,7 @@ fn handle_metrics(state: &NetState) -> Handled {
 
 fn handle_infer(
     state: &NetState,
+    tenant: &str,
     headers: &BTreeMap<String, String>,
     body: &str,
 ) -> std::result::Result<Handled, WireError> {
@@ -646,7 +856,13 @@ fn handle_infer(
     // shed BEFORE parsing: refusal must stay cheap under overload
     if !state.admission.try_acquire() {
         state.shed.fetch_add(1, Ordering::Relaxed);
-        state.clients.lock().unwrap().entry(client).or_default().shed += 1;
+        state.clients.lock().unwrap().entry(&client).shed += 1;
+        *state
+            .tenant_shed
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_insert(0) += 1;
         return Err(WireError::Overloaded {
             retry_after_secs: state.config.retry_after_secs,
         });
@@ -654,6 +870,14 @@ fn handle_infer(
     state.in_flight.fetch_add(1, Ordering::SeqCst);
     let _permit = AdmissionGuard { state };
     let t0 = Instant::now();
+
+    // resolve the tenant's live version once; schema, outputs, and
+    // variant routing all come from THIS snapshot, so a deploy landing
+    // mid-request cannot mix versions within one response
+    let resolved = state.registry.resolve(tenant).map_err(|e| match e {
+        KamaeError::UnknownTenant(m) => WireError::UnknownTenant(m),
+        other => WireError::Internal(other.to_string()),
+    })?;
 
     let parsed = Json::parse(body)
         .map_err(|e| WireError::BadRequest(format!("bad request JSON: {e}")))?;
@@ -680,29 +904,26 @@ fn handle_infer(
     }
     // resolve the variant up front so the error is typed 404, not a 500
     // bounced off the pool
-    let out_idx: Vec<usize> = match &variant {
-        None => (0..state.outputs.len()).collect(),
-        Some(v) => {
-            let i = state.variants.iter().position(|x| x == v).ok_or_else(|| {
-                WireError::UnknownVariant(format!(
-                    "no variant '{v}' to route to (backend variants: {})",
-                    state.variants.join(", ")
-                ))
-            })?;
-            state.variant_outputs[i].clone()
-        }
-    };
-    let df = dataframe_from_json_rows(rows, &state.schema)
+    let out_idx: Vec<usize> = resolved
+        .output_indices(variant.as_deref())
+        .map_err(|e| match e {
+            KamaeError::Serving(m) => WireError::UnknownVariant(m),
+            other => WireError::Internal(other.to_string()),
+        })?;
+    let schema = resolved.schema().ok_or_else(|| {
+        WireError::Internal(format!(
+            "tenant '{tenant}' backend '{}' exposes no request schema",
+            resolved.backend().name()
+        ))
+    })?;
+    let df = dataframe_from_json_rows(rows, schema)
         .map_err(|e| WireError::BadRequest(e.to_string()))?;
     let n_rows = df.num_rows();
     // take the read lock only to enqueue; the response channel outlives it
     let rx = {
         let server = state.server.read().unwrap();
         let server = server.as_ref().ok_or(WireError::ShuttingDown)?;
-        match &variant {
-            Some(v) => server.submit_variant(df, v),
-            None => server.submit(df),
-        }
+        server.submit_resolved(df, variant.clone(), Arc::clone(&resolved))
     };
     let tensors = match rx.recv() {
         Ok(Ok(t)) => t,
@@ -721,10 +942,11 @@ fn handle_infer(
         Some(v) => state.recorder.record_variant(v, elapsed),
         None => state.recorder.record(elapsed),
     }
+    state.recorder.record_tenant(tenant, elapsed);
     state.accepted.fetch_add(1, Ordering::Relaxed);
     {
         let mut clients = state.clients.lock().unwrap();
-        let c = clients.entry(client).or_default();
+        let c = clients.entry(&client);
         c.requests += 1;
         let ns = elapsed.as_nanos() as u64;
         c.latency_ns_sum += ns;
@@ -737,10 +959,11 @@ fn handle_infer(
             out_idx.len()
         )));
     }
+    let outputs = resolved.outputs();
     let outs: Vec<Json> = tensors
         .iter()
         .zip(out_idx.iter())
-        .map(|(t, &i)| tensor_to_json(&state.outputs[i], t))
+        .map(|(t, &i)| tensor_to_json(&outputs[i], t))
         .collect();
     let mut resp = Json::object();
     resp.set("outputs", Json::Array(outs));
@@ -751,12 +974,128 @@ fn handle_infer(
     Ok((200, Vec::new(), resp.to_string()))
 }
 
+/// Map a registry error onto the wire: lost CAS races are 409, unknown
+/// tenants 404, anything else (bad spec, merge failure) a 400 — the
+/// caller supplied it.
+fn registry_wire_error(e: KamaeError) -> WireError {
+    match e {
+        KamaeError::VersionConflict(m) => WireError::VersionConflict(m),
+        KamaeError::UnknownTenant(m) => WireError::UnknownTenant(m),
+        other => WireError::BadRequest(other.to_string()),
+    }
+}
+
+/// `POST /admin/deploy` — build (optimize → merge → compile) happens on
+/// this connection thread, entirely off the swap path; in-flight
+/// requests keep being served by the old version throughout.
+fn handle_deploy(state: &NetState, body: &str) -> std::result::Result<Handled, WireError> {
+    let parsed = Json::parse(body)
+        .map_err(|e| WireError::BadRequest(format!("bad request JSON: {e}")))?;
+    if parsed.as_object().is_none() {
+        return Err(WireError::BadRequest("request body is not a JSON object".into()));
+    }
+    let tenant = parsed
+        .get("tenant")
+        .and_then(Json::as_str)
+        .ok_or_else(|| WireError::BadRequest("deploy needs a 'tenant' string".into()))?
+        .to_string();
+    let spec_jsons: Vec<&Json> = match (parsed.get("spec"), parsed.get("specs")) {
+        (Some(s), None) => vec![s],
+        (None, Some(Json::Array(a))) if !a.is_empty() => a.iter().collect(),
+        (None, Some(_)) => {
+            return Err(WireError::BadRequest("'specs' must be a non-empty array".into()))
+        }
+        (Some(_), Some(_)) => {
+            return Err(WireError::BadRequest("give either 'spec' or 'specs', not both".into()))
+        }
+        (None, None) => {
+            return Err(WireError::BadRequest(
+                "deploy needs a 'spec' object or a 'specs' array".into(),
+            ))
+        }
+    };
+    let mut specs = Vec::with_capacity(spec_jsons.len());
+    for (i, j) in spec_jsons.iter().enumerate() {
+        specs.push(GraphSpec::from_json(j).map_err(|e| {
+            WireError::BadRequest(format!("spec {i} does not parse as a GraphSpec: {e}"))
+        })?);
+    }
+    let expect_version = match parsed.get("expect_version") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_i64().filter(|n| *n >= 0).ok_or_else(|| {
+            WireError::BadRequest("'expect_version' must be a non-negative integer".into())
+        })? as u64),
+    };
+    let level = match parsed.get("level") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(
+            OptimizeLevel::parse(s).map_err(|e| WireError::BadRequest(e.to_string()))?,
+        ),
+        Some(_) => return Err(WireError::BadRequest("'level' must be a string".into())),
+    };
+    let summary = state
+        .registry
+        .deploy_specs(&tenant, &specs, expect_version, level)
+        .map_err(registry_wire_error)?;
+    let mut j = Json::object();
+    j.set("status", "deployed");
+    j.set("tenant", summary.tenant.as_str());
+    j.set("version", summary.version as i64);
+    j.set("backend", summary.backend.as_str());
+    j.set("swap_ns", summary.swap.as_nanos() as i64);
+    Ok((200, Vec::new(), j.to_string()))
+}
+
+/// `POST /admin/rollback` — swap back to a still-warm prior version
+/// (the previous one, or `to_version` explicitly). No rebuild happens.
+fn handle_rollback(state: &NetState, body: &str) -> std::result::Result<Handled, WireError> {
+    let parsed = Json::parse(body)
+        .map_err(|e| WireError::BadRequest(format!("bad request JSON: {e}")))?;
+    if parsed.as_object().is_none() {
+        return Err(WireError::BadRequest("request body is not a JSON object".into()));
+    }
+    let tenant = parsed
+        .get("tenant")
+        .and_then(Json::as_str)
+        .ok_or_else(|| WireError::BadRequest("rollback needs a 'tenant' string".into()))?
+        .to_string();
+    let to_version = match parsed.get("to_version") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_i64().filter(|n| *n >= 1).ok_or_else(|| {
+            WireError::BadRequest("'to_version' must be a positive integer".into())
+        })? as u64),
+    };
+    let summary = state
+        .registry
+        .rollback(&tenant, to_version)
+        .map_err(registry_wire_error)?;
+    let mut j = Json::object();
+    j.set("status", "rolled_back");
+    j.set("tenant", summary.tenant.as_str());
+    j.set("version", summary.version as i64);
+    j.set("backend", summary.backend.as_str());
+    j.set("swap_ns", summary.swap.as_nanos() as i64);
+    Ok((200, Vec::new(), j.to_string()))
+}
+
+/// `GET /admin/tenants` — every tenant with its version history and
+/// per-version request counts.
+fn handle_tenants(state: &NetState) -> Handled {
+    let mut j = Json::object();
+    j.set(
+        "tenants",
+        Json::Array(state.registry.snapshot().iter().map(|s| s.to_json()).collect()),
+    );
+    (200, Vec::new(), j.to_string())
+}
+
 fn reason_phrase(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
@@ -968,6 +1307,8 @@ mod tests {
             (WireError::NotFound("x".into()), 404, "not_found"),
             (WireError::MethodNotAllowed("x".into()), 405, "method_not_allowed"),
             (WireError::UnknownVariant("x".into()), 404, "unknown_variant"),
+            (WireError::UnknownTenant("x".into()), 404, "unknown_tenant"),
+            (WireError::VersionConflict("x".into()), 409, "version_conflict"),
             (WireError::OversizedBatch { rows: 9, max_rows: 4 }, 413, "oversized_batch"),
             (WireError::OversizedBody { bytes: 9, max_bytes: 4 }, 413, "oversized_body"),
             (WireError::Overloaded { retry_after_secs: 1 }, 429, "overloaded"),
@@ -1025,8 +1366,51 @@ mod tests {
 
     #[test]
     fn reason_phrases_cover_every_wire_status() {
-        for status in [200u16, 400, 404, 405, 413, 429, 500, 503] {
+        for status in [200u16, 400, 404, 405, 409, 413, 429, 500, 503] {
             assert_ne!(reason_phrase(status), "Unknown", "{status}");
         }
+    }
+
+    // ---- bounded per-client counter table ----
+
+    #[test]
+    fn client_table_evicts_least_recent_into_rollup() {
+        let mut t = ClientTable::new(2);
+        t.entry("a").requests = 5;
+        t.entry("a").latency_ns_sum = 500;
+        t.entry("a").latency_ns_max = 120;
+        t.entry("b").requests = 3;
+        t.entry("b").shed = 2;
+        t.entry("b").latency_ns_max = 90;
+        // touching "a" makes "b" the LRU victim when "c" arrives
+        t.entry("a").requests += 1;
+        t.entry("c").requests = 1;
+        assert!(t.clients.contains_key("a"));
+        assert!(t.clients.contains_key("c"));
+        assert!(!t.clients.contains_key("b"));
+        assert_eq!(t.evicted, 1);
+        // b's counters folded into the rollup — totals conserved
+        assert_eq!(t.other.requests, 3);
+        assert_eq!(t.other.shed, 2);
+        assert_eq!(t.other.latency_ns_max, 90);
+        let live: u64 = t.clients.values().map(|e| e.stats.requests).sum();
+        assert_eq!(live + t.other.requests, 5 + 1 + 3 + 1);
+        // a second eviction maxes, not overwrites, the rollup's max
+        t.entry("d").requests = 1;
+        assert_eq!(t.evicted, 2);
+        assert_eq!(t.other.latency_ns_max, 120);
+        assert_eq!(t.other.requests, 3 + 6);
+        assert_eq!(t.clients.len(), 2);
+    }
+
+    #[test]
+    fn client_table_reinserted_id_starts_fresh() {
+        let mut t = ClientTable::new(1);
+        t.entry("a").requests = 7;
+        t.entry("b").requests = 1; // evicts a
+        t.entry("a").requests += 1; // evicts b; a re-enters empty
+        assert_eq!(t.evicted, 2);
+        assert_eq!(t.clients.get("a").unwrap().stats.requests, 1);
+        assert_eq!(t.other.requests, 7 + 1);
     }
 }

@@ -1,0 +1,698 @@
+//! Multi-tenant spec registry with zero-downtime hot swap.
+//!
+//! A [`SpecRegistry`] holds one versioned serving entry per **tenant**:
+//! the active [`TenantVersion`] wraps the tenant's merged, optimized
+//! backend together with everything the wire layer derives from it
+//! (request schema, output names, variant routing tables), so a request
+//! resolves its ENTIRE serving surface in one atomic read.
+//!
+//! Deploys are built **off the swap path**: `deploy_specs` merges,
+//! optimizes and kernel-compiles the new backend before any registry
+//! lock is taken — the swap itself is an `Arc` replacement under the
+//! tenant's version lock, O(1) and independent of spec size. In-flight
+//! batches keep the `Arc` they resolved and finish on the old version
+//! (the batcher groups drained jobs by resolved version, never mixing
+//! two versions in one backend call), so a redeploy drops zero requests
+//! and changes zero bits mid-flight. `benches/hot_swap.rs` gates the
+//! throughput cost of a continuous swap storm; the swap-under-load
+//! stress test below pins bit-identity against per-version oracles.
+//!
+//! Rollback re-activates a previously deployed version from the
+//! tenant's history — the old `Arc` is still warm (kernel program and
+//! all), so rolling back is as cheap as the swap itself.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::dataframe::Schema;
+use crate::error::{KamaeError, Result};
+use crate::export::GraphSpec;
+use crate::optim::OptimizeLevel;
+use crate::util::json::Json;
+
+use super::backend::{Backend, InterpretedBackend};
+
+/// Tenant name the single-spec wrappers ([`super::Server::start`],
+/// [`super::NetServer::bind`]) register their one backend under.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// One immutable deployed version of a tenant's serving surface. Jobs
+/// carry the `Arc<TenantVersion>` they resolved, so validation, output
+/// naming and execution all see the SAME version even while a deploy
+/// swaps the active entry underneath them.
+pub struct TenantVersion {
+    tenant: String,
+    version: u64,
+    backend: Arc<dyn Backend>,
+    /// Request schema derived from the backend's spec at deploy time
+    /// (`None` for spec-less backends, which cannot serve the wire).
+    schema: Option<Schema>,
+    /// Spec output names in merged order, with each variant's output
+    /// indices precomputed — the per-request routing table.
+    outputs: Vec<String>,
+    variants: Vec<String>,
+    variant_outputs: Vec<Vec<usize>>,
+    /// Requests this version answered — the per-version gauge the
+    /// stress test sums to account for every request.
+    requests: AtomicU64,
+}
+
+impl TenantVersion {
+    fn new(tenant: &str, version: u64, backend: Arc<dyn Backend>) -> TenantVersion {
+        let schema = backend.request_schema();
+        let outputs = backend.spec().map(|s| s.outputs.clone()).unwrap_or_default();
+        let variants = backend.variants().to_vec();
+        // always variants.len() entries so output_indices can index by
+        // variant position even for spec-less backends
+        let variant_outputs = match backend.spec() {
+            Some(s) => variants.iter().map(|v| s.variant_outputs(v)).collect(),
+            None => vec![Vec::new(); variants.len()],
+        };
+        TenantVersion {
+            tenant: tenant.to_string(),
+            version,
+            backend,
+            schema,
+            outputs,
+            variants,
+            variant_outputs,
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn schema(&self) -> Option<&Schema> {
+        self.schema.as_ref()
+    }
+
+    pub fn outputs(&self) -> &[String] {
+        &self.outputs
+    }
+
+    pub fn variants(&self) -> &[String] {
+        &self.variants
+    }
+
+    /// Output indices a request resolves to: the variant's own outputs,
+    /// or every output when untargeted. The error message matches the
+    /// batcher's submit-time rejection so wire and in-process callers
+    /// agree.
+    pub fn output_indices(&self, variant: Option<&str>) -> Result<Vec<usize>> {
+        match variant {
+            None => Ok((0..self.outputs.len()).collect()),
+            Some(v) => self
+                .variants
+                .iter()
+                .position(|x| x == v)
+                .map(|i| self.variant_outputs[i].clone())
+                .ok_or_else(|| {
+                    KamaeError::Serving(format!(
+                        "no variant '{v}' to route to (backend variants: {})",
+                        self.variants.join(", ")
+                    ))
+                }),
+        }
+    }
+
+    pub fn requests_served(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn record_served(&self, n: u64) {
+        self.requests.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// One tenant's version chain. The active pointer has its own lock so a
+/// swap never contends with other tenants' resolves.
+struct Tenant {
+    active: RwLock<Arc<TenantVersion>>,
+    /// Every version ever deployed, in deploy order (rollback targets).
+    history: Mutex<Vec<Arc<TenantVersion>>>,
+    next_version: AtomicU64,
+}
+
+/// What a deploy/rollback did.
+#[derive(Debug, Clone)]
+pub struct DeploySummary {
+    pub tenant: String,
+    /// The now-active version.
+    pub version: u64,
+    pub backend: String,
+    /// How long the active-version write lock was held for the swap —
+    /// the only stall a concurrent resolve can observe.
+    pub swap: Duration,
+}
+
+/// Point-in-time view of one version, for `/admin/tenants` and metrics.
+#[derive(Debug, Clone)]
+pub struct VersionInfo {
+    pub version: u64,
+    pub backend: String,
+    pub requests: u64,
+    pub active: bool,
+}
+
+/// Point-in-time view of one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub tenant: String,
+    pub active_version: u64,
+    pub versions: Vec<VersionInfo>,
+}
+
+impl TenantSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("tenant", self.tenant.clone());
+        j.set("active_version", self.active_version as i64);
+        j.set(
+            "versions",
+            Json::Array(
+                self.versions
+                    .iter()
+                    .map(|v| {
+                        let mut o = Json::object();
+                        o.set("version", v.version as i64);
+                        o.set("backend", v.backend.clone());
+                        o.set("requests", v.requests as i64);
+                        o.set("active", v.active);
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+/// In-process registry of versioned tenant backends — the runtime
+/// resolution point the serving stack addresses instead of a fixed
+/// constructor backend.
+pub struct SpecRegistry {
+    tenants: RwLock<BTreeMap<String, Arc<Tenant>>>,
+    /// Optimization level `deploy_specs` applies when the deploy does
+    /// not override it.
+    level: OptimizeLevel,
+}
+
+impl SpecRegistry {
+    pub fn new() -> SpecRegistry {
+        SpecRegistry::with_level(OptimizeLevel::default())
+    }
+
+    pub fn with_level(level: OptimizeLevel) -> SpecRegistry {
+        SpecRegistry { tenants: RwLock::new(BTreeMap::new()), level }
+    }
+
+    /// A one-tenant registry over an already-built backend — the thin
+    /// wrapper the single-spec `Server::start` / `NetServer::bind` APIs
+    /// are built on.
+    pub fn single(tenant: &str, backend: Arc<dyn Backend>) -> Result<Arc<SpecRegistry>> {
+        let registry = Arc::new(SpecRegistry::new());
+        registry.deploy_backend(tenant, backend, None)?;
+        Ok(registry)
+    }
+
+    /// Activate an already-built backend as `tenant`'s next version.
+    /// All derivation work happens before the swap; the active-version
+    /// write lock is held only for the `Arc` replacement.
+    ///
+    /// `expect_version` is an optimistic-concurrency guard: when given,
+    /// the deploy only lands if the tenant's active version still
+    /// matches (0 = "tenant must not exist yet"); a mismatch is a
+    /// [`KamaeError::VersionConflict`] and nothing changes.
+    pub fn deploy_backend(
+        &self,
+        tenant: &str,
+        backend: Arc<dyn Backend>,
+        expect_version: Option<u64>,
+    ) -> Result<DeploySummary> {
+        if tenant.is_empty() {
+            return Err(KamaeError::InvalidConfig("tenant name must be non-empty".into()));
+        }
+        let backend_name = backend.name().to_string();
+        let entry = {
+            let mut tenants = self.tenants.write().unwrap();
+            match tenants.get(tenant) {
+                Some(t) => Arc::clone(t),
+                None => {
+                    if let Some(expect) = expect_version {
+                        if expect != 0 {
+                            return Err(KamaeError::VersionConflict(format!(
+                                "tenant '{tenant}': expected active version {expect}, \
+                                 but the tenant is not registered"
+                            )));
+                        }
+                    }
+                    let first = Arc::new(TenantVersion::new(tenant, 1, backend));
+                    let t = Arc::new(Tenant {
+                        active: RwLock::new(Arc::clone(&first)),
+                        history: Mutex::new(vec![first]),
+                        next_version: AtomicU64::new(2),
+                    });
+                    tenants.insert(tenant.to_string(), t);
+                    return Ok(DeploySummary {
+                        tenant: tenant.to_string(),
+                        version: 1,
+                        backend: backend_name,
+                        swap: Duration::ZERO,
+                    });
+                }
+            }
+        };
+        // existing tenant: compare-and-swap under its own version lock
+        let t0 = Instant::now();
+        let mut active = entry.active.write().unwrap();
+        if let Some(expect) = expect_version {
+            if active.version != expect {
+                return Err(KamaeError::VersionConflict(format!(
+                    "tenant '{tenant}': expected active version {expect}, found {}",
+                    active.version
+                )));
+            }
+        }
+        let version = entry.next_version.fetch_add(1, Ordering::Relaxed);
+        let tv = Arc::new(TenantVersion::new(tenant, version, backend));
+        entry.history.lock().unwrap().push(Arc::clone(&tv));
+        *active = tv;
+        let swap = t0.elapsed();
+        drop(active);
+        Ok(DeploySummary { tenant: tenant.to_string(), version, backend: backend_name, swap })
+    }
+
+    /// Build and activate a new version from raw specs: merge (when
+    /// more than one), optimize, compile the kernel program — ALL
+    /// before any registry lock — then [`Self::deploy_backend`].
+    pub fn deploy_specs(
+        &self,
+        tenant: &str,
+        specs: &[GraphSpec],
+        expect_version: Option<u64>,
+        level: Option<OptimizeLevel>,
+    ) -> Result<DeploySummary> {
+        if specs.is_empty() {
+            return Err(KamaeError::InvalidConfig("deploy needs at least one spec".into()));
+        }
+        let merged = if specs.len() == 1 {
+            specs[0].clone()
+        } else {
+            let name = specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join("+");
+            let refs: Vec<&GraphSpec> = specs.iter().collect();
+            GraphSpec::merge_variants(&name, &refs)?
+        };
+        let (optimized, _) = crate::optim::optimize(merged, level.unwrap_or(self.level))?;
+        let backend: Arc<dyn Backend> = Arc::new(InterpretedBackend::new(optimized));
+        self.deploy_backend(tenant, backend, expect_version)
+    }
+
+    /// Re-activate a previously deployed version: `to_version` when
+    /// given, else the version deployed immediately before the active
+    /// one. The old `Arc` swaps back in — no rebuild. Rolling back past
+    /// the first version (or to a version never deployed) is a
+    /// [`KamaeError::VersionConflict`].
+    pub fn rollback(&self, tenant: &str, to_version: Option<u64>) -> Result<DeploySummary> {
+        let entry = self.tenant(tenant)?;
+        let t0 = Instant::now();
+        let mut active = entry.active.write().unwrap();
+        let target = {
+            let history = entry.history.lock().unwrap();
+            match to_version {
+                Some(v) => history.iter().find(|tv| tv.version == v).cloned().ok_or_else(|| {
+                    KamaeError::VersionConflict(format!(
+                        "tenant '{tenant}': version {v} was never deployed \
+                         (history: {})",
+                        history.iter().map(|tv| tv.version.to_string()).collect::<Vec<_>>().join(", ")
+                    ))
+                })?,
+                None => {
+                    let pos = history
+                        .iter()
+                        .position(|tv| tv.version == active.version)
+                        .unwrap_or(0);
+                    if pos == 0 {
+                        return Err(KamaeError::VersionConflict(format!(
+                            "tenant '{tenant}': no version before {} to roll back to",
+                            active.version
+                        )));
+                    }
+                    Arc::clone(&history[pos - 1])
+                }
+            }
+        };
+        let version = target.version;
+        let backend = target.backend.name().to_string();
+        *active = target;
+        let swap = t0.elapsed();
+        drop(active);
+        Ok(DeploySummary { tenant: tenant.to_string(), version, backend, swap })
+    }
+
+    /// Resolve a tenant's active version — the per-request entry point.
+    /// One map read + one version read, both uncontended unless a swap
+    /// is mid-flight on this very tenant.
+    pub fn resolve(&self, tenant: &str) -> Result<Arc<TenantVersion>> {
+        let tenants = self.tenants.read().unwrap();
+        match tenants.get(tenant) {
+            Some(t) => Ok(Arc::clone(&t.active.read().unwrap())),
+            None => {
+                let known = if tenants.is_empty() {
+                    "none".to_string()
+                } else {
+                    tenants.keys().cloned().collect::<Vec<_>>().join(", ")
+                };
+                Err(KamaeError::UnknownTenant(format!(
+                    "no tenant '{tenant}' registered (tenants: {known})"
+                )))
+            }
+        }
+    }
+
+    /// Registered tenant names, sorted.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Point-in-time view of every tenant's version chain — the
+    /// `/admin/tenants` payload and the per-tenant metrics gauges.
+    pub fn snapshot(&self) -> Vec<TenantSnapshot> {
+        let tenants = self.tenants.read().unwrap();
+        tenants
+            .iter()
+            .map(|(name, t)| {
+                let active = Arc::clone(&t.active.read().unwrap());
+                let versions = t
+                    .history
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .map(|tv| VersionInfo {
+                        version: tv.version,
+                        backend: tv.backend.name().to_string(),
+                        requests: tv.requests_served(),
+                        active: Arc::ptr_eq(tv, &active),
+                    })
+                    .collect();
+                TenantSnapshot {
+                    tenant: name.clone(),
+                    active_version: active.version,
+                    versions,
+                }
+            })
+            .collect()
+    }
+
+    fn tenant(&self, tenant: &str) -> Result<Arc<Tenant>> {
+        let tenants = self.tenants.read().unwrap();
+        match tenants.get(tenant) {
+            Some(t) => Ok(Arc::clone(t)),
+            None => {
+                let known = if tenants.is_empty() {
+                    "none".to_string()
+                } else {
+                    tenants.keys().cloned().collect::<Vec<_>>().join(", ")
+                };
+                Err(KamaeError::UnknownTenant(format!(
+                    "no tenant '{tenant}' registered (tenants: {known})"
+                )))
+            }
+        }
+    }
+}
+
+impl Default for SpecRegistry {
+    fn default() -> Self {
+        SpecRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batcher::{BatchConfig, Server};
+    use super::*;
+    use crate::dataframe::{Column, DataFrame};
+    use crate::runtime::Tensor;
+    use std::sync::atomic::AtomicBool;
+
+    /// Two-variant mock backend over one f64 column `x`: variant "a"
+    /// serves `[ka*x]`, variant "b" serves `[kb*x]`, untargeted
+    /// requests get both. Distinct `(ka, kb)` pairs make versions
+    /// bit-distinguishable for every `x >= 1`.
+    struct ScaleBackend {
+        name: String,
+        variants: Vec<String>,
+        ka: f64,
+        kb: f64,
+    }
+
+    impl ScaleBackend {
+        fn new(name: &str, ka: f64, kb: f64) -> ScaleBackend {
+            ScaleBackend {
+                name: name.to_string(),
+                variants: vec!["a".into(), "b".into()],
+                ka,
+                kb,
+            }
+        }
+
+        fn scale(df: &DataFrame, k: f64) -> crate::error::Result<Tensor> {
+            let v = df.column("x")?.as_f64()?;
+            Tensor::f32(v.iter().map(|&x| (k * x) as f32).collect(), vec![v.len()])
+        }
+    }
+
+    impl Backend for ScaleBackend {
+        fn name(&self) -> &str {
+            &self.name
+        }
+
+        fn process(&self, df: &DataFrame) -> crate::error::Result<Vec<Tensor>> {
+            Ok(vec![Self::scale(df, self.ka)?, Self::scale(df, self.kb)?])
+        }
+
+        fn variants(&self) -> &[String] {
+            &self.variants
+        }
+
+        fn process_routed(
+            &self,
+            df: &DataFrame,
+            groups: &[super::super::backend::VariantGroup],
+        ) -> crate::error::Result<Vec<Vec<Tensor>>> {
+            groups
+                .iter()
+                .map(|g| {
+                    let slice = df.slice(g.rows.start, g.rows.len());
+                    match g.variant.as_deref() {
+                        Some("a") => Ok(vec![Self::scale(&slice, self.ka)?]),
+                        Some("b") => Ok(vec![Self::scale(&slice, self.kb)?]),
+                        None => Ok(vec![
+                            Self::scale(&slice, self.ka)?,
+                            Self::scale(&slice, self.kb)?,
+                        ]),
+                        Some(other) => Err(KamaeError::Serving(format!(
+                            "unknown variant {other}"
+                        ))),
+                    }
+                })
+                .collect()
+        }
+    }
+
+    fn req(vals: &[f64]) -> DataFrame {
+        DataFrame::new(vec![("x".into(), Column::from_f64(vals.to_vec()))]).unwrap()
+    }
+
+    /// Expected response tensors for one request under a given version's
+    /// scale pair — the dedicated per-version oracle.
+    fn oracle(vals: &[f64], ka: f64, kb: f64, variant: Option<&str>) -> Vec<Vec<f32>> {
+        let s = |k: f64| vals.iter().map(|&x| (k * x) as f32).collect::<Vec<f32>>();
+        match variant {
+            Some("a") => vec![s(ka)],
+            Some("b") => vec![s(kb)],
+            _ => vec![s(ka), s(kb)],
+        }
+    }
+
+    fn matches(got: &[Tensor], want: &[Vec<f32>]) -> bool {
+        got.len() == want.len()
+            && got
+                .iter()
+                .zip(want)
+                .all(|(t, w)| t.as_f32().map(|d| d == w.as_slice()).unwrap_or(false))
+    }
+
+    #[test]
+    fn unknown_tenant_and_version_conflicts_are_typed() {
+        let registry = SpecRegistry::new();
+        let err = registry.resolve("ghost").unwrap_err();
+        assert!(matches!(err, KamaeError::UnknownTenant(_)), "{err}");
+        assert!(err.to_string().contains("ghost"), "{err}");
+
+        // expect_version on a missing tenant: 0 creates, anything else
+        // conflicts
+        let err = registry
+            .deploy_backend("t", Arc::new(ScaleBackend::new("v", 2.0, 3.0)), Some(3))
+            .unwrap_err();
+        assert!(matches!(err, KamaeError::VersionConflict(_)), "{err}");
+        let d = registry
+            .deploy_backend("t", Arc::new(ScaleBackend::new("v1", 2.0, 3.0)), Some(0))
+            .unwrap();
+        assert_eq!(d.version, 1);
+
+        // CAS guard: a stale expected version loses and changes nothing
+        let err = registry
+            .deploy_backend("t", Arc::new(ScaleBackend::new("v2", 5.0, 7.0)), Some(9))
+            .unwrap_err();
+        assert!(matches!(err, KamaeError::VersionConflict(_)), "{err}");
+        assert_eq!(registry.resolve("t").unwrap().version(), 1);
+        let d = registry
+            .deploy_backend("t", Arc::new(ScaleBackend::new("v2", 5.0, 7.0)), Some(1))
+            .unwrap();
+        assert_eq!(d.version, 2);
+        assert_eq!(registry.resolve("t").unwrap().version(), 2);
+    }
+
+    #[test]
+    fn rollback_walks_history_and_redeploy_moves_forward() {
+        let registry = SpecRegistry::new();
+        for (name, ka, kb) in [("v1", 2.0, 3.0), ("v2", 5.0, 7.0), ("v3", 11.0, 13.0)] {
+            registry
+                .deploy_backend("t", Arc::new(ScaleBackend::new(name, ka, kb)), None)
+                .unwrap();
+        }
+        assert_eq!(registry.resolve("t").unwrap().version(), 3);
+        // default rollback: one step back, warm Arc, no rebuild
+        let r = registry.rollback("t", None).unwrap();
+        assert_eq!((r.version, r.backend.as_str()), (2, "v2"));
+        assert_eq!(registry.resolve("t").unwrap().version(), 2);
+        // again: back to v1; a third has nowhere to go
+        registry.rollback("t", None).unwrap();
+        assert_eq!(registry.resolve("t").unwrap().version(), 1);
+        let err = registry.rollback("t", None).unwrap_err();
+        assert!(matches!(err, KamaeError::VersionConflict(_)), "{err}");
+        // targeted rollback jumps anywhere in history
+        let r = registry.rollback("t", Some(3)).unwrap();
+        assert_eq!(r.version, 3);
+        let err = registry.rollback("t", Some(99)).unwrap_err();
+        assert!(matches!(err, KamaeError::VersionConflict(_)), "{err}");
+        let err = registry.rollback("ghost", None).unwrap_err();
+        assert!(matches!(err, KamaeError::UnknownTenant(_)), "{err}");
+        // a new deploy from the rolled-back state still gets a fresh
+        // monotonic version
+        let d = registry
+            .deploy_backend("t", Arc::new(ScaleBackend::new("v4", 17.0, 19.0)), None)
+            .unwrap();
+        assert_eq!(d.version, 4);
+        let snap = registry.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].active_version, 4);
+        assert_eq!(snap[0].versions.len(), 4);
+        assert!(snap[0].versions.iter().filter(|v| v.active).count() == 1);
+    }
+
+    #[test]
+    fn swap_under_load_serves_each_request_from_exactly_one_version() {
+        // 4 producers hammer one tenant with mixed-variant requests
+        // while a deployer swaps between two bit-distinguishable scale
+        // pairs ~25 times. Every response must be bit-identical to
+        // exactly ONE version's dedicated oracle (a torn batch would
+        // match neither), no request may error or drop, and the
+        // per-version counters must account for every request.
+        const PRODUCERS: i64 = 4;
+        const REQUESTS: i64 = 80;
+        const DEPLOYS: usize = 24;
+        let registry = Arc::new(SpecRegistry::new());
+        registry
+            .deploy_backend("shop", Arc::new(ScaleBackend::new("v-2-3", 2.0, 3.0)), None)
+            .unwrap();
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            BatchConfig {
+                workers: 4,
+                max_batch_rows: 32,
+                max_wait: Duration::from_micros(200),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let registry = &registry;
+            let server = &server;
+            let done = &done;
+            scope.spawn(move || {
+                for d in 0..DEPLOYS {
+                    // alternate between the two scale pairs; every
+                    // deploy is a full build-then-swap
+                    let (name, ka, kb) =
+                        if d % 2 == 0 { ("v-5-7", 5.0, 7.0) } else { ("v-2-3", 2.0, 3.0) };
+                    registry
+                        .deploy_backend("shop", Arc::new(ScaleBackend::new(name, ka, kb)), None)
+                        .unwrap();
+                    std::thread::sleep(Duration::from_micros(300));
+                    if done.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+            });
+            for t in 0..PRODUCERS {
+                scope.spawn(move || {
+                    for i in 0..REQUESTS {
+                        // x >= 1 so the scale pairs are bit-distinct
+                        let v = (t * 1000 + i + 1) as f64;
+                        let vals = [v, v + 0.5];
+                        let variant = match i % 3 {
+                            0 => Some("a"),
+                            1 => Some("b"),
+                            _ => None,
+                        };
+                        let rx = server.submit_tenant(req(&vals), "shop", variant);
+                        let got = rx
+                            .recv()
+                            .expect("response channel dropped")
+                            .unwrap_or_else(|e| panic!("request errored: {e}"));
+                        let w1 = oracle(&vals, 2.0, 3.0, variant);
+                        let w2 = oracle(&vals, 5.0, 7.0, variant);
+                        let (m1, m2) = (matches(&got, &w1), matches(&got, &w2));
+                        assert!(
+                            m1 ^ m2,
+                            "producer {t} request {i}: response matches {} version oracle",
+                            if m1 { "more than one" } else { "no" }
+                        );
+                    }
+                });
+            }
+        });
+        done.store(true, Ordering::Relaxed);
+        let (_, requests) = server.counts();
+        assert_eq!(requests, (PRODUCERS * REQUESTS) as u64, "pool lost or duplicated requests");
+        server.shutdown();
+        // per-version counters account for every request
+        let snap = registry.snapshot();
+        assert_eq!(snap.len(), 1);
+        let total: u64 = snap[0].versions.iter().map(|v| v.requests).sum();
+        assert_eq!(total, (PRODUCERS * REQUESTS) as u64, "version counters lost requests");
+        // the deployer really swapped: more than the initial version
+        // exists and at least two versions served traffic (the swap
+        // storm overlaps the producers)
+        assert!(snap[0].versions.len() > 1, "no deploy landed during the stress run");
+        assert!(
+            snap[0].versions.iter().filter(|v| v.requests > 0).count() >= 2,
+            "all traffic landed on one version — the swap was never observed"
+        );
+    }
+}

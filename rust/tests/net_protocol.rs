@@ -20,7 +20,9 @@
 //!
 //! Beyond the fixtures: admission-window shedding (429 + `Retry-After`
 //! + `/metrics` accounting) against a deliberately slow backend, the
-//! `/healthz` shape, and a clean in-process shutdown drain.
+//! `/healthz` shape, a clean in-process shutdown drain, and the
+//! registry admin surface (deploy a second tenant over the wire, infer
+//! against it, CAS-protected redeploy, rollback, snapshot).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -340,6 +342,105 @@ fn healthz_reports_the_listener_shape() {
         .filter_map(Json::as_str)
         .collect();
     assert_eq!(variants, vec!["a", "b"]);
+    server.shutdown();
+}
+
+#[test]
+fn registry_admin_deploy_infer_rollback_over_the_wire() {
+    let (server, addr, spec) = bind(test_config());
+    let mut client = NetClient::connect(&addr).unwrap();
+
+    // deploy a second tenant carrying the same spec
+    let mut body = Json::object();
+    body.set("tenant", "shop");
+    body.set("spec", spec.to_json());
+    let resp = client.request("POST", "/admin/deploy", &[], &body.to_string()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("deployed"));
+    assert_eq!(j.get("version").and_then(Json::as_i64), Some(1));
+
+    // infer against the new tenant; the optimizer is semantics-
+    // preserving, so outputs match the default tenant bit-for-bit
+    let infer = r#"{"variant":"a","rows":[{"city":"NYC","price":1.0}]}"#;
+    let shop = client.request("POST", "/v1/infer/shop", &[], infer).unwrap();
+    assert_eq!(shop.status, 200, "{}", shop.body);
+    let base = client.request("POST", "/v1/infer", &[], infer).unwrap();
+    assert_eq!(base.status, 200, "{}", base.body);
+    let shop_out: Vec<Tensor> = shop
+        .json()
+        .unwrap()
+        .get("outputs")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .map(|o| tensor_from_json(o).unwrap())
+        .collect();
+    let base_out: Vec<Tensor> = base
+        .json()
+        .unwrap()
+        .get("outputs")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .map(|o| tensor_from_json(o).unwrap())
+        .collect();
+    if let Err(e) = tensors_bit_identical(&shop_out, &base_out) {
+        panic!("tenant 'shop' vs default tenant: {e}");
+    }
+
+    // no version before v1: rollback is a typed 409
+    let rb = r#"{"tenant":"shop"}"#;
+    let resp = client.request("POST", "/admin/rollback", &[], rb).unwrap();
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    assert_eq!(
+        resp.json().unwrap().get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("version_conflict")
+    );
+
+    // CAS: deploying against the wrong expected version loses with 409
+    body.set("expect_version", 7);
+    let resp = client.request("POST", "/admin/deploy", &[], &body.to_string()).unwrap();
+    assert_eq!(resp.status, 409, "{}", resp.body);
+    // the right expectation lands v2
+    body.set("expect_version", 1);
+    let resp = client.request("POST", "/admin/deploy", &[], &body.to_string()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(resp.json().unwrap().get("version").and_then(Json::as_i64), Some(2));
+
+    // rollback re-activates v1 without a rebuild
+    let resp = client.request("POST", "/admin/rollback", &[], rb).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert_eq!(resp.json().unwrap().get("version").and_then(Json::as_i64), Some(1));
+
+    // snapshot: both tenants, shop with two versions and v1 active
+    let resp = client.request("GET", "/admin/tenants", &[], "").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = resp.json().unwrap();
+    let tenants = j.get("tenants").and_then(Json::as_array).expect("tenants array");
+    let shop = tenants
+        .iter()
+        .find(|t| t.get("tenant").and_then(Json::as_str) == Some("shop"))
+        .expect("shop tenant listed");
+    assert_eq!(shop.get("active_version").and_then(Json::as_i64), Some(1));
+    assert_eq!(shop.get("versions").and_then(Json::as_array).unwrap().len(), 2);
+    assert!(tenants
+        .iter()
+        .any(|t| t.get("tenant").and_then(Json::as_str) == Some("default")));
+
+    // healthz lists the tenant names
+    let resp = client.request("GET", "/healthz", &[], "").unwrap();
+    let names: Vec<String> = resp
+        .json()
+        .unwrap()
+        .get("tenants")
+        .and_then(Json::as_array)
+        .expect("healthz tenants array")
+        .iter()
+        .filter_map(Json::as_str)
+        .map(str::to_string)
+        .collect();
+    assert_eq!(names, vec!["default", "shop"]);
     server.shutdown();
 }
 

@@ -145,13 +145,21 @@ def main():
             )
             continue
 
+        # a bench with no previous counterpart is NEW — everything about
+        # it is informational on its first nightly (a freshly landed
+        # bench must not fail the run it lands in)
+        prev_path = os.path.join(args.previous, bench)
+        is_new_bench = not os.path.exists(prev_path)
+
         cur = latest_full_run(cur_runs)
         if cur is None:
-            failures.append(f"{bench}: no full (non-quick) run in current file")
+            if is_new_bench:
+                print(f"{bench}: new bench, no full run yet; informational only")
+            else:
+                failures.append(f"{bench}: no full (non-quick) run in current file")
             continue
 
-        prev_path = os.path.join(args.previous, bench)
-        if not os.path.exists(prev_path):
+        if is_new_bench:
             print(f"{bench}: new bench (no previous file); skipping")
             continue
         try:
@@ -187,6 +195,14 @@ def main():
                 f"({delta_pct:+.1f}%) {verdict}"
             )
             compared += 1
+        # metrics that only exist in the current run (a bench grew a new
+        # gated number) have no baseline yet — log, never fail
+        for (label, key), cur_value in sorted(cur_metrics.items()):
+            if (label, key) not in prev_metrics:
+                print(
+                    f"{bench} {label}.{key}: {cur_value:.0f} "
+                    "(new metric, no previous value; informational only)"
+                )
 
     print(f"\ncompared {compared} gated metric(s), {len(failures)} failure(s)")
     if failures:
