@@ -10,7 +10,7 @@
 # and `harness = false` [[bench]]/[[example]] entries for everything
 # under benches/ and examples/ (each defines its own `fn main`).
 
-.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-smoke bench-all artifacts clean
+.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-ingress-validation bench-smoke bench-all artifacts clean
 
 verify:
 	cargo build --release
@@ -69,6 +69,15 @@ bench-kernel-program:
 bench-hot-swap:
 	cargo bench --bench hot_swap
 
+# Ingress data-quality gate: randomly corrupted batches through the
+# validated submit path first (surviving rows pinned bit-for-bit
+# against an uncorrupted oracle, every quarantined row dead-lettered
+# with rule + column), then identical clean traffic driven closed-loop
+# through the ungated vs validated paths, gated at >= 95% throughput
+# retention; appends to BENCH_ingress_validation.json.
+bench-ingress-validation:
+	cargo bench --bench ingress_validation
+
 # CI smoke flavour of the gated benches: reduced rows/requests, exits
 # non-zero if optimized throughput regresses below the unoptimized
 # baseline, if multilane-bucketize / cross-output-dedup fail to fire on
@@ -81,7 +90,9 @@ bench-hot-swap:
 # fails to compile for / outpace the eval_node oracle on the LTR
 # catalog, or if hot-swapping the registry's active version under load
 # costs more than 10% throughput, loses a request, or stalls a swap
-# past its visibility bound (the gates the bench-smoke CI job enforces).
+# past its visibility bound, or if screening every batch through the
+# ingress data-quality gate costs clean traffic more than 5% throughput
+# (the gates the bench-smoke CI job enforces).
 bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench variant_routing
@@ -89,10 +100,11 @@ bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench net_serving
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench kernel_program
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench hot_swap
+	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench ingress_validation
 
 # Every bench, each appending a record to its BENCH_<name>.json
 # trajectory file (serving benches skip themselves without artifacts).
-bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap
+bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-ingress-validation
 	cargo bench --bench movielens_pipeline
 	cargo bench --bench native_vs_udf
 	cargo bench --bench indexing

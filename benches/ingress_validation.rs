@@ -1,0 +1,407 @@
+//! Ingress-validation benchmark — the gate for the data-quality gate's
+//! "free when clean" claim: screening every batch at ingress must cost
+//! < 5% throughput on clean traffic, and quarantining must be surgical.
+//!
+//! No artifacts needed: the quickstart pipeline is fitted in-process
+//! and served by a 4-worker [`Server`] (single-tenant registry mode, so
+//! the schema-derived [`ValidationSpec`] is built automatically at
+//! deploy time). The same pre-built clean request streams are driven
+//! CLOSED-loop two ways:
+//!
+//! * **baseline** — `submit_tenant`: the ungated path, no screening;
+//! * **validated** — `submit_tenant_validated`: every batch is decoded
+//!   through the verdict-mask evaluator before it reaches a worker.
+//!
+//! Before any timing, the **differential pin** runs: randomly corrupted
+//! batches (nulled price / nulled city) go through the validated path
+//! with a [`MemoryDeadLetter`] sink; surviving rows must come back
+//! bit-identical to an oracle backend fed the same rows with the
+//! corruption absent, every quarantined row must carry a structured
+//! [`RowError`] naming its rule and column, and every one must land in
+//! the sink.
+//!
+//! A third, ungated phase times dirty traffic (~25% corrupt rows) so
+//! the trajectory records what quarantine + compaction actually cost.
+//!
+//! Every run appends machine-readable records to
+//! `BENCH_ingress_validation.json`.
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + request count
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero unless validated
+//!                                 clean-traffic throughput holds
+//!                                 >= 95% of the ungated baseline and
+//!                                 the pin quarantined every corrupt
+//!                                 row (and only those)
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use kamae::dataframe::{Column, DataFrame};
+use kamae::engine::Dataset;
+use kamae::export::GraphSpec;
+use kamae::pipeline::catalog;
+use kamae::runtime::Tensor;
+use kamae::serving::{
+    request_pool, Backend, BatchConfig, InterpretedBackend, LatencyRecorder, MemoryDeadLetter,
+    Server, DEFAULT_TENANT,
+};
+use kamae::util::bench::{append_run, Table};
+use kamae::util::json::Json;
+use kamae::util::prop::tensors_bit_identical;
+use kamae::util::rng::Rng;
+
+const ROWS_PER_REQUEST: usize = 8;
+const PRODUCERS: usize = 4;
+/// Per-producer in-flight window (same shape as `worker_pool.rs`).
+const WINDOW: usize = 16;
+const POOL_WORKERS: usize = 4;
+/// Clean-traffic throughput retention the validated path must hold.
+const MIN_RETENTION: f64 = 0.95;
+/// In the dirty phase, roughly this fraction of rows is corrupted.
+const DIRTY_FRACTION: f64 = 0.25;
+
+type RespRx = std::sync::mpsc::Receiver<kamae::error::Result<Vec<Tensor>>>;
+
+/// Fit quickstart once and export the serving spec.
+fn build_spec(fit_rows: usize) -> GraphSpec {
+    let data = request_pool("quickstart", fit_rows).unwrap();
+    let model = catalog::quickstart_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let outputs = catalog::QUICKSTART_OUTPUTS.to_vec();
+    model
+        .to_graph_spec("quickstart", catalog::quickstart_inputs(), &outputs)
+        .unwrap()
+}
+
+/// A copy of `df` with price/city nulled out on ~`fraction` of rows.
+/// Returns the corrupted frame and the expected verdict mask.
+fn corrupt(df: &DataFrame, fraction: f64, rng: &mut Rng) -> (DataFrame, Vec<bool>) {
+    let rows = df.num_rows();
+    let mut price: Vec<Option<f64>> =
+        df.column("price").unwrap().as_f64().unwrap().iter().copied().map(Some).collect();
+    let mut city: Vec<Option<String>> =
+        df.column("city").unwrap().as_str().unwrap().iter().cloned().map(Some).collect();
+    let mut keep = vec![true; rows];
+    let threshold = (fraction * 1000.0) as u64;
+    for i in 0..rows {
+        if rng.below(1000) < threshold {
+            if rng.below(2) == 0 {
+                price[i] = None;
+            } else {
+                city[i] = None;
+            }
+            keep[i] = false;
+        }
+    }
+    let corrupted = DataFrame::new(vec![
+        ("price".into(), Column::from_f64_opt(price)),
+        ("city".into(), Column::from_str_opt(city)),
+    ])
+    .unwrap();
+    (corrupted, keep)
+}
+
+/// Pre-built clean request streams, identical across phases.
+fn build_requests(pool: &DataFrame, producers: usize, per_producer: usize) -> Vec<Vec<DataFrame>> {
+    let mut rng = Rng::new(0xF00D);
+    (0..producers)
+        .map(|_| {
+            (0..per_producer)
+                .map(|_| {
+                    let start = rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+                    pool.slice(start, ROWS_PER_REQUEST)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Closed-loop driver over the ungated path. Returns wall time.
+fn drive_baseline(
+    server: &Server,
+    streams: &[Vec<DataFrame>],
+    recorder: &LatencyRecorder,
+) -> Duration {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for stream in streams {
+            scope.spawn(move || {
+                let mut pending: VecDeque<(Instant, RespRx)> = VecDeque::new();
+                for df in stream {
+                    let sent = Instant::now();
+                    let rx = server.submit_tenant(df.clone(), DEFAULT_TENANT, None);
+                    pending.push_back((sent, rx));
+                    while pending.len() >= WINDOW {
+                        let (sent, rx) = pending.pop_front().unwrap();
+                        rx.recv().unwrap().unwrap();
+                        recorder.record(sent.elapsed());
+                    }
+                }
+                for (sent, rx) in pending {
+                    rx.recv().unwrap().unwrap();
+                    recorder.record(sent.elapsed());
+                }
+            });
+        }
+    });
+    t0.elapsed()
+}
+
+/// Closed-loop driver over the validated path. Returns wall time and
+/// the total number of quarantined rows observed.
+fn drive_validated(
+    server: &Server,
+    streams: &[Vec<DataFrame>],
+    recorder: &LatencyRecorder,
+) -> (Duration, u64) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let quarantined = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for stream in streams {
+            let quarantined = &quarantined;
+            scope.spawn(move || {
+                let mut pending: VecDeque<(Instant, RespRx)> = VecDeque::new();
+                for df in stream {
+                    let sent = Instant::now();
+                    let (rx, report) =
+                        server.submit_tenant_validated(df.clone(), DEFAULT_TENANT, None, None);
+                    quarantined.fetch_add(report.num_quarantined() as u64, Ordering::Relaxed);
+                    pending.push_back((sent, rx));
+                    while pending.len() >= WINDOW {
+                        let (sent, rx) = pending.pop_front().unwrap();
+                        rx.recv().unwrap().unwrap();
+                        recorder.record(sent.elapsed());
+                    }
+                }
+                for (sent, rx) in pending {
+                    rx.recv().unwrap().unwrap();
+                    recorder.record(sent.elapsed());
+                }
+            });
+        }
+    });
+    (t0.elapsed(), quarantined.load(std::sync::atomic::Ordering::Relaxed))
+}
+
+fn start_server(spec: &GraphSpec) -> Server {
+    Server::start(
+        Box::new(InterpretedBackend::new(spec.clone())),
+        BatchConfig { workers: POOL_WORKERS, ..BatchConfig::default() },
+    )
+    .unwrap()
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let (fit_rows, per_producer) = if quick { (2_000, 400) } else { (20_000, 2_000) };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows, {per_producer} requests/producer)\n");
+    }
+    let total_requests = PRODUCERS * per_producer;
+
+    let spec = build_spec(fit_rows);
+    println!(
+        "quickstart: {} ingress columns, {} graph nodes, {} outputs",
+        spec.ingress.len(),
+        spec.nodes.len(),
+        spec.outputs.len()
+    );
+    let pool = request_pool("quickstart", 4096).unwrap();
+    let streams = build_requests(&pool, PRODUCERS, per_producer);
+    let oracle = InterpretedBackend::new(spec.clone());
+
+    // ---- differential pin: quarantine is surgical -------------------------
+    {
+        let server = start_server(&spec);
+        let sink = MemoryDeadLetter::new(8192);
+        let mut rng = Rng::new(0xBADF00D);
+        let mut corrupted_total = 0usize;
+        let cases = if quick { 32 } else { 128 };
+        for case in 0..cases {
+            let rows = 2 + rng.below(14) as usize;
+            let start = rng.below((pool.num_rows() - rows) as u64) as usize;
+            let clean = pool.slice(start, rows);
+            let (corrupted, keep) = corrupt(&clean, 0.3, &mut rng);
+            let (rx, report) =
+                server.submit_tenant_validated(corrupted, DEFAULT_TENANT, None, Some(&sink));
+            let got = rx.recv().unwrap().unwrap();
+            let n_bad = keep.iter().filter(|k| !**k).count();
+            corrupted_total += n_bad;
+            assert_eq!(report.keep, keep, "pin case {case}: verdict mask");
+            for i in report.quarantined() {
+                assert!(
+                    !report.errors[i].is_empty(),
+                    "pin case {case} row {i}: quarantined without a RowError"
+                );
+                for e in &report.errors[i] {
+                    assert_eq!(e.rule, "not_null", "pin case {case} row {i}: rule");
+                    assert!(
+                        e.column == "price" || e.column == "city",
+                        "pin case {case} row {i}: error names column {:?}",
+                        e.column
+                    );
+                }
+            }
+            if report.num_valid() == 0 {
+                assert!(got.is_empty(), "pin case {case}: all-quarantined batch returned tensors");
+                continue;
+            }
+            let want = oracle.process(&clean.filter_rows(&keep).unwrap()).unwrap();
+            if let Err(e) = tensors_bit_identical(&got, &want) {
+                panic!("pin case {case}: valid rows vs uncorrupted oracle: {e}");
+            }
+        }
+        server.shutdown();
+        assert!(corrupted_total > 0, "pin never corrupted a row");
+        assert_eq!(sink.len(), corrupted_total, "pin: every quarantined row dead-lettered");
+        println!(
+            "differential pin: {cases} corrupted batches, {corrupted_total} rows quarantined \
+             with rule+column, survivors bit-identical to uncorrupted oracle\n"
+        );
+    }
+
+    // ---- baseline: clean traffic, ungated path ----------------------------
+    let baseline_report = {
+        let server = start_server(&spec);
+        let recorder = LatencyRecorder::new();
+        let wall = drive_baseline(&server, &streams, &recorder);
+        let worker_busy = server.worker_busy_times();
+        let (_, requests) = server.counts();
+        server.shutdown();
+        assert_eq!(requests as usize, total_requests, "baseline lost requests");
+        let report =
+            recorder.report_pool("quickstart/ingress-baseline", total_requests, wall, &worker_busy);
+        println!("{report}\n");
+        report
+    };
+
+    // ---- validated: the SAME clean traffic through the gate ---------------
+    let validated_report = {
+        let server = start_server(&spec);
+        let recorder = LatencyRecorder::new();
+        let (wall, quarantined) = drive_validated(&server, &streams, &recorder);
+        let worker_busy = server.worker_busy_times();
+        let (_, requests) = server.counts();
+        server.shutdown();
+        assert_eq!(requests as usize, total_requests, "validated phase lost requests");
+        assert_eq!(quarantined, 0, "clean traffic must not quarantine anything");
+        let report = recorder.report_pool(
+            "quickstart/ingress-validated",
+            total_requests,
+            wall,
+            &worker_busy,
+        );
+        println!("{report}\n");
+        report
+    };
+
+    // ---- dirty traffic: what quarantine + compaction cost (ungated) -------
+    let (dirty_report, dirty_quarantined, dirty_rows) = {
+        let mut rng = Rng::new(0xDEAD);
+        let mut expected_bad = 0u64;
+        let dirty_streams: Vec<Vec<DataFrame>> = streams
+            .iter()
+            .map(|stream| {
+                stream
+                    .iter()
+                    .map(|df| {
+                        let (corrupted, keep) = corrupt(df, DIRTY_FRACTION, &mut rng);
+                        expected_bad += keep.iter().filter(|k| !**k).count() as u64;
+                        corrupted
+                    })
+                    .collect()
+            })
+            .collect();
+        let server = start_server(&spec);
+        let recorder = LatencyRecorder::new();
+        let (wall, quarantined) = drive_validated(&server, &dirty_streams, &recorder);
+        let worker_busy = server.worker_busy_times();
+        server.shutdown();
+        assert_eq!(quarantined, expected_bad, "dirty phase quarantine count");
+        let report =
+            recorder.report_pool("quickstart/ingress-dirty", total_requests, wall, &worker_busy);
+        println!("{report}\n");
+        (report, quarantined, (total_requests * ROWS_PER_REQUEST) as u64)
+    };
+
+    let baseline_rps = baseline_report.throughput_rps;
+    let validated_rps = validated_report.throughput_rps;
+    let dirty_rps = dirty_report.throughput_rps;
+    let retention = if baseline_rps > 0.0 { validated_rps / baseline_rps } else { 0.0 };
+    let mut table = Table::new(&["mode", "throughput", "vs baseline"]);
+    for (label, r) in [
+        ("baseline (no gate)", baseline_rps),
+        ("validated, clean", validated_rps),
+        ("validated, ~25% dirty", dirty_rps),
+    ] {
+        table.row(&[
+            label.into(),
+            format!("{r:.0} req/s"),
+            format!("{:+.1}%", 100.0 * (r / baseline_rps - 1.0)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nclean-traffic retention through the gate: {:.1}%  (gate: >= {:.0}%)",
+        100.0 * retention,
+        100.0 * MIN_RETENTION
+    );
+    println!(
+        "dirty phase: {dirty_quarantined}/{dirty_rows} rows quarantined\n"
+    );
+
+    // ---- trajectory + gate ------------------------------------------------
+    let mut records =
+        vec![baseline_report.to_json(), validated_report.to_json(), dirty_report.to_json()];
+    let mut rec = Json::object();
+    rec.set("spec", "quickstart");
+    rec.set("mode", "ingress-validation");
+    rec.set("producers", PRODUCERS);
+    rec.set("window", WINDOW);
+    rec.set("rows_per_request", ROWS_PER_REQUEST);
+    rec.set("pool_workers", POOL_WORKERS);
+    rec.set("baseline_rps", baseline_rps);
+    rec.set("validated_rps", validated_rps);
+    rec.set("dirty_rps", dirty_rps);
+    rec.set("retention", retention);
+    rec.set("dirty_quarantined", dirty_quarantined as i64);
+    rec.set("dirty_rows", dirty_rows as i64);
+    records.push(rec);
+    let path = append_run("ingress_validation", &[("quick", Json::Bool(quick))], records)
+        .expect("bench trajectory");
+    println!("appended run to {}", path.display());
+
+    let mut gate_failures = Vec::new();
+    if validated_rps < MIN_RETENTION * baseline_rps {
+        gate_failures.push(format!(
+            "validated clean-traffic throughput {validated_rps:.0} req/s fell below \
+             {:.0}% of the ungated baseline {baseline_rps:.0} req/s ({:.1}% retention)",
+            100.0 * MIN_RETENTION,
+            100.0 * retention
+        ));
+    }
+    if gate {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        if !gate_failures.is_empty() {
+            std::process::exit(1);
+        }
+    } else {
+        for f in &gate_failures {
+            eprintln!("warning (ungated): {f}");
+        }
+    }
+}

@@ -400,6 +400,62 @@ impl Column {
         }
     }
 
+    /// Keep only the rows where `keep[i]` is true (the mask-compaction
+    /// primitive behind ingress row quarantine: the verdict mask from
+    /// validation selects the clean rows to serve). The surviving null
+    /// mask is dropped entirely when no kept row is null, so a compacted
+    /// column compares equal to one built clean from the start.
+    pub fn filter(&self, keep: &[bool]) -> Result<Column> {
+        if keep.len() != self.len() {
+            return Err(KamaeError::LengthMismatch {
+                left: keep.len(),
+                right: self.len(),
+                context: "Column::filter".into(),
+            });
+        }
+        fn pick<T: Clone>(v: &[T], keep: &[bool]) -> Vec<T> {
+            v.iter()
+                .zip(keep)
+                .filter(|(_, &k)| k)
+                .map(|(x, _)| x.clone())
+                .collect()
+        }
+        fn pick_nulls(n: &Option<Vec<bool>>, keep: &[bool]) -> Option<Vec<bool>> {
+            let mask = n.as_ref()?;
+            let kept = pick(mask, keep);
+            if kept.iter().any(|&x| x) {
+                Some(kept)
+            } else {
+                None
+            }
+        }
+        fn pick_list<T: Clone>(l: &ListColumn<T>, keep: &[bool]) -> ListColumn<T> {
+            let mut values = Vec::new();
+            let mut offsets = vec![0u32];
+            for (i, &k) in keep.iter().enumerate() {
+                if k {
+                    values.extend_from_slice(l.row(i));
+                    offsets.push(values.len() as u32);
+                }
+            }
+            ListColumn { values, offsets }
+        }
+        Ok(match self {
+            Column::Bool(v, n) => Column::Bool(pick(v, keep), pick_nulls(n, keep)),
+            Column::I32(v, n) => Column::I32(pick(v, keep), pick_nulls(n, keep)),
+            Column::I64(v, n) => Column::I64(pick(v, keep), pick_nulls(n, keep)),
+            Column::F32(v, n) => Column::F32(pick(v, keep), pick_nulls(n, keep)),
+            Column::F64(v, n) => Column::F64(pick(v, keep), pick_nulls(n, keep)),
+            Column::Str(v, n) => Column::Str(pick(v, keep), pick_nulls(n, keep)),
+            Column::ListBool(l) => Column::ListBool(pick_list(l, keep)),
+            Column::ListI32(l) => Column::ListI32(pick_list(l, keep)),
+            Column::ListI64(l) => Column::ListI64(pick_list(l, keep)),
+            Column::ListF32(l) => Column::ListF32(pick_list(l, keep)),
+            Column::ListF64(l) => Column::ListF64(pick_list(l, keep)),
+            Column::ListStr(l) => Column::ListStr(pick_list(l, keep)),
+        })
+    }
+
     /// Concatenate columns of identical dtype (used to merge partitions).
     pub fn concat(cols: &[&Column]) -> Result<Column> {
         let first = cols.first().ok_or_else(|| {
@@ -594,5 +650,58 @@ mod tests {
             union_null_masks(&[Some(&a), Some(&short)]),
             Some(vec![true, false, false])
         );
+    }
+
+    #[test]
+    fn union_null_masks_validation_gate_shapes() {
+        // the shapes the ingress validation gate feeds it: the union of
+        // the required columns' masks IS the quarantine pre-mask.
+        // All-None (a fully clean batch) must stay allocation-free …
+        assert_eq!(union_null_masks(&[None, None, None]), None);
+        assert_eq!(union_null_masks(&[]), None);
+        // … a longer mask arriving AFTER a shorter one must grow the
+        // accumulator instead of truncating the union (unequal lengths
+        // in both orders)
+        let short = vec![true, false];
+        let long = vec![false, false, true, false];
+        assert_eq!(
+            union_null_masks(&[Some(&short), Some(&long)]),
+            Some(vec![true, false, true, false])
+        );
+        assert_eq!(
+            union_null_masks(&[Some(&long), Some(&short)]),
+            Some(vec![true, false, true, false])
+        );
+        // interleaved None entries contribute nothing either side
+        assert_eq!(
+            union_null_masks(&[None, Some(&short), None, Some(&long), None]),
+            Some(vec![true, false, true, false])
+        );
+    }
+
+    #[test]
+    fn filter_compacts_scalars_lists_and_masks() {
+        let keep = [true, false, true, false];
+        let f = Column::from_f64_opt(vec![Some(1.0), None, Some(3.0), Some(4.0)]);
+        // the kept rows carry no null -> the mask is dropped entirely
+        assert_eq!(f.filter(&keep).unwrap(), Column::from_f64(vec![1.0, 3.0]));
+        // a surviving null keeps (and compacts) the mask
+        let g = Column::from_f64_opt(vec![None, Some(2.0), Some(3.0), None]);
+        let got = g.filter(&[true, true, false, false]).unwrap();
+        assert_eq!(got, Column::from_f64_opt(vec![None, Some(2.0)]));
+        // ragged lists re-base their offsets
+        let l = Column::from_str_rows(vec![vec!["a", "b"], vec!["c"], vec![], vec!["d"]]);
+        assert_eq!(
+            l.filter(&keep).unwrap(),
+            Column::from_str_rows(vec![vec!["a", "b"], Vec::<&str>::new()])
+        );
+        // keep-none and keep-all edges
+        assert_eq!(f.filter(&[false; 4]).unwrap().len(), 0);
+        assert_eq!(
+            Column::from_i64(vec![7, 8]).filter(&[true, true]).unwrap(),
+            Column::from_i64(vec![7, 8])
+        );
+        // length mismatch is an error, not a truncation
+        assert!(f.filter(&[true]).is_err());
     }
 }

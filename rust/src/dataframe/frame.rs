@@ -216,6 +216,25 @@ impl DataFrame {
         DataFrame::new(cols).expect("slice preserves lengths")
     }
 
+    /// Keep only the rows where `keep[i]` is true (mask compaction: the
+    /// ingress validation gate serves a batch minus its quarantined
+    /// rows). Kept rows preserve their relative order; the caller keeps
+    /// the mask to re-expand per-row results back to original positions.
+    pub fn filter_rows(&self, keep: &[bool]) -> Result<DataFrame> {
+        if keep.len() != self.nrows {
+            return Err(KamaeError::LengthMismatch {
+                left: keep.len(),
+                right: self.nrows,
+                context: "filter_rows".into(),
+            });
+        }
+        let mut out = DataFrame::with_nrows(keep.iter().filter(|&&k| k).count());
+        for (name, col) in &self.columns {
+            out.push_column(name.clone(), col.filter(keep)?)?;
+        }
+        Ok(out)
+    }
+
     /// Vertically concatenate frames with identical schemas.
     pub fn concat(frames: &[&DataFrame]) -> Result<DataFrame> {
         let first = frames
@@ -295,6 +314,21 @@ mod tests {
         r.rename("a", "alpha").unwrap();
         assert!(r.column("alpha").is_ok());
         assert!(r.column("a").is_err());
+    }
+
+    #[test]
+    fn filter_rows_matches_slice_concat_of_kept_runs() {
+        let d = df();
+        let got = d.filter_rows(&[true, false, true]).unwrap();
+        let want = DataFrame::concat(&[&d.slice(0, 1), &d.slice(2, 1)]).unwrap();
+        assert_eq!(got, want);
+        // all-quarantined: a zero-row frame that keeps its schema
+        let none = d.filter_rows(&[false, false, false]).unwrap();
+        assert_eq!(none.num_rows(), 0);
+        assert_eq!(none.schema(), d.schema());
+        // keep-all is identity
+        assert_eq!(d.filter_rows(&[true, true, true]).unwrap(), d);
+        assert!(d.filter_rows(&[true]).is_err());
     }
 
     #[test]

@@ -12,6 +12,42 @@ use crate::dataframe::{Column, DataFrame, DType, Field, ListColumn, Schema};
 use crate::error::{KamaeError, Result};
 use crate::util::json::Json;
 
+/// One structured data-quality violation on one row: which declarative
+/// rule fired, on which column, with a human-readable message. This is
+/// the shared error currency of BOTH ingest paths — the lenient file
+/// reader ([`read_jsonl_reporting`]) and the serving ingress gate
+/// (`serving::validate`) emit the same shape, so offline dead-letter
+/// records and online per-row verdicts are directly comparable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowError {
+    /// Rule identifier (`"required"`, `"dtype"`, `"not_null"`,
+    /// `"range"`, `"one_of"`, `"pattern"`, `"unknown_column"`, `"row"`).
+    pub rule: String,
+    /// Offending column (empty for whole-row violations).
+    pub column: String,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl RowError {
+    pub fn new<R: Into<String>, C: Into<String>, M: Into<String>>(
+        rule: R,
+        column: C,
+        message: M,
+    ) -> Self {
+        RowError { rule: rule.into(), column: column.into(), message: message.into() }
+    }
+
+    /// Wire shape: `{"rule": ..., "column": ..., "message": ...}`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("rule", self.rule.clone());
+        j.set("column", self.column.clone());
+        j.set("message", self.message.clone());
+        j
+    }
+}
+
 /// Read a CSV file with a header row, parsing each column per `schema`.
 /// Empty cells become nulls (scalar columns only).
 pub fn read_csv(path: &Path, schema: &Schema) -> Result<DataFrame> {
@@ -69,25 +105,52 @@ pub fn write_csv(df: &DataFrame, path: &Path) -> Result<()> {
 }
 
 /// Read newline-delimited JSON. The schema drives typing; missing keys and
-/// JSON `null` become nulls.
+/// JSON `null` become nulls. Type-mismatched cells are coerced to the
+/// column's default exactly as before — use [`read_jsonl_reporting`] to
+/// learn WHICH cells were coerced.
 pub fn read_jsonl(path: &Path, schema: &Schema) -> Result<DataFrame> {
+    Ok(read_jsonl_reporting(path, schema)?.0)
+}
+
+/// [`read_jsonl`] plus a record of every cell its leniency papered over:
+/// for each row whose non-null value did not fit the column dtype (and
+/// was therefore coerced to the builder default), a `(row_index,
+/// RowError)` pair with rule `"dtype"` — the same structured shape the
+/// serving ingress gate reports, so offline file ingest and online
+/// request validation disagree about nothing but transport. The returned
+/// frame is bit-identical to what [`read_jsonl`] built before reporting
+/// existed.
+pub fn read_jsonl_reporting(
+    path: &Path,
+    schema: &Schema,
+) -> Result<(DataFrame, Vec<(usize, RowError)>)> {
     let file = File::open(path)?;
     let mut builders: Vec<(String, ColumnBuilder)> = schema
         .fields
         .iter()
         .map(|f| (f.name.clone(), ColumnBuilder::new(f.dtype.clone())))
         .collect();
+    let mut report = Vec::new();
+    let mut row = 0usize;
     for line in BufReader::new(file).lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
         let obj = Json::parse(&line)?;
-        for (name, b) in builders.iter_mut() {
-            b.push_json(obj.get(name.as_str()).unwrap_or(&Json::Null))?;
+        for ((name, b), f) in builders.iter_mut().zip(schema.fields.iter()) {
+            let v = obj.get(name.as_str()).unwrap_or(&Json::Null);
+            if !v.is_null() {
+                if let Some(msg) = cell_mismatch(v, &f.dtype, name) {
+                    report.push((row, RowError::new("dtype", name.as_str(), msg)));
+                }
+            }
+            b.push_json(v)?;
         }
+        row += 1;
     }
-    DataFrame::new(builders.into_iter().map(|(n, b)| (n, b.finish())).collect())
+    let df = DataFrame::new(builders.into_iter().map(|(n, b)| (n, b.finish())).collect())?;
+    Ok((df, report))
 }
 
 /// Build a DataFrame from already-parsed JSON row objects, typed by
@@ -157,46 +220,48 @@ fn json_type_name(v: &Json) -> &'static str {
     }
 }
 
-/// Strict dtype check for one request cell: `null` fits everything,
-/// integers fit both integer and float columns, floats only float
-/// columns; strings, bools and arrays only their own dtype, with list
-/// elements checked against the element dtype.
-fn check_json_dtype(v: &Json, dt: &DType, col: &str, row: usize) -> Result<()> {
+/// Dtype check for one cell, as a message: `None` means the value fits
+/// (`null` fits everything, integers fit both integer and float columns,
+/// floats only float columns; strings, bools and arrays only their own
+/// dtype, with list elements checked against the element dtype). The
+/// strict request decoder turns the message into a hard error; the
+/// lenient paths turn it into a [`RowError`].
+fn cell_mismatch(v: &Json, dt: &DType, col: &str) -> Option<String> {
     let mismatch = || {
-        Err(KamaeError::Serde(format!(
-            "row {row} column '{col}' expects {}, got JSON {}",
+        Some(format!(
+            "column '{col}' expects {}, got JSON {}",
             dt.name(),
             json_type_name(v)
-        )))
+        ))
     };
     if v.is_null() {
-        return Ok(());
+        return None;
     }
     match dt {
         DType::Bool => match v {
-            Json::Bool(_) => Ok(()),
+            Json::Bool(_) => None,
             _ => mismatch(),
         },
         DType::I32 | DType::I64 => match v {
-            Json::Int(_) => Ok(()),
+            Json::Int(_) => None,
             _ => mismatch(),
         },
         DType::F32 | DType::F64 => match v {
-            Json::Int(_) | Json::Float(_) => Ok(()),
+            Json::Int(_) | Json::Float(_) => None,
             _ => mismatch(),
         },
         DType::Str => match v {
-            Json::Str(_) => Ok(()),
+            Json::Str(_) => None,
             _ => mismatch(),
         },
         DType::List(inner) => match v {
             Json::Array(items) => {
                 for item in items {
                     if item.is_null() {
-                        return Err(KamaeError::Serde(format!(
-                            "row {row} column '{col}' expects {}, got a null list element",
+                        return Some(format!(
+                            "column '{col}' expects {}, got a null list element",
                             dt.name()
-                        )));
+                        ));
                     }
                     let ok = match inner.as_ref() {
                         DType::Str => matches!(item, Json::Str(_)),
@@ -204,18 +269,109 @@ fn check_json_dtype(v: &Json, dt: &DType, col: &str, row: usize) -> Result<()> {
                         _ => matches!(item, Json::Int(_) | Json::Float(_)),
                     };
                     if !ok {
-                        return Err(KamaeError::Serde(format!(
-                            "row {row} column '{col}' expects {}, got a {} list element",
+                        return Some(format!(
+                            "column '{col}' expects {}, got a {} list element",
                             dt.name(),
                             json_type_name(item)
-                        )));
+                        ));
                     }
                 }
-                Ok(())
+                None
             }
             _ => mismatch(),
         },
     }
+}
+
+/// Strict wrapper over [`cell_mismatch`] keeping the request decoder's
+/// historical `row {i} column '{col}' ...` error strings byte-identical.
+fn check_json_dtype(v: &Json, dt: &DType, col: &str, row: usize) -> Result<()> {
+    match cell_mismatch(v, dt, col) {
+        Some(msg) => Err(KamaeError::Serde(format!("row {row} {msg}"))),
+        None => Ok(()),
+    }
+}
+
+/// Lenient sibling of [`dataframe_from_json_rows`] for the serving
+/// ingress validation gate: instead of failing the whole request on the
+/// first bad row, every structural violation becomes a [`RowError`]
+/// against its row and the offending cell decodes as null — the
+/// downstream columnar rule evaluation then quarantines exactly the rows
+/// whose error list is non-empty, and the clean rows decode bit-identical
+/// to the strict path. Returned per-row error lists are index-aligned
+/// with `rows` (empty list = structurally clean row).
+pub fn dataframe_from_json_rows_lenient(
+    rows: &[Json],
+    schema: &Schema,
+) -> Result<(DataFrame, Vec<Vec<RowError>>)> {
+    let mut builders: Vec<ColumnBuilder> = schema
+        .fields
+        .iter()
+        .map(|f| ColumnBuilder::new(f.dtype.clone()))
+        .collect();
+    let mut errors: Vec<Vec<RowError>> = vec![Vec::new(); rows.len()];
+    for (i, row) in rows.iter().enumerate() {
+        let Some(obj) = row.as_object() else {
+            errors[i].push(RowError::new("row", "", "row is not a JSON object"));
+            for b in builders.iter_mut() {
+                b.push_json(&Json::Null)?;
+            }
+            continue;
+        };
+        for key in obj.keys() {
+            if schema.field(key).is_none() {
+                errors[i].push(RowError::new(
+                    "unknown_column",
+                    key.as_str(),
+                    format!(
+                        "unknown column '{key}' (schema columns: {})",
+                        schema.names().join(", ")
+                    ),
+                ));
+            }
+        }
+        for (f, b) in schema.fields.iter().zip(builders.iter_mut()) {
+            let Some(v) = row.get(&f.name) else {
+                errors[i].push(RowError::new(
+                    "required",
+                    f.name.as_str(),
+                    format!(
+                        "missing required column '{}' (send null for an intentional null)",
+                        f.name
+                    ),
+                ));
+                b.push_json(&Json::Null)?;
+                continue;
+            };
+            match cell_mismatch(v, &f.dtype, &f.name) {
+                Some(msg) => {
+                    errors[i].push(RowError::new("dtype", f.name.as_str(), msg));
+                    b.push_json(&Json::Null)?;
+                }
+                None => b.push_json(v)?,
+            }
+        }
+    }
+    let df = DataFrame::new(
+        schema
+            .fields
+            .iter()
+            .zip(builders)
+            .map(|(f, b)| (f.name.clone(), b.finish()))
+            .collect(),
+    )?;
+    Ok((df, errors))
+}
+
+/// Render row `i` of a frame as a JSON object (the shape one
+/// [`write_jsonl`] line carries). Used by the serving dead-letter sink
+/// to quarantine rows that only exist as frame rows.
+pub fn row_to_json(df: &DataFrame, i: usize) -> Json {
+    let mut obj = Json::object();
+    for (name, col) in df.iter() {
+        obj.set(name, json_cell(col, i));
+    }
+    obj
 }
 
 /// Write newline-delimited JSON.
@@ -617,6 +773,87 @@ mod tests {
         let rows = vec![Json::parse(r#"{"price": null, "city": null, "tags": null}"#).unwrap()];
         let df = dataframe_from_json_rows(&rows, &schema).unwrap();
         assert!(df.column("price").unwrap().is_null(0));
+    }
+
+    #[test]
+    fn lenient_rows_decode_clean_rows_identically_and_report_the_rest() {
+        let schema = request_schema();
+        let rows = vec![
+            Json::parse(r#"{"price": 12.5, "city": "berlin", "tags": ["a"]}"#).unwrap(),
+            // three violations on one row: bad dtype, missing column,
+            // unknown column
+            Json::parse(r#"{"price": "cheap", "tags": [], "pricee": 1.0}"#).unwrap(),
+            Json::parse("[1]").unwrap(), // not an object
+            Json::parse(r#"{"price": 7, "city": null, "tags": []}"#).unwrap(),
+        ];
+        let (df, errors) = dataframe_from_json_rows_lenient(&rows, &schema).unwrap();
+        assert_eq!(df.num_rows(), 4);
+        assert!(errors[0].is_empty());
+        let rules: Vec<&str> = errors[1].iter().map(|e| e.rule.as_str()).collect();
+        assert!(rules.contains(&"dtype"), "{rules:?}");
+        assert!(rules.contains(&"required"), "{rules:?}");
+        assert!(rules.contains(&"unknown_column"), "{rules:?}");
+        let dt = errors[1].iter().find(|e| e.rule == "dtype").unwrap();
+        assert_eq!(dt.column, "price");
+        assert!(dt.message.contains("expects float64"), "{}", dt.message);
+        // the bad cell decoded as null, not a silent 0.0
+        assert!(df.column("price").unwrap().is_null(1));
+        assert_eq!(errors[2], vec![RowError::new("row", "", "row is not a JSON object")]);
+        // explicit null is NOT an error in the lenient decoder either
+        assert!(errors[3].is_empty());
+        // clean rows decode bit-identical to the strict decoder
+        let strict = dataframe_from_json_rows(&[rows[0].clone(), rows[3].clone()], &schema).unwrap();
+        let keep = [true, false, false, true];
+        assert_eq!(df.filter_rows(&keep).unwrap(), strict);
+    }
+
+    #[test]
+    fn read_jsonl_reporting_flags_coerced_cells_with_frames_unchanged() {
+        let schema = Schema {
+            fields: vec![
+                Field { name: "n".into(), dtype: DType::I64 },
+                Field { name: "s".into(), dtype: DType::Str },
+            ],
+        };
+        let tmp = std::env::temp_dir().join("kamae_io_lenient_report.jsonl");
+        std::fs::write(
+            &tmp,
+            concat!(
+                "{\"n\": 1, \"s\": \"ok\"}\n",
+                "{\"n\": \"oops\", \"s\": \"bad-int\"}\n",
+                "\n",
+                "{\"s\": \"missing-n-is-legal\"}\n",
+                "{\"n\": 3, \"s\": 9}\n",
+            ),
+        )
+        .unwrap();
+        let (df, report) = read_jsonl_reporting(&tmp, &schema).unwrap();
+        // the frame is exactly what the lenient reader always built
+        assert_eq!(read_jsonl(&tmp, &schema).unwrap(), df);
+        assert_eq!(df.num_rows(), 4);
+        // two coerced cells, named with row + rule + column
+        assert_eq!(report.len(), 2);
+        assert_eq!(report[0].0, 1);
+        assert_eq!(report[0].1.rule, "dtype");
+        assert_eq!(report[0].1.column, "n");
+        assert!(report[0].1.message.contains("expects int64"), "{}", report[0].1.message);
+        assert_eq!(report[1].0, 3);
+        assert_eq!(report[1].1.column, "s");
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn row_error_json_shape() {
+        let e = RowError::new("range", "price", "price -1 below minimum 0");
+        let j = e.to_json();
+        assert_eq!(j.get("rule").and_then(Json::as_str), Some("range"));
+        assert_eq!(j.get("column").and_then(Json::as_str), Some("price"));
+        assert_eq!(
+            j.get("message").and_then(Json::as_str),
+            Some("price -1 below minimum 0")
+        );
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
     }
 
     #[test]

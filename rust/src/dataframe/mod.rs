@@ -15,6 +15,7 @@ mod value;
 pub use column::{union_null_masks, Column, DType, ListColumn};
 pub use frame::{DataFrame, Field, Schema};
 pub use io::{
-    dataframe_from_json_rows, infer_jsonl_schema, read_csv, read_jsonl, write_csv, write_jsonl,
+    dataframe_from_json_rows, dataframe_from_json_rows_lenient, infer_jsonl_schema, read_csv,
+    read_jsonl, read_jsonl_reporting, row_to_json, write_csv, write_jsonl, RowError,
 };
 pub use value::Value;

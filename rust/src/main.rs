@@ -157,11 +157,17 @@ fn print_usage() {
          \x20                  POST /v1/infer/<tenant>, hot-swappable at runtime via\n\
          \x20                  POST /admin/deploy / /admin/rollback (zero-downtime; without\n\
          \x20                  --tenants the --variants list becomes the 'default' tenant)\n\
+         \x20                  — add --validate [--dead-letter FILE.jsonl] to gate ingress\n\
+         \x20                  data quality: invalid rows are quarantined (responses carry\n\
+         \x20                  per-row verdicts, the batch is served compacted) and\n\
+         \x20                  appended to the dead-letter file with their errors\n\
          \x20 deploy           <tenant> <spec.json[,spec2.json...]> --addr HOST:PORT\n\
          \x20                  [--expect-version N] [--level none|basic|full] — hot-swap a\n\
          \x20                  tenant's specs on a running --registry listener (creates the\n\
          \x20                  tenant if new; N protects against concurrent deploys, 409 on\n\
-         \x20                  a lost race)\n\
+         \x20                  a lost race); --rules FILE.json attaches declarative\n\
+         \x20                  data-quality rules (range | one_of | pattern) that version\n\
+         \x20                  and roll back WITH the specs\n\
          \x20 rollback         <tenant> --addr HOST:PORT [--to-version N] — re-activate the\n\
          \x20                  previous (or an explicit) still-warm version, no rebuild\n\
          \x20 tenants          --addr HOST:PORT — list tenants, versions and per-version\n\
@@ -512,9 +518,18 @@ fn serve_listen(
 
     let workers = args.usize_or("workers", 1);
     let admission = args.usize_or("admission", 64);
+    let validate = args.has("validate");
+    let dead_letter = args.get("dead-letter").map(PathBuf::from);
+    if dead_letter.is_some() && !validate {
+        return Err(KamaeError::InvalidConfig(
+            "--dead-letter requires --validate (nothing is quarantined without the gate)".into(),
+        ));
+    }
     let config = NetConfig {
         batch: BatchConfig { workers, ..Default::default() },
         admission,
+        validate,
+        dead_letter: dead_letter.clone(),
         ..NetConfig::default()
     };
     let registry_mode = args.has("registry");
@@ -576,12 +591,17 @@ fn serve_listen(
         NetServer::bind(backend, listen, config)?
     };
     println!(
-        "kamae serve: listening on http://{} ({}; workers {workers}; admission {admission})",
+        "kamae serve: listening on http://{} ({}; workers {workers}; admission {admission}{})",
         server.addr(),
         if registry_mode {
             "registry mode".to_string()
         } else {
             format!("variants: {}", names.join(", "))
+        },
+        match &dead_letter {
+            Some(p) => format!("; validate on, dead-letter {}", p.display()),
+            None if validate => "; validate on".to_string(),
+            None => String::new(),
         }
     );
     if registry_mode {
@@ -651,6 +671,18 @@ fn deploy(args: &Args) -> Result<()> {
     if let Some(level) = args.get("level") {
         kamae::optim::OptimizeLevel::parse(level)?; // fail fast locally
         body.set("level", level);
+    }
+    if let Some(path) = args.get("rules") {
+        // data-quality rules deploy WITH the specs: one version, one
+        // atomic swap, one rollback for both
+        let text = std::fs::read_to_string(path)?;
+        let rules = Json::parse(&text)?;
+        if rules.as_array().is_none() {
+            return Err(KamaeError::InvalidConfig(format!(
+                "--rules {path}: expected a JSON array of rule objects"
+            )));
+        }
+        body.set("validation", rules);
     }
     admin_call(args, "POST", "/admin/deploy", &body.to_string())
 }

@@ -65,6 +65,7 @@ use crate::runtime::Tensor;
 
 use super::backend::{Backend, VariantGroup};
 use super::registry::{SpecRegistry, TenantVersion, DEFAULT_TENANT};
+use super::validate::{screen_batch, DeadLetterSink, ValidationReport};
 
 /// Batching policy.
 #[derive(Debug, Clone)]
@@ -183,6 +184,12 @@ impl JobQueue {
         self.cond.notify_all();
     }
 
+    /// Jobs currently queued (not yet drained by a worker) — the load
+    /// signal behind the shed path's dynamic `Retry-After` hint.
+    fn depth(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
     /// Drain the next batch for one worker: block for the first job,
     /// greedily take everything already queued up to `max_rows`, then
     /// wait at most `max_wait` (from the first job) for stragglers.
@@ -281,6 +288,9 @@ pub struct Server {
     /// tags are ignored rather than validated, so submits skip the
     /// known-variant check.
     route_variants: bool,
+    /// When the pool started serving — the denominator of the lifetime
+    /// drain rate behind the shed path's `Retry-After` hint.
+    started: Instant,
 }
 
 impl Server {
@@ -341,6 +351,7 @@ impl Server {
             metrics,
             registry,
             route_variants: config.route_variants,
+            started: Instant::now(),
         })
     }
 
@@ -416,12 +427,78 @@ impl Server {
         resp_rx
     }
 
+    /// [`Server::submit_tenant`] behind the ingress data-quality gate:
+    /// the request is screened against the resolved version's
+    /// [`ValidationSpec`](super::validate::ValidationSpec), quarantined
+    /// rows are dead-lettered to `sink` (as JSON re-encodings of the
+    /// frame rows — the wire layer dead-letters the original raw JSON
+    /// instead), and the COMPACTED batch is submitted. The returned
+    /// report maps the response tensors (valid rows only, original
+    /// relative order) back to original row positions.
+    ///
+    /// A batch with zero valid rows short-circuits: the receiver is
+    /// primed with an empty tensor list and no backend runs — the
+    /// verdicts in the report are the entire answer. Versions without a
+    /// validation spec (spec-less backends) pass through unscreened
+    /// with an all-valid report.
+    pub fn submit_tenant_validated(
+        &self,
+        df: DataFrame,
+        tenant: &str,
+        variant: Option<&str>,
+        sink: Option<&dyn DeadLetterSink>,
+    ) -> (mpsc::Receiver<Result<Vec<Tensor>>>, ValidationReport) {
+        let nrows = df.num_rows();
+        let resolved = match self.registry.resolve(tenant) {
+            Ok(r) => r,
+            Err(e) => return (Self::reject(e), ValidationReport::all_valid(nrows)),
+        };
+        let Some(spec) = resolved.validation() else {
+            let rx = self.submit_resolved(df, variant.map(str::to_string), resolved);
+            return (rx, ValidationReport::all_valid(nrows));
+        };
+        let (clean, report) = match screen_batch(spec, &df, Vec::new()) {
+            Ok(v) => v,
+            Err(e) => return (Self::reject(e), ValidationReport::all_valid(nrows)),
+        };
+        if let Some(sink) = sink {
+            for i in report.quarantined() {
+                sink.record(tenant, &crate::dataframe::row_to_json(&df, i), &report.errors[i]);
+            }
+        }
+        if report.num_valid() == 0 {
+            // all-quarantined: answer now, the backend never sees an
+            // empty batch
+            let (resp_tx, resp_rx) = mpsc::channel();
+            let _ = resp_tx.send(Ok(Vec::new()));
+            return (resp_rx, report);
+        }
+        let rx = self.submit_resolved(clean, variant.map(str::to_string), resolved);
+        (rx, report)
+    }
+
     /// A receiver already primed with `err` — submit-time rejections
     /// fail their OWN request without touching the queue.
     fn reject(err: KamaeError) -> mpsc::Receiver<Result<Vec<Tensor>>> {
         let (resp_tx, resp_rx) = mpsc::channel();
         let _ = resp_tx.send(Err(err));
         resp_rx
+    }
+
+    /// Requests queued but not yet drained by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Requests/second the pool has drained over its lifetime — with
+    /// [`Server::queue_depth`], the inputs to the shed path's dynamic
+    /// `Retry-After` hint. 0.0 until the first request completes.
+    pub fn drain_rate_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.counts().1 as f64 / secs
     }
 
     /// Number of worker threads in the pool.
@@ -1156,6 +1233,76 @@ mod tests {
         let job = Job { df: req(&[1.0]), variant: None, resolved, resp: tx };
         assert!(queue.push(job).is_err());
         drop(rx);
+    }
+
+    // ---- ingress validation gate ------------------------------------------
+
+    /// [`Doubler`] with a request schema over `x: f64`, so the registry
+    /// derives a validation spec for it (plain mocks skip the gate).
+    struct SchemaDoubler;
+
+    impl Backend for SchemaDoubler {
+        fn name(&self) -> &str {
+            "schema-doubler"
+        }
+
+        fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+            assert!(df.num_rows() > 0, "validated path leaked an empty batch to the backend");
+            let v = df.column("x")?.as_f64()?;
+            Tensor::f32(v.iter().map(|&x| 2.0 * x as f32).collect(), vec![v.len()])
+                .map(|t| vec![t])
+        }
+
+        fn request_schema(&self) -> Option<crate::dataframe::Schema> {
+            Some(crate::dataframe::Schema {
+                fields: vec![crate::dataframe::Field {
+                    name: "x".into(),
+                    dtype: crate::dataframe::DType::F64,
+                }],
+            })
+        }
+    }
+
+    #[test]
+    fn validated_submit_quarantines_dead_letters_and_serves_the_rest() {
+        use super::super::validate::MemoryDeadLetter;
+        let server = Server::start(Box::new(SchemaDoubler), BatchConfig::default()).unwrap();
+        let sink = MemoryDeadLetter::new(16);
+        let df = DataFrame::new(vec![(
+            "x".into(),
+            Column::from_f64_opt(vec![Some(1.0), None, Some(3.0), None]),
+        )])
+        .unwrap();
+        let (rx, report) = server.submit_tenant_validated(df, DEFAULT_TENANT, None, Some(&sink));
+        assert_eq!(report.keep, vec![true, false, true, false]);
+        let out = rx.recv().unwrap().unwrap();
+        // compacted batch: exactly the valid rows, in original order
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 6.0]);
+        // quarantined rows landed in the sink with rule + column
+        assert_eq!(sink.len(), 2);
+        let entry = &sink.entries()[0];
+        assert_eq!(
+            entry.get("tenant").and_then(crate::util::json::Json::as_str),
+            Some(DEFAULT_TENANT)
+        );
+        let errs = entry.get("errors").and_then(crate::util::json::Json::as_array).unwrap();
+        assert_eq!(errs[0].get("rule").and_then(crate::util::json::Json::as_str), Some("not_null"));
+        assert_eq!(errs[0].get("column").and_then(crate::util::json::Json::as_str), Some("x"));
+
+        // all-quarantined: verdicts only, the backend never runs on an
+        // empty frame (SchemaDoubler asserts), the response is prompt
+        let df = DataFrame::new(vec![("x".into(), Column::from_f64_opt(vec![None, None]))])
+            .unwrap();
+        let (rx, report) = server.submit_tenant_validated(df, DEFAULT_TENANT, None, Some(&sink));
+        assert_eq!(report.num_valid(), 0);
+        assert_eq!(report.num_quarantined(), 2);
+        assert!(rx.recv().unwrap().unwrap().is_empty());
+        assert_eq!(sink.len(), 4);
+
+        // load-signal accessors behave at idle
+        assert_eq!(server.queue_depth(), 0);
+        assert!(server.drain_rate_rps() >= 0.0);
+        server.shutdown();
     }
 
     // ---- registry addressing ----------------------------------------------

@@ -1,6 +1,7 @@
 //! Serving metrics: latency recording and the benchmark report.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -17,6 +18,12 @@ pub struct LatencyRecorder {
     /// the variant map so one request tagged both ways is never double
     /// counted in either split.
     tenant_ns: Mutex<BTreeMap<String, Vec<f64>>>,
+    /// Per-rule ingress-validation violation counters (rule name →
+    /// violating cells). Touched only when the ingress gate actually
+    /// quarantines, so clean traffic never takes this lock.
+    violations: Mutex<BTreeMap<String, u64>>,
+    /// Rows the ingress gate quarantined instead of serving.
+    quarantined: AtomicU64,
 }
 
 impl LatencyRecorder {
@@ -25,6 +32,8 @@ impl LatencyRecorder {
             samples_ns: Mutex::new(Vec::new()),
             tagged_ns: Mutex::new(BTreeMap::new()),
             tenant_ns: Mutex::new(BTreeMap::new()),
+            violations: Mutex::new(BTreeMap::new()),
+            quarantined: AtomicU64::new(0),
         }
     }
 
@@ -54,6 +63,21 @@ impl LatencyRecorder {
             .entry(tenant.to_string())
             .or_default()
             .push(latency.as_nanos() as f64);
+    }
+
+    /// Fold one batch's per-rule violation counts and quarantined-row
+    /// count into the ingress-validation counters (see
+    /// [`crate::serving::ValidationReport::rule_counts`]).
+    pub fn record_quarantine(&self, rule_counts: &BTreeMap<String, u64>, rows: u64) {
+        if rows > 0 {
+            self.quarantined.fetch_add(rows, Ordering::Relaxed);
+        }
+        if !rule_counts.is_empty() {
+            let mut v = self.violations.lock().unwrap();
+            for (rule, n) in rule_counts {
+                *v.entry(rule.clone()).or_insert(0) += n;
+            }
+        }
     }
 
     /// Produce the final report.
@@ -139,6 +163,8 @@ impl LatencyRecorder {
             worker_utilization: Vec::new(),
             shed_requests: 0,
             admission_limit: 0,
+            violations: self.violations.lock().unwrap().clone(),
+            quarantined_rows: self.quarantined.load(Ordering::Relaxed),
         }
     }
 
@@ -274,6 +300,13 @@ pub struct ServeReport {
     /// The admission window (max in-flight requests) the run was served
     /// under. 0 when no admission control was in front of the server.
     pub admission_limit: usize,
+    /// Per-rule ingress-validation violation counts (rule name →
+    /// violating cells). Empty when the gate is off or traffic was
+    /// clean.
+    pub violations: BTreeMap<String, u64>,
+    /// Rows the ingress gate quarantined (dead-lettered) instead of
+    /// serving. 0 when the gate is off or nothing was quarantined.
+    pub quarantined_rows: u64,
 }
 
 impl ServeReport {
@@ -333,6 +366,19 @@ impl ServeReport {
         if self.admission_limit > 0 {
             j.set("admission_limit", self.admission_limit);
         }
+        // validation keys appear only on runs where the ingress gate
+        // actually quarantined, so ungated trajectory records keep
+        // their exact pre-validation shape
+        if self.quarantined_rows > 0 {
+            j.set("quarantined_rows", self.quarantined_rows as i64);
+        }
+        if !self.violations.is_empty() {
+            let mut v = Json::object();
+            for (rule, n) in &self.violations {
+                v.set(rule.clone(), *n as i64);
+            }
+            j.set("violations", v);
+        }
         j
     }
 }
@@ -367,6 +413,16 @@ impl std::fmt::Display for ServeReport {
                 f,
                 "\nadmission       window {}  shed {}",
                 self.admission_limit, self.shed_requests
+            )?;
+        }
+        if self.quarantined_rows > 0 || !self.violations.is_empty() {
+            let rules: Vec<String> =
+                self.violations.iter().map(|(rule, n)| format!("{rule} {n}")).collect();
+            write!(
+                f,
+                "\nquarantine      rows {}  ({})",
+                self.quarantined_rows,
+                rules.join("  ")
             )?;
         }
         for v in &self.variants {
@@ -593,6 +649,42 @@ mod tests {
         rep.shed_requests = 0;
         rep.admission_limit = 0;
         assert!(!rep.to_string().contains("admission"));
+    }
+
+    #[test]
+    fn quarantine_keys_gate_on_non_zero() {
+        let r = LatencyRecorder::new();
+        r.record(Duration::from_millis(2));
+        let rep = r.report("ltr/net", 1, Duration::from_secs(1), Duration::from_millis(2));
+        // ungated runs keep the exact pre-validation record shape
+        assert_eq!(rep.quarantined_rows, 0);
+        assert!(rep.violations.is_empty());
+        let j = rep.to_json();
+        assert!(j.get("quarantined_rows").is_none());
+        assert!(j.get("violations").is_none());
+        assert!(!rep.to_string().contains("quarantine"));
+        // batches fold their per-rule counts in; the report carries both
+        let mut counts = BTreeMap::new();
+        counts.insert("not_null".to_string(), 2u64);
+        counts.insert("range".to_string(), 1u64);
+        r.record_quarantine(&counts, 3);
+        let mut one = BTreeMap::new();
+        one.insert("range".to_string(), 4u64);
+        r.record_quarantine(&one, 2);
+        let rep = r.report("ltr/net", 1, Duration::from_secs(1), Duration::from_millis(2));
+        assert_eq!(rep.quarantined_rows, 5);
+        assert_eq!(rep.violations.get("not_null"), Some(&2));
+        assert_eq!(rep.violations.get("range"), Some(&5));
+        let j = rep.to_json();
+        assert_eq!(j.req_i64("quarantined_rows").unwrap(), 5);
+        let v = j.req("violations").unwrap();
+        assert_eq!(v.req_i64("not_null").unwrap(), 2);
+        assert_eq!(v.req_i64("range").unwrap(), 5);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        // display renders the quarantine line
+        let text = rep.to_string();
+        assert!(text.contains("quarantine      rows 5"), "{text}");
+        assert!(text.contains("range 5"), "{text}");
     }
 
     #[test]

@@ -128,6 +128,42 @@
 //! bit-identity against in-process submission, and cheap shedding under
 //! 2× overload.
 //!
+//! ## Ingress data-quality gate
+//!
+//! The `validate` module quarantines bad rows at the front door instead
+//! of letting one malformed row poison a whole batch. A
+//! [`ValidationSpec`] is derived automatically from the tenant's
+//! request schema (every column required and type-checked) and extended
+//! with declarative per-tenant rules (`range`, `one_of`, `pattern` —
+//! attached at deploy time, versioned WITH the backend inside
+//! [`TenantVersion`] so deploy/rollback swaps rules and model as one
+//! atomic snapshot):
+//!
+//! ```text
+//!   rows ─▶ lenient decode ─▶ ValidationSpec::evaluate  (columnar
+//!              │ structural        │   masks, union_null_masks fast
+//!              │ RowErrors         │   path — clean batches cost one
+//!              ▼                   ▼   mask fold)
+//!          per-row verdict mask: keep[i] / Vec<RowError>
+//!              │                       │
+//!        valid rows                quarantined rows
+//!              │                       │
+//!      filter_rows → compacted   DeadLetterSink (JSONL file or
+//!      batch → worker pool       in-memory ring) + per-rule
+//!              │                 violation counters in ServeReport
+//!              ▼
+//!      response: outputs for valid rows + per-row "verdicts"
+//!      (ok → output_row index; quarantined → structured RowErrors
+//!       naming rule, column, message)
+//! ```
+//!
+//! The batch is *compacted* — the backend never sees an invalid row,
+//! and a batch whose rows are ALL quarantined short-circuits to an
+//! empty output set (verdicts still itemise every row, latency is
+//! still billed). Valid rows' outputs are bit-identical to serving the
+//! same rows without corruption (`benches/ingress_validation.rs` pins
+//! this differentially and gates clean-traffic overhead at < 5%).
+//!
 //! ## Spec registry & hot swap
 //!
 //! The `registry` module makes the backend a **runtime-resolved,
@@ -167,6 +203,7 @@ mod batcher;
 mod metrics;
 mod net;
 mod registry;
+mod validate;
 
 pub use backend::{Backend, CompiledBackend, InterpretedBackend, MleapBackend, VariantGroup};
 pub use batcher::{BatchConfig, Server};
@@ -176,6 +213,10 @@ pub use net::{
 };
 pub use registry::{
     DeploySummary, SpecRegistry, TenantSnapshot, TenantVersion, VersionInfo, DEFAULT_TENANT,
+};
+pub use validate::{
+    dead_letter_entry, screen_batch, DeadLetterSink, JsonlDeadLetter, MemoryDeadLetter, Rule,
+    RowError, ValidationReport, ValidationSpec,
 };
 
 use std::path::Path;

@@ -24,6 +24,11 @@
 //! POST /v1/infer          {"variant": "a", "rows": [{col: val, ...}, ...]}
 //!   200  {"outputs": [{"name","dtype","shape","data"}, ...],
 //!         "rows": N, "variant": "a"}          (variant key only if targeted)
+//!   with [`NetConfig::validate`] on, also
+//!        {"valid_rows": M, "verdicts": [{"row",
+//!         "status": "ok"|"quarantined", ...}, ...]} — outputs cover
+//!         only the valid rows; quarantined rows carry structured
+//!         errors and land in the dead-letter sink
 //!   4xx/5xx  {"error": {"code","message","status"}}
 //! POST /v1/infer/<tenant> same, addressed to one registry tenant
 //!                         (bare /v1/infer is the "default" tenant)
@@ -31,8 +36,10 @@
 //! GET  /metrics           full ServeReport (incl. per-tenant splits) +
 //!                         per-client counters as JSON
 //! POST /admin/deploy      {"tenant", "spec"|"specs", "expect_version"?,
-//!                          "level"?} — build off-thread, hot-swap the
-//!                         tenant's active version (409 on a lost CAS)
+//!                          "level"?, "validation"?} — build off-thread,
+//!                         hot-swap the tenant's active version (409 on
+//!                         a lost CAS); "validation" attaches declarative
+//!                         data-quality rules to the new version
 //! POST /admin/rollback    {"tenant", "to_version"?} — re-activate a
 //!                         previous version (409 when there is none)
 //! GET  /admin/tenants     registry snapshot: versions + request gauges
@@ -62,11 +69,12 @@
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use crate::dataframe::dataframe_from_json_rows;
+use crate::dataframe::{dataframe_from_json_rows, dataframe_from_json_rows_lenient};
 use crate::error::{KamaeError, Result};
 use crate::export::GraphSpec;
 use crate::optim::OptimizeLevel;
@@ -78,6 +86,7 @@ use super::backend::Backend;
 use super::batcher::{BatchConfig, Server};
 use super::metrics::{LatencyRecorder, TenantStats};
 use super::registry::{SpecRegistry, TenantVersion, DEFAULT_TENANT};
+use super::validate::{DeadLetterSink, JsonlDeadLetter};
 
 /// Listener configuration.
 #[derive(Debug, Clone)]
@@ -99,6 +108,16 @@ pub struct NetConfig {
     /// `other_clients` rollup — unique ids must not grow the map (and
     /// its report cost) without bound.
     pub max_clients: usize,
+    /// Run the ingress data-quality gate: rows are decoded leniently,
+    /// screened against the resolved tenant version's
+    /// [`super::ValidationSpec`], and invalid rows are quarantined —
+    /// the batch is served compacted and the response carries per-row
+    /// `verdicts` with structured errors. Off (the default), a single
+    /// bad cell still fails the whole request with a 400.
+    pub validate: bool,
+    /// Append quarantined rows (original wire JSON + their errors) to
+    /// this JSONL dead-letter file. Requires [`Self::validate`].
+    pub dead_letter: Option<PathBuf>,
 }
 
 impl Default for NetConfig {
@@ -110,6 +129,8 @@ impl Default for NetConfig {
             max_body_bytes: 1 << 22,
             retry_after_secs: 1,
             max_clients: 64,
+            validate: false,
+            dead_letter: None,
         }
     }
 }
@@ -134,6 +155,13 @@ impl NetConfig {
         if self.max_clients == 0 {
             return Err(KamaeError::Serving(
                 "NetConfig::max_clients must be >= 1 (every request has a client id)".into(),
+            ));
+        }
+        if self.dead_letter.is_some() && !self.validate {
+            return Err(KamaeError::Serving(
+                "NetConfig::dead_letter is set but validate is off — nothing would \
+                 ever be quarantined into it"
+                    .into(),
             ));
         }
         Ok(())
@@ -342,6 +370,8 @@ struct NetState {
     /// Per-tenant shed counts (sheds happen before latency samples
     /// exist, so they cannot live in the recorder).
     tenant_shed: Mutex<BTreeMap<String, u64>>,
+    /// Dead-letter sink for quarantined rows ([`NetConfig::dead_letter`]).
+    dead_letter: Option<JsonlDeadLetter>,
 }
 
 impl NetState {
@@ -421,6 +451,10 @@ impl NetServer {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let max_clients = config.max_clients;
+        let dead_letter = match &config.dead_letter {
+            Some(path) => Some(JsonlDeadLetter::create(path)?),
+            None => None,
+        };
         let state = Arc::new(NetState {
             registry,
             server: RwLock::new(Some(server)),
@@ -435,6 +469,7 @@ impl NetServer {
             shed: AtomicU64::new(0),
             clients: Mutex::new(ClientTable::new(max_clients)),
             tenant_shed: Mutex::new(BTreeMap::new()),
+            dead_letter,
         });
         let accept_state = Arc::clone(&state);
         let accept = std::thread::Builder::new()
@@ -840,6 +875,21 @@ fn handle_metrics(state: &NetState) -> Handled {
     (200, Vec::new(), j.to_string())
 }
 
+/// The `Retry-After` hint for a shed response, derived from live load:
+/// the seconds the current queue needs to drain at the server's
+/// observed lifetime service rate, floored at
+/// [`NetConfig::retry_after_secs`] and capped at 60 (beyond a minute
+/// the number is guesswork, not guidance). With no drain signal yet —
+/// empty queue, cold server, or a rate of zero — the floor is the
+/// hint, which is exactly the old constant behaviour.
+fn retry_after_hint(queue_depth: usize, drain_rps: f64, floor: u64) -> u64 {
+    if queue_depth == 0 || !drain_rps.is_finite() || drain_rps <= 0.0 {
+        return floor;
+    }
+    let secs = (queue_depth as f64 / drain_rps).ceil() as u64;
+    secs.clamp(floor, floor.max(60))
+}
+
 fn handle_infer(
     state: &NetState,
     tenant: &str,
@@ -863,9 +913,17 @@ fn handle_infer(
             .unwrap()
             .entry(tenant.to_string())
             .or_insert(0) += 1;
-        return Err(WireError::Overloaded {
-            retry_after_secs: state.config.retry_after_secs,
-        });
+        // derive the hint from live load — a queue that needs 10 s to
+        // drain should not invite a retry in 1 s
+        let floor = state.config.retry_after_secs;
+        let retry_after_secs = state
+            .server
+            .read()
+            .unwrap()
+            .as_ref()
+            .map(|s| retry_after_hint(s.queue_depth(), s.drain_rate_rps(), floor))
+            .unwrap_or(floor);
+        return Err(WireError::Overloaded { retry_after_secs });
     }
     state.in_flight.fetch_add(1, Ordering::SeqCst);
     let _permit = AdmissionGuard { state };
@@ -916,26 +974,70 @@ fn handle_infer(
             resolved.backend().name()
         ))
     })?;
-    let df = dataframe_from_json_rows(rows, schema)
-        .map_err(|e| WireError::BadRequest(e.to_string()))?;
-    let n_rows = df.num_rows();
-    // take the read lock only to enqueue; the response channel outlives it
-    let rx = {
-        let server = state.server.read().unwrap();
-        let server = server.as_ref().ok_or(WireError::ShuttingDown)?;
-        server.submit_resolved(df, variant.clone(), Arc::clone(&resolved))
-    };
-    let tensors = match rx.recv() {
-        Ok(Ok(t)) => t,
-        Ok(Err(e)) => {
-            let msg = e.to_string();
-            return Err(if msg.contains("server stopped") {
-                WireError::ShuttingDown
+    let n_rows = rows.len();
+    // ingress gate: decode leniently, screen against the resolved
+    // version's validation spec, quarantine instead of failing the
+    // whole request. The spec is part of the TenantVersion snapshot,
+    // so a deploy swapping the rules mid-request cannot mix rule sets.
+    let vspec = if state.config.validate { resolved.validation() } else { None };
+    let (df, report) = match vspec {
+        Some(vspec) => {
+            let (df, structural) = dataframe_from_json_rows_lenient(rows, schema)
+                .map_err(|e| WireError::BadRequest(e.to_string()))?;
+            let report = vspec
+                .evaluate(&df, structural)
+                .map_err(|e| WireError::Internal(e.to_string()))?;
+            if report.num_quarantined() > 0 {
+                // dead-letter the ORIGINAL wire rows — what the client
+                // sent, not the lenient decode's nulled-out shadow
+                if let Some(sink) = &state.dead_letter {
+                    for i in report.quarantined() {
+                        sink.record(tenant, &rows[i], &report.errors[i]);
+                    }
+                }
+                state
+                    .recorder
+                    .record_quarantine(&report.rule_counts(), report.num_quarantined() as u64);
+            }
+            let clean = if report.num_quarantined() == 0 {
+                df
             } else {
-                WireError::Internal(msg)
-            });
+                df.filter_rows(&report.keep)
+                    .map_err(|e| WireError::Internal(e.to_string()))?
+            };
+            (clean, Some(report))
         }
-        Err(_) => return Err(WireError::ShuttingDown),
+        None => {
+            let df = dataframe_from_json_rows(rows, schema)
+                .map_err(|e| WireError::BadRequest(e.to_string()))?;
+            (df, None)
+        }
+    };
+    let valid_rows = df.num_rows();
+    let tensors = if valid_rows == 0 {
+        // every row quarantined: nothing to serve, but the request is
+        // still answered (verdicts itemise each row) and still billed
+        Vec::new()
+    } else {
+        // take the read lock only to enqueue; the response channel
+        // outlives it
+        let rx = {
+            let server = state.server.read().unwrap();
+            let server = server.as_ref().ok_or(WireError::ShuttingDown)?;
+            server.submit_resolved(df, variant.clone(), Arc::clone(&resolved))
+        };
+        match rx.recv() {
+            Ok(Ok(t)) => t,
+            Ok(Err(e)) => {
+                let msg = e.to_string();
+                return Err(if msg.contains("server stopped") {
+                    WireError::ShuttingDown
+                } else {
+                    WireError::Internal(msg)
+                });
+            }
+            Err(_) => return Err(WireError::ShuttingDown),
+        }
     };
     let elapsed = t0.elapsed();
     match &variant {
@@ -952,7 +1054,7 @@ fn handle_infer(
         c.latency_ns_sum += ns;
         c.latency_ns_max = c.latency_ns_max.max(ns);
     }
-    if tensors.len() != out_idx.len() {
+    if valid_rows > 0 && tensors.len() != out_idx.len() {
         return Err(WireError::Internal(format!(
             "backend returned {} outputs, expected {}",
             tensors.len(),
@@ -968,6 +1070,10 @@ fn handle_infer(
     let mut resp = Json::object();
     resp.set("outputs", Json::Array(outs));
     resp.set("rows", n_rows);
+    if let Some(report) = &report {
+        resp.set("valid_rows", report.num_valid() as i64);
+        resp.set("verdicts", report.verdicts_json());
+    }
     if let Some(v) = &variant {
         resp.set("variant", v.clone());
     }
@@ -1033,9 +1139,20 @@ fn handle_deploy(state: &NetState, body: &str) -> std::result::Result<Handled, W
         ),
         Some(_) => return Err(WireError::BadRequest("'level' must be a string".into())),
     };
+    // declarative data-quality rules ride the deploy body and version
+    // WITH the backend — a rollback reverts rules and model together
+    let rules = match parsed.get("validation") {
+        None | Some(Json::Null) => None,
+        Some(v @ Json::Array(_)) => Some(v),
+        Some(_) => {
+            return Err(WireError::BadRequest(
+                "'validation' must be an array of rule objects".into(),
+            ))
+        }
+    };
     let summary = state
         .registry
-        .deploy_specs(&tenant, &specs, expect_version, level)
+        .deploy_specs_rules(&tenant, &specs, expect_version, level, rules)
         .map_err(registry_wire_error)?;
     let mut j = Json::object();
     j.set("status", "deployed");
@@ -1340,9 +1457,42 @@ mod tests {
             NetConfig { admission: 0, ..NetConfig::default() },
             NetConfig { max_request_rows: 0, ..NetConfig::default() },
             NetConfig { max_body_bytes: 0, ..NetConfig::default() },
+            // a dead-letter path with the gate off would silently never
+            // receive a row
+            NetConfig {
+                dead_letter: Some(PathBuf::from("/tmp/dl.jsonl")),
+                ..NetConfig::default()
+            },
         ] {
             assert!(broken.validate().is_err());
         }
+        // the pair is fine together
+        let ok = NetConfig {
+            validate: true,
+            dead_letter: Some(PathBuf::from("/tmp/dl.jsonl")),
+            ..NetConfig::default()
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn retry_after_hint_tracks_queue_drain_time() {
+        // no load signal → the configured floor, the old constant hint
+        assert_eq!(retry_after_hint(0, 100.0, 1), 1);
+        assert_eq!(retry_after_hint(50, 0.0, 1), 1);
+        assert_eq!(retry_after_hint(50, f64::NAN, 3), 3);
+        // queue of 50 draining at 10/s → 5 s to clear
+        assert_eq!(retry_after_hint(50, 10.0, 1), 5);
+        // partial seconds round UP — never invite a retry into a still-
+        // full queue
+        assert_eq!(retry_after_hint(11, 10.0, 1), 2);
+        // a fast drain never hints below the floor
+        assert_eq!(retry_after_hint(3, 1000.0, 2), 2);
+        // a glacial drain is capped: beyond a minute the number is
+        // guesswork
+        assert_eq!(retry_after_hint(10_000, 0.5, 1), 60);
+        // a floor above the cap wins (operator said so explicitly)
+        assert_eq!(retry_after_hint(10_000, 0.5, 90), 90);
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::optim::OptimizeLevel;
 use crate::util::json::Json;
 
 use super::backend::{Backend, InterpretedBackend};
+use super::validate::ValidationSpec;
 
 /// Tenant name the single-spec wrappers ([`super::Server::start`],
 /// [`super::NetServer::bind`]) register their one backend under.
@@ -54,13 +55,25 @@ pub struct TenantVersion {
     outputs: Vec<String>,
     variants: Vec<String>,
     variant_outputs: Vec<Vec<usize>>,
+    /// Ingress data-quality gate for this version: the schema-derived
+    /// not-null baseline plus any deploy-time declarative rules. `None`
+    /// only for spec-less backends (no schema to derive from). Versioned
+    /// WITH the backend so a deploy/rollback swaps rules and model as
+    /// one atomic snapshot — queued requests validate against the same
+    /// version they execute on.
+    validation: Option<Arc<ValidationSpec>>,
     /// Requests this version answered — the per-version gauge the
     /// stress test sums to account for every request.
     requests: AtomicU64,
 }
 
 impl TenantVersion {
-    fn new(tenant: &str, version: u64, backend: Arc<dyn Backend>) -> TenantVersion {
+    fn new(
+        tenant: &str,
+        version: u64,
+        backend: Arc<dyn Backend>,
+        validation: Option<Arc<ValidationSpec>>,
+    ) -> TenantVersion {
         let schema = backend.request_schema();
         let outputs = backend.spec().map(|s| s.outputs.clone()).unwrap_or_default();
         let variants = backend.variants().to_vec();
@@ -78,7 +91,28 @@ impl TenantVersion {
             outputs,
             variants,
             variant_outputs,
+            validation,
             requests: AtomicU64::new(0),
+        }
+    }
+
+    /// Compile the version's validation spec from the backend's request
+    /// schema plus optional deploy-time rules. Runs BEFORE any registry
+    /// lock so a slow/bad rule set never stalls or poisons a swap.
+    fn build_validation(
+        tenant: &str,
+        backend: &dyn Backend,
+        rules: Option<&Json>,
+    ) -> Result<Option<Arc<ValidationSpec>>> {
+        match (backend.request_schema(), rules) {
+            (Some(s), Some(r)) => Ok(Some(Arc::new(ValidationSpec::from_json(r, &s)?))),
+            (Some(s), None) => Ok(Some(Arc::new(ValidationSpec::from_schema(&s)))),
+            (None, Some(_)) => Err(KamaeError::InvalidConfig(format!(
+                "tenant '{tenant}': validation rules given, but backend '{}' \
+                 has no request schema to validate against",
+                backend.name()
+            ))),
+            (None, None) => Ok(None),
         }
     }
 
@@ -125,6 +159,12 @@ impl TenantVersion {
                     ))
                 }),
         }
+    }
+
+    /// This version's ingress validation spec (`None` only for
+    /// spec-less backends, which also cannot serve the wire).
+    pub fn validation(&self) -> Option<&ValidationSpec> {
+        self.validation.as_deref()
     }
 
     pub fn requests_served(&self) -> u64 {
@@ -241,10 +281,25 @@ impl SpecRegistry {
         backend: Arc<dyn Backend>,
         expect_version: Option<u64>,
     ) -> Result<DeploySummary> {
+        self.deploy_backend_rules(tenant, backend, expect_version, None)
+    }
+
+    /// [`Self::deploy_backend`] with declarative validation rules
+    /// attached to the new version (a JSON array — see
+    /// [`ValidationSpec::from_json`]). A bad rule set refuses the whole
+    /// deploy before any lock is taken; the active version is untouched.
+    pub fn deploy_backend_rules(
+        &self,
+        tenant: &str,
+        backend: Arc<dyn Backend>,
+        expect_version: Option<u64>,
+        rules: Option<&Json>,
+    ) -> Result<DeploySummary> {
         if tenant.is_empty() {
             return Err(KamaeError::InvalidConfig("tenant name must be non-empty".into()));
         }
         let backend_name = backend.name().to_string();
+        let validation = TenantVersion::build_validation(tenant, backend.as_ref(), rules)?;
         let entry = {
             let mut tenants = self.tenants.write().unwrap();
             match tenants.get(tenant) {
@@ -258,7 +313,7 @@ impl SpecRegistry {
                             )));
                         }
                     }
-                    let first = Arc::new(TenantVersion::new(tenant, 1, backend));
+                    let first = Arc::new(TenantVersion::new(tenant, 1, backend, validation));
                     let t = Arc::new(Tenant {
                         active: RwLock::new(Arc::clone(&first)),
                         history: Mutex::new(vec![first]),
@@ -286,7 +341,7 @@ impl SpecRegistry {
             }
         }
         let version = entry.next_version.fetch_add(1, Ordering::Relaxed);
-        let tv = Arc::new(TenantVersion::new(tenant, version, backend));
+        let tv = Arc::new(TenantVersion::new(tenant, version, backend, validation));
         entry.history.lock().unwrap().push(Arc::clone(&tv));
         *active = tv;
         let swap = t0.elapsed();
@@ -304,6 +359,20 @@ impl SpecRegistry {
         expect_version: Option<u64>,
         level: Option<OptimizeLevel>,
     ) -> Result<DeploySummary> {
+        self.deploy_specs_rules(tenant, specs, expect_version, level, None)
+    }
+
+    /// [`Self::deploy_specs`] with declarative validation rules for the
+    /// new version (the `"validation"` array of the `/admin/deploy`
+    /// body / `kamae deploy --rules`).
+    pub fn deploy_specs_rules(
+        &self,
+        tenant: &str,
+        specs: &[GraphSpec],
+        expect_version: Option<u64>,
+        level: Option<OptimizeLevel>,
+        rules: Option<&Json>,
+    ) -> Result<DeploySummary> {
         if specs.is_empty() {
             return Err(KamaeError::InvalidConfig("deploy needs at least one spec".into()));
         }
@@ -316,7 +385,7 @@ impl SpecRegistry {
         };
         let (optimized, _) = crate::optim::optimize(merged, level.unwrap_or(self.level))?;
         let backend: Arc<dyn Backend> = Arc::new(InterpretedBackend::new(optimized));
-        self.deploy_backend(tenant, backend, expect_version)
+        self.deploy_backend_rules(tenant, backend, expect_version, rules)
     }
 
     /// Re-activate a previously deployed version: `to_version` when

@@ -1,0 +1,993 @@
+//! Ingress data-quality gate: declarative per-row validation with
+//! quarantine.
+//!
+//! Real serving traffic is malformed in ways training data never is.
+//! Before this gate, one bad row either failed the whole request (the
+//! strict request decoder) or was silently coerced into a wrong
+//! prediction (the lenient file reader). The gate takes the third road:
+//! a [`ValidationSpec`] — derived automatically from the spec's input
+//! schema, plus declarative per-tenant rules attached at deploy time —
+//! is evaluated columnar-mask-style over the decoded batch, producing a
+//! per-row verdict mask. Invalid rows are quarantined: the batch is
+//! compacted ([`DataFrame::filter_rows`]) and served without them,
+//! responses carry per-row verdicts with structured [`RowError`]s, and
+//! the quarantined rows land in a pluggable [`DeadLetterSink`].
+//!
+//! Evaluation reuses the kernel program's null-bitmask machinery: the
+//! union of the required columns' null masks ([`union_null_masks`]) IS
+//! the not-null violation pre-mask, so a clean batch (no masks anywhere)
+//! costs one allocation-free fold plus a handful of columnar scans.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::dataframe::{union_null_masks, Column, DataFrame, DType, Schema};
+use crate::error::{KamaeError, Result};
+use crate::util::json::Json;
+
+pub use crate::dataframe::RowError;
+
+// ---------------------------------------------------------------------------
+// rules
+
+/// One declarative validation rule. `NotNull` rules are derived
+/// automatically from the input schema; the rest attach per tenant at
+/// deploy time (`"validation"` array in the deploy body, `--rules` on
+/// the CLI).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rule {
+    /// The column must not be null (schema-derived; every spec input is
+    /// a feature the graph reads).
+    NotNull { column: String },
+    /// Numeric column value must lie in `[min, max]` (either bound
+    /// optional, inclusive).
+    Range { column: String, min: Option<f64>, max: Option<f64> },
+    /// String column value must be one of the allowed set.
+    OneOf { column: String, values: Vec<String> },
+    /// String column value must match the (anchored) pattern.
+    Pattern { column: String, pattern: String },
+}
+
+impl Rule {
+    /// The rule identifier used in [`RowError::rule`] and the per-rule
+    /// violation counters.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::NotNull { .. } => "not_null",
+            Rule::Range { .. } => "range",
+            Rule::OneOf { .. } => "one_of",
+            Rule::Pattern { .. } => "pattern",
+        }
+    }
+
+    pub fn column(&self) -> &str {
+        match self {
+            Rule::NotNull { column }
+            | Rule::Range { column, .. }
+            | Rule::OneOf { column, .. }
+            | Rule::Pattern { column, .. } => column,
+        }
+    }
+
+    /// Declarative JSON shape (the deploy-body format, round-trippable).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::object();
+        j.set("rule", self.name());
+        j.set("column", self.column().to_string());
+        match self {
+            Rule::NotNull { .. } => {}
+            Rule::Range { min, max, .. } => {
+                if let Some(m) = min {
+                    j.set("min", *m);
+                }
+                if let Some(m) = max {
+                    j.set("max", *m);
+                }
+            }
+            Rule::OneOf { values, .. } => {
+                j.set(
+                    "values",
+                    Json::Array(values.iter().map(|v| Json::Str(v.clone())).collect()),
+                );
+            }
+            Rule::Pattern { pattern, .. } => {
+                j.set("pattern", pattern.clone());
+            }
+        }
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pattern matching (std-only regex subset)
+
+/// Anchored pattern matcher over a regex subset: literals, `.`, `*`,
+/// `+`, `?`, character classes `[a-z0-9_]` (with `^` negation), the
+/// escapes `\d` `\w` `\s` and escaped metacharacters, and top-level
+/// alternation `|`. Patterns match the ENTIRE value (an implicit
+/// `^...$`); explicit leading `^` / trailing `$` anchors are accepted
+/// and ignored. No groups — rule patterns are column formats
+/// (`"city_[0-9]+"`), not parsers.
+#[derive(Debug, Clone, PartialEq)]
+struct Pattern {
+    alts: Vec<Vec<Piece>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Lit(char),
+    Any,
+    Digit,
+    Word,
+    Space,
+    Class { neg: bool, items: Vec<ClassItem> },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum ClassItem {
+    Ch(char),
+    Range(char, char),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Piece {
+    One(Tok),
+    Opt(Tok),
+    Star(Tok),
+    Plus(Tok),
+}
+
+impl Pattern {
+    fn parse(pattern: &str) -> Result<Pattern> {
+        let bad = |msg: &str| {
+            KamaeError::InvalidConfig(format!("invalid validation pattern '{pattern}': {msg}"))
+        };
+        // split on top-level '|' (escapes and classes shield the bar)
+        let chars: Vec<char> = pattern.chars().collect();
+        let mut alts_src: Vec<Vec<char>> = vec![Vec::new()];
+        let mut in_class = false;
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            match c {
+                '\\' => {
+                    if i + 1 >= chars.len() {
+                        return Err(bad("dangling escape"));
+                    }
+                    alts_src.last_mut().unwrap().push(c);
+                    alts_src.last_mut().unwrap().push(chars[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                '[' if !in_class => {
+                    in_class = true;
+                    alts_src.last_mut().unwrap().push(c);
+                }
+                ']' if in_class => {
+                    in_class = false;
+                    alts_src.last_mut().unwrap().push(c);
+                }
+                '|' if !in_class => alts_src.push(Vec::new()),
+                _ => alts_src.last_mut().unwrap().push(c),
+            }
+            i += 1;
+        }
+        if in_class {
+            return Err(bad("unclosed character class"));
+        }
+        let mut alts = Vec::with_capacity(alts_src.len());
+        for src in &alts_src {
+            // strip the redundant explicit anchors (matching is anchored)
+            let mut s: &[char] = src;
+            if s.first() == Some(&'^') {
+                s = &s[1..];
+            }
+            if s.last() == Some(&'$') && !s.ends_with(&['\\', '$']) {
+                s = &s[..s.len() - 1];
+            }
+            alts.push(Self::parse_alt(s, &bad)?);
+        }
+        Ok(Pattern { alts })
+    }
+
+    fn parse_alt(s: &[char], bad: &dyn Fn(&str) -> KamaeError) -> Result<Vec<Piece>> {
+        let mut pieces = Vec::new();
+        let mut i = 0;
+        while i < s.len() {
+            let (tok, next) = match s[i] {
+                '.' => (Tok::Any, i + 1),
+                '\\' => {
+                    let e = *s.get(i + 1).ok_or_else(|| bad("dangling escape"))?;
+                    let tok = match e {
+                        'd' => Tok::Digit,
+                        'w' => Tok::Word,
+                        's' => Tok::Space,
+                        _ => Tok::Lit(e),
+                    };
+                    (tok, i + 2)
+                }
+                '[' => {
+                    let close = s[i + 1..]
+                        .iter()
+                        .position(|&c| c == ']')
+                        .ok_or_else(|| bad("unclosed character class"))?;
+                    let body = &s[i + 1..i + 1 + close];
+                    let (neg, body) = if body.first() == Some(&'^') {
+                        (true, &body[1..])
+                    } else {
+                        (false, body)
+                    };
+                    if body.is_empty() {
+                        return Err(bad("empty character class"));
+                    }
+                    let mut items = Vec::new();
+                    let mut k = 0;
+                    while k < body.len() {
+                        if k + 2 < body.len() && body[k + 1] == '-' {
+                            items.push(ClassItem::Range(body[k], body[k + 2]));
+                            k += 3;
+                        } else {
+                            items.push(ClassItem::Ch(body[k]));
+                            k += 1;
+                        }
+                    }
+                    (Tok::Class { neg, items }, i + 2 + close)
+                }
+                '*' | '+' | '?' => return Err(bad("quantifier with nothing to repeat")),
+                ']' => return Err(bad("unmatched ']'")),
+                c => (Tok::Lit(c), i + 1),
+            };
+            let piece = match s.get(next) {
+                Some('?') => Piece::Opt(tok),
+                Some('*') => Piece::Star(tok),
+                Some('+') => Piece::Plus(tok),
+                _ => {
+                    pieces.push(Piece::One(tok));
+                    i = next;
+                    continue;
+                }
+            };
+            pieces.push(piece);
+            i = next + 1;
+        }
+        Ok(pieces)
+    }
+
+    fn matches(&self, text: &str) -> bool {
+        let chars: Vec<char> = text.chars().collect();
+        self.alts.iter().any(|alt| match_here(alt, &chars))
+    }
+}
+
+fn tok_match(t: &Tok, c: char) -> bool {
+    match t {
+        Tok::Lit(l) => *l == c,
+        Tok::Any => true,
+        Tok::Digit => c.is_ascii_digit(),
+        Tok::Word => c.is_ascii_alphanumeric() || c == '_',
+        Tok::Space => c.is_whitespace(),
+        Tok::Class { neg, items } => {
+            let hit = items.iter().any(|it| match it {
+                ClassItem::Ch(x) => *x == c,
+                ClassItem::Range(a, b) => (*a..=*b).contains(&c),
+            });
+            hit != *neg
+        }
+    }
+}
+
+fn match_here(pieces: &[Piece], text: &[char]) -> bool {
+    let Some(first) = pieces.first() else {
+        return text.is_empty();
+    };
+    let rest = &pieces[1..];
+    match first {
+        Piece::One(t) => !text.is_empty() && tok_match(t, text[0]) && match_here(rest, &text[1..]),
+        Piece::Opt(t) => {
+            match_here(rest, text)
+                || (!text.is_empty() && tok_match(t, text[0]) && match_here(rest, &text[1..]))
+        }
+        Piece::Star(t) | Piece::Plus(t) => {
+            let floor = if matches!(first, Piece::Plus(_)) { 1 } else { 0 };
+            let mut k = 0;
+            while k < text.len() && tok_match(t, text[k]) {
+                k += 1;
+            }
+            // greedy with backtracking: longest take first
+            loop {
+                if k < floor {
+                    return false;
+                }
+                if match_here(rest, &text[k..]) {
+                    return true;
+                }
+                if k == 0 {
+                    return false;
+                }
+                k -= 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the spec
+
+/// A compiled set of validation rules for one tenant version: the
+/// schema-derived not-null checks plus any deploy-time declarative
+/// rules, with patterns parsed once at build time.
+#[derive(Debug, Clone)]
+pub struct ValidationSpec {
+    rules: Vec<Rule>,
+    /// Parsed matcher per rule index (only `Pattern` rules occupy slots).
+    matchers: Vec<Option<Pattern>>,
+    /// `OneOf` membership sets per rule index.
+    sets: Vec<Option<HashSet<String>>>,
+}
+
+impl ValidationSpec {
+    /// Schema-derived baseline: every input column is a feature the
+    /// graph reads, so every one gets a not-null rule. Dtype/castability
+    /// is enforced upstream by the lenient decoder
+    /// ([`crate::dataframe::dataframe_from_json_rows_lenient`]), whose
+    /// structural `RowError`s merge into the same verdicts.
+    pub fn from_schema(schema: &Schema) -> ValidationSpec {
+        let rules = schema
+            .fields
+            .iter()
+            .map(|f| Rule::NotNull { column: f.name.clone() })
+            .collect();
+        Self::compile(rules).expect("not-null rules always compile")
+    }
+
+    /// Schema baseline plus declarative extra rules from a deploy-time
+    /// JSON array (see [`Rule::to_json`] for the shape). Unknown rule
+    /// names, unknown columns and dtype-incompatible rules are
+    /// configuration errors — a deploy with a bad rule set is refused.
+    pub fn from_json(extra: &Json, schema: &Schema) -> Result<ValidationSpec> {
+        let mut rules: Vec<Rule> = schema
+            .fields
+            .iter()
+            .map(|f| Rule::NotNull { column: f.name.clone() })
+            .collect();
+        let arr = extra.as_array().ok_or_else(|| {
+            KamaeError::InvalidConfig("validation rules must be a JSON array".into())
+        })?;
+        for (i, r) in arr.iter().enumerate() {
+            let bad = |msg: String| KamaeError::InvalidConfig(format!("validation rule {i}: {msg}"));
+            let name = r
+                .opt_str("rule")
+                .ok_or_else(|| bad("missing 'rule'".into()))?;
+            let column = r
+                .opt_str("column")
+                .ok_or_else(|| bad("missing 'column'".into()))?
+                .to_string();
+            let dtype = schema
+                .dtype(&column)
+                .ok_or_else(|| {
+                    bad(format!(
+                        "unknown column '{column}' (schema columns: {})",
+                        schema.names().join(", ")
+                    ))
+                })?
+                .clone();
+            let rule = match name {
+                "not_null" => Rule::NotNull { column },
+                "range" => {
+                    if !dtype.is_numeric() {
+                        return Err(bad(format!(
+                            "range rule on non-numeric column '{column}' ({})",
+                            dtype.name()
+                        )));
+                    }
+                    let min = r.opt_f64("min");
+                    let max = r.opt_f64("max");
+                    if min.is_none() && max.is_none() {
+                        return Err(bad("range rule needs 'min' and/or 'max'".into()));
+                    }
+                    Rule::Range { column, min, max }
+                }
+                "one_of" => {
+                    if dtype != DType::Str {
+                        return Err(bad(format!(
+                            "one_of rule on non-string column '{column}' ({})",
+                            dtype.name()
+                        )));
+                    }
+                    let values: Vec<String> = r
+                        .get("values")
+                        .and_then(Json::as_array)
+                        .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+                        .unwrap_or_default();
+                    if values.is_empty() {
+                        return Err(bad("one_of rule needs a non-empty 'values' array".into()));
+                    }
+                    Rule::OneOf { column, values }
+                }
+                "pattern" => {
+                    if dtype != DType::Str {
+                        return Err(bad(format!(
+                            "pattern rule on non-string column '{column}' ({})",
+                            dtype.name()
+                        )));
+                    }
+                    let pattern = r
+                        .opt_str("pattern")
+                        .ok_or_else(|| bad("pattern rule needs 'pattern'".into()))?
+                        .to_string();
+                    Rule::Pattern { column, pattern }
+                }
+                other => return Err(bad(format!("unknown rule '{other}'"))),
+            };
+            rules.push(rule);
+        }
+        Self::compile(rules)
+    }
+
+    /// Build from an explicit rule list (tests, embedded use).
+    pub fn compile(rules: Vec<Rule>) -> Result<ValidationSpec> {
+        let mut matchers = Vec::with_capacity(rules.len());
+        let mut sets = Vec::with_capacity(rules.len());
+        for r in &rules {
+            matchers.push(match r {
+                Rule::Pattern { pattern, .. } => Some(Pattern::parse(pattern)?),
+                _ => None,
+            });
+            sets.push(match r {
+                Rule::OneOf { values, .. } => Some(values.iter().cloned().collect()),
+                _ => None,
+            });
+        }
+        Ok(ValidationSpec { rules, matchers, sets })
+    }
+
+    pub fn rules(&self) -> &[Rule] {
+        &self.rules
+    }
+
+    /// Number of deploy-time rules beyond the schema-derived baseline.
+    pub fn num_extra_rules(&self) -> usize {
+        self.rules
+            .iter()
+            .filter(|r| !matches!(r, Rule::NotNull { .. }))
+            .count()
+    }
+
+    /// Declarative JSON array of every rule (snapshot/debug surface).
+    pub fn to_json(&self) -> Json {
+        Json::Array(self.rules.iter().map(Rule::to_json).collect())
+    }
+
+    /// Evaluate all rules columnar-mask-style over a decoded batch and
+    /// merge in `structural` errors from the lenient decoder (may be
+    /// empty). Returns the per-row verdicts. Columns a rule names that
+    /// are absent from the frame are configuration drift and error out —
+    /// the spec is built against the same schema the decoder used, so
+    /// this cannot happen on the serving path.
+    pub fn evaluate(
+        &self,
+        df: &DataFrame,
+        structural: Vec<Vec<RowError>>,
+    ) -> Result<ValidationReport> {
+        let nrows = df.num_rows();
+        let mut errors = structural;
+        if errors.len() != nrows {
+            if !errors.is_empty() {
+                return Err(KamaeError::LengthMismatch {
+                    left: errors.len(),
+                    right: nrows,
+                    context: "ValidationSpec::evaluate structural errors".into(),
+                });
+            }
+            errors = vec![Vec::new(); nrows];
+        }
+
+        // not-null rules first, via the kernel machinery: the union of
+        // the required columns' masks is the violation pre-mask. A clean
+        // batch short-circuits without touching a single row.
+        let not_null: Vec<&str> = self
+            .rules
+            .iter()
+            .filter_map(|r| match r {
+                Rule::NotNull { column } => Some(column.as_str()),
+                _ => None,
+            })
+            .collect();
+        let mut masks: Vec<Option<&[bool]>> = Vec::with_capacity(not_null.len());
+        for col in &not_null {
+            masks.push(df.column(col)?.nulls().map(|v| v.as_slice()));
+        }
+        if union_null_masks(&masks).is_some() {
+            for (col, mask) in not_null.iter().zip(&masks) {
+                let Some(mask) = mask else { continue };
+                for (i, &null) in mask.iter().enumerate() {
+                    if null {
+                        errors[i].push(RowError::new(
+                            "not_null",
+                            *col,
+                            format!("null value in required column '{col}'"),
+                        ));
+                    }
+                }
+            }
+        }
+
+        for (idx, rule) in self.rules.iter().enumerate() {
+            match rule {
+                Rule::NotNull { .. } => {} // handled above
+                Rule::Range { column, min, max } => {
+                    let col = df.column(column)?;
+                    let check = |i: usize, v: f64, errors: &mut Vec<Vec<RowError>>| {
+                        if col.is_null(i) {
+                            return;
+                        }
+                        if let Some(lo) = min {
+                            if v < *lo {
+                                errors[i].push(RowError::new(
+                                    "range",
+                                    column.as_str(),
+                                    format!("{column} value {v} below minimum {lo}"),
+                                ));
+                                return;
+                            }
+                        }
+                        if let Some(hi) = max {
+                            if v > *hi {
+                                errors[i].push(RowError::new(
+                                    "range",
+                                    column.as_str(),
+                                    format!("{column} value {v} above maximum {hi}"),
+                                ));
+                            }
+                        }
+                    };
+                    match col {
+                        Column::F64(v, _) => {
+                            for (i, &x) in v.iter().enumerate() {
+                                check(i, x, &mut errors);
+                            }
+                        }
+                        Column::F32(v, _) => {
+                            for (i, &x) in v.iter().enumerate() {
+                                check(i, x as f64, &mut errors);
+                            }
+                        }
+                        Column::I64(v, _) => {
+                            for (i, &x) in v.iter().enumerate() {
+                                check(i, x as f64, &mut errors);
+                            }
+                        }
+                        Column::I32(v, _) => {
+                            for (i, &x) in v.iter().enumerate() {
+                                check(i, x as f64, &mut errors);
+                            }
+                        }
+                        other => {
+                            return Err(KamaeError::TypeMismatch {
+                                expected: "numeric column".into(),
+                                found: other.dtype().name(),
+                                context: format!("range rule on '{column}'"),
+                            })
+                        }
+                    }
+                }
+                Rule::OneOf { column, .. } => {
+                    let set = self.sets[idx].as_ref().expect("compiled one_of");
+                    let col = df.column(column)?;
+                    for (i, v) in col.as_str()?.iter().enumerate() {
+                        if !col.is_null(i) && !set.contains(v) {
+                            errors[i].push(RowError::new(
+                                "one_of",
+                                column.as_str(),
+                                format!("{column} value '{v}' not in the allowed set"),
+                            ));
+                        }
+                    }
+                }
+                Rule::Pattern { column, pattern } => {
+                    let matcher = self.matchers[idx].as_ref().expect("compiled pattern");
+                    let col = df.column(column)?;
+                    for (i, v) in col.as_str()?.iter().enumerate() {
+                        if !col.is_null(i) && !matcher.matches(v) {
+                            errors[i].push(RowError::new(
+                                "pattern",
+                                column.as_str(),
+                                format!("{column} value '{v}' does not match pattern '{pattern}'"),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+
+        let keep: Vec<bool> = errors.iter().map(Vec::is_empty).collect();
+        Ok(ValidationReport { keep, errors })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// verdicts
+
+/// Per-row verdicts for one batch: `keep[i]` is true when row `i` passed
+/// every rule; `errors[i]` holds the structured violations otherwise.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub keep: Vec<bool>,
+    pub errors: Vec<Vec<RowError>>,
+}
+
+impl ValidationReport {
+    /// A report that keeps every row (validation disabled / no rules).
+    pub fn all_valid(nrows: usize) -> ValidationReport {
+        ValidationReport { keep: vec![true; nrows], errors: vec![Vec::new(); nrows] }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.keep.len()
+    }
+
+    pub fn num_valid(&self) -> usize {
+        self.keep.iter().filter(|&&k| k).count()
+    }
+
+    pub fn num_quarantined(&self) -> usize {
+        self.keep.len() - self.num_valid()
+    }
+
+    /// Indices of quarantined rows, in original order.
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.keep
+            .iter()
+            .enumerate()
+            .filter(|(_, &k)| !k)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Violation count per rule name (feeds the `ServeReport` /
+    /// `/metrics` counters).
+    pub fn rule_counts(&self) -> BTreeMap<String, u64> {
+        let mut counts = BTreeMap::new();
+        for errs in &self.errors {
+            for e in errs {
+                *counts.entry(e.rule.clone()).or_insert(0u64) += 1;
+            }
+        }
+        counts
+    }
+
+    /// The wire shape of the per-row verdicts, re-expanded to ORIGINAL
+    /// row order: every input row gets an entry; valid rows carry the
+    /// row index they occupy in the compacted outputs, quarantined rows
+    /// carry their structured errors.
+    pub fn verdicts_json(&self) -> Json {
+        let mut out = Vec::with_capacity(self.keep.len());
+        let mut output_row = 0usize;
+        for (i, &keep) in self.keep.iter().enumerate() {
+            let mut v = Json::object();
+            v.set("row", i as i64);
+            if keep {
+                v.set("status", "ok");
+                v.set("output_row", output_row as i64);
+                output_row += 1;
+            } else {
+                v.set("status", "quarantined");
+                v.set(
+                    "errors",
+                    Json::Array(self.errors[i].iter().map(RowError::to_json).collect()),
+                );
+            }
+            out.push(v);
+        }
+        Json::Array(out)
+    }
+}
+
+/// Evaluate `spec` over a decoded batch (merging the lenient decoder's
+/// structural errors) and compact away the quarantined rows: the
+/// returned frame holds exactly the valid rows, in original relative
+/// order; the report maps them back. This is THE ingress gate both the
+/// HTTP front-end and the embedded server API call.
+pub fn screen_batch(
+    spec: &ValidationSpec,
+    df: &DataFrame,
+    structural: Vec<Vec<RowError>>,
+) -> Result<(DataFrame, ValidationReport)> {
+    let report = spec.evaluate(df, structural)?;
+    let clean = if report.num_valid() == report.num_rows() {
+        df.clone() // clean fast path: O(columns) Arc bumps, no copy
+    } else {
+        df.filter_rows(&report.keep)?
+    };
+    Ok((clean, report))
+}
+
+// ---------------------------------------------------------------------------
+// dead-letter sinks
+
+/// Where quarantined rows go instead of the model. Implementations must
+/// be cheap and non-blocking-ish: the sink sits on the serving path
+/// (after the shed gate, before the batcher). Failures are swallowed —
+/// a broken dead-letter store must never take serving down with it.
+pub trait DeadLetterSink: Send + Sync {
+    /// Record one quarantined row with its violations.
+    fn record(&self, tenant: &str, row: &Json, errors: &[RowError]);
+}
+
+/// The JSONL entry shape shared by every sink:
+/// `{"tenant": ..., "row": {...}, "errors": [{rule, column, message}]}`.
+pub fn dead_letter_entry(tenant: &str, row: &Json, errors: &[RowError]) -> Json {
+    let mut j = Json::object();
+    j.set("tenant", tenant.to_string());
+    j.set("row", row.clone());
+    j.set("errors", Json::Array(errors.iter().map(RowError::to_json).collect()));
+    j
+}
+
+/// Append-only JSONL file sink (`--dead-letter PATH`): one entry per
+/// quarantined row, inspectable with `jq`/`grep` and replayable through
+/// the offline readers once fixed.
+pub struct JsonlDeadLetter {
+    path: PathBuf,
+    file: Mutex<std::fs::File>,
+}
+
+impl JsonlDeadLetter {
+    /// Open (append) or create the file.
+    pub fn create(path: &Path) -> Result<JsonlDeadLetter> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlDeadLetter { path: path.to_path_buf(), file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl DeadLetterSink for JsonlDeadLetter {
+    fn record(&self, tenant: &str, row: &Json, errors: &[RowError]) {
+        let entry = dead_letter_entry(tenant, row, errors);
+        let mut file = match self.file.lock() {
+            Ok(f) => f,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Err(e) = writeln!(file, "{entry}") {
+            eprintln!("dead-letter write to {} failed: {e}", self.path.display());
+        }
+    }
+}
+
+/// Bounded in-memory ring sink for tests and embedded use: keeps the
+/// most recent `cap` entries.
+pub struct MemoryDeadLetter {
+    cap: usize,
+    ring: Mutex<VecDeque<Json>>,
+}
+
+impl MemoryDeadLetter {
+    pub fn new(cap: usize) -> MemoryDeadLetter {
+        MemoryDeadLetter { cap: cap.max(1), ring: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Snapshot of the retained entries, oldest first.
+    pub fn entries(&self) -> Vec<Json> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl DeadLetterSink for MemoryDeadLetter {
+    fn record(&self, tenant: &str, row: &Json, errors: &[RowError]) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(dead_letter_entry(tenant, row, errors));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataframe::Field;
+
+    fn schema() -> Schema {
+        Schema {
+            fields: vec![
+                Field { name: "price".into(), dtype: DType::F64 },
+                Field { name: "city".into(), dtype: DType::Str },
+            ],
+        }
+    }
+
+    #[test]
+    fn pattern_subset_semantics() {
+        let m = |p: &str, s: &str| Pattern::parse(p).unwrap().matches(s);
+        // anchored full match
+        assert!(m("abc", "abc"));
+        assert!(!m("abc", "xabc"));
+        assert!(!m("abc", "abcx"));
+        // explicit anchors are accepted and redundant
+        assert!(m("^abc$", "abc"));
+        // quantifiers + classes + escapes
+        assert!(m("city_[0-9]+", "city_42"));
+        assert!(!m("city_[0-9]+", "city_"));
+        assert!(m("a.c", "axc"));
+        assert!(m("ab?c", "ac") && m("ab?c", "abc"));
+        assert!(m("a*", "") && m("a*", "aaa") && !m("a*", "b"));
+        assert!(m(r"\d\d-\w+", "42-x_9"));
+        assert!(m(r"[^0-9]+", "abc") && !m(r"[^0-9]+", "a1"));
+        assert!(m(r"a\.b", "a.b") && !m(r"a\.b", "axb"));
+        // alternation
+        assert!(m("cat|dog", "dog") && !m("cat|dog", "cow"));
+        assert!(m("[a|b]", "|"), "class shields the bar");
+        // star needs backtracking: .* must give back for the suffix
+        assert!(m(".*x", "aax") && !m(".*x", "aay"));
+        // parse errors, not panics
+        assert!(Pattern::parse("*a").is_err());
+        assert!(Pattern::parse("[ab").is_err());
+        assert!(Pattern::parse("a\\").is_err());
+    }
+
+    #[test]
+    fn schema_derived_spec_quarantines_nulls_only() {
+        let spec = ValidationSpec::from_schema(&schema());
+        assert_eq!(spec.rules().len(), 2);
+        assert_eq!(spec.num_extra_rules(), 0);
+        let df = DataFrame::new(vec![
+            ("price".into(), Column::from_f64_opt(vec![Some(1.0), None, Some(3.0)])),
+            ("city".into(), Column::from_str(vec!["a", "b", "c"])),
+        ])
+        .unwrap();
+        let (clean, report) = screen_batch(&spec, &df, vec![]).unwrap();
+        assert_eq!(report.keep, vec![true, false, true]);
+        assert_eq!(clean.num_rows(), 2);
+        let e = &report.errors[1];
+        assert_eq!(e.len(), 1);
+        assert_eq!((e[0].rule.as_str(), e[0].column.as_str()), ("not_null", "price"));
+        // clean batch keeps the frame without copying
+        let clean_df = df.filter_rows(&[true, false, true]).unwrap();
+        let (again, r2) = screen_batch(&spec, &clean_df, vec![]).unwrap();
+        assert_eq!(r2.num_quarantined(), 0);
+        assert_eq!(again, clean_df);
+    }
+
+    #[test]
+    fn declarative_rules_fire_per_row_and_count_per_rule() {
+        let rules = Json::parse(
+            r#"[
+                {"rule": "range", "column": "price", "min": 0, "max": 100},
+                {"rule": "one_of", "column": "city", "values": ["NYC", "SF"]},
+                {"rule": "pattern", "column": "city", "pattern": "[A-Z]+"}
+            ]"#,
+        )
+        .unwrap();
+        let spec = ValidationSpec::from_json(&rules, &schema()).unwrap();
+        assert_eq!(spec.num_extra_rules(), 3);
+        let df = DataFrame::new(vec![
+            ("price".into(), Column::from_f64(vec![50.0, -1.0, 101.0, 50.0])),
+            ("city".into(), Column::from_str(vec!["NYC", "SF", "SF", "nyc"])),
+        ])
+        .unwrap();
+        let report = spec.evaluate(&df, vec![]).unwrap();
+        assert_eq!(report.keep, vec![true, false, false, false]);
+        assert!(report.errors[1][0].message.contains("below minimum"));
+        assert!(report.errors[2][0].message.contains("above maximum"));
+        // row 3 violates BOTH string rules
+        let rules3: Vec<&str> = report.errors[3].iter().map(|e| e.rule.as_str()).collect();
+        assert_eq!(rules3, vec!["one_of", "pattern"]);
+        let counts = report.rule_counts();
+        assert_eq!(counts.get("range"), Some(&2));
+        assert_eq!(counts.get("one_of"), Some(&1));
+        assert_eq!(counts.get("pattern"), Some(&1));
+        // verdict re-expansion keeps original order and maps output rows
+        let verdicts = report.verdicts_json();
+        let v = verdicts.as_array().unwrap();
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0].get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(v[0].get("output_row").and_then(Json::as_i64), Some(0));
+        assert_eq!(v[1].get("status").and_then(Json::as_str), Some("quarantined"));
+        let errs = v[1].get("errors").and_then(Json::as_array).unwrap();
+        assert_eq!(errs[0].get("rule").and_then(Json::as_str), Some("range"));
+        assert_eq!(errs[0].get("column").and_then(Json::as_str), Some("price"));
+    }
+
+    #[test]
+    fn bad_rule_configs_are_refused() {
+        let s = schema();
+        let cases = [
+            r#"[{"rule": "range", "column": "city", "min": 0}]"#, // non-numeric
+            r#"[{"rule": "range", "column": "price"}]"#,          // no bounds
+            r#"[{"rule": "one_of", "column": "price", "values": ["x"]}]"#, // non-string
+            r#"[{"rule": "one_of", "column": "city", "values": []}]"#, // empty set
+            r#"[{"rule": "pattern", "column": "city", "pattern": "*bad"}]"#, // bad pattern
+            r#"[{"rule": "nope", "column": "city"}]"#,            // unknown rule
+            r#"[{"rule": "range", "column": "ghost", "min": 0}]"#, // unknown column
+        ];
+        for c in cases {
+            let rules = Json::parse(c).unwrap();
+            assert!(ValidationSpec::from_json(&rules, &s).is_err(), "{c}");
+        }
+        // rule set round-trips through its JSON shape
+        let rules = Json::parse(
+            r#"[{"rule": "range", "column": "price", "min": 0.0, "max": 10.0},
+                {"rule": "pattern", "column": "city", "pattern": "c_\\d+"}]"#,
+        )
+        .unwrap();
+        let spec = ValidationSpec::from_json(&rules, &s).unwrap();
+        let again = ValidationSpec::from_json(
+            &Json::Array(
+                spec.rules()
+                    .iter()
+                    .filter(|r| !matches!(r, Rule::NotNull { .. }))
+                    .map(Rule::to_json)
+                    .collect(),
+            ),
+            &s,
+        )
+        .unwrap();
+        assert_eq!(spec.rules(), again.rules());
+    }
+
+    #[test]
+    fn structural_errors_merge_into_verdicts() {
+        let spec = ValidationSpec::from_schema(&schema());
+        let df = DataFrame::new(vec![
+            ("price".into(), Column::from_f64(vec![1.0, 2.0])),
+            ("city".into(), Column::from_str(vec!["a", "b"])),
+        ])
+        .unwrap();
+        let structural = vec![
+            vec![],
+            vec![RowError::new("dtype", "price", "column 'price' expects float64")],
+        ];
+        let report = spec.evaluate(&df, structural).unwrap();
+        assert_eq!(report.keep, vec![true, false]);
+        // a structural error vector of the wrong length is an error
+        assert!(spec
+            .evaluate(&df, vec![vec![]])
+            .is_err());
+    }
+
+    #[test]
+    fn sinks_record_the_shared_entry_shape() {
+        let errors = vec![RowError::new("not_null", "price", "null value")];
+        let mut row = Json::object();
+        row.set("price", Json::Null);
+        // memory ring caps at its bound, keeping the newest
+        let ring = MemoryDeadLetter::new(2);
+        for _ in 0..3 {
+            ring.record("shop", &row, &errors);
+        }
+        assert_eq!(ring.len(), 2);
+        let e = &ring.entries()[0];
+        assert_eq!(e.get("tenant").and_then(Json::as_str), Some("shop"));
+        assert!(e.get("row").is_some());
+        let errs = e.get("errors").and_then(Json::as_array).unwrap();
+        assert_eq!(errs[0].get("rule").and_then(Json::as_str), Some("not_null"));
+        // jsonl sink appends parseable lines
+        let path = std::env::temp_dir().join("kamae_dead_letter_test.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let sink = JsonlDeadLetter::create(&path).unwrap();
+            sink.record("shop", &row, &errors);
+            sink.record("shop", &row, &errors);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let parsed = Json::parse(lines[0]).unwrap();
+        assert_eq!(parsed.get("tenant").and_then(Json::as_str), Some("shop"));
+        std::fs::remove_file(&path).ok();
+    }
+}

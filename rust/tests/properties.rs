@@ -983,3 +983,113 @@ fn kernel_program_routed_cones_match_oracle_bitwise() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// ingress validation gate: quarantining must be surgical — the rows that
+// survive the gate must be served EXACTLY as if the corruption had never
+// been in the batch.
+
+#[test]
+fn validated_serving_matches_uncorrupted_oracle_bitwise() {
+    // Corrupt a random subset of a clean batch's rows (null price /
+    // null city), serve it through the validated submit path, and the
+    // surviving rows' outputs must be bit-identical to running the same
+    // rows straight through the backend with the corruption absent.
+    // Every quarantined row must carry a structured error naming its
+    // rule and column, and every one must land in the dead-letter sink.
+    use kamae::pipeline::catalog;
+    use kamae::serving::{
+        request_pool, Backend, BatchConfig, InterpretedBackend, MemoryDeadLetter, Server,
+        DEFAULT_TENANT,
+    };
+
+    let fit = request_pool("quickstart", 4_000).unwrap();
+    let model = catalog::quickstart_pipeline()
+        .fit(&Dataset::from_dataframe(fit, 4))
+        .unwrap();
+    let outputs = catalog::QUICKSTART_OUTPUTS.to_vec();
+    let spec = model
+        .to_graph_spec("quickstart", catalog::quickstart_inputs(), &outputs)
+        .unwrap();
+    let oracle = InterpretedBackend::new(spec.clone());
+    let server =
+        Server::start(Box::new(InterpretedBackend::new(spec)), BatchConfig::default()).unwrap();
+    let pool = request_pool("quickstart", 512).unwrap();
+    let sink = MemoryDeadLetter::new(1024);
+
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut corrupted_total = 0usize;
+    for case in 0..40 {
+        let rows = 2 + rng.below(14) as usize;
+        let start = rng.below((pool.num_rows() - rows) as u64) as usize;
+        let clean = pool.slice(start, rows);
+        let mut price: Vec<Option<f64>> = clean
+            .column("price")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            .iter()
+            .copied()
+            .map(Some)
+            .collect();
+        let mut city: Vec<Option<String>> = clean
+            .column("city")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .iter()
+            .cloned()
+            .map(Some)
+            .collect();
+        let mut keep = vec![true; rows];
+        for i in 0..rows {
+            match rng.below(4) {
+                0 => {
+                    price[i] = None;
+                    keep[i] = false;
+                }
+                1 => {
+                    city[i] = None;
+                    keep[i] = false;
+                }
+                _ => {}
+            }
+        }
+        let corrupted = DataFrame::new(vec![
+            ("price".into(), Column::from_f64_opt(price)),
+            ("city".into(), Column::from_str_opt(city)),
+        ])
+        .unwrap();
+
+        let (rx, report) =
+            server.submit_tenant_validated(corrupted, DEFAULT_TENANT, None, Some(&sink));
+        let got = rx.recv().unwrap().unwrap();
+        let n_bad = keep.iter().filter(|k| !**k).count();
+        corrupted_total += n_bad;
+        assert_eq!(report.num_quarantined(), n_bad, "case {case}: quarantine count");
+        assert_eq!(report.keep, keep, "case {case}: verdict mask");
+        for i in report.quarantined() {
+            assert!(!report.errors[i].is_empty(), "case {case} row {i}: no errors");
+            for e in &report.errors[i] {
+                assert_eq!(e.rule, "not_null", "case {case} row {i}");
+                assert!(
+                    e.column == "price" || e.column == "city",
+                    "case {case} row {i}: error names column {:?}",
+                    e.column
+                );
+                assert!(!e.message.is_empty());
+            }
+        }
+        if report.num_valid() == 0 {
+            assert!(got.is_empty(), "case {case}: all-quarantined batch returned tensors");
+            continue;
+        }
+        let want = oracle.process(&clean.filter_rows(&keep).unwrap()).unwrap();
+        if let Err(e) = kamae::util::prop::tensors_bit_identical(&got, &want) {
+            panic!("case {case}: valid rows vs uncorrupted oracle: {e}");
+        }
+    }
+    assert!(corrupted_total > 0, "40 random cases never corrupted a row");
+    assert_eq!(sink.len(), corrupted_total.min(1024), "every quarantined row dead-lettered");
+    server.shutdown();
+}

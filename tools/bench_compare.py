@@ -147,7 +147,9 @@ def main():
 
         # a bench with no previous counterpart is NEW — everything about
         # it is informational on its first nightly (a freshly landed
-        # bench must not fail the run it lands in)
+        # bench must not fail the run it lands in; e.g.
+        # BENCH_ingress_validation.json is compared only once the night
+        # after it first appears)
         prev_path = os.path.join(args.previous, bench)
         is_new_bench = not os.path.exists(prev_path)
 
