@@ -10,7 +10,7 @@
 # and `harness = false` [[bench]]/[[example]] entries for everything
 # under benches/ and examples/ (each defines its own `fn main`).
 
-.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-ingress-validation bench-smoke bench-all artifacts clean
+.PHONY: verify build test fmt bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-ingress-validation bench-fault-tolerance bench-smoke bench-all artifacts clean
 
 verify:
 	cargo build --release
@@ -78,6 +78,17 @@ bench-hot-swap:
 bench-ingress-validation:
 	cargo bench --bench ingress_validation
 
+# Fault containment: deterministic poison/transient/sink-failure pins
+# first (exact condemned indices, survivors bit-identical to an
+# un-faulted oracle, forgiven transients, a dropping sink never failing
+# a request), then a fault storm (injected panics + poison rows + slow
+# batches) gated at >= 90% of clean throughput with every request
+# answered and pool capacity intact, and a deadline storm gated on
+# expired-504 p99 far below served p99; appends to
+# BENCH_fault_tolerance.json.
+bench-fault-tolerance:
+	cargo bench --bench fault_tolerance
+
 # CI smoke flavour of the gated benches: reduced rows/requests, exits
 # non-zero if optimized throughput regresses below the unoptimized
 # baseline, if multilane-bucketize / cross-output-dedup fail to fire on
@@ -92,7 +103,9 @@ bench-ingress-validation:
 # costs more than 10% throughput, loses a request, or stalls a swap
 # past its visibility bound, or if screening every batch through the
 # ingress data-quality gate costs clean traffic more than 5% throughput
-# (the gates the bench-smoke CI job enforces).
+# (the gates the bench-smoke CI job enforces), or if the fault storm
+# drops throughput below 90% of clean baseline / loses a request /
+# leaves a deadline answer slow.
 bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench optimizer
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench variant_routing
@@ -101,10 +114,11 @@ bench-smoke:
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench kernel_program
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench hot_swap
 	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench ingress_validation
+	KAMAE_BENCH_QUICK=1 KAMAE_BENCH_GATE=1 cargo bench --bench fault_tolerance
 
 # Every bench, each appending a record to its BENCH_<name>.json
 # trajectory file (serving benches skip themselves without artifacts).
-bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-ingress-validation
+bench-all: bench-optimizer bench-variant-routing bench-worker-pool bench-net-serving bench-kernel-program bench-hot-swap bench-ingress-validation bench-fault-tolerance
 	cargo bench --bench movielens_pipeline
 	cargo bench --bench native_vs_udf
 	cargo bench --bench indexing

@@ -1,0 +1,606 @@
+//! Fault-tolerance benchmark — the gate for the serving stack's
+//! containment claims: a panicking backend call never costs pool
+//! capacity or an innocent request, a poison row is isolated by
+//! bisection (survivors bit-identical, the row dead-lettered with a
+//! `poison` verdict), and a request past its deadline gets a fast typed
+//! answer instead of hanging behind a stalled worker.
+//!
+//! The quickstart pipeline is fitted in-process and served through a
+//! [`ChaosBackend`] whose [`FaultPlan`] is **deterministic** — faults
+//! key off the backend-call counter or row content, never randomness —
+//! so the differential pins reproduce exactly and CI failures replay
+//! locally.
+//!
+//! Phases:
+//!
+//! 1. **differential pins** (sequential, fully deterministic):
+//!    content-keyed poison rows are condemned with exact indices and
+//!    dead-lettered, survivors resubmit bit-identical to an un-faulted
+//!    oracle; counter-keyed transient panics are forgiven by the
+//!    re-probe and served bit-identical; a failing dead-letter sink
+//!    costs counter increments, never an answer.
+//! 2. **baseline** — clean closed-loop traffic through the chaos
+//!    wrapper with an empty plan (the wrapper itself is free).
+//! 3. **fault storm** — the same traffic with injected panics, poison
+//!    rows and slow batches; throughput must hold >= 90% of baseline
+//!    and every request must be answered (counter conservation, zero
+//!    lost), with pool capacity intact afterwards.
+//! 4. **deadline storm** — every batch stalls longer than the
+//!    configured request deadline; expired requests must be answered
+//!    promptly by the reaper (expired p99 far below served p99).
+//!
+//! Every run appends machine-readable records to
+//! `BENCH_fault_tolerance.json`.
+//!
+//! Flags (also settable via env for CI):
+//!   --quick / KAMAE_BENCH_QUICK   reduced fit rows + request count
+//!   --gate  / KAMAE_BENCH_GATE    exit non-zero on any gate failure
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use kamae::dataframe::{Column, DataFrame};
+use kamae::engine::Dataset;
+use kamae::error::KamaeError;
+use kamae::export::GraphSpec;
+use kamae::pipeline::catalog;
+use kamae::runtime::Tensor;
+use kamae::serving::{
+    request_pool, Backend, BatchConfig, ChaosBackend, DeadLetterSink, FailingDeadLetter,
+    FaultPlan, InterpretedBackend, LatencyRecorder, MemoryDeadLetter, Server, SpecRegistry,
+    DEFAULT_TENANT,
+};
+use kamae::util::bench::{append_run, Table};
+use kamae::util::json::Json;
+use kamae::util::prop::tensors_bit_identical;
+use kamae::util::rng::Rng;
+
+const ROWS_PER_REQUEST: usize = 8;
+const PRODUCERS: usize = 4;
+/// Per-producer in-flight window (same shape as `worker_pool.rs`).
+const WINDOW: usize = 16;
+const POOL_WORKERS: usize = 4;
+/// Storm throughput retention the isolated pool must hold.
+const MIN_RETENTION: f64 = 0.90;
+/// Sentinel price that the poison predicate condemns — far outside
+/// anything `request_pool` generates, so clean rows never match.
+const POISON_PRICE: f64 = 1.0e18;
+/// A response still pending after this long counts as HUNG — the
+/// containment contract says that must never happen.
+const LOST_AFTER: Duration = Duration::from_secs(30);
+
+type RespRx = std::sync::mpsc::Receiver<kamae::error::Result<Vec<Tensor>>>;
+
+/// Fit quickstart once and export the serving spec.
+fn build_spec(fit_rows: usize) -> GraphSpec {
+    let data = request_pool("quickstart", fit_rows).unwrap();
+    let model = catalog::quickstart_pipeline()
+        .fit(&Dataset::from_dataframe(data, 4))
+        .unwrap();
+    let outputs = catalog::QUICKSTART_OUTPUTS.to_vec();
+    model
+        .to_graph_spec("quickstart", catalog::quickstart_inputs(), &outputs)
+        .unwrap()
+}
+
+/// Content-keyed poison: condemn rows whose price is the sentinel.
+fn poison_plan() -> FaultPlan {
+    FaultPlan::poison_rows(|df, i| {
+        df.column("price")
+            .ok()
+            .and_then(|c| c.as_f64().ok())
+            .is_some_and(|v| v[i] == POISON_PRICE)
+    })
+}
+
+/// A copy of `df` with the sentinel price written into `idxs`.
+fn poison_frame(df: &DataFrame, idxs: &[usize]) -> DataFrame {
+    let mut price: Vec<f64> = df.column("price").unwrap().as_f64().unwrap().to_vec();
+    let city: Vec<String> = df.column("city").unwrap().as_str().unwrap().to_vec();
+    for &i in idxs {
+        price[i] = POISON_PRICE;
+    }
+    DataFrame::new(vec![
+        ("price".into(), Column::from_f64(price)),
+        ("city".into(), Column::from_str(city)),
+    ])
+    .unwrap()
+}
+
+/// Pool over the quickstart backend wrapped in [`ChaosBackend`].
+fn start_chaos(
+    spec: &GraphSpec,
+    plan: FaultPlan,
+    deadline: Option<Duration>,
+    sink: Option<Arc<dyn DeadLetterSink>>,
+) -> Server {
+    let inner: Arc<dyn Backend> = Arc::new(InterpretedBackend::new(spec.clone()));
+    let chaos: Arc<dyn Backend> = Arc::new(ChaosBackend::new(inner, plan));
+    let registry = SpecRegistry::single(DEFAULT_TENANT, chaos).unwrap();
+    Server::start_registry_sink(
+        registry,
+        BatchConfig { workers: POOL_WORKERS, request_deadline: deadline, ..BatchConfig::default() },
+        sink,
+    )
+    .unwrap()
+}
+
+/// Pre-built clean request streams, identical across phases.
+fn build_requests(pool: &DataFrame, producers: usize, per_producer: usize) -> Vec<Vec<DataFrame>> {
+    let mut rng = Rng::new(0xF00D);
+    (0..producers)
+        .map(|_| {
+            (0..per_producer)
+                .map(|_| {
+                    let start = rng.below((pool.num_rows() - ROWS_PER_REQUEST) as u64) as usize;
+                    pool.slice(start, ROWS_PER_REQUEST)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// What a chaos-phase driver observed. Conservation gate: `ok + poison
+/// + expired + other == offered` and `lost == 0`.
+#[derive(Default)]
+struct Outcome {
+    ok: AtomicU64,
+    poison: AtomicU64,
+    expired: AtomicU64,
+    other: AtomicU64,
+    lost: AtomicU64,
+}
+
+impl Outcome {
+    fn answered(&self) -> u64 {
+        self.ok.load(Ordering::Relaxed)
+            + self.poison.load(Ordering::Relaxed)
+            + self.expired.load(Ordering::Relaxed)
+            + self.other.load(Ordering::Relaxed)
+    }
+
+    fn count(&self, result: &kamae::error::Result<Vec<Tensor>>) {
+        let slot = match result {
+            Ok(_) => &self.ok,
+            Err(KamaeError::PoisonRows(_)) => &self.poison,
+            Err(KamaeError::DeadlineExceeded(_)) => &self.expired,
+            Err(_) => &self.other,
+        };
+        slot.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Closed-loop driver that tolerates (and tallies) typed fault
+/// responses instead of unwrapping. A receiver that stays silent past
+/// [`LOST_AFTER`] counts as lost — the gate treats any of those as a
+/// containment failure.
+fn drive_chaos(
+    server: &Server,
+    streams: &[Vec<DataFrame>],
+    recorder: &LatencyRecorder,
+    outcome: &Outcome,
+) -> Duration {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for stream in streams {
+            scope.spawn(move || {
+                let mut pending: VecDeque<(Instant, RespRx)> = VecDeque::new();
+                let mut settle = |pending: &mut VecDeque<(Instant, RespRx)>| {
+                    let (sent, rx) = pending.pop_front().unwrap();
+                    match rx.recv_timeout(LOST_AFTER) {
+                        Ok(result) => {
+                            outcome.count(&result);
+                            recorder.record(sent.elapsed());
+                        }
+                        Err(_) => {
+                            outcome.lost.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                };
+                for df in stream {
+                    let rx = server.submit_tenant(df.clone(), DEFAULT_TENANT, None);
+                    pending.push_back((Instant::now(), rx));
+                    while pending.len() >= WINDOW {
+                        settle(&mut pending);
+                    }
+                }
+                while !pending.is_empty() {
+                    settle(&mut pending);
+                }
+            });
+        }
+    });
+    t0.elapsed()
+}
+
+/// p-th percentile of an UNSORTED latency sample (sorts a copy).
+fn percentile(samples: &[Duration], p: f64) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort();
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Env flag: set and not "0"/"false"/"" (so KAMAE_BENCH_GATE=0 disables).
+fn env_flag(name: &str) -> bool {
+    std::env::var(name)
+        .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+        .unwrap_or(false)
+}
+
+/// Phase 1a: poison rows are condemned with EXACT indices,
+/// dead-lettered with a `poison` verdict, and the resubmitted survivors
+/// come back bit-identical to the un-faulted oracle.
+fn pin_poison_isolation(spec: &GraphSpec, pool: &DataFrame, oracle: &InterpretedBackend, quick: bool) {
+    let sink = Arc::new(MemoryDeadLetter::new(8192));
+    let server = start_chaos(
+        spec,
+        poison_plan(),
+        None,
+        Some(Arc::clone(&sink) as Arc<dyn DeadLetterSink>),
+    );
+    let mut rng = Rng::new(0xBADF00D);
+    let cases = if quick { 24 } else { 96 };
+    let mut poison_total = 0u64;
+    for case in 0..cases {
+        let rows = 2 + rng.below(11) as usize;
+        let start = rng.below((pool.num_rows() - rows) as u64) as usize;
+        let clean = pool.slice(start, rows);
+        // 1..=rows/2 poison rows at distinct positions, at least one
+        let mut keep = vec![true; rows];
+        for _ in 0..(1 + rng.below(rows as u64 / 2)) {
+            keep[rng.below(rows as u64) as usize] = false;
+        }
+        let expected: Vec<usize> = (0..rows).filter(|&i| !keep[i]).collect();
+        poison_total += expected.len() as u64;
+        let bad = poison_frame(&clean, &expected);
+
+        // one request in flight => one job per batch => deterministic
+        match server.submit(bad.clone()).recv().unwrap() {
+            Err(KamaeError::PoisonRows(mut idx)) => {
+                idx.sort_unstable();
+                assert_eq!(idx, expected, "pin case {case}: condemned indices");
+            }
+            other => panic!("pin case {case}: expected PoisonRows, got {other:?}"),
+        }
+        // the net layer resubmits survivors automatically; do the same
+        // by hand and demand bit-identical outputs vs the oracle
+        let survivors = bad.filter_rows(&keep).unwrap();
+        if survivors.num_rows() > 0 {
+            let got = server.submit(survivors).recv().unwrap().unwrap();
+            let want = oracle.process(&clean.filter_rows(&keep).unwrap()).unwrap();
+            if let Err(e) = tensors_bit_identical(&got, &want) {
+                panic!("pin case {case}: survivors vs oracle: {e}");
+            }
+        }
+    }
+    assert_eq!(server.poison_rows(), poison_total, "pin: poison_rows counter");
+    assert_eq!(sink.len() as u64, poison_total, "pin: every poison row dead-lettered");
+    for entry in sink.entries() {
+        let rule = entry
+            .get("errors")
+            .and_then(Json::as_array)
+            .and_then(|es| es.first())
+            .and_then(|e| e.get("rule"))
+            .and_then(Json::as_str)
+            .unwrap_or("");
+        assert_eq!(rule, "poison", "pin: dead-letter verdict rule");
+    }
+    server.shutdown();
+    println!(
+        "pin: {cases} poisoned batches, {poison_total} rows condemned with exact indices + \
+         `poison` verdicts, survivors bit-identical to oracle"
+    );
+}
+
+/// Phase 1b: counter-keyed panics are transient — the bisection
+/// re-probe forgives them, every request serves bit-identical, and no
+/// row is condemned.
+fn pin_transient_forgiveness(spec: &GraphSpec, pool: &DataFrame, oracle: &InterpretedBackend) {
+    let server = start_chaos(
+        spec,
+        FaultPlan { panic_every: 3, ..FaultPlan::default() },
+        None,
+        None,
+    );
+    for case in 0..12usize {
+        let df = pool.slice(case * ROWS_PER_REQUEST, ROWS_PER_REQUEST);
+        let got = server.submit(df.clone()).recv().unwrap().unwrap_or_else(|e| {
+            panic!("transient pin case {case}: request not forgiven: {e}")
+        });
+        let want = oracle.process(&df).unwrap();
+        if let Err(e) = tensors_bit_identical(&got, &want) {
+            panic!("transient pin case {case}: {e}");
+        }
+    }
+    assert!(server.worker_panics() >= 2, "transient pin: no panics were injected");
+    assert_eq!(server.poison_rows(), 0, "transient pin: a transient fault condemned a row");
+    let panics = server.worker_panics();
+    server.shutdown();
+    println!("pin: {panics} injected transient panics all forgiven, zero rows condemned");
+}
+
+/// Phase 1c: a dead-letter sink that drops records never fails a
+/// request — drops cost exactly one counter increment each.
+fn pin_sink_failure_containment(spec: &GraphSpec, pool: &DataFrame) {
+    let ring = Arc::new(MemoryDeadLetter::new(64));
+    let failing = Arc::new(FailingDeadLetter::new(
+        Arc::clone(&ring) as Arc<dyn DeadLetterSink>,
+        2,
+    ));
+    let server = start_chaos(
+        spec,
+        poison_plan(),
+        None,
+        Some(Arc::clone(&failing) as Arc<dyn DeadLetterSink>),
+    );
+    for case in 0..8usize {
+        let df = poison_frame(&pool.slice(case * 4, 4), &[1]);
+        match server.submit(df).recv().unwrap() {
+            Err(KamaeError::PoisonRows(idx)) => assert_eq!(idx, vec![1], "sink pin case {case}"),
+            other => panic!("sink pin case {case}: expected PoisonRows, got {other:?}"),
+        }
+    }
+    assert_eq!(failing.dropped(), 4, "sink pin: every 2nd record dropped");
+    assert_eq!(failing.errors(), 4, "sink pin: drops surfaced via errors()");
+    assert_eq!(ring.len(), 4, "sink pin: surviving records passed through");
+    server.shutdown();
+    println!("pin: failing dead-letter sink dropped 4/8 records; all 8 requests still answered\n");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick") || env_flag("KAMAE_BENCH_QUICK");
+    let gate = args.iter().any(|a| a == "--gate") || env_flag("KAMAE_BENCH_GATE");
+    let (fit_rows, per_producer) = if quick { (2_000, 400) } else { (20_000, 2_000) };
+    if quick {
+        println!("(quick mode: {fit_rows} fit rows, {per_producer} requests/producer)\n");
+    }
+    let total_requests = PRODUCERS * per_producer;
+
+    let spec = build_spec(fit_rows);
+    println!(
+        "quickstart: {} ingress columns, {} graph nodes, {} outputs",
+        spec.ingress.len(),
+        spec.nodes.len(),
+        spec.outputs.len()
+    );
+    let pool = request_pool("quickstart", 4096).unwrap();
+    let streams = build_requests(&pool, PRODUCERS, per_producer);
+    let oracle = InterpretedBackend::new(spec.clone());
+
+    // ---- differential pins ------------------------------------------------
+    pin_poison_isolation(&spec, &pool, &oracle, quick);
+    pin_transient_forgiveness(&spec, &pool, &oracle);
+    pin_sink_failure_containment(&spec, &pool);
+
+    // ---- baseline: clean traffic through an empty fault plan --------------
+    let (baseline_report, baseline_outcome) = {
+        let server = start_chaos(&spec, FaultPlan::default(), None, None);
+        let recorder = LatencyRecorder::new();
+        let outcome = Outcome::default();
+        let wall = drive_chaos(&server, &streams, &recorder, &outcome);
+        let worker_busy = server.worker_busy_times();
+        server.shutdown();
+        assert_eq!(outcome.answered() as usize, total_requests, "baseline lost requests");
+        let report =
+            recorder.report_pool("quickstart/fault-baseline", total_requests, wall, &worker_busy);
+        println!("{report}\n");
+        (report, outcome)
+    };
+    assert_eq!(baseline_outcome.ok.load(Ordering::Relaxed) as usize, total_requests);
+
+    // ---- fault storm: panics + poison rows + slow batches -----------------
+    // deterministic positions: 2 poisoned requests per producer, one
+    // sentinel row each
+    let mut storm_streams = streams.clone();
+    let mut poisoned_requests = 0u64;
+    for stream in &mut storm_streams {
+        for &at in &[per_producer / 3, (2 * per_producer) / 3] {
+            stream[at] = poison_frame(&stream[at], &[3]);
+            poisoned_requests += 1;
+        }
+    }
+    let storm_plan = FaultPlan {
+        panic_every: 50,
+        slow_every: Some((100, Duration::from_micros(200))),
+        ..poison_plan()
+    };
+    let (storm_report, storm_outcome, storm_panics, storm_poison_rows) = {
+        let sink = Arc::new(MemoryDeadLetter::new(8192));
+        let server = start_chaos(
+            &spec,
+            storm_plan,
+            None,
+            Some(Arc::clone(&sink) as Arc<dyn DeadLetterSink>),
+        );
+        let recorder = LatencyRecorder::new();
+        let outcome = Outcome::default();
+        let wall = drive_chaos(&server, &storm_streams, &recorder, &outcome);
+        let worker_busy = server.worker_busy_times();
+        // capacity intact: every supervised worker still drains after
+        // the storm — a clean request round-trips
+        assert_eq!(server.workers(), POOL_WORKERS, "storm: pool capacity decayed");
+        let live = server.submit(pool.slice(0, ROWS_PER_REQUEST)).recv().unwrap();
+        assert!(live.is_ok(), "storm: pool not live after faults: {live:?}");
+        let (panics, poison_rows) = (server.worker_panics(), server.poison_rows());
+        server.shutdown();
+        assert_eq!(sink.len() as u64, poison_rows, "storm: poison rows dead-lettered");
+        let report =
+            recorder.report_pool("quickstart/fault-storm", total_requests, wall, &worker_busy);
+        println!("{report}\n");
+        (report, outcome, panics, poison_rows)
+    };
+
+    // ---- deadline storm: every batch stalls past the deadline -------------
+    let deadline = Duration::from_millis(4);
+    let stall = Duration::from_millis(15);
+    let deadline_per_producer = if quick { 60 } else { 150 };
+    let (served_lat, expired_lat, deadline_expired_count) = {
+        let plan = FaultPlan { slow_every: Some((1, stall)), ..FaultPlan::default() };
+        let server = start_chaos(&spec, plan, Some(deadline), None);
+        let served: Mutex<Vec<Duration>> = Mutex::new(Vec::new());
+        let expired: Mutex<Vec<Duration>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for p in 0..PRODUCERS {
+                let (server, pool) = (&server, &pool);
+                let (served, expired) = (&served, &expired);
+                scope.spawn(move || {
+                    let mut pending: VecDeque<(Instant, RespRx)> = VecDeque::new();
+                    let mut settle = |pending: &mut VecDeque<(Instant, RespRx)>| {
+                        let (sent, rx) = pending.pop_front().unwrap();
+                        match rx.recv_timeout(LOST_AFTER) {
+                            Ok(Ok(_)) => served.lock().unwrap().push(sent.elapsed()),
+                            Ok(Err(KamaeError::DeadlineExceeded(_))) => {
+                                expired.lock().unwrap().push(sent.elapsed())
+                            }
+                            Ok(Err(e)) => panic!("deadline storm: unexpected error {e}"),
+                            Err(_) => panic!("deadline storm: request hung"),
+                        }
+                    };
+                    for i in 0..deadline_per_producer {
+                        let start = ((p * deadline_per_producer + i) * ROWS_PER_REQUEST)
+                            % (pool.num_rows() - ROWS_PER_REQUEST);
+                        let rx = server.submit(pool.slice(start, ROWS_PER_REQUEST));
+                        pending.push_back((Instant::now(), rx));
+                        while pending.len() >= WINDOW {
+                            settle(&mut pending);
+                        }
+                    }
+                    while !pending.is_empty() {
+                        settle(&mut pending);
+                    }
+                });
+            }
+        });
+        let count = server.deadline_expired();
+        server.shutdown();
+        (served.into_inner().unwrap(), expired.into_inner().unwrap(), count)
+    };
+    let served_p99 = percentile(&served_lat, 0.99);
+    let expired_p99 = percentile(&expired_lat, 0.99);
+    println!(
+        "deadline storm ({}ms deadline vs {}ms batches): {} served (p99 {:.1}ms), {} expired \
+         (p99 {:.1}ms, typed 504)\n",
+        deadline.as_millis(),
+        stall.as_millis(),
+        served_lat.len(),
+        ms(served_p99),
+        expired_lat.len(),
+        ms(expired_p99),
+    );
+
+    // ---- summary ----------------------------------------------------------
+    let baseline_rps = baseline_report.throughput_rps;
+    let storm_rps = storm_report.throughput_rps;
+    let retention = if baseline_rps > 0.0 { storm_rps / baseline_rps } else { 0.0 };
+    let mut table = Table::new(&["mode", "throughput", "vs baseline"]);
+    for (label, r) in [("baseline (no faults)", baseline_rps), ("fault storm", storm_rps)] {
+        table.row(&[
+            label.into(),
+            format!("{r:.0} req/s"),
+            format!("{:+.1}%", 100.0 * (r / baseline_rps - 1.0)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nstorm retention: {:.1}% (gate: >= {:.0}%); {} panics caught, {} poison rows \
+         condemned, {} poisoned requests answered, {} other errors, {} lost",
+        100.0 * retention,
+        100.0 * MIN_RETENTION,
+        storm_panics,
+        storm_poison_rows,
+        storm_outcome.poison.load(Ordering::Relaxed),
+        storm_outcome.other.load(Ordering::Relaxed),
+        storm_outcome.lost.load(Ordering::Relaxed),
+    );
+
+    // ---- trajectory + gate ------------------------------------------------
+    let mut records = vec![baseline_report.to_json(), storm_report.to_json()];
+    let mut rec = Json::object();
+    rec.set("spec", "quickstart");
+    rec.set("mode", "fault-tolerance");
+    rec.set("producers", PRODUCERS);
+    rec.set("window", WINDOW);
+    rec.set("rows_per_request", ROWS_PER_REQUEST);
+    rec.set("pool_workers", POOL_WORKERS);
+    rec.set("baseline_rps", baseline_rps);
+    rec.set("storm_rps", storm_rps);
+    rec.set("retention", retention);
+    rec.set("storm_panics", storm_panics as i64);
+    rec.set("storm_poison_rows", storm_poison_rows as i64);
+    rec.set("storm_lost", storm_outcome.lost.load(Ordering::Relaxed) as i64);
+    rec.set("deadline_served", served_lat.len() as i64);
+    rec.set("deadline_expired", deadline_expired_count as i64);
+    rec.set("served_p99_ms", ms(served_p99));
+    rec.set("expired_p99_ms", ms(expired_p99));
+    records.push(rec);
+    let path = append_run("fault_tolerance", &[("quick", Json::Bool(quick))], records)
+        .expect("bench trajectory");
+    println!("appended run to {}", path.display());
+
+    let mut gate_failures = Vec::new();
+    if storm_rps < MIN_RETENTION * baseline_rps {
+        gate_failures.push(format!(
+            "storm throughput {storm_rps:.0} req/s fell below {:.0}% of the clean baseline \
+             {baseline_rps:.0} req/s ({:.1}% retention)",
+            100.0 * MIN_RETENTION,
+            100.0 * retention
+        ));
+    }
+    let lost = storm_outcome.lost.load(Ordering::Relaxed);
+    if lost > 0 {
+        gate_failures.push(format!("{lost} storm request(s) hung past {LOST_AFTER:?}"));
+    }
+    if storm_outcome.answered() as usize != total_requests {
+        gate_failures.push(format!(
+            "storm conservation: {} answered of {total_requests} offered",
+            storm_outcome.answered()
+        ));
+    }
+    if storm_panics == 0 {
+        gate_failures.push("storm injected no panics (plan mis-wired?)".into());
+    }
+    if storm_outcome.poison.load(Ordering::Relaxed) != poisoned_requests {
+        gate_failures.push(format!(
+            "storm: {} poisoned requests offered but {} PoisonRows answers",
+            poisoned_requests,
+            storm_outcome.poison.load(Ordering::Relaxed)
+        ));
+    }
+    if served_lat.is_empty() || expired_lat.is_empty() || deadline_expired_count == 0 {
+        gate_failures.push(format!(
+            "deadline storm did not produce both outcomes ({} served, {} expired)",
+            served_lat.len(),
+            expired_lat.len()
+        ));
+    } else if ms(expired_p99) * 2.0 >= ms(served_p99) {
+        gate_failures.push(format!(
+            "expired p99 {:.1}ms is not far below served p99 {:.1}ms — the reaper is not \
+             answering aged-out requests promptly",
+            ms(expired_p99),
+            ms(served_p99)
+        ));
+    }
+    if gate {
+        for f in &gate_failures {
+            eprintln!("GATE FAILURE: {f}");
+        }
+        if !gate_failures.is_empty() {
+            std::process::exit(1);
+        }
+    } else {
+        for f in &gate_failures {
+            eprintln!("warning (ungated): {f}");
+        }
+    }
+}

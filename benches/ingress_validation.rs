@@ -167,7 +167,7 @@ fn drive_validated(
                 for df in stream {
                     let sent = Instant::now();
                     let (rx, report) =
-                        server.submit_tenant_validated(df.clone(), DEFAULT_TENANT, None, None);
+                        server.submit_tenant_validated(df.clone(), DEFAULT_TENANT, None, None, None);
                     quarantined.fetch_add(report.num_quarantined() as u64, Ordering::Relaxed);
                     pending.push_back((sent, rx));
                     while pending.len() >= WINDOW {
@@ -235,7 +235,7 @@ fn main() {
             let clean = pool.slice(start, rows);
             let (corrupted, keep) = corrupt(&clean, 0.3, &mut rng);
             let (rx, report) =
-                server.submit_tenant_validated(corrupted, DEFAULT_TENANT, None, Some(&sink));
+                server.submit_tenant_validated(corrupted, DEFAULT_TENANT, None, None, Some(&sink));
             let got = rx.recv().unwrap().unwrap();
             let n_bad = keep.iter().filter(|k| !**k).count();
             corrupted_total += n_bad;

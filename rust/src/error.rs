@@ -37,6 +37,24 @@ pub enum KamaeError {
     /// race, or a rollback has nowhere to go). Maps to `409
     /// version_conflict` on the wire.
     VersionConflict(String),
+    /// The serving pool is draining: the request was rejected at submit
+    /// time because the queue is closed. Typed (rather than a generic
+    /// [`KamaeError::Serving`] string) so the network layer maps it to
+    /// `503 shutting_down` — the same answer the listener gives before
+    /// a request ever reaches the pool.
+    ShuttingDown,
+    /// The request aged past its deadline while queued and was answered
+    /// without occupying a batch. Maps to `504 deadline_exceeded` on
+    /// the wire. The message reports the configured deadline and the
+    /// time actually spent in the queue.
+    DeadlineExceeded(String),
+    /// Batch execution failed and bisection isolated the failure to
+    /// these specific rows of THIS request's frame (0-based row
+    /// indices). The rows were dead-lettered with a `poison` verdict;
+    /// the caller may resubmit the surviving rows — the network layer
+    /// does exactly that and folds the poison rows into the response's
+    /// per-row verdicts.
+    PoisonRows(Vec<usize>),
 }
 
 impl fmt::Display for KamaeError {
@@ -57,6 +75,13 @@ impl fmt::Display for KamaeError {
             KamaeError::Serving(m) => write!(f, "serving error: {m}"),
             KamaeError::UnknownTenant(m) => write!(f, "unknown tenant: {m}"),
             KamaeError::VersionConflict(m) => write!(f, "version conflict: {m}"),
+            KamaeError::ShuttingDown => {
+                write!(f, "serving error: server is shutting down (queue closed)")
+            }
+            KamaeError::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            KamaeError::PoisonRows(rows) => {
+                write!(f, "poison rows: {} row(s) crashed the backend: {rows:?}", rows.len())
+            }
         }
     }
 }

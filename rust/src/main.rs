@@ -111,6 +111,7 @@ fn run(raw: &[String]) -> Result<()> {
         "deploy" => deploy(&args),
         "rollback" => rollback(&args),
         "tenants" => tenants(&args),
+        "dead-letter" => dead_letter(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -160,7 +161,13 @@ fn print_usage() {
          \x20                  — add --validate [--dead-letter FILE.jsonl] to gate ingress\n\
          \x20                  data quality: invalid rows are quarantined (responses carry\n\
          \x20                  per-row verdicts, the batch is served compacted) and\n\
-         \x20                  appended to the dead-letter file with their errors\n\
+         \x20                  appended to the dead-letter file with their errors;\n\
+         \x20                  --quarantine-alert RATE flips /healthz to \"degraded\" when a\n\
+         \x20                  tenant's rolling quarantine rate reaches RATE (0 < RATE <= 1)\n\
+         \x20                  — add --deadline-ms N to bound queue time: requests that age\n\
+         \x20                  out waiting are answered 504 deadline_exceeded instead of\n\
+         \x20                  occupying a batch (clients may override per request with\n\
+         \x20                  \"deadline_ms\" in the body)\n\
          \x20 deploy           <tenant> <spec.json[,spec2.json...]> --addr HOST:PORT\n\
          \x20                  [--expect-version N] [--level none|basic|full] — hot-swap a\n\
          \x20                  tenant's specs on a running --registry listener (creates the\n\
@@ -171,7 +178,12 @@ fn print_usage() {
          \x20 rollback         <tenant> --addr HOST:PORT [--to-version N] — re-activate the\n\
          \x20                  previous (or an explicit) still-warm version, no rebuild\n\
          \x20 tenants          --addr HOST:PORT — list tenants, versions and per-version\n\
-         \x20                  request counts on a running listener\n"
+         \x20                  request counts on a running listener\n\
+         \x20 dead-letter      replay FILE.jsonl --tenant T --addr HOST:PORT [--dry-run]\n\
+         \x20                  — re-submit a tenant's dead-lettered rows through the live\n\
+         \x20                  validation gate one row at a time, printing a per-row verdict\n\
+         \x20                  (recovered | still quarantined | rejected) and a summary;\n\
+         \x20                  --dry-run lists the matching rows without submitting\n"
     );
 }
 
@@ -525,11 +537,41 @@ fn serve_listen(
             "--dead-letter requires --validate (nothing is quarantined without the gate)".into(),
         ));
     }
+    let quarantine_alert = match args.get("quarantine-alert") {
+        None => None,
+        Some(v) => {
+            let rate: f64 = v.parse().map_err(|_| {
+                KamaeError::InvalidConfig(format!(
+                    "--quarantine-alert takes a fraction in (0, 1], got {v}"
+                ))
+            })?;
+            if !validate {
+                return Err(KamaeError::InvalidConfig(
+                    "--quarantine-alert requires --validate (the rate never moves \
+                     without the gate)"
+                        .into(),
+                ));
+            }
+            Some(rate)
+        }
+    };
+    let request_deadline = match args.get("deadline-ms") {
+        None => None,
+        Some(v) => {
+            let ms: u64 = v.parse().map_err(|_| {
+                KamaeError::InvalidConfig(format!(
+                    "--deadline-ms takes a positive integer of milliseconds, got {v}"
+                ))
+            })?;
+            Some(std::time::Duration::from_millis(ms))
+        }
+    };
     let config = NetConfig {
-        batch: BatchConfig { workers, ..Default::default() },
+        batch: BatchConfig { workers, request_deadline, ..Default::default() },
         admission,
         validate,
         dead_letter: dead_letter.clone(),
+        quarantine_alert,
         ..NetConfig::default()
     };
     let registry_mode = args.has("registry");
@@ -710,4 +752,154 @@ fn rollback(args: &Args) -> Result<()> {
 /// versions with per-version request counts.
 fn tenants(args: &Args) -> Result<()> {
     admin_call(args, "GET", "/admin/tenants", "")
+}
+
+/// `kamae dead-letter replay FILE.jsonl --tenant T --addr HOST:PORT
+/// [--dry-run]` — re-submit a tenant's dead-lettered rows through the
+/// live validation gate, one row per request so each verdict names its
+/// source line. A row recovers when the current rules accept it (they
+/// may have been fixed by a deploy since the quarantine); a row that is
+/// quarantined again, or rejected with a wire error, stays dead.
+fn dead_letter(args: &Args) -> Result<()> {
+    use kamae::util::json::Json;
+
+    const USAGE: &str =
+        "usage: kamae dead-letter replay FILE.jsonl --tenant T --addr HOST:PORT [--dry-run]";
+    match args.pos(0) {
+        Some("replay") => {}
+        Some(other) => {
+            return Err(KamaeError::InvalidConfig(format!(
+                "unknown dead-letter verb '{other}'\n{USAGE}"
+            )))
+        }
+        None => return Err(KamaeError::InvalidConfig(USAGE.into())),
+    }
+    let path = PathBuf::from(
+        args.pos(1)
+            .ok_or_else(|| KamaeError::InvalidConfig(USAGE.into()))?,
+    );
+    let tenant = args
+        .get("tenant")
+        .ok_or_else(|| KamaeError::InvalidConfig(format!("--tenant required\n{USAGE}")))?;
+    let dry_run = args.has("dry-run");
+
+    // parse the JSONL sink format ({"tenant", "row", "errors"}) and
+    // keep this tenant's rows, remembering source lines for the report
+    let text = std::fs::read_to_string(&path)?;
+    let mut rows: Vec<(usize, Json)> = Vec::new();
+    let mut other_tenants = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let entry = Json::parse(line).map_err(|e| {
+            KamaeError::Serde(format!(
+                "{}:{}: not a dead-letter entry: {e}",
+                path.display(),
+                i + 1
+            ))
+        })?;
+        let row_tenant = entry.get("tenant").and_then(Json::as_str).ok_or_else(|| {
+            KamaeError::Serde(format!(
+                "{}:{}: dead-letter entry has no 'tenant' key",
+                path.display(),
+                i + 1
+            ))
+        })?;
+        if row_tenant != tenant {
+            other_tenants += 1;
+            continue;
+        }
+        let row = entry.get("row").cloned().ok_or_else(|| {
+            KamaeError::Serde(format!(
+                "{}:{}: dead-letter entry has no 'row' key",
+                path.display(),
+                i + 1
+            ))
+        })?;
+        rows.push((i + 1, row));
+    }
+    if rows.is_empty() {
+        println!(
+            "no dead-letter rows for tenant '{tenant}' in {} ({other_tenants} other-tenant \
+             entr{})",
+            path.display(),
+            if other_tenants == 1 { "y" } else { "ies" }
+        );
+        return Ok(());
+    }
+    if dry_run {
+        println!("would replay {} row(s) for tenant '{tenant}':", rows.len());
+        for (line, row) in &rows {
+            println!("  line {line}: {row}");
+        }
+        return Ok(());
+    }
+
+    let addr = args.get("addr").ok_or_else(|| {
+        KamaeError::InvalidConfig(format!(
+            "--addr HOST:PORT required (a running `kamae serve --listen --validate`)\n{USAGE}"
+        ))
+    })?;
+    let mut client = kamae::serving::NetClient::connect(addr)?;
+    let infer_path = format!("/v1/infer/{tenant}");
+    let (mut recovered, mut quarantined, mut rejected) = (0usize, 0usize, 0usize);
+    for (line, row) in &rows {
+        let mut body = Json::object();
+        body.set("rows", Json::Array(vec![row.clone()]));
+        let resp = client.request("POST", &infer_path, &[], &body.to_string())?;
+        if resp.status >= 300 {
+            // a typed wire error (validation off, unknown tenant, ...):
+            // surface the code, keep going — other rows may still land
+            let code = resp
+                .json()
+                .ok()
+                .and_then(|j| j.get("error").and_then(|e| e.get("code")).and_then(Json::as_str).map(str::to_string))
+                .unwrap_or_else(|| format!("http {}", resp.status));
+            println!("line {line}: rejected ({code})");
+            rejected += 1;
+        } else {
+            let reply = resp.json()?;
+            // with validation on, valid_rows says whether the row passed
+            // the gate; without the key the request simply served
+            let valid = reply
+                .get("valid_rows")
+                .and_then(Json::as_i64)
+                .unwrap_or(1);
+            if valid >= 1 {
+                println!("line {line}: recovered");
+                recovered += 1;
+            } else {
+                // quote the first structured error so the operator sees
+                // WHY it is still dead without opening the sink file
+                let why = reply
+                    .get("verdicts")
+                    .and_then(Json::as_array)
+                    .and_then(|vs| vs.first())
+                    .and_then(|v| v.get("errors"))
+                    .and_then(Json::as_array)
+                    .and_then(|es| es.first())
+                    .map(|e| {
+                        format!(
+                            "{}: {}",
+                            e.get("rule").and_then(Json::as_str).unwrap_or("?"),
+                            e.get("message").and_then(Json::as_str).unwrap_or("?")
+                        )
+                    })
+                    .unwrap_or_else(|| "no verdict errors returned".to_string());
+                println!("line {line}: still quarantined — {why}");
+                quarantined += 1;
+            }
+        }
+        if resp.closed {
+            client = kamae::serving::NetClient::connect(addr)?;
+        }
+    }
+    println!(
+        "replayed {} row(s) for tenant '{tenant}': {recovered} recovered, {quarantined} still \
+         quarantined, {rejected} rejected",
+        rows.len()
+    );
+    Ok(())
 }

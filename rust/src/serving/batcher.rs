@@ -52,8 +52,35 @@
 //! batch while each variant's exclusive work runs only on its own rows.
 //! A targeted request's response carries exactly its variant's output
 //! tensors, in that variant's output order.
+//!
+//! ## Fault containment
+//!
+//! Batch execution is **panic-isolated**: every backend call runs under
+//! [`std::panic::catch_unwind`], so a bug in one backend can strand
+//! neither the worker thread nor the other jobs riding its batch. A
+//! failed (erroring or panicking) batch is re-executed by **bisection**
+//! down to single rows: transient faults are forgiven (a single row is
+//! retried once before being condemned), deterministic row-level
+//! failures are isolated as **poison rows** — dead-lettered through the
+//! pool's [`DeadLetterSink`] with a `poison` verdict and reported to
+//! their own request as [`KamaeError::PoisonRows`] — while every other
+//! job in the batch is served bit-identical to a clean run. Workers are
+//! additionally supervised: if the drain loop itself ever unwinds, the
+//! thread catches the panic and re-enters the loop, so pool capacity
+//! never decays ([`Server::workers`] stays [`BatchConfig::workers`]).
+//!
+//! Requests may carry a **deadline** ([`BatchConfig::request_deadline`]
+//! or per-submit): jobs that age out in the queue are answered with a
+//! typed [`KamaeError::DeadlineExceeded`] instead of occupying a batch
+//! — both by the workers at drain time and by a dedicated reaper thread
+//! that sweeps the queue every millisecond, so an expired request gets
+//! its 504 promptly even while every worker is stuck in a slow batch.
+//! [`Server::worker_panics`] / [`Server::poison_rows`] /
+//! [`Server::deadline_expired`] expose the fault counters
+//! `/metrics` surfaces.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -86,6 +113,12 @@ pub struct BatchConfig {
     /// higher values let concurrent batches execute on idle cores
     /// (`benches/worker_pool.rs` gates the scaling win).
     pub workers: usize,
+    /// Default per-request deadline, measured from submit. A job still
+    /// queued when its deadline passes is answered with a typed
+    /// [`KamaeError::DeadlineExceeded`] instead of occupying a batch.
+    /// `None` (the default) means requests wait indefinitely; the wire
+    /// layer's `deadline_ms` overrides this per request.
+    pub request_deadline: Option<Duration>,
 }
 
 impl Default for BatchConfig {
@@ -99,6 +132,7 @@ impl Default for BatchConfig {
             max_wait: Duration::from_micros(300),
             route_variants: true,
             workers: 1,
+            request_deadline: None,
         }
     }
 }
@@ -124,6 +158,13 @@ impl BatchConfig {
                     .into(),
             ));
         }
+        if self.request_deadline == Some(Duration::ZERO) {
+            return Err(KamaeError::Serving(
+                "BatchConfig::request_deadline must be > 0 (a zero deadline expires every \
+                 request at submit)"
+                    .into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -139,6 +180,56 @@ struct Job {
     /// request mid-flight.
     resolved: Arc<TenantVersion>,
     resp: mpsc::Sender<Result<Vec<Tensor>>>,
+    /// When the job entered the queue — the numerator of the "how long
+    /// did it wait" half of a deadline-exceeded answer.
+    enqueued: Instant,
+    /// Absolute expiry instant (`enqueued + deadline`). `None` waits
+    /// forever.
+    deadline: Option<Instant>,
+}
+
+impl Job {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Answer an expired job with the typed deadline error and count it.
+    fn answer_expired(self, now: Instant, stats: &PoolStats) {
+        stats.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        let deadline = self.deadline.expect("answer_expired on a job without a deadline");
+        let configured = deadline.saturating_duration_since(self.enqueued);
+        let waited = now.saturating_duration_since(self.enqueued);
+        let _ = self.resp.send(Err(KamaeError::DeadlineExceeded(format!(
+            "request deadline {configured:?} exceeded after {waited:?} in queue"
+        ))));
+    }
+}
+
+/// Pool-level fault counters, shared by every worker and the reaper.
+/// Surfaced through [`Server::worker_panics`] /
+/// [`Server::deadline_expired`] / [`Server::poison_rows`] and stamped
+/// into `ServeReport` by the network layer.
+struct PoolStats {
+    /// Panics caught at the batch-execution boundary (including
+    /// bisection probes) plus drain-loop unwinds survived by the worker
+    /// supervision wrapper.
+    worker_panics: AtomicU64,
+    /// Jobs answered with [`KamaeError::DeadlineExceeded`] instead of
+    /// executing.
+    deadline_expired: AtomicU64,
+    /// Rows isolated by bisection as deterministic backend-crashers and
+    /// dead-lettered with a `poison` verdict.
+    poison_rows: AtomicU64,
+}
+
+impl PoolStats {
+    fn new() -> PoolStats {
+        PoolStats {
+            worker_panics: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            poison_rows: AtomicU64::new(0),
+        }
+    }
 }
 
 /// The shared request queue: a deque + condvar that N workers drain in
@@ -188,6 +279,23 @@ impl JobQueue {
     /// signal behind the shed path's dynamic `Retry-After` hint.
     fn depth(&self) -> usize {
         self.state.lock().unwrap().jobs.len()
+    }
+
+    /// Remove every job whose deadline has passed, returning them for
+    /// the caller to answer OUTSIDE the lock, plus whether the queue is
+    /// finished (closed and empty) — the reaper's exit signal.
+    fn take_expired(&self, now: Instant) -> (Vec<Job>, bool) {
+        let mut s = self.state.lock().unwrap();
+        let mut expired = Vec::new();
+        if s.jobs.iter().any(|j| j.expired(now)) {
+            let kept: VecDeque<Job> = std::mem::take(&mut s.jobs)
+                .into_iter()
+                .filter_map(|j| if j.expired(now) { expired.push(j); None } else { Some(j) })
+                .collect();
+            s.jobs = kept;
+        }
+        let done = s.closed && s.jobs.is_empty();
+        (expired, done)
     }
 
     /// Drain the next batch for one worker: block for the first job,
@@ -279,7 +387,13 @@ impl WorkerMetrics {
 pub struct Server {
     queue: Arc<JobQueue>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// The deadline reaper: sweeps expired jobs out of the queue every
+    /// millisecond so a 504 answer never waits for a busy worker.
+    reaper: Option<std::thread::JoinHandle<()>>,
     metrics: Vec<Arc<WorkerMetrics>>,
+    /// Shared fault counters (panics caught, deadlines expired, poison
+    /// rows isolated).
+    stats: Arc<PoolStats>,
     /// The registry requests resolve against. Deploys/rollbacks through
     /// this handle take effect on the NEXT submit; nothing queued or
     /// in-flight changes.
@@ -291,6 +405,9 @@ pub struct Server {
     /// When the pool started serving — the denominator of the lifetime
     /// drain rate behind the shed path's `Retry-After` hint.
     started: Instant,
+    /// Captured from [`BatchConfig::request_deadline`]: the default
+    /// deadline stamped on submits that don't carry their own.
+    request_deadline: Option<Duration>,
 }
 
 impl Server {
@@ -318,18 +435,49 @@ impl Server {
     /// tenants ([`Server::submit_tenant`]), deploys/rollbacks through
     /// the registry handle swap versions with zero downtime.
     pub fn start_registry(registry: Arc<SpecRegistry>, config: BatchConfig) -> Result<Server> {
+        Server::start_registry_sink(registry, config, None)
+    }
+
+    /// [`Server::start_registry`] with a pool-level dead-letter sink:
+    /// poison rows isolated by bisection are recorded here (as JSON
+    /// re-encodings of the frame rows) with a `poison` verdict. The
+    /// network front-end passes its JSONL sink so request-time
+    /// quarantines and execution-time poison land in the same file.
+    pub fn start_registry_sink(
+        registry: Arc<SpecRegistry>,
+        config: BatchConfig,
+        sink: Option<Arc<dyn DeadLetterSink>>,
+    ) -> Result<Server> {
         config.validate()?;
         let queue = Arc::new(JobQueue::new());
+        let stats = Arc::new(PoolStats::new());
         let mut metrics = Vec::with_capacity(config.workers);
         let mut workers = Vec::with_capacity(config.workers);
         for i in 0..config.workers {
             let m = Arc::new(WorkerMetrics::new());
             metrics.push(Arc::clone(&m));
             let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            let sink = sink.clone();
             let config = config.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("kamae-batcher-{i}"))
-                .spawn(move || worker_loop(config, queue, m))
+                // supervision wrapper: batch execution is already
+                // panic-isolated inside worker_loop, but if the drain
+                // loop itself ever unwinds, catch it and re-enter — the
+                // worker "respawns" in place and pool capacity never
+                // decays. Ok(()) means the queue closed: a clean exit.
+                .spawn(move || loop {
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        worker_loop(&config, &queue, &m, &stats, sink.as_deref())
+                    }));
+                    match r {
+                        Ok(()) => break,
+                        Err(_) => {
+                            stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
                 .map_err(|e| {
                     KamaeError::Serving(format!("failed to spawn batcher worker {i}: {e}"))
                 });
@@ -345,13 +493,24 @@ impl Server {
                 }
             }
         }
+        let reaper = {
+            let queue = Arc::clone(&queue);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name("kamae-reaper".into())
+                .spawn(move || reaper_loop(&queue, &stats))
+                .ok()
+        };
         Ok(Server {
             queue,
             workers,
+            reaper,
             metrics,
+            stats,
             registry,
             route_variants: config.route_variants,
             started: Instant::now(),
+            request_deadline: config.request_deadline,
         })
     }
 
@@ -409,6 +568,19 @@ impl Server {
         variant: Option<String>,
         resolved: Arc<TenantVersion>,
     ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        self.submit_resolved_deadline(df, variant, resolved, None)
+    }
+
+    /// [`Server::submit_resolved`] with a per-request deadline override.
+    /// `None` falls back to [`BatchConfig::request_deadline`]; the wire
+    /// layer passes the request's `deadline_ms` here.
+    pub fn submit_resolved_deadline(
+        &self,
+        df: DataFrame,
+        variant: Option<String>,
+        resolved: Arc<TenantVersion>,
+        deadline: Option<Duration>,
+    ) -> mpsc::Receiver<Result<Vec<Tensor>>> {
         if self.route_variants {
             if let Some(v) = &variant {
                 let known = resolved.variants();
@@ -420,9 +592,12 @@ impl Server {
                 }
             }
         }
+        let enqueued = Instant::now();
+        let deadline = deadline.or(self.request_deadline).map(|d| enqueued + d);
         let (resp_tx, resp_rx) = mpsc::channel();
-        if let Err(job) = self.queue.push(Job { df, variant, resolved, resp: resp_tx }) {
-            let _ = job.resp.send(Err(KamaeError::Serving("server stopped".into())));
+        let job = Job { df, variant, resolved, resp: resp_tx, enqueued, deadline };
+        if let Err(job) = self.queue.push(job) {
+            let _ = job.resp.send(Err(KamaeError::ShuttingDown));
         }
         resp_rx
     }
@@ -446,6 +621,7 @@ impl Server {
         df: DataFrame,
         tenant: &str,
         variant: Option<&str>,
+        deadline: Option<Duration>,
         sink: Option<&dyn DeadLetterSink>,
     ) -> (mpsc::Receiver<Result<Vec<Tensor>>>, ValidationReport) {
         let nrows = df.num_rows();
@@ -454,7 +630,8 @@ impl Server {
             Err(e) => return (Self::reject(e), ValidationReport::all_valid(nrows)),
         };
         let Some(spec) = resolved.validation() else {
-            let rx = self.submit_resolved(df, variant.map(str::to_string), resolved);
+            let rx =
+                self.submit_resolved_deadline(df, variant.map(str::to_string), resolved, deadline);
             return (rx, ValidationReport::all_valid(nrows));
         };
         let (clean, report) = match screen_batch(spec, &df, Vec::new()) {
@@ -473,8 +650,27 @@ impl Server {
             let _ = resp_tx.send(Ok(Vec::new()));
             return (resp_rx, report);
         }
-        let rx = self.submit_resolved(clean, variant.map(str::to_string), resolved);
+        let rx =
+            self.submit_resolved_deadline(clean, variant.map(str::to_string), resolved, deadline);
         (rx, report)
+    }
+
+    /// Panics caught at the batch-execution boundary (plus drain-loop
+    /// unwinds the worker supervision wrapper survived).
+    pub fn worker_panics(&self) -> u64 {
+        self.stats.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// Requests answered with [`KamaeError::DeadlineExceeded`] because
+    /// they aged out in the queue.
+    pub fn deadline_expired(&self) -> u64 {
+        self.stats.deadline_expired.load(Ordering::Relaxed)
+    }
+
+    /// Rows isolated by bisection as deterministic backend-crashers and
+    /// routed to the pool's dead-letter sink with a `poison` verdict.
+    pub fn poison_rows(&self) -> u64 {
+        self.stats.poison_rows.load(Ordering::Relaxed)
     }
 
     /// A receiver already primed with `err` — submit-time rejections
@@ -549,24 +745,45 @@ impl Server {
     /// are still served before the workers exit (the queue drains
     /// before disconnecting).
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Some(r) = self.reaper.take() {
+            let _ = r.join();
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
-fn worker_loop(config: BatchConfig, queue: Arc<JobQueue>, metrics: Arc<WorkerMetrics>) {
+fn worker_loop(
+    config: &BatchConfig,
+    queue: &JobQueue,
+    metrics: &WorkerMetrics,
+    stats: &PoolStats,
+    sink: Option<&dyn DeadLetterSink>,
+) {
     while let Some(jobs) = queue.pop_batch(config.max_batch_rows, config.max_wait) {
+        // expired jobs never occupy a batch: answer them with the typed
+        // deadline error before anything executes
+        let now = Instant::now();
+        let (jobs, expired): (Vec<Job>, Vec<Job>) =
+            jobs.into_iter().partition(|j| !j.expired(now));
+        for job in expired {
+            job.answer_expired(now, stats);
+        }
+        if jobs.is_empty() {
+            continue;
+        }
         {
             // this worker is the map's only hot-path writer; the lock
             // is for report-time readers and therefore uncontended here
@@ -594,31 +811,239 @@ fn worker_loop(config: BatchConfig, queue: Arc<JobQueue>, metrics: Arc<WorkerMet
         for (version, jobs) in sub_batches {
             let routed = config.route_variants && jobs.iter().any(|j| j.variant.is_some());
             let t0 = Instant::now();
-            let result = if routed {
-                run_batch_routed(version.backend(), &jobs)
-            } else {
-                run_batch(version.backend(), &jobs)
-            };
-            metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             metrics.batches.fetch_add(1, Ordering::Relaxed);
             metrics.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
             version.record_served(jobs.len() as u64);
 
-            match result {
+            match run_protected(&version, &jobs, routed, stats) {
                 Ok(per_job) => {
                     for (job, tensors) in jobs.into_iter().zip(per_job) {
                         let _ = job.resp.send(Ok(tensors));
                     }
                 }
-                Err(e) => {
-                    let msg = e.to_string();
-                    for job in jobs {
-                        let _ = job.resp.send(Err(KamaeError::Serving(msg.clone())));
-                    }
-                }
+                // the clean path failed (error or caught panic):
+                // re-execute by bisection so one bad row cannot take
+                // down the whole merged batch
+                Err(_) => isolate_jobs(&version, jobs, routed, stats, sink),
             }
+            metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
     }
+}
+
+/// The deadline reaper: while workers can be stuck inside a slow batch,
+/// this loop sweeps the queue every millisecond and answers expired
+/// jobs immediately — an aged-out request gets its typed 504 in
+/// milliseconds, not after the pool frees up. Exits once the queue is
+/// closed and drained.
+fn reaper_loop(queue: &JobQueue, stats: &PoolStats) {
+    loop {
+        std::thread::sleep(Duration::from_millis(1));
+        let now = Instant::now();
+        let (expired, done) = queue.take_expired(now);
+        for job in expired {
+            job.answer_expired(now, stats);
+        }
+        if done {
+            break;
+        }
+    }
+}
+
+/// What a protected batch execution can fail with: a backend error or a
+/// panic caught at the isolation boundary.
+enum Fault {
+    Error(KamaeError),
+    Panic(String),
+}
+
+impl Fault {
+    fn message(&self) -> String {
+        match self {
+            Fault::Error(e) => e.to_string(),
+            Fault::Panic(m) => format!("backend panicked: {m}"),
+        }
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Execute one sub-batch behind the panic-isolation boundary. Backends
+/// are `Sync` and immutable once deployed, so observing one mid-panic
+/// cannot corrupt it — `AssertUnwindSafe` is sound here. Every caught
+/// panic bumps the pool's `worker_panics` counter.
+fn run_protected(
+    version: &TenantVersion,
+    jobs: &[Job],
+    routed: bool,
+    stats: &PoolStats,
+) -> std::result::Result<Vec<Vec<Tensor>>, Fault> {
+    let backend = version.backend();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if routed {
+            run_batch_routed(backend, jobs)
+        } else {
+            run_batch(backend, jobs)
+        }
+    }));
+    match result {
+        Ok(Ok(per_job)) => Ok(per_job),
+        Ok(Err(e)) => Err(Fault::Error(e)),
+        Err(payload) => {
+            stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+            Err(Fault::Panic(panic_message(payload)))
+        }
+    }
+}
+
+/// Run one frame (a slice of a single job) behind the same boundary.
+fn probe_frame(
+    version: &TenantVersion,
+    df: &DataFrame,
+    variant: &Option<String>,
+    routed: bool,
+    stats: &PoolStats,
+) -> std::result::Result<Vec<Tensor>, Fault> {
+    let backend = version.backend();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if routed {
+            let groups = vec![VariantGroup { variant: variant.clone(), rows: 0..df.num_rows() }];
+            backend.process_routed(df, &groups).map(|mut v| v.remove(0))
+        } else {
+            backend.process(df)
+        }
+    }));
+    match result {
+        Ok(Ok(tensors)) => Ok(tensors),
+        Ok(Err(e)) => Err(Fault::Error(e)),
+        Err(payload) => {
+            stats.worker_panics.fetch_add(1, Ordering::Relaxed);
+            Err(Fault::Panic(panic_message(payload)))
+        }
+    }
+}
+
+/// Bisect a failed sub-batch at JOB granularity: healthy halves are
+/// served bit-identical to a clean run (execution is row-independent,
+/// so any partition of the batch yields the same per-row outputs), and
+/// a job that fails alone descends to row-level isolation.
+fn isolate_jobs(
+    version: &TenantVersion,
+    mut jobs: Vec<Job>,
+    routed: bool,
+    stats: &PoolStats,
+    sink: Option<&dyn DeadLetterSink>,
+) {
+    if jobs.len() == 1 {
+        let job = jobs.pop().expect("non-empty");
+        isolate_rows(version, job, routed, stats, sink);
+        return;
+    }
+    let right = jobs.split_off(jobs.len() / 2);
+    for half in [jobs, right] {
+        match run_protected(version, &half, routed, stats) {
+            Ok(per_job) => {
+                for (job, tensors) in half.into_iter().zip(per_job) {
+                    let _ = job.resp.send(Ok(tensors));
+                }
+            }
+            Err(_) => isolate_jobs(version, half, routed, stats, sink),
+        }
+    }
+}
+
+/// Row-level isolation for a job that fails on its own: bisect the
+/// frame to find the poison row(s), forgiving transients (a single row
+/// is retried once before being condemned). Poison rows are
+/// dead-lettered with a structured `poison` verdict; the request is
+/// answered with [`KamaeError::PoisonRows`] naming them so the caller
+/// (the network layer does this automatically) can resubmit the
+/// surviving rows.
+fn isolate_rows(
+    version: &TenantVersion,
+    job: Job,
+    routed: bool,
+    stats: &PoolStats,
+    sink: Option<&dyn DeadLetterSink>,
+) {
+    let n = job.df.num_rows();
+    // the job alone may simply work: the original fault could have been
+    // transient, or caused by a co-batched neighbour
+    let first = match probe_frame(version, &job.df, &job.variant, routed, stats) {
+        Ok(tensors) => {
+            let _ = job.resp.send(Ok(tensors));
+            return;
+        }
+        Err(fault) => fault,
+    };
+    let mut poison = Vec::new();
+    bisect_rows(version, &job, 0, n, routed, stats, &mut poison);
+    if poison.is_empty() {
+        // every row passes individually: the fault was transient (or
+        // whole-batch-shaped). One more full attempt settles it.
+        match probe_frame(version, &job.df, &job.variant, routed, stats) {
+            Ok(tensors) => {
+                let _ = job.resp.send(Ok(tensors));
+            }
+            Err(fault) => {
+                let _ = job.resp.send(Err(KamaeError::Serving(fault.message())));
+            }
+        }
+        return;
+    }
+    stats.poison_rows.fetch_add(poison.len() as u64, Ordering::Relaxed);
+    if let Some(sink) = sink {
+        let errors = [crate::dataframe::RowError {
+            rule: "poison".into(),
+            column: String::new(),
+            message: format!(
+                "row crashed the backend (isolated by bisection): {}",
+                first.message()
+            ),
+        }];
+        for &i in &poison {
+            sink.record(version.tenant(), &crate::dataframe::row_to_json(&job.df, i), &errors);
+        }
+    }
+    let _ = job.resp.send(Err(KamaeError::PoisonRows(poison)));
+}
+
+/// Recursive row bisection over `job.df[start..end)`: append the rows
+/// that deterministically fail to `poison`. A single row gets one retry
+/// so a transient fault (an Nth-batch panic, an allocation hiccup)
+/// never condemns an innocent row.
+#[allow(clippy::too_many_arguments)]
+fn bisect_rows(
+    version: &TenantVersion,
+    job: &Job,
+    start: usize,
+    end: usize,
+    routed: bool,
+    stats: &PoolStats,
+    poison: &mut Vec<usize>,
+) {
+    let slice = job.df.slice(start, end - start);
+    if probe_frame(version, &slice, &job.variant, routed, stats).is_ok() {
+        return;
+    }
+    if end - start == 1 {
+        if probe_frame(version, &slice, &job.variant, routed, stats).is_ok() {
+            return; // transient: forgiven on retry
+        }
+        poison.push(start);
+        return;
+    }
+    let mid = start + (end - start) / 2;
+    bisect_rows(version, job, start, mid, routed, stats, poison);
+    bisect_rows(version, job, mid, end, routed, stats, poison);
 }
 
 /// Merge jobs, run the backend once, split outputs per job.
@@ -1230,9 +1655,31 @@ mod tests {
         server.shutdown();
         // the queue is closed: a late push is handed back
         let (tx, rx) = mpsc::channel();
-        let job = Job { df: req(&[1.0]), variant: None, resolved, resp: tx };
+        let job = Job {
+            df: req(&[1.0]),
+            variant: None,
+            resolved,
+            resp: tx,
+            enqueued: Instant::now(),
+            deadline: None,
+        };
         assert!(queue.push(job).is_err());
         drop(rx);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_typed_shutting_down() {
+        // satellite bugfix: a rejected-at-shutdown submit must surface
+        // the typed ShuttingDown error (the wire layer maps it to 503
+        // shutting_down), not a generic Serving string
+        let registry = SpecRegistry::single(DEFAULT_TENANT, Arc::new(Doubler::new())).unwrap();
+        let server = Server::start_registry(Arc::clone(&registry), BatchConfig::default()).unwrap();
+        let resolved = registry.resolve(DEFAULT_TENANT).unwrap();
+        server.queue.close();
+        let rx = server.submit_resolved(req(&[1.0]), None, resolved);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err, KamaeError::ShuttingDown), "{err}");
+        server.shutdown();
     }
 
     // ---- ingress validation gate ------------------------------------------
@@ -1273,7 +1720,8 @@ mod tests {
             Column::from_f64_opt(vec![Some(1.0), None, Some(3.0), None]),
         )])
         .unwrap();
-        let (rx, report) = server.submit_tenant_validated(df, DEFAULT_TENANT, None, Some(&sink));
+        let (rx, report) =
+            server.submit_tenant_validated(df, DEFAULT_TENANT, None, None, Some(&sink));
         assert_eq!(report.keep, vec![true, false, true, false]);
         let out = rx.recv().unwrap().unwrap();
         // compacted batch: exactly the valid rows, in original order
@@ -1293,7 +1741,8 @@ mod tests {
         // empty frame (SchemaDoubler asserts), the response is prompt
         let df = DataFrame::new(vec![("x".into(), Column::from_f64_opt(vec![None, None]))])
             .unwrap();
-        let (rx, report) = server.submit_tenant_validated(df, DEFAULT_TENANT, None, Some(&sink));
+        let (rx, report) =
+            server.submit_tenant_validated(df, DEFAULT_TENANT, None, None, Some(&sink));
         assert_eq!(report.num_valid(), 0);
         assert_eq!(report.num_quarantined(), 2);
         assert!(rx.recv().unwrap().unwrap().is_empty());
@@ -1303,6 +1752,202 @@ mod tests {
         assert_eq!(server.queue_depth(), 0);
         assert!(server.drain_rate_rps() >= 0.0);
         server.shutdown();
+    }
+
+    // ---- fault containment ------------------------------------------------
+
+    /// [`Doubler`] that panics whenever the batch contains the poison
+    /// value `666.0` — a deterministic, content-addressed crash, exactly
+    /// what bisection is built to isolate.
+    struct PanicDoubler;
+
+    impl Backend for PanicDoubler {
+        fn name(&self) -> &str {
+            "panic-doubler"
+        }
+
+        fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+            let v = df.column("x")?.as_f64()?;
+            assert!(!v.contains(&666.0), "poison row in batch");
+            Tensor::f32(v.iter().map(|&x| 2.0 * x as f32).collect(), vec![v.len()])
+                .map(|t| vec![t])
+        }
+    }
+
+    #[test]
+    fn panic_is_isolated_to_the_poison_row_and_capacity_survives() {
+        use super::super::validate::MemoryDeadLetter;
+        let sink = Arc::new(MemoryDeadLetter::new(16));
+        let registry = SpecRegistry::single(DEFAULT_TENANT, Arc::new(PanicDoubler)).unwrap();
+        let server = Server::start_registry_sink(
+            registry,
+            BatchConfig {
+                workers: 2,
+                max_batch_rows: 1024,
+                max_wait: Duration::from_millis(30),
+                ..BatchConfig::default()
+            },
+            Some(sink.clone() as Arc<dyn DeadLetterSink>),
+        )
+        .unwrap();
+
+        // a clean job and a poison job coalesce into one batch: the
+        // backend panics on the merged batch, bisection must serve the
+        // clean job bit-identical and condemn only the poison row
+        let rx_poison = server.submit(req(&[1.0, 666.0, 3.0]));
+        let rx_clean = server.submit(req(&[5.0]));
+        let err = rx_poison.recv().unwrap().unwrap_err();
+        match &err {
+            KamaeError::PoisonRows(rows) => assert_eq!(rows, &vec![1]),
+            other => panic!("expected PoisonRows, got {other}"),
+        }
+        assert_eq!(rx_clean.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[10.0]);
+
+        // the poison row was dead-lettered with a structured verdict
+        assert_eq!(server.poison_rows(), 1);
+        assert!(server.worker_panics() > 0, "no panic was caught");
+        assert_eq!(sink.len(), 1);
+        let entry = &sink.entries()[0];
+        let errs = entry.get("errors").and_then(crate::util::json::Json::as_array).unwrap();
+        assert_eq!(errs[0].get("rule").and_then(crate::util::json::Json::as_str), Some("poison"));
+        let row = entry.get("row").unwrap();
+        assert_eq!(row.get("x").and_then(crate::util::json::Json::as_f64), Some(666.0));
+
+        // capacity never decays: the pool still has every worker and
+        // keeps serving after the panic storm
+        assert_eq!(server.workers(), 2);
+        let rx = server.submit(req(&[7.0]));
+        assert_eq!(rx.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[14.0]);
+        server.shutdown();
+    }
+
+    /// Backend that panics on its first N calls, then behaves — the
+    /// transient-fault shape (an Nth-batch hiccup, not a bad row).
+    struct FlakyDoubler {
+        remaining_faults: std::sync::atomic::AtomicUsize,
+    }
+
+    impl Backend for FlakyDoubler {
+        fn name(&self) -> &str {
+            "flaky-doubler"
+        }
+
+        fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+            let left = &self.remaining_faults;
+            if left
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| n.checked_sub(1))
+                .is_ok()
+            {
+                panic!("transient fault");
+            }
+            let v = df.column("x")?.as_f64()?;
+            Tensor::f32(v.iter().map(|&x| 2.0 * x as f32).collect(), vec![v.len()])
+                .map(|t| vec![t])
+        }
+    }
+
+    #[test]
+    fn transient_panic_is_forgiven_and_the_request_still_serves() {
+        // one injected panic: the batch fails, the lone-job re-probe
+        // succeeds, the request is served Ok — no row is condemned
+        let backend =
+            Arc::new(FlakyDoubler { remaining_faults: std::sync::atomic::AtomicUsize::new(1) });
+        let server = Server::start_shared(backend, BatchConfig::default()).unwrap();
+        let out = server.submit(req(&[4.0])).recv().unwrap().unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[8.0]);
+        assert_eq!(server.worker_panics(), 1);
+        assert_eq!(server.poison_rows(), 0, "transient fault condemned a row");
+        server.shutdown();
+    }
+
+    /// Doubler that sleeps per batch — pins deadline behaviour while the
+    /// only worker is demonstrably busy.
+    struct SlowDoubler {
+        delay: Duration,
+    }
+
+    impl Backend for SlowDoubler {
+        fn name(&self) -> &str {
+            "slow-doubler"
+        }
+
+        fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+            std::thread::sleep(self.delay);
+            let v = df.column("x")?.as_f64()?;
+            Tensor::f32(v.iter().map(|&x| 2.0 * x as f32).collect(), vec![v.len()])
+                .map(|t| vec![t])
+        }
+    }
+
+    #[test]
+    fn queued_request_past_deadline_gets_typed_answer_from_the_reaper() {
+        // worker 1 is stuck in a 80ms batch; a queued request with a
+        // 5ms deadline must be answered ~promptly by the reaper (not
+        // after the batch), with the typed error and the counter bumped
+        let server = Server::start(
+            Box::new(SlowDoubler { delay: Duration::from_millis(80) }),
+            BatchConfig {
+                workers: 1,
+                max_wait: Duration::from_micros(50),
+                request_deadline: Some(Duration::from_millis(5)),
+                ..BatchConfig::default()
+            },
+        )
+        .unwrap();
+        let rx_busy = server.submit(req(&[1.0]));
+        std::thread::sleep(Duration::from_millis(10)); // worker is now mid-batch
+        let t0 = Instant::now();
+        let rx_late = server.submit(req(&[2.0]));
+        let err = rx_late.recv().unwrap().unwrap_err();
+        let answered_in = t0.elapsed();
+        assert!(matches!(err, KamaeError::DeadlineExceeded(_)), "{err}");
+        assert!(err.to_string().contains("5ms"), "{err}");
+        assert!(
+            answered_in < Duration::from_millis(60),
+            "deadline answer waited for the busy worker ({answered_in:?})"
+        );
+        assert_eq!(server.deadline_expired(), 1);
+        // the job that made it into a batch is unaffected
+        assert_eq!(rx_busy.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[2.0]);
+        let (_, requests) = server.counts();
+        assert_eq!(requests, 1, "an expired job was counted as served");
+        server.shutdown();
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_the_config_default() {
+        // config has NO default deadline; the per-submit override alone
+        // must expire the queued request
+        let registry =
+            SpecRegistry::single(DEFAULT_TENANT, Arc::new(SlowDoubler { delay: Duration::from_millis(60) }))
+                .unwrap();
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            BatchConfig { workers: 1, max_wait: Duration::from_micros(50), ..BatchConfig::default() },
+        )
+        .unwrap();
+        let resolved = registry.resolve(DEFAULT_TENANT).unwrap();
+        let rx_busy = server.submit(req(&[1.0]));
+        std::thread::sleep(Duration::from_millis(10));
+        let rx_late = server.submit_resolved_deadline(
+            req(&[2.0]),
+            None,
+            resolved,
+            Some(Duration::from_millis(3)),
+        );
+        let err = rx_late.recv().unwrap().unwrap_err();
+        assert!(matches!(err, KamaeError::DeadlineExceeded(_)), "{err}");
+        assert_eq!(server.deadline_expired(), 1);
+        assert_eq!(rx_busy.recv().unwrap().unwrap()[0].as_f32().unwrap(), &[2.0]);
+        server.shutdown();
+
+        // and a zero config deadline is a refused deployment mistake
+        let err = Server::start(
+            Box::new(Doubler::new()),
+            BatchConfig { request_deadline: Some(Duration::ZERO), ..BatchConfig::default() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("request_deadline"), "{err}");
     }
 
     // ---- registry addressing ----------------------------------------------

@@ -1,0 +1,293 @@
+//! Deterministic fault injection for the fault-containment gates.
+//!
+//! The serving stack claims three containment properties: a panicking
+//! backend call never takes a worker (or an innocent neighbour's
+//! request) down with it, a poison row is isolated by bisection and
+//! dead-lettered while its batch-mates are served bit-identically, and
+//! a queued request past its deadline is answered with a typed 504
+//! instead of hanging. Claims like that rot unless something exercises
+//! them on every run — this module is that something.
+//!
+//! [`ChaosBackend`] wraps any real [`Backend`] and misbehaves on a
+//! [`FaultPlan`]: panic on every Nth call, panic whenever a batch
+//! contains a row matching a poison predicate, sleep before every Nth
+//! call. Every fault is **counter- or content-triggered, never
+//! random** — the same plan over the same traffic misbehaves at exactly
+//! the same points, so `benches/fault_tolerance.rs` can pin survivor
+//! outputs bit-for-bit against an un-faulted oracle and CI failures
+//! reproduce locally. [`FailingDeadLetter`] does the same for the sink
+//! IO-failure path: it drops every Nth record, counting the drops, so
+//! the "a broken dead-letter store never takes serving down" property
+//! is testable without filling a disk.
+//!
+//! The two fault kinds interact with the batcher's transient
+//! forgiveness deliberately: a `panic_every` fault is keyed to the
+//! *call counter*, so the bisection re-probe (a fresh call) succeeds
+//! and the request is forgiven; a poison fault is keyed to *row
+//! content*, so it panics on every probe and is condemned. That is
+//! exactly the transient-vs-deterministic distinction the isolation
+//! layer is designed around.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::dataframe::DataFrame;
+use crate::error::Result;
+use crate::export::GraphSpec;
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+
+use super::backend::{Backend, VariantGroup};
+use super::validate::{DeadLetterSink, RowError};
+
+/// Content-keyed poison predicate: `true` marks a row whose presence
+/// panics the batch (on every probe — poison is deterministic, not
+/// transient).
+pub type PoisonPredicate = Arc<dyn Fn(&DataFrame, usize) -> bool + Send + Sync>;
+
+/// A deterministic misbehaviour schedule for [`ChaosBackend`].
+///
+/// The default plan injects nothing; switch on individual faults per
+/// scenario. All counters are 1-based over backend *calls* (batch
+/// executions and bisection probes both count), so fault positions are
+/// a pure function of the traffic.
+#[derive(Clone, Default)]
+pub struct FaultPlan {
+    /// Panic on every Nth backend call (`0` = never). Transient by
+    /// construction: the bisection re-probe is a later call and
+    /// (usually) passes.
+    pub panic_every: u64,
+    /// Panic whenever the batch contains a matching row (`None` =
+    /// never). Deterministic: every probe of the row fails, so
+    /// bisection condemns it.
+    pub poison: Option<PoisonPredicate>,
+    /// Sleep this long before every Nth call (`0` = never) — stalls a
+    /// worker inside a batch so deadline expiry and reaper behaviour
+    /// become reachable under test.
+    pub slow_every: Option<(u64, Duration)>,
+}
+
+impl FaultPlan {
+    /// A plan that poisons rows matched by `pred` and injects nothing
+    /// else.
+    pub fn poison_rows<F>(pred: F) -> FaultPlan
+    where
+        F: Fn(&DataFrame, usize) -> bool + Send + Sync + 'static,
+    {
+        FaultPlan { poison: Some(Arc::new(pred)), ..FaultPlan::default() }
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("panic_every", &self.panic_every)
+            .field("poison", &self.poison.as_ref().map(|_| "<predicate>"))
+            .field("slow_every", &self.slow_every)
+            .finish()
+    }
+}
+
+/// A [`Backend`] wrapper that misbehaves on a [`FaultPlan`] before
+/// delegating to the real backend. Successful calls are transparent —
+/// same spec, same schema, same variants, same outputs — so survivor
+/// responses stay bit-identical to the un-faulted oracle.
+pub struct ChaosBackend {
+    inner: Arc<dyn Backend>,
+    plan: FaultPlan,
+    calls: AtomicU64,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Arc<dyn Backend>, plan: FaultPlan) -> ChaosBackend {
+        ChaosBackend { inner, plan, calls: AtomicU64::new(0) }
+    }
+
+    /// Backend calls observed so far (batches + bisection probes).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Run the plan against this call: maybe sleep, maybe panic. The
+    /// order is slow → nth-call panic → poison scan, so a slow fault
+    /// still stalls the worker even on a call that will then panic.
+    fn misbehave(&self, df: &DataFrame) {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some((every, delay)) = self.plan.slow_every {
+            if every > 0 && call % every == 0 {
+                std::thread::sleep(delay);
+            }
+        }
+        if self.plan.panic_every > 0 && call % self.plan.panic_every == 0 {
+            panic!("chaos: injected panic on backend call {call}");
+        }
+        if let Some(pred) = &self.plan.poison {
+            for i in 0..df.num_rows() {
+                if pred(df, i) {
+                    panic!(
+                        "chaos: poison row {i} in a {}-row batch (call {call})",
+                        df.num_rows()
+                    );
+                }
+            }
+        }
+    }
+}
+
+impl Backend for ChaosBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
+    }
+
+    fn spec(&self) -> Option<&GraphSpec> {
+        self.inner.spec()
+    }
+
+    fn request_schema(&self) -> Option<crate::dataframe::Schema> {
+        self.inner.request_schema()
+    }
+
+    fn variants(&self) -> &[String] {
+        self.inner.variants()
+    }
+
+    fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+        self.misbehave(df);
+        self.inner.process(df)
+    }
+
+    fn process_routed(&self, df: &DataFrame, groups: &[VariantGroup]) -> Result<Vec<Vec<Tensor>>> {
+        self.misbehave(df);
+        self.inner.process_routed(df, groups)
+    }
+}
+
+/// A [`DeadLetterSink`] wrapper that deterministically drops every Nth
+/// record (simulated IO failure), counting what it dropped. Serving
+/// must not notice: the containment contract is that sink failures cost
+/// a counter increment, never a request.
+pub struct FailingDeadLetter {
+    inner: Arc<dyn DeadLetterSink>,
+    /// Drop every Nth record (`0` = never fail, pure pass-through).
+    fail_every: u64,
+    calls: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl FailingDeadLetter {
+    pub fn new(inner: Arc<dyn DeadLetterSink>, fail_every: u64) -> FailingDeadLetter {
+        FailingDeadLetter { inner, fail_every, calls: AtomicU64::new(0), dropped: AtomicU64::new(0) }
+    }
+
+    /// Records this wrapper refused to pass through.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::SeqCst)
+    }
+}
+
+impl DeadLetterSink for FailingDeadLetter {
+    fn record(&self, tenant: &str, row: &Json, errors: &[RowError]) {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.fail_every > 0 && call % self.fail_every == 0 {
+            self.dropped.fetch_add(1, Ordering::SeqCst);
+            return;
+        }
+        self.inner.record(tenant, row, errors);
+    }
+
+    fn errors(&self) -> u64 {
+        self.dropped() + self.inner.errors()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::validate::MemoryDeadLetter;
+    use super::*;
+    use crate::dataframe::Column;
+
+    /// Minimal deterministic backend: doubles the `x` column.
+    struct Doubler;
+
+    impl Backend for Doubler {
+        fn name(&self) -> &str {
+            "doubler"
+        }
+
+        fn process(&self, df: &DataFrame) -> Result<Vec<Tensor>> {
+            let v = df.column("x")?.as_f64()?;
+            Tensor::f32(v.iter().map(|&x| 2.0 * x as f32).collect(), vec![v.len()])
+                .map(|t| vec![t])
+        }
+    }
+
+    fn req(vals: &[f64]) -> DataFrame {
+        DataFrame::new(vec![("x".into(), Column::from_f64(vals.to_vec()))]).unwrap()
+    }
+
+    fn poison_666() -> FaultPlan {
+        FaultPlan::poison_rows(|df, i| {
+            df.column("x")
+                .ok()
+                .and_then(|c| c.as_f64().ok())
+                .is_some_and(|v| v[i] == 666.0)
+        })
+    }
+
+    #[test]
+    fn chaos_is_transparent_without_faults() {
+        let inner: Arc<dyn Backend> = Arc::new(Doubler);
+        let chaos = ChaosBackend::new(Arc::clone(&inner), FaultPlan::default());
+        let df = req(&[1.0, 2.0, 3.0]);
+        let want = inner.process(&df).unwrap();
+        let got = chaos.process(&df).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(chaos.calls(), 1);
+        assert_eq!(chaos.name(), inner.name());
+        assert_eq!(chaos.kind(), inner.kind());
+        assert!(chaos.spec().is_none());
+    }
+
+    #[test]
+    fn chaos_faults_fire_deterministically() {
+        let chaos = ChaosBackend::new(
+            Arc::new(Doubler),
+            FaultPlan { panic_every: 2, ..FaultPlan::default() },
+        );
+        let df = req(&[1.0]);
+        // calls 1, 3 pass; calls 2, 4 panic — same schedule every run
+        for call in 1..=4u64 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                chaos.process(&df).unwrap()
+            }));
+            assert_eq!(r.is_err(), call % 2 == 0, "call {call}");
+        }
+        let poison = ChaosBackend::new(Arc::new(Doubler), poison_666());
+        for _ in 0..2 {
+            assert!(poison.process(&req(&[1.0, 2.0])).is_ok());
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                poison.process(&req(&[1.0, 666.0])).unwrap()
+            }));
+            assert!(r.is_err(), "poison is content-keyed: fails on every probe");
+        }
+    }
+
+    #[test]
+    fn failing_sink_drops_every_nth_and_counts() {
+        let ring = Arc::new(MemoryDeadLetter::new(16));
+        let sink = FailingDeadLetter::new(Arc::clone(&ring) as Arc<dyn DeadLetterSink>, 3);
+        let row = Json::object();
+        for _ in 0..6 {
+            sink.record("t", &row, &[]);
+        }
+        // calls 3 and 6 dropped, the rest passed through
+        assert_eq!(sink.dropped(), 2);
+        assert_eq!(sink.errors(), 2);
+        assert_eq!(ring.len(), 4);
+    }
+}

@@ -24,6 +24,48 @@ pub struct LatencyRecorder {
     violations: Mutex<BTreeMap<String, u64>>,
     /// Rows the ingress gate quarantined instead of serving.
     quarantined: AtomicU64,
+    /// Per-tenant rolling quarantine rate over the last
+    /// [`RATE_WINDOW_REQUESTS`] validated requests — the signal behind
+    /// `--quarantine-alert` (a lifetime ratio would never recover after
+    /// one bad burst; a rolling one decays as clean traffic flows).
+    tenant_rates: Mutex<BTreeMap<String, RollingRate>>,
+}
+
+/// Validated requests per tenant the rolling quarantine rate looks back
+/// over. Big enough to smooth single-request spikes, small enough that
+/// an incident (or its recovery) shows within seconds at serving rates.
+const RATE_WINDOW_REQUESTS: usize = 256;
+
+/// Windowed rows/quarantined sums over the last N validated requests.
+struct RollingRate {
+    window: std::collections::VecDeque<(u64, u64)>,
+    rows: u64,
+    quarantined: u64,
+}
+
+impl RollingRate {
+    fn new() -> RollingRate {
+        RollingRate { window: std::collections::VecDeque::new(), rows: 0, quarantined: 0 }
+    }
+
+    fn push(&mut self, rows: u64, quarantined: u64) {
+        self.window.push_back((rows, quarantined));
+        self.rows += rows;
+        self.quarantined += quarantined;
+        while self.window.len() > RATE_WINDOW_REQUESTS {
+            let (r, q) = self.window.pop_front().expect("len > cap >= 1");
+            self.rows -= r;
+            self.quarantined -= q;
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.quarantined as f64 / self.rows as f64
+        }
+    }
 }
 
 impl LatencyRecorder {
@@ -34,6 +76,7 @@ impl LatencyRecorder {
             tenant_ns: Mutex::new(BTreeMap::new()),
             violations: Mutex::new(BTreeMap::new()),
             quarantined: AtomicU64::new(0),
+            tenant_rates: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -78,6 +121,30 @@ impl LatencyRecorder {
                 *v.entry(rule.clone()).or_insert(0) += n;
             }
         }
+    }
+
+    /// Feed one VALIDATED request's row counts into the tenant's rolling
+    /// quarantine rate. Call for every screened request — including
+    /// fully-clean ones — so the rate decays as healthy traffic flows.
+    pub fn record_tenant_rows(&self, tenant: &str, rows: u64, quarantined: u64) {
+        self.tenant_rates
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_insert_with(RollingRate::new)
+            .push(rows, quarantined);
+    }
+
+    /// Each tenant's rolling quarantine rate (quarantined / screened
+    /// rows over the last [`RATE_WINDOW_REQUESTS`] validated requests).
+    /// Tenants that never passed through the gate are absent.
+    pub fn quarantine_rates(&self) -> BTreeMap<String, f64> {
+        self.tenant_rates
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(t, r)| (t.clone(), r.rate()))
+            .collect()
     }
 
     /// Produce the final report.
@@ -131,6 +198,7 @@ impl LatencyRecorder {
                     requests: ts.len(),
                     shed: 0,
                     active_version: 0,
+                    quarantine_rate: 0.0,
                     mean_ns: ts.iter().sum::<f64>() / ts.len().max(1) as f64,
                     p50_ns: tp(50.0),
                     p95_ns: tp(95.0),
@@ -165,6 +233,10 @@ impl LatencyRecorder {
             admission_limit: 0,
             violations: self.violations.lock().unwrap().clone(),
             quarantined_rows: self.quarantined.load(Ordering::Relaxed),
+            worker_panics: 0,
+            deadline_expired: 0,
+            poison_rows: 0,
+            dead_letter_errors: 0,
         }
     }
 
@@ -239,6 +311,10 @@ pub struct TenantStats {
     /// The tenant's active registry version at report time (gauge);
     /// 0 when the run was not registry-backed.
     pub active_version: u64,
+    /// Rolling quarantine rate over the tenant's recent validated
+    /// requests ([`LatencyRecorder::record_tenant_rows`]); 0.0 when the
+    /// gate is off or traffic has been clean.
+    pub quarantine_rate: f64,
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
@@ -255,6 +331,11 @@ impl TenantStats {
         }
         if self.active_version > 0 {
             j.set("active_version", self.active_version as i64);
+        }
+        // gated like shed: tenants outside the ingress gate keep their
+        // exact pre-validation record shape
+        if self.quarantine_rate > 0.0 {
+            j.set("quarantine_rate", self.quarantine_rate);
         }
         j.set("mean_ns", self.mean_ns);
         j.set("p50_ns", self.p50_ns);
@@ -307,6 +388,17 @@ pub struct ServeReport {
     /// Rows the ingress gate quarantined (dead-lettered) instead of
     /// serving. 0 when the gate is off or nothing was quarantined.
     pub quarantined_rows: u64,
+    /// Panics caught at the pool's batch-execution isolation boundary
+    /// (the worker survived each one). 0 on a healthy run.
+    pub worker_panics: u64,
+    /// Requests answered `deadline_exceeded` instead of executing.
+    pub deadline_expired: u64,
+    /// Rows bisection isolated as deterministic backend-crashers and
+    /// dead-lettered with a `poison` verdict.
+    pub poison_rows: u64,
+    /// Dead-letter sink write failures (rows the sink could not
+    /// persist; serving was unaffected).
+    pub dead_letter_errors: u64,
 }
 
 impl ServeReport {
@@ -379,6 +471,20 @@ impl ServeReport {
             }
             j.set("violations", v);
         }
+        // fault keys appear only on runs that actually faulted, so
+        // healthy trajectory records keep their exact pre-fault shape
+        if self.worker_panics > 0 {
+            j.set("worker_panics", self.worker_panics as i64);
+        }
+        if self.deadline_expired > 0 {
+            j.set("deadline_expired", self.deadline_expired as i64);
+        }
+        if self.poison_rows > 0 {
+            j.set("poison_rows", self.poison_rows as i64);
+        }
+        if self.dead_letter_errors > 0 {
+            j.set("dead_letter_errors", self.dead_letter_errors as i64);
+        }
         j
     }
 }
@@ -423,6 +529,21 @@ impl std::fmt::Display for ServeReport {
                 "\nquarantine      rows {}  ({})",
                 self.quarantined_rows,
                 rules.join("  ")
+            )?;
+        }
+        if self.worker_panics > 0
+            || self.deadline_expired > 0
+            || self.poison_rows > 0
+            || self.dead_letter_errors > 0
+        {
+            write!(
+                f,
+                "\nfaults          panics {}  deadline_expired {}  poison_rows {}  \
+                 dead_letter_errors {}",
+                self.worker_panics,
+                self.deadline_expired,
+                self.poison_rows,
+                self.dead_letter_errors
             )?;
         }
         for v in &self.variants {
@@ -685,6 +806,75 @@ mod tests {
         let text = rep.to_string();
         assert!(text.contains("quarantine      rows 5"), "{text}");
         assert!(text.contains("range 5"), "{text}");
+    }
+
+    #[test]
+    fn fault_keys_gate_on_non_zero() {
+        let r = LatencyRecorder::new();
+        r.record(Duration::from_millis(2));
+        let mut rep = r.report("ltr/net", 1, Duration::from_secs(1), Duration::from_millis(2));
+        // healthy runs keep the exact pre-fault record shape
+        let j = rep.to_json();
+        for key in ["worker_panics", "deadline_expired", "poison_rows", "dead_letter_errors"] {
+            assert!(j.get(key).is_none(), "{key} leaked into a healthy record");
+        }
+        assert!(!rep.to_string().contains("faults"));
+        // the owning layers stamp the counters; the keys land and
+        // round-trip once non-zero
+        rep.worker_panics = 3;
+        rep.deadline_expired = 7;
+        rep.poison_rows = 2;
+        rep.dead_letter_errors = 1;
+        let j = rep.to_json();
+        assert_eq!(j.req_i64("worker_panics").unwrap(), 3);
+        assert_eq!(j.req_i64("deadline_expired").unwrap(), 7);
+        assert_eq!(j.req_i64("poison_rows").unwrap(), 2);
+        assert_eq!(j.req_i64("dead_letter_errors").unwrap(), 1);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        let text = rep.to_string();
+        assert!(text.contains("faults          panics 3"), "{text}");
+        assert!(text.contains("poison_rows 2"), "{text}");
+    }
+
+    #[test]
+    fn rolling_quarantine_rate_decays_with_clean_traffic() {
+        let r = LatencyRecorder::new();
+        // no validated traffic yet: no rate entries at all
+        assert!(r.quarantine_rates().is_empty());
+        // a dirty burst: 8 rows, 4 quarantined → rate 0.5
+        r.record_tenant_rows("shop", 8, 4);
+        assert_eq!(r.quarantine_rates().get("shop"), Some(&0.5));
+        // another tenant's clean traffic does not bleed in
+        r.record_tenant_rows("ads", 10, 0);
+        let rates = r.quarantine_rates();
+        assert_eq!(rates.get("shop"), Some(&0.5));
+        assert_eq!(rates.get("ads"), Some(&0.0));
+        // clean traffic decays the rate within the window...
+        for _ in 0..8 {
+            r.record_tenant_rows("shop", 8, 0);
+        }
+        let rate = r.quarantine_rates()["shop"];
+        assert!(rate < 0.1, "rate did not decay: {rate}");
+        // ...and the dirty request ages OUT entirely past the window
+        for _ in 0..super::RATE_WINDOW_REQUESTS {
+            r.record_tenant_rows("shop", 1, 0);
+        }
+        assert_eq!(r.quarantine_rates()["shop"], 0.0);
+        // the tenant split's quarantine_rate key gates on > 0
+        let mut stats = TenantStats {
+            tenant: "shop".into(),
+            requests: 1,
+            shed: 0,
+            active_version: 0,
+            quarantine_rate: 0.0,
+            mean_ns: 1.0,
+            p50_ns: 1.0,
+            p95_ns: 1.0,
+            p99_ns: 1.0,
+        };
+        assert!(stats.to_json().get("quarantine_rate").is_none());
+        stats.quarantine_rate = 0.25;
+        assert_eq!(stats.to_json().req_f64("quarantine_rate").unwrap(), 0.25);
     }
 
     #[test]

@@ -197,9 +197,57 @@
 //! unchanged. `benches/hot_swap.rs` gates throughput under a
 //! continuous swap storm at ≥ 90% of the no-swap baseline with zero
 //! errors and bounded swap latency.
+//!
+//! ## Fault containment
+//!
+//! The pool treats the backend as untrusted code: panics, poison rows,
+//! and stuck batches are contained per request instead of per process.
+//! Three layers, innermost first:
+//!
+//! ```text
+//!   worker thread (supervised: outer loop re-enters worker_loop after
+//!   │              a panic escapes a batch — pool capacity never decays)
+//!   ▼
+//!   per-batch catch_unwind ── batch Ok ──▶ responses route back
+//!   │ batch Err / panic
+//!   ▼
+//!   bisection (isolate_jobs → isolate_rows → bisect_rows):
+//!     · lone re-probe first — faults caused by a NEIGHBOUR job, and
+//!       transient faults (panic_every-style), are forgiven
+//!     · single-row failures retried once more before condemnation
+//!     · condemned rows → DeadLetterSink with a structured "poison"
+//!       verdict; the job is answered KamaeError::PoisonRows(indices)
+//!     · survivors are re-executed and served BIT-IDENTICAL to an
+//!       un-faulted run (benches/fault_tolerance.rs pins this)
+//!   ▼
+//!   net layer folds poison rows into the response's per-row verdicts
+//!   (rule "poison") and resubmits the survivors — the client sees
+//!   per-row blame, not a whole-request 500
+//! ```
+//!
+//! **Deadlines** bound queue time: [`BatchConfig::request_deadline`]
+//! (or a per-request `deadline_ms` on the wire) stamps each job at
+//! submit; workers drop expired jobs at pop, and a dedicated reaper
+//! thread sweeps the queue every millisecond so a request stuck behind
+//! a slow batch is answered a typed `504 deadline_exceeded` promptly —
+//! expired requests never occupy a batch and never hang. The counters
+//! ([`ServeReport::worker_panics`], [`ServeReport::deadline_expired`],
+//! [`ServeReport::poison_rows`], [`ServeReport::dead_letter_errors`])
+//! surface in `/metrics`; a per-tenant rolling quarantine rate
+//! ([`TenantStats::quarantine_rate`]) drives the `/healthz` "degraded"
+//! alert (`--quarantine-alert`).
+//!
+//! The `fault` module is the deterministic harness for all of this:
+//! [`ChaosBackend`] misbehaves on a [`FaultPlan`] (panic every Nth
+//! call, content-keyed poison rows, slow batches) and
+//! [`FailingDeadLetter`] simulates sink IO failure, so
+//! `benches/fault_tolerance.rs` can gate survivor bit-identity,
+//! counter conservation, ≥ 90% throughput retention under a fault
+//! storm, and full pool capacity after every panic.
 
 mod backend;
 mod batcher;
+mod fault;
 mod metrics;
 mod net;
 mod registry;
@@ -207,6 +255,7 @@ mod validate;
 
 pub use backend::{Backend, CompiledBackend, InterpretedBackend, MleapBackend, VariantGroup};
 pub use batcher::{BatchConfig, Server};
+pub use fault::{ChaosBackend, FailingDeadLetter, FaultPlan, PoisonPredicate};
 pub use metrics::{LatencyRecorder, ServeReport, TenantStats, VariantStats};
 pub use net::{
     tensor_from_json, tensor_to_json, NetClient, NetConfig, NetResponse, NetServer, WireError,

@@ -86,7 +86,7 @@ use super::backend::Backend;
 use super::batcher::{BatchConfig, Server};
 use super::metrics::{LatencyRecorder, TenantStats};
 use super::registry::{SpecRegistry, TenantVersion, DEFAULT_TENANT};
-use super::validate::{DeadLetterSink, JsonlDeadLetter};
+use super::validate::{DeadLetterSink, JsonlDeadLetter, RowError, ValidationReport};
 
 /// Listener configuration.
 #[derive(Debug, Clone)]
@@ -116,8 +116,15 @@ pub struct NetConfig {
     /// bad cell still fails the whole request with a 400.
     pub validate: bool,
     /// Append quarantined rows (original wire JSON + their errors) to
-    /// this JSONL dead-letter file. Requires [`Self::validate`].
+    /// this JSONL dead-letter file. Requires [`Self::validate`]. The
+    /// same sink receives poison rows isolated by the pool's bisection
+    /// layer, so one file holds every row the service refused to serve.
     pub dead_letter: Option<PathBuf>,
+    /// Flip `/healthz` to `"degraded"` (still 200 — the service IS
+    /// serving, just refusing many rows) when any tenant's rolling
+    /// quarantine rate reaches this fraction. Requires
+    /// [`Self::validate`]; `None` never alerts.
+    pub quarantine_alert: Option<f64>,
 }
 
 impl Default for NetConfig {
@@ -131,6 +138,7 @@ impl Default for NetConfig {
             max_clients: 64,
             validate: false,
             dead_letter: None,
+            quarantine_alert: None,
         }
     }
 }
@@ -163,6 +171,20 @@ impl NetConfig {
                  ever be quarantined into it"
                     .into(),
             ));
+        }
+        if let Some(rate) = self.quarantine_alert {
+            if !(rate > 0.0 && rate <= 1.0) {
+                return Err(KamaeError::Serving(format!(
+                    "NetConfig::quarantine_alert must be a fraction in (0, 1], got {rate}"
+                )));
+            }
+            if !self.validate {
+                return Err(KamaeError::Serving(
+                    "NetConfig::quarantine_alert is set but validate is off — the \
+                     quarantine rate would never move"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -197,6 +219,10 @@ pub enum WireError {
     Overloaded { retry_after_secs: u64 },
     /// The listener is draining (or the pool is gone).
     ShuttingDown,
+    /// The request aged past its deadline (`deadline_ms` on the body,
+    /// or [`BatchConfig::request_deadline`]) while queued and was
+    /// answered without ever occupying a batch.
+    DeadlineExceeded(String),
     /// Backend-side failure.
     Internal(String),
 }
@@ -214,6 +240,7 @@ impl WireError {
             WireError::Overloaded { .. } => 429,
             WireError::Internal(_) => 500,
             WireError::ShuttingDown => 503,
+            WireError::DeadlineExceeded(_) => 504,
         }
     }
 
@@ -229,6 +256,7 @@ impl WireError {
             WireError::OversizedBody { .. } => "oversized_body",
             WireError::Overloaded { .. } => "overloaded",
             WireError::ShuttingDown => "shutting_down",
+            WireError::DeadlineExceeded(_) => "deadline_exceeded",
             WireError::Internal(_) => "internal",
         }
     }
@@ -241,6 +269,7 @@ impl WireError {
             | WireError::UnknownVariant(m)
             | WireError::UnknownTenant(m)
             | WireError::VersionConflict(m)
+            | WireError::DeadlineExceeded(m)
             | WireError::Internal(m) => m.clone(),
             WireError::OversizedBatch { rows, max_rows } => {
                 format!("request has {rows} rows, max_request_rows is {max_rows}")
@@ -371,7 +400,9 @@ struct NetState {
     /// exist, so they cannot live in the recorder).
     tenant_shed: Mutex<BTreeMap<String, u64>>,
     /// Dead-letter sink for quarantined rows ([`NetConfig::dead_letter`]).
-    dead_letter: Option<JsonlDeadLetter>,
+    /// Shared (`Arc`) with the worker pool, which records poison rows
+    /// isolated by bisection into the same file.
+    dead_letter: Option<Arc<JsonlDeadLetter>>,
 }
 
 impl NetState {
@@ -446,15 +477,21 @@ impl NetServer {
         config: NetConfig,
     ) -> Result<NetServer> {
         config.validate()?;
-        let server = Server::start_registry(Arc::clone(&registry), config.batch.clone())?;
+        // one sink serves both layers: ingress quarantine (recorded
+        // here) and pool-side poison rows (recorded by bisection)
+        let dead_letter = match &config.dead_letter {
+            Some(path) => Some(Arc::new(JsonlDeadLetter::create(path)?)),
+            None => None,
+        };
+        let pool_sink = dead_letter
+            .clone()
+            .map(|s| s as Arc<dyn DeadLetterSink>);
+        let server =
+            Server::start_registry_sink(Arc::clone(&registry), config.batch.clone(), pool_sink)?;
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let max_clients = config.max_clients;
-        let dead_letter = match &config.dead_letter {
-            Some(path) => Some(JsonlDeadLetter::create(path)?),
-            None => None,
-        };
         let state = Arc::new(NetState {
             registry,
             server: RwLock::new(Some(server)),
@@ -757,6 +794,26 @@ fn handle_healthz(state: &NetState) -> Handled {
         .map(|s| s.workers())
         .unwrap_or(0);
     j.set("status", "ok");
+    // quarantine-rate alert: past the threshold the service stays UP
+    // (still 200 — it IS serving) but reports degraded, naming the
+    // worst-offending tenant so the pager points somewhere useful
+    if let Some(threshold) = state.config.quarantine_alert {
+        let offender = state
+            .recorder
+            .quarantine_rates()
+            .into_iter()
+            .filter(|(_, rate)| *rate >= threshold)
+            .max_by(|a, b| a.1.total_cmp(&b.1));
+        if let Some((tenant, rate)) = offender {
+            j.set("status", "degraded");
+            let mut alert = Json::object();
+            alert.set("reason", "quarantine_rate");
+            alert.set("tenant", tenant);
+            alert.set("quarantine_rate", rate);
+            alert.set("threshold", threshold);
+            j.set("alert", alert);
+        }
+    }
     if let Some(primary) = state.primary_version() {
         j.set("backend", primary.backend().name());
         j.set("kind", primary.backend().kind());
@@ -803,13 +860,27 @@ fn handle_metrics(state: &NetState) -> Handled {
     );
     report.shed_requests = state.shed.load(Ordering::Relaxed) as usize;
     report.admission_limit = state.config.admission;
+    // fault-containment counters live on the pool and the shared sink
+    {
+        let server = state.server.read().unwrap();
+        if let Some(s) = server.as_ref() {
+            report.worker_panics = s.worker_panics();
+            report.deadline_expired = s.deadline_expired();
+            report.poison_rows = s.poison_rows();
+        }
+    }
+    if let Some(sink) = &state.dead_letter {
+        report.dead_letter_errors = sink.errors();
+    }
     // stamp the per-tenant split with what the recorder cannot know:
     // shed counts (no latency sample exists for a shed) and the
     // currently-active version from the registry
     {
+        let quarantine_rates = state.recorder.quarantine_rates();
         let tenant_shed = state.tenant_shed.lock().unwrap();
         for t in report.tenants.iter_mut() {
             t.shed = tenant_shed.get(&t.tenant).copied().unwrap_or(0) as usize;
+            t.quarantine_rate = quarantine_rates.get(&t.tenant).copied().unwrap_or(0.0);
             if let Ok(v) = state.registry.resolve(&t.tenant) {
                 t.active_version = v.version();
             }
@@ -833,6 +904,7 @@ fn handle_metrics(state: &NetState) -> Handled {
                 p50_ns: 0.0,
                 p95_ns: 0.0,
                 p99_ns: 0.0,
+                quarantine_rate: 0.0,
             });
         }
         report.tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
@@ -947,6 +1019,18 @@ fn handle_infer(
         Some(Json::Str(v)) => Some(v.clone()),
         Some(_) => return Err(WireError::BadRequest("'variant' must be a string".into())),
     };
+    // per-request deadline; overrides BatchConfig::request_deadline
+    let deadline = match parsed.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_i64()
+                .filter(|n| *n >= 1)
+                .map(|n| Duration::from_millis(n as u64))
+                .ok_or_else(|| {
+                    WireError::BadRequest("'deadline_ms' must be a positive integer".into())
+                })?,
+        ),
+    };
     let rows = parsed
         .get("rows")
         .and_then(Json::as_array)
@@ -980,13 +1064,19 @@ fn handle_infer(
     // whole request. The spec is part of the TenantVersion snapshot,
     // so a deploy swapping the rules mid-request cannot mix rule sets.
     let vspec = if state.config.validate { resolved.validation() } else { None };
-    let (df, report) = match vspec {
+    let (df, mut report) = match vspec {
         Some(vspec) => {
             let (df, structural) = dataframe_from_json_rows_lenient(rows, schema)
                 .map_err(|e| WireError::BadRequest(e.to_string()))?;
             let report = vspec
                 .evaluate(&df, structural)
                 .map_err(|e| WireError::Internal(e.to_string()))?;
+            // rolling per-tenant quarantine rate: record EVERY screened
+            // request (clean ones too) so the window decays again once
+            // healthy traffic returns
+            state
+                .recorder
+                .record_tenant_rows(tenant, n_rows as u64, report.num_quarantined() as u64);
             if report.num_quarantined() > 0 {
                 // dead-letter the ORIGINAL wire rows — what the client
                 // sent, not the lenient decode's nulled-out shadow
@@ -1014,29 +1104,85 @@ fn handle_infer(
         }
     };
     let valid_rows = df.num_rows();
-    let tensors = if valid_rows == 0 {
+    // Submit-and-retry loop for poison containment: a PoisonRows answer
+    // names rows of the SUBMITTED frame that bisection isolated (and
+    // already dead-lettered). Fold them into the verdicts as
+    // quarantined-with-`poison` and resubmit the survivors — the client
+    // gets per-row blame plus outputs for everything servable, instead
+    // of a whole-request 500. One round normally suffices (bisection
+    // names every poison row in the job); the cap is a backstop.
+    let (tensors, served_rows) = if valid_rows == 0 {
         // every row quarantined: nothing to serve, but the request is
         // still answered (verdicts itemise each row) and still billed
-        Vec::new()
+        (Vec::new(), 0)
     } else {
-        // take the read lock only to enqueue; the response channel
-        // outlives it
-        let rx = {
-            let server = state.server.read().unwrap();
-            let server = server.as_ref().ok_or(WireError::ShuttingDown)?;
-            server.submit_resolved(df, variant.clone(), Arc::clone(&resolved))
-        };
-        match rx.recv() {
-            Ok(Ok(t)) => t,
-            Ok(Err(e)) => {
-                let msg = e.to_string();
-                return Err(if msg.contains("server stopped") {
-                    WireError::ShuttingDown
-                } else {
-                    WireError::Internal(msg)
-                });
+        let mut df = df;
+        let mut attempts = 0;
+        loop {
+            // take the read lock only to enqueue; the response channel
+            // outlives it. DataFrame clones are O(columns) Arc bumps,
+            // so keeping `df` for a potential resubmit copies nothing.
+            let rx = {
+                let server = state.server.read().unwrap();
+                let server = server.as_ref().ok_or(WireError::ShuttingDown)?;
+                server.submit_resolved_deadline(
+                    df.clone(),
+                    variant.clone(),
+                    Arc::clone(&resolved),
+                    deadline,
+                )
+            };
+            match rx.recv() {
+                Ok(Ok(t)) => break (t, df.num_rows()),
+                Ok(Err(KamaeError::PoisonRows(poison))) => {
+                    attempts += 1;
+                    if attempts >= 3 {
+                        return Err(WireError::Internal(format!(
+                            "poison-row isolation did not converge after {attempts} attempts"
+                        )));
+                    }
+                    // synthesise an all-valid report when validation is
+                    // off so poison responses still carry verdicts
+                    let rep = report.get_or_insert_with(|| ValidationReport::all_valid(n_rows));
+                    // poison indices address the submitted (compacted)
+                    // frame; map them back to original wire rows through
+                    // the keep mask before updating the verdicts
+                    let orig: Vec<usize> = rep
+                        .keep
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, &k)| k.then_some(i))
+                        .collect();
+                    let mut survivors = vec![true; df.num_rows()];
+                    for &p in &poison {
+                        let Some(&oi) = orig.get(p) else {
+                            return Err(WireError::Internal(format!(
+                                "poison row {p} out of range for a {}-row frame",
+                                df.num_rows()
+                            )));
+                        };
+                        rep.keep[oi] = false;
+                        rep.errors[oi].push(RowError::new(
+                            "poison",
+                            "",
+                            "row crashed the backend; isolated by bisection and dead-lettered",
+                        ));
+                        survivors[p] = false;
+                    }
+                    if rep.num_valid() == 0 {
+                        break (Vec::new(), 0);
+                    }
+                    df = df
+                        .filter_rows(&survivors)
+                        .map_err(|e| WireError::Internal(e.to_string()))?;
+                }
+                Ok(Err(KamaeError::ShuttingDown)) => return Err(WireError::ShuttingDown),
+                Ok(Err(KamaeError::DeadlineExceeded(m))) => {
+                    return Err(WireError::DeadlineExceeded(m))
+                }
+                Ok(Err(e)) => return Err(WireError::Internal(e.to_string())),
+                Err(_) => return Err(WireError::ShuttingDown),
             }
-            Err(_) => return Err(WireError::ShuttingDown),
         }
     };
     let elapsed = t0.elapsed();
@@ -1054,7 +1200,7 @@ fn handle_infer(
         c.latency_ns_sum += ns;
         c.latency_ns_max = c.latency_ns_max.max(ns);
     }
-    if valid_rows > 0 && tensors.len() != out_idx.len() {
+    if served_rows > 0 && tensors.len() != out_idx.len() {
         return Err(WireError::Internal(format!(
             "backend returned {} outputs, expected {}",
             tensors.len(),
@@ -1217,6 +1363,7 @@ fn reason_phrase(status: u16) -> &'static str {
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Unknown",
     }
 }
@@ -1430,6 +1577,7 @@ mod tests {
             (WireError::OversizedBody { bytes: 9, max_bytes: 4 }, 413, "oversized_body"),
             (WireError::Overloaded { retry_after_secs: 1 }, 429, "overloaded"),
             (WireError::ShuttingDown, 503, "shutting_down"),
+            (WireError::DeadlineExceeded("x".into()), 504, "deadline_exceeded"),
             (WireError::Internal("x".into()), 500, "internal"),
         ];
         for (e, status, code) in cases {
@@ -1463,13 +1611,19 @@ mod tests {
                 dead_letter: Some(PathBuf::from("/tmp/dl.jsonl")),
                 ..NetConfig::default()
             },
+            // alert thresholds must be meaningful fractions, and need
+            // the gate on to ever observe a quarantine
+            NetConfig { validate: true, quarantine_alert: Some(0.0), ..NetConfig::default() },
+            NetConfig { validate: true, quarantine_alert: Some(1.5), ..NetConfig::default() },
+            NetConfig { quarantine_alert: Some(0.5), ..NetConfig::default() },
         ] {
             assert!(broken.validate().is_err());
         }
-        // the pair is fine together
+        // the pairs are fine together
         let ok = NetConfig {
             validate: true,
             dead_letter: Some(PathBuf::from("/tmp/dl.jsonl")),
+            quarantine_alert: Some(0.25),
             ..NetConfig::default()
         };
         assert!(ok.validate().is_ok());
@@ -1516,7 +1670,7 @@ mod tests {
 
     #[test]
     fn reason_phrases_cover_every_wire_status() {
-        for status in [200u16, 400, 404, 405, 409, 413, 429, 500, 503] {
+        for status in [200u16, 400, 404, 405, 409, 413, 429, 500, 503, 504] {
             assert_ne!(reason_phrase(status), "Unknown", "{status}");
         }
     }

@@ -715,6 +715,14 @@ pub fn screen_batch(
 pub trait DeadLetterSink: Send + Sync {
     /// Record one quarantined row with its violations.
     fn record(&self, tenant: &str, row: &Json, errors: &[RowError]);
+
+    /// Rows this sink failed to persist (disk full, unwritable file).
+    /// Serving must be unaffected by sink failures — the counter is how
+    /// operators find out rows are being dropped. Sinks that cannot
+    /// fail report 0.
+    fn errors(&self) -> u64 {
+        0
+    }
 }
 
 /// The JSONL entry shape shared by every sink:
@@ -733,13 +741,21 @@ pub fn dead_letter_entry(tenant: &str, row: &Json, errors: &[RowError]) -> Json 
 pub struct JsonlDeadLetter {
     path: PathBuf,
     file: Mutex<std::fs::File>,
+    /// Entries the file refused (ENOSPC, permissions yanked mid-run).
+    /// A failing disk must never fail or block serving; the counter —
+    /// surfaced as `dead_letter_errors` in `/metrics` — is the alarm.
+    write_errors: std::sync::atomic::AtomicU64,
 }
 
 impl JsonlDeadLetter {
     /// Open (append) or create the file.
     pub fn create(path: &Path) -> Result<JsonlDeadLetter> {
         let file = OpenOptions::new().create(true).append(true).open(path)?;
-        Ok(JsonlDeadLetter { path: path.to_path_buf(), file: Mutex::new(file) })
+        Ok(JsonlDeadLetter {
+            path: path.to_path_buf(),
+            file: Mutex::new(file),
+            write_errors: std::sync::atomic::AtomicU64::new(0),
+        })
     }
 
     pub fn path(&self) -> &Path {
@@ -755,8 +771,13 @@ impl DeadLetterSink for JsonlDeadLetter {
             Err(poisoned) => poisoned.into_inner(),
         };
         if let Err(e) = writeln!(file, "{entry}") {
+            self.write_errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             eprintln!("dead-letter write to {} failed: {e}", self.path.display());
         }
+    }
+
+    fn errors(&self) -> u64 {
+        self.write_errors.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
@@ -989,5 +1010,31 @@ mod tests {
         let parsed = Json::parse(lines[0]).unwrap();
         assert_eq!(parsed.get("tenant").and_then(Json::as_str), Some("shop"));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn jsonl_sink_write_failure_counts_instead_of_failing() {
+        // /dev/full accepts the append-open but fails every write with
+        // ENOSPC — the "disk filled up mid-run" shape. record() must
+        // swallow the failure (no panic, no Err — the signature has
+        // none) and count it, so serving continues while operators see
+        // dead_letter_errors climbing.
+        let dev_full = Path::new("/dev/full");
+        if !dev_full.exists() {
+            eprintln!("SKIP: /dev/full not available on this platform");
+            return;
+        }
+        let sink = JsonlDeadLetter::create(dev_full).unwrap();
+        assert_eq!(sink.errors(), 0);
+        let errors = vec![RowError::new("not_null", "price", "null value")];
+        let mut row = Json::object();
+        row.set("price", Json::Null);
+        sink.record("shop", &row, &errors);
+        sink.record("shop", &row, &errors);
+        assert_eq!(sink.errors(), 2, "failed writes must be counted");
+        // sinks that cannot fail keep the default 0
+        let ring = MemoryDeadLetter::new(2);
+        ring.record("shop", &row, &errors);
+        assert_eq!(DeadLetterSink::errors(&ring), 0);
     }
 }

@@ -662,6 +662,158 @@ fn serve_cli_listens_answers_and_drains() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// `kamae dead-letter replay` end to end through the real binary: a
+/// validating listener quarantines a row into a JSONL sink, then the
+/// replay verb re-submits the file — the still-broken row stays
+/// quarantined (with its rule quoted), a since-fixed row recovers, and
+/// `--dry-run` touches nothing.
+#[test]
+fn dead_letter_replay_cli_resubmits_quarantined_rows() {
+    use kamae::optim::OptimizeLevel;
+    use kamae::serving::NetClient;
+    use kamae::util::json::Json;
+    use std::io::{BufRead, Write};
+
+    let Some(bin) = option_env!("CARGO_BIN_EXE_kamae") else {
+        eprintln!("SKIP: kamae binary path not provided by cargo");
+        return;
+    };
+    let dir = std::env::temp_dir().join(format!("kamae_cli_replay_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("specs")).unwrap();
+    let df = kamae::serving::request_pool("quickstart", 2_000).unwrap();
+    let model = catalog::quickstart_pipeline()
+        .fit(&Dataset::from_dataframe(df, 2))
+        .unwrap();
+    let (spec, _) = model
+        .to_graph_spec_opt(
+            "quickstart",
+            catalog::quickstart_inputs(),
+            &catalog::QUICKSTART_OUTPUTS,
+            OptimizeLevel::Full,
+        )
+        .unwrap();
+    spec.save(&dir.join("specs").join("quickstart.json")).unwrap();
+    let sink_path = dir.join("dead.jsonl");
+
+    let mut child = std::process::Command::new(bin)
+        .args([
+            "serve",
+            "--artifacts",
+            dir.to_str().unwrap(),
+            "--variants",
+            "quickstart",
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "2",
+            "--validate",
+            "--dead-letter",
+            sink_path.to_str().unwrap(),
+        ])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("server exited before announcing its address")
+            .unwrap();
+        if let Some(rest) = line.split("listening on http://").nth(1) {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+
+    // quarantine one row (null price) into the sink
+    let mut client = NetClient::connect(&addr).unwrap();
+    let body = r#"{"variant":"quickstart","rows":[{"city":"city_3","price":12.5},{"city":"city_7","price":null}]}"#;
+    let resp = client.request("POST", "/v1/infer", &[], body).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("valid_rows").and_then(Json::as_i64), Some(1));
+
+    // append a since-fixed entry by hand, as if a later deploy relaxed
+    // the rules for this row: clean content, so replay must recover it
+    {
+        let mut f = std::fs::OpenOptions::new().append(true).open(&sink_path).unwrap();
+        writeln!(
+            f,
+            r#"{{"tenant":"default","row":{{"city":"city_1","price":5.0}},"errors":[{{"rule":"stale","column":"price","message":"fixed since"}}]}}"#
+        )
+        .unwrap();
+        // and one for another tenant, which this replay must skip
+        writeln!(
+            f,
+            r#"{{"tenant":"other","row":{{"city":"city_2","price":7.0}},"errors":[]}}"#
+        )
+        .unwrap();
+    }
+
+    // --dry-run lists without submitting
+    let out = std::process::Command::new(bin)
+        .args([
+            "dead-letter",
+            "replay",
+            sink_path.to_str().unwrap(),
+            "--tenant",
+            "default",
+            "--dry-run",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("would replay 2 row(s) for tenant 'default'"), "{text}");
+
+    // the real replay: the null-price row stays quarantined with its
+    // rule quoted, the clean row recovers, the other tenant is skipped
+    let out = std::process::Command::new(bin)
+        .args([
+            "dead-letter",
+            "replay",
+            sink_path.to_str().unwrap(),
+            "--tenant",
+            "default",
+            "--addr",
+            &addr,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("still quarantined — not_null"), "{text}");
+    assert!(text.contains("recovered"), "{text}");
+    assert!(
+        text.contains("replayed 2 row(s) for tenant 'default': 1 recovered, 1 still quarantined, 0 rejected"),
+        "{text}"
+    );
+
+    // an unknown verb fails fast with usage, not a stack trace
+    let out = std::process::Command::new(bin)
+        .args(["dead-letter", "purge", sink_path.to_str().unwrap(), "--tenant", "default"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dead-letter verb"));
+
+    let resp = client.request("POST", "/admin/shutdown", &[], "").unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let deadline = std::time::Instant::now() + Duration::from_secs(15);
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            assert!(status.success(), "kamae serve exited uncleanly: {status}");
+            break;
+        }
+        if std::time::Instant::now() > deadline {
+            child.kill().ok();
+            panic!("kamae serve did not drain within 15s of /admin/shutdown");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The routed-rejection bugfix pinned on a REAL spec-less-routing
 /// backend: MLeap cannot restrict evaluation to one variant, and its
 /// refusal must name the backend, its kind, and the offending variant.

@@ -653,6 +653,231 @@ fn registry_admin_deploy_infer_rollback_over_the_wire() {
 }
 
 #[test]
+fn deadline_ms_expires_queued_requests_with_typed_504() {
+    // one worker, pinned down by a slow batch: a queued request with a
+    // small deadline_ms must come back as a fast typed 504 from the
+    // reaper instead of waiting the worker out
+    let spec = merged_spec();
+    let backend: Arc<dyn Backend> = Arc::new(SlowBackend {
+        inner: InterpretedBackend::new(spec.clone()),
+        delay: Duration::from_millis(80),
+    });
+    let config = NetConfig {
+        batch: BatchConfig { workers: 1, ..BatchConfig::default() },
+        ..NetConfig::default()
+    };
+    let server = NetServer::bind(backend, "127.0.0.1:0", config).unwrap();
+    let addr = server.addr().to_string();
+    let body = r#"{"rows":[{"city":"NYC","price":1.0}]}"#;
+
+    // malformed deadlines are refused before anything queues
+    let mut client = NetClient::connect(&addr).unwrap();
+    for bad in [r#"{"deadline_ms":0,"rows":[{"city":"NYC","price":1.0}]}"#,
+                r#"{"deadline_ms":"soon","rows":[{"city":"NYC","price":1.0}]}"#] {
+        let resp = client.request("POST", "/v1/infer", &[], bad).unwrap();
+        assert_eq!(resp.status, 400, "{}", resp.body);
+        let j = resp.json().unwrap();
+        let msg = j
+            .get("error")
+            .and_then(|e| e.get("message"))
+            .and_then(Json::as_str)
+            .unwrap_or_default();
+        assert!(msg.contains("'deadline_ms' must be a positive integer"), "{msg}");
+    }
+
+    let slow = std::thread::spawn({
+        let addr = addr.clone();
+        move || {
+            let mut c = NetClient::connect(&addr).unwrap();
+            c.request("POST", "/v1/infer", &[], body).unwrap()
+        }
+    });
+    // wait until the slow request is in flight (and thus holds the only
+    // worker) before queueing the deadlined one behind it
+    for _ in 0..200 {
+        let h = client.request("GET", "/healthz", &[], "").unwrap();
+        if h.json().unwrap().get("in_flight").and_then(Json::as_i64).unwrap_or(0) >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    std::thread::sleep(Duration::from_millis(10));
+    let deadlined = r#"{"deadline_ms":5,"rows":[{"city":"NYC","price":1.0}]}"#;
+    let resp = client.request("POST", "/v1/infer", &[], deadlined).unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.body);
+    let j = resp.json().unwrap();
+    let err = j.get("error").expect("504 carries the typed error object");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("deadline_exceeded"));
+    assert_eq!(err.get("status").and_then(Json::as_i64), Some(504));
+    assert!(err
+        .get("message")
+        .and_then(Json::as_str)
+        .is_some_and(|m| m.contains("deadline")));
+    assert_eq!(slow.join().unwrap().status, 200, "the slow request still completes");
+    if resp.closed {
+        client = NetClient::connect(&addr).unwrap();
+    }
+
+    let m = client.request("GET", "/metrics", &[], "").unwrap();
+    let report = m.json().unwrap();
+    let report = report.get("serve_report").expect("serve_report").clone();
+    assert_eq!(
+        report.get("deadline_expired").and_then(Json::as_i64),
+        Some(1),
+        "expiry must be visible in /metrics"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn quarantine_alert_flips_healthz_to_degraded_and_recovers() {
+    let config = NetConfig {
+        validate: true,
+        quarantine_alert: Some(0.5),
+        ..test_config()
+    };
+    let (server, addr, _spec) = bind(config);
+    let mut client = NetClient::connect(&addr).unwrap();
+
+    // an all-quarantined request pushes default's rolling rate to 1.0
+    let bad = r#"{"rows":[{"city":"NYC","price":null},{"city":"LA","price":null}]}"#;
+    let resp = client.request("POST", "/v1/infer", &[], bad).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    let h = client.request("GET", "/healthz", &[], "").unwrap();
+    assert_eq!(h.status, 200, "degraded is an ALERT, not an outage: still 200");
+    let j = h.json().unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("degraded"));
+    let alert = j.get("alert").expect("degraded healthz names its cause");
+    assert_eq!(alert.get("reason").and_then(Json::as_str), Some("quarantine_rate"));
+    assert_eq!(alert.get("tenant").and_then(Json::as_str), Some("default"));
+    assert_eq!(alert.get("threshold").and_then(|t| t.as_f64()), Some(0.5));
+    assert!(alert
+        .get("quarantine_rate")
+        .and_then(|r| r.as_f64())
+        .is_some_and(|r| r >= 0.5));
+
+    // healthy traffic decays the rolling window below the threshold
+    let clean = r#"{"rows":[
+        {"city":"NYC","price":1.0},{"city":"LA","price":2.0},
+        {"city":"SF","price":3.0},{"city":"CHI","price":4.0}]}"#;
+    for _ in 0..6 {
+        let resp = client.request("POST", "/v1/infer", &[], clean).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+    }
+    let h = client.request("GET", "/healthz", &[], "").unwrap();
+    let j = h.json().unwrap();
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+    assert!(j.get("alert").is_none(), "recovered healthz must drop the alert");
+    server.shutdown();
+}
+
+#[test]
+fn poison_rows_get_verdicts_and_survivors_serve_over_the_wire() {
+    use kamae::serving::{ChaosBackend, FaultPlan};
+
+    // content-keyed poison: any row with price == 666.0 panics the
+    // backend; bisection must blame exactly that row on the wire
+    let spec = merged_spec();
+    let inner: Arc<dyn Backend> = Arc::new(InterpretedBackend::new(spec.clone()));
+    let chaos: Arc<dyn Backend> = Arc::new(ChaosBackend::new(
+        inner,
+        FaultPlan::poison_rows(|df, i| {
+            df.column("price")
+                .ok()
+                .and_then(|c| c.as_f64().ok())
+                .is_some_and(|v| v[i] == 666.0)
+        }),
+    ));
+    let server = NetServer::bind(chaos, "127.0.0.1:0", test_config()).unwrap();
+    let addr = server.addr().to_string();
+    let schema = request_schema(&spec);
+    let oracle = InterpretedBackend::new(spec.clone());
+    let mut client = NetClient::connect(&addr).unwrap();
+
+    let body = r#"{"rows":[
+        {"city":"NYC","price":1.0},
+        {"city":"LA","price":666.0},
+        {"city":"SF","price":3.5}]}"#;
+    let resp = client.request("POST", "/v1/infer", &[], body).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("rows").and_then(Json::as_i64), Some(3));
+    assert_eq!(j.get("valid_rows").and_then(Json::as_i64), Some(2));
+    let verdicts = j.get("verdicts").and_then(Json::as_array).expect("verdicts");
+    let statuses: Vec<&str> = verdicts
+        .iter()
+        .filter_map(|v| v.get("status").and_then(Json::as_str))
+        .collect();
+    assert_eq!(statuses, vec!["ok", "quarantined", "ok"]);
+    assert_eq!(verdicts[0].get("output_row").and_then(Json::as_i64), Some(0));
+    assert_eq!(verdicts[2].get("output_row").and_then(Json::as_i64), Some(1));
+    let errors = verdicts[1].get("errors").and_then(Json::as_array).expect("errors");
+    assert_eq!(errors[0].get("rule").and_then(Json::as_str), Some("poison"));
+    assert!(errors[0]
+        .get("message")
+        .and_then(Json::as_str)
+        .is_some_and(|m| m.contains("bisection")));
+
+    // survivors are served bit-identical to a backend never fed poison
+    let good = Json::parse(r#"[{"city":"NYC","price":1.0},{"city":"SF","price":3.5}]"#).unwrap();
+    let df = dataframe_from_json_rows(good.as_array().unwrap(), &schema).unwrap();
+    let want = oracle.process(&df).unwrap();
+    let got: Vec<Tensor> = j
+        .get("outputs")
+        .and_then(Json::as_array)
+        .expect("outputs")
+        .iter()
+        .map(|o| tensor_from_json(o).unwrap())
+        .collect();
+    if let Err(e) = tensors_bit_identical(&got, &want) {
+        panic!("poison survivors vs clean oracle: {e}");
+    }
+
+    let m = client.request("GET", "/metrics", &[], "").unwrap();
+    let j = m.json().unwrap();
+    let report = j.get("serve_report").expect("serve_report");
+    assert_eq!(report.get("poison_rows").and_then(Json::as_i64), Some(1));
+    assert!(
+        report.get("worker_panics").and_then(Json::as_i64).is_some_and(|p| p >= 1),
+        "isolation panics must be visible in /metrics"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn erroring_dead_letter_sink_never_fails_serving() {
+    // /dev/full accepts the open but fails every write — the "disk
+    // filled up mid-run" shape, end to end over the wire
+    if !std::path::Path::new("/dev/full").exists() {
+        eprintln!("SKIP: /dev/full not available on this platform");
+        return;
+    }
+    let config = NetConfig {
+        validate: true,
+        dead_letter: Some(PathBuf::from("/dev/full")),
+        ..test_config()
+    };
+    let (server, addr, _spec) = bind(config);
+    let mut client = NetClient::connect(&addr).unwrap();
+    let bad = r#"{"rows":[{"city":"NYC","price":null},{"city":"LA","price":2.0}]}"#;
+    let resp = client.request("POST", "/v1/infer", &[], bad).unwrap();
+    assert_eq!(resp.status, 200, "a dead sink must never fail the request: {}", resp.body);
+    let j = resp.json().unwrap();
+    assert_eq!(j.get("valid_rows").and_then(Json::as_i64), Some(1));
+
+    let m = client.request("GET", "/metrics", &[], "").unwrap();
+    let report = m.json().unwrap();
+    let report = report.get("serve_report").expect("serve_report").clone();
+    assert_eq!(
+        report.get("dead_letter_errors").and_then(Json::as_i64),
+        Some(1),
+        "the swallowed write failure must be visible in /metrics"
+    );
+    server.shutdown();
+}
+
+#[test]
 fn admin_shutdown_drains_and_closes() {
     let (server, addr, _spec) = bind(test_config());
     let mut client = NetClient::connect(&addr).unwrap();

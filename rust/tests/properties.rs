@@ -1062,7 +1062,7 @@ fn validated_serving_matches_uncorrupted_oracle_bitwise() {
         .unwrap();
 
         let (rx, report) =
-            server.submit_tenant_validated(corrupted, DEFAULT_TENANT, None, Some(&sink));
+            server.submit_tenant_validated(corrupted, DEFAULT_TENANT, None, None, Some(&sink));
         let got = rx.recv().unwrap().unwrap();
         let n_bad = keep.iter().filter(|k| !**k).count();
         corrupted_total += n_bad;
